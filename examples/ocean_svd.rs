@@ -1,0 +1,203 @@
+//! Ocean-temperature truncated SVD (paper §4.2, Table 5): the three use
+//! cases, scaled to this box.
+//!
+//! 1. Spark loads the file and computes the rank-k SVD (sparklite).
+//! 2. Spark loads the file, ships it to Alchemist, Alchemist computes.
+//! 3. Alchemist loads the file directly and computes; results ship back.
+//!
+//! ```sh
+//! cargo run --release --example ocean_svd -- \
+//!     [--cells 8192] [--times 1024] [--rank 20] [--workers 3] [--engine xla]
+//! ```
+
+use alchemist::cli::Args;
+use alchemist::client::AlchemistContext;
+use alchemist::config::Config;
+use alchemist::coordinator::AlchemistServer;
+use alchemist::linalg::SvdOptions;
+use alchemist::metrics::Table;
+use alchemist::protocol::{Params, Value};
+use alchemist::sparklite::{mllib, IndexedRowMatrix, SparkEngine};
+use alchemist::util::fmt;
+use alchemist::workloads::OceanSpec;
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let mut cfg = Config::default();
+    if let Some(engine) = args.get("engine") {
+        cfg.apply("engine", engine)?;
+    }
+    let cells = args.get_usize("cells", 8_192)?;
+    let times = args.get_usize("times", 1_024)?;
+    let rank = args.get_usize("rank", 20)?;
+    let steps = args.get_usize("steps", 48)?;
+    let workers = args.get_usize("workers", 3)?;
+
+    let spec = OceanSpec { cells, times, ..OceanSpec::default() };
+    let dir = std::env::temp_dir().join("alchemist-ocean");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("ocean_{cells}x{times}.bin"));
+    if !path.exists() {
+        println!("generating synthetic ocean field {cells} x {times} ...");
+        let bytes = spec.write_file(&path)?;
+        println!("wrote {} to {path:?}", fmt::bytes(bytes));
+    }
+    let opts = SvdOptions { rank, steps, seed: 0x53D5 };
+
+    let mut table = Table::new(
+        "ocean_svd: Table 5 use cases (rank-{k} truncated SVD)",
+        &[
+            "case", "S nodes", "A nodes", "load (s)", "S=>A (s)", "svd (s)",
+            "S<=A (s)", "total (s)", "sim svd (s)", "sigma[0]",
+        ],
+    );
+
+    // ---------- use case 1: Spark load + Spark SVD ----------
+    {
+        println!("\n== case 1: sparklite load + sparklite SVD ==");
+        let mut engine = SparkEngine::new(workers, &cfg);
+        let t0 = std::time::Instant::now();
+        // Spark reads the file through one stage over row-range partitions
+        let ranges = alchemist::util::even_ranges(cells, workers * 2);
+        let parts = engine.run_stage("load", &ranges, |_, &(a, b)| {
+            let m = alchemist::hdf5sim::read_rows(&path, a, b).unwrap();
+            (a, m)
+        });
+        let load_secs = t0.elapsed().as_secs_f64();
+        let mut rows = Vec::new();
+        for (start, m) in parts {
+            for i in 0..m.rows() {
+                rows.push(alchemist::sparklite::IndexedRow {
+                    index: (start + i) as u64,
+                    vector: m.row(i).to_vec(),
+                });
+            }
+        }
+        let irm = IndexedRowMatrix {
+            rdd: alchemist::sparklite::Rdd::parallelize(rows, workers * 2),
+            rows: cells,
+            cols: times,
+        };
+        let sim0 = engine.sim_elapsed_secs();
+        let t1 = std::time::Instant::now();
+        let res = mllib::truncated_svd(&mut engine, &irm, &opts)?;
+        let svd_secs = t1.elapsed().as_secs_f64();
+        let sim_svd = engine.sim_elapsed_secs() - sim0;
+        table.row(&[
+            "1: S load, S svd".into(),
+            workers.to_string(),
+            "0".into(),
+            format!("{load_secs:.2}"),
+            "n/a".into(),
+            format!("{svd_secs:.2}"),
+            "n/a".into(),
+            format!("{svd_secs:.2}"),
+            format!("{sim_svd:.2}"),
+            format!("{:.2}", res.sigma[0]),
+        ]);
+    }
+
+    // ---------- use cases 2 and 3 need a server ----------
+    let server = AlchemistServer::start(cfg.clone(), workers)?;
+
+    // ---------- use case 2: Spark load + transfer + Alchemist SVD ----------
+    {
+        println!("\n== case 2: sparklite load, transfer, alchemist SVD ==");
+        let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, workers)?;
+        ac.register_library("elemental", "builtin:elemental")?;
+        let t0 = std::time::Instant::now();
+        let a = alchemist::hdf5sim::read_matrix(&path)?;
+        let irm = IndexedRowMatrix::from_local(&a, workers * 2);
+        let load_secs = t0.elapsed().as_secs_f64();
+
+        let (al_a, push) = ac.send_matrix("A", &irm)?;
+        let res = ac.run_task(
+            "elemental",
+            "truncated_svd",
+            Params::new()
+                .with_matrix("A", al_a.id)
+                .with_i64("rank", rank as i64)
+                .with_i64("steps", steps as i64),
+        )?;
+        let svd_secs = res.timing("compute");
+        let sim_svd = res.timing("sim_secs");
+        let (pull_u, su) = ac.to_indexed_row_matrix(res.output("U")?, workers)?;
+        let (_, sv) = ac.to_indexed_row_matrix(res.output("V")?, 1)?;
+        let back_secs = su.secs + sv.secs;
+        let sigma0 = first_sigma(&res.scalars);
+        let total = push.secs + svd_secs + back_secs;
+        let _ = pull_u;
+        table.row(&[
+            "2: S load, A svd".into(),
+            workers.to_string(),
+            workers.to_string(),
+            format!("{load_secs:.2}"),
+            format!("{:.2}", push.secs),
+            format!("{svd_secs:.2}"),
+            format!("{back_secs:.2}"),
+            format!("{total:.2}"),
+            format!("{sim_svd:.2}"),
+            format!("{sigma0:.2}"),
+        ]);
+        ac.stop();
+    }
+
+    // ---------- use case 3: Alchemist load + SVD, results to client ----------
+    {
+        println!("\n== case 3: alchemist load + SVD, results back to client ==");
+        let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2)?;
+        ac.register_library("elemental", "builtin:elemental")?;
+        let load = ac.run_task(
+            "elemental",
+            "load_hdf5",
+            Params::new().with_str("path", path.to_str().unwrap()),
+        )?;
+        let load_secs = load.timing("load");
+        let al_a = load.output("A")?.clone();
+        let res = ac.run_task(
+            "elemental",
+            "truncated_svd",
+            Params::new()
+                .with_matrix("A", al_a.id)
+                .with_i64("rank", rank as i64)
+                .with_i64("steps", steps as i64),
+        )?;
+        let svd_secs = res.timing("compute");
+        let sim_svd = res.timing("sim_secs");
+        let (_, su) = ac.to_indexed_row_matrix(res.output("U")?, 2)?;
+        let (_, sv) = ac.to_indexed_row_matrix(res.output("V")?, 1)?;
+        let back_secs = su.secs + sv.secs;
+        let sigma0 = first_sigma(&res.scalars);
+        let total = svd_secs + back_secs;
+        table.row(&[
+            "3: A load, A svd".into(),
+            "2".into(),
+            workers.to_string(),
+            format!("{load_secs:.2}"),
+            "n/a".into(),
+            format!("{svd_secs:.2}"),
+            format!("{back_secs:.2}"),
+            format!("{total:.2}"),
+            format!("{sim_svd:.2}"),
+            format!("{sigma0:.2}"),
+        ]);
+        ac.shutdown_server()?;
+    }
+    server.shutdown_on_request();
+
+    println!();
+    table.print();
+    println!(
+        "(paper Table 5 shape: case 3 < case 2 < case 1 total; σ₀ identical across \
+         cases because both sides run the same Gram-Lanczos mathematics)"
+    );
+    Ok(())
+}
+
+fn first_sigma(scalars: &Params) -> f64 {
+    match scalars.get("sigma") {
+        Some(Value::F64s(v)) if !v.is_empty() => v[0],
+        _ => f64::NAN,
+    }
+}

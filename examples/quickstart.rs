@@ -1,0 +1,90 @@
+//! Quickstart — the paper's Figure 2 session, verbatim API shape.
+//!
+//! Starts an in-process Alchemist server, connects a client, ships a
+//! matrix, runs the hypothetical `libA` QR decomposition (here: the
+//! `elemental` builtin), materializes Q and R back on the client, and
+//! verifies `A = Q·R`.
+//!
+//! ```sh
+//! cargo run --release --example quickstart -- [--workers 3] [--engine xla|pallas|native]
+//! ```
+
+use alchemist::cli::Args;
+use alchemist::client::AlchemistContext;
+use alchemist::config::Config;
+use alchemist::coordinator::AlchemistServer;
+use alchemist::distmat::LocalMatrix;
+use alchemist::protocol::Params;
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::util::prng::Rng;
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let mut cfg = Config::default();
+    if let Some(engine) = args.get("engine") {
+        cfg.apply("engine", engine)?;
+    } else {
+        // quickstart should run even before `make artifacts`
+        cfg.apply("engine", "native")?;
+    }
+    let workers = args.get_usize("workers", 3)?;
+
+    // server side (normally `alchemist serve`; in-proc here)
+    let server = AlchemistServer::start(cfg.clone(), workers)?;
+    println!("server: {} ({} workers)", server.control_addr, workers);
+
+    // --- the Figure 2 session ---
+    // val ac = new Alchemist.AlchemistContext(sc, numWorkers)
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2)?;
+    // ac.registerLibrary("libA", ALIlibALocation)
+    ac.register_library("libA", "builtin:elemental")?;
+
+    // A is an IndexedRowMatrix
+    let mut rng = Rng::new(7);
+    let a = LocalMatrix::from_fn(1000, 16, |_, _| rng.normal());
+    let irm = IndexedRowMatrix::from_local(&a, 8);
+
+    // val alA = AlMatrix(A)
+    let (al_a, stats) = ac.send_matrix("A", &irm)?;
+    println!(
+        "sent A ({} rows x {} cols, {}) in {:.3}s ({:.2} GB/s)",
+        al_a.rows,
+        al_a.cols,
+        alchemist::util::fmt::bytes(al_a.size_bytes() as u64),
+        stats.secs,
+        stats.throughput_gbps()
+    );
+
+    // val (alQ, alR) = QRDecomposition(alA)
+    let res = ac.run_task("libA", "qr", Params::new().with_matrix("A", al_a.id))?;
+    let al_q = res.output("Q")?.clone();
+    let al_r = res.output("R")?.clone();
+    println!(
+        "QR done in {:.3}s server-side (simulated cluster time {:.3}s)",
+        res.timing("compute"),
+        res.timing("sim_secs")
+    );
+
+    // val Q = alQ.toIndexedRowMatrix(); val R = alR.toIndexedRowMatrix()
+    let (q_irm, _) = ac.to_indexed_row_matrix(&al_q, 8)?;
+    let (r_irm, _) = ac.to_indexed_row_matrix(&al_r, 1)?;
+    let q = q_irm.to_local()?;
+    let r = r_irm.to_local()?;
+
+    // verify A = Q·R and QᵀQ = I
+    let mut qr = LocalMatrix::zeros(a.rows(), a.cols());
+    qr.gemm_nn(&q, &r);
+    let recon = qr.max_abs_diff(&a);
+    let mut qtq = LocalMatrix::zeros(16, 16);
+    qtq.gemm_tn(&q, &q);
+    let ortho = qtq.max_abs_diff(&LocalMatrix::identity(16));
+    println!("‖A − QR‖max = {recon:.2e}, ‖QᵀQ − I‖max = {ortho:.2e}");
+    anyhow::ensure!(recon < 1e-9 && ortho < 1e-10, "QR verification failed");
+
+    // ac.stop()
+    ac.shutdown_server()?;
+    server.shutdown_on_request();
+    println!("quickstart OK");
+    Ok(())
+}

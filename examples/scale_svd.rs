@@ -1,0 +1,126 @@
+//! Weak-scaling truncated SVD (paper Figure 3): column-replicate the base
+//! ocean matrix ×{1,2,4,8} while doubling workers, report load / SVD /
+//! send-to-client time per size. Scaling shape is read from the simulated
+//! cluster column (one core here; DESIGN.md §2).
+//!
+//! ```sh
+//! cargo run --release --example scale_svd -- \
+//!     [--cells 2048] [--times 256] [--rank 20] [--engine xla]
+//! ```
+
+use alchemist::cli::Args;
+use alchemist::client::AlchemistContext;
+use alchemist::config::Config;
+use alchemist::coordinator::AlchemistServer;
+use alchemist::metrics::Table;
+use alchemist::protocol::Params;
+use alchemist::util::fmt;
+use alchemist::workloads::OceanSpec;
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let mut cfg = Config::default();
+    if let Some(engine) = args.get("engine") {
+        cfg.apply("engine", engine)?;
+    }
+    let cells = args.get_usize("cells", 2_048)?;
+    let times = args.get_usize("times", 256)?;
+    let rank = args.get_usize("rank", 20)?;
+    let steps = args.get_usize("steps", 48)?;
+    let replicas = args.get_usize_list("replicas", &[1, 2, 4, 8])?;
+    let workers_list = args.get_usize_list("workers", &[2, 4, 8, 16])?;
+    anyhow::ensure!(
+        replicas.len() == workers_list.len(),
+        "--replicas and --workers must have equal length"
+    );
+
+    let spec = OceanSpec { cells, times, ..OceanSpec::default() };
+    let dir = std::env::temp_dir().join("alchemist-ocean");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("ocean_{cells}x{times}.bin"));
+    if !path.exists() {
+        let bytes = spec.write_file(&path)?;
+        println!("wrote base field {} to {path:?}", fmt::bytes(bytes));
+    }
+
+    let mut table = Table::new(
+        "scale_svd: Figure 3 weak scaling (size and workers double together)",
+        &[
+            "size", "workers", "load (s)", "replicate (s)", "svd (s)",
+            "svd sim (s)", "send S<=A (s)", "sigma[0]",
+        ],
+    );
+
+    for (&rep, &workers) in replicas.iter().zip(&workers_list) {
+        println!("\n== replicas x{rep}, {workers} workers ==");
+        let server = AlchemistServer::start(cfg.clone(), workers)?;
+        let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2)?;
+        ac.register_library("elemental", "builtin:elemental")?;
+
+        let load = ac.run_task(
+            "elemental",
+            "load_hdf5",
+            Params::new().with_str("path", path.to_str().unwrap()),
+        )?;
+        let mut al_a = load.output("A")?.clone();
+        let load_secs = load.timing("load");
+
+        let mut rep_secs = 0.0;
+        if rep > 1 {
+            let r = ac.run_task(
+                "elemental",
+                "replicate_cols",
+                Params::new().with_matrix("A", al_a.id).with_i64("times", rep as i64),
+            )?;
+            rep_secs = r.timing("replicate");
+            al_a = r.output("A_rep")?.clone();
+        }
+        let bytes = al_a.size_bytes();
+
+        let res = ac.run_task(
+            "elemental",
+            "truncated_svd",
+            Params::new()
+                .with_matrix("A", al_a.id)
+                .with_i64("rank", rank as i64)
+                .with_i64("steps", steps as i64),
+        )?;
+        let svd_secs = res.timing("compute");
+        let svd_sim = res.timing("sim_secs");
+
+        // send U, S, V to the client (one executor, like the paper)
+        let mut ac1 = ac;
+        ac1.executors = 1;
+        let (_, su) = ac1.to_indexed_row_matrix(res.output("U")?, 1)?;
+        let (_, ss) = ac1.to_indexed_row_matrix(res.output("S")?, 1)?;
+        let (_, sv) = ac1.to_indexed_row_matrix(res.output("V")?, 1)?;
+        let send_secs = su.secs + ss.secs + sv.secs;
+
+        let sigma0 = match res.scalars.get("sigma") {
+            Some(alchemist::protocol::Value::F64s(v)) if !v.is_empty() => v[0],
+            _ => f64::NAN,
+        };
+        table.row(&[
+            fmt::bytes(bytes as u64),
+            workers.to_string(),
+            format!("{load_secs:.2}"),
+            format!("{rep_secs:.2}"),
+            format!("{svd_secs:.2}"),
+            format!("{svd_sim:.2}"),
+            format!("{send_secs:.3}"),
+            format!("{sigma0:.2}"),
+        ]);
+
+        ac1.shutdown_server()?;
+        server.shutdown_on_request();
+    }
+
+    println!();
+    table.print();
+    println!(
+        "(paper Fig 3 shape: simulated SVD time ~flat as size and workers double \
+         together; send-to-client grows with output size)"
+    );
+    Ok(())
+}

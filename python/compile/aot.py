@@ -1,0 +1,207 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + a manifest.
+
+Run once at build time (``make artifacts``); the rust runtime
+(``rust/src/runtime``) loads ``artifacts/*.hlo.txt`` through
+``HloModuleProto::from_text_file`` and compiles them on the PJRT CPU
+client. HLO **text** is the interchange format, never
+``lowered.compile().serialize()`` or proto bytes: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is listed in ``artifacts/manifest.txt`` as one
+whitespace-separated ``key=value`` line, e.g.::
+
+    name=pallas_gemm_nn_256x256x256 op=gemm_nn engine=pallas dtype=f64 \
+        dims=256,256,256 inputs=256x256;256x256;256x256 outputs=256x256
+
+The rust side resolves (op, dims, engine) -> executable via this manifest;
+nothing in rust parses HLO beyond handing the text to XLA.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True always).
+
+    The rust loader unwraps the 1-/2-tuple; keeping every artifact a tuple
+    makes the calling convention uniform.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Spec:
+    """One artifact: an L2 builder plus concrete example shapes."""
+
+    def __init__(self, op, engine, dims, build, in_shapes, out_shapes,
+                 block=128):
+        self.op = op
+        self.engine = engine
+        self.dims = dims
+        self.build = build
+        self.in_shapes = in_shapes
+        self.out_shapes = out_shapes
+        self.block = block
+        self.name = f"{engine}_{op}_" + "x".join(str(d) for d in dims)
+
+    def manifest_line(self) -> str:
+        fmt = lambda shapes: ";".join(  # noqa: E731
+            "x".join(str(d) for d in s) for s in shapes
+        )
+        return (
+            f"name={self.name} op={self.op} engine={self.engine} dtype=f64 "
+            f"dims={','.join(str(d) for d in self.dims)} "
+            f"inputs={fmt(self.in_shapes)} outputs={fmt(self.out_shapes)}"
+        )
+
+
+def gemm_spec(variant, t, engine, block=128):
+    m = n = k = t
+    a = (k, m) if variant == "tn" else (m, k)
+    b = (n, k) if variant == "nt" else (k, n)
+    return Spec(
+        op=f"gemm_{variant}", engine=engine, dims=(m, n, k),
+        build=lambda: model.make_gemm(m, n, k, variant=variant,
+                                      engine=engine, block=block),
+        in_shapes=[(m, n), a, b], out_shapes=[(m, n)], block=block,
+    )
+
+
+def gram_spec(m, k, c, engine, block=128):
+    return Spec(
+        op="gram_matvec", engine=engine, dims=(m, k, c),
+        build=lambda: model.make_gram_matvec(m, k, c, engine=engine,
+                                             block=block),
+        in_shapes=[(m, k), (k, c), (1, 1)], out_shapes=[(k, c)], block=block,
+    )
+
+
+def rff_expand_spec(m, k0, d, engine, block=128):
+    return Spec(
+        op="rff_expand", engine=engine, dims=(m, k0, d),
+        build=lambda: model.make_rff_expand(m, k0, d, engine=engine,
+                                            block=block),
+        in_shapes=[(m, k0), (k0, d), (1, d), (1, 1)], out_shapes=[(m, d)],
+        block=block,
+    )
+
+
+def cg_update_spec(m, n, engine, block=128):
+    return Spec(
+        op="cg_update", engine=engine, dims=(m, n),
+        build=lambda: model.make_cg_update(m, n, engine=engine, block=block),
+        in_shapes=[(m, n)] * 4 + [(1, n)],
+        out_shapes=[(m, n), (m, n)], block=block,
+    )
+
+
+def default_specs(quick: bool = False):
+    """The artifact set DESIGN.md §3 lists; ``--quick`` trims to the shapes
+    the python test-suite needs so pytest doesn't pay the full build."""
+    specs = []
+    # Composable square GEMM tiles (both engines; 3 sizes for the tile-size
+    # ablation bench).
+    tiles = [256] if quick else [128, 256, 512]
+    for t in tiles:
+        for variant in ("nn", "tn", "nt"):
+            for engine in ("pallas", "xla"):
+                specs.append(gemm_spec(variant, t, engine))
+    # Gram-operator panels: m = row-panel, k = feature width, c = RHS block.
+    gram_shapes = [(2048, 1024, 32)] if quick else [
+        # CG speech problem: c=32 classes, feature sweep (Table 4)
+        (2048, 512, 32), (2048, 1024, 32), (2048, 2048, 32), (2048, 3072, 32),
+        # Lanczos SVD: single Lanczos vector (c=1 avoids 8x padding waste —
+        # §Perf), plus c=8 for small blocks (Table 5 / Fig 3)
+        (2048, 1024, 8), (2048, 2048, 8),
+        # m=1024 variants: halve row-padding waste for small per-worker
+        # shards (§Perf)
+        (1024, 512, 32), (1024, 1024, 32), (1024, 2048, 32), (1024, 3072, 32),
+    ]
+    # Lanczos (c=1) panel grid: fine m granularity keeps row-padding waste
+    # ≤2x even for tiny per-worker shards in the Fig-3 weak-scaling sweep
+    # (§Perf); k covers the column-replication ladder 256..4096.
+    if not quick:
+        for m in (256, 512, 1024, 2048):
+            for k in (256, 512, 1024, 2048, 4096):
+                gram_shapes.append((m, k, 1))
+    for (m, k, c) in gram_shapes:
+        specs.append(gram_spec(m, k, c, "xla"))
+    # pallas variants of the two default hot shapes (engine ablation)
+    pallas_gram = [(2048, 1024, 32)] if quick else [(2048, 1024, 32),
+                                                    (2048, 2048, 8)]
+    for (m, k, c) in pallas_gram:
+        specs.append(gram_spec(m, k, c, "pallas"))
+    # Random-feature expansion panel (d chunked at 1024 by the rust side).
+    for engine in ("pallas", "xla"):
+        specs.append(rff_expand_spec(2048, 512, 1024, engine))
+    # Fused CG state update, D chunked at 1024.
+    for engine in ("pallas", "xla"):
+        specs.append(cg_update_spec(1024, 32, engine))
+    return specs
+
+
+def lower_spec(spec: Spec) -> str:
+    fn = spec.build()
+    args = [jax.ShapeDtypeStruct(s, F64) for s in spec.in_shapes]
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the shapes the python tests need")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name filter")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = default_specs(quick=args.quick)
+    if args.only:
+        keep = set(args.only.split(","))
+        specs = [s for s in specs if s.name in keep]
+
+    lines = []
+    for i, spec in enumerate(specs):
+        text = lower_spec(spec)
+        path = os.path.join(args.out_dir, f"{spec.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        lines.append(spec.manifest_line() + f" sha={digest}")
+        print(f"[{i + 1}/{len(specs)}] {spec.name}: "
+              f"{len(text)} chars sha={digest}", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# alchemist AOT artifact manifest (see compile/aot.py)\n")
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {len(specs)} artifacts to {args.out_dir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

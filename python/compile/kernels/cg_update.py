@@ -1,0 +1,54 @@
+"""L1: fused conjugate-gradient pair-AXPY kernel.
+
+One CG iteration on the normal equations updates the iterate and the
+residual with the same step scalars: ``X += alpha*P; R -= alpha*Q`` (one
+alpha per right-hand-side column, since the speech problem is a block solve
+with 147 label columns). Fusing the pair halves the number of passes over
+the [D, C] state matrices — on a TPU both updates read their operand tiles
+once from HBM and write once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _cg_update_kernel(x_ref, r_ref, p_ref, q_ref, alpha_ref, xo_ref, ro_ref):
+    alpha = alpha_ref[...]  # [1, bn] row, broadcast down the tile
+    xo_ref[...] = x_ref[...] + alpha * p_ref[...]
+    ro_ref[...] = r_ref[...] - alpha * q_ref[...]
+
+
+def make_cg_update(m: int, n: int, *, dtype=jnp.float64, block: int = 128,
+                   interpret: bool = True):
+    """Build ``fn(x, r, p, q, alpha[1,n]) -> (x + alpha*p, r - alpha*q)``."""
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    grid = (m // bm, n // bn)
+
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    row = pl.BlockSpec((1, bn), lambda i, j: (0, j))
+
+    call = pl.pallas_call(
+        _cg_update_kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, row],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), dtype),
+            jax.ShapeDtypeStruct((m, n), dtype),
+        ],
+        interpret=interpret,
+    )
+
+    def cg_update(x, r, p, q, alpha):
+        for t in (x, r, p, q):
+            assert t.shape == (m, n)
+        assert alpha.shape == (1, n)
+        return call(x, r, p, q, alpha)
+
+    return cg_update

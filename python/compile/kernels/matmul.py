@@ -1,0 +1,119 @@
+"""L1: tiled Pallas GEMM kernels (the worker compute hot-spot).
+
+The paper's MPI libraries (libSkylark CG, the Elemental-based SVD) spend
+essentially all their time in dense GEMM; here that hot-spot is a Pallas
+kernel. The kernel is written TPU-style — the grid walks (M/bm, N/bn)
+output tiles, each program holds one accumulator tile while K-panels of A
+and B are streamed through BlockSpec-scheduled copies — and is lowered with
+``interpret=True`` so the CPU PJRT client can execute the resulting HLO
+(real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run;
+see DESIGN.md §Hardware-Adaptation for the VMEM/MXU projection).
+
+All three storage variants take ``C_in`` and return ``C_in + op(A)·op(B)``
+so the rust runtime composes arbitrary GEMMs from fixed-shape artifacts by
+looping tiles and threading the accumulator through:
+
+* ``nn``: A[M,K] · B[K,N]
+* ``tn``: A[K,M]ᵀ · B[K,N]   (A stored untransposed — Gram products)
+* ``nt``: A[M,K] · B[N,K]ᵀ   (right factor stored row-major)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``want`` (grids must tile)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _gemm_kernel(c_ref, a_ref, b_ref, o_ref, *, trans_a: bool, trans_b: bool):
+    """One (i, j, k) grid step: o[i,j] (+)= op(a)·op(b), seeded with c[i,j].
+
+    The K axis is the innermost grid dimension; the output block for a
+    fixed (i, j) is revisited across k steps, which Pallas guarantees stays
+    resident (the TPU analogue: the accumulator tile lives in VMEM while
+    A/B panels stream past it).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = c_ref[...]
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if trans_a:
+        a = a.T
+    if trans_b:
+        b = b.T
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+
+
+def make_gemm(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    variant: str = "nn",
+    dtype=jnp.float64,
+    block: int = 128,
+    interpret: bool = True,
+):
+    """Build ``fn(c, a, b) -> c + op(a)·op(b)`` as a Pallas call.
+
+    Shapes: c [m,n]; nn: a [m,k], b [k,n]; tn: a [k,m], b [k,n];
+    nt: a [m,k], b [n,k].
+    """
+    if variant not in ("nn", "tn", "nt"):
+        raise ValueError(f"unknown gemm variant {variant!r}")
+    trans_a = variant == "tn"
+    trans_b = variant == "nt"
+
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    bk = _pick_block(k, block)
+    grid = (m // bm, n // bn, k // bk)
+
+    # index maps are in units of blocks
+    c_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    if trans_a:
+        a_spec = pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i))
+        a_shape = (k, m)
+    else:
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+        a_shape = (m, k)
+    if trans_b:
+        b_spec = pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
+        b_shape = (n, k)
+    else:
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        b_shape = (k, n)
+
+    kernel = functools.partial(_gemm_kernel, trans_a=trans_a, trans_b=trans_b)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[c_spec, a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), dtype),
+        interpret=interpret,
+    )
+
+    def gemm(c, a, b):
+        assert c.shape == (m, n), (c.shape, (m, n))
+        assert a.shape == a_shape, (a.shape, a_shape)
+        assert b.shape == b_shape, (b.shape, b_shape)
+        return call(c, a, b)
+
+    return gemm

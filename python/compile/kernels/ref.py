@@ -1,0 +1,56 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an entry here with an identical signature;
+``python/tests`` asserts allclose between the Pallas lowering and these, and
+``aot.py`` can lower these instead of the kernels (the ``xla_*`` artifact
+variants) so the rust runtime can ablate pallas-interpret vs native XLA dot.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_nn(c, a, b):
+    """C + A @ B."""
+    return c + a @ b
+
+
+def gemm_tn(c, a, b):
+    """C + A.T @ B (A is stored untransposed, shape [K, M])."""
+    return c + a.T @ b
+
+
+def gemm_nt(c, a, b):
+    """C + A @ B.T (B is stored untransposed, shape [N, K])."""
+    return c + a @ b.T
+
+
+def rff_finalize(acc, bias, scale):
+    """Random Fourier features finalize: scale * cos(acc + bias).
+
+    ``acc`` is the accumulated X @ Omega projection tile [M, N], ``bias``
+    the per-feature phase row [1, N] broadcast over rows, ``scale`` the
+    sqrt(2/D) normalization as a [1, 1] array (an array input so the same
+    HLO artifact serves any D).
+    """
+    return scale * jnp.cos(acc + bias)
+
+
+def cg_update(x, r, p, q, alpha):
+    """Fused CG pair-AXPY: X += alpha*P ; R -= alpha*Q.
+
+    ``alpha`` is a [1, C] row (one scalar per right-hand side / class
+    column) broadcast down the rows; returns (x_new, r_new).
+    """
+    return x + alpha * p, r - alpha * q
+
+
+def gram_matvec(a_panel, v, reg):
+    """Regularized Gram-operator panel product: A.T @ (A @ V) + reg * V.
+
+    ``a_panel`` [M, K] is one row-panel of the feature matrix, ``v`` [K, C]
+    the block of Lanczos/CG vectors, ``reg`` a [1, 1] regularizer (0 for the
+    SVD Gram operator). Workers allreduce the partial results.
+    """
+    return a_panel.T @ (a_panel @ v) + reg * v

@@ -1,0 +1,53 @@
+"""L1: fused random-Fourier-features finalize kernel.
+
+The speech-classification experiment (paper §4.1) expands the 440-feature
+TIMIT matrix to D random features *inside Alchemist* (Rahimi–Recht random
+kitchen sinks): ``Z = sqrt(2/D) * cos(X @ Omega + b)``. The projection
+``X @ Omega`` runs through the GEMM kernel; this kernel fuses the
+elementwise tail — bias broadcast, cosine, scaling — in a single pass over
+the accumulated tile so the projection never makes a second trip through
+HBM on a real TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _rff_kernel(acc_ref, bias_ref, scale_ref, o_ref):
+    # scale arrives as a [1, 1] block in SMEM-style layout; bias as a [1, bn]
+    # row broadcast down the tile.
+    o_ref[...] = scale_ref[0, 0] * jnp.cos(acc_ref[...] + bias_ref[...])
+
+
+def make_rff_finalize(m: int, n: int, *, dtype=jnp.float64, block: int = 128,
+                      interpret: bool = True):
+    """Build ``fn(acc [m,n], bias [1,n], scale [1,1]) -> scale*cos(acc+bias)``."""
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    grid = (m // bm, n // bn)
+
+    call = pl.pallas_call(
+        _rff_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), dtype),
+        interpret=interpret,
+    )
+
+    def rff_finalize(acc, bias, scale):
+        assert acc.shape == (m, n)
+        assert bias.shape == (1, n)
+        assert scale.shape == (1, 1)
+        return call(acc, bias, scale)
+
+    return rff_finalize

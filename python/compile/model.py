@@ -1,0 +1,90 @@
+"""L2: the JAX compute graphs the Alchemist workers execute.
+
+These are the per-worker SPMD panels of the paper's two MPI routines —
+libSkylark's block-CG on the regularized normal equations and the
+ARPACK-style Lanczos truncated SVD — plus the random-feature expansion.
+Each function composes the L1 Pallas kernels (``engine="pallas"``) or their
+pure-jnp oracles (``engine="xla"``, lowered to native XLA dot/cos for the
+engine ablation). ``aot.py`` lowers every exported (function, shape,
+engine) to HLO text once at build time; the rust runtime threads worker
+data through the resulting executables and the collectives layer does the
+cross-worker allreduces. Python never runs at serve time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cg_update as _cg
+from .kernels import matmul as _mm
+from .kernels import ref as _ref
+from .kernels import rff as _rff
+
+
+def _check_engine(engine: str) -> None:
+    if engine not in ("pallas", "xla"):
+        raise ValueError(f"unknown engine {engine!r}")
+
+
+def make_gemm(m, n, k, *, variant="nn", engine="pallas", block=128,
+              dtype=jnp.float64):
+    """``(c, a, b) -> c + op(a)·op(b)`` — the composable tile primitive."""
+    _check_engine(engine)
+    if engine == "pallas":
+        return _mm.make_gemm(m, n, k, variant=variant, block=block, dtype=dtype)
+    return getattr(_ref, f"gemm_{variant}")
+
+
+def make_gram_matvec(m, k, c, *, engine="pallas", block=128,
+                     dtype=jnp.float64):
+    """``(a [m,k], v [k,c], reg [1,1]) -> aᵀ(a·v) + reg·v``.
+
+    One worker's panel of the Gram operator behind both CG (reg = nλ) and
+    the Lanczos SVD (reg = 0); partial results are allreduced in rust. The
+    two GEMMs lower into one HLO module so XLA schedules the intermediate
+    ``a·v`` panel without a round-trip through the coordinator.
+    """
+    _check_engine(engine)
+    if engine == "xla":
+        return _ref.gram_matvec
+    nn = _mm.make_gemm(m, c, k, variant="nn", block=block, dtype=dtype)
+    tn = _mm.make_gemm(k, c, m, variant="tn", block=block, dtype=dtype)
+
+    def gram_matvec(a, v, reg):
+        av = nn(jnp.zeros((m, c), dtype), a, v)
+        return tn(reg * v, a, av)
+
+    return gram_matvec
+
+
+def make_rff_expand(m, k0, d, *, engine="pallas", block=128,
+                    dtype=jnp.float64):
+    """``(x [m,k0], omega [k0,d], bias [1,d], scale [1,1]) -> z [m,d]``.
+
+    Rahimi–Recht random-feature panel: project then fused cos-finalize.
+    The paper expands TIMIT's 440 raw features to 10k–60k random features
+    *inside* Alchemist (cheaper than shipping the expanded TBs over TCP);
+    the rust skylark library runs this per row-panel.
+    """
+    _check_engine(engine)
+    if engine == "xla":
+        def rff_expand_ref(x, omega, bias, scale):
+            return _ref.rff_finalize(x @ omega, bias, scale)
+        return rff_expand_ref
+    nn = _mm.make_gemm(m, d, k0, variant="nn", block=block, dtype=dtype)
+    fin = _rff.make_rff_finalize(m, d, block=block, dtype=dtype)
+
+    def rff_expand(x, omega, bias, scale):
+        acc = nn(jnp.zeros((m, d), dtype), x, omega)
+        return fin(acc, bias, scale)
+
+    return rff_expand
+
+
+def make_cg_update(m, n, *, engine="pallas", block=128, dtype=jnp.float64):
+    """``(x, r, p, q, alpha [1,n]) -> (x + alpha·p, r - alpha·q)``."""
+    _check_engine(engine)
+    if engine == "xla":
+        return _ref.cg_update
+    return _cg.make_cg_update(m, n, block=block, dtype=dtype)

@@ -1,0 +1,5 @@
+import jax
+
+# The whole stack is double precision (the paper's matrices are f64);
+# enable x64 before any test imports kernels.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,101 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, block sizes, and dtypes; this is the core
+correctness signal for everything the rust workers execute.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cg_update, matmul, ref, rff
+
+DIMS = st.sampled_from([16, 32, 48, 64, 96, 128, 192, 256])
+BLOCKS = st.sampled_from([16, 32, 64, 128])
+DTYPES = st.sampled_from([jnp.float32, jnp.float64])
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _tol(dtype):
+    return 1e-3 if dtype == jnp.float32 else 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, k=DIMS, block=BLOCKS, dtype=DTYPES,
+       variant=st.sampled_from(["nn", "tn", "nt"]), seed=st.integers(0, 2**31))
+def test_gemm_matches_ref(m, n, k, block, dtype, variant, seed):
+    rng = _rng(seed)
+    c = rng.normal(size=(m, n)).astype(dtype)
+    a_shape = (k, m) if variant == "tn" else (m, k)
+    b_shape = (n, k) if variant == "nt" else (k, n)
+    a = rng.normal(size=a_shape).astype(dtype)
+    b = rng.normal(size=b_shape).astype(dtype)
+    got = matmul.make_gemm(m, n, k, variant=variant, block=block,
+                           dtype=dtype)(c, a, b)
+    want = getattr(ref, f"gemm_{variant}")(c, a, b)
+    assert got.dtype == want.dtype == dtype
+    np.testing.assert_allclose(got, want, rtol=_tol(dtype) * k,
+                               atol=_tol(dtype) * k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, block=BLOCKS, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_rff_finalize_matches_ref(m, n, block, dtype, seed):
+    rng = _rng(seed)
+    acc = rng.normal(size=(m, n)).astype(dtype)
+    bias = rng.normal(size=(1, n)).astype(dtype)
+    scale = np.array([[rng.normal()]]).astype(dtype)
+    got = rff.make_rff_finalize(m, n, block=block, dtype=dtype)(acc, bias, scale)
+    want = ref.rff_finalize(acc, bias, scale)
+    np.testing.assert_allclose(got, want, rtol=_tol(dtype), atol=_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, block=BLOCKS, dtype=DTYPES, seed=st.integers(0, 2**31))
+def test_cg_update_matches_ref(m, n, block, dtype, seed):
+    rng = _rng(seed)
+    x, r, p, q = (rng.normal(size=(m, n)).astype(dtype) for _ in range(4))
+    alpha = rng.normal(size=(1, n)).astype(dtype)
+    gx, gr = cg_update.make_cg_update(m, n, block=block, dtype=dtype)(
+        x, r, p, q, alpha)
+    wx, wr = ref.cg_update(x, r, p, q, alpha)
+    np.testing.assert_allclose(gx, wx, rtol=_tol(dtype), atol=_tol(dtype))
+    np.testing.assert_allclose(gr, wr, rtol=_tol(dtype), atol=_tol(dtype))
+
+
+def test_gemm_rejects_bad_variant():
+    with pytest.raises(ValueError):
+        matmul.make_gemm(8, 8, 8, variant="tt")
+
+
+def test_gemm_block_larger_than_dim_falls_back():
+    # block > dim must still tile exactly (picks a divisor).
+    rng = _rng(0)
+    c = rng.normal(size=(8, 8))
+    a = rng.normal(size=(8, 8))
+    b = rng.normal(size=(8, 8))
+    got = matmul.make_gemm(8, 8, 8, block=999)(c, a, b)
+    np.testing.assert_allclose(got, ref.gemm_nn(c, a, b), rtol=1e-12)
+
+
+def test_gemm_non_power_of_two_dims():
+    rng = _rng(3)
+    m, n, k = 24, 36, 60  # awkward divisors
+    c = rng.normal(size=(m, n))
+    a = rng.normal(size=(m, k))
+    b = rng.normal(size=(k, n))
+    got = matmul.make_gemm(m, n, k, block=16)(c, a, b)
+    np.testing.assert_allclose(got, ref.gemm_nn(c, a, b), rtol=1e-10)
+
+
+def test_gemm_accumulates_into_c_not_overwrite():
+    rng = _rng(4)
+    c = rng.normal(size=(16, 16))
+    a = np.zeros((16, 16))
+    b = np.zeros((16, 16))
+    got = matmul.make_gemm(16, 16, 16)(c, a, b)
+    np.testing.assert_allclose(got, c, rtol=1e-14)

@@ -1,0 +1,76 @@
+"""L2 correctness: composed model graphs, pallas engine vs xla engine."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SMALL = st.sampled_from([32, 64, 128])
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL, k=SMALL, c=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 2**31))
+def test_gram_matvec_engines_agree(m, k, c, seed):
+    rng = _rng(seed)
+    a = rng.normal(size=(m, k))
+    v = rng.normal(size=(k, c))
+    reg = np.array([[0.37]])
+    got = model.make_gram_matvec(m, k, c, engine="pallas", block=32)(a, v, reg)
+    want = model.make_gram_matvec(m, k, c, engine="xla")(a, v, reg)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_gram_matvec_is_gram_plus_reg():
+    rng = _rng(7)
+    a = rng.normal(size=(64, 32))
+    v = rng.normal(size=(32, 8))
+    reg = np.array([[2.5]])
+    got = model.make_gram_matvec(64, 32, 8, engine="pallas", block=32)(a, v, reg)
+    want = a.T @ (a @ v) + 2.5 * v
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL, k0=st.sampled_from([16, 32]), d=SMALL,
+       seed=st.integers(0, 2**31))
+def test_rff_expand_engines_agree(m, k0, d, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(m, k0))
+    omega = rng.normal(size=(k0, d))
+    bias = rng.uniform(0, 2 * np.pi, size=(1, d))
+    scale = np.array([[np.sqrt(2.0 / d)]])
+    got = model.make_rff_expand(m, k0, d, engine="pallas", block=32)(
+        x, omega, bias, scale)
+    want = model.make_rff_expand(m, k0, d, engine="xla")(x, omega, bias, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_rff_expand_range_bounded():
+    # |scale * cos| <= scale everywhere — catches phase/scale mix-ups.
+    rng = _rng(11)
+    x = rng.normal(size=(32, 16))
+    omega = rng.normal(size=(16, 64))
+    bias = rng.uniform(0, 2 * np.pi, size=(1, 64))
+    scale = np.array([[np.sqrt(2.0 / 64)]])
+    z = model.make_rff_expand(32, 16, 64, engine="pallas", block=16)(
+        x, omega, bias, scale)
+    assert float(jnp.max(jnp.abs(z))) <= float(scale[0, 0]) + 1e-12
+
+
+def test_cg_update_engines_agree():
+    rng = _rng(13)
+    m, n = 128, 32
+    x, r, p, q = (rng.normal(size=(m, n)) for _ in range(4))
+    alpha = rng.normal(size=(1, n))
+    gx, gr = model.make_cg_update(m, n, engine="pallas", block=32)(
+        x, r, p, q, alpha)
+    wx, wr = ref.cg_update(x, r, p, q, alpha)
+    np.testing.assert_allclose(gx, wx, rtol=1e-12)
+    np.testing.assert_allclose(gr, wr, rtol=1e-12)

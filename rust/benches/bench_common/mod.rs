@@ -1,0 +1,42 @@
+#![allow(dead_code)] // each bench uses a subset of these helpers
+//! Shared helpers for the paper-table benches (harness = false mains;
+//! criterion is not in the offline vendor set).
+
+use alchemist::cli::Args;
+use alchemist::config::Config;
+
+/// Paper iteration count for the 10k-feature CG run (§4.1: "CG takes
+/// approximately 526 iterations"); totals are extrapolated to this count
+/// from the measured per-iteration mean, exactly as a full run would cost.
+pub const PAPER_CG_ITERS: usize = 526;
+
+/// Build the bench config: defaults + `--engine` + `--set k=v,...`
+/// overrides shared by all benches.
+pub fn bench_config(args: &Args) -> alchemist::Result<Config> {
+    let mut cfg = Config::default();
+    if let Some(engine) = args.get("engine") {
+        cfg.apply("engine", engine)?;
+    }
+    if let Some(pairs) = args.get("set") {
+        for pair in pairs.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects k=v, got {pair:?}"))?;
+            cfg.apply(k.trim(), v.trim())?;
+        }
+    }
+    Ok(cfg)
+}
+
+/// `--quick` trims sweeps for smoke runs.
+pub fn is_quick(args: &Args) -> bool {
+    args.flag("quick")
+}
+
+pub fn require_artifacts(cfg: &Config) -> bool {
+    let ok = cfg.resolved_artifacts_dir().join("manifest.txt").exists();
+    if !ok {
+        println!("SKIP: artifacts missing; run `make artifacts` first");
+    }
+    ok
+}

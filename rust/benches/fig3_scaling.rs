@@ -1,0 +1,107 @@
+//! Figure 3: weak-scaling truncated SVD on column-replicated data.
+//!
+//! Paper: 2.2 TB base replicated to 4.4/8.8/17.6 TB with node counts
+//! doubling alongside; SVD compute time stays ~flat (weak scaling), HDF5
+//! load shrinks with more nodes, send-to-Spark grows with output size.
+//! Here the base is `--cells × --times` replicated ×{1,2,4,8} with
+//! workers {2,4,8,16}; the flat-SVD shape is read from the simulated
+//! cluster column (one core; DESIGN.md §2).
+
+mod bench_common;
+
+use alchemist::cli::Args;
+use alchemist::client::AlchemistContext;
+use alchemist::coordinator::AlchemistServer;
+use alchemist::metrics::Table;
+use alchemist::protocol::Params;
+use alchemist::util::fmt;
+use alchemist::workloads::OceanSpec;
+use bench_common::{bench_config, is_quick, require_artifacts};
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let cfg = bench_config(&args)?;
+    if !require_artifacts(&cfg) {
+        return Ok(());
+    }
+    let quick = is_quick(&args);
+    let cells = args.get_usize("cells", 2048)?;
+    let times = args.get_usize("times", 256)?;
+    let rank = args.get_usize("rank", 20)?;
+    let steps = args.get_usize("steps", if quick { 24 } else { 48 })?;
+    let default_reps: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let default_workers: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8, 16] };
+    let replicas = args.get_usize_list("replicas", default_reps)?;
+    let workers_list = args.get_usize_list("workers", default_workers)?;
+    anyhow::ensure!(replicas.len() == workers_list.len(), "sweep lengths differ");
+
+    let spec = OceanSpec { cells, times, ..OceanSpec::default() };
+    let dir = std::env::temp_dir().join("alchemist-ocean");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("ocean_{cells}x{times}.bin"));
+    if !path.exists() {
+        spec.write_file(&path)?;
+    }
+
+    let mut table = Table::new(
+        "Figure 3 (scaled): weak-scaling SVD on column-replicated ocean data",
+        &[
+            "size", "workers", "load (s)", "svd wall (s)", "svd sim (s)",
+            "send S<=A (s)",
+        ],
+    );
+
+    for (&rep, &workers) in replicas.iter().zip(&workers_list) {
+        let server = AlchemistServer::start(cfg.clone(), workers)?;
+        let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2)?;
+        ac.register_library("elemental", "builtin:elemental")?;
+
+        let load = ac.run_task(
+            "elemental",
+            "load_hdf5",
+            Params::new().with_str("path", path.to_str().unwrap()),
+        )?;
+        let mut al_a = load.output("A")?.clone();
+        if rep > 1 {
+            let r = ac.run_task(
+                "elemental",
+                "replicate_cols",
+                Params::new().with_matrix("A", al_a.id).with_i64("times", rep as i64),
+            )?;
+            al_a = r.output("A_rep")?.clone();
+        }
+        let res = ac.run_task(
+            "elemental",
+            "truncated_svd",
+            Params::new()
+                .with_matrix("A", al_a.id)
+                .with_i64("rank", rank as i64)
+                .with_i64("steps", steps as i64),
+        )?;
+        // one receiving executor, like the paper
+        ac.executors = 1;
+        let (_, su) = ac.to_indexed_row_matrix(res.output("U")?, 1)?;
+        let (_, ss) = ac.to_indexed_row_matrix(res.output("S")?, 1)?;
+        let (_, sv) = ac.to_indexed_row_matrix(res.output("V")?, 1)?;
+
+        table.row(&[
+            fmt::bytes(al_a.size_bytes() as u64),
+            workers.to_string(),
+            format!("{:.2}", load.timing("load")),
+            format!("{:.2}", res.timing("compute")),
+            format!("{:.2}", res.timing("sim_secs")),
+            format!("{:.3}", su.secs + ss.secs + sv.secs),
+        ]);
+
+        ac.shutdown_server()?;
+        server.shutdown_on_request();
+    }
+
+    table.print();
+    println!(
+        "paper shape: sim svd time ~flat as (size, workers) double together; \
+         send time grows with size"
+    );
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Microbenchmarks: collectives, local GEMM roofline, protocol codec
+//! throughput — the substrate numbers the end-to-end results decompose
+//! into.
+
+mod bench_common;
+
+use alchemist::cli::Args;
+use alchemist::collectives::{allreduce_sum, broadcast, Communicator, LocalComm};
+use alchemist::distmat::LocalMatrix;
+use alchemist::metrics::{Stats, Table};
+use alchemist::protocol::DataMsg;
+use alchemist::util::prng::Rng;
+use alchemist::util::timer::time;
+use bench_common::is_quick;
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let quick = is_quick(&args);
+
+    gemm_roofline(quick);
+    collectives_micro(quick);
+    codec_micro(quick);
+    Ok(())
+}
+
+fn gemm_roofline(quick: bool) {
+    let mut table = Table::new(
+        "micro: native blocked GEMM (single thread)",
+        &["n", "secs", "GFLOP/s"],
+    );
+    let sizes: &[usize] = if quick { &[256] } else { &[128, 256, 512, 1024] };
+    let mut rng = Rng::new(1);
+    for &n in sizes {
+        let a = LocalMatrix::from_fn(n, n, |_, _| rng.normal());
+        let b = LocalMatrix::from_fn(n, n, |_, _| rng.normal());
+        let mut c = LocalMatrix::zeros(n, n);
+        c.gemm_nn(&a, &b); // warm
+        let reps = if n <= 256 { 5 } else { 2 };
+        let mut stats = Stats::new();
+        for _ in 0..reps {
+            let mut c = LocalMatrix::zeros(n, n);
+            let (_, secs) = time(|| c.gemm_nn(&a, &b));
+            stats.push(secs);
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{:.4}", stats.mean()),
+            format!("{:.2}", 2.0 * (n as f64).powi(3) / stats.mean() / 1e9),
+        ]);
+    }
+    table.print();
+}
+
+fn collectives_micro(quick: bool) {
+    let mut table = Table::new(
+        "micro: collectives (in-proc comm, wall time at rank 0)",
+        &["op", "ranks", "elements", "secs (mean±sd)"],
+    );
+    let sizes: &[usize] = if quick { &[1024] } else { &[1024, 65_536, 1_048_576] };
+    for &n in sizes {
+        for &p in &[2usize, 4, 8] {
+            for op in ["allreduce", "broadcast"] {
+                let reps = if n > 100_000 { 3 } else { 10 };
+                let mut stats = Stats::new();
+                for _ in 0..reps {
+                    let comms = LocalComm::group(p, None);
+                    let mut handles = Vec::new();
+                    for c in comms {
+                        let op = op.to_string();
+                        handles.push(std::thread::spawn(move || {
+                            let mut buf = vec![c.rank() as f64; n];
+                            let t0 = std::time::Instant::now();
+                            match op.as_str() {
+                                "allreduce" => allreduce_sum(&c, 1, &mut buf),
+                                _ => broadcast(&c, 1, 0, &mut buf),
+                            }
+                            (c.rank(), t0.elapsed().as_secs_f64())
+                        }));
+                    }
+                    for h in handles {
+                        let (rank, secs) = h.join().unwrap();
+                        if rank == 0 {
+                            stats.push(secs);
+                        }
+                    }
+                }
+                table.row(&[
+                    op.into(),
+                    p.to_string(),
+                    n.to_string(),
+                    stats.mean_pm_std(6),
+                ]);
+            }
+        }
+    }
+    table.print();
+}
+
+fn codec_micro(quick: bool) {
+    let mut table = Table::new(
+        "micro: wire codec throughput (PushRows encode+decode)",
+        &["rows/frame", "bytes/frame", "encode GB/s", "decode GB/s"],
+    );
+    let cols = 512usize;
+    let frames: &[usize] = if quick { &[64] } else { &[1, 8, 64, 512] };
+    let mut rng = Rng::new(2);
+    for &rows in frames {
+        let data: Vec<f64> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let msg = DataMsg::PushRows {
+            matrix_id: 1,
+            start_row: 0,
+            nrows: rows as u32,
+            ncols: cols as u32,
+            data,
+        };
+        let bytes = rows * cols * 8;
+        let reps = (200_000_000 / bytes.max(1)).clamp(10, 5000);
+        let (encoded, enc_secs) = time(|| {
+            let mut last = Vec::new();
+            for _ in 0..reps {
+                last = msg.encode();
+            }
+            last
+        });
+        let (_, dec_secs) = time(|| {
+            for _ in 0..reps {
+                let _ = DataMsg::decode(&encoded).unwrap();
+            }
+        });
+        table.row(&[
+            rows.to_string(),
+            bytes.to_string(),
+            format!("{:.2}", bytes as f64 * reps as f64 / enc_secs / 1e9),
+            format!("{:.2}", bytes as f64 * reps as f64 / dec_secs / 1e9),
+        ]);
+    }
+    table.print();
+}

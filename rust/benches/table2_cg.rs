@@ -1,0 +1,127 @@
+//! Table 2: per-iteration cost of CG, Spark vs Alchemist, across node
+//! counts.
+//!
+//! Paper: 2,251,569×10,000 random-feature system, nodes ∈ {20,30,40};
+//! Spark 75.3→40.6 s/iter vs Alchemist 2.5→1.2 s/iter (≈30×), totals
+//! extrapolated over the 526-iteration solve. Here: rows and features
+//! scale by ~1/500, node counts map to worker counts {2,3,4}, and the
+//! per-iteration gap + anti-scaling shape are the reproduction targets.
+//! Wall and simulated-cluster columns are both printed (one core;
+//! DESIGN.md §2).
+
+mod bench_common;
+
+use alchemist::cli::Args;
+use alchemist::client::AlchemistContext;
+use alchemist::coordinator::AlchemistServer;
+use alchemist::linalg::CgOptions;
+use alchemist::metrics::{Stats, Table};
+use alchemist::protocol::{Params, Value};
+use alchemist::sparklite::{mllib, IndexedRowMatrix, SparkEngine};
+use alchemist::workloads::TimitSpec;
+use bench_common::{bench_config, is_quick, require_artifacts, PAPER_CG_ITERS};
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let cfg = bench_config(&args)?;
+    if !require_artifacts(&cfg) {
+        return Ok(());
+    }
+    let quick = is_quick(&args);
+    let rows = args.get_usize("rows", if quick { 2048 } else { 4096 })?;
+    let rff_d = args.get_usize("rff-d", 1024)?;
+    let default_nodes: &[usize] = if quick { &[2] } else { &[2, 3, 4] };
+    let node_counts = args.get_usize_list("workers", default_nodes)?;
+    let spark_iters = args.get_usize("spark-iters", if quick { 2 } else { 3 })?;
+    let alch_iters = args.get_usize("alch-iters", if quick { 4 } else { 8 })?;
+
+    let spec = TimitSpec { train_rows: rows, test_rows: 1, ..TimitSpec::default() };
+    let data = spec.generate();
+    let gamma = 0.06;
+    let lambda = 1e-5;
+
+    let total_hdr = format!("total {PAPER_CG_ITERS} iters (s)");
+    let mut table = Table::new(
+        &format!("Table 2 (scaled ~1/500): CG per-iteration cost, {rows}x{rff_d} system"),
+        &[
+            "nodes", "system", "iter (s, mean±sd)", "iter sim (s)",
+            &total_hdr, "total sim (s)",
+        ],
+    );
+
+    for &workers in &node_counts {
+        // ---- Spark baseline ----
+        {
+            let x = IndexedRowMatrix::from_local(&data.x_train, workers * 2);
+            let y = IndexedRowMatrix::from_local(&data.y_train, workers * 2);
+            let mut engine = SparkEngine::new(workers, &cfg);
+            let map =
+                alchemist::linalg::RffMap::generate(spec.raw_features, rff_d, gamma, 1);
+            let z = mllib::rff_expand(&mut engine, &x, &map)?;
+            let res = mllib::cg_solve(
+                &mut engine,
+                &z,
+                &y,
+                &CgOptions { lambda, tol: 0.0, max_iters: spark_iters },
+            )?;
+            let per: Stats = res.iter_secs.iter().copied().collect();
+            let per_sim: Stats = res.iter_sim_secs.iter().copied().collect();
+            table.row(&[
+                workers.to_string(),
+                "Spark".into(),
+                per.mean_pm_std(3),
+                format!("{:.3}", per_sim.mean()),
+                format!("{:.0}", per.mean() * PAPER_CG_ITERS as f64),
+                format!("{:.0}", per_sim.mean() * PAPER_CG_ITERS as f64),
+            ]);
+        }
+
+        // ---- Alchemist offload ----
+        {
+            let server = AlchemistServer::start(cfg.clone(), workers)?;
+            let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, workers)?;
+            ac.register_library("skylark", "builtin:skylark")?;
+            let x = IndexedRowMatrix::from_local(&data.x_train, workers * 2);
+            let y = IndexedRowMatrix::from_local(&data.y_train, workers * 2);
+            let (al_x, _) = ac.send_matrix("X", &x)?;
+            let (al_y, _) = ac.send_matrix("Y", &y)?;
+            let res = ac.run_task(
+                "skylark",
+                "cg_solve",
+                Params::new()
+                    .with_matrix("X", al_x.id)
+                    .with_matrix("Y", al_y.id)
+                    .with_f64("lambda", lambda)
+                    .with_f64("tol", 0.0)
+                    .with_i64("max_iters", alch_iters as i64)
+                    .with_i64("rff_d", rff_d as i64)
+                    .with_f64("rff_gamma", gamma)
+                    .with_i64("rff_seed", 1),
+            )?;
+            let iters = res.scalars.i64("iters")? as usize;
+            let iter_secs = match res.scalars.get("iter_secs") {
+                Some(Value::F64s(v)) => v.clone(),
+                _ => vec![],
+            };
+            let per: Stats = iter_secs.iter().copied().collect();
+            let sim_per = res.timing("sim_secs") / iters.max(1) as f64;
+            table.row(&[
+                workers.to_string(),
+                format!("Alchemist[{}]", cfg.engine.as_str()),
+                per.mean_pm_std(3),
+                format!("{sim_per:.3}"),
+                format!("{:.0}", per.mean() * PAPER_CG_ITERS as f64),
+                format!("{:.0}", sim_per * PAPER_CG_ITERS as f64),
+            ]);
+            ac.shutdown_server()?;
+            server.shutdown_on_request();
+        }
+    }
+
+    table.print();
+    println!(
+        "paper: 20/30/40 nodes -> Spark 75.3/55.9/40.6 s/iter, Alchemist 2.5/1.5/1.2 s/iter"
+    );
+    Ok(())
+}

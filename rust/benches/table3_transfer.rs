@@ -1,0 +1,91 @@
+//! Table 3: feature-matrix transfer time vs (client executors × server
+//! workers).
+//!
+//! Paper: 2,251,569×10,000 f64 over Cray Aries; transfer fastest when
+//! executor and worker counts match, slowest with 2 executors. Here the
+//! matrix scales to rows×1024 f64 over localhost TCP, sweeping executors
+//! {1,2,4,8} × workers {2,3,4}; the diagonal-minimum shape is the target.
+//! Reported numbers are the mean of `--runs` (default 3) like the paper.
+
+mod bench_common;
+
+use alchemist::cli::Args;
+use alchemist::client::AlchemistContext;
+use alchemist::coordinator::AlchemistServer;
+use alchemist::metrics::{Stats, Table};
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::util::fmt;
+use alchemist::workloads::TimitSpec;
+use bench_common::{bench_config, is_quick};
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let mut cfg = bench_config(&args)?;
+    // transfer only; engine never runs
+    cfg.apply("engine", "native")?;
+    let quick = is_quick(&args);
+    let rows = args.get_usize("rows", if quick { 4096 } else { 16_384 })?;
+    let cols = args.get_usize("cols", 1024)?;
+    let default_execs: &[usize] = if quick { &[2, 4] } else { &[1, 2, 4, 8] };
+    let default_workers: &[usize] = if quick { &[2] } else { &[2, 3, 4] };
+    let executors_list = args.get_usize_list("executors", default_execs)?;
+    let workers_list = args.get_usize_list("workers", default_workers)?;
+    let runs = args.get_usize("runs", 3)?;
+
+    // dense feature matrix (contents irrelevant to transfer cost; use the
+    // TIMIT generator so data creation time is also reportable, like the
+    // paper's "data set creation times" column)
+    let t0 = std::time::Instant::now();
+    let spec = TimitSpec {
+        train_rows: rows,
+        test_rows: 1,
+        raw_features: cols,
+        classes: 2,
+        ..TimitSpec::default()
+    };
+    let data = spec.generate();
+    let creation_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "data set: {rows} x {cols} f64 ({}), created in {creation_secs:.2}s",
+        fmt::bytes((rows * cols * 8) as u64)
+    );
+
+    let mut table = Table::new(
+        "Table 3 (scaled): feature-matrix transfer times (s), mean of runs",
+        &["executors \\ workers", "w=2", "w=3", "w=4"],
+    );
+
+    for &execs in &executors_list {
+        let mut cells = vec![format!("{execs}")];
+        for &workers in &[2usize, 3, 4] {
+            if !workers_list.contains(&workers) {
+                cells.push("-".into());
+                continue;
+            }
+            let server = AlchemistServer::start(cfg.clone(), workers)?;
+            let mut stats = Stats::new();
+            let mut gbps = Stats::new();
+            for run in 0..runs {
+                let mut ac =
+                    AlchemistContext::connect(&server.control_addr, &cfg, execs)?;
+                let irm = IndexedRowMatrix::from_local(&data.x_train, execs.max(workers) * 2);
+                let (al, s) = ac.send_matrix(&format!("X{run}"), &irm)?;
+                stats.push(s.secs);
+                gbps.push(s.throughput_gbps());
+                ac.free(&al)?;
+                ac.stop();
+            }
+            cells.push(format!("{:.3} ({:.2} GB/s)", stats.mean(), gbps.mean()));
+            server.shutdown();
+        }
+        table.row(&cells);
+    }
+
+    table.print();
+    println!(
+        "paper shape: more executors help until they exceed workers; minimum near \
+         executors == workers"
+    );
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Dependency-free command-line parsing (clap is not in the offline vendor
+//! set). Supports `--flag`, `--key value`, `--key=value`, positionals, and
+//! subcommands; every bench/example shares this.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// Parsed arguments: options by name (last occurrence wins), boolean flags,
+/// and positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list. Tokens starting with `--` are
+    /// options; an option consumes the next token as its value unless it
+    /// contains `=` or the next token also starts with `--` (then it is a
+    /// flag). `--` terminates option parsing.
+    pub fn parse_from<I, S>(tokens: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        let mut opts_done = false;
+        while i < toks.len() {
+            let t = &toks[i];
+            if opts_done || !t.starts_with("--") {
+                args.positional.push(t.clone());
+                i += 1;
+                continue;
+            }
+            if t == "--" {
+                opts_done = true;
+                i += 1;
+                continue;
+            }
+            let body = &t[2..];
+            if let Some((k, v)) = body.split_once('=') {
+                args.opts.insert(k.to_string(), v.to_string());
+                i += 1;
+            } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                args.opts.insert(body.to_string(), toks[i + 1].clone());
+                i += 2;
+            } else {
+                args.flags.push(body.to_string());
+                i += 1;
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]; also skips a literal
+    /// `--bench` token, which `cargo bench` appends to harness-less benches).
+    pub fn from_env() -> Self {
+        Self::parse_from(
+            std::env::args().skip(1).filter(|a| a != "--bench"),
+        )
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> crate::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> crate::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects a float, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--workers 2,3,4`.
+    pub fn get_usize_list(
+        &self,
+        name: &str,
+        default: &[usize],
+    ) -> crate::Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim().parse().with_context(|| {
+                        format!("--{name} expects comma-separated integers, got {v:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional = subcommand, or error listing the choices.
+    pub fn subcommand(&self, choices: &[&str]) -> crate::Result<&str> {
+        match self.positional.first() {
+            Some(c) if choices.contains(&c.as_str()) => Ok(c),
+            Some(c) => bail!("unknown subcommand {c:?}; expected one of {choices:?}"),
+            None => bail!("missing subcommand; expected one of {choices:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_styles() {
+        // NB: a bare `--flag` followed by a positional is ambiguous (the
+        // token would be taken as the flag's value); positionals go first
+        // or after `--`.
+        let a = Args::parse_from([
+            "run", "file.bin", "--workers", "4", "--engine=xla", "--verbose",
+        ]);
+        assert_eq!(a.positional(), &["run", "file.bin"]);
+        assert_eq!(a.get("workers"), Some("4"));
+        assert_eq!(a.get("engine"), Some("xla"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn last_option_wins_and_defaults_apply() {
+        let a = Args::parse_from(["--n", "1", "--n", "2"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 2);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert!(a.get_usize("n", 0).is_ok());
+        let bad = Args::parse_from(["--n", "x"]);
+        assert!(bad.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_before_flag_and_trailing_flag() {
+        let a = Args::parse_from(["--a", "--b", "--c"]);
+        assert!(a.flag("a") && a.flag("b") && a.flag("c"));
+    }
+
+    #[test]
+    fn double_dash_stops_options() {
+        let a = Args::parse_from(["--a", "1", "--", "--not-an-opt"]);
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional(), &["--not-an-opt"]);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse_from(["--w", "2,3, 4"]);
+        assert_eq!(a.get_usize_list("w", &[]).unwrap(), vec![2, 3, 4]);
+        assert_eq!(a.get_usize_list("x", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn subcommand_dispatch() {
+        let a = Args::parse_from(["serve"]);
+        assert_eq!(a.subcommand(&["serve", "info"]).unwrap(), "serve");
+        assert!(a.subcommand(&["info"]).is_err());
+        assert!(Args::parse_from::<_, String>([])
+            .subcommand(&["serve"])
+            .is_err());
+    }
+}

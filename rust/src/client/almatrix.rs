@@ -1,0 +1,53 @@
+//! `AlMatrix` — the client-side proxy for a matrix living in Alchemist
+//! (paper §3.3.2: "matrix handles that act as proxies for the distributed
+//! data sets stored in Alchemist").
+
+/// A handle to a distributed matrix on the server. Cheap to clone and to
+/// pass back into further routines; data only moves when the application
+//  explicitly materializes it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlMatrix {
+    pub id: u64,
+    pub rows: usize,
+    pub cols: usize,
+    pub name: String,
+    /// Worker row ownership (`[start, end)` per rank) — lets executors
+    /// push/pull rows to the right worker without asking the driver.
+    pub row_ranges: Vec<(usize, usize)>,
+}
+
+impl AlMatrix {
+    pub fn size_bytes(&self) -> usize {
+        self.rows * self.cols * 8
+    }
+
+    /// Which worker rank owns global row `i`.
+    pub fn owner_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.rows);
+        self.row_ranges
+            .iter()
+            .position(|&(a, b)| a <= i && i < b)
+            .expect("row not covered by any worker range")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_lookup() {
+        let m = AlMatrix {
+            id: 1,
+            rows: 10,
+            cols: 2,
+            name: "X".into(),
+            row_ranges: vec![(0, 4), (4, 10)],
+        };
+        assert_eq!(m.owner_of(0), 0);
+        assert_eq!(m.owner_of(3), 0);
+        assert_eq!(m.owner_of(4), 1);
+        assert_eq!(m.owner_of(9), 1);
+        assert_eq!(m.size_bytes(), 160);
+    }
+}

@@ -1,0 +1,234 @@
+//! `AlchemistContext` — the session object of the paper's Figure 2.
+
+use crate::config::Config;
+use crate::net::Framed;
+use crate::protocol::{ControlMsg, Params, PROTOCOL_VERSION};
+use crate::sparklite::{IndexedRowMatrix, Rdd};
+
+use super::almatrix::AlMatrix;
+use super::transfer::{pull_matrix, push_matrix, TransferStats};
+
+/// Result of `run_task`: output matrix proxies plus scalar results and
+/// server-side timings (the paper's per-column experiment timings come
+/// straight from here).
+#[derive(Debug)]
+pub struct TaskResult {
+    pub outputs: Vec<AlMatrix>,
+    pub scalars: Params,
+    pub timings: Vec<(String, f64)>,
+}
+
+impl TaskResult {
+    pub fn output(&self, name: &str) -> crate::Result<&AlMatrix> {
+        self.outputs
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("task produced no output named {name:?}"))
+    }
+
+    pub fn timing(&self, name: &str) -> f64 {
+        self.timings
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+}
+
+/// A connected client session (the ACI object). One control socket to the
+/// driver; data sockets are opened per transfer by executor threads.
+pub struct AlchemistContext {
+    control: Framed<std::net::TcpStream, std::net::TcpStream>,
+    pub session_id: u64,
+    pub worker_addrs: Vec<String>,
+    cfg: Config,
+    /// Executor threads used for matrix transfer (the paper's "number of
+    /// Spark processes"; Table 3 sweeps this).
+    pub executors: usize,
+}
+
+impl AlchemistContext {
+    /// Connect to a running server.
+    pub fn connect(addr: &str, cfg: &Config, executors: usize) -> crate::Result<Self> {
+        let mut control = Framed::connect(addr, cfg.transfer.buf_bytes)?;
+        let reply = control.call(&ControlMsg::Handshake {
+            client_name: "alchemist-client".into(),
+            version: PROTOCOL_VERSION,
+        })?;
+        let (session_id, worker_addrs) = match reply {
+            ControlMsg::HandshakeAck { session_id, version, worker_addrs } => {
+                anyhow::ensure!(version == PROTOCOL_VERSION, "protocol mismatch");
+                (session_id, worker_addrs)
+            }
+            other => anyhow::bail!("bad handshake reply: {other:?}"),
+        };
+        Ok(AlchemistContext {
+            control,
+            session_id,
+            worker_addrs,
+            cfg: cfg.clone(),
+            executors: executors.max(1),
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.worker_addrs.len()
+    }
+
+    /// `registerLibrary(name, path)` — paper Figure 2.
+    pub fn register_library(&mut self, name: &str, path: &str) -> crate::Result<()> {
+        match self.control.call(&ControlMsg::RegisterLibrary {
+            name: name.into(),
+            path: path.into(),
+        })? {
+            ControlMsg::LibraryRegistered { .. } => Ok(()),
+            other => anyhow::bail!("bad reply: {other:?}"),
+        }
+    }
+
+    /// Ship an `IndexedRowMatrix` to the server: `AlMatrix(A)` in the
+    /// paper's API. Returns the proxy plus measured transfer stats.
+    pub fn send_matrix(
+        &mut self,
+        name: &str,
+        m: &IndexedRowMatrix,
+    ) -> crate::Result<(AlMatrix, TransferStats)> {
+        let reply = self.control.call(&ControlMsg::CreateMatrix {
+            name: name.into(),
+            rows: m.rows as u64,
+            cols: m.cols as u64,
+        })?;
+        let (id, ranges) = match reply {
+            ControlMsg::MatrixCreated { id, row_ranges } => (
+                id,
+                row_ranges
+                    .iter()
+                    .map(|&(a, b)| (a as usize, b as usize))
+                    .collect::<Vec<_>>(),
+            ),
+            other => anyhow::bail!("bad reply: {other:?}"),
+        };
+        let al = AlMatrix {
+            id,
+            rows: m.rows,
+            cols: m.cols,
+            name: name.into(),
+            row_ranges: ranges,
+        };
+        let stats = push_matrix(
+            &al,
+            m.rdd.partitions(),
+            &self.worker_addrs,
+            &self.cfg.transfer,
+            self.session_id,
+            self.executors,
+        )?;
+        match self.control.call(&ControlMsg::SealMatrix { id })? {
+            ControlMsg::MatrixSealed { rows_received, .. } => {
+                anyhow::ensure!(
+                    rows_received == m.rows as u64,
+                    "server received {rows_received} of {} rows",
+                    m.rows
+                );
+            }
+            other => anyhow::bail!("bad reply: {other:?}"),
+        }
+        Ok((al, stats))
+    }
+
+    /// Invoke `lib.routine(params)` on the server's worker group.
+    pub fn run_task(
+        &mut self,
+        lib: &str,
+        routine: &str,
+        params: Params,
+    ) -> crate::Result<TaskResult> {
+        let reply = self.control.call(&ControlMsg::RunTask {
+            lib: lib.into(),
+            routine: routine.into(),
+            params,
+        })?;
+        match reply {
+            ControlMsg::TaskDone { outputs, scalars, timings } => {
+                let mut proxies = Vec::with_capacity(outputs.len());
+                for info in outputs {
+                    // fetch layout for the proxy (one metadata round-trip)
+                    let ranges = match self
+                        .control
+                        .call(&ControlMsg::FetchMatrix { id: info.id })?
+                    {
+                        ControlMsg::FetchReady { row_ranges, .. } => row_ranges
+                            .iter()
+                            .map(|&(a, b)| (a as usize, b as usize))
+                            .collect::<Vec<_>>(),
+                        other => anyhow::bail!("bad reply: {other:?}"),
+                    };
+                    proxies.push(AlMatrix {
+                        id: info.id,
+                        rows: info.rows as usize,
+                        cols: info.cols as usize,
+                        name: info.name,
+                        row_ranges: ranges,
+                    });
+                }
+                Ok(TaskResult { outputs: proxies, scalars, timings })
+            }
+            other => anyhow::bail!("bad reply: {other:?}"),
+        }
+    }
+
+    /// Materialize a server matrix on the client —
+    /// `alQ.toIndexedRowMatrix()` in the paper's API.
+    pub fn to_indexed_row_matrix(
+        &mut self,
+        m: &AlMatrix,
+        num_partitions: usize,
+    ) -> crate::Result<(IndexedRowMatrix, TransferStats)> {
+        let (mut rows, stats) = pull_matrix(
+            m,
+            &self.worker_addrs,
+            &self.cfg.transfer,
+            self.session_id,
+            self.executors,
+        )?;
+        rows.sort_by_key(|r| r.index);
+        let irm = IndexedRowMatrix {
+            rdd: Rdd::parallelize(rows, num_partitions.max(1)),
+            rows: m.rows,
+            cols: m.cols,
+        };
+        Ok((irm, stats))
+    }
+
+    /// Drop a server-side matrix.
+    pub fn free(&mut self, m: &AlMatrix) -> crate::Result<()> {
+        match self.control.call(&ControlMsg::FreeMatrix { id: m.id })? {
+            ControlMsg::Freed { .. } => Ok(()),
+            other => anyhow::bail!("bad reply: {other:?}"),
+        }
+    }
+
+    /// List live server-side matrices.
+    pub fn list_matrices(&mut self) -> crate::Result<Vec<(u64, String, usize, usize)>> {
+        match self.control.call(&ControlMsg::ListMatrices)? {
+            ControlMsg::MatrixList { infos } => Ok(infos
+                .into_iter()
+                .map(|i| (i.id, i.name, i.rows as usize, i.cols as usize))
+                .collect()),
+            other => anyhow::bail!("bad reply: {other:?}"),
+        }
+    }
+
+    /// End the session (`ac.stop()`); the server keeps running.
+    pub fn stop(self) {
+        // dropping the socket ends the session server-side
+    }
+
+    /// Ask the server to shut down entirely.
+    pub fn shutdown_server(mut self) -> crate::Result<()> {
+        match self.control.call(&ControlMsg::Shutdown)? {
+            ControlMsg::Bye => Ok(()),
+            other => anyhow::bail!("bad reply: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The Alchemist-Client Interface (paper §3.1.2) — what the Spark-side
+//! application imports.
+//!
+//! Mirrors the Figure 2 API: an [`AlchemistContext`] created against a
+//! running server, `register_library`, matrix send (→ [`AlMatrix`] proxy),
+//! `run_task`, and `to_indexed_row_matrix` to materialize results back on
+//! the client. Distributed payloads move over per-executor TCP sockets to
+//! the workers; only metadata crosses the driver connection.
+
+pub mod almatrix;
+pub mod context;
+pub mod transfer;
+
+pub use almatrix::AlMatrix;
+pub use context::{AlchemistContext, TaskResult};
+pub use transfer::TransferStats;

@@ -1,0 +1,302 @@
+//! Executor-side row transfer: push partitions to workers / pull row
+//! ranges back, over per-executor TCP sockets (paper §3.2 "Direct
+//! Transfer").
+//!
+//! Each executor thread owns one socket per worker it talks to. Rows are
+//! batched `rows_per_frame` at a time into `PushRows` frames (contiguous
+//! runs only — a run breaks whenever the destination worker or row
+//! continuity changes); the whole stream is acknowledged once per worker
+//! by `PushDone`.
+
+use std::time::Instant;
+
+use crate::config::TransferConfig;
+use crate::net::Framed;
+use crate::protocol::DataMsg;
+use crate::sparklite::IndexedRow;
+
+use super::almatrix::AlMatrix;
+
+/// Measured cost of one distributed transfer.
+#[derive(Debug, Clone, Default)]
+pub struct TransferStats {
+    pub bytes: usize,
+    pub secs: f64,
+    pub frames: usize,
+    pub executors: usize,
+}
+
+impl TransferStats {
+    pub fn throughput_gbps(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.bytes as f64 / self.secs / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    fn merge(&mut self, other: &TransferStats) {
+        self.bytes += other.bytes;
+        self.frames += other.frames;
+        self.secs = self.secs.max(other.secs); // executors run concurrently
+    }
+}
+
+/// One executor's sockets to the workers it talks to (lazily opened).
+struct ExecutorLinks<'a> {
+    worker_addrs: &'a [String],
+    cfg: &'a TransferConfig,
+    links: Vec<Option<Framed<std::net::TcpStream, std::net::TcpStream>>>,
+    session_id: u64,
+    executor_id: u32,
+}
+
+impl<'a> ExecutorLinks<'a> {
+    fn new(
+        worker_addrs: &'a [String],
+        cfg: &'a TransferConfig,
+        session_id: u64,
+        executor_id: u32,
+    ) -> Self {
+        ExecutorLinks {
+            worker_addrs,
+            cfg,
+            links: (0..worker_addrs.len()).map(|_| None).collect(),
+            session_id,
+            executor_id,
+        }
+    }
+
+    fn link(
+        &mut self,
+        rank: usize,
+    ) -> crate::Result<&mut Framed<std::net::TcpStream, std::net::TcpStream>> {
+        if self.links[rank].is_none() {
+            let mut f =
+                Framed::connect(&self.worker_addrs[rank], self.cfg.buf_bytes)?;
+            f.send_data_flush(&DataMsg::DataHandshake {
+                session_id: self.session_id,
+                executor_id: self.executor_id,
+            })?;
+            match f.recv_data()? {
+                DataMsg::DataHandshakeAck { worker_rank } => {
+                    anyhow::ensure!(
+                        worker_rank as usize == rank,
+                        "connected to worker {worker_rank}, expected {rank}"
+                    );
+                }
+                other => anyhow::bail!("bad data handshake reply: {other:?}"),
+            }
+            self.links[rank] = Some(f);
+        }
+        Ok(self.links[rank].as_mut().unwrap())
+    }
+}
+
+/// Push one executor's share of rows. `rows` need not be sorted; batching
+/// exploits contiguity when present.
+fn push_rows_one_executor(
+    matrix: &AlMatrix,
+    rows: &[&IndexedRow],
+    links: &mut ExecutorLinks,
+    rows_per_frame: usize,
+) -> crate::Result<TransferStats> {
+    let t0 = Instant::now();
+    let ncols = matrix.cols;
+    let mut stats = TransferStats::default();
+    let mut touched = vec![false; matrix.row_ranges.len()];
+
+    // current run being accumulated
+    let mut run_start: u64 = 0;
+    let mut run_owner: usize = usize::MAX;
+    let mut run_data: Vec<f64> = Vec::new();
+    let mut run_rows: u32 = 0;
+
+    let flush = |owner: usize,
+                     start: u64,
+                     nrows: u32,
+                     data: &mut Vec<f64>,
+                     stats: &mut TransferStats,
+                     links: &mut ExecutorLinks|
+     -> crate::Result<()> {
+        if nrows == 0 {
+            return Ok(());
+        }
+        let msg = DataMsg::PushRows {
+            matrix_id: matrix.id,
+            start_row: start,
+            nrows,
+            ncols: ncols as u32,
+            data: std::mem::take(data),
+        };
+        stats.bytes += nrows as usize * ncols * 8;
+        stats.frames += 1;
+        links.link(owner)?.send_data(&msg)?;
+        Ok(())
+    };
+
+    for row in rows {
+        anyhow::ensure!(
+            row.vector.len() == ncols,
+            "row {} has {} cols, matrix has {ncols}",
+            row.index,
+            row.vector.len()
+        );
+        let owner = matrix.owner_of(row.index as usize);
+        touched[owner] = true;
+        let contiguous = run_rows > 0
+            && owner == run_owner
+            && row.index == run_start + run_rows as u64
+            && (run_rows as usize) < rows_per_frame;
+        if !contiguous {
+            flush(run_owner, run_start, run_rows, &mut run_data, &mut stats, links)?;
+            run_start = row.index;
+            run_owner = owner;
+            run_rows = 0;
+        }
+        run_data.extend_from_slice(&row.vector);
+        run_rows += 1;
+    }
+    flush(run_owner, run_start, run_rows, &mut run_data, &mut stats, links)?;
+
+    // end-of-stream ack per touched worker
+    for (rank, used) in touched.iter().enumerate() {
+        if *used {
+            let link = links.link(rank)?;
+            link.send_data_flush(&DataMsg::PushDone { matrix_id: matrix.id })?;
+            match link.recv_data()? {
+                DataMsg::PushDoneAck { .. } => {}
+                DataMsg::DataError { message } => anyhow::bail!("push failed: {message}"),
+                other => anyhow::bail!("bad push ack: {other:?}"),
+            }
+        }
+    }
+    stats.secs = t0.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+/// Push all partitions with `executors` concurrent sender threads
+/// (partition list split evenly). Returns merged stats (secs = slowest
+/// executor, the paper's transfer-time definition).
+pub fn push_matrix(
+    matrix: &AlMatrix,
+    partitions: &[Vec<IndexedRow>],
+    worker_addrs: &[String],
+    cfg: &TransferConfig,
+    session_id: u64,
+    executors: usize,
+) -> crate::Result<TransferStats> {
+    let executors = executors.max(1);
+    let assignment = crate::util::even_ranges(partitions.len(), executors);
+    let t0 = Instant::now();
+    let mut merged = TransferStats { executors, ..Default::default() };
+    std::thread::scope(|scope| -> crate::Result<()> {
+        let mut handles = Vec::new();
+        for (eid, &(a, b)) in assignment.iter().enumerate() {
+            let parts = &partitions[a..b];
+            handles.push(scope.spawn(move || -> crate::Result<TransferStats> {
+                if parts.is_empty() {
+                    return Ok(TransferStats::default());
+                }
+                let mut links =
+                    ExecutorLinks::new(worker_addrs, cfg, session_id, eid as u32);
+                let rows: Vec<&IndexedRow> = parts.iter().flatten().collect();
+                let stats = push_rows_one_executor(
+                    matrix,
+                    &rows,
+                    &mut links,
+                    cfg.rows_per_frame.max(1),
+                )?;
+                // polite close
+                for link in links.links.iter_mut().flatten() {
+                    let _ = link.send_data_flush(&DataMsg::DataBye);
+                }
+                Ok(stats)
+            }));
+        }
+        for h in handles {
+            let stats = h.join().map_err(|_| anyhow::anyhow!("executor thread panicked"))??;
+            merged.merge(&stats);
+        }
+        Ok(())
+    })?;
+    merged.secs = t0.elapsed().as_secs_f64();
+    Ok(merged)
+}
+
+/// Pull the whole matrix back with `executors` concurrent threads; each
+/// covers an even share of the global rows, chunked by `rows_per_frame`.
+/// Returns the rows (unordered) plus stats.
+pub fn pull_matrix(
+    matrix: &AlMatrix,
+    worker_addrs: &[String],
+    cfg: &TransferConfig,
+    session_id: u64,
+    executors: usize,
+) -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
+    let executors = executors.max(1);
+    let shares = crate::util::even_ranges(matrix.rows, executors);
+    let t0 = Instant::now();
+    let mut all_rows: Vec<IndexedRow> = Vec::with_capacity(matrix.rows);
+    let mut merged = TransferStats { executors, ..Default::default() };
+    std::thread::scope(|scope| -> crate::Result<()> {
+        let mut handles = Vec::new();
+        for (eid, &(lo, hi)) in shares.iter().enumerate() {
+            handles.push(scope.spawn(move || -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
+                let mut links =
+                    ExecutorLinks::new(worker_addrs, cfg, session_id, eid as u32);
+                let mut rows = Vec::with_capacity(hi - lo);
+                let mut stats = TransferStats::default();
+                let te = Instant::now();
+                let mut i = lo;
+                while i < hi {
+                    let owner = matrix.owner_of(i);
+                    let (_, owner_end) = matrix.row_ranges[owner];
+                    let chunk_end =
+                        (i + cfg.rows_per_frame.max(1)).min(hi).min(owner_end);
+                    let n = chunk_end - i;
+                    let link = links.link(owner)?;
+                    link.send_data_flush(&DataMsg::PullRows {
+                        matrix_id: matrix.id,
+                        start_row: i as u64,
+                        nrows: n as u32,
+                    })?;
+                    match link.recv_data()? {
+                        DataMsg::RowsData { start_row, nrows, ncols, data, .. } => {
+                            anyhow::ensure!(
+                                start_row as usize == i && nrows as usize == n,
+                                "pull reply mismatch"
+                            );
+                            let ncols = ncols as usize;
+                            stats.bytes += data.len() * 8;
+                            stats.frames += 1;
+                            for (k, chunk) in data.chunks_exact(ncols).enumerate() {
+                                rows.push(IndexedRow {
+                                    index: (i + k) as u64,
+                                    vector: chunk.to_vec(),
+                                });
+                            }
+                        }
+                        DataMsg::DataError { message } => anyhow::bail!("pull failed: {message}"),
+                        other => anyhow::bail!("bad pull reply: {other:?}"),
+                    }
+                    i = chunk_end;
+                }
+                for link in links.links.iter_mut().flatten() {
+                    let _ = link.send_data_flush(&DataMsg::DataBye);
+                }
+                stats.secs = te.elapsed().as_secs_f64();
+                Ok((rows, stats))
+            }));
+        }
+        for h in handles {
+            let (rows, stats) =
+                h.join().map_err(|_| anyhow::anyhow!("executor thread panicked"))??;
+            all_rows.extend(rows);
+            merged.merge(&stats);
+        }
+        Ok(())
+    })?;
+    merged.secs = t0.elapsed().as_secs_f64();
+    Ok((all_rows, merged))
+}

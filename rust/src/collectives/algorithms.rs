@@ -1,0 +1,298 @@
+//! Collective algorithms over point-to-point send/recv.
+//!
+//! These are the textbook implementations the MPI runtimes the paper
+//! depends on would use at this scale: binomial trees for
+//! broadcast/reduce, a bandwidth-optimal ring for allreduce, linear
+//! gather/scatter rooted at rank 0 (the Alchemist driver-adjacent rank).
+
+use crate::util::even_ranges;
+
+use super::Communicator;
+
+/// Binomial-tree broadcast from `root`. Every rank passes the same `buf`
+/// in; on return all ranks hold root's data.
+pub fn broadcast(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut Vec<f64>) {
+    let size = comm.size();
+    if size == 1 {
+        return;
+    }
+    // Relative rank so any root works with the rank-0 tree.
+    let vrank = (comm.rank() + size - root) % size;
+    let mut mask = 1usize;
+    // receive phase: find the bit where our parent contacted us
+    while mask < size {
+        if vrank & mask != 0 {
+            let parent = (vrank - mask + root) % size;
+            *buf = comm.recv(parent, base_tag);
+            break;
+        }
+        mask <<= 1;
+    }
+    // send phase: forward to children below our lowest set bit
+    let mut child_mask = if vrank == 0 {
+        // root starts at the highest power of two < size
+        let mut m = 1usize;
+        while m < size {
+            m <<= 1;
+        }
+        m >> 1
+    } else {
+        mask >> 1
+    };
+    while child_mask > 0 {
+        let vchild = vrank | child_mask;
+        if vchild < size && vchild != vrank {
+            let child = (vchild + root) % size;
+            comm.send(child, base_tag, buf.clone());
+        }
+        child_mask >>= 1;
+    }
+}
+
+/// Binomial-tree sum-reduce to `root`; on root, `buf` holds the elementwise
+/// sum over all ranks; other ranks' buffers are consumed (contents
+/// unspecified after the call).
+pub fn reduce_sum(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut Vec<f64>) {
+    let size = comm.size();
+    if size == 1 {
+        return;
+    }
+    let vrank = (comm.rank() + size - root) % size;
+    let mut mask = 1usize;
+    while mask < size {
+        if vrank & mask != 0 {
+            // send to parent and exit
+            let parent = (vrank - mask + root) % size;
+            comm.send(parent, base_tag + mask as u64, std::mem::take(buf));
+            return;
+        }
+        // receive from child (if it exists) and accumulate
+        let vchild = vrank | mask;
+        if vchild < size {
+            let child = (vchild + root) % size;
+            let other = comm.recv(child, base_tag + mask as u64);
+            debug_assert_eq!(other.len(), buf.len());
+            for (a, b) in buf.iter_mut().zip(&other) {
+                *a += b;
+            }
+        }
+        mask <<= 1;
+    }
+}
+
+/// Ring allreduce (reduce-scatter + allgather): bandwidth-optimal,
+/// 2·(p−1)/p · n elements over the wire per rank. All ranks end with the
+/// elementwise sum.
+pub fn allreduce_sum(comm: &dyn Communicator, base_tag: u64, buf: &mut [f64]) {
+    let p = comm.size();
+    if p == 1 {
+        return;
+    }
+    let rank = comm.rank();
+    let chunks = even_ranges(buf.len(), p);
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+
+    // Phase 1: reduce-scatter. In step s, send chunk (rank - s) and
+    // receive + accumulate chunk (rank - s - 1).
+    for s in 0..p - 1 {
+        let send_idx = (rank + p - s) % p;
+        let recv_idx = (rank + p - s - 1) % p;
+        let (a, b) = chunks[send_idx];
+        comm.send(next, base_tag + s as u64, buf[a..b].to_vec());
+        let incoming = comm.recv(prev, base_tag + s as u64);
+        let (a, b) = chunks[recv_idx];
+        debug_assert_eq!(incoming.len(), b - a);
+        for (dst, src) in buf[a..b].iter_mut().zip(&incoming) {
+            *dst += src;
+        }
+    }
+    // Phase 2: allgather of the reduced chunks. In step s, send chunk
+    // (rank + 1 - s) and receive chunk (rank - s).
+    for s in 0..p - 1 {
+        let send_idx = (rank + 1 + p - s) % p;
+        let recv_idx = (rank + p - s) % p;
+        let (a, b) = chunks[send_idx];
+        comm.send(next, base_tag + (p + s) as u64, buf[a..b].to_vec());
+        let incoming = comm.recv(prev, base_tag + (p + s) as u64);
+        let (a, b) = chunks[recv_idx];
+        buf[a..b].copy_from_slice(&incoming);
+    }
+}
+
+/// Gather each rank's (possibly differently-sized) vector to `root`.
+/// Returns `Some(parts)` on root (index = rank), `None` elsewhere.
+pub fn gather(
+    comm: &dyn Communicator,
+    base_tag: u64,
+    root: usize,
+    mine: Vec<f64>,
+) -> Option<Vec<Vec<f64>>> {
+    if comm.rank() == root {
+        let mut parts = vec![Vec::new(); comm.size()];
+        for r in 0..comm.size() {
+            if r == root {
+                parts[r] = mine.clone();
+            } else {
+                parts[r] = comm.recv(r, base_tag + r as u64);
+            }
+        }
+        Some(parts)
+    } else {
+        comm.send(root, base_tag + comm.rank() as u64, mine);
+        None
+    }
+}
+
+/// Scatter `parts` (index = rank) from `root`; returns this rank's part.
+pub fn scatter(
+    comm: &dyn Communicator,
+    base_tag: u64,
+    root: usize,
+    parts: Option<Vec<Vec<f64>>>,
+) -> Vec<f64> {
+    if comm.rank() == root {
+        let parts = parts.expect("root must supply parts");
+        assert_eq!(parts.len(), comm.size());
+        let mut mine = Vec::new();
+        for (r, part) in parts.into_iter().enumerate() {
+            if r == root {
+                mine = part;
+            } else {
+                comm.send(r, base_tag + r as u64, part);
+            }
+        }
+        mine
+    } else {
+        comm.recv(root, base_tag + comm.rank() as u64)
+    }
+}
+
+/// Allgather: everyone ends with the concatenation (by rank) of all
+/// inputs. Implemented as ring rotation, (p−1) steps.
+pub fn allgather(comm: &dyn Communicator, base_tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
+    let p = comm.size();
+    let rank = comm.rank();
+    let mut parts: Vec<Vec<f64>> = vec![Vec::new(); p];
+    parts[rank] = mine;
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    for s in 0..p - 1 {
+        let send_idx = (rank + p - s) % p;
+        let recv_idx = (rank + p - s - 1) % p;
+        comm.send(next, base_tag + s as u64, parts[send_idx].clone());
+        parts[recv_idx] = comm.recv(prev, base_tag + s as u64);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::LocalComm;
+
+    /// Run `f` on every rank of an n-group and return the per-rank results.
+    pub fn run_group<T, F>(n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(&LocalComm) -> T + Send + Sync + Clone + 'static,
+    {
+        let comms = LocalComm::group(n, None);
+        let mut handles = Vec::new();
+        for c in comms {
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || f(&c)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn broadcast_all_roots_all_sizes() {
+        for p in 1..=5usize {
+            for root in 0..p {
+                let out = run_group(p, move |c| {
+                    let mut buf = if c.rank() == root {
+                        vec![3.5, -1.0, 7.0]
+                    } else {
+                        Vec::new()
+                    };
+                    broadcast(c, 10, root, &mut buf);
+                    buf
+                });
+                for v in out {
+                    assert_eq!(v, vec![3.5, -1.0, 7.0], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sum_matches_serial() {
+        for p in 1..=6usize {
+            let out = run_group(p, move |c| {
+                let mut buf = vec![c.rank() as f64 + 1.0, 10.0];
+                reduce_sum(c, 20, 0, &mut buf);
+                (c.rank(), buf)
+            });
+            let expect0: f64 = (1..=p).map(|r| r as f64).sum();
+            for (rank, buf) in out {
+                if rank == 0 {
+                    assert_eq!(buf, vec![expect0, 10.0 * p as f64]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_matches_serial_various_lengths() {
+        for p in 1..=5usize {
+            for n in [1usize, 2, 7, 64, 129] {
+                let out = run_group(p, move |c| {
+                    let mut buf: Vec<f64> =
+                        (0..n).map(|i| (i + c.rank() * 100) as f64).collect();
+                    allreduce_sum(c, 30, &mut buf);
+                    buf
+                });
+                let want: Vec<f64> = (0..n)
+                    .map(|i| {
+                        (0..p).map(|r| (i + r * 100) as f64).sum::<f64>()
+                    })
+                    .collect();
+                for v in out {
+                    assert_eq!(v, want, "p={p} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        for p in 1..=4usize {
+            let out = run_group(p, move |c| {
+                let mine = vec![c.rank() as f64; c.rank() + 1];
+                let gathered = gather(c, 40, 0, mine);
+                // root redistributes what it gathered
+                let got = scatter(c, 41, 0, gathered);
+                got
+            });
+            for (r, v) in out.into_iter().enumerate() {
+                assert_eq!(v, vec![r as f64; r + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_concatenates_by_rank() {
+        for p in 1..=5usize {
+            let out = run_group(p, move |c| {
+                allgather(c, 50, vec![c.rank() as f64 * 2.0])
+            });
+            for parts in out {
+                assert_eq!(parts.len(), p);
+                for (r, part) in parts.iter().enumerate() {
+                    assert_eq!(part, &vec![r as f64 * 2.0]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! In-process communicator: ranks are threads, messages are mailboxes.
+//!
+//! Used by the coordinator's worker group (the paper runs Alchemist's MPI
+//! ranks inside one allocation; we run them inside one process). A
+//! [`crate::config::SimNetConfig`] cost model charges each *received*
+//! message with modeled interconnect time so the SimClock can reconstruct
+//! what the same traffic would cost across nodes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+
+use crate::config::SimNetConfig;
+
+use super::Communicator;
+
+type Key = (usize, u64); // (sender, tag)
+
+#[derive(Default)]
+struct Mailbox {
+    // FIFO per (sender, tag)
+    queues: Mutex<HashMap<Key, std::collections::VecDeque<Vec<f64>>>>,
+    signal: Condvar,
+}
+
+struct Shared {
+    boxes: Vec<Mailbox>,
+    barrier: Barrier,
+    simnet: Option<SimNetConfig>,
+}
+
+/// One rank's endpoint into the shared in-proc fabric.
+pub struct LocalComm {
+    rank: usize,
+    size: usize,
+    shared: Arc<Shared>,
+    /// Modeled comm nanoseconds charged to this rank.
+    sim_ns: Arc<AtomicU64>,
+}
+
+impl LocalComm {
+    /// Create endpoints for a `size`-rank group.
+    pub fn group(size: usize, simnet: Option<SimNetConfig>) -> Vec<LocalComm> {
+        assert!(size > 0);
+        let shared = Arc::new(Shared {
+            boxes: (0..size).map(|_| Mailbox::default()).collect(),
+            barrier: Barrier::new(size),
+            simnet,
+        });
+        (0..size)
+            .map(|rank| LocalComm {
+                rank,
+                size,
+                shared: shared.clone(),
+                sim_ns: Arc::new(AtomicU64::new(0)),
+            })
+            .collect()
+    }
+
+    fn charge(&self, bytes: usize) {
+        if let Some(net) = &self.shared.simnet {
+            let secs = net.transfer_secs(bytes);
+            self.sim_ns
+                .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Communicator for LocalComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&self, to: usize, tag: u64, data: Vec<f64>) {
+        debug_assert!(to < self.size);
+        let mbox = &self.shared.boxes[to];
+        let mut queues = mbox.queues.lock().unwrap();
+        queues.entry((self.rank, tag)).or_default().push_back(data);
+        mbox.signal.notify_all();
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Vec<f64> {
+        let mbox = &self.shared.boxes[self.rank];
+        let mut queues = mbox.queues.lock().unwrap();
+        loop {
+            if let Some(q) = queues.get_mut(&(from, tag)) {
+                if let Some(data) = q.pop_front() {
+                    drop(queues);
+                    self.charge(data.len() * 8);
+                    return data;
+                }
+            }
+            queues = mbox.signal.wait(queues).unwrap();
+        }
+    }
+
+    fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+
+    fn sim_comm_secs(&self) -> f64 {
+        self.sim_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_ranks<F>(n: usize, f: F)
+    where
+        F: Fn(LocalComm) + Send + Sync + Clone + 'static,
+    {
+        let comms = LocalComm::group(n, None);
+        let mut handles = Vec::new();
+        for c in comms {
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || f(c)));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn point_to_point_fifo_per_tag() {
+        spawn_ranks(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 5, vec![1.0]);
+                c.send(1, 5, vec![2.0]);
+                c.send(1, 9, vec![3.0]);
+            } else {
+                // tag 9 can be read before tag 5's backlog
+                assert_eq!(c.recv(0, 9), vec![3.0]);
+                assert_eq!(c.recv(0, 5), vec![1.0]);
+                assert_eq!(c.recv(0, 5), vec![2.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        COUNT.store(0, Ordering::SeqCst);
+        spawn_ranks(4, |c| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+            c.barrier();
+            // after the barrier every rank must observe all 4 arrivals
+            assert_eq!(COUNT.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    #[test]
+    fn sim_cost_charged_on_receive() {
+        let comms = LocalComm::group(
+            2,
+            Some(crate::config::SimNetConfig { latency_s: 1e-6, bytes_per_s: 1e9 }),
+        );
+        let [c0, c1]: [LocalComm; 2] = comms.try_into().map_err(|_| ()).unwrap();
+        let t = std::thread::spawn(move || {
+            c0.send(1, 0, vec![0.0; 1000]);
+            c0.sim_comm_secs()
+        });
+        let _ = c1.recv(0, 0);
+        let sender_cost = t.join().unwrap();
+        assert_eq!(sender_cost, 0.0);
+        // 8000 bytes at 1 GB/s + 1 µs = 9 µs
+        assert!((c1.sim_comm_secs() - 9e-6).abs() < 1e-7, "{}", c1.sim_comm_secs());
+    }
+}

@@ -1,0 +1,46 @@
+//! The MPI stand-in (DESIGN.md §2).
+//!
+//! Alchemist's workers are MPI ranks; this module gives the rust workers
+//! the same programming model: a [`Communicator`] with point-to-point
+//! send/recv plus the collective algorithms the numerics need (barrier,
+//! binomial-tree broadcast/reduce, ring allreduce, gather/scatter/
+//! allgather). The collectives are implemented *over* send/recv — the real
+//! algorithms, not shared-memory shortcuts — so their communication volume
+//! is faithful and the SimClock can charge modeled interconnect time per
+//! message (the box has one core; see `metrics::simclock`).
+
+pub mod algorithms;
+pub mod local;
+
+pub use algorithms::{
+    allgather, allreduce_sum, broadcast, gather, reduce_sum, scatter,
+};
+pub use local::LocalComm;
+
+/// Point-to-point message transport between ranks of one worker group.
+///
+/// Messages are `Vec<f64>` (every payload in this system is double
+/// precision) addressed by `(peer, tag)`; tags keep concurrent collectives
+/// from interleaving. Implementations must deliver messages from the same
+/// (sender, tag) in order.
+pub trait Communicator: Send {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+    /// Non-blocking buffered send.
+    fn send(&self, to: usize, tag: u64, data: Vec<f64>);
+    /// Blocking receive.
+    fn recv(&self, from: usize, tag: u64) -> Vec<f64>;
+    /// Block until every rank arrives.
+    fn barrier(&self);
+    /// Modeled communication seconds charged to this rank so far (for
+    /// simulated-cluster-time accounting); implementations without a cost
+    /// model return 0.
+    fn sim_comm_secs(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Tag-space layout so nested collectives never collide: each collective
+/// invocation passes a distinct `base` tag and algorithms offset within
+/// a 2^16 window.
+pub const TAG_WINDOW: u64 = 1 << 16;

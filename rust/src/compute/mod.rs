@@ -1,0 +1,137 @@
+//! Worker compute engines (DESIGN.md ablation #1).
+//!
+//! Everything numeric the Alchemist workers do funnels through the
+//! [`Engine`] trait: composable GEMM, the fused Gram-operator matvec, the
+//! random-feature expansion, and the fused CG state update. Three
+//! implementations:
+//!
+//! * [`NativeEngine`] — blocked pure-rust kernels ([`distmat::dense`]),
+//!   the floor the ablation bench compares against;
+//! * [`XlaEngine`] with `engine = "xla"` — AOT artifacts lowered from the
+//!   pure-jnp L2 graphs (XLA's own `dot`);
+//! * [`XlaEngine`] with `engine = "pallas"` — the same graphs lowered
+//!   through the Pallas kernels (`interpret=True`).
+//!
+//! Engines are constructed *inside* each worker thread ([`build_engine`]) —
+//! PJRT handles are not `Send`, which conveniently mirrors per-rank MPI
+//! library contexts.
+
+pub mod native;
+pub mod tiled;
+
+pub use native::NativeEngine;
+pub use tiled::XlaEngine;
+
+use crate::config::{Config, EngineKind};
+use crate::distmat::LocalMatrix;
+
+/// GEMM storage variants (`c += op(a)·op(b)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmVariant {
+    /// a: m×k, b: k×n
+    NN,
+    /// a stored k×m (transposed use), b: k×n
+    TN,
+    /// a: m×k, b stored n×k
+    NT,
+}
+
+impl GemmVariant {
+    pub fn op_name(self) -> &'static str {
+        match self {
+            GemmVariant::NN => "gemm_nn",
+            GemmVariant::TN => "gemm_tn",
+            GemmVariant::NT => "gemm_nt",
+        }
+    }
+
+    /// (m, n, k) given the two operand shapes.
+    pub fn problem_dims(self, a: &LocalMatrix, b: &LocalMatrix) -> (usize, usize, usize) {
+        match self {
+            GemmVariant::NN => (a.rows(), b.cols(), a.cols()),
+            GemmVariant::TN => (a.cols(), b.cols(), a.rows()),
+            GemmVariant::NT => (a.rows(), b.rows(), a.cols()),
+        }
+    }
+}
+
+/// The worker-side compute interface. `&mut self` because the XLA engines
+/// keep executable caches and perf counters.
+pub trait Engine {
+    fn kind(&self) -> EngineKind;
+
+    /// `c += op(a)·op(b)`.
+    fn gemm(
+        &mut self,
+        variant: GemmVariant,
+        c: &mut LocalMatrix,
+        a: &LocalMatrix,
+        b: &LocalMatrix,
+    ) -> crate::Result<()>;
+
+    /// `aᵀ(a·v) + reg·v` for a row-panel `a` (the CG/Lanczos hot path).
+    fn gram_matvec(
+        &mut self,
+        a: &LocalMatrix,
+        v: &LocalMatrix,
+        reg: f64,
+    ) -> crate::Result<LocalMatrix>;
+
+    /// Like [`gram_matvec`](Engine::gram_matvec) but with a caller-chosen
+    /// operand key: the same `key` promises the same `a` contents, letting
+    /// device-backed engines keep the panel resident across iterations
+    /// (§Perf — the dominant win for iterative solvers). Obtain keys from
+    /// [`fresh_operand_key`]; default implementations ignore the key.
+    fn gram_matvec_keyed(
+        &mut self,
+        _key: u64,
+        a: &LocalMatrix,
+        v: &LocalMatrix,
+        reg: f64,
+    ) -> crate::Result<LocalMatrix> {
+        self.gram_matvec(a, v, reg)
+    }
+
+    /// Random-feature panel: `scale · cos(x·omega + bias)`.
+    fn rff_expand(
+        &mut self,
+        x: &LocalMatrix,
+        omega: &LocalMatrix,
+        bias: &[f64],
+        scale: f64,
+    ) -> crate::Result<LocalMatrix>;
+
+    /// Fused pair-AXPY: `x += alpha⊙p; r -= alpha⊙q` (alpha per column).
+    fn cg_update(
+        &mut self,
+        x: &mut LocalMatrix,
+        r: &mut LocalMatrix,
+        p: &LocalMatrix,
+        q: &LocalMatrix,
+        alpha: &[f64],
+    ) -> crate::Result<()>;
+
+    /// (calls, seconds) spent in PJRT execute, for perf accounting.
+    fn exec_stats(&self) -> (u64, f64) {
+        (0, 0.0)
+    }
+}
+
+/// Process-unique operand key for [`Engine::gram_matvec_keyed`]: a new key
+/// per solver invocation guarantees no stale-cache aliasing even after
+/// matrices are freed and reallocated.
+pub fn fresh_operand_key() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Build the engine selected by `cfg.engine`. Must be called on the thread
+/// that will use it.
+pub fn build_engine(cfg: &Config) -> crate::Result<Box<dyn Engine>> {
+    Ok(match cfg.engine {
+        EngineKind::Native => Box::new(NativeEngine::new()),
+        EngineKind::Xla => Box::new(XlaEngine::new(cfg, "xla")?),
+        EngineKind::Pallas => Box::new(XlaEngine::new(cfg, "pallas")?),
+    })
+}

@@ -1,0 +1,166 @@
+//! Pure-rust engine: the blocked kernels from [`crate::distmat::dense`].
+//!
+//! This is (a) the compute floor for the engine ablation, and (b) what the
+//! sparklite baseline uses — the paper's Spark side never sees the HPC
+//! library either.
+
+use crate::config::EngineKind;
+use crate::distmat::LocalMatrix;
+
+use super::{Engine, GemmVariant};
+
+#[derive(Debug, Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine
+    }
+}
+
+impl Engine for NativeEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Native
+    }
+
+    fn gemm(
+        &mut self,
+        variant: GemmVariant,
+        c: &mut LocalMatrix,
+        a: &LocalMatrix,
+        b: &LocalMatrix,
+    ) -> crate::Result<()> {
+        match variant {
+            GemmVariant::NN => c.gemm_nn(a, b),
+            GemmVariant::TN => c.gemm_tn(a, b),
+            GemmVariant::NT => c.gemm_nt(a, b),
+        }
+        Ok(())
+    }
+
+    fn gram_matvec(
+        &mut self,
+        a: &LocalMatrix,
+        v: &LocalMatrix,
+        reg: f64,
+    ) -> crate::Result<LocalMatrix> {
+        anyhow::ensure!(a.cols() == v.rows(), "gram_matvec: a {}x{} vs v {}x{}",
+            a.rows(), a.cols(), v.rows(), v.cols());
+        let mut av = LocalMatrix::zeros(a.rows(), v.cols());
+        av.gemm_nn(a, v);
+        let mut out = v.clone();
+        out.scale(reg);
+        out.gemm_tn(a, &av);
+        Ok(out)
+    }
+
+    fn rff_expand(
+        &mut self,
+        x: &LocalMatrix,
+        omega: &LocalMatrix,
+        bias: &[f64],
+        scale: f64,
+    ) -> crate::Result<LocalMatrix> {
+        anyhow::ensure!(x.cols() == omega.rows(), "rff_expand shape mismatch");
+        anyhow::ensure!(bias.len() == omega.cols(), "rff bias length mismatch");
+        let mut z = LocalMatrix::zeros(x.rows(), omega.cols());
+        z.gemm_nn(x, omega);
+        for i in 0..z.rows() {
+            let row = z.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = scale * (*v + bias[j]).cos();
+            }
+        }
+        Ok(z)
+    }
+
+    fn cg_update(
+        &mut self,
+        x: &mut LocalMatrix,
+        r: &mut LocalMatrix,
+        p: &LocalMatrix,
+        q: &LocalMatrix,
+        alpha: &[f64],
+    ) -> crate::Result<()> {
+        anyhow::ensure!(alpha.len() == x.cols(), "alpha length mismatch");
+        for i in 0..x.rows() {
+            let xr = x.row_mut(i);
+            let pr = p.row(i);
+            for j in 0..xr.len() {
+                xr[j] += alpha[j] * pr[j];
+            }
+            let rr = r.row_mut(i);
+            let qr = q.row(i);
+            for j in 0..rr.len() {
+                rr[j] -= alpha[j] * qr[j];
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> LocalMatrix {
+        LocalMatrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn gram_matvec_matches_composition() {
+        let mut rng = Rng::new(1);
+        let a = random(&mut rng, 20, 8);
+        let v = random(&mut rng, 8, 3);
+        let mut e = NativeEngine::new();
+        let got = e.gram_matvec(&a, &v, 0.7).unwrap();
+        // reference: Aᵀ(Av) + reg·v
+        let mut av = LocalMatrix::zeros(20, 3);
+        av.gemm_nn(&a, &v);
+        let mut want = v.clone();
+        want.scale(0.7);
+        want.gemm_tn(&a, &av);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn rff_expand_is_bounded_and_correct() {
+        let mut rng = Rng::new(2);
+        let x = random(&mut rng, 5, 4);
+        let omega = random(&mut rng, 4, 6);
+        let bias: Vec<f64> = (0..6).map(|_| rng.uniform_in(0.0, 6.28)).collect();
+        let scale = (2.0f64 / 6.0).sqrt();
+        let mut e = NativeEngine::new();
+        let z = e.rff_expand(&x, &omega, &bias, scale).unwrap();
+        for i in 0..5 {
+            for j in 0..6 {
+                let mut acc = 0.0;
+                for k in 0..4 {
+                    acc += x.get(i, k) * omega.get(k, j);
+                }
+                let want = scale * (acc + bias[j]).cos();
+                assert!((z.get(i, j) - want).abs() < 1e-12);
+                assert!(z.get(i, j).abs() <= scale + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cg_update_both_halves() {
+        let mut rng = Rng::new(3);
+        let mut x = random(&mut rng, 6, 2);
+        let mut r = random(&mut rng, 6, 2);
+        let p = random(&mut rng, 6, 2);
+        let q = random(&mut rng, 6, 2);
+        let alpha = vec![0.5, -2.0];
+        let (x0, r0) = (x.clone(), r.clone());
+        NativeEngine::new().cg_update(&mut x, &mut r, &p, &q, &alpha).unwrap();
+        for i in 0..6 {
+            for j in 0..2 {
+                assert!((x.get(i, j) - (x0.get(i, j) + alpha[j] * p.get(i, j))).abs() < 1e-14);
+                assert!((r.get(i, j) - (r0.get(i, j) - alpha[j] * q.get(i, j))).abs() < 1e-14);
+            }
+        }
+    }
+}

@@ -1,0 +1,466 @@
+//! XLA-backed engine: maps arbitrary shapes onto the fixed-shape AOT
+//! artifacts by padding and tiling.
+//!
+//! HLO has static shapes, so `make artifacts` exports a small family of
+//! shapes (square GEMM tiles, row-panel gram/rff/cg ops) and this engine
+//! composes everything else:
+//!
+//! * GEMM — operands are pre-cut into `tile×tile` blocks (zero-padded at
+//!   the edges); the K-loop threads the accumulator tile through repeated
+//!   executions of the `gemm_{nn,tn,nt}_<T>` artifact.
+//! * gram_matvec / rff_expand / cg_update — rows are chunked into panels
+//!   of the artifact height, trailing dims padded to the nearest exported
+//!   width, outputs shrunk back.
+//!
+//! When no panel artifact fits, the op falls back to GEMM-tile
+//! composition — still entirely on the XLA path (never silently native).
+
+use std::collections::HashMap;
+
+use crate::config::{Config, EngineKind};
+use crate::distmat::LocalMatrix;
+use crate::runtime::{DeviceBuf, Runtime};
+use crate::util::round_up;
+
+use super::{Engine, GemmVariant};
+
+/// Device-resident-operand cache cap; exceeded ⇒ cleared (operands are
+/// re-uploadable at the cost of one copy).
+const OPERAND_CACHE_CAP_BYTES: usize = 512 << 20;
+
+pub struct XlaEngine {
+    rt: Runtime,
+    /// `"xla"` or `"pallas"` — which artifact family to resolve.
+    family: &'static str,
+    tile: usize,
+    /// (operand key, panel index) → device-resident padded A panel.
+    /// §Perf: keeps the static Gram panel on device across solver
+    /// iterations instead of re-marshalling ~16 MB per call.
+    operand_cache: HashMap<(u64, usize), DeviceBuf>,
+    operand_cache_bytes: usize,
+}
+
+impl XlaEngine {
+    pub fn new(cfg: &Config, family: &'static str) -> crate::Result<Self> {
+        let rt = Runtime::load(&cfg.resolved_artifacts_dir())?;
+        let tile = cfg.tile;
+        anyhow::ensure!(
+            rt.manifest().find("gemm_nn", family, &[tile, tile, tile]).is_some(),
+            "no {family} gemm artifact for tile {tile} in manifest (run `make artifacts`)"
+        );
+        Ok(XlaEngine {
+            rt,
+            family,
+            tile,
+            operand_cache: HashMap::new(),
+            operand_cache_bytes: 0,
+        })
+    }
+
+    fn artifact(&self, op: &str, dims: &[usize]) -> Option<String> {
+        self.rt
+            .manifest()
+            .find(op, self.family, dims)
+            .map(|e| e.name.clone())
+    }
+
+    /// Smallest exported dims for `op` with `dims[fixed] == want[fixed]`
+    /// for the given exact-match positions and `dims[i] >= want[i]`
+    /// elsewhere. Used to pick padded panel shapes.
+    fn best_panel(&self, op: &str, want: &[usize], exact: &[bool]) -> Option<Vec<usize>> {
+        let mut best: Option<Vec<usize>> = None;
+        for dims in self.rt.manifest().dims_for(op, self.family) {
+            if dims.len() != want.len() {
+                continue;
+            }
+            let ok = dims.iter().zip(want).zip(exact).all(|((&d, &w), &ex)| {
+                if ex {
+                    d == w
+                } else {
+                    d >= w
+                }
+            });
+            if !ok {
+                continue;
+            }
+            let waste: usize = dims.iter().product();
+            if best.as_ref().map_or(true, |b| waste < b.iter().product::<usize>()) {
+                best = Some(dims);
+            }
+        }
+        best
+    }
+
+    /// Cut `src` (padded to multiples of `t`) into row-major `t×t` tiles.
+    /// Returns (tiles, tiles_per_row_of_blocks).
+    fn tilize(src: &LocalMatrix, t: usize) -> (Vec<Vec<f64>>, usize, usize) {
+        let br = src.rows().div_ceil(t);
+        let bc = src.cols().div_ceil(t);
+        let mut tiles = vec![vec![0.0; t * t]; br * bc];
+        for i in 0..src.rows() {
+            let row = src.row(i);
+            let bi = i / t;
+            let ri = i % t;
+            for bj in 0..bc {
+                let j0 = bj * t;
+                let j1 = (j0 + t).min(src.cols());
+                tiles[bi * bc + bj][ri * t..ri * t + (j1 - j0)]
+                    .copy_from_slice(&row[j0..j1]);
+            }
+        }
+        (tiles, br, bc)
+    }
+
+    /// Write a `t×t` tile back into `dst` at block (bi, bj), clipping.
+    fn untile(dst: &mut LocalMatrix, tile: &[f64], t: usize, bi: usize, bj: usize) {
+        let i0 = bi * t;
+        let j0 = bj * t;
+        let i1 = (i0 + t).min(dst.rows());
+        let j1 = (j0 + t).min(dst.cols());
+        for i in i0..i1 {
+            dst.row_mut(i)[j0..j1]
+                .copy_from_slice(&tile[(i - i0) * t..(i - i0) * t + (j1 - j0)]);
+        }
+    }
+}
+
+impl Engine for XlaEngine {
+    fn kind(&self) -> EngineKind {
+        if self.family == "pallas" {
+            EngineKind::Pallas
+        } else {
+            EngineKind::Xla
+        }
+    }
+
+    fn gemm(
+        &mut self,
+        variant: GemmVariant,
+        c: &mut LocalMatrix,
+        a: &LocalMatrix,
+        b: &LocalMatrix,
+    ) -> crate::Result<()> {
+        let (m, n, k) = variant.problem_dims(a, b);
+        anyhow::ensure!(
+            (c.rows(), c.cols()) == (m, n),
+            "gemm {variant:?}: c is {}x{}, want {m}x{n}",
+            c.rows(),
+            c.cols()
+        );
+        let t = self.tile;
+        let name = self
+            .artifact(variant.op_name(), &[t, t, t])
+            .with_context_none(format!("no {} artifact at tile {t}", variant.op_name()))?;
+        let shape = [t, t];
+
+        // Pre-cut operands into tiles once; note TN/NT store the panels
+        // transposed, so block indices swap for A (TN) / B (NT).
+        let (a_tiles, a_br, a_bc) = Self::tilize(a, t);
+        let (b_tiles, b_br, b_bc) = Self::tilize(b, t);
+        let kb = k.div_ceil(t);
+        let (mb, nb) = (m.div_ceil(t), n.div_ceil(t));
+
+        for bi in 0..mb {
+            for bj in 0..nb {
+                // accumulator tile seeded from C (clipped, zero-padded)
+                let mut acc = vec![0.0; t * t];
+                {
+                    let i1 = ((bi * t) + t).min(m);
+                    let j1 = ((bj * t) + t).min(n);
+                    for i in bi * t..i1 {
+                        let row = c.row(i);
+                        acc[(i - bi * t) * t..(i - bi * t) * t + (j1 - bj * t)]
+                            .copy_from_slice(&row[bj * t..j1]);
+                    }
+                }
+                for bk in 0..kb {
+                    let a_tile = match variant {
+                        GemmVariant::NN | GemmVariant::NT => {
+                            debug_assert!(bi < a_br && bk < a_bc);
+                            &a_tiles[bi * a_bc + bk]
+                        }
+                        GemmVariant::TN => {
+                            debug_assert!(bk < a_br && bi < a_bc);
+                            &a_tiles[bk * a_bc + bi]
+                        }
+                    };
+                    let b_tile = match variant {
+                        GemmVariant::NN | GemmVariant::TN => {
+                            debug_assert!(bk < b_br && bj < b_bc);
+                            &b_tiles[bk * b_bc + bj]
+                        }
+                        GemmVariant::NT => {
+                            debug_assert!(bj < b_br && bk < b_bc);
+                            &b_tiles[bj * b_bc + bk]
+                        }
+                    };
+                    let out = self.rt.run1(
+                        &name,
+                        &[
+                            (acc.as_slice(), shape.as_slice()),
+                            (a_tile.as_slice(), shape.as_slice()),
+                            (b_tile.as_slice(), shape.as_slice()),
+                        ],
+                    )?;
+                    acc = out.data;
+                }
+                Self::untile(c, &acc, t, bi, bj);
+            }
+        }
+        Ok(())
+    }
+
+    fn gram_matvec(
+        &mut self,
+        a: &LocalMatrix,
+        v: &LocalMatrix,
+        reg: f64,
+    ) -> crate::Result<LocalMatrix> {
+        let (rows, k) = (a.rows(), a.cols());
+        let c = v.cols();
+        anyhow::ensure!(v.rows() == k, "gram_matvec shape mismatch");
+
+        // Prefer a fused panel artifact: dims = (panel_rows, K_pad, C_pad).
+        if let Some(dims) = self.best_panel("gram_matvec", &[1, k, c], &[false, false, false]) {
+            let (pm, pk, pc) = (dims[0], dims[1], dims[2]);
+            let name = self.artifact("gram_matvec", &dims).unwrap();
+            let v_pad = v.padded(pk, pc);
+            let v_shape = [pk, pc];
+            let mut acc = vec![0.0; pk * pc];
+            let mut first = true;
+            let mut i0 = 0;
+            while i0 < rows {
+                let i1 = (i0 + pm).min(rows);
+                let panel = a.slice_rows(i0, i1).padded(pm, pk);
+                // reg·v must be added exactly once across panels
+                let reg_now = [[if first { reg } else { 0.0 }]];
+                let out = self.rt.run1(
+                    &name,
+                    &[
+                        (panel.data(), [pm, pk].as_slice()),
+                        (v_pad.data(), v_shape.as_slice()),
+                        (&reg_now[0], [1, 1].as_slice()),
+                    ],
+                )?;
+                for (dst, src) in acc.iter_mut().zip(&out.data) {
+                    *dst += src;
+                }
+                first = false;
+                i0 = i1;
+            }
+            if first {
+                // zero-row panel: result is just reg·v
+                let mut out = v.clone();
+                out.scale(reg);
+                return Ok(out);
+            }
+            return Ok(LocalMatrix::from_data(pk, pc, acc).shrunk(k, c));
+        }
+
+        // Fallback: compose from GEMM tiles (still the XLA path).
+        let mut av = LocalMatrix::zeros(rows, c);
+        self.gemm(GemmVariant::NN, &mut av, a, v)?;
+        let mut out = v.clone();
+        out.scale(reg);
+        self.gemm(GemmVariant::TN, &mut out, a, &av)?;
+        Ok(out)
+    }
+
+    fn gram_matvec_keyed(
+        &mut self,
+        key: u64,
+        a: &LocalMatrix,
+        v: &LocalMatrix,
+        reg: f64,
+    ) -> crate::Result<LocalMatrix> {
+        let (rows, k) = (a.rows(), a.cols());
+        let c = v.cols();
+        anyhow::ensure!(v.rows() == k, "gram_matvec shape mismatch");
+        let Some(dims) = self.best_panel("gram_matvec", &[1, k, c], &[false, false, false])
+        else {
+            // no fused artifact: tile-composition path, uncached
+            return self.gram_matvec(a, v, reg);
+        };
+        let (pm, pk, pc) = (dims[0], dims[1], dims[2]);
+        let name = self.artifact("gram_matvec", &dims).unwrap();
+        let n_panels = rows.div_ceil(pm).max(1);
+
+        // upload-once: the padded A panels live on device under (key, i)
+        for p in 0..n_panels {
+            if !self.operand_cache.contains_key(&(key, p)) {
+                let i0 = p * pm;
+                let i1 = (i0 + pm).min(rows);
+                let panel = a.slice_rows(i0, i1).padded(pm, pk);
+                let buf = self.rt.upload(panel.data(), &[pm, pk])?;
+                self.operand_cache_bytes += buf.bytes();
+                if self.operand_cache_bytes > OPERAND_CACHE_CAP_BYTES {
+                    log::warn!(
+                        "operand cache exceeded {} MiB; clearing",
+                        OPERAND_CACHE_CAP_BYTES >> 20
+                    );
+                    self.operand_cache.clear();
+                    self.operand_cache_bytes = buf.bytes();
+                }
+                self.operand_cache.insert((key, p), buf);
+            }
+        }
+
+        let v_pad = v.padded(pk, pc);
+        let mut acc = vec![0.0; pk * pc];
+        for p in 0..n_panels {
+            // reg·v enters exactly once (first panel)
+            let reg_now = [[if p == 0 { reg } else { 0.0 }]];
+            let v_buf = self.rt.upload(v_pad.data(), &[pk, pc])?;
+            let reg_buf = self.rt.upload(&reg_now[0], &[1, 1])?;
+            let a_buf = &self.operand_cache[&(key, p)];
+            let out = self.rt.run1_b(&name, &[a_buf, &v_buf, &reg_buf])?;
+            for (dst, src) in acc.iter_mut().zip(&out.data) {
+                *dst += src;
+            }
+        }
+        Ok(LocalMatrix::from_data(pk, pc, acc).shrunk(k, c))
+    }
+
+    fn rff_expand(
+        &mut self,
+        x: &LocalMatrix,
+        omega: &LocalMatrix,
+        bias: &[f64],
+        scale: f64,
+    ) -> crate::Result<LocalMatrix> {
+        let (rows, k0) = (x.rows(), x.cols());
+        let d = omega.cols();
+        anyhow::ensure!(omega.rows() == k0 && bias.len() == d, "rff shape mismatch");
+
+        // Panel artifact dims = (panel_rows, K0_pad, D_chunk); D is chunked
+        // (cos is elementwise in d, so chunking is exact).
+        if let Some(dims) = self.best_panel("rff_expand", &[1, k0, 1], &[false, false, false]) {
+            let (pm, pk0, pd) = (dims[0], dims[1], dims[2]);
+            let name = self.artifact("rff_expand", &dims).unwrap();
+            let mut z = LocalMatrix::zeros(rows, d);
+            let scale_arr = [[scale]];
+            let mut j0 = 0;
+            while j0 < d {
+                let j1 = (j0 + pd).min(d);
+                let om = omega.slice_cols(j0, j1).padded(pk0, pd);
+                let mut bias_pad = vec![0.0; pd];
+                bias_pad[..j1 - j0].copy_from_slice(&bias[j0..j1]);
+                let mut i0 = 0;
+                while i0 < rows {
+                    let i1 = (i0 + pm).min(rows);
+                    let panel = x.slice_rows(i0, i1).padded(pm, pk0);
+                    let out = self.rt.run1(
+                        &name,
+                        &[
+                            (panel.data(), [pm, pk0].as_slice()),
+                            (om.data(), [pk0, pd].as_slice()),
+                            (bias_pad.as_slice(), [1, pd].as_slice()),
+                            (&scale_arr[0], [1, 1].as_slice()),
+                        ],
+                    )?;
+                    let out = LocalMatrix::from_data(pm, pd, out.data);
+                    for i in i0..i1 {
+                        z.row_mut(i)[j0..j1]
+                            .copy_from_slice(&out.row(i - i0)[..j1 - j0]);
+                    }
+                    i0 = i1;
+                }
+                j0 = j1;
+            }
+            return Ok(z);
+        }
+
+        // Fallback: projection through GEMM tiles, cos tail in rust.
+        let mut z = LocalMatrix::zeros(rows, d);
+        self.gemm(GemmVariant::NN, &mut z, x, omega)?;
+        for i in 0..rows {
+            let row = z.row_mut(i);
+            for (j, vv) in row.iter_mut().enumerate() {
+                *vv = scale * (*vv + bias[j]).cos();
+            }
+        }
+        Ok(z)
+    }
+
+    fn cg_update(
+        &mut self,
+        x: &mut LocalMatrix,
+        r: &mut LocalMatrix,
+        p: &LocalMatrix,
+        q: &LocalMatrix,
+        alpha: &[f64],
+    ) -> crate::Result<()> {
+        let (rows, cols) = (x.rows(), x.cols());
+        anyhow::ensure!(alpha.len() == cols, "alpha length mismatch");
+
+        if let Some(dims) = self.best_panel("cg_update", &[1, cols], &[false, false]) {
+            let (pm, pc) = (dims[0], dims[1]);
+            let name = self.artifact("cg_update", &dims).unwrap();
+            let mut alpha_pad = vec![0.0; pc];
+            alpha_pad[..cols].copy_from_slice(alpha);
+            let mut i0 = 0;
+            while i0 < rows {
+                let i1 = (i0 + pm).min(rows);
+                let xs = x.slice_rows(i0, i1).padded(pm, pc);
+                let rs = r.slice_rows(i0, i1).padded(pm, pc);
+                let ps = p.slice_rows(i0, i1).padded(pm, pc);
+                let qs = q.slice_rows(i0, i1).padded(pm, pc);
+                let shape = [pm, pc];
+                let out = self.rt.run(
+                    &name,
+                    &[
+                        (xs.data(), shape.as_slice()),
+                        (rs.data(), shape.as_slice()),
+                        (ps.data(), shape.as_slice()),
+                        (qs.data(), shape.as_slice()),
+                        (alpha_pad.as_slice(), [1, pc].as_slice()),
+                    ],
+                )?;
+                anyhow::ensure!(out.len() == 2, "cg_update returns 2 outputs");
+                let xn = LocalMatrix::from_data(pm, pc, out[0].data.clone())
+                    .shrunk(i1 - i0, cols);
+                let rn = LocalMatrix::from_data(pm, pc, out[1].data.clone())
+                    .shrunk(i1 - i0, cols);
+                x.write_rows(i0, &xn);
+                r.write_rows(i0, &rn);
+                i0 = i1;
+            }
+            return Ok(());
+        }
+
+        // Fallback: plain loops (memory-bound op; no artifact exported for
+        // this width).
+        for i in 0..rows {
+            let xr = x.row_mut(i);
+            let pr = p.row(i);
+            for j in 0..cols {
+                xr[j] += alpha[j] * pr[j];
+            }
+            let rr = r.row_mut(i);
+            let qr = q.row(i);
+            for j in 0..cols {
+                rr[j] -= alpha[j] * qr[j];
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_stats(&self) -> (u64, f64) {
+        (self.rt.exec_calls, self.rt.exec_secs)
+    }
+}
+
+/// `Option::context` helper that avoids importing anyhow's trait just for
+/// one call site.
+trait WithContextNone<T> {
+    fn with_context_none(self, msg: String) -> crate::Result<T>;
+}
+
+impl<T> WithContextNone<T> for Option<T> {
+    fn with_context_none(self, msg: String) -> crate::Result<T> {
+        self.ok_or_else(|| anyhow::anyhow!(msg))
+    }
+}
+
+// round_up is used by callers sizing padded buffers; keep the import alive.
+const _: fn(usize, usize) -> usize = round_up;

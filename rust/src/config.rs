@@ -1,0 +1,268 @@
+//! Layered configuration: compiled defaults → config file → `--set k=v`
+//! overrides. Every knob the benches sweep lives here so EXPERIMENTS.md can
+//! record the exact configuration of each table row.
+//!
+//! The file format is the flat `key = value` subset of TOML (comments with
+//! `#`, optional `[section]` headers that prefix keys with `section.`) —
+//! serde is not in the offline vendor set, and the paper's configuration
+//! surface is small enough that a real TOML parser buys nothing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+/// Which compute engine the workers run (DESIGN.md ablation #1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Blocked pure-rust GEMM (no XLA on the hot path) — the floor.
+    Native,
+    /// AOT artifacts lowered from the pure-jnp graphs (XLA `dot`).
+    Xla,
+    /// AOT artifacts lowered from the Pallas kernels (`interpret=True`).
+    Pallas,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "native" => EngineKind::Native,
+            "xla" => EngineKind::Xla,
+            "pallas" => EngineKind::Pallas,
+            other => bail!("unknown engine {other:?} (native|xla|pallas)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Xla => "xla",
+            EngineKind::Pallas => "pallas",
+        }
+    }
+}
+
+/// Socket-transfer tuning (DESIGN.md ablation #3).
+#[derive(Debug, Clone)]
+pub struct TransferConfig {
+    /// Matrix rows batched into one wire frame.
+    pub rows_per_frame: usize,
+    /// Userspace buffer in front of the socket.
+    pub buf_bytes: usize,
+}
+
+/// The sparklite overhead model (DESIGN.md §2): what a Spark stage pays
+/// beyond its compute on the paper's testbed, scaled to this one. Defaults
+/// calibrated against Table 2 / Gittens et al. 2016: per-iteration Spark
+/// overheads of tens of seconds at 20–40 nodes, dominated by scheduler
+/// delay and task-start costs, scaled by ~1/50 to this single-box setup.
+#[derive(Debug, Clone)]
+pub struct OverheadConfig {
+    /// Fixed scheduler delay per BSP stage (s).
+    pub scheduler_delay_s: f64,
+    /// Task launch + deserialization cost per task (s).
+    pub task_launch_s: f64,
+    /// Result serialization throughput (bytes/s) charged per task output.
+    pub serde_bytes_per_s: f64,
+    /// Coefficient of variation of task-duration jitter (stragglers).
+    pub straggler_cv: f64,
+}
+
+/// Modeled interconnect for simulated-cluster-time accounting (the box has
+/// one core; DESIGN.md §2 "Cori" row). Roughly a tenth of Aries: 1 GB/s
+/// per link, 10 µs latency.
+#[derive(Debug, Clone)]
+pub struct SimNetConfig {
+    pub latency_s: f64,
+    pub bytes_per_s: f64,
+}
+
+impl SimNetConfig {
+    /// Modeled seconds to move `bytes` point-to-point.
+    pub fn transfer_secs(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bytes_per_s
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Master seed; all generator/jitter streams derive from it.
+    pub seed: u64,
+    pub engine: EngineKind,
+    /// Directory with `manifest.txt` + `*.hlo.txt` from `make artifacts`.
+    pub artifacts_dir: PathBuf,
+    /// Square tile for composed GEMMs (must exist in the manifest).
+    pub tile: usize,
+    /// Row-panel height for gram/rff artifacts (must match manifest).
+    pub panel_rows: usize,
+    pub transfer: TransferConfig,
+    pub overhead: OverheadConfig,
+    pub simnet: SimNetConfig,
+    /// sparklite driver memory cap (bytes) — reproduces Table 1's "Spark
+    /// cannot run >10k features" capability boundary.
+    pub spark_driver_max_bytes: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            seed: 0xA1C4_E5D1,
+            engine: EngineKind::Xla,
+            artifacts_dir: PathBuf::from("artifacts"),
+            tile: 256,
+            panel_rows: 2048,
+            transfer: TransferConfig { rows_per_frame: 64, buf_bytes: 1 << 20 },
+            overhead: OverheadConfig {
+                scheduler_delay_s: 0.40,
+                task_launch_s: 0.020,
+                serde_bytes_per_s: 800e6,
+                straggler_cv: 0.20,
+            },
+            simnet: SimNetConfig { latency_s: 10e-6, bytes_per_s: 1e9 },
+            spark_driver_max_bytes: 192 << 20,
+        }
+    }
+}
+
+impl Config {
+    /// Parse `key = value` lines (TOML-subset; see module docs).
+    pub fn from_str_pairs(text: &str) -> crate::Result<BTreeMap<String, String>> {
+        let mut out = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("config line {}: {raw:?}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            out.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let mut cfg = Config::default();
+        cfg.apply_pairs(&Self::from_str_pairs(&text)?)?;
+        Ok(cfg)
+    }
+
+    /// Apply `k=v` overrides (same keys as the file format).
+    pub fn apply_pairs(
+        &mut self,
+        pairs: &BTreeMap<String, String>,
+    ) -> crate::Result<()> {
+        for (k, v) in pairs {
+            self.apply(k, v)?;
+        }
+        Ok(())
+    }
+
+    pub fn apply(&mut self, key: &str, value: &str) -> crate::Result<()> {
+        let fl = |v: &str| -> crate::Result<f64> {
+            v.parse().with_context(|| format!("{key}: bad float {value:?}"))
+        };
+        let int = |v: &str| -> crate::Result<usize> {
+            v.parse().with_context(|| format!("{key}: bad integer {value:?}"))
+        };
+        match key {
+            "seed" => self.seed = value.parse().context("seed")?,
+            "engine" => self.engine = EngineKind::parse(value)?,
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "tile" => self.tile = int(value)?,
+            "panel_rows" => self.panel_rows = int(value)?,
+            "transfer.rows_per_frame" => self.transfer.rows_per_frame = int(value)?,
+            "transfer.buf_bytes" => self.transfer.buf_bytes = int(value)?,
+            "overhead.scheduler_delay_s" => {
+                self.overhead.scheduler_delay_s = fl(value)?
+            }
+            "overhead.task_launch_s" => self.overhead.task_launch_s = fl(value)?,
+            "overhead.serde_bytes_per_s" => {
+                self.overhead.serde_bytes_per_s = fl(value)?
+            }
+            "overhead.straggler_cv" => self.overhead.straggler_cv = fl(value)?,
+            "simnet.latency_s" => self.simnet.latency_s = fl(value)?,
+            "simnet.bytes_per_s" => self.simnet.bytes_per_s = fl(value)?,
+            "spark_driver_max_bytes" => {
+                self.spark_driver_max_bytes = int(value)?
+            }
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Resolve the artifacts dir relative to the crate root when the
+    /// default relative path does not exist from the current cwd (tests and
+    /// benches run from various directories).
+    pub fn resolved_artifacts_dir(&self) -> PathBuf {
+        if self.artifacts_dir.exists() {
+            return self.artifacts_dir.clone();
+        }
+        let from_manifest =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join(&self.artifacts_dir);
+        if from_manifest.exists() {
+            from_manifest
+        } else {
+            self.artifacts_dir.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.engine, EngineKind::Xla);
+        assert!(c.tile > 0 && c.panel_rows % c.tile == 0);
+    }
+
+    #[test]
+    fn parse_toml_subset_with_sections() {
+        let text = r#"
+            # comment
+            seed = 7
+            engine = "pallas"
+
+            [overhead]
+            scheduler_delay_s = 1.5   # inline comment
+
+            [transfer]
+            rows_per_frame = 128
+        "#;
+        let mut c = Config::default();
+        c.apply_pairs(&Config::from_str_pairs(text).unwrap()).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.engine, EngineKind::Pallas);
+        assert_eq!(c.overhead.scheduler_delay_s, 1.5);
+        assert_eq!(c.transfer.rows_per_frame, 128);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::default();
+        assert!(c.apply("does_not_exist", "1").is_err());
+        assert!(c.apply("engine", "gpu").is_err());
+    }
+
+    #[test]
+    fn simnet_transfer_model_monotone() {
+        let s = SimNetConfig { latency_s: 1e-5, bytes_per_s: 1e9 };
+        assert!(s.transfer_secs(1 << 20) > s.transfer_secs(1 << 10));
+        assert!(s.transfer_secs(0) == 1e-5);
+    }
+}

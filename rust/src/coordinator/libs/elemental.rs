@@ -1,0 +1,234 @@
+//! The Elemental-routines stand-in (paper §4.2): dense distributed
+//! building blocks the ocean-SVD experiments use.
+//!
+//! Routines:
+//!
+//! * `truncated_svd(A, rank [, steps, seed])` → `U, S, V`
+//! * `qr(A)` → `Q, R` (the Figure 2 API example)
+//! * `gemm(A, B)` → `C = A·B` (B allgathered; tall-skinny B)
+//! * `load_hdf5(path)` → `A` — workers read their row ranges straight
+//!   from the file (Table 5 use-case 3 / Figure 3 load path)
+//! * `replicate_cols(A, times)` → column-wise replication (Figure 3's
+//!   2.2→17.6 TB construction)
+//! * `rand_matrix(rows, cols, seed)` → synthetic dense matrix
+//! * `fro_norm(A)` → scalar
+
+use std::path::Path;
+
+use crate::collectives::allgather;
+use crate::compute::GemmVariant;
+use crate::distmat::{LocalMatrix, RowBlockLayout};
+use crate::linalg::lanczos::{truncated_svd, SvdOptions};
+use crate::linalg::qr::cholesky_qr2;
+use crate::protocol::{Params, Value};
+use crate::util::prng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::super::registry::{Library, OutputMatrix, TaskOutput, WorkerCtx};
+use super::distribute_replicated;
+
+pub struct Elemental;
+
+impl Library for Elemental {
+    fn name(&self) -> &'static str {
+        "elemental"
+    }
+
+    fn routines(&self) -> Vec<&'static str> {
+        vec![
+            "truncated_svd",
+            "qr",
+            "gemm",
+            "load_hdf5",
+            "replicate_cols",
+            "rand_matrix",
+            "fro_norm",
+        ]
+    }
+
+    fn run(
+        &self,
+        routine: &str,
+        params: &Params,
+        ctx: &mut WorkerCtx,
+    ) -> crate::Result<TaskOutput> {
+        match routine {
+            "truncated_svd" => svd(params, ctx),
+            "qr" => qr(params, ctx),
+            "gemm" => gemm(params, ctx),
+            "load_hdf5" => load_hdf5(params, ctx),
+            "replicate_cols" => replicate_cols(params, ctx),
+            "rand_matrix" => rand_matrix(params, ctx),
+            "fro_norm" => fro_norm(params, ctx),
+            other => anyhow::bail!("elemental has no routine {other:?}"),
+        }
+    }
+}
+
+fn svd(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let a_id = params.matrix("A")?;
+    let opts = SvdOptions {
+        rank: params.i64_or("rank", 20)? as usize,
+        steps: params.i64_or("steps", 0)? as usize,
+        seed: params.i64_or("seed", 0x53D5)? as u64,
+    };
+    let (layout, a_local) = ctx.local_block(a_id)?;
+
+    let mut sw = Stopwatch::new();
+    sw.start("compute");
+    let res = truncated_svd(ctx.comm, ctx.engine, &a_local, &opts)?;
+    sw.stop();
+
+    let k = res.sigma.len();
+    // U inherits A's row layout
+    let mut u_layout = layout.clone();
+    u_layout.cols = k;
+    // S as a k×1 distributed column, V (K×k) distributed by rows
+    let s_mat = LocalMatrix::from_data(k, 1, res.sigma.clone());
+    let workers = ctx.comm.size();
+    let (s_layout, s_local) = distribute_replicated(&s_mat, workers, ctx.rank);
+    let (v_layout, v_local) = distribute_replicated(&res.v, workers, ctx.rank);
+
+    Ok(TaskOutput {
+        matrices: vec![
+            OutputMatrix { name: "U".into(), layout: u_layout, local: res.u_local },
+            OutputMatrix { name: "S".into(), layout: s_layout, local: s_local },
+            OutputMatrix { name: "V".into(), layout: v_layout, local: v_local },
+        ],
+        scalars: Params::new()
+            .with_i64("steps", res.steps as i64)
+            .set("sigma", Value::F64s(res.sigma)),
+        timings: vec![("compute".into(), sw.secs("compute"))],
+    })
+}
+
+fn qr(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let a_id = params.matrix("A")?;
+    let (layout, a_local) = ctx.local_block(a_id)?;
+    let mut sw = Stopwatch::new();
+    sw.start("compute");
+    let (q_local, r) = cholesky_qr2(ctx.comm, ctx.engine, &a_local)?;
+    sw.stop();
+    let (r_layout, r_local) = distribute_replicated(&r, ctx.comm.size(), ctx.rank);
+    Ok(TaskOutput {
+        matrices: vec![
+            OutputMatrix { name: "Q".into(), layout: layout.clone(), local: q_local },
+            OutputMatrix { name: "R".into(), layout: r_layout, local: r_local },
+        ],
+        scalars: Params::new(),
+        timings: vec![("compute".into(), sw.secs("compute"))],
+    })
+}
+
+fn gemm(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let a_id = params.matrix("A")?;
+    let b_id = params.matrix("B")?;
+    let (a_layout, a_local) = ctx.local_block(a_id)?;
+    let (b_layout, b_local) = ctx.local_block(b_id)?;
+    anyhow::ensure!(
+        a_layout.cols == b_layout.rows,
+        "gemm: A is {}x{}, B is {}x{}",
+        a_layout.rows,
+        a_layout.cols,
+        b_layout.rows,
+        b_layout.cols
+    );
+
+    let mut sw = Stopwatch::new();
+    sw.start("compute");
+    // allgather B's row blocks so every rank holds the full right factor
+    let parts = allgather(ctx.comm, 0x4D4D_0000, b_local.into_data());
+    let mut b_full = LocalMatrix::zeros(b_layout.rows, b_layout.cols);
+    for (rank, part) in parts.into_iter().enumerate() {
+        let (lo, hi) = b_layout.ranges[rank];
+        b_full.write_rows(
+            lo,
+            &LocalMatrix::from_data(hi - lo, b_layout.cols, part),
+        );
+    }
+    let mut c_local = LocalMatrix::zeros(a_local.rows(), b_layout.cols);
+    ctx.engine.gemm(GemmVariant::NN, &mut c_local, &a_local, &b_full)?;
+    sw.stop();
+
+    let mut c_layout = a_layout.clone();
+    c_layout.cols = b_layout.cols;
+    Ok(TaskOutput {
+        matrices: vec![OutputMatrix { name: "C".into(), layout: c_layout, local: c_local }],
+        scalars: Params::new(),
+        timings: vec![("compute".into(), sw.secs("compute"))],
+    })
+}
+
+fn load_hdf5(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let path_s = params.str("path")?.to_string();
+    let path = Path::new(&path_s);
+    let (rows, cols) = crate::hdf5sim::read_header(path)?;
+    let layout = RowBlockLayout::even(rows, cols, ctx.comm.size());
+    let (lo, hi) = layout.ranges[ctx.rank];
+
+    let mut sw = Stopwatch::new();
+    sw.start("load");
+    let local = crate::hdf5sim::read_rows(path, lo, hi)?;
+    sw.stop();
+
+    Ok(TaskOutput {
+        matrices: vec![OutputMatrix { name: "A".into(), layout, local }],
+        scalars: Params::new()
+            .with_i64("rows", rows as i64)
+            .with_i64("cols", cols as i64),
+        timings: vec![("load".into(), sw.secs("load"))],
+    })
+}
+
+fn replicate_cols(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let a_id = params.matrix("A")?;
+    let times = params.i64("times")? as usize;
+    anyhow::ensure!(times >= 1, "times must be >= 1");
+    let (layout, a_local) = ctx.local_block(a_id)?;
+    let mut sw = Stopwatch::new();
+    sw.start("replicate");
+    let local = a_local.tile_cols(times);
+    sw.stop();
+    let mut out_layout = layout.clone();
+    out_layout.cols *= times;
+    Ok(TaskOutput {
+        matrices: vec![OutputMatrix { name: "A_rep".into(), layout: out_layout, local }],
+        scalars: Params::new(),
+        timings: vec![("replicate".into(), sw.secs("replicate"))],
+    })
+}
+
+fn rand_matrix(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let rows = params.i64("rows")? as usize;
+    let cols = params.i64("cols")? as usize;
+    let seed = params.i64_or("seed", 7)? as u64;
+    let layout = RowBlockLayout::even(rows, cols, ctx.comm.size());
+    let (lo, hi) = layout.ranges[ctx.rank];
+    // per-row streams keyed by global index: layout-independent content
+    let base = Rng::new(seed);
+    let mut local = LocalMatrix::zeros(hi - lo, cols);
+    for gi in lo..hi {
+        let mut row_rng = base.derive(gi as u64);
+        let row = local.row_mut(gi - lo);
+        for v in row.iter_mut() {
+            *v = row_rng.normal();
+        }
+    }
+    Ok(TaskOutput {
+        matrices: vec![OutputMatrix { name: "A".into(), layout, local }],
+        scalars: Params::new(),
+        timings: vec![],
+    })
+}
+
+fn fro_norm(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let a_id = params.matrix("A")?;
+    let (_, a_local) = ctx.local_block(a_id)?;
+    let mut sq = vec![a_local.fro_sq()];
+    crate::collectives::allreduce_sum(ctx.comm, 0x4652_0000, &mut sq);
+    Ok(TaskOutput {
+        matrices: vec![],
+        scalars: Params::new().with_f64("norm", sq[0].sqrt()),
+        timings: vec![],
+    })
+}

@@ -1,0 +1,42 @@
+//! Built-in MPI-style libraries (the ALIs of paper §3.1.3).
+//!
+//! * [`skylark`] — the libSkylark stand-in: block CG on the normal
+//!   equations + random-feature expansion (§4.1).
+//! * [`elemental`] — the Elemental-routines stand-in: truncated SVD, QR,
+//!   GEMM, file load, column replication, synthetic generation (§4.2).
+
+pub mod elemental;
+pub mod skylark;
+
+use crate::distmat::{LocalMatrix, RowBlockLayout};
+
+/// Slice a replicated matrix into this rank's row-block for output
+/// registration (routines that produce replicated results — W, V, R —
+/// still return them as distributed handles, matching the paper's
+/// `AlMatrix` model where every output lives in Alchemist as a
+/// distributed matrix).
+pub fn distribute_replicated(
+    m: &LocalMatrix,
+    workers: usize,
+    rank: usize,
+) -> (RowBlockLayout, LocalMatrix) {
+    let layout = RowBlockLayout::even(m.rows(), m.cols(), workers);
+    let (a, b) = layout.ranges[rank];
+    (layout.clone(), m.slice_rows(a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribute_replicated_covers() {
+        let m = LocalMatrix::from_fn(7, 2, |i, j| (i * 2 + j) as f64);
+        let mut rebuilt = LocalMatrix::zeros(7, 2);
+        for rank in 0..3 {
+            let (layout, local) = distribute_replicated(&m, 3, rank);
+            rebuilt.write_rows(layout.ranges[rank].0, &local);
+        }
+        assert_eq!(rebuilt, m);
+    }
+}

@@ -1,0 +1,131 @@
+//! The libSkylark stand-in (paper §4.1): conjugate gradient on the
+//! regularized normal equations, plus server-side random-feature
+//! expansion.
+//!
+//! Routines:
+//!
+//! * `rff_expand(X, d, gamma, seed)` → `Z` — expand raw features to `d`
+//!   random Fourier features (the paper ships the small 440-column matrix
+//!   and expands inside Alchemist; shipping the expanded TBs would swamp
+//!   the transfer path).
+//! * `cg_solve(X, Y, lambda, tol, max_iters [, rff_d, rff_gamma,
+//!   rff_seed])` → `W` — block CG; with `rff_d > 0` the feature matrix is
+//!   expanded first and the expansion time reported separately (Table 2's
+//!   columns).
+
+use crate::linalg::cg::{cg_solve, CgOptions};
+use crate::linalg::rff::RffMap;
+use crate::protocol::{Params, Value};
+use crate::util::timer::Stopwatch;
+
+use super::super::registry::{Library, OutputMatrix, TaskOutput, WorkerCtx};
+use super::distribute_replicated;
+
+pub struct Skylark;
+
+impl Library for Skylark {
+    fn name(&self) -> &'static str {
+        "skylark"
+    }
+
+    fn routines(&self) -> Vec<&'static str> {
+        vec!["rff_expand", "cg_solve"]
+    }
+
+    fn run(
+        &self,
+        routine: &str,
+        params: &Params,
+        ctx: &mut WorkerCtx,
+    ) -> crate::Result<TaskOutput> {
+        match routine {
+            "rff_expand" => rff_expand(params, ctx),
+            "cg_solve" => cg_solve_routine(params, ctx),
+            other => anyhow::bail!("skylark has no routine {other:?}"),
+        }
+    }
+}
+
+fn rff_expand(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let x_id = params.matrix("X")?;
+    let d = params.i64("d")? as usize;
+    let gamma = params.f64_or("gamma", 1.0)?;
+    let seed = params.i64_or("seed", 1)? as u64;
+
+    let (layout, x_local) = ctx.local_block(x_id)?;
+    let map = RffMap::generate(x_local.cols(), d, gamma, seed);
+
+    let mut sw = Stopwatch::new();
+    sw.start("expand");
+    let z_local = map.expand(ctx.engine, &x_local)?;
+    sw.stop();
+
+    let mut z_layout = layout.clone();
+    z_layout.cols = d;
+    Ok(TaskOutput {
+        matrices: vec![OutputMatrix {
+            name: "Z".into(),
+            layout: z_layout,
+            local: z_local,
+        }],
+        scalars: Params::new().with_i64("d", d as i64),
+        timings: vec![("expand".into(), sw.secs("expand"))],
+    })
+}
+
+fn cg_solve_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let x_id = params.matrix("X")?;
+    let y_id = params.matrix("Y")?;
+    let opts = CgOptions {
+        lambda: params.f64_or("lambda", 1e-5)?,
+        tol: params.f64_or("tol", 1e-8)?,
+        max_iters: params.i64_or("max_iters", 500)? as usize,
+    };
+    let rff_d = params.i64_or("rff_d", 0)? as usize;
+
+    let (x_layout, mut x_local) = ctx.local_block(x_id)?;
+    let (y_layout, y_local) = ctx.local_block(y_id)?;
+    anyhow::ensure!(
+        x_layout.ranges == y_layout.ranges,
+        "X and Y must share their row distribution"
+    );
+
+    let mut sw = Stopwatch::new();
+    if rff_d > 0 {
+        // expand in place, like the paper: raw features in, CG on the
+        // expanded matrix, expanded data never crosses the network
+        let gamma = params.f64_or("rff_gamma", 1.0)?;
+        let seed = params.i64_or("rff_seed", 1)? as u64;
+        let map = RffMap::generate(x_local.cols(), rff_d, gamma, seed);
+        sw.start("expand");
+        x_local = map.expand(ctx.engine, &x_local)?;
+        sw.stop();
+    }
+
+    sw.start("compute");
+    let res = cg_solve(ctx.comm, ctx.engine, &x_local, &y_local, x_layout.rows, &opts)?;
+    sw.stop();
+
+    let (w_layout, w_local) =
+        distribute_replicated(&res.w, ctx.comm.size(), ctx.rank);
+    let scalars = Params::new()
+        .with_i64("iters", res.iters as i64)
+        .with_f64(
+            "final_residual",
+            res.residuals.last().copied().unwrap_or(0.0),
+        )
+        .set("iter_secs", Value::F64s(res.iter_secs.clone()))
+        .set("residuals", Value::F64s(res.residuals.clone()));
+    Ok(TaskOutput {
+        matrices: vec![OutputMatrix {
+            name: "W".into(),
+            layout: w_layout,
+            local: w_local,
+        }],
+        scalars,
+        timings: vec![
+            ("expand".into(), sw.secs("expand")),
+            ("compute".into(), sw.secs("compute")),
+        ],
+    })
+}

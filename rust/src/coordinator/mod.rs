@@ -1,0 +1,26 @@
+//! The Alchemist server — the paper's system contribution (§3.1).
+//!
+//! One driver + `w` workers. The driver owns the control socket (sessions,
+//! matrix handles, task dispatch); each worker owns a data socket (row
+//! push/pull), a rank in the worker [`crate::collectives`] group, a matrix
+//! [`store`], and a [`crate::compute::Engine`] built on its own thread.
+//! Tasks are SPMD: the driver broadcasts a `RunTask` to every worker
+//! thread, each runs the same [`registry::Library`] routine against its
+//! local blocks, collectives stitch them together, and rank 0's metadata
+//! becomes the reply.
+//!
+//! Differences from the paper, all documented in DESIGN.md §2: workers are
+//! threads in the server process rather than MPI ranks across nodes (the
+//! transfer path is still real TCP); libraries are compiled in and
+//! resolved through the same `registerLibrary(name, path)` API instead of
+//! `dlopen`.
+
+pub mod libs;
+pub mod registry;
+pub mod server;
+pub mod store;
+pub mod worker;
+
+pub use registry::{Library, Registry, TaskOutput, WorkerCtx};
+pub use server::{AlchemistServer, ServerHandle};
+pub use store::{Block, MatrixStore};

@@ -1,0 +1,141 @@
+//! Library registry + the SPMD library interface — the Alchemist-Library
+//! Interface of paper §3.1.3.
+//!
+//! The paper loads ALIs as shared objects with `dlopen`; here the same
+//! registration API (`registerLibrary(name, path)`) resolves `builtin:`
+//! paths to compiled-in libraries (DESIGN.md §2 records the substitution —
+//! the *interface* is what the system contribution is, not the linker
+//! mechanics).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::collectives::Communicator;
+use crate::compute::Engine;
+use crate::config::Config;
+use crate::distmat::{LocalMatrix, RowBlockLayout};
+use crate::protocol::Params;
+
+use super::store::MatrixStore;
+
+/// Everything a routine sees on one worker rank.
+pub struct WorkerCtx<'a> {
+    pub rank: usize,
+    pub comm: &'a dyn Communicator,
+    pub engine: &'a mut dyn Engine,
+    pub store: &'a Mutex<MatrixStore>,
+    pub config: &'a Config,
+}
+
+impl WorkerCtx<'_> {
+    /// Fetch this rank's sealed block of matrix `id` (cloned out of the
+    /// store so routines never hold the lock during compute).
+    pub fn local_block(&self, id: u64) -> crate::Result<(RowBlockLayout, LocalMatrix)> {
+        let store = self.store.lock().unwrap();
+        let block = store.get(id)?;
+        anyhow::ensure!(block.sealed, "matrix {id} is not sealed yet");
+        Ok((block.layout.clone(), block.local.clone()))
+    }
+}
+
+/// One output matrix of a routine: this rank's block plus the layout
+/// every rank agrees on.
+pub struct OutputMatrix {
+    pub name: String,
+    pub layout: RowBlockLayout,
+    pub local: LocalMatrix,
+}
+
+/// What a routine returns on each rank. Output order must be identical on
+/// every rank (ids are assigned as `out_base + position`).
+#[derive(Default)]
+pub struct TaskOutput {
+    pub matrices: Vec<OutputMatrix>,
+    /// Scalar results; rank 0's values are reported to the client.
+    pub scalars: Params,
+    /// Named timing laps (rank-local; the driver aggregates).
+    pub timings: Vec<(String, f64)>,
+}
+
+/// An MPI-style library: `run` executes SPMD on every worker rank.
+pub trait Library: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Routine names this library exposes (for error messages / listing).
+    fn routines(&self) -> Vec<&'static str>;
+    fn run(
+        &self,
+        routine: &str,
+        params: &Params,
+        ctx: &mut WorkerCtx,
+    ) -> crate::Result<TaskOutput>;
+}
+
+/// name → library map shared by driver and workers.
+#[derive(Default)]
+pub struct Registry {
+    libs: Mutex<HashMap<String, Arc<dyn Library>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve `path` and register under `name`. Supported paths:
+    /// `builtin:skylark`, `builtin:elemental`.
+    pub fn register(&self, name: &str, path: &str) -> crate::Result<()> {
+        let lib: Arc<dyn Library> = match path {
+            "builtin:skylark" => Arc::new(super::libs::skylark::Skylark),
+            "builtin:elemental" => Arc::new(super::libs::elemental::Elemental),
+            other => anyhow::bail!(
+                "cannot load library {name:?} from {other:?}: this build \
+                 resolves `builtin:` libraries only (see DESIGN.md §2, \
+                 dynamic-.so substitution)"
+            ),
+        };
+        self.libs.lock().unwrap().insert(name.to_string(), lib);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<Arc<dyn Library>> {
+        self.libs
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow::anyhow!("library {name:?} is not registered (call registerLibrary first)")
+            })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.libs.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registration_and_lookup() {
+        let r = Registry::new();
+        assert!(r.get("skylark").is_err());
+        r.register("skylark", "builtin:skylark").unwrap();
+        r.register("elemental", "builtin:elemental").unwrap();
+        let lib = r.get("skylark").unwrap();
+        assert_eq!(lib.name(), "skylark");
+        assert!(lib.routines().contains(&"cg_solve"));
+        assert_eq!(r.names(), vec!["elemental", "skylark"]);
+    }
+
+    #[test]
+    fn non_builtin_path_rejected() {
+        let r = Registry::new();
+        let err = r.register("x", "/usr/lib/libfoo.so").unwrap_err();
+        assert!(err.to_string().contains("builtin"), "{err}");
+    }
+}

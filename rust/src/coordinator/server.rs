@@ -1,0 +1,407 @@
+//! The Alchemist driver: control-socket sessions, matrix handles, SPMD
+//! task dispatch (paper §3.1.1).
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::collectives::LocalComm;
+use crate::config::Config;
+use crate::distmat::RowBlockLayout;
+use crate::net::{Framed, Server};
+use crate::protocol::{ControlMsg, MatrixInfo, Params, PROTOCOL_VERSION};
+
+use super::registry::Registry;
+use super::worker::{alloc_all, handle_data_conn, worker_main, WorkerCmd, WorkerShared};
+
+/// Driver-side record of a live distributed matrix.
+#[derive(Debug, Clone)]
+struct HandleMeta {
+    info: MatrixInfo,
+    layout: RowBlockLayout,
+}
+
+struct Driver {
+    #[allow(dead_code)] // kept for future per-session config introspection
+    cfg: Config,
+    workers: Vec<Arc<WorkerShared>>,
+    senders: Vec<mpsc::Sender<WorkerCmd>>,
+    registry: Registry,
+    next_id: AtomicU64,
+    next_session: AtomicU64,
+    handles: Mutex<HashMap<u64, HandleMeta>>,
+    /// One SPMD task at a time (the workers are a single MPI-style group).
+    task_lock: Mutex<()>,
+    stopping: AtomicBool,
+    /// Stop flags of every accept loop (control + per-worker data).
+    listener_stops: Mutex<Vec<Arc<AtomicBool>>>,
+    control_addr: Mutex<String>,
+}
+
+impl Driver {
+    /// Flip every stop flag, end the worker loops, and wake all accept
+    /// loops so their threads can exit.
+    fn stop_all(&self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for s in &self.senders {
+            let _ = s.send(WorkerCmd::Shutdown);
+        }
+        for flag in self.listener_stops.lock().unwrap().iter() {
+            flag.store(true, Ordering::SeqCst);
+        }
+        for addr in self.worker_addrs() {
+            let _ = TcpStream::connect(&addr);
+        }
+        let control = self.control_addr.lock().unwrap().clone();
+        if !control.is_empty() {
+            let _ = TcpStream::connect(&control);
+        }
+    }
+}
+
+impl Driver {
+    fn worker_addrs(&self) -> Vec<String> {
+        self.workers
+            .iter()
+            .map(|w| w.data_addr.lock().unwrap().clone())
+            .collect()
+    }
+
+    fn create_matrix(&self, name: &str, rows: u64, cols: u64) -> crate::Result<ControlMsg> {
+        anyhow::ensure!(rows > 0 && cols > 0, "matrix must be non-empty");
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let layout =
+            RowBlockLayout::even(rows as usize, cols as usize, self.workers.len());
+        alloc_all(&self.workers, id, name, &layout)?;
+        self.handles.lock().unwrap().insert(
+            id,
+            HandleMeta {
+                info: MatrixInfo { id, rows, cols, name: name.to_string() },
+                layout: layout.clone(),
+            },
+        );
+        Ok(ControlMsg::MatrixCreated { id, row_ranges: layout.to_wire() })
+    }
+
+    fn seal_matrix(&self, id: u64) -> crate::Result<ControlMsg> {
+        let meta = self.handle(id)?;
+        let mut received = 0;
+        for w in &self.workers {
+            received += w.store.lock().unwrap().seal(id)?;
+        }
+        anyhow::ensure!(
+            received == meta.info.rows,
+            "matrix {id}: sealed with {received} of {} rows",
+            meta.info.rows
+        );
+        Ok(ControlMsg::MatrixSealed { id, rows_received: received })
+    }
+
+    fn handle(&self, id: u64) -> crate::Result<HandleMeta> {
+        self.handles
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unknown matrix handle {id}"))
+    }
+
+    fn run_task(&self, lib_name: &str, routine: &str, params: &Params) -> crate::Result<ControlMsg> {
+        let lib = self.registry.get(lib_name)?;
+        let _guard = self.task_lock.lock().unwrap();
+        // reserve an id window for the routine's outputs
+        let out_base = self.next_id.fetch_add(64, Ordering::SeqCst);
+
+        let mut replies = Vec::new();
+        for sender in &self.senders {
+            let (tx, rx) = mpsc::channel();
+            sender
+                .send(WorkerCmd::RunTask {
+                    lib: lib.clone(),
+                    routine: routine.to_string(),
+                    params: params.clone(),
+                    out_base,
+                    reply: tx,
+                })
+                .map_err(|_| anyhow::anyhow!("worker thread is gone"))?;
+            replies.push(rx);
+        }
+        let results: Vec<super::worker::TaskReply> = {
+            let mut ok = Vec::new();
+            let mut first_err = None;
+            for rx in replies {
+                match rx.recv().map_err(|_| anyhow::anyhow!("worker died mid-task"))? {
+                    Ok(r) => ok.push(r),
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            ok
+        };
+
+        // consistency: every rank must report the same output set
+        let r0 = &results[0];
+        for r in &results[1..] {
+            anyhow::ensure!(
+                r.outputs.len() == r0.outputs.len(),
+                "ranks disagree on output count for {lib_name}.{routine}"
+            );
+        }
+        let mut outputs = Vec::new();
+        {
+            let mut handles = self.handles.lock().unwrap();
+            for meta in &r0.outputs {
+                let layout = self.workers[0]
+                    .store
+                    .lock()
+                    .unwrap()
+                    .get(meta.id)?
+                    .layout
+                    .clone();
+                let info = MatrixInfo {
+                    id: meta.id,
+                    rows: meta.rows,
+                    cols: meta.cols,
+                    name: meta.name.clone(),
+                };
+                handles.insert(meta.id, HandleMeta { info: info.clone(), layout });
+                outputs.push(info);
+            }
+        }
+
+        // timings: rank-0 laps + aggregated cluster metrics
+        let mut timings = r0.timings.clone();
+        let lap = |r: &super::worker::TaskReply, name: &str| -> f64 {
+            r.timings
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, s)| *s)
+                .unwrap_or(0.0)
+        };
+        let sim_secs = results
+            .iter()
+            .map(|r| lap(r, "cpu_busy") + lap(r, "comm_sim"))
+            .fold(0.0f64, f64::max);
+        timings.push(("sim_secs".into(), sim_secs));
+
+        Ok(ControlMsg::TaskDone { outputs, scalars: r0.scalars.clone(), timings })
+    }
+
+    fn fetch_matrix(&self, id: u64) -> crate::Result<ControlMsg> {
+        let meta = self.handle(id)?;
+        Ok(ControlMsg::FetchReady {
+            info: meta.info,
+            row_ranges: meta.layout.to_wire(),
+        })
+    }
+
+    fn free_matrix(&self, id: u64) -> crate::Result<ControlMsg> {
+        let existed = self.handles.lock().unwrap().remove(&id).is_some();
+        anyhow::ensure!(existed, "unknown matrix handle {id}");
+        for w in &self.workers {
+            w.store.lock().unwrap().free(id);
+        }
+        Ok(ControlMsg::Freed { id })
+    }
+
+    fn list_matrices(&self) -> ControlMsg {
+        let handles = self.handles.lock().unwrap();
+        let mut infos: Vec<MatrixInfo> =
+            handles.values().map(|m| m.info.clone()).collect();
+        infos.sort_by_key(|i| i.id);
+        ControlMsg::MatrixList { infos }
+    }
+}
+
+/// Handle to a running server; dropping does NOT stop it — call
+/// [`ServerHandle::shutdown`] (or send `ControlMsg::Shutdown` as a
+/// client).
+pub struct ServerHandle {
+    pub control_addr: String,
+    pub worker_addrs: Vec<String>,
+    threads: Vec<JoinHandle<()>>,
+    driver: Arc<Driver>,
+}
+
+impl ServerHandle {
+    /// Stop the server from the owning process (benches/tests).
+    pub fn shutdown(mut self) {
+        self.driver.stop_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Block until some client sends `ControlMsg::Shutdown` (the
+    /// `alchemist serve` foreground mode).
+    pub fn shutdown_on_request(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The Alchemist server factory.
+pub struct AlchemistServer;
+
+impl AlchemistServer {
+    /// Start a driver with `num_workers` worker ranks on ephemeral
+    /// localhost ports. Returns once all sockets are listening.
+    pub fn start(cfg: Config, num_workers: usize) -> crate::Result<ServerHandle> {
+        anyhow::ensure!(num_workers >= 1, "need at least one worker");
+        let mut threads = Vec::new();
+
+        // worker shared state + comm group
+        let comms = LocalComm::group(num_workers, Some(cfg.simnet.clone()));
+        let mut workers = Vec::new();
+        let mut senders = Vec::new();
+        let mut worker_addrs = Vec::new();
+        let mut listener_stops = Vec::new();
+
+        for (rank, comm) in comms.into_iter().enumerate() {
+            let shared = Arc::new(WorkerShared {
+                rank,
+                store: Mutex::new(super::store::MatrixStore::new(rank)),
+                data_addr: Mutex::new(String::new()),
+            });
+            // data listener
+            let listener = Server::bind(0)?;
+            *shared.data_addr.lock().unwrap() = listener.addr().to_string();
+            worker_addrs.push(listener.addr().to_string());
+            listener_stops.push(listener.stop_flag());
+            {
+                let shared = shared.clone();
+                let cfg = cfg.clone();
+                threads.push(std::thread::spawn(move || {
+                    let shared2 = shared.clone();
+                    let _ = listener.serve(move |stream| {
+                        handle_data_conn(&shared2, stream, &cfg);
+                    });
+                }));
+            }
+            // command loop
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            {
+                let shared = shared.clone();
+                let cfg = cfg.clone();
+                threads.push(std::thread::spawn(move || {
+                    worker_main(shared, comm, cfg, rx);
+                }));
+            }
+            workers.push(shared);
+        }
+
+        let control = Server::bind(0)?;
+        let control_addr = control.addr().to_string();
+        listener_stops.push(control.stop_flag());
+        let driver = Arc::new(Driver {
+            cfg: cfg.clone(),
+            workers,
+            senders,
+            registry: Registry::new(),
+            next_id: AtomicU64::new(1),
+            next_session: AtomicU64::new(1),
+            handles: Mutex::new(HashMap::new()),
+            task_lock: Mutex::new(()),
+            stopping: AtomicBool::new(false),
+            listener_stops: Mutex::new(listener_stops),
+            control_addr: Mutex::new(control_addr.clone()),
+        });
+
+        {
+            let driver = driver.clone();
+            let buf = cfg.transfer.buf_bytes;
+            threads.push(std::thread::spawn(move || {
+                let _ = control.serve(move |stream| {
+                    handle_control_conn(&driver, stream, buf);
+                });
+            }));
+        }
+
+        log::info!(
+            "alchemist server up: control {control_addr}, {num_workers} workers, engine {}",
+            cfg.engine.as_str()
+        );
+        Ok(ServerHandle {
+            control_addr,
+            worker_addrs: driver.worker_addrs(),
+            threads,
+            driver,
+        })
+    }
+}
+
+fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize) {
+    if driver.stopping.load(Ordering::SeqCst) {
+        return; // wake-up connection during shutdown
+    }
+    let mut framed = match Framed::tcp(stream, buf_bytes) {
+        Ok(f) => f,
+        Err(e) => {
+            log::warn!("control conn setup failed: {e}");
+            return;
+        }
+    };
+    loop {
+        let msg = match framed.recv_ctrl() {
+            Ok(m) => m,
+            Err(_) => return, // client went away
+        };
+        let reply = match msg {
+            ControlMsg::Handshake { client_name, version } => {
+                if version != PROTOCOL_VERSION {
+                    Ok(ControlMsg::Error {
+                        message: format!(
+                            "protocol version mismatch: client {version}, server {PROTOCOL_VERSION}"
+                        ),
+                    })
+                } else {
+                    let session_id =
+                        driver.next_session.fetch_add(1, Ordering::SeqCst);
+                    log::info!("session {session_id}: client {client_name:?} connected");
+                    Ok(ControlMsg::HandshakeAck {
+                        session_id,
+                        version: PROTOCOL_VERSION,
+                        worker_addrs: driver.worker_addrs(),
+                    })
+                }
+            }
+            ControlMsg::RegisterLibrary { name, path } => driver
+                .registry
+                .register(&name, &path)
+                .map(|()| ControlMsg::LibraryRegistered { name }),
+            ControlMsg::CreateMatrix { name, rows, cols } => {
+                driver.create_matrix(&name, rows, cols)
+            }
+            ControlMsg::SealMatrix { id } => driver.seal_matrix(id),
+            ControlMsg::RunTask { lib, routine, params } => {
+                driver.run_task(&lib, &routine, &params)
+            }
+            ControlMsg::FetchMatrix { id } => driver.fetch_matrix(id),
+            ControlMsg::FreeMatrix { id } => driver.free_matrix(id),
+            ControlMsg::ListMatrices => Ok(driver.list_matrices()),
+            ControlMsg::Shutdown => {
+                driver.stop_all();
+                let _ = framed.send_ctrl(&ControlMsg::Bye);
+                return;
+            }
+            other => Ok(ControlMsg::Error {
+                message: format!("unexpected control message: {other:?}"),
+            }),
+        };
+        let out = match reply {
+            Ok(m) => m,
+            Err(e) => ControlMsg::Error { message: format!("{e:#}") },
+        };
+        if framed.send_ctrl(&out).is_err() {
+            return;
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Per-worker matrix storage: each worker rank holds its row-block of
+//! every live distributed matrix (the server-side half of the `AlMatrix`
+//! proxy scheme — data stays put between routines; only handles travel).
+
+use std::collections::HashMap;
+
+use crate::distmat::{LocalMatrix, RowBlockLayout};
+
+/// One worker's block of a distributed matrix.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub layout: RowBlockLayout,
+    /// This rank's rows (`layout.ranges[rank]`).
+    pub local: LocalMatrix,
+    /// Rows received so far during ingest (sealing checks the total).
+    pub rows_received: u64,
+    pub sealed: bool,
+    pub name: String,
+}
+
+/// Matrix-id → block map for one worker rank.
+#[derive(Debug, Default)]
+pub struct MatrixStore {
+    rank: usize,
+    blocks: HashMap<u64, Block>,
+}
+
+impl MatrixStore {
+    pub fn new(rank: usize) -> Self {
+        MatrixStore { rank, blocks: HashMap::new() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Allocate a zeroed, unsealed block for ingest.
+    pub fn alloc(&mut self, id: u64, name: &str, layout: RowBlockLayout) -> crate::Result<()> {
+        anyhow::ensure!(
+            !self.blocks.contains_key(&id),
+            "matrix id {id} already exists on rank {}",
+            self.rank
+        );
+        let (a, b) = layout.ranges[self.rank];
+        let local = LocalMatrix::zeros(b - a, layout.cols);
+        self.blocks.insert(
+            id,
+            Block { layout, local, rows_received: 0, sealed: false, name: name.to_string() },
+        );
+        Ok(())
+    }
+
+    /// Insert a fully-formed (already computed) block — routine outputs.
+    pub fn insert(
+        &mut self,
+        id: u64,
+        name: &str,
+        layout: RowBlockLayout,
+        local: LocalMatrix,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            !self.blocks.contains_key(&id),
+            "matrix id {id} already exists on rank {}",
+            self.rank
+        );
+        let (a, b) = layout.ranges[self.rank];
+        anyhow::ensure!(
+            local.rows() == b - a && local.cols() == layout.cols,
+            "block shape {}x{} does not match layout slot {}x{} on rank {}",
+            local.rows(),
+            local.cols(),
+            b - a,
+            layout.cols,
+            self.rank
+        );
+        let rows = local.rows() as u64;
+        self.blocks.insert(
+            id,
+            Block { layout, local, rows_received: rows, sealed: true, name: name.to_string() },
+        );
+        Ok(())
+    }
+
+    /// Write incoming rows (global indices) into an unsealed block.
+    pub fn write_rows(
+        &mut self,
+        id: u64,
+        start_row: u64,
+        ncols: usize,
+        data: &[f64],
+    ) -> crate::Result<()> {
+        let block = self
+            .blocks
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("matrix {id} not found on rank {}", self.rank))?;
+        anyhow::ensure!(!block.sealed, "matrix {id} is sealed");
+        anyhow::ensure!(
+            ncols == block.layout.cols,
+            "row width {ncols} != matrix cols {}",
+            block.layout.cols
+        );
+        anyhow::ensure!(data.len() % ncols == 0, "ragged row payload");
+        let nrows = data.len() / ncols;
+        let (lo, hi) = block.layout.ranges[self.rank];
+        let start = start_row as usize;
+        anyhow::ensure!(
+            start >= lo && start + nrows <= hi,
+            "rows [{start}, {}) outside rank {} range [{lo}, {hi})",
+            start + nrows,
+            self.rank
+        );
+        let local_start = start - lo;
+        block.local.data_mut()
+            [local_start * ncols..(local_start + nrows) * ncols]
+            .copy_from_slice(data);
+        block.rows_received += nrows as u64;
+        Ok(())
+    }
+
+    /// Read rows (global indices) out of a sealed block.
+    pub fn read_rows(&self, id: u64, start_row: u64, nrows: usize) -> crate::Result<Vec<f64>> {
+        let block = self.get(id)?;
+        anyhow::ensure!(
+            block.sealed,
+            "matrix {id} is still being ingested (not sealed)"
+        );
+        let (lo, hi) = block.layout.ranges[self.rank];
+        let start = start_row as usize;
+        anyhow::ensure!(
+            start >= lo && start + nrows <= hi,
+            "rows [{start}, {}) outside rank {} range [{lo}, {hi})",
+            start + nrows,
+            self.rank
+        );
+        let ncols = block.layout.cols;
+        let local_start = start - lo;
+        Ok(block.local.data()
+            [local_start * ncols..(local_start + nrows) * ncols]
+            .to_vec())
+    }
+
+    pub fn seal(&mut self, id: u64) -> crate::Result<u64> {
+        let block = self
+            .blocks
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("matrix {id} not found"))?;
+        block.sealed = true;
+        Ok(block.rows_received)
+    }
+
+    pub fn get(&self, id: u64) -> crate::Result<&Block> {
+        self.blocks
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("matrix {id} not found on rank {}", self.rank))
+    }
+
+    pub fn free(&mut self, id: u64) -> bool {
+        self.blocks.remove(&id).is_some()
+    }
+
+    pub fn ids(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.blocks.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout2() -> RowBlockLayout {
+        RowBlockLayout::even(10, 3, 2)
+    }
+
+    #[test]
+    fn ingest_flow() {
+        let mut s = MatrixStore::new(1); // owns rows [5, 10)
+        s.alloc(7, "X", layout2()).unwrap();
+        s.write_rows(7, 5, 3, &[1.0; 6]).unwrap(); // rows 5,6
+        s.write_rows(7, 7, 3, &[2.0; 9]).unwrap(); // rows 7,8,9
+        assert_eq!(s.seal(7).unwrap(), 5);
+        let b = s.get(7).unwrap();
+        assert_eq!(b.local.get(0, 0), 1.0);
+        assert_eq!(b.local.get(2, 2), 2.0);
+        // reads are in global coordinates
+        assert_eq!(s.read_rows(7, 9, 1).unwrap(), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn rejects_bad_writes() {
+        let mut s = MatrixStore::new(0); // owns rows [0, 5)
+        s.alloc(1, "X", layout2()).unwrap();
+        assert!(s.alloc(1, "X", layout2()).is_err()); // duplicate id
+        assert!(s.write_rows(1, 4, 3, &[0.0; 6]).is_err()); // crosses range end
+        assert!(s.write_rows(1, 0, 2, &[0.0; 2]).is_err()); // wrong width
+        assert!(s.write_rows(2, 0, 3, &[0.0; 3]).is_err()); // unknown id
+        s.seal(1).unwrap();
+        assert!(s.write_rows(1, 0, 3, &[0.0; 3]).is_err()); // sealed
+        assert!(s.read_rows(1, 4, 2).is_err()); // read crosses range
+    }
+
+    #[test]
+    fn insert_checks_shape() {
+        let mut s = MatrixStore::new(0);
+        let l = layout2();
+        assert!(s.insert(3, "W", l.clone(), LocalMatrix::zeros(4, 3)).is_err());
+        s.insert(3, "W", l, LocalMatrix::zeros(5, 3)).unwrap();
+        assert!(s.get(3).unwrap().sealed);
+        assert!(s.free(3));
+        assert!(!s.free(3));
+    }
+}

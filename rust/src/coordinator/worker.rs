@@ -1,0 +1,209 @@
+//! Alchemist worker: one rank of the SPMD group.
+//!
+//! Each worker owns (a) a slot in the shared matrix-store array — written
+//! by its data-socket threads during ingest, read by routines during
+//! compute — and (b) a command loop thread that executes library routines
+//! with this rank's communicator endpoint and compute engine. The engine
+//! is built lazily *on the worker thread* (PJRT handles are not `Send`).
+
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::collectives::{Communicator, LocalComm};
+use crate::compute::{build_engine, Engine};
+use crate::config::Config;
+use crate::distmat::RowBlockLayout;
+use crate::net::Framed;
+use crate::protocol::{DataMsg, Params};
+use crate::util::timer::thread_cpu_secs;
+
+use super::registry::{Library, WorkerCtx};
+use super::store::MatrixStore;
+
+/// State shared between the worker thread, its data-socket threads, and
+/// the driver (which allocates/seals/frees blocks directly).
+pub struct WorkerShared {
+    pub rank: usize,
+    pub store: Mutex<MatrixStore>,
+    /// `host:port` of this worker's data listener.
+    pub data_addr: Mutex<String>,
+}
+
+/// Output metadata a rank reports back to the driver after a task (the
+/// blocks themselves are already in the store).
+#[derive(Debug, Clone)]
+pub struct OutputMeta {
+    pub id: u64,
+    pub name: String,
+    pub rows: u64,
+    pub cols: u64,
+}
+
+/// A completed task on one rank.
+pub struct TaskReply {
+    pub outputs: Vec<OutputMeta>,
+    pub scalars: Params,
+    /// Library timing laps + `cpu_busy` + `comm_sim` added by the loop.
+    pub timings: Vec<(String, f64)>,
+}
+
+/// Commands the driver sends to a worker thread.
+pub enum WorkerCmd {
+    RunTask {
+        lib: Arc<dyn Library>,
+        routine: String,
+        params: Params,
+        /// Output matrix `i` is stored under id `out_base + i`.
+        out_base: u64,
+        reply: mpsc::Sender<crate::Result<TaskReply>>,
+    },
+    Shutdown,
+}
+
+/// The worker command loop. Runs until `Shutdown`.
+pub fn worker_main(
+    shared: Arc<WorkerShared>,
+    comm: LocalComm,
+    cfg: Config,
+    rx: mpsc::Receiver<WorkerCmd>,
+) {
+    let rank = shared.rank;
+    let mut engine: Option<Box<dyn Engine>> = None;
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            WorkerCmd::Shutdown => break,
+            WorkerCmd::RunTask { lib, routine, params, out_base, reply } => {
+                let result = (|| -> crate::Result<TaskReply> {
+                    if engine.is_none() {
+                        engine = Some(build_engine(&cfg)?);
+                    }
+                    let engine = engine.as_mut().unwrap();
+                    let cpu0 = thread_cpu_secs();
+                    let sim0 = comm.sim_comm_secs();
+                    let mut ctx = WorkerCtx {
+                        rank,
+                        comm: &comm,
+                        engine: engine.as_mut(),
+                        store: &shared.store,
+                        config: &cfg,
+                    };
+                    let out = lib.run(&routine, &params, &mut ctx)?;
+                    let cpu_busy = (thread_cpu_secs() - cpu0).max(0.0);
+                    let comm_sim = comm.sim_comm_secs() - sim0;
+
+                    let mut metas = Vec::with_capacity(out.matrices.len());
+                    let mut store = shared.store.lock().unwrap();
+                    for (i, m) in out.matrices.into_iter().enumerate() {
+                        let id = out_base + i as u64;
+                        metas.push(OutputMeta {
+                            id,
+                            name: m.name.clone(),
+                            rows: m.layout.rows as u64,
+                            cols: m.layout.cols as u64,
+                        });
+                        store.insert(id, &m.name, m.layout, m.local)?;
+                    }
+                    let mut timings = out.timings;
+                    timings.push(("cpu_busy".into(), cpu_busy));
+                    timings.push(("comm_sim".into(), comm_sim));
+                    Ok(TaskReply { outputs: metas, scalars: out.scalars, timings })
+                })();
+                let failed = result.is_err();
+                let _ = reply.send(result);
+                if failed {
+                    log::warn!("rank {rank}: task {routine} failed");
+                }
+            }
+        }
+    }
+    log::debug!("worker {rank} exiting");
+}
+
+/// Handle one executor's data connection (runs on its own thread; several
+/// executors can stream to the same worker concurrently — the paper's
+/// asynchronous many-to-many transfer pattern).
+pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) {
+    let mut framed = match Framed::tcp(stream, cfg.transfer.buf_bytes) {
+        Ok(f) => f,
+        Err(e) => {
+            log::warn!("rank {}: data conn setup failed: {e}", shared.rank);
+            return;
+        }
+    };
+    loop {
+        let msg = match framed.recv_data() {
+            Ok(m) => m,
+            Err(_) => return, // peer closed
+        };
+        let reply = match msg {
+            DataMsg::DataHandshake { .. } => {
+                Some(DataMsg::DataHandshakeAck { worker_rank: shared.rank as u32 })
+            }
+            DataMsg::PushRows { matrix_id, start_row, ncols, data, .. } => {
+                let res = shared.store.lock().unwrap().write_rows(
+                    matrix_id,
+                    start_row,
+                    ncols as usize,
+                    &data,
+                );
+                match res {
+                    Ok(()) => None, // streaming: acks only at PushDone
+                    Err(e) => Some(DataMsg::DataError { message: e.to_string() }),
+                }
+            }
+            DataMsg::PushDone { matrix_id } => {
+                let store = shared.store.lock().unwrap();
+                match store.get(matrix_id) {
+                    Ok(block) => Some(DataMsg::PushDoneAck {
+                        matrix_id,
+                        rows_received: block.rows_received,
+                    }),
+                    Err(e) => Some(DataMsg::DataError { message: e.to_string() }),
+                }
+            }
+            DataMsg::PullRows { matrix_id, start_row, nrows } => {
+                let res = shared
+                    .store
+                    .lock()
+                    .unwrap()
+                    .read_rows(matrix_id, start_row, nrows as usize);
+                match res {
+                    Ok(data) => {
+                        let ncols = data.len() / (nrows as usize).max(1);
+                        Some(DataMsg::RowsData {
+                            matrix_id,
+                            start_row,
+                            nrows,
+                            ncols: ncols as u32,
+                            data,
+                        })
+                    }
+                    Err(e) => Some(DataMsg::DataError { message: e.to_string() }),
+                }
+            }
+            DataMsg::DataBye => return,
+            other => Some(DataMsg::DataError {
+                message: format!("unexpected message on data socket: {other:?}"),
+            }),
+        };
+        if let Some(reply) = reply {
+            if framed.send_data_flush(&reply).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Driver-side helper: allocate a matrix for ingest across all workers.
+pub fn alloc_all(
+    workers: &[Arc<WorkerShared>],
+    id: u64,
+    name: &str,
+    layout: &RowBlockLayout,
+) -> crate::Result<()> {
+    for w in workers {
+        w.store.lock().unwrap().alloc(id, name, layout.clone())?;
+    }
+    Ok(())
+}

@@ -1,0 +1,396 @@
+//! Dense row-major f64 matrix with a blocked native GEMM.
+//!
+//! This is the local-block storage for [`super::DistShard`] and the compute
+//! floor for the engine ablation: `compute::NativeEngine` calls the blocked
+//! kernels here, while the XLA/Pallas engines only use this type as a
+//! container. The GEMM blocks for L1/L2 locality and keeps the innermost
+//! loop a contiguous `f64` FMA chain the compiler can vectorize.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LocalMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+/// Cache block edge for the native GEMM (tuned in the perf pass; see
+/// EXPERIMENTS.md §Perf).
+const MC: usize = 64;
+
+impl LocalMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        LocalMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_data(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        LocalMatrix { rows, cols, data }
+    }
+
+    /// Build from a row-generating closure.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        LocalMatrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Rows `[a, b)` as a new matrix.
+    pub fn slice_rows(&self, a: usize, b: usize) -> LocalMatrix {
+        assert!(a <= b && b <= self.rows);
+        LocalMatrix {
+            rows: b - a,
+            cols: self.cols,
+            data: self.data[a * self.cols..b * self.cols].to_vec(),
+        }
+    }
+
+    /// Copy `src` into rows starting at `at`.
+    pub fn write_rows(&mut self, at: usize, src: &LocalMatrix) {
+        assert_eq!(src.cols, self.cols);
+        assert!(at + src.rows <= self.rows);
+        self.data[at * self.cols..(at + src.rows) * self.cols]
+            .copy_from_slice(&src.data);
+    }
+
+    /// Columns `[a, b)` as a new matrix.
+    pub fn slice_cols(&self, a: usize, b: usize) -> LocalMatrix {
+        assert!(a <= b && b <= self.cols);
+        let mut out = LocalMatrix::zeros(self.rows, b - a);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[a..b]);
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> LocalMatrix {
+        let mut out = LocalMatrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Pad to `(rows, cols)` with zeros (no-op if already that size).
+    pub fn padded(&self, rows: usize, cols: usize) -> LocalMatrix {
+        assert!(rows >= self.rows && cols >= self.cols);
+        if rows == self.rows && cols == self.cols {
+            return self.clone();
+        }
+        let mut out = LocalMatrix::zeros(rows, cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Top-left `(rows, cols)` corner (inverse of [`padded`]).
+    pub fn shrunk(&self, rows: usize, cols: usize) -> LocalMatrix {
+        assert!(rows <= self.rows && cols <= self.cols);
+        if rows == self.rows && cols == self.cols {
+            return self.clone();
+        }
+        let mut out = LocalMatrix::zeros(rows, cols);
+        for i in 0..rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..cols]);
+        }
+        out
+    }
+
+    /// `[A A ... A]` — column-wise tiling (Figure 3 construction).
+    pub fn tile_cols(&self, times: usize) -> LocalMatrix {
+        assert!(times >= 1);
+        let mut out = LocalMatrix::zeros(self.rows, self.cols * times);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for t in 0..times {
+                dst[t * self.cols..(t + 1) * self.cols].copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    pub fn fro_sq(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.fro_sq().sqrt()
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &LocalMatrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Per-column dot products: `out[j] = Σ_i a[i,j]·b[i,j]` (block-CG
+    /// needs one inner product per right-hand side).
+    pub fn col_dots(&self, other: &LocalMatrix) -> Vec<f64> {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let (ra, rb) = (self.row(i), other.row(i));
+            for j in 0..self.cols {
+                out[j] += ra[j] * rb[j];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &LocalMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    // ---- blocked native GEMM: C += op(A)·op(B) ----
+
+    /// `self += a · b` (a: m×k, b: k×n, self: m×n).
+    pub fn gemm_nn(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
+        assert_eq!(a.cols, b.rows);
+        assert_eq!((self.rows, self.cols), (a.rows, b.cols));
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        // i-k-j loop with row-major B keeps the inner loop contiguous.
+        for i0 in (0..m).step_by(MC) {
+            let i1 = (i0 + MC).min(m);
+            for k0 in (0..k).step_by(MC) {
+                let k1 = (k0 + MC).min(k);
+                for i in i0..i1 {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut self.data[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kk * n..(kk + 1) * n];
+                        for j in 0..n {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `self += aᵀ · b` (a stored k×m, b: k×n, self: m×n).
+    pub fn gemm_tn(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
+        assert_eq!(a.rows, b.rows);
+        assert_eq!((self.rows, self.cols), (a.cols, b.cols));
+        let (m, n, k) = (a.cols, b.cols, a.rows);
+        for k0 in (0..k).step_by(MC) {
+            let k1 = (k0 + MC).min(k);
+            for kk in k0..k1 {
+                let arow = &a.data[kk * m..(kk + 1) * m];
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for i in 0..m {
+                    let aki = arow[i];
+                    if aki == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut self.data[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aki * brow[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// `self += a · bᵀ` (a: m×k, b stored n×k, self: m×n).
+    pub fn gemm_nt(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
+        assert_eq!(a.cols, b.cols);
+        assert_eq!((self.rows, self.cols), (a.rows, b.rows));
+        let (m, n, k) = (a.rows, b.rows, a.cols);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut self.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                crow[j] += acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> LocalMatrix {
+        LocalMatrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    /// Naive reference product.
+    fn gemm_ref(a: &LocalMatrix, b: &LocalMatrix) -> LocalMatrix {
+        let mut c = LocalMatrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_variants_match_reference() {
+        let mut rng = Rng::new(1);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 7, 3), (33, 17, 65), (128, 64, 70)] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            let want = gemm_ref(&a, &b);
+
+            let mut c = LocalMatrix::zeros(m, n);
+            c.gemm_nn(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-10, "nn {m}x{n}x{k}");
+
+            let mut c = LocalMatrix::zeros(m, n);
+            c.gemm_tn(&a.transpose(), &b);
+            assert!(c.max_abs_diff(&want) < 1e-10, "tn {m}x{n}x{k}");
+
+            let mut c = LocalMatrix::zeros(m, n);
+            c.gemm_nt(&a, &b.transpose());
+            assert!(c.max_abs_diff(&want) < 1e-10, "nt {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        let mut rng = Rng::new(2);
+        let a = random(&mut rng, 4, 4);
+        let b = random(&mut rng, 4, 4);
+        let seed = random(&mut rng, 4, 4);
+        let mut c = seed.clone();
+        c.gemm_nn(&a, &b);
+        let mut want = gemm_ref(&a, &b);
+        want.axpy(1.0, &seed);
+        assert!(c.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn pad_shrink_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = random(&mut rng, 5, 7);
+        let p = a.padded(8, 16);
+        assert_eq!(p.rows(), 8);
+        assert_eq!(p.fro_sq(), a.fro_sq()); // zero padding adds nothing
+        assert_eq!(p.shrunk(5, 7), a);
+    }
+
+    #[test]
+    fn slice_write_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = random(&mut rng, 6, 3);
+        let s = a.slice_rows(2, 5);
+        let mut b = LocalMatrix::zeros(6, 3);
+        b.write_rows(2, &s);
+        assert_eq!(b.slice_rows(2, 5), s);
+        assert_eq!(b.row(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn transpose_involution_and_slice_cols() {
+        let mut rng = Rng::new(5);
+        let a = random(&mut rng, 4, 9);
+        assert_eq!(a.transpose().transpose(), a);
+        let c = a.slice_cols(2, 5);
+        for i in 0..4 {
+            for j in 0..3 {
+                assert_eq!(c.get(i, j), a.get(i, j + 2));
+            }
+        }
+    }
+
+    #[test]
+    fn col_dots_matches_naive() {
+        let mut rng = Rng::new(6);
+        let a = random(&mut rng, 10, 4);
+        let b = random(&mut rng, 10, 4);
+        let got = a.col_dots(&b);
+        for j in 0..4 {
+            let want: f64 = (0..10).map(|i| a.get(i, j) * b.get(i, j)).sum();
+            assert!((got[j] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_is_gemm_neutral() {
+        let mut rng = Rng::new(7);
+        let a = random(&mut rng, 6, 6);
+        let mut c = LocalMatrix::zeros(6, 6);
+        c.gemm_nn(&a, &LocalMatrix::identity(6));
+        assert!(c.max_abs_diff(&a) < 1e-14);
+    }
+}

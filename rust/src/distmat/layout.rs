@@ -1,0 +1,121 @@
+//! 1-D row-block layout: who owns which global rows.
+
+use crate::util::even_ranges;
+
+/// Row-block distribution of an `rows × cols` matrix over `ranges.len()`
+/// workers; `ranges[r] = [start, end)` in global row indices, contiguous
+/// and covering `0..rows` exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowBlockLayout {
+    pub rows: usize,
+    pub cols: usize,
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl RowBlockLayout {
+    /// Even split (first `rows % workers` ranges get one extra row).
+    pub fn even(rows: usize, cols: usize, workers: usize) -> Self {
+        RowBlockLayout { rows, cols, ranges: even_ranges(rows, workers) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Which worker owns global row `i`.
+    pub fn owner_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.rows);
+        // ranges are sorted and contiguous: binary search on start
+        match self.ranges.binary_search_by(|&(a, b)| {
+            if i < a {
+                std::cmp::Ordering::Greater
+            } else if i >= b {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        }) {
+            Ok(r) => r,
+            Err(_) => unreachable!("row {i} not covered by layout"),
+        }
+    }
+
+    /// Number of local rows at `rank`.
+    pub fn local_rows(&self, rank: usize) -> usize {
+        let (a, b) = self.ranges[rank];
+        b - a
+    }
+
+    /// Validate invariants (contiguous cover of `0..rows`); used by
+    /// property tests and on deserialized layouts from the wire.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.ranges.is_empty(), "empty layout");
+        anyhow::ensure!(self.ranges[0].0 == 0, "layout must start at row 0");
+        for w in self.ranges.windows(2) {
+            anyhow::ensure!(
+                w[0].1 == w[1].0,
+                "layout ranges must be contiguous: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        anyhow::ensure!(
+            self.ranges.last().unwrap().1 == self.rows,
+            "layout must end at row count"
+        );
+        Ok(())
+    }
+
+    /// Wire form used in `MatrixCreated`/`FetchReady` messages.
+    pub fn to_wire(&self) -> Vec<(u64, u64)> {
+        self.ranges.iter().map(|&(a, b)| (a as u64, b as u64)).collect()
+    }
+
+    pub fn from_wire(rows: u64, cols: u64, ranges: &[(u64, u64)]) -> crate::Result<Self> {
+        let layout = RowBlockLayout {
+            rows: rows as usize,
+            cols: cols as usize,
+            ranges: ranges.iter().map(|&(a, b)| (a as usize, b as usize)).collect(),
+        };
+        layout.validate()?;
+        Ok(layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_layout_validates_and_owns() {
+        for rows in [1usize, 7, 100] {
+            for w in [1usize, 2, 3, 8] {
+                let l = RowBlockLayout::even(rows, 4, w);
+                l.validate().unwrap();
+                for i in 0..rows {
+                    let r = l.owner_of(i);
+                    let (a, b) = l.ranges[r];
+                    assert!(a <= i && i < b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let l = RowBlockLayout::even(17, 3, 4);
+        let back =
+            RowBlockLayout::from_wire(17, 3, &l.to_wire()).unwrap();
+        assert_eq!(l, back);
+    }
+
+    #[test]
+    fn invalid_layouts_rejected() {
+        let l = RowBlockLayout { rows: 4, cols: 1, ranges: vec![(0, 2), (3, 4)] };
+        assert!(l.validate().is_err());
+        let l2 = RowBlockLayout { rows: 4, cols: 1, ranges: vec![(1, 4)] };
+        assert!(l2.validate().is_err());
+        let l3 = RowBlockLayout { rows: 4, cols: 1, ranges: vec![(0, 3)] };
+        assert!(l3.validate().is_err());
+    }
+}

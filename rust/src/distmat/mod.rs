@@ -1,0 +1,93 @@
+//! The Elemental stand-in (DESIGN.md §2): dense distributed matrices.
+//!
+//! Alchemist stores incoming RDD rows in Elemental `DistMatrix`es; the
+//! paper's workloads only ever use dense, double-precision, row-partitioned
+//! matrices (`IndexedRowMatrix` on the Spark side), so the layout here is
+//! 1-D row-block: worker `r` owns the contiguous global row range
+//! `layout.ranges[r]`.
+
+pub mod dense;
+pub mod layout;
+
+pub use dense::LocalMatrix;
+pub use layout::RowBlockLayout;
+
+/// One worker's shard of a distributed matrix: the global layout plus the
+/// locally-owned row block. Cross-worker operations (Gram products, norms,
+/// redistribution) live in `linalg`/`coordinator` and use the collectives.
+#[derive(Debug, Clone)]
+pub struct DistShard {
+    pub layout: RowBlockLayout,
+    pub rank: usize,
+    /// The rows `layout.ranges[rank]`, dense row-major.
+    pub local: LocalMatrix,
+}
+
+impl DistShard {
+    pub fn new(layout: RowBlockLayout, rank: usize, local: LocalMatrix) -> Self {
+        let (a, b) = layout.ranges[rank];
+        assert_eq!(local.rows(), b - a, "local block height mismatch");
+        assert_eq!(local.cols(), layout.cols, "local block width mismatch");
+        DistShard { layout, rank, local }
+    }
+
+    /// Allocate an all-zeros shard for this rank.
+    pub fn zeros(layout: RowBlockLayout, rank: usize) -> Self {
+        let (a, b) = layout.ranges[rank];
+        let local = LocalMatrix::zeros(b - a, layout.cols);
+        DistShard { layout, rank, local }
+    }
+
+    /// Global row range `[start, end)` owned by this shard.
+    pub fn row_range(&self) -> (usize, usize) {
+        self.layout.ranges[self.rank]
+    }
+
+    /// Squared Frobenius norm of the local block (allreduce for global).
+    pub fn local_fro_sq(&self) -> f64 {
+        self.local.fro_sq()
+    }
+
+    /// Replicate the local block column-wise `times` (Figure 3's data-set
+    /// construction: the 2.2 TB ocean matrix replicated to 4.4/8.8/17.6 TB).
+    pub fn replicate_cols(&self, times: usize) -> DistShard {
+        let local = self.local.tile_cols(times);
+        let mut layout = self.layout.clone();
+        layout.cols *= times;
+        DistShard { layout, rank: self.rank, local }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_shape_checked() {
+        let layout = RowBlockLayout::even(10, 3, 2);
+        let shard = DistShard::zeros(layout.clone(), 0);
+        assert_eq!(shard.row_range(), (0, 5));
+        assert_eq!(shard.local.rows(), 5);
+        let shard1 = DistShard::zeros(layout, 1);
+        assert_eq!(shard1.row_range(), (5, 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "height mismatch")]
+    fn mismatched_block_rejected() {
+        let layout = RowBlockLayout::even(10, 3, 2);
+        let _ = DistShard::new(layout, 0, LocalMatrix::zeros(4, 3));
+    }
+
+    #[test]
+    fn replicate_cols_grows_layout() {
+        let layout = RowBlockLayout::even(4, 2, 2);
+        let mut shard = DistShard::zeros(layout, 0);
+        shard.local.set(0, 1, 7.0);
+        let rep = shard.replicate_cols(3);
+        assert_eq!(rep.layout.cols, 6);
+        assert_eq!(rep.local.get(0, 1), 7.0);
+        assert_eq!(rep.local.get(0, 3), 7.0);
+        assert_eq!(rep.local.get(0, 5), 7.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal binary matrix container — the HDF5 stand-in (DESIGN.md §2).
+//!
+//! The ocean experiments (Table 5 / Figure 3) compare loading the data in
+//! Spark vs. loading it directly in Alchemist from HDF5. What matters is
+//! the *path* (file → worker shards without a trip through the client);
+//! the format is a 40-byte header + row-major f64 payload, and workers can
+//! read their row ranges independently (`read_rows`), which is the
+//! parallel-read property the experiment leans on.
+//!
+//! Layout (all little-endian):
+//! `magic "ALCH5SIM" | version u32 | reserved u32 | rows u64 | cols u64 |
+//!  payload rows*cols*8 bytes`.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::distmat::LocalMatrix;
+
+const MAGIC: &[u8; 8] = b"ALCH5SIM";
+const VERSION: u32 = 1;
+const HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8;
+
+/// Write a matrix to `path`.
+pub fn write_matrix(path: &Path, m: &LocalMatrix) -> crate::Result<()> {
+    let file = File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::with_capacity(1 << 20, file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&0u32.to_le_bytes())?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    // Safety: f64 -> u8 view for bulk write.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(m.data().as_ptr() as *const u8, m.data().len() * 8)
+    };
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Matrix dimensions from the header.
+pub fn read_header(path: &Path) -> crate::Result<(usize, usize)> {
+    let file = File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("reading magic")?;
+    anyhow::ensure!(&magic == MAGIC, "{path:?} is not an ALCH5SIM file");
+    let mut u32buf = [0u8; 4];
+    r.read_exact(&mut u32buf)?;
+    anyhow::ensure!(
+        u32::from_le_bytes(u32buf) == VERSION,
+        "unsupported ALCH5SIM version"
+    );
+    r.read_exact(&mut u32buf)?; // reserved
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let rows = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let cols = u64::from_le_bytes(u64buf) as usize;
+    Ok((rows, cols))
+}
+
+/// Read rows `[start, end)` — workers call this concurrently with their
+/// own ranges (independent file handles, seek + sequential read).
+pub fn read_rows(path: &Path, start: usize, end: usize) -> crate::Result<LocalMatrix> {
+    let (rows, cols) = read_header(path)?;
+    anyhow::ensure!(start <= end && end <= rows, "row range out of bounds");
+    let mut file = File::open(path)?;
+    file.seek(SeekFrom::Start(HEADER_BYTES + (start * cols * 8) as u64))?;
+    let mut data = vec![0f64; (end - start) * cols];
+    // Safety: filling the f64 buffer through its byte view.
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, data.len() * 8)
+    };
+    let mut r = BufReader::with_capacity(1 << 20, file);
+    r.read_exact(bytes).context("reading row payload")?;
+    Ok(LocalMatrix::from_data(end - start, cols, data))
+}
+
+/// Read the whole matrix.
+pub fn read_matrix(path: &Path) -> crate::Result<LocalMatrix> {
+    let (rows, _) = read_header(path)?;
+    read_rows(path, 0, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alchemist-hdf5sim-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_and_ranged_reads() {
+        let mut rng = Rng::new(4);
+        let m = LocalMatrix::from_fn(37, 5, |_, _| rng.normal());
+        let path = tmp("roundtrip.bin");
+        write_matrix(&path, &m).unwrap();
+        assert_eq!(read_header(&path).unwrap(), (37, 5));
+        assert_eq!(read_matrix(&path).unwrap(), m);
+        assert_eq!(read_rows(&path, 10, 20).unwrap(), m.slice_rows(10, 20));
+        assert_eq!(read_rows(&path, 0, 0).unwrap().rows(), 0);
+    }
+
+    #[test]
+    fn concurrent_shard_reads_cover_matrix() {
+        let mut rng = Rng::new(5);
+        let m = LocalMatrix::from_fn(100, 3, |_, _| rng.normal());
+        let path = tmp("shards.bin");
+        write_matrix(&path, &m).unwrap();
+        let ranges = crate::util::even_ranges(100, 4);
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(a, b)| {
+                let p = path.clone();
+                std::thread::spawn(move || read_rows(&p, a, b).unwrap())
+            })
+            .collect();
+        let mut rebuilt = LocalMatrix::zeros(100, 3);
+        for (h, &(a, _)) in handles.into_iter().zip(&ranges) {
+            rebuilt.write_rows(a, &h.join().unwrap());
+        }
+        assert_eq!(rebuilt, m);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.bin");
+        std::fs::write(&path, b"definitely not a matrix").unwrap();
+        assert!(read_header(&path).is_err());
+        let path2 = tmp("missing-range.bin");
+        write_matrix(&path2, &LocalMatrix::zeros(3, 2)).unwrap();
+        assert!(read_rows(&path2, 2, 5).is_err());
+    }
+}

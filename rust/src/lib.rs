@@ -1,0 +1,47 @@
+//! # Alchemist (KDD 2018) — rust + JAX/Pallas reproduction
+//!
+//! Alchemist is an *offloading bridge*: a Spark-like host framework hands
+//! large dense matrices to an HPC-style server over TCP sockets, the server
+//! runs MPI-library-style distributed linear algebra on them (block CG,
+//! truncated SVD, QR, random-feature expansion), and ships results back as
+//! matrix handles the client can materialize on demand.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * substrates — [`util`], [`config`], [`metrics`], [`protocol`], [`net`],
+//!   [`collectives`] (the MPI stand-in), [`distmat`] (the Elemental
+//!   stand-in), [`sparklite`] (the Spark stand-in), [`hdf5sim`];
+//! * compute — [`compute`] engines backed by [`runtime`] (AOT-compiled
+//!   JAX/Pallas artifacts over PJRT) or a native blocked GEMM;
+//! * numerics — [`linalg`] (the libSkylark / ARPACK stand-ins);
+//! * the paper's system — [`coordinator`] (server, driver, workers, matrix
+//!   handles, library registry) and [`client`] (the Alchemist-Client
+//!   Interface of §3.1.2);
+//! * experiment support — [`workloads`], [`testkit`].
+//!
+//! See `DESIGN.md` for the substitution table (what the paper ran on Cori
+//! vs. what this repo builds) and the experiment index mapping Tables 1–5
+//! and Figure 3 to `rust/benches/`.
+
+pub mod cli;
+pub mod client;
+pub mod collectives;
+pub mod compute;
+pub mod config;
+pub mod coordinator;
+pub mod distmat;
+pub mod hdf5sim;
+pub mod linalg;
+pub mod logging;
+pub mod metrics;
+pub mod net;
+pub mod protocol;
+pub mod runtime;
+pub mod sparklite;
+pub mod testkit;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type (anyhow-backed; module-specific errors in
+/// [`protocol::ProtocolError`] etc. convert into it).
+pub type Result<T> = anyhow::Result<T>;

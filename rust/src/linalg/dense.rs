@@ -1,0 +1,111 @@
+//! Small dense factorizations (replicated on every rank): Cholesky,
+//! triangular solves, inverse via back-substitution. Used by CholeskyQR2
+//! and the SVD driver; sizes here are k×k with k ≲ a few hundred.
+
+use crate::distmat::LocalMatrix;
+
+/// Cholesky factorization `a = lᵀ·l` with `l` upper-triangular (returns
+/// `R` such that `a = Rᵀ R`). Errors on non-SPD input.
+pub fn cholesky_upper(a: &LocalMatrix) -> crate::Result<LocalMatrix> {
+    let n = a.rows();
+    anyhow::ensure!(a.cols() == n, "cholesky needs a square matrix");
+    let mut r = LocalMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let mut s = a.get(i, j);
+            for k in 0..i {
+                s -= r.get(k, i) * r.get(k, j);
+            }
+            if i == j {
+                // relative pivot threshold: near-singular Gram matrices
+                // (rank-deficient inputs) must fail loudly, not produce a
+                // garbage factor
+                let floor = 1e-12 * a.get(i, i).abs().max(1e-300);
+                anyhow::ensure!(
+                    s > floor,
+                    "matrix not positive definite at pivot {i} (s = {s:.3e})"
+                );
+                r.set(i, j, s.sqrt());
+            } else {
+                r.set(i, j, s / r.get(i, i));
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// Solve `x · r = b` for `x` where `r` is upper-triangular (right-solve;
+/// used for `Q = A·R⁻¹`). `b` is m×n, `r` is n×n.
+pub fn solve_right_upper(b: &LocalMatrix, r: &LocalMatrix) -> crate::Result<LocalMatrix> {
+    let n = r.rows();
+    anyhow::ensure!(r.cols() == n && b.cols() == n, "solve_right_upper shapes");
+    let mut x = b.clone();
+    for i in 0..b.rows() {
+        let row = x.row_mut(i);
+        for j in 0..n {
+            let mut s = row[j];
+            for k in 0..j {
+                s -= row[k] * r.get(k, j);
+            }
+            let d = r.get(j, j);
+            anyhow::ensure!(d != 0.0, "singular triangular factor at {j}");
+            row[j] = s / d;
+        }
+    }
+    Ok(x)
+}
+
+/// `a · b` convenience (native; these are replicated k×k products).
+pub fn matmul(a: &LocalMatrix, b: &LocalMatrix) -> LocalMatrix {
+    let mut c = LocalMatrix::zeros(a.rows(), b.cols());
+    c.gemm_nn(a, b);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> LocalMatrix {
+        let a = LocalMatrix::from_fn(n, n, |_, _| rng.normal());
+        let mut g = LocalMatrix::identity(n); // + I keeps it well-conditioned
+        g.gemm_tn(&a, &a);
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 5, 20] {
+            let g = spd(&mut rng, n);
+            let r = cholesky_upper(&g).unwrap();
+            // check Rᵀ R == G and upper-triangularity
+            let mut rtr = LocalMatrix::zeros(n, n);
+            rtr.gemm_tn(&r, &r);
+            assert!(rtr.max_abs_diff(&g) < 1e-8 * n as f64);
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(r.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = LocalMatrix::from_data(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(cholesky_upper(&a).is_err());
+    }
+
+    #[test]
+    fn right_solve_inverts() {
+        let mut rng = Rng::new(2);
+        let g = spd(&mut rng, 6);
+        let r = cholesky_upper(&g).unwrap();
+        let b = LocalMatrix::from_fn(4, 6, |_, _| rng.normal());
+        let x = solve_right_upper(&b, &r).unwrap();
+        let back = matmul(&x, &r);
+        assert!(back.max_abs_diff(&b) < 1e-9);
+    }
+}

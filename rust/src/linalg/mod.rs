@@ -1,0 +1,22 @@
+//! Distributed numerics: the libSkylark / ARPACK / Elemental-routine
+//! stand-ins (DESIGN.md §2).
+//!
+//! All solvers are SPMD: every worker rank calls the same function with
+//! its local row-block ([`crate::distmat::DistShard`]-style), a
+//! [`crate::collectives::Communicator`], and its own
+//! [`crate::compute::Engine`]. Small state (iterates, Lanczos vectors,
+//! Gram matrices) is replicated; only Gram-operator partial sums travel
+//! over the collectives — the same communication structure as the paper's
+//! MPI routines.
+
+pub mod cg;
+pub mod dense;
+pub mod lanczos;
+pub mod qr;
+pub mod rff;
+pub mod tridiag;
+
+pub use cg::{cg_solve, CgOptions, CgResult};
+pub use lanczos::{truncated_svd, SvdOptions, SvdResult};
+pub use qr::cholesky_qr2;
+pub use rff::RffMap;

@@ -1,0 +1,83 @@
+//! Random Fourier features (Rahimi–Recht) — the expansion the paper
+//! applies to TIMIT *inside Alchemist* (§4.1: shipping the raw 440-feature
+//! matrix and expanding server-side is far cheaper than transferring the
+//! expanded multi-TB matrix).
+//!
+//! For a Gaussian kernel of bandwidth γ: `z(x) = √(2/D)·cos(x·Ω + b)` with
+//! `Ω ~ N(0, γ²)` and `b ~ U[0, 2π)`. The map is generated deterministically
+//! from a seed so every worker rank (and the test oracle) materializes the
+//! identical Ω, b without communication.
+
+use crate::compute::Engine;
+use crate::distmat::LocalMatrix;
+use crate::util::prng::Rng;
+
+/// A materialized random-feature map `k0 → d`.
+pub struct RffMap {
+    pub omega: LocalMatrix,
+    pub bias: Vec<f64>,
+    pub scale: f64,
+}
+
+impl RffMap {
+    /// Deterministically generate the map (same seed ⇒ same map on every
+    /// rank).
+    pub fn generate(k0: usize, d: usize, gamma: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5246_4600);
+        let omega = LocalMatrix::from_fn(k0, d, |_, _| gamma * rng.normal());
+        let bias: Vec<f64> =
+            (0..d).map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI)).collect();
+        RffMap { omega, bias, scale: (2.0 / d as f64).sqrt() }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.omega.rows()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.omega.cols()
+    }
+
+    /// Expand a row-panel through the engine.
+    pub fn expand(&self, engine: &mut dyn Engine, x: &LocalMatrix) -> crate::Result<LocalMatrix> {
+        engine.rff_expand(x, &self.omega, &self.bias, self.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeEngine;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = RffMap::generate(4, 16, 0.5, 7);
+        let b = RffMap::generate(4, 16, 0.5, 7);
+        assert_eq!(a.omega, b.omega);
+        assert_eq!(a.bias, b.bias);
+        let c = RffMap::generate(4, 16, 0.5, 8);
+        assert_ne!(c.omega, a.omega);
+    }
+
+    #[test]
+    fn kernel_approximation_improves_with_d() {
+        // z(x)ᵀz(y) ≈ exp(−γ²‖x−y‖²/2) for the Gaussian kernel with the
+        // N(0, γ²) spectral measure.
+        let gamma = 0.8;
+        let mut rng = Rng::new(3);
+        let x = LocalMatrix::from_fn(2, 6, |_, _| rng.normal());
+        let dist2: f64 = (0..6)
+            .map(|j| (x.get(0, j) - x.get(1, j)).powi(2))
+            .sum();
+        let want = (-gamma * gamma * dist2 / 2.0).exp();
+        let mut errs = Vec::new();
+        for d in [64usize, 4096] {
+            let map = RffMap::generate(6, d, gamma, 11);
+            let z = map.expand(&mut NativeEngine::new(), &x).unwrap();
+            let got: f64 = (0..d).map(|j| z.get(0, j) * z.get(1, j)).sum();
+            errs.push((got - want).abs());
+        }
+        assert!(errs[1] < errs[0], "kernel error should shrink: {errs:?}");
+        assert!(errs[1] < 0.05, "kernel error too large: {errs:?}");
+    }
+}

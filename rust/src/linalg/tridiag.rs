@@ -1,0 +1,165 @@
+//! Symmetric tridiagonal eigensolver (QL with implicit shifts — a port of
+//! EISPACK's `tql2`, the same routine ARPACK leans on for its projected
+//! problem). This is the small replicated eigenproblem at the heart of the
+//! Lanczos truncated SVD.
+
+/// Eigendecomposition of the symmetric tridiagonal matrix with diagonal
+/// `d` (length n) and off-diagonal `e` (length n-1).
+///
+/// Returns `(eigenvalues ascending, eigenvectors)` where `vectors[j]` is
+/// the eigenvector for `values[j]` (each of length n).
+pub fn tql2(d: &[f64], e: &[f64]) -> crate::Result<(Vec<f64>, Vec<Vec<f64>>)> {
+    let n = d.len();
+    anyhow::ensure!(n > 0, "empty tridiagonal");
+    anyhow::ensure!(e.len() + 1 == n, "off-diagonal length must be n-1");
+
+    let mut d = d.to_vec();
+    // work array: off-diagonals shifted to e[0..n-1], e[n-1] = 0
+    let mut e_work = vec![0.0; n];
+    e_work[..n - 1].copy_from_slice(e);
+
+    // z starts as identity; accumulates rotations (columns = eigenvectors)
+    let mut z = vec![vec![0.0; n]; n];
+    for (i, row) in z.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find a small off-diagonal element to split at
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e_work[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            anyhow::ensure!(iter <= 50, "tql2 failed to converge at index {l}");
+
+            // implicit shift from the 2x2 at l
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e_work[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e_work[l] / (g + r.copysign(g));
+            let mut s = 1.0;
+            let mut c = 1.0;
+            let mut p = 0.0;
+
+            for i in (l..m).rev() {
+                let mut f = s * e_work[i];
+                let b = c * e_work[i];
+                r = f.hypot(g);
+                e_work[i + 1] = r;
+                if r == 0.0 {
+                    // recover from underflow
+                    d[i + 1] -= p;
+                    e_work[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate the rotation into z
+                for zrow in z.iter_mut() {
+                    f = zrow[i + 1];
+                    zrow[i + 1] = s * zrow[i] + c * f;
+                    zrow[i] = c * zrow[i] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e_work[l] = g;
+            e_work[m] = 0.0;
+        }
+    }
+
+    // sort ascending, carrying eigenvectors along
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let vectors: Vec<Vec<f64>> = idx
+        .iter()
+        .map(|&j| z.iter().map(|row| row[j]).collect())
+        .collect();
+    Ok((values, vectors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn check_decomposition(d: &[f64], e: &[f64], tol: f64) {
+        let n = d.len();
+        let (vals, vecs) = tql2(d, e).unwrap();
+        // ascending
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+        for (lam, v) in vals.iter().zip(&vecs) {
+            // residual ‖T v − λ v‖
+            let mut res = 0.0f64;
+            for i in 0..n {
+                let mut tv = d[i] * v[i];
+                if i > 0 {
+                    tv += e[i - 1] * v[i - 1];
+                }
+                if i + 1 < n {
+                    tv += e[i] * v[i + 1];
+                }
+                res = res.max((tv - lam * v[i]).abs());
+            }
+            assert!(res < tol, "residual {res}");
+            // unit norm
+            let nrm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((nrm - 1.0).abs() < 1e-10);
+        }
+        // trace preserved
+        let tr: f64 = d.iter().sum();
+        let sum: f64 = vals.iter().sum();
+        assert!((tr - sum).abs() < tol * n as f64);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3
+        let (vals, _) = tql2(&[2.0, 2.0], &[1.0]).unwrap();
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_passthrough() {
+        let (vals, _) = tql2(&[3.0, 1.0, 2.0], &[0.0, 0.0]).unwrap();
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn random_matrices_various_sizes() {
+        let mut rng = Rng::new(9);
+        for n in [1usize, 2, 3, 8, 33, 100] {
+            let d: Vec<f64> = (0..n).map(|_| rng.normal() * 3.0).collect();
+            let e: Vec<f64> = (0..n.saturating_sub(1)).map(|_| rng.normal()).collect();
+            check_decomposition(&d, &e, 1e-9);
+        }
+    }
+
+    #[test]
+    fn clustered_eigenvalues() {
+        // nearly-degenerate diagonal with weak coupling
+        let d = vec![1.0, 1.0 + 1e-12, 1.0 + 2e-12, 5.0];
+        let e = vec![1e-13, 1e-13, 1e-13];
+        check_decomposition(&d, &e, 1e-9);
+    }
+}

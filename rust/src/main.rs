@@ -1,0 +1,99 @@
+//! `alchemist` — the leader binary.
+//!
+//! Subcommands:
+//!
+//! * `serve --workers N [--port P] [--engine E]` — run an Alchemist
+//!   server until a client sends Shutdown (or ^C).
+//! * `info` — print config, artifact manifest summary, and library list.
+//! * `gen-ocean --out FILE [--cells N --times T]` — write a synthetic
+//!   ocean field to an hdf5sim file (used by the Table 5 / Fig 3 drivers).
+//!
+//! See `examples/` for end-to-end drivers and `rust/benches/` for the
+//! paper's tables and figures.
+
+use alchemist::cli::Args;
+use alchemist::config::Config;
+use alchemist::coordinator::AlchemistServer;
+use alchemist::workloads::OceanSpec;
+
+fn apply_overrides(cfg: &mut Config, args: &Args) -> alchemist::Result<()> {
+    if let Some(engine) = args.get("engine") {
+        cfg.apply("engine", engine)?;
+    }
+    if let Some(dir) = args.get("artifacts-dir") {
+        cfg.apply("artifacts_dir", dir)?;
+    }
+    if let Some(pairs) = args.get("set") {
+        for pair in pairs.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects k=v, got {pair:?}"))?;
+            cfg.apply(k.trim(), v.trim())?;
+        }
+    }
+    Ok(())
+}
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    apply_overrides(&mut cfg, &args)?;
+
+    match args.subcommand(&["serve", "info", "gen-ocean"])? {
+        "serve" => {
+            let workers = args.get_usize("workers", 3)?;
+            let handle = AlchemistServer::start(cfg, workers)?;
+            println!("control address: {}", handle.control_addr);
+            for (r, a) in handle.worker_addrs.iter().enumerate() {
+                println!("worker {r} data address: {a}");
+            }
+            println!("serving until a client sends Shutdown ...");
+            // Park until the server stops itself (client-initiated).
+            // The handle's threads own the sockets; joining them blocks
+            // this thread exactly as long as the server lives.
+            handle.shutdown_on_request();
+        }
+        "info" => {
+            println!("engine: {}", cfg.engine.as_str());
+            println!("artifacts: {:?}", cfg.resolved_artifacts_dir());
+            match alchemist::runtime::Manifest::load(
+                &cfg.resolved_artifacts_dir().join("manifest.txt"),
+            ) {
+                Ok(m) => {
+                    println!("{} artifacts:", m.entries().len());
+                    for e in m.entries() {
+                        println!(
+                            "  {} ({} {} dims {:?})",
+                            e.name, e.engine, e.op, e.dims
+                        );
+                    }
+                }
+                Err(e) => println!("no manifest: {e:#} (run `make artifacts`)"),
+            }
+            println!("builtin libraries: skylark, elemental");
+        }
+        "gen-ocean" => {
+            let out = args
+                .get("out")
+                .ok_or_else(|| anyhow::anyhow!("--out FILE required"))?;
+            let spec = OceanSpec {
+                cells: args.get_usize("cells", OceanSpec::default().cells)?,
+                times: args.get_usize("times", OceanSpec::default().times)?,
+                ..OceanSpec::default()
+            };
+            let bytes = spec.write_file(std::path::Path::new(out))?;
+            println!(
+                "wrote {} ({} x {}) to {out}",
+                alchemist::util::fmt::bytes(bytes),
+                spec.cells,
+                spec.times
+            );
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}

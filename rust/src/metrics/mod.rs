@@ -1,0 +1,10 @@
+//! Measurement plumbing: streaming statistics, paper-style ASCII tables,
+//! and the simulated cluster clock.
+
+pub mod simclock;
+pub mod stats;
+pub mod table;
+
+pub use simclock::SimClock;
+pub use stats::Stats;
+pub use table::Table;

@@ -1,0 +1,95 @@
+//! Simulated cluster time.
+//!
+//! The paper's scaling results (Tables 2–4, Figure 3) need more cores than
+//! this box has (one). Workers here execute *really* — all numerics are
+//! computed — but sequentially time-sliced, so wallclock cannot show
+//! "doubling workers halves compute". The SimClock reconstructs cluster
+//! elapsed time from per-worker busy time the way a discrete-event
+//! simulator would:
+//!
+//! * a parallel region advances the clock by `max` over worker busy
+//!   seconds (the BSP barrier semantics both Spark and MPI share);
+//! * communication advances it by the modeled interconnect cost
+//!   ([`crate::config::SimNetConfig`]);
+//! * serial sections (driver work, injected scheduler delays) add up
+//!   directly.
+//!
+//! Every bench prints wallclock next to simulated time; only the scaling
+//! *shape* is claimed from the simulated column (DESIGN.md §2).
+
+/// Accumulates simulated elapsed seconds.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    elapsed: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A BSP parallel region: all lanes start together, the region ends at
+    /// the slowest lane (barrier).
+    pub fn advance_parallel(&mut self, lane_busy_secs: &[f64]) {
+        let max = lane_busy_secs.iter().copied().fold(0.0, f64::max);
+        self.elapsed += max;
+    }
+
+    /// A parallel region where `tasks` units of `secs_each` work are
+    /// spread over `lanes` lanes (Spark task waves): ceil(tasks/lanes)
+    /// waves of the per-task cost.
+    pub fn advance_task_waves(&mut self, tasks: usize, lanes: usize, secs_each: f64) {
+        if tasks == 0 || lanes == 0 {
+            return;
+        }
+        let waves = tasks.div_ceil(lanes);
+        self.elapsed += waves as f64 * secs_each;
+    }
+
+    /// Serial driver-side work.
+    pub fn advance_serial(&mut self, secs: f64) {
+        self.elapsed += secs;
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed
+    }
+
+    /// Merge another clock's elapsed time (sequential composition).
+    pub fn extend(&mut self, other: &SimClock) {
+        self.elapsed += other.elapsed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_takes_max() {
+        let mut c = SimClock::new();
+        c.advance_parallel(&[1.0, 3.0, 2.0]);
+        assert_eq!(c.elapsed_secs(), 3.0);
+        c.advance_serial(0.5);
+        assert_eq!(c.elapsed_secs(), 3.5);
+    }
+
+    #[test]
+    fn task_waves_ceiling() {
+        let mut c = SimClock::new();
+        c.advance_task_waves(10, 4, 1.0); // 3 waves
+        assert_eq!(c.elapsed_secs(), 3.0);
+        c.advance_task_waves(0, 4, 1.0);
+        c.advance_task_waves(4, 0, 1.0);
+        assert_eq!(c.elapsed_secs(), 3.0);
+    }
+
+    #[test]
+    fn doubling_lanes_halves_balanced_work() {
+        let mut a = SimClock::new();
+        let mut b = SimClock::new();
+        a.advance_task_waves(16, 2, 1.0);
+        b.advance_task_waves(16, 4, 1.0);
+        assert_eq!(a.elapsed_secs(), 2.0 * b.elapsed_secs());
+    }
+}

@@ -1,0 +1,97 @@
+//! Streaming mean/σ (Welford) — the paper reports per-iteration costs as
+//! mean ± s.d. (Tables 2 and 4).
+
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation (n-1); 0 for fewer than two samples.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+
+    /// `"12.3 ± 4.5"` with the given precision.
+    pub fn mean_pm_std(&self, prec: usize) -> String {
+        format!("{:.prec$} ± {:.prec$}", self.mean(), self.std())
+    }
+}
+
+impl FromIterator<f64> for Stats {
+    fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> Self {
+        let mut s = Stats::new();
+        for x in iter {
+            s.push(x);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_closed_form() {
+        let s: Stats = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]
+            .into_iter()
+            .collect();
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // sample std of that set is sqrt(32/7)
+        assert!((s.std() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert!((s.sum() - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let mut s = Stats::new();
+        assert_eq!(s.std(), 0.0);
+        s.push(3.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.mean(), 3.0);
+    }
+}

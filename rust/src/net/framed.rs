@@ -1,0 +1,206 @@
+//! Length-prefixed frame transport over any `Read + Write` pair.
+//!
+//! Frame = `u32` little-endian length + payload. The writer is buffered
+//! (`Config.transfer.buf_bytes` sized) so row-batch frames coalesce into
+//! large socket writes — this buffer is one of the transfer-path knobs the
+//! ablation bench sweeps.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::Context;
+
+use crate::protocol::{ControlMsg, DataMsg};
+
+/// Maximum accepted frame (guards against corrupt length prefixes).
+const MAX_FRAME: u32 = 1 << 30;
+
+pub struct Framed<R: Read, W: Write> {
+    r: BufReader<R>,
+    w: BufWriter<W>,
+}
+
+impl Framed<TcpStream, TcpStream> {
+    /// Wrap a TCP stream (clones the fd for the read half) with the given
+    /// write-buffer size.
+    pub fn tcp(stream: TcpStream, buf_bytes: usize) -> crate::Result<Self> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        let rd = stream.try_clone().context("clone tcp stream")?;
+        Ok(Framed {
+            r: BufReader::with_capacity(buf_bytes.max(8 << 10), rd),
+            w: BufWriter::with_capacity(buf_bytes.max(8 << 10), stream),
+        })
+    }
+
+    /// Connect to `addr` and wrap.
+    pub fn connect(addr: &str, buf_bytes: usize) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        Self::tcp(stream, buf_bytes)
+    }
+}
+
+impl<R: Read, W: Write> Framed<R, W> {
+    /// Wrap an arbitrary read/write pair (tests use in-memory pipes).
+    pub fn new(r: R, w: W) -> Self {
+        Framed {
+            r: BufReader::new(r),
+            w: BufWriter::new(w),
+        }
+    }
+
+    /// Queue one frame (stays in the write buffer until [`flush`] or the
+    /// buffer fills).
+    pub fn send(&mut self, payload: &[u8]) -> crate::Result<()> {
+        let len = u32::try_from(payload.len()).context("frame too large")?;
+        anyhow::ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds cap");
+        self.w.write_all(&len.to_le_bytes())?;
+        self.w.write_all(payload)?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> crate::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+
+    /// Queue and flush.
+    pub fn send_flush(&mut self, payload: &[u8]) -> crate::Result<()> {
+        self.send(payload)?;
+        self.flush()
+    }
+
+    /// Block until one frame arrives.
+    pub fn recv(&mut self) -> crate::Result<Vec<u8>> {
+        let mut len_buf = [0u8; 4];
+        self.r.read_exact(&mut len_buf).context("reading frame length")?;
+        let len = u32::from_le_bytes(len_buf);
+        anyhow::ensure!(len <= MAX_FRAME, "incoming frame of {len} bytes exceeds cap");
+        let mut payload = vec![0u8; len as usize];
+        self.r.read_exact(&mut payload).context("reading frame payload")?;
+        Ok(payload)
+    }
+
+    // -- typed convenience wrappers --
+
+    pub fn send_ctrl(&mut self, msg: &ControlMsg) -> crate::Result<()> {
+        self.send_flush(&msg.encode())
+    }
+
+    pub fn recv_ctrl(&mut self) -> crate::Result<ControlMsg> {
+        Ok(ControlMsg::decode(&self.recv()?)?)
+    }
+
+    /// Control request/response in one call; unwraps server-side `Error`
+    /// replies into `Err`.
+    pub fn call(&mut self, msg: &ControlMsg) -> crate::Result<ControlMsg> {
+        self.send_ctrl(msg)?;
+        match self.recv_ctrl()? {
+            ControlMsg::Error { message } => anyhow::bail!("server error: {message}"),
+            reply => Ok(reply),
+        }
+    }
+
+    /// Queue a data message WITHOUT flushing (row streams batch many).
+    pub fn send_data(&mut self, msg: &DataMsg) -> crate::Result<()> {
+        self.send(&msg.encode())
+    }
+
+    pub fn send_data_flush(&mut self, msg: &DataMsg) -> crate::Result<()> {
+        self.send_data(msg)?;
+        self.flush()
+    }
+
+    pub fn recv_data(&mut self) -> crate::Result<DataMsg> {
+        Ok(DataMsg::decode(&self.recv()?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn frames_roundtrip_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut f = Framed::tcp(s, 1 << 16).unwrap();
+            loop {
+                match f.recv_ctrl().unwrap() {
+                    ControlMsg::Shutdown => {
+                        f.send_ctrl(&ControlMsg::Bye).unwrap();
+                        break;
+                    }
+                    ControlMsg::Handshake { client_name, version } => {
+                        assert_eq!(client_name, "t");
+                        f.send_ctrl(&ControlMsg::HandshakeAck {
+                            session_id: 1,
+                            version,
+                            worker_addrs: vec![],
+                        })
+                        .unwrap();
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        });
+
+        let mut c = Framed::connect(&addr.to_string(), 1 << 16).unwrap();
+        let reply = c
+            .call(&ControlMsg::Handshake { client_name: "t".into(), version: 1 })
+            .unwrap();
+        assert!(matches!(reply, ControlMsg::HandshakeAck { session_id: 1, .. }));
+        let bye = c.call(&ControlMsg::Shutdown).unwrap();
+        assert_eq!(bye, ControlMsg::Bye);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn error_reply_becomes_err() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut f = Framed::tcp(s, 4096).unwrap();
+            let _ = f.recv_ctrl().unwrap();
+            f.send_ctrl(&ControlMsg::Error { message: "nope".into() }).unwrap();
+        });
+        let mut c = Framed::connect(&addr.to_string(), 4096).unwrap();
+        let err = c.call(&ControlMsg::ListMatrices).unwrap_err();
+        assert!(err.to_string().contains("nope"));
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn large_data_frame() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let n = 100_000;
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut f = Framed::tcp(s, 1 << 20).unwrap();
+            match f.recv_data().unwrap() {
+                DataMsg::PushRows { nrows, ncols, data, .. } => {
+                    assert_eq!(nrows as usize * ncols as usize, data.len());
+                    assert_eq!(data.len(), n);
+                    assert_eq!(data[n - 1], (n - 1) as f64);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        });
+        let mut c = Framed::connect(&addr.to_string(), 1 << 20).unwrap();
+        let data: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        c.send_data_flush(&DataMsg::PushRows {
+            matrix_id: 1,
+            start_row: 0,
+            nrows: (n / 10) as u32,
+            ncols: 10,
+            data,
+        })
+        .unwrap();
+        server.join().unwrap();
+    }
+}

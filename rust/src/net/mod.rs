@@ -1,0 +1,13 @@
+//! Socket plumbing: length-framed streams and a tiny accept-loop helper.
+//!
+//! The paper's ACI moves all traffic over TCP sockets (Boost.Asio on the
+//! C++ side); here it is std-net with explicit buffering — tokio is not in
+//! the offline vendor set, and the protocol is strictly request/response
+//! per connection, so blocking I/O with one thread per socket reproduces
+//! the architecture directly.
+
+pub mod framed;
+pub mod server;
+
+pub use framed::Framed;
+pub use server::Server;

@@ -1,0 +1,90 @@
+//! Accept-loop helper: bind, spawn one handler thread per connection,
+//! join on shutdown.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Context;
+
+/// A listening socket with a graceful-ish shutdown flag. Handler panics
+/// are contained to their connection thread.
+pub struct Server {
+    listener: TcpListener,
+    addr: String,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `127.0.0.1:port` (`port = 0` for ephemeral).
+    pub fn bind(port: u16) -> crate::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding port {port}"))?;
+        let addr = listener.local_addr()?.to_string();
+        Ok(Server { listener, addr, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// A clonable flag that makes [`serve`] return after the next
+    /// connection is handled (pair with a wake-up connect).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Run the accept loop on the current thread, spawning one detached
+    /// thread per connection. Returns when the stop flag is set.
+    ///
+    /// Handler threads are deliberately *not* joined: a connection held
+    /// open by a slow (or dead) client must not stall server shutdown —
+    /// handlers exit on their own when the peer socket closes.
+    pub fn serve<F>(&self, handler: F) -> crate::Result<()>
+    where
+        F: Fn(TcpStream) + Send + Sync + 'static,
+    {
+        let handler = Arc::new(handler);
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = conn.context("accept")?;
+            let h = handler.clone();
+            std::thread::spawn(move || h(stream));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn serves_multiple_connections_then_stops() {
+        let server = Server::bind(0).unwrap();
+        let addr = server.addr().to_string();
+        let stop = server.stop_flag();
+        let t = std::thread::spawn(move || {
+            server
+                .serve(|mut s| {
+                    let mut b = [0u8; 1];
+                    let _ = s.read_exact(&mut b);
+                    let _ = s.write_all(&[b[0] + 1]);
+                })
+                .unwrap();
+        });
+        for i in 0..3u8 {
+            let mut c = TcpStream::connect(&addr).unwrap();
+            c.write_all(&[i]).unwrap();
+            let mut b = [0u8; 1];
+            c.read_exact(&mut b).unwrap();
+            assert_eq!(b[0], i + 1);
+        }
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = TcpStream::connect(&addr).unwrap(); // wake the accept loop
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,485 @@
+//! Control- and data-plane message enums with binary encode/decode.
+
+use super::value::Params;
+use super::wire::{ProtocolError, Reader, Writer};
+
+/// Metadata for a matrix living in the server's handle registry — the
+/// server-side half of the paper's `AlMatrix` proxy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixInfo {
+    pub id: u64,
+    pub rows: u64,
+    pub cols: u64,
+    pub name: String,
+}
+
+impl MatrixInfo {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(self.id);
+        w.u64(self.rows);
+        w.u64(self.cols);
+        w.str(&self.name);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self, ProtocolError> {
+        Ok(MatrixInfo {
+            id: r.u64()?,
+            rows: r.u64()?,
+            cols: r.u64()?,
+            name: r.str()?,
+        })
+    }
+}
+
+fn encode_ranges(w: &mut Writer, ranges: &[(u64, u64)]) {
+    w.u32(ranges.len() as u32);
+    for (a, b) in ranges {
+        w.u64(*a);
+        w.u64(*b);
+    }
+}
+
+fn decode_ranges(r: &mut Reader) -> Result<Vec<(u64, u64)>, ProtocolError> {
+    let n = r.u32()?;
+    (0..n).map(|_| Ok((r.u64()?, r.u64()?))).collect()
+}
+
+/// Driver⇄driver control messages (one TCP socket per session, paper
+/// §3.1.2: "one socket connection between the two driver processes").
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlMsg {
+    // client -> server
+    Handshake { client_name: String, version: u32 },
+    RegisterLibrary { name: String, path: String },
+    /// Allocate a handle; rows will arrive on the data sockets.
+    CreateMatrix { name: String, rows: u64, cols: u64 },
+    /// All rows pushed; server verifies counts and freezes the layout.
+    SealMatrix { id: u64 },
+    RunTask { lib: String, routine: String, params: Params },
+    FetchMatrix { id: u64 },
+    FreeMatrix { id: u64 },
+    ListMatrices,
+    Shutdown,
+
+    // server -> client
+    HandshakeAck {
+        session_id: u64,
+        version: u32,
+        /// One `host:port` per Alchemist worker, index = worker rank.
+        worker_addrs: Vec<String>,
+    },
+    LibraryRegistered { name: String },
+    MatrixCreated {
+        id: u64,
+        /// Row range owned by each worker rank: `[start, end)`.
+        row_ranges: Vec<(u64, u64)>,
+    },
+    MatrixSealed { id: u64, rows_received: u64 },
+    TaskDone {
+        outputs: Vec<MatrixInfo>,
+        scalars: Params,
+        /// Named timing laps measured server-side (compute, expand, ...).
+        timings: Vec<(String, f64)>,
+    },
+    FetchReady { info: MatrixInfo, row_ranges: Vec<(u64, u64)> },
+    Freed { id: u64 },
+    MatrixList { infos: Vec<MatrixInfo> },
+    Error { message: String },
+    Bye,
+}
+
+impl ControlMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            ControlMsg::Handshake { client_name, version } => {
+                w.u8(0);
+                w.str(client_name);
+                w.u32(*version);
+            }
+            ControlMsg::RegisterLibrary { name, path } => {
+                w.u8(1);
+                w.str(name);
+                w.str(path);
+            }
+            ControlMsg::CreateMatrix { name, rows, cols } => {
+                w.u8(2);
+                w.str(name);
+                w.u64(*rows);
+                w.u64(*cols);
+            }
+            ControlMsg::SealMatrix { id } => {
+                w.u8(3);
+                w.u64(*id);
+            }
+            ControlMsg::RunTask { lib, routine, params } => {
+                w.u8(4);
+                w.str(lib);
+                w.str(routine);
+                params.encode(&mut w);
+            }
+            ControlMsg::FetchMatrix { id } => {
+                w.u8(5);
+                w.u64(*id);
+            }
+            ControlMsg::FreeMatrix { id } => {
+                w.u8(6);
+                w.u64(*id);
+            }
+            ControlMsg::ListMatrices => w.u8(7),
+            ControlMsg::Shutdown => w.u8(8),
+            ControlMsg::HandshakeAck { session_id, version, worker_addrs } => {
+                w.u8(128);
+                w.u64(*session_id);
+                w.u32(*version);
+                w.u32(worker_addrs.len() as u32);
+                for a in worker_addrs {
+                    w.str(a);
+                }
+            }
+            ControlMsg::LibraryRegistered { name } => {
+                w.u8(129);
+                w.str(name);
+            }
+            ControlMsg::MatrixCreated { id, row_ranges } => {
+                w.u8(130);
+                w.u64(*id);
+                encode_ranges(&mut w, row_ranges);
+            }
+            ControlMsg::MatrixSealed { id, rows_received } => {
+                w.u8(131);
+                w.u64(*id);
+                w.u64(*rows_received);
+            }
+            ControlMsg::TaskDone { outputs, scalars, timings } => {
+                w.u8(132);
+                w.u32(outputs.len() as u32);
+                for o in outputs {
+                    o.encode(&mut w);
+                }
+                scalars.encode(&mut w);
+                w.u32(timings.len() as u32);
+                for (name, secs) in timings {
+                    w.str(name);
+                    w.f64(*secs);
+                }
+            }
+            ControlMsg::FetchReady { info, row_ranges } => {
+                w.u8(133);
+                info.encode(&mut w);
+                encode_ranges(&mut w, row_ranges);
+            }
+            ControlMsg::Freed { id } => {
+                w.u8(134);
+                w.u64(*id);
+            }
+            ControlMsg::MatrixList { infos } => {
+                w.u8(135);
+                w.u32(infos.len() as u32);
+                for i in infos {
+                    i.encode(&mut w);
+                }
+            }
+            ControlMsg::Error { message } => {
+                w.u8(136);
+                w.str(message);
+            }
+            ControlMsg::Bye => w.u8(137),
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtocolError> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            0 => ControlMsg::Handshake { client_name: r.str()?, version: r.u32()? },
+            1 => ControlMsg::RegisterLibrary { name: r.str()?, path: r.str()? },
+            2 => ControlMsg::CreateMatrix {
+                name: r.str()?,
+                rows: r.u64()?,
+                cols: r.u64()?,
+            },
+            3 => ControlMsg::SealMatrix { id: r.u64()? },
+            4 => ControlMsg::RunTask {
+                lib: r.str()?,
+                routine: r.str()?,
+                params: Params::decode(&mut r)?,
+            },
+            5 => ControlMsg::FetchMatrix { id: r.u64()? },
+            6 => ControlMsg::FreeMatrix { id: r.u64()? },
+            7 => ControlMsg::ListMatrices,
+            8 => ControlMsg::Shutdown,
+            128 => {
+                let session_id = r.u64()?;
+                let version = r.u32()?;
+                let n = r.u32()?;
+                let worker_addrs =
+                    (0..n).map(|_| r.str()).collect::<Result<_, _>>()?;
+                ControlMsg::HandshakeAck { session_id, version, worker_addrs }
+            }
+            129 => ControlMsg::LibraryRegistered { name: r.str()? },
+            130 => ControlMsg::MatrixCreated {
+                id: r.u64()?,
+                row_ranges: decode_ranges(&mut r)?,
+            },
+            131 => ControlMsg::MatrixSealed {
+                id: r.u64()?,
+                rows_received: r.u64()?,
+            },
+            132 => {
+                let n = r.u32()?;
+                let outputs = (0..n)
+                    .map(|_| MatrixInfo::decode(&mut r))
+                    .collect::<Result<_, _>>()?;
+                let scalars = Params::decode(&mut r)?;
+                let nt = r.u32()?;
+                let timings = (0..nt)
+                    .map(|_| Ok((r.str()?, r.f64()?)))
+                    .collect::<Result<_, ProtocolError>>()?;
+                ControlMsg::TaskDone { outputs, scalars, timings }
+            }
+            133 => ControlMsg::FetchReady {
+                info: MatrixInfo::decode(&mut r)?,
+                row_ranges: decode_ranges(&mut r)?,
+            },
+            134 => ControlMsg::Freed { id: r.u64()? },
+            135 => {
+                let n = r.u32()?;
+                let infos = (0..n)
+                    .map(|_| MatrixInfo::decode(&mut r))
+                    .collect::<Result<_, _>>()?;
+                ControlMsg::MatrixList { infos }
+            }
+            136 => ControlMsg::Error { message: r.str()? },
+            137 => ControlMsg::Bye,
+            tag => return Err(ProtocolError::BadTag { tag, what: "ControlMsg" }),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Executor⇄worker data messages. Rows travel as raw f64 bytes — the
+/// paper's "the Spark executor sends each row ... as sequences of bytes".
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataMsg {
+    // executor -> worker
+    DataHandshake { session_id: u64, executor_id: u32 },
+    /// A contiguous batch of rows (row batching is ablation #3; the paper
+    /// ships one row at a time, we default to 64/frame and sweep it).
+    PushRows { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, data: Vec<f64> },
+    PushDone { matrix_id: u64 },
+    PullRows { matrix_id: u64, start_row: u64, nrows: u32 },
+    DataBye,
+
+    // worker -> executor
+    DataHandshakeAck { worker_rank: u32 },
+    PushDoneAck { matrix_id: u64, rows_received: u64 },
+    RowsData { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, data: Vec<f64> },
+    DataError { message: String },
+}
+
+impl DataMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = match self {
+            // pre-size payload frames to avoid realloc on the hot path
+            DataMsg::PushRows { data, .. } | DataMsg::RowsData { data, .. } => {
+                Writer::with_capacity(data.len() * 8 + 64)
+            }
+            _ => Writer::new(),
+        };
+        match self {
+            DataMsg::DataHandshake { session_id, executor_id } => {
+                w.u8(0);
+                w.u64(*session_id);
+                w.u32(*executor_id);
+            }
+            DataMsg::PushRows { matrix_id, start_row, nrows, ncols, data } => {
+                debug_assert_eq!(data.len(), *nrows as usize * *ncols as usize);
+                w.u8(1);
+                w.u64(*matrix_id);
+                w.u64(*start_row);
+                w.u32(*nrows);
+                w.u32(*ncols);
+                w.raw_f64s(data);
+            }
+            DataMsg::PushDone { matrix_id } => {
+                w.u8(2);
+                w.u64(*matrix_id);
+            }
+            DataMsg::PullRows { matrix_id, start_row, nrows } => {
+                w.u8(3);
+                w.u64(*matrix_id);
+                w.u64(*start_row);
+                w.u32(*nrows);
+            }
+            DataMsg::DataBye => w.u8(4),
+            DataMsg::DataHandshakeAck { worker_rank } => {
+                w.u8(128);
+                w.u32(*worker_rank);
+            }
+            DataMsg::PushDoneAck { matrix_id, rows_received } => {
+                w.u8(129);
+                w.u64(*matrix_id);
+                w.u64(*rows_received);
+            }
+            DataMsg::RowsData { matrix_id, start_row, nrows, ncols, data } => {
+                debug_assert_eq!(data.len(), *nrows as usize * *ncols as usize);
+                w.u8(130);
+                w.u64(*matrix_id);
+                w.u64(*start_row);
+                w.u32(*nrows);
+                w.u32(*ncols);
+                w.raw_f64s(data);
+            }
+            DataMsg::DataError { message } => {
+                w.u8(131);
+                w.str(message);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtocolError> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            0 => DataMsg::DataHandshake {
+                session_id: r.u64()?,
+                executor_id: r.u32()?,
+            },
+            1 => {
+                let matrix_id = r.u64()?;
+                let start_row = r.u64()?;
+                let nrows = r.u32()?;
+                let ncols = r.u32()?;
+                let data = r.raw_f64s(nrows as usize * ncols as usize)?;
+                DataMsg::PushRows { matrix_id, start_row, nrows, ncols, data }
+            }
+            2 => DataMsg::PushDone { matrix_id: r.u64()? },
+            3 => DataMsg::PullRows {
+                matrix_id: r.u64()?,
+                start_row: r.u64()?,
+                nrows: r.u32()?,
+            },
+            4 => DataMsg::DataBye,
+            128 => DataMsg::DataHandshakeAck { worker_rank: r.u32()? },
+            129 => DataMsg::PushDoneAck {
+                matrix_id: r.u64()?,
+                rows_received: r.u64()?,
+            },
+            130 => {
+                let matrix_id = r.u64()?;
+                let start_row = r.u64()?;
+                let nrows = r.u32()?;
+                let ncols = r.u32()?;
+                let data = r.raw_f64s(nrows as usize * ncols as usize)?;
+                DataMsg::RowsData { matrix_id, start_row, nrows, ncols, data }
+            }
+            131 => DataMsg::DataError { message: r.str()? },
+            tag => return Err(ProtocolError::BadTag { tag, what: "DataMsg" }),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_roundtrip_all_variants() {
+        let msgs = vec![
+            ControlMsg::Handshake { client_name: "spark-app".into(), version: 1 },
+            ControlMsg::RegisterLibrary { name: "skylark".into(), path: "builtin:skylark".into() },
+            ControlMsg::CreateMatrix { name: "X".into(), rows: 10, cols: 4 },
+            ControlMsg::SealMatrix { id: 3 },
+            ControlMsg::RunTask {
+                lib: "skylark".into(),
+                routine: "cg_solve".into(),
+                params: Params::new().with_f64("lambda", 1e-5).with_matrix("X", 3),
+            },
+            ControlMsg::FetchMatrix { id: 3 },
+            ControlMsg::FreeMatrix { id: 3 },
+            ControlMsg::ListMatrices,
+            ControlMsg::Shutdown,
+            ControlMsg::HandshakeAck {
+                session_id: 9,
+                version: 1,
+                worker_addrs: vec!["127.0.0.1:4001".into(), "127.0.0.1:4002".into()],
+            },
+            ControlMsg::LibraryRegistered { name: "skylark".into() },
+            ControlMsg::MatrixCreated { id: 3, row_ranges: vec![(0, 5), (5, 10)] },
+            ControlMsg::MatrixSealed { id: 3, rows_received: 10 },
+            ControlMsg::TaskDone {
+                outputs: vec![MatrixInfo { id: 4, rows: 4, cols: 4, name: "W".into() }],
+                scalars: Params::new().with_i64("iters", 526),
+                timings: vec![("compute".into(), 1.5)],
+            },
+            ControlMsg::FetchReady {
+                info: MatrixInfo { id: 4, rows: 4, cols: 4, name: "W".into() },
+                row_ranges: vec![(0, 4)],
+            },
+            ControlMsg::Freed { id: 4 },
+            ControlMsg::MatrixList { infos: vec![] },
+            ControlMsg::Error { message: "boom".into() },
+            ControlMsg::Bye,
+        ];
+        for m in msgs {
+            let buf = m.encode();
+            let back = ControlMsg::decode(&buf).unwrap();
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn data_roundtrip_all_variants() {
+        let msgs = vec![
+            DataMsg::DataHandshake { session_id: 9, executor_id: 2 },
+            DataMsg::PushRows {
+                matrix_id: 3,
+                start_row: 100,
+                nrows: 2,
+                ncols: 3,
+                data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            },
+            DataMsg::PushDone { matrix_id: 3 },
+            DataMsg::PullRows { matrix_id: 3, start_row: 0, nrows: 5 },
+            DataMsg::DataBye,
+            DataMsg::DataHandshakeAck { worker_rank: 1 },
+            DataMsg::PushDoneAck { matrix_id: 3, rows_received: 10 },
+            DataMsg::RowsData {
+                matrix_id: 3,
+                start_row: 0,
+                nrows: 1,
+                ncols: 2,
+                data: vec![7.0, 8.0],
+            },
+            DataMsg::DataError { message: "nope".into() },
+        ];
+        for m in msgs {
+            let buf = m.encode();
+            assert_eq!(m, DataMsg::decode(&buf).unwrap());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(ControlMsg::decode(&[250]).is_err());
+        assert!(DataMsg::decode(&[]).is_err());
+        // truncated PushRows payload
+        let m = DataMsg::PushRows {
+            matrix_id: 1,
+            start_row: 0,
+            nrows: 1,
+            ncols: 2,
+            data: vec![1.0, 2.0],
+        };
+        let buf = m.encode();
+        assert!(DataMsg::decode(&buf[..buf.len() - 1]).is_err());
+        // trailing bytes
+        let mut buf2 = DataMsg::DataBye.encode();
+        buf2.push(0);
+        assert!(DataMsg::decode(&buf2).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! The Alchemist wire protocol (paper §3.1.2–3.2).
+//!
+//! Two channels, exactly as in the paper:
+//!
+//! * a **control** socket between the application driver and the Alchemist
+//!   driver — handshakes, library registration, matrix-handle management,
+//!   task invocation ([`ControlMsg`]);
+//! * **data** sockets between application executors and Alchemist workers —
+//!   matrix rows as raw little-endian f64 byte sequences ([`DataMsg`]).
+//!
+//! Everything is length-prefixed binary (serde is unavailable offline, and
+//! the paper's transfer path is byte-oriented row shipping anyway — a
+//! hand-rolled codec *is* the faithful reproduction).
+
+pub mod message;
+pub mod value;
+pub mod wire;
+
+pub use message::{ControlMsg, DataMsg, MatrixInfo};
+pub use value::{Params, Value};
+pub use wire::{ProtocolError, Reader, Writer};
+
+/// Protocol version; bumped on any wire-format change, checked in the
+/// handshake.
+pub const PROTOCOL_VERSION: u32 = 1;

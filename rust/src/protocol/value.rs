@@ -1,0 +1,194 @@
+//! Typed parameters for library routines (paper §3.1.3: "the name of the
+//! routine ... as well as the serialized input parameters").
+
+use std::collections::BTreeMap;
+
+use super::wire::{ProtocolError, Reader, Writer};
+
+/// A routine input/output value. `Matrix` carries a matrix-handle id — the
+/// paper's `AlMatrix` proxies travel through `Params` so routine outputs
+/// can feed the next routine without leaving the server.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+    Matrix(u64),
+    F64s(Vec<f64>),
+}
+
+impl Value {
+    fn tag(&self) -> u8 {
+        match self {
+            Value::I64(_) => 0,
+            Value::F64(_) => 1,
+            Value::Bool(_) => 2,
+            Value::Str(_) => 3,
+            Value::Matrix(_) => 4,
+            Value::F64s(_) => 5,
+        }
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        w.u8(self.tag());
+        match self {
+            Value::I64(v) => w.i64(*v),
+            Value::F64(v) => w.f64(*v),
+            Value::Bool(v) => w.bool(*v),
+            Value::Str(v) => w.str(v),
+            Value::Matrix(v) => w.u64(*v),
+            Value::F64s(v) => w.f64s(v),
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<Self, ProtocolError> {
+        Ok(match r.u8()? {
+            0 => Value::I64(r.i64()?),
+            1 => Value::F64(r.f64()?),
+            2 => Value::Bool(r.bool()?),
+            3 => Value::Str(r.str()?),
+            4 => Value::Matrix(r.u64()?),
+            5 => Value::F64s(r.f64s()?),
+            tag => return Err(ProtocolError::BadTag { tag, what: "Value" }),
+        })
+    }
+}
+
+/// Ordered string→value map with typed accessors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Params(pub BTreeMap<String, Value>);
+
+impl Params {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(mut self, key: &str, v: Value) -> Self {
+        self.0.insert(key.to_string(), v);
+        self
+    }
+
+    pub fn with_i64(self, key: &str, v: i64) -> Self {
+        self.set(key, Value::I64(v))
+    }
+
+    pub fn with_f64(self, key: &str, v: f64) -> Self {
+        self.set(key, Value::F64(v))
+    }
+
+    pub fn with_str(self, key: &str, v: &str) -> Self {
+        self.set(key, Value::Str(v.to_string()))
+    }
+
+    pub fn with_matrix(self, key: &str, id: u64) -> Self {
+        self.set(key, Value::Matrix(id))
+    }
+
+    pub fn with_bool(self, key: &str, v: bool) -> Self {
+        self.set(key, Value::Bool(v))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.0.get(key)
+    }
+
+    pub fn i64(&self, key: &str) -> crate::Result<i64> {
+        match self.get(key) {
+            Some(Value::I64(v)) => Ok(*v),
+            other => anyhow::bail!("param {key:?}: expected i64, got {other:?}"),
+        }
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> crate::Result<i64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::I64(v)) => Ok(*v),
+            other => anyhow::bail!("param {key:?}: expected i64, got {other:?}"),
+        }
+    }
+
+    pub fn f64(&self, key: &str) -> crate::Result<f64> {
+        match self.get(key) {
+            Some(Value::F64(v)) => Ok(*v),
+            Some(Value::I64(v)) => Ok(*v as f64),
+            other => anyhow::bail!("param {key:?}: expected f64, got {other:?}"),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> crate::Result<f64> {
+        if self.get(key).is_none() {
+            return Ok(default);
+        }
+        self.f64(key)
+    }
+
+    pub fn str(&self, key: &str) -> crate::Result<&str> {
+        match self.get(key) {
+            Some(Value::Str(v)) => Ok(v),
+            other => anyhow::bail!("param {key:?}: expected str, got {other:?}"),
+        }
+    }
+
+    pub fn matrix(&self, key: &str) -> crate::Result<u64> {
+        match self.get(key) {
+            Some(Value::Matrix(v)) => Ok(*v),
+            other => anyhow::bail!("param {key:?}: expected matrix handle, got {other:?}"),
+        }
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        w.u32(self.0.len() as u32);
+        for (k, v) in &self.0 {
+            w.str(k);
+            v.encode(w);
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<Self, ProtocolError> {
+        let n = r.u32()?;
+        let mut map = BTreeMap::new();
+        for _ in 0..n {
+            let k = r.str()?;
+            let v = Value::decode(r)?;
+            map.insert(k, v);
+        }
+        Ok(Params(map))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip() {
+        let p = Params::new()
+            .with_i64("iters", 100)
+            .with_f64("lambda", 1e-5)
+            .with_str("mode", "cg")
+            .with_matrix("X", 3)
+            .with_bool("verbose", true)
+            .set("v", Value::F64s(vec![1.0, 2.0]));
+        let mut w = Writer::new();
+        p.encode(&mut w);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        let q = Params::decode(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn typed_accessors_enforce_types() {
+        let p = Params::new().with_i64("n", 5).with_f64("x", 1.5);
+        assert_eq!(p.i64("n").unwrap(), 5);
+        assert_eq!(p.f64("x").unwrap(), 1.5);
+        assert_eq!(p.f64("n").unwrap(), 5.0); // widening ok
+        assert!(p.i64("x").is_err());
+        assert!(p.str("n").is_err());
+        assert!(p.matrix("missing").is_err());
+        assert_eq!(p.i64_or("missing", 9).unwrap(), 9);
+        assert_eq!(p.f64_or("missing", 0.5).unwrap(), 0.5);
+    }
+}

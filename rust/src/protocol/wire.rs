@@ -1,0 +1,272 @@
+//! Primitive binary encoding: little-endian, length-prefixed.
+//!
+//! `Writer` appends primitives to a `Vec<u8>`; `Reader` consumes them from
+//! a slice. Bulk f64 payloads move via memcpy on little-endian targets
+//! (the transfer hot path — the paper's whole overhead story is the cost
+//! of moving rows between frameworks).
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ProtocolError {
+    #[error("unexpected end of message (wanted {wanted} bytes, {left} left)")]
+    Truncated { wanted: usize, left: usize },
+    #[error("bad tag {tag} for {what}")]
+    BadTag { tag: u8, what: &'static str },
+    #[error("invalid utf-8 string in message")]
+    BadUtf8,
+    #[error("trailing {0} bytes after message")]
+    Trailing(usize),
+    #[error("oversized field: {0} bytes")]
+    Oversized(u64),
+}
+
+/// Appends primitives to an owned buffer.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Bulk f64 payload: length (count) + raw little-endian bytes.
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.u64(xs.len() as u64);
+        self.raw_f64s(xs);
+    }
+
+    /// Raw f64 bytes without a length prefix (caller encodes the count).
+    pub fn raw_f64s(&mut self, xs: &[f64]) {
+        #[cfg(target_endian = "little")]
+        {
+            // Safety: f64 -> u8 reinterpretation is always valid; length in
+            // bytes cannot overflow because xs is in memory.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8)
+            };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(target_endian = "big")]
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Consumes primitives from a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        if self.remaining() < n {
+            return Err(ProtocolError::Truncated { wanted: n, left: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ProtocolError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, ProtocolError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ProtocolError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, ProtocolError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, ProtocolError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, ProtocolError> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn str(&mut self) -> Result<String, ProtocolError> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| ProtocolError::BadUtf8)
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>, ProtocolError> {
+        let n = self.u64()?;
+        if n > (1 << 40) {
+            return Err(ProtocolError::Oversized(n));
+        }
+        Ok(self.take(n as usize)?.to_vec())
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>, ProtocolError> {
+        let n = self.u64()?;
+        if n > (1 << 37) {
+            return Err(ProtocolError::Oversized(n));
+        }
+        self.raw_f64s(n as usize)
+    }
+
+    /// Read `count` f64s without a length prefix.
+    pub fn raw_f64s(&mut self, count: usize) -> Result<Vec<f64>, ProtocolError> {
+        let src = self.take(count * 8)?;
+        let mut out = vec![0f64; count];
+        #[cfg(target_endian = "little")]
+        {
+            // Safety: writing count*8 bytes into a Vec<f64> of len count.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    src.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    count * 8,
+                );
+            }
+        }
+        #[cfg(target_endian = "big")]
+        for (i, chunk) in src.chunks_exact(8).enumerate() {
+            out[i] = f64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(out)
+    }
+
+    /// Error unless the whole buffer was consumed (message framing check).
+    pub fn finish(self) -> Result<(), ProtocolError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(ProtocolError::Trailing(self.remaining()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX);
+        w.i64(-42);
+        w.f64(std::f64::consts::PI);
+        w.bool(true);
+        w.str("héllo");
+        w.bytes(&[1, 2, 3]);
+        w.f64s(&[1.5, -2.5]);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.i64().unwrap(), -42);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f64s().unwrap(), vec![1.5, -2.5]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut w = Writer::new();
+        w.u64(5);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf[..4]);
+        assert!(matches!(r.u64(), Err(ProtocolError::Truncated { .. })));
+    }
+
+    #[test]
+    fn trailing_detected() {
+        let mut w = Writer::new();
+        w.u8(1);
+        w.u8(2);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        let _ = r.u8().unwrap();
+        assert!(matches!(r.finish(), Err(ProtocolError::Trailing(1))));
+    }
+
+    #[test]
+    fn f64_bulk_preserves_bits() {
+        let xs: Vec<f64> = vec![0.0, -0.0, f64::MIN, f64::MAX, 1e-300, f64::INFINITY];
+        let mut w = Writer::new();
+        w.f64s(&xs);
+        let buf = w.into_bytes();
+        let got = Reader::new(&buf).f64s().unwrap();
+        for (a, b) in xs.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`, written by
+//! `python/compile/aot.py` as whitespace-separated `key=value` lines).
+
+use std::path::Path;
+
+use anyhow::Context;
+
+/// One AOT artifact as described by the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Semantic op (`gemm_nn`, `gram_matvec`, `rff_expand`, `cg_update`...)
+    pub op: String,
+    /// Lowering engine: `pallas` (interpret-mode kernels) or `xla` (jnp).
+    pub engine: String,
+    /// Op-specific dimension tuple (gemm: m,n,k; gram: m,k,c; ...).
+    pub dims: Vec<usize>,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub out_shapes: Vec<Vec<usize>>,
+    pub sha: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactEntry>,
+}
+
+fn parse_shape_list(s: &str) -> crate::Result<Vec<Vec<usize>>> {
+    s.split(';')
+        .map(|shape| {
+            shape
+                .split('x')
+                .map(|d| d.parse::<usize>().context("bad shape dim"))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv = std::collections::BTreeMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: token {tok:?}", lineno + 1))?;
+                kv.insert(k.to_string(), v.to_string());
+            }
+            let get = |k: &str| -> crate::Result<String> {
+                kv.get(k)
+                    .cloned()
+                    .with_context(|| format!("manifest line {}: missing {k}", lineno + 1))
+            };
+            anyhow::ensure!(
+                get("dtype")? == "f64",
+                "manifest line {}: only f64 artifacts supported",
+                lineno + 1
+            );
+            entries.push(ArtifactEntry {
+                name: get("name")?,
+                op: get("op")?,
+                engine: get("engine")?,
+                dims: get("dims")?
+                    .split(',')
+                    .map(|d| d.parse().context("bad dim"))
+                    .collect::<crate::Result<_>>()?,
+                in_shapes: parse_shape_list(&get("inputs")?)?,
+                out_shapes: parse_shape_list(&get("outputs")?)?,
+                sha: kv.get("sha").cloned().unwrap_or_default(),
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest has no artifacts");
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Resolve by semantics: op + engine + exact dims.
+    pub fn find(&self, op: &str, engine: &str, dims: &[usize]) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.op == op && e.engine == engine && e.dims == dims)
+    }
+
+    /// All dims available for (op, engine) — engines pick the best match.
+    pub fn dims_for(&self, op: &str, engine: &str) -> Vec<Vec<usize>> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.engine == engine)
+            .map(|e| e.dims.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+name=xla_gemm_nn_256x256x256 op=gemm_nn engine=xla dtype=f64 dims=256,256,256 inputs=256x256;256x256;256x256 outputs=256x256 sha=abc
+
+name=pallas_cg_update_1024x32 op=cg_update engine=pallas dtype=f64 dims=1024,32 inputs=1024x32;1024x32;1024x32;1024x32;1x32 outputs=1024x32;1024x32
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.by_name("xla_gemm_nn_256x256x256").unwrap();
+        assert_eq!(e.op, "gemm_nn");
+        assert_eq!(e.dims, vec![256, 256, 256]);
+        assert_eq!(e.in_shapes.len(), 3);
+        assert_eq!(e.sha, "abc");
+        let c = m.find("cg_update", "pallas", &[1024, 32]).unwrap();
+        assert_eq!(c.out_shapes.len(), 2);
+        assert_eq!(c.in_shapes[4], vec![1, 32]);
+        assert!(m.find("cg_update", "xla", &[1024, 32]).is_none());
+        assert_eq!(m.dims_for("gemm_nn", "xla"), vec![vec![256, 256, 256]]);
+    }
+
+    #[test]
+    fn rejects_non_f64_and_garbage() {
+        assert!(Manifest::parse("name=a op=b engine=c dtype=f32 dims=1 inputs=1 outputs=1").is_err());
+        assert!(Manifest::parse("notakv").is_err());
+        assert!(Manifest::parse("# only comments\n").is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that touches the `xla` crate. A [`Runtime`]
+//! owns one PJRT CPU client plus a lazily-compiled executable cache keyed
+//! by artifact name; `compute::XlaEngine` resolves (op, engine, dims) →
+//! artifact through the [`manifest`] and calls [`Runtime::run`].
+//!
+//! PJRT wrapper types hold raw pointers and are not `Send`, so each worker
+//! thread owns its own `Runtime` — the same shape as MPI ranks each
+//! holding their own library context (and on this one-core box there is no
+//! parallelism to lose).
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), never
+//! serialized protos — see `python/compile/aot.py` for why.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+/// An executed output: flat row-major data plus its shape.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f64>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data }
+    }
+}
+
+/// An operand resident on the PJRT device — upload once, execute many
+/// (§Perf: re-uploading the static Gram panel every CG iteration was the
+/// top bottleneck before buffer caching).
+pub struct DeviceBuf {
+    buf: xla::PjRtBuffer,
+    pub dims: Vec<usize>,
+}
+
+impl DeviceBuf {
+    pub fn bytes(&self) -> usize {
+        self.dims.iter().product::<usize>() * 8
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative seconds spent inside PJRT `execute` (perf accounting).
+    pub exec_secs: f64,
+    /// Number of `run` calls (perf accounting).
+    pub exec_calls: u64,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and create the PJRT CPU client.
+    /// Executables compile lazily on first use.
+    pub fn load(dir: &std::path::Path) -> crate::Result<Self> {
+        // silence TfrtCpuClient created/destroyed chatter unless the user
+        // asked for it
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading artifact manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+            exec_secs: 0.0,
+            exec_calls: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn executable(&mut self, name: &str) -> crate::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .by_name(name)
+                .with_context(|| format!("artifact {name:?} not in manifest"))?;
+            let path = self.dir.join(format!("{}.hlo.txt", entry.name));
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            log::debug!(
+                "compiled artifact {name} in {:.3}s",
+                t0.elapsed().as_secs_f64()
+            );
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` on the given inputs (shape-checked against
+    /// the manifest). Returns the tuple elements as [`Tensor`]s.
+    pub fn run(&mut self, name: &str, inputs: &[(&[f64], &[usize])]) -> crate::Result<Vec<Tensor>> {
+        let entry = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == entry.in_shapes.len(),
+            "artifact {name} wants {} inputs, got {}",
+            entry.in_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, dims)) in inputs.iter().enumerate() {
+            anyhow::ensure!(
+                dims == &entry.in_shapes[i].as_slice(),
+                "artifact {name} input {i}: want shape {:?}, got {dims:?}",
+                entry.in_shapes[i]
+            );
+            anyhow::ensure!(
+                data.len() == dims.iter().product::<usize>(),
+                "artifact {name} input {i}: data/shape mismatch"
+            );
+            // Safety: f64 -> u8 reinterpretation; PJRT copies the bytes.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 8)
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F64,
+                dims,
+                bytes,
+            )
+            .map_err(|e| anyhow::anyhow!("building literal for {name} input {i}: {e}"))?;
+            literals.push(lit);
+        }
+
+        let t0 = std::time::Instant::now();
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e}"))?;
+        self.exec_secs += t0.elapsed().as_secs_f64();
+        self.exec_calls += 1;
+
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let elems = root
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name} output: {e}"))?;
+        anyhow::ensure!(
+            elems.len() == entry.out_shapes.len(),
+            "artifact {name}: manifest promises {} outputs, got {}",
+            entry.out_shapes.len(),
+            elems.len()
+        );
+        let mut out = Vec::with_capacity(elems.len());
+        for (lit, dims) in elems.into_iter().zip(&entry.out_shapes) {
+            let data = lit
+                .to_vec::<f64>()
+                .map_err(|e| anyhow::anyhow!("reading {name} output: {e}"))?;
+            out.push(Tensor::new(dims.clone(), data));
+        }
+        Ok(out)
+    }
+
+    /// Convenience for the common single-output case.
+    pub fn run1(&mut self, name: &str, inputs: &[(&[f64], &[usize])]) -> crate::Result<Tensor> {
+        let mut out = self.run(name, inputs)?;
+        anyhow::ensure!(out.len() == 1, "artifact {name} has {} outputs", out.len());
+        Ok(out.pop().unwrap())
+    }
+
+    /// Upload an operand to the device once; reuse across many executions
+    /// (static operands like the CG Gram panel — §Perf).
+    pub fn upload(&self, data: &[f64], dims: &[usize]) -> crate::Result<DeviceBuf> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f64>(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("uploading operand: {e}"))?;
+        Ok(DeviceBuf { buf, dims: dims.to_vec() })
+    }
+
+    /// Execute with device-resident operands (single-output artifacts).
+    pub fn run1_b(&mut self, name: &str, inputs: &[&DeviceBuf]) -> crate::Result<Tensor> {
+        let entry = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == entry.in_shapes.len(),
+            "artifact {name} wants {} inputs, got {}",
+            entry.in_shapes.len(),
+            inputs.len()
+        );
+        for (i, b) in inputs.iter().enumerate() {
+            anyhow::ensure!(
+                b.dims == entry.in_shapes[i],
+                "artifact {name} input {i}: want shape {:?}, got {:?}",
+                entry.in_shapes[i],
+                b.dims
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let exe = self.executable(name)?;
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| &b.buf).collect();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e}"))?;
+        self.exec_secs += t0.elapsed().as_secs_f64();
+        self.exec_calls += 1;
+        let elems = root
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name} output: {e}"))?;
+        anyhow::ensure!(elems.len() == 1, "run1_b expects a single output");
+        let data = elems[0]
+            .to_vec::<f64>()
+            .map_err(|e| anyhow::anyhow!("reading {name} output: {e}"))?;
+        Ok(Tensor::new(entry.out_shapes[0].clone(), data))
+    }
+}

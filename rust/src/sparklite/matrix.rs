@@ -1,0 +1,103 @@
+//! `IndexedRowMatrix` — the row-RDD matrix the paper's ACI ships to
+//! Alchemist (§3.1.2: "Alchemist currently sends and receives data using
+//! Spark's IndexedRowMatrix RDD data structure").
+
+use crate::distmat::LocalMatrix;
+
+use super::rdd::Rdd;
+
+/// One matrix row with its global index (rows may arrive out of order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexedRow {
+    pub index: u64,
+    pub vector: Vec<f64>,
+}
+
+/// A dense matrix as an RDD of indexed rows.
+#[derive(Debug, Clone)]
+pub struct IndexedRowMatrix {
+    pub rdd: Rdd<IndexedRow>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl IndexedRowMatrix {
+    /// Partition a local matrix into `num_partitions` row chunks.
+    pub fn from_local(m: &LocalMatrix, num_partitions: usize) -> Self {
+        let items: Vec<IndexedRow> = (0..m.rows())
+            .map(|i| IndexedRow { index: i as u64, vector: m.row(i).to_vec() })
+            .collect();
+        IndexedRowMatrix {
+            rdd: Rdd::parallelize(items, num_partitions),
+            rows: m.rows(),
+            cols: m.cols(),
+        }
+    }
+
+    /// Materialize as a dense local matrix (driver-side collect).
+    pub fn to_local(&self) -> crate::Result<LocalMatrix> {
+        let mut out = LocalMatrix::zeros(self.rows, self.cols);
+        let mut seen = vec![false; self.rows];
+        for part in self.rdd.partitions() {
+            for row in part {
+                let i = row.index as usize;
+                anyhow::ensure!(i < self.rows, "row index {i} out of bounds");
+                anyhow::ensure!(!seen[i], "duplicate row {i}");
+                anyhow::ensure!(
+                    row.vector.len() == self.cols,
+                    "row {i} has {} cols, want {}",
+                    row.vector.len(),
+                    self.cols
+                );
+                out.row_mut(i).copy_from_slice(&row.vector);
+                seen[i] = true;
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&s| s), "missing rows in matrix");
+        Ok(out)
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.rdd.num_partitions()
+    }
+
+    /// Total payload bytes (memory-budget checks and transfer sizing).
+    pub fn size_bytes(&self) -> usize {
+        self.rows * self.cols * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn local_roundtrip() {
+        let mut rng = Rng::new(8);
+        let m = LocalMatrix::from_fn(13, 4, |_, _| rng.normal());
+        let irm = IndexedRowMatrix::from_local(&m, 3);
+        assert_eq!(irm.num_partitions(), 3);
+        assert_eq!(irm.size_bytes(), 13 * 4 * 8);
+        assert_eq!(irm.to_local().unwrap(), m);
+    }
+
+    #[test]
+    fn detects_missing_and_duplicate_rows() {
+        let m = LocalMatrix::zeros(3, 2);
+        let mut irm = IndexedRowMatrix::from_local(&m, 1);
+        // drop a row
+        let mut parts = irm.rdd.clone().into_partitions();
+        parts[0].pop();
+        irm.rdd = Rdd::from_partitions(parts);
+        assert!(irm.to_local().is_err());
+        // duplicate a row
+        let m = LocalMatrix::zeros(3, 2);
+        let mut irm = IndexedRowMatrix::from_local(&m, 1);
+        let mut parts = irm.rdd.clone().into_partitions();
+        let dup = parts[0][0].clone();
+        parts[0][2] = dup;
+        irm.rdd = Rdd::from_partitions(parts);
+        assert!(irm.to_local().is_err());
+    }
+}

@@ -1,0 +1,490 @@
+//! MLlib-analog baselines: Spark-style CG and truncated SVD.
+//!
+//! Same mathematics as `crate::linalg` (so accuracy comparisons are
+//! apples-to-apples) but executed the way Spark MLlib executes them:
+//!
+//! * each Gram-operator application is a BSP stage over the row RDD plus a
+//!   driver-side aggregation (two overhead charges per iteration);
+//! * per-partition compute is *row-oriented and unblocked* — rows are
+//!   separate `Vec<f64>`s, exactly like `IndexedRowMatrix`, so there is no
+//!   cache blocking (this is the honest part of the Spark penalty, on top
+//!   of the modeled scheduler/task overheads);
+//! * all small state lives on the driver.
+
+use crate::distmat::LocalMatrix;
+use crate::linalg::cg::CgOptions;
+use crate::linalg::lanczos::SvdOptions;
+use crate::linalg::rff::RffMap;
+use crate::util::prng::Rng;
+
+use super::matrix::{IndexedRow, IndexedRowMatrix};
+use super::rdd::Rdd;
+use super::scheduler::SparkEngine;
+
+/// Per-partition Gram partial: Σ_i xᵢ ⊗ (xᵢ·V), row-at-a-time.
+fn gram_partial(rows: &[IndexedRow], v: &LocalMatrix) -> LocalMatrix {
+    let d = v.rows();
+    let c = v.cols();
+    let mut out = LocalMatrix::zeros(d, c);
+    let mut xv = vec![0.0; c];
+    for row in rows {
+        let x = &row.vector;
+        // xv = xᵀ·V  (c-wide accumulators, row-major V walk)
+        xv.iter_mut().for_each(|t| *t = 0.0);
+        for (k, &xk) in x.iter().enumerate() {
+            if xk != 0.0 {
+                let vrow = v.row(k);
+                for j in 0..c {
+                    xv[j] += xk * vrow[j];
+                }
+            }
+        }
+        // out += x ⊗ xv
+        for (k, &xk) in x.iter().enumerate() {
+            if xk != 0.0 {
+                let orow = out.row_mut(k);
+                for j in 0..c {
+                    orow[j] += xk * xv[j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One distributed application of `(XᵀX + reg·I)·V` as a stage + driver
+/// merge.
+fn gram_stage(
+    engine: &mut SparkEngine,
+    x: &IndexedRowMatrix,
+    v: &LocalMatrix,
+    reg: f64,
+    name: &str,
+) -> LocalMatrix {
+    let bytes = v.rows() * v.cols() * 8;
+    let mut q = engine
+        .run_stage_reduce(
+            name,
+            x.rdd.partitions(),
+            |_, part| gram_partial(part, v),
+            |mut a, b| {
+                a.axpy(1.0, &b);
+                a
+            },
+            bytes,
+        )
+        .unwrap_or_else(|| LocalMatrix::zeros(v.rows(), v.cols()));
+    q.axpy(reg, v);
+    q
+}
+
+#[derive(Debug)]
+pub struct SparkCgResult {
+    pub w: LocalMatrix,
+    pub iters: usize,
+    pub residuals: Vec<f64>,
+    /// Wall seconds per iteration (includes injected overhead sleeps).
+    pub iter_secs: Vec<f64>,
+    /// Simulated cluster seconds per iteration.
+    pub iter_sim_secs: Vec<f64>,
+}
+
+/// Spark-style block CG on the normal equations (the paper's hand-written
+/// Spark CG of §4.1 — MLlib has no CG, exactly as the paper notes).
+pub fn cg_solve(
+    engine: &mut SparkEngine,
+    x: &IndexedRowMatrix,
+    y: &IndexedRowMatrix,
+    opts: &CgOptions,
+) -> crate::Result<SparkCgResult> {
+    anyhow::ensure!(x.rows == y.rows, "X/Y row mismatch");
+    // cluster memory budget: X must be cacheable (Table 1's boundary)
+    anyhow::ensure!(
+        x.size_bytes() + y.size_bytes() <= engine.memory_budget_bytes,
+        "insufficient cluster memory to cache {} of training data \
+         (budget {}); Spark job fails",
+        crate::util::fmt::bytes((x.size_bytes() + y.size_bytes()) as u64),
+        crate::util::fmt::bytes(engine.memory_budget_bytes as u64),
+    );
+    let d = x.cols;
+    let c = y.cols;
+    let reg = x.rows as f64 * opts.lambda;
+
+    // b = XᵀY: zip X and Y rows by partition (co-partitioned by
+    // construction), one stage
+    anyhow::ensure!(
+        x.num_partitions() == y.num_partitions(),
+        "X and Y must be co-partitioned"
+    );
+    let pairs: Vec<(usize, usize)> =
+        (0..x.num_partitions()).map(|i| (i, i)).collect();
+    let b = engine
+        .run_stage_reduce(
+            "cg:Xt*Y",
+            &pairs,
+            |_, &(px, py)| {
+                let xr = &x.rdd.partitions()[px];
+                let yr = &y.rdd.partitions()[py];
+                let mut out = LocalMatrix::zeros(d, c);
+                for (rx, ry) in xr.iter().zip(yr) {
+                    debug_assert_eq!(rx.index, ry.index);
+                    for (k, &xk) in rx.vector.iter().enumerate() {
+                        if xk != 0.0 {
+                            let orow = out.row_mut(k);
+                            for j in 0..c {
+                                orow[j] += xk * ry.vector[j];
+                            }
+                        }
+                    }
+                }
+                out
+            },
+            |mut a, b| {
+                a.axpy(1.0, &b);
+                a
+            },
+            d * c * 8,
+        )
+        .unwrap();
+
+    let mut w = LocalMatrix::zeros(d, c);
+    let mut r = b.clone();
+    let mut p = r.clone();
+    let rs0 = r.col_dots(&r);
+    let mut rs_old = rs0.clone();
+
+    let mut residuals = Vec::new();
+    let mut iter_secs = Vec::new();
+    let mut iter_sim_secs = Vec::new();
+    let mut iters = 0;
+
+    for it in 0..opts.max_iters {
+        let t0 = std::time::Instant::now();
+        let sim0 = engine.sim_elapsed_secs();
+
+        let q = gram_stage(engine, x, &p, reg, "cg:gram");
+
+        let pq = p.col_dots(&q);
+        let alpha: Vec<f64> = rs_old
+            .iter()
+            .zip(&pq)
+            .map(|(&rs, &pq)| if pq.abs() > 0.0 { rs / pq } else { 0.0 })
+            .collect();
+        // driver-side state update (D×C, unblocked)
+        for i in 0..d {
+            let wr = w.row_mut(i);
+            let pr = p.row(i);
+            for j in 0..c {
+                wr[j] += alpha[j] * pr[j];
+            }
+            let rr = r.row_mut(i);
+            let qr = q.row(i);
+            for j in 0..c {
+                rr[j] -= alpha[j] * qr[j];
+            }
+        }
+
+        let rs_new = r.col_dots(&r);
+        let rel = rs_new
+            .iter()
+            .zip(&rs0)
+            .map(|(&n, &z)| if z > 0.0 { (n / z).sqrt() } else { 0.0 })
+            .fold(0.0f64, f64::max);
+        residuals.push(rel);
+        iter_secs.push(t0.elapsed().as_secs_f64());
+        iter_sim_secs.push(engine.sim_elapsed_secs() - sim0);
+        iters = it + 1;
+        if rel < opts.tol {
+            break;
+        }
+        let beta: Vec<f64> = rs_new
+            .iter()
+            .zip(&rs_old)
+            .map(|(&n, &o)| if o > 0.0 { n / o } else { 0.0 })
+            .collect();
+        for i in 0..d {
+            let pr = p.row_mut(i);
+            let rr = r.row(i);
+            for j in 0..c {
+                pr[j] = rr[j] + beta[j] * pr[j];
+            }
+        }
+        rs_old = rs_new;
+    }
+
+    Ok(SparkCgResult { w, iters, residuals, iter_secs, iter_sim_secs })
+}
+
+/// Spark-side random-feature expansion (one stage over the rows). The
+/// expanded matrix must fit the cluster memory budget — this is where the
+/// paper's ">10k features" Spark runs die (Table 1).
+pub fn rff_expand(
+    engine: &mut SparkEngine,
+    x: &IndexedRowMatrix,
+    map: &RffMap,
+) -> crate::Result<IndexedRowMatrix> {
+    anyhow::ensure!(x.cols == map.input_dim(), "rff input dim mismatch");
+    let expanded_bytes = x.rows * map.output_dim() * 8;
+    anyhow::ensure!(
+        expanded_bytes <= engine.memory_budget_bytes,
+        "expanded feature matrix ({}) exceeds cluster memory budget ({}); \
+         Spark job fails",
+        crate::util::fmt::bytes(expanded_bytes as u64),
+        crate::util::fmt::bytes(engine.memory_budget_bytes as u64),
+    );
+    let parts = engine.run_stage("rff:expand", x.rdd.partitions(), |_, part| {
+        part.iter()
+            .map(|row| {
+                let d = map.output_dim();
+                let mut z = vec![0.0; d];
+                for (k, &xk) in row.vector.iter().enumerate() {
+                    if xk != 0.0 {
+                        let orow = map.omega.row(k);
+                        for j in 0..d {
+                            z[j] += xk * orow[j];
+                        }
+                    }
+                }
+                for (j, zj) in z.iter_mut().enumerate() {
+                    *zj = map.scale * (*zj + map.bias[j]).cos();
+                }
+                IndexedRow { index: row.index, vector: z }
+            })
+            .collect::<Vec<_>>()
+    });
+    Ok(IndexedRowMatrix {
+        rdd: Rdd::from_partitions(parts),
+        rows: x.rows,
+        cols: map.output_dim(),
+    })
+}
+
+#[derive(Debug)]
+pub struct SparkSvdResult {
+    pub sigma: Vec<f64>,
+    pub v: LocalMatrix,
+    pub u: IndexedRowMatrix,
+    pub steps: usize,
+}
+
+/// Spark-style truncated SVD: Lanczos on the Gram operator with one stage
+/// per matvec (MLlib's `computeSVD` drives ARPACK exactly this way: the
+/// distributed multiply is an aggregate over the row RDD per Arnoldi
+/// step — that per-iteration stage cost is the whole story of Table 5).
+pub fn truncated_svd(
+    engine: &mut SparkEngine,
+    a: &IndexedRowMatrix,
+    opts: &SvdOptions,
+) -> crate::Result<SparkSvdResult> {
+    let k_dim = a.cols;
+    anyhow::ensure!(opts.rank >= 1 && opts.rank <= k_dim, "bad rank");
+    anyhow::ensure!(
+        a.size_bytes() <= engine.memory_budget_bytes,
+        "matrix ({}) exceeds cluster memory budget ({})",
+        crate::util::fmt::bytes(a.size_bytes() as u64),
+        crate::util::fmt::bytes(engine.memory_budget_bytes as u64),
+    );
+    let m = if opts.steps == 0 {
+        (2 * opts.rank + 24).min(k_dim)
+    } else {
+        opts.steps.min(k_dim)
+    };
+
+    let mut rng = Rng::new(opts.seed);
+    let mut v0 = rng.normals(k_dim);
+    let n0 = v0.iter().map(|x| x * x).sum::<f64>().sqrt();
+    v0.iter_mut().for_each(|x| *x /= n0);
+
+    let mut basis: Vec<Vec<f64>> = vec![v0];
+    let mut alphas = Vec::new();
+    let mut betas: Vec<f64> = Vec::new();
+
+    for j in 0..m {
+        let vj = LocalMatrix::from_data(k_dim, 1, basis[j].clone());
+        let w_mat = gram_stage(engine, a, &vj, 0.0, "svd:gram");
+        let mut w = w_mat.into_data();
+
+        let alpha: f64 = w.iter().zip(&basis[j]).map(|(a, b)| a * b).sum();
+        alphas.push(alpha);
+        for (wi, vi) in w.iter_mut().zip(&basis[j]) {
+            *wi -= alpha * vi;
+        }
+        if j > 0 {
+            for (wi, vi) in w.iter_mut().zip(&basis[j - 1]) {
+                *wi -= betas[j - 1] * vi;
+            }
+        }
+        for _ in 0..2 {
+            for q in &basis {
+                let c: f64 = w.iter().zip(q).map(|(a, b)| a * b).sum();
+                for (wi, qi) in w.iter_mut().zip(q) {
+                    *wi -= c * qi;
+                }
+            }
+        }
+        let beta = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if j + 1 == m {
+            break;
+        }
+        if beta < 1e-12 {
+            let mut fresh = rng.normals(k_dim);
+            for q in &basis {
+                let c: f64 = fresh.iter().zip(q).map(|(a, b)| a * b).sum();
+                for (fi, qi) in fresh.iter_mut().zip(q) {
+                    *fi -= c * qi;
+                }
+            }
+            let n = fresh.iter().map(|x| x * x).sum::<f64>().sqrt();
+            fresh.iter_mut().for_each(|x| *x /= n);
+            betas.push(0.0);
+            basis.push(fresh);
+            continue;
+        }
+        betas.push(beta);
+        w.iter_mut().for_each(|x| *x /= beta);
+        basis.push(w);
+    }
+
+    let steps = alphas.len();
+    let (theta, y) = crate::linalg::tridiag::tql2(&alphas, &betas[..steps - 1])?;
+    let k = opts.rank.min(steps);
+    let mut sigma = Vec::with_capacity(k);
+    let mut v = LocalMatrix::zeros(k_dim, k);
+    for kk in 0..k {
+        let idx = steps - 1 - kk;
+        sigma.push(theta[idx].max(0.0).sqrt());
+        for (j, q) in basis.iter().take(steps).enumerate() {
+            let c = y[idx][j];
+            for i in 0..k_dim {
+                let cur = v.get(i, kk);
+                v.set(i, kk, cur + c * q[i]);
+            }
+        }
+    }
+
+    // U = A·V·Σ⁻¹ as one more stage over the rows
+    let sig = sigma.clone();
+    let vref = &v;
+    let u_parts = engine.run_stage("svd:U", a.rdd.partitions(), |_, part| {
+        part.iter()
+            .map(|row| {
+                let mut u = vec![0.0; k];
+                for (kd, &xk) in row.vector.iter().enumerate() {
+                    if xk != 0.0 {
+                        let vrow = vref.row(kd);
+                        for kk in 0..k {
+                            u[kk] += xk * vrow[kk];
+                        }
+                    }
+                }
+                for (kk, s) in sig.iter().enumerate() {
+                    if *s > 1e-300 {
+                        u[kk] /= s;
+                    }
+                }
+                IndexedRow { index: row.index, vector: u }
+            })
+            .collect::<Vec<_>>()
+    });
+
+    Ok(SparkSvdResult {
+        sigma,
+        v,
+        u: IndexedRowMatrix {
+            rdd: Rdd::from_partitions(u_parts),
+            rows: a.rows,
+            cols: k,
+        },
+        steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn quiet_engine() -> SparkEngine {
+        let mut cfg = Config::default();
+        cfg.overhead.scheduler_delay_s = 0.0;
+        cfg.overhead.task_launch_s = 0.0;
+        let mut e = SparkEngine::new(2, &cfg);
+        e.inject_real_delays = false;
+        e
+    }
+
+    #[test]
+    fn spark_cg_matches_mpi_cg() {
+        let mut rng = Rng::new(21);
+        let n = 40;
+        let x = LocalMatrix::from_fn(n, 10, |_, _| rng.normal());
+        let y = LocalMatrix::from_fn(n, 3, |_, _| rng.normal());
+        let opts = CgOptions { lambda: 1e-3, tol: 1e-12, max_iters: 200 };
+
+        let mut engine = quiet_engine();
+        let xs = IndexedRowMatrix::from_local(&x, 3);
+        let ys = IndexedRowMatrix::from_local(&y, 3);
+        let spark = cg_solve(&mut engine, &xs, &ys, &opts).unwrap();
+
+        // oracle: the linalg (MPI-side) solver on one rank
+        let comms = crate::collectives::LocalComm::group(1, None);
+        let mut ne = crate::compute::NativeEngine::new();
+        let mpi = crate::linalg::cg_solve(&comms[0], &mut ne, &x, &y, n, &opts).unwrap();
+        assert!(
+            spark.w.max_abs_diff(&mpi.w) < 1e-8,
+            "diff {}",
+            spark.w.max_abs_diff(&mpi.w)
+        );
+        assert!(spark.residuals.last().unwrap() < &1e-10);
+    }
+
+    #[test]
+    fn spark_svd_matches_mpi_svd() {
+        let mut rng = Rng::new(22);
+        let a = LocalMatrix::from_fn(50, 16, |i, j| {
+            // decaying structure so the spectrum is well separated
+            ((i + 1) as f64).recip() * rng.normal() + if i % 16 == j { 3.0 } else { 0.0 }
+        });
+        let opts = SvdOptions { rank: 3, steps: 0, seed: 5 };
+
+        let mut engine = quiet_engine();
+        let ai = IndexedRowMatrix::from_local(&a, 4);
+        let spark = truncated_svd(&mut engine, &ai, &opts).unwrap();
+
+        let comms = crate::collectives::LocalComm::group(1, None);
+        let mut ne = crate::compute::NativeEngine::new();
+        let mpi = crate::linalg::truncated_svd(&comms[0], &mut ne, &a, &opts).unwrap();
+        for (s, m) in spark.sigma.iter().zip(&mpi.sigma) {
+            assert!((s - m).abs() < 1e-8 * (1.0 + m), "{s} vs {m}");
+        }
+    }
+
+    #[test]
+    fn memory_budget_enforced_like_table1() {
+        let mut cfg = Config::default();
+        cfg.spark_driver_max_bytes = 1024; // tiny budget
+        let mut engine = SparkEngine::new(2, &cfg);
+        engine.inject_real_delays = false;
+        let x = LocalMatrix::zeros(64, 8);
+        let xs = IndexedRowMatrix::from_local(&x, 2);
+        let ys = IndexedRowMatrix::from_local(&LocalMatrix::zeros(64, 2), 2);
+        let err = cg_solve(&mut engine, &xs, &ys, &CgOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("memory"), "{err}");
+
+        let map = RffMap::generate(8, 512, 1.0, 3);
+        let err = rff_expand(&mut engine, &xs, &map).unwrap_err();
+        assert!(err.to_string().contains("memory"), "{err}");
+    }
+
+    #[test]
+    fn rff_expand_matches_engine_expansion() {
+        let mut rng = Rng::new(23);
+        let x = LocalMatrix::from_fn(12, 6, |_, _| rng.normal());
+        let map = RffMap::generate(6, 32, 0.7, 9);
+        let mut engine = quiet_engine();
+        let xs = IndexedRowMatrix::from_local(&x, 3);
+        let z = rff_expand(&mut engine, &xs, &map).unwrap();
+        let want = map.expand(&mut crate::compute::NativeEngine::new(), &x).unwrap();
+        assert!(z.to_local().unwrap().max_abs_diff(&want) < 1e-12);
+    }
+}

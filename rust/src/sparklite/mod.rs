@@ -1,0 +1,27 @@
+//! The Spark stand-in (DESIGN.md §2): a partitioned-collection engine
+//! with bulk-synchronous stages and an explicit overhead model.
+//!
+//! The paper's baseline is Spark MLlib running iterative linear algebra;
+//! its defining performance property (Gittens et al. 2016, and Tables 2/5
+//! here) is that *every* iteration pays per-stage scheduler delay and
+//! per-task launch/serde costs, so iterative numerics are overhead-bound
+//! and anti-scale. sparklite reproduces that structure:
+//!
+//! * [`rdd::Rdd`] — immutable partitioned collections;
+//! * [`scheduler::SparkEngine`] — runs stages task-by-task, *really
+//!   computing* every task, while charging the calibrated overheads
+//!   ([`crate::config::OverheadConfig`]) as real injected delay plus
+//!   simulated-cluster-time accounting;
+//! * [`matrix::IndexedRowMatrix`] — the row-RDD matrix the ACI transfers
+//!   (paper §3.1.2);
+//! * [`mllib`] — Spark-style CG and truncated SVD baselines whose
+//!   per-row, unblocked compute mirrors how MLlib's row matrices work.
+
+pub mod matrix;
+pub mod mllib;
+pub mod rdd;
+pub mod scheduler;
+
+pub use matrix::{IndexedRow, IndexedRowMatrix};
+pub use rdd::Rdd;
+pub use scheduler::{SparkEngine, StageStats};

@@ -1,0 +1,93 @@
+//! Partitioned immutable collections (the RDD abstraction, minus lineage —
+//! fault tolerance is out of scope for the performance study).
+
+/// An in-memory partitioned collection.
+#[derive(Debug, Clone)]
+pub struct Rdd<T> {
+    partitions: Vec<Vec<T>>,
+}
+
+impl<T> Rdd<T> {
+    pub fn from_partitions(partitions: Vec<Vec<T>>) -> Self {
+        Rdd { partitions }
+    }
+
+    /// Partition a flat collection evenly.
+    pub fn parallelize(items: Vec<T>, num_partitions: usize) -> Self {
+        let n = items.len();
+        let ranges = crate::util::even_ranges(n, num_partitions.max(1));
+        let mut iter = items.into_iter();
+        let partitions = ranges
+            .iter()
+            .map(|&(a, b)| iter.by_ref().take(b - a).collect())
+            .collect();
+        Rdd { partitions }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn count(&self) -> usize {
+        self.partitions.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn partitions(&self) -> &[Vec<T>] {
+        &self.partitions
+    }
+
+    pub fn into_partitions(self) -> Vec<Vec<T>> {
+        self.partitions
+    }
+
+    /// Flatten to a single vector (driver-side collect, no overheads here —
+    /// the engine charges them).
+    pub fn collect(self) -> Vec<T> {
+        self.partitions.into_iter().flatten().collect()
+    }
+
+    /// Approximate in-memory size, used for the driver/cluster memory cap
+    /// (Table 1's capability boundary).
+    pub fn size_bytes(&self) -> usize
+    where
+        T: SizedBytes,
+    {
+        self.partitions
+            .iter()
+            .flat_map(|p| p.iter().map(|t| t.heap_bytes()))
+            .sum()
+    }
+}
+
+/// Heap payload estimate for the memory-cap model.
+pub trait SizedBytes {
+    fn heap_bytes(&self) -> usize;
+}
+
+impl SizedBytes for super::matrix::IndexedRow {
+    fn heap_bytes(&self) -> usize {
+        8 + self.vector.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelize_balances_and_preserves_order() {
+        let r = Rdd::parallelize((0..10).collect(), 3);
+        assert_eq!(r.num_partitions(), 3);
+        assert_eq!(r.count(), 10);
+        let sizes: Vec<usize> = r.partitions().iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        assert_eq!(r.collect(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_partitions_than_items() {
+        let r = Rdd::parallelize(vec![1, 2], 5);
+        assert_eq!(r.num_partitions(), 5);
+        assert_eq!(r.count(), 2);
+    }
+}

@@ -1,0 +1,233 @@
+//! The BSP stage scheduler with the calibrated overhead model.
+//!
+//! A stage = one task per partition + a synchronization barrier. Tasks
+//! execute for real (all numerics are computed); the Spark-specific costs
+//! the paper attributes the gap to are charged explicitly, in two ledgers:
+//!
+//! * **wallclock** — `scheduler_delay_s` is *slept* once per stage and
+//!   `task_launch_s` per task wave, so end-to-end wallclock shows the
+//!   paper's shape directly;
+//! * **simulated cluster time** — per-task durations (with deterministic
+//!   straggler jitter) are packed into `executors`-wide waves and the
+//!   [`SimClock`] advances by the sum of wave maxima, which is what the
+//!   same stage would cost on a real cluster with that many executors.
+//!
+//! Calibration (defaults in [`crate::config::OverheadConfig`]): Table 2
+//! reports Spark per-iteration costs of 40–75 s against 1.2–2.5 s for
+//! Alchemist at 20–40 nodes; Gittens et al. 2016 decompose the difference
+//! into scheduler delay, task start, and (de)serialization. Scaled by the
+//! ~1/50 problem-size ratio used throughout this repro, that yields
+//! scheduler_delay ≈ 0.4 s/stage and task_launch ≈ 20 ms/task. The
+//! overhead-sensitivity ablation sweeps these ×{0.25, 1, 4}.
+
+use std::time::Instant;
+
+use crate::config::OverheadConfig;
+use crate::metrics::SimClock;
+use crate::util::prng::Rng;
+
+/// Measured + modeled costs of the stages run so far.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    pub stages: usize,
+    pub tasks: usize,
+    /// Real seconds spent computing task bodies.
+    pub compute_secs: f64,
+    /// Real seconds of injected overhead (slept).
+    pub overhead_secs: f64,
+}
+
+/// Runs stages over partitioned data, charging overheads.
+pub struct SparkEngine {
+    pub executors: usize,
+    overhead: OverheadConfig,
+    /// Cluster/driver memory budget (bytes) for cached data; exceeding it
+    /// fails the job like the paper's >10k-feature Spark runs (Table 1).
+    pub memory_budget_bytes: usize,
+    sim: SimClock,
+    stats: StageStats,
+    jitter: Rng,
+    /// Skip the real sleeps (unit tests); sim accounting still applies.
+    pub inject_real_delays: bool,
+}
+
+impl SparkEngine {
+    pub fn new(executors: usize, cfg: &crate::config::Config) -> Self {
+        SparkEngine {
+            executors: executors.max(1),
+            overhead: cfg.overhead.clone(),
+            memory_budget_bytes: cfg.spark_driver_max_bytes,
+            sim: SimClock::new(),
+            stats: StageStats::default(),
+            jitter: Rng::new(cfg.seed ^ 0x5A5A),
+            inject_real_delays: true,
+        }
+    }
+
+    pub fn sim_elapsed_secs(&self) -> f64 {
+        self.sim.elapsed_secs()
+    }
+
+    pub fn stats(&self) -> &StageStats {
+        &self.stats
+    }
+
+    fn sleep(&mut self, secs: f64) {
+        self.stats.overhead_secs += secs;
+        if self.inject_real_delays && secs > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
+    }
+
+    /// Run one BSP stage: `task(partition_index, partition) -> output`,
+    /// one task per input partition. Returns the per-partition outputs.
+    pub fn run_stage<T, U>(
+        &mut self,
+        name: &str,
+        inputs: &[T],
+        mut task: impl FnMut(usize, &T) -> U,
+    ) -> Vec<U> {
+        let ntasks = inputs.len();
+        // stage submission: driver schedules, executors wake up
+        self.sleep(self.overhead.scheduler_delay_s);
+        self.sim.advance_serial(self.overhead.scheduler_delay_s);
+
+        let mut outputs = Vec::with_capacity(ntasks);
+        let mut durations = Vec::with_capacity(ntasks);
+        let mut result_bytes = 0usize;
+        for (i, input) in inputs.iter().enumerate() {
+            let t0 = Instant::now();
+            let out = task(i, input);
+            let secs = t0.elapsed().as_secs_f64();
+            self.stats.compute_secs += secs;
+            result_bytes += std::mem::size_of::<U>();
+            // deterministic straggler jitter on the modeled duration
+            let jit = (1.0 + self.overhead.straggler_cv * self.jitter.normal()).max(0.2);
+            durations.push(secs * jit + self.overhead.task_launch_s);
+            outputs.push(out);
+        }
+        // wallclock: task launches serialize per wave on the real box
+        let waves = ntasks.div_ceil(self.executors);
+        self.sleep(waves as f64 * self.overhead.task_launch_s);
+        // result serialization back to the driver
+        let serde_secs = result_bytes as f64 / self.overhead.serde_bytes_per_s;
+        self.sleep(serde_secs);
+        self.sim.advance_serial(serde_secs);
+
+        // simulated cluster time: pack tasks into executor-wide waves
+        durations.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut sim_stage = 0.0;
+        for wave in durations.chunks(self.executors) {
+            sim_stage += wave[0]; // descending sort: first = max of wave
+        }
+        self.sim.advance_parallel(&[sim_stage]);
+
+        self.stats.stages += 1;
+        self.stats.tasks += ntasks;
+        log::debug!(
+            "sparklite stage {name}: {ntasks} tasks, sim {:.3}s",
+            sim_stage
+        );
+        outputs
+    }
+
+    /// A shuffle-like aggregation stage: task outputs are combined
+    /// pairwise on the driver (`reduce`), charging serde per byte moved.
+    pub fn run_stage_reduce<T, U>(
+        &mut self,
+        name: &str,
+        inputs: &[T],
+        task: impl FnMut(usize, &T) -> U,
+        reduce: impl Fn(U, U) -> U,
+        bytes_per_output: usize,
+    ) -> Option<U> {
+        let outputs = self.run_stage(name, inputs, task);
+        let n = outputs.len();
+        // driver-side merge pays deserialization of every task result
+        let serde = (n * bytes_per_output) as f64 / self.overhead.serde_bytes_per_s;
+        self.sleep(serde);
+        self.sim.advance_serial(serde);
+        outputs.into_iter().reduce(reduce)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn quiet_engine(executors: usize) -> SparkEngine {
+        let mut cfg = Config::default();
+        cfg.overhead.scheduler_delay_s = 0.0;
+        cfg.overhead.task_launch_s = 0.01;
+        let mut e = SparkEngine::new(executors, &cfg);
+        e.inject_real_delays = false;
+        e
+    }
+
+    #[test]
+    fn stage_computes_all_tasks() {
+        let mut e = quiet_engine(2);
+        let parts = vec![vec![1, 2], vec![3], vec![4, 5, 6]];
+        let sums = e.run_stage("sum", &parts, |_, p| p.iter().sum::<i32>());
+        assert_eq!(sums, vec![3, 3, 15]);
+        assert_eq!(e.stats().stages, 1);
+        assert_eq!(e.stats().tasks, 3);
+    }
+
+    #[test]
+    fn sim_time_decreases_with_executors() {
+        // identical work, more executors => fewer waves => less sim time
+        let run = |execs: usize| {
+            let mut e = quiet_engine(execs);
+            let parts: Vec<u64> = (0..8).collect();
+            e.run_stage("spin", &parts, |_, _| {
+                // non-trivial real work so durations are non-zero
+                let mut acc = 0u64;
+                for i in 0..200_000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            });
+            e.sim_elapsed_secs()
+        };
+        let t2 = run(2);
+        let t8 = run(8);
+        assert!(t8 < t2, "sim time should shrink with executors: {t2} vs {t8}");
+    }
+
+    #[test]
+    fn reduce_combines() {
+        let mut e = quiet_engine(4);
+        let parts = vec![vec![1.0, 2.0], vec![3.0]];
+        let total = e
+            .run_stage_reduce(
+                "agg",
+                &parts,
+                |_, p: &Vec<f64>| p.iter().sum::<f64>(),
+                |a, b| a + b,
+                8,
+            )
+            .unwrap();
+        assert_eq!(total, 6.0);
+    }
+
+    #[test]
+    fn overhead_ledger_accumulates() {
+        let mut cfg = Config::default();
+        cfg.overhead.scheduler_delay_s = 0.5;
+        cfg.overhead.task_launch_s = 0.125;
+        let mut e = SparkEngine::new(2, &cfg);
+        e.inject_real_delays = false;
+        let parts = vec![(), (), (), ()];
+        e.run_stage("s", &parts, |_, _| ());
+        // 0.5 scheduler + 2 waves * 0.125 launch (+ negligible serde)
+        assert!(
+            (e.stats().overhead_secs - 0.75).abs() < 1e-3,
+            "{}",
+            e.stats().overhead_secs
+        );
+        // sim time includes scheduler delay plus per-task launch waves
+        assert!(e.sim_elapsed_secs() >= 0.5 + 2.0 * 0.125 - 1e-6);
+    }
+}

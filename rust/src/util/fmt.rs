@@ -1,0 +1,49 @@
+//! Human-readable formatting for sizes and durations.
+
+/// Format a byte count: `1536 -> "1.5 KiB"`.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format seconds adaptively: `0.00042 -> "0.42 ms"`, `75.3 -> "75.3 s"`.
+pub fn secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 100.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{s:.1} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1536), "1.5 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn secs_ranges() {
+        assert!(secs(0.0000004).ends_with("µs"));
+        assert!(secs(0.004).ends_with("ms"));
+        assert!(secs(4.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,60 @@
+//! Small shared utilities: deterministic PRNG, timing, formatting, padding.
+
+pub mod fmt;
+pub mod prng;
+pub mod timer;
+
+/// Round `n` up to the next multiple of `m` (`m > 0`).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Split `n` items into `parts` contiguous ranges as evenly as possible
+/// (first `n % parts` ranges get one extra). Returns `(start, end)` pairs;
+/// empty ranges are allowed when `parts > n`.
+pub fn even_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    debug_assert!(parts > 0);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn even_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 16, 100] {
+            for parts in [1usize, 2, 3, 7, 16] {
+                let r = even_ranges(n, parts);
+                assert_eq!(r.len(), parts);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[parts - 1].1, n);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                    // balanced: sizes differ by at most 1
+                    let a = w[0].1 - w[0].0;
+                    let b = w[1].1 - w[1].0;
+                    assert!(a >= b && a - b <= 1);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Wall-clock timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// Measure one closure; returns (result, elapsed seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// CPU seconds consumed by the *calling thread* so far.
+///
+/// This is the honest per-rank "busy time" on a box where worker threads
+/// time-slice one core: wallclock inside a task includes time spent
+/// descheduled while sibling ranks run, but thread CPU time does not. The
+/// SimClock uses `max` over ranks of this to reconstruct what the same
+/// SPMD region would cost with one core per rank (DESIGN.md §2).
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // Safety: plain syscall filling the struct we own.
+    let rc = unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts)
+    };
+    if rc != 0 {
+        return 0.0;
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Measure one closure's thread-CPU cost; returns (result, cpu seconds).
+pub fn time_cpu<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let c0 = thread_cpu_secs();
+    let out = f();
+    (out, (thread_cpu_secs() - c0).max(0.0))
+}
+
+/// A resettable stopwatch accumulating named laps (used by the driver to
+/// break a routine into the paper's columns: transfer / compute / return).
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    laps: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin a lap, ending any lap in progress.
+    pub fn start(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// End the lap in progress (no-op if none).
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.laps.push((name, t0.elapsed()));
+        }
+    }
+
+    /// Seconds accumulated under `name` across all laps.
+    pub fn secs(&self, name: &str) -> f64 {
+        self.laps
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| d.as_secs_f64())
+            .sum()
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.laps.iter().map(|(_, d)| d.as_secs_f64()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates_named_laps() {
+        let mut sw = Stopwatch::new();
+        sw.start("a");
+        std::thread::sleep(Duration::from_millis(5));
+        sw.start("b"); // implicitly stops "a"
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        sw.start("a");
+        sw.stop();
+        assert!(sw.secs("a") >= 0.004);
+        assert!(sw.secs("b") >= 0.004);
+        assert!(sw.secs("missing") == 0.0);
+        assert_eq!(sw.laps().len(), 3);
+        assert!(sw.total_secs() >= sw.secs("a") + sw.secs("b") - 1e-9);
+    }
+}

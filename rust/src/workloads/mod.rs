@@ -1,0 +1,9 @@
+//! Synthetic workload generators — the data-availability substitutions of
+//! DESIGN.md §2 (TIMIT is licensed, CFSR is 400 GB; the experiments need
+//! their *shapes*, not their bytes).
+
+pub mod ocean;
+pub mod timit;
+
+pub use ocean::OceanSpec;
+pub use timit::TimitSpec;

@@ -1,0 +1,141 @@
+//! Property tests: collective algorithms equal their serial semantics for
+//! arbitrary group sizes, lengths, and roots.
+
+use alchemist::collectives::{
+    allgather, allreduce_sum, broadcast, gather, reduce_sum, scatter, Communicator,
+    LocalComm,
+};
+use alchemist::testkit::props;
+
+/// Run `f` on every rank; collect per-rank results sorted by rank.
+fn run_group<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(&LocalComm) -> T + Send + Sync + Clone + 'static,
+{
+    let comms = LocalComm::group(n, None);
+    let mut handles = Vec::new();
+    for c in comms {
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || (c.rank(), f(&c))));
+    }
+    let mut out: Vec<(usize, T)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    out.sort_by_key(|(r, _)| *r);
+    out.into_iter().map(|(_, t)| t).collect()
+}
+
+#[test]
+fn allreduce_equals_serial_sum() {
+    props(40, |g| {
+        let p = g.usize_in(1, 6);
+        let n = g.usize_in(0, 200);
+        let inputs: Vec<Vec<f64>> = (0..p).map(|_| g.vec_normal(n)).collect();
+        let want: Vec<f64> = (0..n)
+            .map(|i| inputs.iter().map(|v| v[i]).sum())
+            .collect();
+        let inputs2 = inputs.clone();
+        let results = run_group(p, move |c| {
+            let mut buf = inputs2[c.rank()].clone();
+            allreduce_sum(c, 7, &mut buf);
+            buf
+        });
+        for got in results {
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()));
+            }
+        }
+    });
+}
+
+#[test]
+fn broadcast_from_random_root() {
+    props(40, |g| {
+        let p = g.usize_in(1, 7);
+        let root = g.usize_in(0, p - 1);
+        let n = g.usize_in(0, 64);
+        let payload = g.vec_normal(n);
+        let payload2 = payload.clone();
+        let results = run_group(p, move |c| {
+            let mut buf = if c.rank() == root { payload2.clone() } else { vec![] };
+            broadcast(c, 9, root, &mut buf);
+            buf
+        });
+        for got in results {
+            assert_eq!(got, payload);
+        }
+    });
+}
+
+#[test]
+fn reduce_then_scatter_then_allgather_chain() {
+    props(25, |g| {
+        let p = g.usize_in(1, 5);
+        let n = g.usize_in(1, 32);
+        let inputs: Vec<Vec<f64>> = (0..p).map(|_| g.vec_normal(n)).collect();
+        let want_sum: Vec<f64> = (0..n)
+            .map(|i| inputs.iter().map(|v| v[i]).sum())
+            .collect();
+        let inputs2 = inputs.clone();
+        let results = run_group(p, move |c| {
+            // reduce to root 0
+            let mut buf = inputs2[c.rank()].clone();
+            reduce_sum(c, 11, 0, &mut buf);
+            // root scatters equal shares back (pad to p*n for evenness)
+            let parts = if c.rank() == 0 {
+                Some(vec![buf.clone(); c.size()])
+            } else {
+                None
+            };
+            let share = scatter(c, 12, 0, parts);
+            // everyone allgathers their share
+            let all = allgather(c, 13, share);
+            (c.rank(), all)
+        });
+        for (_, all) in results {
+            assert_eq!(all.len(), p);
+            for part in all {
+                for (a, b) in part.iter().zip(&want_sum) {
+                    assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gather_preserves_rank_payloads() {
+    props(30, |g| {
+        let p = g.usize_in(1, 6);
+        let sizes: Vec<usize> = (0..p).map(|_| g.usize_in(0, 20)).collect();
+        let sizes2 = sizes.clone();
+        let results = run_group(p, move |c| {
+            let mine = vec![c.rank() as f64; sizes2[c.rank()]];
+            gather(c, 15, 0, mine)
+        });
+        let root_view = results[0].as_ref().expect("root gathers");
+        for (r, part) in root_view.iter().enumerate() {
+            assert_eq!(part, &vec![r as f64; sizes[r]]);
+        }
+        for other in &results[1..] {
+            assert!(other.is_none());
+        }
+    });
+}
+
+#[test]
+fn concurrent_collectives_with_distinct_tags() {
+    // two interleaved allreduces on different tag windows must not mix
+    let results = run_group(4, |c| {
+        let mut a = vec![c.rank() as f64; 16];
+        let mut b = vec![(c.rank() * 10) as f64; 16];
+        // interleave manually: start both, alternating chunks
+        allreduce_sum(c, 0x1000, &mut a);
+        allreduce_sum(c, 0x2000, &mut b);
+        (a[0], b[0])
+    });
+    for (a, b) in results {
+        assert_eq!(a, 6.0); // 0+1+2+3
+        assert_eq!(b, 60.0);
+    }
+}

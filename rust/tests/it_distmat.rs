@@ -1,0 +1,135 @@
+//! Property tests: layouts, local matrix algebra, and store invariants.
+
+use alchemist::coordinator::MatrixStore;
+use alchemist::distmat::{LocalMatrix, RowBlockLayout};
+use alchemist::testkit::{props, Gen};
+
+fn random_matrix(g: &mut Gen, r: usize, c: usize) -> LocalMatrix {
+    let data = g.vec_normal(r * c);
+    LocalMatrix::from_data(r, c, data)
+}
+
+#[test]
+fn layout_partitions_rows_exactly_once() {
+    props(200, |g| {
+        let rows = g.usize_in(1, 5000);
+        let cols = g.usize_in(1, 64);
+        let workers = g.usize_in(1, 16);
+        let l = RowBlockLayout::even(rows, cols, workers);
+        l.validate().unwrap();
+        assert_eq!(l.workers(), workers);
+        // sizes balanced within 1
+        let sizes: Vec<usize> = l.ranges.iter().map(|&(a, b)| b - a).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 1);
+        // owner_of agrees with ranges at boundaries
+        for &(a, b) in &l.ranges {
+            if a < b {
+                let r0 = l.owner_of(a);
+                let r1 = l.owner_of(b - 1);
+                assert_eq!(l.ranges[r0].0, a);
+                assert_eq!(l.ranges[r1].1, b);
+            }
+        }
+        // wire roundtrip
+        assert_eq!(RowBlockLayout::from_wire(rows as u64, cols as u64, &l.to_wire()).unwrap(), l);
+    });
+}
+
+#[test]
+fn gemm_variants_agree_on_random_shapes() {
+    props(40, |g| {
+        let m = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let k = g.usize_in(1, 40);
+        let a = random_matrix(g, m, k);
+        let b = random_matrix(g, k, n);
+        let mut c_nn = LocalMatrix::zeros(m, n);
+        c_nn.gemm_nn(&a, &b);
+        let mut c_tn = LocalMatrix::zeros(m, n);
+        c_tn.gemm_tn(&a.transpose(), &b);
+        let mut c_nt = LocalMatrix::zeros(m, n);
+        c_nt.gemm_nt(&a, &b.transpose());
+        assert!(c_nn.max_abs_diff(&c_tn) < 1e-10);
+        assert!(c_nn.max_abs_diff(&c_nt) < 1e-10);
+    });
+}
+
+#[test]
+fn pad_shrink_tile_invariants() {
+    props(100, |g| {
+        let r = g.usize_in(1, 30);
+        let c = g.usize_in(1, 30);
+        let a = random_matrix(g, r, c);
+        let pr = r + g.usize_in(0, 20);
+        let pc = c + g.usize_in(0, 20);
+        let p = a.padded(pr, pc);
+        assert_eq!(p.shrunk(r, c), a);
+        assert!((p.fro_sq() - a.fro_sq()).abs() < 1e-9);
+        let times = g.usize_in(1, 4);
+        let t = a.tile_cols(times);
+        assert_eq!(t.cols(), c * times);
+        assert!((t.fro_sq() - times as f64 * a.fro_sq()).abs() < 1e-6 * (1.0 + a.fro_sq()));
+    });
+}
+
+#[test]
+fn store_ingest_covers_matrix_in_any_order() {
+    props(60, |g| {
+        let rows = g.usize_in(1, 200);
+        let cols = g.usize_in(1, 8);
+        let workers = g.usize_in(1, 4);
+        let layout = RowBlockLayout::even(rows, cols, workers);
+        let full = random_matrix(g, rows, cols);
+
+        // build stores, write each row to its owner in shuffled order
+        let mut stores: Vec<MatrixStore> =
+            (0..workers).map(MatrixStore::new).collect();
+        for s in &mut stores {
+            s.alloc(1, "X", layout.clone()).unwrap();
+        }
+        let mut order: Vec<usize> = (0..rows).collect();
+        // shuffle via Gen
+        for i in (1..order.len()).rev() {
+            let j = g.usize_in(0, i);
+            order.swap(i, j);
+        }
+        for &i in &order {
+            let owner = layout.owner_of(i);
+            stores[owner]
+                .write_rows(1, i as u64, cols, full.row(i))
+                .unwrap();
+        }
+        // seal: counts add up
+        let total: u64 = stores.iter_mut().map(|s| s.seal(1).unwrap()).sum();
+        assert_eq!(total, rows as u64);
+        // read back via global coordinates
+        for &i in order.iter().take(20) {
+            let owner = layout.owner_of(i);
+            assert_eq!(stores[owner].read_rows(1, i as u64, 1).unwrap(), full.row(i));
+        }
+    });
+}
+
+#[test]
+fn col_dots_and_axpy_linearity() {
+    props(100, |g| {
+        let r = g.usize_in(1, 30);
+        let c = g.usize_in(1, 10);
+        let a = random_matrix(g, r, c);
+        let b = random_matrix(g, r, c);
+        let alpha = g.f64_in(-3.0, 3.0);
+        // <a + alpha b, a + alpha b> per column == aa + 2 alpha ab + alpha^2 bb
+        let mut apb = a.clone();
+        apb.axpy(alpha, &b);
+        let lhs = apb.col_dots(&apb);
+        let aa = a.col_dots(&a);
+        let ab = a.col_dots(&b);
+        let bb = b.col_dots(&b);
+        for j in 0..c {
+            let rhs = aa[j] + 2.0 * alpha * ab[j] + alpha * alpha * bb[j];
+            assert!((lhs[j] - rhs).abs() < 1e-8 * (1.0 + rhs.abs()));
+        }
+    });
+}

@@ -1,0 +1,178 @@
+//! End-to-end integration: the paper's two experiments, miniaturized, on
+//! the full production stack — TCP client, Alchemist server, XLA engine on
+//! the workers (requires `make artifacts`; skips loudly otherwise).
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::{Config, EngineKind};
+use alchemist::coordinator::AlchemistServer;
+use alchemist::distmat::LocalMatrix;
+use alchemist::protocol::Params;
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::workloads::{timit, OceanSpec, TimitSpec};
+
+fn xla_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine = EngineKind::Xla;
+    cfg
+}
+
+macro_rules! require_artifacts {
+    ($cfg:expr) => {
+        if !$cfg.resolved_artifacts_dir().join("manifest.txt").exists() {
+            eprintln!("SKIP: artifacts missing; run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn speech_cg_offload_end_to_end() {
+    let cfg = xla_cfg();
+    require_artifacts!(cfg);
+    // miniature TIMIT: raw features in, RFF expansion + CG server-side
+    let spec = TimitSpec {
+        train_rows: 512,
+        test_rows: 128,
+        raw_features: 40,
+        classes: 8,
+        noise: 0.4,
+        seed: 99,
+    };
+    let data = spec.generate();
+
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2).unwrap();
+    ac.register_library("skylark", "builtin:skylark").unwrap();
+
+    let (al_x, _) = ac
+        .send_matrix("X", &IndexedRowMatrix::from_local(&data.x_train, 4))
+        .unwrap();
+    let (al_y, _) = ac
+        .send_matrix("Y", &IndexedRowMatrix::from_local(&data.y_train, 4))
+        .unwrap();
+
+    let rff_d = 512usize;
+    let res = ac
+        .run_task(
+            "skylark",
+            "cg_solve",
+            Params::new()
+                .with_matrix("X", al_x.id)
+                .with_matrix("Y", al_y.id)
+                .with_f64("lambda", 1e-4)
+                .with_f64("tol", 1e-8)
+                .with_i64("max_iters", 200)
+                .with_i64("rff_d", rff_d as i64)
+                .with_f64("rff_gamma", 0.1)
+                .with_i64("rff_seed", 1234),
+        )
+        .unwrap();
+    assert!(res.timing("expand") > 0.0, "expansion happened server-side");
+    let al_w = res.output("W").unwrap().clone();
+    assert_eq!((al_w.rows, al_w.cols), (rff_d, 8));
+
+    let (w, _) = ac.to_indexed_row_matrix(&al_w, 1).unwrap();
+    let w = w.to_local().unwrap();
+
+    // client-side evaluation: expand test features with the same map
+    let map = alchemist::linalg::RffMap::generate(40, rff_d, 0.1, 1234);
+    let mut ne = alchemist::compute::NativeEngine::new();
+    let z_test = map.expand(&mut ne, &data.x_test).unwrap();
+    let mut scores = LocalMatrix::zeros(z_test.rows(), 8);
+    scores.gemm_nn(&z_test, &w);
+    let acc = timit::accuracy(&scores, &data.labels_test);
+    assert!(acc > 0.5, "test accuracy {acc} must beat 1/8 chance soundly");
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn ocean_svd_offload_end_to_end() {
+    let cfg = xla_cfg();
+    require_artifacts!(cfg);
+    let spec = OceanSpec {
+        cells: 1024,
+        times: 192,
+        modes: 8,
+        sigma0: 60.0,
+        decay: 0.7,
+        noise: 0.02,
+        seed: 42,
+    };
+    let dir = std::env::temp_dir().join("alchemist-it-e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ocean.bin");
+    spec.write_file(&path).unwrap();
+
+    let server = AlchemistServer::start(cfg.clone(), 3).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // use-case 3 of Table 5: Alchemist loads the file directly
+    let load = ac
+        .run_task(
+            "elemental",
+            "load_hdf5",
+            Params::new().with_str("path", path.to_str().unwrap()),
+        )
+        .unwrap();
+    let al_a = load.output("A").unwrap().clone();
+    assert_eq!((al_a.rows, al_a.cols), (1024, 192));
+    assert!(load.timing("load") > 0.0);
+
+    let svd = ac
+        .run_task(
+            "elemental",
+            "truncated_svd",
+            Params::new().with_matrix("A", al_a.id).with_i64("rank", 8),
+        )
+        .unwrap();
+    let sigma = match svd.scalars.get("sigma") {
+        Some(alchemist::protocol::Value::F64s(v)) => v.clone(),
+        other => panic!("sigma missing: {other:?}"),
+    };
+    assert_eq!(sigma.len(), 8);
+
+    // results back to the client (the S ⇐ A leg)
+    let al_u = svd.output("U").unwrap().clone();
+    let al_v = svd.output("V").unwrap().clone();
+    let (u, _) = ac.to_indexed_row_matrix(&al_u, 2).unwrap();
+    let (v, _) = ac.to_indexed_row_matrix(&al_v, 1).unwrap();
+    let u = u.to_local().unwrap();
+    let v = v.to_local().unwrap();
+
+    // certify: ‖A·v_k − σ_k·u_k‖ small relative to σ_k, and energy capture
+    let a = alchemist::hdf5sim::read_matrix(&path).unwrap();
+    let mut av = LocalMatrix::zeros(1024, 8);
+    av.gemm_nn(&a, &v);
+    for k in 0..8 {
+        let mut res = 0.0f64;
+        for i in 0..1024 {
+            res += (av.get(i, k) - sigma[k] * u.get(i, k)).powi(2);
+        }
+        let rel = res.sqrt() / sigma[k].max(1e-300);
+        assert!(rel < 1e-6, "triplet {k} residual {rel}");
+    }
+    let energy: f64 = sigma.iter().map(|s| s * s).sum();
+    assert!(energy / a.fro_sq() > 0.95, "rank-8 energy capture");
+
+    // spark baseline agrees on the spectrum (numerics identical)
+    let mut cfg_q = Config::default();
+    cfg_q.overhead.scheduler_delay_s = 0.0;
+    cfg_q.overhead.task_launch_s = 0.0;
+    let mut spark = alchemist::sparklite::SparkEngine::new(2, &cfg_q);
+    spark.inject_real_delays = false;
+    let sres = alchemist::sparklite::mllib::truncated_svd(
+        &mut spark,
+        &IndexedRowMatrix::from_local(&a, 4),
+        &alchemist::linalg::SvdOptions { rank: 8, steps: 0, seed: 0x53D5 },
+    )
+    .unwrap();
+    for (a_s, b_s) in sigma.iter().zip(&sres.sigma) {
+        assert!((a_s - b_s).abs() < 1e-6 * (1.0 + b_s), "{a_s} vs {b_s}");
+    }
+
+    ac.shutdown_server().unwrap();
+    server.shutdown_on_request();
+}

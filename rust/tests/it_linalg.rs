@@ -1,0 +1,159 @@
+//! Property tests: solver invariants across random problems and worker
+//! counts (convergence, residuals, orthogonality, spectrum recovery).
+
+use alchemist::collectives::{Communicator, LocalComm};
+use alchemist::compute::NativeEngine;
+use alchemist::distmat::{LocalMatrix, RowBlockLayout};
+use alchemist::linalg::{
+    cg_solve, cholesky_qr2, truncated_svd, CgOptions, SvdOptions,
+};
+use alchemist::testkit::{props, Gen};
+
+fn random_matrix(g: &mut Gen, r: usize, c: usize) -> LocalMatrix {
+    let data = g.vec_normal(r * c);
+    LocalMatrix::from_data(r, c, data)
+}
+
+/// Run an SPMD closure over `workers` ranks on row-shards of `a` (and
+/// optional `b`), collecting per-rank results.
+fn spmd<T, F>(workers: usize, a: &LocalMatrix, b: Option<&LocalMatrix>, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(&LocalComm, LocalMatrix, Option<LocalMatrix>) -> T + Send + Sync + Clone + 'static,
+{
+    let layout = RowBlockLayout::even(a.rows(), a.cols(), workers);
+    let comms = LocalComm::group(workers, None);
+    let mut handles = Vec::new();
+    for comm in comms {
+        let (lo, hi) = layout.ranges[comm.rank()];
+        let al = a.slice_rows(lo, hi);
+        let bl = b.map(|m| m.slice_rows(lo, hi));
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || f(&comm, al, bl)));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn cg_residual_certifies_solution() {
+    props(12, |g| {
+        let n = g.usize_in(10, 60);
+        let d = g.usize_in(2, 12);
+        let c = g.usize_in(1, 4);
+        let workers = g.usize_in(1, 3);
+        let lambda = g.f64_in(1e-4, 1e-1);
+        let x = random_matrix(g, n, d);
+        let y = random_matrix(g, n, c);
+        let opts = CgOptions { lambda, tol: 1e-12, max_iters: 500 };
+
+        let results = spmd(workers, &x, Some(&y), move |comm, xl, yl| {
+            cg_solve(comm, &mut NativeEngine::new(), &xl, &yl.unwrap(), n, &opts).unwrap()
+        });
+        let w = &results[0].w;
+        // certify: ‖(XᵀX + nλI)W − XᵀY‖ / ‖XᵀY‖ tiny
+        let mut b = LocalMatrix::zeros(d, c);
+        b.gemm_tn(&x, &y);
+        let mut lhs = w.clone();
+        lhs.scale(n as f64 * lambda);
+        let mut xw = LocalMatrix::zeros(n, c);
+        xw.gemm_nn(&x, w);
+        lhs.gemm_tn(&x, &xw);
+        lhs.axpy(-1.0, &b);
+        let rel = lhs.fro_norm() / b.fro_norm().max(1e-300);
+        assert!(rel < 1e-8, "relative normal-equation residual {rel}");
+        // residual history is monotone-ish at the tail: final below tol
+        assert!(results[0].residuals.last().unwrap() < &1e-10);
+        // all ranks agree bitwise (replicated state)
+        for r in &results[1..] {
+            assert_eq!(&r.w, w);
+        }
+    });
+}
+
+#[test]
+fn qr_invariants_random_problems() {
+    props(12, |g| {
+        let n = g.usize_in(8, 80);
+        let k = g.usize_in(1, 8.min(n));
+        let workers = g.usize_in(1, 3);
+        let a = random_matrix(g, n, k);
+        let a2 = a.clone();
+        let results = spmd(workers, &a, None, move |comm, al, _| {
+            let (q, r) = cholesky_qr2(comm, &mut NativeEngine::new(), &al).unwrap();
+            (comm.rank(), q, r)
+        });
+        // reassemble Q
+        let layout = RowBlockLayout::even(n, k, workers);
+        let mut q = LocalMatrix::zeros(n, k);
+        for (rank, ql, _) in &results {
+            q.write_rows(layout.ranges[*rank].0, ql);
+        }
+        let r = &results[0].2;
+        let mut qr = LocalMatrix::zeros(n, k);
+        qr.gemm_nn(&q, r);
+        assert!(qr.max_abs_diff(&a2) < 1e-8);
+        let mut qtq = LocalMatrix::zeros(k, k);
+        qtq.gemm_tn(&q, &q);
+        assert!(qtq.max_abs_diff(&LocalMatrix::identity(k)) < 1e-9);
+    });
+}
+
+#[test]
+fn svd_invariants_random_spectra() {
+    props(8, |g| {
+        let n = g.usize_in(30, 80);
+        let kdim = g.usize_in(10, 24);
+        let rank = g.usize_in(1, 5);
+        let workers = g.usize_in(1, 3);
+        let a = random_matrix(g, n, kdim);
+        let a2 = a.clone();
+        let opts = SvdOptions { rank, steps: 0, seed: g.u64() };
+
+        let results = spmd(workers, &a, None, move |comm, al, _| {
+            let r = truncated_svd(comm, &mut NativeEngine::new(), &al, &opts).unwrap();
+            (comm.rank(), r)
+        });
+        let r0 = &results[0].1;
+        // descending, nonnegative
+        for w in r0.sigma.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(r0.sigma.iter().all(|&s| s >= 0.0));
+        // V orthonormal
+        let mut vtv = LocalMatrix::zeros(rank, rank);
+        vtv.gemm_tn(&r0.v, &r0.v);
+        assert!(vtv.max_abs_diff(&LocalMatrix::identity(rank)) < 1e-7);
+        // Rayleigh check: σ² == vᵀ(AᵀA)v per vector
+        let mut g_mat = LocalMatrix::zeros(kdim, kdim);
+        g_mat.gemm_tn(&a2, &a2);
+        for kk in 0..rank {
+            let v = r0.v.slice_cols(kk, kk + 1);
+            let mut gv = LocalMatrix::zeros(kdim, 1);
+            gv.gemm_nn(&g_mat, &v);
+            let mut vgv = LocalMatrix::zeros(1, 1);
+            vgv.gemm_tn(&v, &gv);
+            let sig2 = r0.sigma[kk] * r0.sigma[kk];
+            assert!(
+                (vgv.get(0, 0) - sig2).abs() < 1e-6 * (1.0 + sig2),
+                "rayleigh mismatch: {} vs {sig2}",
+                vgv.get(0, 0)
+            );
+        }
+    });
+}
+
+#[test]
+fn tridiag_spectrum_shift_invariance() {
+    props(50, |g| {
+        let n = g.usize_in(1, 40);
+        let d = g.vec_normal(n);
+        let e = g.vec_normal(n.saturating_sub(1));
+        let shift = g.f64_in(-5.0, 5.0);
+        let (vals, _) = alchemist::linalg::tridiag::tql2(&d, &e).unwrap();
+        let d2: Vec<f64> = d.iter().map(|x| x + shift).collect();
+        let (vals2, _) = alchemist::linalg::tridiag::tql2(&d2, &e).unwrap();
+        for (a, b) in vals.iter().zip(&vals2) {
+            assert!((a + shift - b).abs() < 1e-8 * (1.0 + b.abs()));
+        }
+    });
+}

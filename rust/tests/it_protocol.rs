@@ -1,0 +1,170 @@
+//! Property tests: wire protocol total-roundtrip invariants (the
+//! proptest-style suite; see `alchemist::testkit`).
+
+use alchemist::protocol::{ControlMsg, DataMsg, MatrixInfo, Params, Value};
+use alchemist::testkit::{props, Gen};
+
+fn random_params(g: &mut Gen) -> Params {
+    let mut p = Params::new();
+    for _ in 0..g.usize_in(0, 6) {
+        let key = g.ident(8);
+        let v = match g.usize_in(0, 5) {
+            0 => Value::I64(g.u64() as i64),
+            1 => Value::F64(g.normal() * 1e3),
+            2 => Value::Bool(g.bool()),
+            3 => Value::Str(g.ident(16)),
+            4 => Value::Matrix(g.u64()),
+            _ => {
+                let n = g.usize_in(0, 32);
+                Value::F64s(g.vec_normal(n))
+            }
+        };
+        p = p.set(&key, v);
+    }
+    p
+}
+
+fn random_info(g: &mut Gen) -> MatrixInfo {
+    MatrixInfo {
+        id: g.u64(),
+        rows: g.u64() % 1_000_000,
+        cols: g.u64() % 10_000,
+        name: g.ident(12),
+    }
+}
+
+#[test]
+fn control_messages_roundtrip() {
+    props(300, |g| {
+        let msg = match g.usize_in(0, 9) {
+            0 => ControlMsg::Handshake { client_name: g.ident(20), version: g.u64() as u32 },
+            1 => ControlMsg::RegisterLibrary { name: g.ident(8), path: g.ident(30) },
+            2 => ControlMsg::CreateMatrix {
+                name: g.ident(8),
+                rows: g.u64() % 1_000_000,
+                cols: g.u64() % 10_000,
+            },
+            3 => ControlMsg::RunTask {
+                lib: g.ident(8),
+                routine: g.ident(12),
+                params: random_params(g),
+            },
+            4 => {
+                let n = g.usize_in(0, 5);
+                ControlMsg::HandshakeAck {
+                    session_id: g.u64(),
+                    version: 1,
+                    worker_addrs: (0..n).map(|_| g.ident(21)).collect(),
+                }
+            }
+            5 => {
+                let n = g.usize_in(0, 4);
+                let mut start = 0u64;
+                let row_ranges = (0..n)
+                    .map(|_| {
+                        let len = g.u64() % 1000;
+                        let r = (start, start + len);
+                        start += len;
+                        r
+                    })
+                    .collect();
+                ControlMsg::MatrixCreated { id: g.u64(), row_ranges }
+            }
+            6 => ControlMsg::TaskDone {
+                outputs: (0..g.usize_in(0, 3)).map(|_| random_info(g)).collect(),
+                scalars: random_params(g),
+                timings: (0..g.usize_in(0, 4))
+                    .map(|_| (g.ident(10), g.f64_in(0.0, 100.0)))
+                    .collect(),
+            },
+            7 => ControlMsg::FetchReady { info: random_info(g), row_ranges: vec![] },
+            8 => ControlMsg::Error { message: g.ident(40) },
+            _ => ControlMsg::MatrixList {
+                infos: (0..g.usize_in(0, 4)).map(|_| random_info(g)).collect(),
+            },
+        };
+        let bytes = msg.encode();
+        let back = ControlMsg::decode(&bytes).expect("decode");
+        assert_eq!(msg, back);
+    });
+}
+
+#[test]
+fn data_messages_roundtrip() {
+    props(300, |g| {
+        let msg = match g.usize_in(0, 3) {
+            0 => {
+                let nrows = g.usize_in(1, 16) as u32;
+                let ncols = g.usize_in(1, 32) as u32;
+                DataMsg::PushRows {
+                    matrix_id: g.u64(),
+                    start_row: g.u64() % 1_000_000,
+                    nrows,
+                    ncols,
+                    data: g.vec_normal((nrows * ncols) as usize),
+                }
+            }
+            1 => DataMsg::PullRows {
+                matrix_id: g.u64(),
+                start_row: g.u64() % 1_000_000,
+                nrows: g.u64() as u32 % 1000,
+            },
+            2 => {
+                let nrows = g.usize_in(1, 8) as u32;
+                let ncols = g.usize_in(1, 8) as u32;
+                DataMsg::RowsData {
+                    matrix_id: g.u64(),
+                    start_row: g.u64() % 100,
+                    nrows,
+                    ncols,
+                    data: g.vec_normal((nrows * ncols) as usize),
+                }
+            }
+            _ => DataMsg::PushDoneAck { matrix_id: g.u64(), rows_received: g.u64() },
+        };
+        let bytes = msg.encode();
+        assert_eq!(msg, DataMsg::decode(&bytes).expect("decode"));
+    });
+}
+
+#[test]
+fn corrupted_frames_never_panic() {
+    // decode must return Err (not panic) for arbitrary mutations
+    props(400, |g| {
+        let msg = ControlMsg::TaskDone {
+            outputs: vec![random_info(g)],
+            scalars: random_params(g),
+            timings: vec![(g.ident(6), 1.0)],
+        };
+        let mut bytes = msg.encode();
+        match g.usize_in(0, 2) {
+            0 => {
+                let keep = g.usize_in(0, bytes.len().saturating_sub(1));
+                bytes.truncate(keep);
+            }
+            1 => {
+                if !bytes.is_empty() {
+                    let top = bytes.len() - 1;
+                    let i = g.usize_in(0, top);
+                    bytes[i] ^= 1 << g.usize_in(0, 7);
+                }
+            }
+            _ => bytes.push(g.u64() as u8),
+        }
+        // must not panic; Err or (for benign bit flips) a decoded message
+        let _ = ControlMsg::decode(&bytes);
+    });
+}
+
+#[test]
+fn params_accessors_total() {
+    props(200, |g| {
+        let p = random_params(g);
+        for key in ["a", "b", "zzz"] {
+            let _ = p.i64(key);
+            let _ = p.f64(key);
+            let _ = p.str(key);
+            let _ = p.matrix(key);
+        }
+    });
+}

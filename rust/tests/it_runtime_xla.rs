@@ -1,0 +1,239 @@
+//! Integration: the PJRT runtime + the XLA/Pallas engines against the
+//! native oracle. Requires `make artifacts` (skips loudly otherwise).
+
+use alchemist::collectives::Communicator;
+use alchemist::compute::{Engine, GemmVariant, NativeEngine, XlaEngine};
+use alchemist::config::Config;
+use alchemist::distmat::LocalMatrix;
+use alchemist::runtime::Runtime;
+use alchemist::util::prng::Rng;
+
+fn artifacts_available(cfg: &Config) -> bool {
+    cfg.resolved_artifacts_dir().join("manifest.txt").exists()
+}
+
+fn cfg() -> Config {
+    Config::default()
+}
+
+macro_rules! require_artifacts {
+    ($cfg:expr) => {
+        if !artifacts_available(&$cfg) {
+            eprintln!("SKIP: artifacts missing; run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn random(seed: u64, r: usize, c: usize) -> LocalMatrix {
+    let mut rng = Rng::new(seed);
+    LocalMatrix::from_fn(r, c, |_, _| rng.normal())
+}
+
+#[test]
+fn manifest_loads_and_gemm_artifact_runs() {
+    let cfg = cfg();
+    require_artifacts!(cfg);
+    let mut rt = Runtime::load(&cfg.resolved_artifacts_dir()).unwrap();
+    assert!(rt.manifest().entries().len() >= 20);
+
+    // run the xla gemm tile directly: c + a@b at 256
+    let t = 256usize;
+    let c = vec![1.0; t * t];
+    let a = vec![0.5; t * t];
+    let b = vec![2.0; t * t];
+    let shape = [t, t];
+    let out = rt
+        .run1(
+            "xla_gemm_nn_256x256x256",
+            &[(&c, shape.as_slice()), (&a, shape.as_slice()), (&b, shape.as_slice())],
+        )
+        .unwrap();
+    // each element: 1 + sum_k 0.5*2 = 1 + 256
+    assert!((out.data[0] - 257.0).abs() < 1e-9);
+    assert!((out.data[t * t - 1] - 257.0).abs() < 1e-9);
+    assert_eq!(rt.exec_calls, 1);
+    assert!(rt.exec_secs > 0.0);
+}
+
+#[test]
+fn pallas_artifact_matches_xla_artifact() {
+    let cfg = cfg();
+    require_artifacts!(cfg);
+    let mut rt = Runtime::load(&cfg.resolved_artifacts_dir()).unwrap();
+    let t = 256usize;
+    let c = random(1, t, t);
+    let a = random(2, t, t);
+    let b = random(3, t, t);
+    let shape = [t, t];
+    let inputs = [
+        (c.data(), shape.as_slice()),
+        (a.data(), shape.as_slice()),
+        (b.data(), shape.as_slice()),
+    ];
+    let x = rt.run1("xla_gemm_nn_256x256x256", &inputs).unwrap();
+    let p = rt.run1("pallas_gemm_nn_256x256x256", &inputs).unwrap();
+    let max_diff = x
+        .data
+        .iter()
+        .zip(&p.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_diff < 1e-9, "pallas vs xla: {max_diff}");
+}
+
+fn check_engine_against_native(family: &'static str) {
+    let mut cfg = cfg();
+    require_artifacts!(cfg);
+    cfg.engine = if family == "pallas" {
+        alchemist::config::EngineKind::Pallas
+    } else {
+        alchemist::config::EngineKind::Xla
+    };
+    let mut xla = XlaEngine::new(&cfg, family).unwrap();
+    let mut native = NativeEngine::new();
+
+    // GEMM with padding in every dimension (note: tile is 256)
+    for &(variant, m, n, k) in &[
+        (GemmVariant::NN, 300usize, 130usize, 70usize),
+        (GemmVariant::TN, 64, 40, 500),
+        (GemmVariant::NT, 256, 256, 256),
+    ] {
+        let a_shape = match variant {
+            GemmVariant::TN => (k, m),
+            _ => (m, k),
+        };
+        let b_shape = match variant {
+            GemmVariant::NT => (n, k),
+            _ => (k, n),
+        };
+        let a = random(10, a_shape.0, a_shape.1);
+        let b = random(11, b_shape.0, b_shape.1);
+        let seed_c = random(12, m, n);
+        let mut c1 = seed_c.clone();
+        xla.gemm(variant, &mut c1, &a, &b).unwrap();
+        let mut c2 = seed_c.clone();
+        native.gemm(variant, &mut c2, &a, &b).unwrap();
+        let d = c1.max_abs_diff(&c2);
+        assert!(d < 1e-8, "{family} gemm {variant:?} {m}x{n}x{k}: {d}");
+    }
+
+    // gram_matvec through the fused panel artifact (k=1024, c=32 exists;
+    // k=700, c=5 forces padding)
+    let a = random(13, 100, 700);
+    let v = random(14, 700, 5);
+    let g1 = xla.gram_matvec(&a, &v, 0.25).unwrap();
+    let g2 = native.gram_matvec(&a, &v, 0.25).unwrap();
+    assert!(g1.max_abs_diff(&g2) < 1e-7, "{family} gram: {}", g1.max_abs_diff(&g2));
+
+    // rff_expand (k0=300 pads to 512; d=1500 chunks at 1024)
+    let x = random(15, 90, 300);
+    let omega = random(16, 300, 1500);
+    let bias: Vec<f64> = random(17, 1, 1500).into_data();
+    let z1 = xla.rff_expand(&x, &omega, &bias, 0.05).unwrap();
+    let z2 = native.rff_expand(&x, &omega, &bias, 0.05).unwrap();
+    assert!(z1.max_abs_diff(&z2) < 1e-9, "{family} rff: {}", z1.max_abs_diff(&z2));
+
+    // cg_update (rows 1500 chunks at 1024; cols 7 pads to 32)
+    let p = random(18, 1500, 7);
+    let q = random(19, 1500, 7);
+    let alpha: Vec<f64> = random(20, 1, 7).into_data();
+    let (mut x1, mut r1) = (random(21, 1500, 7), random(22, 1500, 7));
+    let (mut x2, mut r2) = (x1.clone(), r1.clone());
+    xla.cg_update(&mut x1, &mut r1, &p, &q, &alpha).unwrap();
+    native.cg_update(&mut x2, &mut r2, &p, &q, &alpha).unwrap();
+    assert!(x1.max_abs_diff(&x2) < 1e-12 && r1.max_abs_diff(&r2) < 1e-12);
+
+    let (calls, secs) = xla.exec_stats();
+    assert!(calls > 0 && secs > 0.0, "{family} engine must have hit PJRT");
+}
+
+#[test]
+fn xla_engine_matches_native() {
+    check_engine_against_native("xla");
+}
+
+#[test]
+fn keyed_gram_cache_is_correct_and_isolated() {
+    // The §Perf operand cache must (a) return bit-identical results to the
+    // uncached path across repeated calls, and (b) never alias between
+    // different keys even when matrices share shapes.
+    let cfg = cfg();
+    require_artifacts!(cfg);
+    let mut engine = XlaEngine::new(&cfg, "xla").unwrap();
+    let mut native = NativeEngine::new();
+
+    for trial in 0..4u64 {
+        let rows = [100usize, 1024, 2048, 3000][trial as usize % 4];
+        let k = [700usize, 1024, 512, 2048][trial as usize % 4];
+        let c = [5usize, 32, 1, 8][trial as usize % 4];
+        let a = random(100 + trial, rows, k);
+        let b = random(200 + trial, rows, k); // same shape, different data
+        let key_a = alchemist::compute::fresh_operand_key();
+        let key_b = alchemist::compute::fresh_operand_key();
+        for it in 0..3 {
+            let v = random(300 + trial * 10 + it, k, c);
+            let ga = engine.gram_matvec_keyed(key_a, &a, &v, 0.3).unwrap();
+            let gb = engine.gram_matvec_keyed(key_b, &b, &v, 0.3).unwrap();
+            let wa = native.gram_matvec(&a, &v, 0.3).unwrap();
+            let wb = native.gram_matvec(&b, &v, 0.3).unwrap();
+            assert!(ga.max_abs_diff(&wa) < 1e-7, "trial {trial} it {it} key_a");
+            assert!(gb.max_abs_diff(&wb) < 1e-7, "trial {trial} it {it} key_b");
+            // a != b, so cached panels must differ too
+            assert!(ga.max_abs_diff(&gb) > 1e-6, "keys must not alias");
+        }
+    }
+}
+
+#[test]
+fn pallas_engine_matches_native() {
+    check_engine_against_native("pallas");
+}
+
+#[test]
+fn distributed_cg_on_xla_engine() {
+    let cfg = cfg();
+    require_artifacts!(cfg);
+    // SPMD CG where every rank uses its own XlaEngine (the production
+    // configuration of the speech experiment)
+    let n = 120usize;
+    let x = random(30, n, 24);
+    let y = random(31, n, 3);
+    let opts = alchemist::linalg::CgOptions { lambda: 1e-3, tol: 1e-11, max_iters: 200 };
+
+    let want = {
+        let comms = alchemist::collectives::LocalComm::group(1, None);
+        alchemist::linalg::cg_solve(
+            &comms[0],
+            &mut NativeEngine::new(),
+            &x,
+            &y,
+            n,
+            &opts,
+        )
+        .unwrap()
+    };
+
+    let layout = alchemist::distmat::RowBlockLayout::even(n, 24, 2);
+    let comms = alchemist::collectives::LocalComm::group(2, None);
+    let mut handles = Vec::new();
+    for comm in comms {
+        let (a, b) = layout.ranges[comm.rank()];
+        let xl = x.slice_rows(a, b);
+        let yl = y.slice_rows(a, b);
+        let cfg = cfg.clone();
+        let opts = opts.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut engine = XlaEngine::new(&cfg, "xla").unwrap();
+            alchemist::linalg::cg_solve(&comm, &mut engine, &xl, &yl, n, &opts).unwrap()
+        }));
+    }
+    for h in handles {
+        let got = h.join().unwrap();
+        assert!(
+            got.w.max_abs_diff(&want.w) < 1e-6,
+            "diff {}",
+            got.w.max_abs_diff(&want.w)
+        );
+    }
+}

@@ -1,0 +1,373 @@
+//! Integration: full client↔server loop over real TCP sockets — the
+//! paper's Figure 2 session (connect, register, send matrix, run routine,
+//! materialize results, stop), using the native engine so it runs without
+//! artifacts.
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::{Config, EngineKind};
+use alchemist::coordinator::AlchemistServer;
+use alchemist::distmat::LocalMatrix;
+use alchemist::protocol::{Params, Value};
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::util::prng::Rng;
+
+fn native_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+fn random_matrix(seed: u64, rows: usize, cols: usize) -> LocalMatrix {
+    let mut rng = Rng::new(seed);
+    LocalMatrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+#[test]
+fn figure2_qr_session() {
+    let server = AlchemistServer::start(native_cfg(), 3).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &native_cfg(), 2).unwrap();
+    assert_eq!(ac.num_workers(), 3);
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    let a = random_matrix(1, 67, 8); // awkward row count across 3 workers
+    let irm = IndexedRowMatrix::from_local(&a, 4);
+    let (al_a, stats) = ac.send_matrix("A", &irm).unwrap();
+    assert_eq!(stats.bytes, 67 * 8 * 8);
+    assert!(stats.secs > 0.0);
+
+    let res = ac
+        .run_task("elemental", "qr", Params::new().with_matrix("A", al_a.id))
+        .unwrap();
+    let al_q = res.output("Q").unwrap().clone();
+    let al_r = res.output("R").unwrap().clone();
+    assert_eq!((al_q.rows, al_q.cols), (67, 8));
+    assert_eq!((al_r.rows, al_r.cols), (8, 8));
+    assert!(res.timing("compute") > 0.0);
+    assert!(res.timing("sim_secs") > 0.0);
+
+    let (q, _) = ac.to_indexed_row_matrix(&al_q, 4).unwrap();
+    let (r, _) = ac.to_indexed_row_matrix(&al_r, 1).unwrap();
+    let q = q.to_local().unwrap();
+    let r = r.to_local().unwrap();
+
+    // A = Q·R, QᵀQ = I
+    let mut qr = LocalMatrix::zeros(67, 8);
+    qr.gemm_nn(&q, &r);
+    assert!(qr.max_abs_diff(&a) < 1e-9, "reconstruction {}", qr.max_abs_diff(&a));
+    let mut qtq = LocalMatrix::zeros(8, 8);
+    qtq.gemm_tn(&q, &q);
+    assert!(qtq.max_abs_diff(&LocalMatrix::identity(8)) < 1e-10);
+
+    // handle lifecycle
+    let listed = ac.list_matrices().unwrap();
+    assert!(listed.iter().any(|(id, ..)| *id == al_a.id));
+    ac.free(&al_a).unwrap();
+    let listed = ac.list_matrices().unwrap();
+    assert!(!listed.iter().any(|(id, ..)| *id == al_a.id));
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn cg_solve_via_server_matches_local_reference() {
+    let server = AlchemistServer::start(native_cfg(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &native_cfg(), 2).unwrap();
+    ac.register_library("skylark", "builtin:skylark").unwrap();
+
+    let x = random_matrix(2, 50, 12);
+    let y = random_matrix(3, 50, 4);
+    let (al_x, _) = ac.send_matrix("X", &IndexedRowMatrix::from_local(&x, 3)).unwrap();
+    let (al_y, _) = ac.send_matrix("Y", &IndexedRowMatrix::from_local(&y, 3)).unwrap();
+
+    let res = ac
+        .run_task(
+            "skylark",
+            "cg_solve",
+            Params::new()
+                .with_matrix("X", al_x.id)
+                .with_matrix("Y", al_y.id)
+                .with_f64("lambda", 1e-3)
+                .with_f64("tol", 1e-12)
+                .with_i64("max_iters", 300),
+        )
+        .unwrap();
+    let al_w = res.output("W").unwrap().clone();
+    let iters = res.scalars.i64("iters").unwrap();
+    assert!(iters > 1);
+    match res.scalars.get("iter_secs") {
+        Some(Value::F64s(v)) => assert_eq!(v.len(), iters as usize),
+        other => panic!("iter_secs missing: {other:?}"),
+    }
+
+    let (w, _) = ac.to_indexed_row_matrix(&al_w, 1).unwrap();
+    let w = w.to_local().unwrap();
+
+    // reference: in-process solver
+    let comms = alchemist::collectives::LocalComm::group(1, None);
+    let mut e = alchemist::compute::NativeEngine::new();
+    let want = alchemist::linalg::cg_solve(
+        &comms[0],
+        &mut e,
+        &x,
+        &y,
+        50,
+        &alchemist::linalg::CgOptions { lambda: 1e-3, tol: 1e-12, max_iters: 300 },
+    )
+    .unwrap();
+    assert!(w.max_abs_diff(&want.w) < 1e-8, "diff {}", w.max_abs_diff(&want.w));
+
+    ac.shutdown_server().unwrap();
+    server.shutdown_on_request();
+}
+
+#[test]
+fn chained_routines_via_handles() {
+    // rand_matrix -> fro_norm -> replicate_cols -> fro_norm: handles flow
+    // between routines without any client-side data movement
+    let server = AlchemistServer::start(native_cfg(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &native_cfg(), 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    let res = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 40).with_i64("cols", 6).with_i64("seed", 9),
+        )
+        .unwrap();
+    let a = res.output("A").unwrap().clone();
+
+    let n1 = ac
+        .run_task("elemental", "fro_norm", Params::new().with_matrix("A", a.id))
+        .unwrap()
+        .scalars
+        .f64("norm")
+        .unwrap();
+    assert!(n1 > 0.0);
+
+    let rep = ac
+        .run_task(
+            "elemental",
+            "replicate_cols",
+            Params::new().with_matrix("A", a.id).with_i64("times", 4),
+        )
+        .unwrap();
+    let arep = rep.output("A_rep").unwrap().clone();
+    assert_eq!(arep.cols, 24);
+
+    let n2 = ac
+        .run_task("elemental", "fro_norm", Params::new().with_matrix("A", arep.id))
+        .unwrap()
+        .scalars
+        .f64("norm")
+        .unwrap();
+    assert!((n2 - 2.0 * n1).abs() < 1e-9, "replication-x4 doubles the norm: {n1} {n2}");
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn error_paths_are_reported_not_fatal() {
+    let server = AlchemistServer::start(native_cfg(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &native_cfg(), 1).unwrap();
+
+    // unregistered library
+    let err = ac.run_task("skylark", "cg_solve", Params::new()).unwrap_err();
+    assert!(err.to_string().contains("not registered"), "{err}");
+
+    // unknown routine
+    ac.register_library("skylark", "builtin:skylark").unwrap();
+    let err = ac.run_task("skylark", "nope", Params::new()).unwrap_err();
+    assert!(err.to_string().contains("no routine"), "{err}");
+
+    // bad library path
+    let err = ac.register_library("x", "/lib/foo.so").unwrap_err();
+    assert!(err.to_string().contains("builtin"), "{err}");
+
+    // unknown handle
+    let err = ac
+        .run_task(
+            "skylark",
+            "cg_solve",
+            Params::new().with_matrix("X", 999).with_matrix("Y", 998),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("not found"), "{err}");
+
+    // the session survives all of the above
+    let listed = ac.list_matrices().unwrap();
+    assert!(listed.is_empty());
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn seal_with_missing_rows_fails_and_session_survives() {
+    use alchemist::net::Framed;
+    use alchemist::protocol::ControlMsg;
+
+    let server = AlchemistServer::start(native_cfg(), 2).unwrap();
+    let cfg = native_cfg();
+    let mut control = Framed::connect(&server.control_addr, cfg.transfer.buf_bytes).unwrap();
+    let reply = control
+        .call(&ControlMsg::Handshake { client_name: "t".into(), version: 1 })
+        .unwrap();
+    assert!(matches!(reply, ControlMsg::HandshakeAck { .. }));
+    // create a 10-row matrix but push nothing
+    let created = control
+        .call(&ControlMsg::CreateMatrix { name: "X".into(), rows: 10, cols: 2 })
+        .unwrap();
+    let id = match created {
+        ControlMsg::MatrixCreated { id, .. } => id,
+        other => panic!("{other:?}"),
+    };
+    let err = control.call(&ControlMsg::SealMatrix { id }).unwrap_err();
+    assert!(err.to_string().contains("sealed with 0 of 10"), "{err}");
+    // session still works afterwards
+    let listed = control.call(&ControlMsg::ListMatrices).unwrap();
+    assert!(matches!(listed, ControlMsg::MatrixList { .. }));
+    server.shutdown();
+}
+
+#[test]
+fn data_plane_rejects_bad_pushes_and_unsealed_pulls() {
+    use alchemist::net::Framed;
+    use alchemist::protocol::{ControlMsg, DataMsg};
+
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut control = Framed::connect(&server.control_addr, 1 << 16).unwrap();
+    let ack = control
+        .call(&ControlMsg::Handshake { client_name: "t".into(), version: 1 })
+        .unwrap();
+    let worker_addrs = match ack {
+        ControlMsg::HandshakeAck { worker_addrs, .. } => worker_addrs,
+        other => panic!("{other:?}"),
+    };
+    let created = control
+        .call(&ControlMsg::CreateMatrix { name: "X".into(), rows: 10, cols: 2 })
+        .unwrap();
+    let id = match created {
+        ControlMsg::MatrixCreated { id, .. } => id,
+        other => panic!("{other:?}"),
+    };
+
+    let mut data = Framed::connect(&worker_addrs[0], 1 << 16).unwrap();
+    data.send_data_flush(&DataMsg::DataHandshake { session_id: 1, executor_id: 0 })
+        .unwrap();
+    assert!(matches!(data.recv_data().unwrap(), DataMsg::DataHandshakeAck { .. }));
+
+    // pull before sealing -> error
+    data.send_data_flush(&DataMsg::PullRows { matrix_id: id, start_row: 0, nrows: 1 })
+        .unwrap();
+    match data.recv_data().unwrap() {
+        DataMsg::DataError { message } => assert!(message.contains("not sealed"), "{message}"),
+        other => panic!("{other:?}"),
+    }
+
+    // push to an unknown matrix -> error
+    data.send_data_flush(&DataMsg::PushRows {
+        matrix_id: 999,
+        start_row: 0,
+        nrows: 1,
+        ncols: 2,
+        data: vec![1.0, 2.0],
+    })
+    .unwrap();
+    match data.recv_data().unwrap() {
+        DataMsg::DataError { message } => assert!(message.contains("not found"), "{message}"),
+        other => panic!("{other:?}"),
+    }
+
+    // push rows owned by the OTHER worker -> error
+    data.send_data_flush(&DataMsg::PushRows {
+        matrix_id: id,
+        start_row: 9,
+        nrows: 1,
+        ncols: 2,
+        data: vec![1.0, 2.0],
+    })
+    .unwrap();
+    match data.recv_data().unwrap() {
+        DataMsg::DataError { message } => {
+            assert!(message.contains("outside rank"), "{message}")
+        }
+        other => panic!("{other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn executor_disconnect_mid_push_leaves_matrix_unsealed_not_poisoned() {
+    use alchemist::net::Framed;
+    use alchemist::protocol::{ControlMsg, DataMsg};
+
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+
+    // half-push by hand, then drop the socket
+    let mut control = Framed::connect(&server.control_addr, 1 << 16).unwrap();
+    let ack = control
+        .call(&ControlMsg::Handshake { client_name: "t2".into(), version: 1 })
+        .unwrap();
+    let worker_addrs = match ack {
+        ControlMsg::HandshakeAck { worker_addrs, .. } => worker_addrs,
+        other => panic!("{other:?}"),
+    };
+    let created = control
+        .call(&ControlMsg::CreateMatrix { name: "H".into(), rows: 4, cols: 1 })
+        .unwrap();
+    let id = match created {
+        ControlMsg::MatrixCreated { id, .. } => id,
+        other => panic!("{other:?}"),
+    };
+    {
+        let mut data = Framed::connect(&worker_addrs[0], 1 << 16).unwrap();
+        data.send_data_flush(&DataMsg::PushRows {
+            matrix_id: id,
+            start_row: 0,
+            nrows: 1,
+            ncols: 1,
+            data: vec![1.0],
+        })
+        .unwrap();
+        // dropped here: disconnect without PushDone
+    }
+    let err = control.call(&ControlMsg::SealMatrix { id }).unwrap_err();
+    assert!(err.to_string().contains("sealed with"), "{err}");
+
+    // the server is still healthy: a fresh full transfer succeeds
+    let m = random_matrix(9, 8, 2);
+    let (al, _) = ac.send_matrix("ok", &IndexedRowMatrix::from_local(&m, 2)).unwrap();
+    let (back, _) = ac.to_indexed_row_matrix(&al, 2).unwrap();
+    assert_eq!(back.to_local().unwrap(), m);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_sessions_supported() {
+    let server = AlchemistServer::start(native_cfg(), 2).unwrap();
+    let addr = server.control_addr.clone();
+    let mut handles = Vec::new();
+    for seed in 0..3u64 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ac = AlchemistContext::connect(&addr, &native_cfg(), 1).unwrap();
+            ac.register_library("elemental", "builtin:elemental").unwrap();
+            let x = random_matrix(seed, 30, 4);
+            let (al, _) =
+                ac.send_matrix("X", &IndexedRowMatrix::from_local(&x, 2)).unwrap();
+            let (back, _) = ac.to_indexed_row_matrix(&al, 2).unwrap();
+            assert_eq!(back.to_local().unwrap(), x);
+            ac.stop();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}

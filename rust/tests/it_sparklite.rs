@@ -1,0 +1,157 @@
+//! Property + behavioral tests for the Spark stand-in: the overhead model
+//! must charge what the config says, and the baselines must stay
+//! numerically equal to the MPI-side solvers (same math, different cost).
+
+use alchemist::config::Config;
+use alchemist::distmat::LocalMatrix;
+use alchemist::linalg::{CgOptions, RffMap, SvdOptions};
+use alchemist::sparklite::{mllib, IndexedRowMatrix, SparkEngine};
+use alchemist::testkit::{props, Gen};
+
+fn quiet_engine(executors: usize) -> SparkEngine {
+    let mut cfg = Config::default();
+    cfg.overhead.scheduler_delay_s = 0.0;
+    cfg.overhead.task_launch_s = 0.0;
+    let mut e = SparkEngine::new(executors, &cfg);
+    e.inject_real_delays = false;
+    e
+}
+
+fn random_matrix(g: &mut Gen, r: usize, c: usize) -> LocalMatrix {
+    let data = g.vec_normal(r * c);
+    LocalMatrix::from_data(r, c, data)
+}
+
+#[test]
+fn irm_roundtrip_any_partitioning() {
+    props(60, |g| {
+        let r = g.usize_in(1, 120);
+        let c = g.usize_in(1, 12);
+        let parts = g.usize_in(1, 10);
+        let m = random_matrix(g, r, c);
+        let irm = IndexedRowMatrix::from_local(&m, parts);
+        assert_eq!(irm.num_partitions(), parts);
+        assert_eq!(irm.to_local().unwrap(), m);
+    });
+}
+
+#[test]
+fn spark_cg_equals_mpi_cg_across_partitionings() {
+    props(8, |g| {
+        let n = g.usize_in(12, 50);
+        let d = g.usize_in(2, 10);
+        let c = g.usize_in(1, 3);
+        let parts = g.usize_in(1, 6);
+        let x = random_matrix(g, n, d);
+        let y = random_matrix(g, n, c);
+        let opts = CgOptions { lambda: 1e-3, tol: 1e-12, max_iters: 300 };
+
+        let mut engine = quiet_engine(2);
+        let spark = mllib::cg_solve(
+            &mut engine,
+            &IndexedRowMatrix::from_local(&x, parts),
+            &IndexedRowMatrix::from_local(&y, parts),
+            &opts,
+        )
+        .unwrap();
+
+        let comms = alchemist::collectives::LocalComm::group(1, None);
+        let mpi = alchemist::linalg::cg_solve(
+            &comms[0],
+            &mut alchemist::compute::NativeEngine::new(),
+            &x,
+            &y,
+            n,
+            &opts,
+        )
+        .unwrap();
+        assert!(
+            spark.w.max_abs_diff(&mpi.w) < 1e-7,
+            "partitioning must not change the answer: {}",
+            spark.w.max_abs_diff(&mpi.w)
+        );
+        // the overhead ledger grew with iterations: 1 stage per iter + XtY
+        assert!(engine.stats().stages >= spark.iters + 1);
+    });
+}
+
+#[test]
+fn spark_svd_sigma_stable_under_partitioning() {
+    props(6, |g| {
+        let n = g.usize_in(24, 60);
+        let k = g.usize_in(8, 16);
+        let a = random_matrix(g, n, k);
+        let opts = SvdOptions { rank: 3.min(k), steps: 0, seed: 77 };
+        let mut sigmas = Vec::new();
+        for parts in [1usize, 3, 5] {
+            let mut engine = quiet_engine(2);
+            let r = mllib::truncated_svd(
+                &mut engine,
+                &IndexedRowMatrix::from_local(&a, parts),
+                &opts,
+            )
+            .unwrap();
+            sigmas.push(r.sigma.clone());
+        }
+        for s in &sigmas[1..] {
+            for (a, b) in s.iter().zip(&sigmas[0]) {
+                assert!((a - b).abs() < 1e-8 * (1.0 + b));
+            }
+        }
+    });
+}
+
+#[test]
+fn overhead_gap_grows_with_scheduler_delay() {
+    // the knob the calibration leans on: scheduler delay should move the
+    // per-iteration cost roughly linearly (sim time ledger)
+    let run = |delay: f64| {
+        let mut cfg = Config::default();
+        cfg.overhead.scheduler_delay_s = delay;
+        cfg.overhead.task_launch_s = 0.0;
+        let mut engine = SparkEngine::new(2, &cfg);
+        engine.inject_real_delays = false;
+        let x = LocalMatrix::from_fn(64, 8, |i, j| ((i * j) % 7) as f64 * 0.1 + 1.0);
+        let y = LocalMatrix::from_fn(64, 2, |i, _| (i % 3) as f64);
+        let opts = CgOptions { lambda: 1e-2, tol: 1e-10, max_iters: 40 };
+        let r = mllib::cg_solve(
+            &mut engine,
+            &IndexedRowMatrix::from_local(&x, 4),
+            &IndexedRowMatrix::from_local(&y, 4),
+            &opts,
+        )
+        .unwrap();
+        let sim_per_iter: f64 =
+            r.iter_sim_secs.iter().sum::<f64>() / r.iter_sim_secs.len() as f64;
+        sim_per_iter
+    };
+    let slow = run(0.4);
+    let fast = run(0.04);
+    assert!(
+        slow > fast * 4.0,
+        "10x scheduler delay should dominate sim per-iteration: {fast} -> {slow}"
+    );
+}
+
+#[test]
+fn memory_cap_is_a_hard_boundary() {
+    props(20, |g| {
+        let n = g.usize_in(10, 60);
+        let d = g.usize_in(2, 16);
+        let bytes = n * d * 8;
+        let mut cfg = Config::default();
+        // budget just below (fail) or above (pass) the requirement
+        let below = g.bool();
+        cfg.spark_driver_max_bytes = if below { bytes.saturating_sub(1) } else { bytes * 3 };
+        let mut engine = SparkEngine::new(2, &cfg);
+        engine.inject_real_delays = false;
+        let x = random_matrix(g, n, d);
+        let map = RffMap::generate(d, d, 1.0, 5);
+        let res = mllib::rff_expand(&mut engine, &IndexedRowMatrix::from_local(&x, 2), &map);
+        if below {
+            assert!(res.is_err());
+        } else {
+            assert!(res.is_ok());
+        }
+    });
+}
