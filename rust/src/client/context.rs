@@ -37,10 +37,19 @@ impl TaskResult {
 
 /// A connected client session (the ACI object). One control socket to the
 /// driver; data sockets are opened per transfer by executor threads.
+///
+/// Each session holds an exclusive worker *group*: `connect` requests the
+/// server's default group, [`AlchemistContext::connect_with_workers`]
+/// negotiates a size (the paper's `requestWorkers`), and
+/// `granted_workers` surfaces what the scheduler actually granted.
 pub struct AlchemistContext {
     control: Framed<std::net::TcpStream, std::net::TcpStream>,
     pub session_id: u64,
+    /// Data addresses of this session's worker group, index = the
+    /// session's group-local worker rank.
     pub worker_addrs: Vec<String>,
+    /// Worker-group size the server granted this session.
+    pub granted_workers: usize,
     cfg: Config,
     /// Executor threads used for matrix transfer (the paper's "number of
     /// Spark processes"; Table 3 sweeps this).
@@ -48,17 +57,41 @@ pub struct AlchemistContext {
 }
 
 impl AlchemistContext {
-    /// Connect to a running server.
+    /// Connect to a running server, accepting the server's default
+    /// worker-group size.
     pub fn connect(addr: &str, cfg: &Config, executors: usize) -> crate::Result<Self> {
+        Self::connect_with_workers(addr, cfg, executors, 0)
+    }
+
+    /// Connect requesting a worker group of `request_workers` ranks
+    /// (0 = server default policy). Blocks while the request queues
+    /// behind other sessions, up to the server's scheduler timeout.
+    pub fn connect_with_workers(
+        addr: &str,
+        cfg: &Config,
+        executors: usize,
+        request_workers: usize,
+    ) -> crate::Result<Self> {
         let mut control = Framed::connect(addr, cfg.transfer.buf_bytes)?;
         let reply = control.call(&ControlMsg::Handshake {
             client_name: "alchemist-client".into(),
             version: PROTOCOL_VERSION,
+            request_workers: request_workers as u32,
         })?;
-        let (session_id, worker_addrs) = match reply {
-            ControlMsg::HandshakeAck { session_id, version, worker_addrs } => {
+        let (session_id, granted_workers, worker_addrs) = match reply {
+            ControlMsg::HandshakeAck {
+                session_id,
+                version,
+                granted_workers,
+                worker_addrs,
+            } => {
                 anyhow::ensure!(version == PROTOCOL_VERSION, "protocol mismatch");
-                (session_id, worker_addrs)
+                anyhow::ensure!(
+                    granted_workers as usize == worker_addrs.len(),
+                    "server granted {granted_workers} workers but sent {} addresses",
+                    worker_addrs.len()
+                );
+                (session_id, granted_workers as usize, worker_addrs)
             }
             other => anyhow::bail!("bad handshake reply: {other:?}"),
         };
@@ -66,6 +99,7 @@ impl AlchemistContext {
             control,
             session_id,
             worker_addrs,
+            granted_workers,
             cfg: cfg.clone(),
             executors: executors.max(1),
         })

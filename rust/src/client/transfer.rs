@@ -35,10 +35,39 @@ impl TransferStats {
         }
     }
 
-    fn merge(&mut self, other: &TransferStats) {
+    /// Fold another transfer's stats into this one: volumes add, wallclock
+    /// takes the max (executors run concurrently), and so does the
+    /// executor count — merging a per-thread share (executors = 0) into a
+    /// whole-transfer record must not erase the transfer's parallelism.
+    pub fn merge(&mut self, other: &TransferStats) {
         self.bytes += other.bytes;
         self.frames += other.frames;
-        self.secs = self.secs.max(other.secs); // executors run concurrently
+        self.secs = self.secs.max(other.secs);
+        self.executors = self.executors.max(other.executors);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::TransferStats;
+
+    #[test]
+    fn merge_keeps_executors_and_concurrent_semantics() {
+        let mut total = TransferStats { executors: 4, ..Default::default() };
+        let a = TransferStats { bytes: 100, secs: 0.5, frames: 2, executors: 0 };
+        let b = TransferStats { bytes: 300, secs: 0.2, frames: 1, executors: 0 };
+        total.merge(&a);
+        total.merge(&b);
+        assert_eq!(total.bytes, 400);
+        assert_eq!(total.frames, 3);
+        assert_eq!(total.secs, 0.5); // slowest concurrent executor
+        assert_eq!(total.executors, 4); // not clobbered by per-thread shares
+
+        // merging two whole-transfer records (e.g. push + pull legs)
+        let mut push = TransferStats { bytes: 8, secs: 1.0, frames: 1, executors: 2 };
+        let pull = TransferStats { bytes: 8, secs: 2.0, frames: 1, executors: 3 };
+        push.merge(&pull);
+        assert_eq!(push.executors, 3);
     }
 }
 

@@ -33,6 +33,9 @@ struct Shared {
 pub struct LocalComm {
     rank: usize,
     size: usize,
+    /// This endpoint's rank in the server's full worker pool (== `rank`
+    /// for groups built with [`LocalComm::group`]).
+    global_rank: usize,
     shared: Arc<Shared>,
     /// Modeled comm nanoseconds charged to this rank.
     sim_ns: Arc<AtomicU64>,
@@ -42,19 +45,49 @@ impl LocalComm {
     /// Create endpoints for a `size`-rank group.
     pub fn group(size: usize, simnet: Option<SimNetConfig>) -> Vec<LocalComm> {
         assert!(size > 0);
+        let ranks: Vec<usize> = (0..size).collect();
+        Self::subgroup(&ranks, simnet)
+    }
+
+    /// Create endpoints for an independent communicator over an arbitrary
+    /// subset of global worker ranks (session-scoped worker groups).
+    /// Endpoint `i` gets group-local rank `i` and remembers
+    /// `global_ranks[i]`. The fabric (mailboxes, barrier) is fresh, so
+    /// collectives on disjoint subgroups never contend with each other.
+    pub fn subgroup(
+        global_ranks: &[usize],
+        simnet: Option<SimNetConfig>,
+    ) -> Vec<LocalComm> {
+        let size = global_ranks.len();
+        assert!(size > 0, "subgroup must have at least one rank");
+        {
+            let mut sorted = global_ranks.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), size, "subgroup ranks must be distinct");
+        }
         let shared = Arc::new(Shared {
             boxes: (0..size).map(|_| Mailbox::default()).collect(),
             barrier: Barrier::new(size),
             simnet,
         });
-        (0..size)
-            .map(|rank| LocalComm {
+        global_ranks
+            .iter()
+            .enumerate()
+            .map(|(rank, &global_rank)| LocalComm {
                 rank,
                 size,
+                global_rank,
                 shared: shared.clone(),
                 sim_ns: Arc::new(AtomicU64::new(0)),
             })
             .collect()
+    }
+
+    /// Rank in the server's full worker pool (group-local ranks are what
+    /// [`Communicator::rank`] returns).
+    pub fn global_rank(&self) -> usize {
+        self.global_rank
     }
 
     fn charge(&self, bytes: usize) {
@@ -153,6 +186,45 @@ mod tests {
             // after the barrier every rank must observe all 4 arrivals
             assert_eq!(COUNT.load(Ordering::SeqCst), 4);
         });
+    }
+
+    #[test]
+    fn subgroup_is_local_ranked_and_independent() {
+        // two disjoint subgroups of a 5-rank pool run collectives
+        // concurrently without seeing each other's traffic or barriers
+        let ga = [1usize, 4];
+        let gb = [0usize, 2, 3];
+        let ca = LocalComm::subgroup(&ga, None);
+        let cb = LocalComm::subgroup(&gb, None);
+        for (i, c) in ca.iter().enumerate() {
+            assert_eq!(c.rank(), i);
+            assert_eq!(c.size(), 2);
+            assert_eq!(c.global_rank(), ga[i]);
+        }
+        let mut handles = Vec::new();
+        for c in ca.into_iter().chain(cb.into_iter()) {
+            handles.push(std::thread::spawn(move || {
+                // ring exchange within the group, then a group barrier:
+                // would deadlock if the fabrics were shared
+                let next = (c.rank() + 1) % c.size();
+                let prev = (c.rank() + c.size() - 1) % c.size();
+                c.send(next, 7, vec![c.global_rank() as f64]);
+                let got = c.recv(prev, 7);
+                assert_eq!(got.len(), 1);
+                c.barrier();
+                got[0]
+            }));
+        }
+        let vals: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let mut sorted = vals;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn subgroup_rejects_duplicate_ranks() {
+        let _ = LocalComm::subgroup(&[1, 1], None);
     }
 
     #[test]

@@ -8,6 +8,12 @@
 //! algorithms, not shared-memory shortcuts — so their communication volume
 //! is faithful and the SimClock can charge modeled interconnect time per
 //! message (the box has one core; see `metrics::simclock`).
+//!
+//! Groups come in two flavors: [`LocalComm::group`] builds the full pool,
+//! and [`LocalComm::subgroup`] builds an independent communicator over an
+//! arbitrary rank subset — the substrate for session-scoped worker groups
+//! (disjoint sessions collect over disjoint fabrics, so they never
+//! serialize on each other).
 
 pub mod algorithms;
 pub mod local;

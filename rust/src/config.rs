@@ -84,6 +84,20 @@ impl SimNetConfig {
     }
 }
 
+/// Session admission control: how the coordinator carves its worker pool
+/// into per-session groups (the paper's `requestWorkers` negotiation;
+/// multi-client serving as in Rothauge et al. 2019).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Sessions admitted concurrently; further handshakes queue FIFO.
+    pub max_sessions: usize,
+    /// Workers granted to a client that requests 0 ("server default");
+    /// 0 here means the whole pool (single-tenant seed behavior).
+    pub default_group_size: usize,
+    /// Seconds a queued handshake waits for capacity before erroring.
+    pub queue_timeout_s: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct Config {
     /// Master seed; all generator/jitter streams derive from it.
@@ -98,6 +112,7 @@ pub struct Config {
     pub transfer: TransferConfig,
     pub overhead: OverheadConfig,
     pub simnet: SimNetConfig,
+    pub scheduler: SchedulerConfig,
     /// sparklite driver memory cap (bytes) — reproduces Table 1's "Spark
     /// cannot run >10k features" capability boundary.
     pub spark_driver_max_bytes: usize,
@@ -119,6 +134,11 @@ impl Default for Config {
                 straggler_cv: 0.20,
             },
             simnet: SimNetConfig { latency_s: 10e-6, bytes_per_s: 1e9 },
+            scheduler: SchedulerConfig {
+                max_sessions: 8,
+                default_group_size: 0,
+                queue_timeout_s: 30.0,
+            },
             spark_driver_max_bytes: 192 << 20,
         }
     }
@@ -195,6 +215,13 @@ impl Config {
             "overhead.straggler_cv" => self.overhead.straggler_cv = fl(value)?,
             "simnet.latency_s" => self.simnet.latency_s = fl(value)?,
             "simnet.bytes_per_s" => self.simnet.bytes_per_s = fl(value)?,
+            "scheduler.max_sessions" => self.scheduler.max_sessions = int(value)?,
+            "scheduler.default_group_size" => {
+                self.scheduler.default_group_size = int(value)?
+            }
+            "scheduler.queue_timeout_s" => {
+                self.scheduler.queue_timeout_s = fl(value)?
+            }
             "spark_driver_max_bytes" => {
                 self.spark_driver_max_bytes = int(value)?
             }
@@ -243,6 +270,11 @@ mod tests {
 
             [transfer]
             rows_per_frame = 128
+
+            [scheduler]
+            max_sessions = 4
+            default_group_size = 2
+            queue_timeout_s = 1.25
         "#;
         let mut c = Config::default();
         c.apply_pairs(&Config::from_str_pairs(text).unwrap()).unwrap();
@@ -250,6 +282,9 @@ mod tests {
         assert_eq!(c.engine, EngineKind::Pallas);
         assert_eq!(c.overhead.scheduler_delay_s, 1.5);
         assert_eq!(c.transfer.rows_per_frame, 128);
+        assert_eq!(c.scheduler.max_sessions, 4);
+        assert_eq!(c.scheduler.default_group_size, 2);
+        assert_eq!(c.scheduler.queue_timeout_s, 1.25);
     }
 
     #[test]

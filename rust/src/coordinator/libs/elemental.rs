@@ -12,6 +12,11 @@
 //!   2.2→17.6 TB construction)
 //! * `rand_matrix(rows, cols, seed)` → synthetic dense matrix
 //! * `fro_norm(A)` → scalar
+//! * `sleep(millis)` → scheduling diagnostic: every group rank parks for
+//!   `millis`, then the group barriers — used by the multi-tenant tests
+//!   to prove disjoint session groups run concurrently (a sleep does not
+//!   contend for cores the way a spin would, so overlap is observable
+//!   even on a single-core box)
 
 use std::path::Path;
 
@@ -43,6 +48,7 @@ impl Library for Elemental {
             "replicate_cols",
             "rand_matrix",
             "fro_norm",
+            "sleep",
         ]
     }
 
@@ -60,6 +66,7 @@ impl Library for Elemental {
             "replicate_cols" => replicate_cols(params, ctx),
             "rand_matrix" => rand_matrix(params, ctx),
             "fro_norm" => fro_norm(params, ctx),
+            "sleep" => sleep_routine(params, ctx),
             other => anyhow::bail!("elemental has no routine {other:?}"),
         }
     }
@@ -218,6 +225,23 @@ fn rand_matrix(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput
         matrices: vec![OutputMatrix { name: "A".into(), layout, local }],
         scalars: Params::new(),
         timings: vec![],
+    })
+}
+
+fn sleep_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let millis = params.i64("millis")?;
+    anyhow::ensure!((0..=60_000).contains(&millis), "millis must be in [0, 60000]");
+    let mut sw = Stopwatch::new();
+    sw.start("compute");
+    std::thread::sleep(std::time::Duration::from_millis(millis as u64));
+    // a group barrier proves every member executed on this session's own
+    // communicator (a wrong-sized group would hang, not silently pass)
+    ctx.comm.barrier();
+    sw.stop();
+    Ok(TaskOutput {
+        matrices: vec![],
+        scalars: Params::new().with_i64("ranks", ctx.comm.size() as i64),
+        timings: vec![("compute".into(), sw.secs("compute"))],
     })
 }
 

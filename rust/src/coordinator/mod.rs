@@ -1,13 +1,18 @@
 //! The Alchemist server — the paper's system contribution (§3.1).
 //!
-//! One driver + `w` workers. The driver owns the control socket (sessions,
-//! matrix handles, task dispatch); each worker owns a data socket (row
-//! push/pull), a rank in the worker [`crate::collectives`] group, a matrix
-//! [`store`], and a [`crate::compute::Engine`] built on its own thread.
-//! Tasks are SPMD: the driver broadcasts a `RunTask` to every worker
-//! thread, each runs the same [`registry::Library`] routine against its
-//! local blocks, collectives stitch them together, and rank 0's metadata
-//! becomes the reply.
+//! One driver + a pool of `w` workers, carved into **session-scoped
+//! groups**: every client handshake negotiates a group size, the driver's
+//! allocator grants an exclusive rank subset (FIFO-queueing requests that
+//! exceed free capacity), and each session's tasks run SPMD over its own
+//! [`crate::collectives::LocalComm::subgroup`] communicator — so sessions
+//! on disjoint groups execute concurrently. The driver owns the control
+//! socket (admission, matrix handles, task dispatch); each worker owns a
+//! data socket (row push/pull), a matrix [`store`] namespaced by owning
+//! session, and a [`crate::compute::Engine`] built on its own thread.
+//! Tasks are SPMD: the driver sends `RunTask` to the session's member
+//! threads, each runs the same [`registry::Library`] routine against its
+//! local blocks with the session's communicator, collectives stitch them
+//! together, and group-rank-0's metadata becomes the reply.
 //!
 //! Differences from the paper, all documented in DESIGN.md §2: workers are
 //! threads in the server process rather than MPI ranks across nodes (the

@@ -1,20 +1,31 @@
-//! The Alchemist driver: control-socket sessions, matrix handles, SPMD
-//! task dispatch (paper §3.1.1).
+//! The Alchemist driver: control-socket sessions, per-session worker
+//! groups, matrix handles, concurrent SPMD task dispatch (paper §3.1.1).
+//!
+//! The driver owns a pool of worker ranks and carves it into
+//! session-scoped groups: each handshake negotiates a group size (the
+//! paper's `requestWorkers`), the [`GroupAllocator`] grants an exclusive
+//! rank subset (queueing FIFO when capacity is short), and every task the
+//! session submits runs SPMD over that group's own communicator. Sessions
+//! holding disjoint groups therefore execute tasks concurrently — the
+//! multi-client serving mode of the Cray deployments (Rothauge et al.
+//! 2019) — while matrix handles stay namespaced per session so teardown
+//! frees one tenant without disturbing the others.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::collectives::LocalComm;
-use crate::config::Config;
+use crate::config::{Config, SchedulerConfig, TransferConfig};
 use crate::distmat::RowBlockLayout;
 use crate::net::{Framed, Server};
 use crate::protocol::{ControlMsg, MatrixInfo, Params, PROTOCOL_VERSION};
 
 use super::registry::Registry;
-use super::worker::{alloc_all, handle_data_conn, worker_main, WorkerCmd, WorkerShared};
+use super::worker::{alloc_group, handle_data_conn, worker_main, WorkerCmd, WorkerShared};
 
 /// Driver-side record of a live distributed matrix.
 #[derive(Debug, Clone)]
@@ -23,17 +34,140 @@ struct HandleMeta {
     layout: RowBlockLayout,
 }
 
+/// One connected client and the worker group it holds exclusively.
+struct Session {
+    id: u64,
+    /// Global worker ranks in group order: `ranks[i]` is the worker with
+    /// group-local rank `i`.
+    ranks: Vec<usize>,
+    /// Per-session config snapshot (transfer knobs travel with the
+    /// session so future PRs can negotiate them per client).
+    transfer: TransferConfig,
+    /// This session's matrix handles (namespaced: other sessions never
+    /// see or free them).
+    handles: Mutex<HashMap<u64, HandleMeta>>,
+}
+
+/// Admission state guarded by the allocator mutex.
+struct AllocState {
+    /// Sorted free global ranks.
+    free: Vec<usize>,
+    /// FIFO of queued session tickets; only the head may be granted.
+    queue: VecDeque<u64>,
+    active: usize,
+    stopping: bool,
+}
+
+/// FIFO admission control over the worker pool. A handshake claims `n`
+/// ranks exclusively; requests beyond current capacity (or beyond
+/// `max_sessions`) wait in arrival order until a teardown frees enough,
+/// up to `queue_timeout_s`.
+struct GroupAllocator {
+    total: usize,
+    scheduler: SchedulerConfig,
+    state: Mutex<AllocState>,
+    cond: Condvar,
+}
+
+impl GroupAllocator {
+    fn new(total: usize, scheduler: SchedulerConfig) -> Self {
+        GroupAllocator {
+            total,
+            scheduler,
+            state: Mutex::new(AllocState {
+                free: (0..total).collect(),
+                queue: VecDeque::new(),
+                active: 0,
+                stopping: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Map a client's requested size (0 = server default) to a concrete
+    /// group size, rejecting requests the pool can never satisfy.
+    fn resolve_request(&self, requested: usize) -> crate::Result<usize> {
+        let want = if requested > 0 {
+            requested
+        } else if self.scheduler.default_group_size > 0 {
+            self.scheduler.default_group_size.min(self.total)
+        } else {
+            self.total
+        };
+        anyhow::ensure!(
+            want <= self.total,
+            "requested {want} workers but the server only has {}",
+            self.total
+        );
+        Ok(want)
+    }
+
+    /// Block until `want` ranks can be granted to `ticket` (FIFO order),
+    /// the queue timeout passes, or the server stops.
+    fn acquire(&self, ticket: u64, want: usize) -> crate::Result<Vec<usize>> {
+        let timeout = Duration::from_secs_f64(self.scheduler.queue_timeout_s.max(0.0));
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        st.queue.push_back(ticket);
+        loop {
+            if st.stopping {
+                st.queue.retain(|&t| t != ticket);
+                anyhow::bail!("server is stopping");
+            }
+            if st.queue.front() == Some(&ticket)
+                && st.active < self.scheduler.max_sessions
+                && st.free.len() >= want
+            {
+                st.queue.pop_front();
+                let ranks: Vec<usize> = st.free.drain(..want).collect();
+                st.active += 1;
+                // the next queued request may fit in what remains
+                self.cond.notify_all();
+                return Ok(ranks);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let (free, active) = (st.free.len(), st.active);
+                st.queue.retain(|&t| t != ticket);
+                // our departure may unblock the request queued behind us
+                self.cond.notify_all();
+                anyhow::bail!(
+                    "timed out after {:.1}s waiting for {want} of {} workers \
+                     ({free} free, {active} sessions active)",
+                    timeout.as_secs_f64(),
+                    self.total,
+                );
+            }
+            let (guard, _) = self.cond.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Return a torn-down session's ranks to the pool and wake the queue.
+    fn release(&self, ranks: &[usize]) {
+        let mut st = self.state.lock().unwrap();
+        st.free.extend_from_slice(ranks);
+        st.free.sort_unstable();
+        st.active -= 1;
+        self.cond.notify_all();
+    }
+
+    /// Fail every queued handshake (server shutdown).
+    fn stop(&self) {
+        self.state.lock().unwrap().stopping = true;
+        self.cond.notify_all();
+    }
+}
+
 struct Driver {
-    #[allow(dead_code)] // kept for future per-session config introspection
     cfg: Config,
     workers: Vec<Arc<WorkerShared>>,
     senders: Vec<mpsc::Sender<WorkerCmd>>,
     registry: Registry,
+    allocator: GroupAllocator,
     next_id: AtomicU64,
     next_session: AtomicU64,
-    handles: Mutex<HashMap<u64, HandleMeta>>,
-    /// One SPMD task at a time (the workers are a single MPI-style group).
-    task_lock: Mutex<()>,
+    sessions: Mutex<HashMap<u64, Arc<Session>>>,
     stopping: AtomicBool,
     /// Stop flags of every accept loop (control + per-worker data).
     listener_stops: Mutex<Vec<Arc<AtomicBool>>>,
@@ -41,12 +175,13 @@ struct Driver {
 }
 
 impl Driver {
-    /// Flip every stop flag, end the worker loops, and wake all accept
-    /// loops so their threads can exit.
+    /// Flip every stop flag, end the worker loops, fail queued
+    /// handshakes, and wake all accept loops so their threads can exit.
     fn stop_all(&self) {
         if self.stopping.swap(true, Ordering::SeqCst) {
             return;
         }
+        self.allocator.stop();
         for s in &self.senders {
             let _ = s.send(WorkerCmd::Shutdown);
         }
@@ -71,13 +206,79 @@ impl Driver {
             .collect()
     }
 
-    fn create_matrix(&self, name: &str, rows: u64, cols: u64) -> crate::Result<ControlMsg> {
+    /// Data addresses of one session's group, indexed by group-local rank.
+    fn session_worker_addrs(&self, session: &Session) -> Vec<String> {
+        session
+            .ranks
+            .iter()
+            .map(|&r| self.workers[r].data_addr.lock().unwrap().clone())
+            .collect()
+    }
+
+    /// Admit a session: resolve the requested group size, wait for
+    /// capacity, build the group's communicator, and bind each member
+    /// worker to it.
+    fn open_session(&self, client_name: &str, requested: u32) -> crate::Result<Arc<Session>> {
+        let want = self.allocator.resolve_request(requested as usize)?;
+        let id = self.next_session.fetch_add(1, Ordering::SeqCst);
+        let ranks = self.allocator.acquire(id, want)?;
+        let comms = LocalComm::subgroup(&ranks, Some(self.cfg.simnet.clone()));
+        for (&rank, comm) in ranks.iter().zip(comms) {
+            self.workers[rank]
+                .sessions
+                .lock()
+                .unwrap()
+                .insert(id, Arc::new(comm));
+        }
+        let session = Arc::new(Session {
+            id,
+            ranks: ranks.clone(),
+            transfer: self.cfg.transfer.clone(),
+            handles: Mutex::new(HashMap::new()),
+        });
+        self.sessions.lock().unwrap().insert(id, session.clone());
+        log::info!(
+            "session {id}: client {client_name:?} granted {want} workers \
+             (ranks {ranks:?}, {} rows/frame)",
+            session.transfer.rows_per_frame
+        );
+        Ok(session)
+    }
+
+    /// Tear a session down: unbind its communicator endpoints, free its
+    /// matrices on every member worker, and return the ranks to the pool.
+    fn close_session(&self, session: &Session) {
+        if self.sessions.lock().unwrap().remove(&session.id).is_none() {
+            return; // already closed
+        }
+        let mut freed = 0;
+        for &rank in &session.ranks {
+            let w = &self.workers[rank];
+            w.sessions.lock().unwrap().remove(&session.id);
+            freed += w.store.lock().unwrap().free_session(session.id);
+        }
+        self.allocator.release(&session.ranks);
+        log::info!(
+            "session {}: closed ({} blocks freed, {} workers released)",
+            session.id,
+            freed,
+            session.ranks.len()
+        );
+    }
+
+    fn create_matrix(
+        &self,
+        session: &Session,
+        name: &str,
+        rows: u64,
+        cols: u64,
+    ) -> crate::Result<ControlMsg> {
         anyhow::ensure!(rows > 0 && cols > 0, "matrix must be non-empty");
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let layout =
-            RowBlockLayout::even(rows as usize, cols as usize, self.workers.len());
-        alloc_all(&self.workers, id, name, &layout)?;
-        self.handles.lock().unwrap().insert(
+            RowBlockLayout::even(rows as usize, cols as usize, session.ranks.len());
+        alloc_group(&self.workers, &session.ranks, session.id, id, name, &layout)?;
+        session.handles.lock().unwrap().insert(
             id,
             HandleMeta {
                 info: MatrixInfo { id, rows, cols, name: name.to_string() },
@@ -87,11 +288,11 @@ impl Driver {
         Ok(ControlMsg::MatrixCreated { id, row_ranges: layout.to_wire() })
     }
 
-    fn seal_matrix(&self, id: u64) -> crate::Result<ControlMsg> {
-        let meta = self.handle(id)?;
+    fn seal_matrix(&self, session: &Session, id: u64) -> crate::Result<ControlMsg> {
+        let meta = self.handle(session, id)?;
         let mut received = 0;
-        for w in &self.workers {
-            received += w.store.lock().unwrap().seal(id)?;
+        for &rank in &session.ranks {
+            received += self.workers[rank].store.lock().unwrap().seal(id)?;
         }
         anyhow::ensure!(
             received == meta.info.rows,
@@ -101,8 +302,9 @@ impl Driver {
         Ok(ControlMsg::MatrixSealed { id, rows_received: received })
     }
 
-    fn handle(&self, id: u64) -> crate::Result<HandleMeta> {
-        self.handles
+    fn handle(&self, session: &Session, id: u64) -> crate::Result<HandleMeta> {
+        session
+            .handles
             .lock()
             .unwrap()
             .get(&id)
@@ -110,17 +312,25 @@ impl Driver {
             .ok_or_else(|| anyhow::anyhow!("unknown matrix handle {id}"))
     }
 
-    fn run_task(&self, lib_name: &str, routine: &str, params: &Params) -> crate::Result<ControlMsg> {
+    fn run_task(
+        &self,
+        session: &Session,
+        lib_name: &str,
+        routine: &str,
+        params: &Params,
+    ) -> crate::Result<ControlMsg> {
         let lib = self.registry.get(lib_name)?;
-        let _guard = self.task_lock.lock().unwrap();
         // reserve an id window for the routine's outputs
         let out_base = self.next_id.fetch_add(64, Ordering::SeqCst);
 
+        // dispatch to this session's group only; disjoint groups use
+        // disjoint worker threads, so no global serialization here
         let mut replies = Vec::new();
-        for sender in &self.senders {
+        for &rank in &session.ranks {
             let (tx, rx) = mpsc::channel();
-            sender
+            self.senders[rank]
                 .send(WorkerCmd::RunTask {
+                    session_id: session.id,
                     lib: lib.clone(),
                     routine: routine.to_string(),
                     params: params.clone(),
@@ -155,9 +365,9 @@ impl Driver {
         }
         let mut outputs = Vec::new();
         {
-            let mut handles = self.handles.lock().unwrap();
+            let mut handles = session.handles.lock().unwrap();
             for meta in &r0.outputs {
-                let layout = self.workers[0]
+                let layout = self.workers[session.ranks[0]]
                     .store
                     .lock()
                     .unwrap()
@@ -175,7 +385,7 @@ impl Driver {
             }
         }
 
-        // timings: rank-0 laps + aggregated cluster metrics
+        // timings: group-rank-0 laps + aggregated cluster metrics
         let mut timings = r0.timings.clone();
         let lap = |r: &super::worker::TaskReply, name: &str| -> f64 {
             r.timings
@@ -193,25 +403,25 @@ impl Driver {
         Ok(ControlMsg::TaskDone { outputs, scalars: r0.scalars.clone(), timings })
     }
 
-    fn fetch_matrix(&self, id: u64) -> crate::Result<ControlMsg> {
-        let meta = self.handle(id)?;
+    fn fetch_matrix(&self, session: &Session, id: u64) -> crate::Result<ControlMsg> {
+        let meta = self.handle(session, id)?;
         Ok(ControlMsg::FetchReady {
             info: meta.info,
             row_ranges: meta.layout.to_wire(),
         })
     }
 
-    fn free_matrix(&self, id: u64) -> crate::Result<ControlMsg> {
-        let existed = self.handles.lock().unwrap().remove(&id).is_some();
+    fn free_matrix(&self, session: &Session, id: u64) -> crate::Result<ControlMsg> {
+        let existed = session.handles.lock().unwrap().remove(&id).is_some();
         anyhow::ensure!(existed, "unknown matrix handle {id}");
-        for w in &self.workers {
-            w.store.lock().unwrap().free(id);
+        for &rank in &session.ranks {
+            self.workers[rank].store.lock().unwrap().free(id);
         }
         Ok(ControlMsg::Freed { id })
     }
 
-    fn list_matrices(&self) -> ControlMsg {
-        let handles = self.handles.lock().unwrap();
+    fn list_matrices(&self, session: &Session) -> ControlMsg {
+        let handles = session.handles.lock().unwrap();
         let mut infos: Vec<MatrixInfo> =
             handles.values().map(|m| m.info.clone()).collect();
         infos.sort_by_key(|i| i.id);
@@ -224,6 +434,8 @@ impl Driver {
 /// client).
 pub struct ServerHandle {
     pub control_addr: String,
+    /// Data addresses of the whole pool, index = global worker rank
+    /// (sessions are granted subsets; see the handshake ack).
     pub worker_addrs: Vec<String>,
     threads: Vec<JoinHandle<()>>,
     driver: Arc<Driver>,
@@ -245,6 +457,21 @@ impl ServerHandle {
             let _ = t.join();
         }
     }
+
+    /// Live session count (test/debug introspection).
+    pub fn active_sessions(&self) -> usize {
+        self.driver.sessions.lock().unwrap().len()
+    }
+
+    /// Total matrix blocks across all worker stores (test/debug
+    /// introspection: teardown must drive a session's share to zero).
+    pub fn total_blocks(&self) -> usize {
+        self.driver
+            .workers
+            .iter()
+            .map(|w| w.store.lock().unwrap().len())
+            .sum()
+    }
 }
 
 /// The Alchemist server factory.
@@ -257,18 +484,19 @@ impl AlchemistServer {
         anyhow::ensure!(num_workers >= 1, "need at least one worker");
         let mut threads = Vec::new();
 
-        // worker shared state + comm group
-        let comms = LocalComm::group(num_workers, Some(cfg.simnet.clone()));
+        // worker shared state; communicators are session-scoped and bound
+        // at handshake time
         let mut workers = Vec::new();
         let mut senders = Vec::new();
         let mut worker_addrs = Vec::new();
         let mut listener_stops = Vec::new();
 
-        for (rank, comm) in comms.into_iter().enumerate() {
+        for rank in 0..num_workers {
             let shared = Arc::new(WorkerShared {
                 rank,
                 store: Mutex::new(super::store::MatrixStore::new(rank)),
                 data_addr: Mutex::new(String::new()),
+                sessions: Mutex::new(HashMap::new()),
             });
             // data listener
             let listener = Server::bind(0)?;
@@ -292,7 +520,7 @@ impl AlchemistServer {
                 let shared = shared.clone();
                 let cfg = cfg.clone();
                 threads.push(std::thread::spawn(move || {
-                    worker_main(shared, comm, cfg, rx);
+                    worker_main(shared, cfg, rx);
                 }));
             }
             workers.push(shared);
@@ -302,14 +530,14 @@ impl AlchemistServer {
         let control_addr = control.addr().to_string();
         listener_stops.push(control.stop_flag());
         let driver = Arc::new(Driver {
+            allocator: GroupAllocator::new(num_workers, cfg.scheduler.clone()),
             cfg: cfg.clone(),
             workers,
             senders,
             registry: Registry::new(),
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
-            handles: Mutex::new(HashMap::new()),
-            task_lock: Mutex::new(()),
+            sessions: Mutex::new(HashMap::new()),
             stopping: AtomicBool::new(false),
             listener_stops: Mutex::new(listener_stops),
             control_addr: Mutex::new(control_addr.clone()),
@@ -326,8 +554,10 @@ impl AlchemistServer {
         }
 
         log::info!(
-            "alchemist server up: control {control_addr}, {num_workers} workers, engine {}",
-            cfg.engine.as_str()
+            "alchemist server up: control {control_addr}, {num_workers} workers, \
+             engine {}, max {} sessions",
+            cfg.engine.as_str(),
+            cfg.scheduler.max_sessions
         );
         Ok(ServerHandle {
             control_addr,
@@ -335,6 +565,31 @@ impl AlchemistServer {
             threads,
             driver,
         })
+    }
+}
+
+/// Dispatch a control message that requires an admitted session.
+fn handle_session_op(
+    driver: &Driver,
+    session: Option<&Arc<Session>>,
+    msg: ControlMsg,
+) -> crate::Result<ControlMsg> {
+    let session = session
+        .ok_or_else(|| anyhow::anyhow!("handshake required before {msg:?}"))?;
+    match msg {
+        ControlMsg::CreateMatrix { name, rows, cols } => {
+            driver.create_matrix(session, &name, rows, cols)
+        }
+        ControlMsg::SealMatrix { id } => driver.seal_matrix(session, id),
+        ControlMsg::RunTask { lib, routine, params } => {
+            driver.run_task(session, &lib, &routine, &params)
+        }
+        ControlMsg::FetchMatrix { id } => driver.fetch_matrix(session, id),
+        ControlMsg::FreeMatrix { id } => driver.free_matrix(session, id),
+        ControlMsg::ListMatrices => Ok(driver.list_matrices(session)),
+        other => Ok(ControlMsg::Error {
+            message: format!("unexpected control message: {other:?}"),
+        }),
     }
 }
 
@@ -349,59 +604,65 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
             return;
         }
     };
+    // the session admitted on this control socket; torn down when the
+    // socket closes (client `stop()` / crash) or on Shutdown
+    let mut session: Option<Arc<Session>> = None;
     loop {
         let msg = match framed.recv_ctrl() {
             Ok(m) => m,
-            Err(_) => return, // client went away
+            Err(_) => break, // client went away
         };
         let reply = match msg {
-            ControlMsg::Handshake { client_name, version } => {
+            ControlMsg::Handshake { client_name, version, request_workers } => {
                 if version != PROTOCOL_VERSION {
                     Ok(ControlMsg::Error {
                         message: format!(
                             "protocol version mismatch: client {version}, server {PROTOCOL_VERSION}"
                         ),
                     })
-                } else {
-                    let session_id =
-                        driver.next_session.fetch_add(1, Ordering::SeqCst);
-                    log::info!("session {session_id}: client {client_name:?} connected");
-                    Ok(ControlMsg::HandshakeAck {
-                        session_id,
-                        version: PROTOCOL_VERSION,
-                        worker_addrs: driver.worker_addrs(),
+                } else if session.is_some() {
+                    Ok(ControlMsg::Error {
+                        message: "session already established on this connection".into(),
                     })
+                } else {
+                    match driver.open_session(&client_name, request_workers) {
+                        Ok(s) => {
+                            let ack = ControlMsg::HandshakeAck {
+                                session_id: s.id,
+                                version: PROTOCOL_VERSION,
+                                granted_workers: s.ranks.len() as u32,
+                                worker_addrs: driver.session_worker_addrs(&s),
+                            };
+                            session = Some(s);
+                            Ok(ack)
+                        }
+                        Err(e) => Err(e),
+                    }
                 }
             }
             ControlMsg::RegisterLibrary { name, path } => driver
                 .registry
                 .register(&name, &path)
                 .map(|()| ControlMsg::LibraryRegistered { name }),
-            ControlMsg::CreateMatrix { name, rows, cols } => {
-                driver.create_matrix(&name, rows, cols)
-            }
-            ControlMsg::SealMatrix { id } => driver.seal_matrix(id),
-            ControlMsg::RunTask { lib, routine, params } => {
-                driver.run_task(&lib, &routine, &params)
-            }
-            ControlMsg::FetchMatrix { id } => driver.fetch_matrix(id),
-            ControlMsg::FreeMatrix { id } => driver.free_matrix(id),
-            ControlMsg::ListMatrices => Ok(driver.list_matrices()),
             ControlMsg::Shutdown => {
+                if let Some(s) = session.take() {
+                    driver.close_session(&s);
+                }
                 driver.stop_all();
                 let _ = framed.send_ctrl(&ControlMsg::Bye);
                 return;
             }
-            other => Ok(ControlMsg::Error {
-                message: format!("unexpected control message: {other:?}"),
-            }),
+            other => handle_session_op(driver, session.as_ref(), other),
         };
         let out = match reply {
             Ok(m) => m,
             Err(e) => ControlMsg::Error { message: format!("{e:#}") },
         };
         if framed.send_ctrl(&out).is_err() {
-            return;
+            break;
         }
+    }
+    if let Some(s) = session.take() {
+        driver.close_session(&s);
     }
 }

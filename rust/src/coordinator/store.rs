@@ -1,6 +1,14 @@
 //! Per-worker matrix storage: each worker rank holds its row-block of
 //! every live distributed matrix (the server-side half of the `AlMatrix`
 //! proxy scheme — data stays put between routines; only handles travel).
+//!
+//! Blocks are namespaced by owning session: matrix ids are globally
+//! unique (the driver hands them out from one counter), but every block
+//! records the session that created it and which slot of the layout this
+//! worker fills (the session's *group-local* rank — with session-scoped
+//! worker groups a worker's global rank no longer indexes
+//! `layout.ranges`). Session teardown frees exactly that session's
+//! blocks without touching any other tenant's.
 
 use std::collections::HashMap;
 
@@ -10,7 +18,12 @@ use crate::distmat::{LocalMatrix, RowBlockLayout};
 #[derive(Debug, Clone)]
 pub struct Block {
     pub layout: RowBlockLayout,
-    /// This rank's rows (`layout.ranges[rank]`).
+    /// Index of this worker's range in `layout.ranges`: the owning
+    /// session's group-local rank for this worker.
+    pub slot: usize,
+    /// Session that owns this matrix.
+    pub session: u64,
+    /// This rank's rows (`layout.ranges[slot]`).
     pub local: LocalMatrix,
     /// Rows received so far during ingest (sealing checks the total).
     pub rows_received: u64,
@@ -34,18 +47,40 @@ impl MatrixStore {
         self.rank
     }
 
-    /// Allocate a zeroed, unsealed block for ingest.
-    pub fn alloc(&mut self, id: u64, name: &str, layout: RowBlockLayout) -> crate::Result<()> {
+    /// Allocate a zeroed, unsealed block for ingest. `slot` is this
+    /// worker's index into `layout.ranges` (the session's group-local
+    /// rank); `session` namespaces the block for teardown.
+    pub fn alloc(
+        &mut self,
+        id: u64,
+        name: &str,
+        layout: RowBlockLayout,
+        slot: usize,
+        session: u64,
+    ) -> crate::Result<()> {
         anyhow::ensure!(
             !self.blocks.contains_key(&id),
             "matrix id {id} already exists on rank {}",
             self.rank
         );
-        let (a, b) = layout.ranges[self.rank];
+        anyhow::ensure!(
+            slot < layout.ranges.len(),
+            "slot {slot} outside layout of {} ranges",
+            layout.ranges.len()
+        );
+        let (a, b) = layout.ranges[slot];
         let local = LocalMatrix::zeros(b - a, layout.cols);
         self.blocks.insert(
             id,
-            Block { layout, local, rows_received: 0, sealed: false, name: name.to_string() },
+            Block {
+                layout,
+                slot,
+                session,
+                local,
+                rows_received: 0,
+                sealed: false,
+                name: name.to_string(),
+            },
         );
         Ok(())
     }
@@ -57,13 +92,20 @@ impl MatrixStore {
         name: &str,
         layout: RowBlockLayout,
         local: LocalMatrix,
+        slot: usize,
+        session: u64,
     ) -> crate::Result<()> {
         anyhow::ensure!(
             !self.blocks.contains_key(&id),
             "matrix id {id} already exists on rank {}",
             self.rank
         );
-        let (a, b) = layout.ranges[self.rank];
+        anyhow::ensure!(
+            slot < layout.ranges.len(),
+            "slot {slot} outside layout of {} ranges",
+            layout.ranges.len()
+        );
+        let (a, b) = layout.ranges[slot];
         anyhow::ensure!(
             local.rows() == b - a && local.cols() == layout.cols,
             "block shape {}x{} does not match layout slot {}x{} on rank {}",
@@ -76,7 +118,15 @@ impl MatrixStore {
         let rows = local.rows() as u64;
         self.blocks.insert(
             id,
-            Block { layout, local, rows_received: rows, sealed: true, name: name.to_string() },
+            Block {
+                layout,
+                slot,
+                session,
+                local,
+                rows_received: rows,
+                sealed: true,
+                name: name.to_string(),
+            },
         );
         Ok(())
     }
@@ -101,7 +151,7 @@ impl MatrixStore {
         );
         anyhow::ensure!(data.len() % ncols == 0, "ragged row payload");
         let nrows = data.len() / ncols;
-        let (lo, hi) = block.layout.ranges[self.rank];
+        let (lo, hi) = block.layout.ranges[block.slot];
         let start = start_row as usize;
         anyhow::ensure!(
             start >= lo && start + nrows <= hi,
@@ -124,7 +174,7 @@ impl MatrixStore {
             block.sealed,
             "matrix {id} is still being ingested (not sealed)"
         );
-        let (lo, hi) = block.layout.ranges[self.rank];
+        let (lo, hi) = block.layout.ranges[block.slot];
         let start = start_row as usize;
         anyhow::ensure!(
             start >= lo && start + nrows <= hi,
@@ -158,6 +208,14 @@ impl MatrixStore {
         self.blocks.remove(&id).is_some()
     }
 
+    /// Drop every block owned by `session` (teardown); returns how many
+    /// were freed. Other sessions' blocks are untouched.
+    pub fn free_session(&mut self, session: u64) -> usize {
+        let before = self.blocks.len();
+        self.blocks.retain(|_, b| b.session != session);
+        before - self.blocks.len()
+    }
+
     pub fn ids(&self) -> Vec<u64> {
         let mut v: Vec<u64> = self.blocks.keys().copied().collect();
         v.sort_unstable();
@@ -177,14 +235,16 @@ impl MatrixStore {
 mod tests {
     use super::*;
 
+    const SID: u64 = 11;
+
     fn layout2() -> RowBlockLayout {
         RowBlockLayout::even(10, 3, 2)
     }
 
     #[test]
     fn ingest_flow() {
-        let mut s = MatrixStore::new(1); // owns rows [5, 10)
-        s.alloc(7, "X", layout2()).unwrap();
+        let mut s = MatrixStore::new(1); // slot 1 owns rows [5, 10)
+        s.alloc(7, "X", layout2(), 1, SID).unwrap();
         s.write_rows(7, 5, 3, &[1.0; 6]).unwrap(); // rows 5,6
         s.write_rows(7, 7, 3, &[2.0; 9]).unwrap(); // rows 7,8,9
         assert_eq!(s.seal(7).unwrap(), 5);
@@ -196,10 +256,24 @@ mod tests {
     }
 
     #[test]
+    fn slot_decouples_from_global_rank() {
+        // a worker with global rank 5 fills slot 0 of a 2-range layout
+        // (session-scoped groups: group-local rank != global rank)
+        let mut s = MatrixStore::new(5);
+        s.alloc(1, "X", layout2(), 0, SID).unwrap();
+        s.write_rows(1, 0, 3, &[3.0; 15]).unwrap(); // rows [0, 5)
+        assert_eq!(s.seal(1).unwrap(), 5);
+        assert_eq!(s.read_rows(1, 4, 1).unwrap(), vec![3.0, 3.0, 3.0]);
+        // rows of the other slot are rejected
+        assert!(s.write_rows(1, 5, 3, &[0.0; 3]).is_err());
+    }
+
+    #[test]
     fn rejects_bad_writes() {
-        let mut s = MatrixStore::new(0); // owns rows [0, 5)
-        s.alloc(1, "X", layout2()).unwrap();
-        assert!(s.alloc(1, "X", layout2()).is_err()); // duplicate id
+        let mut s = MatrixStore::new(0); // slot 0 owns rows [0, 5)
+        s.alloc(1, "X", layout2(), 0, SID).unwrap();
+        assert!(s.alloc(1, "X", layout2(), 0, SID).is_err()); // duplicate id
+        assert!(s.alloc(2, "X", layout2(), 9, SID).is_err()); // bad slot
         assert!(s.write_rows(1, 4, 3, &[0.0; 6]).is_err()); // crosses range end
         assert!(s.write_rows(1, 0, 2, &[0.0; 2]).is_err()); // wrong width
         assert!(s.write_rows(2, 0, 3, &[0.0; 3]).is_err()); // unknown id
@@ -212,10 +286,25 @@ mod tests {
     fn insert_checks_shape() {
         let mut s = MatrixStore::new(0);
         let l = layout2();
-        assert!(s.insert(3, "W", l.clone(), LocalMatrix::zeros(4, 3)).is_err());
-        s.insert(3, "W", l, LocalMatrix::zeros(5, 3)).unwrap();
+        assert!(s
+            .insert(3, "W", l.clone(), LocalMatrix::zeros(4, 3), 0, SID)
+            .is_err());
+        s.insert(3, "W", l, LocalMatrix::zeros(5, 3), 0, SID).unwrap();
         assert!(s.get(3).unwrap().sealed);
         assert!(s.free(3));
         assert!(!s.free(3));
+    }
+
+    #[test]
+    fn free_session_is_scoped() {
+        let mut s = MatrixStore::new(0);
+        s.alloc(1, "A", layout2(), 0, 100).unwrap();
+        s.alloc(2, "B", layout2(), 0, 100).unwrap();
+        s.alloc(3, "C", layout2(), 1, 200).unwrap();
+        assert_eq!(s.free_session(100), 2);
+        assert_eq!(s.ids(), vec![3]);
+        assert_eq!(s.free_session(100), 0);
+        assert_eq!(s.free_session(200), 1);
+        assert!(s.is_empty());
     }
 }

@@ -1,11 +1,17 @@
-//! Alchemist worker: one rank of the SPMD group.
+//! Alchemist worker: one rank of the server's worker pool.
 //!
 //! Each worker owns (a) a slot in the shared matrix-store array — written
 //! by its data-socket threads during ingest, read by routines during
 //! compute — and (b) a command loop thread that executes library routines
-//! with this rank's communicator endpoint and compute engine. The engine
-//! is built lazily *on the worker thread* (PJRT handles are not `Send`).
+//! with the communicator of whichever *session group* the task belongs
+//! to. Workers are allocated to sessions exclusively: the driver binds a
+//! session-scoped [`LocalComm`] endpoint into [`WorkerShared::sessions`]
+//! at handshake time and removes it at teardown, so tasks from sessions
+//! holding disjoint groups run concurrently on disjoint worker threads.
+//! The engine is built lazily *on the worker thread* (PJRT handles are
+//! not `Send`).
 
+use std::collections::HashMap;
 use std::net::TcpStream;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -22,12 +28,19 @@ use super::registry::{Library, WorkerCtx};
 use super::store::MatrixStore;
 
 /// State shared between the worker thread, its data-socket threads, and
-/// the driver (which allocates/seals/frees blocks directly).
+/// the driver (which allocates/seals/frees blocks and binds sessions
+/// directly).
 pub struct WorkerShared {
+    /// Global rank in the server's worker pool.
     pub rank: usize,
     pub store: Mutex<MatrixStore>,
     /// `host:port` of this worker's data listener.
     pub data_addr: Mutex<String>,
+    /// session id → this worker's endpoint in that session's group
+    /// communicator (bound at handshake, removed at teardown). The
+    /// endpoint's [`Communicator::rank`] is the session's group-local
+    /// rank for this worker.
+    pub sessions: Mutex<HashMap<u64, Arc<LocalComm>>>,
 }
 
 /// Output metadata a rank reports back to the driver after a task (the
@@ -51,6 +64,8 @@ pub struct TaskReply {
 /// Commands the driver sends to a worker thread.
 pub enum WorkerCmd {
     RunTask {
+        /// Session whose bound group communicator executes the task.
+        session_id: u64,
         lib: Arc<dyn Library>,
         routine: String,
         params: Params,
@@ -62,28 +77,35 @@ pub enum WorkerCmd {
 }
 
 /// The worker command loop. Runs until `Shutdown`.
-pub fn worker_main(
-    shared: Arc<WorkerShared>,
-    comm: LocalComm,
-    cfg: Config,
-    rx: mpsc::Receiver<WorkerCmd>,
-) {
+pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<WorkerCmd>) {
     let rank = shared.rank;
     let mut engine: Option<Box<dyn Engine>> = None;
     while let Ok(cmd) = rx.recv() {
         match cmd {
             WorkerCmd::Shutdown => break,
-            WorkerCmd::RunTask { lib, routine, params, out_base, reply } => {
+            WorkerCmd::RunTask { session_id, lib, routine, params, out_base, reply } => {
                 let result = (|| -> crate::Result<TaskReply> {
+                    let comm = shared
+                        .sessions
+                        .lock()
+                        .unwrap()
+                        .get(&session_id)
+                        .cloned()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "rank {rank}: session {session_id} holds no group here"
+                            )
+                        })?;
                     if engine.is_none() {
                         engine = Some(build_engine(&cfg)?);
                     }
                     let engine = engine.as_mut().unwrap();
+                    let local_rank = comm.rank();
                     let cpu0 = thread_cpu_secs();
                     let sim0 = comm.sim_comm_secs();
                     let mut ctx = WorkerCtx {
-                        rank,
-                        comm: &comm,
+                        rank: local_rank,
+                        comm: comm.as_ref(),
                         engine: engine.as_mut(),
                         store: &shared.store,
                         config: &cfg,
@@ -102,7 +124,7 @@ pub fn worker_main(
                             rows: m.layout.rows as u64,
                             cols: m.layout.cols as u64,
                         });
-                        store.insert(id, &m.name, m.layout, m.local)?;
+                        store.insert(id, &m.name, m.layout, m.local, local_rank, session_id)?;
                     }
                     let mut timings = out.timings;
                     timings.push(("cpu_busy".into(), cpu_busy));
@@ -120,9 +142,22 @@ pub fn worker_main(
     log::debug!("worker {rank} exiting");
 }
 
+/// Data-plane ownership gate: a connection may only touch matrices of
+/// the session it performed its `DataHandshake` as (tenant isolation —
+/// matrix ids are sequential and trivially guessable).
+fn check_session(owner: u64, conn_session: Option<u64>, id: u64) -> crate::Result<()> {
+    match conn_session {
+        Some(s) if s == owner => Ok(()),
+        Some(s) => anyhow::bail!("matrix {id} is not owned by session {s}"),
+        None => anyhow::bail!("data handshake required before accessing matrix {id}"),
+    }
+}
+
 /// Handle one executor's data connection (runs on its own thread; several
 /// executors can stream to the same worker concurrently — the paper's
-/// asynchronous many-to-many transfer pattern).
+/// asynchronous many-to-many transfer pattern). The connection binds to
+/// one session at `DataHandshake` and may only touch that session's
+/// matrices.
 pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) {
     let mut framed = match Framed::tcp(stream, cfg.transfer.buf_bytes) {
         Ok(f) => f,
@@ -131,22 +166,43 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
             return;
         }
     };
+    let mut conn_session: Option<u64> = None;
     loop {
         let msg = match framed.recv_data() {
             Ok(m) => m,
             Err(_) => return, // peer closed
         };
         let reply = match msg {
-            DataMsg::DataHandshake { .. } => {
-                Some(DataMsg::DataHandshakeAck { worker_rank: shared.rank as u32 })
+            DataMsg::DataHandshake { session_id, .. } => {
+                // reply with the session's group-local rank for this
+                // worker (executors index worker addresses per session
+                // group); sessions holding no group here are rejected
+                let local = shared
+                    .sessions
+                    .lock()
+                    .unwrap()
+                    .get(&session_id)
+                    .map(|c| c.rank());
+                match local {
+                    Some(local) => {
+                        conn_session = Some(session_id);
+                        Some(DataMsg::DataHandshakeAck { worker_rank: local as u32 })
+                    }
+                    None => Some(DataMsg::DataError {
+                        message: format!(
+                            "session {session_id} holds no group on worker {}",
+                            shared.rank
+                        ),
+                    }),
+                }
             }
             DataMsg::PushRows { matrix_id, start_row, ncols, data, .. } => {
-                let res = shared.store.lock().unwrap().write_rows(
-                    matrix_id,
-                    start_row,
-                    ncols as usize,
-                    &data,
-                );
+                let mut store = shared.store.lock().unwrap();
+                let res = (|| -> crate::Result<()> {
+                    let owner = store.get(matrix_id)?.session;
+                    check_session(owner, conn_session, matrix_id)?;
+                    store.write_rows(matrix_id, start_row, ncols as usize, &data)
+                })();
                 match res {
                     Ok(()) => None, // streaming: acks only at PushDone
                     Err(e) => Some(DataMsg::DataError { message: e.to_string() }),
@@ -154,20 +210,25 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
             }
             DataMsg::PushDone { matrix_id } => {
                 let store = shared.store.lock().unwrap();
-                match store.get(matrix_id) {
-                    Ok(block) => Some(DataMsg::PushDoneAck {
-                        matrix_id,
-                        rows_received: block.rows_received,
-                    }),
+                let res = (|| -> crate::Result<u64> {
+                    let block = store.get(matrix_id)?;
+                    check_session(block.session, conn_session, matrix_id)?;
+                    Ok(block.rows_received)
+                })();
+                match res {
+                    Ok(rows_received) => {
+                        Some(DataMsg::PushDoneAck { matrix_id, rows_received })
+                    }
                     Err(e) => Some(DataMsg::DataError { message: e.to_string() }),
                 }
             }
             DataMsg::PullRows { matrix_id, start_row, nrows } => {
-                let res = shared
-                    .store
-                    .lock()
-                    .unwrap()
-                    .read_rows(matrix_id, start_row, nrows as usize);
+                let store = shared.store.lock().unwrap();
+                let res = (|| -> crate::Result<Vec<f64>> {
+                    let owner = store.get(matrix_id)?.session;
+                    check_session(owner, conn_session, matrix_id)?;
+                    store.read_rows(matrix_id, start_row, nrows as usize)
+                })();
                 match res {
                     Ok(data) => {
                         let ncols = data.len() / (nrows as usize).max(1);
@@ -195,15 +256,23 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
     }
 }
 
-/// Driver-side helper: allocate a matrix for ingest across all workers.
-pub fn alloc_all(
+/// Driver-side helper: allocate a matrix for ingest across one session's
+/// worker group. `ranks[slot]` is the global rank filling layout slot
+/// `slot` (the session's group-local rank).
+pub fn alloc_group(
     workers: &[Arc<WorkerShared>],
+    ranks: &[usize],
+    session_id: u64,
     id: u64,
     name: &str,
     layout: &RowBlockLayout,
 ) -> crate::Result<()> {
-    for w in workers {
-        w.store.lock().unwrap().alloc(id, name, layout.clone())?;
+    for (slot, &rank) in ranks.iter().enumerate() {
+        workers[rank]
+            .store
+            .lock()
+            .unwrap()
+            .alloc(id, name, layout.clone(), slot, session_id)?;
     }
     Ok(())
 }

@@ -19,6 +19,19 @@
 //!   Interface of §3.1.2);
 //! * experiment support — [`workloads`], [`testkit`].
 //!
+//! ## Sessions & worker groups
+//!
+//! The coordinator is a concurrent multi-tenant scheduler: each client
+//! handshake negotiates a worker-group size (the paper's
+//! `requestWorkers`), a FIFO admission queue grants an *exclusive* subset
+//! of the worker pool, and the session's tasks run SPMD over that group's
+//! own [`collectives::LocalComm::subgroup`] communicator. Sessions on
+//! disjoint groups execute concurrently; requests exceeding free capacity
+//! queue (bounded by `scheduler.queue_timeout_s`); matrix handles are
+//! namespaced per session so teardown frees one tenant's state without
+//! touching the others. See [`config::SchedulerConfig`] for the policy
+//! knobs and `tests/it_sessions.rs` for the observable guarantees.
+//!
 //! See `DESIGN.md` for the substitution table (what the paper ran on Cori
 //! vs. what this repo builds) and the experiment index mapping Tables 1–5
 //! and Figure 3 to `rust/benches/`.

@@ -134,11 +134,12 @@ mod tests {
                         f.send_ctrl(&ControlMsg::Bye).unwrap();
                         break;
                     }
-                    ControlMsg::Handshake { client_name, version } => {
+                    ControlMsg::Handshake { client_name, version, .. } => {
                         assert_eq!(client_name, "t");
                         f.send_ctrl(&ControlMsg::HandshakeAck {
                             session_id: 1,
                             version,
+                            granted_workers: 0,
                             worker_addrs: vec![],
                         })
                         .unwrap();
@@ -150,7 +151,11 @@ mod tests {
 
         let mut c = Framed::connect(&addr.to_string(), 1 << 16).unwrap();
         let reply = c
-            .call(&ControlMsg::Handshake { client_name: "t".into(), version: 1 })
+            .call(&ControlMsg::Handshake {
+                client_name: "t".into(),
+                version: 1,
+                request_workers: 0,
+            })
             .unwrap();
         assert!(matches!(reply, ControlMsg::HandshakeAck { session_id: 1, .. }));
         let bye = c.call(&ControlMsg::Shutdown).unwrap();

@@ -49,7 +49,13 @@ fn decode_ranges(r: &mut Reader) -> Result<Vec<(u64, u64)>, ProtocolError> {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ControlMsg {
     // client -> server
-    Handshake { client_name: String, version: u32 },
+    Handshake {
+        client_name: String,
+        version: u32,
+        /// Worker-group size this session asks for (the paper's
+        /// `requestWorkers` API); 0 = server default policy.
+        request_workers: u32,
+    },
     RegisterLibrary { name: String, path: String },
     /// Allocate a handle; rows will arrive on the data sockets.
     CreateMatrix { name: String, rows: u64, cols: u64 },
@@ -65,7 +71,10 @@ pub enum ControlMsg {
     HandshakeAck {
         session_id: u64,
         version: u32,
-        /// One `host:port` per Alchemist worker, index = worker rank.
+        /// Size of the worker group granted to this session.
+        granted_workers: u32,
+        /// One `host:port` per granted worker, index = the session's
+        /// group-local worker rank.
         worker_addrs: Vec<String>,
     },
     LibraryRegistered { name: String },
@@ -92,10 +101,11 @@ impl ControlMsg {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
-            ControlMsg::Handshake { client_name, version } => {
+            ControlMsg::Handshake { client_name, version, request_workers } => {
                 w.u8(0);
                 w.str(client_name);
                 w.u32(*version);
+                w.u32(*request_workers);
             }
             ControlMsg::RegisterLibrary { name, path } => {
                 w.u8(1);
@@ -128,10 +138,16 @@ impl ControlMsg {
             }
             ControlMsg::ListMatrices => w.u8(7),
             ControlMsg::Shutdown => w.u8(8),
-            ControlMsg::HandshakeAck { session_id, version, worker_addrs } => {
+            ControlMsg::HandshakeAck {
+                session_id,
+                version,
+                granted_workers,
+                worker_addrs,
+            } => {
                 w.u8(128);
                 w.u64(*session_id);
                 w.u32(*version);
+                w.u32(*granted_workers);
                 w.u32(worker_addrs.len() as u32);
                 for a in worker_addrs {
                     w.str(a);
@@ -192,7 +208,16 @@ impl ControlMsg {
     pub fn decode(buf: &[u8]) -> Result<Self, ProtocolError> {
         let mut r = Reader::new(buf);
         let msg = match r.u8()? {
-            0 => ControlMsg::Handshake { client_name: r.str()?, version: r.u32()? },
+            0 => {
+                let client_name = r.str()?;
+                let version = r.u32()?;
+                // v1 frames end at `version`; tolerate the short form so
+                // the server can still answer with its version-mismatch
+                // diagnostic instead of dropping the connection
+                let request_workers =
+                    if r.remaining() > 0 { r.u32()? } else { 0 };
+                ControlMsg::Handshake { client_name, version, request_workers }
+            }
             1 => ControlMsg::RegisterLibrary { name: r.str()?, path: r.str()? },
             2 => ControlMsg::CreateMatrix {
                 name: r.str()?,
@@ -212,10 +237,16 @@ impl ControlMsg {
             128 => {
                 let session_id = r.u64()?;
                 let version = r.u32()?;
+                let granted_workers = r.u32()?;
                 let n = r.u32()?;
                 let worker_addrs =
                     (0..n).map(|_| r.str()).collect::<Result<_, _>>()?;
-                ControlMsg::HandshakeAck { session_id, version, worker_addrs }
+                ControlMsg::HandshakeAck {
+                    session_id,
+                    version,
+                    granted_workers,
+                    worker_addrs,
+                }
             }
             129 => ControlMsg::LibraryRegistered { name: r.str()? },
             130 => ControlMsg::MatrixCreated {
@@ -390,7 +421,11 @@ mod tests {
     #[test]
     fn control_roundtrip_all_variants() {
         let msgs = vec![
-            ControlMsg::Handshake { client_name: "spark-app".into(), version: 1 },
+            ControlMsg::Handshake {
+                client_name: "spark-app".into(),
+                version: 2,
+                request_workers: 4,
+            },
             ControlMsg::RegisterLibrary { name: "skylark".into(), path: "builtin:skylark".into() },
             ControlMsg::CreateMatrix { name: "X".into(), rows: 10, cols: 4 },
             ControlMsg::SealMatrix { id: 3 },
@@ -405,7 +440,8 @@ mod tests {
             ControlMsg::Shutdown,
             ControlMsg::HandshakeAck {
                 session_id: 9,
-                version: 1,
+                version: 2,
+                granted_workers: 2,
                 worker_addrs: vec!["127.0.0.1:4001".into(), "127.0.0.1:4002".into()],
             },
             ControlMsg::LibraryRegistered { name: "skylark".into() },
@@ -430,6 +466,24 @@ mod tests {
             let back = ControlMsg::decode(&buf).unwrap();
             assert_eq!(m, back);
         }
+    }
+
+    #[test]
+    fn v1_handshake_without_request_workers_still_decodes() {
+        // a protocol-v1 client's frame: tag, name, version — no group size
+        let mut w = Writer::new();
+        w.u8(0);
+        w.str("old-client");
+        w.u32(1);
+        let msg = ControlMsg::decode(&w.into_bytes()).unwrap();
+        assert_eq!(
+            msg,
+            ControlMsg::Handshake {
+                client_name: "old-client".into(),
+                version: 1,
+                request_workers: 0,
+            }
+        );
     }
 
     #[test]

@@ -21,5 +21,6 @@ pub use value::{Params, Value};
 pub use wire::{ProtocolError, Reader, Writer};
 
 /// Protocol version; bumped on any wire-format change, checked in the
-/// handshake.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// handshake. v2: worker-group negotiation (`request_workers` /
+/// `granted_workers`) on the handshake.
+pub const PROTOCOL_VERSION: u32 = 2;

@@ -86,8 +86,9 @@ fn store_ingest_covers_matrix_in_any_order() {
         // build stores, write each row to its owner in shuffled order
         let mut stores: Vec<MatrixStore> =
             (0..workers).map(MatrixStore::new).collect();
-        for s in &mut stores {
-            s.alloc(1, "X", layout.clone()).unwrap();
+        for (slot, s) in stores.iter_mut().enumerate() {
+            // slot = the store's group-local rank in this layout
+            s.alloc(1, "X", layout.clone(), slot, 1).unwrap();
         }
         let mut order: Vec<usize> = (0..rows).collect();
         // shuffle via Gen

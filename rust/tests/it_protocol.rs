@@ -37,7 +37,11 @@ fn random_info(g: &mut Gen) -> MatrixInfo {
 fn control_messages_roundtrip() {
     props(300, |g| {
         let msg = match g.usize_in(0, 9) {
-            0 => ControlMsg::Handshake { client_name: g.ident(20), version: g.u64() as u32 },
+            0 => ControlMsg::Handshake {
+                client_name: g.ident(20),
+                version: g.u64() as u32,
+                request_workers: g.u64() as u32,
+            },
             1 => ControlMsg::RegisterLibrary { name: g.ident(8), path: g.ident(30) },
             2 => ControlMsg::CreateMatrix {
                 name: g.ident(8),
@@ -54,6 +58,7 @@ fn control_messages_roundtrip() {
                 ControlMsg::HandshakeAck {
                     session_id: g.u64(),
                     version: 1,
+                    granted_workers: g.u64() as u32,
                     worker_addrs: (0..n).map(|_| g.ident(21)).collect(),
                 }
             }

@@ -207,13 +207,17 @@ fn error_paths_are_reported_not_fatal() {
 #[test]
 fn seal_with_missing_rows_fails_and_session_survives() {
     use alchemist::net::Framed;
-    use alchemist::protocol::ControlMsg;
+    use alchemist::protocol::{ControlMsg, PROTOCOL_VERSION};
 
     let server = AlchemistServer::start(native_cfg(), 2).unwrap();
     let cfg = native_cfg();
     let mut control = Framed::connect(&server.control_addr, cfg.transfer.buf_bytes).unwrap();
     let reply = control
-        .call(&ControlMsg::Handshake { client_name: "t".into(), version: 1 })
+        .call(&ControlMsg::Handshake {
+            client_name: "t".into(),
+            version: PROTOCOL_VERSION,
+            request_workers: 0,
+        })
         .unwrap();
     assert!(matches!(reply, ControlMsg::HandshakeAck { .. }));
     // create a 10-row matrix but push nothing
@@ -235,13 +239,17 @@ fn seal_with_missing_rows_fails_and_session_survives() {
 #[test]
 fn data_plane_rejects_bad_pushes_and_unsealed_pulls() {
     use alchemist::net::Framed;
-    use alchemist::protocol::{ControlMsg, DataMsg};
+    use alchemist::protocol::{ControlMsg, DataMsg, PROTOCOL_VERSION};
 
     let cfg = native_cfg();
     let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
     let mut control = Framed::connect(&server.control_addr, 1 << 16).unwrap();
     let ack = control
-        .call(&ControlMsg::Handshake { client_name: "t".into(), version: 1 })
+        .call(&ControlMsg::Handshake {
+            client_name: "t".into(),
+            version: PROTOCOL_VERSION,
+            request_workers: 0,
+        })
         .unwrap();
     let worker_addrs = match ack {
         ControlMsg::HandshakeAck { worker_addrs, .. } => worker_addrs,
@@ -303,19 +311,29 @@ fn data_plane_rejects_bad_pushes_and_unsealed_pulls() {
 #[test]
 fn executor_disconnect_mid_push_leaves_matrix_unsealed_not_poisoned() {
     use alchemist::net::Framed;
-    use alchemist::protocol::{ControlMsg, DataMsg};
+    use alchemist::protocol::{ControlMsg, DataMsg, PROTOCOL_VERSION};
 
     let cfg = native_cfg();
     let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
-    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    // worker groups are exclusive now: split the 2-worker pool so this
+    // context and the hand-rolled session below can coexist
+    let mut ac =
+        AlchemistContext::connect_with_workers(&server.control_addr, &cfg, 1, 1).unwrap();
+    assert_eq!(ac.granted_workers, 1);
 
     // half-push by hand, then drop the socket
     let mut control = Framed::connect(&server.control_addr, 1 << 16).unwrap();
     let ack = control
-        .call(&ControlMsg::Handshake { client_name: "t2".into(), version: 1 })
+        .call(&ControlMsg::Handshake {
+            client_name: "t2".into(),
+            version: PROTOCOL_VERSION,
+            request_workers: 1,
+        })
         .unwrap();
-    let worker_addrs = match ack {
-        ControlMsg::HandshakeAck { worker_addrs, .. } => worker_addrs,
+    let (session_id, worker_addrs) = match ack {
+        ControlMsg::HandshakeAck { session_id, worker_addrs, .. } => {
+            (session_id, worker_addrs)
+        }
         other => panic!("{other:?}"),
     };
     let created = control
@@ -327,6 +345,9 @@ fn executor_disconnect_mid_push_leaves_matrix_unsealed_not_poisoned() {
     };
     {
         let mut data = Framed::connect(&worker_addrs[0], 1 << 16).unwrap();
+        data.send_data_flush(&DataMsg::DataHandshake { session_id, executor_id: 0 })
+            .unwrap();
+        assert!(matches!(data.recv_data().unwrap(), DataMsg::DataHandshakeAck { .. }));
         data.send_data_flush(&DataMsg::PushRows {
             matrix_id: id,
             start_row: 0,
@@ -337,6 +358,8 @@ fn executor_disconnect_mid_push_leaves_matrix_unsealed_not_poisoned() {
         .unwrap();
         // dropped here: disconnect without PushDone
     }
+    // (no ack on streamed PushRows, so the row may or may not have landed
+    // before the seal races it — either way sealing must fail short)
     let err = control.call(&ControlMsg::SealMatrix { id }).unwrap_err();
     assert!(err.to_string().contains("sealed with"), "{err}");
 

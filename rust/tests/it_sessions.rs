@@ -1,0 +1,274 @@
+//! Integration: session-scoped worker groups and the concurrent
+//! multi-tenant scheduler — disjoint groups make progress simultaneously,
+//! oversubscribed requests queue FIFO until a teardown frees capacity,
+//! and teardown frees exactly the departing session's matrices.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::{Config, EngineKind};
+use alchemist::coordinator::AlchemistServer;
+use alchemist::distmat::LocalMatrix;
+use alchemist::protocol::Params;
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::util::prng::Rng;
+
+fn native_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+fn random_matrix(seed: u64, rows: usize, cols: usize) -> LocalMatrix {
+    let mut rng = Rng::new(seed);
+    LocalMatrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+#[test]
+fn disjoint_groups_run_tasks_concurrently() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 4).unwrap();
+    let addr = server.control_addr.clone();
+
+    // baseline: one 2-worker session, one sleep task
+    let mut ac0 =
+        AlchemistContext::connect_with_workers(&addr, &cfg, 1, 2).unwrap();
+    assert_eq!(ac0.granted_workers, 2);
+    assert_eq!(ac0.num_workers(), 2);
+    ac0.register_library("elemental", "builtin:elemental").unwrap();
+    let t0 = Instant::now();
+    let res = ac0
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 400))
+        .unwrap();
+    let single = t0.elapsed().as_secs_f64();
+    // the task ran on the session's own 2-rank group, not the 4-rank pool
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+    ac0.stop();
+
+    // two sessions on disjoint 2-worker groups sleep at the same time:
+    // sleeps do not contend for cores, so overlap shows up in wallclock
+    // even on a single-core box
+    let t1 = Instant::now();
+    let mut handles = Vec::new();
+    let (addrs_tx, addrs_rx) = mpsc::channel();
+    for i in 0..2u64 {
+        let addr = addr.clone();
+        let cfg = cfg.clone();
+        let addrs_tx = addrs_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ac =
+                AlchemistContext::connect_with_workers(&addr, &cfg, 1, 2).unwrap();
+            assert_eq!(ac.granted_workers, 2);
+            addrs_tx.send(ac.worker_addrs.clone()).unwrap();
+            ac.register_library("elemental", "builtin:elemental").unwrap();
+            let res = ac
+                .run_task(
+                    "elemental",
+                    "sleep",
+                    Params::new().with_i64("millis", 400).with_i64("tenant", i as i64),
+                )
+                .unwrap();
+            assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+            ac.stop();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let combined = t1.elapsed().as_secs_f64();
+
+    // the acceptance bound: two concurrent tasks cost < 1.8x one task
+    assert!(
+        combined < 1.8 * single,
+        "tasks serialized: single {single:.3}s, combined {combined:.3}s"
+    );
+
+    // the two groups were disjoint worker sets
+    let a: Vec<String> = addrs_rx.recv().unwrap();
+    let b: Vec<String> = addrs_rx.recv().unwrap();
+    assert!(a.iter().all(|x| !b.contains(x)), "groups overlap: {a:?} vs {b:?}");
+
+    server.shutdown();
+}
+
+#[test]
+fn oversubscribed_request_queues_until_teardown_grants() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    let a = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 1).unwrap();
+    let b = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 1).unwrap();
+    assert_eq!((a.granted_workers, b.granted_workers), (1, 1));
+
+    // a third session wants the whole pool: it must queue, not error
+    let (tx, rx) = mpsc::channel();
+    let waiter = {
+        let (addr, cfg) = (addr.clone(), cfg.clone());
+        std::thread::spawn(move || {
+            let granted = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 2)
+                .map(|ac| ac.granted_workers);
+            tx.send(granted).unwrap();
+        })
+    };
+    std::thread::sleep(Duration::from_millis(300));
+    assert!(rx.try_recv().is_err(), "request was admitted while pool was full");
+
+    // freeing one worker is not enough for a 2-worker request
+    a.stop();
+    std::thread::sleep(Duration::from_millis(300));
+    assert!(rx.try_recv().is_err(), "granted with only half the capacity free");
+
+    // freeing the second worker admits the queued session
+    b.stop();
+    let granted = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("queued handshake never completed")
+        .expect("queued handshake failed");
+    assert_eq!(granted, 2);
+    waiter.join().unwrap();
+
+    // a request the pool can never satisfy fails immediately
+    let err = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 3).unwrap_err();
+    assert!(err.to_string().contains("only has"), "{err}");
+
+    server.shutdown();
+}
+
+#[test]
+fn queue_timeout_errors_instead_of_hanging() {
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.queue_timeout_s", "0.3").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 1).unwrap();
+    let addr = server.control_addr.clone();
+
+    let holder = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 1).unwrap();
+    let t0 = Instant::now();
+    let err = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 1).unwrap_err();
+    assert!(err.to_string().contains("timed out"), "{err}");
+    assert!(t0.elapsed() >= Duration::from_millis(250), "timed out too early");
+    holder.stop();
+    server.shutdown();
+}
+
+#[test]
+fn teardown_frees_only_the_departing_sessions_matrices() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    let mut a = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 1).unwrap();
+    let mut b = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 1).unwrap();
+    a.register_library("elemental", "builtin:elemental").unwrap();
+
+    let xa = random_matrix(1, 6, 3);
+    let xb = random_matrix(2, 5, 2);
+    let (al_a, _) = a.send_matrix("Xa", &IndexedRowMatrix::from_local(&xa, 2)).unwrap();
+    let (al_b, _) = b.send_matrix("Xb", &IndexedRowMatrix::from_local(&xb, 2)).unwrap();
+    // a also computes an output matrix server-side
+    let res = a
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 8).with_i64("cols", 2).with_i64("seed", 3),
+        )
+        .unwrap();
+    assert_eq!(res.outputs.len(), 1);
+    assert_eq!(server.total_blocks(), 3);
+    assert_eq!(server.active_sessions(), 2);
+
+    // handles are namespaced: sessions list and free only their own
+    let listed_a = a.list_matrices().unwrap();
+    assert!(listed_a.iter().any(|(id, ..)| *id == al_a.id));
+    assert!(!listed_a.iter().any(|(id, ..)| *id == al_b.id));
+    let err = b.free(&al_a).unwrap_err();
+    assert!(err.to_string().contains("unknown matrix handle"), "{err}");
+
+    // a's teardown frees a's two matrices and nothing else
+    a.stop();
+    let t0 = Instant::now();
+    while server.total_blocks() != 1 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "teardown never freed blocks");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(server.active_sessions(), 1);
+
+    // b's matrix survived and still round-trips
+    let (back, _) = b.to_indexed_row_matrix(&al_b, 1).unwrap();
+    assert_eq!(back.to_local().unwrap(), xb);
+    b.stop();
+
+    let t0 = Instant::now();
+    while server.total_blocks() != 0 || server.active_sessions() != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "final teardown incomplete");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn data_plane_enforces_session_ownership() {
+    use alchemist::net::Framed;
+    use alchemist::protocol::DataMsg;
+
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    let mut a = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 1).unwrap();
+    let b = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 1).unwrap();
+    let xa = random_matrix(4, 6, 2);
+    let (al_a, _) = a.send_matrix("Xa", &IndexedRowMatrix::from_local(&xa, 1)).unwrap();
+
+    // a raw connection to a's worker cannot pull without a handshake
+    let mut data = Framed::connect(&a.worker_addrs[0], 1 << 16).unwrap();
+    data.send_data_flush(&DataMsg::PullRows {
+        matrix_id: al_a.id,
+        start_row: 0,
+        nrows: 1,
+    })
+    .unwrap();
+    match data.recv_data().unwrap() {
+        DataMsg::DataError { message } => {
+            assert!(message.contains("handshake required"), "{message}")
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // ...and cannot handshake as a session holding no group on this worker
+    data.send_data_flush(&DataMsg::DataHandshake {
+        session_id: b.session_id,
+        executor_id: 0,
+    })
+    .unwrap();
+    match data.recv_data().unwrap() {
+        DataMsg::DataError { message } => {
+            assert!(message.contains("holds no group"), "{message}")
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // a's own executors still work end-to-end
+    let (back, _) = a.to_indexed_row_matrix(&al_a, 1).unwrap();
+    assert_eq!(back.to_local().unwrap(), xa);
+
+    a.stop();
+    b.stop();
+    server.shutdown();
+}
+
+#[test]
+fn session_ops_require_handshake() {
+    use alchemist::net::Framed;
+    use alchemist::protocol::ControlMsg;
+
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg, 1).unwrap();
+    let mut control = Framed::connect(&server.control_addr, 1 << 16).unwrap();
+    let err = control
+        .call(&ControlMsg::CreateMatrix { name: "X".into(), rows: 4, cols: 2 })
+        .unwrap_err();
+    assert!(err.to_string().contains("handshake required"), "{err}");
+    server.shutdown();
+}
