@@ -1,11 +1,17 @@
 //! Table 3: feature-matrix transfer time vs (client executors × server
-//! workers).
+//! workers), both directions.
 //!
 //! Paper: 2,251,569×10,000 f64 over Cray Aries; transfer fastest when
 //! executor and worker counts match, slowest with 2 executors. Here the
 //! matrix scales to rows×1024 f64 over localhost TCP, sweeping executors
 //! {1,2,4,8} × workers {2,3,4}; the diagonal-minimum shape is the target.
 //! Reported numbers are the mean of `--runs` (default 3) like the paper.
+//!
+//! Beyond the paper's push-only table, this bench measures the pull leg
+//! (v3 streaming protocol) and can emit a machine-readable baseline with
+//! `--json PATH` — `BENCH_transfer.json` in the repo root is the
+//! committed reference every data-plane PR is compared against (CI runs
+//! the `--quick` size and uploads the artifact).
 
 mod bench_common;
 
@@ -17,6 +23,70 @@ use alchemist::sparklite::IndexedRowMatrix;
 use alchemist::util::fmt;
 use alchemist::workloads::TimitSpec;
 use bench_common::{bench_config, is_quick};
+
+/// One measured (executors, workers) cell.
+struct Cell {
+    executors: usize,
+    workers: usize,
+    push_secs: f64,
+    push_gbps: f64,
+    pull_secs: f64,
+    pull_gbps: f64,
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(
+    path: &str,
+    rows: usize,
+    cols: usize,
+    runs: usize,
+    quick: bool,
+    cfg: &alchemist::config::Config,
+    cells: &[Cell],
+) -> alchemist::Result<()> {
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str("  \"bench\": \"table3_transfer\",\n");
+    body.push_str(&format!(
+        "  \"protocol_version\": {},\n",
+        alchemist::protocol::PROTOCOL_VERSION
+    ));
+    body.push_str("  \"units\": {\"secs\": \"mean wallclock seconds\", \"gbps\": \"GB/s, 1e9 bytes\"},\n");
+    body.push_str(&format!(
+        "  \"config\": {{\"rows\": {rows}, \"cols\": {cols}, \"runs\": {runs}, \
+         \"quick\": {quick}, \"rows_per_frame\": {}, \"buf_bytes\": {}, \
+         \"pull_stripe_rows\": {}, \"pull_window\": {}}},\n",
+        cfg.transfer.rows_per_frame,
+        cfg.transfer.buf_bytes,
+        cfg.transfer.pull_stripe_rows,
+        cfg.transfer.pull_window,
+    ));
+    body.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"executors\": {}, \"workers\": {}, \"push_secs\": {}, \
+             \"push_gbps\": {}, \"pull_secs\": {}, \"pull_gbps\": {}}}{}\n",
+            c.executors,
+            c.workers,
+            json_num(c.push_secs),
+            json_num(c.push_gbps),
+            json_num(c.pull_secs),
+            json_num(c.pull_gbps),
+            if i + 1 == cells.len() { "" } else { "," },
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    std::fs::write(path, body)?;
+    println!("wrote {path}");
+    Ok(())
+}
 
 fn main() -> alchemist::Result<()> {
     alchemist::logging::init();
@@ -52,34 +122,60 @@ fn main() -> alchemist::Result<()> {
     );
 
     let mut table = Table::new(
-        "Table 3 (scaled): feature-matrix transfer times (s), mean of runs",
+        "Table 3 (scaled): transfer times (s), push | pull, mean of runs",
         &["executors \\ workers", "w=2", "w=3", "w=4"],
     );
+    let mut cells: Vec<Cell> = Vec::new();
 
     for &execs in &executors_list {
-        let mut cells = vec![format!("{execs}")];
+        let mut row_cells = vec![format!("{execs}")];
         for &workers in &[2usize, 3, 4] {
             if !workers_list.contains(&workers) {
-                cells.push("-".into());
+                row_cells.push("-".into());
                 continue;
             }
             let server = AlchemistServer::start(cfg.clone(), workers)?;
-            let mut stats = Stats::new();
-            let mut gbps = Stats::new();
+            let mut push_secs = Stats::new();
+            let mut push_gbps = Stats::new();
+            let mut pull_secs = Stats::new();
+            let mut pull_gbps = Stats::new();
             for run in 0..runs {
                 let mut ac =
                     AlchemistContext::connect(&server.control_addr, &cfg, execs)?;
                 let irm = IndexedRowMatrix::from_local(&data.x_train, execs.max(workers) * 2);
                 let (al, s) = ac.send_matrix(&format!("X{run}"), &irm)?;
-                stats.push(s.secs);
-                gbps.push(s.throughput_gbps());
+                push_secs.push(s.secs);
+                push_gbps.push(s.throughput_gbps());
+                let (back, p) = ac.to_indexed_row_matrix(&al, execs.max(1))?;
+                anyhow::ensure!(
+                    back.rows == rows && back.cols == cols,
+                    "pull returned {}x{}, expected {rows}x{cols}",
+                    back.rows,
+                    back.cols
+                );
+                pull_secs.push(p.secs);
+                pull_gbps.push(p.throughput_gbps());
                 ac.free(&al)?;
                 ac.stop();
             }
-            cells.push(format!("{:.3} ({:.2} GB/s)", stats.mean(), gbps.mean()));
+            row_cells.push(format!(
+                "{:.3} ({:.2} GB/s) | {:.3} ({:.2} GB/s)",
+                push_secs.mean(),
+                push_gbps.mean(),
+                pull_secs.mean(),
+                pull_gbps.mean()
+            ));
+            cells.push(Cell {
+                executors: execs,
+                workers,
+                push_secs: push_secs.mean(),
+                push_gbps: push_gbps.mean(),
+                pull_secs: pull_secs.mean(),
+                pull_gbps: pull_gbps.mean(),
+            });
             server.shutdown();
         }
-        table.row(&cells);
+        table.row(&row_cells);
     }
 
     table.print();
@@ -87,5 +183,8 @@ fn main() -> alchemist::Result<()> {
         "paper shape: more executors help until they exceed workers; minimum near \
          executors == workers"
     );
+    if let Some(path) = args.get("json") {
+        write_json(path, rows, cols, runs, quick, &cfg, &cells)?;
+    }
     Ok(())
 }

@@ -77,13 +77,20 @@ impl AlchemistContext {
             client_name: "alchemist-client".into(),
             version: PROTOCOL_VERSION,
             request_workers: request_workers as u32,
+            // ask for this client's configured transfer knobs; the server
+            // clamps to its limits and echoes the effective values
+            rows_per_frame: cfg.transfer.rows_per_frame as u32,
+            buf_bytes: cfg.transfer.buf_bytes as u64,
         })?;
+        let mut cfg = cfg.clone();
         let (session_id, granted_workers, worker_addrs) = match reply {
             ControlMsg::HandshakeAck {
                 session_id,
                 version,
                 granted_workers,
                 worker_addrs,
+                rows_per_frame,
+                buf_bytes,
             } => {
                 anyhow::ensure!(version == PROTOCOL_VERSION, "protocol mismatch");
                 anyhow::ensure!(
@@ -91,6 +98,14 @@ impl AlchemistContext {
                     "server granted {granted_workers} workers but sent {} addresses",
                     worker_addrs.len()
                 );
+                // adopt the negotiated values for every data link this
+                // session opens (0 = pre-v3 server: keep local config)
+                if rows_per_frame > 0 {
+                    cfg.transfer.rows_per_frame = rows_per_frame as usize;
+                }
+                if buf_bytes > 0 {
+                    cfg.transfer.buf_bytes = buf_bytes as usize;
+                }
                 (session_id, granted_workers as usize, worker_addrs)
             }
             other => anyhow::bail!("bad handshake reply: {other:?}"),
@@ -100,9 +115,15 @@ impl AlchemistContext {
             session_id,
             worker_addrs,
             granted_workers,
-            cfg: cfg.clone(),
+            cfg,
             executors: executors.max(1),
         })
+    }
+
+    /// The session's effective transfer configuration (requested knobs
+    /// after server-side clamping).
+    pub fn transfer_config(&self) -> &crate::config::TransferConfig {
+        &self.cfg.transfer
     }
 
     pub fn num_workers(&self) -> usize {

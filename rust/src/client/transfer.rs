@@ -2,17 +2,27 @@
 //! ranges back, over per-executor TCP sockets (paper §3.2 "Direct
 //! Transfer").
 //!
-//! Each executor thread owns one socket per worker it talks to. Rows are
-//! batched `rows_per_frame` at a time into `PushRows` frames (contiguous
-//! runs only — a run breaks whenever the destination worker or row
-//! continuity changes); the whole stream is acknowledged once per worker
-//! by `PushDone`.
+//! Each executor thread owns one socket per worker it talks to. Pushes
+//! batch rows `rows_per_frame` at a time into borrowed-payload
+//! `PushRows` frames (contiguous runs only — a run breaks whenever the
+//! destination worker or row continuity changes), reusing one frame
+//! buffer per executor so steady state allocates nothing; the stream is
+//! acknowledged once per worker by `PushDone`.
+//!
+//! Pulls use the v3 streaming protocol: each executor splits its row
+//! share into ranged stripes (`pull_stripe_rows` rows each), keeps up to
+//! `pull_window` stripes outstanding per worker link, and every link is
+//! primed before any reply is drained — so all workers stream
+//! concurrently, the per-frame request/reply round-trip of the old
+//! protocol is gone, and a link's socket never idles while the client
+//! assembles rows.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::config::TransferConfig;
 use crate::net::Framed;
-use crate::protocol::DataMsg;
+use crate::protocol::{copy_le_f64s, DataMsg, DataMsgRef, DataMsgView};
 use crate::sparklite::IndexedRow;
 
 use super::almatrix::AlMatrix;
@@ -106,6 +116,9 @@ impl<'a> ExecutorLinks<'a> {
             f.send_data_flush(&DataMsg::DataHandshake {
                 session_id: self.session_id,
                 executor_id: self.executor_id,
+                // pull replies should stream at this session's negotiated
+                // frame granularity (the worker clamps to its own limit)
+                rows_per_frame: self.cfg.rows_per_frame as u32,
             })?;
             match f.recv_data()? {
                 DataMsg::DataHandshakeAck { worker_rank } => {
@@ -113,6 +126,9 @@ impl<'a> ExecutorLinks<'a> {
                         worker_rank as usize == rank,
                         "connected to worker {worker_rank}, expected {rank}"
                     );
+                }
+                DataMsg::DataError { message } => {
+                    anyhow::bail!("data handshake rejected: {message}")
                 }
                 other => anyhow::bail!("bad data handshake reply: {other:?}"),
             }
@@ -123,7 +139,10 @@ impl<'a> ExecutorLinks<'a> {
 }
 
 /// Push one executor's share of rows. `rows` need not be sorted; batching
-/// exploits contiguity when present.
+/// exploits contiguity when present. The frame accumulator is reused
+/// across frames (cleared, never reallocated), and `send_data_ref`
+/// copies it straight into the socket buffer — zero per-frame heap
+/// allocation in steady state.
 fn push_rows_one_executor(
     matrix: &AlMatrix,
     rows: &[&IndexedRow],
@@ -135,10 +154,10 @@ fn push_rows_one_executor(
     let mut stats = TransferStats::default();
     let mut touched = vec![false; matrix.row_ranges.len()];
 
-    // current run being accumulated
+    // current run being accumulated (one reusable frame buffer)
     let mut run_start: u64 = 0;
     let mut run_owner: usize = usize::MAX;
-    let mut run_data: Vec<f64> = Vec::new();
+    let mut run_data: Vec<f64> = Vec::with_capacity(rows_per_frame * ncols);
     let mut run_rows: u32 = 0;
 
     let flush = |owner: usize,
@@ -151,16 +170,16 @@ fn push_rows_one_executor(
         if nrows == 0 {
             return Ok(());
         }
-        let msg = DataMsg::PushRows {
+        links.link(owner)?.send_data_ref(&DataMsgRef::PushRows {
             matrix_id: matrix.id,
             start_row: start,
             nrows,
             ncols: ncols as u32,
-            data: std::mem::take(data),
-        };
+            data: data.as_slice(),
+        })?;
         stats.bytes += nrows as usize * ncols * 8;
         stats.frames += 1;
-        links.link(owner)?.send_data(&msg)?;
+        data.clear();
         Ok(())
     };
 
@@ -253,9 +272,140 @@ pub fn push_matrix(
     Ok(merged)
 }
 
+/// One outstanding ranged pull request.
+#[derive(Debug, Clone, Copy)]
+struct PullReq {
+    start: usize,
+    nrows: usize,
+}
+
+/// Pull one executor's share `[lo, hi)` via the v3 streaming protocol.
+fn pull_rows_one_executor(
+    matrix: &AlMatrix,
+    links: &mut ExecutorLinks,
+    cfg: &TransferConfig,
+    lo: usize,
+    hi: usize,
+) -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
+    let te = Instant::now();
+    let mut rows = Vec::with_capacity(hi.saturating_sub(lo));
+    let mut stats = TransferStats::default();
+    if lo >= hi {
+        return Ok((rows, stats));
+    }
+    let nworkers = matrix.row_ranges.len();
+    let ncols = matrix.cols;
+    anyhow::ensure!(ncols > 0, "matrix {} has zero columns", matrix.id);
+
+    // carve the share into per-worker ranged stripes
+    let stripe_rows = cfg
+        .pull_stripe_rows
+        .max(cfg.rows_per_frame)
+        .clamp(1, u32::MAX as usize);
+    let mut stripes: Vec<VecDeque<PullReq>> = vec![VecDeque::new(); nworkers];
+    let mut i = lo;
+    while i < hi {
+        let owner = matrix.owner_of(i);
+        let (_, owner_end) = matrix.row_ranges[owner];
+        let seg_end = hi.min(owner_end);
+        let mut s = i;
+        while s < seg_end {
+            let e = (s + stripe_rows).min(seg_end);
+            stripes[owner].push_back(PullReq { start: s, nrows: e - s });
+            s = e;
+        }
+        i = seg_end;
+    }
+
+    let window = cfg.pull_window.max(1);
+    let send_req = |link: &mut Framed<std::net::TcpStream, std::net::TcpStream>,
+                    req: PullReq|
+     -> crate::Result<()> {
+        link.send_data(&DataMsg::PullRows {
+            matrix_id: matrix.id,
+            start_row: req.start as u64,
+            nrows: req.nrows as u32,
+        })
+    };
+
+    // prime every involved link with up to `window` outstanding ranged
+    // requests: all workers start streaming before we drain anything
+    let mut inflight: Vec<VecDeque<PullReq>> = vec![VecDeque::new(); nworkers];
+    for w in 0..nworkers {
+        if stripes[w].is_empty() {
+            continue;
+        }
+        let link = links.link(w)?;
+        for _ in 0..window {
+            if let Some(req) = stripes[w].pop_front() {
+                send_req(link, req)?;
+                inflight[w].push_back(req);
+            }
+        }
+        link.flush()?;
+    }
+
+    // drain each link's reply streams in request order, topping the
+    // window back up as stripes complete so the socket never idles
+    for w in 0..nworkers {
+        while let Some(req) = inflight[w].pop_front() {
+            if let Some(next) = stripes[w].pop_front() {
+                let link = links.link(w)?;
+                send_req(link, next)?;
+                link.flush()?;
+                inflight[w].push_back(next);
+            }
+            let link = links.link(w)?;
+            let mut got = 0usize;
+            loop {
+                match link.recv_data_view()? {
+                    DataMsgView::RowsData { matrix_id, start_row, nrows, ncols: nc, payload } => {
+                        anyhow::ensure!(
+                            matrix_id == matrix.id && nc as usize == ncols,
+                            "pull reply mismatch"
+                        );
+                        let nrows = nrows as usize;
+                        anyhow::ensure!(
+                            start_row as usize == req.start + got
+                                && got + nrows <= req.nrows,
+                            "pull stream out of order"
+                        );
+                        stats.bytes += payload.len();
+                        stats.frames += 1;
+                        // single copy: frame receive buffer -> row vectors
+                        for (k, chunk) in payload.chunks_exact(ncols * 8).enumerate() {
+                            let mut v = vec![0f64; ncols];
+                            copy_le_f64s(chunk, &mut v);
+                            rows.push(IndexedRow {
+                                index: (req.start + got + k) as u64,
+                                vector: v,
+                            });
+                        }
+                        got += nrows;
+                    }
+                    DataMsgView::Other(DataMsg::PullDone { matrix_id }) => {
+                        anyhow::ensure!(
+                            matrix_id == matrix.id && got == req.nrows,
+                            "pull stream ended short: {got} of {} rows",
+                            req.nrows
+                        );
+                        break;
+                    }
+                    DataMsgView::Other(DataMsg::DataError { message }) => {
+                        anyhow::bail!("pull failed: {message}")
+                    }
+                    other => anyhow::bail!("bad pull reply: {other:?}"),
+                }
+            }
+        }
+    }
+    stats.secs = te.elapsed().as_secs_f64();
+    Ok((rows, stats))
+}
+
 /// Pull the whole matrix back with `executors` concurrent threads; each
-/// covers an even share of the global rows, chunked by `rows_per_frame`.
-/// Returns the rows (unordered) plus stats.
+/// covers an even share of the global rows via streaming ranged requests
+/// (see the module docs). Returns the rows (unordered) plus stats.
 pub fn pull_matrix(
     matrix: &AlMatrix,
     worker_addrs: &[String],
@@ -271,52 +421,17 @@ pub fn pull_matrix(
     std::thread::scope(|scope| -> crate::Result<()> {
         let mut handles = Vec::new();
         for (eid, &(lo, hi)) in shares.iter().enumerate() {
-            handles.push(scope.spawn(move || -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
-                let mut links =
-                    ExecutorLinks::new(worker_addrs, cfg, session_id, eid as u32);
-                let mut rows = Vec::with_capacity(hi - lo);
-                let mut stats = TransferStats::default();
-                let te = Instant::now();
-                let mut i = lo;
-                while i < hi {
-                    let owner = matrix.owner_of(i);
-                    let (_, owner_end) = matrix.row_ranges[owner];
-                    let chunk_end =
-                        (i + cfg.rows_per_frame.max(1)).min(hi).min(owner_end);
-                    let n = chunk_end - i;
-                    let link = links.link(owner)?;
-                    link.send_data_flush(&DataMsg::PullRows {
-                        matrix_id: matrix.id,
-                        start_row: i as u64,
-                        nrows: n as u32,
-                    })?;
-                    match link.recv_data()? {
-                        DataMsg::RowsData { start_row, nrows, ncols, data, .. } => {
-                            anyhow::ensure!(
-                                start_row as usize == i && nrows as usize == n,
-                                "pull reply mismatch"
-                            );
-                            let ncols = ncols as usize;
-                            stats.bytes += data.len() * 8;
-                            stats.frames += 1;
-                            for (k, chunk) in data.chunks_exact(ncols).enumerate() {
-                                rows.push(IndexedRow {
-                                    index: (i + k) as u64,
-                                    vector: chunk.to_vec(),
-                                });
-                            }
-                        }
-                        DataMsg::DataError { message } => anyhow::bail!("pull failed: {message}"),
-                        other => anyhow::bail!("bad pull reply: {other:?}"),
+            handles.push(scope.spawn(
+                move || -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
+                    let mut links =
+                        ExecutorLinks::new(worker_addrs, cfg, session_id, eid as u32);
+                    let out = pull_rows_one_executor(matrix, &mut links, cfg, lo, hi)?;
+                    for link in links.links.iter_mut().flatten() {
+                        let _ = link.send_data_flush(&DataMsg::DataBye);
                     }
-                    i = chunk_end;
-                }
-                for link in links.links.iter_mut().flatten() {
-                    let _ = link.send_data_flush(&DataMsg::DataBye);
-                }
-                stats.secs = te.elapsed().as_secs_f64();
-                Ok((rows, stats))
-            }));
+                    Ok(out)
+                },
+            ));
         }
         for h in handles {
             let (rows, stats) =

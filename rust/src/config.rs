@@ -42,13 +42,56 @@ impl EngineKind {
     }
 }
 
-/// Socket-transfer tuning (DESIGN.md ablation #3).
-#[derive(Debug, Clone)]
+/// Socket-transfer tuning (DESIGN.md ablation #3). The first two knobs
+/// are negotiable per session (protocol v3): a client's handshake may
+/// request its own values, which the server clamps to the `max_*` limits
+/// below and echoes back in the ack.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TransferConfig {
     /// Matrix rows batched into one wire frame.
     pub rows_per_frame: usize,
     /// Userspace buffer in front of the socket.
     pub buf_bytes: usize,
+    /// Server-side cap on a client's negotiated `rows_per_frame`.
+    pub max_rows_per_frame: usize,
+    /// Server-side cap on a client's negotiated `buf_bytes`.
+    pub max_buf_bytes: usize,
+    /// Rows covered by one ranged `PullRows` request (the streaming-pull
+    /// stripe; each stripe streams back as many frames + one trailer).
+    pub pull_stripe_rows: usize,
+    /// Max outstanding ranged pull requests per worker link (windowed
+    /// pipelining: the worker prepares stripe k+1 while the client
+    /// drains stripe k, so the socket never idles).
+    pub pull_window: usize,
+}
+
+impl TransferConfig {
+    /// Resolve a client's requested `(rows_per_frame, buf_bytes)` — 0
+    /// means "server default" — against this (server-side) config's
+    /// limits. Returns the effective per-session config.
+    pub fn negotiate(&self, rows_per_frame: u32, buf_bytes: u64) -> TransferConfig {
+        let rows = if rows_per_frame == 0 {
+            self.rows_per_frame
+        } else {
+            rows_per_frame as usize
+        };
+        let buf = if buf_bytes == 0 { self.buf_bytes } else { buf_bytes as usize };
+        TransferConfig {
+            rows_per_frame: rows.clamp(1, self.max_rows_per_frame.max(1)),
+            buf_bytes: buf.clamp(4 << 10, self.max_buf_bytes.max(4 << 10)),
+            ..self.clone()
+        }
+    }
+
+    /// Clamp a data-connection's requested pull-frame granularity
+    /// (0 = server default) to the server limits.
+    pub fn effective_frame_rows(&self, requested: u32) -> usize {
+        if requested == 0 {
+            self.rows_per_frame.max(1)
+        } else {
+            (requested as usize).clamp(1, self.max_rows_per_frame.max(1))
+        }
+    }
 }
 
 /// The sparklite overhead model (DESIGN.md §2): what a Spark stage pays
@@ -126,7 +169,14 @@ impl Default for Config {
             artifacts_dir: PathBuf::from("artifacts"),
             tile: 256,
             panel_rows: 2048,
-            transfer: TransferConfig { rows_per_frame: 64, buf_bytes: 1 << 20 },
+            transfer: TransferConfig {
+                rows_per_frame: 64,
+                buf_bytes: 1 << 20,
+                max_rows_per_frame: 4096,
+                max_buf_bytes: 8 << 20,
+                pull_stripe_rows: 1024,
+                pull_window: 4,
+            },
             overhead: OverheadConfig {
                 scheduler_delay_s: 0.40,
                 task_launch_s: 0.020,
@@ -205,6 +255,14 @@ impl Config {
             "panel_rows" => self.panel_rows = int(value)?,
             "transfer.rows_per_frame" => self.transfer.rows_per_frame = int(value)?,
             "transfer.buf_bytes" => self.transfer.buf_bytes = int(value)?,
+            "transfer.max_rows_per_frame" => {
+                self.transfer.max_rows_per_frame = int(value)?
+            }
+            "transfer.max_buf_bytes" => self.transfer.max_buf_bytes = int(value)?,
+            "transfer.pull_stripe_rows" => {
+                self.transfer.pull_stripe_rows = int(value)?
+            }
+            "transfer.pull_window" => self.transfer.pull_window = int(value)?,
             "overhead.scheduler_delay_s" => {
                 self.overhead.scheduler_delay_s = fl(value)?
             }
@@ -285,6 +343,32 @@ mod tests {
         assert_eq!(c.scheduler.max_sessions, 4);
         assert_eq!(c.scheduler.default_group_size, 2);
         assert_eq!(c.scheduler.queue_timeout_s, 1.25);
+    }
+
+    #[test]
+    fn transfer_negotiation_clamps_to_limits() {
+        let server = Config::default().transfer;
+        // 0 means "server default"
+        let eff = server.negotiate(0, 0);
+        assert_eq!(eff.rows_per_frame, server.rows_per_frame);
+        assert_eq!(eff.buf_bytes, server.buf_bytes);
+        // in-range requests are honored
+        let eff = server.negotiate(128, 1 << 16);
+        assert_eq!(eff.rows_per_frame, 128);
+        assert_eq!(eff.buf_bytes, 1 << 16);
+        // out-of-range requests clamp to the server limits
+        let eff = server.negotiate(1_000_000, 1 << 40);
+        assert_eq!(eff.rows_per_frame, server.max_rows_per_frame);
+        assert_eq!(eff.buf_bytes, server.max_buf_bytes);
+        // tiny buffer floors at 4 KiB
+        assert_eq!(server.negotiate(0, 1).buf_bytes, 4 << 10);
+        // frame-granularity clamp for data connections
+        assert_eq!(server.effective_frame_rows(0), server.rows_per_frame);
+        assert_eq!(server.effective_frame_rows(7), 7);
+        assert_eq!(
+            server.effective_frame_rows(u32::MAX),
+            server.max_rows_per_frame
+        );
     }
 
     #[test]

@@ -23,18 +23,17 @@ pub struct WorkerCtx<'a> {
     pub rank: usize,
     pub comm: &'a dyn Communicator,
     pub engine: &'a mut dyn Engine,
-    pub store: &'a Mutex<MatrixStore>,
+    /// The store locks internally (short read lock per lookup; see
+    /// `coordinator::store` for the concurrency model).
+    pub store: &'a MatrixStore,
     pub config: &'a Config,
 }
 
 impl WorkerCtx<'_> {
     /// Fetch this rank's sealed block of matrix `id` (cloned out of the
-    /// store so routines never hold the lock during compute).
+    /// store so routines never hold any lock during compute).
     pub fn local_block(&self, id: u64) -> crate::Result<(RowBlockLayout, LocalMatrix)> {
-        let store = self.store.lock().unwrap();
-        let block = store.get(id)?;
-        anyhow::ensure!(block.sealed, "matrix {id} is not sealed yet");
-        Ok((block.layout.clone(), block.local.clone()))
+        self.store.get(id)?.snapshot()
     }
 }
 

@@ -216,9 +216,16 @@ impl Driver {
     }
 
     /// Admit a session: resolve the requested group size, wait for
-    /// capacity, build the group's communicator, and bind each member
-    /// worker to it.
-    fn open_session(&self, client_name: &str, requested: u32) -> crate::Result<Arc<Session>> {
+    /// capacity, negotiate the transfer knobs (requested values clamped
+    /// by server-side limits), build the group's communicator, and bind
+    /// each member worker to it.
+    fn open_session(
+        &self,
+        client_name: &str,
+        requested: u32,
+        rows_per_frame: u32,
+        buf_bytes: u64,
+    ) -> crate::Result<Arc<Session>> {
         let want = self.allocator.resolve_request(requested as usize)?;
         let id = self.next_session.fetch_add(1, Ordering::SeqCst);
         let ranks = self.allocator.acquire(id, want)?;
@@ -233,14 +240,15 @@ impl Driver {
         let session = Arc::new(Session {
             id,
             ranks: ranks.clone(),
-            transfer: self.cfg.transfer.clone(),
+            transfer: self.cfg.transfer.negotiate(rows_per_frame, buf_bytes),
             handles: Mutex::new(HashMap::new()),
         });
         self.sessions.lock().unwrap().insert(id, session.clone());
         log::info!(
             "session {id}: client {client_name:?} granted {want} workers \
-             (ranks {ranks:?}, {} rows/frame)",
-            session.transfer.rows_per_frame
+             (ranks {ranks:?}, {} rows/frame, {} buf bytes)",
+            session.transfer.rows_per_frame,
+            session.transfer.buf_bytes
         );
         Ok(session)
     }
@@ -255,7 +263,7 @@ impl Driver {
         for &rank in &session.ranks {
             let w = &self.workers[rank];
             w.sessions.lock().unwrap().remove(&session.id);
-            freed += w.store.lock().unwrap().free_session(session.id);
+            freed += w.store.free_session(session.id);
         }
         self.allocator.release(&session.ranks);
         log::info!(
@@ -292,7 +300,7 @@ impl Driver {
         let meta = self.handle(session, id)?;
         let mut received = 0;
         for &rank in &session.ranks {
-            received += self.workers[rank].store.lock().unwrap().seal(id)?;
+            received += self.workers[rank].store.seal(id)?;
         }
         anyhow::ensure!(
             received == meta.info.rows,
@@ -367,13 +375,8 @@ impl Driver {
         {
             let mut handles = session.handles.lock().unwrap();
             for meta in &r0.outputs {
-                let layout = self.workers[session.ranks[0]]
-                    .store
-                    .lock()
-                    .unwrap()
-                    .get(meta.id)?
-                    .layout
-                    .clone();
+                let layout =
+                    self.workers[session.ranks[0]].store.get(meta.id)?.layout.clone();
                 let info = MatrixInfo {
                     id: meta.id,
                     rows: meta.rows,
@@ -415,7 +418,7 @@ impl Driver {
         let existed = session.handles.lock().unwrap().remove(&id).is_some();
         anyhow::ensure!(existed, "unknown matrix handle {id}");
         for &rank in &session.ranks {
-            self.workers[rank].store.lock().unwrap().free(id);
+            self.workers[rank].store.free(id);
         }
         Ok(ControlMsg::Freed { id })
     }
@@ -466,11 +469,7 @@ impl ServerHandle {
     /// Total matrix blocks across all worker stores (test/debug
     /// introspection: teardown must drive a session's share to zero).
     pub fn total_blocks(&self) -> usize {
-        self.driver
-            .workers
-            .iter()
-            .map(|w| w.store.lock().unwrap().len())
-            .sum()
+        self.driver.workers.iter().map(|w| w.store.len()).sum()
     }
 }
 
@@ -494,7 +493,7 @@ impl AlchemistServer {
         for rank in 0..num_workers {
             let shared = Arc::new(WorkerShared {
                 rank,
-                store: Mutex::new(super::store::MatrixStore::new(rank)),
+                store: super::store::MatrixStore::new(rank),
                 data_addr: Mutex::new(String::new()),
                 sessions: Mutex::new(HashMap::new()),
             });
@@ -613,7 +612,13 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
             Err(_) => break, // client went away
         };
         let reply = match msg {
-            ControlMsg::Handshake { client_name, version, request_workers } => {
+            ControlMsg::Handshake {
+                client_name,
+                version,
+                request_workers,
+                rows_per_frame,
+                buf_bytes,
+            } => {
                 if version != PROTOCOL_VERSION {
                     Ok(ControlMsg::Error {
                         message: format!(
@@ -625,13 +630,20 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
                         message: "session already established on this connection".into(),
                     })
                 } else {
-                    match driver.open_session(&client_name, request_workers) {
+                    match driver.open_session(
+                        &client_name,
+                        request_workers,
+                        rows_per_frame,
+                        buf_bytes,
+                    ) {
                         Ok(s) => {
                             let ack = ControlMsg::HandshakeAck {
                                 session_id: s.id,
                                 version: PROTOCOL_VERSION,
                                 granted_workers: s.ranks.len() as u32,
                                 worker_addrs: driver.session_worker_addrs(&s),
+                                rows_per_frame: s.transfer.rows_per_frame as u32,
+                                buf_bytes: s.transfer.buf_bytes as u64,
                             };
                             session = Some(s);
                             Ok(ack)

@@ -9,85 +9,356 @@
 //! worker groups a worker's global rank no longer indexes
 //! `layout.ranges`). Session teardown frees exactly that session's
 //! blocks without touching any other tenant's.
+//!
+//! ## Locking model (the ingest hot path)
+//!
+//! The store itself is only a directory: an `RwLock`ed id → `Arc<Block>`
+//! map held for microseconds per lookup. Payload writes never touch it —
+//! each [`Block`] carries its own ingest state and a small array of
+//! *stripe locks* over its local row range, so
+//!
+//! * executors streaming **different matrices** into one worker share
+//!   nothing but the read lock on the map;
+//! * executors streaming **disjoint row ranges of one matrix** land on
+//!   disjoint stripes and copy concurrently;
+//! * overlapping writes (a misbehaving client) serialize on their shared
+//!   stripes instead of racing.
+//!
+//! Sealing is the ingest/compute barrier, in three steps: `seal` flips
+//! `sealed` under the state mutex (new writers abort — they re-check it
+//! *after* acquiring their stripes), takes every stripe lock once to
+//! wait out in-flight writers (who copy AND account while holding their
+//! stripes), and only then sets `readable` — the flag every reader
+//! gates on, so a read can never overlap a straggling pre-seal copy. A
+//! readable block is immutable, which is what lets pulls stream borrowed
+//! spans ([`Block::read_span`]) straight from the block into the socket
+//! buffer with zero copies on the worker side.
 
+use std::cell::UnsafeCell;
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::distmat::{LocalMatrix, RowBlockLayout};
+use crate::protocol::wire::copy_le_f64s;
 
-/// One worker's block of a distributed matrix.
-#[derive(Debug, Clone)]
+/// Stripe-lock count per block: enough for the handful of concurrent
+/// executor streams a worker realistically sees, cheap enough to sit on
+/// every block.
+const INGEST_STRIPES: usize = 8;
+
+#[derive(Debug, Default)]
+struct IngestState {
+    rows_received: u64,
+    /// Writers stop here: set at the start of `seal`, checked by every
+    /// writer after it acquires its stripes.
+    sealed: bool,
+    /// Readers start here: set at the END of `seal`, after the stripe
+    /// barrier has waited out every in-flight writer — the window where
+    /// `sealed` is already true but a pre-seal writer is still copying
+    /// must not be readable (that read would race the copy).
+    readable: bool,
+}
+
+/// One worker's block of a distributed matrix. Immutable metadata plus
+/// interior-mutable payload storage guarded by the stripe/seal protocol
+/// described in the module docs.
 pub struct Block {
+    pub id: u64,
     pub layout: RowBlockLayout,
     /// Index of this worker's range in `layout.ranges`: the owning
     /// session's group-local rank for this worker.
     pub slot: usize,
     /// Session that owns this matrix.
     pub session: u64,
-    /// This rank's rows (`layout.ranges[slot]`).
-    pub local: LocalMatrix,
-    /// Rows received so far during ingest (sealing checks the total).
-    pub rows_received: u64,
-    pub sealed: bool,
     pub name: String,
-}
-
-/// Matrix-id → block map for one worker rank.
-#[derive(Debug, Default)]
-pub struct MatrixStore {
+    /// Global rank of the worker holding this block (error messages).
     rank: usize,
-    blocks: HashMap<u64, Block>,
+    state: Mutex<IngestState>,
+    stripes: [Mutex<()>; INGEST_STRIPES],
+    /// This rank's rows (`layout.ranges[slot]`), row-major. Mutated only
+    /// through [`Block::write_span`] before sealing; immutable after.
+    data: UnsafeCell<LocalMatrix>,
 }
 
-impl MatrixStore {
-    pub fn new(rank: usize) -> Self {
-        MatrixStore { rank, blocks: HashMap::new() }
-    }
+// Safety: `data` is only written while holding the stripe locks covering
+// the written rows and only while not `sealed` (checked under the state
+// mutex after stripe acquisition); readers require `readable`, which
+// `seal` sets only after a full stripe barrier has waited out every
+// in-flight writer — so reads and writes can never overlap, and the
+// state mutex publishes the writes to readers. See the module docs.
+unsafe impl Sync for Block {}
 
-    pub fn rank(&self) -> usize {
-        self.rank
+impl std::fmt::Debug for Block {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Block")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("slot", &self.slot)
+            .field("session", &self.session)
+            .field("sealed", &self.sealed())
+            .field("rows_received", &self.rows_received())
+            .finish()
     }
+}
 
-    /// Allocate a zeroed, unsealed block for ingest. `slot` is this
-    /// worker's index into `layout.ranges` (the session's group-local
-    /// rank); `session` namespaces the block for teardown.
-    pub fn alloc(
-        &mut self,
+impl Block {
+    fn new(
         id: u64,
         name: &str,
         layout: RowBlockLayout,
         slot: usize,
         session: u64,
-    ) -> crate::Result<()> {
-        anyhow::ensure!(
-            !self.blocks.contains_key(&id),
-            "matrix id {id} already exists on rank {}",
-            self.rank
-        );
+        rank: usize,
+        local: Option<LocalMatrix>,
+    ) -> crate::Result<Self> {
         anyhow::ensure!(
             slot < layout.ranges.len(),
             "slot {slot} outside layout of {} ranges",
             layout.ranges.len()
         );
         let (a, b) = layout.ranges[slot];
-        let local = LocalMatrix::zeros(b - a, layout.cols);
-        self.blocks.insert(
+        let (local, sealed, rows_received) = match local {
+            Some(m) => {
+                anyhow::ensure!(
+                    m.rows() == b - a && m.cols() == layout.cols,
+                    "block shape {}x{} does not match layout slot {}x{} on rank {rank}",
+                    m.rows(),
+                    m.cols(),
+                    b - a,
+                    layout.cols,
+                );
+                let rows = m.rows() as u64;
+                (m, true, rows)
+            }
+            None => (LocalMatrix::zeros(b - a, layout.cols), false, 0),
+        };
+        Ok(Block {
             id,
-            Block {
-                layout,
-                slot,
-                session,
-                local,
-                rows_received: 0,
-                sealed: false,
-                name: name.to_string(),
-            },
+            layout,
+            slot,
+            session,
+            name: name.to_string(),
+            rank,
+            state: Mutex::new(IngestState {
+                rows_received,
+                sealed,
+                readable: sealed,
+            }),
+            stripes: Default::default(),
+            data: UnsafeCell::new(local),
+        })
+    }
+
+    pub fn sealed(&self) -> bool {
+        self.state.lock().unwrap().sealed
+    }
+
+    /// True once `seal` has fully completed (flag flipped AND the stripe
+    /// barrier passed) — the gate every reader checks. Distinct from
+    /// [`sealed`](Self::sealed), which flips first to stop writers.
+    fn readable(&self) -> bool {
+        self.state.lock().unwrap().readable
+    }
+
+    pub fn rows_received(&self) -> u64 {
+        self.state.lock().unwrap().rows_received
+    }
+
+    /// Bounds-check a global row span against this block's range; returns
+    /// the local start row.
+    fn span_local_start(&self, start_row: u64, nrows: usize) -> crate::Result<usize> {
+        let (lo, hi) = self.layout.ranges[self.slot];
+        let start = usize::try_from(start_row)
+            .map_err(|_| anyhow::anyhow!("row index {start_row} out of range"))?;
+        let end = start
+            .checked_add(nrows)
+            .ok_or_else(|| anyhow::anyhow!("row span end overflows"))?;
+        anyhow::ensure!(
+            start >= lo && end <= hi,
+            "rows [{start}, {end}) outside rank {} range [{lo}, {hi})",
+            self.rank
         );
+        Ok(start - lo)
+    }
+
+    /// Stripe index owning local row `row` (rows divide evenly-ish across
+    /// [`INGEST_STRIPES`] fixed bands).
+    fn stripe_of(&self, row: usize, local_rows: usize) -> usize {
+        debug_assert!(local_rows > 0);
+        (row * INGEST_STRIPES / local_rows).min(INGEST_STRIPES - 1)
+    }
+
+    /// Copy `nrows` rows into the block at `start_row` (global), with the
+    /// writer-side locking protocol: acquire covering stripes in order,
+    /// re-check `sealed`, copy, then account under the state mutex.
+    fn write_span(
+        &self,
+        start_row: u64,
+        ncols: usize,
+        nrows: usize,
+        fill: impl FnOnce(&mut [f64]),
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            ncols == self.layout.cols,
+            "row width {ncols} != matrix cols {}",
+            self.layout.cols
+        );
+        let local_start = self.span_local_start(start_row, nrows)?;
+        if nrows == 0 {
+            return Ok(());
+        }
+        let (lo, hi) = self.layout.ranges[self.slot];
+        let local_rows = hi - lo;
+        let first = self.stripe_of(local_start, local_rows);
+        let last = self.stripe_of(local_start + nrows - 1, local_rows);
+        let guards: Vec<_> =
+            (first..=last).map(|i| self.stripes[i].lock().unwrap()).collect();
+        {
+            let st = self.state.lock().unwrap();
+            anyhow::ensure!(!st.sealed, "matrix {} is sealed", self.id);
+        }
+        // Safety: the stripes covering [local_start, local_start+nrows)
+        // are held, so no other writer touches these rows; readers are
+        // excluded because the block is not `readable` yet — that flag is
+        // set only after `seal`'s stripe barrier has waited us out.
+        let local = unsafe { &mut *self.data.get() };
+        fill(&mut local.data_mut()[local_start * ncols..(local_start + nrows) * ncols]);
+        // account while still holding the stripes: once `seal`'s barrier
+        // passes our stripes, our rows are guaranteed to be in the count
+        self.state.lock().unwrap().rows_received += nrows as u64;
+        drop(guards);
         Ok(())
+    }
+
+    /// Write incoming rows (global indices) given as f64s.
+    pub fn write_rows(
+        &self,
+        start_row: u64,
+        ncols: usize,
+        data: &[f64],
+    ) -> crate::Result<()> {
+        anyhow::ensure!(ncols > 0 && data.len() % ncols == 0, "ragged row payload");
+        self.write_span(start_row, ncols, data.len() / ncols, |dst| {
+            dst.copy_from_slice(data)
+        })
+    }
+
+    /// Write incoming rows straight from little-endian wire bytes — the
+    /// single-copy ingest path (frame receive buffer → block storage).
+    pub fn write_rows_bytes(
+        &self,
+        start_row: u64,
+        ncols: usize,
+        payload: &[u8],
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            ncols > 0 && payload.len() % (ncols * 8) == 0,
+            "ragged row payload"
+        );
+        self.write_span(start_row, ncols, payload.len() / (ncols * 8), |dst| {
+            copy_le_f64s(payload, dst)
+        })
+    }
+
+    /// Borrow rows (global indices) out of a sealed block — the zero-copy
+    /// worker side of a streaming pull. Fails on unsealed blocks (ingest
+    /// still running ⇒ the span could be mid-write).
+    pub fn read_span(&self, start_row: u64, nrows: usize) -> crate::Result<&[f64]> {
+        anyhow::ensure!(
+            self.readable(),
+            "matrix {} is still being ingested (not sealed)",
+            self.id
+        );
+        let local_start = self.span_local_start(start_row, nrows)?;
+        let ncols = self.layout.cols;
+        // Safety: readable ⇒ the seal barrier has waited out every
+        // writer and nothing mutates the payload again, so shared
+        // borrows are sound.
+        let local = unsafe { &*self.data.get() };
+        Ok(&local.data()[local_start * ncols..(local_start + nrows) * ncols])
+    }
+
+    /// Copy rows (global indices) out of a sealed block.
+    pub fn read_rows(&self, start_row: u64, nrows: usize) -> crate::Result<Vec<f64>> {
+        Ok(self.read_span(start_row, nrows)?.to_vec())
+    }
+
+    /// Clone this rank's sealed block for compute (routines never hold
+    /// store or block locks while working).
+    pub fn snapshot(&self) -> crate::Result<(RowBlockLayout, LocalMatrix)> {
+        anyhow::ensure!(self.readable(), "matrix {} is not sealed yet", self.id);
+        // Safety: readable ⇒ immutable, as in `read_span`.
+        let local = unsafe { &*self.data.get() };
+        Ok((self.layout.clone(), local.clone()))
+    }
+
+    /// Freeze the block: no further writes land after this returns, every
+    /// row written before it is in the returned count, and only now do
+    /// readers get the green light.
+    fn seal(&self) -> u64 {
+        self.state.lock().unwrap().sealed = true;
+        // barrier: wait out writers that passed their seal check before
+        // the flag flipped (they hold their stripes while copying AND
+        // accounting, so after this loop the payload is quiescent and
+        // every landed row is counted)
+        for s in &self.stripes {
+            drop(s.lock().unwrap());
+        }
+        // only now may readers touch the payload; the same lock publishes
+        // the in-flight writers' bytes and counts to them
+        let mut st = self.state.lock().unwrap();
+        st.readable = true;
+        st.rows_received
+    }
+}
+
+/// Matrix-id → block map for one worker rank. Interior-locked: lookups
+/// take a short read lock, payload writes synchronize per block (see the
+/// module docs), so the store itself never serializes concurrent
+/// executor streams.
+#[derive(Debug, Default)]
+pub struct MatrixStore {
+    rank: usize,
+    blocks: RwLock<HashMap<u64, Arc<Block>>>,
+}
+
+impl MatrixStore {
+    pub fn new(rank: usize) -> Self {
+        MatrixStore { rank, blocks: RwLock::new(HashMap::new()) }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn add(&self, id: u64, block: Block) -> crate::Result<()> {
+        let mut blocks = self.blocks.write().unwrap();
+        anyhow::ensure!(
+            !blocks.contains_key(&id),
+            "matrix id {id} already exists on rank {}",
+            self.rank
+        );
+        blocks.insert(id, Arc::new(block));
+        Ok(())
+    }
+
+    /// Allocate a zeroed, unsealed block for ingest. `slot` is this
+    /// worker's index into `layout.ranges` (the session's group-local
+    /// rank); `session` namespaces the block for teardown.
+    pub fn alloc(
+        &self,
+        id: u64,
+        name: &str,
+        layout: RowBlockLayout,
+        slot: usize,
+        session: u64,
+    ) -> crate::Result<()> {
+        self.add(id, Block::new(id, name, layout, slot, session, self.rank, None)?)
     }
 
     /// Insert a fully-formed (already computed) block — routine outputs.
     pub fn insert(
-        &mut self,
+        &self,
         id: u64,
         name: &str,
         layout: RowBlockLayout,
@@ -95,139 +366,68 @@ impl MatrixStore {
         slot: usize,
         session: u64,
     ) -> crate::Result<()> {
-        anyhow::ensure!(
-            !self.blocks.contains_key(&id),
-            "matrix id {id} already exists on rank {}",
-            self.rank
-        );
-        anyhow::ensure!(
-            slot < layout.ranges.len(),
-            "slot {slot} outside layout of {} ranges",
-            layout.ranges.len()
-        );
-        let (a, b) = layout.ranges[slot];
-        anyhow::ensure!(
-            local.rows() == b - a && local.cols() == layout.cols,
-            "block shape {}x{} does not match layout slot {}x{} on rank {}",
-            local.rows(),
-            local.cols(),
-            b - a,
-            layout.cols,
-            self.rank
-        );
-        let rows = local.rows() as u64;
-        self.blocks.insert(
+        self.add(
             id,
-            Block {
-                layout,
-                slot,
-                session,
-                local,
-                rows_received: rows,
-                sealed: true,
-                name: name.to_string(),
-            },
-        );
-        Ok(())
+            Block::new(id, name, layout, slot, session, self.rank, Some(local))?,
+        )
+    }
+
+    /// Look a block up under the read lock; the returned handle outlives
+    /// the lock (pulls stream from it, ingest writes through it).
+    pub fn get(&self, id: u64) -> crate::Result<Arc<Block>> {
+        self.blocks
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("matrix {id} not found on rank {}", self.rank))
     }
 
     /// Write incoming rows (global indices) into an unsealed block.
     pub fn write_rows(
-        &mut self,
+        &self,
         id: u64,
         start_row: u64,
         ncols: usize,
         data: &[f64],
     ) -> crate::Result<()> {
-        let block = self
-            .blocks
-            .get_mut(&id)
-            .ok_or_else(|| anyhow::anyhow!("matrix {id} not found on rank {}", self.rank))?;
-        anyhow::ensure!(!block.sealed, "matrix {id} is sealed");
-        anyhow::ensure!(
-            ncols == block.layout.cols,
-            "row width {ncols} != matrix cols {}",
-            block.layout.cols
-        );
-        anyhow::ensure!(data.len() % ncols == 0, "ragged row payload");
-        let nrows = data.len() / ncols;
-        let (lo, hi) = block.layout.ranges[block.slot];
-        let start = start_row as usize;
-        anyhow::ensure!(
-            start >= lo && start + nrows <= hi,
-            "rows [{start}, {}) outside rank {} range [{lo}, {hi})",
-            start + nrows,
-            self.rank
-        );
-        let local_start = start - lo;
-        block.local.data_mut()
-            [local_start * ncols..(local_start + nrows) * ncols]
-            .copy_from_slice(data);
-        block.rows_received += nrows as u64;
-        Ok(())
+        self.get(id)?.write_rows(start_row, ncols, data)
     }
 
     /// Read rows (global indices) out of a sealed block.
     pub fn read_rows(&self, id: u64, start_row: u64, nrows: usize) -> crate::Result<Vec<f64>> {
-        let block = self.get(id)?;
-        anyhow::ensure!(
-            block.sealed,
-            "matrix {id} is still being ingested (not sealed)"
-        );
-        let (lo, hi) = block.layout.ranges[block.slot];
-        let start = start_row as usize;
-        anyhow::ensure!(
-            start >= lo && start + nrows <= hi,
-            "rows [{start}, {}) outside rank {} range [{lo}, {hi})",
-            start + nrows,
-            self.rank
-        );
-        let ncols = block.layout.cols;
-        let local_start = start - lo;
-        Ok(block.local.data()
-            [local_start * ncols..(local_start + nrows) * ncols]
-            .to_vec())
+        self.get(id)?.read_rows(start_row, nrows)
     }
 
-    pub fn seal(&mut self, id: u64) -> crate::Result<u64> {
-        let block = self
-            .blocks
-            .get_mut(&id)
-            .ok_or_else(|| anyhow::anyhow!("matrix {id} not found"))?;
-        block.sealed = true;
-        Ok(block.rows_received)
+    pub fn seal(&self, id: u64) -> crate::Result<u64> {
+        Ok(self.get(id)?.seal())
     }
 
-    pub fn get(&self, id: u64) -> crate::Result<&Block> {
-        self.blocks
-            .get(&id)
-            .ok_or_else(|| anyhow::anyhow!("matrix {id} not found on rank {}", self.rank))
-    }
-
-    pub fn free(&mut self, id: u64) -> bool {
-        self.blocks.remove(&id).is_some()
+    pub fn free(&self, id: u64) -> bool {
+        self.blocks.write().unwrap().remove(&id).is_some()
     }
 
     /// Drop every block owned by `session` (teardown); returns how many
     /// were freed. Other sessions' blocks are untouched.
-    pub fn free_session(&mut self, session: u64) -> usize {
-        let before = self.blocks.len();
-        self.blocks.retain(|_, b| b.session != session);
-        before - self.blocks.len()
+    pub fn free_session(&self, session: u64) -> usize {
+        let mut blocks = self.blocks.write().unwrap();
+        let before = blocks.len();
+        blocks.retain(|_, b| b.session != session);
+        before - blocks.len()
     }
 
     pub fn ids(&self) -> Vec<u64> {
-        let mut v: Vec<u64> = self.blocks.keys().copied().collect();
+        let mut v: Vec<u64> = self.blocks.read().unwrap().keys().copied().collect();
         v.sort_unstable();
         v
     }
 
     pub fn len(&self) -> usize {
-        self.blocks.len()
+        self.blocks.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.blocks.is_empty()
+        self.blocks.read().unwrap().is_empty()
     }
 }
 
@@ -243,23 +443,40 @@ mod tests {
 
     #[test]
     fn ingest_flow() {
-        let mut s = MatrixStore::new(1); // slot 1 owns rows [5, 10)
+        let s = MatrixStore::new(1); // slot 1 owns rows [5, 10)
         s.alloc(7, "X", layout2(), 1, SID).unwrap();
         s.write_rows(7, 5, 3, &[1.0; 6]).unwrap(); // rows 5,6
         s.write_rows(7, 7, 3, &[2.0; 9]).unwrap(); // rows 7,8,9
         assert_eq!(s.seal(7).unwrap(), 5);
         let b = s.get(7).unwrap();
-        assert_eq!(b.local.get(0, 0), 1.0);
-        assert_eq!(b.local.get(2, 2), 2.0);
+        let (_, local) = b.snapshot().unwrap();
+        assert_eq!(local.get(0, 0), 1.0);
+        assert_eq!(local.get(2, 2), 2.0);
         // reads are in global coordinates
         assert_eq!(s.read_rows(7, 9, 1).unwrap(), vec![2.0, 2.0, 2.0]);
+        // zero-copy span points at the same rows
+        assert_eq!(b.read_span(9, 1).unwrap(), &[2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn byte_ingest_matches_f64_ingest() {
+        let s = MatrixStore::new(0); // slot 0 owns rows [0, 5)
+        s.alloc(1, "X", layout2(), 0, SID).unwrap();
+        let rows = [1.5f64, -2.5, 3.0, 4.0, 5.0, 6.5];
+        let mut bytes = Vec::new();
+        for x in &rows {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        s.get(1).unwrap().write_rows_bytes(0, 3, &bytes).unwrap();
+        s.seal(1).unwrap();
+        assert_eq!(s.read_rows(1, 0, 2).unwrap(), rows);
     }
 
     #[test]
     fn slot_decouples_from_global_rank() {
         // a worker with global rank 5 fills slot 0 of a 2-range layout
         // (session-scoped groups: group-local rank != global rank)
-        let mut s = MatrixStore::new(5);
+        let s = MatrixStore::new(5);
         s.alloc(1, "X", layout2(), 0, SID).unwrap();
         s.write_rows(1, 0, 3, &[3.0; 15]).unwrap(); // rows [0, 5)
         assert_eq!(s.seal(1).unwrap(), 5);
@@ -270,7 +487,7 @@ mod tests {
 
     #[test]
     fn rejects_bad_writes() {
-        let mut s = MatrixStore::new(0); // slot 0 owns rows [0, 5)
+        let s = MatrixStore::new(0); // slot 0 owns rows [0, 5)
         s.alloc(1, "X", layout2(), 0, SID).unwrap();
         assert!(s.alloc(1, "X", layout2(), 0, SID).is_err()); // duplicate id
         assert!(s.alloc(2, "X", layout2(), 9, SID).is_err()); // bad slot
@@ -283,21 +500,33 @@ mod tests {
     }
 
     #[test]
+    fn reads_require_seal() {
+        let s = MatrixStore::new(0);
+        s.alloc(1, "X", layout2(), 0, SID).unwrap();
+        let b = s.get(1).unwrap();
+        assert!(b.read_span(0, 1).is_err());
+        assert!(b.snapshot().is_err());
+        s.seal(1).unwrap();
+        assert!(b.read_span(0, 1).is_ok());
+        assert!(b.snapshot().is_ok());
+    }
+
+    #[test]
     fn insert_checks_shape() {
-        let mut s = MatrixStore::new(0);
+        let s = MatrixStore::new(0);
         let l = layout2();
         assert!(s
             .insert(3, "W", l.clone(), LocalMatrix::zeros(4, 3), 0, SID)
             .is_err());
         s.insert(3, "W", l, LocalMatrix::zeros(5, 3), 0, SID).unwrap();
-        assert!(s.get(3).unwrap().sealed);
+        assert!(s.get(3).unwrap().sealed());
         assert!(s.free(3));
         assert!(!s.free(3));
     }
 
     #[test]
     fn free_session_is_scoped() {
-        let mut s = MatrixStore::new(0);
+        let s = MatrixStore::new(0);
         s.alloc(1, "A", layout2(), 0, 100).unwrap();
         s.alloc(2, "B", layout2(), 0, 100).unwrap();
         s.alloc(3, "C", layout2(), 1, 200).unwrap();
@@ -306,5 +535,65 @@ mod tests {
         assert_eq!(s.free_session(100), 0);
         assert_eq!(s.free_session(200), 1);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn seal_racing_a_writer_counts_exactly_the_landed_rows() {
+        // a seal fired mid-stream must (a) include every write that
+        // returned Ok, (b) reject everything after, (c) never tear data
+        let layout = RowBlockLayout::even(4096, 1, 1);
+        let s = Arc::new(MatrixStore::new(0));
+        s.alloc(5, "X", layout, 0, SID).unwrap();
+        let writer = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                let mut landed = 0u64;
+                for row in 0..4096u64 {
+                    match s.write_rows(5, row, 1, &[row as f64]) {
+                        Ok(()) => landed += 1,
+                        Err(_) => break, // sealed mid-stream
+                    }
+                }
+                landed
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let sealed_count = s.seal(5).unwrap();
+        let landed = writer.join().unwrap();
+        assert_eq!(sealed_count, landed, "seal lost or invented rows");
+        assert_eq!(s.get(5).unwrap().rows_received(), landed);
+        // rows that landed read back intact
+        for row in 0..landed {
+            assert_eq!(s.read_rows(5, row, 1).unwrap(), vec![row as f64]);
+        }
+    }
+
+    #[test]
+    fn concurrent_disjoint_writers_land_every_row() {
+        // N threads interleave writes to disjoint row runs of one block;
+        // the stripe protocol must lose nothing and count every row
+        let layout = RowBlockLayout::even(64, 4, 1);
+        let s = Arc::new(MatrixStore::new(0));
+        s.alloc(9, "X", layout, 0, SID).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                // thread t owns rows {t, t+4, t+8, ...}, written one at a time
+                let mut row = t;
+                while row < 64 {
+                    let vals = [row as f64; 4];
+                    s.write_rows(9, row, 4, &vals).unwrap();
+                    row += 4;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.seal(9).unwrap(), 64);
+        for row in 0..64u64 {
+            assert_eq!(s.read_rows(9, row, 1).unwrap(), vec![row as f64; 4]);
+        }
     }
 }

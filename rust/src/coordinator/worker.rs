@@ -10,6 +10,12 @@
 //! holding disjoint groups run concurrently on disjoint worker threads.
 //! The engine is built lazily *on the worker thread* (PJRT handles are
 //! not `Send`).
+//!
+//! Data-socket threads never serialize on a store-wide lock: the
+//! [`MatrixStore`] hands out `Arc<Block>` handles under a short read
+//! lock, ingest copies synchronize per block stripe, and pull replies
+//! stream borrowed spans of sealed blocks straight into the socket
+//! buffer (see `coordinator::store` and `docs/data-plane.md`).
 
 use std::collections::HashMap;
 use std::net::TcpStream;
@@ -21,7 +27,7 @@ use crate::compute::{build_engine, Engine};
 use crate::config::Config;
 use crate::distmat::RowBlockLayout;
 use crate::net::Framed;
-use crate::protocol::{DataMsg, Params};
+use crate::protocol::{DataMsg, DataMsgRef, DataMsgView, Params};
 use crate::util::timer::thread_cpu_secs;
 
 use super::registry::{Library, WorkerCtx};
@@ -33,7 +39,10 @@ use super::store::MatrixStore;
 pub struct WorkerShared {
     /// Global rank in the server's worker pool.
     pub rank: usize,
-    pub store: Mutex<MatrixStore>,
+    /// Interior-locked (lookups take a short read lock; payload writes
+    /// synchronize per block) — concurrent data-socket threads do not
+    /// contend here.
+    pub store: MatrixStore,
     /// `host:port` of this worker's data listener.
     pub data_addr: Mutex<String>,
     /// session id → this worker's endpoint in that session's group
@@ -115,7 +124,6 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                     let comm_sim = comm.sim_comm_secs() - sim0;
 
                     let mut metas = Vec::with_capacity(out.matrices.len());
-                    let mut store = shared.store.lock().unwrap();
                     for (i, m) in out.matrices.into_iter().enumerate() {
                         let id = out_base + i as u64;
                         metas.push(OutputMeta {
@@ -124,7 +132,9 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                             rows: m.layout.rows as u64,
                             cols: m.layout.cols as u64,
                         });
-                        store.insert(id, &m.name, m.layout, m.local, local_rank, session_id)?;
+                        shared
+                            .store
+                            .insert(id, &m.name, m.layout, m.local, local_rank, session_id)?;
                     }
                     let mut timings = out.timings;
                     timings.push(("cpu_busy".into(), cpu_busy));
@@ -153,6 +163,66 @@ fn check_session(owner: u64, conn_session: Option<u64>, id: u64) -> crate::Resul
     }
 }
 
+/// What the connection loop does after a frame's borrow of the receive
+/// buffer ends (streaming replies cannot be produced while the decoded
+/// view still borrows the link).
+enum Action {
+    Nothing,
+    Reply(DataMsg),
+    ServePull { matrix_id: u64, start_row: u64, nrows: u32 },
+    Close,
+}
+
+/// Stream one ranged `PullRows` reply: validate the whole span up front
+/// (the stream is all-or-nothing — a single `DataError`, or `RowsData`*
+/// followed by `PullDone`), then write borrowed spans of the sealed block
+/// straight into the socket buffer, `frame_rows` rows per frame.
+fn serve_pull(
+    shared: &WorkerShared,
+    framed: &mut Framed<TcpStream, TcpStream>,
+    conn_session: Option<u64>,
+    matrix_id: u64,
+    start_row: u64,
+    nrows: u32,
+    frame_rows: usize,
+) -> crate::Result<()> {
+    let prep = (|| -> crate::Result<Arc<super::store::Block>> {
+        anyhow::ensure!(nrows > 0, "zero-row pull of matrix {matrix_id}");
+        let block = shared.store.get(matrix_id)?;
+        check_session(block.session, conn_session, matrix_id)?;
+        // whole-range validation (sealed + bounds) before the first frame
+        block.read_span(start_row, nrows as usize)?;
+        Ok(block)
+    })();
+    let block = match prep {
+        Ok(b) => b,
+        Err(e) => {
+            return framed.send_data_flush(&DataMsg::DataError { message: e.to_string() })
+        }
+    };
+    // ncols comes from the block's layout, never derived from payload
+    // lengths (a zero-row request cannot reach here anyway)
+    let ncols = block.layout.cols;
+    let span = block
+        .read_span(start_row, nrows as usize)
+        .expect("span validated above");
+    let mut row = start_row;
+    for chunk in span.chunks((frame_rows.max(1)) * ncols.max(1)) {
+        let n = (chunk.len() / ncols.max(1)) as u32;
+        framed.send_data_ref(&DataMsgRef::RowsData {
+            matrix_id,
+            start_row: row,
+            nrows: n,
+            ncols: ncols as u32,
+            data: chunk,
+        })?;
+        row += n as u64;
+    }
+    framed.send_data(&DataMsg::PullDone { matrix_id })?;
+    // one flush per ranged request, not per frame
+    framed.flush()
+}
+
 /// Handle one executor's data connection (runs on its own thread; several
 /// executors can stream to the same worker concurrently — the paper's
 /// asynchronous many-to-many transfer pattern). The connection binds to
@@ -167,90 +237,112 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
         }
     };
     let mut conn_session: Option<u64> = None;
+    // pull-reply frame granularity: negotiated at DataHandshake, clamped
+    // by the server-side transfer limits
+    let mut frame_rows = cfg.transfer.rows_per_frame.max(1);
     loop {
-        let msg = match framed.recv_data() {
-            Ok(m) => m,
-            Err(_) => return, // peer closed
-        };
-        let reply = match msg {
-            DataMsg::DataHandshake { session_id, .. } => {
-                // reply with the session's group-local rank for this
-                // worker (executors index worker addresses per session
-                // group); sessions holding no group here are rejected
-                let local = shared
-                    .sessions
-                    .lock()
-                    .unwrap()
-                    .get(&session_id)
-                    .map(|c| c.rank());
-                match local {
-                    Some(local) => {
-                        conn_session = Some(session_id);
-                        Some(DataMsg::DataHandshakeAck { worker_rank: local as u32 })
+        // decode in place (payloads borrow the link's receive buffer);
+        // replies are sent after the borrow ends
+        let action = {
+            let msg = match framed.recv_data_view() {
+                Ok(m) => m,
+                Err(_) => return, // peer closed
+            };
+            match msg {
+                DataMsgView::PushRows { matrix_id, start_row, ncols, payload, .. } => {
+                    // single-copy ingest: payload bytes go straight from
+                    // the receive buffer into the block's storage
+                    let res = (|| -> crate::Result<()> {
+                        let block = shared.store.get(matrix_id)?;
+                        check_session(block.session, conn_session, matrix_id)?;
+                        block.write_rows_bytes(start_row, ncols as usize, payload)
+                    })();
+                    match res {
+                        Ok(()) => Action::Nothing, // streaming: acks only at PushDone
+                        Err(e) => {
+                            Action::Reply(DataMsg::DataError { message: e.to_string() })
+                        }
                     }
-                    None => Some(DataMsg::DataError {
-                        message: format!(
-                            "session {session_id} holds no group on worker {}",
-                            shared.rank
-                        ),
+                }
+                DataMsgView::RowsData { .. } => Action::Reply(DataMsg::DataError {
+                    message: "unexpected RowsData on a worker's data socket".into(),
+                }),
+                DataMsgView::Other(msg) => match msg {
+                    DataMsg::DataHandshake { session_id, rows_per_frame, .. } => {
+                        // reply with the session's group-local rank for
+                        // this worker (executors index worker addresses
+                        // per session group); sessions holding no group
+                        // here are rejected
+                        let local = shared
+                            .sessions
+                            .lock()
+                            .unwrap()
+                            .get(&session_id)
+                            .map(|c| c.rank());
+                        match local {
+                            Some(local) => {
+                                conn_session = Some(session_id);
+                                frame_rows =
+                                    cfg.transfer.effective_frame_rows(rows_per_frame);
+                                Action::Reply(DataMsg::DataHandshakeAck {
+                                    worker_rank: local as u32,
+                                })
+                            }
+                            None => Action::Reply(DataMsg::DataError {
+                                message: format!(
+                                    "session {session_id} holds no group on worker {}",
+                                    shared.rank
+                                ),
+                            }),
+                        }
+                    }
+                    DataMsg::PushDone { matrix_id } => {
+                        let res = (|| -> crate::Result<u64> {
+                            let block = shared.store.get(matrix_id)?;
+                            check_session(block.session, conn_session, matrix_id)?;
+                            Ok(block.rows_received())
+                        })();
+                        match res {
+                            Ok(rows_received) => {
+                                Action::Reply(DataMsg::PushDoneAck { matrix_id, rows_received })
+                            }
+                            Err(e) => {
+                                Action::Reply(DataMsg::DataError { message: e.to_string() })
+                            }
+                        }
+                    }
+                    DataMsg::PullRows { matrix_id, start_row, nrows } => {
+                        Action::ServePull { matrix_id, start_row, nrows }
+                    }
+                    DataMsg::DataBye => Action::Close,
+                    other => Action::Reply(DataMsg::DataError {
+                        message: format!("unexpected message on data socket: {other:?}"),
                     }),
-                }
+                },
             }
-            DataMsg::PushRows { matrix_id, start_row, ncols, data, .. } => {
-                let mut store = shared.store.lock().unwrap();
-                let res = (|| -> crate::Result<()> {
-                    let owner = store.get(matrix_id)?.session;
-                    check_session(owner, conn_session, matrix_id)?;
-                    store.write_rows(matrix_id, start_row, ncols as usize, &data)
-                })();
-                match res {
-                    Ok(()) => None, // streaming: acks only at PushDone
-                    Err(e) => Some(DataMsg::DataError { message: e.to_string() }),
-                }
-            }
-            DataMsg::PushDone { matrix_id } => {
-                let store = shared.store.lock().unwrap();
-                let res = (|| -> crate::Result<u64> {
-                    let block = store.get(matrix_id)?;
-                    check_session(block.session, conn_session, matrix_id)?;
-                    Ok(block.rows_received)
-                })();
-                match res {
-                    Ok(rows_received) => {
-                        Some(DataMsg::PushDoneAck { matrix_id, rows_received })
-                    }
-                    Err(e) => Some(DataMsg::DataError { message: e.to_string() }),
-                }
-            }
-            DataMsg::PullRows { matrix_id, start_row, nrows } => {
-                let store = shared.store.lock().unwrap();
-                let res = (|| -> crate::Result<Vec<f64>> {
-                    let owner = store.get(matrix_id)?.session;
-                    check_session(owner, conn_session, matrix_id)?;
-                    store.read_rows(matrix_id, start_row, nrows as usize)
-                })();
-                match res {
-                    Ok(data) => {
-                        let ncols = data.len() / (nrows as usize).max(1);
-                        Some(DataMsg::RowsData {
-                            matrix_id,
-                            start_row,
-                            nrows,
-                            ncols: ncols as u32,
-                            data,
-                        })
-                    }
-                    Err(e) => Some(DataMsg::DataError { message: e.to_string() }),
-                }
-            }
-            DataMsg::DataBye => return,
-            other => Some(DataMsg::DataError {
-                message: format!("unexpected message on data socket: {other:?}"),
-            }),
         };
-        if let Some(reply) = reply {
-            if framed.send_data_flush(&reply).is_err() {
-                return;
+        match action {
+            Action::Nothing => {}
+            Action::Close => return,
+            Action::Reply(reply) => {
+                if framed.send_data_flush(&reply).is_err() {
+                    return;
+                }
+            }
+            Action::ServePull { matrix_id, start_row, nrows } => {
+                if serve_pull(
+                    shared,
+                    &mut framed,
+                    conn_session,
+                    matrix_id,
+                    start_row,
+                    nrows,
+                    frame_rows,
+                )
+                .is_err()
+                {
+                    return;
+                }
             }
         }
     }
@@ -268,11 +360,7 @@ pub fn alloc_group(
     layout: &RowBlockLayout,
 ) -> crate::Result<()> {
     for (slot, &rank) in ranks.iter().enumerate() {
-        workers[rank]
-            .store
-            .lock()
-            .unwrap()
-            .alloc(id, name, layout.clone(), slot, session_id)?;
+        workers[rank].store.alloc(id, name, layout.clone(), slot, session_id)?;
     }
     Ok(())
 }

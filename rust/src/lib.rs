@@ -36,6 +36,18 @@
 //! vs. what this repo builds) and the experiment index mapping Tables 1–5
 //! and Figure 3 to `rust/benches/`.
 
+// Lint posture (CI runs `cargo clippy -- -D warnings`): correctness,
+// suspicious, and perf lints stay hot; these stylistic ones are allowed
+// because the paper-shaped code trips them by design — explicit index
+// loops in the GEMM/tile kernels, many-argument SPMD routine signatures,
+// and socket read/write type pairs.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
+
 pub mod cli;
 pub mod client;
 pub mod collectives;

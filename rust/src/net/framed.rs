@@ -4,13 +4,25 @@
 //! (`Config.transfer.buf_bytes` sized) so row-batch frames coalesce into
 //! large socket writes — this buffer is one of the transfer-path knobs the
 //! ablation bench sweeps.
+//!
+//! Two frame paths exist:
+//!
+//! * the **owned** path ([`send_data`](Framed::send_data) /
+//!   [`recv_data`](Framed::recv_data)) encodes through a `Writer` Vec and
+//!   decodes into fresh allocations — fine for control traffic;
+//! * the **single-copy** path ([`send_data_ref`](Framed::send_data_ref) /
+//!   [`recv_data_view`](Framed::recv_data_view)) writes header + payload
+//!   straight into the socket buffer and decodes payloads as slices into
+//!   a reusable receive buffer, so steady-state row transfer performs no
+//!   per-frame heap allocation (tracked by
+//!   [`recv_buf_grows`](Framed::recv_buf_grows)).
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 
 use anyhow::Context;
 
-use crate::protocol::{ControlMsg, DataMsg};
+use crate::protocol::{ControlMsg, DataMsg, DataMsgRef, DataMsgView};
 
 /// Maximum accepted frame (guards against corrupt length prefixes).
 const MAX_FRAME: u32 = 1 << 30;
@@ -18,6 +30,12 @@ const MAX_FRAME: u32 = 1 << 30;
 pub struct Framed<R: Read, W: Write> {
     r: BufReader<R>,
     w: BufWriter<W>,
+    /// Reusable frame receive buffer: payloads decode in place, so the
+    /// buffer reaches the largest frame size and stops allocating.
+    rbuf: Vec<u8>,
+    /// Times `rbuf` had to grow — flat in steady state (the data plane's
+    /// zero-allocation invariant; asserted by tests).
+    rbuf_grows: u64,
 }
 
 impl Framed<TcpStream, TcpStream> {
@@ -29,6 +47,8 @@ impl Framed<TcpStream, TcpStream> {
         Ok(Framed {
             r: BufReader::with_capacity(buf_bytes.max(8 << 10), rd),
             w: BufWriter::with_capacity(buf_bytes.max(8 << 10), stream),
+            rbuf: Vec::new(),
+            rbuf_grows: 0,
         })
     }
 
@@ -46,6 +66,8 @@ impl<R: Read, W: Write> Framed<R, W> {
         Framed {
             r: BufReader::new(r),
             w: BufWriter::new(w),
+            rbuf: Vec::new(),
+            rbuf_grows: 0,
         }
     }
 
@@ -70,15 +92,34 @@ impl<R: Read, W: Write> Framed<R, W> {
         self.flush()
     }
 
-    /// Block until one frame arrives.
-    pub fn recv(&mut self) -> crate::Result<Vec<u8>> {
+    /// Block until one frame arrives; the returned slice points into the
+    /// reusable receive buffer and is valid until the next `recv_*` call.
+    pub fn recv_ref(&mut self) -> crate::Result<&[u8]> {
         let mut len_buf = [0u8; 4];
         self.r.read_exact(&mut len_buf).context("reading frame length")?;
         let len = u32::from_le_bytes(len_buf);
         anyhow::ensure!(len <= MAX_FRAME, "incoming frame of {len} bytes exceeds cap");
-        let mut payload = vec![0u8; len as usize];
-        self.r.read_exact(&mut payload).context("reading frame payload")?;
-        Ok(payload)
+        let len = len as usize;
+        if self.rbuf.capacity() < len {
+            self.rbuf_grows += 1;
+        }
+        self.rbuf.resize(len, 0);
+        self.r.read_exact(&mut self.rbuf[..len]).context("reading frame payload")?;
+        Ok(&self.rbuf[..len])
+    }
+
+    /// Block until one frame arrives, copied into a fresh Vec (control
+    /// path; the transfer hot path uses [`recv_ref`](Self::recv_ref) /
+    /// [`recv_data_view`](Self::recv_data_view)).
+    pub fn recv(&mut self) -> crate::Result<Vec<u8>> {
+        Ok(self.recv_ref()?.to_vec())
+    }
+
+    /// Times the receive buffer has grown since this link opened. Steady
+    /// state (frames of a stable size) keeps this flat — the data plane's
+    /// no-per-frame-allocation invariant.
+    pub fn recv_buf_grows(&self) -> u64 {
+        self.rbuf_grows
     }
 
     // -- typed convenience wrappers --
@@ -114,6 +155,37 @@ impl<R: Read, W: Write> Framed<R, W> {
     pub fn recv_data(&mut self) -> crate::Result<DataMsg> {
         Ok(DataMsg::decode(&self.recv()?)?)
     }
+
+    /// Queue a borrowed-payload data frame WITHOUT flushing: length
+    /// prefix + fixed header + the payload's raw little-endian bytes go
+    /// straight into the socket buffer — no intermediate encode Vec, so
+    /// the f64s are copied exactly once on this side.
+    pub fn send_data_ref(&mut self, msg: &DataMsgRef) -> crate::Result<()> {
+        let len = msg.frame_len();
+        anyhow::ensure!(
+            len <= MAX_FRAME as usize,
+            "frame of {len} bytes exceeds cap"
+        );
+        let header = msg.encode_header()?;
+        self.w.write_all(&(len as u32).to_le_bytes())?;
+        self.w.write_all(&header)?;
+        let data = msg.payload();
+        #[cfg(target_endian = "little")]
+        self.w.write_all(crate::protocol::wire::f64s_as_le_bytes(data))?;
+        #[cfg(target_endian = "big")]
+        for x in data {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Receive one data frame decoded in place: payload-carrying messages
+    /// borrow their bytes from the reusable receive buffer (valid until
+    /// the next `recv_*` call); everything else decodes owned.
+    pub fn recv_data_view(&mut self) -> crate::Result<DataMsgView<'_>> {
+        let buf = self.recv_ref()?;
+        Ok(DataMsgView::decode(buf)?)
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +213,8 @@ mod tests {
                             version,
                             granted_workers: 0,
                             worker_addrs: vec![],
+                            rows_per_frame: 64,
+                            buf_bytes: 1 << 16,
                         })
                         .unwrap();
                     }
@@ -155,6 +229,8 @@ mod tests {
                 client_name: "t".into(),
                 version: 1,
                 request_workers: 0,
+                rows_per_frame: 0,
+                buf_bytes: 0,
             })
             .unwrap();
         assert!(matches!(reply, ControlMsg::HandshakeAck { session_id: 1, .. }));
@@ -176,6 +252,80 @@ mod tests {
         let mut c = Framed::connect(&addr.to_string(), 4096).unwrap();
         let err = c.call(&ControlMsg::ListMatrices).unwrap_err();
         assert!(err.to_string().contains("nope"));
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn borrowed_frames_roundtrip_and_reuse_recv_buffer() {
+        use crate::protocol::DataMsgRef;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let frames = 50usize;
+        let ncols = 16usize;
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut f = Framed::tcp(s, 1 << 16).unwrap();
+            let mut row = vec![0f64; ncols];
+            for i in 0..frames {
+                match f.recv_data_view().unwrap() {
+                    crate::protocol::DataMsgView::PushRows {
+                        matrix_id,
+                        start_row,
+                        nrows,
+                        ncols: nc,
+                        payload,
+                    } => {
+                        assert_eq!(matrix_id, 7);
+                        assert_eq!(start_row, i as u64);
+                        assert_eq!((nrows, nc), (1, ncols as u32));
+                        crate::protocol::copy_le_f64s(payload, &mut row);
+                        assert_eq!(row[0], i as f64);
+                        assert_eq!(row[ncols - 1], i as f64 + 0.5);
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            // identical frame sizes: the receive buffer grew once at most
+            assert!(
+                f.recv_buf_grows() <= 1,
+                "recv buffer grew {} times for {frames} equal frames",
+                f.recv_buf_grows()
+            );
+        });
+
+        let mut c = Framed::connect(&addr.to_string(), 1 << 16).unwrap();
+        let mut data = vec![0f64; ncols];
+        for i in 0..frames {
+            data[0] = i as f64;
+            data[ncols - 1] = i as f64 + 0.5;
+            c.send_data_ref(&DataMsgRef::PushRows {
+                matrix_id: 7,
+                start_row: i as u64,
+                nrows: 1,
+                ncols: ncols as u32,
+                data: &data,
+            })
+            .unwrap();
+        }
+        c.flush().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_incoming_frame_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            use std::io::Write;
+            let (mut s, _) = listener.accept().unwrap();
+            // a corrupt length prefix far beyond MAX_FRAME
+            s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            s.flush().unwrap();
+        });
+        let mut c = Framed::connect(&addr.to_string(), 4096).unwrap();
+        let err = c.recv().unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
         server.join().unwrap();
     }
 

@@ -55,6 +55,13 @@ pub enum ControlMsg {
         /// Worker-group size this session asks for (the paper's
         /// `requestWorkers` API); 0 = server default policy.
         request_workers: u32,
+        /// Requested rows-per-frame for this session's transfers
+        /// (v3 negotiation); 0 = server default. The server clamps to its
+        /// configured limits and echoes the effective value in the ack.
+        rows_per_frame: u32,
+        /// Requested socket buffer size in bytes (v3 negotiation);
+        /// 0 = server default, clamped server-side.
+        buf_bytes: u64,
     },
     RegisterLibrary { name: String, path: String },
     /// Allocate a handle; rows will arrive on the data sockets.
@@ -76,6 +83,12 @@ pub enum ControlMsg {
         /// One `host:port` per granted worker, index = the session's
         /// group-local worker rank.
         worker_addrs: Vec<String>,
+        /// Effective rows-per-frame for this session after server-side
+        /// clamping (v3 negotiation); 0 only from pre-v3 servers.
+        rows_per_frame: u32,
+        /// Effective socket buffer size after clamping; 0 only from
+        /// pre-v3 servers.
+        buf_bytes: u64,
     },
     LibraryRegistered { name: String },
     MatrixCreated {
@@ -101,11 +114,19 @@ impl ControlMsg {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
-            ControlMsg::Handshake { client_name, version, request_workers } => {
+            ControlMsg::Handshake {
+                client_name,
+                version,
+                request_workers,
+                rows_per_frame,
+                buf_bytes,
+            } => {
                 w.u8(0);
                 w.str(client_name);
                 w.u32(*version);
                 w.u32(*request_workers);
+                w.u32(*rows_per_frame);
+                w.u64(*buf_bytes);
             }
             ControlMsg::RegisterLibrary { name, path } => {
                 w.u8(1);
@@ -143,6 +164,8 @@ impl ControlMsg {
                 version,
                 granted_workers,
                 worker_addrs,
+                rows_per_frame,
+                buf_bytes,
             } => {
                 w.u8(128);
                 w.u64(*session_id);
@@ -152,6 +175,8 @@ impl ControlMsg {
                 for a in worker_addrs {
                     w.str(a);
                 }
+                w.u32(*rows_per_frame);
+                w.u64(*buf_bytes);
             }
             ControlMsg::LibraryRegistered { name } => {
                 w.u8(129);
@@ -211,12 +236,21 @@ impl ControlMsg {
             0 => {
                 let client_name = r.str()?;
                 let version = r.u32()?;
-                // v1 frames end at `version`; tolerate the short form so
-                // the server can still answer with its version-mismatch
+                // older frames stop early (v1 after `version`, v2 after
+                // `request_workers`); tolerate the short forms so the
+                // server can still answer with its version-mismatch
                 // diagnostic instead of dropping the connection
                 let request_workers =
                     if r.remaining() > 0 { r.u32()? } else { 0 };
-                ControlMsg::Handshake { client_name, version, request_workers }
+                let rows_per_frame = if r.remaining() > 0 { r.u32()? } else { 0 };
+                let buf_bytes = if r.remaining() > 0 { r.u64()? } else { 0 };
+                ControlMsg::Handshake {
+                    client_name,
+                    version,
+                    request_workers,
+                    rows_per_frame,
+                    buf_bytes,
+                }
             }
             1 => ControlMsg::RegisterLibrary { name: r.str()?, path: r.str()? },
             2 => ControlMsg::CreateMatrix {
@@ -241,11 +275,16 @@ impl ControlMsg {
                 let n = r.u32()?;
                 let worker_addrs =
                     (0..n).map(|_| r.str()).collect::<Result<_, _>>()?;
+                // pre-v3 acks stop after the addresses
+                let rows_per_frame = if r.remaining() > 0 { r.u32()? } else { 0 };
+                let buf_bytes = if r.remaining() > 0 { r.u64()? } else { 0 };
                 ControlMsg::HandshakeAck {
                     session_id,
                     version,
                     granted_workers,
                     worker_addrs,
+                    rows_per_frame,
+                    buf_bytes,
                 }
             }
             129 => ControlMsg::LibraryRegistered { name: r.str()? },
@@ -292,14 +331,28 @@ impl ControlMsg {
 
 /// Executor⇄worker data messages. Rows travel as raw f64 bytes — the
 /// paper's "the Spark executor sends each row ... as sequences of bytes".
+///
+/// v3 pull protocol: `PullRows` is a *ranged* request — the worker
+/// answers with a back-to-back stream of `RowsData` frames (each at most
+/// the negotiated rows-per-frame) terminated by a `PullDone` trailer, so
+/// the per-frame request/reply round-trip of v2 is gone. Clients may keep
+/// several ranged requests outstanding per link (windowed pipelining);
+/// the worker serves them strictly in arrival order.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DataMsg {
     // executor -> worker
-    DataHandshake { session_id: u64, executor_id: u32 },
+    DataHandshake {
+        session_id: u64,
+        executor_id: u32,
+        /// Frame granularity the worker should stream pull replies at;
+        /// 0 = server default. Normally the session's negotiated value.
+        rows_per_frame: u32,
+    },
     /// A contiguous batch of rows (row batching is ablation #3; the paper
     /// ships one row at a time, we default to 64/frame and sweep it).
     PushRows { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, data: Vec<f64> },
     PushDone { matrix_id: u64 },
+    /// Ranged pull request; answered by `RowsData`* + `PullDone`.
     PullRows { matrix_id: u64, start_row: u64, nrows: u32 },
     DataBye,
 
@@ -307,6 +360,8 @@ pub enum DataMsg {
     DataHandshakeAck { worker_rank: u32 },
     PushDoneAck { matrix_id: u64, rows_received: u64 },
     RowsData { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, data: Vec<f64> },
+    /// End-of-stream trailer for one ranged `PullRows` request.
+    PullDone { matrix_id: u64 },
     DataError { message: String },
 }
 
@@ -320,10 +375,11 @@ impl DataMsg {
             _ => Writer::new(),
         };
         match self {
-            DataMsg::DataHandshake { session_id, executor_id } => {
+            DataMsg::DataHandshake { session_id, executor_id, rows_per_frame } => {
                 w.u8(0);
                 w.u64(*session_id);
                 w.u32(*executor_id);
+                w.u32(*rows_per_frame);
             }
             DataMsg::PushRows { matrix_id, start_row, nrows, ncols, data } => {
                 debug_assert_eq!(data.len(), *nrows as usize * *ncols as usize);
@@ -363,6 +419,10 @@ impl DataMsg {
                 w.u32(*ncols);
                 w.raw_f64s(data);
             }
+            DataMsg::PullDone { matrix_id } => {
+                w.u8(132);
+                w.u64(*matrix_id);
+            }
             DataMsg::DataError { message } => {
                 w.u8(131);
                 w.str(message);
@@ -374,16 +434,19 @@ impl DataMsg {
     pub fn decode(buf: &[u8]) -> Result<Self, ProtocolError> {
         let mut r = Reader::new(buf);
         let msg = match r.u8()? {
-            0 => DataMsg::DataHandshake {
-                session_id: r.u64()?,
-                executor_id: r.u32()?,
-            },
+            0 => {
+                let session_id = r.u64()?;
+                let executor_id = r.u32()?;
+                // pre-v3 frames stop after executor_id
+                let rows_per_frame = if r.remaining() > 0 { r.u32()? } else { 0 };
+                DataMsg::DataHandshake { session_id, executor_id, rows_per_frame }
+            }
             1 => {
                 let matrix_id = r.u64()?;
                 let start_row = r.u64()?;
                 let nrows = r.u32()?;
                 let ncols = r.u32()?;
-                let data = r.raw_f64s(nrows as usize * ncols as usize)?;
+                let data = r.raw_f64s(checked_payload_len(nrows, ncols)?)?;
                 DataMsg::PushRows { matrix_id, start_row, nrows, ncols, data }
             }
             2 => DataMsg::PushDone { matrix_id: r.u64()? },
@@ -403,14 +466,119 @@ impl DataMsg {
                 let start_row = r.u64()?;
                 let nrows = r.u32()?;
                 let ncols = r.u32()?;
-                let data = r.raw_f64s(nrows as usize * ncols as usize)?;
+                let data = r.raw_f64s(checked_payload_len(nrows, ncols)?)?;
                 DataMsg::RowsData { matrix_id, start_row, nrows, ncols, data }
             }
             131 => DataMsg::DataError { message: r.str()? },
+            132 => DataMsg::PullDone { matrix_id: r.u64()? },
             tag => return Err(ProtocolError::BadTag { tag, what: "DataMsg" }),
         };
         r.finish()?;
         Ok(msg)
+    }
+}
+
+/// Element count of a rows payload, rejecting header combinations whose
+/// byte size cannot be a real frame (guards the `nrows * ncols` multiply
+/// against overflow before it sizes an allocation or a slice take).
+fn checked_payload_len(nrows: u32, ncols: u32) -> Result<usize, ProtocolError> {
+    let elems = nrows as u64 * ncols as u64; // u32 * u32 cannot overflow u64
+    let bytes = elems * 8;
+    if bytes > (1 << 40) {
+        return Err(ProtocolError::Oversized(bytes));
+    }
+    Ok(elems as usize)
+}
+
+/// Byte length of the fixed header preceding a rows payload on the wire:
+/// tag + matrix_id + start_row + nrows + ncols.
+pub const ROWS_HEADER_LEN: usize = 1 + 8 + 8 + 4 + 4;
+
+/// Borrowed-payload twin of the payload-carrying [`DataMsg`] variants —
+/// the single-copy encode path. `Framed::send_data_ref` writes the header
+/// and the payload's raw little-endian bytes straight into its socket
+/// buffer, so the f64s are copied exactly once (payload slice → socket
+/// buffer) with no intermediate `Writer` Vec. Wire format is identical to
+/// the owned variants; either side may decode with either path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DataMsgRef<'a> {
+    PushRows { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, data: &'a [f64] },
+    RowsData { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, data: &'a [f64] },
+}
+
+impl<'a> DataMsgRef<'a> {
+    pub fn payload(&self) -> &'a [f64] {
+        match *self {
+            DataMsgRef::PushRows { data, .. } | DataMsgRef::RowsData { data, .. } => data,
+        }
+    }
+
+    /// Total frame length (header + payload bytes).
+    pub fn frame_len(&self) -> usize {
+        ROWS_HEADER_LEN + self.payload().len() * 8
+    }
+
+    /// Encode the fixed-size header; callers append the payload's raw
+    /// little-endian bytes. Fails if the payload length does not match
+    /// `nrows * ncols` (a malformed frame would desync the stream).
+    pub fn encode_header(&self) -> Result<[u8; ROWS_HEADER_LEN], ProtocolError> {
+        let (tag, matrix_id, start_row, nrows, ncols, data) = match *self {
+            DataMsgRef::PushRows { matrix_id, start_row, nrows, ncols, data } => {
+                (1u8, matrix_id, start_row, nrows, ncols, data)
+            }
+            DataMsgRef::RowsData { matrix_id, start_row, nrows, ncols, data } => {
+                (130u8, matrix_id, start_row, nrows, ncols, data)
+            }
+        };
+        let want = checked_payload_len(nrows, ncols)?;
+        if data.len() != want {
+            return Err(ProtocolError::PayloadMismatch {
+                want: want * 8,
+                got: data.len() * 8,
+            });
+        }
+        let mut h = [0u8; ROWS_HEADER_LEN];
+        h[0] = tag;
+        h[1..9].copy_from_slice(&matrix_id.to_le_bytes());
+        h[9..17].copy_from_slice(&start_row.to_le_bytes());
+        h[17..21].copy_from_slice(&nrows.to_le_bytes());
+        h[21..25].copy_from_slice(&ncols.to_le_bytes());
+        Ok(h)
+    }
+}
+
+/// Borrowed decode of a data frame — the single-copy decode path. The
+/// payload-carrying variants hand out the payload as raw little-endian
+/// bytes *pointing into the receive buffer* (not necessarily 8-aligned,
+/// hence bytes rather than `&[f64]`); consumers copy exactly once into
+/// their destination via [`crate::protocol::wire::copy_le_f64s`]. All
+/// other messages decode owned as [`DataMsg`].
+#[derive(Debug, PartialEq)]
+pub enum DataMsgView<'a> {
+    PushRows { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, payload: &'a [u8] },
+    RowsData { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, payload: &'a [u8] },
+    Other(DataMsg),
+}
+
+impl<'a> DataMsgView<'a> {
+    pub fn decode(buf: &'a [u8]) -> Result<Self, ProtocolError> {
+        let tag = buf.first().copied();
+        if tag != Some(1) && tag != Some(130) {
+            return Ok(DataMsgView::Other(DataMsg::decode(buf)?));
+        }
+        let mut r = Reader::new(buf);
+        let _ = r.u8()?;
+        let matrix_id = r.u64()?;
+        let start_row = r.u64()?;
+        let nrows = r.u32()?;
+        let ncols = r.u32()?;
+        let payload = r.raw_bytes(checked_payload_len(nrows, ncols)? * 8)?;
+        r.finish()?;
+        Ok(if tag == Some(1) {
+            DataMsgView::PushRows { matrix_id, start_row, nrows, ncols, payload }
+        } else {
+            DataMsgView::RowsData { matrix_id, start_row, nrows, ncols, payload }
+        })
     }
 }
 
@@ -423,8 +591,10 @@ mod tests {
         let msgs = vec![
             ControlMsg::Handshake {
                 client_name: "spark-app".into(),
-                version: 2,
+                version: 3,
                 request_workers: 4,
+                rows_per_frame: 128,
+                buf_bytes: 1 << 20,
             },
             ControlMsg::RegisterLibrary { name: "skylark".into(), path: "builtin:skylark".into() },
             ControlMsg::CreateMatrix { name: "X".into(), rows: 10, cols: 4 },
@@ -440,9 +610,11 @@ mod tests {
             ControlMsg::Shutdown,
             ControlMsg::HandshakeAck {
                 session_id: 9,
-                version: 2,
+                version: 3,
                 granted_workers: 2,
                 worker_addrs: vec!["127.0.0.1:4001".into(), "127.0.0.1:4002".into()],
+                rows_per_frame: 64,
+                buf_bytes: 1 << 20,
             },
             ControlMsg::LibraryRegistered { name: "skylark".into() },
             ControlMsg::MatrixCreated { id: 3, row_ranges: vec![(0, 5), (5, 10)] },
@@ -482,14 +654,48 @@ mod tests {
                 client_name: "old-client".into(),
                 version: 1,
                 request_workers: 0,
+                rows_per_frame: 0,
+                buf_bytes: 0,
             }
+        );
+    }
+
+    #[test]
+    fn v2_handshake_without_transfer_fields_still_decodes() {
+        // a protocol-v2 client's frame stops after request_workers; the
+        // transfer-negotiation fields default to "server decides"
+        let mut w = Writer::new();
+        w.u8(0);
+        w.str("v2-client");
+        w.u32(2);
+        w.u32(3);
+        let msg = ControlMsg::decode(&w.into_bytes()).unwrap();
+        assert_eq!(
+            msg,
+            ControlMsg::Handshake {
+                client_name: "v2-client".into(),
+                version: 2,
+                request_workers: 3,
+                rows_per_frame: 0,
+                buf_bytes: 0,
+            }
+        );
+        // same for the data-socket handshake
+        let mut w = Writer::new();
+        w.u8(0);
+        w.u64(9);
+        w.u32(1);
+        let msg = DataMsg::decode(&w.into_bytes()).unwrap();
+        assert_eq!(
+            msg,
+            DataMsg::DataHandshake { session_id: 9, executor_id: 1, rows_per_frame: 0 }
         );
     }
 
     #[test]
     fn data_roundtrip_all_variants() {
         let msgs = vec![
-            DataMsg::DataHandshake { session_id: 9, executor_id: 2 },
+            DataMsg::DataHandshake { session_id: 9, executor_id: 2, rows_per_frame: 64 },
             DataMsg::PushRows {
                 matrix_id: 3,
                 start_row: 100,
@@ -509,12 +715,105 @@ mod tests {
                 ncols: 2,
                 data: vec![7.0, 8.0],
             },
+            DataMsg::PullDone { matrix_id: 3 },
             DataMsg::DataError { message: "nope".into() },
         ];
         for m in msgs {
             let buf = m.encode();
             assert_eq!(m, DataMsg::decode(&buf).unwrap());
         }
+    }
+
+    #[test]
+    fn borrowed_encode_matches_owned_wire_format() {
+        let data = vec![1.5, -2.5, 3.25, 0.0, 7.0, -8.0];
+        let owned = DataMsg::PushRows {
+            matrix_id: 11,
+            start_row: 42,
+            nrows: 2,
+            ncols: 3,
+            data: data.clone(),
+        };
+        let bytes = owned.encode();
+        let r = DataMsgRef::PushRows {
+            matrix_id: 11,
+            start_row: 42,
+            nrows: 2,
+            ncols: 3,
+            data: &data,
+        };
+        let header = r.encode_header().unwrap();
+        assert_eq!(&bytes[..ROWS_HEADER_LEN], &header[..]);
+        assert_eq!(bytes.len(), r.frame_len());
+        // and the borrowed decode sees the same frame
+        match DataMsgView::decode(&bytes).unwrap() {
+            DataMsgView::PushRows { matrix_id, start_row, nrows, ncols, payload } => {
+                assert_eq!((matrix_id, start_row, nrows, ncols), (11, 42, 2, 3));
+                assert_eq!(payload, &bytes[ROWS_HEADER_LEN..]);
+                let mut out = vec![0f64; 6];
+                crate::protocol::wire::copy_le_f64s(payload, &mut out);
+                assert_eq!(out, data);
+            }
+            other => panic!("unexpected view {other:?}"),
+        }
+    }
+
+    #[test]
+    fn borrowed_view_passes_other_messages_through() {
+        let bye = DataMsg::PullDone { matrix_id: 5 };
+        match DataMsgView::decode(&bye.encode()).unwrap() {
+            DataMsgView::Other(m) => assert_eq!(m, bye),
+            other => panic!("unexpected view {other:?}"),
+        }
+        // RowsData goes through the borrowed arm
+        let rd = DataMsg::RowsData {
+            matrix_id: 1,
+            start_row: 0,
+            nrows: 1,
+            ncols: 1,
+            data: vec![9.0],
+        };
+        assert!(matches!(
+            DataMsgView::decode(&rd.encode()).unwrap(),
+            DataMsgView::RowsData { .. }
+        ));
+    }
+
+    #[test]
+    fn borrowed_encode_rejects_mismatched_payload() {
+        let data = vec![1.0, 2.0, 3.0];
+        let bad = DataMsgRef::RowsData {
+            matrix_id: 1,
+            start_row: 0,
+            nrows: 2,
+            ncols: 2, // wants 4 values, slice has 3
+            data: &data,
+        };
+        assert!(matches!(
+            bad.encode_header(),
+            Err(ProtocolError::PayloadMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn oversized_row_headers_rejected_before_allocation() {
+        // nrows * ncols * 8 far beyond any real frame: decode must refuse
+        // without trying to take (or allocate) the payload
+        let mut w = Writer::new();
+        w.u8(1); // PushRows
+        w.u64(1);
+        w.u64(0);
+        w.u32(u32::MAX);
+        w.u32(u32::MAX);
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            DataMsg::decode(&bytes),
+            Err(ProtocolError::Oversized(_))
+        ));
+        assert!(matches!(
+            DataMsgView::decode(&bytes),
+            Err(ProtocolError::Oversized(_))
+        ));
     }
 
     #[test]

@@ -16,11 +16,14 @@ pub mod message;
 pub mod value;
 pub mod wire;
 
-pub use message::{ControlMsg, DataMsg, MatrixInfo};
+pub use message::{ControlMsg, DataMsg, DataMsgRef, DataMsgView, MatrixInfo, ROWS_HEADER_LEN};
 pub use value::{Params, Value};
-pub use wire::{ProtocolError, Reader, Writer};
+pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
 
 /// Protocol version; bumped on any wire-format change, checked in the
 /// handshake. v2: worker-group negotiation (`request_workers` /
-/// `granted_workers`) on the handshake.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// `granted_workers`) on the handshake. v3: streaming ranged pulls
+/// (`PullRows` answered by `RowsData`* + `PullDone`) and per-session
+/// transfer negotiation (`rows_per_frame` / `buf_bytes` on the handshake,
+/// effective values echoed in the ack).
+pub const PROTOCOL_VERSION: u32 = 3;

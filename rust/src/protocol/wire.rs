@@ -19,6 +19,54 @@ pub enum ProtocolError {
     Trailing(usize),
     #[error("oversized field: {0} bytes")]
     Oversized(u64),
+    #[error("payload of {got} bytes does not match header ({want} bytes)")]
+    PayloadMismatch { want: usize, got: usize },
+}
+
+/// Copy little-endian f64 wire bytes into `dst` — a single memcpy on
+/// little-endian targets, per-element conversion on big-endian ones. This
+/// is the one copy the decode hot path performs: straight from the frame
+/// receive buffer into the destination matrix block / row vector.
+///
+/// Panics if `src.len() != dst.len() * 8` (callers size both from the
+/// frame header, which the decoder has already validated).
+pub fn copy_le_f64s(src: &[u8], dst: &mut [f64]) {
+    assert_eq!(src.len(), dst.len() * 8, "payload/destination length mismatch");
+    #[cfg(target_endian = "little")]
+    {
+        // Safety: dst is a valid &mut [f64] of exactly src.len()/8
+        // elements; u8 -> f64 byte copy of the full region.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                src.as_ptr(),
+                dst.as_mut_ptr() as *mut u8,
+                src.len(),
+            );
+        }
+    }
+    #[cfg(target_endian = "big")]
+    for (d, chunk) in dst.iter_mut().zip(src.chunks_exact(8)) {
+        *d = f64::from_le_bytes(chunk.try_into().unwrap());
+    }
+}
+
+/// Decode little-endian f64 wire bytes into a fresh Vec (non-hot-path
+/// convenience; the transfer path uses [`copy_le_f64s`] into preallocated
+/// destinations instead).
+pub fn le_f64s_to_vec(src: &[u8]) -> Vec<f64> {
+    let mut out = vec![0f64; src.len() / 8];
+    copy_le_f64s(&src[..out.len() * 8], &mut out);
+    out
+}
+
+/// View an f64 slice as its little-endian wire bytes without copying.
+/// Only exists on little-endian targets — big-endian encoders must
+/// convert per element (see `Framed::send_data_ref` / `Writer::raw_f64s`).
+#[cfg(target_endian = "little")]
+pub fn f64s_as_le_bytes(xs: &[f64]) -> &[u8] {
+    // Safety: f64 -> u8 reinterpretation is always valid; the length in
+    // bytes cannot overflow because xs is in memory.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8) }
 }
 
 /// Appends primitives to an owned buffer.
@@ -176,6 +224,13 @@ impl<'a> Reader<'a> {
         self.raw_f64s(n as usize)
     }
 
+    /// Borrow `n` raw bytes out of the underlying buffer without copying
+    /// (the zero-copy decode path: payload slices point into the frame
+    /// receive buffer).
+    pub fn raw_bytes(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        self.take(n)
+    }
+
     /// Read `count` f64s without a length prefix.
     pub fn raw_f64s(&mut self, count: usize) -> Result<Vec<f64>, ProtocolError> {
         let src = self.take(count * 8)?;
@@ -256,6 +311,33 @@ mod tests {
         let mut r = Reader::new(&buf);
         let _ = r.u8().unwrap();
         assert!(matches!(r.finish(), Err(ProtocolError::Trailing(1))));
+    }
+
+    #[test]
+    fn le_byte_helpers_roundtrip() {
+        let xs = vec![1.5f64, -2.25, 0.0, f64::MAX];
+        // canonical little-endian bytes, built by hand
+        let mut expect = Vec::new();
+        for x in &xs {
+            expect.extend_from_slice(&x.to_le_bytes());
+        }
+        #[cfg(target_endian = "little")]
+        assert_eq!(f64s_as_le_bytes(&xs), &expect[..]);
+        let mut back = vec![0f64; xs.len()];
+        copy_le_f64s(&expect, &mut back);
+        assert_eq!(back, xs);
+        assert_eq!(le_f64s_to_vec(&expect), xs);
+    }
+
+    #[test]
+    fn raw_bytes_borrows_without_copy() {
+        let buf = [1u8, 2, 3, 4, 5];
+        let mut r = Reader::new(&buf);
+        let s = r.raw_bytes(3).unwrap();
+        assert_eq!(s, &[1, 2, 3]);
+        assert_eq!(s.as_ptr(), buf.as_ptr()); // same storage, no copy
+        assert_eq!(r.remaining(), 2);
+        assert!(r.raw_bytes(3).is_err());
     }
 
     #[test]

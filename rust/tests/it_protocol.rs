@@ -41,6 +41,8 @@ fn control_messages_roundtrip() {
                 client_name: g.ident(20),
                 version: g.u64() as u32,
                 request_workers: g.u64() as u32,
+                rows_per_frame: g.u64() as u32,
+                buf_bytes: g.u64() % (1 << 30),
             },
             1 => ControlMsg::RegisterLibrary { name: g.ident(8), path: g.ident(30) },
             2 => ControlMsg::CreateMatrix {
@@ -60,6 +62,8 @@ fn control_messages_roundtrip() {
                     version: 1,
                     granted_workers: g.u64() as u32,
                     worker_addrs: (0..n).map(|_| g.ident(21)).collect(),
+                    rows_per_frame: g.u64() as u32,
+                    buf_bytes: g.u64() % (1 << 30),
                 }
             }
             5 => {
@@ -129,6 +133,86 @@ fn data_messages_roundtrip() {
         };
         let bytes = msg.encode();
         assert_eq!(msg, DataMsg::decode(&bytes).expect("decode"));
+    });
+}
+
+#[test]
+fn hand_built_little_endian_frames_decode_identically() {
+    use alchemist::protocol::{le_f64s_to_vec, DataMsgView, ROWS_HEADER_LEN};
+    // a byte-by-byte little-endian PushRows frame built WITHOUT the
+    // Writer: whatever the host endianness, the wire format is LE, so
+    // this pins the #[cfg(target_endian)] encode/decode fallbacks
+    let vals = [1.5f64, -2.25, 1e-300, 0.0, f64::MAX, -7.125];
+    let mut bytes = Vec::new();
+    bytes.push(1u8); // PushRows tag
+    bytes.extend_from_slice(&42u64.to_le_bytes()); // matrix_id
+    bytes.extend_from_slice(&100u64.to_le_bytes()); // start_row
+    bytes.extend_from_slice(&2u32.to_le_bytes()); // nrows
+    bytes.extend_from_slice(&3u32.to_le_bytes()); // ncols
+    for v in &vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    assert_eq!(bytes.len(), ROWS_HEADER_LEN + vals.len() * 8);
+
+    // owned decode
+    match DataMsg::decode(&bytes).unwrap() {
+        DataMsg::PushRows { matrix_id, start_row, nrows, ncols, data } => {
+            assert_eq!((matrix_id, start_row, nrows, ncols), (42, 100, 2, 3));
+            for (a, b) in data.iter().zip(&vals) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    // borrowed decode hands out the raw LE payload bytes in place
+    match DataMsgView::decode(&bytes).unwrap() {
+        DataMsgView::PushRows { payload, .. } => {
+            assert_eq!(payload, &bytes[ROWS_HEADER_LEN..]);
+            let back = le_f64s_to_vec(payload);
+            for (a, b) in back.iter().zip(&vals) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    // and the encoder emits exactly these canonical bytes
+    let owned = DataMsg::PushRows {
+        matrix_id: 42,
+        start_row: 100,
+        nrows: 2,
+        ncols: 3,
+        data: vals.to_vec(),
+    };
+    assert_eq!(owned.encode(), bytes);
+}
+
+#[test]
+fn borrowed_and_owned_decodes_agree() {
+    use alchemist::protocol::{le_f64s_to_vec, DataMsgView};
+    props(200, |g| {
+        let nrows = g.usize_in(1, 16) as u32;
+        let ncols = g.usize_in(1, 32) as u32;
+        let msg = DataMsg::RowsData {
+            matrix_id: g.u64(),
+            start_row: g.u64() % 1_000_000,
+            nrows,
+            ncols,
+            data: g.vec_normal((nrows * ncols) as usize),
+        };
+        let bytes = msg.encode();
+        let (m1, s1, n1, c1, d1) = match &msg {
+            DataMsg::RowsData { matrix_id, start_row, nrows, ncols, data } => {
+                (*matrix_id, *start_row, *nrows, *ncols, data.clone())
+            }
+            _ => unreachable!(),
+        };
+        match DataMsgView::decode(&bytes).unwrap() {
+            DataMsgView::RowsData { matrix_id, start_row, nrows, ncols, payload } => {
+                assert_eq!((matrix_id, start_row, nrows, ncols), (m1, s1, n1, c1));
+                assert_eq!(le_f64s_to_vec(payload), d1);
+            }
+            other => panic!("{other:?}"),
+        }
     });
 }
 

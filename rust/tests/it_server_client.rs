@@ -217,6 +217,8 @@ fn seal_with_missing_rows_fails_and_session_survives() {
             client_name: "t".into(),
             version: PROTOCOL_VERSION,
             request_workers: 0,
+            rows_per_frame: 0,
+            buf_bytes: 0,
         })
         .unwrap();
     assert!(matches!(reply, ControlMsg::HandshakeAck { .. }));
@@ -249,6 +251,8 @@ fn data_plane_rejects_bad_pushes_and_unsealed_pulls() {
             client_name: "t".into(),
             version: PROTOCOL_VERSION,
             request_workers: 0,
+            rows_per_frame: 0,
+            buf_bytes: 0,
         })
         .unwrap();
     let worker_addrs = match ack {
@@ -264,8 +268,12 @@ fn data_plane_rejects_bad_pushes_and_unsealed_pulls() {
     };
 
     let mut data = Framed::connect(&worker_addrs[0], 1 << 16).unwrap();
-    data.send_data_flush(&DataMsg::DataHandshake { session_id: 1, executor_id: 0 })
-        .unwrap();
+    data.send_data_flush(&DataMsg::DataHandshake {
+        session_id: 1,
+        executor_id: 0,
+        rows_per_frame: 0,
+    })
+    .unwrap();
     assert!(matches!(data.recv_data().unwrap(), DataMsg::DataHandshakeAck { .. }));
 
     // pull before sealing -> error
@@ -328,6 +336,8 @@ fn executor_disconnect_mid_push_leaves_matrix_unsealed_not_poisoned() {
             client_name: "t2".into(),
             version: PROTOCOL_VERSION,
             request_workers: 1,
+            rows_per_frame: 0,
+            buf_bytes: 0,
         })
         .unwrap();
     let (session_id, worker_addrs) = match ack {
@@ -345,8 +355,12 @@ fn executor_disconnect_mid_push_leaves_matrix_unsealed_not_poisoned() {
     };
     {
         let mut data = Framed::connect(&worker_addrs[0], 1 << 16).unwrap();
-        data.send_data_flush(&DataMsg::DataHandshake { session_id, executor_id: 0 })
-            .unwrap();
+        data.send_data_flush(&DataMsg::DataHandshake {
+            session_id,
+            executor_id: 0,
+            rows_per_frame: 0,
+        })
+        .unwrap();
         assert!(matches!(data.recv_data().unwrap(), DataMsg::DataHandshakeAck { .. }));
         data.send_data_flush(&DataMsg::PushRows {
             matrix_id: id,

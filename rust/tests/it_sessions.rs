@@ -240,6 +240,7 @@ fn data_plane_enforces_session_ownership() {
     data.send_data_flush(&DataMsg::DataHandshake {
         session_id: b.session_id,
         executor_id: 0,
+        rows_per_frame: 0,
     })
     .unwrap();
     match data.recv_data().unwrap() {

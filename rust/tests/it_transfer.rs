@@ -1,0 +1,435 @@
+//! Integration: the v3 zero-copy, pipelined data plane — streaming ranged
+//! pulls (`RowsData`* + `PullDone`), per-session transfer negotiation,
+//! concurrent multi-executor ingest into one worker, pull/push overlap on
+//! a single worker (per-block locking), and the steady-state
+//! no-per-frame-allocation invariant.
+
+use std::sync::{Arc, Barrier};
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::{Config, EngineKind};
+use alchemist::coordinator::AlchemistServer;
+use alchemist::distmat::LocalMatrix;
+use alchemist::net::Framed;
+use alchemist::protocol::{ControlMsg, DataMsg, Writer, PROTOCOL_VERSION};
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::util::prng::Rng;
+
+fn native_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+fn random_matrix(seed: u64, rows: usize, cols: usize) -> LocalMatrix {
+    let mut rng = Rng::new(seed);
+    LocalMatrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+/// Raw control handshake; returns (control link, session id, worker addrs).
+fn raw_session(
+    control_addr: &str,
+    request_workers: u32,
+) -> (Framed<std::net::TcpStream, std::net::TcpStream>, u64, Vec<String>) {
+    let mut control = Framed::connect(control_addr, 1 << 16).unwrap();
+    let ack = control
+        .call(&ControlMsg::Handshake {
+            client_name: "it-transfer".into(),
+            version: PROTOCOL_VERSION,
+            request_workers,
+            rows_per_frame: 0,
+            buf_bytes: 0,
+        })
+        .unwrap();
+    match ack {
+        ControlMsg::HandshakeAck { session_id, worker_addrs, .. } => {
+            (control, session_id, worker_addrs)
+        }
+        other => panic!("bad handshake reply: {other:?}"),
+    }
+}
+
+fn create_matrix(
+    control: &mut Framed<std::net::TcpStream, std::net::TcpStream>,
+    name: &str,
+    rows: u64,
+    cols: u64,
+) -> u64 {
+    match control
+        .call(&ControlMsg::CreateMatrix { name: name.into(), rows, cols })
+        .unwrap()
+    {
+        ControlMsg::MatrixCreated { id, .. } => id,
+        other => panic!("bad create reply: {other:?}"),
+    }
+}
+
+fn data_conn(
+    addr: &str,
+    session_id: u64,
+    executor_id: u32,
+    rows_per_frame: u32,
+) -> Framed<std::net::TcpStream, std::net::TcpStream> {
+    let mut data = Framed::connect(addr, 1 << 16).unwrap();
+    data.send_data_flush(&DataMsg::DataHandshake {
+        session_id,
+        executor_id,
+        rows_per_frame,
+    })
+    .unwrap();
+    match data.recv_data().unwrap() {
+        DataMsg::DataHandshakeAck { .. } => data,
+        other => panic!("bad data handshake reply: {other:?}"),
+    }
+}
+
+/// Drain one ranged pull stream; returns (frames, rows) and checks values
+/// (`value == global row index` convention) and frame metadata.
+fn drain_pull_stream(
+    data: &mut Framed<std::net::TcpStream, std::net::TcpStream>,
+    matrix_id: u64,
+    start: u64,
+    nrows: u64,
+    ncols: usize,
+    check_values: bool,
+) -> (usize, u64) {
+    data.send_data_flush(&DataMsg::PullRows {
+        matrix_id,
+        start_row: start,
+        nrows: nrows as u32,
+    })
+    .unwrap();
+    let mut frames = 0usize;
+    let mut got = 0u64;
+    loop {
+        match data.recv_data().unwrap() {
+            DataMsg::RowsData { matrix_id: mid, start_row, nrows: n, ncols: nc, data: d } => {
+                assert_eq!(mid, matrix_id);
+                assert_eq!(nc as usize, ncols, "ncols must come from the layout");
+                assert_eq!(start_row, start + got, "stream must be in order");
+                assert_eq!(d.len(), n as usize * ncols);
+                if check_values {
+                    for (k, row) in d.chunks_exact(ncols).enumerate() {
+                        let want = (start_row + k as u64) as f64;
+                        assert!(row.iter().all(|&v| v == want), "row {} corrupted", start_row + k as u64);
+                    }
+                }
+                frames += 1;
+                got += n as u64;
+            }
+            DataMsg::PullDone { matrix_id: mid } => {
+                assert_eq!(mid, matrix_id);
+                break;
+            }
+            other => panic!("bad pull reply: {other:?}"),
+        }
+    }
+    assert_eq!(got, nrows, "stream must cover the requested range");
+    (frames, got)
+}
+
+#[test]
+fn streaming_pull_roundtrip_small_frames() {
+    // tiny frames + stripes force the full streaming machinery: several
+    // stripes per worker, several frames per stripe, windowed requests
+    let mut cfg = native_cfg();
+    cfg.apply("transfer.rows_per_frame", "8").unwrap();
+    cfg.apply("transfer.pull_stripe_rows", "32").unwrap();
+    cfg.apply("transfer.pull_window", "2").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 3).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 4).unwrap();
+
+    let x = random_matrix(1, 203, 5); // awkward split across 3 workers
+    let (al, s) = ac.send_matrix("X", &IndexedRowMatrix::from_local(&x, 6)).unwrap();
+    assert_eq!(s.bytes, 203 * 5 * 8);
+
+    let (back, p) = ac.to_indexed_row_matrix(&al, 4).unwrap();
+    assert_eq!(back.to_local().unwrap(), x);
+    assert_eq!(p.bytes, 203 * 5 * 8);
+    assert!(
+        p.frames >= 203 / 8,
+        "streaming pull should arrive in rows_per_frame chunks, got {} frames",
+        p.frames
+    );
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn handshake_negotiates_and_clamps_transfer_knobs() {
+    let server = AlchemistServer::start(native_cfg(), 1).unwrap();
+
+    // a client asking beyond the server limits is clamped
+    let mut big = native_cfg();
+    big.transfer.rows_per_frame = 1_000_000;
+    big.transfer.buf_bytes = 1 << 26;
+    let ac = AlchemistContext::connect(&server.control_addr, &big, 1).unwrap();
+    let server_limits = native_cfg().transfer;
+    assert_eq!(ac.transfer_config().rows_per_frame, server_limits.max_rows_per_frame);
+    assert_eq!(ac.transfer_config().buf_bytes, server_limits.max_buf_bytes);
+    ac.stop();
+
+    // an in-range request is honored verbatim
+    let mut small = native_cfg();
+    small.transfer.rows_per_frame = 16;
+    small.transfer.buf_bytes = 64 << 10;
+    let ac = AlchemistContext::connect(&server.control_addr, &small, 1).unwrap();
+    assert_eq!(ac.transfer_config().rows_per_frame, 16);
+    assert_eq!(ac.transfer_config().buf_bytes, 64 << 10);
+    ac.stop();
+
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_executors_ingest_interleaved_out_of_order_runs() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 1).unwrap();
+    let (mut control, session_id, worker_addrs) = raw_session(&server.control_addr, 0);
+    const ROWS: u64 = 256;
+    const COLS: usize = 3;
+    let id = create_matrix(&mut control, "X", ROWS, COLS as u64);
+
+    // 4 executors own interleaved 2-row runs (run r belongs to executor
+    // r % 4) and push them in REVERSE order — ingest must cope with
+    // interleaved, out-of-order, concurrent streams
+    let mut handles = Vec::new();
+    for t in 0..4u32 {
+        let addr = worker_addrs[0].clone();
+        handles.push(std::thread::spawn(move || {
+            let mut data = data_conn(&addr, session_id, t, 8);
+            let runs: Vec<u64> =
+                (0..ROWS / 2).filter(|r| (r % 4) as u32 == t).collect();
+            for &r in runs.iter().rev() {
+                let start = r * 2;
+                let mut payload = Vec::with_capacity(2 * COLS);
+                for row in start..start + 2 {
+                    payload.extend(std::iter::repeat(row as f64).take(COLS));
+                }
+                data.send_data(&DataMsg::PushRows {
+                    matrix_id: id,
+                    start_row: start,
+                    nrows: 2,
+                    ncols: COLS as u32,
+                    data: payload,
+                })
+                .unwrap();
+            }
+            data.send_data_flush(&DataMsg::PushDone { matrix_id: id }).unwrap();
+            match data.recv_data().unwrap() {
+                DataMsg::PushDoneAck { .. } => {}
+                other => panic!("bad push ack: {other:?}"),
+            }
+            let _ = data.send_data_flush(&DataMsg::DataBye);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // every row must have landed exactly once
+    match control.call(&ControlMsg::SealMatrix { id }).unwrap() {
+        ControlMsg::MatrixSealed { rows_received, .. } => assert_eq!(rows_received, ROWS),
+        other => panic!("bad seal reply: {other:?}"),
+    }
+
+    // pull the whole block back as one ranged stream and verify contents
+    let mut data = data_conn(&worker_addrs[0], session_id, 9, 16);
+    let (frames, _) = drain_pull_stream(&mut data, id, 0, ROWS, COLS, true);
+    assert_eq!(frames, ROWS as usize / 16, "worker must honor the negotiated frame size");
+    // steady state: the receive buffer stopped growing after the first
+    // data frame (ack + first frame = at most 2 growths)
+    assert!(
+        data.recv_buf_grows() <= 2,
+        "per-frame allocations on the pull stream: {} growths",
+        data.recv_buf_grows()
+    );
+
+    // hardening: zero-row pulls are rejected with a proper diagnostic
+    data.send_data_flush(&DataMsg::PullRows { matrix_id: id, start_row: 0, nrows: 0 })
+        .unwrap();
+    match data.recv_data().unwrap() {
+        DataMsg::DataError { message } => {
+            assert!(message.contains("zero-row"), "{message}")
+        }
+        other => panic!("bad reply to zero-row pull: {other:?}"),
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn pull_stream_overlaps_concurrent_ingest_on_one_worker() {
+    // one worker, one session, two matrices: a long pull stream of M1
+    // must proceed while another connection ingests M2 (per-block locks;
+    // a store-wide mutex would serialize or deadlock this)
+    let mut cfg = native_cfg();
+    cfg.apply("transfer.rows_per_frame", "8").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 1).unwrap();
+    let (mut control, session_id, worker_addrs) = raw_session(&server.control_addr, 0);
+    const ROWS: u64 = 512;
+    const COLS: usize = 4;
+
+    // M1: pushed and sealed up front
+    let m1 = create_matrix(&mut control, "M1", ROWS, COLS as u64);
+    {
+        let mut data = data_conn(&worker_addrs[0], session_id, 0, 8);
+        for start in (0..ROWS).step_by(8) {
+            let mut payload = Vec::with_capacity(8 * COLS);
+            for row in start..start + 8 {
+                payload.extend(std::iter::repeat(row as f64).take(COLS));
+            }
+            data.send_data(&DataMsg::PushRows {
+                matrix_id: m1,
+                start_row: start,
+                nrows: 8,
+                ncols: COLS as u32,
+                data: payload,
+            })
+            .unwrap();
+        }
+        data.send_data_flush(&DataMsg::PushDone { matrix_id: m1 }).unwrap();
+        assert!(matches!(data.recv_data().unwrap(), DataMsg::PushDoneAck { .. }));
+        let _ = data.send_data_flush(&DataMsg::DataBye);
+    }
+    match control.call(&ControlMsg::SealMatrix { id: m1 }).unwrap() {
+        ControlMsg::MatrixSealed { rows_received, .. } => assert_eq!(rows_received, ROWS),
+        other => panic!("bad seal reply: {other:?}"),
+    }
+
+    let m2 = create_matrix(&mut control, "M2", ROWS, COLS as u64);
+    let barrier = Arc::new(Barrier::new(2));
+
+    let puller = {
+        let addr = worker_addrs[0].clone();
+        let barrier = barrier.clone();
+        std::thread::spawn(move || {
+            let mut data = data_conn(&addr, session_id, 1, 8);
+            barrier.wait();
+            for _ in 0..3 {
+                let (frames, _) = drain_pull_stream(&mut data, m1, 0, ROWS, COLS, true);
+                assert_eq!(frames, ROWS as usize / 8);
+            }
+            let _ = data.send_data_flush(&DataMsg::DataBye);
+        })
+    };
+    let pusher = {
+        let addr = worker_addrs[0].clone();
+        let barrier = barrier.clone();
+        std::thread::spawn(move || {
+            let mut data = data_conn(&addr, session_id, 2, 8);
+            barrier.wait();
+            for start in (0..ROWS).step_by(4) {
+                let mut payload = Vec::with_capacity(4 * COLS);
+                for row in start..start + 4 {
+                    payload.extend(std::iter::repeat(row as f64 + 0.5).take(COLS));
+                }
+                data.send_data(&DataMsg::PushRows {
+                    matrix_id: m2,
+                    start_row: start,
+                    nrows: 4,
+                    ncols: COLS as u32,
+                    data: payload,
+                })
+                .unwrap();
+            }
+            data.send_data_flush(&DataMsg::PushDone { matrix_id: m2 }).unwrap();
+            assert!(matches!(data.recv_data().unwrap(), DataMsg::PushDoneAck { .. }));
+            let _ = data.send_data_flush(&DataMsg::DataBye);
+        })
+    };
+    puller.join().unwrap();
+    pusher.join().unwrap();
+
+    match control.call(&ControlMsg::SealMatrix { id: m2 }).unwrap() {
+        ControlMsg::MatrixSealed { rows_received, .. } => assert_eq!(rows_received, ROWS),
+        other => panic!("bad seal reply: {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn cross_tenant_transfers_proceed_concurrently() {
+    // regression: one tenant's long pull stream and another tenant's push
+    // run at the same time on disjoint worker groups
+    let mut cfg = native_cfg();
+    cfg.apply("transfer.rows_per_frame", "16").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    let mut a = AlchemistContext::connect_with_workers(&addr, &cfg, 2, 1).unwrap();
+    let xa = random_matrix(7, 600, 6);
+    let (al_a, _) = a.send_matrix("Xa", &IndexedRowMatrix::from_local(&xa, 4)).unwrap();
+
+    let barrier = Arc::new(Barrier::new(2));
+    let t_pull = {
+        let barrier = barrier.clone();
+        std::thread::spawn(move || {
+            barrier.wait();
+            for _ in 0..3 {
+                let (back, _) = a.to_indexed_row_matrix(&al_a, 2).unwrap();
+                assert_eq!(back.to_local().unwrap(), xa);
+            }
+            a.stop();
+        })
+    };
+    let t_push = {
+        let addr = addr.clone();
+        let cfg = cfg.clone();
+        let barrier = barrier.clone();
+        std::thread::spawn(move || {
+            let mut b = AlchemistContext::connect_with_workers(&addr, &cfg, 2, 1).unwrap();
+            let xb = random_matrix(8, 600, 6);
+            barrier.wait();
+            for i in 0..3 {
+                let (al_b, _) = b
+                    .send_matrix(&format!("Xb{i}"), &IndexedRowMatrix::from_local(&xb, 4))
+                    .unwrap();
+                let (back, _) = b.to_indexed_row_matrix(&al_b, 2).unwrap();
+                assert_eq!(back.to_local().unwrap(), xb);
+                b.free(&al_b).unwrap();
+            }
+            b.stop();
+        })
+    };
+    t_pull.join().unwrap();
+    t_push.join().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn v2_client_receives_version_mismatch_diagnostic() {
+    let server = AlchemistServer::start(native_cfg(), 1).unwrap();
+    let mut control = Framed::connect(&server.control_addr, 1 << 16).unwrap();
+
+    // a genuine v2 frame: tag, name, version, request_workers — and
+    // nothing else (the v3 transfer-negotiation fields are absent)
+    let mut w = Writer::new();
+    w.u8(0);
+    w.str("old-v2-client");
+    w.u32(2);
+    w.u32(1);
+    control.send_flush(&w.into_bytes()).unwrap();
+    match control.recv_ctrl().unwrap() {
+        ControlMsg::Error { message } => {
+            assert!(
+                message.contains("protocol version mismatch: client 2, server 3"),
+                "{message}"
+            );
+        }
+        other => panic!("expected a version diagnostic, got {other:?}"),
+    }
+    // the connection survives to retry with the right version
+    let reply = control
+        .call(&ControlMsg::Handshake {
+            client_name: "retry".into(),
+            version: PROTOCOL_VERSION,
+            request_workers: 0,
+            rows_per_frame: 0,
+            buf_bytes: 0,
+        })
+        .unwrap();
+    assert!(matches!(reply, ControlMsg::HandshakeAck { .. }));
+    server.shutdown();
+}
