@@ -73,14 +73,30 @@ impl AlchemistContext {
         request_workers: usize,
     ) -> crate::Result<Self> {
         let mut control = Framed::connect(addr, cfg.transfer.buf_bytes)?;
+        // request only the transfer knobs that differ from the compiled
+        // defaults (0 = "server decides"); the server clamps explicit
+        // requests to its limits and echoes the effective values. A
+        // default-configured client thus emits the v2 wire shape, so
+        // even a strict pre-v3 server can read the frame and answer
+        // with its version-mismatch diagnostic instead of dropping the
+        // connection on trailing bytes.
+        let compiled = Config::default().transfer;
+        let req_rows_per_frame = if cfg.transfer.rows_per_frame == compiled.rows_per_frame {
+            0
+        } else {
+            cfg.transfer.rows_per_frame as u32
+        };
+        let req_buf_bytes = if cfg.transfer.buf_bytes == compiled.buf_bytes {
+            0
+        } else {
+            cfg.transfer.buf_bytes as u64
+        };
         let reply = control.call(&ControlMsg::Handshake {
             client_name: "alchemist-client".into(),
             version: PROTOCOL_VERSION,
             request_workers: request_workers as u32,
-            // ask for this client's configured transfer knobs; the server
-            // clamps to its limits and echoes the effective values
-            rows_per_frame: cfg.transfer.rows_per_frame as u32,
-            buf_bytes: cfg.transfer.buf_bytes as u64,
+            rows_per_frame: req_rows_per_frame,
+            buf_bytes: req_buf_bytes,
         })?;
         let mut cfg = cfg.clone();
         let (session_id, granted_workers, worker_addrs) = match reply {
@@ -99,13 +115,13 @@ impl AlchemistContext {
                     worker_addrs.len()
                 );
                 // adopt the negotiated values for every data link this
-                // session opens (0 = pre-v3 server: keep local config)
-                if rows_per_frame > 0 {
-                    cfg.transfer.rows_per_frame = rows_per_frame as usize;
-                }
-                if buf_bytes > 0 {
-                    cfg.transfer.buf_bytes = buf_bytes as usize;
-                }
+                // session opens (0 = pre-v3 server: keep local config),
+                // re-clamped through the client's OWN limits — a buggy
+                // or hostile server's echo must not pick our buffer
+                // size (a huge value would make every data link try to
+                // allocate it; negotiate also saturates the u64→usize
+                // conversion that would wrap on 32-bit targets)
+                cfg.transfer = cfg.transfer.negotiate(rows_per_frame, buf_bytes);
                 (session_id, granted_workers as usize, worker_addrs)
             }
             other => anyhow::bail!("bad handshake reply: {other:?}"),

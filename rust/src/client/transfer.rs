@@ -11,18 +11,25 @@
 //!
 //! Pulls use the v3 streaming protocol: each executor splits its row
 //! share into ranged stripes (`pull_stripe_rows` rows each), keeps up to
-//! `pull_window` stripes outstanding per worker link, and every link is
-//! primed before any reply is drained — so all workers stream
-//! concurrently, the per-frame request/reply round-trip of the old
-//! protocol is gone, and a link's socket never idles while the client
-//! assembles rows.
+//! `pull_window` stripes outstanding per worker link, and primes every
+//! link before draining any — the per-frame request/reply round-trip of
+//! the old protocol is gone, and the link currently being drained never
+//! idles (its window is topped back up as stripes complete). Within one
+//! executor the links drain in worker order, so a worker past the first
+//! streams its initial `pull_window` stripes and then waits on TCP
+//! backpressure until drained; cross-worker overlap beyond that window
+//! comes from running several executor threads, each covering a
+//! different contiguous row share (and therefore mostly different
+//! workers).
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::config::TransferConfig;
-use crate::net::Framed;
-use crate::protocol::{copy_le_f64s, DataMsg, DataMsgRef, DataMsgView};
+use crate::net::{Framed, MAX_FRAME};
+use crate::protocol::{
+    copy_le_f64s, max_rows_per_frame_for, DataMsg, DataMsgRef, DataMsgView,
+};
 use crate::sparklite::IndexedRow;
 
 use super::almatrix::AlMatrix;
@@ -151,6 +158,18 @@ fn push_rows_one_executor(
 ) -> crate::Result<TransferStats> {
     let t0 = Instant::now();
     let ncols = matrix.cols;
+    // same frame cap as the worker's pull streams (one shared helper):
+    // clamp rows-per-frame so header + payload fits under MAX_FRAME for
+    // any matrix width — and reject up front a matrix whose single row
+    // cannot fit, rather than failing mid-stream after frames already
+    // landed on the worker
+    let cap_rows = max_rows_per_frame_for(ncols, MAX_FRAME as usize).ok_or_else(|| {
+        anyhow::anyhow!(
+            "matrix {}: one row of {ncols} cols exceeds the {MAX_FRAME} byte frame cap",
+            matrix.id
+        )
+    })?;
+    let rows_per_frame = rows_per_frame.min(cap_rows);
     let mut stats = TransferStats::default();
     let mut touched = vec![false; matrix.row_ranges.len()];
 

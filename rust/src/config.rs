@@ -75,7 +75,14 @@ impl TransferConfig {
         } else {
             rows_per_frame as usize
         };
-        let buf = if buf_bytes == 0 { self.buf_bytes } else { buf_bytes as usize };
+        let buf = if buf_bytes == 0 {
+            self.buf_bytes
+        } else {
+            // saturate the u64 -> usize conversion: on 32-bit targets a
+            // plain `as` cast wraps (2^32 -> 0), turning an oversized
+            // request into the 4 KiB floor instead of the max
+            usize::try_from(buf_bytes).unwrap_or(usize::MAX)
+        };
         TransferConfig {
             rows_per_frame: rows.clamp(1, self.max_rows_per_frame.max(1)),
             buf_bytes: buf.clamp(4 << 10, self.max_buf_bytes.max(4 << 10)),

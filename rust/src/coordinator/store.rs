@@ -24,6 +24,13 @@
 //! * overlapping writes (a misbehaving client) serialize on their shared
 //!   stripes instead of racing.
 //!
+//! Writers never materialize a reference over the whole payload buffer —
+//! that would alias between concurrent writers even on disjoint stripes.
+//! Each write derives a `&mut [f64]` over exactly its locked span from a
+//! raw base pointer captured at construction (`Block::base`), so the
+//! exclusive references of concurrent writers are disjoint by
+//! construction.
+//!
 //! Sealing is the ingest/compute barrier, in three steps: `seal` flips
 //! `sealed` under the state mutex (new writers abort — they re-check it
 //! *after* acquiring their stripes), takes every stripe lock once to
@@ -78,14 +85,29 @@ pub struct Block {
     /// This rank's rows (`layout.ranges[slot]`), row-major. Mutated only
     /// through [`Block::write_span`] before sealing; immutable after.
     data: UnsafeCell<LocalMatrix>,
+    /// Raw pointer to `data`'s element buffer, captured at construction
+    /// (the buffer is fixed-size and never reallocated, so it stays
+    /// valid for the block's lifetime). Writers derive their span's
+    /// `&mut [f64]` from this instead of creating `&mut LocalMatrix`
+    /// through the cell — a whole-buffer exclusive reference would alias
+    /// between concurrent writers on disjoint stripes.
+    base: *mut f64,
+    /// Element count behind `base` (span bounds sanity checks).
+    len: usize,
 }
 
-// Safety: `data` is only written while holding the stripe locks covering
-// the written rows and only while not `sealed` (checked under the state
-// mutex after stripe acquisition); readers require `readable`, which
-// `seal` sets only after a full stripe barrier has waited out every
-// in-flight writer — so reads and writes can never overlap, and the
-// state mutex publishes the writes to readers. See the module docs.
+// Safety: the raw `base` pointer (which suppresses the auto impls)
+// points into the heap buffer owned by `data`, so it moves with the
+// block. Payload bytes are only written through per-span `&mut [f64]`
+// slices derived from `base` while holding the stripe locks covering
+// exactly those rows and only while not `sealed` (checked under the
+// state mutex after stripe acquisition), so concurrent writers' spans —
+// and therefore their exclusive references — are disjoint. Readers
+// require `readable`, which `seal` sets only after a full stripe
+// barrier has waited out every in-flight writer — so reads and writes
+// can never overlap, and the state mutex publishes the writes to
+// readers. See the module docs.
+unsafe impl Send for Block {}
 unsafe impl Sync for Block {}
 
 impl std::fmt::Debug for Block {
@@ -117,7 +139,7 @@ impl Block {
             layout.ranges.len()
         );
         let (a, b) = layout.ranges[slot];
-        let (local, sealed, rows_received) = match local {
+        let (mut local, sealed, rows_received) = match local {
             Some(m) => {
                 anyhow::ensure!(
                     m.rows() == b - a && m.cols() == layout.cols,
@@ -132,6 +154,12 @@ impl Block {
             }
             None => (LocalMatrix::zeros(b - a, layout.cols), false, 0),
         };
+        // capture the element buffer's base pointer while we still own
+        // the matrix uniquely; moving the LocalMatrix into the cell moves
+        // only its header, not the heap buffer the pointer targets
+        let buf = local.data_mut();
+        let len = buf.len();
+        let base = buf.as_mut_ptr();
         Ok(Block {
             id,
             layout,
@@ -146,6 +174,8 @@ impl Block {
             }),
             stripes: Default::default(),
             data: UnsafeCell::new(local),
+            base,
+            len,
         })
     }
 
@@ -217,12 +247,22 @@ impl Block {
             let st = self.state.lock().unwrap();
             anyhow::ensure!(!st.sealed, "matrix {} is sealed", self.id);
         }
+        debug_assert!((local_start + nrows) * ncols <= self.len);
         // Safety: the stripes covering [local_start, local_start+nrows)
-        // are held, so no other writer touches these rows; readers are
-        // excluded because the block is not `readable` yet — that flag is
-        // set only after `seal`'s stripe barrier has waited us out.
-        let local = unsafe { &mut *self.data.get() };
-        fill(&mut local.data_mut()[local_start * ncols..(local_start + nrows) * ncols]);
+        // are held, so this element range is ours alone; every concurrent
+        // writer builds its slice the same way over its own (disjoint)
+        // span from the raw `base` pointer, so no exclusive reference
+        // over the whole buffer — which would alias between writers —
+        // ever exists. Readers are excluded because the block is not
+        // `readable` yet — that flag is set only after `seal`'s stripe
+        // barrier has waited us out.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(
+                self.base.add(local_start * ncols),
+                nrows * ncols,
+            )
+        };
+        fill(dst);
         // account while still holding the stripes: once `seal`'s barrier
         // passes our stripes, our rows are guaranteed to be in the count
         self.state.lock().unwrap().rows_received += nrows as u64;

@@ -27,7 +27,7 @@ use crate::compute::{build_engine, Engine};
 use crate::config::Config;
 use crate::distmat::RowBlockLayout;
 use crate::net::Framed;
-use crate::protocol::{DataMsg, DataMsgRef, DataMsgView, Params};
+use crate::protocol::{max_rows_per_frame_for, DataMsg, DataMsgRef, DataMsgView, Params};
 use crate::util::timer::thread_cpu_secs;
 
 use super::registry::{Library, WorkerCtx};
@@ -186,15 +186,31 @@ fn serve_pull(
     nrows: u32,
     frame_rows: usize,
 ) -> crate::Result<()> {
-    let prep = (|| -> crate::Result<Arc<super::store::Block>> {
+    let prep = (|| -> crate::Result<(Arc<super::store::Block>, usize)> {
         anyhow::ensure!(nrows > 0, "zero-row pull of matrix {matrix_id}");
         let block = shared.store.get(matrix_id)?;
         check_session(block.session, conn_session, matrix_id)?;
         // whole-range validation (sealed + bounds) before the first frame
         block.read_span(start_row, nrows as usize)?;
-        Ok(block)
+        // clamp rows-per-frame so header + payload stays under the frame
+        // cap for any width: a wide matrix must fail HERE (one clean
+        // DataError) or not at all — never mid-stream after RowsData
+        // frames were queued, which would break the all-or-nothing reply
+        // contract with an opaque I/O error
+        let cap_rows = max_rows_per_frame_for(
+            block.layout.cols,
+            crate::net::MAX_FRAME as usize,
+        )
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "matrix {matrix_id}: one row of {} cols exceeds the {} byte frame cap",
+                block.layout.cols,
+                crate::net::MAX_FRAME,
+            )
+        })?;
+        Ok((block, frame_rows.clamp(1, cap_rows)))
     })();
-    let block = match prep {
+    let (block, frame_rows) = match prep {
         Ok(b) => b,
         Err(e) => {
             return framed.send_data_flush(&DataMsg::DataError { message: e.to_string() })
@@ -207,7 +223,7 @@ fn serve_pull(
         .read_span(start_row, nrows as usize)
         .expect("span validated above");
     let mut row = start_row;
-    for chunk in span.chunks((frame_rows.max(1)) * ncols.max(1)) {
+    for chunk in span.chunks(frame_rows * ncols.max(1)) {
         let n = (chunk.len() / ncols.max(1)) as u32;
         framed.send_data_ref(&DataMsgRef::RowsData {
             matrix_id,
@@ -240,6 +256,12 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
     // pull-reply frame granularity: negotiated at DataHandshake, clamped
     // by the server-side transfer limits
     let mut frame_rows = cfg.transfer.rows_per_frame.max(1);
+    // first failing PushRows per matrix replies immediately (one bounded
+    // frame); repeats are latched silently and re-surfaced at PushDone.
+    // A streaming client reads nothing until PushDone, so replying to
+    // EVERY bad frame would fill the socket buffers on both sides and
+    // deadlock the connection.
+    let mut push_errors: HashMap<u64, String> = HashMap::new();
     loop {
         // decode in place (payloads borrow the link's receive buffer);
         // replies are sent after the borrow ends
@@ -259,8 +281,18 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
                     })();
                     match res {
                         Ok(()) => Action::Nothing, // streaming: acks only at PushDone
+                        Err(e) if push_errors.contains_key(&matrix_id) => {
+                            log::debug!(
+                                "rank {}: suppressed repeat push error on matrix \
+                                 {matrix_id}: {e}",
+                                shared.rank
+                            );
+                            Action::Nothing
+                        }
                         Err(e) => {
-                            Action::Reply(DataMsg::DataError { message: e.to_string() })
+                            let message = e.to_string();
+                            push_errors.insert(matrix_id, message.clone());
+                            Action::Reply(DataMsg::DataError { message })
                         }
                     }
                 }
@@ -298,6 +330,9 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
                     }
                     DataMsg::PushDone { matrix_id } => {
                         let res = (|| -> crate::Result<u64> {
+                            if let Some(first) = push_errors.remove(&matrix_id) {
+                                anyhow::bail!("push stream had failures: {first}");
+                            }
                             let block = shared.store.get(matrix_id)?;
                             check_session(block.session, conn_session, matrix_id)?;
                             Ok(block.rows_received())

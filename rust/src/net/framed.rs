@@ -25,7 +25,19 @@ use anyhow::Context;
 use crate::protocol::{ControlMsg, DataMsg, DataMsgRef, DataMsgView};
 
 /// Maximum accepted frame (guards against corrupt length prefixes).
-const MAX_FRAME: u32 = 1 << 30;
+/// Public so frame producers (e.g. the worker's pull streams) can size
+/// their payloads to fit under it.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Frames between retained-capacity checks on the receive buffer (see
+/// [`Framed::recv_ref`]): long enough that one check window spans a whole
+/// steady-state burst, short enough that an idle control link lets a
+/// transient large frame's memory go promptly.
+const SHRINK_CHECK_FRAMES: u32 = 64;
+
+/// Never shrink the receive buffer below this (control frames churn
+/// around this size; shrinking further would just re-grow).
+const MIN_RETAINED_BYTES: usize = 4 << 10;
 
 pub struct Framed<R: Read, W: Write> {
     r: BufReader<R>,
@@ -36,6 +48,12 @@ pub struct Framed<R: Read, W: Write> {
     /// Times `rbuf` had to grow — flat in steady state (the data plane's
     /// zero-allocation invariant; asserted by tests).
     rbuf_grows: u64,
+    /// Largest frame seen in the current shrink-check window: the
+    /// capacity worth retaining. One transient large frame must not pin
+    /// peak-frame memory for the life of a long-lived connection.
+    rbuf_high: usize,
+    /// Frames received since the last retained-capacity check.
+    rbuf_frames: u32,
 }
 
 impl Framed<TcpStream, TcpStream> {
@@ -49,6 +67,8 @@ impl Framed<TcpStream, TcpStream> {
             w: BufWriter::with_capacity(buf_bytes.max(8 << 10), stream),
             rbuf: Vec::new(),
             rbuf_grows: 0,
+            rbuf_high: 0,
+            rbuf_frames: 0,
         })
     }
 
@@ -68,6 +88,8 @@ impl<R: Read, W: Write> Framed<R, W> {
             w: BufWriter::new(w),
             rbuf: Vec::new(),
             rbuf_grows: 0,
+            rbuf_high: 0,
+            rbuf_frames: 0,
         }
     }
 
@@ -100,10 +122,34 @@ impl<R: Read, W: Write> Framed<R, W> {
         let len = u32::from_le_bytes(len_buf);
         anyhow::ensure!(len <= MAX_FRAME, "incoming frame of {len} bytes exceeds cap");
         let len = len as usize;
+        // bound the retained capacity: if a whole check window of frames
+        // stayed far below what the buffer once grew to, release the
+        // excess (a 1 GiB outlier must not be pinned per link forever).
+        // Runs before `resize` so no borrow of the payload is live; the
+        // target includes the incoming frame, so this never forces an
+        // immediate re-grow (and never counts as one).
+        self.rbuf_high = self.rbuf_high.max(len);
+        self.rbuf_frames += 1;
+        if self.rbuf_frames >= SHRINK_CHECK_FRAMES {
+            let keep = self.rbuf_high.max(MIN_RETAINED_BYTES);
+            if self.rbuf.capacity() > keep.saturating_mul(4) {
+                self.rbuf.clear();
+                self.rbuf.shrink_to(keep);
+            }
+            self.rbuf_high = len;
+            self.rbuf_frames = 0;
+        }
         if self.rbuf.capacity() < len {
             self.rbuf_grows += 1;
         }
-        self.rbuf.resize(len, 0);
+        if self.rbuf.len() < len {
+            // grow-only: `len` stays pinned at the high-water mark (the
+            // shrink above is what lowers it), so the zero-fill covers
+            // just the newly exposed region once — a plain `resize(len)`
+            // would memset the whole frame every time a frame follows a
+            // smaller one (e.g. RowsData after a 9-byte PullDone trailer)
+            self.rbuf.resize(len, 0);
+        }
         self.r.read_exact(&mut self.rbuf[..len]).context("reading frame payload")?;
         Ok(&self.rbuf[..len])
     }
@@ -120,6 +166,13 @@ impl<R: Read, W: Write> Framed<R, W> {
     /// no-per-frame-allocation invariant.
     pub fn recv_buf_grows(&self) -> u64 {
         self.rbuf_grows
+    }
+
+    /// Currently retained receive-buffer capacity in bytes. Tracks the
+    /// recent peak frame size rather than the all-time peak — see the
+    /// shrink logic in [`recv_ref`](Self::recv_ref).
+    pub fn recv_buf_capacity(&self) -> usize {
+        self.rbuf.capacity()
     }
 
     // -- typed convenience wrappers --
@@ -310,6 +363,40 @@ mod tests {
         }
         c.flush().unwrap();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn recv_buffer_releases_transient_large_frame() {
+        // one big frame followed by a long run of small ones: the
+        // retained capacity must come back down instead of pinning the
+        // peak for the life of the connection
+        let big = 1usize << 20;
+        let mut wire = Vec::new();
+        let mut push = |payload: &[u8]| {
+            wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            wire.extend_from_slice(payload);
+        };
+        let outlier = vec![7u8; big];
+        push(&outlier);
+        let small = [1u8, 2, 3];
+        for _ in 0..2 * SHRINK_CHECK_FRAMES {
+            push(&small);
+        }
+        let mut f = Framed::new(std::io::Cursor::new(wire), std::io::sink());
+        assert_eq!(f.recv_ref().unwrap().len(), big);
+        assert!(f.recv_buf_capacity() >= big);
+        for _ in 0..2 * SHRINK_CHECK_FRAMES {
+            assert_eq!(f.recv_ref().unwrap(), &small);
+        }
+        assert!(
+            f.recv_buf_capacity() < big,
+            "capacity still {} after {} small frames",
+            f.recv_buf_capacity(),
+            2 * SHRINK_CHECK_FRAMES
+        );
+        // the shrink target always covers the current frame size, so
+        // shrinking never forces a re-grow: only the big frame allocated
+        assert_eq!(f.recv_buf_grows(), 1);
     }
 
     #[test]

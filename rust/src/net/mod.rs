@@ -9,5 +9,5 @@
 pub mod framed;
 pub mod server;
 
-pub use framed::Framed;
+pub use framed::{Framed, MAX_FRAME};
 pub use server::Server;

@@ -125,8 +125,17 @@ impl ControlMsg {
                 w.str(client_name);
                 w.u32(*version);
                 w.u32(*request_workers);
-                w.u32(*rows_per_frame);
-                w.u64(*buf_bytes);
+                // default transfer requests (0 = "server decides") are
+                // elided so the frame keeps the v2 shape: a pre-v3
+                // server's strict decoder can still read it and answer
+                // with its version-mismatch diagnostic instead of
+                // failing on trailing bytes and silently dropping the
+                // connection. Explicit requests require a v3 server
+                // anyway, so only those frames carry the fields.
+                if *rows_per_frame != 0 || *buf_bytes != 0 {
+                    w.u32(*rows_per_frame);
+                    w.u64(*buf_bytes);
+                }
             }
             ControlMsg::RegisterLibrary { name, path } => {
                 w.u8(1);
@@ -239,7 +248,14 @@ impl ControlMsg {
                 // older frames stop early (v1 after `version`, v2 after
                 // `request_workers`); tolerate the short forms so the
                 // server can still answer with its version-mismatch
-                // diagnostic instead of dropping the connection
+                // diagnostic instead of dropping the connection. The
+                // reverse direction is covered by encode-side elision of
+                // default fields — but a v3 client that EXPLICITLY
+                // requests transfer settings emits the long form, which
+                // a strict pre-v3 server rejects as trailing bytes
+                // (silent disconnect, no diagnostic); that residual
+                // asymmetry is accepted rather than moving negotiation
+                // into a second message.
                 let request_workers =
                     if r.remaining() > 0 { r.u32()? } else { 0 };
                 let rows_per_frame = if r.remaining() > 0 { r.u32()? } else { 0 };
@@ -379,7 +395,11 @@ impl DataMsg {
                 w.u8(0);
                 w.u64(*session_id);
                 w.u32(*executor_id);
-                w.u32(*rows_per_frame);
+                // elided at the default (0 = "server decides") for the
+                // same pre-v3 wire compatibility as ControlMsg::Handshake
+                if *rows_per_frame != 0 {
+                    w.u32(*rows_per_frame);
+                }
             }
             DataMsg::PushRows { matrix_id, start_row, nrows, ncols, data } => {
                 debug_assert_eq!(data.len(), *nrows as usize * *ncols as usize);
@@ -483,16 +503,37 @@ impl DataMsg {
 /// against overflow before it sizes an allocation or a slice take).
 fn checked_payload_len(nrows: u32, ncols: u32) -> Result<usize, ProtocolError> {
     let elems = nrows as u64 * ncols as u64; // u32 * u32 cannot overflow u64
-    let bytes = elems * 8;
-    if bytes > (1 << 40) {
+    // compare in ELEMENT space: computing `elems * 8` first could itself
+    // wrap u64 for adversarial headers (u32::MAX² · 8 ≈ 2^67), slipping
+    // a huge frame past the very guard this function exists to provide
+    if elems > (1 << 40) / 8 {
+        return Err(ProtocolError::Oversized(elems.saturating_mul(8)));
+    }
+    let bytes = elems * 8; // ≤ 2^40, cannot wrap
+    // the BYTE length must also fit usize, so the `len * 8` at the
+    // decode call sites cannot wrap on 32-bit targets; reject rather
+    // than truncate (`as usize` would wrap 2^32 elements to 0 and admit
+    // the malformed header as an empty payload)
+    if usize::try_from(bytes).is_err() {
         return Err(ProtocolError::Oversized(bytes));
     }
-    Ok(elems as usize)
+    Ok(elems as usize) // bytes fits usize ⇒ elems does too
 }
 
 /// Byte length of the fixed header preceding a rows payload on the wire:
 /// tag + matrix_id + start_row + nrows + ncols.
 pub const ROWS_HEADER_LEN: usize = 1 + 8 + 8 + 4 + 4;
+
+/// Most rows one rows-payload frame may carry at width `ncols` so that
+/// `ROWS_HEADER_LEN + rows·ncols·8` stays within `max_frame_bytes`;
+/// `None` when even a single row cannot fit. Both legs of the transfer
+/// path (client push and worker pull streams) clamp through this one
+/// function so the cap can never diverge between them.
+pub fn max_rows_per_frame_for(ncols: usize, max_frame_bytes: usize) -> Option<usize> {
+    let row_bytes = ncols.max(1).checked_mul(8)?;
+    let cap = max_frame_bytes.checked_sub(ROWS_HEADER_LEN)? / row_bytes;
+    (cap >= 1).then_some(cap)
+}
 
 /// Borrowed-payload twin of the payload-carrying [`DataMsg`] variants —
 /// the single-copy encode path. `Framed::send_data_ref` writes the header
@@ -693,6 +734,41 @@ mod tests {
     }
 
     #[test]
+    fn default_v3_handshake_keeps_v2_wire_shape() {
+        // a v3 client with default transfer settings must emit a frame a
+        // STRICT pre-v3 decoder accepts (so an old server can reply with
+        // its version-mismatch diagnostic, not a silent disconnect):
+        // byte-identical to the hand-built v2 form, and still roundtrips
+        let msg = ControlMsg::Handshake {
+            client_name: "new-client".into(),
+            version: 3,
+            request_workers: 2,
+            rows_per_frame: 0,
+            buf_bytes: 0,
+        };
+        let mut v2 = Writer::new();
+        v2.u8(0);
+        v2.str("new-client");
+        v2.u32(3);
+        v2.u32(2);
+        assert_eq!(msg.encode(), v2.into_bytes());
+        assert_eq!(ControlMsg::decode(&msg.encode()).unwrap(), msg);
+
+        // same for the data-socket handshake
+        let msg = DataMsg::DataHandshake {
+            session_id: 9,
+            executor_id: 1,
+            rows_per_frame: 0,
+        };
+        let mut v2 = Writer::new();
+        v2.u8(0);
+        v2.u64(9);
+        v2.u32(1);
+        assert_eq!(msg.encode(), v2.into_bytes());
+        assert_eq!(DataMsg::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
     fn data_roundtrip_all_variants() {
         let msgs = vec![
             DataMsg::DataHandshake { session_id: 9, executor_id: 2, rows_per_frame: 64 },
@@ -814,6 +890,39 @@ mod tests {
             DataMsgView::decode(&bytes),
             Err(ProtocolError::Oversized(_))
         ));
+
+        // a header whose BYTE count wraps u64 to exactly 0 (2^31 rows ·
+        // 2^30 cols · 8 = 2^64): must be rejected, not decoded as an
+        // empty payload
+        let mut w = Writer::new();
+        w.u8(130); // RowsData
+        w.u64(1);
+        w.u64(0);
+        w.u32(1 << 31);
+        w.u32(1 << 30);
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            DataMsg::decode(&bytes),
+            Err(ProtocolError::Oversized(_))
+        ));
+        assert!(matches!(
+            DataMsgView::decode(&bytes),
+            Err(ProtocolError::Oversized(_))
+        ));
+    }
+
+    #[test]
+    fn frame_row_cap_covers_header_for_any_width() {
+        let max = 1usize << 30;
+        let cap = max_rows_per_frame_for(1024, max).unwrap();
+        assert!(ROWS_HEADER_LEN + cap * 1024 * 8 <= max);
+        assert!(ROWS_HEADER_LEN + (cap + 1) * 1024 * 8 > max);
+        // zero-width degenerates to width 1
+        assert_eq!(max_rows_per_frame_for(0, max), max_rows_per_frame_for(1, max));
+        // one row as wide as the whole frame budget cannot be framed
+        assert_eq!(max_rows_per_frame_for(max / 8, max), None);
+        // pathological widths must not overflow the byte math
+        assert_eq!(max_rows_per_frame_for(usize::MAX, max), None);
     }
 
     #[test]

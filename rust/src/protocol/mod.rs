@@ -16,7 +16,10 @@ pub mod message;
 pub mod value;
 pub mod wire;
 
-pub use message::{ControlMsg, DataMsg, DataMsgRef, DataMsgView, MatrixInfo, ROWS_HEADER_LEN};
+pub use message::{
+    max_rows_per_frame_for, ControlMsg, DataMsg, DataMsgRef, DataMsgView, MatrixInfo,
+    ROWS_HEADER_LEN,
+};
 pub use value::{Params, Value};
 pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
 
