@@ -1,16 +1,21 @@
-//! `AlchemistContext` — the session object of the paper's Figure 2.
+//! `AlchemistContext` — the session object of the paper's Figure 2 —
+//! plus the asynchronous task API of protocol v4: [`AlchemistContext::submit`]
+//! returns a [`TaskHandle`] whose `status()` / `wait()` / `cancel()` drive
+//! the server-side `Queued → Running → Done | Failed | Cancelled` state
+//! machine, and the classic blocking [`AlchemistContext::run_task`] is
+//! reimplemented as submit + wait (see `docs/tasks.md`).
 
 use crate::config::Config;
 use crate::net::Framed;
-use crate::protocol::{ControlMsg, Params, PROTOCOL_VERSION};
+use crate::protocol::{ControlMsg, Params, TaskState, PROTOCOL_VERSION};
 use crate::sparklite::{IndexedRowMatrix, Rdd};
 
 use super::almatrix::AlMatrix;
 use super::transfer::{pull_matrix, push_matrix, TransferStats};
 
-/// Result of `run_task`: output matrix proxies plus scalar results and
-/// server-side timings (the paper's per-column experiment timings come
-/// straight from here).
+/// Result of a completed task: output matrix proxies plus scalar results
+/// and server-side timings (the paper's per-column experiment timings
+/// come straight from here).
 #[derive(Debug)]
 pub struct TaskResult {
     pub outputs: Vec<AlMatrix>,
@@ -207,45 +212,86 @@ impl AlchemistContext {
         Ok((al, stats))
     }
 
-    /// Invoke `lib.routine(params)` on the server's worker group.
+    /// Submit `lib.routine(params)` to the session's task queue and
+    /// return a [`TaskHandle`] immediately (protocol v4). The handle
+    /// borrows this context exclusively — the single control socket is
+    /// the session, so all task operations flow through it.
+    pub fn submit(
+        &mut self,
+        lib: &str,
+        routine: &str,
+        params: Params,
+    ) -> crate::Result<TaskHandle<'_>> {
+        let reply = self.control.call(&ControlMsg::SubmitTask {
+            lib: lib.into(),
+            routine: routine.into(),
+            params,
+        })?;
+        match reply {
+            ControlMsg::TaskSubmitted { task_id } => {
+                Ok(TaskHandle { ctx: self, task_id })
+            }
+            other => anyhow::bail!("bad reply: {other:?}"),
+        }
+    }
+
+    /// Re-attach a [`TaskHandle`] to a previously submitted task (handles
+    /// borrow the context, so juggling several in-flight tasks means
+    /// keeping their ids and re-attaching as needed).
+    pub fn task(&mut self, task_id: u64) -> TaskHandle<'_> {
+        TaskHandle { ctx: self, task_id }
+    }
+
+    /// Invoke `lib.routine(params)` on the server's worker group and
+    /// block until it completes — sugar over [`AlchemistContext::submit`]
+    /// + [`TaskHandle::wait`], so the v1–v3 synchronous call style keeps
+    /// working for every existing caller.
     pub fn run_task(
         &mut self,
         lib: &str,
         routine: &str,
         params: Params,
     ) -> crate::Result<TaskResult> {
-        let reply = self.control.call(&ControlMsg::RunTask {
-            lib: lib.into(),
-            routine: routine.into(),
-            params,
-        })?;
-        match reply {
-            ControlMsg::TaskDone { outputs, scalars, timings } => {
-                let mut proxies = Vec::with_capacity(outputs.len());
-                for info in outputs {
-                    // fetch layout for the proxy (one metadata round-trip)
-                    let ranges = match self
-                        .control
-                        .call(&ControlMsg::FetchMatrix { id: info.id })?
-                    {
-                        ControlMsg::FetchReady { row_ranges, .. } => row_ranges
-                            .iter()
-                            .map(|&(a, b)| (a as usize, b as usize))
-                            .collect::<Vec<_>>(),
-                        other => anyhow::bail!("bad reply: {other:?}"),
-                    };
-                    proxies.push(AlMatrix {
-                        id: info.id,
-                        rows: info.rows as usize,
-                        cols: info.cols as usize,
-                        name: info.name,
-                        row_ranges: ranges,
-                    });
-                }
-                Ok(TaskResult { outputs: proxies, scalars, timings })
-            }
+        self.submit(lib, routine, params)?.wait()
+    }
+
+    /// One task-lifecycle round-trip, unwrapping the status reply.
+    fn task_call(&mut self, msg: &ControlMsg) -> crate::Result<TaskState> {
+        match self.control.call(msg)? {
+            ControlMsg::TaskStatusReply { state, .. } => Ok(state),
             other => anyhow::bail!("bad reply: {other:?}"),
         }
+    }
+
+    /// Materialize a `Done` payload into client-side proxies.
+    fn resolve_done(
+        &mut self,
+        outputs: Vec<crate::protocol::MatrixInfo>,
+        scalars: Params,
+        timings: Vec<(String, f64)>,
+    ) -> crate::Result<TaskResult> {
+        let mut proxies = Vec::with_capacity(outputs.len());
+        for info in outputs {
+            // fetch layout for the proxy (one metadata round-trip)
+            let ranges = match self
+                .control
+                .call(&ControlMsg::FetchMatrix { id: info.id })?
+            {
+                ControlMsg::FetchReady { row_ranges, .. } => row_ranges
+                    .iter()
+                    .map(|&(a, b)| (a as usize, b as usize))
+                    .collect::<Vec<_>>(),
+                other => anyhow::bail!("bad reply: {other:?}"),
+            };
+            proxies.push(AlMatrix {
+                id: info.id,
+                rows: info.rows as usize,
+                cols: info.cols as usize,
+                name: info.name,
+                row_ranges: ranges,
+            });
+        }
+        Ok(TaskResult { outputs: proxies, scalars, timings })
     }
 
     /// Materialize a server matrix on the client —
@@ -300,6 +346,72 @@ impl AlchemistContext {
         match self.control.call(&ControlMsg::Shutdown)? {
             ControlMsg::Bye => Ok(()),
             other => anyhow::bail!("bad reply: {other:?}"),
+        }
+    }
+}
+
+/// One server-side wait slice per [`TaskHandle::wait`] round-trip: long
+/// enough that a typical task completes inside a single blocking call,
+/// short enough that a wedged rank cannot pin the control thread forever.
+const WAIT_SLICE_MS: u64 = 10_000;
+
+/// A submitted task (protocol v4). Holds the context mutably — the
+/// session's single control socket serializes all task operations.
+pub struct TaskHandle<'a> {
+    ctx: &'a mut AlchemistContext,
+    pub task_id: u64,
+}
+
+impl TaskHandle<'_> {
+    /// Poll the task's state without blocking (running tasks carry
+    /// cross-rank aggregated progress: min iteration, worst residual).
+    pub fn status(&mut self) -> crate::Result<TaskState> {
+        self.ctx
+            .task_call(&ControlMsg::TaskStatus { task_id: self.task_id })
+    }
+
+    /// Request cooperative cancellation. A queued task is `Cancelled`
+    /// immediately; a running task stays `Running` until its ranks
+    /// observe the token (within one iteration for the iterative
+    /// routines) — follow with [`TaskHandle::wait`] to see it land.
+    pub fn cancel(&mut self) -> crate::Result<TaskState> {
+        self.ctx
+            .task_call(&ControlMsg::CancelTask { task_id: self.task_id })
+    }
+
+    /// Block server-side until the task is terminal or `timeout_ms`
+    /// elapses; returns the state either way (a non-terminal state means
+    /// the timeout fired first).
+    pub fn wait_timeout(&mut self, timeout_ms: u64) -> crate::Result<TaskState> {
+        self.ctx.task_call(&ControlMsg::WaitTask {
+            task_id: self.task_id,
+            timeout_ms,
+        })
+    }
+
+    /// Block until the task completes; `Done` materializes into a
+    /// [`TaskResult`], `Failed` and `Cancelled` surface as errors (the
+    /// failure message carries the per-rank breakdown).
+    pub fn wait(self) -> crate::Result<TaskResult> {
+        let TaskHandle { ctx, task_id } = self;
+        loop {
+            let state = ctx.task_call(&ControlMsg::WaitTask {
+                task_id,
+                timeout_ms: WAIT_SLICE_MS,
+            })?;
+            match state {
+                TaskState::Done { outputs, scalars, timings } => {
+                    return ctx.resolve_done(outputs, scalars, timings);
+                }
+                TaskState::Failed { message, .. } => {
+                    anyhow::bail!("task {task_id} failed: {message}");
+                }
+                TaskState::Cancelled => {
+                    anyhow::bail!("task {task_id} was cancelled");
+                }
+                // Queued / Running: the wait slice expired, go around
+                _ => {}
+            }
         }
     }
 }

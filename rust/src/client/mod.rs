@@ -6,11 +6,15 @@
 //! `run_task`, and `to_indexed_row_matrix` to materialize results back on
 //! the client. Distributed payloads move over per-executor TCP sockets to
 //! the workers; only metadata crosses the driver connection.
+//!
+//! Protocol v4 adds the asynchronous task API: `submit` returns a
+//! [`TaskHandle`] with `status()` / `wait()` / `cancel()`, and `run_task`
+//! is submit + wait (see `docs/tasks.md`).
 
 pub mod almatrix;
 pub mod context;
 pub mod transfer;
 
 pub use almatrix::AlMatrix;
-pub use context::{AlchemistContext, TaskResult};
+pub use context::{AlchemistContext, TaskHandle, TaskResult};
 pub use transfer::TransferStats;

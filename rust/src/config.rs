@@ -146,6 +146,13 @@ pub struct SchedulerConfig {
     pub default_group_size: usize,
     /// Seconds a queued handshake waits for capacity before erroring.
     pub queue_timeout_s: f64,
+    /// Tasks a session may hold *queued* (one more may be running);
+    /// submissions beyond this are rejected with a clean error.
+    pub task_queue_depth: usize,
+    /// Matrix ids reserved per task for routine outputs; a routine
+    /// returning more outputs fails cleanly instead of colliding with
+    /// later ids (the v3 window was a fixed, unvalidated 64).
+    pub max_task_outputs: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -195,6 +202,8 @@ impl Default for Config {
                 max_sessions: 8,
                 default_group_size: 0,
                 queue_timeout_s: 30.0,
+                task_queue_depth: 16,
+                max_task_outputs: 64,
             },
             spark_driver_max_bytes: 192 << 20,
         }
@@ -287,6 +296,12 @@ impl Config {
             "scheduler.queue_timeout_s" => {
                 self.scheduler.queue_timeout_s = fl(value)?
             }
+            "scheduler.task_queue_depth" => {
+                self.scheduler.task_queue_depth = int(value)?
+            }
+            "scheduler.max_task_outputs" => {
+                self.scheduler.max_task_outputs = int(value)? as u64
+            }
             "spark_driver_max_bytes" => {
                 self.spark_driver_max_bytes = int(value)?
             }
@@ -340,6 +355,8 @@ mod tests {
             max_sessions = 4
             default_group_size = 2
             queue_timeout_s = 1.25
+            task_queue_depth = 3
+            max_task_outputs = 8
         "#;
         let mut c = Config::default();
         c.apply_pairs(&Config::from_str_pairs(text).unwrap()).unwrap();
@@ -350,6 +367,8 @@ mod tests {
         assert_eq!(c.scheduler.max_sessions, 4);
         assert_eq!(c.scheduler.default_group_size, 2);
         assert_eq!(c.scheduler.queue_timeout_s, 1.25);
+        assert_eq!(c.scheduler.task_queue_depth, 3);
+        assert_eq!(c.scheduler.max_task_outputs, 8);
     }
 
     #[test]

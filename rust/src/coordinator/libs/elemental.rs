@@ -13,17 +13,19 @@
 //! * `rand_matrix(rows, cols, seed)` → synthetic dense matrix
 //! * `fro_norm(A)` → scalar
 //! * `sleep(millis)` → scheduling diagnostic: every group rank parks for
-//!   `millis`, then the group barriers — used by the multi-tenant tests
-//!   to prove disjoint session groups run concurrently (a sleep does not
-//!   contend for cores the way a spin would, so overlap is observable
-//!   even on a single-core box)
+//!   `millis` in cancellable 10 ms slices (reporting one progress tick per
+//!   slice), then the group barriers — used by the multi-tenant tests to
+//!   prove disjoint session groups run concurrently, and by the
+//!   async-task tests as the pollable/cancellable long-running routine
+//! * `fail_on(rank)` → error-reporting diagnostic: that group-local rank
+//!   fails, the others succeed (exercises per-rank failure tagging)
 
 use std::path::Path;
 
 use crate::collectives::allgather;
 use crate::compute::GemmVariant;
 use crate::distmat::{LocalMatrix, RowBlockLayout};
-use crate::linalg::lanczos::{truncated_svd, SvdOptions};
+use crate::linalg::lanczos::{truncated_svd_scoped, SvdOptions};
 use crate::linalg::qr::cholesky_qr2;
 use crate::protocol::{Params, Value};
 use crate::util::prng::Rng;
@@ -49,6 +51,7 @@ impl Library for Elemental {
             "rand_matrix",
             "fro_norm",
             "sleep",
+            "fail_on",
         ]
     }
 
@@ -67,6 +70,7 @@ impl Library for Elemental {
             "rand_matrix" => rand_matrix(params, ctx),
             "fro_norm" => fro_norm(params, ctx),
             "sleep" => sleep_routine(params, ctx),
+            "fail_on" => fail_on(params, ctx),
             other => anyhow::bail!("elemental has no routine {other:?}"),
         }
     }
@@ -83,7 +87,7 @@ fn svd(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
 
     let mut sw = Stopwatch::new();
     sw.start("compute");
-    let res = truncated_svd(ctx.comm, ctx.engine, &a_local, &opts)?;
+    let res = truncated_svd_scoped(ctx.comm, ctx.engine, &a_local, &opts, ctx.scope)?;
     sw.stop();
 
     let k = res.sigma.len();
@@ -233,7 +237,30 @@ fn sleep_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutp
     anyhow::ensure!((0..=60_000).contains(&millis), "millis must be in [0, 60000]");
     let mut sw = Stopwatch::new();
     sw.start("compute");
-    std::thread::sleep(std::time::Duration::from_millis(millis as u64));
+    // park in small slices so cancellation is observed promptly and the
+    // task shows live progress (one "iteration" per slice) — this is the
+    // long-running stand-in the async-task tests poll and cancel
+    const SLICE_MS: u64 = 10;
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(millis as u64);
+    let mut slices = 0u64;
+    loop {
+        if ctx.scope.is_cancelled() {
+            break;
+        }
+        let left = deadline.saturating_duration_since(std::time::Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        std::thread::sleep(left.min(std::time::Duration::from_millis(SLICE_MS)));
+        slices += 1;
+        ctx.scope.report(slices, crate::tasks::NO_RESIDUAL);
+    }
+    // cancellation must be decided collectively: every rank reaches this
+    // check (cancelled ranks early, the rest at the deadline), so either
+    // all bail or none — a unilateral bail would strand peers in the
+    // final barrier
+    ctx.scope.collective_check_cancelled(ctx.comm, 0x534C_0000)?;
     // a group barrier proves every member executed on this session's own
     // communicator (a wrong-sized group would hang, not silently pass)
     ctx.comm.barrier();
@@ -243,6 +270,22 @@ fn sleep_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutp
         scalars: Params::new().with_i64("ranks", ctx.comm.size() as i64),
         timings: vec![("compute".into(), sw.secs("compute"))],
     })
+}
+
+/// Error-reporting diagnostic: the given group-local rank fails, the
+/// rest succeed with no outputs — the async-task tests use it to prove a
+/// one-rank wedge is reported distinguishably from a group-wide failure.
+fn fail_on(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let rank = params.i64("rank")?;
+    anyhow::ensure!(
+        (0..ctx.comm.size() as i64).contains(&rank),
+        "rank {rank} outside the group of {}",
+        ctx.comm.size()
+    );
+    if ctx.rank as i64 == rank {
+        anyhow::bail!("diagnostic failure injected on rank {rank}");
+    }
+    Ok(TaskOutput::default())
 }
 
 fn fro_norm(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {

@@ -13,7 +13,7 @@
 //!   expanded first and the expansion time reported separately (Table 2's
 //!   columns).
 
-use crate::linalg::cg::{cg_solve, CgOptions};
+use crate::linalg::cg::{cg_solve_scoped, CgOptions};
 use crate::linalg::rff::RffMap;
 use crate::protocol::{Params, Value};
 use crate::util::timer::Stopwatch;
@@ -103,7 +103,17 @@ fn cg_solve_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskO
     }
 
     sw.start("compute");
-    let res = cg_solve(ctx.comm, ctx.engine, &x_local, &y_local, x_layout.rows, &opts)?;
+    // under the task scope: per-iteration progress (iteration, residual)
+    // and cooperative cancellation within one iteration
+    let res = cg_solve_scoped(
+        ctx.comm,
+        ctx.engine,
+        &x_local,
+        &y_local,
+        x_layout.rows,
+        &opts,
+        ctx.scope,
+    )?;
     sw.stop();
 
     let (w_layout, w_local) =

@@ -9,10 +9,14 @@
 //! socket (admission, matrix handles, task dispatch); each worker owns a
 //! data socket (row push/pull), a matrix [`store`] namespaced by owning
 //! session, and a [`crate::compute::Engine`] built on its own thread.
-//! Tasks are SPMD: the driver sends `RunTask` to the session's member
-//! threads, each runs the same [`registry::Library`] routine against its
-//! local blocks with the session's communicator, collectives stitch them
-//! together, and group-rank-0's metadata becomes the reply.
+//! Tasks are SPMD and, since protocol v4, asynchronous: `SubmitTask`
+//! enqueues on the session's bounded FIFO and a per-session dispatcher
+//! sends the work to the group's member threads; each runs the same
+//! [`registry::Library`] routine against its local blocks with the
+//! session's communicator (under a [`crate::tasks::TaskScope`] carrying
+//! the cooperative cancel token and a progress slot), collectives stitch
+//! them together, and group-rank-0's metadata becomes the `Done` payload
+//! clients poll or wait for (see `docs/tasks.md`).
 //!
 //! Differences from the paper, all documented in DESIGN.md §2: workers are
 //! threads in the server process rather than MPI ranks across nodes (the

@@ -15,6 +15,7 @@ use crate::compute::Engine;
 use crate::config::Config;
 use crate::distmat::{LocalMatrix, RowBlockLayout};
 use crate::protocol::Params;
+use crate::tasks::TaskScope;
 
 use super::store::MatrixStore;
 
@@ -27,6 +28,10 @@ pub struct WorkerCtx<'a> {
     /// `coordinator::store` for the concurrency model).
     pub store: &'a MatrixStore,
     pub config: &'a Config,
+    /// This rank's view of the running task: cooperative cancel token +
+    /// progress slot (see `docs/tasks.md` for the cancellation contract —
+    /// SPMD routines must decide cancellation collectively).
+    pub scope: &'a TaskScope,
 }
 
 impl WorkerCtx<'_> {

@@ -10,6 +10,17 @@
 //! multi-client serving mode of the Cray deployments (Rothauge et al.
 //! 2019) — while matrix handles stay namespaced per session so teardown
 //! frees one tenant without disturbing the others.
+//!
+//! Since protocol v4 the task path is **asynchronous** (`docs/tasks.md`):
+//! `SubmitTask` enqueues on the session's bounded FIFO and returns a task
+//! id at once; a per-session dispatcher thread runs tasks one at a time
+//! over the group; `TaskStatus` polls the `Queued → Running{progress} →
+//! Done | Failed | Cancelled` state machine (progress aggregated across
+//! ranks); `CancelTask` flips a cooperative token iterative routines
+//! observe within one iteration; `WaitTask` blocks server-side with a
+//! timeout so the classic synchronous call survives as submit + wait.
+//! Teardown cancels queued and running work and joins the dispatcher
+//! before freeing the session's store blocks, so nothing leaks.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::TcpStream;
@@ -21,10 +32,14 @@ use std::time::{Duration, Instant};
 use crate::collectives::LocalComm;
 use crate::config::{Config, SchedulerConfig, TransferConfig};
 use crate::distmat::RowBlockLayout;
+use crate::metrics::{SchedMetrics, SchedSnapshot, TaskOutcome};
 use crate::net::{Framed, Server};
-use crate::protocol::{ControlMsg, MatrixInfo, Params, PROTOCOL_VERSION};
+use crate::protocol::{
+    ControlMsg, MatrixInfo, Params, TaskProgress, TaskState, PROTOCOL_VERSION,
+};
+use crate::tasks::{CancelToken, RankProgress, TaskScope};
 
-use super::registry::Registry;
+use super::registry::{Library, Registry};
 use super::worker::{alloc_group, handle_data_conn, worker_main, WorkerCmd, WorkerShared};
 
 /// Driver-side record of a live distributed matrix.
@@ -32,6 +47,119 @@ use super::worker::{alloc_group, handle_data_conn, worker_main, WorkerCmd, Worke
 struct HandleMeta {
     info: MatrixInfo,
     layout: RowBlockLayout,
+}
+
+/// One submitted task's immutable record. Mutable lifecycle state lives
+/// in the session's [`TaskTable`]; live per-rank progress is read through
+/// the `progress` slots while the task runs.
+struct TaskRecord {
+    id: u64,
+    lib: Arc<dyn Library>,
+    lib_name: String,
+    routine: String,
+    params: Params,
+    /// Task-wide cooperative cancel token (shared by every rank's scope).
+    cancel: Arc<CancelToken>,
+    /// One live progress slot per group-local rank.
+    progress: Vec<Arc<RankProgress>>,
+    submitted: Instant,
+}
+
+impl TaskRecord {
+    /// Aggregate the per-rank slots into the wire progress: `iters` is
+    /// the minimum any rank completed (the group frontier), `residual`
+    /// the worst residual reported so far.
+    fn aggregate_progress(&self) -> TaskProgress {
+        let iters = self.progress.iter().map(|p| p.iters()).min().unwrap_or(0);
+        let residual = self
+            .progress
+            .iter()
+            .map(|p| p.residual())
+            .filter(|r| *r >= 0.0)
+            .fold(crate::tasks::NO_RESIDUAL, f64::max);
+        TaskProgress { iters, residual, ranks: self.progress.len() as u32 }
+    }
+}
+
+/// Where one task id currently is in its lifecycle.
+enum TaskSlot {
+    Queued(Arc<TaskRecord>),
+    Running(Arc<TaskRecord>),
+    /// Done / Failed / Cancelled, ready for status/wait replies.
+    Terminal(TaskState),
+}
+
+/// Terminal task slots retained per session for late status/wait
+/// queries; beyond this the oldest are evicted (their ids then answer
+/// "unknown task"). Bounds a long-lived session's memory — a tenant
+/// polling thousands of solves must not grow the driver without limit.
+const TERMINAL_RETENTION: usize = 1024;
+
+/// Guarded task lifecycle state of one session.
+struct TaskTableState {
+    /// Pending task ids, FIFO (bounded by `scheduler.task_queue_depth`).
+    queue: VecDeque<u64>,
+    /// The task currently executing on the group, if any.
+    running: Option<Arc<TaskRecord>>,
+    /// Tasks by id: everything queued/running plus the retained terminal
+    /// window (see [`TERMINAL_RETENTION`]).
+    slots: HashMap<u64, TaskSlot>,
+    /// Terminal ids in completion order, oldest first (eviction order).
+    terminal_order: VecDeque<u64>,
+    /// Set at teardown: the dispatcher exits once the queue is drained.
+    closing: bool,
+}
+
+impl TaskTableState {
+    /// Record a terminal state, evicting the oldest retained terminal
+    /// slot once the retention cap is exceeded.
+    fn set_terminal(&mut self, id: u64, state: TaskState) {
+        let prev = self.slots.insert(id, TaskSlot::Terminal(state));
+        if matches!(prev, Some(TaskSlot::Terminal(_))) {
+            return; // already counted in terminal_order
+        }
+        self.terminal_order.push_back(id);
+        while self.terminal_order.len() > TERMINAL_RETENTION {
+            if let Some(old) = self.terminal_order.pop_front() {
+                self.slots.remove(&old);
+            }
+        }
+    }
+}
+
+/// Per-session task table: one dispatcher thread pops the queue and runs
+/// tasks one at a time over the session's group; the condvar wakes both
+/// the dispatcher (new work / teardown) and server-side `WaitTask`
+/// blockers (state transitions).
+struct TaskTable {
+    state: Mutex<TaskTableState>,
+    cond: Condvar,
+}
+
+impl TaskTable {
+    fn new() -> Self {
+        TaskTable {
+            state: Mutex::new(TaskTableState {
+                queue: VecDeque::new(),
+                running: None,
+                slots: HashMap::new(),
+                terminal_order: VecDeque::new(),
+                closing: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+}
+
+/// Wire state for one slot (aggregating live progress for running tasks).
+fn wire_state(slot: &TaskSlot) -> TaskState {
+    match slot {
+        TaskSlot::Queued(_) => TaskState::Queued,
+        TaskSlot::Running(rec) => {
+            TaskState::Running { progress: rec.aggregate_progress() }
+        }
+        TaskSlot::Terminal(state) => state.clone(),
+    }
 }
 
 /// One connected client and the worker group it holds exclusively.
@@ -46,6 +174,11 @@ struct Session {
     /// This session's matrix handles (namespaced: other sessions never
     /// see or free them).
     handles: Mutex<HashMap<u64, HandleMeta>>,
+    /// This session's asynchronous task lifecycle (protocol v4).
+    tasks: TaskTable,
+    /// The dispatcher thread draining `tasks`; joined at teardown so no
+    /// task can touch the store after the session's blocks are freed.
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
 }
 
 /// Admission state guarded by the allocator mutex.
@@ -67,10 +200,12 @@ struct GroupAllocator {
     scheduler: SchedulerConfig,
     state: Mutex<AllocState>,
     cond: Condvar,
+    /// Backpressure gauges (admission-queue depth).
+    metrics: Arc<SchedMetrics>,
 }
 
 impl GroupAllocator {
-    fn new(total: usize, scheduler: SchedulerConfig) -> Self {
+    fn new(total: usize, scheduler: SchedulerConfig, metrics: Arc<SchedMetrics>) -> Self {
         GroupAllocator {
             total,
             scheduler,
@@ -81,6 +216,7 @@ impl GroupAllocator {
                 stopping: false,
             }),
             cond: Condvar::new(),
+            metrics,
         }
     }
 
@@ -109,9 +245,11 @@ impl GroupAllocator {
         let deadline = Instant::now() + timeout;
         let mut st = self.state.lock().unwrap();
         st.queue.push_back(ticket);
+        self.metrics.admission_enqueued();
         loop {
             if st.stopping {
                 st.queue.retain(|&t| t != ticket);
+                self.metrics.admission_dequeued();
                 anyhow::bail!("server is stopping");
             }
             if st.queue.front() == Some(&ticket)
@@ -119,6 +257,7 @@ impl GroupAllocator {
                 && st.free.len() >= want
             {
                 st.queue.pop_front();
+                self.metrics.admission_dequeued();
                 let ranks: Vec<usize> = st.free.drain(..want).collect();
                 st.active += 1;
                 // the next queued request may fit in what remains
@@ -129,6 +268,7 @@ impl GroupAllocator {
             if now >= deadline {
                 let (free, active) = (st.free.len(), st.active);
                 st.queue.retain(|&t| t != ticket);
+                self.metrics.admission_dequeued();
                 // our departure may unblock the request queued behind us
                 self.cond.notify_all();
                 anyhow::bail!(
@@ -167,21 +307,66 @@ struct Driver {
     allocator: GroupAllocator,
     next_id: AtomicU64,
     next_session: AtomicU64,
+    next_task: AtomicU64,
     sessions: Mutex<HashMap<u64, Arc<Session>>>,
     stopping: AtomicBool,
     /// Stop flags of every accept loop (control + per-worker data).
     listener_stops: Mutex<Vec<Arc<AtomicBool>>>,
     control_addr: Mutex<String>,
+    /// Scheduler backpressure metrics (shared with the allocator).
+    metrics: Arc<SchedMetrics>,
 }
 
 impl Driver {
-    /// Flip every stop flag, end the worker loops, fail queued
-    /// handshakes, and wake all accept loops so their threads can exit.
+    /// Close a session's task table: mark it closing (the dispatcher
+    /// exits once idle, and further submissions are rejected), cancel
+    /// queued tasks without running them, and set the running task's
+    /// cooperative token. Idempotent.
+    fn drain_tasks(&self, session: &Session) {
+        let mut st = session.tasks.state.lock().unwrap();
+        st.closing = true;
+        let drained: Vec<u64> = st.queue.drain(..).collect();
+        for id in drained {
+            if st.slots.contains_key(&id) {
+                st.set_terminal(id, TaskState::Cancelled);
+                self.metrics.task_dequeued(TaskOutcome::Cancelled);
+            }
+        }
+        if let Some(rec) = &st.running {
+            rec.cancel.cancel();
+        }
+        session.tasks.cond.notify_all();
+    }
+
+    /// Flip every stop flag, cancel every session's in-flight tasks (a
+    /// long-running routine must not be able to stall shutdown — the
+    /// worker threads can only exit after it returns), end the worker
+    /// loops, fail queued handshakes, and wake all accept loops so their
+    /// threads can exit.
     fn stop_all(&self) {
         if self.stopping.swap(true, Ordering::SeqCst) {
             return;
         }
         self.allocator.stop();
+        let sessions: Vec<Arc<Session>> =
+            self.sessions.lock().unwrap().values().cloned().collect();
+        for session in &sessions {
+            self.drain_tasks(session);
+        }
+        // quiesce every dispatcher BEFORE ending the worker loops: a
+        // Shutdown command racing a dispatcher's per-rank RunTask sends
+        // could otherwise interleave per-channel (rank 0 gets RunTask
+        // first, rank 1 gets Shutdown first), stranding a live rank
+        // inside a group collective whose peer already exited — hanging
+        // the worker thread and the shutdown join forever. The joins are
+        // quick: tokens are set, so cooperative routines bail within one
+        // iteration, and the workers are still alive to answer.
+        for session in &sessions {
+            let handle = session.dispatcher.lock().unwrap().take();
+            if let Some(handle) = handle {
+                let _ = handle.join();
+            }
+        }
         for s in &self.senders {
             let _ = s.send(WorkerCmd::Shutdown);
         }
@@ -220,7 +405,7 @@ impl Driver {
     /// by server-side limits), build the group's communicator, and bind
     /// each member worker to it.
     fn open_session(
-        &self,
+        self: &Arc<Self>,
         client_name: &str,
         requested: u32,
         rows_per_frame: u32,
@@ -242,8 +427,41 @@ impl Driver {
             ranks: ranks.clone(),
             transfer: self.cfg.transfer.negotiate(rows_per_frame, buf_bytes),
             handles: Mutex::new(HashMap::new()),
+            tasks: TaskTable::new(),
+            dispatcher: Mutex::new(None),
         });
-        self.sessions.lock().unwrap().insert(id, session.clone());
+        // the session's task dispatcher: pops the FIFO and runs tasks one
+        // at a time over this group; exits when teardown sets `closing`
+        {
+            let driver = self.clone();
+            let session = session.clone();
+            let handle = std::thread::spawn(move || {
+                task_dispatcher(&driver, &session);
+            });
+            *session.dispatcher.lock().unwrap() = Some(handle);
+        }
+        // publish-or-bail atomically against stop_all: its shutdown
+        // sequence drains and joins the sessions it snapshots under this
+        // lock, so a session inserted here is either in that snapshot or
+        // observes `stopping` (set before the snapshot) and undoes itself
+        // — never a live dispatcher the shutdown path doesn't know about
+        {
+            let mut sessions = self.sessions.lock().unwrap();
+            if self.stopping.load(Ordering::SeqCst) {
+                drop(sessions);
+                self.drain_tasks(&session);
+                let handle = session.dispatcher.lock().unwrap().take();
+                if let Some(handle) = handle {
+                    let _ = handle.join();
+                }
+                for &rank in &session.ranks {
+                    self.workers[rank].sessions.lock().unwrap().remove(&id);
+                }
+                self.allocator.release(&session.ranks);
+                anyhow::bail!("server is stopping");
+            }
+            sessions.insert(id, session.clone());
+        }
         log::info!(
             "session {id}: client {client_name:?} granted {want} workers \
              (ranks {ranks:?}, {} rows/frame, {} buf bytes)",
@@ -253,11 +471,21 @@ impl Driver {
         Ok(session)
     }
 
-    /// Tear a session down: unbind its communicator endpoints, free its
-    /// matrices on every member worker, and return the ranks to the pool.
+    /// Tear a session down: cancel queued and running tasks, join the
+    /// dispatcher (so no task inserts store blocks after we free them),
+    /// unbind communicator endpoints, free the session's matrices on
+    /// every member worker, and return the ranks to the pool.
     fn close_session(&self, session: &Session) {
         if self.sessions.lock().unwrap().remove(&session.id).is_none() {
             return; // already closed
+        }
+        // drain the task table: queued tasks become Cancelled without
+        // running; the running task's token is cancelled and the
+        // dispatcher finalizes it as usual
+        self.drain_tasks(session);
+        let dispatcher = session.dispatcher.lock().unwrap().take();
+        if let Some(handle) = dispatcher {
+            let _ = handle.join();
         }
         let mut freed = 0;
         for &rank in &session.ranks {
@@ -320,90 +548,272 @@ impl Driver {
             .ok_or_else(|| anyhow::anyhow!("unknown matrix handle {id}"))
     }
 
-    fn run_task(
+    /// Enqueue a task on the session's FIFO (protocol v4 `SubmitTask`).
+    /// Rejects cleanly when the queue is at `scheduler.task_queue_depth`.
+    fn submit_task(
         &self,
         session: &Session,
         lib_name: &str,
         routine: &str,
-        params: &Params,
+        params: Params,
     ) -> crate::Result<ControlMsg> {
         let lib = self.registry.get(lib_name)?;
-        // reserve an id window for the routine's outputs
-        let out_base = self.next_id.fetch_add(64, Ordering::SeqCst);
-
-        // dispatch to this session's group only; disjoint groups use
-        // disjoint worker threads, so no global serialization here
-        let mut replies = Vec::new();
-        for &rank in &session.ranks {
-            let (tx, rx) = mpsc::channel();
-            self.senders[rank]
-                .send(WorkerCmd::RunTask {
-                    session_id: session.id,
-                    lib: lib.clone(),
-                    routine: routine.to_string(),
-                    params: params.clone(),
-                    out_base,
-                    reply: tx,
-                })
-                .map_err(|_| anyhow::anyhow!("worker thread is gone"))?;
-            replies.push(rx);
-        }
-        let results: Vec<super::worker::TaskReply> = {
-            let mut ok = Vec::new();
-            let mut first_err = None;
-            for rx in replies {
-                match rx.recv().map_err(|_| anyhow::anyhow!("worker died mid-task"))? {
-                    Ok(r) => ok.push(r),
-                    Err(e) => first_err = first_err.or(Some(e)),
-                }
-            }
-            if let Some(e) = first_err {
-                return Err(e);
-            }
-            ok
-        };
-
-        // consistency: every rank must report the same output set
-        let r0 = &results[0];
-        for r in &results[1..] {
-            anyhow::ensure!(
-                r.outputs.len() == r0.outputs.len(),
-                "ranks disagree on output count for {lib_name}.{routine}"
+        let depth = self.cfg.scheduler.task_queue_depth.max(1);
+        let mut st = session.tasks.state.lock().unwrap();
+        // admission checks before any allocation: a client hammering a
+        // full queue (the backpressure case) must not make the server
+        // clone params or burn task ids per rejected request
+        anyhow::ensure!(!st.closing, "session is closing");
+        if st.queue.len() >= depth {
+            self.metrics.task_rejected();
+            anyhow::bail!(
+                "task queue full: {depth} tasks already queued \
+                 (scheduler.task_queue_depth)"
             );
         }
-        let mut outputs = Vec::new();
-        {
-            let mut handles = session.handles.lock().unwrap();
-            for meta in &r0.outputs {
-                let layout =
-                    self.workers[session.ranks[0]].store.get(meta.id)?.layout.clone();
-                let info = MatrixInfo {
-                    id: meta.id,
-                    rows: meta.rows,
-                    cols: meta.cols,
-                    name: meta.name.clone(),
-                };
-                handles.insert(meta.id, HandleMeta { info: info.clone(), layout });
-                outputs.push(info);
+        let task_id = self.next_task.fetch_add(1, Ordering::SeqCst);
+        let rec = Arc::new(TaskRecord {
+            id: task_id,
+            lib,
+            lib_name: lib_name.to_string(),
+            routine: routine.to_string(),
+            params,
+            cancel: Arc::new(CancelToken::new()),
+            progress: session
+                .ranks
+                .iter()
+                .map(|_| Arc::new(RankProgress::new()))
+                .collect(),
+            submitted: Instant::now(),
+        });
+        st.queue.push_back(task_id);
+        st.slots.insert(task_id, TaskSlot::Queued(rec));
+        self.metrics.task_submitted();
+        session.tasks.cond.notify_all();
+        Ok(ControlMsg::TaskSubmitted { task_id })
+    }
+
+    /// Current state of a task (never blocks; running tasks aggregate
+    /// live per-rank progress).
+    fn task_status(&self, session: &Session, task_id: u64) -> crate::Result<ControlMsg> {
+        let st = session.tasks.state.lock().unwrap();
+        let slot = st
+            .slots
+            .get(&task_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown task {task_id}"))?;
+        Ok(ControlMsg::TaskStatusReply { task_id, state: wire_state(slot) })
+    }
+
+    /// Request cooperative cancellation. Queued tasks become `Cancelled`
+    /// immediately; a running task's token is set and the reply shows the
+    /// state *after* the request (still `Running` until its ranks observe
+    /// the token — poll or `WaitTask` for the terminal state). Terminal
+    /// tasks are left untouched (idempotent).
+    fn cancel_task(&self, session: &Session, task_id: u64) -> crate::Result<ControlMsg> {
+        let mut st = session.tasks.state.lock().unwrap();
+        enum Act {
+            CancelQueued,
+            CancelRunning(Arc<CancelToken>),
+            Nothing,
+        }
+        let act = match st.slots.get(&task_id) {
+            None => anyhow::bail!("unknown task {task_id}"),
+            Some(TaskSlot::Queued(_)) => Act::CancelQueued,
+            Some(TaskSlot::Running(rec)) => Act::CancelRunning(rec.cancel.clone()),
+            Some(TaskSlot::Terminal(_)) => Act::Nothing,
+        };
+        match act {
+            Act::CancelQueued => {
+                st.set_terminal(task_id, TaskState::Cancelled);
+                st.queue.retain(|&id| id != task_id);
+                self.metrics.task_dequeued(TaskOutcome::Cancelled);
+                session.tasks.cond.notify_all();
+            }
+            Act::CancelRunning(token) => token.cancel(),
+            Act::Nothing => {}
+        }
+        let state = wire_state(st.slots.get(&task_id).expect("slot exists"));
+        Ok(ControlMsg::TaskStatusReply { task_id, state })
+    }
+
+    /// Block until the task is terminal or `timeout_ms` elapses (0 =
+    /// return the current state immediately). The caller's control thread
+    /// is the only thing blocked — other sessions, and this session's
+    /// dispatcher, keep running.
+    fn wait_task(
+        &self,
+        session: &Session,
+        task_id: u64,
+        timeout_ms: u64,
+    ) -> crate::Result<ControlMsg> {
+        // clamp to 24h per call: an adversarial u64::MAX must not overflow
+        // the deadline arithmetic (clients just re-issue WaitTask)
+        let timeout_ms = timeout_ms.min(24 * 60 * 60 * 1000);
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+        let mut st = session.tasks.state.lock().unwrap();
+        loop {
+            let slot = st
+                .slots
+                .get(&task_id)
+                .ok_or_else(|| anyhow::anyhow!("unknown task {task_id}"))?;
+            let state = wire_state(slot);
+            if state.is_terminal() {
+                return Ok(ControlMsg::TaskStatusReply { task_id, state });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(ControlMsg::TaskStatusReply { task_id, state });
+            }
+            let (guard, _) = session
+                .tasks
+                .cond
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Run one task over the session's group (dispatcher context): SPMD
+    /// dispatch to every member worker thread, gather per-rank replies,
+    /// and produce the terminal state. Failed and cancelled tasks free
+    /// any partially-inserted output blocks so nothing leaks.
+    fn execute_task(&self, session: &Session, rec: &TaskRecord) -> TaskState {
+        // task-scoped output-id reservation, validated by each worker
+        // before it inserts anything (see WorkerCmd::out_span)
+        let out_span = self.cfg.scheduler.max_task_outputs.max(1);
+        let out_base = self.next_id.fetch_add(out_span, Ordering::SeqCst);
+
+        // dispatch to this session's group only; disjoint groups use
+        // disjoint worker threads, so no global serialization here. A
+        // failed send means that rank's worker thread is dead — stop
+        // dispatching immediately: every further rank we started would
+        // enter the routine's collectives and block forever waiting for
+        // the dead rank (when the FIRST send fails, e.g. after server
+        // stop closed every worker channel, the task fails cleanly with
+        // no rank dispatched at all).
+        let mut replies = Vec::new();
+        let mut dispatch_dead = false;
+        for (slot, &rank) in session.ranks.iter().enumerate() {
+            if dispatch_dead {
+                replies.push((slot, None));
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            let sent = self.senders[rank].send(WorkerCmd::RunTask {
+                session_id: session.id,
+                lib: rec.lib.clone(),
+                routine: rec.routine.clone(),
+                params: rec.params.clone(),
+                out_base,
+                out_span,
+                scope: TaskScope::new(rec.cancel.clone(), rec.progress[slot].clone()),
+                reply: tx,
+            });
+            dispatch_dead = sent.is_err();
+            replies.push((slot, sent.is_ok().then_some(rx)));
+        }
+        let mut results = Vec::new();
+        let mut failures: Vec<(u32, anyhow::Error)> = Vec::new();
+        for (slot, rx) in replies {
+            let reply = match rx {
+                None => Err(anyhow::anyhow!("worker thread is gone")),
+                Some(rx) => rx
+                    .recv()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("worker died mid-task"))),
+            };
+            match reply {
+                Ok(r) => results.push(r),
+                Err(e) => failures.push((slot as u32, e)),
             }
         }
 
-        // timings: group-rank-0 laps + aggregated cluster metrics
-        let mut timings = r0.timings.clone();
-        let lap = |r: &super::worker::TaskReply, name: &str| -> f64 {
-            r.timings
-                .iter()
-                .find(|(n, _)| n == name)
-                .map(|(_, s)| *s)
-                .unwrap_or(0.0)
+        // cancel wins races: even if every rank completed, a set token
+        // means the client asked for cancellation — report Cancelled and
+        // discard (free) any outputs rather than registering them
+        let free_window = || {
+            for id in out_base..out_base + out_span {
+                for &rank in &session.ranks {
+                    self.workers[rank].store.free(id);
+                }
+            }
         };
-        let sim_secs = results
-            .iter()
-            .map(|r| lap(r, "cpu_busy") + lap(r, "comm_sim"))
-            .fold(0.0f64, f64::max);
-        timings.push(("sim_secs".into(), sim_secs));
+        if rec.cancel.is_cancelled() {
+            free_window();
+            return TaskState::Cancelled;
+        }
+        if !failures.is_empty() {
+            let total = session.ranks.len();
+            let (first_rank, first_err) = &failures[0];
+            let message = format!(
+                "{} of {total} ranks failed; rank {first_rank}: {first_err:#}",
+                failures.len()
+            );
+            free_window();
+            return TaskState::Failed {
+                message,
+                failed_ranks: failures.iter().map(|(r, _)| *r).collect(),
+                total_ranks: total as u32,
+            };
+        }
 
-        Ok(ControlMsg::TaskDone { outputs, scalars: r0.scalars.clone(), timings })
+        let done = (|| -> crate::Result<TaskState> {
+            // consistency: every rank must report the same output set
+            let r0 = &results[0];
+            for r in &results[1..] {
+                anyhow::ensure!(
+                    r.outputs.len() == r0.outputs.len(),
+                    "ranks disagree on output count for {}.{}",
+                    rec.lib_name,
+                    rec.routine
+                );
+            }
+            let mut outputs = Vec::new();
+            {
+                let mut handles = session.handles.lock().unwrap();
+                for meta in &r0.outputs {
+                    let layout = self.workers[session.ranks[0]]
+                        .store
+                        .get(meta.id)?
+                        .layout
+                        .clone();
+                    let info = MatrixInfo {
+                        id: meta.id,
+                        rows: meta.rows,
+                        cols: meta.cols,
+                        name: meta.name.clone(),
+                    };
+                    handles.insert(meta.id, HandleMeta { info: info.clone(), layout });
+                    outputs.push(info);
+                }
+            }
+
+            // timings: group-rank-0 laps + aggregated cluster metrics
+            let mut timings = r0.timings.clone();
+            let lap = |r: &super::worker::TaskReply, name: &str| -> f64 {
+                r.timings
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, s)| *s)
+                    .unwrap_or(0.0)
+            };
+            let sim_secs = results
+                .iter()
+                .map(|r| lap(r, "cpu_busy") + lap(r, "comm_sim"))
+                .fold(0.0f64, f64::max);
+            timings.push(("sim_secs".into(), sim_secs));
+            Ok(TaskState::Done { outputs, scalars: r0.scalars.clone(), timings })
+        })();
+        match done {
+            Ok(state) => state,
+            Err(e) => {
+                free_window();
+                TaskState::Failed {
+                    message: format!("{e:#}"),
+                    failed_ranks: vec![],
+                    total_ranks: session.ranks.len() as u32,
+                }
+            }
+        }
     }
 
     fn fetch_matrix(&self, session: &Session, id: u64) -> crate::Result<ControlMsg> {
@@ -429,6 +839,67 @@ impl Driver {
             handles.values().map(|m| m.info.clone()).collect();
         infos.sort_by_key(|i| i.id);
         ControlMsg::MatrixList { infos }
+    }
+}
+
+/// One session's task dispatcher loop: pop the FIFO, mark Running,
+/// execute over the group, finalize, repeat — until teardown sets
+/// `closing` and the queue is drained (close_session empties the queue
+/// itself, so "drained" is immediate at teardown).
+fn task_dispatcher(driver: &Arc<Driver>, session: &Arc<Session>) {
+    loop {
+        // claim the next task (or exit on teardown)
+        let rec = {
+            let mut st = session.tasks.state.lock().unwrap();
+            loop {
+                if let Some(id) = st.queue.pop_front() {
+                    let rec = match st.slots.get(&id) {
+                        Some(TaskSlot::Queued(rec)) => rec.clone(),
+                        // cancelled-while-queued slots are already
+                        // Terminal; their id was removed from the queue,
+                        // but guard anyway
+                        _ => continue,
+                    };
+                    st.slots.insert(id, TaskSlot::Running(rec.clone()));
+                    st.running = Some(rec.clone());
+                    // gauge moves before anyone can observe Running (a
+                    // status poll after the lock drops must see the
+                    // queued→running transition in the metrics too)
+                    driver.metrics.task_started(rec.submitted.elapsed().as_secs_f64());
+                    session.tasks.cond.notify_all();
+                    break rec;
+                }
+                if st.closing {
+                    return;
+                }
+                st = session.tasks.cond.wait(st).unwrap();
+            }
+        };
+        let wait_secs = rec.submitted.elapsed().as_secs_f64();
+        log::debug!(
+            "session {}: task {} ({}.{}) dispatched after {wait_secs:.3}s queued",
+            session.id,
+            rec.id,
+            rec.lib_name,
+            rec.routine
+        );
+
+        let state = driver.execute_task(session, &rec);
+        let outcome = match &state {
+            TaskState::Done { .. } => TaskOutcome::Done,
+            TaskState::Cancelled => TaskOutcome::Cancelled,
+            _ => TaskOutcome::Failed,
+        };
+        {
+            let mut st = session.tasks.state.lock().unwrap();
+            st.set_terminal(rec.id, state);
+            st.running = None;
+            // count the outcome BEFORE waking waiters: a client whose
+            // wait() just returned may read sched_metrics() immediately
+            // and must see this task as finished, not still running
+            driver.metrics.task_finished(outcome);
+            session.tasks.cond.notify_all();
+        }
     }
 }
 
@@ -470,6 +941,32 @@ impl ServerHandle {
     /// introspection: teardown must drive a session's share to zero).
     pub fn total_blocks(&self) -> usize {
         self.driver.workers.iter().map(|w| w.store.len()).sum()
+    }
+
+    /// Scheduler backpressure snapshot: admission-queue depth, task-queue
+    /// gauges, outcome counters, Queued→Running wait-time distribution.
+    pub fn sched_metrics(&self) -> SchedSnapshot {
+        self.driver.metrics.snapshot()
+    }
+
+    /// Per-session task backlog (which tenant the global `queued_tasks`
+    /// gauge belongs to), sorted by session id.
+    pub fn session_queue_depths(&self) -> Vec<crate::metrics::SessionQueueDepth> {
+        let sessions: Vec<Arc<Session>> =
+            self.driver.sessions.lock().unwrap().values().cloned().collect();
+        let mut depths: Vec<crate::metrics::SessionQueueDepth> = sessions
+            .iter()
+            .map(|s| {
+                let st = s.tasks.state.lock().unwrap();
+                crate::metrics::SessionQueueDepth {
+                    session_id: s.id,
+                    queued: st.queue.len(),
+                    running: st.running.is_some(),
+                }
+            })
+            .collect();
+        depths.sort_by_key(|d| d.session_id);
+        depths
     }
 }
 
@@ -528,18 +1025,25 @@ impl AlchemistServer {
         let control = Server::bind(0)?;
         let control_addr = control.addr().to_string();
         listener_stops.push(control.stop_flag());
+        let metrics = Arc::new(SchedMetrics::new());
         let driver = Arc::new(Driver {
-            allocator: GroupAllocator::new(num_workers, cfg.scheduler.clone()),
+            allocator: GroupAllocator::new(
+                num_workers,
+                cfg.scheduler.clone(),
+                metrics.clone(),
+            ),
             cfg: cfg.clone(),
             workers,
             senders,
             registry: Registry::new(),
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
+            next_task: AtomicU64::new(1),
             sessions: Mutex::new(HashMap::new()),
             stopping: AtomicBool::new(false),
             listener_stops: Mutex::new(listener_stops),
             control_addr: Mutex::new(control_addr.clone()),
+            metrics,
         });
 
         {
@@ -580,8 +1084,13 @@ fn handle_session_op(
             driver.create_matrix(session, &name, rows, cols)
         }
         ControlMsg::SealMatrix { id } => driver.seal_matrix(session, id),
-        ControlMsg::RunTask { lib, routine, params } => {
-            driver.run_task(session, &lib, &routine, &params)
+        ControlMsg::SubmitTask { lib, routine, params } => {
+            driver.submit_task(session, &lib, &routine, params)
+        }
+        ControlMsg::TaskStatus { task_id } => driver.task_status(session, task_id),
+        ControlMsg::CancelTask { task_id } => driver.cancel_task(session, task_id),
+        ControlMsg::WaitTask { task_id, timeout_ms } => {
+            driver.wait_task(session, task_id, timeout_ms)
         }
         ControlMsg::FetchMatrix { id } => driver.fetch_matrix(session, id),
         ControlMsg::FreeMatrix { id } => driver.free_matrix(session, id),

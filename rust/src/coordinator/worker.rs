@@ -80,6 +80,12 @@ pub enum WorkerCmd {
         params: Params,
         /// Output matrix `i` is stored under id `out_base + i`.
         out_base: u64,
+        /// Ids reserved for outputs: a routine returning more than
+        /// `out_span` matrices fails *before* inserting anything (it
+        /// would collide with ids handed out after the reservation).
+        out_span: u64,
+        /// Cooperative cancel token + this rank's progress slot.
+        scope: crate::tasks::TaskScope,
         reply: mpsc::Sender<crate::Result<TaskReply>>,
     },
     Shutdown,
@@ -92,8 +98,26 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
     while let Ok(cmd) = rx.recv() {
         match cmd {
             WorkerCmd::Shutdown => break,
-            WorkerCmd::RunTask { session_id, lib, routine, params, out_base, reply } => {
-                let result = (|| -> crate::Result<TaskReply> {
+            WorkerCmd::RunTask {
+                session_id,
+                lib,
+                routine,
+                params,
+                out_base,
+                out_span,
+                scope,
+                reply,
+            } => {
+                // a panicking routine must not kill this worker thread: a
+                // dead rank never answers its reply channel and (worse)
+                // never reaches its collectives, wedging live peers. SPMD
+                // panics are usually uniform (same code, same shapes), so
+                // catching them turns the common case into a clean
+                // per-rank Failed reply; a rank that panics *between*
+                // peers' collectives can still strand them — see the
+                // fault-isolation follow-up in docs/tasks.md.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> crate::Result<TaskReply> {
                     let comm = shared
                         .sessions
                         .lock()
@@ -118,11 +142,22 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                         engine: engine.as_mut(),
                         store: &shared.store,
                         config: &cfg,
+                        scope: &scope,
                     };
                     let out = lib.run(&routine, &params, &mut ctx)?;
                     let cpu_busy = (thread_cpu_secs() - cpu0).max(0.0);
                     let comm_sim = comm.sim_comm_secs() - sim0;
 
+                    // the reservation is a hard cap: exceeding it would
+                    // silently collide with matrix ids allocated after
+                    // this task's window — fail before inserting anything
+                    anyhow::ensure!(
+                        out.matrices.len() as u64 <= out_span,
+                        "routine {routine} produced {} outputs, exceeding the \
+                         task's reservation of {out_span} ids \
+                         (scheduler.max_task_outputs)",
+                        out.matrices.len()
+                    );
                     let mut metas = Vec::with_capacity(out.matrices.len());
                     for (i, m) in out.matrices.into_iter().enumerate() {
                         let id = out_base + i as u64;
@@ -140,11 +175,22 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                     timings.push(("cpu_busy".into(), cpu_busy));
                     timings.push(("comm_sim".into(), comm_sim));
                     Ok(TaskReply { outputs: metas, scalars: out.scalars, timings })
-                })();
+                }))
+                .unwrap_or_else(|panic| {
+                    let what = panic
+                        .downcast_ref::<&str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| panic.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".into());
+                    Err(anyhow::anyhow!("routine {routine} panicked: {what}"))
+                });
                 let failed = result.is_err();
+                let cancelled = scope.is_cancelled();
                 let _ = reply.send(result);
-                if failed {
+                if failed && !cancelled {
                     log::warn!("rank {rank}: task {routine} failed");
+                } else if failed {
+                    log::debug!("rank {rank}: task {routine} cancelled");
                 }
             }
         }

@@ -32,6 +32,18 @@
 //! touching the others. See [`config::SchedulerConfig`] for the policy
 //! knobs and `tests/it_sessions.rs` for the observable guarantees.
 //!
+//! ## Asynchronous tasks (protocol v4)
+//!
+//! Task execution is non-blocking: [`client::AlchemistContext::submit`]
+//! returns a [`client::TaskHandle`] with `status()` / `wait()` /
+//! `cancel()`; server-side each session owns a bounded FIFO task queue
+//! and a dispatcher thread, iterative routines observe a cooperative
+//! cancel token and report per-iteration progress through a
+//! [`tasks::TaskScope`], and the classic blocking `run_task` survives as
+//! submit + wait. `docs/tasks.md` documents the state machine, the wire
+//! messages, and the cancellation contract routine authors must follow;
+//! `tests/it_tasks.rs` pins the lifecycle edges.
+//!
 //! See `DESIGN.md` for the substitution table (what the paper ran on Cori
 //! vs. what this repo builds) and the experiment index mapping Tables 1–5
 //! and Figure 3 to `rust/benches/`.
@@ -63,6 +75,7 @@ pub mod net;
 pub mod protocol;
 pub mod runtime;
 pub mod sparklite;
+pub mod tasks;
 pub mod testkit;
 pub mod util;
 pub mod workloads;

@@ -14,6 +14,7 @@
 use crate::collectives::{allreduce_sum, Communicator};
 use crate::compute::Engine;
 use crate::distmat::LocalMatrix;
+use crate::tasks::TaskScope;
 
 #[derive(Debug, Clone)]
 pub struct CgOptions {
@@ -45,7 +46,8 @@ pub struct CgResult {
 const TAG: u64 = 0x4347_0000;
 
 /// SPMD block-CG. `x_local`/`y_local` are this rank's rows of X and Y;
-/// `n_global` is the total row count (for the nλ scaling).
+/// `n_global` is the total row count (for the nλ scaling). Runs under a
+/// detached [`TaskScope`] — never cancelled, progress unobserved.
 pub fn cg_solve(
     comm: &dyn Communicator,
     engine: &mut dyn Engine,
@@ -53,6 +55,24 @@ pub fn cg_solve(
     y_local: &LocalMatrix,
     n_global: usize,
     opts: &CgOptions,
+) -> crate::Result<CgResult> {
+    cg_solve_scoped(comm, engine, x_local, y_local, n_global, opts, &TaskScope::detached())
+}
+
+/// [`cg_solve`] under an explicit [`TaskScope`]: each iteration reports
+/// `(iteration, max relative residual)` and the ranks *collectively*
+/// decide cancellation — the locally-observed token is allreduced at the
+/// iteration boundary so either every rank bails together or none does
+/// (a unilateral bail would strand peers inside the Gram allreduce).
+/// Cancellation is observed within one iteration.
+pub fn cg_solve_scoped(
+    comm: &dyn Communicator,
+    engine: &mut dyn Engine,
+    x_local: &LocalMatrix,
+    y_local: &LocalMatrix,
+    n_global: usize,
+    opts: &CgOptions,
+    scope: &TaskScope,
 ) -> crate::Result<CgResult> {
     let d = x_local.cols();
     let c = y_local.cols();
@@ -88,6 +108,12 @@ pub fn cg_solve(
     for it in 0..opts.max_iters {
         let t0 = std::time::Instant::now();
 
+        // collective cancellation check at the iteration boundary (the
+        // Gram allreduce below keeps ranks in lockstep, so all reach
+        // this together and agree); free for detached scopes, so plain
+        // `cg_solve` callers pay no extra collective per iteration
+        scope.collective_check_cancelled(comm, TAG + 8 + (it % 64) as u64 * 256)?;
+
         // q = (XᵀX + nλI)·p — the hot path
         let mut q = engine.gram_matvec_keyed(x_key, x_local, &p, reg_local)?;
         allreduce_sum(comm, TAG + 16 + (it % 64) as u64 * 256, q.data_mut());
@@ -110,6 +136,7 @@ pub fn cg_solve(
         residuals.push(rel);
         iter_secs.push(t0.elapsed().as_secs_f64());
         iters = it + 1;
+        scope.report(iters as u64, rel);
 
         if rel < opts.tol {
             break;
@@ -221,6 +248,61 @@ mod tests {
     fn matches_dense_solve_multi_rank() {
         run_cg_on(3, 46, 10, 4, 1e-3);
         run_cg_on(4, 32, 8, 1, 1e-2);
+    }
+
+    #[test]
+    fn cancel_is_observed_within_an_iteration_and_progress_reported() {
+        use crate::tasks::{CancelToken, RankProgress, TaskScope, CANCELLED_MSG};
+        use std::sync::Arc;
+
+        // a solve that cannot converge (tol = 0) with a huge iteration
+        // budget: only cancellation ends it
+        let workers = 2usize;
+        let n = 32;
+        let mut rng = Rng::new(9);
+        let x = LocalMatrix::from_fn(n, 8, |_, _| rng.normal());
+        let y = LocalMatrix::from_fn(n, 2, |_, _| rng.normal());
+        let layout = RowBlockLayout::even(n, 8, workers);
+        let comms = LocalComm::group(workers, None);
+
+        let token = Arc::new(CancelToken::new());
+        let slots: Vec<Arc<RankProgress>> =
+            (0..workers).map(|_| Arc::new(RankProgress::new())).collect();
+        let mut handles = Vec::new();
+        for comm in comms {
+            let rank = comm.rank();
+            let (a, b) = layout.ranges[rank];
+            let xl = x.slice_rows(a, b);
+            let yl = y.slice_rows(a, b);
+            let scope = TaskScope::new(token.clone(), slots[rank].clone());
+            handles.push(std::thread::spawn(move || {
+                let mut engine = NativeEngine::new();
+                cg_solve_scoped(
+                    &comm,
+                    &mut engine,
+                    &xl,
+                    &yl,
+                    n,
+                    &CgOptions { lambda: 1e-3, tol: 0.0, max_iters: 50_000_000 },
+                    &scope,
+                )
+            }));
+        }
+        // let some iterations happen, then pull the plug
+        while slots.iter().any(|s| s.iters() < 3) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        token.cancel();
+        for h in handles {
+            let err = h.join().unwrap().unwrap_err();
+            // every rank bailed with the cancellation marker (nobody hung
+            // in a collective waiting for a departed peer)
+            assert!(err.to_string().contains(CANCELLED_MSG), "{err}");
+        }
+        for s in &slots {
+            assert!(s.iters() >= 3, "progress was reported before cancel");
+            assert!(s.residual() >= 0.0, "residual was reported");
+        }
     }
 
     #[test]

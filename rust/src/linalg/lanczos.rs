@@ -12,6 +12,7 @@
 use crate::collectives::{allreduce_sum, Communicator};
 use crate::compute::Engine;
 use crate::distmat::LocalMatrix;
+use crate::tasks::TaskScope;
 use crate::util::prng::Rng;
 
 #[derive(Debug, Clone)]
@@ -45,12 +46,28 @@ pub struct SvdResult {
 const TAG: u64 = 0x5644_0000;
 
 /// SPMD truncated SVD of the row-distributed matrix whose local block is
-/// `a_local` (all ranks must pass the same `opts`).
+/// `a_local` (all ranks must pass the same `opts`). Runs under a detached
+/// [`TaskScope`] — never cancelled, progress unobserved.
 pub fn truncated_svd(
     comm: &dyn Communicator,
     engine: &mut dyn Engine,
     a_local: &LocalMatrix,
     opts: &SvdOptions,
+) -> crate::Result<SvdResult> {
+    truncated_svd_scoped(comm, engine, a_local, opts, &TaskScope::detached())
+}
+
+/// [`truncated_svd`] under an explicit [`TaskScope`]: each Lanczos step
+/// reports `(step, β_j)` (the off-diagonal norm stands in for a residual)
+/// and cancellation is decided *collectively* at the step boundary — the
+/// locally-observed token is allreduced so every rank bails together (see
+/// `linalg::cg` for why a unilateral bail would deadlock the group).
+pub fn truncated_svd_scoped(
+    comm: &dyn Communicator,
+    engine: &mut dyn Engine,
+    a_local: &LocalMatrix,
+    opts: &SvdOptions,
+    scope: &TaskScope,
 ) -> crate::Result<SvdResult> {
     let k_dim = a_local.cols();
     anyhow::ensure!(opts.rank >= 1, "rank must be >= 1");
@@ -81,6 +98,11 @@ pub fn truncated_svd(
     let a_key = crate::compute::fresh_operand_key();
 
     for j in 0..m {
+        // collective cancellation check at the step boundary (steps are
+        // synchronized by the Gram allreduce below, so all ranks reach
+        // this together and agree); free for detached scopes
+        scope.collective_check_cancelled(comm, TAG + 8 + (j as u64 % 64) * 256)?;
+
         let vj = basis[j].clone();
         // w = G·vj (matrix-free, reg = 0)
         let vj_mat = LocalMatrix::from_data(k_dim, 1, vj.clone());
@@ -103,6 +125,7 @@ pub fn truncated_svd(
             }
         }
         let beta = norm(&w);
+        scope.report((j + 1) as u64, beta);
         if j + 1 == m {
             break;
         }

@@ -16,7 +16,7 @@ pub mod qr;
 pub mod rff;
 pub mod tridiag;
 
-pub use cg::{cg_solve, CgOptions, CgResult};
-pub use lanczos::{truncated_svd, SvdOptions, SvdResult};
+pub use cg::{cg_solve, cg_solve_scoped, CgOptions, CgResult};
+pub use lanczos::{truncated_svd, truncated_svd_scoped, SvdOptions, SvdResult};
 pub use qr::cholesky_qr2;
 pub use rff::RffMap;

@@ -1,10 +1,13 @@
 //! Measurement plumbing: streaming statistics, paper-style ASCII tables,
-//! and the simulated cluster clock.
+//! the simulated cluster clock, and the coordinator's scheduler
+//! backpressure gauges.
 
+pub mod sched;
 pub mod simclock;
 pub mod stats;
 pub mod table;
 
+pub use sched::{SchedMetrics, SchedSnapshot, SessionQueueDepth, TaskOutcome};
 pub use simclock::SimClock;
 pub use stats::Stats;
 pub use table::Table;

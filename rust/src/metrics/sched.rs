@@ -1,0 +1,184 @@
+//! Scheduler backpressure metrics (ROADMAP "admission priorities +
+//! backpressure metrics", the metrics half): live gauges for the
+//! admission queue and the per-session task queues, counters over task
+//! outcomes, and the Queued→Running wait-time distribution.
+//!
+//! The driver holds one [`SchedMetrics`]; every update is a lock-free
+//! atomic except the wait-time [`Stats`] (one short mutex per task
+//! start). [`SchedMetrics::snapshot`] is the read side —
+//! `ServerHandle::sched_metrics()` exposes it to operators and tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::Stats;
+
+/// Counters and gauges the coordinator's admission and task paths feed.
+#[derive(Debug, Default)]
+pub struct SchedMetrics {
+    /// Handshakes currently waiting in the admission queue.
+    admission_queue_depth: AtomicU64,
+    /// Tasks currently queued (all sessions; per-session depth is bounded
+    /// by `scheduler.task_queue_depth`).
+    queued_tasks: AtomicU64,
+    /// Tasks currently running (≤ one per session group).
+    running_tasks: AtomicU64,
+    tasks_submitted: AtomicU64,
+    tasks_done: AtomicU64,
+    tasks_failed: AtomicU64,
+    tasks_cancelled: AtomicU64,
+    /// Submissions rejected because the session's queue was full.
+    tasks_rejected: AtomicU64,
+    /// Seconds from submission to dispatch (the backpressure signal).
+    queued_wait: Mutex<Stats>,
+}
+
+/// Point-in-time copy of every metric (plain data, safe to hold).
+#[derive(Debug, Clone, Default)]
+pub struct SchedSnapshot {
+    pub admission_queue_depth: u64,
+    pub queued_tasks: u64,
+    pub running_tasks: u64,
+    pub tasks_submitted: u64,
+    pub tasks_done: u64,
+    pub tasks_failed: u64,
+    pub tasks_cancelled: u64,
+    pub tasks_rejected: u64,
+    pub wait_count: u64,
+    pub wait_mean_s: f64,
+    pub wait_max_s: f64,
+}
+
+/// How a task left the table (feeds the outcome counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskOutcome {
+    Done,
+    Failed,
+    Cancelled,
+}
+
+/// One live session's task backlog (reported by
+/// `ServerHandle::session_queue_depths`): the global `queued_tasks`
+/// gauge says how much work is waiting overall, this says *whose* — a
+/// tenant pinned at its `scheduler.task_queue_depth` bound looks very
+/// different from light load spread across sessions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionQueueDepth {
+    pub session_id: u64,
+    /// Tasks waiting in this session's FIFO.
+    pub queued: usize,
+    /// Whether a task is currently executing on the session's group.
+    pub running: bool,
+}
+
+impl SchedMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn admission_enqueued(&self) {
+        self.admission_queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn admission_dequeued(&self) {
+        self.admission_queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn task_submitted(&self) {
+        self.tasks_submitted.fetch_add(1, Ordering::Relaxed);
+        self.queued_tasks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn task_rejected(&self) {
+        self.tasks_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A task left the queue for a worker group; `wait_secs` is its
+    /// Queued→Running latency.
+    pub fn task_started(&self, wait_secs: f64) {
+        self.queued_tasks.fetch_sub(1, Ordering::Relaxed);
+        self.running_tasks.fetch_add(1, Ordering::Relaxed);
+        self.queued_wait.lock().unwrap().push(wait_secs);
+    }
+
+    /// A *running* task reached a terminal state.
+    pub fn task_finished(&self, outcome: TaskOutcome) {
+        self.running_tasks.fetch_sub(1, Ordering::Relaxed);
+        self.count_outcome(outcome);
+    }
+
+    /// A *queued* task reached a terminal state without running
+    /// (cancelled while queued, or drained at session teardown).
+    pub fn task_dequeued(&self, outcome: TaskOutcome) {
+        self.queued_tasks.fetch_sub(1, Ordering::Relaxed);
+        self.count_outcome(outcome);
+    }
+
+    fn count_outcome(&self, outcome: TaskOutcome) {
+        let c = match outcome {
+            TaskOutcome::Done => &self.tasks_done,
+            TaskOutcome::Failed => &self.tasks_failed,
+            TaskOutcome::Cancelled => &self.tasks_cancelled,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> SchedSnapshot {
+        let wait = self.queued_wait.lock().unwrap().clone();
+        SchedSnapshot {
+            admission_queue_depth: self.admission_queue_depth.load(Ordering::Relaxed),
+            queued_tasks: self.queued_tasks.load(Ordering::Relaxed),
+            running_tasks: self.running_tasks.load(Ordering::Relaxed),
+            tasks_submitted: self.tasks_submitted.load(Ordering::Relaxed),
+            tasks_done: self.tasks_done.load(Ordering::Relaxed),
+            tasks_failed: self.tasks_failed.load(Ordering::Relaxed),
+            tasks_cancelled: self.tasks_cancelled.load(Ordering::Relaxed),
+            tasks_rejected: self.tasks_rejected.load(Ordering::Relaxed),
+            wait_count: wait.count(),
+            wait_mean_s: if wait.count() > 0 { wait.mean() } else { 0.0 },
+            wait_max_s: if wait.count() > 0 { wait.max() } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_counts_balance() {
+        let m = SchedMetrics::new();
+        m.admission_enqueued();
+        assert_eq!(m.snapshot().admission_queue_depth, 1);
+        m.admission_dequeued();
+
+        // one task runs to completion, one is cancelled while queued,
+        // one submission is rejected
+        m.task_submitted();
+        m.task_submitted();
+        m.task_rejected();
+        m.task_started(0.25);
+        m.task_finished(TaskOutcome::Done);
+        m.task_dequeued(TaskOutcome::Cancelled);
+
+        let s = m.snapshot();
+        assert_eq!(s.admission_queue_depth, 0);
+        assert_eq!(s.queued_tasks, 0);
+        assert_eq!(s.running_tasks, 0);
+        assert_eq!(s.tasks_submitted, 2);
+        assert_eq!(s.tasks_done, 1);
+        assert_eq!(s.tasks_cancelled, 1);
+        assert_eq!(s.tasks_rejected, 1);
+        assert_eq!(s.wait_count, 1);
+        assert!((s.wait_mean_s - 0.25).abs() < 1e-12);
+        assert_eq!(s.wait_max_s, 0.25);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = SchedMetrics::new().snapshot();
+        assert_eq!(s.wait_count, 0);
+        assert_eq!(s.wait_mean_s, 0.0);
+        assert_eq!(s.wait_max_s, 0.0);
+    }
+}

@@ -44,6 +44,131 @@ fn decode_ranges(r: &mut Reader) -> Result<Vec<(u64, u64)>, ProtocolError> {
     (0..n).map(|_| Ok((r.u64()?, r.u64()?))).collect()
 }
 
+fn encode_timings(w: &mut Writer, timings: &[(String, f64)]) {
+    w.u32(timings.len() as u32);
+    for (name, secs) in timings {
+        w.str(name);
+        w.f64(*secs);
+    }
+}
+
+fn decode_timings(r: &mut Reader) -> Result<Vec<(String, f64)>, ProtocolError> {
+    let n = r.u32()?;
+    (0..n)
+        .map(|_| Ok((r.str()?, r.f64()?)))
+        .collect::<Result<_, ProtocolError>>()
+}
+
+/// Cross-rank aggregated progress of a `Running` task: `iters` is the
+/// minimum iteration any rank has completed (the group-wide frontier),
+/// `residual` the worst (largest) residual any rank last reported —
+/// [`crate::tasks::NO_RESIDUAL`] when no rank reported one — and `ranks`
+/// the group size executing the task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskProgress {
+    pub iters: u64,
+    pub residual: f64,
+    pub ranks: u32,
+}
+
+/// The task state machine (protocol v4, `docs/tasks.md`):
+/// `Queued → Running → Done | Failed | Cancelled` (queued tasks may also
+/// go straight to `Cancelled`). Terminal states carry the payload the
+/// blocking `RunTask` reply used to carry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskState {
+    Queued,
+    Running { progress: TaskProgress },
+    Done {
+        outputs: Vec<MatrixInfo>,
+        scalars: Params,
+        /// Named timing laps measured server-side (compute, expand, ...).
+        timings: Vec<(String, f64)>,
+    },
+    Failed {
+        /// Human-readable summary: how many ranks failed and the first
+        /// failing rank's error.
+        message: String,
+        /// Group-local ranks that returned an error (a one-rank wedge is
+        /// distinguishable from a group-wide failure).
+        failed_ranks: Vec<u32>,
+        total_ranks: u32,
+    },
+    Cancelled,
+}
+
+impl TaskState {
+    /// Terminal states never change again; `wait` returns on them.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            TaskState::Done { .. } | TaskState::Failed { .. } | TaskState::Cancelled
+        )
+    }
+
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            TaskState::Queued => w.u8(0),
+            TaskState::Running { progress } => {
+                w.u8(1);
+                w.u64(progress.iters);
+                w.f64(progress.residual);
+                w.u32(progress.ranks);
+            }
+            TaskState::Done { outputs, scalars, timings } => {
+                w.u8(2);
+                w.u32(outputs.len() as u32);
+                for o in outputs {
+                    o.encode(w);
+                }
+                scalars.encode(w);
+                encode_timings(w, timings);
+            }
+            TaskState::Failed { message, failed_ranks, total_ranks } => {
+                w.u8(3);
+                w.str(message);
+                w.u32(failed_ranks.len() as u32);
+                for rank in failed_ranks {
+                    w.u32(*rank);
+                }
+                w.u32(*total_ranks);
+            }
+            TaskState::Cancelled => w.u8(4),
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self, ProtocolError> {
+        Ok(match r.u8()? {
+            0 => TaskState::Queued,
+            1 => TaskState::Running {
+                progress: TaskProgress {
+                    iters: r.u64()?,
+                    residual: r.f64()?,
+                    ranks: r.u32()?,
+                },
+            },
+            2 => {
+                let n = r.u32()?;
+                let outputs = (0..n)
+                    .map(|_| MatrixInfo::decode(r))
+                    .collect::<Result<_, _>>()?;
+                let scalars = Params::decode(r)?;
+                let timings = decode_timings(r)?;
+                TaskState::Done { outputs, scalars, timings }
+            }
+            3 => {
+                let message = r.str()?;
+                let n = r.u32()?;
+                let failed_ranks =
+                    (0..n).map(|_| r.u32()).collect::<Result<_, _>>()?;
+                TaskState::Failed { message, failed_ranks, total_ranks: r.u32()? }
+            }
+            4 => TaskState::Cancelled,
+            tag => return Err(ProtocolError::BadTag { tag, what: "TaskState" }),
+        })
+    }
+}
+
 /// Driver⇄driver control messages (one TCP socket per session, paper
 /// §3.1.2: "one socket connection between the two driver processes").
 #[derive(Debug, Clone, PartialEq)]
@@ -68,11 +193,25 @@ pub enum ControlMsg {
     CreateMatrix { name: String, rows: u64, cols: u64 },
     /// All rows pushed; server verifies counts and freezes the layout.
     SealMatrix { id: u64 },
-    RunTask { lib: String, routine: String, params: Params },
+    /// Enqueue `lib.routine(params)` on the session's worker group and
+    /// return immediately with a task id (v4; the blocking `RunTask` of
+    /// v1–v3 is client-side sugar over submit + wait).
+    SubmitTask { lib: String, routine: String, params: Params },
     FetchMatrix { id: u64 },
     FreeMatrix { id: u64 },
     ListMatrices,
     Shutdown,
+    /// Poll a task's state (never blocks).
+    TaskStatus { task_id: u64 },
+    /// Request cooperative cancellation; replied with the task's state
+    /// *after* the request (a running task stays `Running` until its
+    /// ranks observe the token).
+    CancelTask { task_id: u64 },
+    /// Block server-side until the task reaches a terminal state or
+    /// `timeout_ms` elapses (0 = poll: return the current state at once).
+    /// The reply is a `TaskStatusReply` either way; a non-terminal state
+    /// means the timeout fired first.
+    WaitTask { task_id: u64, timeout_ms: u64 },
 
     // server -> client
     HandshakeAck {
@@ -97,12 +236,10 @@ pub enum ControlMsg {
         row_ranges: Vec<(u64, u64)>,
     },
     MatrixSealed { id: u64, rows_received: u64 },
-    TaskDone {
-        outputs: Vec<MatrixInfo>,
-        scalars: Params,
-        /// Named timing laps measured server-side (compute, expand, ...).
-        timings: Vec<(String, f64)>,
-    },
+    /// Ack of `SubmitTask`: the task is queued (or already running).
+    TaskSubmitted { task_id: u64 },
+    /// Reply to `TaskStatus` / `CancelTask` / `WaitTask`.
+    TaskStatusReply { task_id: u64, state: TaskState },
     FetchReady { info: MatrixInfo, row_ranges: Vec<(u64, u64)> },
     Freed { id: u64 },
     MatrixList { infos: Vec<MatrixInfo> },
@@ -152,7 +289,10 @@ impl ControlMsg {
                 w.u8(3);
                 w.u64(*id);
             }
-            ControlMsg::RunTask { lib, routine, params } => {
+            ControlMsg::SubmitTask { lib, routine, params } => {
+                // tag 4 was v1–v3's blocking RunTask; the payload shape is
+                // unchanged, only the reply semantics moved (TaskSubmitted
+                // instead of a blocking TaskDone) — gated by the v4 bump
                 w.u8(4);
                 w.str(lib);
                 w.str(routine);
@@ -168,6 +308,19 @@ impl ControlMsg {
             }
             ControlMsg::ListMatrices => w.u8(7),
             ControlMsg::Shutdown => w.u8(8),
+            ControlMsg::TaskStatus { task_id } => {
+                w.u8(9);
+                w.u64(*task_id);
+            }
+            ControlMsg::CancelTask { task_id } => {
+                w.u8(10);
+                w.u64(*task_id);
+            }
+            ControlMsg::WaitTask { task_id, timeout_ms } => {
+                w.u8(11);
+                w.u64(*task_id);
+                w.u64(*timeout_ms);
+            }
             ControlMsg::HandshakeAck {
                 session_id,
                 version,
@@ -201,18 +354,16 @@ impl ControlMsg {
                 w.u64(*id);
                 w.u64(*rows_received);
             }
-            ControlMsg::TaskDone { outputs, scalars, timings } => {
-                w.u8(132);
-                w.u32(outputs.len() as u32);
-                for o in outputs {
-                    o.encode(&mut w);
-                }
-                scalars.encode(&mut w);
-                w.u32(timings.len() as u32);
-                for (name, secs) in timings {
-                    w.str(name);
-                    w.f64(*secs);
-                }
+            // tag 132 (v1–v3 TaskDone) is retired: terminal results travel
+            // inside TaskStatusReply's TaskState::Done
+            ControlMsg::TaskSubmitted { task_id } => {
+                w.u8(138);
+                w.u64(*task_id);
+            }
+            ControlMsg::TaskStatusReply { task_id, state } => {
+                w.u8(139);
+                w.u64(*task_id);
+                state.encode(&mut w);
             }
             ControlMsg::FetchReady { info, row_ranges } => {
                 w.u8(133);
@@ -275,7 +426,7 @@ impl ControlMsg {
                 cols: r.u64()?,
             },
             3 => ControlMsg::SealMatrix { id: r.u64()? },
-            4 => ControlMsg::RunTask {
+            4 => ControlMsg::SubmitTask {
                 lib: r.str()?,
                 routine: r.str()?,
                 params: Params::decode(&mut r)?,
@@ -284,6 +435,9 @@ impl ControlMsg {
             6 => ControlMsg::FreeMatrix { id: r.u64()? },
             7 => ControlMsg::ListMatrices,
             8 => ControlMsg::Shutdown,
+            9 => ControlMsg::TaskStatus { task_id: r.u64()? },
+            10 => ControlMsg::CancelTask { task_id: r.u64()? },
+            11 => ControlMsg::WaitTask { task_id: r.u64()?, timeout_ms: r.u64()? },
             128 => {
                 let session_id = r.u64()?;
                 let version = r.u32()?;
@@ -312,18 +466,11 @@ impl ControlMsg {
                 id: r.u64()?,
                 rows_received: r.u64()?,
             },
-            132 => {
-                let n = r.u32()?;
-                let outputs = (0..n)
-                    .map(|_| MatrixInfo::decode(&mut r))
-                    .collect::<Result<_, _>>()?;
-                let scalars = Params::decode(&mut r)?;
-                let nt = r.u32()?;
-                let timings = (0..nt)
-                    .map(|_| Ok((r.str()?, r.f64()?)))
-                    .collect::<Result<_, ProtocolError>>()?;
-                ControlMsg::TaskDone { outputs, scalars, timings }
-            }
+            138 => ControlMsg::TaskSubmitted { task_id: r.u64()? },
+            139 => ControlMsg::TaskStatusReply {
+                task_id: r.u64()?,
+                state: TaskState::decode(&mut r)?,
+            },
             133 => ControlMsg::FetchReady {
                 info: MatrixInfo::decode(&mut r)?,
                 row_ranges: decode_ranges(&mut r)?,
@@ -640,7 +787,7 @@ mod tests {
             ControlMsg::RegisterLibrary { name: "skylark".into(), path: "builtin:skylark".into() },
             ControlMsg::CreateMatrix { name: "X".into(), rows: 10, cols: 4 },
             ControlMsg::SealMatrix { id: 3 },
-            ControlMsg::RunTask {
+            ControlMsg::SubmitTask {
                 lib: "skylark".into(),
                 routine: "cg_solve".into(),
                 params: Params::new().with_f64("lambda", 1e-5).with_matrix("X", 3),
@@ -649,6 +796,9 @@ mod tests {
             ControlMsg::FreeMatrix { id: 3 },
             ControlMsg::ListMatrices,
             ControlMsg::Shutdown,
+            ControlMsg::TaskStatus { task_id: 12 },
+            ControlMsg::CancelTask { task_id: 12 },
+            ControlMsg::WaitTask { task_id: 12, timeout_ms: 30_000 },
             ControlMsg::HandshakeAck {
                 session_id: 9,
                 version: 3,
@@ -660,11 +810,31 @@ mod tests {
             ControlMsg::LibraryRegistered { name: "skylark".into() },
             ControlMsg::MatrixCreated { id: 3, row_ranges: vec![(0, 5), (5, 10)] },
             ControlMsg::MatrixSealed { id: 3, rows_received: 10 },
-            ControlMsg::TaskDone {
-                outputs: vec![MatrixInfo { id: 4, rows: 4, cols: 4, name: "W".into() }],
-                scalars: Params::new().with_i64("iters", 526),
-                timings: vec![("compute".into(), 1.5)],
+            ControlMsg::TaskSubmitted { task_id: 12 },
+            ControlMsg::TaskStatusReply { task_id: 12, state: TaskState::Queued },
+            ControlMsg::TaskStatusReply {
+                task_id: 12,
+                state: TaskState::Running {
+                    progress: TaskProgress { iters: 37, residual: 4.5e-3, ranks: 4 },
+                },
             },
+            ControlMsg::TaskStatusReply {
+                task_id: 12,
+                state: TaskState::Done {
+                    outputs: vec![MatrixInfo { id: 4, rows: 4, cols: 4, name: "W".into() }],
+                    scalars: Params::new().with_i64("iters", 526),
+                    timings: vec![("compute".into(), 1.5)],
+                },
+            },
+            ControlMsg::TaskStatusReply {
+                task_id: 12,
+                state: TaskState::Failed {
+                    message: "1 of 4 ranks failed; rank 2: boom".into(),
+                    failed_ranks: vec![2],
+                    total_ranks: 4,
+                },
+            },
+            ControlMsg::TaskStatusReply { task_id: 12, state: TaskState::Cancelled },
             ControlMsg::FetchReady {
                 info: MatrixInfo { id: 4, rows: 4, cols: 4, name: "W".into() },
                 row_ranges: vec![(0, 4)],
@@ -923,6 +1093,35 @@ mod tests {
         assert_eq!(max_rows_per_frame_for(max / 8, max), None);
         // pathological widths must not overflow the byte math
         assert_eq!(max_rows_per_frame_for(usize::MAX, max), None);
+    }
+
+    #[test]
+    fn task_state_terminality() {
+        assert!(!TaskState::Queued.is_terminal());
+        assert!(!TaskState::Running {
+            progress: TaskProgress { iters: 1, residual: -1.0, ranks: 2 }
+        }
+        .is_terminal());
+        assert!(TaskState::Cancelled.is_terminal());
+        assert!(TaskState::Failed {
+            message: "x".into(),
+            failed_ranks: vec![0],
+            total_ranks: 1
+        }
+        .is_terminal());
+        assert!(TaskState::Done {
+            outputs: vec![],
+            scalars: Params::new(),
+            timings: vec![]
+        }
+        .is_terminal());
+    }
+
+    #[test]
+    fn retired_taskdone_tag_rejected() {
+        // tag 132 carried the blocking TaskDone reply through v3; v4
+        // retired it (results travel inside TaskStatusReply::Done)
+        assert!(ControlMsg::decode(&[132]).is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod wire;
 
 pub use message::{
     max_rows_per_frame_for, ControlMsg, DataMsg, DataMsgRef, DataMsgView, MatrixInfo,
-    ROWS_HEADER_LEN,
+    TaskProgress, TaskState, ROWS_HEADER_LEN,
 };
 pub use value::{Params, Value};
 pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
@@ -28,5 +28,9 @@ pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
 /// `granted_workers`) on the handshake. v3: streaming ranged pulls
 /// (`PullRows` answered by `RowsData`* + `PullDone`) and per-session
 /// transfer negotiation (`rows_per_frame` / `buf_bytes` on the handshake,
-/// effective values echoed in the ack).
-pub const PROTOCOL_VERSION: u32 = 3;
+/// effective values echoed in the ack). v4: asynchronous tasks — the
+/// blocking `RunTask`/`TaskDone` pair becomes `SubmitTask` →
+/// `TaskSubmitted { task_id }` with `TaskStatus`/`CancelTask`/`WaitTask`
+/// over the `Queued → Running → Done | Failed | Cancelled` state machine
+/// (see `docs/tasks.md`).
+pub const PROTOCOL_VERSION: u32 = 4;

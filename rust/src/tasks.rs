@@ -1,0 +1,228 @@
+//! Cooperative task scoping: the cancellation token and per-rank progress
+//! slot a running routine shares with the coordinator's task table
+//! (protocol v4, `docs/tasks.md`).
+//!
+//! A [`TaskScope`] is what a routine sees: `is_cancelled` /
+//! `check_cancelled` observe the task-wide cancel token (one token per
+//! task, shared by every rank), and [`TaskScope::report`] publishes this
+//! rank's iteration count and residual for the driver to aggregate into
+//! `TaskStatus` replies. Both sides are lock-free atomics — a status poll
+//! never contends with the compute loop.
+//!
+//! **Cancellation contract** (see `docs/tasks.md` for the full version):
+//! cancellation is *cooperative and collective*. A routine that runs
+//! collectives must not let one rank bail while peers are already inside
+//! an allreduce — ranks would deadlock. Iterative SPMD routines therefore
+//! agree on cancellation with a tiny allreduce of the locally-observed
+//! token at each iteration boundary (see `linalg::cg`), and bail together
+//! with [`CANCELLED_MSG`]. Rank-local routines may simply poll the token.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The error text a cooperatively-cancelled routine bails with. The
+/// dispatcher classifies outcomes by the token, not this string — it
+/// exists so logs and direct callers read well.
+pub const CANCELLED_MSG: &str = "task cancelled";
+
+/// Residual value meaning "nothing reported yet" (residuals are
+/// non-negative, so any negative value is safe as the sentinel).
+pub const NO_RESIDUAL: f64 = -1.0;
+
+/// One task's cancel flag, shared by the driver (setter) and every rank
+/// of the group running the task (observers).
+#[derive(Debug, Default)]
+pub struct CancelToken {
+    flag: AtomicBool,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation; idempotent.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// One rank's live progress: iteration count plus the latest residual,
+/// written by the routine, read by the driver's status aggregation.
+#[derive(Debug)]
+pub struct RankProgress {
+    iters: AtomicU64,
+    residual_bits: AtomicU64,
+}
+
+impl Default for RankProgress {
+    fn default() -> Self {
+        RankProgress {
+            iters: AtomicU64::new(0),
+            residual_bits: AtomicU64::new(NO_RESIDUAL.to_bits()),
+        }
+    }
+}
+
+impl RankProgress {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, iters: u64, residual: f64) {
+        self.iters.store(iters, Ordering::Relaxed);
+        self.residual_bits.store(residual.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn iters(&self) -> u64 {
+        self.iters.load(Ordering::Relaxed)
+    }
+
+    /// Latest reported residual, or [`NO_RESIDUAL`] if none yet.
+    pub fn residual(&self) -> f64 {
+        f64::from_bits(self.residual_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// What one rank of a running task holds: the task-wide cancel token and
+/// this rank's progress slot. Routines receive it through `WorkerCtx`.
+#[derive(Debug, Clone)]
+pub struct TaskScope {
+    cancel: Arc<CancelToken>,
+    progress: Arc<RankProgress>,
+    /// Detached scopes skip the collective cancellation checks entirely,
+    /// so direct library callers pay zero extra collectives per
+    /// iteration (benchmark fidelity: the paper-table CG/SVD numbers
+    /// must not shift with cancellability they never use).
+    detached: bool,
+}
+
+impl TaskScope {
+    pub fn new(cancel: Arc<CancelToken>, progress: Arc<RankProgress>) -> Self {
+        TaskScope { cancel, progress, detached: false }
+    }
+
+    /// A scope attached to nothing: progress goes nowhere and
+    /// [`TaskScope::collective_check_cancelled`] is free (no collective
+    /// is issued — all ranks of a detached SPMD run must therefore be
+    /// uniformly detached, which direct callers trivially are). The
+    /// rank-local [`TaskScope::check_cancelled`] still reads the token
+    /// for callers that keep one via [`TaskScope::token`].
+    pub fn detached() -> Self {
+        TaskScope {
+            cancel: Arc::new(CancelToken::new()),
+            progress: Arc::new(RankProgress::new()),
+            detached: true,
+        }
+    }
+
+    /// This rank's local view of the token. SPMD routines must not act on
+    /// it unilaterally between collectives — see the module docs.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Bail with [`CANCELLED_MSG`] if cancellation was requested. Safe to
+    /// call at any point of a rank-local (collective-free) routine.
+    pub fn check_cancelled(&self) -> crate::Result<()> {
+        if self.is_cancelled() {
+            anyhow::bail!(CANCELLED_MSG);
+        }
+        Ok(())
+    }
+
+    /// Publish this rank's progress (iterations done, latest residual —
+    /// pass [`NO_RESIDUAL`] when the routine has no residual notion).
+    pub fn report(&self, iters: u64, residual: f64) {
+        self.progress.set(iters, residual);
+    }
+
+    /// The collective cancellation check SPMD routines call at iteration
+    /// boundaries: allreduce the locally-observed token so either every
+    /// rank bails together (with [`CANCELLED_MSG`]) or none does — one
+    /// rank bailing unilaterally would strand its peers inside the
+    /// routine's next collective. All ranks must reach this call in
+    /// lockstep (iterative routines are synchronized by their own
+    /// collectives, so the iteration boundary qualifies). `tag` must not
+    /// collide with any concurrently-outstanding collective of the same
+    /// routine. Free (no collective) on detached scopes.
+    pub fn collective_check_cancelled(
+        &self,
+        comm: &dyn crate::collectives::Communicator,
+        tag: u64,
+    ) -> crate::Result<()> {
+        if self.detached {
+            return Ok(());
+        }
+        let mut flag = [if self.is_cancelled() { 1.0 } else { 0.0 }];
+        crate::collectives::allreduce_sum(comm, tag, &mut flag);
+        if flag[0] > 0.0 {
+            anyhow::bail!(CANCELLED_MSG);
+        }
+        Ok(())
+    }
+
+    /// The task-wide token (the driver's handle for requesting cancel).
+    pub fn token(&self) -> &Arc<CancelToken> {
+        &self.cancel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_cancels_once_and_stays() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        t.cancel();
+        t.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn progress_roundtrips_and_defaults() {
+        let p = RankProgress::new();
+        assert_eq!(p.iters(), 0);
+        assert_eq!(p.residual(), NO_RESIDUAL);
+        p.set(17, 1e-6);
+        assert_eq!(p.iters(), 17);
+        assert_eq!(p.residual(), 1e-6);
+    }
+
+    #[test]
+    fn collective_check_is_free_when_detached_and_bails_when_attached() {
+        use crate::collectives::LocalComm;
+        let comm = LocalComm::group(1, None).pop().unwrap();
+
+        // detached: no collective issued, never bails — even with the
+        // token set (direct callers pay nothing for cancellability)
+        let detached = TaskScope::detached();
+        detached.token().cancel();
+        assert!(detached.collective_check_cancelled(&comm, 1).is_ok());
+
+        // attached: passes while the token is clear, bails once set
+        let scope =
+            TaskScope::new(Arc::new(CancelToken::new()), Arc::new(RankProgress::new()));
+        assert!(scope.collective_check_cancelled(&comm, 2).is_ok());
+        scope.token().cancel();
+        let err = scope.collective_check_cancelled(&comm, 3).unwrap_err();
+        assert!(err.to_string().contains(CANCELLED_MSG));
+    }
+
+    #[test]
+    fn detached_scope_never_cancels_but_token_can() {
+        let s = TaskScope::detached();
+        assert!(s.check_cancelled().is_ok());
+        s.report(3, 0.5);
+        let token = s.token().clone();
+        token.cancel();
+        let err = s.check_cancelled().unwrap_err();
+        assert!(err.to_string().contains(CANCELLED_MSG));
+    }
+}

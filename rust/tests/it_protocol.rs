@@ -1,8 +1,36 @@
 //! Property tests: wire protocol total-roundtrip invariants (the
 //! proptest-style suite; see `alchemist::testkit`).
 
-use alchemist::protocol::{ControlMsg, DataMsg, MatrixInfo, Params, Value};
+use alchemist::protocol::{
+    ControlMsg, DataMsg, MatrixInfo, Params, TaskProgress, TaskState, Value,
+};
 use alchemist::testkit::{props, Gen};
+
+fn random_task_state(g: &mut Gen) -> TaskState {
+    match g.usize_in(0, 4) {
+        0 => TaskState::Queued,
+        1 => TaskState::Running {
+            progress: TaskProgress {
+                iters: g.u64() % 1_000_000,
+                residual: g.f64_in(0.0, 1.0),
+                ranks: g.u64() as u32 % 64,
+            },
+        },
+        2 => TaskState::Done {
+            outputs: (0..g.usize_in(0, 3)).map(|_| random_info(g)).collect(),
+            scalars: random_params(g),
+            timings: (0..g.usize_in(0, 4))
+                .map(|_| (g.ident(10), g.f64_in(0.0, 100.0)))
+                .collect(),
+        },
+        3 => TaskState::Failed {
+            message: g.ident(30),
+            failed_ranks: (0..g.usize_in(0, 4)).map(|_| g.u64() as u32 % 64).collect(),
+            total_ranks: g.u64() as u32 % 64,
+        },
+        _ => TaskState::Cancelled,
+    }
+}
 
 fn random_params(g: &mut Gen) -> Params {
     let mut p = Params::new();
@@ -50,7 +78,7 @@ fn control_messages_roundtrip() {
                 rows: g.u64() % 1_000_000,
                 cols: g.u64() % 10_000,
             },
-            3 => ControlMsg::RunTask {
+            3 => ControlMsg::SubmitTask {
                 lib: g.ident(8),
                 routine: g.ident(12),
                 params: random_params(g),
@@ -79,12 +107,9 @@ fn control_messages_roundtrip() {
                     .collect();
                 ControlMsg::MatrixCreated { id: g.u64(), row_ranges }
             }
-            6 => ControlMsg::TaskDone {
-                outputs: (0..g.usize_in(0, 3)).map(|_| random_info(g)).collect(),
-                scalars: random_params(g),
-                timings: (0..g.usize_in(0, 4))
-                    .map(|_| (g.ident(10), g.f64_in(0.0, 100.0)))
-                    .collect(),
+            6 => ControlMsg::TaskStatusReply {
+                task_id: g.u64(),
+                state: random_task_state(g),
             },
             7 => ControlMsg::FetchReady { info: random_info(g), row_ranges: vec![] },
             8 => ControlMsg::Error { message: g.ident(40) },
@@ -220,10 +245,13 @@ fn borrowed_and_owned_decodes_agree() {
 fn corrupted_frames_never_panic() {
     // decode must return Err (not panic) for arbitrary mutations
     props(400, |g| {
-        let msg = ControlMsg::TaskDone {
-            outputs: vec![random_info(g)],
-            scalars: random_params(g),
-            timings: vec![(g.ident(6), 1.0)],
+        let msg = ControlMsg::TaskStatusReply {
+            task_id: g.u64(),
+            state: TaskState::Done {
+                outputs: vec![random_info(g)],
+                scalars: random_params(g),
+                timings: vec![(g.ident(6), 1.0)],
+            },
         };
         let mut bytes = msg.encode();
         match g.usize_in(0, 2) {

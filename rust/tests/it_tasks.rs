@@ -1,0 +1,377 @@
+//! Integration: the asynchronous task subsystem (protocol v4) — submit /
+//! status / cancel / wait lifecycle, cooperative mid-task cancellation,
+//! bounded task queues, rank-tagged failures, output-id reservations, and
+//! teardown that never leaks store blocks.
+
+use std::time::{Duration, Instant};
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::{Config, EngineKind};
+use alchemist::coordinator::AlchemistServer;
+use alchemist::protocol::{Params, TaskState};
+
+fn native_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+/// Poll until `f` returns true or the timeout fires (sleep-based tests
+/// stay robust on slow CI runners).
+fn eventually(timeout: Duration, what: &str, mut f: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn submit_poll_cancel_lifecycle() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // a long-running routine: 30s of cancellable 10ms slices
+    let task_id = ac
+        .submit("elemental", "sleep", Params::new().with_i64("millis", 30_000))
+        .unwrap()
+        .task_id;
+
+    // poll while Running: progress must become nonzero and carry the
+    // group size
+    let t0 = Instant::now();
+    loop {
+        assert!(t0.elapsed() < Duration::from_secs(10), "never saw progress");
+        match ac.task(task_id).status().unwrap() {
+            TaskState::Queued => {}
+            TaskState::Running { progress } => {
+                assert_eq!(progress.ranks, 2);
+                if progress.iters > 0 {
+                    break;
+                }
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // cancel mid-task: the token is observed cooperatively within a
+    // slice, long before the 30s sleep elapses
+    let t_cancel = Instant::now();
+    ac.task(task_id).cancel().unwrap();
+    let err = ac.task(task_id).wait().unwrap_err();
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    assert!(
+        t_cancel.elapsed() < Duration::from_secs(5),
+        "cancel took {:?} — not cooperative",
+        t_cancel.elapsed()
+    );
+    // terminal state is sticky and cancel stays idempotent
+    assert_eq!(ac.task(task_id).status().unwrap(), TaskState::Cancelled);
+    assert_eq!(ac.task(task_id).cancel().unwrap(), TaskState::Cancelled);
+
+    // the session is left usable: a synchronous task runs fine after
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 20))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+
+    let m = server.sched_metrics();
+    assert_eq!(m.tasks_submitted, 2);
+    assert_eq!(m.tasks_cancelled, 1);
+    assert_eq!(m.tasks_done, 1);
+    assert_eq!(m.queued_tasks, 0);
+    assert_eq!(m.running_tasks, 0);
+    assert_eq!(m.wait_count, 2, "both tasks were dispatched");
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn queue_bounds_cancel_while_queued_and_wait_timeout() {
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.task_queue_depth", "1").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 1).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // first task occupies the group...
+    let running = ac
+        .submit("elemental", "sleep", Params::new().with_i64("millis", 30_000))
+        .unwrap()
+        .task_id;
+    eventually(Duration::from_secs(10), "task to start", || {
+        matches!(ac.task(running).status().unwrap(), TaskState::Running { .. })
+    });
+    // ...so a WaitTask with a short timeout comes back non-terminal
+    let st = ac.task(running).wait_timeout(50).unwrap();
+    assert!(matches!(st, TaskState::Running { .. }), "{st:?}");
+
+    // second task queues; the third submission hits the depth-1 bound
+    let queued = ac
+        .submit("elemental", "sleep", Params::new().with_i64("millis", 30_000))
+        .unwrap()
+        .task_id;
+    assert_eq!(ac.task(queued).status().unwrap(), TaskState::Queued);
+    // the backlog is attributable to this tenant, not just a global count
+    let depths = server.session_queue_depths();
+    assert_eq!(depths.len(), 1);
+    assert_eq!(depths[0].queued, 1);
+    assert!(depths[0].running);
+    let err = ac
+        .submit("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap_err();
+    assert!(err.to_string().contains("task queue full"), "{err}");
+
+    // cancel while Queued is immediate — the task never ran
+    assert_eq!(ac.task(queued).cancel().unwrap(), TaskState::Cancelled);
+
+    // queue slot freed: a new submission is accepted again, and the whole
+    // pipeline drains once the running task is cancelled
+    let follow = ac
+        .submit("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap()
+        .task_id;
+    ac.task(running).cancel().unwrap();
+    assert!(ac.task(running).wait().is_err());
+    let st = ac.task(follow).wait_timeout(10_000).unwrap();
+    assert!(matches!(st, TaskState::Done { .. }), "{st:?}");
+
+    let m = server.sched_metrics();
+    assert_eq!(m.tasks_rejected, 1);
+    assert_eq!(m.tasks_cancelled, 2);
+    assert_eq!(m.tasks_done, 1);
+    // the follow-up task waited behind a running one: nonzero wait shows
+    // up in the backpressure distribution
+    assert!(m.wait_count >= 2);
+    assert!(m.wait_max_s > 0.0, "queued wait time was not recorded");
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn one_rank_failure_is_distinguishable_from_group_failure() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // one rank wedges: the error names the rank and the 1-of-2 count
+    let err = ac
+        .run_task("elemental", "fail_on", Params::new().with_i64("rank", 1))
+        .unwrap_err();
+    assert!(err.to_string().contains("1 of 2 ranks failed"), "{err}");
+    assert!(err.to_string().contains("rank 1"), "{err}");
+
+    // a group-wide failure (unknown routine fails everywhere) reads
+    // differently
+    let err = ac.run_task("elemental", "nope", Params::new()).unwrap_err();
+    assert!(err.to_string().contains("2 of 2 ranks failed"), "{err}");
+
+    // the full per-rank detail is on the wire too
+    let task_id = ac
+        .submit("elemental", "fail_on", Params::new().with_i64("rank", 0))
+        .unwrap()
+        .task_id;
+    let st = ac.task(task_id).wait_timeout(10_000).unwrap();
+    match st {
+        TaskState::Failed { failed_ranks, total_ranks, message } => {
+            assert_eq!(failed_ranks, vec![0]);
+            assert_eq!(total_ranks, 2);
+            assert!(message.contains("injected"), "{message}");
+        }
+        other => panic!("unexpected state {other:?}"),
+    }
+
+    // the session survives all of the above
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn output_reservation_rejects_oversized_routines_without_id_collision() {
+    let mut cfg = native_cfg();
+    // truncated_svd returns U, S, V — three outputs against a window of 2
+    cfg.apply("scheduler.max_task_outputs", "2").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    let a = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 24).with_i64("cols", 6).with_i64("seed", 3),
+        )
+        .unwrap();
+    let a_id = a.outputs[0].id;
+
+    let err = ac
+        .run_task(
+            "elemental",
+            "truncated_svd",
+            Params::new().with_matrix("A", a_id).with_i64("rank", 2),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("reservation"), "{err}");
+
+    // nothing from the failed task leaked into the store (only A's two
+    // rank-blocks remain) and later ids don't collide with its window
+    eventually(Duration::from_secs(5), "failed task's blocks to be freed", || {
+        server.total_blocks() == 2
+    });
+    let b = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 8).with_i64("cols", 2).with_i64("seed", 4),
+        )
+        .unwrap();
+    assert_ne!(b.outputs[0].id, a_id);
+    let (back, _) = ac.to_indexed_row_matrix(&b.outputs[0], 1).unwrap();
+    assert_eq!(back.rows, 8);
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn disconnect_with_task_in_flight_cancels_and_frees_everything() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    // a running 30s task plus queued work, then the client vanishes
+    {
+        let mut ac = AlchemistContext::connect(&addr, &cfg, 1).unwrap();
+        ac.register_library("elemental", "builtin:elemental").unwrap();
+        let running = ac
+            .submit("elemental", "sleep", Params::new().with_i64("millis", 30_000))
+            .unwrap()
+            .task_id;
+        eventually(Duration::from_secs(10), "task to start", || {
+            matches!(ac.task(running).status().unwrap(), TaskState::Running { .. })
+        });
+        for _ in 0..3 {
+            ac.submit("elemental", "sleep", Params::new().with_i64("millis", 30_000))
+                .unwrap();
+        }
+        ac.stop();
+    }
+    // teardown cancels the running task cooperatively and drains the
+    // queue — well before any 30s sleep could finish
+    let t0 = Instant::now();
+    eventually(Duration::from_secs(10), "session teardown", || {
+        server.active_sessions() == 0
+    });
+    assert!(t0.elapsed() < Duration::from_secs(10));
+
+    // a task that *produces outputs* racing teardown must not leak
+    // blocks: the dispatcher is joined before the store is freed
+    {
+        let mut ac = AlchemistContext::connect(&addr, &cfg, 1).unwrap();
+        ac.register_library("elemental", "builtin:elemental").unwrap();
+        ac.submit(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 64).with_i64("cols", 8).with_i64("seed", 5),
+        )
+        .unwrap();
+        ac.stop(); // disconnect immediately, task possibly mid-flight
+    }
+    eventually(Duration::from_secs(10), "blocks to be freed", || {
+        server.active_sessions() == 0 && server.total_blocks() == 0
+    });
+
+    // the workers were actually released: a fresh session can take the
+    // whole pool and run
+    let mut ac = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 2).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn iterative_cg_cancels_mid_iteration_over_the_wire() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2).unwrap();
+    ac.register_library("skylark", "builtin:skylark").unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // server-side problem big enough to iterate visibly: an unconvergeable
+    // solve (tol is effectively zero) capped far beyond test time
+    let x = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 512).with_i64("cols", 128).with_i64("seed", 1),
+        )
+        .unwrap();
+    let y = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 512).with_i64("cols", 4).with_i64("seed", 2),
+        )
+        .unwrap();
+    let task_id = ac
+        .submit(
+            "skylark",
+            "cg_solve",
+            Params::new()
+                .with_matrix("X", x.outputs[0].id)
+                .with_matrix("Y", y.outputs[0].id)
+                .with_f64("tol", 0.0)
+                .with_i64("max_iters", 500_000_000),
+        )
+        .unwrap()
+        .task_id;
+
+    // CG reports (iteration, residual) as it runs
+    let t0 = Instant::now();
+    loop {
+        assert!(t0.elapsed() < Duration::from_secs(20), "never saw CG progress");
+        if let TaskState::Running { progress } = ac.task(task_id).status().unwrap() {
+            if progress.iters >= 2 && progress.residual >= 0.0 {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // the cancel is observed within an iteration — both ranks bail
+    // together through the collective check, nobody hangs in an allreduce
+    let t_cancel = Instant::now();
+    ac.task(task_id).cancel().unwrap();
+    let err = ac.task(task_id).wait().unwrap_err();
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    assert!(t_cancel.elapsed() < Duration::from_secs(10));
+
+    // group still healthy: another CG converges normally
+    let res = ac
+        .run_task(
+            "skylark",
+            "cg_solve",
+            Params::new()
+                .with_matrix("X", x.outputs[0].id)
+                .with_matrix("Y", y.outputs[0].id)
+                .with_i64("max_iters", 200),
+        )
+        .unwrap();
+    assert!(res.scalars.i64("iters").unwrap() > 0);
+    ac.stop();
+    server.shutdown();
+}

@@ -414,7 +414,7 @@ fn v2_client_receives_version_mismatch_diagnostic() {
     match control.recv_ctrl().unwrap() {
         ControlMsg::Error { message } => {
             assert!(
-                message.contains("protocol version mismatch: client 2, server 3"),
+                message.contains("protocol version mismatch: client 2, server 4"),
                 "{message}"
             );
         }

@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_transfer.json against the committed baseline.
+
+CI's transfer-bench job runs the smoke-size bench and calls this script
+with the fresh artifact and the repo's committed baseline. Outcomes:
+
+* committed baseline is still the stub (no cells): emit a GitHub warning
+  annotation so the ROADMAP's "regenerate the committed baseline"
+  follow-up stops rotting silently, and exit 0 (nothing to diff).
+* configs are incomparable (different matrix size / runs / transfer
+  knobs — e.g. a smoke run against a full-size baseline): warn, exit 0.
+* comparable: report per-cell throughput deltas; exit 1 if any cell's
+  push or pull GB/s regressed by more than --tolerance (default 50%,
+  deliberately loose — CI runners are noisy; the committed baseline is
+  for catching collapses, not 5% drifts).
+
+Usage: check_transfer_baseline.py FRESH BASELINE [--tolerance 0.5]
+"""
+
+import argparse
+import json
+import sys
+
+
+def warn(msg: str) -> None:
+    # GitHub Actions annotation; plain stderr elsewhere
+    print(f"::warning::{msg}")
+    print(f"WARNING: {msg}", file=sys.stderr)
+
+
+def cell_key(cell: dict) -> tuple:
+    return (cell.get("executors"), cell.get("workers"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="max fractional throughput regression per cell")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    if not base.get("cells"):
+        warn(
+            "BENCH_transfer.json baseline is still the committed stub "
+            "(no cells) — paste a CI artifact or a full-size run into the "
+            "repo root to pin real GB/s numbers (see ROADMAP 'regenerate "
+            "the committed baseline')."
+        )
+        return 0
+
+    comparable_keys = ("rows", "cols", "runs", "quick", "rows_per_frame",
+                       "buf_bytes", "pull_stripe_rows", "pull_window")
+    fc, bc = fresh.get("config", {}), base.get("config", {})
+    mismatched = [k for k in comparable_keys if fc.get(k) != bc.get(k)]
+    if mismatched:
+        warn(
+            "transfer bench configs are not comparable "
+            f"(differ in {', '.join(mismatched)}); skipping the diff. "
+            "Regenerate the baseline at the CI smoke size or run CI at "
+            "the baseline size to re-enable regression checking."
+        )
+        return 0
+
+    if not fresh.get("cells"):
+        # the baseline has real numbers but this run produced none — the
+        # exact collapse the check exists to catch must not pass silently
+        print("::error::fresh BENCH_transfer.json has no cells to compare "
+              "against the pinned baseline (bench produced no results?)")
+        return 1
+
+    base_cells = {cell_key(c): c for c in base["cells"]}
+    failures = []
+    for cell in fresh.get("cells", []):
+        ref = base_cells.get(cell_key(cell))
+        if ref is None:
+            continue
+        for leg in ("push_gbps", "pull_gbps"):
+            got, want = cell.get(leg), ref.get(leg)
+            if not isinstance(got, (int, float)) or not isinstance(want, (int, float)):
+                continue
+            if want <= 0:
+                continue
+            delta = (got - want) / want
+            tag = (f"e{cell.get('executors')}xw{cell.get('workers')} {leg}: "
+                   f"{got:.3f} vs baseline {want:.3f} GB/s ({delta:+.1%})")
+            print(tag)
+            if delta < -args.tolerance:
+                failures.append(tag)
+
+    if failures:
+        for f_ in failures:
+            print(f"::error::transfer throughput regression: {f_}")
+        return 1
+    print("transfer bench within tolerance of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
