@@ -5,7 +5,8 @@
 mod bench_common;
 
 use alchemist::cli::Args;
-use alchemist::collectives::{allreduce_sum, broadcast, Communicator, LocalComm};
+use alchemist::collectives::algorithms::infallible::{allreduce_sum, broadcast};
+use alchemist::collectives::{Communicator, LocalComm};
 use alchemist::distmat::LocalMatrix;
 use alchemist::metrics::{Stats, Table};
 use alchemist::protocol::DataMsg;

@@ -96,13 +96,37 @@ impl AlchemistContext {
         } else {
             cfg.transfer.buf_bytes as u64
         };
-        let reply = control.call(&ControlMsg::Handshake {
+        let reply = match control.call(&ControlMsg::Handshake {
             client_name: "alchemist-client".into(),
             version: PROTOCOL_VERSION,
             request_workers: request_workers as u32,
             rows_per_frame: req_rows_per_frame,
             buf_bytes: req_buf_bytes,
-        })?;
+        }) {
+            Ok(reply) => reply,
+            Err(err)
+                if (req_rows_per_frame != 0 || req_buf_bytes != 0)
+                    && err.downcast_ref::<std::io::Error>().is_some() =>
+            {
+                // explicit transfer requests emit the long handshake
+                // form, which a STRICT pre-v3 server rejects as trailing
+                // bytes and answers with a silent disconnect — the
+                // documented elision asymmetry. Probe once with the
+                // fields elided (the v2-compatible short form) purely to
+                // extract the server's version diagnostic. Gated on an
+                // I/O-level failure (EOF/reset): a server that *replied*
+                // — even with a version-mismatch Error — already gave
+                // its diagnostic, and the probe would just repeat it
+                // with a misleading "needs v3+" hint attached.
+                return Err(diagnose_handshake_failure(
+                    addr,
+                    cfg,
+                    request_workers as u32,
+                    err,
+                ));
+            }
+            Err(err) => return Err(err),
+        };
         let mut cfg = cfg.clone();
         let (session_id, granted_workers, worker_addrs) = match reply {
             ControlMsg::HandshakeAck {
@@ -350,6 +374,42 @@ impl AlchemistContext {
     }
 }
 
+/// Turn an opaque long-form handshake failure into the server's version
+/// diagnostic when possible: reconnect and send the short (v2-compatible)
+/// handshake form, which even a strict pre-v3 server can decode and
+/// answer. If that probe surfaces a version mismatch, report it (with the
+/// original failure attached); otherwise the original error stands —
+/// the server is current and the failure was something else.
+fn diagnose_handshake_failure(
+    addr: &str,
+    cfg: &Config,
+    request_workers: u32,
+    original: anyhow::Error,
+) -> anyhow::Error {
+    let probe = (|| -> crate::Result<ControlMsg> {
+        let mut control = Framed::connect(addr, cfg.transfer.buf_bytes)?;
+        control.send_ctrl(&ControlMsg::Handshake {
+            client_name: "alchemist-client".into(),
+            version: PROTOCOL_VERSION,
+            request_workers,
+            rows_per_frame: 0,
+            buf_bytes: 0,
+        })?;
+        control.recv_ctrl()
+    })();
+    match probe {
+        Ok(ControlMsg::Error { message }) if message.contains("version mismatch") => {
+            original.context(format!(
+                "server rejected the long handshake form carrying explicit \
+                 transfer settings; it answered a short probe with: {message} \
+                 (explicit rows_per_frame/buf_bytes requests require a v3+ \
+                 server)"
+            ))
+        }
+        _ => original,
+    }
+}
+
 /// One server-side wait slice per [`TaskHandle::wait`] round-trip: long
 /// enough that a typical task completes inside a single blocking call,
 /// short enough that a wedged rank cannot pin the control thread forever.
@@ -375,8 +435,23 @@ impl TaskHandle<'_> {
     /// observe the token (within one iteration for the iterative
     /// routines) — follow with [`TaskHandle::wait`] to see it land.
     pub fn cancel(&mut self) -> crate::Result<TaskState> {
-        self.ctx
-            .task_call(&ControlMsg::CancelTask { task_id: self.task_id })
+        self.ctx.task_call(&ControlMsg::CancelTask {
+            task_id: self.task_id,
+            hard_after_ms: 0,
+        })
+    }
+
+    /// [`TaskHandle::cancel`] with an escalation deadline (protocol v5):
+    /// if the task is still running `hard_after_ms` after the cooperative
+    /// request, the server poisons the group's communicator and the
+    /// routine is forcibly unwound at its next collective — so even a
+    /// routine that ignores the cooperative contract ends within the
+    /// deadline plus one collective, instead of its remaining runtime.
+    pub fn cancel_hard(&mut self, hard_after_ms: u64) -> crate::Result<TaskState> {
+        self.ctx.task_call(&ControlMsg::CancelTask {
+            task_id: self.task_id,
+            hard_after_ms,
+        })
     }
 
     /// Block server-side until the task is terminal or `timeout_ms`

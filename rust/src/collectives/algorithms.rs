@@ -4,17 +4,45 @@
 //! depends on would use at this scale: binomial trees for
 //! broadcast/reduce, a bandwidth-optimal ring for allreduce, linear
 //! gather/scatter rooted at rank 0 (the Alchemist driver-adjacent rank).
+//!
+//! Every algorithm is `Result`-returning and propagates the first
+//! [`CommError`] it observes (protocol v5 fault isolation): when a peer
+//! rank fails and poisons the group, a rank blocked mid-algorithm wakes
+//! from its `recv` with the error and unwinds instead of waiting forever.
+//! The sends a failing algorithm already queued are dropped by the
+//! driver's fabric reset between tasks. Callers whose groups can never be
+//! poisoned (single-rank groups, direct library use, benches) may use the
+//! [`infallible`] wrappers.
 
 use crate::util::even_ranges;
 
-use super::Communicator;
+use super::{CommError, Communicator};
+
+/// Entry check every algorithm performs before moving any data: a
+/// poisoned group must fail even on paths that would otherwise touch no
+/// mailbox at all (size-1 groups, send-only legs) — a hard cancel on a
+/// single-worker session still has to unwind the routine at its next
+/// collective, exactly like on a multi-rank group. One atomic load in
+/// the unpoisoned steady state.
+fn entry_check(comm: &dyn Communicator) -> Result<(), CommError> {
+    match comm.poison_cause() {
+        Some(cause) => Err(cause.to_err()),
+        None => Ok(()),
+    }
+}
 
 /// Binomial-tree broadcast from `root`. Every rank passes the same `buf`
 /// in; on return all ranks hold root's data.
-pub fn broadcast(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut Vec<f64>) {
+pub fn broadcast(
+    comm: &dyn Communicator,
+    base_tag: u64,
+    root: usize,
+    buf: &mut Vec<f64>,
+) -> Result<(), CommError> {
+    entry_check(comm)?;
     let size = comm.size();
     if size == 1 {
-        return;
+        return Ok(());
     }
     // Relative rank so any root works with the rank-0 tree.
     let vrank = (comm.rank() + size - root) % size;
@@ -23,7 +51,7 @@ pub fn broadcast(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut 
     while mask < size {
         if vrank & mask != 0 {
             let parent = (vrank - mask + root) % size;
-            *buf = comm.recv(parent, base_tag);
+            *buf = comm.recv(parent, base_tag)?;
             break;
         }
         mask <<= 1;
@@ -47,15 +75,22 @@ pub fn broadcast(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut 
         }
         child_mask >>= 1;
     }
+    Ok(())
 }
 
 /// Binomial-tree sum-reduce to `root`; on root, `buf` holds the elementwise
 /// sum over all ranks; other ranks' buffers are consumed (contents
 /// unspecified after the call).
-pub fn reduce_sum(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut Vec<f64>) {
+pub fn reduce_sum(
+    comm: &dyn Communicator,
+    base_tag: u64,
+    root: usize,
+    buf: &mut Vec<f64>,
+) -> Result<(), CommError> {
+    entry_check(comm)?;
     let size = comm.size();
     if size == 1 {
-        return;
+        return Ok(());
     }
     let vrank = (comm.rank() + size - root) % size;
     let mut mask = 1usize;
@@ -64,13 +99,13 @@ pub fn reduce_sum(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut
             // send to parent and exit
             let parent = (vrank - mask + root) % size;
             comm.send(parent, base_tag + mask as u64, std::mem::take(buf));
-            return;
+            return Ok(());
         }
         // receive from child (if it exists) and accumulate
         let vchild = vrank | mask;
         if vchild < size {
             let child = (vchild + root) % size;
-            let other = comm.recv(child, base_tag + mask as u64);
+            let other = comm.recv(child, base_tag + mask as u64)?;
             debug_assert_eq!(other.len(), buf.len());
             for (a, b) in buf.iter_mut().zip(&other) {
                 *a += b;
@@ -78,15 +113,22 @@ pub fn reduce_sum(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut
         }
         mask <<= 1;
     }
+    Ok(())
 }
 
 /// Ring allreduce (reduce-scatter + allgather): bandwidth-optimal,
 /// 2·(p−1)/p · n elements over the wire per rank. All ranks end with the
-/// elementwise sum.
-pub fn allreduce_sum(comm: &dyn Communicator, base_tag: u64, buf: &mut [f64]) {
+/// elementwise sum. On error, `buf` is left partially reduced (callers
+/// unwind; the driver resets the fabric between tasks).
+pub fn allreduce_sum(
+    comm: &dyn Communicator,
+    base_tag: u64,
+    buf: &mut [f64],
+) -> Result<(), CommError> {
+    entry_check(comm)?;
     let p = comm.size();
     if p == 1 {
-        return;
+        return Ok(());
     }
     let rank = comm.rank();
     let chunks = even_ranges(buf.len(), p);
@@ -100,7 +142,7 @@ pub fn allreduce_sum(comm: &dyn Communicator, base_tag: u64, buf: &mut [f64]) {
         let recv_idx = (rank + p - s - 1) % p;
         let (a, b) = chunks[send_idx];
         comm.send(next, base_tag + s as u64, buf[a..b].to_vec());
-        let incoming = comm.recv(prev, base_tag + s as u64);
+        let incoming = comm.recv(prev, base_tag + s as u64)?;
         let (a, b) = chunks[recv_idx];
         debug_assert_eq!(incoming.len(), b - a);
         for (dst, src) in buf[a..b].iter_mut().zip(&incoming) {
@@ -114,10 +156,11 @@ pub fn allreduce_sum(comm: &dyn Communicator, base_tag: u64, buf: &mut [f64]) {
         let recv_idx = (rank + p - s) % p;
         let (a, b) = chunks[send_idx];
         comm.send(next, base_tag + (p + s) as u64, buf[a..b].to_vec());
-        let incoming = comm.recv(prev, base_tag + (p + s) as u64);
+        let incoming = comm.recv(prev, base_tag + (p + s) as u64)?;
         let (a, b) = chunks[recv_idx];
         buf[a..b].copy_from_slice(&incoming);
     }
+    Ok(())
 }
 
 /// Gather each rank's (possibly differently-sized) vector to `root`.
@@ -127,20 +170,21 @@ pub fn gather(
     base_tag: u64,
     root: usize,
     mine: Vec<f64>,
-) -> Option<Vec<Vec<f64>>> {
+) -> Result<Option<Vec<Vec<f64>>>, CommError> {
+    entry_check(comm)?;
     if comm.rank() == root {
         let mut parts = vec![Vec::new(); comm.size()];
         for r in 0..comm.size() {
             if r == root {
                 parts[r] = mine.clone();
             } else {
-                parts[r] = comm.recv(r, base_tag + r as u64);
+                parts[r] = comm.recv(r, base_tag + r as u64)?;
             }
         }
-        Some(parts)
+        Ok(Some(parts))
     } else {
         comm.send(root, base_tag + comm.rank() as u64, mine);
-        None
+        Ok(None)
     }
 }
 
@@ -150,7 +194,8 @@ pub fn scatter(
     base_tag: u64,
     root: usize,
     parts: Option<Vec<Vec<f64>>>,
-) -> Vec<f64> {
+) -> Result<Vec<f64>, CommError> {
+    entry_check(comm)?;
     if comm.rank() == root {
         let parts = parts.expect("root must supply parts");
         assert_eq!(parts.len(), comm.size());
@@ -162,7 +207,7 @@ pub fn scatter(
                 comm.send(r, base_tag + r as u64, part);
             }
         }
-        mine
+        Ok(mine)
     } else {
         comm.recv(root, base_tag + comm.rank() as u64)
     }
@@ -170,7 +215,12 @@ pub fn scatter(
 
 /// Allgather: everyone ends with the concatenation (by rank) of all
 /// inputs. Implemented as ring rotation, (p−1) steps.
-pub fn allgather(comm: &dyn Communicator, base_tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
+pub fn allgather(
+    comm: &dyn Communicator,
+    base_tag: u64,
+    mine: Vec<f64>,
+) -> Result<Vec<Vec<f64>>, CommError> {
+    entry_check(comm)?;
     let p = comm.size();
     let rank = comm.rank();
     let mut parts: Vec<Vec<f64>> = vec![Vec::new(); p];
@@ -181,9 +231,59 @@ pub fn allgather(comm: &dyn Communicator, base_tag: u64, mine: Vec<f64>) -> Vec<
         let send_idx = (rank + p - s) % p;
         let recv_idx = (rank + p - s - 1) % p;
         comm.send(next, base_tag + s as u64, parts[send_idx].clone());
-        parts[recv_idx] = comm.recv(prev, base_tag + s as u64);
+        parts[recv_idx] = comm.recv(prev, base_tag + s as u64)?;
     }
-    parts
+    Ok(parts)
+}
+
+/// Infallible convenience wrappers for callers whose groups can never be
+/// poisoned — single-rank groups, direct library use, tests, and the
+/// paper-table benches. The fallible variants' only error source is the
+/// coordinator's poison/hard-cancel machinery, so outside it these
+/// `expect`s are unreachable; inside the coordinator, use the fallible
+/// variants and propagate.
+pub mod infallible {
+    use super::Communicator;
+
+    const MSG: &str = "collective failed on an unpoisoned group";
+
+    pub fn broadcast(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut Vec<f64>) {
+        super::broadcast(comm, base_tag, root, buf).expect(MSG);
+    }
+
+    pub fn reduce_sum(comm: &dyn Communicator, base_tag: u64, root: usize, buf: &mut Vec<f64>) {
+        super::reduce_sum(comm, base_tag, root, buf).expect(MSG);
+    }
+
+    pub fn allreduce_sum(comm: &dyn Communicator, base_tag: u64, buf: &mut [f64]) {
+        super::allreduce_sum(comm, base_tag, buf).expect(MSG);
+    }
+
+    pub fn gather(
+        comm: &dyn Communicator,
+        base_tag: u64,
+        root: usize,
+        mine: Vec<f64>,
+    ) -> Option<Vec<Vec<f64>>> {
+        super::gather(comm, base_tag, root, mine).expect(MSG)
+    }
+
+    pub fn scatter(
+        comm: &dyn Communicator,
+        base_tag: u64,
+        root: usize,
+        parts: Option<Vec<Vec<f64>>>,
+    ) -> Vec<f64> {
+        super::scatter(comm, base_tag, root, parts).expect(MSG)
+    }
+
+    pub fn allgather(comm: &dyn Communicator, base_tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
+        super::allgather(comm, base_tag, mine).expect(MSG)
+    }
+
+    pub fn barrier(comm: &dyn Communicator) {
+        comm.barrier().expect(MSG);
+    }
 }
 
 #[cfg(test)]
@@ -216,7 +316,7 @@ mod tests {
                     } else {
                         Vec::new()
                     };
-                    broadcast(c, 10, root, &mut buf);
+                    broadcast(c, 10, root, &mut buf).unwrap();
                     buf
                 });
                 for v in out {
@@ -231,7 +331,7 @@ mod tests {
         for p in 1..=6usize {
             let out = run_group(p, move |c| {
                 let mut buf = vec![c.rank() as f64 + 1.0, 10.0];
-                reduce_sum(c, 20, 0, &mut buf);
+                reduce_sum(c, 20, 0, &mut buf).unwrap();
                 (c.rank(), buf)
             });
             let expect0: f64 = (1..=p).map(|r| r as f64).sum();
@@ -250,7 +350,7 @@ mod tests {
                 let out = run_group(p, move |c| {
                     let mut buf: Vec<f64> =
                         (0..n).map(|i| (i + c.rank() * 100) as f64).collect();
-                    allreduce_sum(c, 30, &mut buf);
+                    allreduce_sum(c, 30, &mut buf).unwrap();
                     buf
                 });
                 let want: Vec<f64> = (0..n)
@@ -270,10 +370,9 @@ mod tests {
         for p in 1..=4usize {
             let out = run_group(p, move |c| {
                 let mine = vec![c.rank() as f64; c.rank() + 1];
-                let gathered = gather(c, 40, 0, mine);
+                let gathered = gather(c, 40, 0, mine).unwrap();
                 // root redistributes what it gathered
-                let got = scatter(c, 41, 0, gathered);
-                got
+                scatter(c, 41, 0, gathered).unwrap()
             });
             for (r, v) in out.into_iter().enumerate() {
                 assert_eq!(v, vec![r as f64; r + 1]);
@@ -285,7 +384,7 @@ mod tests {
     fn allgather_concatenates_by_rank() {
         for p in 1..=5usize {
             let out = run_group(p, move |c| {
-                allgather(c, 50, vec![c.rank() as f64 * 2.0])
+                allgather(c, 50, vec![c.rank() as f64 * 2.0]).unwrap()
             });
             for parts in out {
                 assert_eq!(parts.len(), p);
@@ -294,5 +393,50 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn infallible_wrappers_match_fallible_results() {
+        let out = run_group(3, |c| {
+            let mut buf = vec![c.rank() as f64; 4];
+            infallible::allreduce_sum(c, 60, &mut buf);
+            infallible::barrier(c);
+            buf
+        });
+        for v in out {
+            assert_eq!(v, vec![3.0; 4]);
+        }
+    }
+
+    #[test]
+    fn poisoned_group_fails_every_algorithm_fast() {
+        use crate::collectives::{CommError, PoisonCause};
+        let comms = LocalComm::group(2, None);
+        comms[0].poison(PoisonCause::RankFailed(1));
+        let c = &comms[0];
+        let mut buf = vec![1.0, 2.0];
+        assert_eq!(
+            allreduce_sum(c, 70, &mut buf).unwrap_err(),
+            CommError::PeerFailed { rank: 1 }
+        );
+        assert!(broadcast(c, 71, 1, &mut buf).is_err());
+        assert!(c.barrier().is_err());
+        // gather on a non-root rank only sends — but root would hang, so
+        // the root path must error
+        assert!(gather(c, 72, 0, vec![0.0]).is_err());
+
+        // size-1 groups must observe the poison too: a hard cancel on a
+        // single-worker session has no peers, but its routine's next
+        // collective must still unwind it (the early-return path cannot
+        // skip the check)
+        let solo = LocalComm::group(1, None).pop().unwrap();
+        solo.poison(crate::collectives::PoisonCause::HardCancel);
+        let mut buf = vec![1.0];
+        assert_eq!(
+            allreduce_sum(&solo, 73, &mut buf).unwrap_err(),
+            CommError::Cancelled
+        );
+        assert!(solo.barrier().is_err());
+        assert!(allgather(&solo, 74, vec![0.0]).is_err());
     }
 }

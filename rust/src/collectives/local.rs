@@ -5,14 +5,22 @@
 //! [`crate::config::SimNetConfig`] cost model charges each *received*
 //! message with modeled interconnect time so the SimClock can reconstruct
 //! what the same traffic would cost across nodes.
+//!
+//! The fabric is poison-aware (protocol v5 fault isolation): `poison`
+//! stamps the shared state and wakes every rank blocked in a mailbox wait
+//! or in the barrier, so a dead rank's peers unwind with a
+//! [`CommError`] instead of blocking forever. Because one fabric serves a
+//! session across many tasks, the driver calls [`LocalComm::reset`]
+//! between tasks to clear the poison and drain undelivered messages.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::config::SimNetConfig;
 
-use super::Communicator;
+use super::{CommError, Communicator, PoisonCause};
 
 type Key = (usize, u64); // (sender, tag)
 
@@ -23,10 +31,37 @@ struct Mailbox {
     signal: Condvar,
 }
 
+/// Condvar barrier (std's [`std::sync::Barrier`] cannot be woken early,
+/// which is exactly what poisoning needs to do).
+#[derive(Default)]
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+}
+
 struct Shared {
     boxes: Vec<Mailbox>,
-    barrier: Barrier,
+    barrier: Mutex<BarrierState>,
+    barrier_cv: Condvar,
+    /// First poison wins: the recorded cause is the root cause.
+    poison: Mutex<Option<PoisonCause>>,
+    /// Lock-free fast-path mirror of `poison.is_some()`: every receive
+    /// attempt and barrier pass checks for poison, and in steady state
+    /// (never poisoned) all ranks would otherwise contend on the one
+    /// fabric-global poison mutex from inside their mailbox/barrier
+    /// critical sections. Set (Release) after the cause is recorded;
+    /// cleared by `reset`.
+    poison_flag: AtomicBool,
     simnet: Option<SimNetConfig>,
+}
+
+impl Shared {
+    fn poisoned(&self) -> Option<PoisonCause> {
+        if !self.poison_flag.load(Ordering::Acquire) {
+            return None;
+        }
+        *self.poison.lock().unwrap()
+    }
 }
 
 /// One rank's endpoint into the shared in-proc fabric.
@@ -68,7 +103,10 @@ impl LocalComm {
         }
         let shared = Arc::new(Shared {
             boxes: (0..size).map(|_| Mailbox::default()).collect(),
-            barrier: Barrier::new(size),
+            barrier: Mutex::new(BarrierState::default()),
+            barrier_cv: Condvar::new(),
+            poison: Mutex::new(None),
+            poison_flag: AtomicBool::new(false),
             simnet,
         });
         global_ranks
@@ -90,11 +128,71 @@ impl LocalComm {
         self.global_rank
     }
 
+    /// Driver-side reset between tasks on the same group: clear the
+    /// poison, drain every undelivered message (a failed task may have
+    /// left sends its dead peer never received — the next task must not
+    /// read them as its own traffic), and zero the barrier arrival count.
+    ///
+    /// Callers must guarantee no rank of the group is inside a collective
+    /// (the dispatcher calls this only after every rank's task reply has
+    /// been gathered).
+    pub fn reset(&self) {
+        // cause first, flag second: a racing reader that still sees the
+        // flag set falls through to the mutex and reads the cleared
+        // cause — i.e. observes "not poisoned", never a stale cause
+        *self.shared.poison.lock().unwrap() = None;
+        self.shared.poison_flag.store(false, Ordering::Release);
+        for mbox in &self.shared.boxes {
+            mbox.queues.lock().unwrap().clear();
+        }
+        self.shared.barrier.lock().unwrap().arrived = 0;
+    }
+
     fn charge(&self, bytes: usize) {
         if let Some(net) = &self.shared.simnet {
             let secs = net.transfer_secs(bytes);
             self.sim_ns
                 .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Shared receive loop: block until a matching message, the poison,
+    /// or (when `deadline` is set) the deadline — whichever comes first.
+    /// Poison wins over an available message so unwinding is prompt and
+    /// deterministic once the group has failed.
+    fn recv_inner(
+        &self,
+        from: usize,
+        tag: u64,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<f64>, CommError> {
+        let mbox = &self.shared.boxes[self.rank];
+        let mut queues = mbox.queues.lock().unwrap();
+        loop {
+            // checked while holding the queue lock: `poison` notifies
+            // under this lock, so a waiter can never miss the wakeup
+            if let Some(cause) = self.shared.poisoned() {
+                return Err(cause.to_err());
+            }
+            if let Some(q) = queues.get_mut(&(from, tag)) {
+                if let Some(data) = q.pop_front() {
+                    drop(queues);
+                    self.charge(data.len() * 8);
+                    return Ok(data);
+                }
+            }
+            match deadline {
+                None => queues = mbox.signal.wait(queues).unwrap(),
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(CommError::Timeout { from, tag });
+                    }
+                    let (guard, _) =
+                        mbox.signal.wait_timeout(queues, deadline - now).unwrap();
+                    queues = guard;
+                }
+            }
         }
     }
 }
@@ -116,23 +214,72 @@ impl Communicator for LocalComm {
         mbox.signal.notify_all();
     }
 
-    fn recv(&self, from: usize, tag: u64) -> Vec<f64> {
-        let mbox = &self.shared.boxes[self.rank];
-        let mut queues = mbox.queues.lock().unwrap();
+    fn recv(&self, from: usize, tag: u64) -> Result<Vec<f64>, CommError> {
+        self.recv_inner(from, tag, None)
+    }
+
+    fn recv_deadline(
+        &self,
+        from: usize,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<Vec<f64>, CommError> {
+        self.recv_inner(from, tag, Some(Instant::now() + timeout))
+    }
+
+    fn barrier(&self) -> Result<(), CommError> {
+        let shared = &self.shared;
+        let mut st = shared.barrier.lock().unwrap();
+        if let Some(cause) = shared.poisoned() {
+            return Err(cause.to_err());
+        }
+        st.arrived += 1;
+        if st.arrived == self.size {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            shared.barrier_cv.notify_all();
+            return Ok(());
+        }
+        let generation = st.generation;
         loop {
-            if let Some(q) = queues.get_mut(&(from, tag)) {
-                if let Some(data) = q.pop_front() {
-                    drop(queues);
-                    self.charge(data.len() * 8);
-                    return data;
-                }
+            st = shared.barrier_cv.wait(st).unwrap();
+            if st.generation != generation {
+                return Ok(());
             }
-            queues = mbox.signal.wait(queues).unwrap();
+            if let Some(cause) = shared.poisoned() {
+                // departing with an error: undo our arrival so the count
+                // stays consistent (moot while poisoned — every call
+                // errors up front — but `reset` relies on it)
+                st.arrived -= 1;
+                return Err(cause.to_err());
+            }
         }
     }
 
-    fn barrier(&self) {
-        self.shared.barrier.wait();
+    fn poison(&self, cause: PoisonCause) {
+        {
+            let mut p = self.shared.poison.lock().unwrap();
+            if p.is_none() {
+                *p = Some(cause);
+            }
+            // flag set AFTER the cause, inside the critical section: any
+            // reader that observes the flag finds the cause recorded
+            self.shared.poison_flag.store(true, Ordering::Release);
+        }
+        // wake every rank blocked in a mailbox wait; notifying under the
+        // queue lock makes the wakeup race-free against a waiter that
+        // just checked the poison and is about to wait
+        for mbox in &self.shared.boxes {
+            let _guard = mbox.queues.lock().unwrap();
+            mbox.signal.notify_all();
+        }
+        // and everyone parked in the barrier
+        let _guard = self.shared.barrier.lock().unwrap();
+        self.shared.barrier_cv.notify_all();
+    }
+
+    fn poison_cause(&self) -> Option<PoisonCause> {
+        self.shared.poisoned()
     }
 
     fn sim_comm_secs(&self) -> f64 {
@@ -168,9 +315,9 @@ mod tests {
                 c.send(1, 9, vec![3.0]);
             } else {
                 // tag 9 can be read before tag 5's backlog
-                assert_eq!(c.recv(0, 9), vec![3.0]);
-                assert_eq!(c.recv(0, 5), vec![1.0]);
-                assert_eq!(c.recv(0, 5), vec![2.0]);
+                assert_eq!(c.recv(0, 9).unwrap(), vec![3.0]);
+                assert_eq!(c.recv(0, 5).unwrap(), vec![1.0]);
+                assert_eq!(c.recv(0, 5).unwrap(), vec![2.0]);
             }
         });
     }
@@ -182,9 +329,18 @@ mod tests {
         COUNT.store(0, Ordering::SeqCst);
         spawn_ranks(4, |c| {
             COUNT.fetch_add(1, Ordering::SeqCst);
-            c.barrier();
+            c.barrier().unwrap();
             // after the barrier every rank must observe all 4 arrivals
             assert_eq!(COUNT.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    #[test]
+    fn barrier_reusable_across_generations() {
+        spawn_ranks(3, |c| {
+            for _ in 0..50 {
+                c.barrier().unwrap();
+            }
         });
     }
 
@@ -209,9 +365,9 @@ mod tests {
                 let next = (c.rank() + 1) % c.size();
                 let prev = (c.rank() + c.size() - 1) % c.size();
                 c.send(next, 7, vec![c.global_rank() as f64]);
-                let got = c.recv(prev, 7);
+                let got = c.recv(prev, 7).unwrap();
                 assert_eq!(got.len(), 1);
-                c.barrier();
+                c.barrier().unwrap();
                 got[0]
             }));
         }
@@ -238,10 +394,79 @@ mod tests {
             c0.send(1, 0, vec![0.0; 1000]);
             c0.sim_comm_secs()
         });
-        let _ = c1.recv(0, 0);
+        let _ = c1.recv(0, 0).unwrap();
         let sender_cost = t.join().unwrap();
         assert_eq!(sender_cost, 0.0);
         // 8000 bytes at 1 GB/s + 1 µs = 9 µs
         assert!((c1.sim_comm_secs() - 9e-6).abs() < 1e-7, "{}", c1.sim_comm_secs());
+    }
+
+    #[test]
+    fn recv_deadline_times_out_without_poisoning() {
+        let comms = LocalComm::group(2, None);
+        let err = comms[0]
+            .recv_deadline(1, 3, Duration::from_millis(20))
+            .unwrap_err();
+        assert_eq!(err, CommError::Timeout { from: 1, tag: 3 });
+        assert_eq!(comms[0].poison_cause(), None);
+        // a message that arrives in time is still delivered
+        comms[1].send(0, 3, vec![8.0]);
+        assert_eq!(
+            comms[0].recv_deadline(1, 3, Duration::from_secs(5)).unwrap(),
+            vec![8.0]
+        );
+    }
+
+    #[test]
+    fn poison_wakes_blocked_recv_and_barrier() {
+        let mut comms = LocalComm::group(3, None);
+        let dead = comms.pop().unwrap(); // rank 2 "dies" without collecting
+        let mut handles = Vec::new();
+        for c in comms {
+            handles.push(std::thread::spawn(move || {
+                if c.rank() == 0 {
+                    c.recv(2, 1).unwrap_err()
+                } else {
+                    c.barrier().unwrap_err()
+                }
+            }));
+        }
+        // let both block, then poison (what rank 2's worker loop does)
+        std::thread::sleep(Duration::from_millis(50));
+        dead.poison(PoisonCause::RankFailed(2));
+        for h in handles {
+            assert_eq!(h.join().unwrap(), CommError::PeerFailed { rank: 2 });
+        }
+    }
+
+    #[test]
+    fn first_poison_cause_wins() {
+        let comms = LocalComm::group(2, None);
+        comms[0].poison(PoisonCause::RankFailed(0));
+        comms[1].poison(PoisonCause::HardCancel);
+        assert_eq!(comms[0].poison_cause(), Some(PoisonCause::RankFailed(0)));
+        assert_eq!(
+            comms[1].recv(0, 0).unwrap_err(),
+            CommError::PeerFailed { rank: 0 }
+        );
+    }
+
+    #[test]
+    fn reset_clears_poison_and_drains_stale_messages() {
+        let comms = LocalComm::group(2, None);
+        // a failed "task" leaves an undelivered message and a poison
+        comms[0].send(1, 9, vec![1.0]);
+        comms[0].poison(PoisonCause::RankFailed(0));
+        assert!(comms[1].recv(0, 9).is_err());
+        comms[1].reset();
+        assert_eq!(comms[0].poison_cause(), None);
+        // the stale message is gone: a deadline recv times out
+        assert_eq!(
+            comms[1].recv_deadline(0, 9, Duration::from_millis(20)),
+            Err(CommError::Timeout { from: 0, tag: 9 })
+        );
+        // and the fabric is fully usable again
+        comms[0].send(1, 9, vec![2.0]);
+        assert_eq!(comms[1].recv(0, 9).unwrap(), vec![2.0]);
     }
 }

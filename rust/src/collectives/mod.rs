@@ -14,6 +14,19 @@
 //! arbitrary rank subset — the substrate for session-scoped worker groups
 //! (disjoint sessions collect over disjoint fabrics, so they never
 //! serialize on each other).
+//!
+//! **Failure propagation (protocol v5).** Collectives are *fallible*: a
+//! rank that panics, errors, or is hard-cancelled cannot contribute to its
+//! peers' collectives, and without intervention those peers would block in
+//! an allreduce forever (the availability bug the Cray deployment
+//! follow-up calls out). The fix is group *poisoning*: when a rank fails,
+//! its worker loop calls [`Communicator::poison`] with the failed rank,
+//! and every peer blocked in — or later entering — `recv`/`barrier` wakes
+//! immediately with [`CommError::PeerFailed`] instead of waiting for a
+//! contribution that will never come. The [`algorithms`] are all
+//! `Result`-returning and propagate the first failure; the
+//! [`algorithms::infallible`] wrappers exist for callers whose groups can
+//! never be poisoned (single-rank groups, direct library use, benches).
 
 pub mod algorithms;
 pub mod local;
@@ -23,21 +36,118 @@ pub use algorithms::{
 };
 pub use local::LocalComm;
 
+/// Why a collective operation failed. Only the coordinator's fault
+/// machinery produces these: outside it (direct library use, tests) the
+/// fallible collectives cannot fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommError {
+    /// The group is poisoned because group-local `rank` failed (panicked
+    /// or returned an error) while its peers were — or were about to be —
+    /// blocked in a collective. Errors carrying this variant are
+    /// *collateral*: the named rank is the root cause, not the rank that
+    /// observed the error.
+    PeerFailed { rank: usize },
+    /// The group was poisoned by a hard cancel (a `CancelTask
+    /// { hard_after_ms }` escalation or forced session teardown), not by
+    /// a rank failure.
+    Cancelled,
+    /// [`Communicator::recv_deadline`] elapsed without a matching
+    /// message; the group is *not* poisoned.
+    Timeout { from: usize, tag: u64 },
+}
+
+impl CommError {
+    /// Whether this error is *collateral* — the observing rank unwound
+    /// because the group was already poisoned, rather than failing on its
+    /// own. Both the worker loop (to avoid re-poisoning over the root
+    /// cause) and the dispatcher's failure aggregation (to report the
+    /// root cause, not its blast radius) classify through this one
+    /// predicate so they can never disagree. `Timeout` is a local
+    /// failure, not collateral.
+    pub fn is_collateral(&self) -> bool {
+        matches!(self, CommError::PeerFailed { .. } | CommError::Cancelled)
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::PeerFailed { rank } => {
+                write!(f, "collective aborted: peer rank {rank} failed")
+            }
+            CommError::Cancelled => {
+                write!(f, "collective aborted: task hard-cancelled")
+            }
+            CommError::Timeout { from, tag } => {
+                write!(f, "recv deadline expired waiting for rank {from} (tag {tag})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// What poisoned a group (see [`Communicator::poison`]). Stored once per
+/// fabric; the first poisoner wins, so the recorded cause is the *root*
+/// cause even when collateral failures cascade afterwards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoisonCause {
+    /// Group-local rank that failed on its own (panic or error).
+    RankFailed(usize),
+    /// Deadline escalation / teardown: no rank failed, the driver pulled
+    /// the plug.
+    HardCancel,
+}
+
+impl PoisonCause {
+    /// The error every blocked/arriving rank observes for this poison.
+    pub fn to_err(self) -> CommError {
+        match self {
+            PoisonCause::RankFailed(rank) => CommError::PeerFailed { rank },
+            PoisonCause::HardCancel => CommError::Cancelled,
+        }
+    }
+}
+
 /// Point-to-point message transport between ranks of one worker group.
 ///
 /// Messages are `Vec<f64>` (every payload in this system is double
 /// precision) addressed by `(peer, tag)`; tags keep concurrent collectives
 /// from interleaving. Implementations must deliver messages from the same
 /// (sender, tag) in order.
+///
+/// Receive paths and the barrier are fallible: once the group is poisoned
+/// (see [`Communicator::poison`]) every blocked or arriving rank observes
+/// the poison as a [`CommError`] instead of blocking forever. `send` stays
+/// infallible — it is buffered and never blocks, and a send into a
+/// poisoned group is simply never received.
 pub trait Communicator: Send {
     fn rank(&self) -> usize;
     fn size(&self) -> usize;
     /// Non-blocking buffered send.
     fn send(&self, to: usize, tag: u64, data: Vec<f64>);
-    /// Blocking receive.
-    fn recv(&self, from: usize, tag: u64) -> Vec<f64>;
-    /// Block until every rank arrives.
-    fn barrier(&self);
+    /// Blocking receive; wakes with the poison error if the group is (or
+    /// becomes) poisoned.
+    fn recv(&self, from: usize, tag: u64) -> Result<Vec<f64>, CommError>;
+    /// [`Communicator::recv`] with a deadline: returns
+    /// [`CommError::Timeout`] if no matching message arrives within
+    /// `timeout` (poison still wins over the timeout).
+    fn recv_deadline(
+        &self,
+        from: usize,
+        tag: u64,
+        timeout: std::time::Duration,
+    ) -> Result<Vec<f64>, CommError>;
+    /// Block until every rank arrives — or the group is poisoned, in
+    /// which case every waiter (and every later arriver) errors instead.
+    fn barrier(&self) -> Result<(), CommError>;
+    /// Poison the whole group: every rank blocked in (or later calling)
+    /// `recv`/`recv_deadline`/`barrier` errors with `cause`'s
+    /// [`CommError`]. Idempotent; the first cause is kept (it is the root
+    /// cause — later poisons are collateral).
+    fn poison(&self, cause: PoisonCause);
+    /// The group's current poison, if any.
+    fn poison_cause(&self) -> Option<PoisonCause>;
     /// Modeled communication seconds charged to this rank so far (for
     /// simulated-cluster-time accounting); implementations without a cost
     /// model return 0.

@@ -153,6 +153,12 @@ pub struct SchedulerConfig {
     /// returning more outputs fails cleanly instead of colliding with
     /// later ids (the v3 window was a fixed, unvalidated 64).
     pub max_task_outputs: u64,
+    /// Milliseconds session teardown waits for a running task to observe
+    /// its cooperative cancel token before escalating to a group poison
+    /// (forcibly unwinding the routine at its next collective). 0
+    /// disables the escalation — teardown then waits out the routine's
+    /// remaining runtime, the pre-v5 behavior.
+    pub teardown_grace_ms: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -204,6 +210,7 @@ impl Default for Config {
                 queue_timeout_s: 30.0,
                 task_queue_depth: 16,
                 max_task_outputs: 64,
+                teardown_grace_ms: 2_000,
             },
             spark_driver_max_bytes: 192 << 20,
         }
@@ -301,6 +308,9 @@ impl Config {
             }
             "scheduler.max_task_outputs" => {
                 self.scheduler.max_task_outputs = int(value)? as u64
+            }
+            "scheduler.teardown_grace_ms" => {
+                self.scheduler.teardown_grace_ms = int(value)? as u64
             }
             "spark_driver_max_bytes" => {
                 self.spark_driver_max_bytes = int(value)?

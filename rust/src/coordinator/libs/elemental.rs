@@ -17,8 +17,17 @@
 //!   slice), then the group barriers — used by the multi-tenant tests to
 //!   prove disjoint session groups run concurrently, and by the
 //!   async-task tests as the pollable/cancellable long-running routine
-//! * `fail_on(rank)` → error-reporting diagnostic: that group-local rank
-//!   fails, the others succeed (exercises per-rank failure tagging)
+//! * `spin(millis)` → cancellation-contract violator (diagnostic): runs
+//!   `millis` of collectively-synchronized 10 ms slices while
+//!   deliberately ignoring the cooperative cancel token — only a hard
+//!   cancel (`CancelTask { hard_after_ms }` poisoning the group) can end
+//!   it early, which is exactly what the fault-isolation tests need
+//! * `fail_on(rank [, panic, strand])` → failure-injection diagnostic:
+//!   that group-local rank fails (`panic=1`: by panicking instead of
+//!   erroring); with `strand=1` the surviving ranks enter an allreduce
+//!   the dead rank never joins, so only failure propagation (the group
+//!   poison) releases them (exercises per-rank failure tagging and
+//!   root-cause vs collateral reporting)
 
 use std::path::Path;
 
@@ -51,6 +60,7 @@ impl Library for Elemental {
             "rand_matrix",
             "fro_norm",
             "sleep",
+            "spin",
             "fail_on",
         ]
     }
@@ -70,6 +80,7 @@ impl Library for Elemental {
             "rand_matrix" => rand_matrix(params, ctx),
             "fro_norm" => fro_norm(params, ctx),
             "sleep" => sleep_routine(params, ctx),
+            "spin" => spin_routine(params, ctx),
             "fail_on" => fail_on(params, ctx),
             other => anyhow::bail!("elemental has no routine {other:?}"),
         }
@@ -148,7 +159,7 @@ fn gemm(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
     let mut sw = Stopwatch::new();
     sw.start("compute");
     // allgather B's row blocks so every rank holds the full right factor
-    let parts = allgather(ctx.comm, 0x4D4D_0000, b_local.into_data());
+    let parts = allgather(ctx.comm, 0x4D4D_0000, b_local.into_data())?;
     let mut b_full = LocalMatrix::zeros(b_layout.rows, b_layout.cols);
     for (rank, part) in parts.into_iter().enumerate() {
         let (lo, hi) = b_layout.ranges[rank];
@@ -263,7 +274,7 @@ fn sleep_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutp
     ctx.scope.collective_check_cancelled(ctx.comm, 0x534C_0000)?;
     // a group barrier proves every member executed on this session's own
     // communicator (a wrong-sized group would hang, not silently pass)
-    ctx.comm.barrier();
+    ctx.comm.barrier()?;
     sw.stop();
     Ok(TaskOutput {
         matrices: vec![],
@@ -272,9 +283,60 @@ fn sleep_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutp
     })
 }
 
-/// Error-reporting diagnostic: the given group-local rank fails, the
+/// Cancellation-contract violator (diagnostic): collectively-synchronized
+/// 10 ms slices for `millis`, *deliberately ignoring* the cooperative
+/// cancel token. A plain `CancelTask` has no effect on it; a hard cancel
+/// (`hard_after_ms` escalation) poisons the group and the next collective
+/// unwinds every rank — the fault-isolation tests use it to prove the
+/// escalation path bounds uncooperative routines.
+fn spin_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let millis = params.i64("millis")?;
+    anyhow::ensure!((0..=60_000).contains(&millis), "millis must be in [0, 60000]");
+    let mut sw = Stopwatch::new();
+    sw.start("compute");
+    const SLICE_MS: u64 = 10;
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(millis as u64);
+    let mut slices = 0u64;
+    loop {
+        // the exit decision must be COLLECTIVE: ranks start the routine
+        // at slightly different instants, so per-rank deadline checks
+        // between collectives would let the earliest rank leave while a
+        // peer re-enters and waits forever. The allreduce keeps the
+        // group in lockstep and is where the hard cancel's poison lands;
+        // the cooperative token is never consulted (tag rotates like
+        // cg's per-iteration windows so back-to-back rounds never mix)
+        let mut done =
+            [if std::time::Instant::now() >= deadline { 1.0 } else { 0.0 }];
+        crate::collectives::allreduce_sum(
+            ctx.comm,
+            0x5350_0000 + (slices % 64) * 256,
+            &mut done,
+        )?;
+        if done[0] > 0.0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(SLICE_MS));
+        slices += 1;
+        ctx.scope.report(slices, crate::tasks::NO_RESIDUAL);
+    }
+    sw.stop();
+    Ok(TaskOutput {
+        matrices: vec![],
+        scalars: Params::new().with_i64("ranks", ctx.comm.size() as i64),
+        timings: vec![("compute".into(), sw.secs("compute"))],
+    })
+}
+
+/// Failure-injection diagnostic: the given group-local rank fails, the
 /// rest succeed with no outputs — the async-task tests use it to prove a
 /// one-rank wedge is reported distinguishably from a group-wide failure.
+///
+/// `panic = 1` makes the chosen rank panic instead of returning an error
+/// (exercising the worker loop's `catch_unwind` → poison path), and
+/// `strand = 1` sends the surviving ranks into an allreduce the dead rank
+/// never joins — without failure propagation they would block there
+/// forever, which is precisely the bug protocol v5 fixes.
 fn fail_on(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
     let rank = params.i64("rank")?;
     anyhow::ensure!(
@@ -282,8 +344,20 @@ fn fail_on(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
         "rank {rank} outside the group of {}",
         ctx.comm.size()
     );
+    let panic_mode = params.i64_or("panic", 0)? != 0;
+    let strand = params.i64_or("strand", 0)? != 0;
     if ctx.rank as i64 == rank {
+        // fail BEFORE the peers' collective below: with `strand` they are
+        // (or soon will be) blocked in it, and only the group poison this
+        // rank's worker loop applies can release them
+        if panic_mode {
+            panic!("diagnostic panic injected on rank {rank}");
+        }
         anyhow::bail!("diagnostic failure injected on rank {rank}");
+    }
+    if strand {
+        let mut probe = [1.0];
+        crate::collectives::allreduce_sum(ctx.comm, 0x464F_0000, &mut probe)?;
     }
     Ok(TaskOutput::default())
 }
@@ -292,7 +366,7 @@ fn fro_norm(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
     let a_id = params.matrix("A")?;
     let (_, a_local) = ctx.local_block(a_id)?;
     let mut sq = vec![a_local.fro_sq()];
-    crate::collectives::allreduce_sum(ctx.comm, 0x4652_0000, &mut sq);
+    crate::collectives::allreduce_sum(ctx.comm, 0x4652_0000, &mut sq)?;
     Ok(TaskOutput {
         matrices: vec![],
         scalars: Params::new().with_f64("norm", sq[0].sqrt()),

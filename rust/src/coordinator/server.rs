@@ -29,7 +29,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::collectives::LocalComm;
+use crate::collectives::{CommError, Communicator, LocalComm, PoisonCause};
 use crate::config::{Config, SchedulerConfig, TransferConfig};
 use crate::distmat::RowBlockLayout;
 use crate::metrics::{SchedMetrics, SchedSnapshot, TaskOutcome};
@@ -62,6 +62,13 @@ struct TaskRecord {
     cancel: Arc<CancelToken>,
     /// One live progress slot per group-local rank.
     progress: Vec<Arc<RankProgress>>,
+    /// Earliest hard-cancel deadline armed for this task, if any. A
+    /// repeat `CancelTask { hard_after_ms }` only spawns a new watchdog
+    /// when it *tightens* the deadline — identical or looser requests
+    /// must not each pin a sleeping thread (and the Session Arc) for the
+    /// grace period, while a client correcting an over-long deadline
+    /// still can.
+    hard_deadline: Mutex<Option<Instant>>,
     submitted: Instant,
 }
 
@@ -168,6 +175,11 @@ struct Session {
     /// Global worker ranks in group order: `ranks[i]` is the worker with
     /// group-local rank `i`.
     ranks: Vec<usize>,
+    /// Rank-0 endpoint of the group's communicator, retained as the
+    /// driver's poison/reset handle (never used to send or receive): the
+    /// hard-cancel watchdog poisons through it and the dispatcher resets
+    /// the fabric through it between tasks.
+    fabric: Arc<LocalComm>,
     /// Per-session config snapshot (transfer knobs travel with the
     /// session so future PRs can negotiate them per client).
     transfer: TransferConfig,
@@ -321,8 +333,11 @@ impl Driver {
     /// Close a session's task table: mark it closing (the dispatcher
     /// exits once idle, and further submissions are rejected), cancel
     /// queued tasks without running them, and set the running task's
-    /// cooperative token. Idempotent.
-    fn drain_tasks(&self, session: &Session) {
+    /// cooperative token — escalating to a group poison after the
+    /// teardown grace period, so a routine that ignores the cooperative
+    /// contract cannot delay teardown by its remaining runtime.
+    /// Idempotent.
+    fn drain_tasks(&self, session: &Arc<Session>) {
         let mut st = session.tasks.state.lock().unwrap();
         st.closing = true;
         let drained: Vec<u64> = st.queue.drain(..).collect();
@@ -334,6 +349,14 @@ impl Driver {
         }
         if let Some(rec) = &st.running {
             rec.cancel.cancel();
+            let grace = self.cfg.scheduler.teardown_grace_ms;
+            if grace > 0 {
+                schedule_hard_cancel(
+                    session.clone(),
+                    rec.id,
+                    Duration::from_millis(grace),
+                );
+            }
         }
         session.tasks.cond.notify_all();
     }
@@ -414,17 +437,20 @@ impl Driver {
         let want = self.allocator.resolve_request(requested as usize)?;
         let id = self.next_session.fetch_add(1, Ordering::SeqCst);
         let ranks = self.allocator.acquire(id, want)?;
-        let comms = LocalComm::subgroup(&ranks, Some(self.cfg.simnet.clone()));
+        let comms: Vec<Arc<LocalComm>> =
+            LocalComm::subgroup(&ranks, Some(self.cfg.simnet.clone()))
+                .into_iter()
+                .map(Arc::new)
+                .collect();
+        // the rank-0 endpoint doubles as the driver's poison/reset handle
+        let fabric = comms[0].clone();
         for (&rank, comm) in ranks.iter().zip(comms) {
-            self.workers[rank]
-                .sessions
-                .lock()
-                .unwrap()
-                .insert(id, Arc::new(comm));
+            self.workers[rank].sessions.lock().unwrap().insert(id, comm);
         }
         let session = Arc::new(Session {
             id,
             ranks: ranks.clone(),
+            fabric,
             transfer: self.cfg.transfer.negotiate(rows_per_frame, buf_bytes),
             handles: Mutex::new(HashMap::new()),
             tasks: TaskTable::new(),
@@ -471,11 +497,12 @@ impl Driver {
         Ok(session)
     }
 
-    /// Tear a session down: cancel queued and running tasks, join the
+    /// Tear a session down: cancel queued and running tasks (escalating
+    /// to a group poison after the teardown grace period), join the
     /// dispatcher (so no task inserts store blocks after we free them),
     /// unbind communicator endpoints, free the session's matrices on
     /// every member worker, and return the ranks to the pool.
-    fn close_session(&self, session: &Session) {
+    fn close_session(&self, session: &Arc<Session>) {
         if self.sessions.lock().unwrap().remove(&session.id).is_none() {
             return; // already closed
         }
@@ -584,6 +611,7 @@ impl Driver {
                 .iter()
                 .map(|_| Arc::new(RankProgress::new()))
                 .collect(),
+            hard_deadline: Mutex::new(None),
             submitted: Instant::now(),
         });
         st.queue.push_back(task_id);
@@ -609,17 +637,28 @@ impl Driver {
     /// state *after* the request (still `Running` until its ranks observe
     /// the token — poll or `WaitTask` for the terminal state). Terminal
     /// tasks are left untouched (idempotent).
-    fn cancel_task(&self, session: &Session, task_id: u64) -> crate::Result<ControlMsg> {
+    ///
+    /// `hard_after_ms > 0` (protocol v5) arms the escalation watchdog: if
+    /// the task is still running once the cooperative grace period
+    /// elapses, the group's communicator is poisoned and the routine is
+    /// forcibly unwound at its next collective — bounding how long a
+    /// routine that ignores the cooperative contract can linger.
+    fn cancel_task(
+        &self,
+        session: &Arc<Session>,
+        task_id: u64,
+        hard_after_ms: u64,
+    ) -> crate::Result<ControlMsg> {
         let mut st = session.tasks.state.lock().unwrap();
         enum Act {
             CancelQueued,
-            CancelRunning(Arc<CancelToken>),
+            CancelRunning(Arc<TaskRecord>),
             Nothing,
         }
         let act = match st.slots.get(&task_id) {
             None => anyhow::bail!("unknown task {task_id}"),
             Some(TaskSlot::Queued(_)) => Act::CancelQueued,
-            Some(TaskSlot::Running(rec)) => Act::CancelRunning(rec.cancel.clone()),
+            Some(TaskSlot::Running(rec)) => Act::CancelRunning(rec.clone()),
             Some(TaskSlot::Terminal(_)) => Act::Nothing,
         };
         match act {
@@ -629,7 +668,25 @@ impl Driver {
                 self.metrics.task_dequeued(TaskOutcome::Cancelled);
                 session.tasks.cond.notify_all();
             }
-            Act::CancelRunning(token) => token.cancel(),
+            Act::CancelRunning(rec) => {
+                rec.cancel.cancel();
+                if hard_after_ms > 0 {
+                    // clamp to an hour: the watchdog thread and its
+                    // session Arc live until the deadline fires. Arm a
+                    // new watchdog only when this request TIGHTENS the
+                    // deadline: a client hammering cancel_hard must not
+                    // pile up sleeping threads, but one correcting an
+                    // over-long grace still can (the earliest watchdog
+                    // fires first; later ones find the task gone).
+                    let grace = Duration::from_millis(hard_after_ms.min(3_600_000));
+                    let deadline = Instant::now() + grace;
+                    let mut armed = rec.hard_deadline.lock().unwrap();
+                    if armed.is_none_or(|cur| deadline < cur) {
+                        *armed = Some(deadline);
+                        schedule_hard_cancel(session.clone(), task_id, grace);
+                    }
+                }
+            }
             Act::Nothing => {}
         }
         let state = wire_state(st.slots.get(&task_id).expect("slot exists"));
@@ -692,9 +749,9 @@ impl Driver {
         // stop closed every worker channel, the task fails cleanly with
         // no rank dispatched at all).
         let mut replies = Vec::new();
-        let mut dispatch_dead = false;
+        let mut dead_slot: Option<usize> = None;
         for (slot, &rank) in session.ranks.iter().enumerate() {
-            if dispatch_dead {
+            if dead_slot.is_some() {
                 replies.push((slot, None));
                 continue;
             }
@@ -709,14 +766,36 @@ impl Driver {
                 scope: TaskScope::new(rec.cancel.clone(), rec.progress[slot].clone()),
                 reply: tx,
             });
-            dispatch_dead = sent.is_err();
+            if sent.is_err() {
+                dead_slot = Some(slot);
+            }
             replies.push((slot, sent.is_ok().then_some(rx)));
+        }
+        // a dead worker channel means that rank will never enter the
+        // routine — but every rank already dispatched WILL, and would
+        // block in its first collective waiting for the missing member.
+        // Poison the fabric naming the dead slot so they unwind with
+        // PeerFailed (collateral) and the reply gather below terminates;
+        // the "worker thread is gone" error at the dead slot stays the
+        // reported root cause.
+        if let Some(slot) = dead_slot {
+            session.fabric.poison(PoisonCause::RankFailed(slot));
         }
         let mut results = Vec::new();
         let mut failures: Vec<(u32, anyhow::Error)> = Vec::new();
         for (slot, rx) in replies {
             let reply = match rx {
-                None => Err(anyhow::anyhow!("worker thread is gone")),
+                // the slot whose channel send failed is the root cause;
+                // slots after it were never dispatched at all — their
+                // "failure" is collateral of the dead slot, so tag them
+                // with the same CommError the poisoned ranks report and
+                // the aggregation below keeps failed_ranks = roots only
+                None if dead_slot == Some(slot) => {
+                    Err(anyhow::anyhow!("worker thread is gone"))
+                }
+                None => Err(anyhow::Error::new(CommError::PeerFailed {
+                    rank: dead_slot.expect("undispatched slots follow a dead one"),
+                })),
                 Some(rx) => rx
                     .recv()
                     .unwrap_or_else(|_| Err(anyhow::anyhow!("worker died mid-task"))),
@@ -743,15 +822,52 @@ impl Driver {
         }
         if !failures.is_empty() {
             let total = session.ranks.len();
-            let (first_rank, first_err) = &failures[0];
-            let message = format!(
-                "{} of {total} ranks failed; rank {first_rank}: {first_err:#}",
-                failures.len()
-            );
+            // root-cause-first reporting (protocol v5): a rank that
+            // failed on its own is the cause; ranks whose errors are
+            // `CommError` (PeerFailed / hard-cancel) merely unwound after
+            // the group was poisoned — collateral, not causes. The client
+            // must see "rank i panicked" with the peers' unwinding noted,
+            // never a peer's PeerFailed as the headline.
+            let is_collateral = |e: &anyhow::Error| {
+                e.downcast_ref::<CommError>().is_some_and(CommError::is_collateral)
+            };
+            let roots: Vec<&(u32, anyhow::Error)> =
+                failures.iter().filter(|(_, e)| !is_collateral(e)).collect();
+            let collateral: Vec<u32> = failures
+                .iter()
+                .filter(|(_, e)| is_collateral(e))
+                .map(|(r, _)| *r)
+                .collect();
+            let (message, failed_ranks) = if let Some((first_rank, first_err)) =
+                roots.first().map(|(r, e)| (r, e))
+            {
+                let mut message = format!(
+                    "{} of {total} ranks failed; rank {first_rank}: {first_err:#}",
+                    roots.len()
+                );
+                if !collateral.is_empty() {
+                    message.push_str(&format!(
+                        "; {} peer rank(s) {collateral:?} aborted after the failure",
+                        collateral.len()
+                    ));
+                }
+                (message, roots.iter().map(|(r, _)| *r).collect())
+            } else {
+                // no local root cause (e.g. a poison raced a token that
+                // cleared): report the collateral errors as-is
+                let (first_rank, first_err) = &failures[0];
+                (
+                    format!(
+                        "{} of {total} ranks failed; rank {first_rank}: {first_err:#}",
+                        failures.len()
+                    ),
+                    failures.iter().map(|(r, _)| *r).collect(),
+                )
+            };
             free_window();
             return TaskState::Failed {
                 message,
-                failed_ranks: failures.iter().map(|(r, _)| *r).collect(),
+                failed_ranks,
                 total_ranks: total as u32,
             };
         }
@@ -894,6 +1010,14 @@ fn task_dispatcher(driver: &Arc<Driver>, session: &Arc<Session>) {
             let mut st = session.tasks.state.lock().unwrap();
             st.set_terminal(rec.id, state);
             st.running = None;
+            // reset the group fabric between tasks UNDER the table lock:
+            // the hard-cancel watchdog checks `running` and poisons under
+            // this same lock, so a late watchdog can never poison after
+            // this reset (it observes running == None and stands down).
+            // Every rank has replied by now, so no rank is inside a
+            // collective; the reset clears any poison and drains messages
+            // a failed task left undelivered.
+            session.fabric.reset();
             // count the outcome BEFORE waking waiters: a client whose
             // wait() just returned may read sched_metrics() immediately
             // and must see this task as finished, not still running
@@ -901,6 +1025,31 @@ fn task_dispatcher(driver: &Arc<Driver>, session: &Arc<Session>) {
             session.tasks.cond.notify_all();
         }
     }
+}
+
+/// Escalation watchdog for `CancelTask { hard_after_ms }` and session
+/// teardown: once the cooperative grace period elapses, if the task is
+/// still running, poison the session's group fabric so every rank blocked
+/// in (or next entering) a collective unwinds with
+/// [`CommError::Cancelled`] instead of running to its natural end. The
+/// running-check and the poison happen under the task-table lock — the
+/// same lock the dispatcher holds while finalizing and resetting the
+/// fabric — so a watchdog firing after the task ended is a no-op, never a
+/// stale poison leaking into the next task.
+fn schedule_hard_cancel(session: Arc<Session>, task_id: u64, grace: Duration) {
+    std::thread::spawn(move || {
+        std::thread::sleep(grace);
+        let st = session.tasks.state.lock().unwrap();
+        let still_running = st.running.as_ref().is_some_and(|rec| rec.id == task_id);
+        if still_running {
+            session.fabric.poison(PoisonCause::HardCancel);
+            log::warn!(
+                "session {}: task {task_id} ignored cooperative cancellation for \
+                 {grace:?}; group poisoned (hard cancel)",
+                session.id
+            );
+        }
+    });
 }
 
 /// Handle to a running server; dropping does NOT stop it — call
@@ -1088,7 +1237,9 @@ fn handle_session_op(
             driver.submit_task(session, &lib, &routine, params)
         }
         ControlMsg::TaskStatus { task_id } => driver.task_status(session, task_id),
-        ControlMsg::CancelTask { task_id } => driver.cancel_task(session, task_id),
+        ControlMsg::CancelTask { task_id, hard_after_ms } => {
+            driver.cancel_task(session, task_id, hard_after_ms)
+        }
         ControlMsg::WaitTask { task_id, timeout_ms } => {
             driver.wait_task(session, task_id, timeout_ms)
         }

@@ -22,7 +22,7 @@ use std::net::TcpStream;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use crate::collectives::{Communicator, LocalComm};
+use crate::collectives::{CommError, Communicator, LocalComm, PoisonCause};
 use crate::compute::{build_engine, Engine};
 use crate::config::Config;
 use crate::distmat::RowBlockLayout;
@@ -108,82 +108,104 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                 scope,
                 reply,
             } => {
+                // looked up OUTSIDE the routine so a failure afterwards
+                // can poison the group fabric (failure propagation)
+                let comm = shared.sessions.lock().unwrap().get(&session_id).cloned();
                 // a panicking routine must not kill this worker thread: a
                 // dead rank never answers its reply channel and (worse)
-                // never reaches its collectives, wedging live peers. SPMD
-                // panics are usually uniform (same code, same shapes), so
-                // catching them turns the common case into a clean
-                // per-rank Failed reply; a rank that panics *between*
-                // peers' collectives can still strand them — see the
-                // fault-isolation follow-up in docs/tasks.md.
-                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    || -> crate::Result<TaskReply> {
-                    let comm = shared
-                        .sessions
-                        .lock()
-                        .unwrap()
-                        .get(&session_id)
-                        .cloned()
-                        .ok_or_else(|| {
-                            anyhow::anyhow!(
-                                "rank {rank}: session {session_id} holds no group here"
-                            )
-                        })?;
-                    if engine.is_none() {
-                        engine = Some(build_engine(&cfg)?);
-                    }
-                    let engine = engine.as_mut().unwrap();
-                    let local_rank = comm.rank();
-                    let cpu0 = thread_cpu_secs();
-                    let sim0 = comm.sim_comm_secs();
-                    let mut ctx = WorkerCtx {
-                        rank: local_rank,
-                        comm: comm.as_ref(),
-                        engine: engine.as_mut(),
-                        store: &shared.store,
-                        config: &cfg,
-                        scope: &scope,
-                    };
-                    let out = lib.run(&routine, &params, &mut ctx)?;
-                    let cpu_busy = (thread_cpu_secs() - cpu0).max(0.0);
-                    let comm_sim = comm.sim_comm_secs() - sim0;
+                // never reaches its collectives, wedging live peers.
+                // Catching the panic turns it into a per-rank Failed
+                // reply — and poisoning the group (below) releases any
+                // peer already blocked in a collective this rank will
+                // never join, with `CommError::PeerFailed { rank }`
+                // naming this rank as the root cause.
+                let result = match comm.clone() {
+                    None => Err(anyhow::anyhow!(
+                        "rank {rank}: session {session_id} holds no group here"
+                    )),
+                    Some(comm) => std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| -> crate::Result<TaskReply> {
+                            if engine.is_none() {
+                                engine = Some(build_engine(&cfg)?);
+                            }
+                            let engine = engine.as_mut().unwrap();
+                            let local_rank = comm.rank();
+                            let cpu0 = thread_cpu_secs();
+                            let sim0 = comm.sim_comm_secs();
+                            let mut ctx = WorkerCtx {
+                                rank: local_rank,
+                                comm: comm.as_ref(),
+                                engine: engine.as_mut(),
+                                store: &shared.store,
+                                config: &cfg,
+                                scope: &scope,
+                            };
+                            let out = lib.run(&routine, &params, &mut ctx)?;
+                            let cpu_busy = (thread_cpu_secs() - cpu0).max(0.0);
+                            let comm_sim = comm.sim_comm_secs() - sim0;
 
-                    // the reservation is a hard cap: exceeding it would
-                    // silently collide with matrix ids allocated after
-                    // this task's window — fail before inserting anything
-                    anyhow::ensure!(
-                        out.matrices.len() as u64 <= out_span,
-                        "routine {routine} produced {} outputs, exceeding the \
-                         task's reservation of {out_span} ids \
-                         (scheduler.max_task_outputs)",
-                        out.matrices.len()
-                    );
-                    let mut metas = Vec::with_capacity(out.matrices.len());
-                    for (i, m) in out.matrices.into_iter().enumerate() {
-                        let id = out_base + i as u64;
-                        metas.push(OutputMeta {
-                            id,
-                            name: m.name.clone(),
-                            rows: m.layout.rows as u64,
-                            cols: m.layout.cols as u64,
-                        });
-                        shared
-                            .store
-                            .insert(id, &m.name, m.layout, m.local, local_rank, session_id)?;
+                            // the reservation is a hard cap: exceeding it
+                            // would silently collide with matrix ids
+                            // allocated after this task's window — fail
+                            // before inserting anything
+                            anyhow::ensure!(
+                                out.matrices.len() as u64 <= out_span,
+                                "routine {routine} produced {} outputs, exceeding \
+                                 the task's reservation of {out_span} ids \
+                                 (scheduler.max_task_outputs)",
+                                out.matrices.len()
+                            );
+                            let mut metas = Vec::with_capacity(out.matrices.len());
+                            for (i, m) in out.matrices.into_iter().enumerate() {
+                                let id = out_base + i as u64;
+                                metas.push(OutputMeta {
+                                    id,
+                                    name: m.name.clone(),
+                                    rows: m.layout.rows as u64,
+                                    cols: m.layout.cols as u64,
+                                });
+                                shared.store.insert(
+                                    id,
+                                    &m.name,
+                                    m.layout,
+                                    m.local,
+                                    local_rank,
+                                    session_id,
+                                )?;
+                            }
+                            let mut timings = out.timings;
+                            timings.push(("cpu_busy".into(), cpu_busy));
+                            timings.push(("comm_sim".into(), comm_sim));
+                            Ok(TaskReply { outputs: metas, scalars: out.scalars, timings })
+                        }),
+                    )
+                    .unwrap_or_else(|panic| {
+                        let what = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| (*s).to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into());
+                        Err(anyhow::anyhow!("routine {routine} panicked: {what}"))
+                    }),
+                };
+                // failure propagation: a rank that failed on its own (not
+                // as collateral of someone else's failure) poisons the
+                // group so peers blocked in — or about to enter — a
+                // collective unwind promptly instead of waiting for a
+                // contribution that will never come. MUST happen before
+                // the reply send: the dispatcher resets the fabric once
+                // every rank has replied, and a poison landing after that
+                // reset would leak into the next task. Collateral errors
+                // (CommError) never re-poison, so the recorded root cause
+                // stays the first failing rank.
+                if let (Err(e), Some(comm)) = (&result, &comm) {
+                    let collateral = e
+                        .downcast_ref::<CommError>()
+                        .is_some_and(CommError::is_collateral);
+                    if !collateral {
+                        comm.poison(PoisonCause::RankFailed(comm.rank()));
                     }
-                    let mut timings = out.timings;
-                    timings.push(("cpu_busy".into(), cpu_busy));
-                    timings.push(("comm_sim".into(), comm_sim));
-                    Ok(TaskReply { outputs: metas, scalars: out.scalars, timings })
-                }))
-                .unwrap_or_else(|panic| {
-                    let what = panic
-                        .downcast_ref::<&str>()
-                        .map(|s| (*s).to_string())
-                        .or_else(|| panic.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "non-string panic payload".into());
-                    Err(anyhow::anyhow!("routine {routine} panicked: {what}"))
-                });
+                }
                 let failed = result.is_err();
                 let cancelled = scope.is_cancelled();
                 let _ = reply.send(result);

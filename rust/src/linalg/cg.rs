@@ -93,7 +93,7 @@ pub fn cg_solve_scoped(
     // b = XᵀY (allreduced partial products)
     let mut b = LocalMatrix::zeros(d, c);
     engine.gemm(crate::compute::GemmVariant::TN, &mut b, x_local, y_local)?;
-    allreduce_sum(comm, TAG, b.data_mut());
+    allreduce_sum(comm, TAG, b.data_mut())?;
 
     let mut w = LocalMatrix::zeros(d, c);
     let mut r = b.clone(); // r = b - A·0
@@ -116,7 +116,7 @@ pub fn cg_solve_scoped(
 
         // q = (XᵀX + nλI)·p — the hot path
         let mut q = engine.gram_matvec_keyed(x_key, x_local, &p, reg_local)?;
-        allreduce_sum(comm, TAG + 16 + (it % 64) as u64 * 256, q.data_mut());
+        allreduce_sum(comm, TAG + 16 + (it % 64) as u64 * 256, q.data_mut())?;
 
         let pq = p.col_dots(&q);
         let alpha: Vec<f64> = rs_old

@@ -107,7 +107,7 @@ pub fn truncated_svd_scoped(
         // w = G·vj (matrix-free, reg = 0)
         let vj_mat = LocalMatrix::from_data(k_dim, 1, vj.clone());
         let mut w = engine.gram_matvec_keyed(a_key, a_local, &vj_mat, 0.0)?;
-        allreduce_sum(comm, TAG + (j as u64 % 64) * 256, w.data_mut());
+        allreduce_sum(comm, TAG + (j as u64 % 64) * 256, w.data_mut())?;
         let mut w = w.into_data();
 
         let alpha = dot(&w, &basis[j]);

@@ -23,7 +23,7 @@ fn cholesky_qr_once(
     let k = a_local.cols();
     let mut g = LocalMatrix::zeros(k, k);
     engine.gemm(GemmVariant::TN, &mut g, a_local, a_local)?;
-    allreduce_sum(comm, tag, g.data_mut());
+    allreduce_sum(comm, tag, g.data_mut())?;
     let r = cholesky_upper(&g)?;
     let q = solve_right_upper(a_local, &r)?;
     Ok((q, r))

@@ -206,7 +206,14 @@ pub enum ControlMsg {
     /// Request cooperative cancellation; replied with the task's state
     /// *after* the request (a running task stays `Running` until its
     /// ranks observe the token).
-    CancelTask { task_id: u64 },
+    ///
+    /// v5: `hard_after_ms > 0` arms an escalation deadline — if the task
+    /// is still running after the cooperative grace period, the server
+    /// poisons the group's communicator so the routine is forcibly
+    /// unwound at its next collective (see `docs/tasks.md`). 0 keeps the
+    /// pure-cooperative v4 semantics and the v4 wire shape (the field is
+    /// elided on encode).
+    CancelTask { task_id: u64, hard_after_ms: u64 },
     /// Block server-side until the task reaches a terminal state or
     /// `timeout_ms` elapses (0 = poll: return the current state at once).
     /// The reply is a `TaskStatusReply` either way; a non-terminal state
@@ -312,9 +319,15 @@ impl ControlMsg {
                 w.u8(9);
                 w.u64(*task_id);
             }
-            ControlMsg::CancelTask { task_id } => {
+            ControlMsg::CancelTask { task_id, hard_after_ms } => {
                 w.u8(10);
                 w.u64(*task_id);
+                // elided at 0 (pure cooperative cancel) so the frame
+                // keeps the v4 wire shape — a v4 server still reads a
+                // default cancel correctly
+                if *hard_after_ms != 0 {
+                    w.u64(*hard_after_ms);
+                }
             }
             ControlMsg::WaitTask { task_id, timeout_ms } => {
                 w.u8(11);
@@ -436,7 +449,12 @@ impl ControlMsg {
             7 => ControlMsg::ListMatrices,
             8 => ControlMsg::Shutdown,
             9 => ControlMsg::TaskStatus { task_id: r.u64()? },
-            10 => ControlMsg::CancelTask { task_id: r.u64()? },
+            10 => {
+                let task_id = r.u64()?;
+                // v4 frames stop after the task id (cooperative cancel)
+                let hard_after_ms = if r.remaining() > 0 { r.u64()? } else { 0 };
+                ControlMsg::CancelTask { task_id, hard_after_ms }
+            }
             11 => ControlMsg::WaitTask { task_id: r.u64()?, timeout_ms: r.u64()? },
             128 => {
                 let session_id = r.u64()?;
@@ -797,7 +815,8 @@ mod tests {
             ControlMsg::ListMatrices,
             ControlMsg::Shutdown,
             ControlMsg::TaskStatus { task_id: 12 },
-            ControlMsg::CancelTask { task_id: 12 },
+            ControlMsg::CancelTask { task_id: 12, hard_after_ms: 0 },
+            ControlMsg::CancelTask { task_id: 12, hard_after_ms: 2_500 },
             ControlMsg::WaitTask { task_id: 12, timeout_ms: 30_000 },
             ControlMsg::HandshakeAck {
                 session_id: 9,
@@ -1115,6 +1134,26 @@ mod tests {
             timings: vec![]
         }
         .is_terminal());
+    }
+
+    #[test]
+    fn default_cancel_keeps_v4_wire_shape() {
+        // a cooperative cancel (hard_after_ms = 0) must be byte-identical
+        // to the v4 frame, and a hand-built v4 frame must decode with the
+        // escalation disarmed
+        let msg = ControlMsg::CancelTask { task_id: 7, hard_after_ms: 0 };
+        let mut v4 = Writer::new();
+        v4.u8(10);
+        v4.u64(7);
+        assert_eq!(msg.encode(), v4.into_bytes());
+
+        let mut v4 = Writer::new();
+        v4.u8(10);
+        v4.u64(9);
+        assert_eq!(
+            ControlMsg::decode(&v4.into_bytes()).unwrap(),
+            ControlMsg::CancelTask { task_id: 9, hard_after_ms: 0 }
+        );
     }
 
     #[test]

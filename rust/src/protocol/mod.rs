@@ -32,5 +32,10 @@ pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
 /// blocking `RunTask`/`TaskDone` pair becomes `SubmitTask` →
 /// `TaskSubmitted { task_id }` with `TaskStatus`/`CancelTask`/`WaitTask`
 /// over the `Queued → Running → Done | Failed | Cancelled` state machine
-/// (see `docs/tasks.md`).
-pub const PROTOCOL_VERSION: u32 = 4;
+/// (see `docs/tasks.md`). v5: fault-tolerant collectives — `CancelTask`
+/// gains `hard_after_ms` (elided at 0, so the default cancel keeps the
+/// v4 wire shape): after the cooperative grace period the server poisons
+/// the task's group communicator and the routine is forcibly unwound at
+/// its next collective; failures are reported root-cause-first (the rank
+/// that failed vs the peers its failure unwound).
+pub const PROTOCOL_VERSION: u32 = 5;

@@ -150,6 +150,11 @@ impl TaskScope {
     /// collectives, so the iteration boundary qualifies). `tag` must not
     /// collide with any concurrently-outstanding collective of the same
     /// routine. Free (no collective) on detached scopes.
+    ///
+    /// If the group is poisoned (a peer failed, or a hard cancel pulled
+    /// the plug — protocol v5), the allreduce itself errors and the
+    /// [`crate::collectives::CommError`] propagates so the dispatcher can
+    /// tell collateral unwinding apart from a root-cause failure.
     pub fn collective_check_cancelled(
         &self,
         comm: &dyn crate::collectives::Communicator,
@@ -159,7 +164,7 @@ impl TaskScope {
             return Ok(());
         }
         let mut flag = [if self.is_cancelled() { 1.0 } else { 0.0 }];
-        crate::collectives::allreduce_sum(comm, tag, &mut flag);
+        crate::collectives::allreduce_sum(comm, tag, &mut flag)?;
         if flag[0] > 0.0 {
             anyhow::bail!(CANCELLED_MSG);
         }

@@ -37,7 +37,7 @@ fn allreduce_equals_serial_sum() {
         let inputs2 = inputs.clone();
         let results = run_group(p, move |c| {
             let mut buf = inputs2[c.rank()].clone();
-            allreduce_sum(c, 7, &mut buf);
+            allreduce_sum(c, 7, &mut buf).unwrap();
             buf
         });
         for got in results {
@@ -58,7 +58,7 @@ fn broadcast_from_random_root() {
         let payload2 = payload.clone();
         let results = run_group(p, move |c| {
             let mut buf = if c.rank() == root { payload2.clone() } else { vec![] };
-            broadcast(c, 9, root, &mut buf);
+            broadcast(c, 9, root, &mut buf).unwrap();
             buf
         });
         for got in results {
@@ -80,16 +80,16 @@ fn reduce_then_scatter_then_allgather_chain() {
         let results = run_group(p, move |c| {
             // reduce to root 0
             let mut buf = inputs2[c.rank()].clone();
-            reduce_sum(c, 11, 0, &mut buf);
+            reduce_sum(c, 11, 0, &mut buf).unwrap();
             // root scatters equal shares back (pad to p*n for evenness)
             let parts = if c.rank() == 0 {
                 Some(vec![buf.clone(); c.size()])
             } else {
                 None
             };
-            let share = scatter(c, 12, 0, parts);
+            let share = scatter(c, 12, 0, parts).unwrap();
             // everyone allgathers their share
-            let all = allgather(c, 13, share);
+            let all = allgather(c, 13, share).unwrap();
             (c.rank(), all)
         });
         for (_, all) in results {
@@ -111,7 +111,7 @@ fn gather_preserves_rank_payloads() {
         let sizes2 = sizes.clone();
         let results = run_group(p, move |c| {
             let mine = vec![c.rank() as f64; sizes2[c.rank()]];
-            gather(c, 15, 0, mine)
+            gather(c, 15, 0, mine).unwrap()
         });
         let root_view = results[0].as_ref().expect("root gathers");
         for (r, part) in root_view.iter().enumerate() {
@@ -130,12 +130,168 @@ fn concurrent_collectives_with_distinct_tags() {
         let mut a = vec![c.rank() as f64; 16];
         let mut b = vec![(c.rank() * 10) as f64; 16];
         // interleave manually: start both, alternating chunks
-        allreduce_sum(c, 0x1000, &mut a);
-        allreduce_sum(c, 0x2000, &mut b);
+        allreduce_sum(c, 0x1000, &mut a).unwrap();
+        allreduce_sum(c, 0x2000, &mut b).unwrap();
         (a[0], b[0])
     });
     for (a, b) in results {
         assert_eq!(a, 6.0); // 0+1+2+3
         assert_eq!(b, 60.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection (protocol v5): a rank that dies before or inside a
+// collective must release its peers with `CommError::PeerFailed` within
+// the deadline — never strand them — and a disjoint group's fabric must
+// be completely unaffected.
+
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use alchemist::collectives::{CommError, PoisonCause};
+
+/// How long a released peer may take to observe the poison. The wakeup is
+/// a condvar notification (microseconds); the bound is generous for noisy
+/// CI runners while still catching a genuine strand (which would hang
+/// until the harness timeout).
+const RELEASE_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Run one fault-injection scenario on a 3-rank group: rank `dead` never
+/// contributes; the survivors run `collective` and must each unwind with
+/// `PeerFailed { rank: dead }` within the deadline. With `die_first` the
+/// poison lands before the survivors enter the collective; otherwise they
+/// are already blocked inside it when the poison lands.
+fn one_rank_dies<F>(dead: usize, die_first: bool, collective: F)
+where
+    F: Fn(&LocalComm) -> Result<(), CommError> + Send + Sync + Clone + 'static,
+{
+    let comms = LocalComm::group(3, None);
+    // entry gate: all 3 ranks participate so the ordering is real
+    let gate = std::sync::Arc::new(Barrier::new(3));
+    let mut handles = Vec::new();
+    for c in comms {
+        let gate = gate.clone();
+        let collective = collective.clone();
+        handles.push(std::thread::spawn(move || {
+            if c.rank() == dead {
+                if die_first {
+                    // poison, THEN let the peers proceed into the
+                    // collective: they must fail on entry
+                    c.poison(PoisonCause::RankFailed(dead));
+                    gate.wait();
+                } else {
+                    // let the peers enter and block, then poison: they
+                    // must be woken out of the collective
+                    gate.wait();
+                    std::thread::sleep(Duration::from_millis(50));
+                    c.poison(PoisonCause::RankFailed(dead));
+                }
+                return None;
+            }
+            gate.wait();
+            let t0 = Instant::now();
+            let err = collective(&c).expect_err("peer must not complete");
+            Some((err, t0.elapsed()))
+        }));
+    }
+    for outcome in handles.into_iter().map(|h| h.join().unwrap()).flatten() {
+        let (err, elapsed) = outcome;
+        assert_eq!(err, CommError::PeerFailed { rank: dead });
+        assert!(
+            elapsed < RELEASE_DEADLINE,
+            "peer released after {elapsed:?} — not within the deadline"
+        );
+    }
+}
+
+#[test]
+fn rank_death_releases_peers_from_barrier() {
+    for die_first in [true, false] {
+        one_rank_dies(1, die_first, |c| c.barrier());
+    }
+}
+
+#[test]
+fn rank_death_releases_peers_from_broadcast() {
+    for die_first in [true, false] {
+        // root 1 is the dead rank: both survivors block in recv
+        one_rank_dies(1, die_first, |c| {
+            let mut buf = Vec::new();
+            broadcast(c, 300, 1, &mut buf)
+        });
+    }
+}
+
+#[test]
+fn rank_death_releases_peers_from_allreduce() {
+    for die_first in [true, false] {
+        one_rank_dies(2, die_first, |c| {
+            let mut buf = vec![c.rank() as f64; 64];
+            allreduce_sum(c, 400, &mut buf)
+        });
+    }
+}
+
+#[test]
+fn rank_death_in_subgroup_leaves_disjoint_group_unaffected() {
+    // two disjoint subgroups of a 5-rank pool: group A loses a rank
+    // mid-allreduce, group B keeps collecting correct sums throughout
+    let ga = LocalComm::subgroup(&[0, 2, 4], None);
+    let gb = LocalComm::subgroup(&[1, 3], None);
+
+    let mut handles = Vec::new();
+    for c in ga {
+        handles.push(std::thread::spawn(move || {
+            if c.rank() == 1 {
+                std::thread::sleep(Duration::from_millis(30));
+                c.poison(PoisonCause::RankFailed(1));
+                return true;
+            }
+            let mut buf = vec![1.0; 32];
+            allreduce_sum(&c, 500, &mut buf).unwrap_err()
+                == CommError::PeerFailed { rank: 1 }
+        }));
+    }
+    let mut b_handles = Vec::new();
+    for c in gb {
+        b_handles.push(std::thread::spawn(move || {
+            // keep collecting while group A dies; every round must
+            // succeed with the right sum
+            for round in 0..200u64 {
+                let mut buf = vec![c.rank() as f64 + 1.0; 8];
+                allreduce_sum(&c, 600 + round * 8, &mut buf).unwrap();
+                assert_eq!(buf, vec![3.0; 8]);
+                c.barrier().unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        assert!(h.join().unwrap(), "group A peer saw the wrong error");
+    }
+    for h in b_handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn poisoned_fabric_recovers_after_reset() {
+    // the coordinator reuses one fabric across tasks: after a failure +
+    // reset, collectives must work again and stale traffic must be gone
+    let comms = LocalComm::group(2, None);
+    comms[0].send(1, 7, vec![99.0]); // undelivered by the "failed task"
+    comms[1].poison(PoisonCause::RankFailed(1));
+    assert!(comms[0].recv(1, 7).is_err());
+    comms[0].reset();
+    let mut handles = Vec::new();
+    for c in comms {
+        handles.push(std::thread::spawn(move || {
+            let mut buf = vec![c.rank() as f64; 4];
+            allreduce_sum(&c, 7, &mut buf).unwrap();
+            buf
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), vec![1.0; 4]);
     }
 }

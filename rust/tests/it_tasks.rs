@@ -375,3 +375,178 @@ fn iterative_cg_cancels_mid_iteration_over_the_wire() {
     ac.stop();
     server.shutdown();
 }
+
+#[test]
+fn stranded_rank_panic_propagates_and_names_root_cause() {
+    // THE protocol-v5 scenario: rank 1 panics while its two peers are
+    // blocked in an allreduce it never joins. Pre-v5 the peers hung
+    // forever (and teardown with them); now the poison releases them,
+    // the task fails promptly, and the client sees rank 1 as the one
+    // root cause — not the peers' collateral unwinding.
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 3).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    let t0 = Instant::now();
+    let task_id = ac
+        .submit(
+            "elemental",
+            "fail_on",
+            Params::new()
+                .with_i64("rank", 1)
+                .with_i64("panic", 1)
+                .with_i64("strand", 1),
+        )
+        .unwrap()
+        .task_id;
+    let st = ac.task(task_id).wait_timeout(20_000).unwrap();
+    match st {
+        TaskState::Failed { message, failed_ranks, total_ranks } => {
+            assert_eq!(failed_ranks, vec![1], "root cause only, not collateral");
+            assert_eq!(total_ranks, 3);
+            assert!(message.contains("1 of 3 ranks failed"), "{message}");
+            assert!(message.contains("rank 1"), "{message}");
+            assert!(message.contains("panicked"), "{message}");
+            assert!(message.contains("aborted after the failure"), "{message}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(15),
+        "failure took {:?} — peers were stranded",
+        t0.elapsed()
+    );
+
+    // nothing leaked and the group is healthy again: the reserved output
+    // window was freed and a follow-up task runs on the same fabric
+    eventually(Duration::from_secs(5), "failed task's blocks to be freed", || {
+        server.total_blocks() == 0
+    });
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 3);
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn rank_error_between_collectives_fails_cleanly_not_hangs() {
+    // same shape but with an error instead of a panic, on a 2-rank group
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    let t0 = Instant::now();
+    let err = ac
+        .run_task(
+            "elemental",
+            "fail_on",
+            Params::new().with_i64("rank", 0).with_i64("strand", 1),
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("1 of 2 ranks failed"), "{err}");
+    assert!(err.to_string().contains("rank 0"), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(15), "peer was stranded");
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn hard_cancel_unwinds_routine_that_ignores_cooperative_cancellation() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // `spin` deliberately never observes the cooperative token: 30s of
+    // barrier-synchronized slices only a hard cancel can end early
+    let task_id = ac
+        .submit("elemental", "spin", Params::new().with_i64("millis", 30_000))
+        .unwrap()
+        .task_id;
+    eventually(Duration::from_secs(10), "spin to start", || {
+        matches!(
+            ac.task(task_id).status().unwrap(),
+            TaskState::Running { progress } if progress.iters > 0
+        )
+    });
+
+    // escalate: cooperative request + 200ms grace, then the group is
+    // poisoned and the next barrier unwinds every rank
+    let t_cancel = Instant::now();
+    ac.task(task_id).cancel_hard(200).unwrap();
+    let err = ac.task(task_id).wait().unwrap_err();
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    assert!(
+        t_cancel.elapsed() < Duration::from_secs(10),
+        "hard cancel took {:?} — deadline + one collective was exceeded",
+        t_cancel.elapsed()
+    );
+
+    // the audit trail: the task landed in a terminal Cancelled state
+    // (never a stuck Running), its reserved output-id window was freed,
+    // and the fabric was reset so the session keeps working
+    assert_eq!(ac.task(task_id).status().unwrap(), TaskState::Cancelled);
+    assert_eq!(server.total_blocks(), 0);
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+
+    let m = server.sched_metrics();
+    assert_eq!(m.tasks_cancelled, 1);
+    assert_eq!(m.tasks_done, 1);
+    assert_eq!(m.running_tasks, 0);
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn teardown_escalates_past_uncooperative_routine() {
+    // a disconnecting client leaves an uncooperative `spin` running: the
+    // teardown grace must bound how long the session lingers (pre-v5 the
+    // dispatcher join waited out the routine's full remaining runtime)
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.teardown_grace_ms", "200").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    {
+        let mut ac = AlchemistContext::connect(&addr, &cfg, 1).unwrap();
+        ac.register_library("elemental", "builtin:elemental").unwrap();
+        let task_id = ac
+            .submit("elemental", "spin", Params::new().with_i64("millis", 30_000))
+            .unwrap()
+            .task_id;
+        eventually(Duration::from_secs(10), "spin to start", || {
+            matches!(ac.task(task_id).status().unwrap(), TaskState::Running { .. })
+        });
+        ac.stop(); // vanish with the spin still running
+    }
+    let t0 = Instant::now();
+    eventually(Duration::from_secs(10), "session teardown", || {
+        server.active_sessions() == 0
+    });
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "teardown took {:?} — the escalation never fired",
+        t0.elapsed()
+    );
+    assert_eq!(server.total_blocks(), 0);
+
+    // the pool is genuinely free again
+    let mut ac = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 2).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+    ac.stop();
+    server.shutdown();
+}

@@ -414,7 +414,7 @@ fn v2_client_receives_version_mismatch_diagnostic() {
     match control.recv_ctrl().unwrap() {
         ControlMsg::Error { message } => {
             assert!(
-                message.contains("protocol version mismatch: client 2, server 4"),
+                message.contains("protocol version mismatch: client 2, server 5"),
                 "{message}"
             );
         }
@@ -432,4 +432,78 @@ fn v2_client_receives_version_mismatch_diagnostic() {
         .unwrap();
     assert!(matches!(reply, ControlMsg::HandshakeAck { .. }));
     server.shutdown();
+}
+
+/// A stand-in for a STRICT pre-v3 server: decodes the v2 handshake shape
+/// exactly — tag, name, version, request_workers — rejects any trailing
+/// bytes by dropping the connection without a reply (what a strict
+/// decoder's `finish()` does), and answers well-formed v2-shaped frames
+/// with its version-mismatch diagnostic.
+fn spawn_strict_v2_server() -> (String, std::thread::JoinHandle<()>) {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        // serve exactly two connections: the long-form attempt (dropped)
+        // and the short-form diagnostic probe (answered)
+        for _ in 0..2 {
+            let (mut stream, _) = match listener.accept() {
+                Ok(conn) => conn,
+                Err(_) => return,
+            };
+            let mut len = [0u8; 4];
+            if stream.read_exact(&mut len).is_err() {
+                continue;
+            }
+            let mut payload = vec![0u8; u32::from_le_bytes(len) as usize];
+            if stream.read_exact(&mut payload).is_err() {
+                continue;
+            }
+            let mut r = alchemist::protocol::Reader::new(&payload);
+            let parsed = (|| -> Result<u32, alchemist::protocol::ProtocolError> {
+                assert_eq!(r.u8()?, 0, "expected a handshake frame");
+                let _name = r.str()?;
+                let version = r.u32()?;
+                let _request_workers = r.u32()?;
+                Ok(version)
+            })();
+            let version = match parsed {
+                Ok(v) => v,
+                Err(_) => continue,
+            };
+            if r.remaining() > 0 {
+                // strict decoder: trailing bytes → protocol error → the
+                // connection is dropped with no diagnostic
+                continue;
+            }
+            let reply = ControlMsg::Error {
+                message: format!(
+                    "protocol version mismatch: client {version}, server 2"
+                ),
+            }
+            .encode();
+            let _ = stream.write_all(&(reply.len() as u32).to_le_bytes());
+            let _ = stream.write_all(&reply);
+            let _ = stream.flush();
+        }
+    });
+    (addr, handle)
+}
+
+#[test]
+fn explicit_transfer_request_against_strict_old_server_gets_version_diagnostic() {
+    let (addr, server) = spawn_strict_v2_server();
+
+    // explicit (non-default) transfer settings force the long handshake
+    // form the strict old server cannot decode; the client must probe
+    // with the short form and surface the version diagnostic instead of
+    // an opaque disconnect error
+    let mut cfg = native_cfg();
+    cfg.transfer.rows_per_frame = 128; // != compiled default → explicit request
+    let err = AlchemistContext::connect(&addr, &cfg, 1).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("version mismatch"), "{text}");
+    assert!(text.contains("v3+"), "{text}");
+
+    server.join().unwrap();
 }

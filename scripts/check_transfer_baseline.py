@@ -14,10 +14,18 @@ with the fresh artifact and the repo's committed baseline. Outcomes:
   deliberately loose — CI runners are noisy; the committed baseline is
   for catching collapses, not 5% drifts).
 
-Usage: check_transfer_baseline.py FRESH BASELINE [--tolerance 0.5]
+--update flips the script from checker to pinner: it takes FRESH (a CI
+artifact or a local full-size run), stamps its provenance into "status",
+and writes it to the BASELINE path as the exact pin-ready
+BENCH_transfer.json — commit the result to close the ROADMAP
+"regenerate the committed baseline" item. Refuses a FRESH with no cells
+(pinning an empty baseline would disable the checker forever).
+
+Usage: check_transfer_baseline.py FRESH BASELINE [--tolerance 0.5] [--update]
 """
 
 import argparse
+import datetime
 import json
 import sys
 
@@ -32,13 +40,41 @@ def cell_key(cell: dict) -> tuple:
     return (cell.get("executors"), cell.get("workers"))
 
 
+def pin_baseline(fresh_path: str, baseline_path: str) -> int:
+    """Write FRESH to BASELINE as the committed, pin-ready baseline."""
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    if not fresh.get("cells"):
+        print("::error::refusing to pin a baseline with no cells "
+              f"({fresh_path} has an empty 'cells' array — did the bench run?)")
+        return 1
+    stamp = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d")
+    fresh["status"] = (
+        f"baseline pinned {stamp} via check_transfer_baseline.py --update "
+        f"from {fresh_path}; regressions beyond --tolerance now fail CI"
+    )
+    with open(baseline_path, "w") as f:
+        json.dump(fresh, f, indent=2)
+        f.write("\n")
+    cells = fresh["cells"]
+    print(f"pinned {len(cells)} cell(s) from {fresh_path} -> {baseline_path}; "
+          "commit the updated baseline to enable regression checking")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh")
     ap.add_argument("baseline")
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="max fractional throughput regression per cell")
+    ap.add_argument("--update", action="store_true",
+                    help="write FRESH to BASELINE as the pin-ready committed "
+                         "baseline instead of diffing")
     args = ap.parse_args()
+
+    if args.update:
+        return pin_baseline(args.fresh, args.baseline)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
