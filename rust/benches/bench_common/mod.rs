@@ -33,6 +33,44 @@ pub fn is_quick(args: &Args) -> bool {
     args.flag("quick")
 }
 
+/// The seed-era native GEMM (pre-PR5 `LocalMatrix::gemm_nn`): MC-blocked
+/// i-k-j loops with the `aik == 0.0` skip branch, no packing, single
+/// thread. Kept verbatim as the compute-bench reference so
+/// `BENCH_compute.json` records the packed kernel's speedup over the
+/// floor it replaced (`check_bench_baseline.py` asserts ≥2x at 512³).
+pub fn gemm_nn_seed(
+    c: &mut alchemist::distmat::LocalMatrix,
+    a: &alchemist::distmat::LocalMatrix,
+    b: &alchemist::distmat::LocalMatrix,
+) {
+    const MC: usize = 64;
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()));
+    let (m, n, k) = (a.rows(), b.cols(), a.cols());
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(MC) {
+            let k1 = (k0 + MC).min(k);
+            for i in i0..i1 {
+                let arow = &ad[i * k..(i + 1) * k];
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
 pub fn require_artifacts(cfg: &Config) -> bool {
     let ok = cfg.resolved_artifacts_dir().join("manifest.txt").exists();
     if !ok {

@@ -1,0 +1,267 @@
+//! Compute-plane kernel bench: GFLOP/s per kernel × shape × thread count
+//! for the native engine's hot ops (the three GEMM storage variants plus
+//! the fused `gram_matvec` / `cg_update` / `rff_expand`), with the
+//! seed-era unpacked GEMM as the reference floor.
+//!
+//! Emits a machine-readable baseline with `--json PATH` —
+//! `BENCH_compute.json` in the repo root is the committed reference every
+//! compute PR is compared against (CI runs the `--quick` size, uploads
+//! the artifact, and diffs it via `scripts/check_bench_baseline.py`; see
+//! README "Pinning a benchmark baseline"). The checker also asserts two
+//! expectations recorded per run: packed ≥ 2x seed at 512³ single-thread,
+//! and threads=4 ≥ 2x threads=1 on the same shape.
+//!
+//! Flags: `--quick` (smoke sweep), `--runs N` (default 3),
+//! `--threads 1,2,4`, `--json PATH`.
+
+mod bench_common;
+
+use alchemist::cli::Args;
+use alchemist::compute::{Engine, GemmVariant, NativeEngine};
+use alchemist::distmat::LocalMatrix;
+use alchemist::metrics::{Stats, Table};
+use alchemist::util::prng::Rng;
+use alchemist::util::timer::time;
+use bench_common::{gemm_nn_seed, is_quick};
+
+struct Cell {
+    kernel: &'static str,
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    secs: f64,
+    gflops: f64,
+}
+
+fn random(seed: u64, r: usize, c: usize) -> LocalMatrix {
+    let mut rng = Rng::new(seed);
+    LocalMatrix::from_fn(r, c, |_, _| rng.normal())
+}
+
+/// Mean seconds of `reps` timed calls after one warmup.
+fn measure(reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm caches / pool threads
+    let mut stats = Stats::new();
+    for _ in 0..reps {
+        let (_, secs) = time(&mut f);
+        stats.push(secs);
+    }
+    stats.mean()
+}
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let quick = is_quick(&args);
+    let runs = args.get_usize("runs", 3)?;
+    let threads_list = args.get_usize_list("threads", &[1, 2, 4])?;
+
+    let mut cells: Vec<Cell> = Vec::new();
+
+    // ---- GEMM family (plus the seed reference) ----
+    // 512³ is the shape the acceptance thresholds are pinned on; keep it
+    // in the quick sweep so every CI artifact carries it
+    let gemm_shapes: &[(usize, usize, usize)] = if quick {
+        &[(512, 512, 512)]
+    } else {
+        &[(256, 256, 256), (512, 512, 512), (1024, 1024, 1024), (4096, 64, 512)]
+    };
+    for &(m, n, k) in gemm_shapes {
+        let a = random(1, m, k);
+        let b = random(2, k, n);
+        let at = a.transpose();
+        let bt = b.transpose();
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let reps = if m * n * k > 256 << 20 { runs.min(2) } else { runs };
+
+        // seed-era unpacked loop: single thread only (it had no pool)
+        let secs = measure(reps, || {
+            let mut c = LocalMatrix::zeros(m, n);
+            gemm_nn_seed(&mut c, &a, &b);
+        });
+        cells.push(Cell {
+            kernel: "gemm_nn_seed",
+            m,
+            n,
+            k,
+            threads: 1,
+            secs,
+            gflops: flops / secs / 1e9,
+        });
+
+        for &threads in &threads_list {
+            let mut engine = NativeEngine::with_threads(threads);
+            for (kernel, variant, opa, opb) in [
+                ("gemm_nn", GemmVariant::NN, &a, &b),
+                ("gemm_tn", GemmVariant::TN, &at, &b),
+                ("gemm_nt", GemmVariant::NT, &a, &bt),
+            ] {
+                let secs = measure(reps, || {
+                    let mut c = LocalMatrix::zeros(m, n);
+                    engine.gemm(variant, &mut c, opa, opb).unwrap();
+                });
+                cells.push(Cell {
+                    kernel,
+                    m,
+                    n,
+                    k,
+                    threads,
+                    secs,
+                    gflops: flops / secs / 1e9,
+                });
+            }
+        }
+    }
+
+    // ---- fused ops ----
+    let (g_rows, g_d, g_nrhs) = if quick { (2048, 512, 32) } else { (8192, 512, 32) };
+    let ga = random(3, g_rows, g_d);
+    let gv = random(4, g_d, g_nrhs);
+    // two GEMMs: A·v and Aᵀ(Av)
+    let g_flops = 4.0 * g_rows as f64 * g_d as f64 * g_nrhs as f64;
+
+    let (u_rows, u_cols) = if quick { (65_536, 32) } else { (262_144, 32) };
+    let ux = random(5, u_rows, u_cols);
+    let ur = random(6, u_rows, u_cols);
+    let up = random(7, u_rows, u_cols);
+    let uq = random(8, u_rows, u_cols);
+    let ualpha: Vec<f64> = (0..u_cols).map(|j| 0.25 + j as f64 * 0.01).collect();
+    // two FMAs per element across the x and r halves
+    let u_flops = 4.0 * u_rows as f64 * u_cols as f64;
+
+    let (r_rows, r_k0, r_d) = if quick { (1024, 440, 1024) } else { (4096, 440, 2048) };
+    let rx = random(9, r_rows, r_k0);
+    let romega = random(10, r_k0, r_d);
+    let rbias: Vec<f64> = (0..r_d).map(|j| j as f64 * 0.006).collect();
+    // GEMM flops only — the cos() epilogue is accounted in secs but not
+    // in the flop count, so rff GFLOP/s understates the kernel by design
+    let r_flops = 2.0 * r_rows as f64 * r_k0 as f64 * r_d as f64;
+
+    for &threads in &threads_list {
+        let mut engine = NativeEngine::with_threads(threads);
+
+        let secs = measure(runs, || {
+            let _ = engine.gram_matvec(&ga, &gv, 1e-3).unwrap();
+        });
+        cells.push(Cell {
+            kernel: "gram_matvec",
+            m: g_rows,
+            n: g_nrhs,
+            k: g_d,
+            threads,
+            secs,
+            gflops: g_flops / secs / 1e9,
+        });
+
+        // clone once OUTSIDE the timed region (a 16 MB memcpy is
+        // comparable to the memory-bound kernel and would pollute the
+        // gated metric); repeated in-place updates just drift x/r
+        // linearly, which doesn't change dense-FMA timing
+        let (mut x, mut r) = (ux.clone(), ur.clone());
+        let secs = measure(runs, || {
+            engine.cg_update(&mut x, &mut r, &up, &uq, &ualpha).unwrap();
+        });
+        cells.push(Cell {
+            kernel: "cg_update",
+            m: u_rows,
+            n: u_cols,
+            k: 0,
+            threads,
+            secs,
+            gflops: u_flops / secs / 1e9,
+        });
+
+        let secs = measure(runs, || {
+            let _ = engine
+                .rff_expand(&rx, &romega, &rbias, (2.0 / r_d as f64).sqrt())
+                .unwrap();
+        });
+        cells.push(Cell {
+            kernel: "rff_expand",
+            m: r_rows,
+            n: r_d,
+            k: r_k0,
+            threads,
+            secs,
+            gflops: r_flops / secs / 1e9,
+        });
+    }
+
+    let mut table = Table::new(
+        "kernels: native compute plane (GFLOP/s)",
+        &["kernel", "m", "n", "k", "threads", "secs", "GFLOP/s"],
+    );
+    for c in &cells {
+        table.row(&[
+            c.kernel.to_string(),
+            c.m.to_string(),
+            c.n.to_string(),
+            c.k.to_string(),
+            c.threads.to_string(),
+            format!("{:.4}", c.secs),
+            format!("{:.2}", c.gflops),
+        ]);
+    }
+    table.print();
+
+    if let Some(path) = args.get("json") {
+        write_json(path, quick, runs, &threads_list, &cells)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(
+    path: &str,
+    quick: bool,
+    runs: usize,
+    threads_list: &[usize],
+    cells: &[Cell],
+) -> alchemist::Result<()> {
+    let threads_json: Vec<String> = threads_list.iter().map(|t| t.to_string()).collect();
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str("  \"bench\": \"kernels\",\n");
+    body.push_str("  \"kind\": \"compute\",\n");
+    body.push_str(
+        "  \"units\": {\"secs\": \"mean wallclock seconds\", \"gflops\": \"1e9 flop/s\"},\n",
+    );
+    body.push_str(&format!(
+        "  \"config\": {{\"quick\": {quick}, \"runs\": {runs}, \"threads\": [{}]}},\n",
+        threads_json.join(", ")
+    ));
+    body.push_str("  \"expected\": {\n");
+    body.push_str(
+        "    \"packed_vs_seed\": \"gemm_nn (packed, threads=1) >= 2x gemm_nn_seed at 512x512x512\",\n",
+    );
+    body.push_str("    \"scaling\": \"gemm_nn threads=4 >= 2x threads=1 at 512x512x512\"\n");
+    body.push_str("  },\n");
+    body.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
+             \"threads\": {}, \"secs\": {}, \"gflops\": {}}}{}\n",
+            c.kernel,
+            c.m,
+            c.n,
+            c.k,
+            c.threads,
+            json_num(c.secs),
+            json_num(c.gflops),
+            if i + 1 == cells.len() { "" } else { "," },
+        ));
+    }
+    body.push_str("  ]\n");
+    body.push_str("}\n");
+    std::fs::write(path, body)?;
+    Ok(())
+}

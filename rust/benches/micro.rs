@@ -7,6 +7,7 @@ mod bench_common;
 use alchemist::cli::Args;
 use alchemist::collectives::algorithms::infallible::{allreduce_sum, broadcast};
 use alchemist::collectives::{Communicator, LocalComm};
+use alchemist::compute::{Engine, GemmVariant, NativeEngine};
 use alchemist::distmat::LocalMatrix;
 use alchemist::metrics::{Stats, Table};
 use alchemist::protocol::DataMsg;
@@ -27,28 +28,44 @@ fn main() -> alchemist::Result<()> {
 
 fn gemm_roofline(quick: bool) {
     let mut table = Table::new(
-        "micro: native blocked GEMM (single thread)",
-        &["n", "secs", "GFLOP/s"],
+        "micro: native GEMM roofline (seed loop vs packed kernel)",
+        &["n", "kernel", "threads", "secs", "GFLOP/s"],
     );
     let sizes: &[usize] = if quick { &[256] } else { &[128, 256, 512, 1024] };
     let mut rng = Rng::new(1);
     for &n in sizes {
         let a = LocalMatrix::from_fn(n, n, |_, _| rng.normal());
         let b = LocalMatrix::from_fn(n, n, |_, _| rng.normal());
-        let mut c = LocalMatrix::zeros(n, n);
-        c.gemm_nn(&a, &b); // warm
         let reps = if n <= 256 { 5 } else { 2 };
-        let mut stats = Stats::new();
-        for _ in 0..reps {
+        let flops = 2.0 * (n as f64).powi(3);
+
+        let mut run = |kernel: &str, threads: usize, f: &mut dyn FnMut()| {
+            f(); // warm
+            let mut stats = Stats::new();
+            for _ in 0..reps {
+                let (_, secs) = time(&mut *f);
+                stats.push(secs);
+            }
+            table.row(&[
+                n.to_string(),
+                kernel.to_string(),
+                threads.to_string(),
+                format!("{:.4}", stats.mean()),
+                format!("{:.2}", flops / stats.mean() / 1e9),
+            ]);
+        };
+
+        run("seed i-k-j", 1, &mut || {
             let mut c = LocalMatrix::zeros(n, n);
-            let (_, secs) = time(|| c.gemm_nn(&a, &b));
-            stats.push(secs);
+            bench_common::gemm_nn_seed(&mut c, &a, &b);
+        });
+        for threads in [1usize, 4] {
+            let mut engine = NativeEngine::with_threads(threads);
+            run("packed", threads, &mut || {
+                let mut c = LocalMatrix::zeros(n, n);
+                engine.gemm(GemmVariant::NN, &mut c, &a, &b).unwrap();
+            });
         }
-        table.row(&[
-            n.to_string(),
-            format!("{:.4}", stats.mean()),
-            format!("{:.2}", 2.0 * (n as f64).powi(3) / stats.mean() / 1e9),
-        ]);
     }
     table.print();
 }

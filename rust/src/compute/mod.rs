@@ -5,8 +5,10 @@
 //! random-feature expansion, and the fused CG state update. Three
 //! implementations:
 //!
-//! * [`NativeEngine`] — blocked pure-rust kernels ([`distmat::dense`]),
-//!   the floor the ablation bench compares against;
+//! * [`NativeEngine`] — packed-panel pure-rust kernels
+//!   ([`crate::distmat::dense`]) parallelized over an intra-rank
+//!   [`ThreadPool`] (`engine.threads`), the floor the ablation bench
+//!   compares against;
 //! * [`XlaEngine`] with `engine = "xla"` — AOT artifacts lowered from the
 //!   pure-jnp L2 graphs (XLA's own `dot`);
 //! * [`XlaEngine`] with `engine = "pallas"` — the same graphs lowered
@@ -17,9 +19,11 @@
 //! library contexts.
 
 pub mod native;
+pub mod pool;
 pub mod tiled;
 
 pub use native::NativeEngine;
+pub use pool::ThreadPool;
 pub use tiled::XlaEngine;
 
 use crate::config::{Config, EngineKind};
@@ -115,6 +119,13 @@ pub trait Engine {
     fn exec_stats(&self) -> (u64, f64) {
         (0, 0.0)
     }
+
+    /// Set the intra-rank parallelism for subsequent ops. The scheduler
+    /// clamps the value at session admission so `granted_workers ×
+    /// threads ≤ available cores` (see `docs/compute.md`); results must
+    /// be bit-identical for any thread count (the SPMD determinism
+    /// contract). Engines without an internal pool ignore it.
+    fn set_threads(&mut self, _threads: usize) {}
 }
 
 /// Process-unique operand key for [`Engine::gram_matvec_keyed`]: a new key

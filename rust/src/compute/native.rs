@@ -1,26 +1,82 @@
-//! Pure-rust engine: the blocked kernels from [`crate::distmat::dense`].
+//! Pure-rust engine: the packed-panel kernels from [`crate::distmat::dense`]
+//! parallelized over an intra-rank [`ThreadPool`].
 //!
 //! This is (a) the compute floor for the engine ablation, and (b) what the
 //! sparklite baseline uses — the paper's Spark side never sees the HPC
 //! library either.
+//!
+//! **Determinism contract** (`docs/compute.md`): every op splits its work
+//! into chunks whose boundaries depend only on the problem shape — never
+//! the thread count — and reductions combine per-chunk partials serially
+//! in chunk order. Results are therefore bit-identical across
+//! `engine.threads = 1/2/4/...`, which is what keeps replicated SPMD
+//! solver state (`it_linalg`'s cross-rank `assert_eq`) bitwise-equal when
+//! ranks run with different effective pool sizes.
 
 use crate::config::EngineKind;
+use crate::distmat::dense::gemm_slices;
 use crate::distmat::LocalMatrix;
 
+use super::pool::ThreadPool;
 use super::{Engine, GemmVariant};
 
-#[derive(Debug, Default)]
-pub struct NativeEngine;
+/// Fixed row grain for the engine's fused ops (`gram_matvec`'s reduction
+/// chunks, `cg_update`/`rff_expand`'s row splits). Shape-derived chunking
+/// only — the thread count never moves a boundary.
+const CHUNK_ROWS: usize = 256;
+
+/// Reduction chunks folded per pool wave in `gram_matvec`: bounds the
+/// partials held alive at once to `GRAM_WAVE · d · nrhs` f64 (a very
+/// tall panel would otherwise buffer `rows / CHUNK_ROWS` partials — a
+/// d/CHUNK_ROWS-fold blow-up over the rows×nrhs intermediate). Wave
+/// grouping never changes the combine order (still strictly chunk 0, 1,
+/// 2, …), so results stay bit-identical for any wave or thread count.
+const GRAM_WAVE: usize = 16;
+
+pub struct NativeEngine {
+    pool: ThreadPool,
+}
 
 impl NativeEngine {
+    /// Single-threaded engine (the determinism baseline and the seed
+    /// behavior every existing caller gets).
     pub fn new() -> Self {
-        NativeEngine
+        Self::with_threads(1)
+    }
+
+    /// Engine with an intra-rank pool of `threads` total threads
+    /// (0 and 1 both mean "no spawned threads, run inline").
+    pub fn with_threads(threads: usize) -> Self {
+        NativeEngine { pool: ThreadPool::new(threads) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for NativeEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NativeEngine").field("threads", &self.pool.threads()).finish()
     }
 }
 
 impl Engine for NativeEngine {
     fn kind(&self) -> EngineKind {
         EngineKind::Native
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        if threads != self.pool.threads() {
+            self.pool = ThreadPool::new(threads);
+        }
     }
 
     fn gemm(
@@ -30,10 +86,11 @@ impl Engine for NativeEngine {
         a: &LocalMatrix,
         b: &LocalMatrix,
     ) -> crate::Result<()> {
+        let pool = Some(&self.pool);
         match variant {
-            GemmVariant::NN => c.gemm_nn(a, b),
-            GemmVariant::TN => c.gemm_tn(a, b),
-            GemmVariant::NT => c.gemm_nt(a, b),
+            GemmVariant::NN => c.gemm_nn_with(a, b, pool),
+            GemmVariant::TN => c.gemm_tn_with(a, b, pool),
+            GemmVariant::NT => c.gemm_nt_with(a, b, pool),
         }
         Ok(())
     }
@@ -46,11 +103,41 @@ impl Engine for NativeEngine {
     ) -> crate::Result<LocalMatrix> {
         anyhow::ensure!(a.cols() == v.rows(), "gram_matvec: a {}x{} vs v {}x{}",
             a.rows(), a.cols(), v.rows(), v.cols());
-        let mut av = LocalMatrix::zeros(a.rows(), v.cols());
-        av.gemm_nn(a, v);
+        let d = a.cols();
+        let nrhs = v.cols();
+        // out = reg·v + Σ_chunks A_cᵀ(A_c·v): fixed CHUNK_ROWS row chunks
+        // of A, each chunk's two small GEMMs run independently on the
+        // pool, partials combined serially in chunk order (fixed combine
+        // order ⇒ bit-identical for any thread count)
         let mut out = v.clone();
         out.scale(reg);
-        out.gemm_tn(a, &av);
+        if a.rows() == 0 || d == 0 || nrhs == 0 {
+            return Ok(out);
+        }
+        let v_data = v.data();
+        let chunks: Vec<&[f64]> = a.data().chunks(CHUNK_ROWS * d).collect();
+        for wave in chunks.chunks(GRAM_WAVE) {
+            let jobs: Vec<_> = wave
+                .iter()
+                .map(|&chunk| {
+                    move || {
+                        let rc = chunk.len() / d;
+                        let mut av = vec![0.0f64; rc * nrhs];
+                        // A_c (rc×d) · v (d×nrhs)
+                        gemm_slices(&mut av, rc, nrhs, d, chunk, d, 1, v_data, nrhs, 1, None);
+                        let mut g = vec![0.0f64; d * nrhs];
+                        // A_cᵀ (d×rc) · av (rc×nrhs)
+                        gemm_slices(&mut g, d, nrhs, rc, chunk, 1, d, &av, nrhs, 1, None);
+                        g
+                    }
+                })
+                .collect();
+            for partial in self.pool.run(jobs) {
+                for (o, x) in out.data_mut().iter_mut().zip(&partial) {
+                    *o += *x;
+                }
+            }
+        }
         Ok(out)
     }
 
@@ -63,14 +150,39 @@ impl Engine for NativeEngine {
     ) -> crate::Result<LocalMatrix> {
         anyhow::ensure!(x.cols() == omega.rows(), "rff_expand shape mismatch");
         anyhow::ensure!(bias.len() == omega.cols(), "rff bias length mismatch");
-        let mut z = LocalMatrix::zeros(x.rows(), omega.cols());
-        z.gemm_nn(x, omega);
-        for i in 0..z.rows() {
-            let row = z.row_mut(i);
-            for (j, v) in row.iter_mut().enumerate() {
-                *v = scale * (*v + bias[j]).cos();
-            }
+        let k0 = omega.rows();
+        let d = omega.cols();
+        let mut z = LocalMatrix::zeros(x.rows(), d);
+        if x.rows() == 0 || d == 0 {
+            return Ok(z);
         }
+        if k0 == 0 {
+            // empty feature dimension: x·Ω is all zeros
+            for i in 0..z.rows() {
+                for (zj, bj) in z.row_mut(i).iter_mut().zip(bias) {
+                    *zj = scale * bj.cos();
+                }
+            }
+            return Ok(z);
+        }
+        let omega_data = omega.data();
+        let jobs: Vec<_> = z
+            .data_mut()
+            .chunks_mut(CHUNK_ROWS * d)
+            .zip(x.data().chunks(CHUNK_ROWS * k0))
+            .map(|(zc, xc)| {
+                move || {
+                    let rc = xc.len() / k0;
+                    gemm_slices(zc, rc, d, k0, xc, k0, 1, omega_data, d, 1, None);
+                    for row in zc.chunks_exact_mut(d) {
+                        for (v, bj) in row.iter_mut().zip(bias) {
+                            *v = scale * (*v + bj).cos();
+                        }
+                    }
+                }
+            })
+            .collect();
+        self.pool.run(jobs);
         Ok(z)
     }
 
@@ -83,18 +195,39 @@ impl Engine for NativeEngine {
         alpha: &[f64],
     ) -> crate::Result<()> {
         anyhow::ensure!(alpha.len() == x.cols(), "alpha length mismatch");
-        for i in 0..x.rows() {
-            let xr = x.row_mut(i);
-            let pr = p.row(i);
-            for j in 0..xr.len() {
-                xr[j] += alpha[j] * pr[j];
-            }
-            let rr = r.row_mut(i);
-            let qr = q.row(i);
-            for j in 0..rr.len() {
-                rr[j] -= alpha[j] * qr[j];
-            }
+        // the zip-based chunking below silently truncates at the shortest
+        // operand, so shape mismatches must be rejected up front (the old
+        // row-indexed loop would at least have panicked)
+        let shape = (x.rows(), x.cols());
+        anyhow::ensure!((r.rows(), r.cols()) == shape, "cg_update: r shape mismatch");
+        anyhow::ensure!((p.rows(), p.cols()) == shape, "cg_update: p shape mismatch");
+        anyhow::ensure!((q.rows(), q.cols()) == shape, "cg_update: q shape mismatch");
+        let c = x.cols();
+        if c == 0 || x.rows() == 0 {
+            return Ok(());
         }
+        let chunk = CHUNK_ROWS * c;
+        let jobs: Vec<_> = x
+            .data_mut()
+            .chunks_mut(chunk)
+            .zip(r.data_mut().chunks_mut(chunk))
+            .zip(p.data().chunks(chunk).zip(q.data().chunks(chunk)))
+            .map(|((xc, rc), (pc, qc))| {
+                move || {
+                    for (xrow, prow) in xc.chunks_exact_mut(c).zip(pc.chunks_exact(c)) {
+                        for j in 0..c {
+                            xrow[j] += alpha[j] * prow[j];
+                        }
+                    }
+                    for (rrow, qrow) in rc.chunks_exact_mut(c).zip(qc.chunks_exact(c)) {
+                        for j in 0..c {
+                            rrow[j] -= alpha[j] * qrow[j];
+                        }
+                    }
+                }
+            })
+            .collect();
+        self.pool.run(jobs);
         Ok(())
     }
 }
@@ -122,6 +255,27 @@ mod tests {
         want.scale(0.7);
         want.gemm_tn(&a, &av);
         assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn gram_matvec_multi_chunk_is_close_and_thread_invariant() {
+        // rows straddle several CHUNK_ROWS reduction chunks
+        let mut rng = Rng::new(8);
+        let a = random(&mut rng, 3 * CHUNK_ROWS + 17, 24);
+        let v = random(&mut rng, 24, 3);
+        let base = NativeEngine::new().gram_matvec(&a, &v, 0.3).unwrap();
+        for threads in [2usize, 4] {
+            let got = NativeEngine::with_threads(threads).gram_matvec(&a, &v, 0.3).unwrap();
+            assert_eq!(got, base, "threads={threads}");
+        }
+        // chunked reduction still agrees with the one-shot composition to
+        // rounding error
+        let mut av = LocalMatrix::zeros(a.rows(), 3);
+        av.gemm_nn(&a, &v);
+        let mut want = v.clone();
+        want.scale(0.3);
+        want.gemm_tn(&a, &av);
+        assert!(base.max_abs_diff(&want) < 1e-9);
     }
 
     #[test]
@@ -162,5 +316,15 @@ mod tests {
                 assert!((r.get(i, j) - (r0.get(i, j) - alpha[j] * q.get(i, j))).abs() < 1e-14);
             }
         }
+    }
+
+    #[test]
+    fn set_threads_rebuilds_only_on_change() {
+        let mut e = NativeEngine::new();
+        assert_eq!(e.threads(), 1);
+        e.set_threads(4);
+        assert_eq!(e.threads(), 4);
+        e.set_threads(0); // 0 clamps to 1
+        assert_eq!(e.threads(), 1);
     }
 }

@@ -1,0 +1,297 @@
+//! Hand-rolled intra-rank threadpool for the native engine (rayon is not
+//! in the offline vendor set).
+//!
+//! One pool lives inside each rank's [`super::NativeEngine`]; the engine
+//! splits its hot ops over *fixed, shape-derived* work chunks and runs
+//! them through [`ThreadPool::run`]. Two properties matter more than raw
+//! scheduling cleverness:
+//!
+//! * **Caller participation** — the worker-rank thread that calls
+//!   [`run`](ThreadPool::run) drains the job queue alongside the pool
+//!   threads, so a pool of `threads = n` uses exactly `n` runnable
+//!   threads (`n − 1` spawned + the caller), never `n + 1`. With
+//!   `threads = 1` no threads are spawned at all and jobs execute inline,
+//!   in order — the serial baseline the determinism suite compares
+//!   against.
+//! * **Deterministic result order** — [`run`](ThreadPool::run) returns
+//!   job results *in job-index order* regardless of which thread finished
+//!   what first. Callers that reduce (e.g. the Gram partial sums in
+//!   `NativeEngine::gram_matvec`) combine the returned vector left to
+//!   right, so floating-point results are bit-identical for any thread
+//!   count (see `docs/compute.md`, "Determinism contract").
+//!
+//! The pool intentionally has no futures, no work stealing between pools
+//! and no unbounded queue growth: a scope enqueues its jobs, the members
+//! race to drain them, and `run` blocks until the last job lands.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased job as it sits in the queue. Lifetime is erased on entry
+/// (see the SAFETY note in [`ThreadPool::run`]); the latch in `run`
+/// guarantees every job finishes before the borrows it captured expire.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cond: Condvar,
+}
+
+/// Completion state of one `run` scope.
+struct ScopeState<R> {
+    /// One slot per job, filled by whichever thread executes it.
+    results: Mutex<Vec<Option<R>>>,
+    /// Jobs not yet finished; `run` returns when this hits zero.
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// A fixed-size pool of compute threads. `threads` counts the calling
+/// thread: `new(4)` spawns 3 workers and `run` makes the caller the 4th.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool with `threads` total parallelism (0 is treated as 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            cond: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("engine-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn engine pool thread")
+            })
+            .collect();
+        ThreadPool { shared, workers, threads }
+    }
+
+    /// Total parallelism (spawned workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every job, blocking until all have finished, and return
+    /// their results **in job-index order**. The caller drains the queue
+    /// alongside the pool threads. If any job panics, `run` panics after
+    /// all jobs have settled (no job is left half-running against freed
+    /// borrows).
+    pub fn run<'env, R, F>(&self, jobs: Vec<F>) -> Vec<R>
+    where
+        F: FnOnce() -> R + Send + 'env,
+        R: Send + 'env,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // serial fast path: nothing to coordinate with, run inline in
+        // order (this is also the `threads = 1` determinism baseline)
+        if self.workers.is_empty() || n == 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let state = Arc::new(ScopeState::<R> {
+            results: Mutex::new((0..n).map(|_| None).collect()),
+            pending: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for (idx, job) in jobs.into_iter().enumerate() {
+                let state = state.clone();
+                let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+                        Ok(r) => state.results.lock().unwrap()[idx] = Some(r),
+                        Err(_) => state.panicked.store(true, Ordering::SeqCst),
+                    }
+                    let mut pending = state.pending.lock().unwrap();
+                    *pending -= 1;
+                    if *pending == 0 {
+                        state.done.notify_all();
+                    }
+                });
+                // SAFETY: lifetime erasure only. `run` does not return
+                // until `pending` reaches zero, i.e. until every job (and
+                // its captured `'env` borrows) has finished executing, so
+                // no job can outlive the environment it borrows. The fat
+                // pointer layout of `Box<dyn FnOnce() + Send>` does not
+                // depend on the erased lifetime.
+                let wrapped: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(wrapped)
+                };
+                q.jobs.push_back(wrapped);
+            }
+            self.shared.cond.notify_all();
+        }
+        // caller participates: drain jobs (possibly another scope's, if
+        // this pool is ever shared) until the queue is empty, then wait
+        // for our own stragglers still running on pool threads
+        loop {
+            let job = self.shared.queue.lock().unwrap().jobs.pop_front();
+            match job {
+                Some(j) => j(),
+                None => break,
+            }
+        }
+        let mut pending = state.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = state.done.wait(pending).unwrap();
+        }
+        drop(pending);
+        if state.panicked.load(Ordering::SeqCst) {
+            // drop the completed jobs' results NOW, on this thread, while
+            // `'env` is still alive: a pool worker may release the last
+            // ScopeState Arc after this frame has unwound, and an `R`
+            // whose Drop touches `'env`-borrowed data would then run
+            // against a dead stack frame
+            state.results.lock().unwrap().clear();
+            panic!("engine pool job panicked");
+        }
+        let mut results = state.results.lock().unwrap();
+        results
+            .drain(..)
+            .map(|r| r.expect("pool job finished without storing a result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads).finish()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cond.wait(q).unwrap();
+            }
+        };
+        // wrapped jobs catch their own panics; this is a backstop so a
+        // hypothetical raw panic can never kill a pool thread silently
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_job_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..64)
+            .map(|i| {
+                move || {
+                    // stagger so completion order differs from job order
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    i * 2
+                }
+            })
+            .collect();
+        let got = pool.run(jobs);
+        assert_eq!(got, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_may_borrow_the_callers_stack() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 40];
+        {
+            let jobs: Vec<_> = data
+                .chunks_mut(10)
+                .enumerate()
+                .map(|(c, chunk)| {
+                    move || {
+                        for (i, x) in chunk.iter_mut().enumerate() {
+                            *x = (c * 10 + i) as u64;
+                        }
+                    }
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        assert_eq!(data, (0..40).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let caller = std::thread::current().id();
+        let got = pool.run(vec![
+            move || std::thread::current().id() == caller,
+            move || std::thread::current().id() == caller,
+        ]);
+        assert_eq!(got, vec![true, true]);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.run(vec![|| 7]), vec![7]);
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(jobs)));
+        assert!(err.is_err());
+        // the pool is still usable after a scope panicked
+        assert_eq!(pool.run(vec![|| 5, || 6]), vec![5, 6]);
+    }
+
+    #[test]
+    fn many_more_jobs_than_threads() {
+        let pool = ThreadPool::new(2);
+        let got = pool.run((0..500).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(got.len(), 500);
+        assert!(got.iter().enumerate().all(|(i, &v)| v == i));
+    }
+}

@@ -166,6 +166,13 @@ pub struct Config {
     /// Master seed; all generator/jitter streams derive from it.
     pub seed: u64,
     pub engine: EngineKind,
+    /// Intra-rank engine threadpool size (`engine.threads`; 0 = auto).
+    /// Clamped per session at admission so `granted_workers × threads ≤
+    /// available cores` — see [`Config::engine_threads_for_group`] and
+    /// `docs/compute.md`. Results are bit-identical for any value (the
+    /// native engine's determinism contract), so this is purely a
+    /// throughput knob.
+    pub engine_threads: usize,
     /// Directory with `manifest.txt` + `*.hlo.txt` from `make artifacts`.
     pub artifacts_dir: PathBuf,
     /// Square tile for composed GEMMs (must exist in the manifest).
@@ -186,6 +193,7 @@ impl Default for Config {
         Config {
             seed: 0xA1C4_E5D1,
             engine: EngineKind::Xla,
+            engine_threads: 0,
             artifacts_dir: PathBuf::from("artifacts"),
             tile: 256,
             panel_rows: 2048,
@@ -273,6 +281,7 @@ impl Config {
         match key {
             "seed" => self.seed = value.parse().context("seed")?,
             "engine" => self.engine = EngineKind::parse(value)?,
+            "engine.threads" => self.engine_threads = int(value)?,
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
             "tile" => self.tile = int(value)?,
             "panel_rows" => self.panel_rows = int(value)?,
@@ -318,6 +327,21 @@ impl Config {
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
+    }
+
+    /// Effective per-rank engine threads for a session granted `group`
+    /// workers on a machine with `avail` cores: `engine.threads`
+    /// (0 = auto) clamped so `group × threads ≤ avail`, floored at 1.
+    /// The session's worker ranks are themselves threads (`LocalComm`
+    /// SPMD), so an unclamped pool would oversubscribe `group ×
+    /// engine.threads` runnable threads onto `avail` cores and invert
+    /// the intra-rank speedup.
+    pub fn engine_threads_for_group(&self, group: usize, avail: usize) -> usize {
+        let per_rank_cap = (avail / group.max(1)).max(1);
+        match self.engine_threads {
+            0 => per_rank_cap,
+            t => t.min(per_rank_cap),
+        }
     }
 
     /// Resolve the artifacts dir relative to the crate root when the
@@ -405,6 +429,33 @@ mod tests {
             server.effective_frame_rows(u32::MAX),
             server.max_rows_per_frame
         );
+    }
+
+    #[test]
+    fn engine_threads_parse_and_group_clamp() {
+        let mut c = Config::default();
+        assert_eq!(c.engine_threads, 0);
+        c.apply("engine.threads", "4").unwrap();
+        assert_eq!(c.engine_threads, 4);
+        // section form
+        let text = "[engine]\nthreads = 2\n";
+        let mut c2 = Config::default();
+        c2.apply_pairs(&Config::from_str_pairs(text).unwrap()).unwrap();
+        assert_eq!(c2.engine_threads, 2);
+
+        // auto (0): whole per-rank share of the cores
+        let auto = Config { engine_threads: 0, ..Config::default() };
+        assert_eq!(auto.engine_threads_for_group(2, 8), 4);
+        assert_eq!(auto.engine_threads_for_group(8, 8), 1);
+        // more ranks than cores still floors at 1 thread
+        assert_eq!(auto.engine_threads_for_group(16, 8), 1);
+        assert_eq!(auto.engine_threads_for_group(0, 8), 8);
+
+        // explicit values are honored up to the oversubscription clamp
+        let four = Config { engine_threads: 4, ..Config::default() };
+        assert_eq!(four.engine_threads_for_group(1, 8), 4);
+        assert_eq!(four.engine_threads_for_group(4, 8), 2);
+        assert_eq!(four.engine_threads_for_group(8, 8), 1);
     }
 
     #[test]

@@ -311,12 +311,31 @@ impl GroupAllocator {
     }
 }
 
+/// RAII lease on the driver's shared engine-thread budget: a running
+/// task holds `group × engine_threads` of [`Driver::engine_threads_committed`]
+/// and returns it on every exit path of `execute_task` (the pool size of
+/// an in-flight task cannot change, so the budget is what keeps
+/// *overlapping* dispatches from summing past the core count).
+struct ThreadsLease<'a> {
+    committed: &'a Mutex<usize>,
+    amount: usize,
+}
+
+impl Drop for ThreadsLease<'_> {
+    fn drop(&mut self) {
+        *self.committed.lock().unwrap() -= self.amount;
+    }
+}
+
 struct Driver {
     cfg: Config,
     workers: Vec<Arc<WorkerShared>>,
     senders: Vec<mpsc::Sender<WorkerCmd>>,
     registry: Registry,
     allocator: GroupAllocator,
+    /// Compute threads (`group × engine_threads`) leased to currently
+    /// running tasks across all sessions (see `execute_task`).
+    engine_threads_committed: Mutex<usize>,
     next_id: AtomicU64,
     next_session: AtomicU64,
     next_task: AtomicU64,
@@ -437,6 +456,13 @@ impl Driver {
         let want = self.allocator.resolve_request(requested as usize)?;
         let id = self.next_session.fetch_add(1, Ordering::SeqCst);
         let ranks = self.allocator.acquire(id, want)?;
+        // single-tenant engine-thread bound, logged below for operators
+        // (0 = auto: each rank gets its share of the cores). The value
+        // that actually governs a task is re-clamped per dispatch in
+        // `execute_task` against every currently-granted rank, so
+        // concurrent tenants cannot multiply past the core count.
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let engine_threads = self.cfg.engine_threads_for_group(ranks.len(), avail);
         let comms: Vec<Arc<LocalComm>> =
             LocalComm::subgroup(&ranks, Some(self.cfg.simnet.clone()))
                 .into_iter()
@@ -490,9 +516,10 @@ impl Driver {
         }
         log::info!(
             "session {id}: client {client_name:?} granted {want} workers \
-             (ranks {ranks:?}, {} rows/frame, {} buf bytes)",
+             (ranks {ranks:?}, {} rows/frame, {} buf bytes, up to \
+             {engine_threads} engine thread(s)/rank)",
             session.transfer.rows_per_frame,
-            session.transfer.buf_bytes
+            session.transfer.buf_bytes,
         );
         Ok(session)
     }
@@ -740,6 +767,35 @@ impl Driver {
         let out_span = self.cfg.scheduler.max_task_outputs.max(1);
         let out_base = self.next_id.fetch_add(out_span, Ordering::SeqCst);
 
+        // intra-rank parallelism for THIS dispatch: the admission clamp
+        // bounds one session, but disjoint groups run tasks concurrently
+        // and a task's pool size cannot change mid-flight — so grants
+        // are leased from a shared thread budget. Each running task
+        // holds `group × threads` of the budget until it finishes
+        // (the lease drops on every exit path); a new dispatch takes
+        // min(its admission cap, its share of what is uncommitted),
+        // floored at 1 (threads = 1 spawns nothing — the rank threads
+        // themselves are the irreducible load). Overlapping tenants
+        // therefore never sum extra pool threads past the core count,
+        // idle tenants lease nothing and throttle nobody, and a lone
+        // session still gets its full admission value. Results are
+        // bit-identical for any thread count, so leasing is invisible
+        // to clients.
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let group = session.ranks.len().max(1);
+        let cap = self.cfg.engine_threads_for_group(group, avail);
+        let engine_threads = {
+            let mut committed = self.engine_threads_committed.lock().unwrap();
+            let spare = avail.saturating_sub(*committed);
+            let t = cap.min((spare / group).max(1));
+            *committed += group * t;
+            t
+        };
+        let _lease = ThreadsLease {
+            committed: &self.engine_threads_committed,
+            amount: group * engine_threads,
+        };
+
         // dispatch to this session's group only; disjoint groups use
         // disjoint worker threads, so no global serialization here. A
         // failed send means that rank's worker thread is dead — stop
@@ -763,6 +819,7 @@ impl Driver {
                 params: rec.params.clone(),
                 out_base,
                 out_span,
+                engine_threads,
                 scope: TaskScope::new(rec.cancel.clone(), rec.progress[slot].clone()),
                 reply: tx,
             });
@@ -1185,6 +1242,7 @@ impl AlchemistServer {
             workers,
             senders,
             registry: Registry::new(),
+            engine_threads_committed: Mutex::new(0),
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
             next_task: AtomicU64::new(1),

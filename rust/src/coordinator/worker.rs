@@ -84,6 +84,10 @@ pub enum WorkerCmd {
         /// `out_span` matrices fails *before* inserting anything (it
         /// would collide with ids handed out after the reservation).
         out_span: u64,
+        /// Intra-rank engine parallelism for this task, clamped at
+        /// session admission so `granted_workers × engine_threads ≤
+        /// available cores` (see `Config::engine_threads_for_group`).
+        engine_threads: usize,
         /// Cooperative cancel token + this rank's progress slot.
         scope: crate::tasks::TaskScope,
         reply: mpsc::Sender<crate::Result<TaskReply>>,
@@ -105,6 +109,7 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                 params,
                 out_base,
                 out_span,
+                engine_threads,
                 scope,
                 reply,
             } => {
@@ -129,6 +134,10 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                                 engine = Some(build_engine(&cfg)?);
                             }
                             let engine = engine.as_mut().unwrap();
+                            // per-task: different sessions on this rank
+                            // may have different clamped pool sizes
+                            // (results are bit-identical either way)
+                            engine.set_threads(engine_threads.max(1));
                             let local_rank = comm.rank();
                             let cpu0 = thread_cpu_secs();
                             let sim0 = comm.sim_comm_secs();

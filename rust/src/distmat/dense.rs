@@ -1,10 +1,24 @@
-//! Dense row-major f64 matrix with a blocked native GEMM.
+//! Dense row-major f64 matrix with a packed-panel native GEMM.
 //!
 //! This is the local-block storage for [`super::DistShard`] and the compute
-//! floor for the engine ablation: `compute::NativeEngine` calls the blocked
+//! floor for the engine ablation: `compute::NativeEngine` calls the packed
 //! kernels here, while the XLA/Pallas engines only use this type as a
-//! container. The GEMM blocks for L1/L2 locality and keeps the innermost
-//! loop a contiguous `f64` FMA chain the compiler can vectorize.
+//! container.
+//!
+//! The GEMM is a BLIS-style packed kernel (see `docs/compute.md` for the
+//! layout diagrams): operand panels are packed once per cache block — A
+//! into [`GEMM_MC`]×[`GEMM_KC`] panels of [`GEMM_MR`]-row micro-panels, B
+//! into [`GEMM_KC`]×n panels of [`GEMM_NR`]-column strips — and a
+//! register-blocked [`GEMM_MR`]×[`GEMM_NR`] micro-tile drives a branch-free
+//! `chunks_exact` FMA loop LLVM auto-vectorizes. All three storage
+//! variants (NN/TN/NT) funnel through one strided packing path, so a
+//! transposed operand costs a transposed *pack*, never a strided inner
+//! loop. The M dimension is optionally split over the engine's
+//! [`ThreadPool`] in fixed [`GEMM_MC`]-row panels; panel boundaries depend
+//! only on the problem shape, so results are bit-identical for any thread
+//! count.
+
+use crate::compute::pool::ThreadPool;
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -14,9 +28,17 @@ pub struct LocalMatrix {
     data: Vec<f64>,
 }
 
-/// Cache block edge for the native GEMM (tuned in the perf pass; see
-/// EXPERIMENTS.md §Perf).
-const MC: usize = 64;
+/// Micro-tile rows (register blocking; the micro-kernel computes an
+/// `MR×NR` block of C per inner-loop pass).
+pub const GEMM_MR: usize = 4;
+/// Micro-tile columns.
+pub const GEMM_NR: usize = 8;
+/// Rows per packed A panel — also the fixed parallel grain for the
+/// engine's M-split (thread-count independent; see `docs/compute.md`).
+pub const GEMM_MC: usize = 64;
+/// K-extent per packed panel pair (sized so an A panel stays L2-resident:
+/// `MC×KC` f64 = 128 KiB).
+pub const GEMM_KC: usize = 256;
 
 impl LocalMatrix {
     pub fn zeros(rows: usize, cols: usize) -> Self {
@@ -175,12 +197,11 @@ impl LocalMatrix {
         }
     }
 
-    /// `self += alpha * other`.
+    /// `self += alpha * other` (4-lane unrolled; elementwise, so the
+    /// result is identical to the naive loop bit-for-bit).
     pub fn axpy(&mut self, alpha: f64, other: &LocalMatrix) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * b;
-        }
+        crate::linalg::blas1::axpy(&mut self.data, alpha, &other.data);
     }
 
     /// Per-column dot products: `out[j] = Σ_i a[i,j]·b[i,j]` (block-CG
@@ -206,75 +227,202 @@ impl LocalMatrix {
             .fold(0.0, f64::max)
     }
 
-    // ---- blocked native GEMM: C += op(A)·op(B) ----
+    // ---- packed-panel native GEMM: C += op(A)·op(B) ----
 
     /// `self += a · b` (a: m×k, b: k×n, self: m×n).
     pub fn gemm_nn(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
+        self.gemm_nn_with(a, b, None)
+    }
+
+    /// [`gemm_nn`](LocalMatrix::gemm_nn), optionally splitting the M
+    /// dimension over `pool` in fixed [`GEMM_MC`]-row panels
+    /// (bit-identical for any thread count).
+    pub fn gemm_nn_with(&mut self, a: &LocalMatrix, b: &LocalMatrix, pool: Option<&ThreadPool>) {
         assert_eq!(a.cols, b.rows);
         assert_eq!((self.rows, self.cols), (a.rows, b.cols));
         let (m, n, k) = (a.rows, b.cols, a.cols);
-        // i-k-j loop with row-major B keeps the inner loop contiguous.
-        for i0 in (0..m).step_by(MC) {
-            let i1 = (i0 + MC).min(m);
-            for k0 in (0..k).step_by(MC) {
-                let k1 = (k0 + MC).min(k);
-                for i in i0..i1 {
-                    let arow = &a.data[i * k..(i + 1) * k];
-                    let crow = &mut self.data[i * n..(i + 1) * n];
-                    for kk in k0..k1 {
-                        let aik = arow[kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &b.data[kk * n..(kk + 1) * n];
-                        for j in 0..n {
-                            crow[j] += aik * brow[j];
-                        }
-                    }
-                }
-            }
-        }
+        gemm_slices(&mut self.data, m, n, k, &a.data, k, 1, &b.data, n, 1, pool);
     }
 
     /// `self += aᵀ · b` (a stored k×m, b: k×n, self: m×n).
     pub fn gemm_tn(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
+        self.gemm_tn_with(a, b, None)
+    }
+
+    /// [`gemm_tn`](LocalMatrix::gemm_tn) with an optional pool; the
+    /// transposed A costs a transposed pack, not a strided inner loop.
+    pub fn gemm_tn_with(&mut self, a: &LocalMatrix, b: &LocalMatrix, pool: Option<&ThreadPool>) {
         assert_eq!(a.rows, b.rows);
         assert_eq!((self.rows, self.cols), (a.cols, b.cols));
         let (m, n, k) = (a.cols, b.cols, a.rows);
-        for k0 in (0..k).step_by(MC) {
-            let k1 = (k0 + MC).min(k);
-            for kk in k0..k1 {
-                let arow = &a.data[kk * m..(kk + 1) * m];
-                let brow = &b.data[kk * n..(kk + 1) * n];
-                for i in 0..m {
-                    let aki = arow[i];
-                    if aki == 0.0 {
-                        continue;
-                    }
-                    let crow = &mut self.data[i * n..(i + 1) * n];
-                    for j in 0..n {
-                        crow[j] += aki * brow[j];
-                    }
-                }
-            }
-        }
+        gemm_slices(&mut self.data, m, n, k, &a.data, 1, m, &b.data, n, 1, pool);
     }
 
     /// `self += a · bᵀ` (a: m×k, b stored n×k, self: m×n).
     pub fn gemm_nt(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
+        self.gemm_nt_with(a, b, None)
+    }
+
+    /// [`gemm_nt`](LocalMatrix::gemm_nt) with an optional pool; the
+    /// transposed B costs a transposed pack, not a strided inner loop.
+    pub fn gemm_nt_with(&mut self, a: &LocalMatrix, b: &LocalMatrix, pool: Option<&ThreadPool>) {
         assert_eq!(a.cols, b.cols);
         assert_eq!((self.rows, self.cols), (a.rows, b.rows));
         let (m, n, k) = (a.rows, b.rows, a.cols);
-        for i in 0..m {
-            let arow = &a.data[i * k..(i + 1) * k];
-            let crow = &mut self.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                let brow = &b.data[j * k..(j + 1) * k];
-                let mut acc = 0.0;
-                for kk in 0..k {
-                    acc += arow[kk] * brow[kk];
+        gemm_slices(&mut self.data, m, n, k, &a.data, k, 1, &b.data, 1, k, pool);
+    }
+}
+
+/// Strided packed GEMM over raw slices: `c += op(a)·op(b)` where
+/// `op(a)[i][kk] = a[i·ars + kk·acs]` (m×k), `op(b)[kk][j] =
+/// b[kk·brs + j·bcs]` (k×n) and `c` is row-major m×n. The one entry point
+/// behind all three storage variants and the engine's row-chunked fused
+/// ops (which is why it takes slices, not `LocalMatrix`).
+///
+/// Loop structure (BLIS-style, NC = n since every caller's n fits a
+/// packed B panel comfortably):
+///
+/// * `k` is blocked by [`GEMM_KC`]; per block, B is packed once into
+///   [`GEMM_NR`]-column strips (k-major, zero-padded to NR);
+/// * `m` is blocked by [`GEMM_MC`]; each panel packs its A rows into
+///   [`GEMM_MR`]-row micro-panels (k-major, zero-padded to MR) and is
+///   independent of every other panel — the unit of parallelism;
+/// * the micro-kernel accumulates an MR×NR register tile over the full
+///   KC extent with no branches in the FMA chain, then adds the valid
+///   region into C.
+///
+/// Per-cell arithmetic order is fixed by (shape, blocking constants)
+/// alone — never by `pool` or its thread count — so results are
+/// bit-identical across `threads = 1/2/4/...`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_slices(
+    c: &mut [f64],
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    ars: usize,
+    acs: usize,
+    b: &[f64],
+    brs: usize,
+    bcs: usize,
+    pool: Option<&ThreadPool>,
+) {
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut bp: Vec<f64> = Vec::new();
+    for k0 in (0..k).step_by(GEMM_KC) {
+        let kc = GEMM_KC.min(k - k0);
+        pack_b(&mut bp, b, brs, bcs, k0, kc, n);
+        match pool {
+            Some(pool) if m > GEMM_MC => {
+                let bp_ref: &[f64] = &bp;
+                let jobs: Vec<_> = c
+                    .chunks_mut(GEMM_MC * n)
+                    .enumerate()
+                    .map(|(pi, cc)| {
+                        move || {
+                            let mc = cc.len() / n;
+                            gemm_panel(cc, mc, n, kc, a, ars, acs, pi * GEMM_MC, k0, bp_ref);
+                        }
+                    })
+                    .collect();
+                pool.run(jobs);
+            }
+            _ => {
+                for (pi, cc) in c.chunks_mut(GEMM_MC * n).enumerate() {
+                    let mc = cc.len() / n;
+                    gemm_panel(cc, mc, n, kc, a, ars, acs, pi * GEMM_MC, k0, &bp);
                 }
-                crow[j] += acc;
+            }
+        }
+    }
+}
+
+/// Pack the `kc`-deep, `n`-wide block of op(B) starting at row `k0` into
+/// NR-column strips: strip `s` holds `op(b)[k0+kk][s·NR + j]` at
+/// `s·NR·kc + kk·NR + j`, zero-padded to NR columns so the micro-kernel
+/// never branches on the edge.
+fn pack_b(bp: &mut Vec<f64>, b: &[f64], brs: usize, bcs: usize, k0: usize, kc: usize, n: usize) {
+    let strips = n.div_ceil(GEMM_NR);
+    bp.clear();
+    bp.resize(strips * GEMM_NR * kc, 0.0);
+    for s in 0..strips {
+        let j0 = s * GEMM_NR;
+        let cols = GEMM_NR.min(n - j0);
+        let base = s * GEMM_NR * kc;
+        for kk in 0..kc {
+            let src = (k0 + kk) * brs;
+            let dst = base + kk * GEMM_NR;
+            for j in 0..cols {
+                bp[dst + j] = b[src + (j0 + j) * bcs];
+            }
+        }
+    }
+}
+
+/// One MC-row panel of the packed GEMM: pack this panel's rows of op(A),
+/// then sweep NR-column strips × MR-row micro-panels through the
+/// micro-kernel. `cc` is the panel's contiguous C rows (`mc × n`), `i0`
+/// the panel's first row in op(A).
+#[allow(clippy::too_many_arguments)]
+fn gemm_panel(
+    cc: &mut [f64],
+    mc: usize,
+    n: usize,
+    kc: usize,
+    a: &[f64],
+    ars: usize,
+    acs: usize,
+    i0: usize,
+    k0: usize,
+    bp: &[f64],
+) {
+    // pack op(A) rows i0..i0+mc into MR-row micro-panels, k-major,
+    // zero-padded to MR rows
+    let panels = mc.div_ceil(GEMM_MR);
+    let mut ap = vec![0.0f64; panels * GEMM_MR * kc];
+    for p in 0..panels {
+        let ir = p * GEMM_MR;
+        let rows = GEMM_MR.min(mc - ir);
+        let base = p * GEMM_MR * kc;
+        for r in 0..rows {
+            let src = (i0 + ir + r) * ars;
+            for kk in 0..kc {
+                ap[base + kk * GEMM_MR + r] = a[src + (k0 + kk) * acs];
+            }
+        }
+    }
+    // NR strips outer so each packed B strip stays hot across the whole
+    // panel; MR micro-panels inner
+    for (s, j0) in (0..n).step_by(GEMM_NR).enumerate() {
+        let nr = GEMM_NR.min(n - j0);
+        let bs = &bp[s * GEMM_NR * kc..(s + 1) * GEMM_NR * kc];
+        for p in 0..panels {
+            let ir = p * GEMM_MR;
+            let rows = GEMM_MR.min(mc - ir);
+            let asl = &ap[p * GEMM_MR * kc..(p + 1) * GEMM_MR * kc];
+            // register-blocked micro-tile: branch-free MR×NR FMA chain
+            // over the packed panels (chunks_exact gives LLVM fixed-width
+            // lanes to vectorize)
+            let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
+            for (av, bv) in asl.chunks_exact(GEMM_MR).zip(bs.chunks_exact(GEMM_NR)) {
+                for i in 0..GEMM_MR {
+                    let ai = av[i];
+                    let row = &mut acc[i];
+                    for j in 0..GEMM_NR {
+                        row[j] += ai * bv[j];
+                    }
+                }
+            }
+            for i in 0..rows {
+                let at = (ir + i) * n + j0;
+                let crow = &mut cc[at..at + nr];
+                for (cj, aj) in crow.iter_mut().zip(&acc[i][..nr]) {
+                    *cj += *aj;
+                }
             }
         }
     }
@@ -323,6 +471,57 @@ mod tests {
             let mut c = LocalMatrix::zeros(m, n);
             c.gemm_nt(&a, &b.transpose());
             assert!(c.max_abs_diff(&want) < 1e-10, "nt {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn gemm_edge_shapes_match_reference_and_pool_is_bit_identical() {
+        let mut rng = Rng::new(11);
+        let pools = [ThreadPool::new(2), ThreadPool::new(4)];
+        // shapes straddling every blocking boundary: micro-tile (MR=4,
+        // NR=8), panel (MC=64), k-block (KC=256), degenerate vectors,
+        // and empty-k
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (1, 8, 1),
+            (8, 1, 8),
+            (3, 5, 2),
+            (4, 8, 4),
+            (5, 9, 7),
+            (63, 65, 129),
+            (65, 7, 33),
+            (129, 16, 257),
+            (64, 8, 0),
+        ] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            let want = gemm_ref(&a, &b);
+
+            let mut serial = LocalMatrix::zeros(m, n);
+            serial.gemm_nn(&a, &b);
+            assert!(serial.max_abs_diff(&want) < 1e-10, "nn {m}x{n}x{k}");
+
+            for pool in &pools {
+                // NN/TN/NT through the pool must be BIT-identical to the
+                // serial path (the engine determinism contract)
+                let mut c = LocalMatrix::zeros(m, n);
+                c.gemm_nn_with(&a, &b, Some(pool));
+                assert_eq!(c, serial, "nn pooled {m}x{n}x{k}");
+
+                let mut t = LocalMatrix::zeros(m, n);
+                t.gemm_tn_with(&a.transpose(), &b, Some(pool));
+                let mut t_serial = LocalMatrix::zeros(m, n);
+                t_serial.gemm_tn(&a.transpose(), &b);
+                assert_eq!(t, t_serial, "tn pooled {m}x{n}x{k}");
+                assert!(t.max_abs_diff(&want) < 1e-10, "tn {m}x{n}x{k}");
+
+                let mut u = LocalMatrix::zeros(m, n);
+                u.gemm_nt_with(&a, &b.transpose(), Some(pool));
+                let mut u_serial = LocalMatrix::zeros(m, n);
+                u_serial.gemm_nt(&a, &b.transpose());
+                assert_eq!(u, u_serial, "nt pooled {m}x{n}x{k}");
+                assert!(u.max_abs_diff(&want) < 1e-10, "nt {m}x{n}x{k}");
+            }
         }
     }
 

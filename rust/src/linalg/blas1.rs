@@ -1,0 +1,143 @@
+//! Shared level-1 vector kernels (dot / axpy / norm) for the iterative
+//! solvers (cg, lanczos, qr) — unrolled into 4-lane `chunks_exact`
+//! accumulators so LLVM emits straight-line vector FMA instead of a
+//! single serial dependency chain.
+//!
+//! Determinism note: the 4-lane summation order is *fixed* (lanes
+//! combined `(l0+l1) + (l2+l3)`, tail appended last), so every rank of an
+//! SPMD solver computing a dot over replicated state gets the bit-same
+//! answer — the same contract the engine's chunked reductions follow
+//! (`docs/compute.md`).
+
+/// 4-lane unrolled dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() & !3;
+    let mut lanes = [0.0f64; 4];
+    for (x, y) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        lanes[0] += x[0] * y[0];
+        lanes[1] += x[1] * y[1];
+        lanes[2] += x[2] * y[2];
+        lanes[3] += x[3] * y[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in a[n4..].iter().zip(&b[n4..]) {
+        tail += x * y;
+    }
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+}
+
+/// `y += alpha·x`, 4-lane unrolled.
+pub fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n4 = y.len() & !3;
+    for (ys, xs) in y[..n4].chunks_exact_mut(4).zip(x[..n4].chunks_exact(4)) {
+        ys[0] += alpha * xs[0];
+        ys[1] += alpha * xs[1];
+        ys[2] += alpha * xs[2];
+        ys[3] += alpha * xs[3];
+    }
+    for (ys, xs) in y[n4..].iter_mut().zip(&x[n4..]) {
+        *ys += alpha * xs;
+    }
+}
+
+/// Euclidean norm via [`dot`].
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Scale to unit norm (no-op on the zero vector).
+pub fn normalize(a: &mut [f64]) {
+    let n = norm(a);
+    if n > 0.0 {
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Kahan (compensated) dot product — the accuracy reference.
+    fn kahan_dot(a: &[f64], b: &[f64]) -> f64 {
+        let mut sum = 0.0f64;
+        let mut c = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            let term = x * y - c;
+            let t = sum + term;
+            c = (t - sum) - term;
+            sum = t;
+        }
+        sum
+    }
+
+    #[test]
+    fn dot_exact_on_integers_and_all_tail_lengths() {
+        for n in 0..13usize {
+            let a: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+            let b: Vec<f64> = (0..n).map(|i| (2 * i + 1) as f64).collect();
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(dot(&a, &b), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_accuracy_vs_kahan_on_adversarial_input() {
+        // mixed magnitudes (1e-3 .. 1e3 spread per element) with sign
+        // flips — heavy cancellation across lanes. The 4-lane sum must
+        // stay within a few ULP-sums of the compensated reference:
+        // |err| ≤ 1e-12 · Σ|aᵢbᵢ| is ~100x looser than the worst-case
+        // n·ε bound for n ≈ 1000, so a regression to sloppier
+        // accumulation (or a broken tail) trips it, while any correct
+        // reassociation passes.
+        let n = 1003usize;
+        let a: Vec<f64> = (0..n)
+            .map(|i| {
+                let mag = 10f64.powi((i % 7) as i32 - 3);
+                let sign = if (i / 3) % 2 == 0 { 1.0 } else { -1.0 };
+                sign * mag * (1.0 + (i as f64) * 1e-4)
+            })
+            .collect();
+        let b: Vec<f64> = (0..n)
+            .map(|i| {
+                let mag = 10f64.powi((i % 5) as i32 - 2);
+                let sign = if (i / 7) % 2 == 0 { 1.0 } else { -1.0 };
+                sign * mag * (2.0 - (i as f64) * 1e-4)
+            })
+            .collect();
+        let want = kahan_dot(&a, &b);
+        let got = dot(&a, &b);
+        let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        assert!(
+            (got - want).abs() <= 1e-12 * scale,
+            "dot drifted from Kahan reference: got {got}, want {want} \
+             (scale {scale})"
+        );
+    }
+
+    #[test]
+    fn axpy_and_norm_match_naive() {
+        let x: Vec<f64> = (0..11).map(|i| i as f64 * 0.5 - 2.0).collect();
+        let mut y: Vec<f64> = (0..11).map(|i| 1.0 - i as f64 * 0.25).collect();
+        let y0 = y.clone();
+        axpy(&mut y, -1.5, &x);
+        for i in 0..11 {
+            assert_eq!(y[i], y0[i] + (-1.5) * x[i], "i={i}");
+        }
+        let want: f64 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!((norm(&x) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_unit_and_zero_safe() {
+        let mut v = vec![3.0, 4.0];
+        normalize(&mut v);
+        assert!((norm(&v) - 1.0).abs() < 1e-15);
+        let mut z = vec![0.0; 5];
+        normalize(&mut z);
+        assert!(z.iter().all(|&x| x == 0.0));
+    }
+}

@@ -9,6 +9,7 @@
 //! Ritz pairs, and recover the left singular vectors `U = A·V·Σ⁻¹`
 //! locally (U inherits A's row distribution).
 
+use super::blas1::{axpy, dot, norm, normalize};
 use crate::collectives::{allreduce_sum, Communicator};
 use crate::compute::Engine;
 use crate::distmat::LocalMatrix;
@@ -103,9 +104,9 @@ pub fn truncated_svd_scoped(
         // this together and agree); free for detached scopes
         scope.collective_check_cancelled(comm, TAG + 8 + (j as u64 % 64) * 256)?;
 
-        let vj = basis[j].clone();
-        // w = G·vj (matrix-free, reg = 0)
-        let vj_mat = LocalMatrix::from_data(k_dim, 1, vj.clone());
+        // w = G·vj (matrix-free, reg = 0); one clone to column-matrix
+        // form — `basis[j]` itself stays borrowed for the α/β updates
+        let vj_mat = LocalMatrix::from_data(k_dim, 1, basis[j].clone());
         let mut w = engine.gram_matvec_keyed(a_key, a_local, &vj_mat, 0.0)?;
         allreduce_sum(comm, TAG + (j as u64 % 64) * 256, w.data_mut())?;
         let mut w = w.into_data();
@@ -156,17 +157,20 @@ pub fn truncated_svd_scoped(
     let k = opts.rank.min(steps);
     let mut sigma = Vec::with_capacity(k);
     let mut v = LocalMatrix::zeros(k_dim, k);
+    // contiguous column scratch: accumulate V_kk = Σ_j y[idx][j]·basis[j]
+    // with vectorizable axpys, then one strided write into the k_dim×k
+    // output (the per-element get/set walk defeated vectorization)
+    let mut col = vec![0.0f64; k_dim];
     for kk in 0..k {
         let idx = steps - 1 - kk;
         let lam = theta[idx].max(0.0);
         sigma.push(lam.sqrt());
-        // V_kk = Σ_j y[idx][j] · basis[j]
+        col.fill(0.0);
         for (j, q) in basis.iter().take(steps).enumerate() {
-            let c = y[idx][j];
-            for i in 0..k_dim {
-                let cur = v.get(i, kk);
-                v.set(i, kk, cur + c * q[i]);
-            }
+            axpy(&mut col, y[idx][j], q);
+        }
+        for (i, x) in col.iter().enumerate() {
+            v.set(i, kk, *x);
         }
     }
 
@@ -183,29 +187,6 @@ pub fn truncated_svd_scoped(
     }
 
     Ok(SvdResult { sigma, v, u_local, steps })
-}
-
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
-}
-
-fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
-}
-
-fn norm(a: &[f64]) -> f64 {
-    dot(a, a).sqrt()
-}
-
-fn normalize(a: &mut [f64]) {
-    let n = norm(a);
-    if n > 0.0 {
-        for x in a.iter_mut() {
-            *x /= n;
-        }
-    }
 }
 
 #[cfg(test)]

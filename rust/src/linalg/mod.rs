@@ -9,6 +9,7 @@
 //! over the collectives — the same communication structure as the paper's
 //! MPI routines.
 
+pub mod blas1;
 pub mod cg;
 pub mod dense;
 pub mod lanczos;

@@ -1,0 +1,200 @@
+//! Engine-equivalence suite: the parallel native engine must be
+//! **bit-identical** to `threads = 1` for all four `Engine` ops, across
+//! thread counts and edge shapes — the determinism contract that keeps
+//! replicated SPMD solver state bitwise-equal across ranks
+//! (`docs/compute.md`). Plus a `distributed_matches_serial`-style solver
+//! run with the pool enabled.
+
+use alchemist::collectives::LocalComm;
+use alchemist::compute::{Engine, GemmVariant, NativeEngine};
+use alchemist::distmat::dense::{GEMM_KC, GEMM_MC, GEMM_MR, GEMM_NR};
+use alchemist::distmat::{LocalMatrix, RowBlockLayout};
+use alchemist::linalg::{cg_solve, truncated_svd, CgOptions, SvdOptions, SvdResult};
+use alchemist::util::prng::Rng;
+
+fn random(rng: &mut Rng, r: usize, c: usize) -> LocalMatrix {
+    LocalMatrix::from_fn(r, c, |_, _| rng.normal())
+}
+
+/// Edge shapes for the GEMM family: degenerate vectors, tall-skinny,
+/// sizes straddling the micro-tile (MR×NR), panel (MC) and k-block (KC)
+/// boundaries, and empty-k.
+fn gemm_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 1, 1),
+        (1, 17, 5),                    // 1×n row
+        (7, 1, 3),                     // n×1 column
+        (200, 3, 64),                  // tall-skinny
+        (GEMM_MR, GEMM_NR, 4),         // exactly one micro-tile
+        (GEMM_MR + 1, GEMM_NR + 1, 5), // one past the micro-tile
+        (GEMM_MC - 1, GEMM_NR * 2 + 3, GEMM_KC + 1), // straddles MC and KC
+        (GEMM_MC * 2 + 1, 7, 33),      // several parallel panels
+        (64, 8, 0),                    // empty-k: gemm is a no-op
+    ]
+}
+
+#[test]
+fn gemm_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(41);
+    for (m, n, k) in gemm_shapes() {
+        let a = random(&mut rng, m, k);
+        let b = random(&mut rng, k, n);
+        let at = a.transpose();
+        let bt = b.transpose();
+        let seed = random(&mut rng, m, n); // nonzero C: gemm accumulates
+        for variant in [GemmVariant::NN, GemmVariant::TN, GemmVariant::NT] {
+            let (opa, opb) = match variant {
+                GemmVariant::NN => (&a, &b),
+                GemmVariant::TN => (&at, &b),
+                GemmVariant::NT => (&a, &bt),
+            };
+            let mut want = seed.clone();
+            NativeEngine::with_threads(1).gemm(variant, &mut want, opa, opb).unwrap();
+            for threads in [2usize, 4] {
+                let mut got = seed.clone();
+                NativeEngine::with_threads(threads).gemm(variant, &mut got, opa, opb).unwrap();
+                assert_eq!(
+                    got, want,
+                    "{} {m}x{n}x{k} threads={threads}",
+                    variant.op_name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_ops_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(42);
+    // rows straddle the engine's 256-row chunk grain; cols straddle the
+    // micro-tile widths
+    for &(rows, d, nrhs) in &[
+        (1usize, 5usize, 2usize),
+        (255, 9, 1),
+        (256, 16, 4),
+        (257, 7, 3),
+        (600, 37, 5),
+        (1, 1, 1),
+    ] {
+        let a = random(&mut rng, rows, d);
+        let v = random(&mut rng, d, nrhs);
+        let want = NativeEngine::with_threads(1).gram_matvec(&a, &v, 0.9).unwrap();
+        for threads in [2usize, 4] {
+            let got = NativeEngine::with_threads(threads).gram_matvec(&a, &v, 0.9).unwrap();
+            assert_eq!(got, want, "gram_matvec {rows}x{d}x{nrhs} t={threads}");
+        }
+
+        // cg_update: x/r mutated in place
+        let x0 = random(&mut rng, rows, nrhs);
+        let r0 = random(&mut rng, rows, nrhs);
+        let p = random(&mut rng, rows, nrhs);
+        let q = random(&mut rng, rows, nrhs);
+        let alpha: Vec<f64> = (0..nrhs).map(|_| rng.normal()).collect();
+        let (mut xw, mut rw) = (x0.clone(), r0.clone());
+        NativeEngine::with_threads(1).cg_update(&mut xw, &mut rw, &p, &q, &alpha).unwrap();
+        for threads in [2usize, 4] {
+            let (mut xg, mut rg) = (x0.clone(), r0.clone());
+            NativeEngine::with_threads(threads)
+                .cg_update(&mut xg, &mut rg, &p, &q, &alpha)
+                .unwrap();
+            assert_eq!(xg, xw, "cg_update x {rows}x{nrhs} t={threads}");
+            assert_eq!(rg, rw, "cg_update r {rows}x{nrhs} t={threads}");
+        }
+
+        // rff_expand: rows×d input through a d×(2d+1) map
+        let omega = random(&mut rng, d, 2 * d + 1);
+        let bias: Vec<f64> = (0..2 * d + 1).map(|_| rng.uniform_in(0.0, 6.28)).collect();
+        let scale = (2.0f64 / (2 * d + 1) as f64).sqrt();
+        let want = NativeEngine::with_threads(1).rff_expand(&a, &omega, &bias, scale).unwrap();
+        for threads in [2usize, 4] {
+            let got = NativeEngine::with_threads(threads)
+                .rff_expand(&a, &omega, &bias, scale)
+                .unwrap();
+            assert_eq!(got, want, "rff_expand {rows}x{d} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn cg_solver_state_bit_identical_across_engine_threads() {
+    // the whole iterative solve — not just one op — must be replay-equal
+    // across pool sizes: every iterate feeds the next, so a single
+    // reassociated reduction anywhere would diverge the trajectories
+    let mut rng = Rng::new(43);
+    let n = 300usize;
+    let x = random(&mut rng, n, 12);
+    let y = random(&mut rng, n, 3);
+    let opts = CgOptions { lambda: 1e-3, tol: 1e-10, max_iters: 200 };
+    let comms = LocalComm::group(1, None);
+    let base = cg_solve(&comms[0], &mut NativeEngine::with_threads(1), &x, &y, n, &opts).unwrap();
+    for threads in [2usize, 4] {
+        let comms = LocalComm::group(1, None);
+        let got = cg_solve(&comms[0], &mut NativeEngine::with_threads(threads), &x, &y, n, &opts)
+            .unwrap();
+        assert_eq!(got.w, base.w, "threads={threads}");
+        assert_eq!(got.iters, base.iters, "threads={threads}");
+        assert_eq!(got.residuals, base.residuals, "threads={threads}");
+    }
+}
+
+/// `distributed_matches_serial` with the pool enabled: pooled engines on
+/// every rank must keep (a) the replicated SPMD state bitwise-equal
+/// across ranks, (b) the whole distributed result bit-identical to the
+/// same distributed run at `threads = 1`, and (c) the spectrum close to
+/// the serial single-rank solve.
+#[test]
+fn distributed_svd_matches_serial_with_pool_enabled() {
+    let mut rng = Rng::new(44);
+    let n = 320usize;
+    let k_dim = 24usize;
+    let a = random(&mut rng, n, k_dim);
+    let opts = SvdOptions { rank: 3, steps: 0, seed: 2 };
+
+    let serial = {
+        let comms = LocalComm::group(1, None);
+        truncated_svd(&comms[0], &mut NativeEngine::with_threads(1), &a, &opts).unwrap()
+    };
+
+    let run_distributed = |workers: usize, threads: usize| -> Vec<SvdResult> {
+        let layout = RowBlockLayout::even(n, k_dim, workers);
+        let comms = LocalComm::group(workers, None);
+        let mut handles = Vec::new();
+        for comm in comms {
+            let (ra, rb) = layout.ranges[comm.rank()];
+            let local = a.slice_rows(ra, rb);
+            let opts = opts.clone();
+            handles.push(std::thread::spawn(move || {
+                truncated_svd(
+                    &comm,
+                    &mut NativeEngine::with_threads(threads),
+                    &local,
+                    &opts,
+                )
+                .unwrap()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    };
+
+    for workers in [2usize, 3] {
+        let base = run_distributed(workers, 1);
+        let pooled = run_distributed(workers, 2);
+        for (rank, res) in pooled.iter().enumerate() {
+            // (a) replicated state identical across ranks
+            assert_eq!(res.v, pooled[0].v, "workers={workers} rank={rank}");
+            assert_eq!(res.sigma, pooled[0].sigma, "workers={workers} rank={rank}");
+            // (b) pool-invariance of the full distributed run
+            assert_eq!(res.v, base[rank].v, "workers={workers} rank={rank}");
+            assert_eq!(res.sigma, base[rank].sigma, "workers={workers} rank={rank}");
+            assert_eq!(
+                res.u_local.data(),
+                base[rank].u_local.data(),
+                "workers={workers} rank={rank}"
+            );
+            // (c) correct spectrum vs the serial solve
+            for (g, w) in res.sigma.iter().zip(&serial.sigma) {
+                assert!((g - w).abs() < 1e-6, "workers={workers}: {g} vs {w}");
+            }
+        }
+    }
+}

@@ -1,0 +1,245 @@
+#!/usr/bin/env python3
+"""Diff a fresh bench artifact against its committed baseline.
+
+Generalizes the old check_transfer_baseline.py to serve both bench
+artifacts the repo pins:
+
+* BENCH_transfer.json (bench "table3_transfer") — per-(executors,
+  workers) cell push/pull GB/s;
+* BENCH_compute.json  (bench "kernels", kind "compute") — per-(kernel,
+  shape, threads) cell GFLOP/s, plus two built-in speedup expectations
+  evaluated on every fresh artifact: the packed gemm_nn at 512x512x512
+  single-thread must be >= 2x the seed loop, and threads=4 must be >= 2x
+  threads=1 on the same shape.
+
+CI's bench jobs run the smoke-size benches and call this script with the
+fresh artifact and the repo's committed baseline. Outcomes:
+
+* committed baseline is still a stub (no cells): emit a GitHub warning
+  annotation (so the "pin a real baseline" follow-up cannot rot
+  silently) and exit 0 — the compute expectations are still checked,
+  but only warn.
+* configs are incomparable (e.g. a smoke run against a full-size
+  baseline): warn, exit 0.
+* comparable: report per-cell throughput deltas; exit 1 if any cell
+  regressed by more than --tolerance (default 50%, deliberately loose —
+  CI runners are noisy; the committed baseline catches collapses, not
+  5% drifts). With a pinned baseline the compute expectations also fail
+  the run when unmet.
+
+--update flips the script from checker to pinner: it takes FRESH (a CI
+artifact or a local full-size run), stamps its provenance into
+"status", and writes it to the BASELINE path as the exact pin-ready
+baseline — commit the result. Refuses a FRESH with no cells (pinning an
+empty baseline would disable the checker forever).
+
+Usage: check_bench_baseline.py FRESH BASELINE [--tolerance 0.5] [--update]
+"""
+
+import argparse
+import datetime
+import json
+import sys
+
+
+def warn(msg: str) -> None:
+    # GitHub Actions annotation; plain stderr elsewhere
+    print(f"::warning::{msg}")
+    print(f"WARNING: {msg}", file=sys.stderr)
+
+
+def fail(msg: str) -> None:
+    print(f"::error::{msg}")
+
+
+def artifact_kind(doc: dict) -> str:
+    kind = doc.get("kind")
+    if kind:
+        return kind
+    if doc.get("bench") == "table3_transfer":
+        return "transfer"
+    if doc.get("bench") == "kernels":
+        return "compute"
+    return "unknown"
+
+
+def pin_baseline(fresh_path: str, baseline_path: str) -> int:
+    """Write FRESH to BASELINE as the committed, pin-ready baseline."""
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    if not fresh.get("cells"):
+        fail("refusing to pin a baseline with no cells "
+             f"({fresh_path} has an empty 'cells' array — did the bench run?)")
+        return 1
+    stamp = datetime.datetime.now(datetime.timezone.utc).strftime("%Y-%m-%d")
+    fresh["status"] = (
+        f"baseline pinned {stamp} via check_bench_baseline.py --update "
+        f"from {fresh_path}; regressions beyond --tolerance now fail CI"
+    )
+    with open(baseline_path, "w") as f:
+        json.dump(fresh, f, indent=2)
+        f.write("\n")
+    cells = fresh["cells"]
+    print(f"pinned {len(cells)} cell(s) from {fresh_path} -> {baseline_path}; "
+          "commit the updated baseline to enable regression checking")
+    return 0
+
+
+def diff_cells(fresh, base, cell_key, metrics, tolerance):
+    """Per-cell metric deltas; returns the list of regressions."""
+    base_cells = {cell_key(c): c for c in base["cells"]}
+    failures = []
+    for cell in fresh.get("cells", []):
+        ref = base_cells.get(cell_key(cell))
+        if ref is None:
+            continue
+        for metric in metrics:
+            got, want = cell.get(metric), ref.get(metric)
+            if not isinstance(got, (int, float)) or not isinstance(want, (int, float)):
+                continue
+            if want <= 0:
+                continue
+            delta = (got - want) / want
+            tag = (f"{describe_cell(cell)} {metric}: "
+                   f"{got:.3f} vs baseline {want:.3f} ({delta:+.1%})")
+            print(tag)
+            if delta < -tolerance:
+                failures.append(tag)
+    return failures
+
+
+def describe_cell(cell: dict) -> str:
+    if "kernel" in cell:
+        return (f"{cell.get('kernel')} {cell.get('m')}x{cell.get('n')}x"
+                f"{cell.get('k')} t{cell.get('threads')}")
+    return f"e{cell.get('executors')}xw{cell.get('workers')}"
+
+
+def check_compute_expectations(fresh: dict, pinned: bool) -> int:
+    """The two acceptance-criteria speedups, evaluated on FRESH alone.
+
+    Both warn while the committed baseline is still a stub. Once one is
+    pinned: packed_vs_seed fails below its 2x target (the packed kernel
+    has ~4x of headroom, runner noise cannot trip it); the threads=4
+    scaling expectation keeps warning below its 2x target but only
+    *fails* below a 1.5x hard floor — standard CI runners are 4 vCPUs =
+    2 physical cores with SMT, where an FMA-port-bound f64 GEMM tops out
+    right around 2x, so a hard 2x gate would flake on every PR, while a
+    genuine scaling collapse (~1x) still cannot slip through even if the
+    per-cell gflops diff's loose tolerance would have let it."""
+    cells = {}
+    for c in fresh.get("cells", []):
+        key = (c.get("kernel"), c.get("m"), c.get("n"), c.get("k"),
+               c.get("threads"))
+        cells[key] = c.get("gflops")
+
+    rc = 0
+
+    def expect(label, num_key, den_key, want, hard_floor):
+        nonlocal rc
+        num, den = cells.get(num_key), cells.get(den_key)
+        if not isinstance(num, (int, float)) or not isinstance(den, (int, float)) \
+                or den <= 0:
+            warn(f"compute expectation '{label}' not evaluable "
+                 f"(missing cells {num_key} / {den_key}) — skipping")
+            return
+        ratio = num / den
+        tag = (f"compute expectation '{label}': {num:.2f} vs {den:.2f} GFLOP/s "
+               f"({ratio:.2f}x, want >= {want}x)")
+        if ratio >= want:
+            print(tag + " OK")
+        elif pinned and ratio < hard_floor:
+            fail(tag + f" UNMET (below the {hard_floor}x hard floor)")
+            rc = 1
+        else:
+            warn(tag + " UNMET")
+
+    shape = (512, 512, 512)
+    expect("packed_vs_seed",
+           ("gemm_nn", *shape, 1), ("gemm_nn_seed", *shape, 1), 2.0, 2.0)
+    expect("scaling",
+           ("gemm_nn", *shape, 4), ("gemm_nn", *shape, 1), 2.0, 1.5)
+    return rc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="max fractional throughput regression per cell")
+    ap.add_argument("--update", action="store_true",
+                    help="write FRESH to BASELINE as the pin-ready committed "
+                         "baseline instead of diffing")
+    args = ap.parse_args()
+
+    if args.update:
+        return pin_baseline(args.fresh, args.baseline)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    kind = artifact_kind(fresh)
+    if kind == "unknown":
+        warn(f"unrecognized bench artifact {args.fresh} "
+             f"(bench={fresh.get('bench')!r}); nothing checked")
+        return 0
+    pinned = bool(base.get("cells"))
+
+    rc = 0
+    if kind == "compute":
+        # the speedup expectations don't need a baseline — run them first
+        # so a stub baseline still surfaces a slow kernel
+        rc |= check_compute_expectations(fresh, pinned)
+
+    if not pinned:
+        warn(
+            f"{kind} baseline is still the committed stub (no cells) — "
+            "download the CI artifact (or run the bench locally) and pin it "
+            "with scripts/check_bench_baseline.py --update FRESH BASELINE "
+            "(see README 'Pinning a benchmark baseline')."
+        )
+        return rc
+
+    if kind == "transfer":
+        comparable = ("rows", "cols", "runs", "quick", "rows_per_frame",
+                      "buf_bytes", "pull_stripe_rows", "pull_window")
+        cell_key = lambda c: (c.get("executors"), c.get("workers"))  # noqa: E731
+        metrics = ("push_gbps", "pull_gbps")
+    else:
+        comparable = ("quick", "runs", "threads")
+        cell_key = lambda c: (c.get("kernel"), c.get("m"), c.get("n"),  # noqa: E731
+                              c.get("k"), c.get("threads"))
+        metrics = ("gflops",)
+
+    fc, bc = fresh.get("config", {}), base.get("config", {})
+    mismatched = [k for k in comparable if fc.get(k) != bc.get(k)]
+    if mismatched:
+        warn(
+            f"{kind} bench configs are not comparable "
+            f"(differ in {', '.join(mismatched)}); skipping the diff. "
+            "Regenerate the baseline at the CI smoke size or run CI at "
+            "the baseline size to re-enable regression checking."
+        )
+        return rc
+
+    if not fresh.get("cells"):
+        # the baseline has real numbers but this run produced none — the
+        # exact collapse the check exists to catch must not pass silently
+        fail(f"fresh {args.fresh} has no cells to compare against the "
+             "pinned baseline (bench produced no results?)")
+        return 1
+
+    failures = diff_cells(fresh, base, cell_key, metrics, args.tolerance)
+    if failures:
+        for f_ in failures:
+            fail(f"{kind} throughput regression: {f_}")
+        return 1
+    print(f"{kind} bench within tolerance of the committed baseline")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
