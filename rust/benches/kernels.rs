@@ -7,9 +7,16 @@
 //! `BENCH_compute.json` in the repo root is the committed reference every
 //! compute PR is compared against (CI runs the `--quick` size, uploads
 //! the artifact, and diffs it via `scripts/check_bench_baseline.py`; see
-//! README "Pinning a benchmark baseline"). The checker also asserts two
-//! expectations recorded per run: packed ≥ 2x seed at 512³ single-thread,
-//! and threads=4 ≥ 2x threads=1 on the same shape.
+//! README "Pinning a benchmark baseline"). The checker also asserts the
+//! expectations recorded per run, starting with: packed ≥ 2x seed at 512³
+//! single-thread, and threads=4 ≥ 2x threads=1 on the same shape.
+//!
+//! Since v6 the sweep also reports the **runtime-dispatched ISA path**
+//! (fallback vs AVX2 vs AVX-512) with one `gemm_nn_isa_*` cell per path
+//! runnable on the host at the pinned 512³ shape — the checker asserts
+//! the dispatched AVX2 kernel beats the portable fallback — and
+//! `gemm_nn_auto` cells for the `engine = "auto"` cost-model dispatcher,
+//! which must never lose to the packed native kernel it routes to.
 //!
 //! Flags: `--quick` (smoke sweep), `--runs N` (default 3),
 //! `--threads 1,2,4`, `--json PATH`.
@@ -17,9 +24,11 @@
 mod bench_common;
 
 use alchemist::cli::Args;
-use alchemist::compute::{Engine, GemmVariant, NativeEngine};
+use alchemist::compute::{DispatchEngine, Engine, GemmVariant, NativeEngine};
+use alchemist::config::Config;
 use alchemist::distmat::LocalMatrix;
 use alchemist::metrics::{Stats, Table};
+use alchemist::simd::{self, Isa};
 use alchemist::util::prng::Rng;
 use alchemist::util::timer::time;
 use bench_common::{gemm_nn_seed, is_quick};
@@ -56,6 +65,12 @@ fn main() -> alchemist::Result<()> {
     let quick = is_quick(&args);
     let runs = args.get_usize("runs", 3)?;
     let threads_list = args.get_usize_list("threads", &[1, 2, 4])?;
+
+    println!(
+        "selected ISA path: {} (host supports {})",
+        simd::selected().name(),
+        simd::detected().name()
+    );
 
     let mut cells: Vec<Cell> = Vec::new();
 
@@ -111,6 +126,64 @@ fn main() -> alchemist::Result<()> {
                     gflops: flops / secs / 1e9,
                 });
             }
+        }
+    }
+
+    // ---- runtime ISA dispatch, pinned shape only ----
+    // one cell per path runnable on this host, all single-thread so the
+    // comparison isolates the micro-kernel (the checker asserts the
+    // dispatched avx2 cell >= the fallback cell; absent cells — e.g. a
+    // non-AVX2 runner — downgrade that check to a skip)
+    {
+        let (m, n, k) = (512usize, 512usize, 512usize);
+        let a = random(1, m, k);
+        let b = random(2, k, n);
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        for isa in simd::available() {
+            let kernel = match isa {
+                Isa::Fallback => "gemm_nn_isa_fallback",
+                Isa::Avx2 => "gemm_nn_isa_avx2",
+                Isa::Avx512 => "gemm_nn_isa_avx512",
+            };
+            let mut engine = NativeEngine::with_threads(1);
+            let secs = measure(runs, || {
+                simd::with_isa(isa, || {
+                    let mut c = LocalMatrix::zeros(m, n);
+                    engine.gemm(GemmVariant::NN, &mut c, &a, &b).unwrap();
+                })
+            });
+            cells.push(Cell {
+                kernel,
+                m,
+                n,
+                k,
+                threads: 1,
+                secs,
+                gflops: flops / secs / 1e9,
+            });
+        }
+
+        // the cost-model dispatcher on the same shape: `auto` routes
+        // composed GEMM to the packed native kernels, so these cells must
+        // track the gemm_nn cells — the checker gates auto >= packed.
+        // (Missing XLA artifacts just degrade auto to native-only, which
+        // is exactly the path being gated.)
+        let cfg = Config::default();
+        for &threads in &threads_list {
+            let mut engine = DispatchEngine::new(&cfg, NativeEngine::with_threads(threads));
+            let secs = measure(runs, || {
+                let mut c = LocalMatrix::zeros(m, n);
+                engine.gemm(GemmVariant::NN, &mut c, &a, &b).unwrap();
+            });
+            cells.push(Cell {
+                kernel: "gemm_nn_auto",
+                m,
+                n,
+                k,
+                threads,
+                secs,
+                gflops: flops / secs / 1e9,
+            });
         }
     }
 
@@ -206,7 +279,7 @@ fn main() -> alchemist::Result<()> {
     table.print();
 
     if let Some(path) = args.get("json") {
-        write_json(path, quick, runs, &threads_list, &cells)?;
+        write_json(path, quick, runs, &threads_list, simd::selected().name(), &cells)?;
         println!("wrote {path}");
     }
     Ok(())
@@ -225,6 +298,7 @@ fn write_json(
     quick: bool,
     runs: usize,
     threads_list: &[usize],
+    isa: &str,
     cells: &[Cell],
 ) -> alchemist::Result<()> {
     let threads_json: Vec<String> = threads_list.iter().map(|t| t.to_string()).collect();
@@ -235,15 +309,25 @@ fn write_json(
     body.push_str(
         "  \"units\": {\"secs\": \"mean wallclock seconds\", \"gflops\": \"1e9 flop/s\"},\n",
     );
+    // "isa" records the runner's dispatched path for provenance; the
+    // baseline checker's comparability key is (quick, runs, threads)
+    // only, so baselines pinned before this field still compare
     body.push_str(&format!(
-        "  \"config\": {{\"quick\": {quick}, \"runs\": {runs}, \"threads\": [{}]}},\n",
+        "  \"config\": {{\"quick\": {quick}, \"runs\": {runs}, \"threads\": [{}], \
+         \"isa\": \"{isa}\"}},\n",
         threads_json.join(", ")
     ));
     body.push_str("  \"expected\": {\n");
     body.push_str(
         "    \"packed_vs_seed\": \"gemm_nn (packed, threads=1) >= 2x gemm_nn_seed at 512x512x512\",\n",
     );
-    body.push_str("    \"scaling\": \"gemm_nn threads=4 >= 2x threads=1 at 512x512x512\"\n");
+    body.push_str("    \"scaling\": \"gemm_nn threads=4 >= 2x threads=1 at 512x512x512\",\n");
+    body.push_str(
+        "    \"isa_dispatch\": \"gemm_nn_isa_avx2 >= 1.2x gemm_nn_isa_fallback at 512x512x512 threads=1 (skipped on non-AVX2 runners)\",\n",
+    );
+    body.push_str(
+        "    \"auto_vs_packed\": \"gemm_nn_auto >= gemm_nn at 512x512x512 at every measured thread count\"\n",
+    );
     body.push_str("  },\n");
     body.push_str("  \"cells\": [\n");
     for (i, c) in cells.iter().enumerate() {

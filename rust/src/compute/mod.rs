@@ -12,22 +12,32 @@
 //! * [`XlaEngine`] with `engine = "xla"` — AOT artifacts lowered from the
 //!   pure-jnp L2 graphs (XLA's own `dot`);
 //! * [`XlaEngine`] with `engine = "pallas"` — the same graphs lowered
-//!   through the Pallas kernels (`interpret=True`).
+//!   through the Pallas kernels (`interpret=True`);
+//! * [`DispatchEngine`] with `engine = "auto"` — the adaptive plane: a
+//!   calibrated cost model picks native vs XLA per call ([`dispatch`]).
 //!
-//! Engines are constructed *inside* each worker thread ([`build_engine`]) —
-//! PJRT handles are not `Send`, which conveniently mirrors per-rank MPI
-//! library contexts.
+//! Engines are constructed *inside* each worker thread
+//! ([`build_engine`] / [`build_engine_with_pool`]) — the runtime's
+//! executable caches are deliberately not shared across ranks, which
+//! conveniently mirrors per-rank MPI library contexts. Since PR 6 the
+//! native engine can ride a client handle of the server's shared
+//! work-stealing [`ThreadPool`] instead of private threads.
 
+pub mod dispatch;
 pub mod native;
 pub mod pool;
 pub mod tiled;
 
+pub use dispatch::DispatchEngine;
 pub use native::NativeEngine;
 pub use pool::ThreadPool;
 pub use tiled::XlaEngine;
 
+use std::sync::Arc;
+
 use crate::config::{Config, EngineKind};
 use crate::distmat::LocalMatrix;
+use crate::tasks::CancelToken;
 
 /// GEMM storage variants (`c += op(a)·op(b)`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -126,6 +136,14 @@ pub trait Engine {
     /// be bit-identical for any thread count (the SPMD determinism
     /// contract). Engines without an internal pool ignore it.
     fn set_threads(&mut self, _threads: usize) {}
+
+    /// Install (or clear, with `None`) a cancellation token that the
+    /// engine polls at MC-panel boundaries inside its kernels. A
+    /// cancelled token makes subsequent ops fail fast with
+    /// [`crate::tasks::CANCELLED_MSG`], so even a routine that never
+    /// polls its [`crate::tasks::TaskScope`] terminates within one panel
+    /// of a hard cancel. Engines without cancellable kernels ignore it.
+    fn set_cancel(&mut self, _token: Option<Arc<CancelToken>>) {}
 }
 
 /// Process-unique operand key for [`Engine::gram_matvec_keyed`]: a new key
@@ -140,9 +158,25 @@ pub fn fresh_operand_key() -> u64 {
 /// Build the engine selected by `cfg.engine`. Must be called on the thread
 /// that will use it.
 pub fn build_engine(cfg: &Config) -> crate::Result<Box<dyn Engine>> {
+    build_engine_with_pool(cfg, None)
+}
+
+/// Like [`build_engine`], but engines with an intra-rank pool (`native`,
+/// and the native half of `auto`) run on `pool` — normally a per-rank
+/// client handle of the server's shared work-stealing pool — instead of
+/// spawning private threads. `None` falls back to a private pool.
+pub fn build_engine_with_pool(
+    cfg: &Config,
+    pool: Option<ThreadPool>,
+) -> crate::Result<Box<dyn Engine>> {
+    let native = |pool: Option<ThreadPool>| match pool {
+        Some(p) => NativeEngine::from_pool(p),
+        None => NativeEngine::new(),
+    };
     Ok(match cfg.engine {
-        EngineKind::Native => Box::new(NativeEngine::new()),
+        EngineKind::Native => Box::new(native(pool)),
         EngineKind::Xla => Box::new(XlaEngine::new(cfg, "xla")?),
         EngineKind::Pallas => Box::new(XlaEngine::new(cfg, "pallas")?),
+        EngineKind::Auto => Box::new(DispatchEngine::new(cfg, native(pool))),
     })
 }

@@ -9,13 +9,27 @@
 //! into chunks whose boundaries depend only on the problem shape — never
 //! the thread count — and reductions combine per-chunk partials serially
 //! in chunk order. Results are therefore bit-identical across
-//! `engine.threads = 1/2/4/...`, which is what keeps replicated SPMD
-//! solver state (`it_linalg`'s cross-rank `assert_eq`) bitwise-equal when
-//! ranks run with different effective pool sizes.
+//! `engine.threads = 1/2/4/...` (and across a shared pool's steal
+//! schedules), which is what keeps replicated SPMD solver state
+//! (`it_linalg`'s cross-rank `assert_eq`) bitwise-equal when ranks run
+//! with different effective pool sizes. The kernel ISA is resolved on the
+//! op's calling thread and pinned into every pool job (`crate::simd`), so
+//! one op never mixes kernel variants — and the variants are themselves
+//! bit-identical anyway.
+//!
+//! **Cancellation check-ins** (`docs/tasks.md`): when the worker installs
+//! a task's [`CancelToken`] via `Engine::set_cancel`, the long
+//! collective-free kernels poll it — `gemm` at MC-panel boundaries,
+//! `gram_matvec` per reduction wave — and bail with
+//! [`crate::tasks::CANCELLED_MSG`], so a hard cancel lands within one
+//! panel instead of at the routine's next collective.
+
+use std::sync::Arc;
 
 use crate::config::EngineKind;
 use crate::distmat::dense::gemm_slices;
 use crate::distmat::LocalMatrix;
+use crate::tasks::CancelToken;
 
 use super::pool::ThreadPool;
 use super::{Engine, GemmVariant};
@@ -35,6 +49,7 @@ const GRAM_WAVE: usize = 16;
 
 pub struct NativeEngine {
     pool: ThreadPool,
+    cancel: Option<Arc<CancelToken>>,
 }
 
 impl NativeEngine {
@@ -44,14 +59,34 @@ impl NativeEngine {
         Self::with_threads(1)
     }
 
-    /// Engine with an intra-rank pool of `threads` total threads
+    /// Engine with a private intra-rank pool of `threads` total threads
     /// (0 and 1 both mean "no spawned threads, run inline").
     pub fn with_threads(threads: usize) -> Self {
-        NativeEngine { pool: ThreadPool::new(threads) }
+        Self::from_pool(ThreadPool::new(threads))
+    }
+
+    /// Engine driving an existing pool handle — how the server hands
+    /// every rank a client of the shared work-stealing pool
+    /// ([`ThreadPool::client`]) instead of a private thread set.
+    pub fn from_pool(pool: ThreadPool) -> Self {
+        NativeEngine { pool, cancel: None }
     }
 
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    fn cancel_ref(&self) -> Option<&CancelToken> {
+        self.cancel.as_deref()
+    }
+
+    /// Bail with [`crate::tasks::CANCELLED_MSG`] if the installed task
+    /// token (if any) was cancelled — the op-level check-in.
+    fn check_cancel(&self) -> crate::Result<()> {
+        if self.cancel_ref().is_some_and(|t| t.is_cancelled()) {
+            anyhow::bail!(crate::tasks::CANCELLED_MSG);
+        }
+        Ok(())
     }
 }
 
@@ -74,9 +109,16 @@ impl Engine for NativeEngine {
 
     fn set_threads(&mut self, threads: usize) {
         let threads = threads.max(1);
-        if threads != self.pool.threads() {
+        if self.pool.is_client() {
+            // shared pool: retarget the lease cap, no thread churn
+            self.pool.set_cap(threads);
+        } else if threads != self.pool.threads() {
             self.pool = ThreadPool::new(threads);
         }
+    }
+
+    fn set_cancel(&mut self, token: Option<Arc<CancelToken>>) {
+        self.cancel = token;
     }
 
     fn gemm(
@@ -87,11 +129,13 @@ impl Engine for NativeEngine {
         b: &LocalMatrix,
     ) -> crate::Result<()> {
         let pool = Some(&self.pool);
-        match variant {
-            GemmVariant::NN => c.gemm_nn_with(a, b, pool),
-            GemmVariant::TN => c.gemm_tn_with(a, b, pool),
-            GemmVariant::NT => c.gemm_nt_with(a, b, pool),
-        }
+        let cancel = self.cancel_ref();
+        let done = match variant {
+            GemmVariant::NN => c.gemm_nn_with(a, b, pool, cancel),
+            GemmVariant::TN => c.gemm_tn_with(a, b, pool, cancel),
+            GemmVariant::NT => c.gemm_nt_with(a, b, pool, cancel),
+        };
+        anyhow::ensure!(done, crate::tasks::CANCELLED_MSG);
         Ok(())
     }
 
@@ -115,20 +159,34 @@ impl Engine for NativeEngine {
             return Ok(out);
         }
         let v_data = v.data();
+        let isa = crate::simd::current();
+        let cancel = self.cancel_ref();
         let chunks: Vec<&[f64]> = a.data().chunks(CHUNK_ROWS * d).collect();
         for wave in chunks.chunks(GRAM_WAVE) {
+            // per-wave cancellation check-in; a cancelled wave's jobs may
+            // also bail individually, leaving empty partials the final
+            // check below turns into an error
+            self.check_cancel()?;
             let jobs: Vec<_> = wave
                 .iter()
                 .map(|&chunk| {
                     move || {
-                        let rc = chunk.len() / d;
-                        let mut av = vec![0.0f64; rc * nrhs];
-                        // A_c (rc×d) · v (d×nrhs)
-                        gemm_slices(&mut av, rc, nrhs, d, chunk, d, 1, v_data, nrhs, 1, None);
-                        let mut g = vec![0.0f64; d * nrhs];
-                        // A_cᵀ (d×rc) · av (rc×nrhs)
-                        gemm_slices(&mut g, d, nrhs, rc, chunk, 1, d, &av, nrhs, 1, None);
-                        g
+                        crate::simd::with_isa(isa, || {
+                            let rc = chunk.len() / d;
+                            let mut av = vec![0.0f64; rc * nrhs];
+                            // A_c (rc×d) · v (d×nrhs)
+                            if !gemm_slices(
+                                &mut av, rc, nrhs, d, chunk, d, 1, v_data, nrhs, 1, None, cancel,
+                            ) {
+                                return Vec::new();
+                            }
+                            let mut g = vec![0.0f64; d * nrhs];
+                            // A_cᵀ (d×rc) · av (rc×nrhs)
+                            gemm_slices(
+                                &mut g, d, nrhs, rc, chunk, 1, d, &av, nrhs, 1, None, cancel,
+                            );
+                            g
+                        })
                     }
                 })
                 .collect();
@@ -138,6 +196,7 @@ impl Engine for NativeEngine {
                 }
             }
         }
+        self.check_cancel()?;
         Ok(out)
     }
 
@@ -166,23 +225,31 @@ impl Engine for NativeEngine {
             return Ok(z);
         }
         let omega_data = omega.data();
+        let isa = crate::simd::current();
+        let cancel = self.cancel_ref();
         let jobs: Vec<_> = z
             .data_mut()
             .chunks_mut(CHUNK_ROWS * d)
             .zip(x.data().chunks(CHUNK_ROWS * k0))
             .map(|(zc, xc)| {
                 move || {
-                    let rc = xc.len() / k0;
-                    gemm_slices(zc, rc, d, k0, xc, k0, 1, omega_data, d, 1, None);
-                    for row in zc.chunks_exact_mut(d) {
-                        for (v, bj) in row.iter_mut().zip(bias) {
-                            *v = scale * (*v + bj).cos();
+                    crate::simd::with_isa(isa, || {
+                        let rc = xc.len() / k0;
+                        if !gemm_slices(zc, rc, d, k0, xc, k0, 1, omega_data, d, 1, None, cancel)
+                        {
+                            return;
                         }
-                    }
+                        for row in zc.chunks_exact_mut(d) {
+                            for (v, bj) in row.iter_mut().zip(bias) {
+                                *v = scale * (*v + bj).cos();
+                            }
+                        }
+                    })
                 }
             })
             .collect();
         self.pool.run(jobs);
+        self.check_cancel()?;
         Ok(z)
     }
 
@@ -202,6 +269,8 @@ impl Engine for NativeEngine {
         anyhow::ensure!((r.rows(), r.cols()) == shape, "cg_update: r shape mismatch");
         anyhow::ensure!((p.rows(), p.cols()) == shape, "cg_update: p shape mismatch");
         anyhow::ensure!((q.rows(), q.cols()) == shape, "cg_update: q shape mismatch");
+        // memory-bound and short — one entry check-in suffices
+        self.check_cancel()?;
         let c = x.cols();
         if c == 0 || x.rows() == 0 {
             return Ok(());
@@ -326,5 +395,42 @@ mod tests {
         assert_eq!(e.threads(), 4);
         e.set_threads(0); // 0 clamps to 1
         assert_eq!(e.threads(), 1);
+    }
+
+    #[test]
+    fn shared_pool_engine_retargets_cap_and_matches_private() {
+        let root = ThreadPool::new(4);
+        let mut shared = NativeEngine::from_pool(root.client(1));
+        shared.set_threads(2);
+        assert_eq!(shared.threads(), 2);
+
+        let mut rng = Rng::new(9);
+        let a = random(&mut rng, 3 * CHUNK_ROWS + 5, 16);
+        let v = random(&mut rng, 16, 2);
+        let want = NativeEngine::with_threads(1).gram_matvec(&a, &v, 0.4).unwrap();
+        let got = shared.gram_matvec(&a, &v, 0.4).unwrap();
+        // stealing on the shared pool must not move a single bit
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cancelled_token_fails_engine_ops() {
+        use crate::tasks::CANCELLED_MSG;
+        let mut rng = Rng::new(10);
+        let a = random(&mut rng, 2 * CHUNK_ROWS, 8);
+        let v = random(&mut rng, 8, 2);
+        let mut e = NativeEngine::with_threads(2);
+        let token = Arc::new(CancelToken::new());
+        e.set_cancel(Some(token.clone()));
+        assert!(e.gram_matvec(&a, &v, 0.1).is_ok(), "clear token must not interfere");
+        token.cancel();
+        let err = e.gram_matvec(&a, &v, 0.1).unwrap_err();
+        assert!(err.to_string().contains(CANCELLED_MSG));
+        let mut c = LocalMatrix::zeros(a.rows(), 2);
+        let err = e.gemm(GemmVariant::NN, &mut c, &a, &v).unwrap_err();
+        assert!(err.to_string().contains(CANCELLED_MSG));
+        // uninstalling the token restores normal operation
+        e.set_cancel(None);
+        assert!(e.gram_matvec(&a, &v, 0.1).is_ok());
     }
 }

@@ -21,6 +21,9 @@ pub enum EngineKind {
     Xla,
     /// AOT artifacts lowered from the Pallas kernels (`interpret=True`).
     Pallas,
+    /// Adaptive: a calibrated cost model picks native vs XLA per call
+    /// (`compute::dispatch`); degrades to native when no artifacts exist.
+    Auto,
 }
 
 impl EngineKind {
@@ -29,7 +32,8 @@ impl EngineKind {
             "native" => EngineKind::Native,
             "xla" => EngineKind::Xla,
             "pallas" => EngineKind::Pallas,
-            other => bail!("unknown engine {other:?} (native|xla|pallas)"),
+            "auto" => EngineKind::Auto,
+            other => bail!("unknown engine {other:?} (native|xla|pallas|auto)"),
         })
     }
 
@@ -38,6 +42,7 @@ impl EngineKind {
             EngineKind::Native => "native",
             EngineKind::Xla => "xla",
             EngineKind::Pallas => "pallas",
+            EngineKind::Auto => "auto",
         }
     }
 }
@@ -456,6 +461,15 @@ mod tests {
         assert_eq!(four.engine_threads_for_group(1, 8), 4);
         assert_eq!(four.engine_threads_for_group(4, 8), 2);
         assert_eq!(four.engine_threads_for_group(8, 8), 1);
+    }
+
+    #[test]
+    fn engine_auto_parses_and_round_trips() {
+        let mut c = Config::default();
+        c.apply("engine", "auto").unwrap();
+        assert_eq!(c.engine, EngineKind::Auto);
+        assert_eq!(EngineKind::Auto.as_str(), "auto");
+        assert_eq!(EngineKind::parse("auto").unwrap(), EngineKind::Auto);
     }
 
     #[test]

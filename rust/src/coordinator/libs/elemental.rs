@@ -17,6 +17,11 @@
 //!   slice), then the group barriers — used by the multi-tenant tests to
 //!   prove disjoint session groups run concurrently, and by the
 //!   async-task tests as the pollable/cancellable long-running routine
+//! * `burn(millis [, size])` → collective-free compute hog (diagnostic):
+//!   repeated dense engine GEMMs for up to `millis`, never polling the
+//!   cooperative token and never entering a collective — cancellable
+//!   only through the engine-level kernel check-ins (the worker installs
+//!   the task token into the engine; see `docs/compute.md`)
 //! * `spin(millis)` → cancellation-contract violator (diagnostic): runs
 //!   `millis` of collectively-synchronized 10 ms slices while
 //!   deliberately ignoring the cooperative cancel token — only a hard
@@ -60,6 +65,7 @@ impl Library for Elemental {
             "rand_matrix",
             "fro_norm",
             "sleep",
+            "burn",
             "spin",
             "fail_on",
         ]
@@ -80,6 +86,7 @@ impl Library for Elemental {
             "rand_matrix" => rand_matrix(params, ctx),
             "fro_norm" => fro_norm(params, ctx),
             "sleep" => sleep_routine(params, ctx),
+            "burn" => burn_routine(params, ctx),
             "spin" => spin_routine(params, ctx),
             "fail_on" => fail_on(params, ctx),
             other => anyhow::bail!("elemental has no routine {other:?}"),
@@ -279,6 +286,45 @@ fn sleep_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutp
     Ok(TaskOutput {
         matrices: vec![],
         scalars: Params::new().with_i64("ranks", ctx.comm.size() as i64),
+        timings: vec![("compute".into(), sw.secs("compute"))],
+    })
+}
+
+/// Collective-free compute hog (diagnostic): repeated dense engine GEMMs
+/// for up to `millis`, never polling the cooperative token and never
+/// entering a collective — the pre-v6 worst case for cancellation (no
+/// poison point for a hard cancel to land on, no cooperative check-in).
+/// The engine-level kernel check-ins are the only early exit: the worker
+/// installs the task's token into the engine, whose GEMM polls it at
+/// MC-panel boundaries and bails with `CANCELLED_MSG` within one panel.
+fn burn_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
+    let millis = params.i64("millis")?;
+    anyhow::ensure!((0..=60_000).contains(&millis), "millis must be in [0, 60000]");
+    let size = params.i64_or("size", 256)?;
+    anyhow::ensure!((16..=1024).contains(&size), "size must be in [16, 1024]");
+    let n = size as usize;
+    let mut sw = Stopwatch::new();
+    sw.start("compute");
+    let mut rng = Rng::new(0xB0B1 + ctx.rank as u64);
+    let a = LocalMatrix::from_fn(n, n, |_, _| rng.normal());
+    let b = LocalMatrix::from_fn(n, n, |_, _| rng.normal());
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(millis as u64);
+    let mut iters = 0i64;
+    let mut checksum = 0.0;
+    while std::time::Instant::now() < deadline {
+        let mut c = LocalMatrix::zeros(n, n);
+        // the engine call is where a cancelled task unwinds: the
+        // installed token fails the kernel mid-GEMM (note: deliberately
+        // no ctx.scope poll anywhere on this path)
+        ctx.engine.gemm(GemmVariant::NN, &mut c, &a, &b)?;
+        checksum += c.get(0, 0);
+        iters += 1;
+    }
+    sw.stop();
+    Ok(TaskOutput {
+        matrices: vec![],
+        scalars: Params::new().with_i64("iters", iters).with_f64("checksum", checksum),
         timings: vec![("compute".into(), sw.secs("compute"))],
     })
 }

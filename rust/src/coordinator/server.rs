@@ -30,6 +30,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::collectives::{CommError, Communicator, LocalComm, PoisonCause};
+use crate::compute::ThreadPool;
 use crate::config::{Config, SchedulerConfig, TransferConfig};
 use crate::distmat::RowBlockLayout;
 use crate::metrics::{SchedMetrics, SchedSnapshot, TaskOutcome};
@@ -336,6 +337,14 @@ struct Driver {
     /// Compute threads (`group × engine_threads`) leased to currently
     /// running tasks across all sessions (see `execute_task`).
     engine_threads_committed: Mutex<usize>,
+    /// Root of the server-wide work-stealing compute pool: one thread set
+    /// sized to the machine, with a client queue per rank
+    /// ([`ThreadPool::client`]). Each task retargets its rank's queue cap
+    /// (the thread lease above), and idle capacity migrates to busy
+    /// queues via bounded stealing instead of sitting in private
+    /// per-rank pools. Held here so the worker threads live as long as
+    /// the driver.
+    compute_pool: ThreadPool,
     next_id: AtomicU64,
     next_session: AtomicU64,
     next_task: AtomicU64,
@@ -1186,6 +1195,16 @@ impl AlchemistServer {
         anyhow::ensure!(num_workers >= 1, "need at least one worker");
         let mut threads = Vec::new();
 
+        // server-wide work-stealing compute plane: ONE thread set sized
+        // to the machine; each rank drives a client queue of it, and
+        // `execute_task`'s per-task lease retargets the queue's cap —
+        // `granted_workers × threads ≤ cores` stays a cap, not a static
+        // partition, because idle queues' capacity is stolen by busy
+        // ones (docs/compute.md)
+        let avail =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let compute_pool = ThreadPool::new(avail);
+
         // worker shared state; communicators are session-scoped and bound
         // at handshake time
         let mut workers = Vec::new();
@@ -1215,14 +1234,16 @@ impl AlchemistServer {
                     });
                 }));
             }
-            // command loop
+            // command loop; each rank's engine rides a client queue of
+            // the shared compute pool (cap retargeted per task)
             let (tx, rx) = mpsc::channel();
             senders.push(tx);
             {
                 let shared = shared.clone();
                 let cfg = cfg.clone();
+                let pool = compute_pool.client(1);
                 threads.push(std::thread::spawn(move || {
-                    worker_main(shared, cfg, rx);
+                    worker_main(shared, cfg, rx, Some(pool));
                 }));
             }
             workers.push(shared);
@@ -1243,6 +1264,7 @@ impl AlchemistServer {
             senders,
             registry: Registry::new(),
             engine_threads_committed: Mutex::new(0),
+            compute_pool,
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
             next_task: AtomicU64::new(1),
@@ -1265,7 +1287,8 @@ impl AlchemistServer {
 
         log::info!(
             "alchemist server up: control {control_addr}, {num_workers} workers, \
-             engine {}, max {} sessions",
+             shared compute pool of {} threads, engine {}, max {} sessions",
+            driver.compute_pool.threads(),
             cfg.engine.as_str(),
             cfg.scheduler.max_sessions
         );

@@ -8,8 +8,13 @@
 //! session-scoped [`LocalComm`] endpoint into [`WorkerShared::sessions`]
 //! at handshake time and removes it at teardown, so tasks from sessions
 //! holding disjoint groups run concurrently on disjoint worker threads.
-//! The engine is built lazily *on the worker thread* (PJRT handles are
-//! not `Send`).
+//! The engine is built lazily *on the worker thread* (real PJRT handles
+//! are not `Send`), riding the rank's client queue of the server's
+//! shared work-stealing compute pool when the server passes one in;
+//! while a task runs, its cooperative [`crate::tasks::CancelToken`] is
+//! installed into the engine so the kernels themselves check in at panel
+//! boundaries (a hard cancel lands within one MC-panel even in routines
+//! that never poll their scope).
 //!
 //! Data-socket threads never serialize on a store-wide lock: the
 //! [`MatrixStore`] hands out `Arc<Block>` handles under a short read
@@ -23,7 +28,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use crate::collectives::{CommError, Communicator, LocalComm, PoisonCause};
-use crate::compute::{build_engine, Engine};
+use crate::compute::{build_engine_with_pool, Engine, ThreadPool};
 use crate::config::Config;
 use crate::distmat::RowBlockLayout;
 use crate::net::Framed;
@@ -95,9 +100,17 @@ pub enum WorkerCmd {
     Shutdown,
 }
 
-/// The worker command loop. Runs until `Shutdown`.
-pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<WorkerCmd>) {
+/// The worker command loop. Runs until `Shutdown`. `pool` is this rank's
+/// client queue of the server's shared compute pool (`None` = the engine
+/// builds a private pool, the pre-shared-plane behavior tests rely on).
+pub fn worker_main(
+    shared: Arc<WorkerShared>,
+    cfg: Config,
+    rx: mpsc::Receiver<WorkerCmd>,
+    pool: Option<ThreadPool>,
+) {
     let rank = shared.rank;
+    let mut pool = pool;
     let mut engine: Option<Box<dyn Engine>> = None;
     while let Ok(cmd) = rx.recv() {
         match cmd {
@@ -131,13 +144,16 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                     Some(comm) => std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| -> crate::Result<TaskReply> {
                             if engine.is_none() {
-                                engine = Some(build_engine(&cfg)?);
+                                engine = Some(build_engine_with_pool(&cfg, pool.take())?);
                             }
                             let engine = engine.as_mut().unwrap();
                             // per-task: different sessions on this rank
                             // may have different clamped pool sizes
                             // (results are bit-identical either way)
                             engine.set_threads(engine_threads.max(1));
+                            // kernel-level cancellation check-ins for the
+                            // duration of this task (uninstalled below)
+                            engine.set_cancel(Some(scope.token().clone()));
                             let local_rank = comm.rank();
                             let cpu0 = thread_cpu_secs();
                             let sim0 = comm.sim_comm_secs();
@@ -197,6 +213,11 @@ pub fn worker_main(shared: Arc<WorkerShared>, cfg: Config, rx: mpsc::Receiver<Wo
                         Err(anyhow::anyhow!("routine {routine} panicked: {what}"))
                     }),
                 };
+                // uninstall the task's token (even after a panic) so the
+                // next task on this rank starts with a clean engine
+                if let Some(engine) = engine.as_mut() {
+                    engine.set_cancel(None);
+                }
                 // failure propagation: a rank that failed on its own (not
                 // as collateral of someone else's failure) poisons the
                 // group so peers blocked in — or about to enter — a

@@ -10,15 +10,31 @@
 //! into [`GEMM_MC`]×[`GEMM_KC`] panels of [`GEMM_MR`]-row micro-panels, B
 //! into [`GEMM_KC`]×n panels of [`GEMM_NR`]-column strips — and a
 //! register-blocked [`GEMM_MR`]×[`GEMM_NR`] micro-tile drives a branch-free
-//! `chunks_exact` FMA loop LLVM auto-vectorizes. All three storage
-//! variants (NN/TN/NT) funnel through one strided packing path, so a
-//! transposed operand costs a transposed *pack*, never a strided inner
-//! loop. The M dimension is optionally split over the engine's
-//! [`ThreadPool`] in fixed [`GEMM_MC`]-row panels; panel boundaries depend
-//! only on the problem shape, so results are bit-identical for any thread
-//! count.
+//! multiply-add loop. All three storage variants (NN/TN/NT) funnel
+//! through one strided packing path, so a transposed operand costs a
+//! transposed *pack*, never a strided inner loop. The M dimension is
+//! optionally split over the engine's [`ThreadPool`] in fixed
+//! [`GEMM_MC`]-row panels; panel boundaries depend only on the problem
+//! shape, so results are bit-identical for any thread count.
+//!
+//! The micro-kernel exists in per-ISA variants selected at runtime
+//! through [`crate::simd`]: the portable fallback (auto-vectorized at the
+//! build's baseline ISA), a 256-bit AVX2 variant, and a feature-gated
+//! 512-bit AVX-512F variant. Every variant performs the identical
+//! arithmetic in the identical order — each `acc[i][j]` accumulates its k
+//! products serially via *unfused* multiply-then-add (an FMA would skip
+//! the intermediate rounding) — so all paths are bit-identical and the
+//! determinism contract is ISA-independent. The choice is resolved once
+//! per [`gemm_slices`] call on the calling thread and carried into pool
+//! jobs as a function pointer.
+//!
+//! Long kernels also take an optional [`CancelToken`]: a hard-cancelled
+//! task stops within one MC panel instead of running a large GEMM to
+//! completion (`docs/tasks.md`).
 
 use crate::compute::pool::ThreadPool;
+use crate::simd::{self, Isa};
+use crate::tasks::CancelToken;
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -231,45 +247,67 @@ impl LocalMatrix {
 
     /// `self += a · b` (a: m×k, b: k×n, self: m×n).
     pub fn gemm_nn(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
-        self.gemm_nn_with(a, b, None)
+        self.gemm_nn_with(a, b, None, None);
     }
 
     /// [`gemm_nn`](LocalMatrix::gemm_nn), optionally splitting the M
     /// dimension over `pool` in fixed [`GEMM_MC`]-row panels
-    /// (bit-identical for any thread count).
-    pub fn gemm_nn_with(&mut self, a: &LocalMatrix, b: &LocalMatrix, pool: Option<&ThreadPool>) {
+    /// (bit-identical for any thread count) and polling `cancel` at
+    /// MC-panel boundaries. Returns `false` (with `self` left partially
+    /// updated — discard it) iff cancellation cut the kernel short.
+    pub fn gemm_nn_with(
+        &mut self,
+        a: &LocalMatrix,
+        b: &LocalMatrix,
+        pool: Option<&ThreadPool>,
+        cancel: Option<&CancelToken>,
+    ) -> bool {
         assert_eq!(a.cols, b.rows);
         assert_eq!((self.rows, self.cols), (a.rows, b.cols));
         let (m, n, k) = (a.rows, b.cols, a.cols);
-        gemm_slices(&mut self.data, m, n, k, &a.data, k, 1, &b.data, n, 1, pool);
+        gemm_slices(&mut self.data, m, n, k, &a.data, k, 1, &b.data, n, 1, pool, cancel)
     }
 
     /// `self += aᵀ · b` (a stored k×m, b: k×n, self: m×n).
     pub fn gemm_tn(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
-        self.gemm_tn_with(a, b, None)
+        self.gemm_tn_with(a, b, None, None);
     }
 
-    /// [`gemm_tn`](LocalMatrix::gemm_tn) with an optional pool; the
-    /// transposed A costs a transposed pack, not a strided inner loop.
-    pub fn gemm_tn_with(&mut self, a: &LocalMatrix, b: &LocalMatrix, pool: Option<&ThreadPool>) {
+    /// [`gemm_tn`](LocalMatrix::gemm_tn) with an optional pool and cancel
+    /// token; the transposed A costs a transposed pack, not a strided
+    /// inner loop.
+    pub fn gemm_tn_with(
+        &mut self,
+        a: &LocalMatrix,
+        b: &LocalMatrix,
+        pool: Option<&ThreadPool>,
+        cancel: Option<&CancelToken>,
+    ) -> bool {
         assert_eq!(a.rows, b.rows);
         assert_eq!((self.rows, self.cols), (a.cols, b.cols));
         let (m, n, k) = (a.cols, b.cols, a.rows);
-        gemm_slices(&mut self.data, m, n, k, &a.data, 1, m, &b.data, n, 1, pool);
+        gemm_slices(&mut self.data, m, n, k, &a.data, 1, m, &b.data, n, 1, pool, cancel)
     }
 
     /// `self += a · bᵀ` (a: m×k, b stored n×k, self: m×n).
     pub fn gemm_nt(&mut self, a: &LocalMatrix, b: &LocalMatrix) {
-        self.gemm_nt_with(a, b, None)
+        self.gemm_nt_with(a, b, None, None);
     }
 
-    /// [`gemm_nt`](LocalMatrix::gemm_nt) with an optional pool; the
-    /// transposed B costs a transposed pack, not a strided inner loop.
-    pub fn gemm_nt_with(&mut self, a: &LocalMatrix, b: &LocalMatrix, pool: Option<&ThreadPool>) {
+    /// [`gemm_nt`](LocalMatrix::gemm_nt) with an optional pool and cancel
+    /// token; the transposed B costs a transposed pack, not a strided
+    /// inner loop.
+    pub fn gemm_nt_with(
+        &mut self,
+        a: &LocalMatrix,
+        b: &LocalMatrix,
+        pool: Option<&ThreadPool>,
+        cancel: Option<&CancelToken>,
+    ) -> bool {
         assert_eq!(a.cols, b.cols);
         assert_eq!((self.rows, self.cols), (a.rows, b.rows));
         let (m, n, k) = (a.rows, b.rows, a.cols);
-        gemm_slices(&mut self.data, m, n, k, &a.data, k, 1, &b.data, 1, k, pool);
+        gemm_slices(&mut self.data, m, n, k, &a.data, k, 1, &b.data, 1, k, pool, cancel)
     }
 }
 
@@ -292,8 +330,14 @@ impl LocalMatrix {
 ///   region into C.
 ///
 /// Per-cell arithmetic order is fixed by (shape, blocking constants)
-/// alone — never by `pool` or its thread count — so results are
-/// bit-identical across `threads = 1/2/4/...`.
+/// alone — never by `pool`, its thread count, or the ISA variant — so
+/// results are bit-identical across `threads = 1/2/4/...` and across
+/// fallback/AVX2/AVX-512 paths.
+///
+/// `cancel` is polled at MC-panel boundaries (the engine-level check-in
+/// for hard cancellation). Returns `false` iff the kernel stopped early
+/// on a set token; `c` then holds a partial update the caller must
+/// discard.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_slices(
     c: &mut [f64],
@@ -307,15 +351,20 @@ pub(crate) fn gemm_slices(
     brs: usize,
     bcs: usize,
     pool: Option<&ThreadPool>,
-) {
+    cancel: Option<&CancelToken>,
+) -> bool {
     debug_assert_eq!(c.len(), m * n);
     if m == 0 || n == 0 || k == 0 {
-        return;
+        return true;
     }
+    let mk = micro_kernel(simd::current());
     let mut bp: Vec<f64> = Vec::new();
     for k0 in (0..k).step_by(GEMM_KC) {
+        if is_cancelled(cancel) {
+            return false;
+        }
         let kc = GEMM_KC.min(k - k0);
-        pack_b(&mut bp, b, brs, bcs, k0, kc, n);
+        pack_b(&mut bp, b, brs, bcs, k0, kc, n, pool);
         match pool {
             Some(pool) if m > GEMM_MC => {
                 let bp_ref: &[f64] = &bp;
@@ -324,40 +373,103 @@ pub(crate) fn gemm_slices(
                     .enumerate()
                     .map(|(pi, cc)| {
                         move || {
+                            // a cancelled task skips its remaining panels;
+                            // the bailing caller discards the partial C
+                            if is_cancelled(cancel) {
+                                return;
+                            }
                             let mc = cc.len() / n;
-                            gemm_panel(cc, mc, n, kc, a, ars, acs, pi * GEMM_MC, k0, bp_ref);
+                            gemm_panel(cc, mc, n, kc, a, ars, acs, pi * GEMM_MC, k0, bp_ref, mk);
                         }
                     })
                     .collect();
                 pool.run(jobs);
+                if is_cancelled(cancel) {
+                    return false;
+                }
             }
             _ => {
                 for (pi, cc) in c.chunks_mut(GEMM_MC * n).enumerate() {
+                    if is_cancelled(cancel) {
+                        return false;
+                    }
                     let mc = cc.len() / n;
-                    gemm_panel(cc, mc, n, kc, a, ars, acs, pi * GEMM_MC, k0, &bp);
+                    gemm_panel(cc, mc, n, kc, a, ars, acs, pi * GEMM_MC, k0, &bp, mk);
                 }
             }
         }
     }
+    true
+}
+
+#[inline]
+fn is_cancelled(cancel: Option<&CancelToken>) -> bool {
+    cancel.is_some_and(|t| t.is_cancelled())
 }
 
 /// Pack the `kc`-deep, `n`-wide block of op(B) starting at row `k0` into
 /// NR-column strips: strip `s` holds `op(b)[k0+kk][s·NR + j]` at
 /// `s·NR·kc + kk·NR + j`, zero-padded to NR columns so the micro-kernel
 /// never branches on the edge.
-fn pack_b(bp: &mut Vec<f64>, b: &[f64], brs: usize, bcs: usize, k0: usize, kc: usize, n: usize) {
+///
+/// Wide blocks split the strip range over `pool`: the serial KC×N pack
+/// dominates skinny-A shapes, where `m ≤ MC` leaves the panel loop with
+/// no parallelism at all. Strips are disjoint destination regions written
+/// from a read-only source, so the packed bytes are identical however
+/// many threads produced them.
+fn pack_b(
+    bp: &mut Vec<f64>,
+    b: &[f64],
+    brs: usize,
+    bcs: usize,
+    k0: usize,
+    kc: usize,
+    n: usize,
+    pool: Option<&ThreadPool>,
+) {
     let strips = n.div_ceil(GEMM_NR);
     bp.clear();
     bp.resize(strips * GEMM_NR * kc, 0.0);
-    for s in 0..strips {
-        let j0 = s * GEMM_NR;
+    // 8 strips per job = 16 KiB of packed output at full KC; below ~256
+    // KiB total the pack is cheaper than dispatching jobs for it
+    const PACK_STRIPS_PER_JOB: usize = 8;
+    const PACK_PAR_MIN_ELEMS: usize = 32 * 1024;
+    match pool {
+        Some(pool) if strips > PACK_STRIPS_PER_JOB && bp.len() >= PACK_PAR_MIN_ELEMS => {
+            let jobs: Vec<_> = bp
+                .chunks_mut(PACK_STRIPS_PER_JOB * GEMM_NR * kc)
+                .enumerate()
+                .map(|(g, dst)| {
+                    move || pack_b_strips(dst, b, brs, bcs, k0, kc, n, g * PACK_STRIPS_PER_JOB)
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        _ => pack_b_strips(bp, b, brs, bcs, k0, kc, n, 0),
+    }
+}
+
+/// Pack strips `s0 ..` of the block into `dst` (pre-zeroed; its length
+/// determines how many strips, the last possibly partial-width).
+#[allow(clippy::too_many_arguments)]
+fn pack_b_strips(
+    dst: &mut [f64],
+    b: &[f64],
+    brs: usize,
+    bcs: usize,
+    k0: usize,
+    kc: usize,
+    n: usize,
+    s0: usize,
+) {
+    for (si, strip) in dst.chunks_mut(GEMM_NR * kc).enumerate() {
+        let j0 = (s0 + si) * GEMM_NR;
         let cols = GEMM_NR.min(n - j0);
-        let base = s * GEMM_NR * kc;
         for kk in 0..kc {
             let src = (k0 + kk) * brs;
-            let dst = base + kk * GEMM_NR;
+            let at = kk * GEMM_NR;
             for j in 0..cols {
-                bp[dst + j] = b[src + (j0 + j) * bcs];
+                strip[at + j] = b[src + (j0 + j) * bcs];
             }
         }
     }
@@ -365,8 +477,8 @@ fn pack_b(bp: &mut Vec<f64>, b: &[f64], brs: usize, bcs: usize, k0: usize, kc: u
 
 /// One MC-row panel of the packed GEMM: pack this panel's rows of op(A),
 /// then sweep NR-column strips × MR-row micro-panels through the
-/// micro-kernel. `cc` is the panel's contiguous C rows (`mc × n`), `i0`
-/// the panel's first row in op(A).
+/// micro-kernel `mk`. `cc` is the panel's contiguous C rows (`mc × n`),
+/// `i0` the panel's first row in op(A).
 #[allow(clippy::too_many_arguments)]
 fn gemm_panel(
     cc: &mut [f64],
@@ -379,6 +491,7 @@ fn gemm_panel(
     i0: usize,
     k0: usize,
     bp: &[f64],
+    mk: MicroKernel,
 ) {
     // pack op(A) rows i0..i0+mc into MR-row micro-panels, k-major,
     // zero-padded to MR rows
@@ -404,19 +517,8 @@ fn gemm_panel(
             let ir = p * GEMM_MR;
             let rows = GEMM_MR.min(mc - ir);
             let asl = &ap[p * GEMM_MR * kc..(p + 1) * GEMM_MR * kc];
-            // register-blocked micro-tile: branch-free MR×NR FMA chain
-            // over the packed panels (chunks_exact gives LLVM fixed-width
-            // lanes to vectorize)
             let mut acc = [[0.0f64; GEMM_NR]; GEMM_MR];
-            for (av, bv) in asl.chunks_exact(GEMM_MR).zip(bs.chunks_exact(GEMM_NR)) {
-                for i in 0..GEMM_MR {
-                    let ai = av[i];
-                    let row = &mut acc[i];
-                    for j in 0..GEMM_NR {
-                        row[j] += ai * bv[j];
-                    }
-                }
-            }
+            mk(asl, bs, &mut acc);
             for i in 0..rows {
                 let at = (ir + i) * n + j0;
                 let crow = &mut cc[at..at + nr];
@@ -425,6 +527,119 @@ fn gemm_panel(
                 }
             }
         }
+    }
+}
+
+// ---- the register-blocked micro-kernel, in per-ISA variants ----
+//
+// All variants compute `acc[i][j] += Σ_kk asl[kk·MR + i] · bs[kk·NR + j]`
+// with the k-products of each (i, j) cell accumulated serially in kk
+// order through *unfused* multiply-then-add — never `fmadd`, whose single
+// rounding would diverge from the portable path. Wider ISAs only change
+// how many independent (i, j) cells one instruction carries, never the
+// order of any cell's own additions, so every variant is bit-identical
+// to `mk_portable` (pinned in `it_compute.rs`).
+
+/// Signature of the micro-kernel: `asl` is an MR-row packed A micro-panel
+/// (`MR·kc` long, k-major), `bs` a packed B strip (`NR·kc` long), and the
+/// MR×NR accumulator tile is added to, not overwritten.
+pub(crate) type MicroKernel = fn(&[f64], &[f64], &mut [[f64; GEMM_NR]; GEMM_MR]);
+
+/// The micro-kernel variant for `isa`. The simd module only hands out
+/// ISAs the host can run, so the cfg-gated arms cover every reachable
+/// case; anything else routes to the portable kernel.
+pub(crate) fn micro_kernel(isa: Isa) -> MicroKernel {
+    match isa {
+        Isa::Fallback => mk_portable,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => mk_avx2,
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Isa::Avx512 => mk_avx512,
+        #[allow(unreachable_patterns)]
+        _ => mk_portable,
+    }
+}
+
+/// Portable micro-kernel: branch-free MR×NR multiply-add chain over the
+/// packed panels (`chunks_exact` gives LLVM fixed-width lanes to
+/// auto-vectorize at the build's baseline ISA).
+fn mk_portable(asl: &[f64], bs: &[f64], acc: &mut [[f64; GEMM_NR]; GEMM_MR]) {
+    for (av, bv) in asl.chunks_exact(GEMM_MR).zip(bs.chunks_exact(GEMM_NR)) {
+        for i in 0..GEMM_MR {
+            let ai = av[i];
+            let row = &mut acc[i];
+            for j in 0..GEMM_NR {
+                row[j] += ai * bv[j];
+            }
+        }
+    }
+}
+
+/// AVX2 micro-kernel: the NR=8 accumulator row of each of the MR rows
+/// lives in two 256-bit registers (8 of 16 ymm in accumulators).
+#[cfg(target_arch = "x86_64")]
+fn mk_avx2(asl: &[f64], bs: &[f64], acc: &mut [[f64; GEMM_NR]; GEMM_MR]) {
+    // SAFETY: only reachable via `micro_kernel(Isa::Avx2)`, which the
+    // simd module yields solely after `is_x86_feature_detected!` has
+    // confirmed avx2+fma on this host.
+    unsafe { mk_avx2_impl(asl, bs, acc) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mk_avx2_impl(asl: &[f64], bs: &[f64], acc: &mut [[f64; GEMM_NR]; GEMM_MR]) {
+    use std::arch::x86_64::*;
+    let mut c0 = [_mm256_setzero_pd(); GEMM_MR];
+    let mut c1 = [_mm256_setzero_pd(); GEMM_MR];
+    for i in 0..GEMM_MR {
+        c0[i] = _mm256_loadu_pd(acc[i].as_ptr());
+        c1[i] = _mm256_loadu_pd(acc[i].as_ptr().add(4));
+    }
+    for (av, bv) in asl.chunks_exact(GEMM_MR).zip(bs.chunks_exact(GEMM_NR)) {
+        let b0 = _mm256_loadu_pd(bv.as_ptr());
+        let b1 = _mm256_loadu_pd(bv.as_ptr().add(4));
+        for i in 0..GEMM_MR {
+            let ai = _mm256_set1_pd(av[i]);
+            // unfused mul+add, NOT _mm256_fmadd_pd: bit-identity with the
+            // portable path requires the intermediate rounding
+            c0[i] = _mm256_add_pd(c0[i], _mm256_mul_pd(ai, b0));
+            c1[i] = _mm256_add_pd(c1[i], _mm256_mul_pd(ai, b1));
+        }
+    }
+    for i in 0..GEMM_MR {
+        _mm256_storeu_pd(acc[i].as_mut_ptr(), c0[i]);
+        _mm256_storeu_pd(acc[i].as_mut_ptr().add(4), c1[i]);
+    }
+}
+
+/// AVX-512F micro-kernel: one 512-bit register holds a full NR=8
+/// accumulator row. Feature-gated (`--features avx512`) and still
+/// runtime-detected before selection.
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+fn mk_avx512(asl: &[f64], bs: &[f64], acc: &mut [[f64; GEMM_NR]; GEMM_MR]) {
+    // SAFETY: only reachable via `micro_kernel(Isa::Avx512)`, yielded
+    // solely after `is_x86_feature_detected!("avx512f")` confirmed.
+    unsafe { mk_avx512_impl(asl, bs, acc) }
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn mk_avx512_impl(asl: &[f64], bs: &[f64], acc: &mut [[f64; GEMM_NR]; GEMM_MR]) {
+    use std::arch::x86_64::*;
+    let mut c = [_mm512_setzero_pd(); GEMM_MR];
+    for i in 0..GEMM_MR {
+        c[i] = _mm512_loadu_pd(acc[i].as_ptr());
+    }
+    for (av, bv) in asl.chunks_exact(GEMM_MR).zip(bs.chunks_exact(GEMM_NR)) {
+        let b = _mm512_loadu_pd(bv.as_ptr());
+        for i in 0..GEMM_MR {
+            let ai = _mm512_set1_pd(av[i]);
+            // unfused mul+add for bit-identity with the portable path
+            c[i] = _mm512_add_pd(c[i], _mm512_mul_pd(ai, b));
+        }
+    }
+    for i in 0..GEMM_MR {
+        _mm512_storeu_pd(acc[i].as_mut_ptr(), c[i]);
     }
 }
 
@@ -505,24 +720,81 @@ mod tests {
                 // NN/TN/NT through the pool must be BIT-identical to the
                 // serial path (the engine determinism contract)
                 let mut c = LocalMatrix::zeros(m, n);
-                c.gemm_nn_with(&a, &b, Some(pool));
+                c.gemm_nn_with(&a, &b, Some(pool), None);
                 assert_eq!(c, serial, "nn pooled {m}x{n}x{k}");
 
                 let mut t = LocalMatrix::zeros(m, n);
-                t.gemm_tn_with(&a.transpose(), &b, Some(pool));
+                t.gemm_tn_with(&a.transpose(), &b, Some(pool), None);
                 let mut t_serial = LocalMatrix::zeros(m, n);
                 t_serial.gemm_tn(&a.transpose(), &b);
                 assert_eq!(t, t_serial, "tn pooled {m}x{n}x{k}");
                 assert!(t.max_abs_diff(&want) < 1e-10, "tn {m}x{n}x{k}");
 
                 let mut u = LocalMatrix::zeros(m, n);
-                u.gemm_nt_with(&a, &b.transpose(), Some(pool));
+                u.gemm_nt_with(&a, &b.transpose(), Some(pool), None);
                 let mut u_serial = LocalMatrix::zeros(m, n);
                 u_serial.gemm_nt(&a, &b.transpose());
                 assert_eq!(u, u_serial, "nt pooled {m}x{n}x{k}");
                 assert!(u.max_abs_diff(&want) < 1e-10, "nt {m}x{n}x{k}");
             }
         }
+    }
+
+    #[test]
+    fn isa_variants_bit_identical_to_fallback() {
+        // every runnable ISA path (serial and pooled, which also covers
+        // the threaded B-pack) must produce the exact bits of the
+        // portable kernel — the dispatch determinism contract
+        let mut rng = Rng::new(12);
+        let pool = ThreadPool::new(4);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (5, 9, 7),
+            (63, 65, 129),
+            (65, 100, 257),
+            (130, 7, 33),
+        ] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            let base = crate::simd::with_isa(crate::simd::Isa::Fallback, || {
+                let mut c = LocalMatrix::zeros(m, n);
+                c.gemm_nn(&a, &b);
+                c
+            });
+            for isa in crate::simd::available() {
+                let (serial, pooled) = crate::simd::with_isa(isa, || {
+                    let mut c = LocalMatrix::zeros(m, n);
+                    c.gemm_nn(&a, &b);
+                    let mut p = LocalMatrix::zeros(m, n);
+                    p.gemm_nn_with(&a, &b, Some(&pool), None);
+                    (c, p)
+                });
+                assert_eq!(serial, base, "{} serial {m}x{n}x{k}", isa.name());
+                assert_eq!(pooled, base, "{} pooled {m}x{n}x{k}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cancel_token_stops_gemm_early() {
+        use crate::tasks::CancelToken;
+        let mut rng = Rng::new(13);
+        let a = random(&mut rng, 300, 64);
+        let b = random(&mut rng, 64, 32);
+        let mut c = LocalMatrix::zeros(300, 32);
+
+        // a clear token changes nothing
+        let token = CancelToken::new();
+        assert!(c.gemm_nn_with(&a, &b, None, Some(&token)));
+
+        // a pre-set token stops the kernel before it completes
+        token.cancel();
+        let mut d = LocalMatrix::zeros(300, 32);
+        assert!(!d.gemm_nn_with(&a, &b, None, Some(&token)));
+
+        let pool = ThreadPool::new(2);
+        let mut e = LocalMatrix::zeros(300, 32);
+        assert!(!e.gemm_nn_with(&a, &b, Some(&pool), Some(&token)));
     }
 
     #[test]

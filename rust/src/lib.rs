@@ -12,7 +12,9 @@
 //!   [`collectives`] (the MPI stand-in), [`distmat`] (the Elemental
 //!   stand-in), [`sparklite`] (the Spark stand-in), [`hdf5sim`];
 //! * compute — [`compute`] engines backed by [`runtime`] (AOT-compiled
-//!   JAX/Pallas artifacts over PJRT) or a native blocked GEMM;
+//!   JAX/Pallas artifacts over a PJRT stand-in) or a native blocked GEMM
+//!   with runtime ISA dispatch ([`simd`]), selected per call by
+//!   [`compute::dispatch`] when `engine = "auto"`;
 //! * numerics — [`linalg`] (the libSkylark / ARPACK stand-ins);
 //! * the paper's system — [`coordinator`] (server, driver, workers, matrix
 //!   handles, library registry) and [`client`] (the Alchemist-Client
@@ -74,6 +76,7 @@ pub mod metrics;
 pub mod net;
 pub mod protocol;
 pub mod runtime;
+pub mod simd;
 pub mod sparklite;
 pub mod tasks;
 pub mod testkit;

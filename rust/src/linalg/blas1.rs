@@ -8,10 +8,29 @@
 //! SPMD solver computing a dot over replicated state gets the bit-same
 //! answer — the same contract the engine's chunked reductions follow
 //! (`docs/compute.md`).
+//!
+//! Like the GEMM micro-kernel, the hot loops carry runtime-dispatched
+//! AVX2 variants (`crate::simd`) that map lane `j` of the fixed 4-lane
+//! structure onto lane `j` of one 256-bit register and keep the identical
+//! horizontal combine and unfused mul+add — bit-identical to the portable
+//! path by construction. The 4-lane reduction shape pins the vector width
+//! to 256 bits, so the (feature-gated) AVX-512 selection reuses the AVX2
+//! variant here: an 8-lane dot would be a *different* (reassociated)
+//! reduction, and these ops are memory-bound anyway.
 
-/// 4-lane unrolled dot product.
+/// Dot product with the fixed 4-lane reduction; dispatches to the widest
+/// runnable variant for the calling thread.
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if crate::simd::current() != crate::simd::Isa::Fallback {
+        return dot_avx2(a, b);
+    }
+    dot_portable(a, b)
+}
+
+/// 4-lane unrolled portable dot product.
+fn dot_portable(a: &[f64], b: &[f64]) -> f64 {
     let n4 = a.len() & !3;
     let mut lanes = [0.0f64; 4];
     for (x, y) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
@@ -27,15 +46,78 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
 }
 
-/// `y += alpha·x`, 4-lane unrolled.
+#[cfg(target_arch = "x86_64")]
+fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    // SAFETY: `simd::current()` yields a non-fallback ISA only after
+    // `is_x86_feature_detected!` confirmed avx2+fma on this host.
+    unsafe { dot_avx2_impl(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_avx2_impl(a: &[f64], b: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let n4 = a.len() & !3;
+    // register lane j accumulates exactly what portable lane j does, in
+    // the same order; mul+add unfused for bit-identity
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < n4 {
+        let x = _mm256_loadu_pd(a.as_ptr().add(i));
+        let y = _mm256_loadu_pd(b.as_ptr().add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(x, y));
+        i += 4;
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0;
+    for (x, y) in a[n4..].iter().zip(&b[n4..]) {
+        tail += x * y;
+    }
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]) + tail
+}
+
+/// `y += alpha·x`; elementwise, so every variant is trivially
+/// bit-identical to the naive loop.
 pub fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
     debug_assert_eq!(y.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if crate::simd::current() != crate::simd::Isa::Fallback {
+        // SAFETY: non-fallback ISA implies detected avx2+fma (see `dot`).
+        unsafe { axpy_avx2_impl(y, alpha, x) };
+        return;
+    }
+    axpy_portable(y, alpha, x);
+}
+
+/// 4-lane unrolled portable axpy.
+fn axpy_portable(y: &mut [f64], alpha: f64, x: &[f64]) {
     let n4 = y.len() & !3;
     for (ys, xs) in y[..n4].chunks_exact_mut(4).zip(x[..n4].chunks_exact(4)) {
         ys[0] += alpha * xs[0];
         ys[1] += alpha * xs[1];
         ys[2] += alpha * xs[2];
         ys[3] += alpha * xs[3];
+    }
+    for (ys, xs) in y[n4..].iter_mut().zip(&x[n4..]) {
+        *ys += alpha * xs;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2_impl(y: &mut [f64], alpha: f64, x: &[f64]) {
+    use std::arch::x86_64::*;
+    let n4 = y.len() & !3;
+    let al = _mm256_set1_pd(alpha);
+    let mut i = 0;
+    while i < n4 {
+        let xs = _mm256_loadu_pd(x.as_ptr().add(i));
+        let ys = _mm256_loadu_pd(y.as_ptr().add(i));
+        // unfused mul+add, matching the portable path's rounding
+        let r = _mm256_add_pd(ys, _mm256_mul_pd(al, xs));
+        _mm256_storeu_pd(y.as_mut_ptr().add(i), r);
+        i += 4;
     }
     for (ys, xs) in y[n4..].iter_mut().zip(&x[n4..]) {
         *ys += alpha * xs;
@@ -116,6 +198,28 @@ mod tests {
             "dot drifted from Kahan reference: got {got}, want {want} \
              (scale {scale})"
         );
+    }
+
+    #[test]
+    fn isa_variants_bit_identical_to_portable() {
+        use crate::simd::{available, with_isa, Isa};
+        // all tail lengths around the 4-lane boundary plus a long
+        // cancellation-heavy vector: every runnable ISA path must return
+        // the exact bits of the portable path
+        for n in [0usize, 1, 3, 4, 5, 8, 11, 1003] {
+            let a: Vec<f64> = (0..n).map(|i| (i as f64 - 2.5) * 1.7e-3).collect();
+            let b: Vec<f64> = (0..n).map(|i| (1.0 - i as f64) * 3.1e2).collect();
+            let want_dot = with_isa(Isa::Fallback, || dot(&a, &b));
+            let mut want_y = b.clone();
+            with_isa(Isa::Fallback, || axpy(&mut want_y, -0.7, &a));
+            for isa in available() {
+                let got = with_isa(isa, || dot(&a, &b));
+                assert_eq!(got.to_bits(), want_dot.to_bits(), "dot {} n={n}", isa.name());
+                let mut y = b.clone();
+                with_isa(isa, || axpy(&mut y, -0.7, &a));
+                assert_eq!(y, want_y, "axpy {} n={n}", isa.name());
+            }
+        }
     }
 
     #[test]

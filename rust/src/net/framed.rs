@@ -15,9 +15,13 @@
 //!   straight into the socket buffer and decodes payloads as slices into
 //!   a reusable receive buffer, so steady-state row transfer performs no
 //!   per-frame heap allocation (tracked by
-//!   [`recv_buf_grows`](Framed::recv_buf_grows)).
+//!   [`recv_buf_grows`](Framed::recv_buf_grows)). Payloads at or above
+//!   [`VECTORED_MIN_BYTES`] skip the write buffer entirely: the length
+//!   prefix, header, and payload go to the socket in one gathered
+//!   `writev`, so big row batches reach the kernel with **zero**
+//!   user-space copies of the f64s on the send side.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, IoSlice, Read, Write};
 use std::net::TcpStream;
 
 use anyhow::Context;
@@ -38,6 +42,44 @@ const SHRINK_CHECK_FRAMES: u32 = 64;
 /// Never shrink the receive buffer below this (control frames churn
 /// around this size; shrinking further would just re-grow).
 const MIN_RETAINED_BYTES: usize = 4 << 10;
+
+/// Payloads at or above this bypass the write buffer via a gathered
+/// `writev` ([`Framed::send_data_ref`]). Below it, copying into the
+/// buffer is cheaper than a dedicated syscall; at or above it, the
+/// buffer copy is pure overhead — the payload alone already justifies
+/// its own socket write.
+pub const VECTORED_MIN_BYTES: usize = 4 << 10;
+
+/// Write every byte of `bufs` through `write_vectored`, walking the
+/// cursor across partial writes by hand (`IoSlice::advance_slices` needs
+/// a newer compiler than this crate's floor).
+fn write_all_vectored<W: Write>(w: &mut W, bufs: &[&[u8]]) -> crate::Result<()> {
+    let mut idx = 0; // first not-fully-written buf
+    let mut off = 0; // bytes of bufs[idx] already written
+    while idx < bufs.len() {
+        if off == bufs[idx].len() {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        let slices: Vec<IoSlice<'_>> = std::iter::once(IoSlice::new(&bufs[idx][off..]))
+            .chain(bufs[idx + 1..].iter().map(|b| IoSlice::new(b)))
+            .collect();
+        let mut n = match w.write_vectored(&slices) {
+            Ok(0) => anyhow::bail!("socket closed mid-frame (wrote 0 bytes)"),
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        };
+        while idx < bufs.len() && n >= bufs[idx].len() - off {
+            n -= bufs[idx].len() - off;
+            idx += 1;
+            off = 0;
+        }
+        off += n;
+    }
+    Ok(())
+}
 
 pub struct Framed<R: Read, W: Write> {
     r: BufReader<R>,
@@ -212,7 +254,10 @@ impl<R: Read, W: Write> Framed<R, W> {
     /// Queue a borrowed-payload data frame WITHOUT flushing: length
     /// prefix + fixed header + the payload's raw little-endian bytes go
     /// straight into the socket buffer — no intermediate encode Vec, so
-    /// the f64s are copied exactly once on this side.
+    /// the f64s are copied at most once on this side. Payloads of
+    /// [`VECTORED_MIN_BYTES`] or more skip even that copy: pending
+    /// buffered bytes are flushed (frame order is preserved) and the
+    /// whole frame goes out as one gathered `writev` of three slices.
     pub fn send_data_ref(&mut self, msg: &DataMsgRef) -> crate::Result<()> {
         let len = msg.frame_len();
         anyhow::ensure!(
@@ -220,14 +265,31 @@ impl<R: Read, W: Write> Framed<R, W> {
             "frame of {len} bytes exceeds cap"
         );
         let header = msg.encode_header()?;
-        self.w.write_all(&(len as u32).to_le_bytes())?;
-        self.w.write_all(&header)?;
         let data = msg.payload();
         #[cfg(target_endian = "little")]
-        self.w.write_all(crate::protocol::wire::f64s_as_le_bytes(data))?;
+        {
+            let payload = crate::protocol::wire::f64s_as_le_bytes(data);
+            if payload.len() >= VECTORED_MIN_BYTES {
+                self.w.flush()?;
+                let prefix = (len as u32).to_le_bytes();
+                return write_all_vectored(
+                    self.w.get_mut(),
+                    &[&prefix, &header, payload],
+                );
+            }
+            self.w.write_all(&(len as u32).to_le_bytes())?;
+            self.w.write_all(&header)?;
+            self.w.write_all(payload)?;
+        }
         #[cfg(target_endian = "big")]
-        for x in data {
-            self.w.write_all(&x.to_le_bytes())?;
+        {
+            // byte-swapping host: element-wise conversion needs a copy
+            // anyway, so the buffered path is always the right one
+            self.w.write_all(&(len as u32).to_le_bytes())?;
+            self.w.write_all(&header)?;
+            for x in data {
+                self.w.write_all(&x.to_le_bytes())?;
+            }
         }
         Ok(())
     }
@@ -363,6 +425,83 @@ mod tests {
         }
         c.flush().unwrap();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn vectored_large_frames_interleave_with_buffered_small_ones() {
+        use crate::protocol::DataMsgRef;
+
+        // alternating payloads straddling VECTORED_MIN_BYTES: the small
+        // ones take the buffered path, the big ones flush-then-writev —
+        // frame order and content must survive the mixed paths
+        let big_cols = VECTORED_MIN_BYTES / 8 + 13; // comfortably above
+        let small_cols = 4usize;
+        let rounds = 20usize;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut f = Framed::tcp(s, 1 << 16).unwrap();
+            for i in 0..2 * rounds {
+                let want_cols = if i % 2 == 0 { small_cols } else { big_cols };
+                match f.recv_data_view().unwrap() {
+                    crate::protocol::DataMsgView::PushRows {
+                        start_row,
+                        nrows,
+                        ncols,
+                        payload,
+                        ..
+                    } => {
+                        assert_eq!(start_row, i as u64, "frames out of order");
+                        assert_eq!((nrows, ncols as usize), (1, want_cols));
+                        let mut row = vec![0f64; want_cols];
+                        crate::protocol::copy_le_f64s(payload, &mut row);
+                        assert_eq!(row[0], i as f64);
+                        assert_eq!(row[want_cols - 1], i as f64 + 0.25);
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        });
+
+        let mut c = Framed::connect(&addr.to_string(), 1 << 16).unwrap();
+        for i in 0..2 * rounds {
+            let cols = if i % 2 == 0 { small_cols } else { big_cols };
+            let mut data = vec![0f64; cols];
+            data[0] = i as f64;
+            data[cols - 1] = i as f64 + 0.25;
+            c.send_data_ref(&DataMsgRef::PushRows {
+                matrix_id: 9,
+                start_row: i as u64,
+                nrows: 1,
+                ncols: cols as u32,
+                data: &data,
+            })
+            .unwrap();
+        }
+        c.flush().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn write_all_vectored_survives_partial_writes() {
+        // a writer that accepts at most 7 bytes per call forces the
+        // cursor walk across every slice boundary
+        struct Dribble(Vec<u8>);
+        impl Write for Dribble {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                let n = buf.len().min(7);
+                self.0.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let bufs: [&[u8]; 4] = [b"ab", b"", b"cdefghijk", b"lmnop"];
+        let mut w = Dribble(Vec::new());
+        write_all_vectored(&mut w, &bufs).unwrap();
+        assert_eq!(w.0, b"abcdefghijklmnop");
     }
 
     #[test]

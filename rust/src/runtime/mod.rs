@@ -1,19 +1,24 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Artifact runtime: load the AOT manifest and execute artifacts through
+//! the PJRT stand-in ([`pjrtsim`]).
 //!
-//! This is the only module that touches the `xla` crate. A [`Runtime`]
-//! owns one PJRT CPU client plus a lazily-compiled executable cache keyed
-//! by artifact name; `compute::XlaEngine` resolves (op, engine, dims) →
-//! artifact through the [`manifest`] and calls [`Runtime::run`].
+//! A [`Runtime`] owns one client plus a lazily-compiled executable cache
+//! keyed by artifact name; `compute::XlaEngine` resolves (op, engine,
+//! dims) → artifact through the [`manifest`] and calls [`Runtime::run`].
 //!
-//! PJRT wrapper types hold raw pointers and are not `Send`, so each worker
-//! thread owns its own `Runtime` — the same shape as MPI ranks each
-//! holding their own library context (and on this one-core box there is no
-//! parallelism to lose).
+//! Real PJRT wrapper types hold raw pointers and are not `Send`, so each
+//! worker thread owns its own `Runtime` — the same shape as MPI ranks
+//! each holding their own library context. The stand-in keeps that
+//! discipline (per-thread construction, nothing shared) so swapping a
+//! real PJRT client back in is a local change to [`pjrtsim`]'s three
+//! types, not a re-architecture.
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), never
-//! serialized protos — see `python/compile/aot.py` for why.
+//! Interchange is the manifest's op + static shape tuple; the exported
+//! HLO text (`*.hlo.txt`, see `python/compile/aot.py`) is provenance the
+//! stand-in does not interpret — see `pjrtsim`'s module docs for the
+//! honest scope of the substitution.
 
 pub mod manifest;
+pub mod pjrtsim;
 
 pub use manifest::{ArtifactEntry, Manifest};
 
@@ -36,11 +41,11 @@ impl Tensor {
     }
 }
 
-/// An operand resident on the PJRT device — upload once, execute many
+/// An operand resident on the device — upload once, execute many
 /// (§Perf: re-uploading the static Gram panel every CG iteration was the
 /// top bottleneck before buffer caching).
 pub struct DeviceBuf {
-    buf: xla::PjRtBuffer,
+    buf: pjrtsim::Buffer,
     pub dims: Vec<usize>,
 }
 
@@ -51,28 +56,24 @@ impl DeviceBuf {
 }
 
 pub struct Runtime {
-    client: xla::PjRtClient,
+    client: pjrtsim::Client,
     dir: PathBuf,
     manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Cumulative seconds spent inside PJRT `execute` (perf accounting).
+    cache: HashMap<String, pjrtsim::LoadedExecutable>,
+    /// Cumulative seconds spent inside `execute` (perf accounting).
     pub exec_secs: f64,
     /// Number of `run` calls (perf accounting).
     pub exec_calls: u64,
 }
 
 impl Runtime {
-    /// Load the manifest from `dir` and create the PJRT CPU client.
-    /// Executables compile lazily on first use.
+    /// Load the manifest from `dir` and create the client. Executables
+    /// compile lazily on first use.
     pub fn load(dir: &std::path::Path) -> crate::Result<Self> {
-        // silence TfrtCpuClient created/destroyed chatter unless the user
-        // asked for it
-        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
-            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
-        }
-        let manifest = Manifest::load(&dir.join("manifest.txt"))
-            .with_context(|| format!("loading artifact manifest from {dir:?} (run `make artifacts`)"))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(&dir.join("manifest.txt")).with_context(|| {
+            format!("loading artifact manifest from {dir:?} (run `make artifacts`)")
+        })?;
+        let client = pjrtsim::Client::cpu().context("creating PJRT stand-in client")?;
         Ok(Runtime {
             client,
             dir: dir.to_path_buf(),
@@ -88,21 +89,17 @@ impl Runtime {
     }
 
     /// Compile (or fetch from cache) the named artifact.
-    fn executable(&mut self, name: &str) -> crate::Result<&xla::PjRtLoadedExecutable> {
+    fn executable(&mut self, name: &str) -> crate::Result<&pjrtsim::LoadedExecutable> {
         if !self.cache.contains_key(name) {
             let entry = self
                 .manifest
                 .by_name(name)
                 .with_context(|| format!("artifact {name:?} not in manifest"))?;
-            let path = self.dir.join(format!("{}.hlo.txt", entry.name));
             let t0 = std::time::Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+                .compile(entry)
+                .with_context(|| format!("compiling {name} from {:?}", self.dir))?;
             log::debug!(
                 "compiled artifact {name} in {:.3}s",
                 t0.elapsed().as_secs_f64()
@@ -114,7 +111,11 @@ impl Runtime {
 
     /// Execute artifact `name` on the given inputs (shape-checked against
     /// the manifest). Returns the tuple elements as [`Tensor`]s.
-    pub fn run(&mut self, name: &str, inputs: &[(&[f64], &[usize])]) -> crate::Result<Vec<Tensor>> {
+    pub fn run(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f64], &[usize])],
+    ) -> crate::Result<Vec<Tensor>> {
         let entry = self
             .manifest
             .by_name(name)
@@ -126,7 +127,6 @@ impl Runtime {
             entry.in_shapes.len(),
             inputs.len()
         );
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, (data, dims)) in inputs.iter().enumerate() {
             anyhow::ensure!(
                 dims == &entry.in_shapes[i].as_slice(),
@@ -137,52 +137,39 @@ impl Runtime {
                 data.len() == dims.iter().product::<usize>(),
                 "artifact {name} input {i}: data/shape mismatch"
             );
-            // Safety: f64 -> u8 reinterpretation; PJRT copies the bytes.
-            let bytes = unsafe {
-                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 8)
-            };
-            let lit = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F64,
-                dims,
-                bytes,
-            )
-            .map_err(|e| anyhow::anyhow!("building literal for {name} input {i}: {e}"))?;
-            literals.push(lit);
         }
 
         let t0 = std::time::Instant::now();
         let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
-        let root = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e}"))?;
+        let datas: Vec<&[f64]> = inputs.iter().map(|(d, _)| *d).collect();
+        let out = exe
+            .execute(&datas)
+            .with_context(|| format!("executing {name}"))?;
         self.exec_secs += t0.elapsed().as_secs_f64();
         self.exec_calls += 1;
 
-        // aot.py lowers with return_tuple=True: root is always a tuple.
-        let elems = root
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {name} output: {e}"))?;
         anyhow::ensure!(
-            elems.len() == entry.out_shapes.len(),
+            out.len() == entry.out_shapes.len(),
             "artifact {name}: manifest promises {} outputs, got {}",
             entry.out_shapes.len(),
-            elems.len()
+            out.len()
         );
-        let mut out = Vec::with_capacity(elems.len());
-        for (lit, dims) in elems.into_iter().zip(&entry.out_shapes) {
-            let data = lit
-                .to_vec::<f64>()
-                .map_err(|e| anyhow::anyhow!("reading {name} output: {e}"))?;
-            out.push(Tensor::new(dims.clone(), data));
+        for (t, dims) in out.iter().zip(&entry.out_shapes) {
+            anyhow::ensure!(
+                &t.dims == dims,
+                "artifact {name}: output shape {:?}, want {dims:?}",
+                t.dims
+            );
         }
         Ok(out)
     }
 
     /// Convenience for the common single-output case.
-    pub fn run1(&mut self, name: &str, inputs: &[(&[f64], &[usize])]) -> crate::Result<Tensor> {
+    pub fn run1(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f64], &[usize])],
+    ) -> crate::Result<Tensor> {
         let mut out = self.run(name, inputs)?;
         anyhow::ensure!(out.len() == 1, "artifact {name} has {} outputs", out.len());
         Ok(out.pop().unwrap())
@@ -191,11 +178,14 @@ impl Runtime {
     /// Upload an operand to the device once; reuse across many executions
     /// (static operands like the CG Gram panel — §Perf).
     pub fn upload(&self, data: &[f64], dims: &[usize]) -> crate::Result<DeviceBuf> {
-        let buf = self
-            .client
-            .buffer_from_host_buffer::<f64>(data, dims, None)
-            .map_err(|e| anyhow::anyhow!("uploading operand: {e}"))?;
-        Ok(DeviceBuf { buf, dims: dims.to_vec() })
+        anyhow::ensure!(
+            data.len() == dims.iter().product::<usize>(),
+            "upload: data/shape mismatch"
+        );
+        Ok(DeviceBuf {
+            buf: pjrtsim::Buffer { data: data.to_vec() },
+            dims: dims.to_vec(),
+        })
     }
 
     /// Execute with device-resident operands (single-output artifacts).
@@ -221,22 +211,13 @@ impl Runtime {
         }
         let t0 = std::time::Instant::now();
         let exe = self.executable(name)?;
-        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| &b.buf).collect();
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(&bufs)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
-        let root = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {name} output: {e}"))?;
+        let datas: Vec<&[f64]> = inputs.iter().map(|b| b.buf.data.as_slice()).collect();
+        let mut out = exe
+            .execute(&datas)
+            .with_context(|| format!("executing {name}"))?;
         self.exec_secs += t0.elapsed().as_secs_f64();
         self.exec_calls += 1;
-        let elems = root
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {name} output: {e}"))?;
-        anyhow::ensure!(elems.len() == 1, "run1_b expects a single output");
-        let data = elems[0]
-            .to_vec::<f64>()
-            .map_err(|e| anyhow::anyhow!("reading {name} output: {e}"))?;
-        Ok(Tensor::new(entry.out_shapes[0].clone(), data))
+        anyhow::ensure!(out.len() == 1, "run1_b expects a single output");
+        Ok(out.pop().unwrap())
     }
 }

@@ -1,0 +1,204 @@
+//! Runtime ISA selection for the native compute kernels.
+//!
+//! The portable build compiles the packed GEMM micro-kernel (and the
+//! `blas1` hot loops) at whatever baseline `-C target-cpu` the toolchain
+//! was given — SSE2 on a stock x86-64 build. This module detects the
+//! host's actual vector extensions once at startup
+//! (`is_x86_feature_detected!`) and the kernels keep per-ISA variants
+//! behind function pointers, so one portable binary hits AVX2-width code
+//! on capable hosts without a fixed `-C target-cpu` flag (see
+//! `docs/compute.md`, "Dispatch").
+//!
+//! Contract: every ISA variant of a kernel performs **the same arithmetic
+//! in the same order** as the portable fallback — wider registers, not
+//! reassociated (and never contracted into FMA: fusing would change
+//! rounding). Results are therefore bit-identical across ISA paths, which
+//! keeps the SPMD determinism story independent of which host a rank
+//! landed on; `it_compute.rs` pins this.
+//!
+//! Overrides:
+//!
+//! * `ALCHEMIST_ISA=fallback|avx2|avx512` — process-wide cap, read once
+//!   (CI uses it to emit per-path bench cells; operators can force the
+//!   portable path when chasing a suspected codegen issue). Requests the
+//!   host cannot satisfy degrade to the best available path with a
+//!   warning.
+//! * [`with_isa`] — a scoped, per-thread override for tests and benches.
+//!   The compute kernels resolve [`current`] on the *calling* thread and
+//!   carry the choice into their pool jobs, so the override applies to
+//!   pooled work too.
+//!
+//! Non-x86 targets compile the fallback only; no `unsafe` is reachable.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// An instruction-set path the compute kernels can take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// The portable kernel (auto-vectorized at the build's baseline ISA).
+    Fallback,
+    /// 256-bit AVX2 variants (runtime-detected `avx2` + `fma`).
+    Avx2,
+    /// 512-bit AVX-512F variants. Compiled only with the off-by-default
+    /// `avx512` cargo feature; without it the name still parses for
+    /// reporting but the path is never selected.
+    Avx512,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Fallback => "fallback",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fallback" | "scalar" | "portable" => Some(Isa::Fallback),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" | "avx512f" => Some(Isa::Avx512),
+            _ => None,
+        }
+    }
+
+    /// Ranking used to clamp requests to host capability.
+    fn level(self) -> u8 {
+        match self {
+            Isa::Fallback => 0,
+            Isa::Avx2 => 1,
+            Isa::Avx512 => 2,
+        }
+    }
+}
+
+/// The widest path this host (and build) can actually execute.
+pub fn detected() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        #[cfg(feature = "avx512")]
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return Isa::Avx512;
+        }
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Isa::Avx2;
+        }
+    }
+    Isa::Fallback
+}
+
+/// Every path runnable on this host, fallback first (tests and benches
+/// iterate this to compare paths).
+pub fn available() -> Vec<Isa> {
+    let mut out = vec![Isa::Fallback];
+    let best = detected();
+    if best.level() >= Isa::Avx2.level() {
+        out.push(Isa::Avx2);
+    }
+    if best.level() >= Isa::Avx512.level() {
+        out.push(Isa::Avx512);
+    }
+    out
+}
+
+/// The process-wide selection: hardware detection capped by
+/// `ALCHEMIST_ISA`, resolved once and cached.
+pub fn selected() -> Isa {
+    static SELECTED: OnceLock<Isa> = OnceLock::new();
+    *SELECTED.get_or_init(|| {
+        let hw = detected();
+        let pick = match std::env::var("ALCHEMIST_ISA") {
+            Ok(req) => match Isa::parse(&req) {
+                Some(want) if want.level() <= hw.level() => want,
+                Some(want) => {
+                    log::warn!(
+                        "ALCHEMIST_ISA={} not runnable here; using {}",
+                        want.name(),
+                        hw.name()
+                    );
+                    hw
+                }
+                None => {
+                    log::warn!("unrecognized ALCHEMIST_ISA={req:?}; using {}", hw.name());
+                    hw
+                }
+            },
+            Err(_) => hw,
+        };
+        log::info!("compute ISA path: {} (host supports {})", pick.name(), hw.name());
+        pick
+    })
+}
+
+thread_local! {
+    static FORCED: Cell<Option<Isa>> = const { Cell::new(None) };
+}
+
+/// The ISA the *calling thread* should use right now: the innermost
+/// [`with_isa`] override, else the process-wide [`selected`] path.
+pub fn current() -> Isa {
+    FORCED.with(|c| c.get()).unwrap_or_else(selected)
+}
+
+/// Run `f` with this thread's kernel ISA forced to `isa` (clamped to what
+/// the host can run). Restores the previous override on exit, panics
+/// included. Kernels resolve the path on the calling thread and carry it
+/// into their pool jobs, so `f`'s compute is covered end to end.
+pub fn with_isa<T>(isa: Isa, f: impl FnOnce() -> T) -> T {
+    let clamped = if isa.level() <= detected().level() { isa } else { detected() };
+    struct Restore(Option<Isa>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            FORCED.with(|c| c.set(prev));
+        }
+    }
+    let _restore = Restore(FORCED.with(|c| c.replace(Some(clamped))));
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_is_always_available() {
+        let avail = available();
+        assert_eq!(avail[0], Isa::Fallback);
+        // and the cached selection is one of the runnable paths
+        assert!(avail.contains(&selected()));
+        assert!(avail.contains(&current()));
+    }
+
+    #[test]
+    fn with_isa_scopes_and_restores() {
+        let outer = current();
+        with_isa(Isa::Fallback, || {
+            assert_eq!(current(), Isa::Fallback);
+            with_isa(detected(), || assert_eq!(current(), detected()));
+            assert_eq!(current(), Isa::Fallback);
+        });
+        assert_eq!(current(), outer);
+    }
+
+    #[test]
+    fn requests_clamp_to_host_capability() {
+        // forcing a wider path than the host supports must degrade, not
+        // select an unrunnable kernel
+        with_isa(Isa::Avx512, || {
+            assert!(current().level() <= detected().level());
+        });
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for isa in [Isa::Fallback, Isa::Avx2, Isa::Avx512] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("gpu"), None);
+    }
+}

@@ -13,6 +13,66 @@
 
 use crate::util::prng::Rng;
 
+/// Synthesize an artifact set under `dir` so tests can exercise the XLA
+/// engines without `make artifacts`: only `manifest.txt` is written — the
+/// PJRT stand-in derives each computation from the manifest entry's op +
+/// shapes ([`crate::runtime::pjrtsim`]), never from the HLO payloads.
+///
+/// Exports, for both the `xla` and `pallas` families:
+/// * `gemm_{nn,tn,nt}` at `tile`³;
+/// * `gram_matvec` at `(panel_rows, panel_k, panel_c)`;
+/// * `rff_expand` at `(panel_rows, panel_k, panel_k)` (Ω padded square);
+/// * `cg_update` at `(panel_rows, panel_c)`.
+pub fn write_sim_artifacts(
+    dir: &std::path::Path,
+    tile: usize,
+    panel_rows: usize,
+    panel_k: usize,
+    panel_c: usize,
+) -> crate::Result<()> {
+    use std::fmt::Write as _;
+    let mut text = String::from("# synthesized by testkit::write_sim_artifacts\n");
+    let (t, pm, pk, pc) = (tile, panel_rows, panel_k, panel_c);
+    for family in ["xla", "pallas"] {
+        for op in ["gemm_nn", "gemm_tn", "gemm_nt"] {
+            writeln!(
+                text,
+                "name={family}_{op}_{t}x{t}x{t} op={op} engine={family} \
+                 dtype=f64 dims={t},{t},{t} inputs={t}x{t};{t}x{t};{t}x{t} \
+                 outputs={t}x{t} sha=sim"
+            )
+            .expect("write to String");
+        }
+        writeln!(
+            text,
+            "name={family}_gram_matvec_{pm}x{pk}x{pc} op=gram_matvec \
+             engine={family} dtype=f64 dims={pm},{pk},{pc} \
+             inputs={pm}x{pk};{pk}x{pc};1x1 outputs={pk}x{pc} sha=sim"
+        )
+        .expect("write to String");
+        writeln!(
+            text,
+            "name={family}_rff_expand_{pm}x{pk}x{pk} op=rff_expand \
+             engine={family} dtype=f64 dims={pm},{pk},{pk} \
+             inputs={pm}x{pk};{pk}x{pk};1x{pk};1x1 outputs={pm}x{pk} sha=sim"
+        )
+        .expect("write to String");
+        writeln!(
+            text,
+            "name={family}_cg_update_{pm}x{pc} op=cg_update engine={family} \
+             dtype=f64 dims={pm},{pc} \
+             inputs={pm}x{pc};{pm}x{pc};{pm}x{pc};{pm}x{pc};1x{pc} \
+             outputs={pm}x{pc};{pm}x{pc} sha=sim"
+        )
+        .expect("write to String");
+    }
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("creating {dir:?}: {e}"))?;
+    std::fs::write(dir.join("manifest.txt"), text)
+        .map_err(|e| anyhow::anyhow!("writing manifest to {dir:?}: {e}"))?;
+    Ok(())
+}
+
 /// Generator handed to each property case.
 pub struct Gen {
     rng: Rng,

@@ -1,15 +1,22 @@
 //! Engine-equivalence suite: the parallel native engine must be
 //! **bit-identical** to `threads = 1` for all four `Engine` ops, across
-//! thread counts and edge shapes — the determinism contract that keeps
-//! replicated SPMD solver state bitwise-equal across ranks
+//! thread counts, edge shapes, runtime-dispatched ISA variants, and
+//! work-stealing shared-pool clients — the determinism contract that
+//! keeps replicated SPMD solver state bitwise-equal across ranks
 //! (`docs/compute.md`). Plus a `distributed_matches_serial`-style solver
-//! run with the pool enabled.
+//! run with the pool enabled, and native-vs-XLA agreement for the
+//! `engine = "auto"` dispatcher over synthesized sim artifacts.
 
 use alchemist::collectives::LocalComm;
-use alchemist::compute::{Engine, GemmVariant, NativeEngine};
+use alchemist::compute::{
+    DispatchEngine, Engine, GemmVariant, NativeEngine, ThreadPool, XlaEngine,
+};
+use alchemist::config::Config;
 use alchemist::distmat::dense::{GEMM_KC, GEMM_MC, GEMM_MR, GEMM_NR};
 use alchemist::distmat::{LocalMatrix, RowBlockLayout};
 use alchemist::linalg::{cg_solve, truncated_svd, CgOptions, SvdOptions, SvdResult};
+use alchemist::simd::{self, Isa};
+use alchemist::testkit;
 use alchemist::util::prng::Rng;
 
 fn random(rng: &mut Rng, r: usize, c: usize) -> LocalMatrix {
@@ -134,6 +141,131 @@ fn cg_solver_state_bit_identical_across_engine_threads() {
         assert_eq!(got.w, base.w, "threads={threads}");
         assert_eq!(got.iters, base.iters, "threads={threads}");
         assert_eq!(got.residuals, base.residuals, "threads={threads}");
+    }
+}
+
+/// Runtime ISA dispatch must be invisible in the results: every SIMD
+/// variant runnable on this host produces *bit-identical* output to the
+/// portable fallback (the variants use unfused mul+add in the same
+/// accumulation order — no FMA contraction), on the same micro-tile /
+/// panel / k-block edge shapes as the thread-count suite. On hosts
+/// without AVX2, `available()` is just `[Fallback]` and the inner loop
+/// is vacuous — the test still pins the fallback path against itself.
+#[test]
+fn isa_variants_bit_identical_to_fallback_on_edge_shapes() {
+    let mut rng = Rng::new(45);
+    for (m, n, k) in gemm_shapes() {
+        let a = random(&mut rng, m, k);
+        let b = random(&mut rng, k, n);
+        let seed = random(&mut rng, m, n);
+        let mut want = seed.clone();
+        simd::with_isa(Isa::Fallback, || {
+            NativeEngine::with_threads(1).gemm(GemmVariant::NN, &mut want, &a, &b).unwrap()
+        });
+        for isa in simd::available() {
+            let mut got = seed.clone();
+            simd::with_isa(isa, || {
+                NativeEngine::with_threads(2)
+                    .gemm(GemmVariant::NN, &mut got, &a, &b)
+                    .unwrap()
+            });
+            assert_eq!(got, want, "{} gemm {m}x{n}x{k}", isa.name());
+        }
+    }
+
+    // the fused ops ride the same micro-kernel and blas1 variants
+    let a = random(&mut rng, 300, 17);
+    let v = random(&mut rng, 17, 3);
+    let want = simd::with_isa(Isa::Fallback, || {
+        NativeEngine::with_threads(1).gram_matvec(&a, &v, 0.7).unwrap()
+    });
+    for isa in simd::available() {
+        let got = simd::with_isa(isa, || {
+            NativeEngine::with_threads(2).gram_matvec(&a, &v, 0.7).unwrap()
+        });
+        assert_eq!(got, want, "{} gram_matvec", isa.name());
+    }
+}
+
+/// The two backends the `engine = "auto"` dispatcher chooses between
+/// only agree to rounding error (tiling pads and reorders reductions),
+/// so pin that tolerance here over synthesized sim artifacts — plus the
+/// routing invariant the cost table guarantees: composed GEMM always
+/// lands on the native packed kernels (bitwise-equal, not just close).
+#[test]
+fn xla_and_auto_engines_agree_with_native_on_sim_artifacts() {
+    let dir = std::env::temp_dir().join(format!("alch_it_dispatch_{}", std::process::id()));
+    testkit::write_sim_artifacts(&dir, 64, 128, 64, 8).unwrap();
+    let mut cfg = Config::default();
+    cfg.apply("artifacts_dir", dir.to_str().unwrap()).unwrap();
+    cfg.apply("tile", "64").unwrap();
+    cfg.apply("panel_rows", "128").unwrap();
+
+    let mut rng = Rng::new(46);
+    let a = random(&mut rng, 100, 48); // off-tile: exercises padding
+    let b = random(&mut rng, 48, 60);
+    let mut want = LocalMatrix::zeros(100, 60);
+    NativeEngine::with_threads(1).gemm(GemmVariant::NN, &mut want, &a, &b).unwrap();
+
+    let mut xla = XlaEngine::new(&cfg, "xla").unwrap();
+    let mut got = LocalMatrix::zeros(100, 60);
+    xla.gemm(GemmVariant::NN, &mut got, &a, &b).unwrap();
+    for (g, w) in got.data().iter().zip(want.data()) {
+        assert!((g - w).abs() <= 1e-8 * w.abs().max(1.0), "xla gemm: {g} vs {w}");
+    }
+
+    let mut auto = DispatchEngine::new(&cfg, NativeEngine::with_threads(2));
+    assert!(auto.has_xla(), "sim artifacts should load");
+    let mut got = LocalMatrix::zeros(100, 60);
+    auto.gemm(GemmVariant::NN, &mut got, &a, &b).unwrap();
+    assert_eq!(got, want, "auto must route composed GEMM to the native kernels");
+
+    // fused op: whichever backend the table picks must stay within the
+    // cross-backend tolerance of the native oracle
+    let v = random(&mut rng, 48, 2);
+    let want = NativeEngine::with_threads(1).gram_matvec(&a, &v, 0.4).unwrap();
+    let got = auto.gram_matvec(&a, &v, 0.4).unwrap();
+    for (g, w) in got.data().iter().zip(want.data()) {
+        assert!((g - w).abs() <= 1e-7 * w.abs().max(1.0), "auto gram: {g} vs {w}");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Re-pin the determinism contract with work stealing active: engines on
+/// client queues of one shared root pool, running concurrently so idle
+/// workers actually steal across home queues, must stay bit-identical to
+/// the single-threaded private-pool result at every thread budget.
+#[test]
+fn determinism_across_thread_counts_with_shared_pool_stealing() {
+    let mut rng = Rng::new(47);
+    let m = GEMM_MC * 3 + 5; // several parallel panels per call
+    let a = random(&mut rng, m, 40);
+    let b = random(&mut rng, 40, 24);
+    let seed = random(&mut rng, m, 24);
+    let v = random(&mut rng, 40, 3);
+    let mut want = seed.clone();
+    NativeEngine::with_threads(1).gemm(GemmVariant::NN, &mut want, &a, &b).unwrap();
+    let want_gram = NativeEngine::with_threads(1).gram_matvec(&a, &v, 0.6).unwrap();
+
+    let root = ThreadPool::new(4);
+    for t in [1usize, 2, 4] {
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let mut engine = NativeEngine::from_pool(root.client(t));
+            let (a, b, v, seed) = (a.clone(), b.clone(), v.clone(), seed.clone());
+            handles.push(std::thread::spawn(move || {
+                let mut got = seed;
+                engine.gemm(GemmVariant::NN, &mut got, &a, &b).unwrap();
+                let gram = engine.gram_matvec(&a, &v, 0.6).unwrap();
+                (got, gram)
+            }));
+        }
+        for h in handles {
+            let (got, gram) = h.join().unwrap();
+            assert_eq!(got, want, "gemm under stealing, threads={t}");
+            assert_eq!(gram, want_gram, "gram under stealing, threads={t}");
+        }
     }
 }
 

@@ -508,6 +508,48 @@ fn hard_cancel_unwinds_routine_that_ignores_cooperative_cancellation() {
 }
 
 #[test]
+fn engine_checkins_cancel_collective_free_kernel_loop() {
+    let cfg = native_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // `burn` is the pre-v6 blind spot: it never polls the cooperative
+    // token AND never enters a collective, so neither the token nor group
+    // poison has anywhere to land — only the engine-level kernel
+    // check-ins can end it. The worker installs the task's token into the
+    // engine, whose GEMM observes it at an MC-panel boundary and bails.
+    let task_id = ac
+        .submit("elemental", "burn", Params::new().with_i64("millis", 30_000))
+        .unwrap()
+        .task_id;
+    eventually(Duration::from_secs(10), "burn to start", || {
+        matches!(ac.task(task_id).status().unwrap(), TaskState::Running { .. })
+    });
+
+    let t_cancel = Instant::now();
+    ac.task(task_id).cancel_hard(200).unwrap();
+    let err = ac.task(task_id).wait().unwrap_err();
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    assert!(
+        t_cancel.elapsed() < Duration::from_secs(10),
+        "cancel took {:?} — the engine kernel check-ins never fired",
+        t_cancel.elapsed()
+    );
+
+    // terminal Cancelled (not Failed), nothing leaked, group healthy
+    assert_eq!(ac.task(task_id).status().unwrap(), TaskState::Cancelled);
+    assert_eq!(server.total_blocks(), 0);
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
 fn teardown_escalates_past_uncooperative_routine() {
     // a disconnecting client leaves an uncooperative `spin` running: the
     // teardown grace must bound how long the session lingers (pre-v5 the
