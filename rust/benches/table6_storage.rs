@@ -1,0 +1,220 @@
+//! Table 6 (this repo's addition): storage-plane throughput — what the
+//! out-of-core plane buys on the ingest and egress legs.
+//!
+//! Four ways the same ocean field can enter/leave the server:
+//!
+//! * `load_push`    — classic v3 push: client reads the file, streams
+//!   every payload byte over TCP (`send_matrix`).
+//! * `load_direct`  — v7 `LoadMatrix`: each worker maps its shard of the
+//!   file; zero payload bytes cross the client link. The paper's "let
+//!   Alchemist read the file" use case, now a first-class RPC.
+//! * `pull_heap`    — pull a heap-resident (pushed) block.
+//! * `pull_mapped`  — pull a mapped (direct-loaded) block: the worker
+//!   serves frames straight out of the file mapping, zero-copy.
+//! * `pull_spilled` — pull a block the budget forced to the spill file:
+//!   frames stream through a bounded buffer straight off disk.
+//!
+//! Emits `BENCH_storage.json` with `--json PATH`; the committed
+//! `BENCH_storage.json` stub in the repo root is the baseline CI diffs
+//! against (`scripts/check_bench_baseline.py`, kind "storage", which
+//! also enforces the direct >= 2x push ingest expectation).
+
+mod bench_common;
+
+use alchemist::cli::Args;
+use alchemist::client::AlchemistContext;
+use alchemist::coordinator::AlchemistServer;
+use alchemist::metrics::{Stats, Table};
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::util::fmt;
+use alchemist::workloads::OceanSpec;
+use bench_common::{bench_config, is_quick};
+
+struct Cell {
+    case: &'static str,
+    secs: f64,
+    gbps: f64,
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_json(
+    path: &str,
+    rows: usize,
+    cols: usize,
+    runs: usize,
+    quick: bool,
+    workers: usize,
+    cells: &[Cell],
+) -> alchemist::Result<()> {
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str("  \"bench\": \"table6_storage\",\n");
+    body.push_str("  \"kind\": \"storage\",\n");
+    body.push_str(&format!(
+        "  \"protocol_version\": {},\n",
+        alchemist::protocol::PROTOCOL_VERSION
+    ));
+    body.push_str(
+        "  \"units\": {\"secs\": \"mean wallclock seconds\", \"gbps\": \"GB/s, 1e9 bytes\"},\n",
+    );
+    body.push_str(&format!(
+        "  \"config\": {{\"rows\": {rows}, \"cols\": {cols}, \"runs\": {runs}, \
+         \"quick\": {quick}, \"workers\": {workers}}},\n"
+    ));
+    body.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"case\": \"{}\", \"secs\": {}, \"gbps\": {}}}{}\n",
+            c.case,
+            json_num(c.secs),
+            json_num(c.gbps),
+            if i + 1 == cells.len() { "" } else { "," },
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    std::fs::write(path, body)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn main() -> alchemist::Result<()> {
+    alchemist::logging::init();
+    let args = Args::from_env();
+    let mut cfg = bench_config(&args)?;
+    cfg.apply("engine", "native")?; // storage plane only; engine never runs
+    let quick = is_quick(&args);
+    let rows = args.get_usize("rows", if quick { 8_192 } else { 65_536 })?;
+    let cols = args.get_usize("cols", if quick { 512 } else { 1_024 })?;
+    let workers = args.get_usize("workers", 3)?;
+    let runs = args.get_usize("runs", 3)?;
+    let bytes = (rows * cols * 8) as u64;
+
+    let dir = std::env::temp_dir().join("alchemist-bench-storage");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("ocean_{rows}x{cols}.bin"));
+    let spec = OceanSpec { cells: rows, times: cols, ..OceanSpec::default() };
+    if !path.exists() {
+        let t0 = std::time::Instant::now();
+        spec.write_file(&path)?;
+        println!(
+            "wrote {} dataset in {:.2}s",
+            fmt::bytes(bytes),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    let mut load_push = Stats::new();
+    let mut load_direct = Stats::new();
+    let mut pull_heap = Stats::new();
+    let mut pull_mapped = Stats::new();
+    let mut pull_spilled = Stats::new();
+
+    // ---- heap/mapped legs: one unlimited-budget server ----
+    {
+        let server = AlchemistServer::start(cfg.clone(), workers)?;
+        for run in 0..runs {
+            let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, workers)?;
+            // push leg reads the file client-side, then ships every byte
+            let local = alchemist::hdf5sim::read_matrix(&path)?;
+            let irm = IndexedRowMatrix::from_local(&local, workers * 2);
+            let (al_push, s) = ac.send_matrix(&format!("push{run}"), &irm)?;
+            load_push.push(s.secs);
+
+            let t0 = std::time::Instant::now();
+            let (al_map, s) = ac.load_matrix(&format!("map{run}"), path.to_str().unwrap())?;
+            let direct_secs = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                s.bytes == 0,
+                "direct load moved {} payload bytes over the client link",
+                s.bytes
+            );
+            load_direct.push(direct_secs);
+
+            let (back, p) = ac.to_indexed_row_matrix(&al_push, workers)?;
+            anyhow::ensure!(back.rows == rows && back.cols == cols);
+            pull_heap.push(p.secs);
+            let (back, p) = ac.to_indexed_row_matrix(&al_map, workers)?;
+            anyhow::ensure!(back.rows == rows && back.cols == cols);
+            pull_mapped.push(p.secs);
+
+            ac.free(&al_push)?;
+            ac.free(&al_map)?;
+            ac.stop();
+        }
+        let snap = server.storage_metrics();
+        anyhow::ensure!(
+            snap.blocks_mapped as usize >= workers * runs,
+            "direct loads registered {} mapped blocks, expected >= {}",
+            snap.blocks_mapped,
+            workers * runs
+        );
+        server.shutdown();
+    }
+
+    // ---- spilled leg: budget fits ~1.6 of the 3 pushed blocks, so the
+    // oldest gets evicted to the spill file; pulling it streams frames
+    // straight off disk ----
+    {
+        let per_rank = bytes / workers as u64;
+        let mut cfg2 = cfg.clone();
+        cfg2.storage.budget_bytes = per_rank + per_rank * 3 / 5;
+        let server = AlchemistServer::start(cfg2.clone(), workers)?;
+        for run in 0..runs {
+            let mut ac = AlchemistContext::connect(&server.control_addr, &cfg2, workers)?;
+            let local = alchemist::hdf5sim::read_matrix(&path)?;
+            let irm = IndexedRowMatrix::from_local(&local, workers * 2);
+            let (al_a, _) = ac.send_matrix(&format!("a{run}"), &irm)?;
+            let (al_b, _) = ac.send_matrix(&format!("b{run}"), &irm)?;
+            // inserting B blew the budget, so A (LRU) is on disk now
+            let (back, p) = ac.to_indexed_row_matrix(&al_a, workers)?;
+            anyhow::ensure!(back.rows == rows && back.cols == cols);
+            pull_spilled.push(p.secs);
+            ac.free(&al_a)?;
+            ac.free(&al_b)?;
+            ac.stop();
+        }
+        let snap = server.storage_metrics();
+        anyhow::ensure!(
+            snap.cycled(),
+            "spill leg never cycled blocks through the spill file: {snap:?}"
+        );
+        server.shutdown();
+    }
+
+    let gb = bytes as f64 / 1e9;
+    let cells: Vec<Cell> = [
+        ("load_push", load_push),
+        ("load_direct", load_direct),
+        ("pull_heap", pull_heap),
+        ("pull_mapped", pull_mapped),
+        ("pull_spilled", pull_spilled),
+    ]
+    .into_iter()
+    .map(|(case, s)| Cell { case, secs: s.mean(), gbps: gb / s.mean() })
+    .collect();
+
+    let mut table = Table::new(
+        "Table 6: storage-plane throughput (mean of runs)",
+        &["case", "secs", "GB/s"],
+    );
+    for c in &cells {
+        table.row(&[c.case.into(), format!("{:.3}", c.secs), format!("{:.2}", c.gbps)]);
+    }
+    table.print();
+    println!(
+        "(direct load maps the file server-side — its advantage over push grows \
+         with the dataset; spilled pulls are bounded-memory streams off disk)"
+    );
+
+    if let Some(path) = args.get("json") {
+        write_json(path, rows, cols, runs, quick, workers, &cells)?;
+    }
+    Ok(())
+}

@@ -11,7 +11,7 @@ use crate::protocol::{ControlMsg, Params, TaskState, PROTOCOL_VERSION};
 use crate::sparklite::{IndexedRowMatrix, Rdd};
 
 use super::almatrix::AlMatrix;
-use super::transfer::{pull_matrix, push_matrix, TransferStats};
+use super::transfer::{pull_matrix, pull_matrix_cols, push_matrix, TransferStats};
 
 /// Result of a completed task: output matrix proxies plus scalar results
 /// and server-side timings (the paper's per-column experiment timings
@@ -236,6 +236,51 @@ impl AlchemistContext {
         Ok((al, stats))
     }
 
+    /// Direct file ingest (protocol v7): ask the server to load an
+    /// `hdf5sim` file from ITS OWN filesystem — each worker maps its row
+    /// shard and serves it straight out of the page cache. Unlike
+    /// [`send_matrix`](Self::send_matrix), zero payload bytes cross the
+    /// client connection (the returned stats record `bytes: 0`); the
+    /// round-trip is one control message. The server validates the file
+    /// before registering anything, so an error means no matrix exists.
+    pub fn load_matrix(
+        &mut self,
+        name: &str,
+        path: &str,
+    ) -> crate::Result<(AlMatrix, TransferStats)> {
+        let t0 = std::time::Instant::now();
+        let reply = self.control.call(&ControlMsg::LoadMatrix {
+            name: name.into(),
+            path: path.into(),
+        })?;
+        let (info, ranges) = match reply {
+            ControlMsg::LoadDone { info, row_ranges } => (
+                info,
+                row_ranges
+                    .iter()
+                    .map(|&(a, b)| (a as usize, b as usize))
+                    .collect::<Vec<_>>(),
+            ),
+            other => anyhow::bail!("bad reply: {other:?}"),
+        };
+        let al = AlMatrix {
+            id: info.id,
+            rows: info.rows as usize,
+            cols: info.cols as usize,
+            name: info.name,
+            row_ranges: ranges,
+        };
+        // bytes stays 0: the whole point of direct ingest is that the
+        // payload never transits the client link
+        let stats = TransferStats {
+            bytes: 0,
+            secs: t0.elapsed().as_secs_f64(),
+            frames: 0,
+            executors: 0,
+        };
+        Ok((al, stats))
+    }
+
     /// Submit `lib.routine(params)` to the session's task queue and
     /// return a [`TaskHandle`] immediately (protocol v4). The handle
     /// borrows this context exclusively — the single control socket is
@@ -337,6 +382,41 @@ impl AlchemistContext {
             rdd: Rdd::parallelize(rows, num_partitions.max(1)),
             rows: m.rows,
             cols: m.cols,
+        };
+        Ok((irm, stats))
+    }
+
+    /// [`to_indexed_row_matrix`](Self::to_indexed_row_matrix) restricted
+    /// to the column window `[start_col, start_col + ncols)` (protocol
+    /// v7): only the selected columns' bytes cross the wire, and the
+    /// returned matrix is `rows × ncols`.
+    pub fn to_indexed_row_matrix_cols(
+        &mut self,
+        m: &AlMatrix,
+        num_partitions: usize,
+        start_col: usize,
+        ncols: usize,
+    ) -> crate::Result<(IndexedRowMatrix, TransferStats)> {
+        anyhow::ensure!(
+            ncols > 0 && start_col + ncols <= m.cols,
+            "column range [{start_col}, {}) out of bounds for {} cols",
+            start_col + ncols,
+            m.cols
+        );
+        let (mut rows, stats) = pull_matrix_cols(
+            m,
+            &self.worker_addrs,
+            &self.cfg.transfer,
+            self.session_id,
+            self.executors,
+            start_col,
+            ncols,
+        )?;
+        rows.sort_by_key(|r| r.index);
+        let irm = IndexedRowMatrix {
+            rdd: Rdd::parallelize(rows, num_partitions.max(1)),
+            rows: m.rows,
+            cols: ncols,
         };
         Ok((irm, stats))
     }

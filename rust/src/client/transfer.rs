@@ -299,12 +299,15 @@ struct PullReq {
 }
 
 /// Pull one executor's share `[lo, hi)` via the v3 streaming protocol.
+/// `col_range = (start_col, width)` selects a column window (protocol
+/// v7); width 0 means every column, keeping the v6 wire shape.
 fn pull_rows_one_executor(
     matrix: &AlMatrix,
     links: &mut ExecutorLinks,
     cfg: &TransferConfig,
     lo: usize,
     hi: usize,
+    col_range: (usize, usize),
 ) -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
     let te = Instant::now();
     let mut rows = Vec::with_capacity(hi.saturating_sub(lo));
@@ -313,8 +316,16 @@ fn pull_rows_one_executor(
         return Ok((rows, stats));
     }
     let nworkers = matrix.row_ranges.len();
-    let ncols = matrix.cols;
+    let (col0, sel_cols) = col_range;
+    // the row width this pull actually moves (replies carry ncols = this)
+    let ncols = if sel_cols == 0 { matrix.cols } else { sel_cols };
     anyhow::ensure!(ncols > 0, "matrix {} has zero columns", matrix.id);
+    anyhow::ensure!(
+        col0 + ncols <= matrix.cols,
+        "column range [{col0}, {}) out of bounds for {} cols",
+        col0 + ncols,
+        matrix.cols
+    );
 
     // carve the share into per-worker ranged stripes
     let stripe_rows = cfg
@@ -344,6 +355,8 @@ fn pull_rows_one_executor(
             matrix_id: matrix.id,
             start_row: req.start as u64,
             nrows: req.nrows as u32,
+            start_col: col0 as u64,
+            sel_cols: sel_cols as u32,
         })
     };
 
@@ -432,6 +445,23 @@ pub fn pull_matrix(
     session_id: u64,
     executors: usize,
 ) -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
+    pull_matrix_cols(matrix, worker_addrs, cfg, session_id, executors, 0, 0)
+}
+
+/// [`pull_matrix`] restricted to the column window
+/// `[start_col, start_col + sel_cols)` (protocol v7; `sel_cols = 0`
+/// pulls every column). Each returned row vector has `sel_cols`
+/// elements — a client reading a few columns of a wide matrix moves
+/// only those bytes.
+pub fn pull_matrix_cols(
+    matrix: &AlMatrix,
+    worker_addrs: &[String],
+    cfg: &TransferConfig,
+    session_id: u64,
+    executors: usize,
+    start_col: usize,
+    sel_cols: usize,
+) -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
     let executors = executors.max(1);
     let shares = crate::util::even_ranges(matrix.rows, executors);
     let t0 = Instant::now();
@@ -444,7 +474,14 @@ pub fn pull_matrix(
                 move || -> crate::Result<(Vec<IndexedRow>, TransferStats)> {
                     let mut links =
                         ExecutorLinks::new(worker_addrs, cfg, session_id, eid as u32);
-                    let out = pull_rows_one_executor(matrix, &mut links, cfg, lo, hi)?;
+                    let out = pull_rows_one_executor(
+                        matrix,
+                        &mut links,
+                        cfg,
+                        lo,
+                        hi,
+                        (start_col, sel_cols),
+                    )?;
                     for link in links.links.iter_mut().flatten() {
                         let _ = link.send_data_flush(&DataMsg::DataBye);
                     }

@@ -166,6 +166,27 @@ pub struct SchedulerConfig {
     pub teardown_grace_ms: u64,
 }
 
+/// Storage-plane budgets and spill behavior (`docs/storage.md`). The
+/// tenant-isolation contract: one session's heap-resident matrix bytes
+/// are bounded, overflow goes to a per-rank spill file instead of
+/// growing the heap, and mmap-backed `LoadMatrix` blocks never count
+/// (the kernel pages them against the file).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StorageConfig {
+    /// Heap bytes one session may keep resident per worker rank
+    /// (0 = unlimited). Enforced at `alloc`/`insert`: sealed cold blocks
+    /// spill LRU-first to disk until the session fits; an ingest
+    /// allocation that could never fit is rejected with a clean error
+    /// (file-backed data belongs on the `LoadMatrix` path instead).
+    pub budget_bytes: u64,
+    /// Server-wide pool the per-session budgets are admitted against
+    /// (0 = unlimited): a handshake is rejected when the sum of admitted
+    /// sessions' `budget_bytes` would exceed this.
+    pub total_bytes: u64,
+    /// Directory for the per-rank spill files (empty = system temp dir).
+    pub spill_dir: String,
+}
+
 #[derive(Debug, Clone)]
 pub struct Config {
     /// Master seed; all generator/jitter streams derive from it.
@@ -188,6 +209,7 @@ pub struct Config {
     pub overhead: OverheadConfig,
     pub simnet: SimNetConfig,
     pub scheduler: SchedulerConfig,
+    pub storage: StorageConfig,
     /// sparklite driver memory cap (bytes) — reproduces Table 1's "Spark
     /// cannot run >10k features" capability boundary.
     pub spark_driver_max_bytes: usize,
@@ -224,6 +246,11 @@ impl Default for Config {
                 task_queue_depth: 16,
                 max_task_outputs: 64,
                 teardown_grace_ms: 2_000,
+            },
+            storage: StorageConfig {
+                budget_bytes: 0,
+                total_bytes: 0,
+                spill_dir: String::new(),
             },
             spark_driver_max_bytes: 192 << 20,
         }
@@ -326,6 +353,11 @@ impl Config {
             "scheduler.teardown_grace_ms" => {
                 self.scheduler.teardown_grace_ms = int(value)? as u64
             }
+            "storage.budget_bytes" => {
+                self.storage.budget_bytes = int(value)? as u64
+            }
+            "storage.total_bytes" => self.storage.total_bytes = int(value)? as u64,
+            "storage.spill_dir" => self.storage.spill_dir = value.to_string(),
             "spark_driver_max_bytes" => {
                 self.spark_driver_max_bytes = int(value)?
             }
@@ -470,6 +502,21 @@ mod tests {
         assert_eq!(c.engine, EngineKind::Auto);
         assert_eq!(EngineKind::Auto.as_str(), "auto");
         assert_eq!(EngineKind::parse("auto").unwrap(), EngineKind::Auto);
+    }
+
+    #[test]
+    fn storage_keys_parse_and_default_unlimited() {
+        let c = Config::default();
+        assert_eq!(c.storage.budget_bytes, 0);
+        assert_eq!(c.storage.total_bytes, 0);
+        assert!(c.storage.spill_dir.is_empty());
+        let text = "[storage]\nbudget_bytes = 1048576\ntotal_bytes = 4194304\n\
+                    spill_dir = \"/tmp/spill\"\n";
+        let mut c = Config::default();
+        c.apply_pairs(&Config::from_str_pairs(text).unwrap()).unwrap();
+        assert_eq!(c.storage.budget_bytes, 1 << 20);
+        assert_eq!(c.storage.total_bytes, 4 << 20);
+        assert_eq!(c.storage.spill_dir, "/tmp/spill");
     }
 
     #[test]

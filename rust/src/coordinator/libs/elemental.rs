@@ -39,7 +39,7 @@ use std::path::Path;
 use crate::collectives::allgather;
 use crate::compute::GemmVariant;
 use crate::distmat::{LocalMatrix, RowBlockLayout};
-use crate::linalg::lanczos::{truncated_svd_scoped, SvdOptions};
+use crate::linalg::lanczos::{truncated_svd_panels, truncated_svd_scoped, SvdOptions};
 use crate::linalg::qr::cholesky_qr2;
 use crate::protocol::{Params, Value};
 use crate::util::prng::Rng;
@@ -101,11 +101,30 @@ fn svd(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutput> {
         steps: params.i64_or("steps", 0)? as usize,
         seed: params.i64_or("seed", 0x53D5)? as u64,
     };
-    let (layout, a_local) = ctx.local_block(a_id)?;
+    // `panel_rows > 0` selects the out-of-core path: the routine streams
+    // that many rows at a time through the block handle (mapped blocks
+    // serve from the page cache, spilled ones off disk), so A never has
+    // to fit in the session's storage budget. 0 = classic in-memory
+    // snapshot (bit-identical results; see linalg::lanczos).
+    let panel_rows = params.i64_or("panel_rows", 0)? as usize;
+    let block = ctx.block(a_id)?;
+    let layout = block.layout.clone();
 
     let mut sw = Stopwatch::new();
     sw.start("compute");
-    let res = truncated_svd_scoped(ctx.comm, ctx.engine, &a_local, &opts, ctx.scope)?;
+    let res = if panel_rows > 0 {
+        truncated_svd_panels(
+            ctx.comm,
+            ctx.engine,
+            block.as_ref(),
+            panel_rows,
+            &opts,
+            ctx.scope,
+        )?
+    } else {
+        let (_, a_local) = ctx.local_block(a_id)?;
+        truncated_svd_scoped(ctx.comm, ctx.engine, &a_local, &opts, ctx.scope)?
+    };
     sw.stop();
 
     let k = res.sigma.len();

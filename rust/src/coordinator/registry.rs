@@ -40,6 +40,15 @@ impl WorkerCtx<'_> {
     pub fn local_block(&self, id: u64) -> crate::Result<(RowBlockLayout, LocalMatrix)> {
         self.store.get(id)?.snapshot()
     }
+
+    /// This rank's block handle for matrix `id` — the streaming
+    /// alternative to [`local_block`](Self::local_block): out-of-core
+    /// routines read row panels through `Block::read_span` without ever
+    /// materializing the whole payload on the heap (mapped blocks serve
+    /// straight from the page cache, spilled ones stream off disk).
+    pub fn block(&self, id: u64) -> crate::Result<Arc<super::store::Block>> {
+        self.store.get(id)
+    }
 }
 
 /// One output matrix of a routine: this rank's block plus the layout

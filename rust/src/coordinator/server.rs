@@ -33,7 +33,9 @@ use crate::collectives::{CommError, Communicator, LocalComm, PoisonCause};
 use crate::compute::ThreadPool;
 use crate::config::{Config, SchedulerConfig, TransferConfig};
 use crate::distmat::RowBlockLayout;
-use crate::metrics::{SchedMetrics, SchedSnapshot, TaskOutcome};
+use crate::metrics::{
+    SchedMetrics, SchedSnapshot, StorageMetrics, StorageSnapshot, TaskOutcome,
+};
 use crate::net::{Framed, Server};
 use crate::protocol::{
     ControlMsg, MatrixInfo, Params, TaskProgress, TaskState, PROTOCOL_VERSION,
@@ -187,6 +189,10 @@ struct Session {
     /// This session's matrix handles (namespaced: other sessions never
     /// see or free them).
     handles: Mutex<HashMap<u64, HandleMeta>>,
+    /// Budget bytes this session committed against the server-wide
+    /// `storage.total_bytes` pool at admission (0 when the pool is
+    /// unlimited); returned to the pool at teardown.
+    storage_demand: u64,
     /// This session's asynchronous task lifecycle (protocol v4).
     tasks: TaskTable,
     /// The dispatcher thread draining `tasks`; joined at teardown so no
@@ -337,6 +343,10 @@ struct Driver {
     /// Compute threads (`group × engine_threads`) leased to currently
     /// running tasks across all sessions (see `execute_task`).
     engine_threads_committed: Mutex<usize>,
+    /// Budget bytes committed to admitted sessions against the
+    /// server-wide `storage.total_bytes` pool (see `open_session`;
+    /// unused — stays 0 — when the pool is unlimited).
+    storage_committed: Mutex<u64>,
     /// Root of the server-wide work-stealing compute pool: one thread set
     /// sized to the machine, with a client queue per rank
     /// ([`ThreadPool::client`]). Each task retargets its rank's queue cap
@@ -465,6 +475,39 @@ impl Driver {
         let want = self.allocator.resolve_request(requested as usize)?;
         let id = self.next_session.fetch_add(1, Ordering::SeqCst);
         let ranks = self.allocator.acquire(id, want)?;
+        // storage admission (`storage.total_bytes`): a session commits its
+        // per-rank heap budget × group size against the server-wide pool
+        // up front, so tenants cannot collectively promise more resident
+        // bytes than the machine has. An unlimited per-session budget
+        // claims the whole pool — it could legally grow to any size.
+        // Rejection is clean: ranks go back, nothing was registered.
+        let storage_demand = {
+            let pool = self.cfg.storage.total_bytes;
+            if pool == 0 {
+                0
+            } else {
+                let per_rank = self.cfg.storage.budget_bytes;
+                let demand = if per_rank == 0 {
+                    pool
+                } else {
+                    per_rank.saturating_mul(ranks.len() as u64)
+                };
+                let mut committed = self.storage_committed.lock().unwrap();
+                if committed.saturating_add(demand) > pool {
+                    let left = pool - *committed;
+                    drop(committed);
+                    self.allocator.release(&ranks);
+                    anyhow::bail!(
+                        "storage admission rejected: this session would commit \
+                         {demand} budget bytes ({} rank(s)) but only {left} of \
+                         {pool} remain uncommitted (storage.total_bytes)",
+                        ranks.len(),
+                    );
+                }
+                *committed += demand;
+                demand
+            }
+        };
         // single-tenant engine-thread bound, logged below for operators
         // (0 = auto: each rank gets its share of the cores). The value
         // that actually governs a task is re-clamped per dispatch in
@@ -488,6 +531,7 @@ impl Driver {
             fabric,
             transfer: self.cfg.transfer.negotiate(rows_per_frame, buf_bytes),
             handles: Mutex::new(HashMap::new()),
+            storage_demand,
             tasks: TaskTable::new(),
             dispatcher: Mutex::new(None),
         });
@@ -519,6 +563,7 @@ impl Driver {
                     self.workers[rank].sessions.lock().unwrap().remove(&id);
                 }
                 self.allocator.release(&session.ranks);
+                *self.storage_committed.lock().unwrap() -= session.storage_demand;
                 anyhow::bail!("server is stopping");
             }
             sessions.insert(id, session.clone());
@@ -554,9 +599,12 @@ impl Driver {
         for &rank in &session.ranks {
             let w = &self.workers[rank];
             w.sessions.lock().unwrap().remove(&session.id);
+            // releases heap budget AND deletes the session's spill-file
+            // segments on this rank (see MatrixStore::free_session)
             freed += w.store.free_session(session.id);
         }
         self.allocator.release(&session.ranks);
+        *self.storage_committed.lock().unwrap() -= session.storage_demand;
         log::info!(
             "session {}: closed ({} blocks freed, {} workers released)",
             session.id,
@@ -585,6 +633,52 @@ impl Driver {
             },
         );
         Ok(ControlMsg::MatrixCreated { id, row_ranges: layout.to_wire() })
+    }
+
+    /// Direct file ingest (protocol v7 `LoadMatrix`): each member worker
+    /// maps its row shard of an `hdf5sim` file on the SERVER's
+    /// filesystem, so zero payload bytes ever cross the client
+    /// connection. The file is validated driver-side — header magic,
+    /// shape, exact payload length — BEFORE any block is registered;
+    /// a failure inside `load_group` rolls every rank back, so an error
+    /// reply always means "no block exists".
+    fn load_matrix(
+        &self,
+        session: &Session,
+        name: &str,
+        path: &str,
+    ) -> crate::Result<ControlMsg> {
+        let path = std::path::Path::new(path);
+        let (rows, cols) = crate::hdf5sim::validate(path)?;
+        anyhow::ensure!(rows > 0 && cols > 0, "matrix must be non-empty");
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let layout = RowBlockLayout::even(rows, cols, session.ranks.len());
+        super::worker::load_group(
+            &self.workers,
+            &session.ranks,
+            session.id,
+            id,
+            name,
+            path,
+            &layout,
+        )?;
+        let info = MatrixInfo {
+            id,
+            rows: rows as u64,
+            cols: cols as u64,
+            name: name.to_string(),
+        };
+        session.handles.lock().unwrap().insert(
+            id,
+            HandleMeta { info: info.clone(), layout: layout.clone() },
+        );
+        log::info!(
+            "session {}: loaded {name:?} ({rows}x{cols}) from {path:?} as \
+             matrix {id} across {} workers",
+            session.id,
+            session.ranks.len()
+        );
+        Ok(ControlMsg::LoadDone { info, row_ranges: layout.to_wire() })
     }
 
     fn seal_matrix(&self, session: &Session, id: u64) -> crate::Result<ControlMsg> {
@@ -1164,6 +1258,42 @@ impl ServerHandle {
         self.driver.metrics.snapshot()
     }
 
+    /// Storage-plane counters (blocks spilled / paged in / mapped, bytes
+    /// each way), merged across every worker rank's store. The
+    /// out-of-core proof reads this: `cycled()` says blocks went to disk
+    /// AND came back during the run.
+    pub fn storage_metrics(&self) -> StorageSnapshot {
+        let mut total = StorageSnapshot::default();
+        for w in &self.driver.workers {
+            total.merge(&w.store.storage_metrics().snapshot());
+        }
+        total
+    }
+
+    /// Per-session storage totals (resident / spilled / mapped bytes)
+    /// summed across ranks, sorted by session id. Teardown must drive a
+    /// closed session's entry to zero — and off this list.
+    pub fn storage_usage(&self) -> Vec<(u64, super::store::SessionUsage)> {
+        let mut by: HashMap<u64, super::store::SessionUsage> = HashMap::new();
+        for w in &self.driver.workers {
+            for (sid, u) in w.store.usage() {
+                let e = by.entry(sid).or_default();
+                e.bytes_resident += u.bytes_resident;
+                e.bytes_spilled += u.bytes_spilled;
+                e.bytes_mapped += u.bytes_mapped;
+            }
+        }
+        let mut v: Vec<(u64, super::store::SessionUsage)> = by.into_iter().collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    }
+
+    /// Live spill-file segments across all ranks (a freed session must
+    /// leave none behind).
+    pub fn total_spill_segments(&self) -> usize {
+        self.driver.workers.iter().map(|w| w.store.spill_segments()).sum()
+    }
+
     /// Per-session task backlog (which tenant the global `queued_tasks`
     /// gauge belongs to), sorted by session id.
     pub fn session_queue_depths(&self) -> Vec<crate::metrics::SessionQueueDepth> {
@@ -1215,7 +1345,13 @@ impl AlchemistServer {
         for rank in 0..num_workers {
             let shared = Arc::new(WorkerShared {
                 rank,
-                store: super::store::MatrixStore::new(rank),
+                // each rank gets its own counters (no cross-rank atomic
+                // contention); ServerHandle::storage_metrics merges them
+                store: super::store::MatrixStore::with_storage(
+                    rank,
+                    &cfg.storage,
+                    Arc::new(StorageMetrics::new()),
+                ),
                 data_addr: Mutex::new(String::new()),
                 sessions: Mutex::new(HashMap::new()),
             });
@@ -1264,6 +1400,7 @@ impl AlchemistServer {
             senders,
             registry: Registry::new(),
             engine_threads_committed: Mutex::new(0),
+            storage_committed: Mutex::new(0),
             compute_pool,
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
@@ -1312,6 +1449,9 @@ fn handle_session_op(
     match msg {
         ControlMsg::CreateMatrix { name, rows, cols } => {
             driver.create_matrix(session, &name, rows, cols)
+        }
+        ControlMsg::LoadMatrix { name, path } => {
+            driver.load_matrix(session, &name, &path)
         }
         ControlMsg::SealMatrix { id } => driver.seal_matrix(session, id),
         ControlMsg::SubmitTask { lib, routine, params } => {

@@ -10,6 +10,41 @@
 //! `layout.ranges`). Session teardown frees exactly that session's
 //! blocks without touching any other tenant's.
 //!
+//! ## Residency (the out-of-core storage plane)
+//!
+//! A sealed block's payload lives in exactly one of three homes
+//! ([`Residency`]), and moves between them under the block's residency
+//! mutex without readers ever noticing:
+//!
+//! * **Heap** — an `Arc<LocalMatrix>`, the classic push-ingested or
+//!   routine-output case. Counted against the owning session's
+//!   `storage.budget_bytes`.
+//! * **Mapped** — an `Arc<hdf5sim::MappedMatrix>` registered by the v7
+//!   `LoadMatrix` direct-ingest RPC: the payload is the page cache's
+//!   view of the file, zero heap bytes, exempt from the budget (the
+//!   kernel already pages it under memory pressure).
+//! * **Spilled** — payload parked in the rank's ledgered spill file
+//!   ([`SpillFile`]). Reads stream spans back transiently through a
+//!   bounded buffer, or promote the whole block to Heap when the
+//!   session's budget has room again (page-in).
+//!
+//! Reads hand out [`Span`] guards that hold an `Arc` clone of the
+//! payload's current home, so an eviction racing a read can never
+//! invalidate the bytes mid-stream — the spilled copy becomes the new
+//! truth while in-flight readers finish off the old heap Arc (a
+//! transient overshoot of the budget bounded by active reads).
+//!
+//! ## Budget enforcement
+//!
+//! `storage.budget_bytes` (per session, per rank; 0 = unlimited) is
+//! checked at [`MatrixStore::alloc`] — an ingest allocation that cannot
+//! fit even after spilling every sealed block fails with a clean error —
+//! and at [`MatrixStore::insert`], which always lands the output block
+//! and then spills least-recently-used sealed blocks (possibly the new
+//! one) until the session is back under budget. Unsealed ingest blocks
+//! never spill (their stripes may be mid-write); mapped blocks never
+//! spill (nothing to write — the file IS the payload).
+//!
 //! ## Locking model (the ingest hot path)
 //!
 //! The store itself is only a directory: an `RwLock`ed id → `Arc<Block>`
@@ -31,21 +66,34 @@
 //! exclusive references of concurrent writers are disjoint by
 //! construction.
 //!
-//! Sealing is the ingest/compute barrier, in three steps: `seal` flips
-//! `sealed` under the state mutex (new writers abort — they re-check it
-//! *after* acquiring their stripes), takes every stripe lock once to
-//! wait out in-flight writers (who copy AND account while holding their
-//! stripes), and only then sets `readable` — the flag every reader
-//! gates on, so a read can never overlap a straggling pre-seal copy. A
-//! readable block is immutable, which is what lets pulls stream borrowed
-//! spans ([`Block::read_span`]) straight from the block into the socket
-//! buffer with zero copies on the worker side.
+//! Sealing is the ingest/compute barrier: `seal` flips `sealed` under
+//! the state mutex (new writers abort — they re-check it *after*
+//! acquiring their stripes), takes every stripe lock once to wait out
+//! in-flight writers (who copy AND account while holding their stripes),
+//! moves the quiescent payload out of the ingest cell into its
+//! `Arc<LocalMatrix>` heap home, and only then sets `readable` — the
+//! flag every reader gates on, so a read can never overlap a straggling
+//! pre-seal copy and never observes `Residency::Ingest`. A readable
+//! block is immutable, which is what lets pulls stream borrowed spans
+//! ([`Block::read_span`]) straight from the block (or the mapped file)
+//! into the socket buffer with zero copies on the worker side.
+//!
+//! Lock order: a block's residency mutex may be held while taking the
+//! shared budget ledger or the spill-file mutex, never the reverse; no
+//! path holds the residency mutex while taking the store's map lock.
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
+use std::fs::File;
+use std::io::{Read as _, Seek, SeekFrom, Write as _};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::config::StorageConfig;
 use crate::distmat::{LocalMatrix, RowBlockLayout};
+use crate::hdf5sim::MappedMatrix;
+use crate::metrics::StorageMetrics;
 use crate::protocol::wire::copy_le_f64s;
 
 /// Stripe-lock count per block: enough for the handful of concurrent
@@ -66,9 +114,309 @@ struct IngestState {
     readable: bool,
 }
 
+/// Where a block's payload currently lives. See the module docs.
+enum Residency {
+    /// Pre-seal: payload is the zeroed ingest buffer in `Block::data`,
+    /// being filled through the stripe protocol.
+    Ingest,
+    /// Sealed, heap-resident (budget-counted).
+    Heap(Arc<LocalMatrix>),
+    /// Sealed, mmap-backed (`LoadMatrix` direct ingest; budget-exempt).
+    Mapped(Arc<MappedMatrix>),
+    /// Sealed, parked in the rank's spill file (`bytes` = segment size).
+    Spilled { bytes: u64 },
+}
+
+/// Read guard handed out by [`Block::read_span`]: derefs to the row
+/// span's `&[f64]` while keeping the payload's current home alive, so a
+/// concurrent spill cannot invalidate an in-flight read.
+pub enum Span {
+    Heap { data: Arc<LocalMatrix>, start: usize, len: usize },
+    Mapped { map: Arc<MappedMatrix>, start: usize, len: usize },
+    /// Streamed back transiently from the spill file (bounded copy).
+    Owned(Vec<f64>),
+}
+
+impl std::ops::Deref for Span {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        match self {
+            Span::Heap { data, start, len } => &data.data()[*start..*start + *len],
+            Span::Mapped { map, start, len } => &map.data()[*start..*start + *len],
+            Span::Owned(v) => v,
+        }
+    }
+}
+
+impl AsRef<[f64]> for Span {
+    fn as_ref(&self) -> &[f64] {
+        self
+    }
+}
+
+/// Per-session storage totals on one rank (the accounting surface the
+/// budget check and `ServerHandle::storage_usage` read).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionUsage {
+    /// Heap bytes: unsealed ingest buffers + `Residency::Heap` payloads.
+    pub bytes_resident: u64,
+    /// Bytes parked in the spill file.
+    pub bytes_spilled: u64,
+    /// mmap-backed payload bytes (page cache, budget-exempt).
+    pub bytes_mapped: u64,
+}
+
+/// One segment of the spill file.
+#[derive(Debug, Clone, Copy)]
+struct Segment {
+    offset: u64,
+    bytes: u64,
+    session: u64,
+}
+
+#[derive(Debug, Default)]
+struct SpillInner {
+    /// Created lazily on first spill; `None` until then.
+    file: Option<File>,
+    /// block id → live segment.
+    segs: HashMap<u64, Segment>,
+    /// Reusable holes `(offset, bytes)` left by freed segments
+    /// (first-fit, split on partial reuse; tail frees shrink `end`).
+    free: Vec<(u64, u64)>,
+    /// High-water mark: next append offset.
+    end: u64,
+}
+
+/// Per-rank ledgered spill file: whole-block segments tracked by a
+/// `block id → (offset, bytes, session)` ledger with a free-list for
+/// hole reuse. Payload is stored native-endian — segments are strictly
+/// same-host round-trips. The file is deleted when the store drops.
+#[derive(Debug)]
+struct SpillFile {
+    path: PathBuf,
+    inner: Mutex<SpillInner>,
+}
+
+impl SpillFile {
+    fn new(path: PathBuf) -> Self {
+        SpillFile { path, inner: Mutex::new(SpillInner::default()) }
+    }
+
+    /// Write one block's payload into a segment (first-fit hole or
+    /// append); returns the segment size in bytes.
+    fn write_block(&self, id: u64, session: u64, data: &[f64]) -> crate::Result<u64> {
+        let bytes = (data.len() * 8) as u64;
+        let mut inner = self.inner.lock().unwrap();
+        anyhow::ensure!(
+            !inner.segs.contains_key(&id),
+            "block {id} already has a spill segment"
+        );
+        if inner.file.is_none() {
+            let f = std::fs::OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&self.path)
+                .map_err(|e| anyhow::anyhow!("creating spill file {:?}: {e}", self.path))?;
+            inner.file = Some(f);
+        }
+        let offset = match inner.free.iter().position(|&(_, cap)| cap >= bytes) {
+            Some(i) => {
+                let (off, cap) = inner.free[i];
+                if cap == bytes {
+                    inner.free.remove(i);
+                } else {
+                    inner.free[i] = (off + bytes, cap - bytes);
+                }
+                off
+            }
+            None => {
+                let off = inner.end;
+                inner.end = off + bytes;
+                off
+            }
+        };
+        let write = |file: &mut File| -> std::io::Result<()> {
+            file.seek(SeekFrom::Start(offset))?;
+            // Safety: plain f64 buffer viewed as its raw bytes
+            // (native-endian on purpose: segments never leave this host).
+            let raw = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 8)
+            };
+            file.write_all(raw)
+        };
+        if let Err(e) = write(inner.file.as_mut().unwrap()) {
+            // hand the hole back so a failed spill doesn't leak space
+            inner.free.push((offset, bytes));
+            anyhow::bail!("spill write to {:?} failed: {e}", self.path);
+        }
+        inner.segs.insert(id, Segment { offset, bytes, session });
+        Ok(bytes)
+    }
+
+    /// Read `n_elems` f64s starting `start_elem` into block `id`'s
+    /// segment.
+    fn read_block_span(&self, id: u64, start_elem: usize, n_elems: usize) -> crate::Result<Vec<f64>> {
+        let mut inner = self.inner.lock().unwrap();
+        let seg = *inner
+            .segs
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("block {id} has no spill segment"))?;
+        anyhow::ensure!(
+            ((start_elem + n_elems) * 8) as u64 <= seg.bytes,
+            "span beyond spilled segment of block {id}"
+        );
+        let file = inner
+            .file
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("spill file not open"))?;
+        file.seek(SeekFrom::Start(seg.offset + (start_elem * 8) as u64))?;
+        let mut out = vec![0.0f64; n_elems];
+        // Safety: reading raw bytes into a plain f64 buffer of exactly
+        // that size; written native-endian by `write_block` on this host.
+        let raw = unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, n_elems * 8)
+        };
+        file.read_exact(raw)
+            .map_err(|e| anyhow::anyhow!("spill read from {:?} failed: {e}", self.path))?;
+        Ok(out)
+    }
+
+    /// Release block `id`'s segment; returns its size (0 if absent).
+    fn free_seg(&self, id: u64) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(seg) = inner.segs.remove(&id) else { return 0 };
+        if seg.offset + seg.bytes == inner.end {
+            inner.end = seg.offset;
+        } else {
+            inner.free.push((seg.offset, seg.bytes));
+        }
+        seg.bytes
+    }
+
+    /// Release every segment owned by `session`; returns (count, bytes).
+    fn free_session_segs(&self, session: u64) -> (usize, u64) {
+        let ids: Vec<u64> = {
+            let inner = self.inner.lock().unwrap();
+            inner
+                .segs
+                .iter()
+                .filter(|(_, s)| s.session == session)
+                .map(|(id, _)| *id)
+                .collect()
+        };
+        let mut bytes = 0;
+        for id in &ids {
+            bytes += self.free_seg(*id);
+        }
+        (ids.len(), bytes)
+    }
+
+    fn segment_count(&self) -> usize {
+        self.inner.lock().unwrap().segs.len()
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        if self.inner.lock().unwrap().file.is_some() {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// State shared between the store and its blocks: budget config, the
+/// per-session accounting ledger, the spill file, the LRU clock, and
+/// the storage-plane counters.
+struct StoreShared {
+    rank: usize,
+    /// Per-session per-rank heap cap; 0 = unlimited.
+    budget_bytes: u64,
+    metrics: Arc<StorageMetrics>,
+    /// Monotonic LRU clock; every read stamps its block.
+    clock: AtomicU64,
+    ledger: Mutex<HashMap<u64, SessionUsage>>,
+    spill: SpillFile,
+}
+
+impl StoreShared {
+    fn next_stamp(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Unconditionally add heap-resident bytes to a session's tally.
+    fn charge_resident(&self, session: u64, bytes: u64) {
+        self.ledger.lock().unwrap().entry(session).or_default().bytes_resident += bytes;
+    }
+
+    /// Add heap-resident bytes only if the session stays within budget.
+    fn try_charge_resident(&self, session: u64, bytes: u64) -> bool {
+        let mut ledger = self.ledger.lock().unwrap();
+        let u = ledger.entry(session).or_default();
+        if self.budget_bytes > 0 && u.bytes_resident + bytes > self.budget_bytes {
+            return false;
+        }
+        u.bytes_resident += bytes;
+        true
+    }
+
+    fn uncharge_resident(&self, session: u64, bytes: u64) {
+        let mut ledger = self.ledger.lock().unwrap();
+        let u = ledger.entry(session).or_default();
+        u.bytes_resident = u.bytes_resident.saturating_sub(bytes);
+    }
+
+    fn charge_mapped(&self, session: u64, bytes: u64) {
+        self.ledger.lock().unwrap().entry(session).or_default().bytes_mapped += bytes;
+    }
+
+    fn uncharge_mapped(&self, session: u64, bytes: u64) {
+        let mut ledger = self.ledger.lock().unwrap();
+        let u = ledger.entry(session).or_default();
+        u.bytes_mapped = u.bytes_mapped.saturating_sub(bytes);
+    }
+
+    /// Move bytes resident → spilled in the ledger.
+    fn note_spill(&self, session: u64, bytes: u64) {
+        let mut ledger = self.ledger.lock().unwrap();
+        let u = ledger.entry(session).or_default();
+        u.bytes_resident = u.bytes_resident.saturating_sub(bytes);
+        u.bytes_spilled += bytes;
+    }
+
+    /// Finish a page-in: the resident side was already reserved via
+    /// [`try_charge_resident`](Self::try_charge_resident); drop the
+    /// spilled side.
+    fn note_page_in(&self, session: u64, bytes: u64) {
+        let mut ledger = self.ledger.lock().unwrap();
+        let u = ledger.entry(session).or_default();
+        u.bytes_spilled = u.bytes_spilled.saturating_sub(bytes);
+    }
+
+    fn uncharge_spilled(&self, session: u64, bytes: u64) {
+        let mut ledger = self.ledger.lock().unwrap();
+        let u = ledger.entry(session).or_default();
+        u.bytes_spilled = u.bytes_spilled.saturating_sub(bytes);
+    }
+
+    fn usage_of(&self, session: u64) -> SessionUsage {
+        self.ledger.lock().unwrap().get(&session).copied().unwrap_or_default()
+    }
+
+    fn drop_session_entry(&self, session: u64) {
+        let mut ledger = self.ledger.lock().unwrap();
+        if let Some(u) = ledger.get(&session) {
+            if *u == SessionUsage::default() {
+                ledger.remove(&session);
+            }
+        }
+    }
+}
+
 /// One worker's block of a distributed matrix. Immutable metadata plus
 /// interior-mutable payload storage guarded by the stripe/seal protocol
-/// described in the module docs.
+/// and the residency mutex described in the module docs.
 pub struct Block {
     pub id: u64,
     pub layout: RowBlockLayout,
@@ -82,18 +430,24 @@ pub struct Block {
     rank: usize,
     state: Mutex<IngestState>,
     stripes: [Mutex<()>; INGEST_STRIPES],
-    /// This rank's rows (`layout.ranges[slot]`), row-major. Mutated only
-    /// through [`Block::write_span`] before sealing; immutable after.
+    /// Pre-seal ingest buffer (`layout.ranges[slot]`'s rows, row-major).
+    /// Mutated only through [`Block::write_span`] before sealing; `seal`
+    /// moves the payload out into `res` and leaves this empty.
     data: UnsafeCell<LocalMatrix>,
     /// Raw pointer to `data`'s element buffer, captured at construction
-    /// (the buffer is fixed-size and never reallocated, so it stays
-    /// valid for the block's lifetime). Writers derive their span's
+    /// (the buffer is fixed-size and never reallocated before seal, so
+    /// it stays valid for the ingest phase). Writers derive their span's
     /// `&mut [f64]` from this instead of creating `&mut LocalMatrix`
     /// through the cell — a whole-buffer exclusive reference would alias
     /// between concurrent writers on disjoint stripes.
     base: *mut f64,
     /// Element count behind `base` (span bounds sanity checks).
     len: usize,
+    /// Where the sealed payload lives (see [`Residency`]).
+    res: Mutex<Residency>,
+    /// LRU clock stamp of the last read (spill victim selection).
+    last_use: AtomicU64,
+    shared: Arc<StoreShared>,
 }
 
 // Safety: the raw `base` pointer (which suppresses the auto impls)
@@ -104,9 +458,9 @@ pub struct Block {
 // state mutex after stripe acquisition), so concurrent writers' spans —
 // and therefore their exclusive references — are disjoint. Readers
 // require `readable`, which `seal` sets only after a full stripe
-// barrier has waited out every in-flight writer — so reads and writes
-// can never overlap, and the state mutex publishes the writes to
-// readers. See the module docs.
+// barrier has waited out every in-flight writer AND the payload has
+// moved out of the cell into `res` — so reads never touch the cell at
+// all, and the state mutex publishes the writes. See the module docs.
 unsafe impl Send for Block {}
 unsafe impl Sync for Block {}
 
@@ -130,16 +484,17 @@ impl Block {
         layout: RowBlockLayout,
         slot: usize,
         session: u64,
-        rank: usize,
+        shared: Arc<StoreShared>,
         local: Option<LocalMatrix>,
     ) -> crate::Result<Self> {
+        let rank = shared.rank;
         anyhow::ensure!(
             slot < layout.ranges.len(),
             "slot {slot} outside layout of {} ranges",
             layout.ranges.len()
         );
         let (a, b) = layout.ranges[slot];
-        let (mut local, sealed, rows_received) = match local {
+        let (mut ingest, res, sealed, rows_received) = match local {
             Some(m) => {
                 anyhow::ensure!(
                     m.rows() == b - a && m.cols() == layout.cols,
@@ -150,16 +505,29 @@ impl Block {
                     layout.cols,
                 );
                 let rows = m.rows() as u64;
-                (m, true, rows)
+                // born sealed: payload goes straight to its heap home,
+                // the ingest cell stays empty
+                (
+                    LocalMatrix::zeros(0, 0),
+                    Residency::Heap(Arc::new(m)),
+                    true,
+                    rows,
+                )
             }
-            None => (LocalMatrix::zeros(b - a, layout.cols), false, 0),
+            None => (
+                LocalMatrix::zeros(b - a, layout.cols),
+                Residency::Ingest,
+                false,
+                0,
+            ),
         };
         // capture the element buffer's base pointer while we still own
         // the matrix uniquely; moving the LocalMatrix into the cell moves
         // only its header, not the heap buffer the pointer targets
-        let buf = local.data_mut();
+        let buf = ingest.data_mut();
         let len = buf.len();
         let base = buf.as_mut_ptr();
+        let stamp = shared.next_stamp();
         Ok(Block {
             id,
             layout,
@@ -173,9 +541,67 @@ impl Block {
                 readable: sealed,
             }),
             stripes: Default::default(),
-            data: UnsafeCell::new(local),
+            data: UnsafeCell::new(ingest),
             base,
             len,
+            res: Mutex::new(res),
+            last_use: AtomicU64::new(stamp),
+            shared,
+        })
+    }
+
+    /// A block whose payload is an mmap-backed file view (`LoadMatrix`
+    /// direct ingest). Born sealed; the map must cover the layout's full
+    /// global shape — the block serves rows `layout.ranges[slot]` of it.
+    fn new_mapped(
+        id: u64,
+        name: &str,
+        layout: RowBlockLayout,
+        slot: usize,
+        session: u64,
+        shared: Arc<StoreShared>,
+        map: Arc<MappedMatrix>,
+    ) -> crate::Result<Self> {
+        let rank = shared.rank;
+        anyhow::ensure!(
+            slot < layout.ranges.len(),
+            "slot {slot} outside layout of {} ranges",
+            layout.ranges.len()
+        );
+        anyhow::ensure!(
+            map.rows() == layout.rows && map.cols() == layout.cols,
+            "mapped file shape {}x{} does not match layout {}x{} on rank {rank}",
+            map.rows(),
+            map.cols(),
+            layout.rows,
+            layout.cols,
+        );
+        let (a, b) = layout.ranges[slot];
+        let rows_received = (b - a) as u64;
+        let mut empty = LocalMatrix::zeros(0, 0);
+        let buf = empty.data_mut();
+        let len = buf.len();
+        let base = buf.as_mut_ptr();
+        let stamp = shared.next_stamp();
+        Ok(Block {
+            id,
+            layout,
+            slot,
+            session,
+            name: name.to_string(),
+            rank,
+            state: Mutex::new(IngestState {
+                rows_received,
+                sealed: true,
+                readable: true,
+            }),
+            stripes: Default::default(),
+            data: UnsafeCell::new(empty),
+            base,
+            len,
+            res: Mutex::new(Residency::Mapped(map)),
+            last_use: AtomicU64::new(stamp),
+            shared,
         })
     }
 
@@ -192,6 +618,27 @@ impl Block {
 
     pub fn rows_received(&self) -> u64 {
         self.state.lock().unwrap().rows_received
+    }
+
+    /// This block's local row count (`layout.ranges[slot]`).
+    pub fn local_rows(&self) -> usize {
+        let (a, b) = self.layout.ranges[self.slot];
+        b - a
+    }
+
+    /// Full payload size in bytes (independent of residency).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.local_rows() as u64) * (self.layout.cols as u64) * 8
+    }
+
+    /// True when the payload is an mmap-backed file view.
+    pub fn is_mapped(&self) -> bool {
+        matches!(*self.res.lock().unwrap(), Residency::Mapped(_))
+    }
+
+    /// True when the payload is currently parked in the spill file.
+    pub fn is_spilled(&self) -> bool {
+        matches!(*self.res.lock().unwrap(), Residency::Spilled { .. })
     }
 
     /// Bounds-check a global row span against this block's range; returns
@@ -255,7 +702,8 @@ impl Block {
         // over the whole buffer — which would alias between writers —
         // ever exists. Readers are excluded because the block is not
         // `readable` yet — that flag is set only after `seal`'s stripe
-        // barrier has waited us out.
+        // barrier has waited us out (and after seal, reads go through
+        // `res`, never the cell).
         let dst = unsafe {
             std::slice::from_raw_parts_mut(
                 self.base.add(local_start * ncols),
@@ -300,10 +748,53 @@ impl Block {
         })
     }
 
+    /// Validate a read span (sealed + bounds) without touching payload
+    /// bytes — pull serving pre-validates with this so a spilled block
+    /// is not read off disk twice.
+    pub fn validate_span(&self, start_row: u64, nrows: usize) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.readable(),
+            "matrix {} is still being ingested (not sealed)",
+            self.id
+        );
+        self.span_local_start(start_row, nrows)?;
+        Ok(())
+    }
+
+    /// Try to promote a spilled payload back to the heap (caller holds
+    /// the residency lock and has confirmed `Spilled`). Returns the new
+    /// heap Arc, or `None` when the session's budget has no room.
+    fn page_in_locked(
+        &self,
+        res: &mut Residency,
+        bytes: u64,
+    ) -> crate::Result<Option<Arc<LocalMatrix>>> {
+        if !self.shared.try_charge_resident(self.session, bytes) {
+            return Ok(None);
+        }
+        let total = self.local_rows() * self.layout.cols;
+        let buf = match self.shared.spill.read_block_span(self.id, 0, total) {
+            Ok(b) => b,
+            Err(e) => {
+                self.shared.uncharge_resident(self.session, bytes);
+                return Err(e);
+            }
+        };
+        let arc = Arc::new(LocalMatrix::from_data(self.local_rows(), self.layout.cols, buf));
+        *res = Residency::Heap(arc.clone());
+        self.shared.spill.free_seg(self.id);
+        self.shared.note_page_in(self.session, bytes);
+        self.shared.metrics.paged_in(bytes);
+        Ok(Some(arc))
+    }
+
     /// Borrow rows (global indices) out of a sealed block — the zero-copy
-    /// worker side of a streaming pull. Fails on unsealed blocks (ingest
-    /// still running ⇒ the span could be mid-write).
-    pub fn read_span(&self, start_row: u64, nrows: usize) -> crate::Result<&[f64]> {
+    /// worker side of a streaming pull. Heap and mapped payloads are
+    /// served in place (the guard pins them); spilled payloads page back
+    /// in when the budget allows, else stream transiently from disk.
+    /// Fails on unsealed blocks (ingest still running ⇒ the span could
+    /// be mid-write).
+    pub fn read_span(&self, start_row: u64, nrows: usize) -> crate::Result<Span> {
         anyhow::ensure!(
             self.readable(),
             "matrix {} is still being ingested (not sealed)",
@@ -311,11 +802,45 @@ impl Block {
         );
         let local_start = self.span_local_start(start_row, nrows)?;
         let ncols = self.layout.cols;
-        // Safety: readable ⇒ the seal barrier has waited out every
-        // writer and nothing mutates the payload again, so shared
-        // borrows are sound.
-        let local = unsafe { &*self.data.get() };
-        Ok(&local.data()[local_start * ncols..(local_start + nrows) * ncols])
+        self.last_use.store(self.shared.next_stamp(), Ordering::Relaxed);
+        let mut res = self.res.lock().unwrap();
+        match &*res {
+            Residency::Heap(m) => Ok(Span::Heap {
+                data: m.clone(),
+                start: local_start * ncols,
+                len: nrows * ncols,
+            }),
+            Residency::Mapped(map) => {
+                let (lo, _) = self.layout.ranges[self.slot];
+                Ok(Span::Mapped {
+                    map: map.clone(),
+                    start: (lo + local_start) * ncols,
+                    len: nrows * ncols,
+                })
+            }
+            Residency::Spilled { bytes } => {
+                let bytes = *bytes;
+                if let Some(arc) = self.page_in_locked(&mut res, bytes)? {
+                    return Ok(Span::Heap {
+                        data: arc,
+                        start: local_start * ncols,
+                        len: nrows * ncols,
+                    });
+                }
+                // no budget room: stream just this span off the disk
+                let buf = self.shared.spill.read_block_span(
+                    self.id,
+                    local_start * ncols,
+                    nrows * ncols,
+                )?;
+                self.shared.metrics.read_spilled((nrows * ncols * 8) as u64);
+                Ok(Span::Owned(buf))
+            }
+            Residency::Ingest => anyhow::bail!(
+                "matrix {} readable but payload still in ingest state (bug)",
+                self.id
+            ),
+        }
     }
 
     /// Copy rows (global indices) out of a sealed block.
@@ -327,9 +852,67 @@ impl Block {
     /// store or block locks while working).
     pub fn snapshot(&self) -> crate::Result<(RowBlockLayout, LocalMatrix)> {
         anyhow::ensure!(self.readable(), "matrix {} is not sealed yet", self.id);
-        // Safety: readable ⇒ immutable, as in `read_span`.
-        let local = unsafe { &*self.data.get() };
-        Ok((self.layout.clone(), local.clone()))
+        self.last_use.store(self.shared.next_stamp(), Ordering::Relaxed);
+        let mut res = self.res.lock().unwrap();
+        let local = match &*res {
+            Residency::Heap(m) => (**m).clone(),
+            Residency::Mapped(map) => {
+                let (lo, hi) = self.layout.ranges[self.slot];
+                LocalMatrix::from_data(
+                    hi - lo,
+                    self.layout.cols,
+                    map.row_span(lo, hi)?.to_vec(),
+                )
+            }
+            Residency::Spilled { bytes } => {
+                let bytes = *bytes;
+                match self.page_in_locked(&mut res, bytes)? {
+                    Some(arc) => (*arc).clone(),
+                    None => {
+                        // transient whole-block read, residency unchanged
+                        let total = self.local_rows() * self.layout.cols;
+                        let buf = self.shared.spill.read_block_span(self.id, 0, total)?;
+                        self.shared.metrics.read_spilled(bytes);
+                        LocalMatrix::from_data(self.local_rows(), self.layout.cols, buf)
+                    }
+                }
+            }
+            Residency::Ingest => anyhow::bail!(
+                "matrix {} readable but payload still in ingest state (bug)",
+                self.id
+            ),
+        };
+        Ok((self.layout.clone(), local))
+    }
+
+    /// Park a heap-resident sealed payload in the spill file; returns the
+    /// bytes moved (0 when the block is not currently heap-resident —
+    /// racing spills/page-ins make that benign).
+    fn spill(&self) -> crate::Result<u64> {
+        let mut res = self.res.lock().unwrap();
+        let arc = match &*res {
+            Residency::Heap(m) => m.clone(),
+            _ => return Ok(0),
+        };
+        if !self.readable() {
+            // sealed-at-birth blocks are readable immediately; push-ingest
+            // blocks only reach Residency::Heap inside seal() — but check
+            // anyway so an unreadable block can never lose its payload
+            return Ok(0);
+        }
+        let bytes = self.shared.spill.write_block(self.id, self.session, arc.data())?;
+        *res = Residency::Spilled { bytes };
+        drop(res);
+        self.shared.note_spill(self.session, bytes);
+        self.shared.metrics.spilled(bytes);
+        Ok(bytes)
+    }
+
+    /// True when [`spill`](Self::spill) could move bytes right now.
+    fn spillable(&self) -> bool {
+        self.readable()
+            && self.payload_bytes() > 0
+            && matches!(*self.res.lock().unwrap(), Residency::Heap(_))
     }
 
     /// Freeze the block: no further writes land after this returns, every
@@ -344,6 +927,20 @@ impl Block {
         for s in &self.stripes {
             drop(s.lock().unwrap());
         }
+        // move the quiescent payload out of the ingest cell into its heap
+        // home BEFORE admitting readers — readers only ever look at `res`,
+        // so they must never find it still in `Ingest`
+        {
+            let mut res = self.res.lock().unwrap();
+            if matches!(*res, Residency::Ingest) {
+                // Safety: `sealed` + the stripe barrier exclude writers;
+                // `readable` is still false so no reader exists. This is
+                // the only &mut through the cell after construction.
+                let cell = unsafe { &mut *self.data.get() };
+                let payload = std::mem::replace(cell, LocalMatrix::zeros(0, 0));
+                *res = Residency::Heap(Arc::new(payload));
+            }
+        }
         // only now may readers touch the payload; the same lock publishes
         // the in-flight writers' bytes and counts to them
         let mut st = self.state.lock().unwrap();
@@ -352,23 +949,151 @@ impl Block {
     }
 }
 
+/// Blocks stream row panels straight off their residency tier — heap and
+/// mapped payloads are gathered from memory, spilled blocks read only the
+/// requested rows off disk. This is the seam
+/// [`crate::linalg::lanczos::truncated_svd_panels`] computes through: an
+/// SVD over a dataset several times the storage budget touches one panel
+/// at a time.
+impl crate::linalg::lanczos::RowPanels for Block {
+    fn rows(&self) -> usize {
+        self.local_rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.layout.cols
+    }
+
+    fn panel(
+        &self,
+        start: usize,
+        n: usize,
+    ) -> crate::Result<std::borrow::Cow<'_, LocalMatrix>> {
+        let span = self.read_span(start as u64, n)?;
+        Ok(std::borrow::Cow::Owned(LocalMatrix::from_data(
+            n,
+            self.layout.cols,
+            span.to_vec(),
+        )))
+    }
+}
+
+/// Process-wide counter making spill file names unique across the many
+/// stores one test binary creates.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn spill_path(cfg_dir: &str, rank: usize) -> PathBuf {
+    let dir = if cfg_dir.is_empty() {
+        std::env::temp_dir()
+    } else {
+        PathBuf::from(cfg_dir)
+    };
+    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+    dir.join(format!(
+        "alchemist-spill-r{rank}-p{}-{seq}.bin",
+        std::process::id()
+    ))
+}
+
 /// Matrix-id → block map for one worker rank. Interior-locked: lookups
 /// take a short read lock, payload writes synchronize per block (see the
 /// module docs), so the store itself never serializes concurrent
 /// executor streams.
-#[derive(Debug, Default)]
 pub struct MatrixStore {
-    rank: usize,
     blocks: RwLock<HashMap<u64, Arc<Block>>>,
+    shared: Arc<StoreShared>,
+}
+
+impl std::fmt::Debug for MatrixStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MatrixStore")
+            .field("rank", &self.shared.rank)
+            .field("blocks", &self.len())
+            .field("budget_bytes", &self.shared.budget_bytes)
+            .finish()
+    }
+}
+
+impl Default for MatrixStore {
+    fn default() -> Self {
+        Self::new(0)
+    }
 }
 
 impl MatrixStore {
+    /// An unlimited-budget store (no spill unless configured) — the
+    /// default for tests and budget-less deployments.
     pub fn new(rank: usize) -> Self {
-        MatrixStore { rank, blocks: RwLock::new(HashMap::new()) }
+        Self::with_storage(
+            rank,
+            &StorageConfig {
+                budget_bytes: 0,
+                total_bytes: 0,
+                spill_dir: String::new(),
+            },
+            Arc::new(StorageMetrics::new()),
+        )
+    }
+
+    /// A store enforcing `cfg.budget_bytes` per session on this rank,
+    /// spilling to a fresh ledgered file under `cfg.spill_dir` (empty =
+    /// the system temp dir) and reporting into `metrics`.
+    pub fn with_storage(
+        rank: usize,
+        cfg: &StorageConfig,
+        metrics: Arc<StorageMetrics>,
+    ) -> Self {
+        MatrixStore {
+            blocks: RwLock::new(HashMap::new()),
+            shared: Arc::new(StoreShared {
+                rank,
+                budget_bytes: cfg.budget_bytes,
+                metrics,
+                clock: AtomicU64::new(0),
+                ledger: Mutex::new(HashMap::new()),
+                spill: SpillFile::new(spill_path(&cfg.spill_dir, rank)),
+            }),
+        }
     }
 
     pub fn rank(&self) -> usize {
-        self.rank
+        self.shared.rank
+    }
+
+    /// The per-session heap budget this store enforces (0 = unlimited).
+    pub fn budget_bytes(&self) -> u64 {
+        self.shared.budget_bytes
+    }
+
+    /// This rank's storage-plane counters (shared with the server's
+    /// aggregation surface).
+    pub fn storage_metrics(&self) -> Arc<StorageMetrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Storage totals for one session on this rank.
+    pub fn session_usage(&self, session: u64) -> SessionUsage {
+        self.shared.usage_of(session)
+    }
+
+    /// Storage totals for every session with live bytes on this rank,
+    /// sorted by session id.
+    pub fn usage(&self) -> Vec<(u64, SessionUsage)> {
+        let mut v: Vec<(u64, SessionUsage)> = self
+            .shared
+            .ledger
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(s, u)| (*s, *u))
+            .collect();
+        v.sort_unstable_by_key(|(s, _)| *s);
+        v
+    }
+
+    /// Live segments in this rank's spill file (teardown tests).
+    pub fn spill_segments(&self) -> usize {
+        self.shared.spill.segment_count()
     }
 
     fn add(&self, id: u64, block: Block) -> crate::Result<()> {
@@ -376,15 +1101,87 @@ impl MatrixStore {
         anyhow::ensure!(
             !blocks.contains_key(&id),
             "matrix id {id} already exists on rank {}",
-            self.rank
+            self.shared.rank
         );
         blocks.insert(id, Arc::new(block));
         Ok(())
     }
 
+    /// Spill this session's least-recently-used sealed heap block.
+    /// `Ok(false)` = nothing left to spill.
+    fn spill_one_lru(&self, session: u64) -> crate::Result<bool> {
+        let candidate = {
+            let blocks = self.blocks.read().unwrap();
+            blocks
+                .values()
+                .filter(|b| b.session == session && b.spillable())
+                .min_by_key(|b| b.last_use.load(Ordering::Relaxed))
+                .cloned()
+        };
+        match candidate {
+            None => Ok(false),
+            // a racing reader may have spilled/promoted it meanwhile;
+            // spill() returns 0 then and the caller's loop re-scans
+            Some(b) => Ok(b.spill()? > 0 || {
+                // nothing moved — report progress only if some other
+                // thread's spill beat us (the re-scan will see it)
+                b.is_spilled()
+            }),
+        }
+    }
+
+    /// Reserve `bytes` of heap budget for `session`, spilling LRU sealed
+    /// blocks as needed; fails when the reservation cannot fit even with
+    /// everything spillable spilled.
+    fn reserve_or_spill(&self, session: u64, bytes: u64) -> crate::Result<()> {
+        let budget = self.shared.budget_bytes;
+        if budget > 0 && bytes > budget {
+            anyhow::bail!(
+                "allocation of {bytes} bytes exceeds storage.budget_bytes={budget} \
+                 on rank {}; use LoadMatrix (mapped ingest is budget-exempt) or \
+                 raise the budget",
+                self.shared.rank
+            );
+        }
+        loop {
+            if self.shared.try_charge_resident(session, bytes) {
+                return Ok(());
+            }
+            if !self.spill_one_lru(session)? {
+                let u = self.shared.usage_of(session);
+                anyhow::bail!(
+                    "session {session} over storage budget on rank {}: need {bytes} \
+                     bytes, {} resident of {budget}, and nothing left to spill \
+                     (unsealed ingest blocks cannot spill)",
+                    self.shared.rank,
+                    u.bytes_resident
+                );
+            }
+        }
+    }
+
+    /// Spill LRU sealed blocks until `session` is back under budget
+    /// (no-op when unlimited). Best-effort: stops when nothing is left
+    /// to spill.
+    fn rebalance(&self, session: u64) -> crate::Result<()> {
+        let budget = self.shared.budget_bytes;
+        if budget == 0 {
+            return Ok(());
+        }
+        while self.shared.usage_of(session).bytes_resident > budget {
+            if !self.spill_one_lru(session)? {
+                break;
+            }
+        }
+        Ok(())
+    }
+
     /// Allocate a zeroed, unsealed block for ingest. `slot` is this
     /// worker's index into `layout.ranges` (the session's group-local
-    /// rank); `session` namespaces the block for teardown.
+    /// rank); `session` namespaces the block for teardown. Charged
+    /// against the session's storage budget up front — ingest buffers
+    /// cannot spill, so an allocation that cannot fit is rejected here
+    /// with a clean error rather than OOMing the rank later.
     pub fn alloc(
         &self,
         id: u64,
@@ -393,10 +1190,19 @@ impl MatrixStore {
         slot: usize,
         session: u64,
     ) -> crate::Result<()> {
-        self.add(id, Block::new(id, name, layout, slot, session, self.rank, None)?)
+        let block = Block::new(id, name, layout, slot, session, self.shared.clone(), None)?;
+        let bytes = block.payload_bytes();
+        self.reserve_or_spill(session, bytes)?;
+        if let Err(e) = self.add(id, block) {
+            self.shared.uncharge_resident(session, bytes);
+            return Err(e);
+        }
+        Ok(())
     }
 
     /// Insert a fully-formed (already computed) block — routine outputs.
+    /// Always lands, then LRU blocks (possibly this one) spill until the
+    /// session is back under budget.
     pub fn insert(
         &self,
         id: u64,
@@ -406,10 +1212,39 @@ impl MatrixStore {
         slot: usize,
         session: u64,
     ) -> crate::Result<()> {
-        self.add(
-            id,
-            Block::new(id, name, layout, slot, session, self.rank, Some(local))?,
-        )
+        let block =
+            Block::new(id, name, layout, slot, session, self.shared.clone(), Some(local))?;
+        let bytes = block.payload_bytes();
+        self.shared.charge_resident(session, bytes);
+        if let Err(e) = self.add(id, block) {
+            self.shared.uncharge_resident(session, bytes);
+            return Err(e);
+        }
+        self.rebalance(session)
+    }
+
+    /// Register an mmap-backed block (`LoadMatrix` direct ingest). Born
+    /// sealed; the payload is the page cache's view of the file — zero
+    /// heap bytes, exempt from the session budget.
+    pub fn insert_mapped(
+        &self,
+        id: u64,
+        name: &str,
+        layout: RowBlockLayout,
+        map: Arc<MappedMatrix>,
+        slot: usize,
+        session: u64,
+    ) -> crate::Result<()> {
+        let block =
+            Block::new_mapped(id, name, layout, slot, session, self.shared.clone(), map)?;
+        let bytes = block.payload_bytes();
+        self.shared.charge_mapped(session, bytes);
+        if let Err(e) = self.add(id, block) {
+            self.shared.uncharge_mapped(session, bytes);
+            return Err(e);
+        }
+        self.shared.metrics.mapped_block();
+        Ok(())
     }
 
     /// Look a block up under the read lock; the returned handle outlives
@@ -420,7 +1255,9 @@ impl MatrixStore {
             .unwrap()
             .get(&id)
             .cloned()
-            .ok_or_else(|| anyhow::anyhow!("matrix {id} not found on rank {}", self.rank))
+            .ok_or_else(|| {
+                anyhow::anyhow!("matrix {id} not found on rank {}", self.shared.rank)
+            })
     }
 
     /// Write incoming rows (global indices) into an unsealed block.
@@ -443,17 +1280,57 @@ impl MatrixStore {
         Ok(self.get(id)?.seal())
     }
 
+    /// Release one block's accounting (and spill segment, if any) as it
+    /// leaves the map.
+    fn release(&self, b: &Arc<Block>) {
+        let res = b.res.lock().unwrap();
+        match &*res {
+            Residency::Ingest | Residency::Heap(_) => {
+                self.shared.uncharge_resident(b.session, b.payload_bytes());
+            }
+            Residency::Mapped(_) => {
+                self.shared.uncharge_mapped(b.session, b.payload_bytes());
+            }
+            Residency::Spilled { bytes } => {
+                self.shared.uncharge_spilled(b.session, *bytes);
+                self.shared.spill.free_seg(b.id);
+            }
+        }
+    }
+
     pub fn free(&self, id: u64) -> bool {
-        self.blocks.write().unwrap().remove(&id).is_some()
+        let removed = self.blocks.write().unwrap().remove(&id);
+        match removed {
+            Some(b) => {
+                self.release(&b);
+                self.shared.drop_session_entry(b.session);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Drop every block owned by `session` (teardown); returns how many
-    /// were freed. Other sessions' blocks are untouched.
+    /// were freed. Budget charges are released and the session's spill
+    /// segments deleted; other sessions' blocks are untouched.
     pub fn free_session(&self, session: u64) -> usize {
-        let mut blocks = self.blocks.write().unwrap();
-        let before = blocks.len();
-        blocks.retain(|_, b| b.session != session);
-        before - blocks.len()
+        let removed: Vec<Arc<Block>> = {
+            let mut blocks = self.blocks.write().unwrap();
+            let ids: Vec<u64> = blocks
+                .iter()
+                .filter(|(_, b)| b.session == session)
+                .map(|(id, _)| *id)
+                .collect();
+            ids.iter().filter_map(|id| blocks.remove(id)).collect()
+        };
+        for b in &removed {
+            self.release(b);
+        }
+        // belt and braces: drop any segment the residency walk missed
+        // (there should be none) and the ledger entry once it is zero
+        self.shared.spill.free_session_segs(session);
+        self.shared.drop_session_entry(session);
+        removed.len()
     }
 
     pub fn ids(&self) -> Vec<u64> {
@@ -481,6 +1358,19 @@ mod tests {
         RowBlockLayout::even(10, 3, 2)
     }
 
+    /// A store with a per-session budget (spill file in the temp dir).
+    fn budgeted(rank: usize, budget: u64) -> MatrixStore {
+        MatrixStore::with_storage(
+            rank,
+            &StorageConfig {
+                budget_bytes: budget,
+                total_bytes: 0,
+                spill_dir: String::new(),
+            },
+            Arc::new(StorageMetrics::new()),
+        )
+    }
+
     #[test]
     fn ingest_flow() {
         let s = MatrixStore::new(1); // slot 1 owns rows [5, 10)
@@ -495,7 +1385,7 @@ mod tests {
         // reads are in global coordinates
         assert_eq!(s.read_rows(7, 9, 1).unwrap(), vec![2.0, 2.0, 2.0]);
         // zero-copy span points at the same rows
-        assert_eq!(b.read_span(9, 1).unwrap(), &[2.0, 2.0, 2.0]);
+        assert_eq!(&b.read_span(9, 1).unwrap()[..], &[2.0, 2.0, 2.0]);
     }
 
     #[test]
@@ -635,5 +1525,178 @@ mod tests {
         for row in 0..64u64 {
             assert_eq!(s.read_rows(9, row, 1).unwrap(), vec![row as f64; 4]);
         }
+    }
+
+    // ---- out-of-core storage plane ----
+
+    /// One layout2() block on slot 0 is 5 rows × 3 cols × 8 B = 120 B.
+    const BLOCK_BYTES: u64 = 120;
+
+    fn filled(v: f64) -> LocalMatrix {
+        LocalMatrix::from_fn(5, 3, |_, _| v)
+    }
+
+    #[test]
+    fn insert_over_budget_spills_lru_and_reads_cycle_back() {
+        // budget fits exactly two blocks; the third insert must park the
+        // least-recently-used one on disk
+        let s = budgeted(0, 2 * BLOCK_BYTES);
+        s.insert(1, "A", layout2(), filled(1.0), 0, SID).unwrap();
+        s.insert(2, "B", layout2(), filled(2.0), 0, SID).unwrap();
+        // touch B so A is the LRU victim
+        let _ = s.read_rows(2, 0, 1).unwrap();
+        s.insert(3, "C", layout2(), filled(3.0), 0, SID).unwrap();
+        assert!(s.get(1).unwrap().is_spilled(), "LRU block A should spill");
+        assert!(!s.get(2).unwrap().is_spilled());
+        assert!(!s.get(3).unwrap().is_spilled());
+        let u = s.session_usage(SID);
+        assert_eq!(u.bytes_resident, 2 * BLOCK_BYTES);
+        assert_eq!(u.bytes_spilled, BLOCK_BYTES);
+        assert_eq!(s.spill_segments(), 1);
+
+        // spilled bytes read back intact — transiently (no budget room)
+        assert_eq!(s.read_rows(1, 4, 1).unwrap(), vec![1.0, 1.0, 1.0]);
+        assert!(s.get(1).unwrap().is_spilled(), "no room: stays spilled");
+
+        // free C → room opens → the next read pages A back in
+        assert!(s.free(3));
+        assert_eq!(s.read_rows(1, 0, 1).unwrap(), vec![1.0, 1.0, 1.0]);
+        assert!(!s.get(1).unwrap().is_spilled(), "page-in should promote");
+        assert_eq!(s.spill_segments(), 0);
+        let u = s.session_usage(SID);
+        assert_eq!(u.bytes_resident, 2 * BLOCK_BYTES);
+        assert_eq!(u.bytes_spilled, 0);
+
+        let m = s.storage_metrics().snapshot();
+        assert_eq!(m.blocks_spilled, 1);
+        assert_eq!(m.bytes_spilled, BLOCK_BYTES);
+        assert_eq!(m.blocks_paged_in, 1);
+        assert!(m.bytes_read_spilled > 0);
+        assert!(m.cycled());
+    }
+
+    #[test]
+    fn alloc_rejects_what_cannot_fit() {
+        // a single allocation bigger than the whole budget is refused
+        // up front with an actionable error
+        let s = budgeted(0, BLOCK_BYTES - 8);
+        let err = s.alloc(1, "X", layout2(), 0, SID).unwrap_err();
+        assert!(err.to_string().contains("budget"), "got: {err}");
+        assert!(s.is_empty());
+        assert_eq!(s.session_usage(SID), SessionUsage::default());
+    }
+
+    #[test]
+    fn alloc_spills_sealed_blocks_to_make_room() {
+        // two sealed blocks fill the budget; a new ingest alloc forces
+        // both out (ingest buffers cannot spill, sealed ones must)
+        let s = budgeted(0, 2 * BLOCK_BYTES);
+        s.insert(1, "A", layout2(), filled(1.0), 0, SID).unwrap();
+        s.insert(2, "B", layout2(), filled(2.0), 0, SID).unwrap();
+        s.alloc(3, "C", layout2(), 0, SID).unwrap();
+        let spilled = [1, 2]
+            .iter()
+            .filter(|id| s.get(**id).unwrap().is_spilled())
+            .count();
+        assert_eq!(spilled, 1, "exactly one sealed block makes room");
+        // but with only unsealed blocks left, the next alloc cannot fit
+        s.alloc(4, "D", layout2(), 0, SID).unwrap();
+        assert!(s.alloc(5, "E", layout2(), 0, SID).is_err());
+        // sealing C frees nothing (still heap) — sealing makes it
+        // spillable, so the alloc now succeeds
+        s.seal(3).unwrap();
+        s.alloc(5, "E", layout2(), 0, SID).unwrap();
+    }
+
+    #[test]
+    fn budgets_are_per_session() {
+        let s = budgeted(0, BLOCK_BYTES);
+        s.insert(1, "A", layout2(), filled(1.0), 0, 100).unwrap();
+        // a different session has its own budget: nothing spills
+        s.insert(2, "B", layout2(), filled(2.0), 0, 200).unwrap();
+        assert!(!s.get(1).unwrap().is_spilled());
+        assert!(!s.get(2).unwrap().is_spilled());
+        assert_eq!(s.session_usage(100).bytes_resident, BLOCK_BYTES);
+        assert_eq!(s.session_usage(200).bytes_resident, BLOCK_BYTES);
+    }
+
+    #[test]
+    fn free_session_releases_budget_and_spill_segments() {
+        // the teardown satellite: budget charges AND spill segments are
+        // gone after free_session
+        let s = budgeted(0, BLOCK_BYTES);
+        s.insert(1, "A", layout2(), filled(1.0), 0, SID).unwrap();
+        s.insert(2, "B", layout2(), filled(2.0), 0, SID).unwrap();
+        assert_eq!(s.spill_segments(), 1);
+        assert_ne!(s.session_usage(SID), SessionUsage::default());
+        assert_eq!(s.free_session(SID), 2);
+        assert_eq!(s.spill_segments(), 0);
+        assert_eq!(s.session_usage(SID), SessionUsage::default());
+        assert!(s.usage().is_empty());
+        // the freed budget is immediately reusable
+        s.insert(3, "C", layout2(), filled(3.0), 0, SID).unwrap();
+        assert!(!s.get(3).unwrap().is_spilled());
+    }
+
+    #[test]
+    fn spilled_snapshot_round_trips_exact_bits() {
+        let s = budgeted(0, BLOCK_BYTES);
+        let a = LocalMatrix::from_fn(5, 3, |i, j| (i * 3 + j) as f64 * 1.25 - 7.0);
+        s.insert(1, "A", layout2(), a.clone(), 0, SID).unwrap();
+        s.insert(2, "B", layout2(), filled(0.5), 0, SID).unwrap(); // spills A
+        assert!(s.get(1).unwrap().is_spilled());
+        let (_, got) = s.get(1).unwrap().snapshot().unwrap();
+        assert_eq!(got.data(), a.data(), "spill round-trip must be bit-exact");
+    }
+
+    #[test]
+    fn concurrent_readers_survive_a_racing_spill() {
+        // readers holding Span guards keep valid bytes while the block
+        // is evicted under them
+        let s = Arc::new(budgeted(0, 2 * BLOCK_BYTES));
+        let a = LocalMatrix::from_fn(5, 3, |i, j| (i + j) as f64);
+        s.insert(1, "A", layout2(), a.clone(), 0, SID).unwrap();
+        let span = s.get(1).unwrap().read_span(0, 5).unwrap(); // pin pre-spill bytes
+        s.insert(2, "B", layout2(), filled(1.0), 0, SID).unwrap();
+        s.insert(3, "C", layout2(), filled(2.0), 0, SID).unwrap(); // forces A out
+        assert!(s.get(1).unwrap().is_spilled());
+        assert_eq!(&span[..], a.data(), "guard outlives eviction");
+        drop(span);
+        // and fresh reads see the same bytes off the spill file
+        assert_eq!(s.read_rows(1, 0, 5).unwrap(), a.data());
+    }
+
+    #[cfg(all(unix, target_endian = "little"))]
+    #[test]
+    fn mapped_blocks_serve_spans_and_stay_budget_exempt() {
+        let dir = std::env::temp_dir().join("alchemist-store-mapped-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("m-{}.h5sim", std::process::id()));
+        let m = LocalMatrix::from_fn(10, 3, |i, j| (i * 31 + j) as f64);
+        crate::hdf5sim::write_matrix(&path, &m).unwrap();
+
+        // budget smaller than one block: a heap insert would spill, but
+        // the mapped block is exempt
+        let s = budgeted(0, 8);
+        let map = Arc::new(MappedMatrix::open(&path).unwrap());
+        s.insert_mapped(1, "A", layout2(), map, 1, SID).unwrap(); // slot 1: rows [5,10)
+        let b = s.get(1).unwrap();
+        assert!(b.is_mapped());
+        assert!(b.sealed());
+        assert_eq!(b.rows_received(), 5);
+        // global row 7 = file row 7
+        assert_eq!(&b.read_span(7, 1).unwrap()[..], m.slice_rows(7, 8).data());
+        let (_, local) = b.snapshot().unwrap();
+        assert_eq!(local.data(), m.slice_rows(5, 10).data());
+        let u = s.session_usage(SID);
+        assert_eq!(u.bytes_resident, 0);
+        assert_eq!(u.bytes_mapped, 5 * 3 * 8);
+        assert_eq!(s.storage_metrics().snapshot().blocks_mapped, 1);
+        // out-of-range rows (other slot's) still rejected
+        assert!(b.read_span(0, 1).is_err());
+        drop(b);
+        s.free_session(SID);
+        assert_eq!(s.session_usage(SID), SessionUsage::default());
+        std::fs::remove_file(&path).ok();
     }
 }

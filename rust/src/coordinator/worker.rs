@@ -267,14 +267,25 @@ fn check_session(owner: u64, conn_session: Option<u64>, id: u64) -> crate::Resul
 enum Action {
     Nothing,
     Reply(DataMsg),
-    ServePull { matrix_id: u64, start_row: u64, nrows: u32 },
+    ServePull {
+        matrix_id: u64,
+        start_row: u64,
+        nrows: u32,
+        start_col: u64,
+        sel_cols: u32,
+    },
     Close,
 }
 
 /// Stream one ranged `PullRows` reply: validate the whole span up front
 /// (the stream is all-or-nothing — a single `DataError`, or `RowsData`*
-/// followed by `PullDone`), then write borrowed spans of the sealed block
-/// straight into the socket buffer, `frame_rows` rows per frame.
+/// followed by `PullDone`), then write spans of the sealed block straight
+/// into the socket buffer, `frame_rows` rows per frame. Heap and mapped
+/// payloads are served zero-copy (the frame borrows the block / the page
+/// cache); spilled payloads stream frame-sized reads off the spill file,
+/// so a pull never materializes more than one frame of a spilled block.
+/// A v7 column range (`sel_cols > 0`) gathers the selected columns into a
+/// reusable scratch buffer — one copy, no per-frame allocation.
 fn serve_pull(
     shared: &WorkerShared,
     framed: &mut Framed<TcpStream, TcpStream>,
@@ -282,33 +293,52 @@ fn serve_pull(
     matrix_id: u64,
     start_row: u64,
     nrows: u32,
+    start_col: u64,
+    sel_cols: u32,
     frame_rows: usize,
 ) -> crate::Result<()> {
-    let prep = (|| -> crate::Result<(Arc<super::store::Block>, usize)> {
+    let prep = (|| -> crate::Result<(Arc<super::store::Block>, usize, usize, usize)> {
         anyhow::ensure!(nrows > 0, "zero-row pull of matrix {matrix_id}");
         let block = shared.store.get(matrix_id)?;
         check_session(block.session, conn_session, matrix_id)?;
-        // whole-range validation (sealed + bounds) before the first frame
-        block.read_span(start_row, nrows as usize)?;
+        // whole-range validation (sealed + bounds) before the first
+        // frame, without touching payload bytes (a spilled block must
+        // not be read twice just to validate)
+        block.validate_span(start_row, nrows as usize)?;
+        let ncols = block.layout.cols;
+        let (col0, width) = if sel_cols == 0 {
+            anyhow::ensure!(
+                start_col == 0,
+                "matrix {matrix_id}: start_col {start_col} without sel_cols"
+            );
+            (0usize, ncols)
+        } else {
+            let end_col = start_col
+                .checked_add(sel_cols as u64)
+                .ok_or_else(|| anyhow::anyhow!("column range overflows"))?;
+            anyhow::ensure!(
+                end_col <= ncols as u64,
+                "matrix {matrix_id}: columns [{start_col}, {end_col}) outside \
+                 width {ncols}"
+            );
+            (start_col as usize, sel_cols as usize)
+        };
         // clamp rows-per-frame so header + payload stays under the frame
-        // cap for any width: a wide matrix must fail HERE (one clean
-        // DataError) or not at all — never mid-stream after RowsData
-        // frames were queued, which would break the all-or-nothing reply
-        // contract with an opaque I/O error
-        let cap_rows = max_rows_per_frame_for(
-            block.layout.cols,
-            crate::net::MAX_FRAME as usize,
-        )
-        .ok_or_else(|| {
-            anyhow::anyhow!(
-                "matrix {matrix_id}: one row of {} cols exceeds the {} byte frame cap",
-                block.layout.cols,
-                crate::net::MAX_FRAME,
-            )
-        })?;
-        Ok((block, frame_rows.clamp(1, cap_rows)))
+        // cap for the SELECTED width: a wide pull must fail HERE (one
+        // clean DataError) or not at all — never mid-stream after
+        // RowsData frames were queued, which would break the
+        // all-or-nothing reply contract with an opaque I/O error
+        let cap_rows = max_rows_per_frame_for(width, crate::net::MAX_FRAME as usize)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "matrix {matrix_id}: one row of {width} cols exceeds the {} \
+                     byte frame cap",
+                    crate::net::MAX_FRAME,
+                )
+            })?;
+        Ok((block, col0, width, frame_rows.clamp(1, cap_rows)))
     })();
-    let (block, frame_rows) = match prep {
+    let (block, col0, width, frame_rows) = match prep {
         Ok(b) => b,
         Err(e) => {
             return framed.send_data_flush(&DataMsg::DataError { message: e.to_string() })
@@ -317,19 +347,40 @@ fn serve_pull(
     // ncols comes from the block's layout, never derived from payload
     // lengths (a zero-row request cannot reach here anyway)
     let ncols = block.layout.cols;
-    let span = block
-        .read_span(start_row, nrows as usize)
-        .expect("span validated above");
+    // column-gather scratch, reused across frames (full-width pulls
+    // never touch it — their frames borrow the span directly)
+    let mut scratch: Vec<f64> = Vec::new();
     let mut row = start_row;
-    for chunk in span.chunks(frame_rows * ncols.max(1)) {
-        let n = (chunk.len() / ncols.max(1)) as u32;
-        framed.send_data_ref(&DataMsgRef::RowsData {
-            matrix_id,
-            start_row: row,
-            nrows: n,
-            ncols: ncols as u32,
-            data: chunk,
-        })?;
+    let end = start_row + nrows as u64;
+    while row < end {
+        let n = frame_rows.min((end - row) as usize);
+        // bounds were validated above, so a failure here is spill-file
+        // I/O — unrecoverable mid-stream, so the connection drops (the
+        // client sees a truncated reply, not silent corruption)
+        let span = block.read_span(row, n)?;
+        if width == ncols {
+            framed.send_data_ref(&DataMsgRef::RowsData {
+                matrix_id,
+                start_row: row,
+                nrows: n as u32,
+                ncols: ncols as u32,
+                data: &span[..],
+            })?;
+        } else {
+            scratch.clear();
+            scratch.reserve(n * width);
+            for r in 0..n {
+                let base = r * ncols + col0;
+                scratch.extend_from_slice(&span[base..base + width]);
+            }
+            framed.send_data_ref(&DataMsgRef::RowsData {
+                matrix_id,
+                start_row: row,
+                nrows: n as u32,
+                ncols: width as u32,
+                data: &scratch,
+            })?;
+        }
         row += n as u64;
     }
     framed.send_data(&DataMsg::PullDone { matrix_id })?;
@@ -444,8 +495,8 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
                             }
                         }
                     }
-                    DataMsg::PullRows { matrix_id, start_row, nrows } => {
-                        Action::ServePull { matrix_id, start_row, nrows }
+                    DataMsg::PullRows { matrix_id, start_row, nrows, start_col, sel_cols } => {
+                        Action::ServePull { matrix_id, start_row, nrows, start_col, sel_cols }
                     }
                     DataMsg::DataBye => Action::Close,
                     other => Action::Reply(DataMsg::DataError {
@@ -462,7 +513,7 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
                     return;
                 }
             }
-            Action::ServePull { matrix_id, start_row, nrows } => {
+            Action::ServePull { matrix_id, start_row, nrows, start_col, sel_cols } => {
                 if serve_pull(
                     shared,
                     &mut framed,
@@ -470,6 +521,8 @@ pub fn handle_data_conn(shared: &WorkerShared, stream: TcpStream, cfg: &Config) 
                     matrix_id,
                     start_row,
                     nrows,
+                    start_col,
+                    sel_cols,
                     frame_rows,
                 )
                 .is_err()
@@ -496,4 +549,63 @@ pub fn alloc_group(
         workers[rank].store.alloc(id, name, layout.clone(), slot, session_id)?;
     }
     Ok(())
+}
+
+/// Driver-side helper for v7 `LoadMatrix`: register an `hdf5sim` file as
+/// a matrix across one session's worker group without any client-side
+/// payload traffic. Preferred path: `mmap` the file once per process and
+/// register each worker's row range as a mapped block (zero heap bytes,
+/// budget-exempt — the page cache IS the storage). Hosts where the
+/// in-place mapping is unavailable (non-unix, big-endian) fall back to
+/// buffered per-shard reads into ordinary heap blocks, which stay
+/// subject to the session budget. All-or-nothing: a failure on any rank
+/// rolls back the ranks already registered.
+pub fn load_group(
+    workers: &[Arc<WorkerShared>],
+    ranks: &[usize],
+    session_id: u64,
+    id: u64,
+    name: &str,
+    path: &std::path::Path,
+    layout: &RowBlockLayout,
+) -> crate::Result<()> {
+    let result = (|| -> crate::Result<()> {
+        match crate::hdf5sim::MappedMatrix::open(path) {
+            Ok(map) => {
+                let map = Arc::new(map);
+                for (slot, &rank) in ranks.iter().enumerate() {
+                    workers[rank].store.insert_mapped(
+                        id,
+                        name,
+                        layout.clone(),
+                        map.clone(),
+                        slot,
+                        session_id,
+                    )?;
+                }
+            }
+            Err(e) => {
+                log::info!("mmap ingest unavailable for {path:?} ({e}); buffered load");
+                for (slot, &rank) in ranks.iter().enumerate() {
+                    let (lo, hi) = layout.ranges[slot];
+                    let local = crate::hdf5sim::read_rows(path, lo, hi)?;
+                    workers[rank].store.insert(
+                        id,
+                        name,
+                        layout.clone(),
+                        local,
+                        slot,
+                        session_id,
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        for &rank in ranks {
+            workers[rank].store.free(id);
+        }
+    }
+    result
 }

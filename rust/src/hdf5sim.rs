@@ -3,13 +3,31 @@
 //! The ocean experiments (Table 5 / Figure 3) compare loading the data in
 //! Spark vs. loading it directly in Alchemist from HDF5. What matters is
 //! the *path* (file → worker shards without a trip through the client);
-//! the format is a 40-byte header + row-major f64 payload, and workers can
+//! the format is a 32-byte header + row-major f64 payload, and workers can
 //! read their row ranges independently (`read_rows`), which is the
 //! parallel-read property the experiment leans on.
 //!
 //! Layout (all little-endian):
 //! `magic "ALCH5SIM" | version u32 | reserved u32 | rows u64 | cols u64 |
 //!  payload rows*cols*8 bytes`.
+//!
+//! Two read paths:
+//!
+//! * [`read_rows`] — seek + buffered read into a heap [`LocalMatrix`]
+//!   (works everywhere, converts on big-endian hosts);
+//! * [`MappedMatrix`] — the v7 direct-ingest path: the file is `mmap`ed
+//!   read-only and the payload viewed in place as `&[f64]`, so a worker's
+//!   shard of a `LoadMatrix` ingest occupies no heap at all and pull
+//!   replies stream file bytes from the page cache straight into
+//!   `writev` (see `docs/storage.md`). Only available on little-endian
+//!   unix hosts — everywhere else [`MappedMatrix::open`] returns a clean
+//!   error and callers fall back to [`read_rows`] (which converts), so a
+//!   big-endian host can never misread the little-endian payload.
+//!
+//! Writers go through [`write_payload_le`], never a native-endian
+//! `f64 → u8` transmute: the header doc above promises little-endian
+//! bytes on disk, and the seed's bulk write silently broke that promise
+//! on big-endian hosts.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -21,24 +39,83 @@ use crate::distmat::LocalMatrix;
 
 const MAGIC: &[u8; 8] = b"ALCH5SIM";
 const VERSION: u32 = 1;
-const HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8;
+/// Header size: magic(8) + version(4) + reserved(4) + rows(8) + cols(8).
+pub const HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8;
 
-/// Write a matrix to `path`.
-pub fn write_matrix(path: &Path, m: &LocalMatrix) -> crate::Result<()> {
-    let file = File::create(path).with_context(|| format!("creating {path:?}"))?;
-    let mut w = BufWriter::with_capacity(1 << 20, file);
+/// Write `xs` to `w` as little-endian bytes: one bulk write on
+/// little-endian targets, per-element conversion on big-endian ones.
+fn write_payload_le(w: &mut impl Write, xs: &[f64]) -> std::io::Result<()> {
+    #[cfg(target_endian = "little")]
+    {
+        w.write_all(crate::protocol::wire::f64s_as_le_bytes(xs))
+    }
+    #[cfg(target_endian = "big")]
+    {
+        for x in xs {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+fn write_header(w: &mut impl Write, rows: usize, cols: usize) -> std::io::Result<()> {
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
     w.write_all(&0u32.to_le_bytes())?;
-    w.write_all(&(m.rows() as u64).to_le_bytes())?;
-    w.write_all(&(m.cols() as u64).to_le_bytes())?;
-    // Safety: f64 -> u8 view for bulk write.
-    let bytes = unsafe {
-        std::slice::from_raw_parts(m.data().as_ptr() as *const u8, m.data().len() * 8)
-    };
-    w.write_all(bytes)?;
-    w.flush()?;
+    w.write_all(&(rows as u64).to_le_bytes())?;
+    w.write_all(&(cols as u64).to_le_bytes())?;
     Ok(())
+}
+
+/// Write a matrix to `path`.
+pub fn write_matrix(path: &Path, m: &LocalMatrix) -> crate::Result<()> {
+    let mut w = Writer::create(path, m.rows(), m.cols())?;
+    w.append(m)?;
+    w.finish()
+}
+
+/// Incremental writer: header up front, then row chunks in order. This is
+/// how datasets larger than RAM are authored (`OceanSpec::write_file`
+/// generates and appends one bounded chunk at a time).
+pub struct Writer {
+    w: BufWriter<File>,
+    rows: usize,
+    cols: usize,
+    written_rows: usize,
+}
+
+impl Writer {
+    pub fn create(path: &Path, rows: usize, cols: usize) -> crate::Result<Self> {
+        let file = File::create(path).with_context(|| format!("creating {path:?}"))?;
+        let mut w = BufWriter::with_capacity(1 << 20, file);
+        write_header(&mut w, rows, cols)?;
+        Ok(Writer { w, rows, cols, written_rows: 0 })
+    }
+
+    /// Append the next chunk of rows (must arrive in order, widths equal).
+    pub fn append(&mut self, chunk: &LocalMatrix) -> crate::Result<()> {
+        anyhow::ensure!(chunk.cols() == self.cols, "chunk width mismatch");
+        anyhow::ensure!(
+            self.written_rows + chunk.rows() <= self.rows,
+            "chunk overflows the declared {} rows",
+            self.rows
+        );
+        write_payload_le(&mut self.w, chunk.data())?;
+        self.written_rows += chunk.rows();
+        Ok(())
+    }
+
+    /// Flush and verify every declared row landed.
+    pub fn finish(mut self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.written_rows == self.rows,
+            "wrote {} of {} declared rows",
+            self.written_rows,
+            self.rows
+        );
+        self.w.flush()?;
+        Ok(())
+    }
 }
 
 /// Matrix dimensions from the header.
@@ -63,6 +140,26 @@ pub fn read_header(path: &Path) -> crate::Result<(usize, usize)> {
     Ok((rows, cols))
 }
 
+/// Header dims plus a whole-file integrity check: the byte length on disk
+/// must match `HEADER_BYTES + rows·cols·8` exactly. `LoadMatrix` calls
+/// this *before* any worker registers a block, so a truncated or padded
+/// file is rejected up front instead of surfacing as a short read (or a
+/// short mmap → SIGBUS) on one rank mid-ingest.
+pub fn validate(path: &Path) -> crate::Result<(usize, usize)> {
+    let (rows, cols) = read_header(path)?;
+    let payload = (rows as u64)
+        .checked_mul(cols as u64)
+        .and_then(|e| e.checked_mul(8))
+        .ok_or_else(|| anyhow::anyhow!("{path:?} header dims overflow"))?;
+    let want = HEADER_BYTES + payload;
+    let got = std::fs::metadata(path)?.len();
+    anyhow::ensure!(
+        got == want,
+        "{path:?} is corrupt: {got} bytes on disk, header declares {rows}x{cols} ({want} bytes)"
+    );
+    Ok((rows, cols))
+}
+
 /// Read rows `[start, end)` — workers call this concurrently with their
 /// own ranges (independent file handles, seek + sequential read).
 pub fn read_rows(path: &Path, start: usize, end: usize) -> crate::Result<LocalMatrix> {
@@ -77,6 +174,11 @@ pub fn read_rows(path: &Path, start: usize, end: usize) -> crate::Result<LocalMa
     };
     let mut r = BufReader::with_capacity(1 << 20, file);
     r.read_exact(bytes).context("reading row payload")?;
+    // the wire bytes are little-endian by contract; swap on BE hosts
+    #[cfg(target_endian = "big")]
+    for x in &mut data {
+        *x = f64::from_bits(x.to_bits().swap_bytes());
+    }
     Ok(LocalMatrix::from_data(end - start, cols, data))
 }
 
@@ -84,6 +186,153 @@ pub fn read_rows(path: &Path, start: usize, end: usize) -> crate::Result<LocalMa
 pub fn read_matrix(path: &Path) -> crate::Result<LocalMatrix> {
     let (rows, _) = read_header(path)?;
     read_rows(path, 0, rows)
+}
+
+// ---- mmap-backed open path (v7 direct ingest) ----
+
+/// A read-only memory mapping of an ALCH5SIM file whose payload is viewed
+/// in place as `&[f64]`.
+///
+/// The mapping is page-cache-backed: touching the slice faults pages in,
+/// and the kernel evicts them under memory pressure — which is exactly
+/// the out-of-core property `LoadMatrix` blocks need (`docs/storage.md`).
+/// Dropping the value unmaps.
+///
+/// Only constructible on little-endian unix hosts (the in-place `&[f64]`
+/// view is only correct when file byte order == native byte order); on
+/// any other host [`MappedMatrix::open`] fails cleanly and callers take
+/// the converting [`read_rows`] fallback.
+pub struct MappedMatrix {
+    base: *mut u8,
+    map_len: usize,
+    rows: usize,
+    cols: usize,
+}
+
+// Safety: the mapping is read-only (PROT_READ) for its whole lifetime and
+// the raw pointer is never handed out mutably; concurrent readers on any
+// thread see immutable file bytes.
+unsafe impl Send for MappedMatrix {}
+unsafe impl Sync for MappedMatrix {}
+
+#[cfg(unix)]
+mod sys {
+    //! Direct glibc/libSystem bindings for the two calls we need. The
+    //! vendor set has no `libc` crate; every unix Rust binary already
+    //! links the platform C library, so declaring the symbols is enough.
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub fn map_failed(p: *mut c_void) -> bool {
+        p as isize == -1
+    }
+}
+
+impl MappedMatrix {
+    /// Map `path` read-only and validate it end to end (header, version,
+    /// exact byte length, payload alignment).
+    #[cfg(all(unix, target_endian = "little"))]
+    pub fn open(path: &Path) -> crate::Result<Self> {
+        use std::os::unix::io::AsRawFd;
+
+        let (rows, cols) = validate(path)?;
+        let map_len = (HEADER_BYTES as usize) + rows * cols * 8;
+        let file = File::open(path).with_context(|| format!("opening {path:?}"))?;
+        // Safety: len > 0 (header is non-empty), fd is a live open file,
+        // and we claim the returned region for exactly `map_len` bytes
+        // until munmap in Drop.
+        let base = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                map_len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if sys::map_failed(base) {
+            anyhow::bail!("mmap of {path:?} ({map_len} bytes) failed");
+        }
+        // fd can close now; the mapping keeps the file content reachable
+        drop(file);
+        let base = base as *mut u8;
+        // page-aligned base + 32-byte header keeps the payload 8-aligned;
+        // assert rather than assume so a format change can't create a UB
+        // f64 view
+        if (base as usize + HEADER_BYTES as usize) % std::mem::align_of::<f64>() != 0 {
+            // Safety: unmapping the region we just mapped.
+            unsafe { sys::munmap(base as *mut _, map_len) };
+            anyhow::bail!("mmap of {path:?} left the payload misaligned for f64");
+        }
+        Ok(MappedMatrix { base, map_len, rows, cols })
+    }
+
+    /// Non-mappable hosts (non-unix, or big-endian where the in-place view
+    /// would misread): fail cleanly so callers fall back to [`read_rows`].
+    #[cfg(not(all(unix, target_endian = "little")))]
+    pub fn open(path: &Path) -> crate::Result<Self> {
+        let _ = path;
+        anyhow::bail!(
+            "mmap-backed ingest requires a little-endian unix host; \
+             falling back to buffered reads"
+        )
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The whole payload as f64s, in place (no copy).
+    pub fn data(&self) -> &[f64] {
+        // Safety: open() validated length and alignment; the region stays
+        // mapped and read-only until Drop, and `&self` borrows it.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.base.add(HEADER_BYTES as usize) as *const f64,
+                self.rows * self.cols,
+            )
+        }
+    }
+
+    /// Rows `[start, end)` as an in-place slice.
+    pub fn row_span(&self, start: usize, end: usize) -> crate::Result<&[f64]> {
+        anyhow::ensure!(start <= end && end <= self.rows, "row range out of bounds");
+        Ok(&self.data()[start * self.cols..end * self.cols])
+    }
+
+    /// Payload bytes (for accounting; none of them are heap).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.rows as u64) * (self.cols as u64) * 8
+    }
+}
+
+impl Drop for MappedMatrix {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.map_len > 0 {
+            // Safety: exactly the region open() mapped.
+            unsafe { sys::munmap(self.base as *mut _, self.map_len) };
+        }
+    }
 }
 
 #[cfg(test)]
@@ -104,9 +353,51 @@ mod tests {
         let path = tmp("roundtrip.bin");
         write_matrix(&path, &m).unwrap();
         assert_eq!(read_header(&path).unwrap(), (37, 5));
+        assert_eq!(validate(&path).unwrap(), (37, 5));
         assert_eq!(read_matrix(&path).unwrap(), m);
         assert_eq!(read_rows(&path, 10, 20).unwrap(), m.slice_rows(10, 20));
         assert_eq!(read_rows(&path, 0, 0).unwrap().rows(), 0);
+    }
+
+    #[test]
+    fn payload_bytes_are_little_endian_on_disk() {
+        // the on-disk contract, independent of host endianness: payload
+        // byte i*8.. is to_le_bytes of element i
+        let m = LocalMatrix::from_data(1, 3, vec![1.5, -2.25, 1e300]);
+        let path = tmp("le.bin");
+        write_matrix(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let payload = &bytes[HEADER_BYTES as usize..];
+        for (i, x) in m.data().iter().enumerate() {
+            assert_eq!(&payload[i * 8..(i + 1) * 8], &x.to_le_bytes());
+        }
+    }
+
+    #[test]
+    fn chunked_writer_matches_one_shot() {
+        let mut rng = Rng::new(9);
+        let m = LocalMatrix::from_fn(23, 4, |_, _| rng.normal());
+        let one = tmp("one-shot.bin");
+        write_matrix(&one, &m).unwrap();
+        let chunked = tmp("chunked.bin");
+        let mut w = Writer::create(&chunked, 23, 4).unwrap();
+        for (a, b) in [(0usize, 10usize), (10, 11), (11, 23)] {
+            w.append(&m.slice_rows(a, b)).unwrap();
+        }
+        w.finish().unwrap();
+        assert_eq!(std::fs::read(&one).unwrap(), std::fs::read(&chunked).unwrap());
+    }
+
+    #[test]
+    fn chunked_writer_enforces_declared_rows() {
+        let path = tmp("short.bin");
+        let mut w = Writer::create(&path, 5, 2).unwrap();
+        w.append(&LocalMatrix::zeros(3, 2)).unwrap();
+        assert!(w.finish().is_err()); // 3 of 5 rows
+        let mut w = Writer::create(&path, 5, 2).unwrap();
+        assert!(w.append(&LocalMatrix::zeros(6, 2)).is_err()); // overflow
+        let mut w = Writer::create(&path, 5, 2).unwrap();
+        assert!(w.append(&LocalMatrix::zeros(5, 3)).is_err()); // width
     }
 
     #[test]
@@ -138,5 +429,47 @@ mod tests {
         let path2 = tmp("missing-range.bin");
         write_matrix(&path2, &LocalMatrix::zeros(3, 2)).unwrap();
         assert!(read_rows(&path2, 2, 5).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_truncated_and_padded_files() {
+        let mut rng = Rng::new(6);
+        let m = LocalMatrix::from_fn(8, 4, |_, _| rng.normal());
+        let path = tmp("truncated.bin");
+        write_matrix(&path, &m).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        assert!(validate(&path).unwrap_err().to_string().contains("corrupt"));
+        let mut padded = full.clone();
+        padded.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&path, &padded).unwrap();
+        assert!(validate(&path).is_err());
+        std::fs::write(&path, &full).unwrap();
+        assert_eq!(validate(&path).unwrap(), (8, 4));
+    }
+
+    #[cfg(all(unix, target_endian = "little"))]
+    #[test]
+    fn mapped_view_matches_buffered_read() {
+        let mut rng = Rng::new(7);
+        let m = LocalMatrix::from_fn(33, 6, |_, _| rng.normal());
+        let path = tmp("mapped.bin");
+        write_matrix(&path, &m).unwrap();
+        let map = MappedMatrix::open(&path).unwrap();
+        assert_eq!((map.rows(), map.cols()), (33, 6));
+        assert_eq!(map.data(), m.data());
+        assert_eq!(map.row_span(5, 12).unwrap(), &m.data()[5 * 6..12 * 6]);
+        assert!(map.row_span(30, 34).is_err());
+        assert_eq!(map.payload_bytes(), 33 * 6 * 8);
+    }
+
+    #[cfg(all(unix, target_endian = "little"))]
+    #[test]
+    fn mapped_open_rejects_truncated_file() {
+        let path = tmp("mapped-truncated.bin");
+        write_matrix(&path, &LocalMatrix::zeros(4, 4)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 1]).unwrap();
+        assert!(MappedMatrix::open(&path).is_err());
     }
 }

@@ -46,6 +46,47 @@ pub struct SvdResult {
 
 const TAG: u64 = 0x5644_0000;
 
+/// Row-panel access to this rank's share of A — the out-of-core seam.
+/// In-memory runs hand the whole `LocalMatrix` as one borrowed panel;
+/// streaming runs (`coordinator::store::Block`) materialize bounded row
+/// spans on demand, so the SVD never needs the full block on the heap.
+pub trait RowPanels {
+    /// Rows this rank holds.
+    fn rows(&self) -> usize;
+    /// Column count (identical on every rank).
+    fn cols(&self) -> usize;
+    /// Materialize local rows `[start, start + n)` as an n×cols matrix.
+    /// Borrowed when the source already holds them contiguously in
+    /// memory, owned when they must be gathered (mapped / spilled
+    /// blocks, partial slices).
+    fn panel(&self, start: usize, n: usize)
+        -> crate::Result<std::borrow::Cow<'_, LocalMatrix>>;
+}
+
+impl RowPanels for LocalMatrix {
+    fn rows(&self) -> usize {
+        LocalMatrix::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        LocalMatrix::cols(self)
+    }
+
+    fn panel(
+        &self,
+        start: usize,
+        n: usize,
+    ) -> crate::Result<std::borrow::Cow<'_, LocalMatrix>> {
+        if start == 0 && n == LocalMatrix::rows(self) {
+            // whole-block panel: zero-copy, so the single-panel run is
+            // exactly the classic in-memory algorithm
+            Ok(std::borrow::Cow::Borrowed(self))
+        } else {
+            Ok(std::borrow::Cow::Owned(self.slice_rows(start, start + n)))
+        }
+    }
+}
+
 /// SPMD truncated SVD of the row-distributed matrix whose local block is
 /// `a_local` (all ranks must pass the same `opts`). Runs under a detached
 /// [`TaskScope`] — never cancelled, progress unobserved.
@@ -70,7 +111,30 @@ pub fn truncated_svd_scoped(
     opts: &SvdOptions,
     scope: &TaskScope,
 ) -> crate::Result<SvdResult> {
-    let k_dim = a_local.cols();
+    // one whole-block panel — borrowed, so this is the classic in-memory
+    // algorithm verbatim (identical engine calls, identical bits)
+    truncated_svd_panels(comm, engine, a_local, 0, opts, scope)
+}
+
+/// Streaming truncated SVD over [`RowPanels`] (the out-of-core path):
+/// `panel_rows` bounds how many of this rank's rows are materialized at
+/// once (0 = the whole block as one panel). Each Lanczos step applies
+/// the Gram operator panel by panel — `w = Σᵢ AᵢᵀAᵢ·v` — and the final
+/// `U = A·V·Σ⁻¹` is recovered panel by panel too, so peak residency is
+/// one panel plus the K×K-scale replicated state. With one panel the
+/// arithmetic (and therefore every output bit) matches
+/// [`truncated_svd_scoped`]; with several, only the summation order of
+/// the Gram products differs.
+pub fn truncated_svd_panels(
+    comm: &dyn Communicator,
+    engine: &mut dyn Engine,
+    a: &dyn RowPanels,
+    panel_rows: usize,
+    opts: &SvdOptions,
+    scope: &TaskScope,
+) -> crate::Result<SvdResult> {
+    let k_dim = a.cols();
+    let local_rows = a.rows();
     anyhow::ensure!(opts.rank >= 1, "rank must be >= 1");
     anyhow::ensure!(
         opts.rank <= k_dim,
@@ -94,9 +158,15 @@ pub fn truncated_svd_scoped(
     let mut basis: Vec<Vec<f64>> = vec![v0];
     let mut alphas: Vec<f64> = Vec::new();
     let mut betas: Vec<f64> = Vec::new();
-    // A is static across all Lanczos steps: device-backed engines keep the
-    // panels resident (§Perf)
-    let a_key = crate::compute::fresh_operand_key();
+    // this rank's panel grid; panel_rows = 0 means one whole-block panel
+    let p = if panel_rows == 0 { local_rows.max(1) } else { panel_rows.max(1) };
+    let starts: Vec<usize> = (0..local_rows).step_by(p).collect();
+    // A is static across all Lanczos steps: one operand key per panel, so
+    // device-backed engines keep each panel resident (§Perf)
+    let keys: Vec<_> = starts
+        .iter()
+        .map(|_| crate::compute::fresh_operand_key())
+        .collect();
 
     for j in 0..m {
         // collective cancellation check at the step boundary (steps are
@@ -104,10 +174,25 @@ pub fn truncated_svd_scoped(
         // this together and agree); free for detached scopes
         scope.collective_check_cancelled(comm, TAG + 8 + (j as u64 % 64) * 256)?;
 
-        // w = G·vj (matrix-free, reg = 0); one clone to column-matrix
-        // form — `basis[j]` itself stays borrowed for the α/β updates
+        // w = G·vj (matrix-free, reg = 0), accumulated panel by panel;
+        // one clone to column-matrix form — `basis[j]` itself stays
+        // borrowed for the α/β updates. The first panel's product is
+        // MOVED into the accumulator, never added to a zero vector
+        // (0.0 + -0.0 flips signs, which would cost the single-panel
+        // path its bit-identity with the classic algorithm).
         let vj_mat = LocalMatrix::from_data(k_dim, 1, basis[j].clone());
-        let mut w = engine.gram_matvec_keyed(a_key, a_local, &vj_mat, 0.0)?;
+        let mut acc: Option<LocalMatrix> = None;
+        for (i, &s) in starts.iter().enumerate() {
+            let n = p.min(local_rows - s);
+            let panel = a.panel(s, n)?;
+            let wp = engine.gram_matvec_keyed(keys[i], panel.as_ref(), &vj_mat, 0.0)?;
+            match &mut acc {
+                None => acc = Some(wp),
+                Some(accm) => axpy(accm.data_mut(), 1.0, wp.data()),
+            }
+        }
+        // a rank holding zero rows contributes zeros to the allreduce
+        let mut w = acc.unwrap_or_else(|| LocalMatrix::zeros(k_dim, 1));
         allreduce_sum(comm, TAG + (j as u64 % 64) * 256, w.data_mut())?;
         let mut w = w.into_data();
 
@@ -174,16 +259,23 @@ pub fn truncated_svd_scoped(
         }
     }
 
-    // U = A · V · Σ⁻¹ (row-distributed like A)
-    let mut u_local = LocalMatrix::zeros(a_local.rows(), k);
-    engine.gemm(crate::compute::GemmVariant::NN, &mut u_local, a_local, &v)?;
-    for i in 0..u_local.rows() {
-        let row = u_local.row_mut(i);
-        for (kk, s) in sigma.iter().enumerate() {
-            if *s > 1e-300 {
-                row[kk] /= s;
+    // U = A · V · Σ⁻¹ (row-distributed like A), recovered panel by
+    // panel so no more than one panel of A is resident at a time
+    let mut u_local = LocalMatrix::zeros(local_rows, k);
+    for &s in &starts {
+        let n = p.min(local_rows - s);
+        let panel = a.panel(s, n)?;
+        let mut u_panel = LocalMatrix::zeros(n, k);
+        engine.gemm(crate::compute::GemmVariant::NN, &mut u_panel, panel.as_ref(), &v)?;
+        for i in 0..n {
+            let row = u_panel.row_mut(i);
+            for (kk, sg) in sigma.iter().enumerate() {
+                if *sg > 1e-300 {
+                    row[kk] /= sg;
+                }
             }
         }
+        u_local.write_rows(s, &u_panel);
     }
 
     Ok(SvdResult { sigma, v, u_local, steps })
@@ -303,6 +395,59 @@ mod tests {
                 // replicated V identical across ranks (up to bit equality,
                 // since every rank does the same arithmetic)
                 assert_eq!(res.v, results[0].v);
+            }
+        }
+    }
+
+    #[test]
+    fn paneled_svd_matches_whole_block() {
+        let sigmas = [8.0, 5.0, 2.5];
+        let a = matrix_with_spectrum(48, 20, &sigmas, 9);
+        let opts = SvdOptions { rank: 3, steps: 0, seed: 3 };
+        let full = {
+            let comms = LocalComm::group(1, None);
+            truncated_svd(&comms[0], &mut NativeEngine::new(), &a, &opts).unwrap()
+        };
+        // one panel covering every row: identical engine calls, so every
+        // output bit matches the classic path
+        let one = {
+            let comms = LocalComm::group(1, None);
+            truncated_svd_panels(
+                &comms[0],
+                &mut NativeEngine::new(),
+                &a,
+                48,
+                &opts,
+                &TaskScope::detached(),
+            )
+            .unwrap()
+        };
+        assert_eq!(one.sigma, full.sigma);
+        assert_eq!(one.v, full.v);
+        assert_eq!(one.u_local, full.u_local);
+        // 7-row panels (uneven tail): same spectrum within Lanczos
+        // tolerance — only the Gram summation order differs
+        let multi = {
+            let comms = LocalComm::group(1, None);
+            truncated_svd_panels(
+                &comms[0],
+                &mut NativeEngine::new(),
+                &a,
+                7,
+                &opts,
+                &TaskScope::detached(),
+            )
+            .unwrap()
+        };
+        for (g, w) in multi.sigma.iter().zip(&full.sigma) {
+            assert!((g - w).abs() < 1e-8, "{g} vs {w}");
+        }
+        for kk in 0..3 {
+            for i in 0..48 {
+                let d = (multi.u_local.get(i, kk).abs()
+                    - full.u_local.get(i, kk).abs())
+                .abs();
+                assert!(d < 1e-8, "u[{i},{kk}]");
             }
         }
     }

@@ -5,9 +5,11 @@
 pub mod sched;
 pub mod simclock;
 pub mod stats;
+pub mod storage;
 pub mod table;
 
 pub use sched::{SchedMetrics, SchedSnapshot, SessionQueueDepth, TaskOutcome};
 pub use simclock::SimClock;
 pub use stats::Stats;
+pub use storage::{StorageMetrics, StorageSnapshot};
 pub use table::Table;

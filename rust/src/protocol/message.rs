@@ -219,6 +219,13 @@ pub enum ControlMsg {
     /// The reply is a `TaskStatusReply` either way; a non-terminal state
     /// means the timeout fired first.
     WaitTask { task_id: u64, timeout_ms: u64 },
+    /// v7 direct ingest: ask the server to have each worker map its row
+    /// range of the `hdf5sim` file at `path` (a path on the SERVER's
+    /// filesystem) and register it as an already-sealed mapped block —
+    /// no payload bytes ever cross the client connection. Answered by
+    /// `LoadDone` (or `Error` if the file fails validation, in which
+    /// case no block was registered anywhere).
+    LoadMatrix { name: String, path: String },
 
     // server -> client
     HandshakeAck {
@@ -248,6 +255,9 @@ pub enum ControlMsg {
     /// Reply to `TaskStatus` / `CancelTask` / `WaitTask`.
     TaskStatusReply { task_id: u64, state: TaskState },
     FetchReady { info: MatrixInfo, row_ranges: Vec<(u64, u64)> },
+    /// Ack of `LoadMatrix`: the file validated and every worker mapped
+    /// and registered its shard. Shape comes from the file header.
+    LoadDone { info: MatrixInfo, row_ranges: Vec<(u64, u64)> },
     Freed { id: u64 },
     MatrixList { infos: Vec<MatrixInfo> },
     Error { message: String },
@@ -334,6 +344,11 @@ impl ControlMsg {
                 w.u64(*task_id);
                 w.u64(*timeout_ms);
             }
+            ControlMsg::LoadMatrix { name, path } => {
+                w.u8(12);
+                w.str(name);
+                w.str(path);
+            }
             ControlMsg::HandshakeAck {
                 session_id,
                 version,
@@ -380,6 +395,11 @@ impl ControlMsg {
             }
             ControlMsg::FetchReady { info, row_ranges } => {
                 w.u8(133);
+                info.encode(&mut w);
+                encode_ranges(&mut w, row_ranges);
+            }
+            ControlMsg::LoadDone { info, row_ranges } => {
+                w.u8(140);
                 info.encode(&mut w);
                 encode_ranges(&mut w, row_ranges);
             }
@@ -456,6 +476,7 @@ impl ControlMsg {
                 ControlMsg::CancelTask { task_id, hard_after_ms }
             }
             11 => ControlMsg::WaitTask { task_id: r.u64()?, timeout_ms: r.u64()? },
+            12 => ControlMsg::LoadMatrix { name: r.str()?, path: r.str()? },
             128 => {
                 let session_id = r.u64()?;
                 let version = r.u32()?;
@@ -490,6 +511,10 @@ impl ControlMsg {
                 state: TaskState::decode(&mut r)?,
             },
             133 => ControlMsg::FetchReady {
+                info: MatrixInfo::decode(&mut r)?,
+                row_ranges: decode_ranges(&mut r)?,
+            },
+            140 => ControlMsg::LoadDone {
                 info: MatrixInfo::decode(&mut r)?,
                 row_ranges: decode_ranges(&mut r)?,
             },
@@ -534,7 +559,13 @@ pub enum DataMsg {
     PushRows { matrix_id: u64, start_row: u64, nrows: u32, ncols: u32, data: Vec<f64> },
     PushDone { matrix_id: u64 },
     /// Ranged pull request; answered by `RowsData`* + `PullDone`.
-    PullRows { matrix_id: u64, start_row: u64, nrows: u32 },
+    ///
+    /// v7 adds an optional column range: `sel_cols == 0` means full
+    /// width (and then `start_col` must be 0 too); a non-zero `sel_cols`
+    /// pulls columns `[start_col, start_col + sel_cols)` of each row, so
+    /// tall-skinny readers stop paying full-width frames. The fields are
+    /// elided at the defaults, keeping the v6 wire shape.
+    PullRows { matrix_id: u64, start_row: u64, nrows: u32, start_col: u64, sel_cols: u32 },
     DataBye,
 
     // worker -> executor
@@ -579,11 +610,18 @@ impl DataMsg {
                 w.u8(2);
                 w.u64(*matrix_id);
             }
-            DataMsg::PullRows { matrix_id, start_row, nrows } => {
+            DataMsg::PullRows { matrix_id, start_row, nrows, start_col, sel_cols } => {
                 w.u8(3);
                 w.u64(*matrix_id);
                 w.u64(*start_row);
                 w.u32(*nrows);
+                // elided at the defaults (full width) so the frame keeps
+                // the v6 wire shape — a v6 worker still serves a
+                // full-width pull correctly
+                if *start_col != 0 || *sel_cols != 0 {
+                    w.u64(*start_col);
+                    w.u32(*sel_cols);
+                }
             }
             DataMsg::DataBye => w.u8(4),
             DataMsg::DataHandshakeAck { worker_rank } => {
@@ -635,11 +673,15 @@ impl DataMsg {
                 DataMsg::PushRows { matrix_id, start_row, nrows, ncols, data }
             }
             2 => DataMsg::PushDone { matrix_id: r.u64()? },
-            3 => DataMsg::PullRows {
-                matrix_id: r.u64()?,
-                start_row: r.u64()?,
-                nrows: r.u32()?,
-            },
+            3 => {
+                let matrix_id = r.u64()?;
+                let start_row = r.u64()?;
+                let nrows = r.u32()?;
+                // v6 frames stop after nrows (full-width pull)
+                let start_col = if r.remaining() > 0 { r.u64()? } else { 0 };
+                let sel_cols = if r.remaining() > 0 { r.u32()? } else { 0 };
+                DataMsg::PullRows { matrix_id, start_row, nrows, start_col, sel_cols }
+            }
             4 => DataMsg::DataBye,
             128 => DataMsg::DataHandshakeAck { worker_rank: r.u32()? },
             129 => DataMsg::PushDoneAck {
@@ -818,6 +860,14 @@ mod tests {
             ControlMsg::CancelTask { task_id: 12, hard_after_ms: 0 },
             ControlMsg::CancelTask { task_id: 12, hard_after_ms: 2_500 },
             ControlMsg::WaitTask { task_id: 12, timeout_ms: 30_000 },
+            ControlMsg::LoadMatrix {
+                name: "ocean".into(),
+                path: "/data/ocean.h5sim".into(),
+            },
+            ControlMsg::LoadDone {
+                info: MatrixInfo { id: 7, rows: 100, cols: 8, name: "ocean".into() },
+                row_ranges: vec![(0, 50), (50, 100)],
+            },
             ControlMsg::HandshakeAck {
                 session_id: 9,
                 version: 3,
@@ -969,7 +1019,20 @@ mod tests {
                 data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
             },
             DataMsg::PushDone { matrix_id: 3 },
-            DataMsg::PullRows { matrix_id: 3, start_row: 0, nrows: 5 },
+            DataMsg::PullRows {
+                matrix_id: 3,
+                start_row: 0,
+                nrows: 5,
+                start_col: 0,
+                sel_cols: 0,
+            },
+            DataMsg::PullRows {
+                matrix_id: 3,
+                start_row: 2,
+                nrows: 5,
+                start_col: 4,
+                sel_cols: 2,
+            },
             DataMsg::DataBye,
             DataMsg::DataHandshakeAck { worker_rank: 1 },
             DataMsg::PushDoneAck { matrix_id: 3, rows_received: 10 },
@@ -1112,6 +1175,41 @@ mod tests {
         assert_eq!(max_rows_per_frame_for(max / 8, max), None);
         // pathological widths must not overflow the byte math
         assert_eq!(max_rows_per_frame_for(usize::MAX, max), None);
+    }
+
+    #[test]
+    fn default_pull_keeps_v6_wire_shape() {
+        // a full-width pull must be byte-identical to the v6 frame, and
+        // a hand-built v6 frame must decode as full width
+        let msg = DataMsg::PullRows {
+            matrix_id: 3,
+            start_row: 10,
+            nrows: 4,
+            start_col: 0,
+            sel_cols: 0,
+        };
+        let mut v6 = Writer::new();
+        v6.u8(3);
+        v6.u64(3);
+        v6.u64(10);
+        v6.u32(4);
+        assert_eq!(msg.encode(), v6.into_bytes());
+
+        let mut v6 = Writer::new();
+        v6.u8(3);
+        v6.u64(9);
+        v6.u64(0);
+        v6.u32(2);
+        assert_eq!(
+            DataMsg::decode(&v6.into_bytes()).unwrap(),
+            DataMsg::PullRows {
+                matrix_id: 9,
+                start_row: 0,
+                nrows: 2,
+                start_col: 0,
+                sel_cols: 0,
+            }
+        );
     }
 
     #[test]

@@ -37,5 +37,13 @@ pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
 /// v4 wire shape): after the cooperative grace period the server poisons
 /// the task's group communicator and the routine is forcibly unwound at
 /// its next collective; failures are reported root-cause-first (the rank
-/// that failed vs the peers its failure unwound).
-pub const PROTOCOL_VERSION: u32 = 5;
+/// that failed vs the peers its failure unwound). v6: vectored frame
+/// sends (`writev` of header + borrowed payload) — an implementation
+/// change with no wire-format delta, versioned for the bench
+/// provenance trail. v7: the out-of-core storage plane —
+/// `LoadMatrix`/`LoadDone` direct file ingest (workers map their shard
+/// of an `hdf5sim` file server-side; zero payload bytes on the client
+/// connection) and column-range pulls (`PullRows` gains
+/// `start_col`/`sel_cols`, elided at full width so default pulls keep
+/// the v6 wire shape). See `docs/storage.md`.
+pub const PROTOCOL_VERSION: u32 = 7;

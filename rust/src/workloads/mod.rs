@@ -5,5 +5,5 @@
 pub mod ocean;
 pub mod timit;
 
-pub use ocean::OceanSpec;
+pub use ocean::{ocean_svd_outofcore, OceanSpec, OutOfCoreReport};
 pub use timit::TimitSpec;

@@ -142,6 +142,8 @@ fn data_messages_roundtrip() {
                 matrix_id: g.u64(),
                 start_row: g.u64() % 1_000_000,
                 nrows: g.u64() as u32 % 1000,
+                start_col: g.u64() % 1000,
+                sel_cols: g.u64() as u32 % 100,
             },
             2 => {
                 let nrows = g.usize_in(1, 8) as u32;

@@ -277,7 +277,13 @@ fn data_plane_rejects_bad_pushes_and_unsealed_pulls() {
     assert!(matches!(data.recv_data().unwrap(), DataMsg::DataHandshakeAck { .. }));
 
     // pull before sealing -> error
-    data.send_data_flush(&DataMsg::PullRows { matrix_id: id, start_row: 0, nrows: 1 })
+    data.send_data_flush(&DataMsg::PullRows {
+        matrix_id: id,
+        start_row: 0,
+        nrows: 1,
+        start_col: 0,
+        sel_cols: 0,
+    })
         .unwrap();
     match data.recv_data().unwrap() {
         DataMsg::DataError { message } => assert!(message.contains("not sealed"), "{message}"),

@@ -227,6 +227,8 @@ fn data_plane_enforces_session_ownership() {
         matrix_id: al_a.id,
         start_row: 0,
         nrows: 1,
+        start_col: 0,
+        sel_cols: 0,
     })
     .unwrap();
     match data.recv_data().unwrap() {

@@ -1,0 +1,351 @@
+//! Out-of-core storage plane, end to end (protocol v7): direct mmap
+//! ingest, per-session budgets with spill-to-disk, paneled SVD past the
+//! budget, and clean teardown of everything the plane touched.
+//!
+//! Budgets here are deliberately tiny (kilobytes) so the spill machinery
+//! is exercised on every CI run without large datasets.
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::{Config, StorageConfig};
+use alchemist::coordinator::{AlchemistServer, MatrixStore};
+use alchemist::distmat::{LocalMatrix, RowBlockLayout};
+use alchemist::linalg::SvdOptions;
+use alchemist::metrics::StorageMetrics;
+use alchemist::protocol::{Params, Value};
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::workloads::{ocean_svd_outofcore, OceanSpec};
+use std::sync::Arc;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("alchemist-it-storage").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Direct `LoadMatrix` ingest of a file whose row count does not shard
+/// evenly, zero payload bytes over the client link, exact roundtrip of
+/// both the full pull and a column-range pull.
+#[test]
+fn direct_load_uneven_shards_roundtrip() {
+    let spec = OceanSpec {
+        cells: 257, // 3 workers -> uneven 86/86/85 shards
+        times: 48,
+        modes: 4,
+        sigma0: 30.0,
+        decay: 0.6,
+        noise: 0.02,
+        seed: 7,
+    };
+    let path = tmp_dir("direct").join("ocean.bin");
+    spec.write_file(&path).unwrap();
+    let want = alchemist::hdf5sim::read_matrix(&path).unwrap();
+
+    let cfg = Config::default();
+    let server = AlchemistServer::start(cfg.clone(), 3).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2).unwrap();
+
+    let (al_a, stats) = ac.load_matrix("A", path.to_str().unwrap()).unwrap();
+    assert_eq!((al_a.rows, al_a.cols), (257, 48));
+    assert_eq!(stats.bytes, 0, "direct ingest must move zero client payload bytes");
+
+    let (full, pull) = ac.to_indexed_row_matrix(&al_a, 2).unwrap();
+    assert_eq!(full.to_local().unwrap(), want);
+    assert_eq!(pull.bytes, 257 * 48 * 8);
+
+    // column-range pull: only the selected columns cross the wire
+    let (sub, substats) = ac.to_indexed_row_matrix_cols(&al_a, 2, 5, 7).unwrap();
+    let sub = sub.to_local().unwrap();
+    assert_eq!((sub.rows(), sub.cols()), (257, 7));
+    for i in 0..257 {
+        for j in 0..7 {
+            assert_eq!(sub.get(i, j), want.get(i, 5 + j));
+        }
+    }
+    assert_eq!(substats.bytes, 257 * 7 * 8);
+
+    // on platforms with the mmap path the blocks are registered mapped
+    // (budget exempt); elsewhere the buffered fallback still serves them
+    #[cfg(all(unix, target_endian = "little"))]
+    assert!(server.storage_metrics().blocks_mapped >= 3);
+
+    ac.free(&al_a).unwrap();
+    ac.stop();
+    server.shutdown();
+}
+
+/// Corrupt or truncated hdf5sim files are rejected driver-side, before
+/// any worker registers a block.
+#[test]
+fn corrupt_file_rejected_before_any_block() {
+    let dir = tmp_dir("corrupt");
+    let bad_magic = dir.join("bad_magic.bin");
+    std::fs::write(&bad_magic, b"NOTMAGIC\0\0\0\0\0\0\0\0junkjunkjunkjunk").unwrap();
+
+    // valid header claiming 100x10, payload cut short
+    let truncated = dir.join("truncated.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"ALCH5SIM");
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&0u32.to_le_bytes());
+    bytes.extend_from_slice(&100u64.to_le_bytes());
+    bytes.extend_from_slice(&10u64.to_le_bytes());
+    bytes.extend_from_slice(&[0u8; 128]); // 128 of the 8000 payload bytes
+    std::fs::write(&truncated, bytes).unwrap();
+
+    let cfg = Config::default();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 1).unwrap();
+
+    for path in [&bad_magic, &truncated, &dir.join("does_not_exist.bin")] {
+        let err = ac.load_matrix("A", path.to_str().unwrap());
+        assert!(err.is_err(), "{path:?} must be rejected");
+    }
+    assert_eq!(server.total_blocks(), 0, "failed loads must register nothing");
+
+    // the session is still healthy: a good load works afterwards
+    let spec = OceanSpec { cells: 64, times: 16, modes: 2, ..OceanSpec::default() };
+    let good = dir.join("good.bin");
+    spec.write_file(&good).unwrap();
+    let (al, _) = ac.load_matrix("A", good.to_str().unwrap()).unwrap();
+    assert_eq!((al.rows, al.cols), (64, 16));
+    ac.stop();
+    server.shutdown();
+}
+
+/// The server-wide `storage.total_bytes` pool gates session admission:
+/// a session whose `budget_bytes x ranks` cannot be committed is
+/// rejected with a clean error and its ranks are returned to the pool.
+#[test]
+fn storage_admission_gates_sessions() {
+    const B: u64 = 1 << 20;
+    let mut cfg = Config::default();
+    cfg.storage.budget_bytes = B;
+    cfg.storage.total_bytes = 3 * B; // room for one 2-rank session, not two
+    cfg.apply("scheduler.queue_timeout_s", "2").unwrap();
+
+    let server = AlchemistServer::start(cfg.clone(), 4).unwrap();
+    let ac1 =
+        AlchemistContext::connect_with_workers(&server.control_addr, &cfg, 1, 2).unwrap();
+
+    let err = AlchemistContext::connect_with_workers(&server.control_addr, &cfg, 1, 2)
+        .expect_err("second session would overcommit the storage pool");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("storage admission rejected"),
+        "want a storage admission error, got: {msg}"
+    );
+
+    // the rejected session's ranks went back; closing the first session
+    // returns its commitment and a new session admits cleanly
+    ac1.stop();
+    let mut ok = None;
+    for _ in 0..50 {
+        match AlchemistContext::connect_with_workers(&server.control_addr, &cfg, 1, 2) {
+            Ok(ac) => {
+                ok = Some(ac);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    }
+    let ac3 = ok.expect("admission must succeed after the first session closed");
+    ac3.stop();
+    server.shutdown();
+}
+
+/// Store-level race: readers stream spans out of blocks while inserts
+/// keep forcing LRU spills of those same blocks. Every read must see
+/// the block's exact payload regardless of which residency state it
+/// caught, and the counters must show blocks cycling both directions.
+#[test]
+fn concurrent_pull_while_spill() {
+    const ROWS: usize = 125;
+    const COLS: usize = 8;
+    const BYTES: u64 = (ROWS * COLS * 8) as u64;
+    const SID: u64 = 1;
+
+    let fill = |id: u64| {
+        LocalMatrix::from_fn(ROWS, COLS, move |r, c| {
+            (id * 1_000_000 + (r * COLS + c) as u64) as f64
+        })
+    };
+    let store = Arc::new(MatrixStore::with_storage(
+        0,
+        &StorageConfig {
+            budget_bytes: BYTES * 2 + BYTES / 2, // 2.5 blocks resident
+            total_bytes: 0,
+            spill_dir: String::new(),
+        },
+        Arc::new(StorageMetrics::new()),
+    ));
+    for id in 1..=2u64 {
+        store
+            .insert(id, "A", RowBlockLayout::even(ROWS, COLS, 1), fill(id), 0, SID)
+            .unwrap();
+    }
+
+    let mut readers = Vec::new();
+    for t in 0..3u64 {
+        let store = store.clone();
+        readers.push(std::thread::spawn(move || {
+            for i in 0..300usize {
+                let id = 1 + (t + i as u64) % 2;
+                let start = i % (ROWS - 10);
+                let n = 1 + i % 10;
+                let data = store.read_rows(id, start as u64, n).unwrap();
+                assert_eq!(data.len(), n * COLS);
+                for (k, v) in data.iter().enumerate() {
+                    let expect = (id * 1_000_000 + (start * COLS + k) as u64) as f64;
+                    assert_eq!(*v, expect, "block {id} row-span [{start},+{n}) torn");
+                }
+            }
+        }));
+    }
+    let writer = {
+        let store = store.clone();
+        std::thread::spawn(move || {
+            for id in 3..=12u64 {
+                store
+                    .insert(id, "B", RowBlockLayout::even(ROWS, COLS, 1), fill(id), 0, SID)
+                    .unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        })
+    };
+    for r in readers {
+        r.join().unwrap();
+    }
+    writer.join().unwrap();
+
+    let snap = store.storage_metrics().snapshot();
+    assert!(snap.blocks_spilled > 0, "inserts over budget must have spilled: {snap:?}");
+    assert!(snap.cycled(), "reads must have come back off the spill file: {snap:?}");
+
+    // teardown releases the spill segments with the blocks
+    assert!(store.spill_segments() > 0);
+    store.free_session(SID);
+    assert_eq!(store.spill_segments(), 0);
+    assert_eq!(store.len(), 0);
+}
+
+/// The acceptance run at test scale: the out-of-core path (mapped
+/// ingest, tiny budget, paneled SVD, spilled U) must reproduce the
+/// in-memory run — bit-for-bit when the panel covers each rank's whole
+/// shard, and within Lanczos tolerance for genuinely small panels.
+#[test]
+fn out_of_core_svd_matches_in_memory() {
+    let spec = OceanSpec {
+        cells: 768,
+        times: 96,
+        modes: 6,
+        sigma0: 60.0,
+        decay: 0.7,
+        noise: 0.02,
+        seed: 21,
+    };
+    let path = tmp_dir("oocsvd").join("ocean.bin");
+    spec.write_file(&path).unwrap();
+    let opts = SvdOptions { rank: 6, steps: 30, seed: 0x53D5 };
+    let workers = 3usize;
+
+    // budget: far below the dataset (768*96*8 = 576 KiB) AND below U's
+    // per-rank share (256*6*8 = 12 KiB) so the left factor must spill
+    let budget = 8 * 1024u64;
+    assert!(spec.bytes() >= 4 * budget);
+
+    // in-memory reference on the same topology: unlimited budget, pushed
+    // A (same bytes as the file), whole-block code path
+    let ref_sigma = {
+        let cfg = Config::default();
+        let server = AlchemistServer::start(cfg.clone(), workers).unwrap();
+        let mut ac =
+            AlchemistContext::connect(&server.control_addr, &cfg, workers).unwrap();
+        ac.register_library("elemental", "builtin:elemental").unwrap();
+        let a = alchemist::hdf5sim::read_matrix(&path).unwrap();
+        let (al_a, _) = ac
+            .send_matrix("A", &IndexedRowMatrix::from_local(&a, workers))
+            .unwrap();
+        let res = ac
+            .run_task(
+                "elemental",
+                "truncated_svd",
+                Params::new()
+                    .with_matrix("A", al_a.id)
+                    .with_i64("rank", opts.rank as i64)
+                    .with_i64("steps", opts.steps as i64)
+                    .with_i64("seed", opts.seed as i64),
+            )
+            .unwrap();
+        let sigma = match res.scalars.get("sigma") {
+            Some(Value::F64s(v)) => v.clone(),
+            other => panic!("sigma missing: {other:?}"),
+        };
+        ac.stop();
+        server.shutdown();
+        sigma
+    };
+
+    // out-of-core, panel covering each rank's whole shard: identical
+    // engine-call sequence on identical data => bit-identical results
+    let rep = ocean_svd_outofcore(&spec, &path, budget, workers, &opts, 256).unwrap();
+    assert_eq!(rep.client_bytes_loaded, 0);
+    assert_eq!(rep.sigma, ref_sigma, "whole-shard panels must be bit-identical");
+    assert_eq!(rep.u_rows, 768);
+    assert!(
+        rep.storage.cycled(),
+        "U exceeds the budget; blocks must have cycled to disk and back: {:?}",
+        rep.storage
+    );
+    #[cfg(all(unix, target_endian = "little"))]
+    assert!(rep.storage.blocks_mapped >= workers as u64);
+
+    // genuinely streamed panels (37 rows): same spectrum within Lanczos
+    // tolerance (summation order differs, nothing else)
+    let rep2 = ocean_svd_outofcore(&spec, &path, budget, workers, &opts, 37).unwrap();
+    for (a, b) in rep2.sigma.iter().zip(&ref_sigma) {
+        assert!((a - b).abs() <= 1e-8 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+/// Closing a session returns every storage resource it held: blocks,
+/// budget-pool commitment, and spill-file segments.
+#[test]
+fn teardown_releases_budget_and_spill_segments() {
+    let mut cfg = Config::default();
+    cfg.storage.budget_bytes = 12_000; // 1.5 of the 8000-byte per-rank shards
+    cfg.storage.total_bytes = 24_000; // exactly one 2-rank session at a time
+    cfg.apply("scheduler.queue_timeout_s", "2").unwrap();
+
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2).unwrap();
+    let a = LocalMatrix::from_fn(100, 20, |i, j| (i * 20 + j) as f64);
+    let (al_a, _) = ac.send_matrix("A", &IndexedRowMatrix::from_local(&a, 2)).unwrap();
+    let (_al_b, _) = ac.send_matrix("B", &IndexedRowMatrix::from_local(&a, 2)).unwrap();
+
+    // B pushed A over the per-rank budget on both ranks
+    assert!(server.total_spill_segments() >= 2);
+    let usage = server.storage_usage();
+    assert_eq!(usage.len(), 1);
+    assert!(usage[0].1.bytes_spilled >= 16_000);
+
+    // spilled data still reads back exactly
+    let (back, _) = ac.to_indexed_row_matrix(&al_a, 2).unwrap();
+    assert_eq!(back.to_local().unwrap(), a);
+
+    ac.stop(); // drop the session without explicit frees
+    for _ in 0..50 {
+        if server.total_blocks() == 0 && server.total_spill_segments() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    assert_eq!(server.total_blocks(), 0, "teardown must free every block");
+    assert_eq!(server.total_spill_segments(), 0, "teardown must free spill segments");
+    assert!(server.storage_usage().is_empty(), "ledger must be empty after teardown");
+
+    // the pool commitment came back too: a new session (which needs the
+    // whole pool) admits
+    let ac2 = AlchemistContext::connect(&server.control_addr, &cfg, 2).unwrap();
+    ac2.stop();
+    server.shutdown();
+}

@@ -97,6 +97,8 @@ fn drain_pull_stream(
         matrix_id,
         start_row: start,
         nrows: nrows as u32,
+        start_col: 0,
+        sel_cols: 0,
     })
     .unwrap();
     let mut frames = 0usize;
@@ -247,7 +249,13 @@ fn concurrent_executors_ingest_interleaved_out_of_order_runs() {
     );
 
     // hardening: zero-row pulls are rejected with a proper diagnostic
-    data.send_data_flush(&DataMsg::PullRows { matrix_id: id, start_row: 0, nrows: 0 })
+    data.send_data_flush(&DataMsg::PullRows {
+        matrix_id: id,
+        start_row: 0,
+        nrows: 0,
+        start_col: 0,
+        sel_cols: 0,
+    })
         .unwrap();
     match data.recv_data().unwrap() {
         DataMsg::DataError { message } => {

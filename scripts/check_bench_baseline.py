@@ -16,6 +16,12 @@ artifacts the repo pins:
   engine="auto" cost-model dispatcher must not lose to the packed
   kernel it routes composed GEMM to.
 
+* BENCH_storage.json  (bench "table6_storage", kind "storage") —
+  per-case ingest/egress GB/s, plus the v7 direct-ingest expectation:
+  load_direct must be >= 2x load_push (the direct leg is one control
+  RPC + a server-side mmap; the push leg moves every payload byte over
+  TCP — if the ratio collapses, direct ingest has started copying).
+
 CI's bench jobs run the smoke-size benches and call this script with the
 fresh artifact and the repo's committed baseline. Outcomes:
 
@@ -64,6 +70,8 @@ def artifact_kind(doc: dict) -> str:
         return "transfer"
     if doc.get("bench") == "kernels":
         return "compute"
+    if doc.get("bench") == "table6_storage":
+        return "storage"
     return "unknown"
 
 
@@ -116,7 +124,36 @@ def describe_cell(cell: dict) -> str:
     if "kernel" in cell:
         return (f"{cell.get('kernel')} {cell.get('m')}x{cell.get('n')}x"
                 f"{cell.get('k')} t{cell.get('threads')}")
+    if "case" in cell:
+        return str(cell.get("case"))
     return f"e{cell.get('executors')}xw{cell.get('workers')}"
+
+
+def check_storage_expectations(fresh: dict, pinned: bool) -> int:
+    """The v7 direct-ingest speedup, evaluated on FRESH alone.
+
+    load_direct is one control RPC after which workers map their file
+    shards; load_push moves every payload byte over TCP. At any real
+    dataset size the ratio is enormous, so the 2x target doubles as its
+    own hard floor — warn while the baseline is a stub, fail after."""
+    cells = {c.get("case"): c.get("gbps") for c in fresh.get("cells", [])}
+    direct, push = cells.get("load_direct"), cells.get("load_push")
+    if not isinstance(direct, (int, float)) or not isinstance(push, (int, float)) \
+            or push <= 0:
+        warn("storage expectation 'direct_vs_push' not evaluable "
+             "(missing load_direct / load_push cells) — skipping")
+        return 0
+    ratio = direct / push
+    tag = (f"storage expectation 'direct_vs_push': {direct:.2f} vs {push:.2f} "
+           f"GB/s ({ratio:.2f}x, want >= 2.0x)")
+    if ratio >= 2.0:
+        print(tag + " OK")
+        return 0
+    if pinned:
+        fail(tag + " UNMET")
+        return 1
+    warn(tag + " UNMET")
+    return 0
 
 
 def check_compute_expectations(fresh: dict, pinned: bool) -> int:
@@ -212,6 +249,8 @@ def main() -> int:
         # the speedup expectations don't need a baseline — run them first
         # so a stub baseline still surfaces a slow kernel
         rc |= check_compute_expectations(fresh, pinned)
+    elif kind == "storage":
+        rc |= check_storage_expectations(fresh, pinned)
 
     if not pinned:
         warn(
@@ -227,6 +266,10 @@ def main() -> int:
                       "buf_bytes", "pull_stripe_rows", "pull_window")
         cell_key = lambda c: (c.get("executors"), c.get("workers"))  # noqa: E731
         metrics = ("push_gbps", "pull_gbps")
+    elif kind == "storage":
+        comparable = ("rows", "cols", "runs", "quick", "workers")
+        cell_key = lambda c: c.get("case")  # noqa: E731
+        metrics = ("gbps",)
     else:
         comparable = ("quick", "runs", "threads")
         cell_key = lambda c: (c.get("kernel"), c.get("m"), c.get("n"),  # noqa: E731
