@@ -6,7 +6,7 @@ mod bench_common;
 
 use alchemist::cli::Args;
 use alchemist::collectives::algorithms::infallible::{allreduce_sum, broadcast};
-use alchemist::collectives::{Communicator, LocalComm};
+use alchemist::collectives::{Communicator, LocalComm, TAG_WINDOW};
 use alchemist::compute::{Engine, GemmVariant, NativeEngine};
 use alchemist::distmat::LocalMatrix;
 use alchemist::metrics::{Stats, Table};
@@ -90,8 +90,10 @@ fn collectives_micro(quick: bool) {
                             let mut buf = vec![c.rank() as f64; n];
                             let t0 = std::time::Instant::now();
                             match op.as_str() {
-                                "allreduce" => allreduce_sum(&c, 1, &mut buf),
-                                _ => broadcast(&c, 1, 0, &mut buf),
+                                "allreduce" => {
+                                    allreduce_sum(&c, TAG_WINDOW, &mut buf)
+                                }
+                                _ => broadcast(&c, TAG_WINDOW, 0, &mut buf),
                             }
                             (c.rank(), t0.elapsed().as_secs_f64())
                         }));

@@ -17,6 +17,10 @@ mod bench_common;
 
 use alchemist::cli::Args;
 use alchemist::client::AlchemistContext;
+use alchemist::collectives::{
+    algorithms::infallible, loopback_group, Communicator, FabricOptions,
+    LocalComm, TAG_WINDOW,
+};
 use alchemist::coordinator::AlchemistServer;
 use alchemist::metrics::{Stats, Table};
 use alchemist::sparklite::IndexedRowMatrix;
@@ -32,6 +36,95 @@ struct Cell {
     push_gbps: f64,
     pull_secs: f64,
     pull_gbps: f64,
+}
+
+/// One measured rank-fabric collective cell (protocol v8,
+/// `docs/fabric.md`): the same algorithm over in-process mailboxes
+/// (`local`) vs a tcp-loopback mesh (`tcp`).
+struct FabricCell {
+    fabric: &'static str,
+    op: &'static str,
+    elems: usize,
+    ranks: usize,
+    secs_per_op: f64,
+    /// Logical vector bytes per op / secs — a normalization shared by
+    /// both fabrics, so ratios between them are meaningful.
+    gbps: f64,
+}
+
+/// Time `reps` back-to-back collectives on every rank; returns the
+/// slowest rank's wall-clock seconds per op (barrier-fenced, so setup
+/// skew is excluded).
+fn time_collective<C>(comms: Vec<C>, op: &'static str, elems: usize, reps: usize) -> f64
+where
+    C: Communicator + 'static,
+{
+    let mut handles = Vec::new();
+    for c in comms {
+        handles.push(std::thread::spawn(move || {
+            let mut buf = vec![0.0f64; elems];
+            infallible::barrier(&c);
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                match op {
+                    "allreduce" => infallible::allreduce_sum(&c, TAG_WINDOW, &mut buf),
+                    "broadcast" => infallible::broadcast(&c, 2 * TAG_WINDOW, 0, &mut buf),
+                    other => unreachable!("unknown fabric op {other}"),
+                }
+            }
+            infallible::barrier(&c);
+            t0.elapsed().as_secs_f64()
+        }));
+    }
+    let slowest = handles
+        .into_iter()
+        .map(|h| h.join().expect("fabric bench rank panicked"))
+        .fold(0.0f64, f64::max);
+    slowest / reps as f64
+}
+
+/// The fabric comparison: eager-sized (latency) and rendezvous-sized
+/// (bandwidth) vectors through both transports at a fixed group size.
+fn bench_fabric(cfg: &alchemist::config::Config, quick: bool) -> Vec<FabricCell> {
+    let ranks = 4;
+    let opts = FabricOptions {
+        eager_bytes: cfg.fabric.eager_bytes,
+        buf_bytes: cfg.fabric.buf_bytes,
+        ..FabricOptions::default()
+    };
+    // 2 KiB vectors stay eager (and, at 4 ranks, recursive doubling);
+    // 8 MiB vectors take the gathered-writev rendezvous path (and ring)
+    let cases: &[(usize, usize)] = if quick {
+        &[(256, 50), (1 << 20, 3)]
+    } else {
+        &[(256, 200), (1 << 20, 5)]
+    };
+    let mut cells = Vec::new();
+    for &(elems, reps) in cases {
+        for op in ["allreduce", "broadcast"] {
+            for fabric in ["local", "tcp"] {
+                let secs = match fabric {
+                    "local" => {
+                        time_collective(LocalComm::group(ranks, None), op, elems, reps)
+                    }
+                    _ => {
+                        let comms = loopback_group(ranks, &opts)
+                            .expect("forming loopback mesh");
+                        time_collective(comms, op, elems, reps)
+                    }
+                };
+                cells.push(FabricCell {
+                    fabric,
+                    op,
+                    elems,
+                    ranks,
+                    secs_per_op: secs,
+                    gbps: (elems * 8) as f64 / secs / 1e9,
+                });
+            }
+        }
+    }
+    cells
 }
 
 fn json_num(v: f64) -> String {
@@ -50,6 +143,7 @@ fn write_json(
     quick: bool,
     cfg: &alchemist::config::Config,
     cells: &[Cell],
+    fabric_cells: &[FabricCell],
 ) -> alchemist::Result<()> {
     let mut body = String::new();
     body.push_str("{\n");
@@ -80,6 +174,21 @@ fn write_json(
             json_num(c.pull_secs),
             json_num(c.pull_gbps),
             if i + 1 == cells.len() { "" } else { "," },
+        ));
+    }
+    body.push_str("  ],\n");
+    body.push_str("  \"fabric_cells\": [\n");
+    for (i, c) in fabric_cells.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"fabric\": \"{}\", \"op\": \"{}\", \"elems\": {}, \
+             \"ranks\": {}, \"secs_per_op\": {}, \"gbps\": {}}}{}\n",
+            c.fabric,
+            c.op,
+            c.elems,
+            c.ranks,
+            json_num(c.secs_per_op),
+            json_num(c.gbps),
+            if i + 1 == fabric_cells.len() { "" } else { "," },
         ));
     }
     body.push_str("  ]\n}\n");
@@ -183,8 +292,28 @@ fn main() -> alchemist::Result<()> {
         "paper shape: more executors help until they exceed workers; minimum near \
          executors == workers"
     );
+
+    // rank-fabric collectives (protocol v8): local mailboxes vs a
+    // tcp-loopback mesh, eager- and rendezvous-sized vectors
+    let fabric_cells = bench_fabric(&cfg, quick);
+    let mut ftable = Table::new(
+        "Rank fabric: collective per-op time (local vs tcp-loopback, 4 ranks)",
+        &["op", "elems", "local", "tcp", "tcp/local"],
+    );
+    for pair in fabric_cells.chunks(2) {
+        let [l, t] = pair else { continue };
+        ftable.row(&[
+            l.op.to_string(),
+            format!("{}", l.elems),
+            format!("{:.1} us ({:.2} GB/s)", l.secs_per_op * 1e6, l.gbps),
+            format!("{:.1} us ({:.2} GB/s)", t.secs_per_op * 1e6, t.gbps),
+            format!("{:.2}x", t.gbps / l.gbps),
+        ]);
+    }
+    ftable.print();
+
     if let Some(path) = args.get("json") {
-        write_json(path, rows, cols, runs, quick, &cfg, &cells)?;
+        write_json(path, rows, cols, runs, quick, &cfg, &cells, &fabric_cells)?;
     }
     Ok(())
 }

@@ -298,6 +298,21 @@ struct PullReq {
     nrows: usize,
 }
 
+/// Adaptive pull-side backpressure: the effective per-link window is the
+/// byte budget (`transfer.pull_window_bytes`) divided by the stripe
+/// size, clamped to `[1, pull_window]`. In-flight stripes are bytes the
+/// worker has serialized (or will imminently) that the client has not
+/// drained, so a fixed stripe *count* lets wide matrices queue hundreds
+/// of megabytes per link; the byte budget keeps the in-flight unacked
+/// volume flat while narrow matrices still pipeline up to the hard cap.
+fn adaptive_pull_window(stripe_bytes: usize, cfg: &TransferConfig) -> usize {
+    let cap = cfg.pull_window.max(1);
+    if cfg.pull_window_bytes == 0 {
+        return cap;
+    }
+    (cfg.pull_window_bytes / stripe_bytes.max(1)).clamp(1, cap)
+}
+
 /// Pull one executor's share `[lo, hi)` via the v3 streaming protocol.
 /// `col_range = (start_col, width)` selects a column window (protocol
 /// v7); width 0 means every column, keeping the v6 wire shape.
@@ -347,7 +362,7 @@ fn pull_rows_one_executor(
         i = seg_end;
     }
 
-    let window = cfg.pull_window.max(1);
+    let window = adaptive_pull_window(stripe_rows.saturating_mul(ncols * 8), cfg);
     let send_req = |link: &mut Framed<std::net::TcpStream, std::net::TcpStream>,
                     req: PullReq|
      -> crate::Result<()> {
@@ -499,4 +514,27 @@ pub fn pull_matrix_cols(
     })?;
     merged.secs = t0.elapsed().as_secs_f64();
     Ok((all_rows, merged))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_window_scales_with_stripe_bytes() {
+        let cfg = crate::config::Config::default().transfer;
+        // default: 1024-row stripes × 1024 cols × 8 B = 8 MiB per
+        // stripe, 32 MiB budget → the full default window of 4
+        assert_eq!(adaptive_pull_window(8 << 20, &cfg), cfg.pull_window);
+        // wide stripes: only as many as fit in the byte budget...
+        assert_eq!(adaptive_pull_window(16 << 20, &cfg), 2);
+        // ...flooring at one outstanding stripe, never zero
+        assert_eq!(adaptive_pull_window(256 << 20, &cfg), 1);
+        // narrow stripes pipeline deeply but stay under the hard cap
+        assert_eq!(adaptive_pull_window(1, &cfg), cfg.pull_window);
+        // budget 0 disables the byte-based scaling entirely
+        let mut free = cfg.clone();
+        free.pull_window_bytes = 0;
+        assert_eq!(adaptive_pull_window(1 << 30, &free), free.pull_window);
+    }
 }

@@ -2,8 +2,16 @@
 //!
 //! These are the textbook implementations the MPI runtimes the paper
 //! depends on would use at this scale: binomial trees for
-//! broadcast/reduce, a bandwidth-optimal ring for allreduce, linear
-//! gather/scatter rooted at rank 0 (the Alchemist driver-adjacent rank).
+//! broadcast/reduce, recursive doubling or a bandwidth-optimal ring for
+//! allreduce (selected from the group shape and vector length, exactly
+//! like an MPI tuned-collectives table — see
+//! [`ALLREDUCE_DOUBLING_MAX_ELEMS`]), linear gather/scatter rooted at
+//! rank 0 (the Alchemist driver-adjacent rank).
+//!
+//! Every algorithm debug-asserts the [`TAG_WINDOW`] contract on entry:
+//! the caller's `base_tag` must be window-aligned and every offset the
+//! algorithm derives must stay inside the window, so two concurrent
+//! collectives can never interleave their messages.
 //!
 //! Every algorithm is `Result`-returning and propagates the first
 //! [`CommError`] it observes (protocol v5 fault isolation): when a peer
@@ -16,7 +24,35 @@
 
 use crate::util::even_ranges;
 
-use super::{CommError, Communicator};
+use super::{CommError, Communicator, TAG_WINDOW};
+
+/// Above this element count the ring allreduce's bandwidth optimality
+/// (2·(p−1)/p·n elements per rank) wins over recursive doubling's lower
+/// latency (log₂ p rounds); at or below it — and only on power-of-two
+/// group sizes, where the doubling pattern is exact — [`allreduce_sum`]
+/// switches to recursive doubling. Deliberately a compile-time constant
+/// rather than a config knob: every rank must derive the *same* algorithm
+/// from the shape alone, and ranks in different OS processes (protocol
+/// v8 network fabric) do not share a runtime config.
+pub const ALLREDUCE_DOUBLING_MAX_ELEMS: usize = 4096;
+
+/// Debug-time guard for the tag-space contract: `base_tag` must be
+/// [`TAG_WINDOW`]-aligned and `max_offset` (the largest offset this
+/// invocation can add) must stay inside the window. Violations are
+/// programming errors — two collectives sharing a window would silently
+/// interleave messages — so they assert instead of returning an error.
+#[inline]
+fn check_tags(base_tag: u64, max_offset: u64) {
+    debug_assert_eq!(
+        base_tag % TAG_WINDOW,
+        0,
+        "collective base tag {base_tag:#x} is not TAG_WINDOW-aligned"
+    );
+    debug_assert!(
+        max_offset < TAG_WINDOW,
+        "collective tag offsets (max {max_offset}) overflow TAG_WINDOW"
+    );
+}
 
 /// Entry check every algorithm performs before moving any data: a
 /// poisoned group must fail even on paths that would otherwise touch no
@@ -40,6 +76,7 @@ pub fn broadcast(
     buf: &mut Vec<f64>,
 ) -> Result<(), CommError> {
     entry_check(comm)?;
+    check_tags(base_tag, 0);
     let size = comm.size();
     if size == 1 {
         return Ok(());
@@ -89,6 +126,8 @@ pub fn reduce_sum(
 ) -> Result<(), CommError> {
     entry_check(comm)?;
     let size = comm.size();
+    // Offsets are the binomial masks, all < size.
+    check_tags(base_tag, size as u64 - 1);
     if size == 1 {
         return Ok(());
     }
@@ -116,10 +155,14 @@ pub fn reduce_sum(
     Ok(())
 }
 
-/// Ring allreduce (reduce-scatter + allgather): bandwidth-optimal,
-/// 2·(p−1)/p · n elements over the wire per rank. All ranks end with the
-/// elementwise sum. On error, `buf` is left partially reduced (callers
-/// unwind; the driver resets the fabric between tasks).
+/// Allreduce: all ranks end with the elementwise sum. Topology-aware
+/// algorithm selection, decided identically on every rank from the group
+/// shape and vector length alone (no negotiation round): short vectors on
+/// power-of-two groups take latency-optimal recursive doubling (log₂ p
+/// rounds of the full vector), everything else takes the
+/// bandwidth-optimal ring (reduce-scatter + allgather, 2·(p−1)/p · n
+/// elements over the wire per rank). On error, `buf` is left partially
+/// reduced (callers unwind; the driver resets the fabric between tasks).
 pub fn allreduce_sum(
     comm: &dyn Communicator,
     base_tag: u64,
@@ -127,9 +170,53 @@ pub fn allreduce_sum(
 ) -> Result<(), CommError> {
     entry_check(comm)?;
     let p = comm.size();
+    // Worst case is the ring's allgather phase: offsets up to 2(p−1).
+    check_tags(base_tag, 2 * (p as u64 - 1));
     if p == 1 {
         return Ok(());
     }
+    if p.is_power_of_two() && buf.len() <= ALLREDUCE_DOUBLING_MAX_ELEMS {
+        return allreduce_doubling(comm, base_tag, buf);
+    }
+    allreduce_ring(comm, base_tag, buf)
+}
+
+/// Recursive doubling: in round `s`, exchange the full partially-reduced
+/// vector with rank `rank ^ 2^s` and accumulate. log₂ p rounds; for
+/// short vectors the wire time is dominated by per-message latency and
+/// this beats the ring's 2(p−1) serialized steps.
+fn allreduce_doubling(
+    comm: &dyn Communicator,
+    base_tag: u64,
+    buf: &mut [f64],
+) -> Result<(), CommError> {
+    let p = comm.size();
+    let rank = comm.rank();
+    debug_assert!(p.is_power_of_two());
+    let mut dist = 1usize;
+    let mut step = 0u64;
+    while dist < p {
+        let partner = rank ^ dist;
+        comm.send(partner, base_tag + step, buf.to_vec());
+        let incoming = comm.recv(partner, base_tag + step)?;
+        debug_assert_eq!(incoming.len(), buf.len());
+        for (a, b) in buf.iter_mut().zip(&incoming) {
+            *a += b;
+        }
+        dist <<= 1;
+        step += 1;
+    }
+    Ok(())
+}
+
+/// Ring allreduce (reduce-scatter + allgather), bandwidth-optimal for
+/// long vectors.
+fn allreduce_ring(
+    comm: &dyn Communicator,
+    base_tag: u64,
+    buf: &mut [f64],
+) -> Result<(), CommError> {
+    let p = comm.size();
     let rank = comm.rank();
     let chunks = even_ranges(buf.len(), p);
     let next = (rank + 1) % p;
@@ -172,6 +259,7 @@ pub fn gather(
     mine: Vec<f64>,
 ) -> Result<Option<Vec<Vec<f64>>>, CommError> {
     entry_check(comm)?;
+    check_tags(base_tag, comm.size() as u64 - 1);
     if comm.rank() == root {
         let mut parts = vec![Vec::new(); comm.size()];
         for r in 0..comm.size() {
@@ -196,6 +284,7 @@ pub fn scatter(
     parts: Option<Vec<Vec<f64>>>,
 ) -> Result<Vec<f64>, CommError> {
     entry_check(comm)?;
+    check_tags(base_tag, comm.size() as u64 - 1);
     if comm.rank() == root {
         let parts = parts.expect("root must supply parts");
         assert_eq!(parts.len(), comm.size());
@@ -222,6 +311,8 @@ pub fn allgather(
 ) -> Result<Vec<Vec<f64>>, CommError> {
     entry_check(comm)?;
     let p = comm.size();
+    // Ring steps s < p−1.
+    check_tags(base_tag, (p as u64).saturating_sub(2));
     let rank = comm.rank();
     let mut parts: Vec<Vec<f64>> = vec![Vec::new(); p];
     parts[rank] = mine;
@@ -316,7 +407,7 @@ mod tests {
                     } else {
                         Vec::new()
                     };
-                    broadcast(c, 10, root, &mut buf).unwrap();
+                    broadcast(c, 10 * TAG_WINDOW, root, &mut buf).unwrap();
                     buf
                 });
                 for v in out {
@@ -331,7 +422,7 @@ mod tests {
         for p in 1..=6usize {
             let out = run_group(p, move |c| {
                 let mut buf = vec![c.rank() as f64 + 1.0, 10.0];
-                reduce_sum(c, 20, 0, &mut buf).unwrap();
+                reduce_sum(c, 20 * TAG_WINDOW, 0, &mut buf).unwrap();
                 (c.rank(), buf)
             });
             let expect0: f64 = (1..=p).map(|r| r as f64).sum();
@@ -350,7 +441,7 @@ mod tests {
                 let out = run_group(p, move |c| {
                     let mut buf: Vec<f64> =
                         (0..n).map(|i| (i + c.rank() * 100) as f64).collect();
-                    allreduce_sum(c, 30, &mut buf).unwrap();
+                    allreduce_sum(c, 30 * TAG_WINDOW, &mut buf).unwrap();
                     buf
                 });
                 let want: Vec<f64> = (0..n)
@@ -370,9 +461,9 @@ mod tests {
         for p in 1..=4usize {
             let out = run_group(p, move |c| {
                 let mine = vec![c.rank() as f64; c.rank() + 1];
-                let gathered = gather(c, 40, 0, mine).unwrap();
+                let gathered = gather(c, 40 * TAG_WINDOW, 0, mine).unwrap();
                 // root redistributes what it gathered
-                scatter(c, 41, 0, gathered).unwrap()
+                scatter(c, 41 * TAG_WINDOW, 0, gathered).unwrap()
             });
             for (r, v) in out.into_iter().enumerate() {
                 assert_eq!(v, vec![r as f64; r + 1]);
@@ -384,7 +475,7 @@ mod tests {
     fn allgather_concatenates_by_rank() {
         for p in 1..=5usize {
             let out = run_group(p, move |c| {
-                allgather(c, 50, vec![c.rank() as f64 * 2.0]).unwrap()
+                allgather(c, 50 * TAG_WINDOW, vec![c.rank() as f64 * 2.0]).unwrap()
             });
             for parts in out {
                 assert_eq!(parts.len(), p);
@@ -399,7 +490,7 @@ mod tests {
     fn infallible_wrappers_match_fallible_results() {
         let out = run_group(3, |c| {
             let mut buf = vec![c.rank() as f64; 4];
-            infallible::allreduce_sum(c, 60, &mut buf);
+            infallible::allreduce_sum(c, 60 * TAG_WINDOW, &mut buf);
             infallible::barrier(c);
             buf
         });
@@ -416,14 +507,14 @@ mod tests {
         let c = &comms[0];
         let mut buf = vec![1.0, 2.0];
         assert_eq!(
-            allreduce_sum(c, 70, &mut buf).unwrap_err(),
+            allreduce_sum(c, 70 * TAG_WINDOW, &mut buf).unwrap_err(),
             CommError::PeerFailed { rank: 1 }
         );
-        assert!(broadcast(c, 71, 1, &mut buf).is_err());
+        assert!(broadcast(c, 71 * TAG_WINDOW, 1, &mut buf).is_err());
         assert!(c.barrier().is_err());
         // gather on a non-root rank only sends — but root would hang, so
         // the root path must error
-        assert!(gather(c, 72, 0, vec![0.0]).is_err());
+        assert!(gather(c, 72 * TAG_WINDOW, 0, vec![0.0]).is_err());
 
         // size-1 groups must observe the poison too: a hard cancel on a
         // single-worker session has no peers, but its routine's next
@@ -433,10 +524,57 @@ mod tests {
         solo.poison(crate::collectives::PoisonCause::HardCancel);
         let mut buf = vec![1.0];
         assert_eq!(
-            allreduce_sum(&solo, 73, &mut buf).unwrap_err(),
+            allreduce_sum(&solo, 73 * TAG_WINDOW, &mut buf).unwrap_err(),
             CommError::Cancelled
         );
         assert!(solo.barrier().is_err());
-        assert!(allgather(&solo, 74, vec![0.0]).is_err());
+        assert!(allgather(&solo, 74 * TAG_WINDOW, vec![0.0]).is_err());
+    }
+
+    /// The doubling/ring switch must be invisible to callers: identical
+    /// sums on both sides of the element threshold, on power-of-two
+    /// groups (eligible for doubling) and odd groups (always ring).
+    #[test]
+    fn allreduce_selects_algorithm_consistently_across_threshold() {
+        let sizes = [
+            1usize,
+            ALLREDUCE_DOUBLING_MAX_ELEMS - 1,
+            ALLREDUCE_DOUBLING_MAX_ELEMS,
+            ALLREDUCE_DOUBLING_MAX_ELEMS + 1,
+        ];
+        for p in [2usize, 3, 4] {
+            for n in sizes {
+                let out = run_group(p, move |c| {
+                    let mut buf: Vec<f64> = (0..n)
+                        .map(|i| (i % 97) as f64 + c.rank() as f64)
+                        .collect();
+                    allreduce_sum(c, 30 * TAG_WINDOW, &mut buf).unwrap();
+                    buf
+                });
+                let want: Vec<f64> = (0..n)
+                    .map(|i| {
+                        (0..p)
+                            .map(|r| (i % 97) as f64 + r as f64)
+                            .sum::<f64>()
+                    })
+                    .collect();
+                for v in out {
+                    assert_eq!(v, want, "p={p} n={n}");
+                }
+            }
+        }
+    }
+
+    /// Satellite guard: an unaligned base tag trips the debug assert. A
+    /// size-1 group runs the collective on the calling thread, so the
+    /// panic surfaces as this test's own (instead of being folded into a
+    /// rank thread's join error).
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "TAG_WINDOW")]
+    fn unaligned_base_tag_panics_in_debug() {
+        let solo = LocalComm::group(1, None).pop().unwrap();
+        let mut buf = vec![1.0];
+        let _ = allreduce_sum(&solo, 12345, &mut buf);
     }
 }

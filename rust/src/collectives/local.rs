@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::SimNetConfig;
 
-use super::{CommError, Communicator, PoisonCause};
+use super::{CommError, Communicator, Fabric, PoisonCause};
 
 type Key = (usize, u64); // (sender, tag)
 
@@ -284,6 +284,16 @@ impl Communicator for LocalComm {
 
     fn sim_comm_secs(&self) -> f64 {
         self.sim_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+impl Fabric for LocalComm {
+    fn reset(&self) {
+        LocalComm::reset(self)
+    }
+
+    fn as_comm(&self) -> &dyn Communicator {
+        self
     }
 }
 

@@ -28,13 +28,23 @@
 //! [`algorithms::infallible`] wrappers exist for callers whose groups can
 //! never be poisoned (single-rank groups, direct library use, benches).
 
+//!
+//! **Transports (protocol v8).** Two implementations exist:
+//! [`LocalComm`] (threads in one process, lock-free mailboxes) and
+//! [`netcomm::TcpComm`] (worker ranks as separate OS processes joined by
+//! a coordinator-brokered TCP mesh — see `docs/fabric.md`). The
+//! [`Fabric`] trait is the server-side superset the dispatcher manages:
+//! a `Communicator` that can also be `reset` between tasks.
+
 pub mod algorithms;
 pub mod local;
+pub mod netcomm;
 
 pub use algorithms::{
     allgather, allreduce_sum, broadcast, gather, reduce_sum, scatter,
 };
 pub use local::LocalComm;
+pub use netcomm::{loopback_group, FabricOptions, MeshAcceptor, TcpComm};
 
 /// Why a collective operation failed. Only the coordinator's fault
 /// machinery produces these: outside it (direct library use, tests) the
@@ -158,5 +168,22 @@ pub trait Communicator: Send {
 
 /// Tag-space layout so nested collectives never collide: each collective
 /// invocation passes a distinct `base` tag and algorithms offset within
-/// a 2^16 window.
+/// a 2^16 window. The [`algorithms`] debug-assert both halves of the
+/// contract: `base` must be `TAG_WINDOW`-aligned and every per-algorithm
+/// offset must stay inside the window.
 pub const TAG_WINDOW: u64 = 1 << 16;
+
+/// A [`Communicator`] as the server's dispatcher manages it: collectives
+/// during a task, plus a `reset` between tasks that drops stragglers and
+/// clears poison so the next task starts on a clean fabric. Both
+/// transports implement it; sessions hold `Arc<dyn Fabric>` so a worker
+/// loop cannot tell (and must not care) which transport its group is on.
+pub trait Fabric: Communicator + Send + Sync {
+    /// Clear all transient group state between tasks (queued messages,
+    /// poison, barrier generations).
+    fn reset(&self);
+    /// This fabric as a plain [`Communicator`] — the view handed to
+    /// library routines. (Explicit because trait-object upcasting is
+    /// newer than this crate's compiler floor.)
+    fn as_comm(&self) -> &dyn Communicator;
+}

@@ -1,0 +1,1024 @@
+//! [`Communicator`] over TCP: worker ranks as separate OS processes.
+//!
+//! `TcpComm` puts the collectives on the wire (ROADMAP item 1 /
+//! `docs/fabric.md`). The coordinator brokers a full peer mesh once at
+//! group formation — every pair of ranks holds one direct TCP link — and
+//! from then on collective traffic flows rank↔rank without touching the
+//! coordinator (control-plane only, exactly the paper's MPI deployment
+//! shape).
+//!
+//! **Fast path.** `send` stays non-blocking and infallible: messages go
+//! onto a per-peer queue drained by a dedicated sender thread per link.
+//! Small messages ride the link's write buffer (eager — they coalesce
+//! with neighbors and flush when the queue drains); payloads of
+//! `fabric.eager_bytes` or more skip the buffer entirely and go out as
+//! one gathered `writev` of length prefix + 17-byte header + the
+//! `Vec<f64>`'s raw bytes — zero user-space copies of the payload on the
+//! send leg. The receive leg decodes borrowed out of each link's
+//! reusable frame buffer ([`crate::net::Framed::recv_ref`]) and performs
+//! exactly one copy, frame buffer → delivered `Vec<f64>`.
+//!
+//! **Failure propagation.** The transport maps straight onto PR 4's
+//! poison machinery: a dropped rank socket poisons the group with
+//! [`PoisonCause::RankFailed`] naming the dead peer, so every rank
+//! blocked in — or later entering — a collective wakes with
+//! [`CommError::PeerFailed`] instead of hanging on a contribution that
+//! will never come. A locally observed poison is also *broadcast* over
+//! the mesh so peers learn the root cause even when their own link to
+//! the failed rank is still healthy.
+//!
+//! **Epochs.** The dispatcher resets the fabric between tasks; on a
+//! network transport a straggler frame from the previous task could
+//! otherwise arrive after the reset and satisfy the wrong recv. Every
+//! data/poison frame carries the sender's epoch: receivers drop frames
+//! from past epochs, deliver the current one, and park future ones
+//! (applied when the local reset catches up).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::{CommError, Communicator, Fabric, PoisonCause};
+use crate::net::{Framed, MAX_FRAME};
+use crate::protocol::fabric::{fabric_data_header, FabricFrame};
+use crate::protocol::le_f64s_to_vec;
+
+/// Transport knobs for one mesh (`config.fabric`, see `docs/fabric.md`).
+#[derive(Debug, Clone)]
+pub struct FabricOptions {
+    /// Payload bytes at or above which a data frame leaves the eager
+    /// (buffered) path for a gathered `writev` (the rendezvous leg).
+    pub eager_bytes: usize,
+    /// Socket write-buffer size per link.
+    pub buf_bytes: usize,
+    /// How long mesh formation may wait for every peer link.
+    pub form_timeout: Duration,
+}
+
+impl Default for FabricOptions {
+    fn default() -> Self {
+        FabricOptions {
+            eager_bytes: 4 << 10,
+            buf_bytes: 1 << 20,
+            form_timeout: Duration::from_secs(20),
+        }
+    }
+}
+
+/// Largest Hello frame the mesh acceptor will read (a Hello is ~13
+/// bytes; anything bigger is a stray connection, not a peer).
+const MAX_HELLO_FRAME: u32 = 4 << 10;
+
+/// Bit set on internal barrier tags so they can never collide with the
+/// `TAG_WINDOW`-aligned tags the collectives use.
+const BARRIER_TAG_BIT: u64 = 1 << 63;
+
+/// What one rank's mailbox holds: messages are addressed by
+/// `(from, tag)` and delivered in per-(sender, tag) order, exactly the
+/// [`Communicator`] contract.
+struct MailState {
+    /// Current group epoch (bumped by [`TcpComm::reset`]).
+    epoch: u64,
+    queues: HashMap<(usize, u64), VecDeque<Vec<f64>>>,
+    /// Frames stamped with a *future* epoch: the peer reset before we
+    /// did. Applied (or re-parked) when our reset catches up.
+    parked: Vec<ParkedFrame>,
+    poison: Option<PoisonCause>,
+    /// Barrier invocation counter (scopes barrier tags; reset with the
+    /// epoch so barriers across tasks cannot collide).
+    barrier_gen: u64,
+}
+
+enum ParkedFrame {
+    Data { epoch: u64, from: usize, tag: u64, data: Vec<f64> },
+    Poison { epoch: u64, cause: PoisonCause },
+}
+
+struct NetShared {
+    rank: usize,
+    size: usize,
+    mail: Mutex<MailState>,
+    signal: Condvar,
+    /// Mirrors `mail.poison.is_some()` for lock-free fast-path checks.
+    poison_flag: AtomicBool,
+    /// Set by `close`: subsequent socket errors/EOFs are orderly
+    /// teardown, not rank failures.
+    closing: AtomicBool,
+    /// Epoch to stamp outgoing frames with (mirrors `mail.epoch`;
+    /// senders read it without taking the mail lock).
+    send_epoch: AtomicU64,
+}
+
+impl NetShared {
+    /// First poison wins (it is the root cause); wake every waiter.
+    fn poison(&self, cause: PoisonCause) {
+        let mut mail = self.mail.lock().unwrap();
+        if mail.poison.is_none() {
+            mail.poison = Some(cause);
+            self.poison_flag.store(true, Ordering::Release);
+            self.signal.notify_all();
+        }
+    }
+}
+
+/// One peer link's outgoing queue, drained by its sender thread.
+enum SendItem {
+    Msg { epoch: u64, tag: u64, data: Vec<f64> },
+    Poison { epoch: u64, cause: PoisonCause },
+    Shutdown,
+}
+
+struct SendQueue {
+    q: Mutex<VecDeque<SendItem>>,
+    cv: Condvar,
+}
+
+impl SendQueue {
+    fn push(&self, item: SendItem) {
+        self.q.lock().unwrap().push_back(item);
+        self.cv.notify_one();
+    }
+}
+
+/// A [`Communicator`] whose ranks are separate OS processes joined by a
+/// full TCP mesh. See the module docs for the design.
+pub struct TcpComm {
+    shared: Arc<NetShared>,
+    /// Per-peer send queues; `None` at this rank's own index.
+    queues: Vec<Option<Arc<SendQueue>>>,
+    /// One stream clone per peer, kept for `shutdown` at close.
+    streams: Vec<Option<TcpStream>>,
+    senders: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    receivers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    closed: AtomicBool,
+}
+
+// -- mesh formation ---------------------------------------------------------
+
+/// Accepts incoming mesh links on behalf of every group this worker
+/// process hosts, routing each freshly connected peer to the
+/// [`TcpComm::form`] call for its session (by the `session_id` in the
+/// peer's Hello). One acceptor (and one listening port) per worker
+/// process, shared by all its sessions.
+pub struct MeshAcceptor {
+    addr: String,
+    state: Arc<Mutex<AcceptorState>>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+#[derive(Default)]
+struct AcceptorState {
+    /// Live `form` calls waiting for peers, by session id.
+    routes: HashMap<u64, mpsc::Sender<(usize, TcpStream)>>,
+    /// Peers that connected before their session's `form` registered
+    /// (formation is concurrent across ranks — arrival order is free).
+    pending: HashMap<u64, Vec<(usize, TcpStream)>>,
+}
+
+impl MeshAcceptor {
+    /// Bind a mesh listener on an ephemeral loopback port and start
+    /// accepting.
+    pub fn bind() -> crate::Result<Self> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding mesh listener")?;
+        let addr = listener.local_addr().context("mesh listener addr")?.to_string();
+        let state = Arc::new(Mutex::new(AcceptorState::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("mesh-accept".into())
+                .spawn(move || accept_loop(listener, state, stop))
+                .context("spawning mesh acceptor")?
+        };
+        Ok(MeshAcceptor { addr, state, stop, thread: Some(thread) })
+    }
+
+    /// The `host:port` peers should connect to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Route incoming links for `session_id` to the returned channel
+    /// (any that already arrived are replayed in arrival order).
+    fn register(&self, session_id: u64) -> mpsc::Receiver<(usize, TcpStream)> {
+        let (tx, rx) = mpsc::channel();
+        let mut state = self.state.lock().unwrap();
+        if let Some(backlog) = state.pending.remove(&session_id) {
+            for conn in backlog {
+                let _ = tx.send(conn);
+            }
+        }
+        state.routes.insert(session_id, tx);
+        rx
+    }
+
+    fn unregister(&self, session_id: u64) {
+        let mut state = self.state.lock().unwrap();
+        state.routes.remove(&session_id);
+        state.pending.remove(&session_id);
+    }
+}
+
+impl Drop for MeshAcceptor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<Mutex<AcceptorState>>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        // read the Hello inline (peers send it immediately on connect; a
+        // bounded read timeout keeps a wedged stray from stalling the
+        // loop forever)
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+        let (session_id, from_rank) = match read_hello(&stream) {
+            Ok(h) => h,
+            Err(e) => {
+                log::debug!("mesh acceptor: dropping connection: {e:#}");
+                continue;
+            }
+        };
+        let _ = stream.set_read_timeout(None);
+        let mut state = state.lock().unwrap();
+        match state.routes.get(&session_id) {
+            Some(tx) => {
+                // a closed route (form finished/failed) just drops the
+                // connection, which is the right outcome for a straggler
+                let _ = tx.send((from_rank, stream));
+            }
+            None => {
+                state
+                    .pending
+                    .entry(session_id)
+                    .or_default()
+                    .push((from_rank, stream));
+            }
+        }
+    }
+}
+
+fn read_hello(mut stream: &TcpStream) -> crate::Result<(u64, usize)> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf).context("reading hello length")?;
+    let len = u32::from_le_bytes(len_buf);
+    anyhow::ensure!(len <= MAX_HELLO_FRAME, "hello frame of {len} bytes");
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf).context("reading hello frame")?;
+    match FabricFrame::decode(&buf)? {
+        FabricFrame::Hello { session_id, from_rank } => {
+            Ok((session_id, from_rank as usize))
+        }
+        other => anyhow::bail!("expected Hello, got {other:?}"),
+    }
+}
+
+fn write_hello(stream: &mut TcpStream, session_id: u64, from_rank: usize) -> crate::Result<()> {
+    let frame = FabricFrame::Hello { session_id, from_rank: from_rank as u32 }.encode();
+    stream.write_all(&(frame.len() as u32).to_le_bytes()).context("writing hello")?;
+    stream.write_all(&frame).context("writing hello")?;
+    Ok(())
+}
+
+impl TcpComm {
+    /// Join the full mesh for one group: connect to every lower-ranked
+    /// peer (sending a Hello) and accept every higher-ranked one through
+    /// `acceptor` — each pair of ranks ends up with exactly one link.
+    /// `peer_addrs[j]` is rank `j`'s mesh listener; this rank's own
+    /// entry is ignored. Blocks until the mesh is complete or
+    /// `opts.form_timeout` expires.
+    pub fn form(
+        acceptor: &MeshAcceptor,
+        session_id: u64,
+        rank: usize,
+        peer_addrs: &[String],
+        opts: &FabricOptions,
+    ) -> crate::Result<TcpComm> {
+        let size = peer_addrs.len();
+        anyhow::ensure!(rank < size, "rank {rank} outside group of {size}");
+        let deadline = Instant::now() + opts.form_timeout;
+        let rx = acceptor.register(session_id);
+        let result = Self::form_inner(session_id, rank, peer_addrs, opts, deadline, &rx);
+        acceptor.unregister(session_id);
+        result
+    }
+
+    fn form_inner(
+        session_id: u64,
+        rank: usize,
+        peer_addrs: &[String],
+        opts: &FabricOptions,
+        deadline: Instant,
+        rx: &mpsc::Receiver<(usize, TcpStream)>,
+    ) -> crate::Result<TcpComm> {
+        let size = peer_addrs.len();
+        let mut links: Vec<Option<TcpStream>> = (0..size).map(|_| None).collect();
+        // dial every lower rank (they accept; ties are impossible, so the
+        // mesh gets exactly one link per pair)
+        for (j, addr) in peer_addrs.iter().enumerate().take(rank) {
+            let mut stream = connect_until(addr, deadline)
+                .with_context(|| format!("dialing mesh peer rank {j} at {addr}"))?;
+            write_hello(&mut stream, session_id, rank)?;
+            links[j] = Some(stream);
+        }
+        // accept every higher rank
+        let mut missing = size - rank - 1;
+        while missing > 0 {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| anyhow::anyhow!("mesh formation timed out"))?;
+            let (from, stream) = rx
+                .recv_timeout(remaining)
+                .map_err(|_| anyhow::anyhow!("mesh formation timed out"))?;
+            anyhow::ensure!(
+                from > rank && from < size,
+                "unexpected mesh hello from rank {from}"
+            );
+            anyhow::ensure!(
+                links[from].is_none(),
+                "duplicate mesh hello from rank {from}"
+            );
+            links[from] = Some(stream);
+            missing -= 1;
+        }
+        Self::from_links(rank, links, opts)
+    }
+
+    /// Wire up the threads over an already-complete set of links.
+    fn from_links(
+        rank: usize,
+        links: Vec<Option<TcpStream>>,
+        opts: &FabricOptions,
+    ) -> crate::Result<TcpComm> {
+        let size = links.len();
+        let shared = Arc::new(NetShared {
+            rank,
+            size,
+            mail: Mutex::new(MailState {
+                epoch: 0,
+                queues: HashMap::new(),
+                parked: Vec::new(),
+                poison: None,
+                barrier_gen: 0,
+            }),
+            signal: Condvar::new(),
+            poison_flag: AtomicBool::new(false),
+            closing: AtomicBool::new(false),
+            send_epoch: AtomicU64::new(0),
+        });
+        let mut queues: Vec<Option<Arc<SendQueue>>> = Vec::with_capacity(size);
+        let mut streams: Vec<Option<TcpStream>> = Vec::with_capacity(size);
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for (peer, link) in links.into_iter().enumerate() {
+            let Some(stream) = link else {
+                queues.push(None);
+                streams.push(None);
+                continue;
+            };
+            let queue = Arc::new(SendQueue {
+                q: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+            });
+            let wstream = stream.try_clone().context("cloning mesh stream")?;
+            let rstream = stream.try_clone().context("cloning mesh stream")?;
+            let framed = Framed::tcp(wstream, opts.buf_bytes)?;
+            senders.push(
+                std::thread::Builder::new()
+                    .name(format!("mesh-send-{rank}-{peer}"))
+                    .spawn({
+                        let queue = Arc::clone(&queue);
+                        let shared = Arc::clone(&shared);
+                        let eager = opts.eager_bytes;
+                        move || sender_loop(framed, queue, shared, peer, eager)
+                    })
+                    .context("spawning mesh sender")?,
+            );
+            receivers.push(
+                std::thread::Builder::new()
+                    .name(format!("mesh-recv-{rank}-{peer}"))
+                    .spawn({
+                        let shared = Arc::clone(&shared);
+                        move || receiver_loop(rstream, shared, peer)
+                    })
+                    .context("spawning mesh receiver")?,
+            );
+            queues.push(Some(queue));
+            streams.push(Some(stream));
+        }
+        Ok(TcpComm {
+            shared,
+            queues,
+            streams,
+            senders: Mutex::new(senders),
+            receivers: Mutex::new(receivers),
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    /// Bump the group epoch and clear all transient state — queued
+    /// messages, poison, barrier generations. Frames stamped with a past
+    /// epoch that are still in flight will be dropped on arrival; frames
+    /// from peers that reset before us are parked and applied here.
+    pub fn reset(&self) {
+        let mut mail = self.shared.mail.lock().unwrap();
+        mail.epoch += 1;
+        let epoch = mail.epoch;
+        self.shared.send_epoch.store(epoch, Ordering::Release);
+        mail.queues.clear();
+        mail.poison = None;
+        mail.barrier_gen = 0;
+        self.shared.poison_flag.store(false, Ordering::Release);
+        // apply (or keep parking) frames from peers that are ahead of us
+        for frame in std::mem::take(&mut mail.parked) {
+            match frame {
+                ParkedFrame::Data { epoch: e, from, tag, data } => {
+                    if e == epoch {
+                        mail.queues.entry((from, tag)).or_default().push_back(data);
+                    } else if e > epoch {
+                        mail.parked.push(ParkedFrame::Data { epoch: e, from, tag, data });
+                    }
+                }
+                ParkedFrame::Poison { epoch: e, cause } => {
+                    if e == epoch {
+                        if mail.poison.is_none() {
+                            mail.poison = Some(cause);
+                            self.shared.poison_flag.store(true, Ordering::Release);
+                        }
+                    } else if e > epoch {
+                        mail.parked.push(ParkedFrame::Poison { epoch: e, cause });
+                    }
+                }
+            }
+        }
+        self.shared.signal.notify_all();
+    }
+
+    /// Orderly teardown: stop the sender threads (each sends a final
+    /// Close frame so the peer's EOF is not mistaken for a rank
+    /// failure), then unblock and join the receivers. Idempotent; also
+    /// run by Drop.
+    pub fn close(&self) {
+        if self.closed.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.shared.closing.store(true, Ordering::Release);
+        for queue in self.queues.iter().flatten() {
+            queue.push(SendItem::Shutdown);
+        }
+        for t in self.senders.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        // senders are done writing; now unblock receivers parked in
+        // read_exact. Read-half only: a full shutdown's FIN could race
+        // ahead of a slower peer's reads of our final frames.
+        for stream in self.streams.iter().flatten() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        for t in self.receivers.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Test hook: kill every link abruptly (both directions, no Close
+    /// frames) — what a dying rank process looks like to its peers.
+    #[cfg(test)]
+    fn sever(&self) {
+        for stream in self.streams.iter().flatten() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for TcpComm {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Dial with retry until `deadline`: during concurrent formation a
+/// peer's listener exists but its accept loop may briefly lag.
+fn connect_until(addr: &str, deadline: Instant) -> crate::Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).context("mesh connect timed out");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn sender_loop(
+    mut framed: Framed<TcpStream, TcpStream>,
+    queue: Arc<SendQueue>,
+    shared: Arc<NetShared>,
+    peer: usize,
+    eager_bytes: usize,
+) {
+    let mut need_flush = false;
+    loop {
+        // pop one item; when the queue runs dry, flush buffered bytes
+        // before parking so eager messages never wait on a full buffer
+        let item = {
+            let mut q = queue.q.lock().unwrap();
+            loop {
+                if let Some(item) = q.pop_front() {
+                    break item;
+                }
+                if need_flush {
+                    drop(q);
+                    if let Err(e) = framed.flush() {
+                        sender_fail(&shared, peer, e);
+                        return;
+                    }
+                    need_flush = false;
+                    q = queue.q.lock().unwrap();
+                    continue;
+                }
+                q = queue.cv.wait(q).unwrap();
+            }
+        };
+        match item {
+            SendItem::Msg { epoch, tag, data } => {
+                let header = fabric_data_header(epoch, tag);
+                #[cfg(target_endian = "little")]
+                let payload = crate::protocol::wire::f64s_as_le_bytes(&data);
+                #[cfg(target_endian = "big")]
+                let swapped: Vec<u8> = {
+                    let mut w = crate::protocol::Writer::new();
+                    w.raw_f64s(&data);
+                    w.into_bytes()
+                };
+                #[cfg(target_endian = "big")]
+                let payload = &swapped[..];
+                if header.len() + payload.len() > MAX_FRAME as usize {
+                    // cannot be framed: this rank's own send is at fault
+                    log::error!(
+                        "mesh send of {} bytes exceeds frame cap; poisoning group",
+                        payload.len()
+                    );
+                    shared.poison(PoisonCause::RankFailed(shared.rank));
+                    continue;
+                }
+                if let Err(e) = framed.send_gathered(&header, payload, eager_bytes) {
+                    sender_fail(&shared, peer, e);
+                    return;
+                }
+                need_flush = true;
+            }
+            SendItem::Poison { epoch, cause } => {
+                // poison is urgent: peers may be blocked in a recv on us
+                let frame = FabricFrame::Poison { epoch, cause }.encode();
+                if framed.send(&frame).and_then(|()| framed.flush()).is_err() {
+                    // the link is already gone; the peer learns through
+                    // its own EOF instead
+                    return;
+                }
+                need_flush = false;
+            }
+            SendItem::Shutdown => {
+                let _ = framed.send(&FabricFrame::Close.encode());
+                let _ = framed.flush();
+                return;
+            }
+        }
+    }
+}
+
+fn sender_fail(shared: &NetShared, peer: usize, e: anyhow::Error) {
+    if !shared.closing.load(Ordering::Acquire) {
+        log::warn!(
+            "mesh link to rank {peer} failed on send: {e:#}; poisoning group"
+        );
+        shared.poison(PoisonCause::RankFailed(peer));
+    }
+}
+
+fn receiver_loop(stream: TcpStream, shared: Arc<NetShared>, peer: usize) {
+    // read-only Framed: frames decode borrowed out of its reusable
+    // receive buffer; the write half is never used
+    let mut framed = Framed::new(stream, std::io::sink());
+    loop {
+        let frame = match framed.recv_ref() {
+            Ok(buf) => buf,
+            Err(_) => {
+                // EOF or error: a clean peer sends Close first, so this
+                // is either our own teardown or the peer dying
+                if !shared.closing.load(Ordering::Acquire) {
+                    log::warn!("mesh link to rank {peer} dropped; poisoning group");
+                    shared.poison(PoisonCause::RankFailed(peer));
+                }
+                return;
+            }
+        };
+        match FabricFrame::decode(frame) {
+            Ok(FabricFrame::Data { epoch, tag, payload }) => {
+                // the one receive-leg copy: frame buffer -> delivered Vec
+                let data = le_f64s_to_vec(payload);
+                let mut mail = shared.mail.lock().unwrap();
+                if epoch == mail.epoch {
+                    mail.queues.entry((peer, tag)).or_default().push_back(data);
+                    shared.signal.notify_all();
+                } else if epoch > mail.epoch {
+                    mail.parked.push(ParkedFrame::Data { epoch, from: peer, tag, data });
+                }
+                // past epochs: straggler from a finished task — drop
+            }
+            Ok(FabricFrame::Poison { epoch, cause }) => {
+                let mut mail = shared.mail.lock().unwrap();
+                if epoch == mail.epoch {
+                    if mail.poison.is_none() {
+                        mail.poison = Some(cause);
+                        shared.poison_flag.store(true, Ordering::Release);
+                        shared.signal.notify_all();
+                    }
+                } else if epoch > mail.epoch {
+                    mail.parked.push(ParkedFrame::Poison { epoch, cause });
+                }
+            }
+            Ok(FabricFrame::Close) => return,
+            Ok(other) => {
+                log::warn!("unexpected mesh frame from rank {peer}: {other:?}");
+            }
+            Err(e) => {
+                if !shared.closing.load(Ordering::Acquire) {
+                    log::warn!(
+                        "corrupt mesh frame from rank {peer}: {e}; poisoning group"
+                    );
+                    shared.poison(PoisonCause::RankFailed(peer));
+                }
+                return;
+            }
+        }
+    }
+}
+
+impl Communicator for TcpComm {
+    fn rank(&self) -> usize {
+        self.shared.rank
+    }
+
+    fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    fn send(&self, to: usize, tag: u64, data: Vec<f64>) {
+        if to == self.shared.rank {
+            // self-sends never touch the wire (and carry no epoch: they
+            // cannot straddle a reset)
+            let mut mail = self.shared.mail.lock().unwrap();
+            mail.queues.entry((to, tag)).or_default().push_back(data);
+            self.shared.signal.notify_all();
+            return;
+        }
+        let Some(queue) = self.queues.get(to).and_then(|q| q.as_ref()) else {
+            log::error!("mesh send to unknown rank {to}; dropping");
+            return;
+        };
+        queue.push(SendItem::Msg {
+            epoch: self.shared.send_epoch.load(Ordering::Acquire),
+            tag,
+            data,
+        });
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Result<Vec<f64>, CommError> {
+        let mut mail = self.shared.mail.lock().unwrap();
+        loop {
+            if let Some(cause) = mail.poison {
+                return Err(cause.to_err());
+            }
+            if let Some(queue) = mail.queues.get_mut(&(from, tag)) {
+                if let Some(data) = queue.pop_front() {
+                    return Ok(data);
+                }
+            }
+            mail = self.shared.signal.wait(mail).unwrap();
+        }
+    }
+
+    fn recv_deadline(
+        &self,
+        from: usize,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<Vec<f64>, CommError> {
+        let deadline = Instant::now() + timeout;
+        let mut mail = self.shared.mail.lock().unwrap();
+        loop {
+            if let Some(cause) = mail.poison {
+                return Err(cause.to_err());
+            }
+            if let Some(queue) = mail.queues.get_mut(&(from, tag)) {
+                if let Some(data) = queue.pop_front() {
+                    return Ok(data);
+                }
+            }
+            let Some(remaining) = deadline.checked_duration_since(Instant::now())
+            else {
+                return Err(CommError::Timeout { from, tag });
+            };
+            // on wake the loop re-polls; a timed-out wait falls through
+            // to the deadline check above and returns Timeout
+            let (guard, _) =
+                self.shared.signal.wait_timeout(mail, remaining).unwrap();
+            mail = guard;
+        }
+    }
+
+    fn barrier(&self) -> Result<(), CommError> {
+        let p = self.shared.size;
+        let gen = {
+            let mut mail = self.shared.mail.lock().unwrap();
+            if let Some(cause) = mail.poison {
+                return Err(cause.to_err());
+            }
+            let gen = mail.barrier_gen;
+            mail.barrier_gen += 1;
+            gen
+        };
+        if p == 1 {
+            return Ok(());
+        }
+        // dissemination barrier: ⌈log2 p⌉ rounds, in round k every rank
+        // signals rank + 2^k and hears from rank − 2^k — after the last
+        // round every rank transitively covers all p arrivals
+        let mut k = 0u64;
+        let mut dist = 1usize;
+        while dist < p {
+            let tag = BARRIER_TAG_BIT | (gen << 8) | k;
+            let to = (self.shared.rank + dist) % p;
+            let from = (self.shared.rank + p - dist) % p;
+            self.send(to, tag, Vec::new());
+            self.recv(from, tag)?;
+            dist <<= 1;
+            k += 1;
+        }
+        Ok(())
+    }
+
+    fn poison(&self, cause: PoisonCause) {
+        self.shared.poison(cause);
+        // propagate the root cause over the mesh: peers may be blocked
+        // on a rank whose link to *them* is still healthy
+        let epoch = self.shared.send_epoch.load(Ordering::Acquire);
+        for queue in self.queues.iter().flatten() {
+            queue.push(SendItem::Poison { epoch, cause });
+        }
+    }
+
+    fn poison_cause(&self) -> Option<PoisonCause> {
+        if !self.shared.poison_flag.load(Ordering::Acquire) {
+            return None;
+        }
+        self.shared.mail.lock().unwrap().poison
+    }
+}
+
+impl Fabric for TcpComm {
+    fn reset(&self) {
+        TcpComm::reset(self)
+    }
+
+    fn as_comm(&self) -> &dyn Communicator {
+        self
+    }
+}
+
+/// Form an `n`-rank loopback mesh inside one process (tests/benches):
+/// every rank gets its own acceptor and the meshes form concurrently,
+/// exactly as the multi-process path does.
+pub fn loopback_group(n: usize, opts: &FabricOptions) -> crate::Result<Vec<TcpComm>> {
+    let acceptors: Vec<MeshAcceptor> =
+        (0..n).map(|_| MeshAcceptor::bind()).collect::<crate::Result<_>>()?;
+    let addrs: Vec<String> =
+        acceptors.iter().map(|a| a.addr().to_string()).collect();
+    let mut threads = Vec::new();
+    for (rank, acceptor) in acceptors.into_iter().enumerate() {
+        let addrs = addrs.clone();
+        let opts = opts.clone();
+        threads.push(std::thread::spawn(move || {
+            TcpComm::form(&acceptor, 0, rank, &addrs, &opts)
+        }));
+    }
+    threads
+        .into_iter()
+        .map(|t| t.join().expect("loopback form thread panicked"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::TAG_WINDOW;
+
+    fn tiny_eager() -> FabricOptions {
+        FabricOptions { eager_bytes: 64, ..FabricOptions::default() }
+    }
+
+    /// Run `f(comm)` on one thread per rank of a loopback mesh.
+    fn run_group<F>(n: usize, opts: &FabricOptions, f: F)
+    where
+        F: Fn(&TcpComm) + Send + Sync + 'static,
+    {
+        let comms = loopback_group(n, opts).unwrap();
+        let f = Arc::new(f);
+        let threads: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    f(&comm);
+                    comm.close();
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        run_group(2, &FabricOptions::default(), |comm| {
+            let me = comm.rank();
+            let peer = 1 - me;
+            comm.send(peer, 0, vec![me as f64; 3]);
+            let got = comm.recv(peer, 0).unwrap();
+            assert_eq!(got, vec![peer as f64; 3]);
+        });
+    }
+
+    #[test]
+    fn self_send_delivers_locally() {
+        run_group(2, &FabricOptions::default(), |comm| {
+            comm.send(comm.rank(), 7, vec![42.0]);
+            assert_eq!(comm.recv(comm.rank(), 7).unwrap(), vec![42.0]);
+        });
+    }
+
+    #[test]
+    fn large_payloads_cross_the_writev_path() {
+        // eager_bytes of 64 forces every real payload through the
+        // gathered-writev rendezvous leg; values must survive exactly
+        let n = 10_000usize;
+        run_group(2, &tiny_eager(), move |comm| {
+            let me = comm.rank();
+            let peer = 1 - me;
+            let data: Vec<f64> = (0..n).map(|i| (i + me) as f64 * 0.5).collect();
+            comm.send(peer, TAG_WINDOW, data);
+            let got = comm.recv(peer, TAG_WINDOW).unwrap();
+            assert_eq!(got.len(), n);
+            for (i, v) in got.iter().enumerate() {
+                assert_eq!(*v, (i + peer) as f64 * 0.5);
+            }
+        });
+    }
+
+    #[test]
+    fn per_sender_tag_order_is_preserved() {
+        run_group(2, &FabricOptions::default(), |comm| {
+            let peer = 1 - comm.rank();
+            for i in 0..100 {
+                comm.send(peer, 5, vec![i as f64]);
+            }
+            for i in 0..100 {
+                assert_eq!(comm.recv(peer, 5).unwrap(), vec![i as f64]);
+            }
+        });
+    }
+
+    #[test]
+    fn barrier_synchronizes_and_repeats() {
+        use std::sync::atomic::AtomicUsize;
+        let hits = Arc::new(AtomicUsize::new(0));
+        let hits2 = Arc::clone(&hits);
+        run_group(4, &FabricOptions::default(), move |comm| {
+            for round in 0..5 {
+                hits2.fetch_add(1, Ordering::SeqCst);
+                comm.barrier().unwrap();
+                // a completed barrier implies every rank entered it,
+                // i.e. incremented for this round already
+                let seen = hits2.load(Ordering::SeqCst);
+                assert!(seen >= (round + 1) * 4, "barrier let a rank through early");
+            }
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_without_poisoning() {
+        run_group(2, &FabricOptions::default(), |comm| {
+            let peer = 1 - comm.rank();
+            let err = comm
+                .recv_deadline(peer, 99, Duration::from_millis(30))
+                .unwrap_err();
+            assert_eq!(err, CommError::Timeout { from: peer, tag: 99 });
+            assert_eq!(comm.poison_cause(), None);
+            // the link still works afterwards
+            comm.send(peer, 100, vec![1.0]);
+            assert_eq!(comm.recv(peer, 100).unwrap(), vec![1.0]);
+        });
+    }
+
+    #[test]
+    fn reset_drops_stale_messages_and_reuses_links() {
+        let comms = loopback_group(2, &FabricOptions::default()).unwrap();
+        let c1 = &comms[1];
+        let c0 = &comms[0];
+        // a message from the "previous task" that rank 1 never received
+        c0.send(1, 3, vec![13.0]);
+        // both ranks reset (the dispatcher does this between tasks);
+        // rank 1's reset either clears the queued value or the epoch
+        // stamp drops it on arrival — both orders must hide it
+        c0.reset();
+        c1.reset();
+        c0.send(1, 3, vec![14.0]);
+        assert_eq!(c1.recv(0, 3).unwrap(), vec![14.0]);
+        // and the next epoch works in both directions
+        c1.send(0, 4, vec![15.0]);
+        assert_eq!(c0.recv(1, 4).unwrap(), vec![15.0]);
+    }
+
+    #[test]
+    fn reset_clears_poison() {
+        let comms = loopback_group(2, &FabricOptions::default()).unwrap();
+        comms[0].shared.poison(PoisonCause::HardCancel);
+        assert_eq!(comms[0].recv(1, 0).unwrap_err(), CommError::Cancelled);
+        comms[0].reset();
+        assert_eq!(comms[0].poison_cause(), None);
+    }
+
+    #[test]
+    fn poison_propagates_to_peers() {
+        run_group(3, &FabricOptions::default(), |comm| {
+            if comm.rank() == 2 {
+                comm.poison(PoisonCause::RankFailed(2));
+            }
+            // every rank (including the poisoner) unwinds with the root
+            // cause, even though ranks 0/1 have healthy links
+            let err = comm.recv((comm.rank() + 1) % 3, 0).unwrap_err();
+            assert_eq!(err, CommError::PeerFailed { rank: 2 });
+        });
+    }
+
+    #[test]
+    fn dropped_link_poisons_with_failed_rank() {
+        let comms = loopback_group(2, &FabricOptions::default()).unwrap();
+        let mut it = comms.into_iter();
+        let c0 = it.next().unwrap();
+        let c1 = it.next().unwrap();
+        let waiter = std::thread::spawn(move || {
+            let err = c1.recv(0, 0).unwrap_err();
+            assert_eq!(err, CommError::PeerFailed { rank: 0 });
+        });
+        // rank 0 dies without a Close frame
+        c0.sever();
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn orderly_close_does_not_poison_peer() {
+        let comms = loopback_group(2, &FabricOptions::default()).unwrap();
+        let mut it = comms.into_iter();
+        let c0 = it.next().unwrap();
+        let c1 = it.next().unwrap();
+        c0.close();
+        // give c1's receiver time to observe the Close frame
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(c1.poison_cause(), None);
+    }
+}

@@ -66,8 +66,17 @@ pub struct TransferConfig {
     pub pull_stripe_rows: usize,
     /// Max outstanding ranged pull requests per worker link (windowed
     /// pipelining: the worker prepares stripe k+1 while the client
-    /// drains stripe k, so the socket never idles).
+    /// drains stripe k, so the socket never idles). This is the hard cap;
+    /// the effective window adapts to the stripe size — see
+    /// [`TransferConfig::pull_window_bytes`].
     pub pull_window: usize,
+    /// Byte budget for in-flight (requested but undrained) pull stripes
+    /// per worker link. The effective window is
+    /// `pull_window_bytes / stripe_bytes`, clamped to `[1, pull_window]`,
+    /// so narrow matrices pipeline deeply while wide ones stop queueing
+    /// stripes the client cannot drain (adaptive pull-side backpressure).
+    /// 0 disables the byte budget (always use `pull_window`).
+    pub pull_window_bytes: usize,
 }
 
 impl TransferConfig {
@@ -187,6 +196,70 @@ pub struct StorageConfig {
     pub spill_dir: String,
 }
 
+/// How a serve-mode coordinator runs its worker ranks (protocol v8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricMode {
+    /// Ranks are threads in the server process over [`LocalComm`]
+    /// mailboxes (the seed behavior).
+    ///
+    /// [`LocalComm`]: crate::collectives::LocalComm
+    Local,
+    /// Ranks are separate OS processes (`alchemist worker --connect`)
+    /// joined by a coordinator-brokered TCP mesh
+    /// ([`crate::collectives::TcpComm`], `docs/fabric.md`).
+    Tcp,
+}
+
+impl FabricMode {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "local" => FabricMode::Local,
+            "tcp" => FabricMode::Tcp,
+            other => bail!("unknown fabric mode {other:?} (local|tcp)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FabricMode::Local => "local",
+            FabricMode::Tcp => "tcp",
+        }
+    }
+}
+
+/// Network rank-fabric transport tuning (protocol v8, `docs/fabric.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    /// Transport for serve-mode worker ranks.
+    pub mode: FabricMode,
+    /// Payloads at or above this stream through the gathered-write
+    /// (`writev`) rendezvous path; smaller ones are buffered eagerly.
+    pub eager_bytes: usize,
+    /// Userspace buffer per mesh link.
+    pub buf_bytes: usize,
+    /// Seconds a rank waits for the full peer mesh to form.
+    pub form_timeout_s: f64,
+    /// Seconds the coordinator waits for spawned worker processes to
+    /// attach before failing startup.
+    pub attach_timeout_s: f64,
+    /// Binary spawned as the worker process. Empty (the default) means
+    /// the coordinator's own executable — correct for `alchemist serve`;
+    /// test harnesses point this at the built `alchemist` binary since
+    /// *their* executable is the test runner.
+    pub worker_exe: String,
+}
+
+impl FabricConfig {
+    /// The transport-level options for [`crate::collectives::TcpComm`].
+    pub fn options(&self) -> crate::collectives::FabricOptions {
+        crate::collectives::FabricOptions {
+            eager_bytes: self.eager_bytes,
+            buf_bytes: self.buf_bytes,
+            form_timeout: std::time::Duration::from_secs_f64(self.form_timeout_s),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Config {
     /// Master seed; all generator/jitter streams derive from it.
@@ -210,6 +283,7 @@ pub struct Config {
     pub simnet: SimNetConfig,
     pub scheduler: SchedulerConfig,
     pub storage: StorageConfig,
+    pub fabric: FabricConfig,
     /// sparklite driver memory cap (bytes) — reproduces Table 1's "Spark
     /// cannot run >10k features" capability boundary.
     pub spark_driver_max_bytes: usize,
@@ -231,6 +305,7 @@ impl Default for Config {
                 max_buf_bytes: 8 << 20,
                 pull_stripe_rows: 1024,
                 pull_window: 4,
+                pull_window_bytes: 32 << 20,
             },
             overhead: OverheadConfig {
                 scheduler_delay_s: 0.40,
@@ -251,6 +326,14 @@ impl Default for Config {
                 budget_bytes: 0,
                 total_bytes: 0,
                 spill_dir: String::new(),
+            },
+            fabric: FabricConfig {
+                mode: FabricMode::Local,
+                eager_bytes: 4 << 10,
+                buf_bytes: 1 << 20,
+                form_timeout_s: 20.0,
+                attach_timeout_s: 30.0,
+                worker_exe: String::new(),
             },
             spark_driver_max_bytes: 192 << 20,
         }
@@ -327,6 +410,9 @@ impl Config {
                 self.transfer.pull_stripe_rows = int(value)?
             }
             "transfer.pull_window" => self.transfer.pull_window = int(value)?,
+            "transfer.pull_window_bytes" => {
+                self.transfer.pull_window_bytes = int(value)?
+            }
             "overhead.scheduler_delay_s" => {
                 self.overhead.scheduler_delay_s = fl(value)?
             }
@@ -358,6 +444,16 @@ impl Config {
             }
             "storage.total_bytes" => self.storage.total_bytes = int(value)? as u64,
             "storage.spill_dir" => self.storage.spill_dir = value.to_string(),
+            "fabric.mode" => self.fabric.mode = FabricMode::parse(value)?,
+            "fabric.worker_exe" => {
+                self.fabric.worker_exe = value.to_string()
+            }
+            "fabric.eager_bytes" => self.fabric.eager_bytes = int(value)?,
+            "fabric.buf_bytes" => self.fabric.buf_bytes = int(value)?,
+            "fabric.form_timeout_s" => self.fabric.form_timeout_s = fl(value)?,
+            "fabric.attach_timeout_s" => {
+                self.fabric.attach_timeout_s = fl(value)?
+            }
             "spark_driver_max_bytes" => {
                 self.spark_driver_max_bytes = int(value)?
             }
@@ -379,6 +475,46 @@ impl Config {
             0 => per_rank_cap,
             t => t.min(per_rank_cap),
         }
+    }
+
+    /// The `k=v` override pairs a spawned worker process must inherit so
+    /// its engines, store, and fabric agree with the coordinator's
+    /// (passed as `--set` on the `alchemist worker` command line). Only
+    /// worker-consumed keys are emitted, and values containing commas
+    /// are skipped — `--set` splits its argument on commas, so such a
+    /// value cannot ride the command line and the worker falls back to
+    /// its compiled default.
+    pub fn worker_override_pairs(&self) -> Vec<(String, String)> {
+        let mut pairs: Vec<(String, String)> = vec![
+            ("seed".into(), self.seed.to_string()),
+            ("engine".into(), self.engine.as_str().into()),
+            ("engine.threads".into(), self.engine_threads.to_string()),
+            (
+                "artifacts_dir".into(),
+                self.resolved_artifacts_dir().display().to_string(),
+            ),
+            ("tile".into(), self.tile.to_string()),
+            ("panel_rows".into(), self.panel_rows.to_string()),
+            (
+                "storage.budget_bytes".into(),
+                self.storage.budget_bytes.to_string(),
+            ),
+            (
+                "storage.total_bytes".into(),
+                self.storage.total_bytes.to_string(),
+            ),
+            ("fabric.eager_bytes".into(), self.fabric.eager_bytes.to_string()),
+            ("fabric.buf_bytes".into(), self.fabric.buf_bytes.to_string()),
+            (
+                "fabric.form_timeout_s".into(),
+                self.fabric.form_timeout_s.to_string(),
+            ),
+        ];
+        if !self.storage.spill_dir.is_empty() {
+            pairs.push(("storage.spill_dir".into(), self.storage.spill_dir.clone()));
+        }
+        pairs.retain(|(_, v)| !v.contains(','));
+        pairs
     }
 
     /// Resolve the artifacts dir relative to the crate root when the
@@ -517,6 +653,52 @@ mod tests {
         assert_eq!(c.storage.budget_bytes, 1 << 20);
         assert_eq!(c.storage.total_bytes, 4 << 20);
         assert_eq!(c.storage.spill_dir, "/tmp/spill");
+    }
+
+    #[test]
+    fn fabric_keys_parse_and_default_local() {
+        let c = Config::default();
+        assert_eq!(c.fabric.mode, FabricMode::Local);
+        assert_eq!(c.fabric.eager_bytes, 4 << 10);
+        let text = "[fabric]\nmode = \"tcp\"\neager_bytes = 512\n\
+                    buf_bytes = 65536\nform_timeout_s = 5.5\n\
+                    attach_timeout_s = 9.0\n";
+        let mut c = Config::default();
+        c.apply_pairs(&Config::from_str_pairs(text).unwrap()).unwrap();
+        assert_eq!(c.fabric.mode, FabricMode::Tcp);
+        assert_eq!(c.fabric.eager_bytes, 512);
+        assert_eq!(c.fabric.buf_bytes, 1 << 16);
+        assert_eq!(c.fabric.form_timeout_s, 5.5);
+        assert_eq!(c.fabric.attach_timeout_s, 9.0);
+        let opts = c.fabric.options();
+        assert_eq!(opts.eager_bytes, 512);
+        assert_eq!(opts.form_timeout, std::time::Duration::from_secs_f64(5.5));
+        assert!(Config::default().apply("fabric.mode", "udp").is_err());
+    }
+
+    #[test]
+    fn worker_override_pairs_round_trip() {
+        let mut c = Config::default();
+        c.apply("engine", "native").unwrap();
+        c.apply("engine.threads", "2").unwrap();
+        c.apply("fabric.eager_bytes", "128").unwrap();
+        let mut w = Config::default();
+        for (k, v) in c.worker_override_pairs() {
+            assert!(!v.contains(','), "{k} value would split --set");
+            w.apply(&k, &v).unwrap();
+        }
+        assert_eq!(w.engine, EngineKind::Native);
+        assert_eq!(w.engine_threads, 2);
+        assert_eq!(w.fabric.eager_bytes, 128);
+        assert_eq!(w.seed, c.seed);
+    }
+
+    #[test]
+    fn pull_window_bytes_parses() {
+        let mut c = Config::default();
+        assert_eq!(c.transfer.pull_window_bytes, 32 << 20);
+        c.apply("transfer.pull_window_bytes", "1048576").unwrap();
+        assert_eq!(c.transfer.pull_window_bytes, 1 << 20);
     }
 
     #[test]

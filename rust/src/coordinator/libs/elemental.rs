@@ -375,7 +375,7 @@ fn spin_routine(params: &Params, ctx: &mut WorkerCtx) -> crate::Result<TaskOutpu
             [if std::time::Instant::now() >= deadline { 1.0 } else { 0.0 }];
         crate::collectives::allreduce_sum(
             ctx.comm,
-            0x5350_0000 + (slices % 64) * 256,
+            0x5350_0000 + (slices % 64) * crate::collectives::TAG_WINDOW,
             &mut done,
         )?;
         if done[0] > 0.0 {

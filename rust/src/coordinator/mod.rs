@@ -18,14 +18,23 @@
 //! them together, and group-rank-0's metadata becomes the `Done` payload
 //! clients poll or wait for (see `docs/tasks.md`).
 //!
-//! Differences from the paper, all documented in DESIGN.md §2: workers are
-//! threads in the server process rather than MPI ranks across nodes (the
-//! transfer path is still real TCP); libraries are compiled in and
-//! resolved through the same `registerLibrary(name, path)` API instead of
-//! `dlopen`.
+//! Since protocol v8 the pool has two shapes (`fabric.mode`,
+//! `docs/fabric.md`): **local** ranks are threads in the server process
+//! over [`crate::collectives::LocalComm`] mailboxes (the seed behavior),
+//! **tcp** ranks are separate `alchemist worker` OS processes ([`remote`])
+//! whose session groups communicate rank↔rank over a brokered
+//! [`crate::collectives::TcpComm`] mesh — the paper's driver/worker
+//! process split, with the MPI communicator replaced by TCP.
+//!
+//! Differences from the paper, all documented in DESIGN.md §2: worker
+//! ranks live on one host (threads or localhost processes) rather than
+//! MPI ranks across nodes (the transfer and collective paths are still
+//! real TCP); libraries are compiled in and resolved through the same
+//! `registerLibrary(name, path)` API instead of `dlopen`.
 
 pub mod libs;
 pub mod registry;
+pub mod remote;
 pub mod server;
 pub mod store;
 pub mod worker;

@@ -83,6 +83,19 @@ pub trait Library: Send + Sync {
     ) -> crate::Result<TaskOutput>;
 }
 
+/// Resolve a compiled-in library by its canonical name. Worker
+/// *processes* (protocol v8) use this: the coordinator's [`Registry`]
+/// maps client-chosen names to libraries, but only the library's own
+/// [`Library::name`] crosses the wire — a worker process rebuilds the
+/// instance from that canonical name, never from the client alias.
+pub fn builtin(name: &str) -> crate::Result<Arc<dyn Library>> {
+    Ok(match name {
+        "skylark" => Arc::new(super::libs::skylark::Skylark),
+        "elemental" => Arc::new(super::libs::elemental::Elemental),
+        other => anyhow::bail!("unknown builtin library {other:?}"),
+    })
+}
+
 /// name → library map shared by driver and workers.
 #[derive(Default)]
 pub struct Registry {
@@ -143,6 +156,13 @@ mod tests {
         assert_eq!(lib.name(), "skylark");
         assert!(lib.routines().contains(&"cg_solve"));
         assert_eq!(r.names(), vec!["elemental", "skylark"]);
+    }
+
+    #[test]
+    fn builtin_resolves_canonical_names_only() {
+        assert_eq!(builtin("skylark").unwrap().name(), "skylark");
+        assert_eq!(builtin("elemental").unwrap().name(), "elemental");
+        assert!(builtin("my-alias").is_err());
     }
 
     #[test]

@@ -1,0 +1,905 @@
+//! Process-separated worker ranks (protocol v8).
+//!
+//! With `fabric.mode = tcp` the server's ranks are separate OS processes
+//! (`alchemist worker --connect <coordinator>`) instead of threads. This
+//! module holds both halves of that split:
+//!
+//! * the **coordinator side** — [`RemoteWorker`] (one multiplexed work
+//!   socket per worker process, requests routed by `req_id`, replies
+//!   arriving out of order), [`RankHandle`] (a rank that is either an
+//!   in-process thread or a remote process), and [`SessionFabric`] (what
+//!   the dispatcher resets/poisons between tasks, regardless of
+//!   transport);
+//! * the **worker side** — [`run_worker`], a worker process's main loop:
+//!   its own [`MatrixStore`], data-plane listener, mesh acceptor, and the
+//!   same task command loop an in-process rank runs
+//!   ([`super::worker::worker_main`]).
+//!
+//! The coordinator stays control-plane only: collective traffic flows
+//! rank↔rank through each session's `TcpComm` mesh
+//! (`collectives::netcomm`, brokered here via [`WorkMsg::MeshForm`]) and
+//! ingest/fetch traffic flows client↔worker through each process's data
+//! listener — exactly the paper's driver/worker split, with the MPI
+//! communicator replaced by the TCP mesh (see `docs/fabric.md`).
+//!
+//! Failure mapping: a worker process dying drops both its work socket
+//! (the reader thread fails every pending request with a "connection
+//! lost" error) and its mesh links (peers poison their group with
+//! [`PoisonCause::RankFailed`]), so the dispatcher's root-cause-first
+//! aggregation reports `PeerFailed {{ rank }}` on every surviving rank
+//! instead of hanging.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Context;
+
+use crate::collectives::{
+    CommError, LocalComm, MeshAcceptor, PoisonCause, TcpComm,
+};
+use crate::config::Config;
+use crate::distmat::RowBlockLayout;
+use crate::metrics::StorageMetrics;
+use crate::net::{Framed, Server};
+use crate::protocol::fabric::{
+    WireOutput, WorkMsg, FAIL_KIND_CANCELLED, FAIL_KIND_PEER_FAILED,
+    FAIL_KIND_PLAIN, FAIL_KIND_TIMEOUT,
+};
+use crate::protocol::PROTOCOL_VERSION;
+use crate::tasks::{CancelToken, RankProgress, TaskScope};
+
+use super::registry;
+use super::store::MatrixStore;
+use super::worker::{
+    handle_data_conn, worker_main, OutputMeta, TaskReply, WorkerCmd,
+    WorkerShared,
+};
+
+// -- coordinator side -------------------------------------------------------
+
+/// Outstanding request on a worker process's work socket, keyed by
+/// `req_id`. The reader thread routes each reply to its waiter; a dead
+/// socket fails them all.
+enum Pending {
+    Task(mpsc::Sender<crate::Result<TaskReply>>),
+    Ack(mpsc::Sender<crate::Result<(u64, String)>>),
+}
+
+/// The coordinator's handle to one worker *process*: the attach-time
+/// metadata plus the multiplexed work socket. Requests carry a fresh
+/// `req_id`; replies may arrive in any order (a long task runs while
+/// store and mesh operations are serviced) and are routed back by the
+/// reader thread.
+pub struct RemoteWorker {
+    /// Global rank in the server's worker pool.
+    pub rank: usize,
+    /// `host:port` of the process's data-plane listener (row push/pull).
+    pub data_addr: String,
+    /// `host:port` of the process's mesh listener (peer links form here).
+    pub mesh_addr: String,
+    writer: Mutex<Framed<TcpStream, TcpStream>>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    next_req: AtomicU64,
+    dead: AtomicBool,
+}
+
+impl RemoteWorker {
+    /// Coordinator side of the attach handshake on a freshly accepted
+    /// work socket: read the worker's `Attach` (version-checked, bounded
+    /// by `attach_timeout`), ack it, and start the reply-reader thread.
+    pub fn attach(
+        stream: TcpStream,
+        buf_bytes: usize,
+        attach_timeout: Duration,
+    ) -> crate::Result<Arc<RemoteWorker>> {
+        // the timeout applies to the socket, so it bounds the handshake
+        // read through either clone; cleared once the worker is attached
+        stream
+            .set_read_timeout(Some(attach_timeout))
+            .context("setting attach timeout")?;
+        let wstream = stream.try_clone().context("cloning work socket")?;
+        let mut writer = Framed::tcp(wstream, buf_bytes)?;
+        let mut reader = Framed::new(
+            stream.try_clone().context("cloning work socket")?,
+            std::io::sink(),
+        );
+        let (rank, data_addr, mesh_addr) =
+            match WorkMsg::decode(&reader.recv().context("reading Attach")?)? {
+                WorkMsg::Attach { version, rank, data_addr, mesh_addr } => {
+                    anyhow::ensure!(
+                        version == PROTOCOL_VERSION,
+                        "worker process speaks protocol {version}, \
+                         coordinator speaks {PROTOCOL_VERSION}"
+                    );
+                    (rank as usize, data_addr, mesh_addr)
+                }
+                other => anyhow::bail!("expected Attach, got {other:?}"),
+            };
+        stream.set_read_timeout(None).context("clearing attach timeout")?;
+        writer.send_flush(&WorkMsg::AttachAck { rank: rank as u32 }.encode())?;
+        let worker = Arc::new(RemoteWorker {
+            rank,
+            data_addr,
+            mesh_addr,
+            writer: Mutex::new(writer),
+            pending: Mutex::new(HashMap::new()),
+            next_req: AtomicU64::new(1),
+            dead: AtomicBool::new(false),
+        });
+        {
+            let worker = Arc::clone(&worker);
+            std::thread::Builder::new()
+                .name(format!("work-recv-{rank}"))
+                .spawn(move || worker.reader_loop(reader))
+                .context("spawning work-socket reader")?;
+        }
+        Ok(worker)
+    }
+
+    /// Whether the work socket has dropped (the process died or was
+    /// killed). Requests against a dead worker fail immediately.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    /// Send one message (fire-and-forget path; requests go through
+    /// [`run_task`](Self::run_task) / [`request_ack`](Self::request_ack)).
+    /// A send failure marks the worker dead and fails all pending
+    /// requests — the socket is gone either way.
+    pub fn send(&self, msg: &WorkMsg) -> crate::Result<()> {
+        if self.is_dead() {
+            anyhow::bail!("worker process {} is down", self.rank);
+        }
+        let res = self.writer.lock().unwrap().send_flush(&msg.encode());
+        if res.is_err() {
+            self.mark_dead();
+        }
+        res
+    }
+
+    /// Dispatch a task; the returned channel yields the rank's reply (or
+    /// the connection-lost error if the process dies mid-task). Mirrors
+    /// the in-process `WorkerCmd::RunTask` reply channel so the
+    /// dispatcher's gather loop is transport-agnostic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_task(
+        &self,
+        session_id: u64,
+        task_id: u64,
+        lib: &str,
+        routine: &str,
+        params: crate::protocol::Params,
+        out_base: u64,
+        out_span: u64,
+        engine_threads: usize,
+    ) -> crate::Result<mpsc::Receiver<crate::Result<TaskReply>>> {
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(req_id, Pending::Task(tx));
+        let msg = WorkMsg::RunTask {
+            req_id,
+            session_id,
+            task_id,
+            lib: lib.to_string(),
+            routine: routine.to_string(),
+            params,
+            out_base,
+            out_span,
+            engine_threads: engine_threads as u32,
+        };
+        match self.send(&msg) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                self.pending.lock().unwrap().remove(&req_id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Issue one acked request without waiting (pipelining: the mesh
+    /// brokering and group-wide resets send to every rank before awaiting
+    /// any ack). The channel yields `(value, message)` from the worker's
+    /// `Ack`, or an error.
+    pub fn start_ack(
+        &self,
+        build: impl FnOnce(u64) -> WorkMsg,
+    ) -> crate::Result<mpsc::Receiver<crate::Result<(u64, String)>>> {
+        let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(req_id, Pending::Ack(tx));
+        match self.send(&build(req_id)) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                self.pending.lock().unwrap().remove(&req_id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Blocking acked request: send, wait for the routed reply.
+    pub fn request_ack(
+        &self,
+        build: impl FnOnce(u64) -> WorkMsg,
+    ) -> crate::Result<(u64, String)> {
+        let rx = self.start_ack(build)?;
+        Self::await_ack(self.rank, rx)
+    }
+
+    /// Resolve a [`start_ack`](Self::start_ack) channel (maps a dropped
+    /// channel — impossible outside a coordinator bug — to the same
+    /// connection-lost error as a dead socket).
+    pub fn await_ack(
+        rank: usize,
+        rx: mpsc::Receiver<crate::Result<(u64, String)>>,
+    ) -> crate::Result<(u64, String)> {
+        rx.recv().unwrap_or_else(|_| {
+            Err(anyhow::anyhow!("worker process {rank}: connection lost"))
+        })
+    }
+
+    fn take(&self, req_id: u64) -> Option<Pending> {
+        self.pending.lock().unwrap().remove(&req_id)
+    }
+
+    fn reader_loop(self: Arc<Self>, mut reader: Framed<TcpStream, std::io::Sink>) {
+        loop {
+            // EOF / corrupt frame: the process is gone
+            let Ok(buf) = reader.recv() else { break };
+            let Ok(msg) = WorkMsg::decode(&buf) else { break };
+            match msg {
+                WorkMsg::TaskDone { req_id, outputs, scalars, timings } => {
+                    if let Some(Pending::Task(tx)) = self.take(req_id) {
+                        let outputs =
+                            outputs.into_iter().map(meta_from_wire).collect();
+                        let _ = tx.send(Ok(TaskReply { outputs, scalars, timings }));
+                    }
+                }
+                WorkMsg::TaskFailed { req_id, kind, rank, tag, message } => {
+                    if let Some(Pending::Task(tx)) = self.take(req_id) {
+                        let _ = tx.send(Err(rebuild_failure(kind, rank, tag, &message)));
+                    }
+                }
+                WorkMsg::Ack { req_id, ok, value, message } => {
+                    if let Some(Pending::Ack(tx)) = self.take(req_id) {
+                        let _ = tx.send(if ok {
+                            Ok((value, message))
+                        } else {
+                            Err(anyhow::anyhow!(
+                                "worker process {}: {message}",
+                                self.rank
+                            ))
+                        });
+                    }
+                }
+                other => log::warn!(
+                    "unexpected message from worker process {}: {other:?}",
+                    self.rank
+                ),
+            }
+        }
+        self.mark_dead();
+    }
+
+    /// First death wins: fail every outstanding request with the same
+    /// connection-lost error a fresh request against a dead worker gets.
+    fn mark_dead(&self) {
+        if self.dead.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        log::warn!("worker process {}: connection lost", self.rank);
+        let drained: Vec<Pending> = {
+            let mut pending = self.pending.lock().unwrap();
+            pending.drain().map(|(_, p)| p).collect()
+        };
+        for p in drained {
+            let err = || anyhow::anyhow!("worker process {}: connection lost", self.rank);
+            match p {
+                Pending::Task(tx) => {
+                    let _ = tx.send(Err(err()));
+                }
+                Pending::Ack(tx) => {
+                    let _ = tx.send(Err(err()));
+                }
+            }
+        }
+    }
+}
+
+/// Rebuild a remote rank's failure so the dispatcher's aggregation sees
+/// the exact `CommError` classification (root-cause vs collateral) the
+/// worker observed. Plain failures keep their formatted message.
+fn rebuild_failure(kind: u8, rank: u64, tag: u64, message: &str) -> anyhow::Error {
+    match kind {
+        FAIL_KIND_PEER_FAILED => {
+            anyhow::Error::new(CommError::PeerFailed { rank: rank as usize })
+        }
+        FAIL_KIND_CANCELLED => anyhow::Error::new(CommError::Cancelled),
+        FAIL_KIND_TIMEOUT => {
+            anyhow::Error::new(CommError::Timeout { from: rank as usize, tag })
+        }
+        _ => anyhow::anyhow!("{message}"),
+    }
+}
+
+/// The inverse of [`rebuild_failure`], applied on the worker side.
+fn classify_failure(req_id: u64, e: &anyhow::Error) -> WorkMsg {
+    let (kind, rank, tag) = match e.downcast_ref::<CommError>() {
+        Some(CommError::PeerFailed { rank }) => {
+            (FAIL_KIND_PEER_FAILED, *rank as u64, 0)
+        }
+        Some(CommError::Cancelled) => (FAIL_KIND_CANCELLED, 0, 0),
+        Some(CommError::Timeout { from, tag }) => {
+            (FAIL_KIND_TIMEOUT, *from as u64, *tag)
+        }
+        None => (FAIL_KIND_PLAIN, 0, 0),
+    };
+    WorkMsg::TaskFailed { req_id, kind, rank, tag, message: format!("{e:#}") }
+}
+
+fn meta_from_wire(o: WireOutput) -> OutputMeta {
+    let layout = RowBlockLayout {
+        rows: o.rows as usize,
+        cols: o.cols as usize,
+        ranges: o.ranges.iter().map(|&(a, b)| (a as usize, b as usize)).collect(),
+    };
+    OutputMeta { id: o.id, name: o.name, rows: o.rows, cols: o.cols, layout }
+}
+
+fn wire_from_meta(m: &OutputMeta) -> WireOutput {
+    WireOutput {
+        id: m.id,
+        name: m.name.clone(),
+        rows: m.rows,
+        cols: m.cols,
+        ranges: m
+            .layout
+            .ranges
+            .iter()
+            .map(|&(a, b)| (a as u64, b as u64))
+            .collect(),
+    }
+}
+
+/// Encode the full group layout for the store-management messages.
+pub fn wire_ranges(layout: &RowBlockLayout) -> Vec<(u64, u64)> {
+    layout.ranges.iter().map(|&(a, b)| (a as u64, b as u64)).collect()
+}
+
+fn layout_from_wire(rows: u64, cols: u64, ranges: &[(u64, u64)]) -> RowBlockLayout {
+    RowBlockLayout {
+        rows: rows as usize,
+        cols: cols as usize,
+        ranges: ranges.iter().map(|&(a, b)| (a as usize, b as usize)).collect(),
+    }
+}
+
+/// One rank of the server's pool: an in-process worker thread or a
+/// separate worker process. The driver holds one per global rank and
+/// matches on the variant only where the transports genuinely differ
+/// (store access vs store RPC).
+pub enum RankHandle {
+    Local {
+        shared: Arc<WorkerShared>,
+        sender: mpsc::Sender<WorkerCmd>,
+    },
+    Remote(Arc<RemoteWorker>),
+}
+
+impl RankHandle {
+    /// `host:port` of this rank's data-plane listener.
+    pub fn data_addr(&self) -> String {
+        match self {
+            RankHandle::Local { shared, .. } => {
+                shared.data_addr.lock().unwrap().clone()
+            }
+            RankHandle::Remote(w) => w.data_addr.clone(),
+        }
+    }
+
+    /// The in-process state, when this rank lives in the server process.
+    /// Introspection helpers (block counts, storage metrics) aggregate
+    /// local ranks only — a worker process owns its own store.
+    pub fn local(&self) -> Option<&Arc<WorkerShared>> {
+        match self {
+            RankHandle::Local { shared, .. } => Some(shared),
+            RankHandle::Remote(_) => None,
+        }
+    }
+
+    pub fn remote(&self) -> Option<&Arc<RemoteWorker>> {
+        match self {
+            RankHandle::Local { .. } => None,
+            RankHandle::Remote(w) => Some(w),
+        }
+    }
+}
+
+/// A session's group communicator as the driver manages it. The local
+/// variant IS the fabric (shared state, direct calls); the remote variant
+/// holds the control handles through which the per-process `TcpComm`
+/// endpoints are reset/poisoned.
+pub enum SessionFabric {
+    Local(Arc<LocalComm>),
+    Remote { session_id: u64, ranks: Vec<Arc<RemoteWorker>> },
+}
+
+impl SessionFabric {
+    /// Reset the group's communicator between tasks (epoch bump: drops
+    /// stragglers, clears poison). Remote resets are pipelined — all
+    /// ranks are told before any ack is awaited — and a dead rank's
+    /// missing ack is logged, not fatal: the next task on that group
+    /// fails through the mesh poison anyway.
+    pub fn reset(&self) {
+        match self {
+            SessionFabric::Local(f) => f.reset(),
+            SessionFabric::Remote { session_id, ranks } => {
+                let sid = *session_id;
+                let waits: Vec<_> = ranks
+                    .iter()
+                    .map(|w| {
+                        w.start_ack(|req_id| WorkMsg::MeshReset {
+                            req_id,
+                            session_id: sid,
+                        })
+                    })
+                    .collect();
+                for (w, wait) in ranks.iter().zip(waits) {
+                    let res = wait.and_then(|rx| RemoteWorker::await_ack(w.rank, rx));
+                    if let Err(e) = res {
+                        log::warn!(
+                            "mesh reset on worker process {}: {e:#}",
+                            w.rank
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Poison the group. Remote poison is fire-and-forget per rank (a
+    /// wedged worker's ack would never come); each process's `TcpComm`
+    /// also re-broadcasts the cause over its own mesh links.
+    pub fn poison(&self, cause: PoisonCause) {
+        match self {
+            SessionFabric::Local(f) => f.poison(cause),
+            SessionFabric::Remote { session_id, ranks } => {
+                let (kind, rank) = match cause {
+                    PoisonCause::RankFailed(r) => (0u8, r as u64),
+                    PoisonCause::HardCancel => (1u8, 0),
+                };
+                for w in ranks {
+                    let _ = w.send(&WorkMsg::MeshPoison {
+                        session_id: *session_id,
+                        kind,
+                        rank,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Forward a cooperative cancel to process-separated ranks. The local
+    /// path is a no-op: in-process ranks share the task's cancel token
+    /// directly through their `TaskScope`.
+    pub fn propagate_cancel(&self, task_id: u64) {
+        if let SessionFabric::Remote { session_id, ranks } = self {
+            for w in ranks {
+                let _ = w.send(&WorkMsg::CancelTask {
+                    session_id: *session_id,
+                    task_id,
+                });
+            }
+        }
+    }
+}
+
+// -- worker side ------------------------------------------------------------
+
+/// Main loop of `alchemist worker --connect <coordinator> --rank-id <n>`:
+/// one process-separated rank of the server's pool.
+///
+/// Owns a [`MatrixStore`], a data-plane listener (same
+/// [`handle_data_conn`] the in-process ranks run), a [`MeshAcceptor`] for
+/// peer links, and one task thread running the unmodified
+/// [`worker_main`] command loop. The work socket to the coordinator
+/// carries everything else: task dispatch (replies forwarded off the
+/// control loop so cancels keep flowing mid-task), mesh brokering, and
+/// store management. Exits when the coordinator says [`WorkMsg::Shutdown`]
+/// — or drops the socket, so an orphaned worker can never outlive its
+/// server.
+pub fn run_worker(coordinator: &str, rank: usize, cfg: Config) -> crate::Result<()> {
+    let shared = Arc::new(WorkerShared {
+        rank,
+        store: MatrixStore::with_storage(
+            rank,
+            &cfg.storage,
+            Arc::new(StorageMetrics::new()),
+        ),
+        data_addr: Mutex::new(String::new()),
+        sessions: Mutex::new(HashMap::new()),
+    });
+
+    // data-plane listener (row push/pull from executors)
+    let data_listener = Server::bind(0)?;
+    let data_addr = data_listener.addr().to_string();
+    *shared.data_addr.lock().unwrap() = data_addr.clone();
+    {
+        let shared = Arc::clone(&shared);
+        let cfg = cfg.clone();
+        std::thread::Builder::new()
+            .name(format!("data-serve-{rank}"))
+            .spawn(move || {
+                let shared2 = Arc::clone(&shared);
+                let _ = data_listener.serve(move |stream| {
+                    handle_data_conn(&shared2, stream, &cfg);
+                });
+            })
+            .context("spawning data listener")?;
+    }
+
+    // mesh listener: peer ranks connect here at group formation
+    let acceptor = MeshAcceptor::bind()?;
+
+    // work socket + attach handshake
+    let stream = TcpStream::connect(coordinator)
+        .with_context(|| format!("connecting to coordinator at {coordinator}"))?;
+    let mut writer = Framed::tcp(
+        stream.try_clone().context("cloning work socket")?,
+        cfg.transfer.buf_bytes,
+    )?;
+    let mut reader = Framed::new(stream, std::io::sink());
+    writer.send_flush(
+        &WorkMsg::Attach {
+            version: PROTOCOL_VERSION,
+            rank: rank as u32,
+            data_addr,
+            mesh_addr: acceptor.addr().to_string(),
+        }
+        .encode(),
+    )?;
+    match WorkMsg::decode(&reader.recv().context("awaiting AttachAck")?)? {
+        WorkMsg::AttachAck { rank: acked } => anyhow::ensure!(
+            acked as usize == rank,
+            "coordinator acked rank {acked}, expected {rank}"
+        ),
+        other => anyhow::bail!("expected AttachAck, got {other:?}"),
+    }
+    let writer = Arc::new(Mutex::new(writer));
+
+    // one task thread: the same command loop an in-process rank runs (no
+    // shared compute pool across processes — the engine builds a private
+    // one, clamped per task by `engine_threads`)
+    let (cmd_tx, cmd_rx) = mpsc::channel();
+    let task_thread = {
+        let shared = Arc::clone(&shared);
+        let cfg = cfg.clone();
+        std::thread::Builder::new()
+            .name(format!("worker-{rank}"))
+            .spawn(move || worker_main(shared, cfg, cmd_rx, None))
+            .context("spawning task thread")?
+    };
+
+    // cancel tokens of running tasks, for CancelTask routing
+    let running: Arc<Mutex<HashMap<(u64, u64), Arc<CancelToken>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+
+    log::info!("worker process {rank} attached to coordinator {coordinator}");
+    let fabric_opts = cfg.fabric.options();
+    loop {
+        let buf = match reader.recv() {
+            Ok(b) => b,
+            Err(_) => {
+                // coordinator gone: never outlive the server
+                log::warn!("worker process {rank}: coordinator connection lost");
+                break;
+            }
+        };
+        match WorkMsg::decode(&buf)? {
+            WorkMsg::RunTask {
+                req_id,
+                session_id,
+                task_id,
+                lib,
+                routine,
+                params,
+                out_base,
+                out_span,
+                engine_threads,
+            } => {
+                let library = match registry::builtin(&lib) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        post(&writer, &classify_failure(req_id, &e));
+                        continue;
+                    }
+                };
+                let cancel = Arc::new(CancelToken::new());
+                let scope = TaskScope::new(
+                    Arc::clone(&cancel),
+                    Arc::new(RankProgress::new()),
+                );
+                running.lock().unwrap().insert((session_id, task_id), cancel);
+                let (reply_tx, reply_rx) = mpsc::channel();
+                let sent = cmd_tx.send(WorkerCmd::RunTask {
+                    session_id,
+                    lib: library,
+                    routine,
+                    params,
+                    out_base,
+                    out_span,
+                    engine_threads: engine_threads as usize,
+                    scope,
+                    reply: reply_tx,
+                });
+                if sent.is_err() {
+                    running.lock().unwrap().remove(&(session_id, task_id));
+                    post(
+                        &writer,
+                        &classify_failure(
+                            req_id,
+                            &anyhow::anyhow!("worker task thread died"),
+                        ),
+                    );
+                    continue;
+                }
+                // forward the reply off the control loop: the task runs
+                // for a while and cancels/mesh ops must keep flowing
+                let writer = Arc::clone(&writer);
+                let running = Arc::clone(&running);
+                std::thread::spawn(move || {
+                    let result = reply_rx.recv().unwrap_or_else(|_| {
+                        Err(anyhow::anyhow!("worker task thread died"))
+                    });
+                    running.lock().unwrap().remove(&(session_id, task_id));
+                    let msg = match result {
+                        Ok(reply) => WorkMsg::TaskDone {
+                            req_id,
+                            outputs: reply
+                                .outputs
+                                .iter()
+                                .map(wire_from_meta)
+                                .collect(),
+                            scalars: reply.scalars,
+                            timings: reply.timings,
+                        },
+                        Err(e) => classify_failure(req_id, &e),
+                    };
+                    post(&writer, &msg);
+                });
+            }
+            WorkMsg::CancelTask { session_id, task_id } => {
+                if let Some(tok) =
+                    running.lock().unwrap().get(&(session_id, task_id))
+                {
+                    tok.cancel();
+                }
+            }
+            WorkMsg::MeshForm { req_id, session_id, group_rank, peers } => {
+                // formation runs inline: every rank receives its MeshForm
+                // before the coordinator awaits any ack, so the group's
+                // processes form concurrently with each other
+                let reply = match TcpComm::form(
+                    &acceptor,
+                    session_id,
+                    group_rank as usize,
+                    &peers,
+                    &fabric_opts,
+                ) {
+                    Ok(comm) => {
+                        shared
+                            .sessions
+                            .lock()
+                            .unwrap()
+                            .insert(session_id, Arc::new(comm));
+                        ack_ok(req_id, 0)
+                    }
+                    Err(e) => ack_err(req_id, &e),
+                };
+                post(&writer, &reply);
+            }
+            WorkMsg::MeshReset { req_id, session_id } => {
+                let reply = match shared.sessions.lock().unwrap().get(&session_id)
+                {
+                    Some(f) => {
+                        f.reset();
+                        ack_ok(req_id, 0)
+                    }
+                    None => ack_err(
+                        req_id,
+                        &anyhow::anyhow!("session {session_id} holds no group here"),
+                    ),
+                };
+                post(&writer, &reply);
+            }
+            WorkMsg::MeshPoison { session_id, kind, rank: failed } => {
+                let cause = if kind == 1 {
+                    PoisonCause::HardCancel
+                } else {
+                    PoisonCause::RankFailed(failed as usize)
+                };
+                if let Some(f) = shared.sessions.lock().unwrap().get(&session_id) {
+                    f.poison(cause);
+                }
+            }
+            WorkMsg::SessionClose { req_id, session_id } => {
+                // dropping the fabric closes its mesh links in order
+                // (Close frames first, so peers do not mistake the EOFs
+                // for a rank failure)
+                let fabric = shared.sessions.lock().unwrap().remove(&session_id);
+                drop(fabric);
+                let freed = shared.store.free_session(session_id);
+                post(&writer, &ack_ok(req_id, freed as u64));
+            }
+            WorkMsg::StoreAlloc {
+                req_id,
+                session_id,
+                id,
+                name,
+                rows,
+                cols,
+                ranges,
+                slot,
+            } => {
+                let layout = layout_from_wire(rows, cols, &ranges);
+                let reply = match shared.store.alloc(
+                    id,
+                    &name,
+                    layout,
+                    slot as usize,
+                    session_id,
+                ) {
+                    Ok(()) => ack_ok(req_id, 0),
+                    Err(e) => ack_err(req_id, &e),
+                };
+                post(&writer, &reply);
+            }
+            WorkMsg::StoreSeal { req_id, id } => {
+                let reply = match shared.store.seal(id) {
+                    Ok(rows) => ack_ok(req_id, rows),
+                    Err(e) => ack_err(req_id, &e),
+                };
+                post(&writer, &reply);
+            }
+            WorkMsg::StoreFree { id } => {
+                shared.store.free(id);
+            }
+            WorkMsg::StoreLoad {
+                req_id,
+                session_id,
+                id,
+                name,
+                path,
+                rows,
+                cols,
+                ranges,
+                slot,
+            } => {
+                let layout = layout_from_wire(rows, cols, &ranges);
+                let reply = match load_one(
+                    &shared,
+                    session_id,
+                    id,
+                    &name,
+                    std::path::Path::new(&path),
+                    layout,
+                    slot as usize,
+                ) {
+                    Ok(()) => ack_ok(req_id, 0),
+                    Err(e) => ack_err(req_id, &e),
+                };
+                post(&writer, &reply);
+            }
+            WorkMsg::Shutdown => break,
+            other => {
+                log::warn!("worker process {rank}: unexpected {other:?}");
+            }
+        }
+    }
+
+    // drain: in-flight task first, then exit
+    let _ = cmd_tx.send(WorkerCmd::Shutdown);
+    let _ = task_thread.join();
+    log::info!("worker process {rank} exiting");
+    Ok(())
+}
+
+/// This rank's half of a `LoadMatrix`: mmap the `hdf5sim` file when the
+/// host supports in-place mapping, else a buffered read of just this
+/// rank's row range (same fallback order as the in-process
+/// [`super::worker::load_group`]).
+fn load_one(
+    shared: &WorkerShared,
+    session_id: u64,
+    id: u64,
+    name: &str,
+    path: &std::path::Path,
+    layout: RowBlockLayout,
+    slot: usize,
+) -> crate::Result<()> {
+    match crate::hdf5sim::MappedMatrix::open(path) {
+        Ok(map) => shared.store.insert_mapped(
+            id,
+            name,
+            layout,
+            Arc::new(map),
+            slot,
+            session_id,
+        ),
+        Err(e) => {
+            log::info!("mmap ingest unavailable for {path:?} ({e}); buffered load");
+            let (lo, hi) = layout.ranges[slot];
+            let local = crate::hdf5sim::read_rows(path, lo, hi)?;
+            shared.store.insert(id, name, layout, local, slot, session_id)
+        }
+    }
+}
+
+fn ack_ok(req_id: u64, value: u64) -> WorkMsg {
+    WorkMsg::Ack { req_id, ok: true, value, message: String::new() }
+}
+
+fn ack_err(req_id: u64, e: &anyhow::Error) -> WorkMsg {
+    WorkMsg::Ack { req_id, ok: false, value: 0, message: format!("{e:#}") }
+}
+
+fn post(writer: &Mutex<Framed<TcpStream, TcpStream>>, msg: &WorkMsg) {
+    if let Err(e) = writer.lock().unwrap().send_flush(&msg.encode()) {
+        log::warn!("work-socket send failed: {e:#}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_kinds_roundtrip_through_the_wire_classification() {
+        let cases: Vec<anyhow::Error> = vec![
+            anyhow::Error::new(CommError::PeerFailed { rank: 2 }),
+            anyhow::Error::new(CommError::Cancelled),
+            anyhow::Error::new(CommError::Timeout { from: 1, tag: 0x4347_0000 }),
+            anyhow::anyhow!("routine cg_solve panicked: boom"),
+        ];
+        for e in cases {
+            let WorkMsg::TaskFailed { kind, rank, tag, message, .. } =
+                classify_failure(7, &e)
+            else {
+                panic!("classify_failure must produce TaskFailed");
+            };
+            let rebuilt = rebuild_failure(kind, rank, tag, &message);
+            match e.downcast_ref::<CommError>() {
+                Some(orig) => {
+                    assert_eq!(rebuilt.downcast_ref::<CommError>(), Some(orig));
+                }
+                None => {
+                    assert!(rebuilt.downcast_ref::<CommError>().is_none());
+                    assert_eq!(rebuilt.to_string(), format!("{e:#}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_output_preserves_layout() {
+        let meta = OutputMeta {
+            id: 42,
+            name: "W".into(),
+            rows: 10,
+            cols: 3,
+            layout: RowBlockLayout {
+                rows: 10,
+                cols: 3,
+                ranges: vec![(0, 5), (5, 10)],
+            },
+        };
+        let wire = wire_from_meta(&meta);
+        let back = meta_from_wire(wire);
+        assert_eq!(back.id, 42);
+        assert_eq!(back.layout.rows, 10);
+        assert_eq!(back.layout.cols, 3);
+        assert_eq!(back.layout.ranges, vec![(0, 5), (5, 10)]);
+    }
+}

@@ -21,28 +21,43 @@
 //! timeout so the classic synchronous call survives as submit + wait.
 //! Teardown cancels queued and running work and joins the dispatcher
 //! before freeing the session's store blocks, so nothing leaks.
+//!
+//! Since protocol v8 the pool has two shapes (`fabric.mode`,
+//! `docs/fabric.md`): **local** ranks are threads in this process (the
+//! seed behavior, `LocalComm` mailboxes), **tcp** ranks are separate OS
+//! processes (`alchemist worker`) reached over a multiplexed work socket,
+//! with each session's collectives running rank↔rank over a brokered
+//! `TcpComm` mesh. The driver stays control-plane only in both modes;
+//! [`RankHandle`] and [`SessionFabric`] keep the dispatch/teardown paths
+//! transport-agnostic, and the code matches on the variant only where a
+//! store must be reached (direct call vs RPC).
 
 use std::collections::{HashMap, VecDeque};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::collectives::{CommError, Communicator, LocalComm, PoisonCause};
+use anyhow::Context;
+
+use crate::collectives::{CommError, LocalComm, PoisonCause};
 use crate::compute::ThreadPool;
-use crate::config::{Config, SchedulerConfig, TransferConfig};
+use crate::config::{Config, FabricMode, SchedulerConfig, TransferConfig};
 use crate::distmat::RowBlockLayout;
 use crate::metrics::{
     SchedMetrics, SchedSnapshot, StorageMetrics, StorageSnapshot, TaskOutcome,
 };
 use crate::net::{Framed, Server};
+use crate::protocol::fabric::WorkMsg;
 use crate::protocol::{
     ControlMsg, MatrixInfo, Params, TaskProgress, TaskState, PROTOCOL_VERSION,
 };
 use crate::tasks::{CancelToken, RankProgress, TaskScope};
 
 use super::registry::{Library, Registry};
+use super::remote::{wire_ranges, RankHandle, RemoteWorker, SessionFabric};
 use super::worker::{alloc_group, handle_data_conn, worker_main, WorkerCmd, WorkerShared};
 
 /// Driver-side record of a live distributed matrix.
@@ -178,11 +193,13 @@ struct Session {
     /// Global worker ranks in group order: `ranks[i]` is the worker with
     /// group-local rank `i`.
     ranks: Vec<usize>,
-    /// Rank-0 endpoint of the group's communicator, retained as the
-    /// driver's poison/reset handle (never used to send or receive): the
-    /// hard-cancel watchdog poisons through it and the dispatcher resets
-    /// the fabric through it between tasks.
-    fabric: Arc<LocalComm>,
+    /// The driver's poison/reset/cancel handle on the group's
+    /// communicator (never used to send or receive): the hard-cancel
+    /// watchdog poisons through it and the dispatcher resets the fabric
+    /// through it between tasks. Local groups hold the rank-0 `LocalComm`
+    /// endpoint directly; tcp groups hold the member work sockets and
+    /// forward the same operations to each process's `TcpComm`.
+    fabric: SessionFabric,
     /// Per-session config snapshot (transfer knobs travel with the
     /// session so future PRs can negotiate them per client).
     transfer: TransferConfig,
@@ -336,8 +353,10 @@ impl Drop for ThreadsLease<'_> {
 
 struct Driver {
     cfg: Config,
-    workers: Vec<Arc<WorkerShared>>,
-    senders: Vec<mpsc::Sender<WorkerCmd>>,
+    /// The worker pool, index = global rank. Homogeneous by
+    /// construction: `fabric.mode = local` builds every rank in-process,
+    /// `tcp` spawns every rank as a worker process.
+    ranks: Vec<RankHandle>,
     registry: Registry,
     allocator: GroupAllocator,
     /// Compute threads (`group × engine_threads`) leased to currently
@@ -387,6 +406,9 @@ impl Driver {
         }
         if let Some(rec) = &st.running {
             rec.cancel.cancel();
+            // process-separated ranks observe the token through their own
+            // copy — forward the flip (no-op for in-process groups)
+            session.fabric.propagate_cancel(rec.id);
             let grace = self.cfg.scheduler.teardown_grace_ms;
             if grace > 0 {
                 schedule_hard_cancel(
@@ -428,8 +450,15 @@ impl Driver {
                 let _ = handle.join();
             }
         }
-        for s in &self.senders {
-            let _ = s.send(WorkerCmd::Shutdown);
+        for r in &self.ranks {
+            match r {
+                RankHandle::Local { sender, .. } => {
+                    let _ = sender.send(WorkerCmd::Shutdown);
+                }
+                RankHandle::Remote(w) => {
+                    let _ = w.send(&WorkMsg::Shutdown);
+                }
+            }
         }
         for flag in self.listener_stops.lock().unwrap().iter() {
             flag.store(true, Ordering::SeqCst);
@@ -446,19 +475,218 @@ impl Driver {
 
 impl Driver {
     fn worker_addrs(&self) -> Vec<String> {
-        self.workers
-            .iter()
-            .map(|w| w.data_addr.lock().unwrap().clone())
-            .collect()
+        self.ranks.iter().map(|r| r.data_addr()).collect()
     }
 
     /// Data addresses of one session's group, indexed by group-local rank.
     fn session_worker_addrs(&self, session: &Session) -> Vec<String> {
-        session
+        session.ranks.iter().map(|&r| self.ranks[r].data_addr()).collect()
+    }
+
+    /// The full pool as in-process handles — `Some` iff every rank is
+    /// local (`fabric.mode = local`), indexed by global rank like
+    /// [`Driver::ranks`]. Store paths take this fast path; a `None` pool
+    /// reaches each rank's store over its work socket instead.
+    fn local_pool(&self) -> Option<Vec<Arc<WorkerShared>>> {
+        self.ranks.iter().map(|r| r.local().cloned()).collect()
+    }
+
+    /// Global rank `rank` as a worker-process handle. Only meaningful in
+    /// fabric mode, where the pool is all-remote by construction.
+    fn remote_member(&self, rank: usize) -> &Arc<RemoteWorker> {
+        self.ranks[rank].remote().expect("fabric-mode pool is all-remote")
+    }
+
+    /// Build and bind a new group's communicator. A local pool wires
+    /// `LocalComm` mailbox endpoints into each member's session map. A
+    /// remote pool brokers a full `TcpComm` peer mesh: every member
+    /// receives the group's mesh addresses — all `MeshForm` messages go
+    /// out before any ack is awaited, because formation is collective
+    /// (each process dials its lower-ranked peers and accepts its higher
+    /// ones) — and collective traffic thereafter flows worker↔worker
+    /// with the coordinator uninvolved (`docs/fabric.md`).
+    fn bind_group_fabric(
+        &self,
+        id: u64,
+        ranks: &[usize],
+    ) -> crate::Result<SessionFabric> {
+        if let Some(pool) = self.local_pool() {
+            let comms: Vec<Arc<LocalComm>> =
+                LocalComm::subgroup(ranks, Some(self.cfg.simnet.clone()))
+                    .into_iter()
+                    .map(Arc::new)
+                    .collect();
+            // the rank-0 endpoint doubles as the driver's handle
+            let fabric = comms[0].clone();
+            for (&rank, comm) in ranks.iter().zip(comms) {
+                pool[rank].sessions.lock().unwrap().insert(id, comm);
+            }
+            return Ok(SessionFabric::Local(fabric));
+        }
+        let members: Vec<Arc<RemoteWorker>> =
+            ranks.iter().map(|&r| self.remote_member(r).clone()).collect();
+        let peers: Vec<String> =
+            members.iter().map(|w| w.mesh_addr.clone()).collect();
+        let waits: Vec<_> = members
+            .iter()
+            .enumerate()
+            .map(|(slot, w)| {
+                let peers = peers.clone();
+                w.start_ack(move |req_id| WorkMsg::MeshForm {
+                    req_id,
+                    session_id: id,
+                    group_rank: slot as u32,
+                    peers,
+                })
+            })
+            .collect();
+        let mut result = Ok(());
+        for (w, wait) in members.iter().zip(waits) {
+            let formed = wait.and_then(|rx| RemoteWorker::await_ack(w.rank, rx));
+            if let (Err(e), true) = (formed, result.is_ok()) {
+                result = Err(e.context(format!(
+                    "forming session {id} mesh on worker process {}",
+                    w.rank
+                )));
+            }
+        }
+        if let Err(e) = result {
+            // best-effort teardown of the endpoints that did form
+            for w in &members {
+                let _ = w.start_ack(|req_id| WorkMsg::SessionClose {
+                    req_id,
+                    session_id: id,
+                });
+            }
+            return Err(e);
+        }
+        Ok(SessionFabric::Remote { session_id: id, ranks: members })
+    }
+
+    /// Unbind a session's communicator endpoints and free its store
+    /// blocks on every member rank; returns blocks freed. Remote members
+    /// do both in one `SessionClose` round trip (pipelined across the
+    /// group); a dead member's missing ack is logged, not fatal — its
+    /// process (and store) is already gone.
+    fn release_session_state(&self, session: &Session) -> usize {
+        let mut freed = 0;
+        match &session.fabric {
+            SessionFabric::Local(_) => {
+                for &rank in &session.ranks {
+                    if let Some(shared) = self.ranks[rank].local() {
+                        shared.sessions.lock().unwrap().remove(&session.id);
+                        // releases heap budget AND deletes the session's
+                        // spill-file segments on this rank (see
+                        // MatrixStore::free_session)
+                        freed += shared.store.free_session(session.id);
+                    }
+                }
+            }
+            SessionFabric::Remote { session_id, ranks } => {
+                let sid = *session_id;
+                let waits: Vec<_> = ranks
+                    .iter()
+                    .map(|w| {
+                        w.start_ack(move |req_id| WorkMsg::SessionClose {
+                            req_id,
+                            session_id: sid,
+                        })
+                    })
+                    .collect();
+                for (w, wait) in ranks.iter().zip(waits) {
+                    match wait.and_then(|rx| RemoteWorker::await_ack(w.rank, rx))
+                    {
+                        Ok((n, _)) => freed += n as usize,
+                        Err(e) => log::warn!(
+                            "closing session {sid} on worker process {}: {e:#}",
+                            w.rank
+                        ),
+                    }
+                }
+            }
+        }
+        freed
+    }
+
+    /// Remote counterpart of [`alloc_group`]: one `StoreAlloc` per member
+    /// process (pipelined), rolled back with `StoreFree` on any failure
+    /// so an error reply always means "no block exists".
+    fn remote_alloc(
+        &self,
+        session: &Session,
+        id: u64,
+        name: &str,
+        layout: &RowBlockLayout,
+    ) -> crate::Result<()> {
+        self.remote_register(session, id, |slot, req_id| WorkMsg::StoreAlloc {
+            req_id,
+            session_id: session.id,
+            id,
+            name: name.to_string(),
+            rows: layout.rows as u64,
+            cols: layout.cols as u64,
+            ranges: wire_ranges(layout),
+            slot: slot as u32,
+        })
+    }
+
+    /// Remote counterpart of [`super::worker::load_group`]: each member
+    /// process maps (or buffered-reads) its own row shard of the file —
+    /// the payload path never touches the coordinator. Same all-or-nothing
+    /// contract, with the rollback driven from here.
+    fn remote_load(
+        &self,
+        session: &Session,
+        id: u64,
+        name: &str,
+        path: &std::path::Path,
+        layout: &RowBlockLayout,
+    ) -> crate::Result<()> {
+        let path = path.to_string_lossy().into_owned();
+        self.remote_register(session, id, |slot, req_id| WorkMsg::StoreLoad {
+            req_id,
+            session_id: session.id,
+            id,
+            name: name.to_string(),
+            path: path.clone(),
+            rows: layout.rows as u64,
+            cols: layout.cols as u64,
+            ranges: wire_ranges(layout),
+            slot: slot as u32,
+        })
+    }
+
+    /// Register matrix `id` on every member of a remote group: send the
+    /// per-slot request to all processes, await all acks, and free the
+    /// id everywhere if any rank failed.
+    fn remote_register(
+        &self,
+        session: &Session,
+        id: u64,
+        build: impl Fn(usize, u64) -> WorkMsg,
+    ) -> crate::Result<()> {
+        let waits: Vec<_> = session
             .ranks
             .iter()
-            .map(|&r| self.workers[r].data_addr.lock().unwrap().clone())
-            .collect()
+            .enumerate()
+            .map(|(slot, &rank)| {
+                let w = self.remote_member(rank);
+                (w, w.start_ack(|req_id| build(slot, req_id)))
+            })
+            .collect();
+        let mut result = Ok(());
+        for (w, wait) in waits {
+            let acked = wait.and_then(|rx| RemoteWorker::await_ack(w.rank, rx));
+            if let (Err(e), true) = (acked, result.is_ok()) {
+                result = Err(e);
+            }
+        }
+        if result.is_err() {
+            for &rank in &session.ranks {
+                let _ = self.remote_member(rank).send(&WorkMsg::StoreFree { id });
+            }
+        }
+        result
     }
 
     /// Admit a session: resolve the requested group size, wait for
@@ -515,16 +743,14 @@ impl Driver {
         // concurrent tenants cannot multiply past the core count.
         let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let engine_threads = self.cfg.engine_threads_for_group(ranks.len(), avail);
-        let comms: Vec<Arc<LocalComm>> =
-            LocalComm::subgroup(&ranks, Some(self.cfg.simnet.clone()))
-                .into_iter()
-                .map(Arc::new)
-                .collect();
-        // the rank-0 endpoint doubles as the driver's poison/reset handle
-        let fabric = comms[0].clone();
-        for (&rank, comm) in ranks.iter().zip(comms) {
-            self.workers[rank].sessions.lock().unwrap().insert(id, comm);
-        }
+        let fabric = match self.bind_group_fabric(id, &ranks) {
+            Ok(f) => f,
+            Err(e) => {
+                self.allocator.release(&ranks);
+                *self.storage_committed.lock().unwrap() -= storage_demand;
+                return Err(e);
+            }
+        };
         let session = Arc::new(Session {
             id,
             ranks: ranks.clone(),
@@ -559,9 +785,7 @@ impl Driver {
                 if let Some(handle) = handle {
                     let _ = handle.join();
                 }
-                for &rank in &session.ranks {
-                    self.workers[rank].sessions.lock().unwrap().remove(&id);
-                }
+                self.release_session_state(&session);
                 self.allocator.release(&session.ranks);
                 *self.storage_committed.lock().unwrap() -= session.storage_demand;
                 anyhow::bail!("server is stopping");
@@ -595,14 +819,7 @@ impl Driver {
         if let Some(handle) = dispatcher {
             let _ = handle.join();
         }
-        let mut freed = 0;
-        for &rank in &session.ranks {
-            let w = &self.workers[rank];
-            w.sessions.lock().unwrap().remove(&session.id);
-            // releases heap budget AND deletes the session's spill-file
-            // segments on this rank (see MatrixStore::free_session)
-            freed += w.store.free_session(session.id);
-        }
+        let freed = self.release_session_state(session);
         self.allocator.release(&session.ranks);
         *self.storage_committed.lock().unwrap() -= session.storage_demand;
         log::info!(
@@ -624,7 +841,11 @@ impl Driver {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let layout =
             RowBlockLayout::even(rows as usize, cols as usize, session.ranks.len());
-        alloc_group(&self.workers, &session.ranks, session.id, id, name, &layout)?;
+        if let Some(pool) = self.local_pool() {
+            alloc_group(&pool, &session.ranks, session.id, id, name, &layout)?;
+        } else {
+            self.remote_alloc(session, id, name, &layout)?;
+        }
         session.handles.lock().unwrap().insert(
             id,
             HandleMeta {
@@ -653,15 +874,19 @@ impl Driver {
         anyhow::ensure!(rows > 0 && cols > 0, "matrix must be non-empty");
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let layout = RowBlockLayout::even(rows, cols, session.ranks.len());
-        super::worker::load_group(
-            &self.workers,
-            &session.ranks,
-            session.id,
-            id,
-            name,
-            path,
-            &layout,
-        )?;
+        if let Some(pool) = self.local_pool() {
+            super::worker::load_group(
+                &pool,
+                &session.ranks,
+                session.id,
+                id,
+                name,
+                path,
+                &layout,
+            )?;
+        } else {
+            self.remote_load(session, id, name, path, &layout)?;
+        }
         let info = MatrixInfo {
             id,
             rows: rows as u64,
@@ -685,7 +910,12 @@ impl Driver {
         let meta = self.handle(session, id)?;
         let mut received = 0;
         for &rank in &session.ranks {
-            received += self.workers[rank].store.seal(id)?;
+            received += match &self.ranks[rank] {
+                RankHandle::Local { shared, .. } => shared.store.seal(id)?,
+                RankHandle::Remote(w) => {
+                    w.request_ack(|req_id| WorkMsg::StoreSeal { req_id, id })?.0
+                }
+            };
         }
         anyhow::ensure!(
             received == meta.info.rows,
@@ -800,6 +1030,9 @@ impl Driver {
             }
             Act::CancelRunning(rec) => {
                 rec.cancel.cancel();
+                // worker processes hold their own token copy — forward
+                // the flip (no-op for in-process groups)
+                session.fabric.propagate_cancel(task_id);
                 if hard_after_ms > 0 {
                     // clamp to an hour: the watchdog thread and its
                     // session Arc live until the deadline fires. Arm a
@@ -914,22 +1147,50 @@ impl Driver {
                 replies.push((slot, None));
                 continue;
             }
-            let (tx, rx) = mpsc::channel();
-            let sent = self.senders[rank].send(WorkerCmd::RunTask {
-                session_id: session.id,
-                lib: rec.lib.clone(),
-                routine: rec.routine.clone(),
-                params: rec.params.clone(),
-                out_base,
-                out_span,
-                engine_threads,
-                scope: TaskScope::new(rec.cancel.clone(), rec.progress[slot].clone()),
-                reply: tx,
-            });
-            if sent.is_err() {
+            let rx = match &self.ranks[rank] {
+                RankHandle::Local { sender, .. } => {
+                    let (tx, rx) = mpsc::channel();
+                    let sent = sender.send(WorkerCmd::RunTask {
+                        session_id: session.id,
+                        lib: rec.lib.clone(),
+                        routine: rec.routine.clone(),
+                        params: rec.params.clone(),
+                        out_base,
+                        out_span,
+                        engine_threads,
+                        scope: TaskScope::new(
+                            rec.cancel.clone(),
+                            rec.progress[slot].clone(),
+                        ),
+                        reply: tx,
+                    });
+                    sent.ok().map(|()| rx)
+                }
+                // a worker process rebuilds the library from its
+                // canonical name (never the client alias) and runs the
+                // identical command loop; its reply channel is fed by the
+                // work-socket reader, and if the process dies mid-task
+                // the reader fails the channel — same semantics as a dead
+                // in-process rank. Live progress slots are not mirrored
+                // over the work socket (remote tasks report iters = 0
+                // until terminal).
+                RankHandle::Remote(w) => w
+                    .run_task(
+                        session.id,
+                        rec.id,
+                        rec.lib.name(),
+                        &rec.routine,
+                        rec.params.clone(),
+                        out_base,
+                        out_span,
+                        engine_threads,
+                    )
+                    .ok(),
+            };
+            if rx.is_none() {
                 dead_slot = Some(slot);
             }
-            replies.push((slot, sent.is_ok().then_some(rx)));
+            replies.push((slot, rx));
         }
         // a dead worker channel means that rank will never enter the
         // routine — but every rank already dispatched WILL, and would
@@ -970,9 +1231,18 @@ impl Driver {
         // means the client asked for cancellation — report Cancelled and
         // discard (free) any outputs rather than registering them
         let free_window = || {
-            for id in out_base..out_base + out_span {
-                for &rank in &session.ranks {
-                    self.workers[rank].store.free(id);
+            for &rank in &session.ranks {
+                match &self.ranks[rank] {
+                    RankHandle::Local { shared, .. } => {
+                        for id in out_base..out_base + out_span {
+                            shared.store.free(id);
+                        }
+                    }
+                    RankHandle::Remote(w) => {
+                        for id in out_base..out_base + out_span {
+                            let _ = w.send(&WorkMsg::StoreFree { id });
+                        }
+                    }
                 }
             }
         };
@@ -1047,11 +1317,10 @@ impl Driver {
             {
                 let mut handles = session.handles.lock().unwrap();
                 for meta in &r0.outputs {
-                    let layout = self.workers[session.ranks[0]]
-                        .store
-                        .get(meta.id)?
-                        .layout
-                        .clone();
+                    // every rank already agreed on the layout when the
+                    // routine returned; it travels in the reply (for
+                    // remote ranks the store itself is out of reach)
+                    let layout = meta.layout.clone();
                     let info = MatrixInfo {
                         id: meta.id,
                         rows: meta.rows,
@@ -1104,7 +1373,14 @@ impl Driver {
         let existed = session.handles.lock().unwrap().remove(&id).is_some();
         anyhow::ensure!(existed, "unknown matrix handle {id}");
         for &rank in &session.ranks {
-            self.workers[rank].store.free(id);
+            match &self.ranks[rank] {
+                RankHandle::Local { shared, .. } => {
+                    shared.store.free(id);
+                }
+                RankHandle::Remote(w) => {
+                    let _ = w.send(&WorkMsg::StoreFree { id });
+                }
+            }
         }
         Ok(ControlMsg::Freed { id })
     }
@@ -1221,6 +1497,10 @@ pub struct ServerHandle {
     /// (sessions are granted subsets; see the handshake ack).
     pub worker_addrs: Vec<String>,
     threads: Vec<JoinHandle<()>>,
+    /// Spawned worker processes, index = global rank (`fabric.mode =
+    /// tcp`; empty for local pools). Reaped at shutdown; a `None` slot
+    /// was killed (see [`ServerHandle::kill_worker`]) or already reaped.
+    children: Mutex<Vec<Option<Child>>>,
     driver: Arc<Driver>,
 }
 
@@ -1231,6 +1511,7 @@ impl ServerHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        self.reap_children();
     }
 
     /// Block until some client sends `ControlMsg::Shutdown` (the
@@ -1239,6 +1520,49 @@ impl ServerHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        self.reap_children();
+    }
+
+    /// Kill worker process `rank` outright — SIGKILL, no shutdown
+    /// message (fault injection: the rank's peers must detect the dead
+    /// mesh links themselves and poison the group with
+    /// `PoisonCause::RankFailed`). Returns false for local pools, unknown
+    /// ranks, and ranks already gone.
+    pub fn kill_worker(&self, rank: usize) -> bool {
+        let mut children = self.children.lock().unwrap();
+        match children.get_mut(rank) {
+            Some(slot @ Some(_)) => {
+                let mut child = slot.take().expect("matched Some");
+                let killed = child.kill().is_ok();
+                let _ = child.wait();
+                killed
+            }
+            _ => false,
+        }
+    }
+
+    /// Wait for the worker processes to exit (they do so on `Shutdown`,
+    /// or when the work socket drops), escalating to a kill after a
+    /// bounded grace so a wedged child can never hang shutdown.
+    fn reap_children(&self) {
+        let mut children = self.children.lock().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        for slot in children.iter_mut() {
+            let Some(mut child) = slot.take() else { continue };
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
     }
 
     /// Live session count (test/debug introspection).
@@ -1246,10 +1570,17 @@ impl ServerHandle {
         self.driver.sessions.lock().unwrap().len()
     }
 
-    /// Total matrix blocks across all worker stores (test/debug
-    /// introspection: teardown must drive a session's share to zero).
+    /// Total matrix blocks across all *in-process* worker stores
+    /// (test/debug introspection: teardown must drive a session's share
+    /// to zero). Worker processes own their stores — remote ranks
+    /// contribute nothing here.
     pub fn total_blocks(&self) -> usize {
-        self.driver.workers.iter().map(|w| w.store.len()).sum()
+        self.driver
+            .ranks
+            .iter()
+            .filter_map(|r| r.local())
+            .map(|w| w.store.len())
+            .sum()
     }
 
     /// Scheduler backpressure snapshot: admission-queue depth, task-queue
@@ -1264,7 +1595,7 @@ impl ServerHandle {
     /// AND came back during the run.
     pub fn storage_metrics(&self) -> StorageSnapshot {
         let mut total = StorageSnapshot::default();
-        for w in &self.driver.workers {
+        for w in self.driver.ranks.iter().filter_map(|r| r.local()) {
             total.merge(&w.store.storage_metrics().snapshot());
         }
         total
@@ -1275,7 +1606,7 @@ impl ServerHandle {
     /// closed session's entry to zero — and off this list.
     pub fn storage_usage(&self) -> Vec<(u64, super::store::SessionUsage)> {
         let mut by: HashMap<u64, super::store::SessionUsage> = HashMap::new();
-        for w in &self.driver.workers {
+        for w in self.driver.ranks.iter().filter_map(|r| r.local()) {
             for (sid, u) in w.store.usage() {
                 let e = by.entry(sid).or_default();
                 e.bytes_resident += u.bytes_resident;
@@ -1291,7 +1622,12 @@ impl ServerHandle {
     /// Live spill-file segments across all ranks (a freed session must
     /// leave none behind).
     pub fn total_spill_segments(&self) -> usize {
-        self.driver.workers.iter().map(|w| w.store.spill_segments()).sum()
+        self.driver
+            .ranks
+            .iter()
+            .filter_map(|r| r.local())
+            .map(|w| w.store.spill_segments())
+            .sum()
     }
 
     /// Per-session task backlog (which tenant the global `queued_tasks`
@@ -1321,8 +1657,20 @@ pub struct AlchemistServer;
 impl AlchemistServer {
     /// Start a driver with `num_workers` worker ranks on ephemeral
     /// localhost ports. Returns once all sockets are listening.
+    /// `fabric.mode` picks the pool's shape: threads in this process
+    /// (`local`, the seed behavior) or spawned `alchemist worker`
+    /// processes attached over TCP (`tcp`, protocol v8 —
+    /// `docs/fabric.md`).
     pub fn start(cfg: Config, num_workers: usize) -> crate::Result<ServerHandle> {
         anyhow::ensure!(num_workers >= 1, "need at least one worker");
+        match cfg.fabric.mode {
+            FabricMode::Local => Self::start_local(cfg, num_workers),
+            FabricMode::Tcp => Self::start_fabric(cfg, num_workers),
+        }
+    }
+
+    /// In-process pool: one data listener + command-loop thread per rank.
+    fn start_local(cfg: Config, num_workers: usize) -> crate::Result<ServerHandle> {
         let mut threads = Vec::new();
 
         // server-wide work-stealing compute plane: ONE thread set sized
@@ -1337,9 +1685,7 @@ impl AlchemistServer {
 
         // worker shared state; communicators are session-scoped and bound
         // at handshake time
-        let mut workers = Vec::new();
-        let mut senders = Vec::new();
-        let mut worker_addrs = Vec::new();
+        let mut ranks = Vec::new();
         let mut listener_stops = Vec::new();
 
         for rank in 0..num_workers {
@@ -1358,7 +1704,6 @@ impl AlchemistServer {
             // data listener
             let listener = Server::bind(0)?;
             *shared.data_addr.lock().unwrap() = listener.addr().to_string();
-            worker_addrs.push(listener.addr().to_string());
             listener_stops.push(listener.stop_flag());
             {
                 let shared = shared.clone();
@@ -1373,7 +1718,6 @@ impl AlchemistServer {
             // command loop; each rank's engine rides a client queue of
             // the shared compute pool (cap retargeted per task)
             let (tx, rx) = mpsc::channel();
-            senders.push(tx);
             {
                 let shared = shared.clone();
                 let cfg = cfg.clone();
@@ -1382,9 +1726,133 @@ impl AlchemistServer {
                     worker_main(shared, cfg, rx, Some(pool));
                 }));
             }
-            workers.push(shared);
+            ranks.push(RankHandle::Local { shared, sender: tx });
         }
 
+        Self::finish_start(
+            cfg,
+            ranks,
+            compute_pool,
+            threads,
+            listener_stops,
+            Vec::new(),
+        )
+    }
+
+    /// Process-separated pool: spawn `alchemist worker --connect` children
+    /// against a one-shot attach socket and wait (bounded by
+    /// `fabric.attach_timeout_s`) for every rank to complete the attach
+    /// handshake. Config travels to the children as `--set` override
+    /// pairs; the coordinator runs no engines in this mode, so its
+    /// compute pool shrinks to a stub.
+    fn start_fabric(cfg: Config, num_workers: usize) -> crate::Result<ServerHandle> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).context("binding attach socket")?;
+        let attach_addr = listener.local_addr()?.to_string();
+        let exe = if cfg.fabric.worker_exe.is_empty() {
+            std::env::current_exe().context("locating the alchemist binary")?
+        } else {
+            std::path::PathBuf::from(&cfg.fabric.worker_exe)
+        };
+        let overrides = cfg
+            .worker_override_pairs()
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let mut children: Vec<Option<Child>> = Vec::with_capacity(num_workers);
+        let attached = (|| -> crate::Result<Vec<RankHandle>> {
+            for rank in 0..num_workers {
+                let mut cmd = Command::new(&exe);
+                cmd.arg("worker")
+                    .arg("--connect")
+                    .arg(&attach_addr)
+                    .arg("--rank-id")
+                    .arg(rank.to_string());
+                if !overrides.is_empty() {
+                    cmd.arg("--set").arg(&overrides);
+                }
+                let child = cmd
+                    .spawn()
+                    .with_context(|| format!("spawning worker process {rank}"))?;
+                children.push(Some(child));
+            }
+            let attach_timeout =
+                Duration::from_secs_f64(cfg.fabric.attach_timeout_s.max(0.1));
+            let deadline = Instant::now() + attach_timeout;
+            listener.set_nonblocking(true).context("attach socket setup")?;
+            let mut slots: Vec<Option<RankHandle>> =
+                (0..num_workers).map(|_| None).collect();
+            let mut count = 0;
+            while count < num_workers {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false)?;
+                        let remaining = deadline
+                            .saturating_duration_since(Instant::now())
+                            .max(Duration::from_millis(100));
+                        let w = RemoteWorker::attach(
+                            stream,
+                            cfg.transfer.buf_bytes,
+                            remaining,
+                        )?;
+                        anyhow::ensure!(
+                            w.rank < num_workers,
+                            "worker attached claiming rank {} of a \
+                             {num_workers}-rank pool",
+                            w.rank
+                        );
+                        anyhow::ensure!(
+                            slots[w.rank].is_none(),
+                            "two workers attached claiming rank {}",
+                            w.rank
+                        );
+                        slots[w.rank] = Some(RankHandle::Remote(w));
+                        count += 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "only {count} of {num_workers} worker processes \
+                             attached within {:.1}s (fabric.attach_timeout_s)",
+                            attach_timeout.as_secs_f64()
+                        );
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e).context("accepting worker attach"),
+                }
+            }
+            Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+        })();
+        let ranks = match attached {
+            Ok(r) => r,
+            Err(e) => {
+                // failed startup leaves no orphans behind
+                for c in children.iter_mut().flatten() {
+                    let _ = c.kill();
+                }
+                for c in children.iter_mut() {
+                    if let Some(mut c) = c.take() {
+                        let _ = c.wait();
+                    }
+                }
+                return Err(e);
+            }
+        };
+        let compute_pool = ThreadPool::new(1);
+        Self::finish_start(cfg, ranks, compute_pool, Vec::new(), Vec::new(), children)
+    }
+
+    /// Common tail of both modes: control listener, driver, log line.
+    fn finish_start(
+        cfg: Config,
+        ranks: Vec<RankHandle>,
+        compute_pool: ThreadPool,
+        mut threads: Vec<JoinHandle<()>>,
+        mut listener_stops: Vec<Arc<AtomicBool>>,
+        children: Vec<Option<Child>>,
+    ) -> crate::Result<ServerHandle> {
+        let num_workers = ranks.len();
         let control = Server::bind(0)?;
         let control_addr = control.addr().to_string();
         listener_stops.push(control.stop_flag());
@@ -1396,8 +1864,7 @@ impl AlchemistServer {
                 metrics.clone(),
             ),
             cfg: cfg.clone(),
-            workers,
-            senders,
+            ranks,
             registry: Registry::new(),
             engine_threads_committed: Mutex::new(0),
             storage_committed: Mutex::new(0),
@@ -1423,8 +1890,13 @@ impl AlchemistServer {
         }
 
         log::info!(
-            "alchemist server up: control {control_addr}, {num_workers} workers, \
-             shared compute pool of {} threads, engine {}, max {} sessions",
+            "alchemist server up: control {control_addr}, {num_workers} {} \
+             workers, shared compute pool of {} threads, engine {}, max {} \
+             sessions",
+            match cfg.fabric.mode {
+                FabricMode::Local => "in-process",
+                FabricMode::Tcp => "process-separated",
+            },
             driver.compute_pool.threads(),
             cfg.engine.as_str(),
             cfg.scheduler.max_sessions
@@ -1433,6 +1905,7 @@ impl AlchemistServer {
             control_addr,
             worker_addrs: driver.worker_addrs(),
             threads,
+            children: Mutex::new(children),
             driver,
         })
     }

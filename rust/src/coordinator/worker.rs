@@ -5,9 +5,11 @@
 //! compute — and (b) a command loop thread that executes library routines
 //! with the communicator of whichever *session group* the task belongs
 //! to. Workers are allocated to sessions exclusively: the driver binds a
-//! session-scoped [`LocalComm`] endpoint into [`WorkerShared::sessions`]
-//! at handshake time and removes it at teardown, so tasks from sessions
-//! holding disjoint groups run concurrently on disjoint worker threads.
+//! session-scoped [`Fabric`] endpoint (a [`crate::collectives::LocalComm`]
+//! for in-process ranks, a [`crate::collectives::TcpComm`] in a worker
+//! process — protocol v8) into [`WorkerShared::sessions`] at handshake
+//! time and removes it at teardown, so tasks from sessions holding
+//! disjoint groups run concurrently on disjoint worker threads.
 //! The engine is built lazily *on the worker thread* (real PJRT handles
 //! are not `Send`), riding the rank's client queue of the server's
 //! shared work-stealing compute pool when the server passes one in;
@@ -27,7 +29,7 @@ use std::net::TcpStream;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use crate::collectives::{CommError, Communicator, LocalComm, PoisonCause};
+use crate::collectives::{CommError, Communicator, Fabric, PoisonCause};
 use crate::compute::{build_engine_with_pool, Engine, ThreadPool};
 use crate::config::Config;
 use crate::distmat::RowBlockLayout;
@@ -54,7 +56,7 @@ pub struct WorkerShared {
     /// communicator (bound at handshake, removed at teardown). The
     /// endpoint's [`Communicator::rank`] is the session's group-local
     /// rank for this worker.
-    pub sessions: Mutex<HashMap<u64, Arc<LocalComm>>>,
+    pub sessions: Mutex<HashMap<u64, Arc<dyn Fabric>>>,
 }
 
 /// Output metadata a rank reports back to the driver after a task (the
@@ -65,6 +67,11 @@ pub struct OutputMeta {
     pub name: String,
     pub rows: u64,
     pub cols: u64,
+    /// The output's row-block layout across the group. Reported with the
+    /// reply (not re-read from the store) because with process-separated
+    /// ranks (protocol v8) the coordinator holds no store and must learn
+    /// the layout over the wire.
+    pub layout: RowBlockLayout,
 }
 
 /// A completed task on one rank.
@@ -159,7 +166,7 @@ pub fn worker_main(
                             let sim0 = comm.sim_comm_secs();
                             let mut ctx = WorkerCtx {
                                 rank: local_rank,
-                                comm: comm.as_ref(),
+                                comm: comm.as_comm(),
                                 engine: engine.as_mut(),
                                 store: &shared.store,
                                 config: &cfg,
@@ -188,6 +195,7 @@ pub fn worker_main(
                                     name: m.name.clone(),
                                     rows: m.layout.rows as u64,
                                     cols: m.layout.cols as u64,
+                                    layout: m.layout.clone(),
                                 });
                                 shared.store.insert(
                                     id,

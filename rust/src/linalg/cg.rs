@@ -112,11 +112,18 @@ pub fn cg_solve_scoped(
         // Gram allreduce below keeps ranks in lockstep, so all reach
         // this together and agree); free for detached scopes, so plain
         // `cg_solve` callers pay no extra collective per iteration
-        scope.collective_check_cancelled(comm, TAG + 8 + (it % 64) as u64 * 256)?;
+        scope.collective_check_cancelled(
+            comm,
+            TAG + (1 + 2 * (it % 64) as u64) * crate::collectives::TAG_WINDOW,
+        )?;
 
         // q = (XᵀX + nλI)·p — the hot path
         let mut q = engine.gram_matvec_keyed(x_key, x_local, &p, reg_local)?;
-        allreduce_sum(comm, TAG + 16 + (it % 64) as u64 * 256, q.data_mut())?;
+        allreduce_sum(
+            comm,
+            TAG + (2 + 2 * (it % 64) as u64) * crate::collectives::TAG_WINDOW,
+            q.data_mut(),
+        )?;
 
         let pq = p.col_dots(&q);
         let alpha: Vec<f64> = rs_old

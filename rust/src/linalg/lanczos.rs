@@ -172,7 +172,10 @@ pub fn truncated_svd_panels(
         // collective cancellation check at the step boundary (steps are
         // synchronized by the Gram allreduce below, so all ranks reach
         // this together and agree); free for detached scopes
-        scope.collective_check_cancelled(comm, TAG + 8 + (j as u64 % 64) * 256)?;
+        scope.collective_check_cancelled(
+            comm,
+            TAG + (1 + 2 * (j as u64 % 64)) * crate::collectives::TAG_WINDOW,
+        )?;
 
         // w = G·vj (matrix-free, reg = 0), accumulated panel by panel;
         // one clone to column-matrix form — `basis[j]` itself stays
@@ -193,7 +196,11 @@ pub fn truncated_svd_panels(
         }
         // a rank holding zero rows contributes zeros to the allreduce
         let mut w = acc.unwrap_or_else(|| LocalMatrix::zeros(k_dim, 1));
-        allreduce_sum(comm, TAG + (j as u64 % 64) * 256, w.data_mut())?;
+        allreduce_sum(
+            comm,
+            TAG + (2 * (j as u64 % 64)) * crate::collectives::TAG_WINDOW,
+            w.data_mut(),
+        )?;
         let mut w = w.into_data();
 
         let alpha = dot(&w, &basis[j]);

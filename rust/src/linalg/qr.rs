@@ -37,7 +37,8 @@ pub fn cholesky_qr2(
     a_local: &LocalMatrix,
 ) -> crate::Result<(LocalMatrix, LocalMatrix)> {
     let (q1, r1) = cholesky_qr_once(comm, engine, a_local, TAG)?;
-    let (q2, r2) = cholesky_qr_once(comm, engine, &q1, TAG + 256)?;
+    let (q2, r2) =
+        cholesky_qr_once(comm, engine, &q1, TAG + crate::collectives::TAG_WINDOW)?;
     let r = matmul(&r2, &r1);
     Ok((q2, r))
 }

@@ -3,7 +3,12 @@
 //! Subcommands:
 //!
 //! * `serve --workers N [--port P] [--engine E]` — run an Alchemist
-//!   server until a client sends Shutdown (or ^C).
+//!   server until a client sends Shutdown (or ^C). With
+//!   `--set fabric.mode=tcp` the worker ranks are spawned as `worker`
+//!   subprocesses instead of threads (protocol v8, `docs/fabric.md`).
+//! * `worker --connect ADDR --rank-id N` — one process-separated worker
+//!   rank; normally spawned by a tcp-mode `serve`, not by hand. Exits
+//!   when the coordinator shuts down or drops the connection.
 //! * `info` — print config, artifact manifest summary, and library list.
 //! * `gen-ocean --out FILE [--cells N --times T]` — write a synthetic
 //!   ocean field to an hdf5sim file (used by the Table 5 / Fig 3 drivers).
@@ -43,7 +48,7 @@ fn main() -> alchemist::Result<()> {
     };
     apply_overrides(&mut cfg, &args)?;
 
-    match args.subcommand(&["serve", "info", "gen-ocean"])? {
+    match args.subcommand(&["serve", "worker", "info", "gen-ocean"])? {
         "serve" => {
             let workers = args.get_usize("workers", 3)?;
             let handle = AlchemistServer::start(cfg, workers)?;
@@ -56,6 +61,14 @@ fn main() -> alchemist::Result<()> {
             // The handle's threads own the sockets; joining them blocks
             // this thread exactly as long as the server lives.
             handle.shutdown_on_request();
+        }
+        "worker" => {
+            let connect = args.get("connect").ok_or_else(|| {
+                anyhow::anyhow!("--connect COORDINATOR_ADDR required")
+            })?;
+            let rank = args.get_usize("rank-id", usize::MAX)?;
+            anyhow::ensure!(rank != usize::MAX, "--rank-id N required");
+            alchemist::coordinator::remote::run_worker(connect, rank, cfg)?;
         }
         "info" => {
             println!("engine: {}", cfg.engine.as_str());

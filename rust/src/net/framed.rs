@@ -301,6 +301,36 @@ impl<R: Read, W: Write> Framed<R, W> {
         let buf = self.recv_ref()?;
         Ok(DataMsgView::decode(buf)?)
     }
+
+    /// Queue one frame whose payload is `header` followed by `payload`,
+    /// without building an intermediate encode Vec. Payloads of
+    /// `vectored_min` bytes or more skip the write buffer entirely
+    /// (flush, then one gathered `writev` of prefix + header + payload —
+    /// zero user-space copies of the payload); smaller ones are copied
+    /// once into the write buffer so they coalesce with neighbors. The
+    /// fabric's eager/rendezvous split rides this switch
+    /// (`collectives::netcomm`, `fabric.eager_bytes`).
+    pub fn send_gathered(
+        &mut self,
+        header: &[u8],
+        payload: &[u8],
+        vectored_min: usize,
+    ) -> crate::Result<()> {
+        let len = header.len() + payload.len();
+        anyhow::ensure!(
+            len <= MAX_FRAME as usize,
+            "frame of {len} bytes exceeds cap"
+        );
+        let prefix = (len as u32).to_le_bytes();
+        if payload.len() >= vectored_min {
+            self.w.flush()?;
+            return write_all_vectored(self.w.get_mut(), &[&prefix, header, payload]);
+        }
+        self.w.write_all(&prefix)?;
+        self.w.write_all(header)?;
+        self.w.write_all(payload)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -502,6 +532,29 @@ mod tests {
         let mut w = Dribble(Vec::new());
         write_all_vectored(&mut w, &bufs).unwrap();
         assert_eq!(w.0, b"abcdefghijklmnop");
+    }
+
+    #[test]
+    fn gathered_send_frames_identically_on_both_paths() {
+        // the same (header, payload) pair must produce byte-identical
+        // frames whether it rides the write buffer or the writev path
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let header = [9u8, 8, 7];
+        let payload: Vec<u8> = (0..64u8).collect();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut f = Framed::tcp(s, 4096).unwrap();
+            let mut want = vec![9u8, 8, 7];
+            want.extend(0..64u8);
+            assert_eq!(f.recv_ref().unwrap(), &want[..]); // buffered path
+            assert_eq!(f.recv_ref().unwrap(), &want[..]); // writev path
+        });
+        let mut c = Framed::connect(&addr.to_string(), 4096).unwrap();
+        c.send_gathered(&header, &payload, usize::MAX).unwrap();
+        c.send_gathered(&header, &payload, 1).unwrap();
+        c.flush().unwrap();
+        server.join().unwrap();
     }
 
     #[test]

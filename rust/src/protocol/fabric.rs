@@ -1,0 +1,673 @@
+//! Wire messages for the network rank fabric (protocol v8).
+//!
+//! Two new channels appear when worker ranks run as separate OS
+//! processes (`alchemist worker --connect ...`; see `docs/fabric.md`):
+//!
+//! * the **work** socket between the coordinator and each worker process
+//!   — attach handshake, task dispatch, mesh brokering, store management
+//!   ([`WorkMsg`]); the coordinator is control-plane only on it;
+//! * **mesh** sockets between worker ranks — the [`FabricFrame`]s a
+//!   `collectives::netcomm::TcpComm` exchanges peer-to-peer. Data frames
+//!   carry the payload as raw little-endian f64 bytes after a fixed
+//!   17-byte header so the send leg can go out as a gathered `writev`
+//!   (header + borrowed payload, no intermediate copy) and the receive
+//!   leg can decode borrowed out of the link's reusable frame buffer.
+
+use super::value::Params;
+use super::wire::{ProtocolError, Reader, Writer};
+use crate::collectives::PoisonCause;
+
+/// Byte length of the fixed header preceding a [`FabricFrame::Data`]
+/// payload on the wire: frame tag + epoch + message tag.
+pub const FABRIC_DATA_HEADER_LEN: usize = 1 + 8 + 8;
+
+/// Rank⇄rank mesh frames. `Data` decodes *borrowed* — the payload points
+/// into the receive buffer (not necessarily 8-aligned, hence bytes) and
+/// consumers copy exactly once into their destination `Vec<f64>` via
+/// [`crate::protocol::wire::le_f64s_to_vec`].
+///
+/// Every data/poison frame is stamped with the sender's group *epoch*
+/// (bumped by `TcpComm::reset` between tasks): a receiver drops frames
+/// from past epochs, delivers the current one, and parks future ones —
+/// so a straggler frame from a finished task can never satisfy a recv
+/// of the next task.
+#[derive(Debug, PartialEq)]
+pub enum FabricFrame<'a> {
+    /// First frame on a freshly connected mesh link: who is calling, for
+    /// which group. Sent by the lower-ranked side's connector.
+    Hello { session_id: u64, from_rank: u32 },
+    /// One point-to-point message of a collective.
+    Data { epoch: u64, tag: u64, payload: &'a [u8] },
+    /// The sender's group got poisoned; propagate so peers blocked in a
+    /// recv wake with the root cause instead of a bare connection error.
+    Poison { epoch: u64, cause: PoisonCause },
+    /// Orderly teardown: the sender is closing this link on purpose, so
+    /// the EOF that follows must not be treated as a rank failure.
+    Close,
+}
+
+fn encode_poison(w: &mut Writer, cause: PoisonCause) {
+    match cause {
+        PoisonCause::RankFailed(rank) => {
+            w.u8(0);
+            w.u64(rank as u64);
+        }
+        PoisonCause::HardCancel => w.u8(1),
+    }
+}
+
+fn decode_poison(r: &mut Reader) -> Result<PoisonCause, ProtocolError> {
+    Ok(match r.u8()? {
+        0 => PoisonCause::RankFailed(r.u64()? as usize),
+        1 => PoisonCause::HardCancel,
+        tag => return Err(ProtocolError::BadTag { tag, what: "PoisonCause" }),
+    })
+}
+
+impl<'a> FabricFrame<'a> {
+    /// Encode the non-payload frames. `Data` never goes through here —
+    /// its header comes from [`fabric_data_header`] and its payload bytes
+    /// are written (or `writev`'d) straight from the `Vec<f64>`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            FabricFrame::Hello { session_id, from_rank } => {
+                w.u8(1);
+                w.u64(*session_id);
+                w.u32(*from_rank);
+            }
+            FabricFrame::Data { epoch, tag, payload } => {
+                w.u8(2);
+                w.u64(*epoch);
+                w.u64(*tag);
+                w.raw_bytes(payload);
+            }
+            FabricFrame::Poison { epoch, cause } => {
+                w.u8(3);
+                w.u64(*epoch);
+                encode_poison(&mut w, *cause);
+            }
+            FabricFrame::Close => w.u8(4),
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &'a [u8]) -> Result<Self, ProtocolError> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            1 => FabricFrame::Hello { session_id: r.u64()?, from_rank: r.u32()? },
+            2 => {
+                let epoch = r.u64()?;
+                let tag = r.u64()?;
+                // the payload is the entire rest of the frame (its length
+                // is implied by the frame length — no redundant count)
+                let payload = r.raw_bytes(r.remaining())?;
+                FabricFrame::Data { epoch, tag, payload }
+            }
+            3 => FabricFrame::Poison { epoch: r.u64()?, cause: decode_poison(&mut r)? },
+            4 => FabricFrame::Close,
+            tag => return Err(ProtocolError::BadTag { tag, what: "FabricFrame" }),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+/// The fixed-size header of a [`FabricFrame::Data`]; callers append the
+/// payload's raw little-endian f64 bytes (buffered for eager messages,
+/// gathered `writev` for rendezvous-size ones).
+pub fn fabric_data_header(epoch: u64, tag: u64) -> [u8; FABRIC_DATA_HEADER_LEN] {
+    let mut h = [0u8; FABRIC_DATA_HEADER_LEN];
+    h[0] = 2;
+    h[1..9].copy_from_slice(&epoch.to_le_bytes());
+    h[9..17].copy_from_slice(&tag.to_le_bytes());
+    h
+}
+
+/// Shape of one task output a worker process reports back in
+/// [`WorkMsg::TaskDone`]: everything the coordinator needs to build the
+/// client-visible handle without reaching into the worker's store.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireOutput {
+    pub id: u64,
+    pub name: String,
+    pub rows: u64,
+    pub cols: u64,
+    /// Row range owned by each group rank: `[start, end)`.
+    pub ranges: Vec<(u64, u64)>,
+}
+
+impl WireOutput {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(self.id);
+        w.str(&self.name);
+        w.u64(self.rows);
+        w.u64(self.cols);
+        encode_ranges(w, &self.ranges);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Self, ProtocolError> {
+        Ok(WireOutput {
+            id: r.u64()?,
+            name: r.str()?,
+            rows: r.u64()?,
+            cols: r.u64()?,
+            ranges: decode_ranges(r)?,
+        })
+    }
+}
+
+fn encode_ranges(w: &mut Writer, ranges: &[(u64, u64)]) {
+    w.u32(ranges.len() as u32);
+    for (a, b) in ranges {
+        w.u64(*a);
+        w.u64(*b);
+    }
+}
+
+fn decode_ranges(r: &mut Reader) -> Result<Vec<(u64, u64)>, ProtocolError> {
+    let n = r.u32()?;
+    (0..n).map(|_| Ok((r.u64()?, r.u64()?))).collect()
+}
+
+fn encode_timings(w: &mut Writer, timings: &[(String, f64)]) {
+    w.u32(timings.len() as u32);
+    for (name, secs) in timings {
+        w.str(name);
+        w.f64(*secs);
+    }
+}
+
+fn decode_timings(r: &mut Reader) -> Result<Vec<(String, f64)>, ProtocolError> {
+    let n = r.u32()?;
+    (0..n)
+        .map(|_| Ok((r.str()?, r.f64()?)))
+        .collect::<Result<_, ProtocolError>>()
+}
+
+/// How a remote rank's task failed, preserved across the wire so the
+/// coordinator's root-cause-first aggregation sees the same
+/// `CommError` classification it would for an in-process rank.
+pub const FAIL_KIND_PLAIN: u8 = 0;
+pub const FAIL_KIND_PEER_FAILED: u8 = 1;
+pub const FAIL_KIND_CANCELLED: u8 = 2;
+pub const FAIL_KIND_TIMEOUT: u8 = 3;
+
+/// Coordinator⇄worker-process control messages (the "work" socket). One
+/// long-lived connection per worker process; the coordinator multiplexes
+/// requests by `req_id` and the worker answers each with `TaskDone` /
+/// `TaskFailed` / `Ack` carrying the same id (replies may arrive out of
+/// order — a task runs while store ops are serviced).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkMsg {
+    // worker -> coordinator
+    /// First message after connect: which rank this process is, where its
+    /// data-plane and mesh listeners ended up binding.
+    Attach { version: u32, rank: u32, data_addr: String, mesh_addr: String },
+    /// Task finished on this rank; `outputs` describe what landed in the
+    /// worker's local store.
+    TaskDone {
+        req_id: u64,
+        outputs: Vec<WireOutput>,
+        scalars: Params,
+        /// Named timing laps measured on the worker (compute, ...).
+        timings: Vec<(String, f64)>,
+    },
+    /// Task failed on this rank; `kind` is one of the `FAIL_KIND_*`
+    /// constants so the coordinator can rebuild the `CommError` (and its
+    /// collateral-vs-root-cause classification) exactly.
+    TaskFailed { req_id: u64, kind: u8, rank: u64, tag: u64, message: String },
+    /// Generic reply to mesh/store/session requests. `value` carries the
+    /// operation's scalar result (rows sealed, bytes freed, ...), 0 when
+    /// there is none.
+    Ack { req_id: u64, ok: bool, value: u64, message: String },
+
+    // coordinator -> worker
+    AttachAck { rank: u32 },
+    RunTask {
+        req_id: u64,
+        session_id: u64,
+        task_id: u64,
+        /// Builtin library identity (`Library::name()`), not the
+        /// client-chosen registration alias — the worker process resolves
+        /// it through `registry::builtin`.
+        lib: String,
+        routine: String,
+        params: Params,
+        /// Validated output-id reservation for this task (see
+        /// `docs/tasks.md`): outputs must use ids in
+        /// `[out_base, out_base + out_span)`.
+        out_base: u64,
+        out_span: u64,
+        /// Engine thread-pool lease for this rank during the task.
+        engine_threads: u32,
+    },
+    /// Cooperative cancellation of a running task (the remote half of the
+    /// coordinator's cancel token). Fire-and-forget: no reply — the task
+    /// itself answers with `TaskFailed("task cancelled")`.
+    CancelTask { session_id: u64, task_id: u64 },
+    /// Form the session's rank mesh: connect/accept until this worker has
+    /// a live link to every peer in `peers` (index = group rank; its own
+    /// entry is ignored). Acked when the mesh is fully connected.
+    MeshForm { req_id: u64, session_id: u64, group_rank: u32, peers: Vec<String> },
+    /// Reset the session's communicator between tasks (epoch bump; drops
+    /// stragglers, clears poison). Acked.
+    MeshReset { req_id: u64, session_id: u64 },
+    /// Poison the session's communicator (hard cancel escalation or a
+    /// peer process dying). Fire-and-forget — the coordinator may be
+    /// telling a wedged worker whose ack would never come.
+    MeshPoison { session_id: u64, kind: u8, rank: u64 },
+    /// Tear down the session on this worker: drop its communicator and
+    /// free its namespaced blocks. Acked with the freed block count.
+    SessionClose { req_id: u64, session_id: u64 },
+    /// Allocate an ingest block in the worker's store (the remote half of
+    /// `CreateMatrix`). `ranges` is the full group layout; `slot` is this
+    /// worker's index into it. Acked.
+    StoreAlloc {
+        req_id: u64,
+        session_id: u64,
+        id: u64,
+        name: String,
+        rows: u64,
+        cols: u64,
+        ranges: Vec<(u64, u64)>,
+        slot: u32,
+    },
+    /// Seal an ingest block; acked with the rows this rank received.
+    StoreSeal { req_id: u64, id: u64 },
+    /// Free a block (rollback / client free). Fire-and-forget.
+    StoreFree { id: u64 },
+    /// Map (or read) this worker's shard of an `hdf5sim` file at `path`
+    /// on the worker's filesystem — the remote half of `LoadMatrix`.
+    /// Acked.
+    StoreLoad {
+        req_id: u64,
+        session_id: u64,
+        id: u64,
+        name: String,
+        path: String,
+        rows: u64,
+        cols: u64,
+        ranges: Vec<(u64, u64)>,
+        slot: u32,
+    },
+    /// Exit the worker process after draining. Fire-and-forget.
+    Shutdown,
+}
+
+impl WorkMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            WorkMsg::Attach { version, rank, data_addr, mesh_addr } => {
+                w.u8(0);
+                w.u32(*version);
+                w.u32(*rank);
+                w.str(data_addr);
+                w.str(mesh_addr);
+            }
+            WorkMsg::TaskDone { req_id, outputs, scalars, timings } => {
+                w.u8(1);
+                w.u64(*req_id);
+                w.u32(outputs.len() as u32);
+                for o in outputs {
+                    o.encode(&mut w);
+                }
+                scalars.encode(&mut w);
+                encode_timings(&mut w, timings);
+            }
+            WorkMsg::TaskFailed { req_id, kind, rank, tag, message } => {
+                w.u8(2);
+                w.u64(*req_id);
+                w.u8(*kind);
+                w.u64(*rank);
+                w.u64(*tag);
+                w.str(message);
+            }
+            WorkMsg::Ack { req_id, ok, value, message } => {
+                w.u8(3);
+                w.u64(*req_id);
+                w.bool(*ok);
+                w.u64(*value);
+                w.str(message);
+            }
+            WorkMsg::AttachAck { rank } => {
+                w.u8(128);
+                w.u32(*rank);
+            }
+            WorkMsg::RunTask {
+                req_id,
+                session_id,
+                task_id,
+                lib,
+                routine,
+                params,
+                out_base,
+                out_span,
+                engine_threads,
+            } => {
+                w.u8(129);
+                w.u64(*req_id);
+                w.u64(*session_id);
+                w.u64(*task_id);
+                w.str(lib);
+                w.str(routine);
+                params.encode(&mut w);
+                w.u64(*out_base);
+                w.u64(*out_span);
+                w.u32(*engine_threads);
+            }
+            WorkMsg::CancelTask { session_id, task_id } => {
+                w.u8(130);
+                w.u64(*session_id);
+                w.u64(*task_id);
+            }
+            WorkMsg::MeshForm { req_id, session_id, group_rank, peers } => {
+                w.u8(131);
+                w.u64(*req_id);
+                w.u64(*session_id);
+                w.u32(*group_rank);
+                w.u32(peers.len() as u32);
+                for p in peers {
+                    w.str(p);
+                }
+            }
+            WorkMsg::MeshReset { req_id, session_id } => {
+                w.u8(132);
+                w.u64(*req_id);
+                w.u64(*session_id);
+            }
+            WorkMsg::MeshPoison { session_id, kind, rank } => {
+                w.u8(133);
+                w.u64(*session_id);
+                w.u8(*kind);
+                w.u64(*rank);
+            }
+            WorkMsg::SessionClose { req_id, session_id } => {
+                w.u8(134);
+                w.u64(*req_id);
+                w.u64(*session_id);
+            }
+            WorkMsg::StoreAlloc {
+                req_id,
+                session_id,
+                id,
+                name,
+                rows,
+                cols,
+                ranges,
+                slot,
+            } => {
+                w.u8(135);
+                w.u64(*req_id);
+                w.u64(*session_id);
+                w.u64(*id);
+                w.str(name);
+                w.u64(*rows);
+                w.u64(*cols);
+                encode_ranges(&mut w, ranges);
+                w.u32(*slot);
+            }
+            WorkMsg::StoreSeal { req_id, id } => {
+                w.u8(136);
+                w.u64(*req_id);
+                w.u64(*id);
+            }
+            WorkMsg::StoreFree { id } => {
+                w.u8(137);
+                w.u64(*id);
+            }
+            WorkMsg::StoreLoad {
+                req_id,
+                session_id,
+                id,
+                name,
+                path,
+                rows,
+                cols,
+                ranges,
+                slot,
+            } => {
+                w.u8(138);
+                w.u64(*req_id);
+                w.u64(*session_id);
+                w.u64(*id);
+                w.str(name);
+                w.str(path);
+                w.u64(*rows);
+                w.u64(*cols);
+                encode_ranges(&mut w, ranges);
+                w.u32(*slot);
+            }
+            WorkMsg::Shutdown => w.u8(139),
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtocolError> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            0 => WorkMsg::Attach {
+                version: r.u32()?,
+                rank: r.u32()?,
+                data_addr: r.str()?,
+                mesh_addr: r.str()?,
+            },
+            1 => {
+                let req_id = r.u64()?;
+                let n = r.u32()?;
+                let outputs = (0..n)
+                    .map(|_| WireOutput::decode(&mut r))
+                    .collect::<Result<_, _>>()?;
+                let scalars = Params::decode(&mut r)?;
+                let timings = decode_timings(&mut r)?;
+                WorkMsg::TaskDone { req_id, outputs, scalars, timings }
+            }
+            2 => WorkMsg::TaskFailed {
+                req_id: r.u64()?,
+                kind: r.u8()?,
+                rank: r.u64()?,
+                tag: r.u64()?,
+                message: r.str()?,
+            },
+            3 => WorkMsg::Ack {
+                req_id: r.u64()?,
+                ok: r.bool()?,
+                value: r.u64()?,
+                message: r.str()?,
+            },
+            128 => WorkMsg::AttachAck { rank: r.u32()? },
+            129 => WorkMsg::RunTask {
+                req_id: r.u64()?,
+                session_id: r.u64()?,
+                task_id: r.u64()?,
+                lib: r.str()?,
+                routine: r.str()?,
+                params: Params::decode(&mut r)?,
+                out_base: r.u64()?,
+                out_span: r.u64()?,
+                engine_threads: r.u32()?,
+            },
+            130 => WorkMsg::CancelTask { session_id: r.u64()?, task_id: r.u64()? },
+            131 => {
+                let req_id = r.u64()?;
+                let session_id = r.u64()?;
+                let group_rank = r.u32()?;
+                let n = r.u32()?;
+                let peers = (0..n).map(|_| r.str()).collect::<Result<_, _>>()?;
+                WorkMsg::MeshForm { req_id, session_id, group_rank, peers }
+            }
+            132 => WorkMsg::MeshReset { req_id: r.u64()?, session_id: r.u64()? },
+            133 => WorkMsg::MeshPoison {
+                session_id: r.u64()?,
+                kind: r.u8()?,
+                rank: r.u64()?,
+            },
+            134 => WorkMsg::SessionClose { req_id: r.u64()?, session_id: r.u64()? },
+            135 => WorkMsg::StoreAlloc {
+                req_id: r.u64()?,
+                session_id: r.u64()?,
+                id: r.u64()?,
+                name: r.str()?,
+                rows: r.u64()?,
+                cols: r.u64()?,
+                ranges: decode_ranges(&mut r)?,
+                slot: r.u32()?,
+            },
+            136 => WorkMsg::StoreSeal { req_id: r.u64()?, id: r.u64()? },
+            137 => WorkMsg::StoreFree { id: r.u64()? },
+            138 => WorkMsg::StoreLoad {
+                req_id: r.u64()?,
+                session_id: r.u64()?,
+                id: r.u64()?,
+                name: r.str()?,
+                path: r.str()?,
+                rows: r.u64()?,
+                cols: r.u64()?,
+                ranges: decode_ranges(&mut r)?,
+                slot: r.u32()?,
+            },
+            139 => WorkMsg::Shutdown,
+            tag => return Err(ProtocolError::BadTag { tag, what: "WorkMsg" }),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fabric_frame_roundtrip() {
+        let payload = [1u8, 2, 3, 4, 5, 6, 7, 8];
+        let frames = vec![
+            FabricFrame::Hello { session_id: 9, from_rank: 2 },
+            FabricFrame::Data { epoch: 3, tag: 0x4347_0000, payload: &payload },
+            FabricFrame::Data { epoch: 0, tag: 7, payload: &[] },
+            FabricFrame::Poison { epoch: 3, cause: PoisonCause::RankFailed(2) },
+            FabricFrame::Poison { epoch: 0, cause: PoisonCause::HardCancel },
+            FabricFrame::Close,
+        ];
+        for f in frames {
+            let buf = f.encode();
+            assert_eq!(FabricFrame::decode(&buf).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn data_header_matches_encoded_frame() {
+        // the writev send path emits header + raw payload bytes; that
+        // must be byte-identical to the buffered encode
+        let payload = 1.5f64.to_le_bytes();
+        let frame = FabricFrame::Data { epoch: 11, tag: 42, payload: &payload };
+        let buf = frame.encode();
+        let header = fabric_data_header(11, 42);
+        assert_eq!(&buf[..FABRIC_DATA_HEADER_LEN], &header[..]);
+        assert_eq!(&buf[FABRIC_DATA_HEADER_LEN..], &payload[..]);
+    }
+
+    #[test]
+    fn work_msg_roundtrip_all_variants() {
+        let msgs = vec![
+            WorkMsg::Attach {
+                version: 8,
+                rank: 1,
+                data_addr: "127.0.0.1:4001".into(),
+                mesh_addr: "127.0.0.1:4101".into(),
+            },
+            WorkMsg::TaskDone {
+                req_id: 5,
+                outputs: vec![WireOutput {
+                    id: 100,
+                    name: "W".into(),
+                    rows: 8,
+                    cols: 4,
+                    ranges: vec![(0, 4), (4, 8)],
+                }],
+                scalars: Params::new().with_i64("iters", 37),
+                timings: vec![("compute".into(), 1.5)],
+            },
+            WorkMsg::TaskFailed {
+                req_id: 5,
+                kind: FAIL_KIND_PEER_FAILED,
+                rank: 2,
+                tag: 0,
+                message: "collective aborted: peer rank 2 failed".into(),
+            },
+            WorkMsg::TaskFailed {
+                req_id: 6,
+                kind: FAIL_KIND_TIMEOUT,
+                rank: 1,
+                tag: 0x4347_0000,
+                message: "recv deadline expired".into(),
+            },
+            WorkMsg::Ack { req_id: 7, ok: true, value: 128, message: String::new() },
+            WorkMsg::Ack { req_id: 8, ok: false, value: 0, message: "boom".into() },
+            WorkMsg::AttachAck { rank: 1 },
+            WorkMsg::RunTask {
+                req_id: 9,
+                session_id: 3,
+                task_id: 12,
+                lib: "skylark".into(),
+                routine: "cg_solve".into(),
+                params: Params::new().with_f64("lambda", 1e-5).with_matrix("X", 3),
+                out_base: 1000,
+                out_span: 8,
+                engine_threads: 2,
+            },
+            WorkMsg::CancelTask { session_id: 3, task_id: 12 },
+            WorkMsg::MeshForm {
+                req_id: 10,
+                session_id: 3,
+                group_rank: 1,
+                peers: vec!["127.0.0.1:4101".into(), "127.0.0.1:4102".into()],
+            },
+            WorkMsg::MeshReset { req_id: 11, session_id: 3 },
+            WorkMsg::MeshPoison { session_id: 3, kind: 0, rank: 2 },
+            WorkMsg::SessionClose { req_id: 12, session_id: 3 },
+            WorkMsg::StoreAlloc {
+                req_id: 13,
+                session_id: 3,
+                id: 200,
+                name: "X".into(),
+                rows: 10,
+                cols: 4,
+                ranges: vec![(0, 5), (5, 10)],
+                slot: 1,
+            },
+            WorkMsg::StoreSeal { req_id: 14, id: 200 },
+            WorkMsg::StoreFree { id: 200 },
+            WorkMsg::StoreLoad {
+                req_id: 15,
+                session_id: 3,
+                id: 201,
+                name: "ocean".into(),
+                path: "/data/ocean.h5sim".into(),
+                rows: 100,
+                cols: 8,
+                ranges: vec![(0, 50), (50, 100)],
+                slot: 0,
+            },
+            WorkMsg::Shutdown,
+        ];
+        for m in msgs {
+            let buf = m.encode();
+            assert_eq!(WorkMsg::decode(&buf).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(WorkMsg::decode(&[250]).is_err());
+        assert!(FabricFrame::decode(&[]).is_err());
+        assert!(FabricFrame::decode(&[9]).is_err());
+        // trailing bytes after a Close
+        assert!(FabricFrame::decode(&[4, 0]).is_err());
+        // truncated Poison
+        let buf = FabricFrame::Poison { epoch: 1, cause: PoisonCause::RankFailed(0) }
+            .encode();
+        assert!(FabricFrame::decode(&buf[..buf.len() - 1]).is_err());
+    }
+}

@@ -12,10 +12,12 @@
 //! the paper's transfer path is byte-oriented row shipping anyway — a
 //! hand-rolled codec *is* the faithful reproduction).
 
+pub mod fabric;
 pub mod message;
 pub mod value;
 pub mod wire;
 
+pub use fabric::{FabricFrame, WireOutput, WorkMsg, FABRIC_DATA_HEADER_LEN};
 pub use message::{
     max_rows_per_frame_for, ControlMsg, DataMsg, DataMsgRef, DataMsgView, MatrixInfo,
     TaskProgress, TaskState, ROWS_HEADER_LEN,
@@ -45,5 +47,13 @@ pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
 /// of an `hdf5sim` file server-side; zero payload bytes on the client
 /// connection) and column-range pulls (`PullRows` gains
 /// `start_col`/`sel_cols`, elided at full width so default pulls keep
-/// the v6 wire shape). See `docs/storage.md`.
-pub const PROTOCOL_VERSION: u32 = 7;
+/// the v6 wire shape). See `docs/storage.md`. v8: the network rank
+/// fabric — worker ranks may run as separate OS processes
+/// (`alchemist worker --connect`): a coordinator⇄worker control channel
+/// ([`WorkMsg`]: attach handshake, mesh brokering, remote task dispatch
+/// and store management) and rank⇄rank mesh frames ([`FabricFrame`])
+/// carrying the collectives' point-to-point messages peer-to-peer. The
+/// client-facing control/data channels are unchanged in shape; versioned
+/// because a v8 coordinator and its worker processes must agree on the
+/// new channels. See `docs/fabric.md`.
+pub const PROTOCOL_VERSION: u32 = 8;

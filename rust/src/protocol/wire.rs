@@ -136,6 +136,12 @@ impl Writer {
         self.raw_f64s(xs);
     }
 
+    /// Raw bytes without a length prefix (caller's framing implies the
+    /// length — mirrors [`Reader::raw_bytes`]).
+    pub fn raw_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
     /// Raw f64 bytes without a length prefix (caller encodes the count).
     pub fn raw_f64s(&mut self, xs: &[f64]) {
         #[cfg(target_endian = "little")]

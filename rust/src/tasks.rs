@@ -147,9 +147,10 @@ impl TaskScope {
     /// rank bailing unilaterally would strand its peers inside the
     /// routine's next collective. All ranks must reach this call in
     /// lockstep (iterative routines are synchronized by their own
-    /// collectives, so the iteration boundary qualifies). `tag` must not
-    /// collide with any concurrently-outstanding collective of the same
-    /// routine. Free (no collective) on detached scopes.
+    /// collectives, so the iteration boundary qualifies). `tag` must be
+    /// [`crate::collectives::TAG_WINDOW`]-aligned and must not collide
+    /// with any concurrently-outstanding collective of the same routine.
+    /// Free (no collective) on detached scopes.
     ///
     /// If the group is poisoned (a peer failed, or a hard cancel pulled
     /// the plug — protocol v5), the allreduce itself errors and the
@@ -202,21 +203,23 @@ mod tests {
 
     #[test]
     fn collective_check_is_free_when_detached_and_bails_when_attached() {
-        use crate::collectives::LocalComm;
+        use crate::collectives::{LocalComm, TAG_WINDOW};
         let comm = LocalComm::group(1, None).pop().unwrap();
 
         // detached: no collective issued, never bails — even with the
         // token set (direct callers pay nothing for cancellability)
         let detached = TaskScope::detached();
         detached.token().cancel();
-        assert!(detached.collective_check_cancelled(&comm, 1).is_ok());
+        assert!(detached.collective_check_cancelled(&comm, 0).is_ok());
 
         // attached: passes while the token is clear, bails once set
         let scope =
             TaskScope::new(Arc::new(CancelToken::new()), Arc::new(RankProgress::new()));
-        assert!(scope.collective_check_cancelled(&comm, 2).is_ok());
+        assert!(scope.collective_check_cancelled(&comm, TAG_WINDOW).is_ok());
         scope.token().cancel();
-        let err = scope.collective_check_cancelled(&comm, 3).unwrap_err();
+        let err = scope
+            .collective_check_cancelled(&comm, 2 * TAG_WINDOW)
+            .unwrap_err();
         assert!(err.to_string().contains(CANCELLED_MSG));
     }
 

@@ -3,7 +3,7 @@
 
 use alchemist::collectives::{
     allgather, allreduce_sum, broadcast, gather, reduce_sum, scatter, Communicator,
-    LocalComm,
+    LocalComm, TAG_WINDOW,
 };
 use alchemist::testkit::props;
 
@@ -37,7 +37,7 @@ fn allreduce_equals_serial_sum() {
         let inputs2 = inputs.clone();
         let results = run_group(p, move |c| {
             let mut buf = inputs2[c.rank()].clone();
-            allreduce_sum(c, 7, &mut buf).unwrap();
+            allreduce_sum(c, 7 * TAG_WINDOW, &mut buf).unwrap();
             buf
         });
         for got in results {
@@ -58,7 +58,7 @@ fn broadcast_from_random_root() {
         let payload2 = payload.clone();
         let results = run_group(p, move |c| {
             let mut buf = if c.rank() == root { payload2.clone() } else { vec![] };
-            broadcast(c, 9, root, &mut buf).unwrap();
+            broadcast(c, 9 * TAG_WINDOW, root, &mut buf).unwrap();
             buf
         });
         for got in results {
@@ -80,16 +80,16 @@ fn reduce_then_scatter_then_allgather_chain() {
         let results = run_group(p, move |c| {
             // reduce to root 0
             let mut buf = inputs2[c.rank()].clone();
-            reduce_sum(c, 11, 0, &mut buf).unwrap();
+            reduce_sum(c, 11 * TAG_WINDOW, 0, &mut buf).unwrap();
             // root scatters equal shares back (pad to p*n for evenness)
             let parts = if c.rank() == 0 {
                 Some(vec![buf.clone(); c.size()])
             } else {
                 None
             };
-            let share = scatter(c, 12, 0, parts).unwrap();
+            let share = scatter(c, 12 * TAG_WINDOW, 0, parts).unwrap();
             // everyone allgathers their share
-            let all = allgather(c, 13, share).unwrap();
+            let all = allgather(c, 13 * TAG_WINDOW, share).unwrap();
             (c.rank(), all)
         });
         for (_, all) in results {
@@ -111,7 +111,7 @@ fn gather_preserves_rank_payloads() {
         let sizes2 = sizes.clone();
         let results = run_group(p, move |c| {
             let mine = vec![c.rank() as f64; sizes2[c.rank()]];
-            gather(c, 15, 0, mine).unwrap()
+            gather(c, 15 * TAG_WINDOW, 0, mine).unwrap()
         });
         let root_view = results[0].as_ref().expect("root gathers");
         for (r, part) in root_view.iter().enumerate() {
@@ -130,8 +130,8 @@ fn concurrent_collectives_with_distinct_tags() {
         let mut a = vec![c.rank() as f64; 16];
         let mut b = vec![(c.rank() * 10) as f64; 16];
         // interleave manually: start both, alternating chunks
-        allreduce_sum(c, 0x1000, &mut a).unwrap();
-        allreduce_sum(c, 0x2000, &mut b).unwrap();
+        allreduce_sum(c, TAG_WINDOW, &mut a).unwrap();
+        allreduce_sum(c, 2 * TAG_WINDOW, &mut b).unwrap();
         (a[0], b[0])
     });
     for (a, b) in results {
@@ -218,7 +218,7 @@ fn rank_death_releases_peers_from_broadcast() {
         // root 1 is the dead rank: both survivors block in recv
         one_rank_dies(1, die_first, |c| {
             let mut buf = Vec::new();
-            broadcast(c, 300, 1, &mut buf)
+            broadcast(c, 300 * TAG_WINDOW, 1, &mut buf)
         });
     }
 }
@@ -228,7 +228,7 @@ fn rank_death_releases_peers_from_allreduce() {
     for die_first in [true, false] {
         one_rank_dies(2, die_first, |c| {
             let mut buf = vec![c.rank() as f64; 64];
-            allreduce_sum(c, 400, &mut buf)
+            allreduce_sum(c, 400 * TAG_WINDOW, &mut buf)
         });
     }
 }
@@ -249,7 +249,7 @@ fn rank_death_in_subgroup_leaves_disjoint_group_unaffected() {
                 return true;
             }
             let mut buf = vec![1.0; 32];
-            allreduce_sum(&c, 500, &mut buf).unwrap_err()
+            allreduce_sum(&c, 500 * TAG_WINDOW, &mut buf).unwrap_err()
                 == CommError::PeerFailed { rank: 1 }
         }));
     }
@@ -260,7 +260,7 @@ fn rank_death_in_subgroup_leaves_disjoint_group_unaffected() {
             // succeed with the right sum
             for round in 0..200u64 {
                 let mut buf = vec![c.rank() as f64 + 1.0; 8];
-                allreduce_sum(&c, 600 + round * 8, &mut buf).unwrap();
+                allreduce_sum(&c, (600 + round) * TAG_WINDOW, &mut buf).unwrap();
                 assert_eq!(buf, vec![3.0; 8]);
                 c.barrier().unwrap();
             }
@@ -279,15 +279,15 @@ fn poisoned_fabric_recovers_after_reset() {
     // the coordinator reuses one fabric across tasks: after a failure +
     // reset, collectives must work again and stale traffic must be gone
     let comms = LocalComm::group(2, None);
-    comms[0].send(1, 7, vec![99.0]); // undelivered by the "failed task"
+    comms[0].send(1, 7 * TAG_WINDOW, vec![99.0]); // undelivered by the "failed task"
     comms[1].poison(PoisonCause::RankFailed(1));
-    assert!(comms[0].recv(1, 7).is_err());
+    assert!(comms[0].recv(1, 7 * TAG_WINDOW).is_err());
     comms[0].reset();
     let mut handles = Vec::new();
     for c in comms {
         handles.push(std::thread::spawn(move || {
             let mut buf = vec![c.rank() as f64; 4];
-            allreduce_sum(&c, 7, &mut buf).unwrap();
+            allreduce_sum(&c, 7 * TAG_WINDOW, &mut buf).unwrap();
             buf
         }));
     }

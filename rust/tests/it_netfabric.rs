@@ -1,0 +1,295 @@
+//! Integration: the protocol-v8 network rank fabric (`docs/fabric.md`).
+//!
+//! Three layers, from transport up:
+//!
+//! * loopback [`TcpComm`] groups produce **bit-identical** results to
+//!   [`LocalComm`] for every collective algorithm, on both sides of the
+//!   recursive-doubling/ring switch and on both the eager and the
+//!   gathered-`writev` rendezvous wire paths;
+//! * a 4-process `fabric.mode = tcp` server (each rank its own spawned
+//!   `alchemist worker` OS process) runs CG and truncated SVD end to end
+//!   and matches the thread-pool local mode bit for bit;
+//! * killing one worker process mid-solve fails the task promptly with
+//!   the dead rank as the root cause — no hang, peers unwind as
+//!   collateral through the mesh poison.
+
+use std::time::{Duration, Instant};
+
+use alchemist::client::AlchemistContext;
+use alchemist::collectives::algorithms::{self, ALLREDUCE_DOUBLING_MAX_ELEMS};
+use alchemist::collectives::{
+    loopback_group, Communicator, FabricOptions, LocalComm, TAG_WINDOW,
+};
+use alchemist::config::{Config, EngineKind, FabricMode};
+use alchemist::coordinator::AlchemistServer;
+use alchemist::distmat::LocalMatrix;
+use alchemist::protocol::{Params, TaskState, Value};
+use alchemist::sparklite::IndexedRowMatrix;
+use alchemist::util::prng::Rng;
+
+fn native_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+/// Local mode config, switched onto the process fabric. The worker
+/// executable must be named explicitly: inside an integration test
+/// `current_exe()` is the test runner, not `alchemist`.
+fn tcp_cfg() -> Config {
+    let mut cfg = native_cfg();
+    cfg.fabric.mode = FabricMode::Tcp;
+    cfg.fabric.worker_exe = env!("CARGO_BIN_EXE_alchemist").into();
+    cfg
+}
+
+fn random_matrix(seed: u64, rows: usize, cols: usize) -> LocalMatrix {
+    let mut rng = Rng::new(seed);
+    LocalMatrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+/// Run `f` on every rank of `comms` (one thread per rank) and return the
+/// per-rank results.
+fn run_ranks<C, T, F>(comms: Vec<C>, f: F) -> Vec<T>
+where
+    C: Communicator + 'static,
+    T: Send + 'static,
+    F: Fn(&dyn Communicator) -> T + Send + Sync + Clone + 'static,
+{
+    let mut handles = Vec::new();
+    for c in comms {
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || f(&c)));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Deterministic per-rank input, a pure function of (rank, index) so the
+/// local and tcp runs feed every algorithm the exact same bits.
+fn rank_input(rank: usize, n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i * 31 + rank * 977) % 1009) as f64 * 0.5 - 99.0).collect()
+}
+
+/// The full collective suite, once per vector size, each invocation in
+/// its own TAG_WINDOW. Returns every rank-visible result in order.
+fn collective_suite(c: &dyn Communicator, sizes: &[usize]) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    let mut win = 0u64;
+    for &n in sizes {
+        let mine = rank_input(c.rank(), n);
+
+        win += 1;
+        let mut buf = mine.clone();
+        algorithms::allreduce_sum(c, win * TAG_WINDOW, &mut buf).unwrap();
+        out.push(buf);
+
+        win += 1;
+        let mut b = if c.rank() == 0 { mine.clone() } else { Vec::new() };
+        algorithms::broadcast(c, win * TAG_WINDOW, 0, &mut b).unwrap();
+        out.push(b);
+
+        // reduce_sum consumes non-root buffers (contents unspecified
+        // after the call), so only root's result is comparable
+        win += 1;
+        let mut r = mine.clone();
+        algorithms::reduce_sum(c, win * TAG_WINDOW, 0, &mut r).unwrap();
+        out.push(if c.rank() == 0 { r } else { Vec::new() });
+
+        win += 1;
+        let g = algorithms::gather(c, win * TAG_WINDOW, 0, mine.clone()).unwrap();
+        out.push(g.map(|parts| parts.concat()).unwrap_or_default());
+
+        win += 1;
+        let parts = (c.rank() == 0)
+            .then(|| (0..c.size()).map(|r| rank_input(r, n)).collect());
+        out.push(algorithms::scatter(c, win * TAG_WINDOW, 0, parts).unwrap());
+
+        win += 1;
+        let ag = algorithms::allgather(c, win * TAG_WINDOW, mine).unwrap();
+        out.push(ag.concat());
+
+        c.barrier().unwrap();
+    }
+    out
+}
+
+/// Collectives over a loopback TCP mesh must be *bit-identical* to the
+/// in-process mailboxes: the wire moves raw f64 little-endian bytes and
+/// the algorithms (and so the reduction order) are shared.
+fn assert_loopback_matches_local(opts: FabricOptions, sizes: &'static [usize]) {
+    for p in [1usize, 2, 3, 4] {
+        let local = run_ranks(LocalComm::group(p, None), move |c| {
+            collective_suite(c, sizes)
+        });
+        let tcp = run_ranks(loopback_group(p, &opts).unwrap(), move |c| {
+            collective_suite(c, sizes)
+        });
+        for (rank, (l, t)) in local.iter().zip(&tcp).enumerate() {
+            assert_eq!(l, t, "p={p} rank={rank}");
+        }
+    }
+}
+
+#[test]
+fn loopback_eager_path_bit_identical_to_local() {
+    // default threshold (4 KiB): every size below stays on the eager
+    // (buffered) wire path
+    assert_loopback_matches_local(FabricOptions::default(), &[1, 3, 7, 65]);
+}
+
+#[test]
+fn loopback_rendezvous_path_bit_identical_to_local() {
+    // 64-byte eager cutoff: everything from 8 elements up takes the
+    // gathered-writev rendezvous leg, including both sides of the
+    // allreduce doubling/ring switch
+    let opts = FabricOptions { eager_bytes: 64, ..FabricOptions::default() };
+    assert_loopback_matches_local(
+        opts,
+        &[1, 8, 129, ALLREDUCE_DOUBLING_MAX_ELEMS, ALLREDUCE_DOUBLING_MAX_ELEMS + 1],
+    );
+}
+
+/// The paper's Figure 2 loop on a 4-process fabric, checked bit-for-bit
+/// against the same session in thread-pool local mode: CG solve and
+/// truncated SVD produce the same group shape, the same reduction order,
+/// and therefore the exact same doubles either way.
+#[test]
+fn four_process_cg_and_svd_match_local_mode_bit_for_bit() {
+    let x = random_matrix(11, 120, 24);
+    let y = random_matrix(12, 120, 3);
+    let a = random_matrix(13, 96, 10);
+
+    // (W, iters, sigma, U) for one server mode
+    let run = |cfg: Config| -> (LocalMatrix, i64, Vec<f64>, LocalMatrix) {
+        let server = AlchemistServer::start(cfg.clone(), 4).unwrap();
+        let mut ac =
+            AlchemistContext::connect(&server.control_addr, &cfg, 4).unwrap();
+        assert_eq!(ac.num_workers(), 4);
+        ac.register_library("skylark", "builtin:skylark").unwrap();
+        ac.register_library("elemental", "builtin:elemental").unwrap();
+
+        let (al_x, _) =
+            ac.send_matrix("X", &IndexedRowMatrix::from_local(&x, 7)).unwrap();
+        let (al_y, _) =
+            ac.send_matrix("Y", &IndexedRowMatrix::from_local(&y, 7)).unwrap();
+        let res = ac
+            .run_task(
+                "skylark",
+                "cg_solve",
+                Params::new()
+                    .with_matrix("X", al_x.id)
+                    .with_matrix("Y", al_y.id)
+                    .with_f64("lambda", 1e-3)
+                    .with_f64("tol", 1e-10)
+                    .with_i64("max_iters", 200),
+            )
+            .unwrap();
+        let iters = res.scalars.i64("iters").unwrap();
+        let (w, _) =
+            ac.to_indexed_row_matrix(res.output("W").unwrap(), 5).unwrap();
+
+        let (al_a, _) =
+            ac.send_matrix("A", &IndexedRowMatrix::from_local(&a, 9)).unwrap();
+        let svd = ac
+            .run_task(
+                "elemental",
+                "truncated_svd",
+                Params::new()
+                    .with_matrix("A", al_a.id)
+                    .with_i64("rank", 4)
+                    .with_i64("seed", 7),
+            )
+            .unwrap();
+        let sigma = match svd.scalars.get("sigma") {
+            Some(Value::F64s(v)) => v.clone(),
+            other => panic!("sigma missing: {other:?}"),
+        };
+        let (u, _) =
+            ac.to_indexed_row_matrix(svd.output("U").unwrap(), 11).unwrap();
+
+        ac.stop();
+        server.shutdown();
+        (w.to_local().unwrap(), iters, sigma, u.to_local().unwrap())
+    };
+
+    let (w_l, iters_l, sigma_l, u_l) = run(native_cfg());
+    let (w_t, iters_t, sigma_t, u_t) = run(tcp_cfg());
+
+    assert_eq!(iters_l, iters_t);
+    assert!(iters_l > 1, "CG should iterate, took {iters_l}");
+    assert_eq!(w_l.max_abs_diff(&w_t), 0.0, "CG W differs across fabrics");
+    assert_eq!(sigma_l, sigma_t, "SVD spectrum differs across fabrics");
+    assert_eq!(u_l.max_abs_diff(&u_t), 0.0, "SVD U differs across fabrics");
+    // and the numbers are not degenerate
+    assert!(sigma_l.iter().all(|s| *s > 0.0));
+}
+
+/// Kill one worker *process* mid-solve: its work socket drops (the
+/// coordinator fails the rank's pending request) and its mesh links drop
+/// (peers poison the group with `RankFailed`), so the task fails within
+/// the deadline, naming the dead rank as the root cause — the peers'
+/// PeerFailed unwinding is collateral, never the headline.
+#[test]
+fn killed_worker_process_fails_task_root_cause_first() {
+    let cfg = tcp_cfg();
+    let server = AlchemistServer::start(cfg.clone(), 4).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 4).unwrap();
+    ac.register_library("skylark", "builtin:skylark").unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // server-side problem, unconvergeable (tol 0) and capped far beyond
+    // test time: one allreduce per CG iteration until we pull the plug
+    let x = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 512).with_i64("cols", 128).with_i64("seed", 1),
+        )
+        .unwrap();
+    let y = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 512).with_i64("cols", 4).with_i64("seed", 2),
+        )
+        .unwrap();
+    let task_id = ac
+        .submit(
+            "skylark",
+            "cg_solve",
+            Params::new()
+                .with_matrix("X", x.outputs[0].id)
+                .with_matrix("Y", y.outputs[0].id)
+                .with_f64("tol", 0.0)
+                .with_i64("max_iters", 500_000_000),
+        )
+        .unwrap()
+        .task_id;
+
+    let t0 = Instant::now();
+    loop {
+        assert!(t0.elapsed() < Duration::from_secs(30), "task never started");
+        if matches!(ac.task(task_id).status().unwrap(), TaskState::Running { .. }) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // let the solve get into its iteration loop before pulling the plug
+    std::thread::sleep(Duration::from_millis(300));
+
+    let t_kill = Instant::now();
+    assert!(server.kill_worker(2), "worker 2 should be live to kill");
+    let err = ac.task(task_id).wait().unwrap_err();
+    assert!(
+        t_kill.elapsed() < Duration::from_secs(20),
+        "failure took {:?} — peers hung instead of unwinding",
+        t_kill.elapsed()
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 2"), "dead rank not the root cause: {msg}");
+    assert!(msg.contains("connection lost"), "cause not named: {msg}");
+
+    // teardown with a dead pool member must not hang either
+    ac.stop();
+    server.shutdown();
+}

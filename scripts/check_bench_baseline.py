@@ -22,6 +22,15 @@ artifacts the repo pins:
   RPC + a server-side mmap; the push leg moves every payload byte over
   TCP — if the ratio collapses, direct ingest has started copying).
 
+The transfer artifact additionally carries "fabric_cells" (protocol
+v8): the same collective over in-process mailboxes vs a tcp-loopback
+mesh. Expectation: the tcp ring allreduce at the rendezvous (largest)
+vector size must hold >= 0.5x the local-mailbox throughput — the
+zero-copy writev path should keep loopback TCP within striking
+distance of memcpy-speed mailboxes; a collapse means the rendezvous
+leg started copying or serializing. Warns until a baseline with
+fabric cells is pinned, fails after.
+
 CI's bench jobs run the smoke-size benches and call this script with the
 fresh artifact and the repo's committed baseline. Outcomes:
 
@@ -126,6 +135,8 @@ def describe_cell(cell: dict) -> str:
                 f"{cell.get('k')} t{cell.get('threads')}")
     if "case" in cell:
         return str(cell.get("case"))
+    if "fabric" in cell:
+        return f"{cell.get('fabric')} {cell.get('op')} n={cell.get('elems')}"
     return f"e{cell.get('executors')}xw{cell.get('workers')}"
 
 
@@ -147,6 +158,45 @@ def check_storage_expectations(fresh: dict, pinned: bool) -> int:
     tag = (f"storage expectation 'direct_vs_push': {direct:.2f} vs {push:.2f} "
            f"GB/s ({ratio:.2f}x, want >= 2.0x)")
     if ratio >= 2.0:
+        print(tag + " OK")
+        return 0
+    if pinned:
+        fail(tag + " UNMET")
+        return 1
+    warn(tag + " UNMET")
+    return 0
+
+
+def check_fabric_expectations(fresh: dict, pinned: bool) -> int:
+    """The v8 rank-fabric floor, evaluated on FRESH alone.
+
+    At the largest benched vector size the allreduce takes the
+    bandwidth-optimal ring over the gathered-writev rendezvous path;
+    tcp-loopback must hold >= 0.5x the local-mailbox throughput. The
+    `pinned` flag here is whether the committed baseline carries
+    fabric cells at all, so pre-v8 pins keep warning instead of
+    failing."""
+    cells = [c for c in fresh.get("fabric_cells", [])
+             if c.get("op") == "allreduce"
+             and isinstance(c.get("elems"), int)
+             and isinstance(c.get("gbps"), (int, float))]
+    if not cells:
+        warn("fabric expectation 'tcp_vs_local' not evaluable "
+             "(no allreduce fabric_cells) — skipping")
+        return 0
+    elems = max(c["elems"] for c in cells)
+    by_fabric = {c.get("fabric"): c["gbps"] for c in cells
+                 if c["elems"] == elems}
+    tcp, local = by_fabric.get("tcp"), by_fabric.get("local")
+    if not isinstance(tcp, (int, float)) or not isinstance(local, (int, float)) \
+            or local <= 0:
+        warn("fabric expectation 'tcp_vs_local' not evaluable "
+             "(missing tcp/local allreduce cells) — skipping")
+        return 0
+    ratio = tcp / local
+    tag = (f"fabric expectation 'tcp_vs_local' (allreduce, {elems} elems): "
+           f"{tcp:.2f} vs {local:.2f} GB/s ({ratio:.2f}x, want >= 0.5x)")
+    if ratio >= 0.5:
         print(tag + " OK")
         return 0
     if pinned:
@@ -251,6 +301,8 @@ def main() -> int:
         rc |= check_compute_expectations(fresh, pinned)
     elif kind == "storage":
         rc |= check_storage_expectations(fresh, pinned)
+    elif kind == "transfer":
+        rc |= check_fabric_expectations(fresh, bool(base.get("fabric_cells")))
 
     if not pinned:
         warn(
@@ -295,6 +347,13 @@ def main() -> int:
         return 1
 
     failures = diff_cells(fresh, base, cell_key, metrics, args.tolerance)
+    if kind == "transfer" and base.get("fabric_cells"):
+        fabric_key = lambda c: (c.get("fabric"), c.get("op"),  # noqa: E731
+                                c.get("elems"))
+        failures += diff_cells(
+            {"cells": fresh.get("fabric_cells", [])},
+            {"cells": base["fabric_cells"]},
+            fabric_key, ("gbps",), args.tolerance)
     if failures:
         for f_ in failures:
             fail(f"{kind} throughput regression: {f_}")
