@@ -11,7 +11,10 @@
 //! (v3 streaming protocol) and can emit a machine-readable baseline with
 //! `--json PATH` — `BENCH_transfer.json` in the repo root is the
 //! committed reference every data-plane PR is compared against (CI runs
-//! the `--quick` size and uploads the artifact).
+//! the `--quick` size and uploads the artifact). The artifact also
+//! carries `fabric_cells` (protocol v8: local-mailbox vs tcp-loopback
+//! collectives) and `sched_cells` (protocol v9: no-op task round-trip
+//! latency serially vs concurrent tag lanes vs concurrent tenants).
 
 mod bench_common;
 
@@ -23,6 +26,7 @@ use alchemist::collectives::{
 };
 use alchemist::coordinator::AlchemistServer;
 use alchemist::metrics::{Stats, Table};
+use alchemist::protocol::Params;
 use alchemist::sparklite::IndexedRowMatrix;
 use alchemist::util::fmt;
 use alchemist::workloads::TimitSpec;
@@ -50,6 +54,24 @@ struct FabricCell {
     /// Logical vector bytes per op / secs — a normalization shared by
     /// both fabrics, so ratios between them are meaningful.
     gbps: f64,
+}
+
+/// One measured scheduler cell (protocol v9, `docs/scheduler.md`):
+/// submit→Done round-trip cost of a no-op task, streamed serially vs
+/// under concurrent lanes / concurrent tenants.
+struct SchedCell {
+    /// `serial` (1 tenant, 1 lane), `lanes2` (1 tenant, 2 tasks in
+    /// flight on one group), `tenants2` (2 tenants on disjoint groups).
+    case: &'static str,
+    tenants: usize,
+    lanes: usize,
+    /// no-op tasks per tenant stream.
+    tasks: usize,
+    /// slowest tenant's wall-clock / its task count — per-stream latency.
+    secs_per_task: f64,
+    /// aggregate completions / slowest tenant's wall-clock — higher is
+    /// better, so the baseline checker's throughput diff applies as-is.
+    tasks_per_sec: f64,
 }
 
 /// Time `reps` back-to-back collectives on every rank; returns the
@@ -127,6 +149,84 @@ fn bench_fabric(cfg: &alchemist::config::Config, quick: bool) -> Vec<FabricCell>
     cells
 }
 
+/// Stream `tasks` no-op tasks through one session, keeping up to
+/// `lanes` in flight; returns the stream's wall-clock seconds.
+fn drive_tasks(
+    addr: &str,
+    cfg: &alchemist::config::Config,
+    want_workers: usize,
+    lanes: usize,
+    tasks: usize,
+) -> alchemist::Result<f64> {
+    let mut ac = AlchemistContext::connect_with_workers(addr, cfg, 1, want_workers)?;
+    ac.register_library("elemental", "builtin:elemental")?;
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    while done < tasks {
+        let burst = lanes.min(tasks - done);
+        let mut ids = Vec::with_capacity(burst);
+        for _ in 0..burst {
+            let params = Params::new().with_i64("millis", 0);
+            ids.push(ac.submit("elemental", "sleep", params)?.task_id);
+        }
+        for id in ids {
+            ac.task(id).wait()?;
+        }
+        done += burst;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    ac.stop();
+    Ok(secs)
+}
+
+/// The scheduler comparison (protocol v9): the same no-op task stream
+/// serially, with two tag lanes on one group, and from two tenants on
+/// disjoint groups. Measures pure scheduler round-trip cost — admission,
+/// dispatch, lane setup/retire — since the routine itself does nothing.
+fn bench_sched(
+    cfg: &alchemist::config::Config,
+    quick: bool,
+) -> alchemist::Result<Vec<SchedCell>> {
+    let workers = 2;
+    let tasks = if quick { 16 } else { 64 };
+    let mut cells = Vec::new();
+    let cases: &[(&'static str, usize, usize)] =
+        &[("serial", 1, 1), ("lanes2", 1, 2), ("tenants2", 2, 1)];
+    for &(case, tenants, lanes) in cases {
+        let mut c = cfg.clone();
+        c.apply("scheduler.tasks_per_group", &lanes.to_string())?;
+        let server = AlchemistServer::start(c.clone(), workers)?;
+        let secs = if tenants == 1 {
+            drive_tasks(&server.control_addr, &c, workers, lanes, tasks)?
+        } else {
+            // one worker per tenant so both sessions admit concurrently;
+            // the slowest stream is the honest aggregate clock
+            let handles: Vec<_> = (0..tenants)
+                .map(|_| {
+                    let addr = server.control_addr.clone();
+                    let c = c.clone();
+                    std::thread::spawn(move || drive_tasks(&addr, &c, 1, lanes, tasks))
+                })
+                .collect();
+            let mut worst = 0.0f64;
+            for h in handles {
+                worst = worst.max(h.join().expect("sched bench tenant panicked")?);
+            }
+            worst
+        };
+        server.shutdown();
+        cells.push(SchedCell {
+            case,
+            tenants,
+            lanes,
+            tasks,
+            secs_per_task: secs / tasks as f64,
+            tasks_per_sec: (tasks * tenants) as f64 / secs,
+        });
+    }
+    Ok(cells)
+}
+
 fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v:.6}")
@@ -135,6 +235,7 @@ fn json_num(v: f64) -> String {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     path: &str,
     rows: usize,
@@ -144,6 +245,7 @@ fn write_json(
     cfg: &alchemist::config::Config,
     cells: &[Cell],
     fabric_cells: &[FabricCell],
+    sched_cells: &[SchedCell],
 ) -> alchemist::Result<()> {
     let mut body = String::new();
     body.push_str("{\n");
@@ -189,6 +291,21 @@ fn write_json(
             json_num(c.secs_per_op),
             json_num(c.gbps),
             if i + 1 == fabric_cells.len() { "" } else { "," },
+        ));
+    }
+    body.push_str("  ],\n");
+    body.push_str("  \"sched_cells\": [\n");
+    for (i, c) in sched_cells.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"case\": \"{}\", \"tenants\": {}, \"lanes\": {}, \
+             \"tasks\": {}, \"secs_per_task\": {}, \"tasks_per_sec\": {}}}{}\n",
+            c.case,
+            c.tenants,
+            c.lanes,
+            c.tasks,
+            json_num(c.secs_per_task),
+            json_num(c.tasks_per_sec),
+            if i + 1 == sched_cells.len() { "" } else { "," },
         ));
     }
     body.push_str("  ]\n}\n");
@@ -312,8 +429,26 @@ fn main() -> alchemist::Result<()> {
     }
     ftable.print();
 
+    // scheduler round-trip cost (protocol v9): no-op tasks serially vs
+    // two tag lanes vs two tenants
+    let sched_cells = bench_sched(&cfg, quick)?;
+    let mut stable = Table::new(
+        "Scheduler: no-op task round-trip (serial vs lanes vs tenants)",
+        &["case", "tenants", "lanes", "per task", "tasks/s"],
+    );
+    for c in &sched_cells {
+        stable.row(&[
+            c.case.to_string(),
+            format!("{}", c.tenants),
+            format!("{}", c.lanes),
+            format!("{:.2} ms", c.secs_per_task * 1e3),
+            format!("{:.0}", c.tasks_per_sec),
+        ]);
+    }
+    stable.print();
+
     if let Some(path) = args.get("json") {
-        write_json(path, rows, cols, runs, quick, &cfg, &cells, &fabric_cells)?;
+        write_json(path, rows, cols, runs, quick, &cfg, &cells, &fabric_cells, &sched_cells)?;
     }
     Ok(())
 }

@@ -7,7 +7,7 @@
 
 use crate::config::Config;
 use crate::net::Framed;
-use crate::protocol::{ControlMsg, Params, TaskState, PROTOCOL_VERSION};
+use crate::protocol::{ControlMsg, Params, TaskState, DEFAULT_PRIORITY, PROTOCOL_VERSION};
 use crate::sparklite::{IndexedRowMatrix, Rdd};
 
 use super::almatrix::AlMatrix;
@@ -77,6 +77,45 @@ impl AlchemistContext {
         executors: usize,
         request_workers: usize,
     ) -> crate::Result<Self> {
+        Self::connect_with_priority(addr, cfg, executors, request_workers, DEFAULT_PRIORITY)
+    }
+
+    /// [`connect_with_workers`](Self::connect_with_workers) at an explicit
+    /// admission priority class (protocol v9): 0 = batch, 1 = normal,
+    /// 2 = interactive, 3 = urgent. The server clamps the request to its
+    /// `scheduler.max_priority` policy; higher classes are granted workers
+    /// first, and long-waiting lower classes age upward so nothing
+    /// starves (see `docs/scheduler.md`).
+    pub fn connect_with_priority(
+        addr: &str,
+        cfg: &Config,
+        executors: usize,
+        request_workers: usize,
+        priority: u32,
+    ) -> crate::Result<Self> {
+        Self::connect_named(
+            addr,
+            cfg,
+            executors,
+            request_workers,
+            priority,
+            "alchemist-client",
+        )
+    }
+
+    /// The full-options constructor (protocol v9): an explicit priority
+    /// class plus the client name the session handshakes with. The name
+    /// is the scheduler's fair-share *tenant key* — sessions sharing a
+    /// name share one `scheduler.weights` bucket, so an application that
+    /// opens many sessions should pick one stable name per tenant.
+    pub fn connect_named(
+        addr: &str,
+        cfg: &Config,
+        executors: usize,
+        request_workers: usize,
+        priority: u32,
+        client_name: &str,
+    ) -> crate::Result<Self> {
         let mut control = Framed::connect(addr, cfg.transfer.buf_bytes)?;
         // request only the transfer knobs that differ from the compiled
         // defaults (0 = "server decides"); the server clamps explicit
@@ -97,15 +136,18 @@ impl AlchemistContext {
             cfg.transfer.buf_bytes as u64
         };
         let reply = match control.call(&ControlMsg::Handshake {
-            client_name: "alchemist-client".into(),
+            client_name: client_name.into(),
             version: PROTOCOL_VERSION,
             request_workers: request_workers as u32,
             rows_per_frame: req_rows_per_frame,
             buf_bytes: req_buf_bytes,
+            priority,
         }) {
             Ok(reply) => reply,
             Err(err)
-                if (req_rows_per_frame != 0 || req_buf_bytes != 0)
+                if (req_rows_per_frame != 0
+                    || req_buf_bytes != 0
+                    || priority != DEFAULT_PRIORITY)
                     && err.downcast_ref::<std::io::Error>().is_some() =>
             {
                 // explicit transfer requests emit the long handshake
@@ -452,6 +494,63 @@ impl AlchemistContext {
             other => anyhow::bail!("bad reply: {other:?}"),
         }
     }
+
+    /// Open a push-based scheduler metrics stream (protocol v9). This is
+    /// a dedicated connection — `SubscribeMetrics` must be the first
+    /// message on it and it never becomes a session, so the stream is an
+    /// associated function rather than a session method; it neither holds
+    /// workers nor counts against `scheduler.max_sessions`.
+    /// `interval_ms = 0` accepts the server's configured cadence
+    /// (`scheduler.metrics_interval_ms`). Iterate the returned stream for
+    /// one [`MetricsUpdate`] per interval; drop it to unsubscribe.
+    pub fn subscribe_metrics(
+        addr: &str,
+        cfg: &Config,
+        interval_ms: u64,
+    ) -> crate::Result<MetricsStream> {
+        let mut control = Framed::connect(addr, cfg.transfer.buf_bytes)?;
+        control.send_ctrl(&ControlMsg::SubscribeMetrics { interval_ms })?;
+        Ok(MetricsStream { control })
+    }
+}
+
+/// One pushed scheduler snapshot: a monotonic sequence number plus the
+/// snapshot as a single JSON line (the wire format of `SchedSnapshot`,
+/// see `docs/scheduler.md` for the schema). Kept as a string so the
+/// client needs no JSON dependency — append it to a `.jsonl` log or hand
+/// it to any external parser.
+#[derive(Debug, Clone)]
+pub struct MetricsUpdate {
+    pub seq: u64,
+    pub json: String,
+}
+
+/// An open metrics subscription (see
+/// [`AlchemistContext::subscribe_metrics`]). Iterating blocks until the
+/// next push lands; the iterator ends (`None`) when the server shuts
+/// down. Dropping the stream closes the connection, which unsubscribes.
+pub struct MetricsStream {
+    control: Framed<std::net::TcpStream, std::net::TcpStream>,
+}
+
+impl Iterator for MetricsStream {
+    type Item = crate::Result<MetricsUpdate>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.control.recv_ctrl() {
+            Ok(ControlMsg::MetricsSnapshot { seq, json }) => {
+                Some(Ok(MetricsUpdate { seq, json }))
+            }
+            Ok(ControlMsg::Error { message }) => {
+                Some(Err(anyhow::anyhow!("metrics stream error: {message}")))
+            }
+            Ok(other) => Some(Err(anyhow::anyhow!(
+                "bad metrics stream frame: {other:?}"
+            ))),
+            // EOF/reset = server went away: end of stream, not an error
+            Err(_) => None,
+        }
+    }
 }
 
 /// Turn an opaque long-form handshake failure into the server's version
@@ -474,6 +573,7 @@ fn diagnose_handshake_failure(
             request_workers,
             rows_per_frame: 0,
             buf_bytes: 0,
+            priority: DEFAULT_PRIORITY,
         })?;
         control.recv_ctrl()
     })();
@@ -482,8 +582,8 @@ fn diagnose_handshake_failure(
             original.context(format!(
                 "server rejected the long handshake form carrying explicit \
                  transfer settings; it answered a short probe with: {message} \
-                 (explicit rows_per_frame/buf_bytes requests require a v3+ \
-                 server)"
+                 (explicit rows_per_frame/buf_bytes/priority requests \
+                 require a v3+ server)"
             ))
         }
         _ => original,

@@ -10,11 +10,18 @@
 //! Protocol v4 adds the asynchronous task API: `submit` returns a
 //! [`TaskHandle`] with `status()` / `wait()` / `cancel()`, and `run_task`
 //! is submit + wait (see `docs/tasks.md`).
+//!
+//! Protocol v9 adds serving-grade scheduling: `connect_with_priority`
+//! requests an admission class, and
+//! [`AlchemistContext::subscribe_metrics`] opens a push-based
+//! [`MetricsStream`] of scheduler snapshots (see `docs/scheduler.md`).
 
 pub mod almatrix;
 pub mod context;
 pub mod transfer;
 
 pub use almatrix::AlMatrix;
-pub use context::{AlchemistContext, TaskHandle, TaskResult};
+pub use context::{
+    AlchemistContext, MetricsStream, MetricsUpdate, TaskHandle, TaskResult,
+};
 pub use transfer::TransferStats;

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::SimNetConfig;
 
-use super::{CommError, Communicator, Fabric, PoisonCause};
+use super::{lane_of_tag, CommError, Communicator, Fabric, PoisonCause};
 
 type Key = (usize, u64); // (sender, tag)
 
@@ -52,6 +52,15 @@ struct Shared {
     /// critical sections. Set (Release) after the cause is recorded;
     /// cleared by `reset`.
     poison_flag: AtomicBool,
+    /// Per-lane poison (protocol v9): hard-cancelling ONE task poisons
+    /// only its tag lane, so a sibling task's traffic on this same fabric
+    /// keeps flowing. Group-wide poison (above) still overrides every
+    /// lane — a dead rank fails all tasks on the group.
+    lane_poison: Mutex<HashMap<u64, PoisonCause>>,
+    /// Mirror of `lane_poison.is_empty()` (same fast-path idiom as
+    /// `poison_flag`: the steady state must not take the map's mutex on
+    /// every receive attempt).
+    lane_poison_flag: AtomicBool,
     simnet: Option<SimNetConfig>,
 }
 
@@ -61,6 +70,18 @@ impl Shared {
             return None;
         }
         *self.poison.lock().unwrap()
+    }
+
+    /// The poison governing `lane`: group-wide first (root cause), then
+    /// the lane's own.
+    fn lane_poisoned(&self, lane: u64) -> Option<PoisonCause> {
+        if let Some(cause) = self.poisoned() {
+            return Some(cause);
+        }
+        if !self.lane_poison_flag.load(Ordering::Acquire) {
+            return None;
+        }
+        self.lane_poison.lock().unwrap().get(&lane).copied()
     }
 }
 
@@ -107,6 +128,8 @@ impl LocalComm {
             barrier_cv: Condvar::new(),
             poison: Mutex::new(None),
             poison_flag: AtomicBool::new(false),
+            lane_poison: Mutex::new(HashMap::new()),
+            lane_poison_flag: AtomicBool::new(false),
             simnet,
         });
         global_ranks
@@ -142,10 +165,31 @@ impl LocalComm {
         // cause — i.e. observes "not poisoned", never a stale cause
         *self.shared.poison.lock().unwrap() = None;
         self.shared.poison_flag.store(false, Ordering::Release);
+        self.shared.lane_poison.lock().unwrap().clear();
+        self.shared.lane_poison_flag.store(false, Ordering::Release);
         for mbox in &self.shared.boxes {
             mbox.queues.lock().unwrap().clear();
         }
         self.shared.barrier.lock().unwrap().arrived = 0;
+    }
+
+    /// Retire one task's tag lane (protocol v9): drop its queued
+    /// messages on every mailbox and clear its lane poison. Delivery is
+    /// synchronous (a send lands in the mailbox before the sender's call
+    /// returns), so once every rank of the task has replied there is
+    /// nothing in flight — draining the queues is complete.
+    pub fn retire_lane(&self, lane: u64) {
+        for mbox in &self.shared.boxes {
+            mbox.queues
+                .lock()
+                .unwrap()
+                .retain(|&(_, tag), _| lane_of_tag(tag) != lane);
+        }
+        let mut lanes = self.shared.lane_poison.lock().unwrap();
+        lanes.remove(&lane);
+        if lanes.is_empty() {
+            self.shared.lane_poison_flag.store(false, Ordering::Release);
+        }
     }
 
     fn charge(&self, bytes: usize) {
@@ -166,12 +210,14 @@ impl LocalComm {
         tag: u64,
         deadline: Option<Instant>,
     ) -> Result<Vec<f64>, CommError> {
+        let lane = lane_of_tag(tag);
         let mbox = &self.shared.boxes[self.rank];
         let mut queues = mbox.queues.lock().unwrap();
         loop {
-            // checked while holding the queue lock: `poison` notifies
-            // under this lock, so a waiter can never miss the wakeup
-            if let Some(cause) = self.shared.poisoned() {
+            // checked while holding the queue lock: `poison` (group-wide
+            // and per-lane) notifies under this lock, so a waiter can
+            // never miss the wakeup
+            if let Some(cause) = self.shared.lane_poisoned(lane) {
                 return Err(cause.to_err());
             }
             if let Some(q) = queues.get_mut(&(from, tag)) {
@@ -282,6 +328,27 @@ impl Communicator for LocalComm {
         self.shared.poisoned()
     }
 
+    fn poison_lane(&self, lane: u64, cause: PoisonCause) {
+        {
+            let mut lanes = self.shared.lane_poison.lock().unwrap();
+            lanes.entry(lane).or_insert(cause);
+            // flag set AFTER the cause, inside the critical section (the
+            // same publication order as the group-wide flag)
+            self.shared.lane_poison_flag.store(true, Ordering::Release);
+        }
+        // wake every rank blocked in a mailbox wait — receivers on other
+        // lanes re-check and go back to sleep; the poisoned lane's error
+        // out. The group barrier is untouched: lane barriers ride recv.
+        for mbox in &self.shared.boxes {
+            let _guard = mbox.queues.lock().unwrap();
+            mbox.signal.notify_all();
+        }
+    }
+
+    fn lane_poison_cause(&self, lane: u64) -> Option<PoisonCause> {
+        self.shared.lane_poisoned(lane)
+    }
+
     fn sim_comm_secs(&self) -> f64 {
         self.sim_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
@@ -290,6 +357,10 @@ impl Communicator for LocalComm {
 impl Fabric for LocalComm {
     fn reset(&self) {
         LocalComm::reset(self)
+    }
+
+    fn retire_lane(&self, lane: u64) {
+        LocalComm::retire_lane(self, lane)
     }
 
     fn as_comm(&self) -> &dyn Communicator {
@@ -478,5 +549,61 @@ mod tests {
         // and the fabric is fully usable again
         comms[0].send(1, 9, vec![2.0]);
         assert_eq!(comms[1].recv(0, 9).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn lane_poison_spares_sibling_lane() {
+        use super::super::lane_base;
+        let comms = LocalComm::group(2, None);
+        // lane 1 poisoned; lane 2's traffic keeps flowing
+        comms[0].poison_lane(1, PoisonCause::HardCancel);
+        assert_eq!(
+            comms[1].recv(0, lane_base(1) + 7).unwrap_err(),
+            CommError::Cancelled
+        );
+        comms[0].send(1, lane_base(2) + 7, vec![3.0]);
+        assert_eq!(comms[1].recv(0, lane_base(2) + 7).unwrap(), vec![3.0]);
+        assert_eq!(comms[0].poison_cause(), None, "group-wide poison untouched");
+        assert_eq!(comms[0].lane_poison_cause(2), None);
+        // retiring the lane clears its poison and drops its stragglers
+        comms[0].send(1, lane_base(1) + 8, vec![9.0]);
+        comms[1].retire_lane(1);
+        assert_eq!(comms[0].lane_poison_cause(1), None);
+        assert_eq!(
+            comms[1].recv_deadline(0, lane_base(1) + 8, Duration::from_millis(20)),
+            Err(CommError::Timeout { from: 0, tag: lane_base(1) + 8 })
+        );
+    }
+
+    #[test]
+    fn lane_poison_wakes_blocked_lane_recv() {
+        let mut comms = LocalComm::group(2, None);
+        let driver = comms.pop().unwrap();
+        let waiter = comms.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            waiter.recv(1, super::super::lane_base(3) + 1).unwrap_err()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        driver.poison_lane(3, PoisonCause::HardCancel);
+        assert_eq!(h.join().unwrap(), CommError::Cancelled);
+    }
+
+    #[test]
+    fn lane_comm_offsets_tags_and_runs_collectives() {
+        use super::super::{allreduce_sum, Fabric, LaneComm};
+        let comms = LocalComm::group(3, None);
+        let mut handles = Vec::new();
+        for c in comms {
+            handles.push(std::thread::spawn(move || {
+                let lane = LaneComm::new(Arc::new(c) as Arc<dyn Fabric>, 5);
+                let mut v = vec![(lane.rank() + 1) as f64];
+                allreduce_sum(&lane, 0x5500_0000, &mut v).unwrap();
+                lane.barrier().unwrap();
+                v[0]
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 6.0);
+        }
     }
 }

@@ -158,6 +158,20 @@ pub trait Communicator: Send {
     fn poison(&self, cause: PoisonCause);
     /// The group's current poison, if any.
     fn poison_cause(&self) -> Option<PoisonCause>;
+    /// Poison ONE tag lane (protocol v9, `docs/scheduler.md`): every rank
+    /// blocked in — or later calling — `recv`/`recv_deadline` on a tag in
+    /// `lane`'s window errors with `cause`, while traffic in other lanes
+    /// keeps flowing (concurrent tasks on one group must not share fate).
+    /// Transports without lane bookkeeping fall back to poisoning the
+    /// whole group, which is always safe, just coarser.
+    fn poison_lane(&self, _lane: u64, cause: PoisonCause) {
+        self.poison(cause);
+    }
+    /// The poison governing `lane`: the group-wide cause if any (a rank
+    /// failure fails every lane), else the lane's own.
+    fn lane_poison_cause(&self, _lane: u64) -> Option<PoisonCause> {
+        self.poison_cause()
+    }
     /// Modeled communication seconds charged to this rank so far (for
     /// simulated-cluster-time accounting); implementations without a cost
     /// model return 0.
@@ -173,6 +187,38 @@ pub trait Communicator: Send {
 /// offset must stay inside the window.
 pub const TAG_WINDOW: u64 = 1 << 16;
 
+/// Tag-lane layout (protocol v9, `docs/scheduler.md`): concurrent tasks
+/// on ONE group communicator each own the disjoint tag window
+/// `[lane << LANE_SHIFT, (lane + 1) << LANE_SHIFT)`. Every routine's
+/// absolute base tag is a 32-bit constant, so offsetting by `lane << 32`
+/// keeps bases `TAG_WINDOW`-aligned (the [`algorithms`] contract) while
+/// two tasks' traffic can never collide. Lane 0 is direct/untasked use
+/// (benches, subgroup helpers — the pre-v9 tag space, unchanged on the
+/// wire); tasks get lanes ≥ 1, assigned from a monotonic per-session
+/// counter and never reused, so a finished task's stragglers land in a
+/// window nobody will ever read again.
+pub const LANE_SHIFT: u32 = 32;
+
+/// First tag of `lane`'s window.
+pub const fn lane_base(lane: u64) -> u64 {
+    lane << LANE_SHIFT
+}
+
+/// Which lane a data tag belongs to. Tags with the transport-private
+/// barrier bit (bit 63, `netcomm`) are group-wide control traffic and
+/// map to lane 0.
+pub const fn lane_of_tag(tag: u64) -> u64 {
+    if tag & (1 << 63) != 0 {
+        0
+    } else {
+        tag >> LANE_SHIFT
+    }
+}
+
+/// Lane value meaning "the whole group, every lane" in wire messages
+/// that carry a lane field (`WorkMsg::MeshPoison`, `FabricFrame::Poison`).
+pub const LANE_ALL: u64 = u64::MAX;
+
 /// A [`Communicator`] as the server's dispatcher manages it: collectives
 /// during a task, plus a `reset` between tasks that drops stragglers and
 /// clears poison so the next task starts on a clean fabric. Both
@@ -182,8 +228,140 @@ pub trait Fabric: Communicator + Send + Sync {
     /// Clear all transient group state between tasks (queued messages,
     /// poison, barrier generations).
     fn reset(&self);
+    /// Retire ONE task's tag lane (protocol v9): drop its queued and
+    /// in-flight messages and clear its lane poison, without touching
+    /// sibling lanes — the per-task counterpart of [`Fabric::reset`],
+    /// which stays the whole-group recovery path (rank failure, session
+    /// teardown). Lanes are never reassigned, so retirement is garbage
+    /// collection, not reuse hygiene.
+    fn retire_lane(&self, _lane: u64) {}
     /// This fabric as a plain [`Communicator`] — the view handed to
     /// library routines. (Explicit because trait-object upcasting is
     /// newer than this crate's compiler floor.)
     fn as_comm(&self) -> &dyn Communicator;
+}
+
+/// One task's view of a group communicator (protocol v9): every tag is
+/// offset into the task's lane window, so concurrent tasks over the SAME
+/// `Fabric` use disjoint tag spaces and the routines — whose base tags
+/// are absolute 32-bit constants — need no changes at all. The barrier is
+/// a dissemination barrier over lane-tagged messages (the transport's
+/// group-wide barrier would rendezvous *tasks*, not ranks); poison is
+/// scoped to the lane, so hard-cancelling one task wakes only its own
+/// ranks while a sibling task's collectives keep flowing.
+pub struct LaneComm {
+    inner: std::sync::Arc<dyn Fabric>,
+    lane: u64,
+    base: u64,
+    /// Dissemination-barrier generation, local to this endpoint. Masked
+    /// to 16 bits in the tag: ranks skew by at most one generation (you
+    /// cannot finish barrier g+1 before receiving messages only sent by
+    /// peers that finished g), so wraparound can never collide.
+    barrier_gen: std::sync::atomic::AtomicU64,
+}
+
+/// Offset of barrier traffic inside a lane window: above every routine's
+/// base-tag constant (all < `0xFF00_0000`), below the window end. Layout:
+/// `0xFF00_0000 | (generation & 0xFFFF) << 8 | round`.
+const LANE_BARRIER_OFF: u64 = 0xFF00_0000;
+
+impl LaneComm {
+    /// Wrap `inner` so every tag lands in `lane`'s window. `lane` must be
+    /// ≥ 1 (lane 0 is the untasked tag space) and small enough that the
+    /// window stays clear of the transport barrier bit.
+    pub fn new(inner: std::sync::Arc<dyn Fabric>, lane: u64) -> Self {
+        debug_assert!(lane >= 1 && lane < (1 << 30), "lane {lane} out of range");
+        LaneComm {
+            inner,
+            lane,
+            base: lane_base(lane),
+            barrier_gen: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn lane(&self) -> u64 {
+        self.lane
+    }
+
+    /// The wrapped group fabric (driver-side plumbing; routines only ever
+    /// see the [`Communicator`] view).
+    pub fn fabric(&self) -> &std::sync::Arc<dyn Fabric> {
+        &self.inner
+    }
+}
+
+impl Communicator for LaneComm {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn send(&self, to: usize, tag: u64, data: Vec<f64>) {
+        debug_assert!(tag < lane_base(1), "tag {tag:#x} escapes the lane window");
+        self.inner.send(to, self.base + tag, data);
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Result<Vec<f64>, CommError> {
+        self.inner.recv(from, self.base + tag)
+    }
+
+    fn recv_deadline(
+        &self,
+        from: usize,
+        tag: u64,
+        timeout: std::time::Duration,
+    ) -> Result<Vec<f64>, CommError> {
+        self.inner.recv_deadline(from, self.base + tag, timeout)
+    }
+
+    fn barrier(&self) -> Result<(), CommError> {
+        use std::sync::atomic::Ordering;
+        if let Some(cause) = self.inner.lane_poison_cause(self.lane) {
+            return Err(cause.to_err());
+        }
+        let size = self.size();
+        if size <= 1 {
+            return Ok(());
+        }
+        let rank = self.rank();
+        let gen = self.barrier_gen.fetch_add(1, Ordering::Relaxed);
+        let tag_for = |round: u64| {
+            self.base + (LANE_BARRIER_OFF | ((gen & 0xFFFF) << 8) | round)
+        };
+        let mut distance = 1usize;
+        let mut round = 0u64;
+        while distance < size {
+            let to = (rank + distance) % size;
+            let from = (rank + size - distance) % size;
+            self.inner.send(to, tag_for(round), Vec::new());
+            self.inner.recv(from, tag_for(round))?;
+            distance *= 2;
+            round += 1;
+        }
+        Ok(())
+    }
+
+    fn poison(&self, cause: PoisonCause) {
+        self.inner.poison_lane(self.lane, cause);
+    }
+
+    fn poison_cause(&self) -> Option<PoisonCause> {
+        self.inner.lane_poison_cause(self.lane)
+    }
+
+    fn poison_lane(&self, _lane: u64, cause: PoisonCause) {
+        // lanes don't nest: a task's "whole group" IS its lane
+        self.inner.poison_lane(self.lane, cause);
+    }
+
+    fn lane_poison_cause(&self, _lane: u64) -> Option<PoisonCause> {
+        self.inner.lane_poison_cause(self.lane)
+    }
+
+    fn sim_comm_secs(&self) -> f64 {
+        self.inner.sim_comm_secs()
+    }
 }

@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
-use super::{CommError, Communicator, Fabric, PoisonCause};
+use super::{lane_of_tag, CommError, Communicator, Fabric, PoisonCause, LANE_ALL};
 use crate::net::{Framed, MAX_FRAME};
 use crate::protocol::fabric::{fabric_data_header, FabricFrame};
 use crate::protocol::le_f64s_to_vec;
@@ -90,14 +90,40 @@ struct MailState {
     /// did. Applied (or re-parked) when our reset catches up.
     parked: Vec<ParkedFrame>,
     poison: Option<PoisonCause>,
+    /// Per-lane poison (protocol v9): a hard-cancelled task's lane fails
+    /// without touching a sibling task's traffic on this same mesh.
+    /// Group-wide `poison` (above) overrides every lane.
+    lane_poison: HashMap<u64, PoisonCause>,
+    /// Lane retirement (protocol v9, monotonic lane numbering): every
+    /// lane ≤ `retired_floor` is retired, plus the out-of-order tail in
+    /// `retired`. Arriving data/poison frames for a retired lane are
+    /// dropped — unlike [`LocalComm`](super::LocalComm), a TCP send can
+    /// still be in flight when the task's last rank replies, so draining
+    /// the queues alone would leak stragglers into the mailbox forever.
+    /// Lane numbering survives `reset` (it is session-scoped, not
+    /// epoch-scoped), so these fields are never cleared.
+    retired_floor: u64,
+    retired: std::collections::BTreeSet<u64>,
     /// Barrier invocation counter (scopes barrier tags; reset with the
     /// epoch so barriers across tasks cannot collide).
     barrier_gen: u64,
 }
 
+impl MailState {
+    fn lane_retired(&self, lane: u64) -> bool {
+        lane != 0 && (lane <= self.retired_floor || self.retired.contains(&lane))
+    }
+
+    /// The poison governing a tag in `lane`: group-wide first (root
+    /// cause), then the lane's own.
+    fn lane_poisoned(&self, lane: u64) -> Option<PoisonCause> {
+        self.poison.or_else(|| self.lane_poison.get(&lane).copied())
+    }
+}
+
 enum ParkedFrame {
     Data { epoch: u64, from: usize, tag: u64, data: Vec<f64> },
-    Poison { epoch: u64, cause: PoisonCause },
+    Poison { epoch: u64, lane: u64, cause: PoisonCause },
 }
 
 struct NetShared {
@@ -125,12 +151,24 @@ impl NetShared {
             self.signal.notify_all();
         }
     }
+
+    /// Lane counterpart of [`NetShared::poison`]: first cause per lane
+    /// wins; a retired lane's poison is dropped (its task already ended).
+    fn poison_lane(&self, lane: u64, cause: PoisonCause) {
+        let mut mail = self.mail.lock().unwrap();
+        if mail.lane_retired(lane) {
+            return;
+        }
+        mail.lane_poison.entry(lane).or_insert(cause);
+        self.signal.notify_all();
+    }
 }
 
 /// One peer link's outgoing queue, drained by its sender thread.
 enum SendItem {
     Msg { epoch: u64, tag: u64, data: Vec<f64> },
-    Poison { epoch: u64, cause: PoisonCause },
+    /// `lane == LANE_ALL` poisons the peer's whole group.
+    Poison { epoch: u64, lane: u64, cause: PoisonCause },
     Shutdown,
 }
 
@@ -388,6 +426,9 @@ impl TcpComm {
                 queues: HashMap::new(),
                 parked: Vec::new(),
                 poison: None,
+                lane_poison: HashMap::new(),
+                retired_floor: 0,
+                retired: std::collections::BTreeSet::new(),
                 barrier_gen: 0,
             }),
             signal: Condvar::new(),
@@ -456,6 +497,9 @@ impl TcpComm {
         self.shared.send_epoch.store(epoch, Ordering::Release);
         mail.queues.clear();
         mail.poison = None;
+        mail.lane_poison.clear();
+        // lane retirement is NOT cleared: lane numbering is session-
+        // scoped and monotonic, independent of the epoch
         mail.barrier_gen = 0;
         self.shared.poison_flag.store(false, Ordering::Release);
         // apply (or keep parking) frames from peers that are ahead of us
@@ -463,24 +507,52 @@ impl TcpComm {
             match frame {
                 ParkedFrame::Data { epoch: e, from, tag, data } => {
                     if e == epoch {
-                        mail.queues.entry((from, tag)).or_default().push_back(data);
+                        if !mail.lane_retired(lane_of_tag(tag)) {
+                            mail.queues.entry((from, tag)).or_default().push_back(data);
+                        }
                     } else if e > epoch {
                         mail.parked.push(ParkedFrame::Data { epoch: e, from, tag, data });
                     }
                 }
-                ParkedFrame::Poison { epoch: e, cause } => {
+                ParkedFrame::Poison { epoch: e, lane, cause } => {
                     if e == epoch {
-                        if mail.poison.is_none() {
-                            mail.poison = Some(cause);
-                            self.shared.poison_flag.store(true, Ordering::Release);
+                        if lane == LANE_ALL {
+                            if mail.poison.is_none() {
+                                mail.poison = Some(cause);
+                                self.shared.poison_flag.store(true, Ordering::Release);
+                            }
+                        } else if !mail.lane_retired(lane) {
+                            mail.lane_poison.entry(lane).or_insert(cause);
                         }
                     } else if e > epoch {
-                        mail.parked.push(ParkedFrame::Poison { epoch: e, cause });
+                        mail.parked.push(ParkedFrame::Poison { epoch: e, lane, cause });
                     }
                 }
             }
         }
         self.shared.signal.notify_all();
+    }
+
+    /// Retire one task's tag lane (protocol v9): drop its queued and
+    /// parked messages, clear its lane poison, and record the lane so
+    /// frames still in flight are dropped on arrival. Monotonic lane
+    /// numbering keeps the bookkeeping O(concurrent tasks): the floor
+    /// advances over every consecutive run of retired lanes.
+    pub fn retire_lane(&self, lane: u64) {
+        if lane == 0 {
+            return; // lane 0 is the untasked tag space, never retired
+        }
+        let mut mail = self.shared.mail.lock().unwrap();
+        mail.queues.retain(|&(_, tag), _| lane_of_tag(tag) != lane);
+        mail.parked.retain(|f| match f {
+            ParkedFrame::Data { tag, .. } => lane_of_tag(*tag) != lane,
+            ParkedFrame::Poison { lane: l, .. } => *l != lane,
+        });
+        mail.lane_poison.remove(&lane);
+        mail.retired.insert(lane);
+        while mail.retired.remove(&(mail.retired_floor + 1)) {
+            mail.retired_floor += 1;
+        }
     }
 
     /// Orderly teardown: stop the sender threads (each sends a final
@@ -599,9 +671,9 @@ fn sender_loop(
                 }
                 need_flush = true;
             }
-            SendItem::Poison { epoch, cause } => {
+            SendItem::Poison { epoch, lane, cause } => {
                 // poison is urgent: peers may be blocked in a recv on us
-                let frame = FabricFrame::Poison { epoch, cause }.encode();
+                let frame = FabricFrame::Poison { epoch, lane, cause }.encode();
                 if framed.send(&frame).and_then(|()| framed.flush()).is_err() {
                     // the link is already gone; the peer learns through
                     // its own EOF instead
@@ -649,7 +721,9 @@ fn receiver_loop(stream: TcpStream, shared: Arc<NetShared>, peer: usize) {
                 // the one receive-leg copy: frame buffer -> delivered Vec
                 let data = le_f64s_to_vec(payload);
                 let mut mail = shared.mail.lock().unwrap();
-                if epoch == mail.epoch {
+                if mail.lane_retired(lane_of_tag(tag)) {
+                    // straggler for a finished task's lane — drop
+                } else if epoch == mail.epoch {
                     mail.queues.entry((peer, tag)).or_default().push_back(data);
                     shared.signal.notify_all();
                 } else if epoch > mail.epoch {
@@ -657,16 +731,21 @@ fn receiver_loop(stream: TcpStream, shared: Arc<NetShared>, peer: usize) {
                 }
                 // past epochs: straggler from a finished task — drop
             }
-            Ok(FabricFrame::Poison { epoch, cause }) => {
+            Ok(FabricFrame::Poison { epoch, lane, cause }) => {
                 let mut mail = shared.mail.lock().unwrap();
                 if epoch == mail.epoch {
-                    if mail.poison.is_none() {
-                        mail.poison = Some(cause);
-                        shared.poison_flag.store(true, Ordering::Release);
+                    if lane == LANE_ALL {
+                        if mail.poison.is_none() {
+                            mail.poison = Some(cause);
+                            shared.poison_flag.store(true, Ordering::Release);
+                            shared.signal.notify_all();
+                        }
+                    } else if !mail.lane_retired(lane) {
+                        mail.lane_poison.entry(lane).or_insert(cause);
                         shared.signal.notify_all();
                     }
                 } else if epoch > mail.epoch {
-                    mail.parked.push(ParkedFrame::Poison { epoch, cause });
+                    mail.parked.push(ParkedFrame::Poison { epoch, lane, cause });
                 }
             }
             Ok(FabricFrame::Close) => return,
@@ -716,9 +795,10 @@ impl Communicator for TcpComm {
     }
 
     fn recv(&self, from: usize, tag: u64) -> Result<Vec<f64>, CommError> {
+        let lane = lane_of_tag(tag);
         let mut mail = self.shared.mail.lock().unwrap();
         loop {
-            if let Some(cause) = mail.poison {
+            if let Some(cause) = mail.lane_poisoned(lane) {
                 return Err(cause.to_err());
             }
             if let Some(queue) = mail.queues.get_mut(&(from, tag)) {
@@ -736,10 +816,11 @@ impl Communicator for TcpComm {
         tag: u64,
         timeout: Duration,
     ) -> Result<Vec<f64>, CommError> {
+        let lane = lane_of_tag(tag);
         let deadline = Instant::now() + timeout;
         let mut mail = self.shared.mail.lock().unwrap();
         loop {
-            if let Some(cause) = mail.poison {
+            if let Some(cause) = mail.lane_poisoned(lane) {
                 return Err(cause.to_err());
             }
             if let Some(queue) = mail.queues.get_mut(&(from, tag)) {
@@ -796,7 +877,7 @@ impl Communicator for TcpComm {
         // on a rank whose link to *them* is still healthy
         let epoch = self.shared.send_epoch.load(Ordering::Acquire);
         for queue in self.queues.iter().flatten() {
-            queue.push(SendItem::Poison { epoch, cause });
+            queue.push(SendItem::Poison { epoch, lane: LANE_ALL, cause });
         }
     }
 
@@ -806,11 +887,29 @@ impl Communicator for TcpComm {
         }
         self.shared.mail.lock().unwrap().poison
     }
+
+    fn poison_lane(&self, lane: u64, cause: PoisonCause) {
+        self.shared.poison_lane(lane, cause);
+        // lane poison crosses the mesh too: the cancelled task's peer
+        // ranks may be blocked in a recv within the lane
+        let epoch = self.shared.send_epoch.load(Ordering::Acquire);
+        for queue in self.queues.iter().flatten() {
+            queue.push(SendItem::Poison { epoch, lane, cause });
+        }
+    }
+
+    fn lane_poison_cause(&self, lane: u64) -> Option<PoisonCause> {
+        self.shared.mail.lock().unwrap().lane_poisoned(lane)
+    }
 }
 
 impl Fabric for TcpComm {
     fn reset(&self) {
         TcpComm::reset(self)
+    }
+
+    fn retire_lane(&self, lane: u64) {
+        TcpComm::retire_lane(self, lane)
     }
 
     fn as_comm(&self) -> &dyn Communicator {
@@ -993,6 +1092,50 @@ mod tests {
             let err = comm.recv((comm.rank() + 1) % 3, 0).unwrap_err();
             assert_eq!(err, CommError::PeerFailed { rank: 2 });
         });
+    }
+
+    #[test]
+    fn lane_poison_crosses_mesh_and_spares_sibling() {
+        use crate::collectives::lane_base;
+        run_group(2, &FabricOptions::default(), |comm| {
+            let peer = 1 - comm.rank();
+            if comm.rank() == 0 {
+                comm.poison_lane(1, PoisonCause::HardCancel);
+            }
+            // both ranks see lane 1 cancelled (rank 1 via the mesh frame)
+            let err = comm.recv(peer, lane_base(1) + 7).unwrap_err();
+            assert_eq!(err, CommError::Cancelled);
+            // lane 2 and the group stay healthy
+            comm.send(peer, lane_base(2) + 7, vec![comm.rank() as f64]);
+            assert_eq!(comm.recv(peer, lane_base(2) + 7).unwrap(), vec![peer as f64]);
+            assert_eq!(comm.poison_cause(), None);
+        });
+    }
+
+    #[test]
+    fn retired_lane_drops_stragglers_and_clears_poison() {
+        use crate::collectives::lane_base;
+        let comms = loopback_group(2, &FabricOptions::default()).unwrap();
+        let c0 = &comms[0];
+        let c1 = &comms[1];
+        c1.send(0, lane_base(1) + 3, vec![1.0]);
+        assert_eq!(c0.recv(1, lane_base(1) + 3).unwrap(), vec![1.0]);
+        Communicator::poison_lane(c0, 1, PoisonCause::HardCancel);
+        assert!(matches!(c0.lane_poison_cause(1), Some(PoisonCause::HardCancel)));
+        c0.retire_lane(1);
+        assert_eq!(c0.lane_poison_cause(1), None);
+        // a straggler for the retired lane is dropped on arrival...
+        c1.send(0, lane_base(1) + 3, vec![2.0]);
+        let err = c0
+            .recv_deadline(1, lane_base(1) + 3, Duration::from_millis(60))
+            .unwrap_err();
+        assert_eq!(err, CommError::Timeout { from: 1, tag: lane_base(1) + 3 });
+        // ...while the next lane flows
+        c1.send(0, lane_base(2) + 3, vec![3.0]);
+        assert_eq!(c0.recv(1, lane_base(2) + 3).unwrap(), vec![3.0]);
+        for c in &comms {
+            c.close();
+        }
     }
 
     #[test]

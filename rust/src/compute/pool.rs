@@ -62,7 +62,11 @@ struct ClientQueue {
     /// queue up to `cap` concurrent jobs before it becomes steal-only.
     cap: usize,
     /// Cleared when the owning handle drops. Entries are never removed —
-    /// indices stay stable for workers still decrementing `active`.
+    /// indices stay stable for workers still decrementing `active` — but
+    /// a fully quiesced closed slot (`active == 0`, no jobs) is REUSED by
+    /// the next [`ThreadPool::client`] call, so per-task client handles
+    /// (protocol v9 runs one per dispatched task) don't grow the vec for
+    /// the life of the server.
     open: bool,
 }
 
@@ -141,13 +145,29 @@ impl ThreadPool {
     pub fn client(&self, cap: usize) -> ThreadPool {
         let queue = {
             let mut st = self.shared.state.lock().unwrap();
-            st.queues.push(ClientQueue {
+            let fresh = ClientQueue {
                 jobs: VecDeque::new(),
                 active: 0,
                 cap: cap.max(1),
                 open: true,
-            });
-            st.queues.len() - 1
+            };
+            // reuse a quiesced retired slot if one exists (safe under the
+            // state lock: a worker only holds a queue index while that
+            // queue's `active` is nonzero)
+            match st
+                .queues
+                .iter()
+                .position(|q| !q.open && q.active == 0 && q.jobs.is_empty())
+            {
+                Some(i) => {
+                    st.queues[i] = fresh;
+                    i
+                }
+                None => {
+                    st.queues.push(fresh);
+                    st.queues.len() - 1
+                }
+            }
         };
         ThreadPool { shared: self.shared.clone(), queue, workers: Vec::new(), is_client: true }
     }

@@ -173,6 +173,44 @@ pub struct SchedulerConfig {
     /// disables the escalation — teardown then waits out the routine's
     /// remaining runtime, the pre-v5 behavior.
     pub teardown_grace_ms: u64,
+    /// Highest admission priority class a handshake may claim (v9;
+    /// classes run 0 = batch ..= 3 = urgent). Requests above it are
+    /// clamped, not rejected; the clamped class is what admission and
+    /// the metrics stream report.
+    pub max_priority: u32,
+    /// Starvation-freedom aging (v9): a queued handshake's effective
+    /// class rises by one for every `age_secs` it has waited, so a
+    /// steady stream of high-priority arrivals cannot park a batch
+    /// session forever. 0 disables aging.
+    pub age_secs: f64,
+    /// Tasks one session may RUN concurrently (v9): the dispatcher gives
+    /// each admitted task its own tag lane in the group communicator, so
+    /// a pull can overlap a solve. Defaults to 1 — the pre-v9 serial
+    /// dispatch — because concurrent tasks share the group's engine
+    /// thread lease; raise it per deployment.
+    pub tasks_per_group: usize,
+    /// Default period of the push-based metrics stream in milliseconds
+    /// (v9, `SubscribeMetrics`); a subscriber's explicit interval is
+    /// clamped to no faster than 10 ms.
+    pub metrics_interval_ms: u64,
+    /// Weighted fair share across tenants (v9): within a priority class,
+    /// the admission queue favors client names holding the fewest active
+    /// sessions relative to their weight. `"name=weight"` pairs,
+    /// comma-separated (`scheduler.weights = "spark=3,notebook=1"`);
+    /// unlisted tenants weigh 1. Empty = plain FIFO within the class.
+    pub weights: Vec<(String, f64)>,
+}
+
+impl SchedulerConfig {
+    /// The fair-share weight configured for a tenant (by the client name
+    /// it handshakes with); unlisted tenants weigh 1.
+    pub fn tenant_weight(&self, client: &str) -> f64 {
+        self.weights
+            .iter()
+            .find(|(n, _)| n == client)
+            .map(|(_, w)| *w)
+            .unwrap_or(1.0)
+    }
 }
 
 /// Storage-plane budgets and spill behavior (`docs/storage.md`). The
@@ -321,6 +359,11 @@ impl Default for Config {
                 task_queue_depth: 16,
                 max_task_outputs: 64,
                 teardown_grace_ms: 2_000,
+                max_priority: 3,
+                age_secs: 10.0,
+                tasks_per_group: 1,
+                metrics_interval_ms: 250,
+                weights: Vec::new(),
             },
             storage: StorageConfig {
                 budget_bytes: 0,
@@ -438,6 +481,35 @@ impl Config {
             }
             "scheduler.teardown_grace_ms" => {
                 self.scheduler.teardown_grace_ms = int(value)? as u64
+            }
+            "scheduler.max_priority" => {
+                self.scheduler.max_priority = int(value)? as u32
+            }
+            "scheduler.age_secs" => self.scheduler.age_secs = fl(value)?,
+            "scheduler.tasks_per_group" => {
+                self.scheduler.tasks_per_group = int(value)?.max(1)
+            }
+            "scheduler.metrics_interval_ms" => {
+                self.scheduler.metrics_interval_ms = int(value)? as u64
+            }
+            "scheduler.weights" => {
+                // "name=weight,name=weight" (note: comma-separated, so
+                // this key cannot ride a worker's --set command line —
+                // it is coordinator-side policy anyway)
+                let mut weights = Vec::new();
+                for pair in value.split(',').filter(|p| !p.trim().is_empty()) {
+                    let (name, w) = pair.split_once('=').with_context(|| {
+                        format!("scheduler.weights entry {pair:?}: want name=weight")
+                    })?;
+                    let w: f64 = w.trim().parse().with_context(|| {
+                        format!("scheduler.weights entry {pair:?}: bad weight")
+                    })?;
+                    if w <= 0.0 {
+                        bail!("scheduler.weights entry {pair:?}: weight must be > 0");
+                    }
+                    weights.push((name.trim().to_string(), w));
+                }
+                self.scheduler.weights = weights;
             }
             "storage.budget_bytes" => {
                 self.storage.budget_bytes = int(value)? as u64
@@ -576,6 +648,38 @@ mod tests {
         assert_eq!(c.scheduler.queue_timeout_s, 1.25);
         assert_eq!(c.scheduler.task_queue_depth, 3);
         assert_eq!(c.scheduler.max_task_outputs, 8);
+    }
+
+    #[test]
+    fn scheduler_v9_keys_parse_and_default() {
+        let c = Config::default();
+        assert_eq!(c.scheduler.max_priority, 3);
+        assert_eq!(c.scheduler.age_secs, 10.0);
+        assert_eq!(c.scheduler.tasks_per_group, 1);
+        assert_eq!(c.scheduler.metrics_interval_ms, 250);
+        assert!(c.scheduler.weights.is_empty());
+        assert_eq!(c.scheduler.tenant_weight("anyone"), 1.0);
+
+        let mut c = Config::default();
+        c.apply("scheduler.max_priority", "2").unwrap();
+        c.apply("scheduler.age_secs", "0.5").unwrap();
+        c.apply("scheduler.tasks_per_group", "4").unwrap();
+        c.apply("scheduler.metrics_interval_ms", "50").unwrap();
+        c.apply("scheduler.weights", "spark=3, notebook=1.5").unwrap();
+        assert_eq!(c.scheduler.max_priority, 2);
+        assert_eq!(c.scheduler.age_secs, 0.5);
+        assert_eq!(c.scheduler.tasks_per_group, 4);
+        assert_eq!(c.scheduler.metrics_interval_ms, 50);
+        assert_eq!(c.scheduler.tenant_weight("spark"), 3.0);
+        assert_eq!(c.scheduler.tenant_weight("notebook"), 1.5);
+        assert_eq!(c.scheduler.tenant_weight("other"), 1.0);
+
+        // tasks_per_group floors at 1 (0 would deadlock the dispatcher)
+        c.apply("scheduler.tasks_per_group", "0").unwrap();
+        assert_eq!(c.scheduler.tasks_per_group, 1);
+        // malformed weights fail cleanly
+        assert!(Config::default().apply("scheduler.weights", "spark").is_err());
+        assert!(Config::default().apply("scheduler.weights", "spark=-1").is_err());
     }
 
     #[test]

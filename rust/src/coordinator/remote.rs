@@ -38,7 +38,8 @@ use std::time::Duration;
 use anyhow::Context;
 
 use crate::collectives::{
-    CommError, LocalComm, MeshAcceptor, PoisonCause, TcpComm,
+    CommError, Communicator, LocalComm, MeshAcceptor, PoisonCause, TcpComm,
+    LANE_ALL,
 };
 use crate::config::Config;
 use crate::distmat::RowBlockLayout;
@@ -175,6 +176,7 @@ impl RemoteWorker {
         out_base: u64,
         out_span: u64,
         engine_threads: usize,
+        lane: u64,
     ) -> crate::Result<mpsc::Receiver<crate::Result<TaskReply>>> {
         let req_id = self.next_req.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -189,6 +191,7 @@ impl RemoteWorker {
             out_base,
             out_span,
             engine_threads: engine_threads as u32,
+            lane,
         };
         match self.send(&msg) {
             Ok(()) => Ok(rx),
@@ -459,22 +462,62 @@ impl SessionFabric {
         }
     }
 
-    /// Poison the group. Remote poison is fire-and-forget per rank (a
-    /// wedged worker's ack would never come); each process's `TcpComm`
-    /// also re-broadcasts the cause over its own mesh links.
+    /// Poison the whole group (every lane). Remote poison is
+    /// fire-and-forget per rank (a wedged worker's ack would never come);
+    /// each process's `TcpComm` also re-broadcasts the cause over its own
+    /// mesh links.
     pub fn poison(&self, cause: PoisonCause) {
         match self {
             SessionFabric::Local(f) => f.poison(cause),
             SessionFabric::Remote { session_id, ranks } => {
-                let (kind, rank) = match cause {
-                    PoisonCause::RankFailed(r) => (0u8, r as u64),
-                    PoisonCause::HardCancel => (1u8, 0),
-                };
+                let (kind, rank) = wire_cause(cause);
                 for w in ranks {
                     let _ = w.send(&WorkMsg::MeshPoison {
                         session_id: *session_id,
                         kind,
                         rank,
+                        lane: LANE_ALL,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Poison one task's tag lane only (protocol v9): ranks blocked in
+    /// that task's collectives unwind, sibling tasks on other lanes keep
+    /// running. Same fire-and-forget transport as [`SessionFabric::poison`].
+    pub fn poison_lane(&self, lane: u64, cause: PoisonCause) {
+        match self {
+            SessionFabric::Local(f) => f.poison_lane(lane, cause),
+            SessionFabric::Remote { session_id, ranks } => {
+                let (kind, rank) = wire_cause(cause);
+                for w in ranks {
+                    let _ = w.send(&WorkMsg::MeshPoison {
+                        session_id: *session_id,
+                        kind,
+                        rank,
+                        lane,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Retire a finished task's tag lane: drop its queued stragglers and
+    /// clear any lane-scoped poison, so the lane's window is inert for
+    /// the rest of the session (lanes are never reused). Lane 0 — the
+    /// untasked tag space — is never retired.
+    pub fn retire_lane(&self, lane: u64) {
+        if lane == 0 {
+            return;
+        }
+        match self {
+            SessionFabric::Local(f) => f.retire_lane(lane),
+            SessionFabric::Remote { session_id, ranks } => {
+                for w in ranks {
+                    let _ = w.send(&WorkMsg::MeshRetire {
+                        session_id: *session_id,
+                        lane,
                     });
                 }
             }
@@ -493,6 +536,14 @@ impl SessionFabric {
                 });
             }
         }
+    }
+}
+
+/// [`PoisonCause`] as the `MeshPoison` wire pair (kind, rank).
+fn wire_cause(cause: PoisonCause) -> (u8, u64) {
+    match cause {
+        PoisonCause::RankFailed(r) => (0u8, r as u64),
+        PoisonCause::HardCancel => (1u8, 0),
     }
 }
 
@@ -608,6 +659,7 @@ pub fn run_worker(coordinator: &str, rank: usize, cfg: Config) -> crate::Result<
                 out_base,
                 out_span,
                 engine_threads,
+                lane,
             } => {
                 let library = match registry::builtin(&lib) {
                     Ok(l) => l,
@@ -620,7 +672,8 @@ pub fn run_worker(coordinator: &str, rank: usize, cfg: Config) -> crate::Result<
                 let scope = TaskScope::new(
                     Arc::clone(&cancel),
                     Arc::new(RankProgress::new()),
-                );
+                )
+                .with_lane(lane);
                 running.lock().unwrap().insert((session_id, task_id), cancel);
                 let (reply_tx, reply_rx) = mpsc::channel();
                 let sent = cmd_tx.send(WorkerCmd::RunTask {
@@ -714,14 +767,23 @@ pub fn run_worker(coordinator: &str, rank: usize, cfg: Config) -> crate::Result<
                 };
                 post(&writer, &reply);
             }
-            WorkMsg::MeshPoison { session_id, kind, rank: failed } => {
+            WorkMsg::MeshPoison { session_id, kind, rank: failed, lane } => {
                 let cause = if kind == 1 {
                     PoisonCause::HardCancel
                 } else {
                     PoisonCause::RankFailed(failed as usize)
                 };
                 if let Some(f) = shared.sessions.lock().unwrap().get(&session_id) {
-                    f.poison(cause);
+                    if lane == LANE_ALL {
+                        f.poison(cause);
+                    } else {
+                        f.poison_lane(lane, cause);
+                    }
+                }
+            }
+            WorkMsg::MeshRetire { session_id, lane } => {
+                if let Some(f) = shared.sessions.lock().unwrap().get(&session_id) {
+                    f.retire_lane(lane);
                 }
             }
             WorkMsg::SessionClose { req_id, session_id } => {

@@ -13,14 +13,24 @@
 //!
 //! Since protocol v4 the task path is **asynchronous** (`docs/tasks.md`):
 //! `SubmitTask` enqueues on the session's bounded FIFO and returns a task
-//! id at once; a per-session dispatcher thread runs tasks one at a time
-//! over the group; `TaskStatus` polls the `Queued → Running{progress} →
+//! id at once; a per-session dispatcher thread drains the FIFO over the
+//! group; `TaskStatus` polls the `Queued → Running{progress} →
 //! Done | Failed | Cancelled` state machine (progress aggregated across
 //! ranks); `CancelTask` flips a cooperative token iterative routines
 //! observe within one iteration; `WaitTask` blocks server-side with a
 //! timeout so the classic synchronous call survives as submit + wait.
 //! Teardown cancels queued and running work and joins the dispatcher
 //! before freeing the session's store blocks, so nothing leaks.
+//!
+//! Since protocol v9 the scheduler is **serving-grade**
+//! (`docs/scheduler.md`): admission is priority fair-share — the
+//! handshake carries a priority class, clamped by `scheduler.max_priority`,
+//! and the [`GroupAllocator`] grants by (aged) class then weighted tenant
+//! load instead of flat FIFO; the dispatcher runs up to
+//! `scheduler.tasks_per_group` tasks concurrently over one group, each on
+//! its own tag lane of the group communicator (cancellation poisons only
+//! the task's lane); and `SubscribeMetrics` streams push-based scheduler
+//! snapshots to observers on a dedicated connection.
 //!
 //! Since protocol v8 the pool has two shapes (`fabric.mode`,
 //! `docs/fabric.md`): **local** ranks are threads in this process (the
@@ -47,7 +57,8 @@ use crate::compute::ThreadPool;
 use crate::config::{Config, FabricMode, SchedulerConfig, TransferConfig};
 use crate::distmat::RowBlockLayout;
 use crate::metrics::{
-    SchedMetrics, SchedSnapshot, StorageMetrics, StorageSnapshot, TaskOutcome,
+    SchedMetrics, SchedSnapshot, SessionGauge, StorageMetrics, StorageSnapshot,
+    TaskGauge, TaskOutcome, PRIORITY_CLASSES, PRIORITY_NAMES,
 };
 use crate::net::{Framed, Server};
 use crate::protocol::fabric::WorkMsg;
@@ -87,6 +98,11 @@ struct TaskRecord {
     /// grace period, while a client correcting an over-long deadline
     /// still can.
     hard_deadline: Mutex<Option<Instant>>,
+    /// The task's tag lane in the group communicator (protocol v9),
+    /// assigned by the dispatcher when the task leaves the queue; 0 while
+    /// still queued. Lanes are monotonic per session and never reused, so
+    /// a finished task's stragglers land in a window nobody reads again.
+    lane: AtomicU64,
     submitted: Instant,
 }
 
@@ -124,8 +140,13 @@ const TERMINAL_RETENTION: usize = 1024;
 struct TaskTableState {
     /// Pending task ids, FIFO (bounded by `scheduler.task_queue_depth`).
     queue: VecDeque<u64>,
-    /// The task currently executing on the group, if any.
-    running: Option<Arc<TaskRecord>>,
+    /// Tasks currently executing on the group, keyed by task id — up to
+    /// `scheduler.tasks_per_group` of them (protocol v9), each on its own
+    /// tag lane of the group communicator.
+    running: HashMap<u64, Arc<TaskRecord>>,
+    /// Next tag lane to assign (starts at 1; lane 0 is the untasked tag
+    /// space). Monotonic, never reused.
+    next_lane: u64,
     /// Tasks by id: everything queued/running plus the retained terminal
     /// window (see [`TERMINAL_RETENTION`]).
     slots: HashMap<u64, TaskSlot>,
@@ -152,10 +173,11 @@ impl TaskTableState {
     }
 }
 
-/// Per-session task table: one dispatcher thread pops the queue and runs
-/// tasks one at a time over the session's group; the condvar wakes both
-/// the dispatcher (new work / teardown) and server-side `WaitTask`
-/// blockers (state transitions).
+/// Per-session task table: one dispatcher thread pops the queue and
+/// admits tasks onto the session's group (up to
+/// `scheduler.tasks_per_group` concurrently, each on its own tag lane);
+/// the condvar wakes the dispatcher (new work / a slot freeing /
+/// teardown) and server-side `WaitTask` blockers (state transitions).
 struct TaskTable {
     state: Mutex<TaskTableState>,
     cond: Condvar,
@@ -166,7 +188,8 @@ impl TaskTable {
         TaskTable {
             state: Mutex::new(TaskTableState {
                 queue: VecDeque::new(),
-                running: None,
+                running: HashMap::new(),
+                next_lane: 1,
                 slots: HashMap::new(),
                 terminal_order: VecDeque::new(),
                 closing: false,
@@ -190,6 +213,11 @@ fn wire_state(slot: &TaskSlot) -> TaskState {
 /// One connected client and the worker group it holds exclusively.
 struct Session {
     id: u64,
+    /// The client name it handshook with — the fair-share tenant key.
+    client: String,
+    /// Admitted priority class (requested, clamped to
+    /// `scheduler.max_priority`).
+    priority: u32,
     /// Global worker ranks in group order: `ranks[i]` is the worker with
     /// group-local rank `i`.
     ranks: Vec<usize>,
@@ -217,26 +245,46 @@ struct Session {
     dispatcher: Mutex<Option<JoinHandle<()>>>,
 }
 
+/// One queued handshake awaiting admission.
+struct Waiter {
+    ticket: u64,
+    /// Clamped priority class (index into [`PRIORITY_NAMES`]).
+    priority: u32,
+    /// Fair-share tenant key (the handshake's client name).
+    client: String,
+    enqueued: Instant,
+}
+
 /// Admission state guarded by the allocator mutex.
 struct AllocState {
     /// Sorted free global ranks.
     free: Vec<usize>,
-    /// FIFO of queued session tickets; only the head may be granted.
-    queue: VecDeque<u64>,
+    /// Queued handshakes in arrival order. Arrival order is the FIFO
+    /// tie-break *within* a class; the grant order across classes is
+    /// decided by [`GroupAllocator::grant_index`].
+    queue: Vec<Waiter>,
     active: usize,
+    /// Active sessions per tenant (weighted fair-share bookkeeping).
+    active_by_client: HashMap<String, usize>,
     stopping: bool,
 }
 
-/// FIFO admission control over the worker pool. A handshake claims `n`
-/// ranks exclusively; requests beyond current capacity (or beyond
-/// `max_sessions`) wait in arrival order until a teardown frees enough,
-/// up to `queue_timeout_s`.
+/// Priority fair-share admission control over the worker pool (protocol
+/// v9, `docs/scheduler.md`). A handshake claims `n` ranks exclusively;
+/// requests beyond current capacity (or beyond `max_sessions`) queue and
+/// are granted strictly best-head: highest effective priority first
+/// (class + one level per `scheduler.age_secs` waited — the aging rule
+/// that keeps batch work starvation-free), then, within a level, the
+/// tenant with the lowest weighted share of active sessions, then
+/// arrival order. Nothing is granted past the best head, so a large
+/// request is delayed, never starved; requests wait up to
+/// `queue_timeout_s`.
 struct GroupAllocator {
     total: usize,
     scheduler: SchedulerConfig,
     state: Mutex<AllocState>,
     cond: Condvar,
-    /// Backpressure gauges (admission-queue depth).
+    /// Backpressure gauges (per-class admission-queue depth).
     metrics: Arc<SchedMetrics>,
 }
 
@@ -247,8 +295,9 @@ impl GroupAllocator {
             scheduler,
             state: Mutex::new(AllocState {
                 free: (0..total).collect(),
-                queue: VecDeque::new(),
+                queue: Vec::new(),
                 active: 0,
+                active_by_client: HashMap::new(),
                 stopping: false,
             }),
             cond: Condvar::new(),
@@ -274,57 +323,149 @@ impl GroupAllocator {
         Ok(want)
     }
 
-    /// Block until `want` ranks can be granted to `ticket` (FIFO order),
-    /// the queue timeout passes, or the server stops.
-    fn acquire(&self, ticket: u64, want: usize) -> crate::Result<Vec<usize>> {
+    /// A queued handshake's effective priority: its class plus one level
+    /// per `scheduler.age_secs` spent waiting (0 disables aging). The
+    /// promotion is what makes the scheduler starvation-free — a batch
+    /// request outranks a stream of fresh interactive arrivals once it
+    /// has waited long enough.
+    fn effective_priority(&self, w: &Waiter, now: Instant) -> u64 {
+        let mut eff = w.priority as u64;
+        if self.scheduler.age_secs > 0.0 {
+            let waited = now.saturating_duration_since(w.enqueued).as_secs_f64();
+            eff += (waited / self.scheduler.age_secs) as u64;
+        }
+        eff
+    }
+
+    /// Grant-order key of every queued waiter: (effective priority —
+    /// higher first, weighted tenant load — lower first). Ties fall back
+    /// to arrival order (the queue's index order).
+    fn grant_keys(&self, st: &AllocState, now: Instant) -> Vec<(u64, f64)> {
+        st.queue
+            .iter()
+            .map(|w| {
+                let active =
+                    st.active_by_client.get(&w.client).copied().unwrap_or(0);
+                let ratio = active as f64 / self.scheduler.tenant_weight(&w.client);
+                (self.effective_priority(w, now), ratio)
+            })
+            .collect()
+    }
+
+    /// Whether grant key `a` (queue index `ai`) outranks `b` (`bi`).
+    fn outranks(a: (u64, f64), ai: usize, b: (u64, f64), bi: usize) -> bool {
+        a.0 > b.0 || (a.0 == b.0 && (a.1 < b.1 || (a.1 == b.1 && ai < bi)))
+    }
+
+    /// Queue index of the waiter that would be granted next, if any.
+    fn grant_index(&self, st: &AllocState, now: Instant) -> Option<usize> {
+        let keys = self.grant_keys(st, now);
+        let mut best: Option<usize> = None;
+        for i in 0..keys.len() {
+            best = match best {
+                Some(b) if !Self::outranks(keys[i], i, keys[b], b) => Some(b),
+                _ => Some(i),
+            };
+        }
+        best
+    }
+
+    /// 1-based position of `ticket` in the current grant order (rejection
+    /// diagnostics: "you were 4th of 7 in line").
+    fn grant_position(&self, st: &AllocState, ticket: u64, now: Instant) -> usize {
+        let Some(me) = st.queue.iter().position(|w| w.ticket == ticket) else {
+            return 0;
+        };
+        let keys = self.grant_keys(st, now);
+        1 + (0..keys.len())
+            .filter(|&i| Self::outranks(keys[i], i, keys[me], me))
+            .count()
+    }
+
+    /// Block until `want` ranks can be granted to `ticket`, the queue
+    /// timeout passes, or the server stops. The grant order (see the type
+    /// docs) is re-evaluated on every wake and at least every 500ms, so
+    /// an aging promotion takes effect even when nothing is released.
+    fn acquire(
+        &self,
+        ticket: u64,
+        want: usize,
+        priority: u32,
+        client: &str,
+    ) -> crate::Result<Vec<usize>> {
         let timeout = Duration::from_secs_f64(self.scheduler.queue_timeout_s.max(0.0));
         let deadline = Instant::now() + timeout;
         let mut st = self.state.lock().unwrap();
-        st.queue.push_back(ticket);
-        self.metrics.admission_enqueued();
+        st.queue.push(Waiter {
+            ticket,
+            priority,
+            client: client.to_string(),
+            enqueued: Instant::now(),
+        });
+        self.metrics.admission_enqueued(priority);
         loop {
             if st.stopping {
-                st.queue.retain(|&t| t != ticket);
-                self.metrics.admission_dequeued();
+                st.queue.retain(|w| w.ticket != ticket);
+                self.metrics.admission_dequeued(priority);
+                self.metrics.session_rejected();
                 anyhow::bail!("server is stopping");
             }
-            if st.queue.front() == Some(&ticket)
+            let now = Instant::now();
+            let is_best = self
+                .grant_index(&st, now)
+                .is_some_and(|i| st.queue[i].ticket == ticket);
+            if is_best
                 && st.active < self.scheduler.max_sessions
                 && st.free.len() >= want
             {
-                st.queue.pop_front();
-                self.metrics.admission_dequeued();
+                st.queue.retain(|w| w.ticket != ticket);
+                self.metrics.admission_dequeued(priority);
                 let ranks: Vec<usize> = st.free.drain(..want).collect();
                 st.active += 1;
+                *st.active_by_client.entry(client.to_string()).or_insert(0) += 1;
+                self.metrics.session_admitted();
                 // the next queued request may fit in what remains
                 self.cond.notify_all();
                 return Ok(ranks);
             }
-            let now = Instant::now();
             if now >= deadline {
+                let position = self.grant_position(&st, ticket, now);
+                let depth = st.queue.len();
                 let (free, active) = (st.free.len(), st.active);
-                st.queue.retain(|&t| t != ticket);
-                self.metrics.admission_dequeued();
-                // our departure may unblock the request queued behind us
+                st.queue.retain(|w| w.ticket != ticket);
+                self.metrics.admission_dequeued(priority);
+                self.metrics.session_rejected();
+                // our departure may unblock a request ranked behind us
                 self.cond.notify_all();
                 anyhow::bail!(
-                    "timed out after {:.1}s waiting for {want} of {} workers \
-                     ({free} free, {active} sessions active)",
+                    "admission timed out after {:.1}s waiting for {want} of {} \
+                     workers (class {}, grant position {position} of {depth} \
+                     queued, {free} free, {active} sessions active)",
                     timeout.as_secs_f64(),
                     self.total,
+                    PRIORITY_NAMES[(priority as usize).min(PRIORITY_CLASSES - 1)],
                 );
             }
-            let (guard, _) = self.cond.wait_timeout(st, deadline - now).unwrap();
+            // bounded wait slice: aging re-ranks the queue with time alone
+            let wait = (deadline - now).min(Duration::from_millis(500));
+            let (guard, _) = self.cond.wait_timeout(st, wait).unwrap();
             st = guard;
         }
     }
 
     /// Return a torn-down session's ranks to the pool and wake the queue.
-    fn release(&self, ranks: &[usize]) {
+    fn release(&self, ranks: &[usize], client: &str) {
         let mut st = self.state.lock().unwrap();
         st.free.extend_from_slice(ranks);
         st.free.sort_unstable();
         st.active -= 1;
+        if let Some(n) = st.active_by_client.get_mut(client) {
+            *n -= 1;
+            if *n == 0 {
+                st.active_by_client.remove(client);
+            }
+        }
+        self.metrics.session_released();
         self.cond.notify_all();
     }
 
@@ -404,12 +545,12 @@ impl Driver {
                 self.metrics.task_dequeued(TaskOutcome::Cancelled);
             }
         }
-        if let Some(rec) = &st.running {
+        let grace = self.cfg.scheduler.teardown_grace_ms;
+        for rec in st.running.values() {
             rec.cancel.cancel();
             // process-separated ranks observe the token through their own
             // copy — forward the flip (no-op for in-process groups)
             session.fabric.propagate_cancel(rec.id);
-            let grace = self.cfg.scheduler.teardown_grace_ms;
             if grace > 0 {
                 schedule_hard_cancel(
                     session.clone(),
@@ -699,10 +840,17 @@ impl Driver {
         requested: u32,
         rows_per_frame: u32,
         buf_bytes: u64,
+        priority: u32,
     ) -> crate::Result<Arc<Session>> {
         let want = self.allocator.resolve_request(requested as usize)?;
+        // clamp the requested class to server policy — a client asking
+        // for more than `scheduler.max_priority` is admitted at the cap,
+        // not rejected (the request is advisory, the policy is law)
+        let priority = priority
+            .min(self.cfg.scheduler.max_priority)
+            .min(PRIORITY_CLASSES as u32 - 1);
         let id = self.next_session.fetch_add(1, Ordering::SeqCst);
-        let ranks = self.allocator.acquire(id, want)?;
+        let ranks = self.allocator.acquire(id, want, priority, client_name)?;
         // storage admission (`storage.total_bytes`): a session commits its
         // per-rank heap budget × group size against the server-wide pool
         // up front, so tenants cannot collectively promise more resident
@@ -724,7 +872,7 @@ impl Driver {
                 if committed.saturating_add(demand) > pool {
                     let left = pool - *committed;
                     drop(committed);
-                    self.allocator.release(&ranks);
+                    self.allocator.release(&ranks, client_name);
                     anyhow::bail!(
                         "storage admission rejected: this session would commit \
                          {demand} budget bytes ({} rank(s)) but only {left} of \
@@ -746,13 +894,15 @@ impl Driver {
         let fabric = match self.bind_group_fabric(id, &ranks) {
             Ok(f) => f,
             Err(e) => {
-                self.allocator.release(&ranks);
+                self.allocator.release(&ranks, client_name);
                 *self.storage_committed.lock().unwrap() -= storage_demand;
                 return Err(e);
             }
         };
         let session = Arc::new(Session {
             id,
+            client: client_name.to_string(),
+            priority,
             ranks: ranks.clone(),
             fabric,
             transfer: self.cfg.transfer.negotiate(rows_per_frame, buf_bytes),
@@ -761,8 +911,9 @@ impl Driver {
             tasks: TaskTable::new(),
             dispatcher: Mutex::new(None),
         });
-        // the session's task dispatcher: pops the FIFO and runs tasks one
-        // at a time over this group; exits when teardown sets `closing`
+        // the session's task dispatcher: pops the FIFO and runs up to
+        // `scheduler.tasks_per_group` tasks concurrently over this group,
+        // each on its own tag lane; exits when teardown sets `closing`
         {
             let driver = self.clone();
             let session = session.clone();
@@ -786,7 +937,7 @@ impl Driver {
                     let _ = handle.join();
                 }
                 self.release_session_state(&session);
-                self.allocator.release(&session.ranks);
+                self.allocator.release(&session.ranks, &session.client);
                 *self.storage_committed.lock().unwrap() -= session.storage_demand;
                 anyhow::bail!("server is stopping");
             }
@@ -794,8 +945,9 @@ impl Driver {
         }
         log::info!(
             "session {id}: client {client_name:?} granted {want} workers \
-             (ranks {ranks:?}, {} rows/frame, {} buf bytes, up to \
+             (class {}, ranks {ranks:?}, {} rows/frame, {} buf bytes, up to \
              {engine_threads} engine thread(s)/rank)",
+            PRIORITY_NAMES[priority as usize],
             session.transfer.rows_per_frame,
             session.transfer.buf_bytes,
         );
@@ -820,7 +972,7 @@ impl Driver {
             let _ = handle.join();
         }
         let freed = self.release_session_state(session);
-        self.allocator.release(&session.ranks);
+        self.allocator.release(&session.ranks, &session.client);
         *self.storage_committed.lock().unwrap() -= session.storage_demand;
         log::info!(
             "session {}: closed ({} blocks freed, {} workers released)",
@@ -954,8 +1106,10 @@ impl Driver {
         if st.queue.len() >= depth {
             self.metrics.task_rejected();
             anyhow::bail!(
-                "task queue full: {depth} tasks already queued \
-                 (scheduler.task_queue_depth)"
+                "task queue full: {depth} tasks already queued on session {} \
+                 (class {}, scheduler.task_queue_depth)",
+                session.id,
+                PRIORITY_NAMES[session.priority as usize],
             );
         }
         let task_id = self.next_task.fetch_add(1, Ordering::SeqCst);
@@ -972,6 +1126,7 @@ impl Driver {
                 .map(|_| Arc::new(RankProgress::new()))
                 .collect(),
             hard_deadline: Mutex::new(None),
+            lane: AtomicU64::new(0),
             submitted: Instant::now(),
         });
         st.queue.push_back(task_id);
@@ -1102,6 +1257,10 @@ impl Driver {
         // before it inserts anything (see WorkerCmd::out_span)
         let out_span = self.cfg.scheduler.max_task_outputs.max(1);
         let out_base = self.next_id.fetch_add(out_span, Ordering::SeqCst);
+        // the tag lane the dispatcher assigned when this task left the
+        // queue: every rank wraps the group fabric in a LaneComm at this
+        // lane, so concurrent tasks of one group never collide on tags
+        let lane = rec.lane.load(Ordering::SeqCst);
 
         // intra-rank parallelism for THIS dispatch: the admission clamp
         // bounds one session, but disjoint groups run tasks concurrently
@@ -1161,7 +1320,8 @@ impl Driver {
                         scope: TaskScope::new(
                             rec.cancel.clone(),
                             rec.progress[slot].clone(),
-                        ),
+                        )
+                        .with_lane(lane),
                         reply: tx,
                     });
                     sent.ok().map(|()| rx)
@@ -1184,6 +1344,7 @@ impl Driver {
                         out_base,
                         out_span,
                         engine_threads,
+                        lane,
                     )
                     .ok(),
             };
@@ -1392,96 +1553,186 @@ impl Driver {
         infos.sort_by_key(|i| i.id);
         ControlMsg::MatrixList { infos }
     }
+
+    /// The full scheduler snapshot: the counter/gauge core from
+    /// [`SchedMetrics::snapshot`] plus a per-session breakdown (tenant,
+    /// class, queue backlog, running tasks with live aggregated
+    /// progress). This is what `ServerHandle::sched_metrics` returns and
+    /// what the `SubscribeMetrics` stream serializes every interval.
+    fn sched_snapshot(&self) -> SchedSnapshot {
+        let mut snap = self.metrics.snapshot();
+        let sessions: Vec<Arc<Session>> =
+            self.sessions.lock().unwrap().values().cloned().collect();
+        for s in &sessions {
+            let st = s.tasks.state.lock().unwrap();
+            let mut running: Vec<TaskGauge> = st
+                .running
+                .values()
+                .map(|rec| {
+                    let p = rec.aggregate_progress();
+                    TaskGauge {
+                        task_id: rec.id,
+                        lane: rec.lane.load(Ordering::SeqCst),
+                        routine: format!("{}.{}", rec.lib_name, rec.routine),
+                        iters: p.iters,
+                        residual: p.residual,
+                    }
+                })
+                .collect();
+            running.sort_by_key(|t| t.task_id);
+            snap.sessions.push(SessionGauge {
+                session_id: s.id,
+                client: s.client.clone(),
+                priority: s.priority,
+                queued: st.queue.len(),
+                running,
+            });
+        }
+        snap.sessions.sort_by_key(|g| g.session_id);
+        snap
+    }
 }
 
-/// One session's task dispatcher loop: pop the FIFO, mark Running,
-/// execute over the group, finalize, repeat — until teardown sets
-/// `closing` and the queue is drained (close_session empties the queue
-/// itself, so "drained" is immediate at teardown).
+/// One session's task dispatcher loop (protocol v9): pop the FIFO while
+/// fewer than `scheduler.tasks_per_group` tasks are running, assign each
+/// admitted task the session's next tag lane, and hand it to an executor
+/// thread — so up to `tasks_per_group` tasks run concurrently over the
+/// same group, isolated by their lanes. Exits when teardown sets
+/// `closing` and both the queue and the running set are empty
+/// (close_session empties the queue itself, so only the running tasks
+/// remain to finish), joining every executor so no task can touch the
+/// store after the session's blocks are freed.
 fn task_dispatcher(driver: &Arc<Driver>, session: &Arc<Session>) {
+    let cap = driver.cfg.scheduler.tasks_per_group.max(1);
+    let mut executors: Vec<JoinHandle<()>> = Vec::new();
     loop {
         // claim the next task (or exit on teardown)
-        let rec = {
+        let claimed = {
             let mut st = session.tasks.state.lock().unwrap();
             loop {
-                if let Some(id) = st.queue.pop_front() {
-                    let rec = match st.slots.get(&id) {
-                        Some(TaskSlot::Queued(rec)) => rec.clone(),
-                        // cancelled-while-queued slots are already
-                        // Terminal; their id was removed from the queue,
-                        // but guard anyway
-                        _ => continue,
-                    };
-                    st.slots.insert(id, TaskSlot::Running(rec.clone()));
-                    st.running = Some(rec.clone());
-                    // gauge moves before anyone can observe Running (a
-                    // status poll after the lock drops must see the
-                    // queued→running transition in the metrics too)
-                    driver.metrics.task_started(rec.submitted.elapsed().as_secs_f64());
-                    session.tasks.cond.notify_all();
-                    break rec;
+                if st.running.len() < cap {
+                    if let Some(id) = st.queue.pop_front() {
+                        let rec = match st.slots.get(&id) {
+                            Some(TaskSlot::Queued(rec)) => rec.clone(),
+                            // cancelled-while-queued slots are already
+                            // Terminal; their id was removed from the
+                            // queue, but guard anyway
+                            _ => continue,
+                        };
+                        // lane assignment: monotonic per session, never
+                        // reused — a finished task's straggler messages
+                        // land in a tag window nobody reads again
+                        let lane = st.next_lane;
+                        st.next_lane += 1;
+                        rec.lane.store(lane, Ordering::SeqCst);
+                        st.slots.insert(id, TaskSlot::Running(rec.clone()));
+                        st.running.insert(id, rec.clone());
+                        // gauge moves before anyone can observe Running
+                        // (a status poll after the lock drops must see
+                        // the queued→running transition in the metrics)
+                        driver
+                            .metrics
+                            .task_started(rec.submitted.elapsed().as_secs_f64());
+                        session.tasks.cond.notify_all();
+                        break Some(rec);
+                    }
                 }
-                if st.closing {
-                    return;
+                if st.closing && st.queue.is_empty() && st.running.is_empty() {
+                    break None;
                 }
                 st = session.tasks.cond.wait(st).unwrap();
             }
         };
+        let Some(rec) = claimed else { break };
         let wait_secs = rec.submitted.elapsed().as_secs_f64();
         log::debug!(
-            "session {}: task {} ({}.{}) dispatched after {wait_secs:.3}s queued",
+            "session {}: task {} ({}.{}) dispatched on lane {} after \
+             {wait_secs:.3}s queued",
             session.id,
             rec.id,
             rec.lib_name,
-            rec.routine
+            rec.routine,
+            rec.lane.load(Ordering::SeqCst),
         );
+        // one executor thread per running task — even at cap = 1, so
+        // serial and concurrent dispatch share one code path. Reap
+        // finished handles opportunistically; the stragglers are joined
+        // on exit below.
+        executors.retain(|h| !h.is_finished());
+        let driver = driver.clone();
+        let session = session.clone();
+        executors.push(std::thread::spawn(move || {
+            execute_and_finalize(&driver, &session, &rec);
+        }));
+    }
+    for h in executors {
+        let _ = h.join();
+    }
+}
 
-        let state = driver.execute_task(session, &rec);
-        let outcome = match &state {
-            TaskState::Done { .. } => TaskOutcome::Done,
-            TaskState::Cancelled => TaskOutcome::Cancelled,
-            _ => TaskOutcome::Failed,
-        };
-        {
-            let mut st = session.tasks.state.lock().unwrap();
-            st.set_terminal(rec.id, state);
-            st.running = None;
-            // reset the group fabric between tasks UNDER the table lock:
-            // the hard-cancel watchdog checks `running` and poisons under
-            // this same lock, so a late watchdog can never poison after
-            // this reset (it observes running == None and stands down).
-            // Every rank has replied by now, so no rank is inside a
-            // collective; the reset clears any poison and drains messages
-            // a failed task left undelivered.
+/// Run one task to its terminal state and finalize it under the task
+/// table lock: record the terminal slot, retire the task's tag lane (its
+/// straggler messages are dropped from here on), and — only when it was
+/// the LAST running task — reset the group fabric so a poisoned group
+/// heals between tasks without yanking a live sibling's lanes.
+fn execute_and_finalize(
+    driver: &Arc<Driver>,
+    session: &Arc<Session>,
+    rec: &Arc<TaskRecord>,
+) {
+    let state = driver.execute_task(session, rec);
+    let outcome = match &state {
+        TaskState::Done { .. } => TaskOutcome::Done,
+        TaskState::Cancelled => TaskOutcome::Cancelled,
+        _ => TaskOutcome::Failed,
+    };
+    let lane = rec.lane.load(Ordering::SeqCst);
+    {
+        let mut st = session.tasks.state.lock().unwrap();
+        st.set_terminal(rec.id, state);
+        st.running.remove(&rec.id);
+        // retire the lane UNDER the table lock: the hard-cancel watchdog
+        // checks `running` and poisons under this same lock, so a late
+        // watchdog can never poison a lane after it was retired (it
+        // observes the task gone from `running` and stands down). Every
+        // rank has replied by now, so no rank is inside a collective on
+        // this lane.
+        session.fabric.retire_lane(lane);
+        // reset the whole fabric only between tasks (running set empty):
+        // it clears group-wide poison (e.g. a rank death) and drains
+        // undelivered messages, which would be destructive while a
+        // sibling task is mid-collective on its own lane
+        if st.running.is_empty() {
             session.fabric.reset();
-            // count the outcome BEFORE waking waiters: a client whose
-            // wait() just returned may read sched_metrics() immediately
-            // and must see this task as finished, not still running
-            driver.metrics.task_finished(outcome);
-            session.tasks.cond.notify_all();
         }
+        // count the outcome BEFORE waking waiters: a client whose
+        // wait() just returned may read sched_metrics() immediately
+        // and must see this task as finished, not still running
+        driver.metrics.task_finished(outcome);
+        session.tasks.cond.notify_all();
     }
 }
 
 /// Escalation watchdog for `CancelTask { hard_after_ms }` and session
 /// teardown: once the cooperative grace period elapses, if the task is
-/// still running, poison the session's group fabric so every rank blocked
-/// in (or next entering) a collective unwinds with
-/// [`CommError::Cancelled`] instead of running to its natural end. The
-/// running-check and the poison happen under the task-table lock — the
-/// same lock the dispatcher holds while finalizing and resetting the
-/// fabric — so a watchdog firing after the task ended is a no-op, never a
+/// still running, poison the task's tag lane so every rank blocked in
+/// (or next entering) one of its collectives unwinds with
+/// [`CommError::Cancelled`] instead of running to its natural end — a
+/// sibling task on another lane keeps running untouched (protocol v9).
+/// The running-check and the poison happen under the task-table lock —
+/// the same lock the executor holds while finalizing and retiring the
+/// lane — so a watchdog firing after the task ended is a no-op, never a
 /// stale poison leaking into the next task.
 fn schedule_hard_cancel(session: Arc<Session>, task_id: u64, grace: Duration) {
     std::thread::spawn(move || {
         std::thread::sleep(grace);
         let st = session.tasks.state.lock().unwrap();
-        let still_running = st.running.as_ref().is_some_and(|rec| rec.id == task_id);
-        if still_running {
-            session.fabric.poison(PoisonCause::HardCancel);
+        if let Some(rec) = st.running.get(&task_id) {
+            let lane = rec.lane.load(Ordering::SeqCst);
+            session.fabric.poison_lane(lane, PoisonCause::HardCancel);
             log::warn!(
                 "session {}: task {task_id} ignored cooperative cancellation for \
-                 {grace:?}; group poisoned (hard cancel)",
+                 {grace:?}; lane {lane} poisoned (hard cancel)",
                 session.id
             );
         }
@@ -1583,10 +1834,13 @@ impl ServerHandle {
             .sum()
     }
 
-    /// Scheduler backpressure snapshot: admission-queue depth, task-queue
-    /// gauges, outcome counters, Queued→Running wait-time distribution.
+    /// Scheduler backpressure snapshot: per-class admission-queue depth,
+    /// task-queue gauges, outcome counters, Queued→Running wait-time
+    /// distribution, plus per-session gauges (tenant, class, backlog,
+    /// running tasks with live progress) — the same snapshot the
+    /// `SubscribeMetrics` stream pushes.
     pub fn sched_metrics(&self) -> SchedSnapshot {
-        self.driver.metrics.snapshot()
+        self.driver.sched_snapshot()
     }
 
     /// Storage-plane counters (blocks spilled / paged in / mapped, bytes
@@ -1642,7 +1896,7 @@ impl ServerHandle {
                 crate::metrics::SessionQueueDepth {
                     session_id: s.id,
                     queued: st.queue.len(),
-                    running: st.running.is_some(),
+                    running: st.running.len(),
                 }
             })
             .collect();
@@ -1972,6 +2226,7 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
                 request_workers,
                 rows_per_frame,
                 buf_bytes,
+                priority,
             } => {
                 if version != PROTOCOL_VERSION {
                     Ok(ControlMsg::Error {
@@ -1989,6 +2244,7 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
                         request_workers,
                         rows_per_frame,
                         buf_bytes,
+                        priority,
                     ) {
                         Ok(s) => {
                             let ack = ControlMsg::HandshakeAck {
@@ -2004,6 +2260,21 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
                         }
                         Err(e) => Err(e),
                     }
+                }
+            }
+            // the metrics stream claims the whole connection: no session,
+            // no further requests — just periodic snapshot pushes until
+            // the subscriber hangs up or the server stops (protocol v9)
+            ControlMsg::SubscribeMetrics { interval_ms } => {
+                if session.is_some() {
+                    Ok(ControlMsg::Error {
+                        message: "SubscribeMetrics must be the first message \
+                                  on its own connection"
+                            .into(),
+                    })
+                } else {
+                    stream_metrics(driver, &mut framed, interval_ms);
+                    return;
                 }
             }
             ControlMsg::RegisterLibrary { name, path } => driver
@@ -2030,5 +2301,43 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
     }
     if let Some(s) = session.take() {
         driver.close_session(&s);
+    }
+}
+
+/// Push-based metrics stream (protocol v9 `SubscribeMetrics`): serialize
+/// a full scheduler snapshot every `interval_ms` (0 = the server's
+/// `scheduler.metrics_interval_ms` default; clamped to [10ms, 60s]) as a
+/// `MetricsSnapshot { seq, json }` frame until the subscriber disconnects
+/// or the server stops. The sleep is sliced so shutdown never waits a
+/// full interval on an idle subscriber.
+fn stream_metrics(
+    driver: &Arc<Driver>,
+    framed: &mut Framed<TcpStream, TcpStream>,
+    interval_ms: u64,
+) {
+    let ms = if interval_ms == 0 {
+        driver.cfg.scheduler.metrics_interval_ms
+    } else {
+        interval_ms
+    };
+    let interval = Duration::from_millis(ms.clamp(10, 60_000));
+    let mut seq: u64 = 0;
+    loop {
+        if driver.stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        let json = driver.sched_snapshot().to_json();
+        if framed.send_ctrl(&ControlMsg::MetricsSnapshot { seq, json }).is_err() {
+            return; // subscriber went away
+        }
+        seq += 1;
+        let deadline = Instant::now() + interval;
+        while Instant::now() < deadline {
+            if driver.stopping.load(Ordering::SeqCst) {
+                return;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            std::thread::sleep(left.min(Duration::from_millis(50)));
+        }
     }
 }

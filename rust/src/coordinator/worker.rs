@@ -10,13 +10,16 @@
 //! process — protocol v8) into [`WorkerShared::sessions`] at handshake
 //! time and removes it at teardown, so tasks from sessions holding
 //! disjoint groups run concurrently on disjoint worker threads.
-//! The engine is built lazily *on the worker thread* (real PJRT handles
-//! are not `Send`), riding the rank's client queue of the server's
-//! shared work-stealing compute pool when the server passes one in;
-//! while a task runs, its cooperative [`crate::tasks::CancelToken`] is
-//! installed into the engine so the kernels themselves check in at panel
-//! boundaries (a hard cancel lands within one MC-panel even in routines
-//! that never poll their scope).
+//! Since protocol v9 the command loop also runs tasks of the *same*
+//! session concurrently: each `RunTask` executes on its own thread with
+//! its own engine (real PJRT handles are not `Send`, so engines are
+//! built on the thread that uses them), each leasing a fresh client
+//! queue of the server's work-stealing compute pool, and each seeing the
+//! group through a [`crate::collectives::LaneComm`] view so concurrent
+//! tasks use disjoint tag spaces. While a task runs, its cooperative
+//! [`crate::tasks::CancelToken`] is installed into its engine so the
+//! kernels themselves check in at panel boundaries (a hard cancel lands
+//! within one MC-panel even in routines that never poll their scope).
 //!
 //! Data-socket threads never serialize on a store-wide lock: the
 //! [`MatrixStore`] hands out `Arc<Block>` handles under a short read
@@ -29,8 +32,8 @@ use std::net::TcpStream;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use crate::collectives::{CommError, Communicator, Fabric, PoisonCause};
-use crate::compute::{build_engine_with_pool, Engine, ThreadPool};
+use crate::collectives::{CommError, Communicator, Fabric, LaneComm, PoisonCause};
+use crate::compute::{build_engine_with_pool, ThreadPool};
 use crate::config::Config;
 use crate::distmat::RowBlockLayout;
 use crate::net::Framed;
@@ -108,8 +111,17 @@ pub enum WorkerCmd {
 }
 
 /// The worker command loop. Runs until `Shutdown`. `pool` is this rank's
-/// client queue of the server's shared compute pool (`None` = the engine
-/// builds a private pool, the pre-shared-plane behavior tests rely on).
+/// client queue of the server's shared compute pool (`None` — the tcp
+/// worker-process case — builds a process-local root pool instead).
+///
+/// Since protocol v9 each `RunTask` executes on its **own thread** with
+/// its **own engine** riding a fresh client queue of the pool, so up to
+/// `scheduler.tasks_per_group` tasks of one session (each on its own
+/// communicator tag lane) run concurrently on this rank. Engines are
+/// per-task because a task's cancel token is installed into its engine
+/// for kernel-level check-ins — concurrent tasks must not share one
+/// token slot — and real PJRT handles are not `Send`, so each engine is
+/// built on the thread that uses it.
 pub fn worker_main(
     shared: Arc<WorkerShared>,
     cfg: Config,
@@ -117,8 +129,11 @@ pub fn worker_main(
     pool: Option<ThreadPool>,
 ) {
     let rank = shared.rank;
-    let mut pool = pool;
-    let mut engine: Option<Box<dyn Engine>> = None;
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // one root thread set either way: per-task engines lease client
+    // queues from it instead of spawning private pools per task
+    let pool = pool.unwrap_or_else(|| ThreadPool::new(avail));
+    let mut tasks: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while let Ok(cmd) = rx.recv() {
         match cmd {
             WorkerCmd::Shutdown => break,
@@ -133,129 +148,178 @@ pub fn worker_main(
                 scope,
                 reply,
             } => {
-                // looked up OUTSIDE the routine so a failure afterwards
-                // can poison the group fabric (failure propagation)
+                // looked up on the command thread (not the task thread)
+                // so a session unbound between dispatch and spawn still
+                // yields a deterministic per-rank error
                 let comm = shared.sessions.lock().unwrap().get(&session_id).cloned();
-                // a panicking routine must not kill this worker thread: a
-                // dead rank never answers its reply channel and (worse)
-                // never reaches its collectives, wedging live peers.
-                // Catching the panic turns it into a per-rank Failed
-                // reply — and poisoning the group (below) releases any
-                // peer already blocked in a collective this rank will
-                // never join, with `CommError::PeerFailed { rank }`
-                // naming this rank as the root cause.
-                let result = match comm.clone() {
-                    None => Err(anyhow::anyhow!(
-                        "rank {rank}: session {session_id} holds no group here"
-                    )),
-                    Some(comm) => std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| -> crate::Result<TaskReply> {
-                            if engine.is_none() {
-                                engine = Some(build_engine_with_pool(&cfg, pool.take())?);
-                            }
-                            let engine = engine.as_mut().unwrap();
-                            // per-task: different sessions on this rank
-                            // may have different clamped pool sizes
-                            // (results are bit-identical either way)
-                            engine.set_threads(engine_threads.max(1));
-                            // kernel-level cancellation check-ins for the
-                            // duration of this task (uninstalled below)
-                            engine.set_cancel(Some(scope.token().clone()));
-                            let local_rank = comm.rank();
-                            let cpu0 = thread_cpu_secs();
-                            let sim0 = comm.sim_comm_secs();
-                            let mut ctx = WorkerCtx {
-                                rank: local_rank,
-                                comm: comm.as_comm(),
-                                engine: engine.as_mut(),
-                                store: &shared.store,
-                                config: &cfg,
-                                scope: &scope,
-                            };
-                            let out = lib.run(&routine, &params, &mut ctx)?;
-                            let cpu_busy = (thread_cpu_secs() - cpu0).max(0.0);
-                            let comm_sim = comm.sim_comm_secs() - sim0;
-
-                            // the reservation is a hard cap: exceeding it
-                            // would silently collide with matrix ids
-                            // allocated after this task's window — fail
-                            // before inserting anything
-                            anyhow::ensure!(
-                                out.matrices.len() as u64 <= out_span,
-                                "routine {routine} produced {} outputs, exceeding \
-                                 the task's reservation of {out_span} ids \
-                                 (scheduler.max_task_outputs)",
-                                out.matrices.len()
-                            );
-                            let mut metas = Vec::with_capacity(out.matrices.len());
-                            for (i, m) in out.matrices.into_iter().enumerate() {
-                                let id = out_base + i as u64;
-                                metas.push(OutputMeta {
-                                    id,
-                                    name: m.name.clone(),
-                                    rows: m.layout.rows as u64,
-                                    cols: m.layout.cols as u64,
-                                    layout: m.layout.clone(),
-                                });
-                                shared.store.insert(
-                                    id,
-                                    &m.name,
-                                    m.layout,
-                                    m.local,
-                                    local_rank,
-                                    session_id,
-                                )?;
-                            }
-                            let mut timings = out.timings;
-                            timings.push(("cpu_busy".into(), cpu_busy));
-                            timings.push(("comm_sim".into(), comm_sim));
-                            Ok(TaskReply { outputs: metas, scalars: out.scalars, timings })
-                        }),
-                    )
-                    .unwrap_or_else(|panic| {
-                        let what = panic
-                            .downcast_ref::<&str>()
-                            .map(|s| (*s).to_string())
-                            .or_else(|| panic.downcast_ref::<String>().cloned())
-                            .unwrap_or_else(|| "non-string panic payload".into());
-                        Err(anyhow::anyhow!("routine {routine} panicked: {what}"))
-                    }),
-                };
-                // uninstall the task's token (even after a panic) so the
-                // next task on this rank starts with a clean engine
-                if let Some(engine) = engine.as_mut() {
-                    engine.set_cancel(None);
-                }
-                // failure propagation: a rank that failed on its own (not
-                // as collateral of someone else's failure) poisons the
-                // group so peers blocked in — or about to enter — a
-                // collective unwind promptly instead of waiting for a
-                // contribution that will never come. MUST happen before
-                // the reply send: the dispatcher resets the fabric once
-                // every rank has replied, and a poison landing after that
-                // reset would leak into the next task. Collateral errors
-                // (CommError) never re-poison, so the recorded root cause
-                // stays the first failing rank.
-                if let (Err(e), Some(comm)) = (&result, &comm) {
-                    let collateral = e
-                        .downcast_ref::<CommError>()
-                        .is_some_and(CommError::is_collateral);
-                    if !collateral {
-                        comm.poison(PoisonCause::RankFailed(comm.rank()));
-                    }
-                }
-                let failed = result.is_err();
-                let cancelled = scope.is_cancelled();
-                let _ = reply.send(result);
-                if failed && !cancelled {
-                    log::warn!("rank {rank}: task {routine} failed");
-                } else if failed {
-                    log::debug!("rank {rank}: task {routine} cancelled");
-                }
+                // this task's slice of the shared pool: its own client
+                // queue, capped at the task's engine-thread grant
+                let task_pool = pool.client(engine_threads.max(1));
+                let shared = Arc::clone(&shared);
+                let cfg = cfg.clone();
+                tasks.retain(|h| !h.is_finished());
+                tasks.push(std::thread::spawn(move || {
+                    run_one_task(
+                        &shared, &cfg, rank, session_id, lib, &routine, params,
+                        out_base, out_span, engine_threads, scope, reply, comm,
+                        task_pool,
+                    );
+                }));
             }
         }
     }
+    // Shutdown: every in-flight task has its cancel token set by the
+    // driver's drain; join them so the process never exits under a
+    // routine mid-collective
+    for h in tasks {
+        let _ = h.join();
+    }
     log::debug!("worker {rank} exiting");
+}
+
+/// Execute one task on its own thread: build the task's engine, wrap the
+/// group fabric in the task's tag-lane view, run the routine, insert
+/// outputs, and reply. Failure propagation is lane-scoped (protocol v9):
+/// a rank that fails on its own poisons only its task's lane, so a
+/// sibling task running concurrently on the same group is untouched.
+#[allow(clippy::too_many_arguments)]
+fn run_one_task(
+    shared: &WorkerShared,
+    cfg: &Config,
+    rank: usize,
+    session_id: u64,
+    lib: Arc<dyn Library>,
+    routine: &str,
+    params: Params,
+    out_base: u64,
+    out_span: u64,
+    engine_threads: usize,
+    scope: crate::tasks::TaskScope,
+    reply: mpsc::Sender<crate::Result<TaskReply>>,
+    comm: Option<Arc<dyn Fabric>>,
+    task_pool: ThreadPool,
+) {
+    // a panicking routine must not kill this task thread silently: a
+    // dead rank never answers its reply channel and (worse) never
+    // reaches its collectives, wedging live peers. Catching the panic
+    // turns it into a per-rank Failed reply — and poisoning the lane
+    // (below) releases any peer already blocked in a collective this
+    // rank will never join, with `CommError::PeerFailed { rank }`
+    // naming this rank as the root cause.
+    let result = match comm.clone() {
+        None => Err(anyhow::anyhow!(
+            "rank {rank}: session {session_id} holds no group here"
+        )),
+        Some(comm) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || -> crate::Result<TaskReply> {
+                let mut engine = build_engine_with_pool(cfg, Some(task_pool))?;
+                // clamped at dispatch; the engine's queue cap tracks it
+                engine.set_threads(engine_threads.max(1));
+                // kernel-level cancellation check-ins for the duration
+                // of this task (the engine dies with the task, so there
+                // is nothing to uninstall)
+                engine.set_cancel(Some(scope.token().clone()));
+                let local_rank = comm.rank();
+                // the task's view of the group: every tag offset into
+                // its lane window, so a concurrent sibling's traffic
+                // can never collide with ours. Lane 0 (pre-v9 dispatch
+                // or detached use) keeps the raw fabric.
+                let lane_view;
+                let comm_view: &dyn Communicator = if scope.lane() > 0 {
+                    lane_view = LaneComm::new(Arc::clone(&comm), scope.lane());
+                    &lane_view
+                } else {
+                    comm.as_comm()
+                };
+                let cpu0 = thread_cpu_secs();
+                let sim0 = comm.sim_comm_secs();
+                let mut ctx = WorkerCtx {
+                    rank: local_rank,
+                    comm: comm_view,
+                    engine: engine.as_mut(),
+                    store: &shared.store,
+                    config: cfg,
+                    scope: &scope,
+                };
+                let out = lib.run(routine, &params, &mut ctx)?;
+                let cpu_busy = (thread_cpu_secs() - cpu0).max(0.0);
+                let comm_sim = comm.sim_comm_secs() - sim0;
+
+                // the reservation is a hard cap: exceeding it would
+                // silently collide with matrix ids allocated after this
+                // task's window — fail before inserting anything
+                anyhow::ensure!(
+                    out.matrices.len() as u64 <= out_span,
+                    "routine {routine} produced {} outputs, exceeding \
+                     the task's reservation of {out_span} ids \
+                     (scheduler.max_task_outputs)",
+                    out.matrices.len()
+                );
+                let mut metas = Vec::with_capacity(out.matrices.len());
+                for (i, m) in out.matrices.into_iter().enumerate() {
+                    let id = out_base + i as u64;
+                    metas.push(OutputMeta {
+                        id,
+                        name: m.name.clone(),
+                        rows: m.layout.rows as u64,
+                        cols: m.layout.cols as u64,
+                        layout: m.layout.clone(),
+                    });
+                    shared.store.insert(
+                        id,
+                        &m.name,
+                        m.layout,
+                        m.local,
+                        local_rank,
+                        session_id,
+                    )?;
+                }
+                let mut timings = out.timings;
+                timings.push(("cpu_busy".into(), cpu_busy));
+                timings.push(("comm_sim".into(), comm_sim));
+                Ok(TaskReply { outputs: metas, scalars: out.scalars, timings })
+            },
+        ))
+        .unwrap_or_else(|panic| {
+            let what = panic
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            Err(anyhow::anyhow!("routine {routine} panicked: {what}"))
+        }),
+    };
+    // failure propagation: a rank that failed on its own (not as
+    // collateral of someone else's failure) poisons the task's lane so
+    // peers blocked in — or about to enter — one of its collectives
+    // unwind promptly instead of waiting for a contribution that will
+    // never come; a sibling task's lanes keep flowing. MUST happen
+    // before the reply send: the executor retires the lane once every
+    // rank has replied, and a poison landing after that retirement is
+    // dropped. Collateral errors (CommError) never re-poison, so the
+    // recorded root cause stays the first failing rank. Lane-0 tasks
+    // (pre-v9 dispatch) fall back to the group-wide poison.
+    if let (Err(e), Some(comm)) = (&result, &comm) {
+        let collateral = e
+            .downcast_ref::<CommError>()
+            .is_some_and(CommError::is_collateral);
+        if !collateral {
+            let cause = PoisonCause::RankFailed(comm.rank());
+            if scope.lane() > 0 {
+                comm.poison_lane(scope.lane(), cause);
+            } else {
+                comm.poison(cause);
+            }
+        }
+    }
+    let failed = result.is_err();
+    let cancelled = scope.is_cancelled();
+    let _ = reply.send(result);
+    if failed && !cancelled {
+        log::warn!("rank {rank}: task {routine} failed");
+    } else if failed {
+        log::debug!("rank {rank}: task {routine} cancelled");
+    }
 }
 
 /// Data-plane ownership gate: a connection may only touch matrices of

@@ -8,7 +8,10 @@ pub mod stats;
 pub mod storage;
 pub mod table;
 
-pub use sched::{SchedMetrics, SchedSnapshot, SessionQueueDepth, TaskOutcome};
+pub use sched::{
+    SchedMetrics, SchedSnapshot, SessionGauge, SessionQueueDepth, TaskGauge,
+    TaskOutcome, PRIORITY_CLASSES, PRIORITY_NAMES,
+};
 pub use simclock::SimClock;
 pub use stats::Stats;
 pub use storage::{StorageMetrics, StorageSnapshot};

@@ -1,27 +1,49 @@
-//! Scheduler backpressure metrics (ROADMAP "admission priorities +
-//! backpressure metrics", the metrics half): live gauges for the
-//! admission queue and the per-session task queues, counters over task
-//! outcomes, and the Queued→Running wait-time distribution.
+//! Scheduler metrics (ROADMAP "serving-grade scheduler", the telemetry
+//! half): live gauges for the per-class admission queue and the
+//! per-session task queues, counters over session and task outcomes, and
+//! the Queued→Running wait-time distribution.
+//!
+//! Naming follows `metrics/storage.rs`: gauges are `noun_depth` /
+//! `noun_active`, counters are `noun_verbed`, and the snapshot struct is
+//! a plain-data point-in-time copy. [`SchedSnapshot`] is also the wire
+//! payload of the v9 metrics stream — [`SchedSnapshot::to_json`] renders
+//! the single-line JSON object a `MetricsSnapshot` frame carries, so the
+//! polling path (`ServerHandle::sched_metrics`) and the push path share
+//! one bookkeeping struct (see `docs/scheduler.md` for the schema).
 //!
 //! The driver holds one [`SchedMetrics`]; every update is a lock-free
 //! atomic except the wait-time [`Stats`] (one short mutex per task
-//! start). [`SchedMetrics::snapshot`] is the read side —
-//! `ServerHandle::sched_metrics()` exposes it to operators and tests.
+//! start).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::Stats;
 
+/// Number of admission priority classes (v9): 0 = batch, 1 = normal,
+/// 2 = interactive, 3 = urgent.
+pub const PRIORITY_CLASSES: usize = 4;
+
+/// Human labels for the classes, index-aligned with the depth gauges.
+pub const PRIORITY_NAMES: [&str; PRIORITY_CLASSES] =
+    ["batch", "normal", "interactive", "urgent"];
+
 /// Counters and gauges the coordinator's admission and task paths feed.
 #[derive(Debug, Default)]
 pub struct SchedMetrics {
-    /// Handshakes currently waiting in the admission queue.
-    admission_queue_depth: AtomicU64,
+    /// Handshakes currently waiting in the admission queue, by effective
+    /// priority class (clamped, pre-aging).
+    admission_depth: [AtomicU64; PRIORITY_CLASSES],
+    /// Sessions currently holding a worker group.
+    sessions_active: AtomicU64,
+    sessions_admitted: AtomicU64,
+    /// Handshakes bounced from the admission queue (timeout / teardown).
+    sessions_rejected: AtomicU64,
     /// Tasks currently queued (all sessions; per-session depth is bounded
     /// by `scheduler.task_queue_depth`).
     queued_tasks: AtomicU64,
-    /// Tasks currently running (≤ one per session group).
+    /// Tasks currently running (≤ `scheduler.tasks_per_group` per
+    /// session group).
     running_tasks: AtomicU64,
     tasks_submitted: AtomicU64,
     tasks_done: AtomicU64,
@@ -33,10 +55,45 @@ pub struct SchedMetrics {
     queued_wait: Mutex<Stats>,
 }
 
+/// One running task's live gauge inside a [`SessionGauge`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TaskGauge {
+    pub task_id: u64,
+    /// The task's tag lane in the group communicator.
+    pub lane: u64,
+    pub routine: String,
+    /// Progress aggregated across the task's ranks.
+    pub iters: u64,
+    /// Latest residual, or a negative sentinel if none reported yet.
+    pub residual: f64,
+}
+
+/// One live session's task-plane gauge, filled by the driver (the task
+/// table is the single source — no second bookkeeping path).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SessionGauge {
+    pub session_id: u64,
+    /// The client name it handshook with (fair-share tenant key).
+    pub client: String,
+    /// Admitted priority class (post-clamp).
+    pub priority: u32,
+    /// Tasks waiting in this session's FIFO.
+    pub queued: usize,
+    /// Tasks currently executing on the session's group, one gauge each.
+    pub running: Vec<TaskGauge>,
+}
+
 /// Point-in-time copy of every metric (plain data, safe to hold).
+/// `sessions` is filled by the driver-side snapshot
+/// (`ServerHandle::sched_metrics` / the metrics stream) and empty when
+/// taken from a bare [`SchedMetrics`].
 #[derive(Debug, Clone, Default)]
 pub struct SchedSnapshot {
-    pub admission_queue_depth: u64,
+    /// Queued handshakes by priority class, index = class.
+    pub admission_depth: [u64; PRIORITY_CLASSES],
+    pub sessions_active: u64,
+    pub sessions_admitted: u64,
+    pub sessions_rejected: u64,
     pub queued_tasks: u64,
     pub running_tasks: u64,
     pub tasks_submitted: u64,
@@ -47,6 +104,7 @@ pub struct SchedSnapshot {
     pub wait_count: u64,
     pub wait_mean_s: f64,
     pub wait_max_s: f64,
+    pub sessions: Vec<SessionGauge>,
 }
 
 /// How a task left the table (feeds the outcome counters).
@@ -67,8 +125,9 @@ pub struct SessionQueueDepth {
     pub session_id: u64,
     /// Tasks waiting in this session's FIFO.
     pub queued: usize,
-    /// Whether a task is currently executing on the session's group.
-    pub running: bool,
+    /// Tasks currently executing on the session's group (v9: up to
+    /// `scheduler.tasks_per_group`).
+    pub running: usize,
 }
 
 impl SchedMetrics {
@@ -76,12 +135,36 @@ impl SchedMetrics {
         Self::default()
     }
 
-    pub fn admission_enqueued(&self) {
-        self.admission_queue_depth.fetch_add(1, Ordering::Relaxed);
+    /// Clamp a class index into the gauge array (callers already clamp
+    /// to `scheduler.max_priority`; this is belt-and-braces).
+    fn class(priority: u32) -> usize {
+        (priority as usize).min(PRIORITY_CLASSES - 1)
     }
 
-    pub fn admission_dequeued(&self) {
-        self.admission_queue_depth.fetch_sub(1, Ordering::Relaxed);
+    pub fn admission_enqueued(&self, priority: u32) {
+        self.admission_depth[Self::class(priority)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn admission_dequeued(&self, priority: u32) {
+        self.admission_depth[Self::class(priority)].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Current queued handshakes in one class (rejection diagnostics).
+    pub fn admission_depth(&self, priority: u32) -> u64 {
+        self.admission_depth[Self::class(priority)].load(Ordering::Relaxed)
+    }
+
+    pub fn session_admitted(&self) {
+        self.sessions_admitted.fetch_add(1, Ordering::Relaxed);
+        self.sessions_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn session_released(&self) {
+        self.sessions_active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn session_rejected(&self) {
+        self.sessions_rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn task_submitted(&self) {
@@ -125,8 +208,15 @@ impl SchedMetrics {
 
     pub fn snapshot(&self) -> SchedSnapshot {
         let wait = self.queued_wait.lock().unwrap().clone();
+        let mut admission_depth = [0u64; PRIORITY_CLASSES];
+        for (slot, gauge) in admission_depth.iter_mut().zip(&self.admission_depth) {
+            *slot = gauge.load(Ordering::Relaxed);
+        }
         SchedSnapshot {
-            admission_queue_depth: self.admission_queue_depth.load(Ordering::Relaxed),
+            admission_depth,
+            sessions_active: self.sessions_active.load(Ordering::Relaxed),
+            sessions_admitted: self.sessions_admitted.load(Ordering::Relaxed),
+            sessions_rejected: self.sessions_rejected.load(Ordering::Relaxed),
             queued_tasks: self.queued_tasks.load(Ordering::Relaxed),
             running_tasks: self.running_tasks.load(Ordering::Relaxed),
             tasks_submitted: self.tasks_submitted.load(Ordering::Relaxed),
@@ -137,7 +227,99 @@ impl SchedMetrics {
             wait_count: wait.count(),
             wait_mean_s: if wait.count() > 0 { wait.mean() } else { 0.0 },
             wait_max_s: if wait.count() > 0 { wait.max() } else { 0.0 },
+            sessions: Vec::new(),
         }
+    }
+}
+
+/// Escape a string for a JSON string literal (quotes, backslashes,
+/// control characters).
+fn json_escape(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// A finite JSON number (JSON has no inf/nan — those become `null`).
+fn json_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+impl SchedSnapshot {
+    /// Render the snapshot as one line of JSON — the `MetricsSnapshot`
+    /// wire payload and the `scripts/`-consumable stream format (one
+    /// object per line, keys stable; see `docs/scheduler.md`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(512);
+        s.push_str("{\"admission_depth\":{");
+        for (i, name) in PRIORITY_NAMES.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{name}\":{}", self.admission_depth[i]));
+        }
+        s.push_str(&format!(
+            "}},\"sessions\":{{\"active\":{},\"admitted\":{},\"rejected\":{}}}",
+            self.sessions_active, self.sessions_admitted, self.sessions_rejected
+        ));
+        s.push_str(&format!(
+            ",\"tasks\":{{\"queued\":{},\"running\":{},\"submitted\":{},\
+             \"done\":{},\"failed\":{},\"cancelled\":{},\"rejected\":{}}}",
+            self.queued_tasks,
+            self.running_tasks,
+            self.tasks_submitted,
+            self.tasks_done,
+            self.tasks_failed,
+            self.tasks_cancelled,
+            self.tasks_rejected
+        ));
+        s.push_str(&format!(",\"queue_wait_s\":{{\"count\":{},", self.wait_count));
+        s.push_str("\"mean\":");
+        json_f64(&mut s, self.wait_mean_s);
+        s.push_str(",\"max\":");
+        json_f64(&mut s, self.wait_max_s);
+        s.push_str("},\"session_gauges\":[");
+        for (i, sess) in self.sessions.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{{\"id\":{},\"client\":\"", sess.session_id));
+            json_escape(&mut s, &sess.client);
+            s.push_str(&format!(
+                "\",\"priority\":{},\"queued\":{},\"running\":[",
+                sess.priority, sess.queued
+            ));
+            for (j, t) in sess.running.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&format!(
+                    "{{\"task\":{},\"lane\":{},\"routine\":\"",
+                    t.task_id, t.lane
+                ));
+                json_escape(&mut s, &t.routine);
+                s.push_str(&format!("\",\"iters\":{},\"residual\":", t.iters));
+                json_f64(&mut s, t.residual);
+                s.push('}');
+            }
+            s.push_str("]}");
+        }
+        s.push_str("]}");
+        s
     }
 }
 
@@ -148,9 +330,11 @@ mod tests {
     #[test]
     fn lifecycle_counts_balance() {
         let m = SchedMetrics::new();
-        m.admission_enqueued();
-        assert_eq!(m.snapshot().admission_queue_depth, 1);
-        m.admission_dequeued();
+        m.admission_enqueued(2);
+        assert_eq!(m.snapshot().admission_depth[2], 1);
+        assert_eq!(m.admission_depth(2), 1);
+        m.admission_dequeued(2);
+        m.session_admitted();
 
         // one task runs to completion, one is cancelled while queued,
         // one submission is rejected
@@ -160,9 +344,12 @@ mod tests {
         m.task_started(0.25);
         m.task_finished(TaskOutcome::Done);
         m.task_dequeued(TaskOutcome::Cancelled);
+        m.session_released();
 
         let s = m.snapshot();
-        assert_eq!(s.admission_queue_depth, 0);
+        assert_eq!(s.admission_depth, [0; PRIORITY_CLASSES]);
+        assert_eq!(s.sessions_active, 0);
+        assert_eq!(s.sessions_admitted, 1);
         assert_eq!(s.queued_tasks, 0);
         assert_eq!(s.running_tasks, 0);
         assert_eq!(s.tasks_submitted, 2);
@@ -180,5 +367,45 @@ mod tests {
         assert_eq!(s.wait_count, 0);
         assert_eq!(s.wait_mean_s, 0.0);
         assert_eq!(s.wait_max_s, 0.0);
+        assert!(s.sessions.is_empty());
+    }
+
+    #[test]
+    fn snapshot_renders_one_json_line() {
+        let m = SchedMetrics::new();
+        m.admission_enqueued(0);
+        m.session_admitted();
+        m.task_submitted();
+        m.task_started(0.5);
+        let mut s = m.snapshot();
+        s.sessions.push(SessionGauge {
+            session_id: 7,
+            client: "spark \"prod\"".into(),
+            priority: 2,
+            queued: 1,
+            running: vec![TaskGauge {
+                task_id: 12,
+                lane: 3,
+                routine: "cg_solve".into(),
+                iters: 40,
+                residual: 1e-6,
+            }],
+        });
+        let json = s.to_json();
+        assert!(!json.contains('\n'), "stream format is one object per line");
+        assert!(json.contains("\"admission_depth\":{\"batch\":1"), "{json}");
+        assert!(json.contains("\"sessions\":{\"active\":1"), "{json}");
+        assert!(json.contains("\"running\":1"), "{json}");
+        assert!(json.contains("\"client\":\"spark \\\"prod\\\"\""), "{json}");
+        assert!(json.contains("\"routine\":\"cg_solve\""), "{json}");
+        assert!(json.contains("\"lane\":3"), "{json}");
+        // balanced braces/brackets (cheap well-formedness check without
+        // a JSON parser in the dep tree)
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+
+        // non-finite residual must not produce invalid JSON
+        s.sessions[0].running[0].residual = f64::NAN;
+        assert!(s.to_json().contains("\"residual\":null"));
     }
 }

@@ -376,6 +376,7 @@ mod tests {
                 request_workers: 0,
                 rows_per_frame: 0,
                 buf_bytes: 0,
+                priority: crate::protocol::DEFAULT_PRIORITY,
             })
             .unwrap();
         assert!(matches!(reply, ControlMsg::HandshakeAck { session_id: 1, .. }));

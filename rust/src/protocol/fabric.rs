@@ -38,9 +38,12 @@ pub enum FabricFrame<'a> {
     Hello { session_id: u64, from_rank: u32 },
     /// One point-to-point message of a collective.
     Data { epoch: u64, tag: u64, payload: &'a [u8] },
-    /// The sender's group got poisoned; propagate so peers blocked in a
-    /// recv wake with the root cause instead of a bare connection error.
-    Poison { epoch: u64, cause: PoisonCause },
+    /// The sender poisoned a tag lane of its group — or the whole group
+    /// when `lane == collectives::LANE_ALL` — so peers blocked in a recv
+    /// wake with the root cause instead of a bare connection error.
+    /// (Protocol v9: lane-scoped poison lets a hard cancel kill one
+    /// task's collectives without touching a sibling task's lane.)
+    Poison { epoch: u64, lane: u64, cause: PoisonCause },
     /// Orderly teardown: the sender is closing this link on purpose, so
     /// the EOF that follows must not be treated as a rank failure.
     Close,
@@ -82,9 +85,10 @@ impl<'a> FabricFrame<'a> {
                 w.u64(*tag);
                 w.raw_bytes(payload);
             }
-            FabricFrame::Poison { epoch, cause } => {
+            FabricFrame::Poison { epoch, lane, cause } => {
                 w.u8(3);
                 w.u64(*epoch);
+                w.u64(*lane);
                 encode_poison(&mut w, *cause);
             }
             FabricFrame::Close => w.u8(4),
@@ -104,7 +108,11 @@ impl<'a> FabricFrame<'a> {
                 let payload = r.raw_bytes(r.remaining())?;
                 FabricFrame::Data { epoch, tag, payload }
             }
-            3 => FabricFrame::Poison { epoch: r.u64()?, cause: decode_poison(&mut r)? },
+            3 => FabricFrame::Poison {
+                epoch: r.u64()?,
+                lane: r.u64()?,
+                cause: decode_poison(&mut r)?,
+            },
             4 => FabricFrame::Close,
             tag => return Err(ProtocolError::BadTag { tag, what: "FabricFrame" }),
         };
@@ -241,6 +249,12 @@ pub enum WorkMsg {
         out_span: u64,
         /// Engine thread-pool lease for this rank during the task.
         engine_threads: u32,
+        /// The task's tag lane in the group communicator (protocol v9):
+        /// the worker wraps the session fabric in a `LaneComm` at
+        /// `lane << LANE_SHIFT` so concurrent tasks' collectives never
+        /// collide. Monotonic per session, never reused; 0 is reserved
+        /// for untasked traffic.
+        lane: u64,
     },
     /// Cooperative cancellation of a running task (the remote half of the
     /// coordinator's cancel token). Fire-and-forget: no reply — the task
@@ -254,9 +268,17 @@ pub enum WorkMsg {
     /// stragglers, clears poison). Acked.
     MeshReset { req_id: u64, session_id: u64 },
     /// Poison the session's communicator (hard cancel escalation or a
-    /// peer process dying). Fire-and-forget — the coordinator may be
-    /// telling a wedged worker whose ack would never come.
-    MeshPoison { session_id: u64, kind: u8, rank: u64 },
+    /// peer process dying) — one tag lane when `lane` names a task's
+    /// lane, the whole group when `lane == collectives::LANE_ALL`.
+    /// Fire-and-forget — the coordinator may be telling a wedged worker
+    /// whose ack would never come.
+    MeshPoison { session_id: u64, kind: u8, rank: u64, lane: u64 },
+    /// Retire a finished task's tag lane (protocol v9): drop queued and
+    /// in-flight frames for the lane and clear its lane poison.
+    /// Fire-and-forget — per-work-socket FIFO orders it before the next
+    /// `RunTask`, so the worker never sees a new task before the old
+    /// lane's bookkeeping is gone.
+    MeshRetire { session_id: u64, lane: u64 },
     /// Tear down the session on this worker: drop its communicator and
     /// free its namespaced blocks. Acked with the freed block count.
     SessionClose { req_id: u64, session_id: u64 },
@@ -345,6 +367,7 @@ impl WorkMsg {
                 out_base,
                 out_span,
                 engine_threads,
+                lane,
             } => {
                 w.u8(129);
                 w.u64(*req_id);
@@ -356,6 +379,7 @@ impl WorkMsg {
                 w.u64(*out_base);
                 w.u64(*out_span);
                 w.u32(*engine_threads);
+                w.u64(*lane);
             }
             WorkMsg::CancelTask { session_id, task_id } => {
                 w.u8(130);
@@ -377,11 +401,17 @@ impl WorkMsg {
                 w.u64(*req_id);
                 w.u64(*session_id);
             }
-            WorkMsg::MeshPoison { session_id, kind, rank } => {
+            WorkMsg::MeshPoison { session_id, kind, rank, lane } => {
                 w.u8(133);
                 w.u64(*session_id);
                 w.u8(*kind);
                 w.u64(*rank);
+                w.u64(*lane);
+            }
+            WorkMsg::MeshRetire { session_id, lane } => {
+                w.u8(140);
+                w.u64(*session_id);
+                w.u64(*lane);
             }
             WorkMsg::SessionClose { req_id, session_id } => {
                 w.u8(134);
@@ -487,6 +517,7 @@ impl WorkMsg {
                 out_base: r.u64()?,
                 out_span: r.u64()?,
                 engine_threads: r.u32()?,
+                lane: r.u64()?,
             },
             130 => WorkMsg::CancelTask { session_id: r.u64()?, task_id: r.u64()? },
             131 => {
@@ -502,7 +533,9 @@ impl WorkMsg {
                 session_id: r.u64()?,
                 kind: r.u8()?,
                 rank: r.u64()?,
+                lane: r.u64()?,
             },
+            140 => WorkMsg::MeshRetire { session_id: r.u64()?, lane: r.u64()? },
             134 => WorkMsg::SessionClose { req_id: r.u64()?, session_id: r.u64()? },
             135 => WorkMsg::StoreAlloc {
                 req_id: r.u64()?,
@@ -546,8 +579,12 @@ mod tests {
             FabricFrame::Hello { session_id: 9, from_rank: 2 },
             FabricFrame::Data { epoch: 3, tag: 0x4347_0000, payload: &payload },
             FabricFrame::Data { epoch: 0, tag: 7, payload: &[] },
-            FabricFrame::Poison { epoch: 3, cause: PoisonCause::RankFailed(2) },
-            FabricFrame::Poison { epoch: 0, cause: PoisonCause::HardCancel },
+            FabricFrame::Poison {
+                epoch: 3,
+                lane: crate::collectives::LANE_ALL,
+                cause: PoisonCause::RankFailed(2),
+            },
+            FabricFrame::Poison { epoch: 0, lane: 7, cause: PoisonCause::HardCancel },
             FabricFrame::Close,
         ];
         for f in frames {
@@ -616,6 +653,7 @@ mod tests {
                 out_base: 1000,
                 out_span: 8,
                 engine_threads: 2,
+                lane: 3,
             },
             WorkMsg::CancelTask { session_id: 3, task_id: 12 },
             WorkMsg::MeshForm {
@@ -625,7 +663,13 @@ mod tests {
                 peers: vec!["127.0.0.1:4101".into(), "127.0.0.1:4102".into()],
             },
             WorkMsg::MeshReset { req_id: 11, session_id: 3 },
-            WorkMsg::MeshPoison { session_id: 3, kind: 0, rank: 2 },
+            WorkMsg::MeshPoison {
+                session_id: 3,
+                kind: 0,
+                rank: 2,
+                lane: crate::collectives::LANE_ALL,
+            },
+            WorkMsg::MeshRetire { session_id: 3, lane: 4 },
             WorkMsg::SessionClose { req_id: 12, session_id: 3 },
             WorkMsg::StoreAlloc {
                 req_id: 13,
@@ -666,8 +710,12 @@ mod tests {
         // trailing bytes after a Close
         assert!(FabricFrame::decode(&[4, 0]).is_err());
         // truncated Poison
-        let buf = FabricFrame::Poison { epoch: 1, cause: PoisonCause::RankFailed(0) }
-            .encode();
+        let buf = FabricFrame::Poison {
+            epoch: 1,
+            lane: crate::collectives::LANE_ALL,
+            cause: PoisonCause::RankFailed(0),
+        }
+        .encode();
         assert!(FabricFrame::decode(&buf[..buf.len() - 1]).is_err());
     }
 }

@@ -3,6 +3,12 @@
 use super::value::Params;
 use super::wire::{ProtocolError, Reader, Writer};
 
+/// The default admission priority class (v9): 1 = "normal". Classes run
+/// 0 (batch) ..= 3 (urgent); higher classes are admitted first. A
+/// handshake at this class elides the field so default clients keep the
+/// v8 frame shape.
+pub const DEFAULT_PRIORITY: u32 = 1;
+
 /// Metadata for a matrix living in the server's handle registry — the
 /// server-side half of the paper's `AlMatrix` proxy.
 #[derive(Debug, Clone, PartialEq)]
@@ -187,6 +193,12 @@ pub enum ControlMsg {
         /// Requested socket buffer size in bytes (v3 negotiation);
         /// 0 = server default, clamped server-side.
         buf_bytes: u64,
+        /// Requested admission priority class (v9): 0 = batch,
+        /// 1 = normal, 2 = interactive, 3 = urgent. Clamped server-side
+        /// to `scheduler.max_priority` before admission. Elided at
+        /// [`DEFAULT_PRIORITY`] so default clients keep the v8 wire
+        /// shape.
+        priority: u32,
     },
     RegisterLibrary { name: String, path: String },
     /// Allocate a handle; rows will arrive on the data sockets.
@@ -226,6 +238,14 @@ pub enum ControlMsg {
     /// `LoadDone` (or `Error` if the file fails validation, in which
     /// case no block was registered anywhere).
     LoadMatrix { name: String, path: String },
+    /// v9: turn this control connection into a push-based scheduler
+    /// metrics stream. Sent as the FIRST message on a fresh connection
+    /// (no handshake, no session, no workers held) — the server then
+    /// pushes a `MetricsSnapshot` every `interval_ms` milliseconds
+    /// (0 = server default `scheduler.metrics_interval_ms`, clamped
+    /// server-side) until either side closes. Keeps session connections
+    /// strictly request/reply. See `docs/scheduler.md`.
+    SubscribeMetrics { interval_ms: u64 },
 
     // server -> client
     HandshakeAck {
@@ -262,6 +282,13 @@ pub enum ControlMsg {
     MatrixList { infos: Vec<MatrixInfo> },
     Error { message: String },
     Bye,
+    /// v9: one frame of the scheduler metrics stream (reply stream to
+    /// `SubscribeMetrics`). `json` is a single-line JSON object — the
+    /// serialized `SchedSnapshot` (see `docs/scheduler.md` for the
+    /// schema) — so consumers can pipe the stream as JSON lines without
+    /// a protocol decoder of their own. `seq` increments per snapshot so
+    /// a consumer can detect drops.
+    MetricsSnapshot { seq: u64, json: String },
 }
 
 impl ControlMsg {
@@ -274,6 +301,7 @@ impl ControlMsg {
                 request_workers,
                 rows_per_frame,
                 buf_bytes,
+                priority,
             } => {
                 w.u8(0);
                 w.str(client_name);
@@ -285,10 +313,17 @@ impl ControlMsg {
                 // with its version-mismatch diagnostic instead of
                 // failing on trailing bytes and silently dropping the
                 // connection. Explicit requests require a v3 server
-                // anyway, so only those frames carry the fields.
-                if *rows_per_frame != 0 || *buf_bytes != 0 {
+                // anyway, so only those frames carry the fields. The v9
+                // priority class extends the same chain: a non-default
+                // class forces the transfer fields onto the wire
+                // (explicit zeros still mean "server decides").
+                let explicit_priority = *priority != DEFAULT_PRIORITY;
+                if *rows_per_frame != 0 || *buf_bytes != 0 || explicit_priority {
                     w.u32(*rows_per_frame);
                     w.u64(*buf_bytes);
+                    if explicit_priority {
+                        w.u32(*priority);
+                    }
                 }
             }
             ControlMsg::RegisterLibrary { name, path } => {
@@ -348,6 +383,10 @@ impl ControlMsg {
                 w.u8(12);
                 w.str(name);
                 w.str(path);
+            }
+            ControlMsg::SubscribeMetrics { interval_ms } => {
+                w.u8(13);
+                w.u64(*interval_ms);
             }
             ControlMsg::HandshakeAck {
                 session_id,
@@ -419,6 +458,11 @@ impl ControlMsg {
                 w.str(message);
             }
             ControlMsg::Bye => w.u8(137),
+            ControlMsg::MetricsSnapshot { seq, json } => {
+                w.u8(141);
+                w.u64(*seq);
+                w.str(json);
+            }
         }
         w.into_bytes()
     }
@@ -444,12 +488,15 @@ impl ControlMsg {
                     if r.remaining() > 0 { r.u32()? } else { 0 };
                 let rows_per_frame = if r.remaining() > 0 { r.u32()? } else { 0 };
                 let buf_bytes = if r.remaining() > 0 { r.u64()? } else { 0 };
+                let priority =
+                    if r.remaining() > 0 { r.u32()? } else { DEFAULT_PRIORITY };
                 ControlMsg::Handshake {
                     client_name,
                     version,
                     request_workers,
                     rows_per_frame,
                     buf_bytes,
+                    priority,
                 }
             }
             1 => ControlMsg::RegisterLibrary { name: r.str()?, path: r.str()? },
@@ -477,6 +524,7 @@ impl ControlMsg {
             }
             11 => ControlMsg::WaitTask { task_id: r.u64()?, timeout_ms: r.u64()? },
             12 => ControlMsg::LoadMatrix { name: r.str()?, path: r.str()? },
+            13 => ControlMsg::SubscribeMetrics { interval_ms: r.u64()? },
             128 => {
                 let session_id = r.u64()?;
                 let version = r.u32()?;
@@ -528,6 +576,7 @@ impl ControlMsg {
             }
             136 => ControlMsg::Error { message: r.str()? },
             137 => ControlMsg::Bye,
+            141 => ControlMsg::MetricsSnapshot { seq: r.u64()?, json: r.str()? },
             tag => return Err(ProtocolError::BadTag { tag, what: "ControlMsg" }),
         };
         r.finish()?;

@@ -20,7 +20,7 @@ pub mod wire;
 pub use fabric::{FabricFrame, WireOutput, WorkMsg, FABRIC_DATA_HEADER_LEN};
 pub use message::{
     max_rows_per_frame_for, ControlMsg, DataMsg, DataMsgRef, DataMsgView, MatrixInfo,
-    TaskProgress, TaskState, ROWS_HEADER_LEN,
+    TaskProgress, TaskState, DEFAULT_PRIORITY, ROWS_HEADER_LEN,
 };
 pub use value::{Params, Value};
 pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
@@ -55,5 +55,15 @@ pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
 /// carrying the collectives' point-to-point messages peer-to-peer. The
 /// client-facing control/data channels are unchanged in shape; versioned
 /// because a v8 coordinator and its worker processes must agree on the
-/// new channels. See `docs/fabric.md`.
-pub const PROTOCOL_VERSION: u32 = 8;
+/// new channels. See `docs/fabric.md`. v9: the serving-grade scheduler —
+/// the handshake gains `priority` (elided at the default class, so
+/// default clients keep the v8 wire shape; clamped server-side by
+/// `scheduler.max_priority`), sessions run up to
+/// `scheduler.tasks_per_group` concurrent tasks over per-task tag lanes
+/// ([`WorkMsg::RunTask`] carries the lane; [`FabricFrame::Poison`] and
+/// `MeshPoison` become lane-scoped; `MeshRetire` retires a finished
+/// task's lane), and `SubscribeMetrics` streams push-based
+/// `MetricsSnapshot` JSON frames (admission depth per class, task
+/// gauges, queue-wait stats, per-task progress). See
+/// `docs/scheduler.md`.
+pub const PROTOCOL_VERSION: u32 = 9;

@@ -94,6 +94,12 @@ impl RankProgress {
 pub struct TaskScope {
     cancel: Arc<CancelToken>,
     progress: Arc<RankProgress>,
+    /// The task's tag lane in the group communicator (protocol v9):
+    /// the dispatcher assigns each task a monotonic per-session lane and
+    /// wraps the session fabric in a `LaneComm` at `lane << LANE_SHIFT`,
+    /// so concurrent tasks in one group never collide on tags. 0 for
+    /// detached / pre-v9 scopes (the untasked tag space).
+    lane: u64,
     /// Detached scopes skip the collective cancellation checks entirely,
     /// so direct library callers pay zero extra collectives per
     /// iteration (benchmark fidelity: the paper-table CG/SVD numbers
@@ -103,7 +109,18 @@ pub struct TaskScope {
 
 impl TaskScope {
     pub fn new(cancel: Arc<CancelToken>, progress: Arc<RankProgress>) -> Self {
-        TaskScope { cancel, progress, detached: false }
+        TaskScope { cancel, progress, lane: 0, detached: false }
+    }
+
+    /// The same scope pinned to a task lane (see [`TaskScope::lane`]).
+    pub fn with_lane(mut self, lane: u64) -> Self {
+        self.lane = lane;
+        self
+    }
+
+    /// The task's tag lane; 0 = untasked (detached or lane-less fabric).
+    pub fn lane(&self) -> u64 {
+        self.lane
     }
 
     /// A scope attached to nothing: progress goes nowhere and
@@ -116,6 +133,7 @@ impl TaskScope {
         TaskScope {
             cancel: Arc::new(CancelToken::new()),
             progress: Arc::new(RankProgress::new()),
+            lane: 0,
             detached: true,
         }
     }

@@ -71,6 +71,7 @@ fn control_messages_roundtrip() {
                 request_workers: g.u64() as u32,
                 rows_per_frame: g.u64() as u32,
                 buf_bytes: g.u64() % (1 << 30),
+                priority: g.u64() as u32 % 4,
             },
             1 => ControlMsg::RegisterLibrary { name: g.ident(8), path: g.ident(30) },
             2 => ControlMsg::CreateMatrix {

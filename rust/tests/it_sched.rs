@@ -1,0 +1,387 @@
+//! Integration: the protocol-v9 serving-grade scheduler
+//! (`docs/scheduler.md`).
+//!
+//! Four scheduler properties, each pinned end to end over the client API:
+//!
+//! * **admission priority**: a queued interactive handshake is admitted
+//!   before an earlier-queued batch one, and an admission timeout names
+//!   the class, grant position, and queue depth;
+//! * **fair share**: with equal classes, the tenant holding fewer active
+//!   sessions is granted capacity first even if it queued later;
+//! * **concurrent tasks per group**: with `scheduler.tasks_per_group`
+//!   raised, a solve and an SVD run on the SAME worker group at once —
+//!   each on its own communicator tag lane — and produce bit-identical
+//!   results to serial execution, under both `fabric.mode = local` and
+//!   tcp loopback worker processes;
+//! * **lane-scoped cancellation**: hard-cancelling one of two concurrent
+//!   tasks poisons only its own tag lane — the sibling task survives to
+//!   `Done` (pre-v9 the group-wide poison would have failed it too);
+//! * **metrics stream**: a `SubscribeMetrics` connection pushes JSON-line
+//!   snapshots carrying a gauge for every running task.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::{Config, EngineKind, FabricMode};
+use alchemist::coordinator::AlchemistServer;
+use alchemist::protocol::{Params, TaskState, Value};
+use alchemist::sparklite::IndexedRowMatrix;
+
+fn native_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+/// Local-mode config switched onto the process fabric (the worker
+/// executable must be named explicitly: inside an integration test
+/// `current_exe()` is the test runner, not `alchemist`).
+fn tcp_cfg() -> Config {
+    let mut cfg = native_cfg();
+    cfg.fabric.mode = FabricMode::Tcp;
+    cfg.fabric.worker_exe = env!("CARGO_BIN_EXE_alchemist").into();
+    cfg
+}
+
+/// Poll until `f` returns true or the timeout fires (sleep-based tests
+/// stay robust on slow CI runners).
+fn eventually(timeout: Duration, what: &str, mut f: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Connect on a thread, report the label the moment admission succeeds,
+/// then end the session (releasing its worker for the next grant).
+fn admit_async(
+    addr: String,
+    cfg: Config,
+    priority: u32,
+    name: &'static str,
+    tx: mpsc::Sender<&'static str>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let ac =
+            AlchemistContext::connect_named(&addr, &cfg, 1, 1, priority, name)
+                .unwrap();
+        tx.send(name).unwrap();
+        ac.stop();
+    })
+}
+
+#[test]
+fn interactive_class_preempts_earlier_batch_handshake() {
+    let mut cfg = native_cfg();
+    // aging off: this test pins pure class ordering
+    cfg.apply("scheduler.age_secs", "0").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 1).unwrap();
+    let addr = server.control_addr.clone();
+
+    // a normal-class session holds the only worker
+    let holder =
+        AlchemistContext::connect_named(&addr, &cfg, 1, 1, 1, "holder").unwrap();
+
+    // batch queues FIRST, interactive second
+    let (tx, rx) = mpsc::channel();
+    let t_batch = admit_async(addr.clone(), cfg.clone(), 0, "batch", tx.clone());
+    eventually(Duration::from_secs(10), "batch handshake to queue", || {
+        server.sched_metrics().admission_depth[0] == 1
+    });
+    let t_inter = admit_async(addr.clone(), cfg.clone(), 2, "interactive", tx);
+    eventually(Duration::from_secs(10), "interactive handshake to queue", || {
+        server.sched_metrics().admission_depth[2] == 1
+    });
+
+    // the worker frees up: the LATER, higher-class handshake wins it
+    holder.stop();
+    assert_eq!(rx.recv_timeout(Duration::from_secs(20)).unwrap(), "interactive");
+    // ...and batch is not starved once capacity returns
+    assert_eq!(rx.recv_timeout(Duration::from_secs(20)).unwrap(), "batch");
+    t_batch.join().unwrap();
+    t_inter.join().unwrap();
+
+    let m = server.sched_metrics();
+    assert_eq!(m.admission_depth, [0; 4]);
+    assert_eq!(m.sessions_admitted, 3);
+    server.shutdown();
+}
+
+#[test]
+fn admission_timeout_reports_class_and_grant_position() {
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.age_secs", "0").unwrap();
+    cfg.apply("scheduler.queue_timeout_s", "0.3").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 1).unwrap();
+    let addr = server.control_addr.clone();
+
+    let holder =
+        AlchemistContext::connect_named(&addr, &cfg, 1, 1, 1, "holder").unwrap();
+    let err = AlchemistContext::connect_named(&addr, &cfg, 1, 1, 0, "late")
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("admission timed out"), "{msg}");
+    assert!(msg.contains("class batch"), "{msg}");
+    assert!(msg.contains("grant position 1 of 1 queued"), "{msg}");
+
+    assert_eq!(server.sched_metrics().sessions_rejected, 1);
+    holder.stop();
+    server.shutdown();
+}
+
+#[test]
+fn fair_share_grants_idle_tenant_before_loaded_one() {
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.age_secs", "0").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    // tenant alpha holds BOTH workers across two sessions
+    let a1 =
+        AlchemistContext::connect_named(&addr, &cfg, 1, 1, 1, "alpha").unwrap();
+    let a2 =
+        AlchemistContext::connect_named(&addr, &cfg, 1, 1, 1, "alpha").unwrap();
+
+    // alpha queues a third session FIRST, beta queues second — same class
+    let (tx, rx) = mpsc::channel();
+    let t_a3 = admit_async(addr.clone(), cfg.clone(), 1, "alpha3", tx.clone());
+    eventually(Duration::from_secs(10), "alpha3 to queue", || {
+        server.sched_metrics().admission_depth[1] == 1
+    });
+    let t_b = admit_async(addr.clone(), cfg.clone(), 1, "beta", tx);
+    eventually(Duration::from_secs(10), "beta to queue", || {
+        server.sched_metrics().admission_depth[1] == 2
+    });
+
+    // one worker frees: beta (0 active sessions) outranks alpha (1 still
+    // active) despite queueing later — weighted fair share, not FIFO
+    a2.stop();
+    assert_eq!(rx.recv_timeout(Duration::from_secs(20)).unwrap(), "beta");
+    a1.stop();
+    assert_eq!(rx.recv_timeout(Duration::from_secs(20)).unwrap(), "alpha3");
+    t_a3.join().unwrap();
+    t_b.join().unwrap();
+    server.shutdown();
+}
+
+/// Run the paper loop once: CG solve, truncated SVD, and a pull of A.
+/// `concurrent = true` submits the solve and the SVD together (so they
+/// run on two tag lanes of one group) and pulls A while both are in
+/// flight; `false` runs everything serially. The returned bits must not
+/// depend on which way it ran.
+fn solve_svd_pull(
+    cfg: &Config,
+    concurrent: bool,
+) -> (Vec<f64>, i64, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, cfg, 2).unwrap();
+    ac.register_library("skylark", "builtin:skylark").unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    let gen = |ac: &mut AlchemistContext, rows: i64, cols: i64, seed: i64| {
+        ac.run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", rows).with_i64("cols", cols).with_i64("seed", seed),
+        )
+        .unwrap()
+        .outputs[0]
+            .clone()
+    };
+    let x = gen(&mut ac, 192, 48, 1);
+    let y = gen(&mut ac, 192, 3, 2);
+    let a = gen(&mut ac, 128, 12, 3);
+
+    let cg_params = Params::new()
+        .with_matrix("X", x.id)
+        .with_matrix("Y", y.id)
+        .with_f64("lambda", 1e-3)
+        .with_f64("tol", 1e-10)
+        .with_i64("max_iters", 200);
+    let svd_params =
+        Params::new().with_matrix("A", a.id).with_i64("rank", 4).with_i64("seed", 7);
+
+    let (cg_res, svd_res, a_back) = if concurrent {
+        let cg_id = ac.submit("skylark", "cg_solve", cg_params).unwrap().task_id;
+        let svd_id =
+            ac.submit("elemental", "truncated_svd", svd_params).unwrap().task_id;
+        // the pull overlaps whatever is still solving: it rides the data
+        // sockets, not a task lane, so it needs no third lane
+        let (a_back, _) = ac.to_indexed_row_matrix(&a, 1).unwrap();
+        let cg_res = ac.task(cg_id).wait().unwrap();
+        let svd_res = ac.task(svd_id).wait().unwrap();
+        (cg_res, svd_res, a_back)
+    } else {
+        let cg_res = ac.run_task("skylark", "cg_solve", cg_params).unwrap();
+        let svd_res =
+            ac.run_task("elemental", "truncated_svd", svd_params).unwrap();
+        let (a_back, _) = ac.to_indexed_row_matrix(&a, 1).unwrap();
+        (cg_res, svd_res, a_back)
+    };
+
+    let iters = cg_res.scalars.i64("iters").unwrap();
+    let (w, _) = ac.to_indexed_row_matrix(cg_res.output("W").unwrap(), 1).unwrap();
+    let sigma = match svd_res.scalars.get("sigma") {
+        Some(Value::F64s(v)) => v.clone(),
+        other => panic!("sigma missing: {other:?}"),
+    };
+    let (u, _) = ac.to_indexed_row_matrix(svd_res.output("U").unwrap(), 1).unwrap();
+
+    let flat = |m: IndexedRowMatrix| m.to_local().unwrap().data().to_vec();
+    ac.stop();
+    server.shutdown();
+    (flat(w), iters, sigma, flat(u), flat(a_back))
+}
+
+fn assert_concurrent_matches_serial(mut cfg: Config) {
+    let serial = solve_svd_pull(&cfg, false);
+    cfg.apply("scheduler.tasks_per_group", "2").unwrap();
+    let overlapped = solve_svd_pull(&cfg, true);
+    assert!(serial.1 > 1, "CG should iterate, took {}", serial.1);
+    assert_eq!(serial.1, overlapped.1, "CG iteration count differs");
+    assert_eq!(serial.0, overlapped.0, "CG W differs under concurrency");
+    assert_eq!(serial.2, overlapped.2, "SVD spectrum differs under concurrency");
+    assert_eq!(serial.3, overlapped.3, "SVD U differs under concurrency");
+    assert_eq!(serial.4, overlapped.4, "pulled A differs under concurrency");
+}
+
+#[test]
+fn concurrent_solve_and_svd_bit_identical_to_serial_local_mode() {
+    assert_concurrent_matches_serial(native_cfg());
+}
+
+#[test]
+fn concurrent_solve_and_svd_bit_identical_to_serial_tcp_mode() {
+    assert_concurrent_matches_serial(tcp_cfg());
+}
+
+/// Two tasks on one group, then a hard cancel of one: only the
+/// cancelled task's tag lane is poisoned, so the sibling runs to `Done`.
+/// Pre-v9 the cancel poisoned the whole group fabric and the sibling
+/// died as collateral.
+fn lane_scoped_hard_cancel(cfg: &Config) {
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let mut ac = AlchemistContext::connect(&server.control_addr, cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // `spin` never observes its cooperative token — only a (lane) poison
+    // can end it early; the sibling `sleep` outlives the whole cancel
+    let victim = ac
+        .submit("elemental", "spin", Params::new().with_i64("millis", 30_000))
+        .unwrap()
+        .task_id;
+    let sibling = ac
+        .submit("elemental", "sleep", Params::new().with_i64("millis", 8_000))
+        .unwrap()
+        .task_id;
+    eventually(Duration::from_secs(10), "both tasks running concurrently", || {
+        server.session_queue_depths().first().is_some_and(|d| d.running == 2)
+    });
+
+    let t_cancel = Instant::now();
+    ac.task(victim).cancel_hard(200).unwrap();
+    let err = ac.task(victim).wait().unwrap_err();
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    assert!(
+        t_cancel.elapsed() < Duration::from_secs(10),
+        "hard cancel took {:?}",
+        t_cancel.elapsed()
+    );
+
+    // the sibling was untouched by the poison: never Failed, and it
+    // finishes normally on its own lane
+    let st = ac.task(sibling).status().unwrap();
+    assert!(
+        matches!(st, TaskState::Running { .. } | TaskState::Done { .. }),
+        "sibling collateral-damaged by the cancel: {st:?}"
+    );
+    let st = ac.task(sibling).wait_timeout(20_000).unwrap();
+    assert!(matches!(st, TaskState::Done { .. }), "{st:?}");
+
+    // group still healthy afterwards
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+
+    let m = server.sched_metrics();
+    assert_eq!(m.tasks_cancelled, 1);
+    assert_eq!(m.tasks_failed, 0, "the sibling must not fail as collateral");
+    ac.stop();
+    server.shutdown();
+}
+
+#[test]
+fn hard_cancel_poisons_only_its_lane_local_mode() {
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.tasks_per_group", "2").unwrap();
+    lane_scoped_hard_cancel(&cfg);
+}
+
+#[test]
+fn hard_cancel_poisons_only_its_lane_tcp_mode() {
+    let mut cfg = tcp_cfg();
+    cfg.apply("scheduler.tasks_per_group", "2").unwrap();
+    lane_scoped_hard_cancel(&cfg);
+}
+
+#[test]
+fn metrics_stream_pushes_gauges_for_every_running_task() {
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.tasks_per_group", "2").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 1).unwrap();
+    let addr = server.control_addr.clone();
+    let mut ac = AlchemistContext::connect(&addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+
+    // subscribe on its own connection, fast cadence
+    let mut stream = AlchemistContext::subscribe_metrics(&addr, &cfg, 50).unwrap();
+
+    let t1 = ac
+        .submit("elemental", "sleep", Params::new().with_i64("millis", 4_000))
+        .unwrap()
+        .task_id;
+    let t2 = ac
+        .submit("elemental", "spin", Params::new().with_i64("millis", 4_000))
+        .unwrap()
+        .task_id;
+
+    // within the tasks' lifetime the push stream must deliver a snapshot
+    // gauging BOTH running tasks, with monotonic sequence numbers and
+    // one JSON object per line
+    let mut last_seq = None;
+    let mut saw_both = false;
+    for _ in 0..200 {
+        let u = stream.next().expect("stream ended early").unwrap();
+        if let Some(prev) = last_seq {
+            assert!(u.seq > prev, "seq went {prev} -> {}", u.seq);
+        }
+        last_seq = Some(u.seq);
+        assert!(!u.json.contains('\n'), "snapshot not a single JSON line");
+        assert!(u.json.contains("\"admission_depth\":{\"batch\":"), "{}", u.json);
+        if u.json.contains("\"routine\":\"elemental.sleep\"")
+            && u.json.contains("\"routine\":\"elemental.spin\"")
+            && u.json.contains("\"running\":2")
+        {
+            // two tasks, two distinct lanes
+            assert!(u.json.contains("\"lane\":"), "{}", u.json);
+            saw_both = true;
+            break;
+        }
+    }
+    assert!(saw_both, "stream never gauged both running tasks");
+
+    assert!(matches!(
+        ac.task(t1).wait_timeout(20_000).unwrap(),
+        TaskState::Done { .. }
+    ));
+    assert!(matches!(
+        ac.task(t2).wait_timeout(20_000).unwrap(),
+        TaskState::Done { .. }
+    ));
+    drop(stream); // unsubscribes: the server drops the push thread
+    ac.stop();
+    server.shutdown();
+}

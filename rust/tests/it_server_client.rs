@@ -219,6 +219,7 @@ fn seal_with_missing_rows_fails_and_session_survives() {
             request_workers: 0,
             rows_per_frame: 0,
             buf_bytes: 0,
+            priority: alchemist::protocol::DEFAULT_PRIORITY,
         })
         .unwrap();
     assert!(matches!(reply, ControlMsg::HandshakeAck { .. }));
@@ -253,6 +254,7 @@ fn data_plane_rejects_bad_pushes_and_unsealed_pulls() {
             request_workers: 0,
             rows_per_frame: 0,
             buf_bytes: 0,
+            priority: alchemist::protocol::DEFAULT_PRIORITY,
         })
         .unwrap();
     let worker_addrs = match ack {
@@ -344,6 +346,7 @@ fn executor_disconnect_mid_push_leaves_matrix_unsealed_not_poisoned() {
             request_workers: 1,
             rows_per_frame: 0,
             buf_bytes: 0,
+            priority: alchemist::protocol::DEFAULT_PRIORITY,
         })
         .unwrap();
     let (session_id, worker_addrs) = match ack {

@@ -120,7 +120,7 @@ fn queue_bounds_cancel_while_queued_and_wait_timeout() {
     let depths = server.session_queue_depths();
     assert_eq!(depths.len(), 1);
     assert_eq!(depths[0].queued, 1);
-    assert!(depths[0].running);
+    assert_eq!(depths[0].running, 1);
     let err = ac
         .submit("elemental", "sleep", Params::new().with_i64("millis", 10))
         .unwrap_err();

@@ -39,6 +39,7 @@ fn raw_session(
             request_workers,
             rows_per_frame: 0,
             buf_bytes: 0,
+            priority: alchemist::protocol::DEFAULT_PRIORITY,
         })
         .unwrap();
     match ack {
@@ -436,6 +437,7 @@ fn v2_client_receives_version_mismatch_diagnostic() {
             request_workers: 0,
             rows_per_frame: 0,
             buf_bytes: 0,
+            priority: alchemist::protocol::DEFAULT_PRIORITY,
         })
         .unwrap();
     assert!(matches!(reply, ControlMsg::HandshakeAck { .. }));

@@ -31,6 +31,14 @@ distance of memcpy-speed mailboxes; a collapse means the rendezvous
 leg started copying or serializing. Warns until a baseline with
 fabric cells is pinned, fails after.
 
+Since protocol v9 it also carries "sched_cells": the submit->Done
+round-trip of a no-op task, streamed serially vs with two concurrent
+tag lanes on one group vs from two concurrent tenants. Diffed on
+tasks_per_sec like any other cell block — warns until a baseline
+containing sched cells is pinned, fails on >tolerance regressions
+after (a collapse here means dispatch, lane setup/retire, or
+admission grew a stall).
+
 CI's bench jobs run the smoke-size benches and call this script with the
 fresh artifact and the repo's committed baseline. Outcomes:
 
@@ -133,6 +141,9 @@ def describe_cell(cell: dict) -> str:
     if "kernel" in cell:
         return (f"{cell.get('kernel')} {cell.get('m')}x{cell.get('n')}x"
                 f"{cell.get('k')} t{cell.get('threads')}")
+    if "lanes" in cell:
+        return (f"sched {cell.get('case')} (tenants={cell.get('tenants')}, "
+                f"lanes={cell.get('lanes')})")
     if "case" in cell:
         return str(cell.get("case"))
     if "fabric" in cell:
@@ -354,6 +365,18 @@ def main() -> int:
             {"cells": fresh.get("fabric_cells", [])},
             {"cells": base["fabric_cells"]},
             fabric_key, ("gbps",), args.tolerance)
+    if kind == "transfer":
+        if base.get("sched_cells"):
+            sched_key = lambda c: (c.get("case"), c.get("tenants"),  # noqa: E731
+                                   c.get("lanes"), c.get("tasks"))
+            failures += diff_cells(
+                {"cells": fresh.get("sched_cells", [])},
+                {"cells": base["sched_cells"]},
+                sched_key, ("tasks_per_sec",), args.tolerance)
+        elif fresh.get("sched_cells"):
+            warn("transfer baseline has no sched_cells (pre-v9 pin) — "
+                 "scheduler round-trip diff skipped until a baseline "
+                 "containing them is pinned")
     if failures:
         for f_ in failures:
             fail(f"{kind} throughput regression: {f_}")
