@@ -55,6 +55,12 @@ pub struct AlchemistContext {
     pub worker_addrs: Vec<String>,
     /// Worker-group size the server granted this session.
     pub granted_workers: usize,
+    /// Reconnect credential from the handshake ack (protocol v10; 0 =
+    /// none issued). While the server's `scheduler.session_linger_s`
+    /// window is open after a disconnect, [`AlchemistContext::reconnect`]
+    /// presents this token to resume the session — task table, retained
+    /// results, and matrix handles intact (`docs/recovery.md`).
+    session_token: u64,
     cfg: Config,
     /// Executor threads used for matrix transfer (the paper's "number of
     /// Spark processes"; Table 3 sweeps this).
@@ -170,7 +176,7 @@ impl AlchemistContext {
             Err(err) => return Err(err),
         };
         let mut cfg = cfg.clone();
-        let (session_id, granted_workers, worker_addrs) = match reply {
+        let (session_id, granted_workers, worker_addrs, session_token) = match reply {
             ControlMsg::HandshakeAck {
                 session_id,
                 version,
@@ -178,6 +184,7 @@ impl AlchemistContext {
                 worker_addrs,
                 rows_per_frame,
                 buf_bytes,
+                session_token,
             } => {
                 anyhow::ensure!(version == PROTOCOL_VERSION, "protocol mismatch");
                 anyhow::ensure!(
@@ -193,7 +200,7 @@ impl AlchemistContext {
                 // allocate it; negotiate also saturates the u64→usize
                 // conversion that would wrap on 32-bit targets)
                 cfg.transfer = cfg.transfer.negotiate(rows_per_frame, buf_bytes);
-                (session_id, granted_workers as usize, worker_addrs)
+                (session_id, granted_workers as usize, worker_addrs, session_token)
             }
             other => anyhow::bail!("bad handshake reply: {other:?}"),
         };
@@ -202,9 +209,71 @@ impl AlchemistContext {
             session_id,
             worker_addrs,
             granted_workers,
+            session_token,
             cfg,
             executors: executors.max(1),
         })
+    }
+
+    /// The session's reconnect token (protocol v10; 0 when the server
+    /// issued none). Record it before a risky stretch: it is the only
+    /// credential [`AlchemistContext::reconnect`] accepts.
+    pub fn session_token(&self) -> u64 {
+        self.session_token
+    }
+
+    /// Resume a session whose connection dropped (protocol v10): present
+    /// the token from [`AlchemistContext::session_token`] within the
+    /// server's `scheduler.session_linger_s` window. Tasks kept running
+    /// (and finishing) while disconnected; the returned id list is every
+    /// task the session still retains, so the caller can `wait` on the
+    /// ones it submitted before the drop and collect their results
+    /// (`docs/recovery.md`).
+    pub fn reconnect(
+        addr: &str,
+        cfg: &Config,
+        executors: usize,
+        token: u64,
+    ) -> crate::Result<(Self, Vec<u64>)> {
+        anyhow::ensure!(token != 0, "no session token to reattach with");
+        let mut control = Framed::connect(addr, cfg.transfer.buf_bytes)?;
+        let reply = control.call(&ControlMsg::Reattach { token })?;
+        let mut cfg = cfg.clone();
+        match reply {
+            ControlMsg::ReattachAck {
+                session_id,
+                granted_workers,
+                worker_addrs,
+                rows_per_frame,
+                buf_bytes,
+                task_ids,
+            } => {
+                anyhow::ensure!(
+                    granted_workers as usize == worker_addrs.len(),
+                    "server granted {granted_workers} workers but sent {} addresses",
+                    worker_addrs.len()
+                );
+                // same re-clamp as the handshake path: the echoed values
+                // must pass through the client's own limits
+                cfg.transfer = cfg.transfer.negotiate(rows_per_frame, buf_bytes);
+                Ok((
+                    AlchemistContext {
+                        control,
+                        session_id,
+                        worker_addrs,
+                        granted_workers: granted_workers as usize,
+                        session_token: token,
+                        cfg,
+                        executors: executors.max(1),
+                    },
+                    task_ids,
+                ))
+            }
+            ControlMsg::Error { message } => {
+                anyhow::bail!("reattach rejected: {message}")
+            }
+            other => anyhow::bail!("bad reattach reply: {other:?}"),
+        }
     }
 
     /// The session's effective transfer configuration (requested knobs
@@ -388,10 +457,19 @@ impl AlchemistContext {
                 .control
                 .call(&ControlMsg::FetchMatrix { id: info.id })?
             {
-                ControlMsg::FetchReady { row_ranges, .. } => row_ranges
-                    .iter()
-                    .map(|&(a, b)| (a as usize, b as usize))
-                    .collect::<Vec<_>>(),
+                ControlMsg::FetchReady { row_ranges, worker_addrs, .. } => {
+                    // v10: the server sends the group's CURRENT data
+                    // addresses with every fetch — adopt them, so a rank
+                    // replaced from the spare pool mid-session is where
+                    // the row reads go, not the dead process
+                    if !worker_addrs.is_empty() {
+                        self.worker_addrs = worker_addrs;
+                    }
+                    row_ranges
+                        .iter()
+                        .map(|&(a, b)| (a as usize, b as usize))
+                        .collect::<Vec<_>>()
+                }
                 other => anyhow::bail!("bad reply: {other:?}"),
             };
             proxies.push(AlMatrix {

@@ -206,6 +206,10 @@ pub struct TcpComm {
 /// process, shared by all its sessions.
 pub struct MeshAcceptor {
     addr: String,
+    /// Loopback-reachable `host:port` of the actual listener, used to
+    /// wake the blocking accept at drop (the advertised `addr` may be a
+    /// hostname this process cannot dial, e.g. behind NAT).
+    wake_addr: String,
     state: Arc<Mutex<AcceptorState>>,
     stop: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
@@ -222,11 +226,28 @@ struct AcceptorState {
 
 impl MeshAcceptor {
     /// Bind a mesh listener on an ephemeral loopback port and start
-    /// accepting.
+    /// accepting (the single-host default).
     pub fn bind() -> crate::Result<Self> {
+        Self::bind_advertised("")
+    }
+
+    /// Bind a mesh listener and start accepting. `advertise` is the host
+    /// (name or IP, no port) peers should dial — `fabric.advertise_addr`.
+    /// Empty binds loopback and advertises `127.0.0.1:port` (identical to
+    /// [`MeshAcceptor::bind`]); non-empty binds all interfaces and
+    /// advertises `advertise:port`, so ranks on other hosts can form a
+    /// mesh with this one (v10, `docs/fabric.md`).
+    pub fn bind_advertised(advertise: &str) -> crate::Result<Self> {
+        let bind_addr = if advertise.is_empty() { "127.0.0.1:0" } else { "0.0.0.0:0" };
         let listener =
-            TcpListener::bind("127.0.0.1:0").context("binding mesh listener")?;
-        let addr = listener.local_addr().context("mesh listener addr")?.to_string();
+            TcpListener::bind(bind_addr).context("binding mesh listener")?;
+        let local = listener.local_addr().context("mesh listener addr")?;
+        let addr = if advertise.is_empty() {
+            local.to_string()
+        } else {
+            format!("{advertise}:{}", local.port())
+        };
+        let wake_addr = format!("127.0.0.1:{}", local.port());
         let state = Arc::new(Mutex::new(AcceptorState::default()));
         let stop = Arc::new(AtomicBool::new(false));
         let thread = {
@@ -237,7 +258,7 @@ impl MeshAcceptor {
                 .spawn(move || accept_loop(listener, state, stop))
                 .context("spawning mesh acceptor")?
         };
-        Ok(MeshAcceptor { addr, state, stop, thread: Some(thread) })
+        Ok(MeshAcceptor { addr, wake_addr, state, stop, thread: Some(thread) })
     }
 
     /// The `host:port` peers should connect to.
@@ -269,8 +290,10 @@ impl MeshAcceptor {
 impl Drop for MeshAcceptor {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Release);
-        // wake the blocking accept with a throwaway connection
-        let _ = TcpStream::connect(&self.addr);
+        // wake the blocking accept with a throwaway connection (via the
+        // loopback wake address — the advertised one may not be dialable
+        // from this process)
+        let _ = TcpStream::connect(&self.wake_addr);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -968,6 +991,22 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+    }
+
+    #[test]
+    fn advertised_acceptor_reports_configured_host() {
+        // empty advertise = the loopback default
+        let a = MeshAcceptor::bind().unwrap();
+        assert!(a.addr().starts_with("127.0.0.1:"), "{}", a.addr());
+        // a configured host is what peers are told to dial; the listener
+        // itself binds all interfaces so the dial can actually land
+        let b = MeshAcceptor::bind_advertised("localhost").unwrap();
+        assert!(b.addr().starts_with("localhost:"), "{}", b.addr());
+        let port: u16 =
+            b.addr().rsplit(':').next().unwrap().parse().expect("port suffix");
+        assert_ne!(port, 0);
+        // reachable via loopback since it bound 0.0.0.0
+        TcpStream::connect(("127.0.0.1", port)).unwrap();
     }
 
     #[test]

@@ -199,6 +199,18 @@ pub struct SchedulerConfig {
     /// comma-separated (`scheduler.weights = "spark=3,notebook=1"`);
     /// unlisted tenants weigh 1. Empty = plain FIFO within the class.
     pub weights: Vec<(String, f64)>,
+    /// Standby worker ranks held out of the allocatable pool (v10,
+    /// `docs/recovery.md`): when a rank dies mid-task the coordinator
+    /// re-forms the group around a spare and restarts the task instead
+    /// of failing the session. 0 (the default) disables replacement —
+    /// a dead rank fails the session diagnosably, the pre-v10 behavior.
+    pub spare_workers: usize,
+    /// Seconds a session survives its client's TCP connection (v10):
+    /// the task table and completed results are retained so a dropped
+    /// client can `Reattach{token}` and collect them. 0 (the default)
+    /// tears the session down on disconnect, the pre-v10 behavior —
+    /// required for callers that treat dropping the socket as `stop()`.
+    pub session_linger_s: f64,
 }
 
 impl SchedulerConfig {
@@ -232,6 +244,13 @@ pub struct StorageConfig {
     pub total_bytes: u64,
     /// Directory for the per-rank spill files (empty = system temp dir).
     pub spill_dir: String,
+    /// Directory for per-rank shard checkpoints of sealed blocks (v10,
+    /// `docs/recovery.md`). Empty (the default) disables checkpointing;
+    /// without it a dead rank's shards cannot be replayed onto a spare,
+    /// so rank replacement degrades to the diagnosable failure. All
+    /// ranks and the coordinator must see the same filesystem at this
+    /// path (same host, or a shared mount).
+    pub checkpoint_dir: String,
 }
 
 /// How a serve-mode coordinator runs its worker ranks (protocol v8).
@@ -285,6 +304,13 @@ pub struct FabricConfig {
     /// test harnesses point this at the built `alchemist` binary since
     /// *their* executable is the test runner.
     pub worker_exe: String,
+    /// Host (name or IP, no port — ports stay OS-assigned) a worker
+    /// advertises for its mesh and data listeners instead of the
+    /// loopback default (v10, `docs/fabric.md`). Empty (the default)
+    /// binds and advertises `127.0.0.1`, the single-host behavior;
+    /// setting a reachable hostname/IP binds `0.0.0.0` and advertises
+    /// that name, the first step of the multi-host attach flow.
+    pub advertise_addr: String,
 }
 
 impl FabricConfig {
@@ -364,11 +390,14 @@ impl Default for Config {
                 tasks_per_group: 1,
                 metrics_interval_ms: 250,
                 weights: Vec::new(),
+                spare_workers: 0,
+                session_linger_s: 0.0,
             },
             storage: StorageConfig {
                 budget_bytes: 0,
                 total_bytes: 0,
                 spill_dir: String::new(),
+                checkpoint_dir: String::new(),
             },
             fabric: FabricConfig {
                 mode: FabricMode::Local,
@@ -377,6 +406,7 @@ impl Default for Config {
                 form_timeout_s: 20.0,
                 attach_timeout_s: 30.0,
                 worker_exe: String::new(),
+                advertise_addr: String::new(),
             },
             spark_driver_max_bytes: 192 << 20,
         }
@@ -511,14 +541,26 @@ impl Config {
                 }
                 self.scheduler.weights = weights;
             }
+            "scheduler.spare_workers" => {
+                self.scheduler.spare_workers = int(value)?
+            }
+            "scheduler.session_linger_s" => {
+                self.scheduler.session_linger_s = fl(value)?
+            }
             "storage.budget_bytes" => {
                 self.storage.budget_bytes = int(value)? as u64
             }
             "storage.total_bytes" => self.storage.total_bytes = int(value)? as u64,
             "storage.spill_dir" => self.storage.spill_dir = value.to_string(),
+            "storage.checkpoint_dir" => {
+                self.storage.checkpoint_dir = value.to_string()
+            }
             "fabric.mode" => self.fabric.mode = FabricMode::parse(value)?,
             "fabric.worker_exe" => {
                 self.fabric.worker_exe = value.to_string()
+            }
+            "fabric.advertise_addr" => {
+                self.fabric.advertise_addr = value.to_string()
             }
             "fabric.eager_bytes" => self.fabric.eager_bytes = int(value)?,
             "fabric.buf_bytes" => self.fabric.buf_bytes = int(value)?,
@@ -584,6 +626,18 @@ impl Config {
         ];
         if !self.storage.spill_dir.is_empty() {
             pairs.push(("storage.spill_dir".into(), self.storage.spill_dir.clone()));
+        }
+        if !self.storage.checkpoint_dir.is_empty() {
+            pairs.push((
+                "storage.checkpoint_dir".into(),
+                self.storage.checkpoint_dir.clone(),
+            ));
+        }
+        if !self.fabric.advertise_addr.is_empty() {
+            pairs.push((
+                "fabric.advertise_addr".into(),
+                self.fabric.advertise_addr.clone(),
+            ));
         }
         pairs.retain(|(_, v)| !v.contains(','));
         pairs
@@ -680,6 +734,43 @@ mod tests {
         // malformed weights fail cleanly
         assert!(Config::default().apply("scheduler.weights", "spark").is_err());
         assert!(Config::default().apply("scheduler.weights", "spark=-1").is_err());
+    }
+
+    #[test]
+    fn recovery_v10_keys_parse_and_default_off() {
+        let c = Config::default();
+        assert_eq!(c.scheduler.spare_workers, 0);
+        assert_eq!(c.scheduler.session_linger_s, 0.0);
+        assert!(c.storage.checkpoint_dir.is_empty());
+        assert!(c.fabric.advertise_addr.is_empty());
+        // defaults emit no extra worker overrides
+        let keys: Vec<String> =
+            c.worker_override_pairs().into_iter().map(|(k, _)| k).collect();
+        assert!(!keys.iter().any(|k| k == "storage.checkpoint_dir"));
+        assert!(!keys.iter().any(|k| k == "fabric.advertise_addr"));
+
+        let mut c = Config::default();
+        c.apply("scheduler.spare_workers", "2").unwrap();
+        c.apply("scheduler.session_linger_s", "7.5").unwrap();
+        c.apply("storage.checkpoint_dir", "/tmp/ckpt").unwrap();
+        c.apply("fabric.advertise_addr", "10.0.0.7").unwrap();
+        assert_eq!(c.scheduler.spare_workers, 2);
+        assert_eq!(c.scheduler.session_linger_s, 7.5);
+        assert_eq!(c.storage.checkpoint_dir, "/tmp/ckpt");
+        assert_eq!(c.fabric.advertise_addr, "10.0.0.7");
+        // worker-consumed keys ride the --set command line
+        let mut w = Config::default();
+        for (k, v) in c.worker_override_pairs() {
+            w.apply(&k, &v).unwrap();
+        }
+        assert_eq!(w.storage.checkpoint_dir, "/tmp/ckpt");
+        assert_eq!(w.fabric.advertise_addr, "10.0.0.7");
+        // section form
+        let text = "[scheduler]\nspare_workers = 1\nsession_linger_s = 3.0\n";
+        let mut c2 = Config::default();
+        c2.apply_pairs(&Config::from_str_pairs(text).unwrap()).unwrap();
+        assert_eq!(c2.scheduler.spare_workers, 1);
+        assert_eq!(c2.scheduler.session_linger_s, 3.0);
     }
 
     #[test]

@@ -382,7 +382,10 @@ fn layout_from_wire(rows: u64, cols: u64, ranges: &[(u64, u64)]) -> RowBlockLayo
 /// One rank of the server's pool: an in-process worker thread or a
 /// separate worker process. The driver holds one per global rank and
 /// matches on the variant only where the transports genuinely differ
-/// (store access vs store RPC).
+/// (store access vs store RPC). Clonable (cheap handle copies) so the
+/// recovery path can work on a group's ranks without holding the pool
+/// lock.
+#[derive(Clone)]
 pub enum RankHandle {
     Local {
         shared: Arc<WorkerShared>,
@@ -423,7 +426,11 @@ impl RankHandle {
 /// A session's group communicator as the driver manages it. The local
 /// variant IS the fabric (shared state, direct calls); the remote variant
 /// holds the control handles through which the per-process `TcpComm`
-/// endpoints are reset/poisoned.
+/// endpoints are reset/poisoned. Clone is cheap (Arcs) — the driver
+/// snapshots the fabric out of the session's group lock so rank
+/// replacement (protocol v10) can swap it without blocking readers on
+/// in-flight I/O.
+#[derive(Clone)]
 pub enum SessionFabric {
     Local(Arc<LocalComm>),
     Remote { session_id: u64, ranks: Vec<Arc<RemoteWorker>> },
@@ -573,8 +580,10 @@ pub fn run_worker(coordinator: &str, rank: usize, cfg: Config) -> crate::Result<
         sessions: Mutex::new(HashMap::new()),
     });
 
-    // data-plane listener (row push/pull from executors)
-    let data_listener = Server::bind(0)?;
+    // data-plane listener (row push/pull from executors); advertised
+    // under `fabric.advertise_addr` when set, so clients on other hosts
+    // get a reachable pull address (v10)
+    let data_listener = Server::bind_advertised(0, &cfg.fabric.advertise_addr)?;
     let data_addr = data_listener.addr().to_string();
     *shared.data_addr.lock().unwrap() = data_addr.clone();
     {
@@ -591,8 +600,10 @@ pub fn run_worker(coordinator: &str, rank: usize, cfg: Config) -> crate::Result<
             .context("spawning data listener")?;
     }
 
-    // mesh listener: peer ranks connect here at group formation
-    let acceptor = MeshAcceptor::bind()?;
+    // mesh listener: peer ranks connect here at group formation (the
+    // advertised host replaces the hard-coded loopback for multi-host
+    // meshes)
+    let acceptor = MeshAcceptor::bind_advertised(&cfg.fabric.advertise_addr)?;
 
     // work socket + attach handshake
     let stream = TcpStream::connect(coordinator)
@@ -854,6 +865,41 @@ pub fn run_worker(coordinator: &str, rank: usize, cfg: Config) -> crate::Result<
                 };
                 post(&writer, &reply);
             }
+            WorkMsg::StoreRestore {
+                req_id,
+                session_id,
+                id,
+                name,
+                path,
+                rows,
+                cols,
+                ranges,
+                slot,
+            } => {
+                let layout = layout_from_wire(rows, cols, &ranges);
+                let reply = match restore_one(
+                    &shared,
+                    session_id,
+                    id,
+                    &name,
+                    std::path::Path::new(&path),
+                    layout,
+                    slot as usize,
+                ) {
+                    Ok(local_rows) => ack_ok(req_id, local_rows),
+                    Err(e) => ack_err(req_id, &e),
+                };
+                post(&writer, &reply);
+            }
+            WorkMsg::StoreStats { req_id } => {
+                // (blocks << 32) | spill_segments, each saturated at u32
+                // — the coordinator-side leak accounting for ranks whose
+                // store lives in another process
+                let blocks = (shared.store.len() as u64).min(u32::MAX as u64);
+                let segs =
+                    (shared.store.spill_segments() as u64).min(u32::MAX as u64);
+                post(&writer, &ack_ok(req_id, (blocks << 32) | segs));
+            }
             WorkMsg::Shutdown => break,
             other => {
                 log::warn!("worker process {rank}: unexpected {other:?}");
@@ -897,6 +943,36 @@ fn load_one(
             shared.store.insert(id, name, layout, local, slot, session_id)
         }
     }
+}
+
+/// Replay a dead rank's shard onto this (spare) rank from its
+/// task-boundary checkpoint: the file holds ONLY the slot's local rows
+/// (`local_rows × cols`), written by the dead rank at its last seal or
+/// insert. The block lands born-sealed — and `insert` immediately
+/// re-checkpoints it under this store's own `checkpoint_dir`, so a
+/// second failure can replay again. Returns the restored local row
+/// count (the coordinator cross-checks it against the layout).
+fn restore_one(
+    shared: &WorkerShared,
+    session_id: u64,
+    id: u64,
+    name: &str,
+    path: &std::path::Path,
+    layout: RowBlockLayout,
+    slot: usize,
+) -> crate::Result<u64> {
+    anyhow::ensure!(
+        slot < layout.ranges.len(),
+        "restore slot {slot} outside layout of {} ranges",
+        layout.ranges.len()
+    );
+    let (lo, hi) = layout.ranges[slot];
+    let local = crate::hdf5sim::read_rows(path, 0, hi - lo).map_err(|e| {
+        anyhow::anyhow!("reading checkpoint {path:?} for matrix {id}: {e:#}")
+    })?;
+    let rows = local.rows() as u64;
+    shared.store.insert(id, name, layout, local, slot, session_id)?;
+    Ok(rows)
 }
 
 fn ack_ok(req_id: u64, value: u64) -> WorkMsg {

@@ -41,12 +41,27 @@
 //! [`RankHandle`] and [`SessionFabric`] keep the dispatch/teardown paths
 //! transport-agnostic, and the code matches on the variant only where a
 //! store must be reached (direct call vs RPC).
+//!
+//! Since protocol v10 sessions are **survivable** (`docs/recovery.md`):
+//! the pool holds `scheduler.spare_workers` standby ranks out of
+//! admission, and when a worker process dies mid-task the executor
+//! re-forms the group around a spare — `MeshForm` the replacement into
+//! the session mesh, replay the dead slot's matrix shards from their
+//! task-boundary snapshots (`storage.checkpoint_dir`; mapped matrices
+//! replay from their source file), and re-run the task instead of
+//! failing the session. On the client side the handshake ack carries a
+//! `session_token`; a dropped connection parks the session for
+//! `scheduler.session_linger_s` (tasks keep running), and `Reattach`
+//! with the token resumes it — task table, results, and matrix handles
+//! intact. Externally launched `alchemist worker --connect` processes
+//! are adopted into the spare pool at runtime.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::hash::{BuildHasher, Hasher};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -69,6 +84,7 @@ use crate::tasks::{CancelToken, RankProgress, TaskScope};
 
 use super::registry::{Library, Registry};
 use super::remote::{wire_ranges, RankHandle, RemoteWorker, SessionFabric};
+use super::store::checkpoint_path;
 use super::worker::{alloc_group, handle_data_conn, worker_main, WorkerCmd, WorkerShared};
 
 /// Driver-side record of a live distributed matrix.
@@ -76,6 +92,14 @@ use super::worker::{alloc_group, handle_data_conn, worker_main, WorkerCmd, Worke
 struct HandleMeta {
     info: MatrixInfo,
     layout: RowBlockLayout,
+    /// For matrices ingested from a server-side file (`LoadMatrix`): the
+    /// source path. On rank replacement the file itself is the snapshot —
+    /// the replacement re-reads its shard from it (`docs/recovery.md`).
+    source: Option<String>,
+    /// Whether every shard is sealed. Only sealed matrices have
+    /// task-boundary checkpoints (unsealed ingest state is not
+    /// replayable, so a group holding one cannot be re-formed).
+    sealed: bool,
 }
 
 /// One submitted task's immutable record. Mutable lifecycle state lives
@@ -210,6 +234,23 @@ fn wire_state(slot: &TaskSlot) -> TaskState {
     }
 }
 
+/// A session's worker group: which global ranks it holds (in group
+/// order — `ranks[i]` is group-local rank `i`) and the driver's
+/// poison/reset/cancel handle on their communicator. One struct so rank
+/// replacement (protocol v10) swaps both atomically: the group is
+/// re-formed around a spare and the next dispatch sees the new
+/// membership and the new mesh together.
+#[derive(Clone)]
+struct GroupState {
+    ranks: Vec<usize>,
+    /// Never used to send or receive: the hard-cancel watchdog poisons
+    /// through it and the dispatcher resets the fabric through it
+    /// between tasks. Local groups hold the rank-0 `LocalComm` endpoint
+    /// directly; tcp groups hold the member work sockets and forward the
+    /// same operations to each process's `TcpComm`.
+    fabric: SessionFabric,
+}
+
 /// One connected client and the worker group it holds exclusively.
 struct Session {
     id: u64,
@@ -218,16 +259,17 @@ struct Session {
     /// Admitted priority class (requested, clamped to
     /// `scheduler.max_priority`).
     priority: u32,
-    /// Global worker ranks in group order: `ranks[i]` is the worker with
-    /// group-local rank `i`.
-    ranks: Vec<usize>,
-    /// The driver's poison/reset/cancel handle on the group's
-    /// communicator (never used to send or receive): the hard-cancel
-    /// watchdog poisons through it and the dispatcher resets the fabric
-    /// through it between tasks. Local groups hold the rank-0 `LocalComm`
-    /// endpoint directly; tcp groups hold the member work sockets and
-    /// forward the same operations to each process's `TcpComm`.
-    fabric: SessionFabric,
+    /// Opaque reconnect credential issued in the handshake ack (protocol
+    /// v10, never 0 on the wire side — 0 means "no token"). A dropped
+    /// client presents it in `Reattach` to resume this session while it
+    /// lingers (`scheduler.session_linger_s`).
+    token: u64,
+    /// The group membership + fabric, swapped as a unit when a dead rank
+    /// is replaced from the spare pool. Reads snapshot (clone) and never
+    /// hold the lock across blocking I/O; the write side is
+    /// `try_replace_dead_ranks`, which runs only while the failed task
+    /// is the session's sole running task.
+    group: RwLock<GroupState>,
     /// Per-session config snapshot (transfer knobs travel with the
     /// session so future PRs can negotiate them per client).
     transfer: TransferConfig,
@@ -243,6 +285,35 @@ struct Session {
     /// The dispatcher thread draining `tasks`; joined at teardown so no
     /// task can touch the store after the session's blocks are freed.
     dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Session {
+    /// Snapshot of the group's global ranks (see [`Session::group`]).
+    fn ranks(&self) -> Vec<usize> {
+        self.group.read().unwrap().ranks.clone()
+    }
+
+    fn group_size(&self) -> usize {
+        self.group.read().unwrap().ranks.len()
+    }
+
+    /// Snapshot of the fabric handle. Operations through a stale snapshot
+    /// (taken before a replacement committed) land on the old mesh, whose
+    /// lanes are already poisoned/retired — harmless by construction.
+    fn fabric(&self) -> SessionFabric {
+        self.group.read().unwrap().fabric.clone()
+    }
+}
+
+/// Generate a non-zero session token from the OS-seeded sip hasher (no
+/// RNG dependency; 0 is the wire sentinel for "no token").
+fn fresh_token() -> u64 {
+    loop {
+        let t = std::collections::hash_map::RandomState::new().build_hasher().finish();
+        if t != 0 {
+            return t;
+        }
+    }
 }
 
 /// One queued handshake awaiting admission.
@@ -266,6 +337,12 @@ struct AllocState {
     active: usize,
     /// Active sessions per tenant (weighted fair-share bookkeeping).
     active_by_client: HashMap<String, usize>,
+    /// Standby global ranks held out of admission (`scheduler.
+    /// spare_workers`, plus any adopted `worker --connect` processes).
+    /// Rank replacement pops one; a replaced session's eventual release
+    /// returns the replacement to the *free* pool (the pool heals — the
+    /// dead rank never comes back, the spare takes its admission slot).
+    spares: Vec<usize>,
     stopping: bool,
 }
 
@@ -289,7 +366,15 @@ struct GroupAllocator {
 }
 
 impl GroupAllocator {
-    fn new(total: usize, scheduler: SchedulerConfig, metrics: Arc<SchedMetrics>) -> Self {
+    /// `total` ranks are admittable; `spares` are held out of admission
+    /// as replacement standbys (their indices come after the admittable
+    /// pool in the driver's rank table).
+    fn new(
+        total: usize,
+        spares: Vec<usize>,
+        scheduler: SchedulerConfig,
+        metrics: Arc<SchedMetrics>,
+    ) -> Self {
         GroupAllocator {
             total,
             scheduler,
@@ -298,11 +383,26 @@ impl GroupAllocator {
                 queue: Vec::new(),
                 active: 0,
                 active_by_client: HashMap::new(),
+                spares,
                 stopping: false,
             }),
             cond: Condvar::new(),
             metrics,
         }
+    }
+
+    /// Pop a standby rank for replacement, if any.
+    fn take_spare(&self) -> Option<usize> {
+        self.state.lock().unwrap().spares.pop()
+    }
+
+    /// Return (or adopt) a standby rank into the spare pool.
+    fn add_spare(&self, rank: usize) {
+        self.state.lock().unwrap().spares.push(rank);
+    }
+
+    fn spare_count(&self) -> usize {
+        self.state.lock().unwrap().spares.len()
     }
 
     /// Map a client's requested size (0 = server default) to a concrete
@@ -492,12 +592,25 @@ impl Drop for ThreadsLease<'_> {
     }
 }
 
+/// A parked (lingering) session awaiting `Reattach`, keyed by token.
+struct LingerEntry {
+    session: Arc<Session>,
+    /// Generation stamp: the reaper thread armed at park time only
+    /// expires the entry whose generation it was armed for, so a
+    /// reattach-then-redrop cycle within the linger window cannot be
+    /// killed by the first drop's stale reaper.
+    gen: u64,
+}
+
 struct Driver {
     cfg: Config,
     /// The worker pool, index = global rank. Homogeneous by
     /// construction: `fabric.mode = local` builds every rank in-process,
-    /// `tcp` spawns every rank as a worker process.
-    ranks: Vec<RankHandle>,
+    /// `tcp` spawns every rank as a worker process. Behind a lock since
+    /// protocol v10: externally launched `worker --connect` processes
+    /// are appended at runtime (indices are stable — ranks are never
+    /// removed, a dead rank just stops being scheduled).
+    ranks: RwLock<Vec<RankHandle>>,
     registry: Registry,
     allocator: GroupAllocator,
     /// Compute threads (`group × engine_threads`) leased to currently
@@ -519,6 +632,15 @@ struct Driver {
     next_session: AtomicU64,
     next_task: AtomicU64,
     sessions: Mutex<HashMap<u64, Arc<Session>>>,
+    /// Parked sessions whose client connection dropped, keyed by session
+    /// token, kept alive for `scheduler.session_linger_s` awaiting
+    /// `Reattach` (protocol v10). Entries also stay in `sessions` (their
+    /// dispatchers keep running queued tasks).
+    lingering: Mutex<HashMap<u64, LingerEntry>>,
+    linger_gen: AtomicU64,
+    /// Attach listener address for late `worker --connect` adoption
+    /// (tcp mode only; empty otherwise). `stop_all` wake-connects it.
+    attach_addr: Mutex<String>,
     stopping: AtomicBool,
     /// Stop flags of every accept loop (control + per-worker data).
     listener_stops: Mutex<Vec<Arc<AtomicBool>>>,
@@ -546,11 +668,12 @@ impl Driver {
             }
         }
         let grace = self.cfg.scheduler.teardown_grace_ms;
+        let fabric = session.fabric();
         for rec in st.running.values() {
             rec.cancel.cancel();
             // process-separated ranks observe the token through their own
             // copy — forward the flip (no-op for in-process groups)
-            session.fabric.propagate_cancel(rec.id);
+            fabric.propagate_cancel(rec.id);
             if grace > 0 {
                 schedule_hard_cancel(
                     session.clone(),
@@ -591,7 +714,8 @@ impl Driver {
                 let _ = handle.join();
             }
         }
-        for r in &self.ranks {
+        let ranks: Vec<RankHandle> = self.ranks.read().unwrap().clone();
+        for r in &ranks {
             match r {
                 RankHandle::Local { sender, .. } => {
                     let _ = sender.send(WorkerCmd::Shutdown);
@@ -611,17 +735,27 @@ impl Driver {
         if !control.is_empty() {
             let _ = TcpStream::connect(&control);
         }
+        let attach = self.attach_addr.lock().unwrap().clone();
+        if !attach.is_empty() {
+            let _ = TcpStream::connect(&attach);
+        }
     }
 }
 
 impl Driver {
     fn worker_addrs(&self) -> Vec<String> {
-        self.ranks.iter().map(|r| r.data_addr()).collect()
+        self.ranks.read().unwrap().iter().map(|r| r.data_addr()).collect()
+    }
+
+    /// Snapshot of rank `r`'s handle (cheap: both variants are Arcs).
+    fn rank(&self, r: usize) -> RankHandle {
+        self.ranks.read().unwrap()[r].clone()
     }
 
     /// Data addresses of one session's group, indexed by group-local rank.
     fn session_worker_addrs(&self, session: &Session) -> Vec<String> {
-        session.ranks.iter().map(|&r| self.ranks[r].data_addr()).collect()
+        let ranks = self.ranks.read().unwrap();
+        session.ranks().iter().map(|&r| ranks[r].data_addr()).collect()
     }
 
     /// The full pool as in-process handles — `Some` iff every rank is
@@ -629,13 +763,16 @@ impl Driver {
     /// [`Driver::ranks`]. Store paths take this fast path; a `None` pool
     /// reaches each rank's store over its work socket instead.
     fn local_pool(&self) -> Option<Vec<Arc<WorkerShared>>> {
-        self.ranks.iter().map(|r| r.local().cloned()).collect()
+        self.ranks.read().unwrap().iter().map(|r| r.local().cloned()).collect()
     }
 
     /// Global rank `rank` as a worker-process handle. Only meaningful in
     /// fabric mode, where the pool is all-remote by construction.
-    fn remote_member(&self, rank: usize) -> &Arc<RemoteWorker> {
-        self.ranks[rank].remote().expect("fabric-mode pool is all-remote")
+    fn remote_member(&self, rank: usize) -> Arc<RemoteWorker> {
+        self.ranks.read().unwrap()[rank]
+            .remote()
+            .expect("fabric-mode pool is all-remote")
+            .clone()
     }
 
     /// Build and bind a new group's communicator. A local pool wires
@@ -665,7 +802,7 @@ impl Driver {
             return Ok(SessionFabric::Local(fabric));
         }
         let members: Vec<Arc<RemoteWorker>> =
-            ranks.iter().map(|&r| self.remote_member(r).clone()).collect();
+            ranks.iter().map(|&r| self.remote_member(r)).collect();
         let peers: Vec<String> =
             members.iter().map(|w| w.mesh_addr.clone()).collect();
         let waits: Vec<_> = members
@@ -711,10 +848,10 @@ impl Driver {
     /// process (and store) is already gone.
     fn release_session_state(&self, session: &Session) -> usize {
         let mut freed = 0;
-        match &session.fabric {
+        match &session.fabric() {
             SessionFabric::Local(_) => {
-                for &rank in &session.ranks {
-                    if let Some(shared) = self.ranks[rank].local() {
+                for &rank in &session.ranks() {
+                    if let Some(shared) = self.rank(rank).local() {
                         shared.sessions.lock().unwrap().remove(&session.id);
                         // releases heap budget AND deletes the session's
                         // spill-file segments on this rank (see
@@ -806,13 +943,14 @@ impl Driver {
         id: u64,
         build: impl Fn(usize, u64) -> WorkMsg,
     ) -> crate::Result<()> {
-        let waits: Vec<_> = session
-            .ranks
+        let group = session.ranks();
+        let waits: Vec<_> = group
             .iter()
             .enumerate()
             .map(|(slot, &rank)| {
                 let w = self.remote_member(rank);
-                (w, w.start_ack(|req_id| build(slot, req_id)))
+                let wait = w.start_ack(|req_id| build(slot, req_id));
+                (w, wait)
             })
             .collect();
         let mut result = Ok(());
@@ -823,7 +961,7 @@ impl Driver {
             }
         }
         if result.is_err() {
-            for &rank in &session.ranks {
+            for &rank in &group {
                 let _ = self.remote_member(rank).send(&WorkMsg::StoreFree { id });
             }
         }
@@ -903,8 +1041,8 @@ impl Driver {
             id,
             client: client_name.to_string(),
             priority,
-            ranks: ranks.clone(),
-            fabric,
+            token: fresh_token(),
+            group: RwLock::new(GroupState { ranks: ranks.clone(), fabric }),
             transfer: self.cfg.transfer.negotiate(rows_per_frame, buf_bytes),
             handles: Mutex::new(HashMap::new()),
             storage_demand,
@@ -937,7 +1075,7 @@ impl Driver {
                     let _ = handle.join();
                 }
                 self.release_session_state(&session);
-                self.allocator.release(&session.ranks, &session.client);
+                self.release_group(&session);
                 *self.storage_committed.lock().unwrap() -= session.storage_demand;
                 anyhow::bail!("server is stopping");
             }
@@ -963,6 +1101,9 @@ impl Driver {
         if self.sessions.lock().unwrap().remove(&session.id).is_none() {
             return; // already closed
         }
+        // a parked session closed by shutdown/timeout must also leave the
+        // reattach table, or a late Reattach would resume freed state
+        self.lingering.lock().unwrap().remove(&session.token);
         // drain the task table: queued tasks become Cancelled without
         // running; the running task's token is cancelled and the
         // dispatcher finalizes it as usual
@@ -972,14 +1113,288 @@ impl Driver {
             let _ = handle.join();
         }
         let freed = self.release_session_state(session);
-        self.allocator.release(&session.ranks, &session.client);
+        let released = self.release_group(session);
         *self.storage_committed.lock().unwrap() -= session.storage_demand;
         log::info!(
             "session {}: closed ({} blocks freed, {} workers released)",
             session.id,
             freed,
-            session.ranks.len()
+            released,
         );
+    }
+
+    /// Return a session's ranks to the admission pool, keeping dead
+    /// worker processes out of it — a killed rank's slot was healed by
+    /// its replacement (which releases here in its place), so the pool
+    /// stays the right size without ever re-granting a corpse.
+    fn release_group(&self, session: &Session) -> usize {
+        let group = session.ranks();
+        let ranks = self.ranks.read().unwrap();
+        let live: Vec<usize> = group
+            .iter()
+            .copied()
+            .filter(|&r| !ranks[r].remote().is_some_and(|w| w.is_dead()))
+            .collect();
+        drop(ranks);
+        if live.len() < group.len() {
+            log::warn!(
+                "session {}: {} dead worker process(es) not returned to the pool",
+                session.id,
+                group.len() - live.len(),
+            );
+        }
+        self.allocator.release(&live, &session.client);
+        live.len()
+    }
+
+    /// Re-form a session's group around spare ranks after a worker
+    /// process died mid-task (protocol v10, `docs/recovery.md`). Returns
+    /// true when the group was re-formed and the failed task can be
+    /// retried; false degrades to the diagnosable v8 failure. Only runs
+    /// while the failed task is the session's sole running task —
+    /// concurrent lanes failing on the same broken mesh would race the
+    /// swap, so a multi-lane failure is not retried.
+    ///
+    /// The steps, each of which can veto: (1) every live matrix handle
+    /// must be replayable (sealed, with either a source file or a
+    /// `storage.checkpoint_dir` snapshot); (2) a spare must exist per
+    /// dead slot; (3) the mesh re-forms over the patched membership
+    /// (workers replace their session comm on `MeshForm`); (4) each
+    /// replacement replays the dead slot's shards — `StoreLoad` from the
+    /// source file for mapped matrices, `StoreRestore` from the
+    /// task-boundary checkpoint otherwise.
+    fn try_replace_dead_ranks(&self, session: &Arc<Session>) -> bool {
+        if self.stopping.load(Ordering::SeqCst) {
+            return false;
+        }
+        {
+            let st = session.tasks.state.lock().unwrap();
+            if st.running.len() != 1 {
+                return false;
+            }
+        }
+        let mut group = session.group.write().unwrap();
+        let dead: Vec<usize> = {
+            let pool = self.ranks.read().unwrap();
+            group
+                .ranks
+                .iter()
+                .enumerate()
+                .filter(|&(_, &r)| pool[r].remote().is_some_and(|w| w.is_dead()))
+                .map(|(slot, _)| slot)
+                .collect()
+        };
+        if dead.is_empty() {
+            return false; // not a rank failure (routine error / local mode)
+        }
+        let metas: Vec<(u64, HandleMeta)> = {
+            let handles = session.handles.lock().unwrap();
+            handles.iter().map(|(id, m)| (*id, m.clone())).collect()
+        };
+        let ckpt_dir = self.cfg.storage.checkpoint_dir.clone();
+        for (id, m) in &metas {
+            let replayable =
+                m.sealed && (m.source.is_some() || !ckpt_dir.is_empty());
+            if !replayable {
+                log::warn!(
+                    "session {}: worker died but matrix {id} ({:?}) has no \
+                     replayable snapshot ({}) — failing the task instead of \
+                     re-forming",
+                    session.id,
+                    m.info.name,
+                    if m.sealed {
+                        "no storage.checkpoint_dir configured"
+                    } else {
+                        "unsealed ingest state cannot be replayed"
+                    },
+                );
+                return false;
+            }
+        }
+        let mut taken: Vec<usize> = Vec::new();
+        for _ in &dead {
+            match self.allocator.take_spare() {
+                Some(r) => taken.push(r),
+                None => {
+                    for r in taken {
+                        self.allocator.add_spare(r);
+                    }
+                    log::warn!(
+                        "session {}: worker died and no spare workers remain \
+                         (scheduler.spare_workers) — failing the task",
+                        session.id,
+                    );
+                    return false;
+                }
+            }
+        }
+        let mut new_ranks = group.ranks.clone();
+        for (&slot, &spare) in dead.iter().zip(&taken) {
+            new_ranks[slot] = spare;
+        }
+        let fabric = match self.bind_group_fabric(session.id, &new_ranks) {
+            Ok(f) => f,
+            Err(e) => {
+                for r in taken {
+                    self.allocator.add_spare(r);
+                }
+                log::warn!(
+                    "session {}: re-forming group mesh around spare(s) \
+                     failed: {e:#}",
+                    session.id,
+                );
+                return false;
+            }
+        };
+        for (&slot, &spare) in dead.iter().zip(&taken) {
+            let w = self.remote_member(spare);
+            for (id, m) in &metas {
+                let sid = session.id;
+                let replayed = if let Some(src) = &m.source {
+                    w.request_ack(|req_id| WorkMsg::StoreLoad {
+                        req_id,
+                        session_id: sid,
+                        id: *id,
+                        name: m.info.name.clone(),
+                        path: src.clone(),
+                        rows: m.layout.rows as u64,
+                        cols: m.layout.cols as u64,
+                        ranges: wire_ranges(&m.layout),
+                        slot: slot as u32,
+                    })
+                } else {
+                    let path = checkpoint_path(&ckpt_dir, sid, *id, slot);
+                    w.request_ack(|req_id| WorkMsg::StoreRestore {
+                        req_id,
+                        session_id: sid,
+                        id: *id,
+                        name: m.info.name.clone(),
+                        path: path.to_string_lossy().into_owned(),
+                        rows: m.layout.rows as u64,
+                        cols: m.layout.cols as u64,
+                        ranges: wire_ranges(&m.layout),
+                        slot: slot as u32,
+                    })
+                };
+                if let Err(e) = replayed {
+                    log::warn!(
+                        "session {}: replaying matrix {id} slot {slot} onto \
+                         spare worker {spare} failed: {e:#}",
+                        session.id,
+                    );
+                    // retire the replacements again: drop their endpoint
+                    // and any partially restored shards, return them to
+                    // the spare pool
+                    for &r in &taken {
+                        let _ = self.remote_member(r).start_ack(|req_id| {
+                            WorkMsg::SessionClose { req_id, session_id: sid }
+                        });
+                        self.allocator.add_spare(r);
+                    }
+                    return false;
+                }
+            }
+        }
+        group.ranks = new_ranks;
+        group.fabric = fabric;
+        for _ in &dead {
+            self.metrics.rank_replaced();
+        }
+        log::info!(
+            "session {}: re-formed group around spare worker(s) {taken:?} \
+             (dead slot(s) {dead:?} replaced); retrying the failed task",
+            session.id,
+        );
+        true
+    }
+
+    /// Handle a dropped control connection (protocol v10): when
+    /// `scheduler.session_linger_s` is configured, park the session in
+    /// the reattach table — tasks keep running, results are retained —
+    /// and arm a reaper that closes it if no `Reattach` claims the token
+    /// in time. Linger 0 (the default) closes immediately: the client's
+    /// `stop()` IS a socket drop, so eager teardown is the wire contract.
+    fn park_or_close(self: &Arc<Self>, session: &Arc<Session>) {
+        let linger = self.cfg.scheduler.session_linger_s;
+        if linger <= 0.0 || self.stopping.load(Ordering::SeqCst) {
+            self.close_session(session);
+            return;
+        }
+        let gen = self.linger_gen.fetch_add(1, Ordering::SeqCst);
+        self.lingering.lock().unwrap().insert(
+            session.token,
+            LingerEntry { session: session.clone(), gen },
+        );
+        log::info!(
+            "session {}: client disconnected; lingering {linger:.1}s \
+             awaiting Reattach",
+            session.id,
+        );
+        let driver = self.clone();
+        let session = session.clone();
+        std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs_f64(linger);
+            loop {
+                if driver.stopping.load(Ordering::SeqCst) {
+                    return; // shutdown owns global teardown
+                }
+                // only the reaper of the CURRENT park may expire the
+                // entry: a reattach-then-redrop within the window re-arms
+                // with a new generation, and this (stale) reaper stands
+                // down instead of killing the re-parked session early
+                match driver.lingering.lock().unwrap().get(&session.token) {
+                    Some(e) if e.gen == gen => {}
+                    _ => return,
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                std::thread::sleep((deadline - now).min(Duration::from_millis(50)));
+            }
+            let expired = {
+                let mut lingering = driver.lingering.lock().unwrap();
+                match lingering.get(&session.token) {
+                    Some(e) if e.gen == gen => {
+                        lingering.remove(&session.token);
+                        true
+                    }
+                    _ => false,
+                }
+            };
+            if expired {
+                log::info!(
+                    "session {}: linger window expired with no Reattach; closing",
+                    session.id,
+                );
+                driver.close_session(&session);
+            }
+        });
+    }
+
+    /// Resume a parked session by token (protocol v10 `Reattach`).
+    /// Removing the entry is what stands the reaper down; the session's
+    /// task table (including retained terminal results) and matrix
+    /// handles are untouched by the disconnect, so the client re-lists
+    /// tasks and collects exactly what it would have seen on the
+    /// original connection.
+    fn reattach(&self, token: u64) -> crate::Result<Arc<Session>> {
+        anyhow::ensure!(token != 0, "reattach requires a session token");
+        anyhow::ensure!(
+            !self.stopping.load(Ordering::SeqCst),
+            "server is stopping"
+        );
+        let entry = self.lingering.lock().unwrap().remove(&token);
+        match entry {
+            Some(e) => {
+                log::info!("session {}: client reattached", e.session.id);
+                Ok(e.session)
+            }
+            None => anyhow::bail!(
+                "unknown or expired session token (the linger window of \
+                 scheduler.session_linger_s may have elapsed)"
+            ),
+        }
     }
 
     fn create_matrix(
@@ -991,10 +1406,11 @@ impl Driver {
     ) -> crate::Result<ControlMsg> {
         anyhow::ensure!(rows > 0 && cols > 0, "matrix must be non-empty");
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let group = session.ranks();
         let layout =
-            RowBlockLayout::even(rows as usize, cols as usize, session.ranks.len());
+            RowBlockLayout::even(rows as usize, cols as usize, group.len());
         if let Some(pool) = self.local_pool() {
-            alloc_group(&pool, &session.ranks, session.id, id, name, &layout)?;
+            alloc_group(&pool, &group, session.id, id, name, &layout)?;
         } else {
             self.remote_alloc(session, id, name, &layout)?;
         }
@@ -1003,6 +1419,8 @@ impl Driver {
             HandleMeta {
                 info: MatrixInfo { id, rows, cols, name: name.to_string() },
                 layout: layout.clone(),
+                source: None,
+                sealed: false,
             },
         );
         Ok(ControlMsg::MatrixCreated { id, row_ranges: layout.to_wire() })
@@ -1025,11 +1443,12 @@ impl Driver {
         let (rows, cols) = crate::hdf5sim::validate(path)?;
         anyhow::ensure!(rows > 0 && cols > 0, "matrix must be non-empty");
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let layout = RowBlockLayout::even(rows, cols, session.ranks.len());
+        let group = session.ranks();
+        let layout = RowBlockLayout::even(rows, cols, group.len());
         if let Some(pool) = self.local_pool() {
             super::worker::load_group(
                 &pool,
-                &session.ranks,
+                &group,
                 session.id,
                 id,
                 name,
@@ -1047,13 +1466,18 @@ impl Driver {
         };
         session.handles.lock().unwrap().insert(
             id,
-            HandleMeta { info: info.clone(), layout: layout.clone() },
+            HandleMeta {
+                info: info.clone(),
+                layout: layout.clone(),
+                source: Some(path.to_string_lossy().into_owned()),
+                sealed: true,
+            },
         );
         log::info!(
             "session {}: loaded {name:?} ({rows}x{cols}) from {path:?} as \
              matrix {id} across {} workers",
             session.id,
-            session.ranks.len()
+            group.len()
         );
         Ok(ControlMsg::LoadDone { info, row_ranges: layout.to_wire() })
     }
@@ -1061,8 +1485,8 @@ impl Driver {
     fn seal_matrix(&self, session: &Session, id: u64) -> crate::Result<ControlMsg> {
         let meta = self.handle(session, id)?;
         let mut received = 0;
-        for &rank in &session.ranks {
-            received += match &self.ranks[rank] {
+        for &rank in &session.ranks() {
+            received += match &self.rank(rank) {
                 RankHandle::Local { shared, .. } => shared.store.seal(id)?,
                 RankHandle::Remote(w) => {
                     w.request_ack(|req_id| WorkMsg::StoreSeal { req_id, id })?.0
@@ -1074,6 +1498,11 @@ impl Driver {
             "matrix {id}: sealed with {received} of {} rows",
             meta.info.rows
         );
+        // sealed shards have task-boundary checkpoints — the matrix is
+        // now replayable onto a replacement rank (`docs/recovery.md`)
+        if let Some(meta) = session.handles.lock().unwrap().get_mut(&id) {
+            meta.sealed = true;
+        }
         Ok(ControlMsg::MatrixSealed { id, rows_received: received })
     }
 
@@ -1120,9 +1549,7 @@ impl Driver {
             routine: routine.to_string(),
             params,
             cancel: Arc::new(CancelToken::new()),
-            progress: session
-                .ranks
-                .iter()
+            progress: (0..session.group_size())
                 .map(|_| Arc::new(RankProgress::new()))
                 .collect(),
             hard_deadline: Mutex::new(None),
@@ -1187,7 +1614,7 @@ impl Driver {
                 rec.cancel.cancel();
                 // worker processes hold their own token copy — forward
                 // the flip (no-op for in-process groups)
-                session.fabric.propagate_cancel(task_id);
+                session.fabric().propagate_cancel(task_id);
                 if hard_after_ms > 0 {
                     // clamp to an hour: the watchdog thread and its
                     // session Arc live until the deadline fires. Arm a
@@ -1253,6 +1680,15 @@ impl Driver {
     /// and produce the terminal state. Failed and cancelled tasks free
     /// any partially-inserted output blocks so nothing leaks.
     fn execute_task(&self, session: &Session, rec: &TaskRecord) -> TaskState {
+        // snapshot the group once per attempt: a replacement committed by
+        // a concurrent failure path must not tear this dispatch — every
+        // send, poison, and free below targets the same membership + mesh
+        let GroupState { ranks: group_ranks, fabric } =
+            session.group.read().unwrap().clone();
+        let handles: Vec<RankHandle> = {
+            let pool = self.ranks.read().unwrap();
+            group_ranks.iter().map(|&r| pool[r].clone()).collect()
+        };
         // task-scoped output-id reservation, validated by each worker
         // before it inserts anything (see WorkerCmd::out_span)
         let out_span = self.cfg.scheduler.max_task_outputs.max(1);
@@ -1277,7 +1713,7 @@ impl Driver {
         // bit-identical for any thread count, so leasing is invisible
         // to clients.
         let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let group = session.ranks.len().max(1);
+        let group = group_ranks.len().max(1);
         let cap = self.cfg.engine_threads_for_group(group, avail);
         let engine_threads = {
             let mut committed = self.engine_threads_committed.lock().unwrap();
@@ -1301,12 +1737,12 @@ impl Driver {
         // no rank dispatched at all).
         let mut replies = Vec::new();
         let mut dead_slot: Option<usize> = None;
-        for (slot, &rank) in session.ranks.iter().enumerate() {
+        for (slot, handle) in handles.iter().enumerate() {
             if dead_slot.is_some() {
                 replies.push((slot, None));
                 continue;
             }
-            let rx = match &self.ranks[rank] {
+            let rx = match handle {
                 RankHandle::Local { sender, .. } => {
                     let (tx, rx) = mpsc::channel();
                     let sent = sender.send(WorkerCmd::RunTask {
@@ -1361,7 +1797,7 @@ impl Driver {
         // the "worker thread is gone" error at the dead slot stays the
         // reported root cause.
         if let Some(slot) = dead_slot {
-            session.fabric.poison(PoisonCause::RankFailed(slot));
+            fabric.poison(PoisonCause::RankFailed(slot));
         }
         let mut results = Vec::new();
         let mut failures: Vec<(u32, anyhow::Error)> = Vec::new();
@@ -1392,8 +1828,8 @@ impl Driver {
         // means the client asked for cancellation — report Cancelled and
         // discard (free) any outputs rather than registering them
         let free_window = || {
-            for &rank in &session.ranks {
-                match &self.ranks[rank] {
+            for handle in &handles {
+                match handle {
                     RankHandle::Local { shared, .. } => {
                         for id in out_base..out_base + out_span {
                             shared.store.free(id);
@@ -1412,7 +1848,7 @@ impl Driver {
             return TaskState::Cancelled;
         }
         if !failures.is_empty() {
-            let total = session.ranks.len();
+            let total = group_ranks.len();
             // root-cause-first reporting (protocol v5): a rank that
             // failed on its own is the cause; ranks whose errors are
             // `CommError` (PeerFailed / hard-cancel) merely unwound after
@@ -1488,7 +1924,15 @@ impl Driver {
                         cols: meta.cols,
                         name: meta.name.clone(),
                     };
-                    handles.insert(meta.id, HandleMeta { info: info.clone(), layout });
+                    handles.insert(
+                        meta.id,
+                        HandleMeta {
+                            info: info.clone(),
+                            layout,
+                            source: None,
+                            sealed: true,
+                        },
+                    );
                     outputs.push(info);
                 }
             }
@@ -1516,7 +1960,7 @@ impl Driver {
                 TaskState::Failed {
                     message: format!("{e:#}"),
                     failed_ranks: vec![],
-                    total_ranks: session.ranks.len() as u32,
+                    total_ranks: group_ranks.len() as u32,
                 }
             }
         }
@@ -1524,17 +1968,21 @@ impl Driver {
 
     fn fetch_matrix(&self, session: &Session, id: u64) -> crate::Result<ControlMsg> {
         let meta = self.handle(session, id)?;
+        // v10: the current group's data addresses travel with every fetch
+        // — after a rank replacement the client must frame its row reads
+        // to the replacement, not the corpse (`docs/recovery.md`)
         Ok(ControlMsg::FetchReady {
             info: meta.info,
             row_ranges: meta.layout.to_wire(),
+            worker_addrs: self.session_worker_addrs(session),
         })
     }
 
     fn free_matrix(&self, session: &Session, id: u64) -> crate::Result<ControlMsg> {
         let existed = session.handles.lock().unwrap().remove(&id).is_some();
         anyhow::ensure!(existed, "unknown matrix handle {id}");
-        for &rank in &session.ranks {
-            match &self.ranks[rank] {
+        for &rank in &session.ranks() {
+            match &self.rank(rank) {
                 RankHandle::Local { shared, .. } => {
                     shared.store.free(id);
                 }
@@ -1675,12 +2123,46 @@ fn task_dispatcher(driver: &Arc<Driver>, session: &Arc<Session>) {
 /// straggler messages are dropped from here on), and — only when it was
 /// the LAST running task — reset the group fabric so a poisoned group
 /// heals between tasks without yanking a live sibling's lanes.
+/// Cap on replace-and-retry attempts per task: a second worker dying
+/// during the retry is still survivable, but a pathological environment
+/// (workers dying faster than spares replay) must converge on a failure
+/// the client can see instead of looping forever.
+const MAX_REPLACE_RETRIES: usize = 2;
+
 fn execute_and_finalize(
     driver: &Arc<Driver>,
     session: &Arc<Session>,
     rec: &Arc<TaskRecord>,
 ) {
-    let state = driver.execute_task(session, rec);
+    let mut state = driver.execute_task(session, rec);
+    // survivable failure path (protocol v10): when the attempt failed
+    // because a worker process died — never for a cancelled task or a
+    // routine's own error (try_replace finds no dead rank and declines)
+    // — re-form the group around a spare, replay the dead slots' shards
+    // from their task-boundary snapshots, and run the task again from
+    // the start. Routines are deterministic functions of their (sealed,
+    // replayed-bit-identical) inputs, so the retried result is exactly
+    // the failure-free one.
+    let mut retries = 0;
+    while matches!(state, TaskState::Failed { .. })
+        && !rec.cancel.is_cancelled()
+        && retries < MAX_REPLACE_RETRIES
+    {
+        if !driver.try_replace_dead_ranks(session) {
+            break;
+        }
+        retries += 1;
+        log::info!(
+            "session {}: retrying task {} ({}.{}) on the re-formed group \
+             (attempt {})",
+            session.id,
+            rec.id,
+            rec.lib_name,
+            rec.routine,
+            retries + 1,
+        );
+        state = driver.execute_task(session, rec);
+    }
     let outcome = match &state {
         TaskState::Done { .. } => TaskOutcome::Done,
         TaskState::Cancelled => TaskOutcome::Cancelled,
@@ -1688,6 +2170,7 @@ fn execute_and_finalize(
     };
     let lane = rec.lane.load(Ordering::SeqCst);
     {
+        let fabric = session.fabric();
         let mut st = session.tasks.state.lock().unwrap();
         st.set_terminal(rec.id, state);
         st.running.remove(&rec.id);
@@ -1697,13 +2180,13 @@ fn execute_and_finalize(
         // observes the task gone from `running` and stands down). Every
         // rank has replied by now, so no rank is inside a collective on
         // this lane.
-        session.fabric.retire_lane(lane);
+        fabric.retire_lane(lane);
         // reset the whole fabric only between tasks (running set empty):
         // it clears group-wide poison (e.g. a rank death) and drains
         // undelivered messages, which would be destructive while a
         // sibling task is mid-collective on its own lane
         if st.running.is_empty() {
-            session.fabric.reset();
+            fabric.reset();
         }
         // count the outcome BEFORE waking waiters: a client whose
         // wait() just returned may read sched_metrics() immediately
@@ -1726,10 +2209,11 @@ fn execute_and_finalize(
 fn schedule_hard_cancel(session: Arc<Session>, task_id: u64, grace: Duration) {
     std::thread::spawn(move || {
         std::thread::sleep(grace);
+        let fabric = session.fabric();
         let st = session.tasks.state.lock().unwrap();
         if let Some(rec) = st.running.get(&task_id) {
             let lane = rec.lane.load(Ordering::SeqCst);
-            session.fabric.poison_lane(lane, PoisonCause::HardCancel);
+            fabric.poison_lane(lane, PoisonCause::HardCancel);
             log::warn!(
                 "session {}: task {task_id} ignored cooperative cancellation for \
                  {grace:?}; lane {lane} poisoned (hard cancel)",
@@ -1821,17 +2305,48 @@ impl ServerHandle {
         self.driver.sessions.lock().unwrap().len()
     }
 
-    /// Total matrix blocks across all *in-process* worker stores
-    /// (test/debug introspection: teardown must drive a session's share
-    /// to zero). Worker processes own their stores — remote ranks
-    /// contribute nothing here.
+    /// Total matrix blocks across all worker stores (test/debug
+    /// introspection: teardown must drive a session's share to zero).
+    /// In-process ranks are read directly; live worker processes answer
+    /// a `StoreStats` round trip (v10) — dead ones hold nothing.
     pub fn total_blocks(&self) -> usize {
-        self.driver
+        self.remote_store_stats().0
+            + self
+                .driver
+                .ranks
+                .read()
+                .unwrap()
+                .iter()
+                .filter_map(|r| r.local())
+                .map(|w| w.store.len())
+                .sum::<usize>()
+    }
+
+    /// `(blocks, spill_segments)` summed over live worker processes
+    /// (empty/zero for local pools).
+    fn remote_store_stats(&self) -> (usize, usize) {
+        let remotes: Vec<Arc<RemoteWorker>> = self
+            .driver
             .ranks
+            .read()
+            .unwrap()
             .iter()
-            .filter_map(|r| r.local())
-            .map(|w| w.store.len())
-            .sum()
+            .filter_map(|r| r.remote().cloned())
+            .filter(|w| !w.is_dead())
+            .collect();
+        let (mut blocks, mut segs) = (0usize, 0usize);
+        for w in remotes {
+            match w.request_ack(|req_id| WorkMsg::StoreStats { req_id }) {
+                Ok((packed, _)) => {
+                    blocks += (packed >> 32) as usize;
+                    segs += (packed & 0xffff_ffff) as usize;
+                }
+                Err(e) => {
+                    log::warn!("store stats from worker {}: {e:#}", w.rank)
+                }
+            }
+        }
+        (blocks, segs)
     }
 
     /// Scheduler backpressure snapshot: per-class admission-queue depth,
@@ -1849,7 +2364,7 @@ impl ServerHandle {
     /// AND came back during the run.
     pub fn storage_metrics(&self) -> StorageSnapshot {
         let mut total = StorageSnapshot::default();
-        for w in self.driver.ranks.iter().filter_map(|r| r.local()) {
+        for w in self.driver.ranks.read().unwrap().iter().filter_map(|r| r.local()) {
             total.merge(&w.store.storage_metrics().snapshot());
         }
         total
@@ -1860,7 +2375,7 @@ impl ServerHandle {
     /// closed session's entry to zero — and off this list.
     pub fn storage_usage(&self) -> Vec<(u64, super::store::SessionUsage)> {
         let mut by: HashMap<u64, super::store::SessionUsage> = HashMap::new();
-        for w in self.driver.ranks.iter().filter_map(|r| r.local()) {
+        for w in self.driver.ranks.read().unwrap().iter().filter_map(|r| r.local()) {
             for (sid, u) in w.store.usage() {
                 let e = by.entry(sid).or_default();
                 e.bytes_resident += u.bytes_resident;
@@ -1874,14 +2389,37 @@ impl ServerHandle {
     }
 
     /// Live spill-file segments across all ranks (a freed session must
-    /// leave none behind).
+    /// leave none behind). Live worker processes are polled over their
+    /// work socket (v10 `StoreStats`), same as [`ServerHandle::total_blocks`].
     pub fn total_spill_segments(&self) -> usize {
-        self.driver
-            .ranks
-            .iter()
-            .filter_map(|r| r.local())
-            .map(|w| w.store.spill_segments())
-            .sum()
+        self.remote_store_stats().1
+            + self
+                .driver
+                .ranks
+                .read()
+                .unwrap()
+                .iter()
+                .filter_map(|r| r.local())
+                .map(|w| w.store.spill_segments())
+                .sum::<usize>()
+    }
+
+    /// The attach listener address for late `alchemist worker --connect`
+    /// adoption (`None` for local pools).
+    pub fn attach_addr(&self) -> Option<String> {
+        let addr = self.driver.attach_addr.lock().unwrap().clone();
+        if addr.is_empty() {
+            None
+        } else {
+            Some(addr)
+        }
+    }
+
+    /// Standby ranks currently in the spare pool
+    /// (`scheduler.spare_workers` plus adopted late joiners, minus
+    /// replacements consumed by rank failures).
+    pub fn spare_workers(&self) -> usize {
+        self.driver.allocator.spare_count()
     }
 
     /// Per-session task backlog (which tenant the global `queued_tasks`
@@ -1914,7 +2452,9 @@ impl AlchemistServer {
     /// `fabric.mode` picks the pool's shape: threads in this process
     /// (`local`, the seed behavior) or spawned `alchemist worker`
     /// processes attached over TCP (`tcp`, protocol v8 —
-    /// `docs/fabric.md`).
+    /// `docs/fabric.md`). `scheduler.spare_workers` additional standby
+    /// ranks are built alongside the pool, held out of admission, and
+    /// consumed by rank replacement (protocol v10, `docs/recovery.md`).
     pub fn start(cfg: Config, num_workers: usize) -> crate::Result<ServerHandle> {
         anyhow::ensure!(num_workers >= 1, "need at least one worker");
         match cfg.fabric.mode {
@@ -1938,11 +2478,13 @@ impl AlchemistServer {
         let compute_pool = ThreadPool::new(avail);
 
         // worker shared state; communicators are session-scoped and bound
-        // at handshake time
+        // at handshake time. Ranks past `num_workers` are the standby
+        // spares (admission never grants them; see GroupAllocator).
+        let total = num_workers + cfg.scheduler.spare_workers;
         let mut ranks = Vec::new();
         let mut listener_stops = Vec::new();
 
-        for rank in 0..num_workers {
+        for rank in 0..total {
             let shared = Arc::new(WorkerShared {
                 rank,
                 // each rank gets its own counters (no cross-rank atomic
@@ -1986,10 +2528,12 @@ impl AlchemistServer {
         Self::finish_start(
             cfg,
             ranks,
+            num_workers,
             compute_pool,
             threads,
             listener_stops,
             Vec::new(),
+            None,
         )
     }
 
@@ -2014,9 +2558,11 @@ impl AlchemistServer {
             .map(|(k, v)| format!("{k}={v}"))
             .collect::<Vec<_>>()
             .join(",");
-        let mut children: Vec<Option<Child>> = Vec::with_capacity(num_workers);
+        // ranks past `num_workers` are the standby spares
+        let total = num_workers + cfg.scheduler.spare_workers;
+        let mut children: Vec<Option<Child>> = Vec::with_capacity(total);
         let attached = (|| -> crate::Result<Vec<RankHandle>> {
-            for rank in 0..num_workers {
+            for rank in 0..total {
                 let mut cmd = Command::new(&exe);
                 cmd.arg("worker")
                     .arg("--connect")
@@ -2036,9 +2582,9 @@ impl AlchemistServer {
             let deadline = Instant::now() + attach_timeout;
             listener.set_nonblocking(true).context("attach socket setup")?;
             let mut slots: Vec<Option<RankHandle>> =
-                (0..num_workers).map(|_| None).collect();
+                (0..total).map(|_| None).collect();
             let mut count = 0;
-            while count < num_workers {
+            while count < total {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         stream.set_nonblocking(false)?;
@@ -2051,9 +2597,9 @@ impl AlchemistServer {
                             remaining,
                         )?;
                         anyhow::ensure!(
-                            w.rank < num_workers,
+                            w.rank < total,
                             "worker attached claiming rank {} of a \
-                             {num_workers}-rank pool",
+                             {total}-rank pool",
                             w.rank
                         );
                         anyhow::ensure!(
@@ -2067,7 +2613,7 @@ impl AlchemistServer {
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         anyhow::ensure!(
                             Instant::now() < deadline,
-                            "only {count} of {num_workers} worker processes \
+                            "only {count} of {total} worker processes \
                              attached within {:.1}s (fabric.attach_timeout_s)",
                             attach_timeout.as_secs_f64()
                         );
@@ -2094,19 +2640,36 @@ impl AlchemistServer {
             }
         };
         let compute_pool = ThreadPool::new(1);
-        Self::finish_start(cfg, ranks, compute_pool, Vec::new(), Vec::new(), children)
+        Self::finish_start(
+            cfg,
+            ranks,
+            num_workers,
+            compute_pool,
+            Vec::new(),
+            Vec::new(),
+            children,
+            Some((listener, attach_addr)),
+        )
     }
 
     /// Common tail of both modes: control listener, driver, log line.
+    /// `num_workers` is the admittable pool size — `ranks` may be longer,
+    /// the tail being the standby spares. A tcp pool passes its attach
+    /// listener back in so it keeps serving: externally launched
+    /// `worker --connect` processes are adopted into the spare pool.
+    #[allow(clippy::too_many_arguments)]
     fn finish_start(
         cfg: Config,
         ranks: Vec<RankHandle>,
+        num_workers: usize,
         compute_pool: ThreadPool,
         mut threads: Vec<JoinHandle<()>>,
         mut listener_stops: Vec<Arc<AtomicBool>>,
         children: Vec<Option<Child>>,
+        attach: Option<(TcpListener, String)>,
     ) -> crate::Result<ServerHandle> {
-        let num_workers = ranks.len();
+        let spares: Vec<usize> = (num_workers..ranks.len()).collect();
+        let num_spares = spares.len();
         let control = Server::bind(0)?;
         let control_addr = control.addr().to_string();
         listener_stops.push(control.stop_flag());
@@ -2114,11 +2677,12 @@ impl AlchemistServer {
         let driver = Arc::new(Driver {
             allocator: GroupAllocator::new(
                 num_workers,
+                spares,
                 cfg.scheduler.clone(),
                 metrics.clone(),
             ),
             cfg: cfg.clone(),
-            ranks,
+            ranks: RwLock::new(ranks),
             registry: Registry::new(),
             engine_threads_committed: Mutex::new(0),
             storage_committed: Mutex::new(0),
@@ -2127,6 +2691,9 @@ impl AlchemistServer {
             next_session: AtomicU64::new(1),
             next_task: AtomicU64::new(1),
             sessions: Mutex::new(HashMap::new()),
+            lingering: Mutex::new(HashMap::new()),
+            linger_gen: AtomicU64::new(1),
+            attach_addr: Mutex::new(String::new()),
             stopping: AtomicBool::new(false),
             listener_stops: Mutex::new(listener_stops),
             control_addr: Mutex::new(control_addr.clone()),
@@ -2143,10 +2710,36 @@ impl AlchemistServer {
             }));
         }
 
+        // keep the attach socket open (tcp pools): externally launched
+        // `alchemist worker --connect <attach_addr>` processes are
+        // adopted into the spare pool at runtime. stop_all wake-connects
+        // the address so this thread exits with the other accept loops.
+        if let Some((listener, attach_addr)) = attach {
+            let stop = Arc::new(AtomicBool::new(false));
+            driver.listener_stops.lock().unwrap().push(stop.clone());
+            *driver.attach_addr.lock().unwrap() = attach_addr;
+            let driver2 = driver.clone();
+            let buf = cfg.transfer.buf_bytes;
+            threads.push(std::thread::spawn(move || {
+                let _ = listener.set_nonblocking(false);
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst)
+                        || driver2.stopping.load(Ordering::SeqCst)
+                    {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => adopt_external_worker(&driver2, stream, buf),
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+
         log::info!(
             "alchemist server up: control {control_addr}, {num_workers} {} \
-             workers, shared compute pool of {} threads, engine {}, max {} \
-             sessions",
+             workers (+{num_spares} spare), shared compute pool of {} \
+             threads, engine {}, max {} sessions",
             match cfg.fabric.mode {
                 FabricMode::Local => "in-process",
                 FabricMode::Tcp => "process-separated",
@@ -2200,6 +2793,34 @@ fn handle_session_op(
     }
 }
 
+/// Adopt an externally launched `alchemist worker --connect` process
+/// into the spare pool (protocol v10, `docs/recovery.md`): the same
+/// attach handshake as startup, but the claimed rank id is advisory —
+/// the pool index is the next rank-table slot, and the worker goes
+/// straight into the allocator's spare list, never into admission.
+fn adopt_external_worker(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize) {
+    match RemoteWorker::attach(stream, buf_bytes, Duration::from_secs(10)) {
+        Ok(w) => {
+            let claimed = w.rank;
+            let rank = {
+                let mut ranks = driver.ranks.write().unwrap();
+                ranks.push(RankHandle::Remote(w));
+                ranks.len() - 1
+            };
+            driver.allocator.add_spare(rank);
+            log::info!(
+                "late worker adopted as global rank {rank} (spare{})",
+                if claimed == rank {
+                    String::new()
+                } else {
+                    format!("; its --rank-id {claimed} is advisory")
+                },
+            );
+        }
+        Err(e) => log::warn!("late worker attach failed: {e:#}"),
+    }
+}
+
 fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize) {
     if driver.stopping.load(Ordering::SeqCst) {
         return; // wake-up connection during shutdown
@@ -2250,10 +2871,48 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
                             let ack = ControlMsg::HandshakeAck {
                                 session_id: s.id,
                                 version: PROTOCOL_VERSION,
-                                granted_workers: s.ranks.len() as u32,
+                                granted_workers: s.group_size() as u32,
                                 worker_addrs: driver.session_worker_addrs(&s),
                                 rows_per_frame: s.transfer.rows_per_frame as u32,
                                 buf_bytes: s.transfer.buf_bytes as u64,
+                                // the reconnect credential (protocol v10):
+                                // present it in Reattach within the linger
+                                // window to resume this session
+                                session_token: s.token,
+                            };
+                            session = Some(s);
+                            Ok(ack)
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+            }
+            // resume a parked session on a fresh connection (protocol
+            // v10): the token from the original handshake ack is the
+            // credential; the ack carries everything `connect` would
+            // have negotiated plus the ids of every retained task, so
+            // the client can re-list and collect results it missed
+            ControlMsg::Reattach { token } => {
+                if session.is_some() {
+                    Ok(ControlMsg::Error {
+                        message: "session already established on this connection"
+                            .into(),
+                    })
+                } else {
+                    match driver.reattach(token) {
+                        Ok(s) => {
+                            let mut task_ids: Vec<u64> = {
+                                let st = s.tasks.state.lock().unwrap();
+                                st.slots.keys().copied().collect()
+                            };
+                            task_ids.sort_unstable();
+                            let ack = ControlMsg::ReattachAck {
+                                session_id: s.id,
+                                granted_workers: s.group_size() as u32,
+                                worker_addrs: driver.session_worker_addrs(&s),
+                                rows_per_frame: s.transfer.rows_per_frame as u32,
+                                buf_bytes: s.transfer.buf_bytes as u64,
+                                task_ids,
                             };
                             session = Some(s);
                             Ok(ack)
@@ -2299,8 +2958,11 @@ fn handle_control_conn(driver: &Arc<Driver>, stream: TcpStream, buf_bytes: usize
             break;
         }
     }
+    // dropped connection: close immediately (the seed contract — client
+    // `stop()` IS a socket drop) unless lingering is configured, in which
+    // case the session parks awaiting Reattach (protocol v10)
     if let Some(s) = session.take() {
-        driver.close_session(&s);
+        driver.park_or_close(&s);
     }
 }
 

@@ -187,6 +187,16 @@ struct SpillInner {
     end: u64,
 }
 
+/// Spill-file magic: first 8 bytes of every well-formed spill file. The
+/// trailing digit doubles as a coarse format generation.
+const SPILL_MAGIC: [u8; 8] = *b"ALSPILL1";
+/// Spill on-disk format version (header field, little-endian).
+const SPILL_FORMAT: u32 = 1;
+/// Header layout: 8-byte magic + u32 version + u32 reserved. Segment
+/// offsets start past it, so offset 0 is never a valid segment and a
+/// zero-filled torn file can never masquerade as one.
+const SPILL_HEADER_BYTES: u64 = 16;
+
 /// Per-rank ledgered spill file: whole-block segments tracked by a
 /// `block id → (offset, bytes, session)` ledger with a free-list for
 /// hole reuse. Payload is stored native-endian — segments are strictly
@@ -202,6 +212,43 @@ impl SpillFile {
         SpillFile { path, inner: Mutex::new(SpillInner::default()) }
     }
 
+    /// Validate (or lay down) the spill header on a freshly opened file.
+    /// The ledger lives only in memory, so any payload found on disk is
+    /// stale by definition — a valid header is truncated back to
+    /// header-only; a torn or foreign file is rebuilt from scratch with
+    /// a warning (crash-safety satellite: never trust leftover bytes).
+    fn validate_or_init_header(file: &mut File, path: &PathBuf) -> crate::Result<()> {
+        let len = file.metadata()?.len();
+        if len >= SPILL_HEADER_BYTES {
+            let mut hdr = [0u8; SPILL_HEADER_BYTES as usize];
+            file.seek(SeekFrom::Start(0))?;
+            file.read_exact(&mut hdr)?;
+            let version = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+            if hdr[..8] == SPILL_MAGIC && version == SPILL_FORMAT {
+                // well-formed, but its segments belong to a dead ledger
+                file.set_len(SPILL_HEADER_BYTES)?;
+                return Ok(());
+            }
+            eprintln!(
+                "[alchemist] rebuilding torn spill file {:?} (bad magic/version)",
+                path
+            );
+        } else if len > 0 {
+            eprintln!(
+                "[alchemist] rebuilding torn spill file {:?} (truncated header: {len} bytes)",
+                path
+            );
+        }
+        file.set_len(0)?;
+        file.seek(SeekFrom::Start(0))?;
+        let mut hdr = [0u8; SPILL_HEADER_BYTES as usize];
+        hdr[..8].copy_from_slice(&SPILL_MAGIC);
+        hdr[8..12].copy_from_slice(&SPILL_FORMAT.to_le_bytes());
+        file.write_all(&hdr)
+            .map_err(|e| anyhow::anyhow!("writing spill header to {path:?}: {e}"))?;
+        Ok(())
+    }
+
     /// Write one block's payload into a segment (first-fit hole or
     /// append); returns the segment size in bytes.
     fn write_block(&self, id: u64, session: u64, data: &[f64]) -> crate::Result<u64> {
@@ -212,14 +259,15 @@ impl SpillFile {
             "block {id} already has a spill segment"
         );
         if inner.file.is_none() {
-            let f = std::fs::OpenOptions::new()
+            let mut f = std::fs::OpenOptions::new()
                 .read(true)
                 .write(true)
                 .create(true)
-                .truncate(true)
                 .open(&self.path)
                 .map_err(|e| anyhow::anyhow!("creating spill file {:?}: {e}", self.path))?;
+            Self::validate_or_init_header(&mut f, &self.path)?;
             inner.file = Some(f);
+            inner.end = inner.end.max(SPILL_HEADER_BYTES);
         }
         let offset = match inner.free.iter().position(|&(_, cap)| cap >= bytes) {
             Some(i) => {
@@ -271,6 +319,17 @@ impl SpillFile {
             .file
             .as_mut()
             .ok_or_else(|| anyhow::anyhow!("spill file not open"))?;
+        // length check against the live file: a segment extending past
+        // EOF means something truncated the file behind the ledger —
+        // fail with a diagnosis instead of a bare short-read error
+        let file_len = file.metadata()?.len();
+        anyhow::ensure!(
+            seg.offset + seg.bytes <= file_len,
+            "torn spill file {:?}: block {id}'s segment ends at {} but the \
+             file is {file_len} bytes",
+            self.path,
+            seg.offset + seg.bytes,
+        );
         file.seek(SeekFrom::Start(seg.offset + (start_elem * 8) as u64))?;
         let mut out = vec![0.0f64; n_elems];
         // Safety: reading raw bytes into a plain f64 buffer of exactly
@@ -333,6 +392,9 @@ struct StoreShared {
     rank: usize,
     /// Per-session per-rank heap cap; 0 = unlimited.
     budget_bytes: u64,
+    /// Task-boundary snapshot directory (`storage.checkpoint_dir`);
+    /// empty = checkpointing off. See `docs/recovery.md`.
+    checkpoint_dir: String,
     metrics: Arc<StorageMetrics>,
     /// Monotonic LRU clock; every read stamps its block.
     clock: AtomicU64,
@@ -995,6 +1057,16 @@ fn spill_path(cfg_dir: &str, rank: usize) -> PathBuf {
     ))
 }
 
+/// Task-boundary checkpoint file for one block's local shard. The name
+/// is a pure function of `(session, matrix id, slot)` so the coordinator
+/// can derive the same path when replaying a dead rank's shards onto a
+/// spare (`StoreRestore`) without ever asking the dead rank. The file
+/// holds ONLY the slot's local rows (an `hdf5sim` matrix of
+/// `local_rows × cols`), not the global matrix.
+pub fn checkpoint_path(dir: &str, session: u64, id: u64, slot: usize) -> PathBuf {
+    PathBuf::from(dir).join(format!("alchemist-ckpt-s{session}-m{id}-slot{slot}.h5sim"))
+}
+
 /// Matrix-id → block map for one worker rank. Interior-locked: lookups
 /// take a short read lock, payload writes synchronize per block (see the
 /// module docs), so the store itself never serializes concurrent
@@ -1030,6 +1102,7 @@ impl MatrixStore {
                 budget_bytes: 0,
                 total_bytes: 0,
                 spill_dir: String::new(),
+                checkpoint_dir: String::new(),
             },
             Arc::new(StorageMetrics::new()),
         )
@@ -1048,12 +1121,18 @@ impl MatrixStore {
             shared: Arc::new(StoreShared {
                 rank,
                 budget_bytes: cfg.budget_bytes,
+                checkpoint_dir: cfg.checkpoint_dir.clone(),
                 metrics,
                 clock: AtomicU64::new(0),
                 ledger: Mutex::new(HashMap::new()),
                 spill: SpillFile::new(spill_path(&cfg.spill_dir, rank)),
             }),
         }
+    }
+
+    /// The task-boundary checkpoint directory (empty = off).
+    pub fn checkpoint_dir(&self) -> &str {
+        &self.shared.checkpoint_dir
     }
 
     pub fn rank(&self) -> usize {
@@ -1220,7 +1299,10 @@ impl MatrixStore {
             self.shared.uncharge_resident(session, bytes);
             return Err(e);
         }
-        self.rebalance(session)
+        self.rebalance(session)?;
+        // born-sealed blocks (routine outputs, restored shards) hit the
+        // checkpoint the moment they land — a task boundary by definition
+        self.checkpoint_block(&self.get(id)?)
     }
 
     /// Register an mmap-backed block (`LoadMatrix` direct ingest). Born
@@ -1277,7 +1359,28 @@ impl MatrixStore {
     }
 
     pub fn seal(&self, id: u64) -> crate::Result<u64> {
-        Ok(self.get(id)?.seal())
+        let b = self.get(id)?;
+        let rows = b.seal();
+        self.checkpoint_block(&b)?;
+        Ok(rows)
+    }
+
+    /// Write block `b`'s local shard to its task-boundary checkpoint
+    /// file (no-op when checkpointing is off or the payload is mapped —
+    /// a mapped block's source file IS its checkpoint). Re-running this
+    /// for a restored block overwrites the same path, so replay is
+    /// idempotent.
+    fn checkpoint_block(&self, b: &Arc<Block>) -> crate::Result<()> {
+        let dir = &self.shared.checkpoint_dir;
+        if dir.is_empty() || b.is_mapped() {
+            return Ok(());
+        }
+        let (_, local) = b.snapshot()?;
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating checkpoint dir {dir:?}: {e}"))?;
+        let path = checkpoint_path(dir, b.session, b.id, b.slot);
+        crate::hdf5sim::write_matrix(&path, &local)
+            .map_err(|e| anyhow::anyhow!("checkpointing matrix {} to {path:?}: {e}", b.id))
     }
 
     /// Release one block's accounting (and spill segment, if any) as it
@@ -1295,6 +1398,16 @@ impl MatrixStore {
                 self.shared.uncharge_spilled(b.session, *bytes);
                 self.shared.spill.free_seg(b.id);
             }
+        }
+        // the handle is gone everywhere once free/free_session returns —
+        // its snapshot must not outlive it (leak check in the chaos soak)
+        if !self.shared.checkpoint_dir.is_empty() {
+            let _ = std::fs::remove_file(checkpoint_path(
+                &self.shared.checkpoint_dir,
+                b.session,
+                b.id,
+                b.slot,
+            ));
         }
     }
 
@@ -1366,6 +1479,7 @@ mod tests {
                 budget_bytes: budget,
                 total_bytes: 0,
                 spill_dir: String::new(),
+                checkpoint_dir: String::new(),
             },
             Arc::new(StorageMetrics::new()),
         )
@@ -1664,6 +1778,119 @@ mod tests {
         drop(span);
         // and fresh reads see the same bytes off the spill file
         assert_eq!(s.read_rows(1, 0, 5).unwrap(), a.data());
+    }
+
+    // ---- spill crash safety (v10) ----
+
+    #[test]
+    fn torn_spill_file_is_rebuilt_on_open() {
+        // a garbage file at the spill path (torn write from a crashed
+        // predecessor, or a foreign file) must be rebuilt, not trusted
+        let path = std::env::temp_dir().join(format!(
+            "alchemist-spill-torn-test-p{}.bin",
+            std::process::id()
+        ));
+        std::fs::write(&path, b"definitely not a spill header").unwrap();
+        let sf = SpillFile::new(path.clone());
+        sf.write_block(1, SID, &[1.5, -2.5, 3.0]).unwrap();
+        assert_eq!(sf.read_block_span(1, 0, 3).unwrap(), vec![1.5, -2.5, 3.0]);
+        // the rebuilt file leads with the magic and the payload sits
+        // past the header
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], &SPILL_MAGIC);
+        assert_eq!(bytes.len() as u64, SPILL_HEADER_BYTES + 3 * 8);
+        drop(sf); // Drop removes the file it owned
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn stale_segments_from_a_dead_ledger_are_dropped_on_open() {
+        // a well-formed file left by a crashed process: header is kept,
+        // stale payload truncated (the in-memory ledger that described
+        // it died with its process)
+        let path = std::env::temp_dir().join(format!(
+            "alchemist-spill-stale-test-p{}.bin",
+            std::process::id()
+        ));
+        {
+            let old = SpillFile::new(path.clone());
+            old.write_block(7, SID, &[9.0; 64]).unwrap();
+            // simulate a crash: forget the ledger without deleting the file
+            std::mem::forget(old);
+        }
+        assert!(std::fs::metadata(&path).unwrap().len() > SPILL_HEADER_BYTES);
+        let sf = SpillFile::new(path.clone());
+        sf.write_block(1, SID, &[4.0, 5.0]).unwrap();
+        // the new segment starts right after the header — stale bytes gone
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            SPILL_HEADER_BYTES + 2 * 8
+        );
+        assert_eq!(sf.read_block_span(1, 0, 2).unwrap(), vec![4.0, 5.0]);
+        drop(sf);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn truncated_spill_read_fails_with_torn_diagnosis() {
+        // something shortens the file behind the ledger's back: the next
+        // read must fail cleanly naming the file torn, not short-read
+        let path = std::env::temp_dir().join(format!(
+            "alchemist-spill-chop-test-p{}.bin",
+            std::process::id()
+        ));
+        let sf = SpillFile::new(path.clone());
+        sf.write_block(1, SID, &[2.0; 8]).unwrap();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(SPILL_HEADER_BYTES + 8)
+            .unwrap();
+        let err = sf.read_block_span(1, 0, 8).unwrap_err();
+        assert!(err.to_string().contains("torn spill file"), "got: {err}");
+    }
+
+    // ---- task-boundary checkpoints (v10) ----
+
+    #[test]
+    fn checkpoints_follow_block_lifecycle() {
+        let dir = std::env::temp_dir().join(format!(
+            "alchemist-ckpt-test-p{}",
+            std::process::id()
+        ));
+        let cfg = StorageConfig {
+            budget_bytes: 0,
+            total_bytes: 0,
+            spill_dir: String::new(),
+            checkpoint_dir: dir.display().to_string(),
+        };
+        let s = MatrixStore::with_storage(0, &cfg, Arc::new(StorageMetrics::new()));
+
+        // push-ingested block: checkpoint appears at seal time
+        s.alloc(1, "X", layout2(), 0, SID).unwrap();
+        let p1 = checkpoint_path(s.checkpoint_dir(), SID, 1, 0);
+        assert!(!p1.exists(), "no checkpoint before seal");
+        s.write_rows(1, 0, 3, &[1.25; 15]).unwrap();
+        s.seal(1).unwrap();
+        assert!(p1.exists(), "seal writes the checkpoint");
+        // the file holds exactly this slot's local rows, readable back
+        let shard = crate::hdf5sim::read_rows(&p1, 0, 5).unwrap();
+        assert_eq!((shard.rows(), shard.cols()), (5, 3));
+        assert_eq!(shard.data(), &[1.25; 15]);
+
+        // born-sealed block (routine output): checkpoint appears at insert
+        s.insert(2, "Y", layout2(), filled(2.0), 1, SID).unwrap();
+        let p2 = checkpoint_path(s.checkpoint_dir(), SID, 2, 1);
+        assert!(p2.exists(), "insert checkpoints born-sealed blocks");
+
+        // free removes the block's checkpoint; free_session the rest
+        assert!(s.free(1));
+        assert!(!p1.exists(), "free removes the checkpoint");
+        assert!(p2.exists());
+        s.free_session(SID);
+        assert!(!p2.exists(), "free_session removes the checkpoint");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[cfg(all(unix, target_endian = "little"))]

@@ -51,6 +51,9 @@ pub struct SchedMetrics {
     tasks_cancelled: AtomicU64,
     /// Submissions rejected because the session's queue was full.
     tasks_rejected: AtomicU64,
+    /// Dead ranks re-formed around a spare mid-session (v10 survivable
+    /// sessions; see `docs/recovery.md`).
+    ranks_replaced: AtomicU64,
     /// Seconds from submission to dispatch (the backpressure signal).
     queued_wait: Mutex<Stats>,
 }
@@ -101,6 +104,7 @@ pub struct SchedSnapshot {
     pub tasks_failed: u64,
     pub tasks_cancelled: u64,
     pub tasks_rejected: u64,
+    pub ranks_replaced: u64,
     pub wait_count: u64,
     pub wait_mean_s: f64,
     pub wait_max_s: f64,
@@ -176,6 +180,11 @@ impl SchedMetrics {
         self.tasks_rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A dead rank was replaced by a spare and the session re-formed.
+    pub fn rank_replaced(&self) {
+        self.ranks_replaced.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A task left the queue for a worker group; `wait_secs` is its
     /// Queued→Running latency.
     pub fn task_started(&self, wait_secs: f64) {
@@ -224,6 +233,7 @@ impl SchedMetrics {
             tasks_failed: self.tasks_failed.load(Ordering::Relaxed),
             tasks_cancelled: self.tasks_cancelled.load(Ordering::Relaxed),
             tasks_rejected: self.tasks_rejected.load(Ordering::Relaxed),
+            ranks_replaced: self.ranks_replaced.load(Ordering::Relaxed),
             wait_count: wait.count(),
             wait_mean_s: if wait.count() > 0 { wait.mean() } else { 0.0 },
             wait_max_s: if wait.count() > 0 { wait.max() } else { 0.0 },
@@ -287,6 +297,7 @@ impl SchedSnapshot {
             self.tasks_cancelled,
             self.tasks_rejected
         ));
+        s.push_str(&format!(",\"ranks_replaced\":{}", self.ranks_replaced));
         s.push_str(&format!(",\"queue_wait_s\":{{\"count\":{},", self.wait_count));
         s.push_str("\"mean\":");
         json_f64(&mut s, self.wait_mean_s);
@@ -344,6 +355,7 @@ mod tests {
         m.task_started(0.25);
         m.task_finished(TaskOutcome::Done);
         m.task_dequeued(TaskOutcome::Cancelled);
+        m.rank_replaced();
         m.session_released();
 
         let s = m.snapshot();
@@ -356,6 +368,7 @@ mod tests {
         assert_eq!(s.tasks_done, 1);
         assert_eq!(s.tasks_cancelled, 1);
         assert_eq!(s.tasks_rejected, 1);
+        assert_eq!(s.ranks_replaced, 1);
         assert_eq!(s.wait_count, 1);
         assert!((s.wait_mean_s - 0.25).abs() < 1e-12);
         assert_eq!(s.wait_max_s, 0.25);

@@ -360,6 +360,7 @@ mod tests {
                             worker_addrs: vec![],
                             rows_per_frame: 64,
                             buf_bytes: 1 << 16,
+                            session_token: 7,
                         })
                         .unwrap();
                     }

@@ -18,9 +18,23 @@ pub struct Server {
 impl Server {
     /// Bind `127.0.0.1:port` (`port = 0` for ephemeral).
     pub fn bind(port: u16) -> crate::Result<Self> {
-        let listener = TcpListener::bind(("127.0.0.1", port))
+        Self::bind_advertised(port, "")
+    }
+
+    /// Bind with an advertised host (v10, `fabric.advertise_addr`):
+    /// empty = the loopback default; non-empty binds all interfaces and
+    /// reports `advertise:port` from [`Server::addr`], so clients on
+    /// other hosts can be handed a reachable address.
+    pub fn bind_advertised(port: u16, advertise: &str) -> crate::Result<Self> {
+        let host = if advertise.is_empty() { "127.0.0.1" } else { "0.0.0.0" };
+        let listener = TcpListener::bind((host, port))
             .with_context(|| format!("binding port {port}"))?;
-        let addr = listener.local_addr()?.to_string();
+        let local = listener.local_addr()?;
+        let addr = if advertise.is_empty() {
+            local.to_string()
+        } else {
+            format!("{advertise}:{}", local.port())
+        };
         Ok(Server { listener, addr, stop: Arc::new(AtomicBool::new(false)) })
     }
 

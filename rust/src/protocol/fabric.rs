@@ -315,6 +315,31 @@ pub enum WorkMsg {
     },
     /// Exit the worker process after draining. Fire-and-forget.
     Shutdown,
+    /// Snapshot the worker's store occupancy (protocol v10, the remote
+    /// half of the chaos harness's leak accounting): acked with
+    /// `value = (blocks << 32) | spill_segments`, each saturated at
+    /// `u32::MAX` (real counts are tiny; the packing exists because
+    /// `Ack` carries one scalar).
+    StoreStats { req_id: u64 },
+    /// Replay a dead rank's shard checkpoint onto this (replacement)
+    /// worker (protocol v10, `docs/recovery.md`): read the `hdf5sim`
+    /// file at `path` — the dead rank's task-boundary snapshot — and
+    /// register it as an already-sealed block with the dead rank's
+    /// layout slot. Same field meaning as `StoreLoad`, but the file
+    /// holds ONLY this slot's rows (the checkpoint is per-shard), so
+    /// the worker reads it whole instead of slicing its range. Acked
+    /// with the restored local row count.
+    StoreRestore {
+        req_id: u64,
+        session_id: u64,
+        id: u64,
+        name: String,
+        path: String,
+        rows: u64,
+        cols: u64,
+        ranges: Vec<(u64, u64)>,
+        slot: u32,
+    },
 }
 
 impl WorkMsg {
@@ -470,6 +495,32 @@ impl WorkMsg {
                 w.u32(*slot);
             }
             WorkMsg::Shutdown => w.u8(139),
+            WorkMsg::StoreStats { req_id } => {
+                w.u8(141);
+                w.u64(*req_id);
+            }
+            WorkMsg::StoreRestore {
+                req_id,
+                session_id,
+                id,
+                name,
+                path,
+                rows,
+                cols,
+                ranges,
+                slot,
+            } => {
+                w.u8(142);
+                w.u64(*req_id);
+                w.u64(*session_id);
+                w.u64(*id);
+                w.str(name);
+                w.str(path);
+                w.u64(*rows);
+                w.u64(*cols);
+                encode_ranges(&mut w, ranges);
+                w.u32(*slot);
+            }
         }
         w.into_bytes()
     }
@@ -561,6 +612,18 @@ impl WorkMsg {
                 slot: r.u32()?,
             },
             139 => WorkMsg::Shutdown,
+            141 => WorkMsg::StoreStats { req_id: r.u64()? },
+            142 => WorkMsg::StoreRestore {
+                req_id: r.u64()?,
+                session_id: r.u64()?,
+                id: r.u64()?,
+                name: r.str()?,
+                path: r.str()?,
+                rows: r.u64()?,
+                cols: r.u64()?,
+                ranges: decode_ranges(&mut r)?,
+                slot: r.u32()?,
+            },
             tag => return Err(ProtocolError::BadTag { tag, what: "WorkMsg" }),
         };
         r.finish()?;
@@ -695,6 +758,18 @@ mod tests {
                 slot: 0,
             },
             WorkMsg::Shutdown,
+            WorkMsg::StoreStats { req_id: 16 },
+            WorkMsg::StoreRestore {
+                req_id: 17,
+                session_id: 3,
+                id: 202,
+                name: "X".into(),
+                path: "/tmp/ckpt/alchemist-ckpt-s3-m202-slot1.h5sim".into(),
+                rows: 10,
+                cols: 4,
+                ranges: vec![(0, 5), (5, 10)],
+                slot: 1,
+            },
         ];
         for m in msgs {
             let buf = m.encode();

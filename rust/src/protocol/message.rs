@@ -246,6 +246,13 @@ pub enum ControlMsg {
     /// server-side) until either side closes. Keeps session connections
     /// strictly request/reply. See `docs/scheduler.md`.
     SubscribeMetrics { interval_ms: u64 },
+    /// v10: reclaim a lingering session on a FRESH connection (instead
+    /// of a handshake). `token` is the `session_token` the original
+    /// handshake ack carried; within `scheduler.session_linger_s` of the
+    /// old connection dropping, the server answers `ReattachAck` and the
+    /// connection serves the session as if it had never dropped. An
+    /// unknown or expired token answers `Error`. See `docs/recovery.md`.
+    Reattach { token: u64 },
 
     // server -> client
     HandshakeAck {
@@ -262,6 +269,11 @@ pub enum ControlMsg {
         /// Effective socket buffer size after clamping; 0 only from
         /// pre-v3 servers.
         buf_bytes: u64,
+        /// Durable session identity for `Reattach` (v10); 0 from pre-v10
+        /// servers, or when the server retains nothing on disconnect
+        /// (`scheduler.session_linger_s = 0`). Elided at 0 so the frame
+        /// keeps the v9 wire shape.
+        session_token: u64,
     },
     LibraryRegistered { name: String },
     MatrixCreated {
@@ -274,7 +286,17 @@ pub enum ControlMsg {
     TaskSubmitted { task_id: u64 },
     /// Reply to `TaskStatus` / `CancelTask` / `WaitTask`.
     TaskStatusReply { task_id: u64, state: TaskState },
-    FetchReady { info: MatrixInfo, row_ranges: Vec<(u64, u64)> },
+    /// Reply to `FetchMatrix`. v10: may carry refreshed worker pull
+    /// addresses (index = group-local rank) when the session's group
+    /// changed since the handshake — after a rank replacement the
+    /// original ack's address for the dead slot points at a dead
+    /// process. Empty (elided, the v9 wire shape) means the handshake
+    /// addresses are still current.
+    FetchReady {
+        info: MatrixInfo,
+        row_ranges: Vec<(u64, u64)>,
+        worker_addrs: Vec<String>,
+    },
     /// Ack of `LoadMatrix`: the file validated and every worker mapped
     /// and registered its shard. Shape comes from the file header.
     LoadDone { info: MatrixInfo, row_ranges: Vec<(u64, u64)> },
@@ -289,6 +311,20 @@ pub enum ControlMsg {
     /// a protocol decoder of their own. `seq` increments per snapshot so
     /// a consumer can detect drops.
     MetricsSnapshot { seq: u64, json: String },
+    /// v10: ack of `Reattach` — everything a reconnecting client needs
+    /// to resume: the session id, the (possibly re-formed) worker group
+    /// and its current pull addresses, the effective transfer settings,
+    /// and the ids of every task the retained table still knows about
+    /// (re-queryable via `TaskStatus` / `WaitTask`). See
+    /// `docs/recovery.md`.
+    ReattachAck {
+        session_id: u64,
+        granted_workers: u32,
+        worker_addrs: Vec<String>,
+        rows_per_frame: u32,
+        buf_bytes: u64,
+        task_ids: Vec<u64>,
+    },
 }
 
 impl ControlMsg {
@@ -388,6 +424,10 @@ impl ControlMsg {
                 w.u8(13);
                 w.u64(*interval_ms);
             }
+            ControlMsg::Reattach { token } => {
+                w.u8(14);
+                w.u64(*token);
+            }
             ControlMsg::HandshakeAck {
                 session_id,
                 version,
@@ -395,6 +435,7 @@ impl ControlMsg {
                 worker_addrs,
                 rows_per_frame,
                 buf_bytes,
+                session_token,
             } => {
                 w.u8(128);
                 w.u64(*session_id);
@@ -406,6 +447,11 @@ impl ControlMsg {
                 }
                 w.u32(*rows_per_frame);
                 w.u64(*buf_bytes);
+                // elided at 0 (no linger, nothing to reattach to) so the
+                // frame keeps the v9 wire shape
+                if *session_token != 0 {
+                    w.u64(*session_token);
+                }
             }
             ControlMsg::LibraryRegistered { name } => {
                 w.u8(129);
@@ -432,10 +478,18 @@ impl ControlMsg {
                 w.u64(*task_id);
                 state.encode(&mut w);
             }
-            ControlMsg::FetchReady { info, row_ranges } => {
+            ControlMsg::FetchReady { info, row_ranges, worker_addrs } => {
                 w.u8(133);
                 info.encode(&mut w);
                 encode_ranges(&mut w, row_ranges);
+                // elided when the handshake addresses are still current,
+                // keeping the v9 wire shape
+                if !worker_addrs.is_empty() {
+                    w.u32(worker_addrs.len() as u32);
+                    for a in worker_addrs {
+                        w.str(a);
+                    }
+                }
             }
             ControlMsg::LoadDone { info, row_ranges } => {
                 w.u8(140);
@@ -462,6 +516,28 @@ impl ControlMsg {
                 w.u8(141);
                 w.u64(*seq);
                 w.str(json);
+            }
+            ControlMsg::ReattachAck {
+                session_id,
+                granted_workers,
+                worker_addrs,
+                rows_per_frame,
+                buf_bytes,
+                task_ids,
+            } => {
+                w.u8(142);
+                w.u64(*session_id);
+                w.u32(*granted_workers);
+                w.u32(worker_addrs.len() as u32);
+                for a in worker_addrs {
+                    w.str(a);
+                }
+                w.u32(*rows_per_frame);
+                w.u64(*buf_bytes);
+                w.u32(task_ids.len() as u32);
+                for t in task_ids {
+                    w.u64(*t);
+                }
             }
         }
         w.into_bytes()
@@ -525,6 +601,7 @@ impl ControlMsg {
             11 => ControlMsg::WaitTask { task_id: r.u64()?, timeout_ms: r.u64()? },
             12 => ControlMsg::LoadMatrix { name: r.str()?, path: r.str()? },
             13 => ControlMsg::SubscribeMetrics { interval_ms: r.u64()? },
+            14 => ControlMsg::Reattach { token: r.u64()? },
             128 => {
                 let session_id = r.u64()?;
                 let version = r.u32()?;
@@ -535,6 +612,8 @@ impl ControlMsg {
                 // pre-v3 acks stop after the addresses
                 let rows_per_frame = if r.remaining() > 0 { r.u32()? } else { 0 };
                 let buf_bytes = if r.remaining() > 0 { r.u64()? } else { 0 };
+                // pre-v10 acks stop after buf_bytes
+                let session_token = if r.remaining() > 0 { r.u64()? } else { 0 };
                 ControlMsg::HandshakeAck {
                     session_id,
                     version,
@@ -542,6 +621,7 @@ impl ControlMsg {
                     worker_addrs,
                     rows_per_frame,
                     buf_bytes,
+                    session_token,
                 }
             }
             129 => ControlMsg::LibraryRegistered { name: r.str()? },
@@ -558,10 +638,19 @@ impl ControlMsg {
                 task_id: r.u64()?,
                 state: TaskState::decode(&mut r)?,
             },
-            133 => ControlMsg::FetchReady {
-                info: MatrixInfo::decode(&mut r)?,
-                row_ranges: decode_ranges(&mut r)?,
-            },
+            133 => {
+                let info = MatrixInfo::decode(&mut r)?;
+                let row_ranges = decode_ranges(&mut r)?;
+                // pre-v10 frames stop after the ranges (handshake
+                // addresses still current)
+                let worker_addrs = if r.remaining() > 0 {
+                    let n = r.u32()?;
+                    (0..n).map(|_| r.str()).collect::<Result<_, _>>()?
+                } else {
+                    Vec::new()
+                };
+                ControlMsg::FetchReady { info, row_ranges, worker_addrs }
+            }
             140 => ControlMsg::LoadDone {
                 info: MatrixInfo::decode(&mut r)?,
                 row_ranges: decode_ranges(&mut r)?,
@@ -577,6 +666,25 @@ impl ControlMsg {
             136 => ControlMsg::Error { message: r.str()? },
             137 => ControlMsg::Bye,
             141 => ControlMsg::MetricsSnapshot { seq: r.u64()?, json: r.str()? },
+            142 => {
+                let session_id = r.u64()?;
+                let granted_workers = r.u32()?;
+                let n = r.u32()?;
+                let worker_addrs =
+                    (0..n).map(|_| r.str()).collect::<Result<_, _>>()?;
+                let rows_per_frame = r.u32()?;
+                let buf_bytes = r.u64()?;
+                let n = r.u32()?;
+                let task_ids = (0..n).map(|_| r.u64()).collect::<Result<_, _>>()?;
+                ControlMsg::ReattachAck {
+                    session_id,
+                    granted_workers,
+                    worker_addrs,
+                    rows_per_frame,
+                    buf_bytes,
+                    task_ids,
+                }
+            }
             tag => return Err(ProtocolError::BadTag { tag, what: "ControlMsg" }),
         };
         r.finish()?;
@@ -892,7 +1000,17 @@ mod tests {
                 request_workers: 4,
                 rows_per_frame: 128,
                 buf_bytes: 1 << 20,
+                priority: DEFAULT_PRIORITY,
             },
+            ControlMsg::Handshake {
+                client_name: "urgent-app".into(),
+                version: 10,
+                request_workers: 2,
+                rows_per_frame: 0,
+                buf_bytes: 0,
+                priority: 3,
+            },
+            ControlMsg::Reattach { token: 0xDEAD_BEEF_0123 },
             ControlMsg::RegisterLibrary { name: "skylark".into(), path: "builtin:skylark".into() },
             ControlMsg::CreateMatrix { name: "X".into(), rows: 10, cols: 4 },
             ControlMsg::SealMatrix { id: 3 },
@@ -924,6 +1042,24 @@ mod tests {
                 worker_addrs: vec!["127.0.0.1:4001".into(), "127.0.0.1:4002".into()],
                 rows_per_frame: 64,
                 buf_bytes: 1 << 20,
+                session_token: 0,
+            },
+            ControlMsg::HandshakeAck {
+                session_id: 9,
+                version: 10,
+                granted_workers: 2,
+                worker_addrs: vec!["127.0.0.1:4001".into(), "127.0.0.1:4002".into()],
+                rows_per_frame: 64,
+                buf_bytes: 1 << 20,
+                session_token: 0x5E55_10F0,
+            },
+            ControlMsg::ReattachAck {
+                session_id: 9,
+                granted_workers: 2,
+                worker_addrs: vec!["127.0.0.1:4001".into(), "127.0.0.1:4002".into()],
+                rows_per_frame: 64,
+                buf_bytes: 1 << 20,
+                task_ids: vec![3, 7, 12],
             },
             ControlMsg::LibraryRegistered { name: "skylark".into() },
             ControlMsg::MatrixCreated { id: 3, row_ranges: vec![(0, 5), (5, 10)] },
@@ -956,6 +1092,12 @@ mod tests {
             ControlMsg::FetchReady {
                 info: MatrixInfo { id: 4, rows: 4, cols: 4, name: "W".into() },
                 row_ranges: vec![(0, 4)],
+                worker_addrs: vec![],
+            },
+            ControlMsg::FetchReady {
+                info: MatrixInfo { id: 4, rows: 4, cols: 4, name: "W".into() },
+                row_ranges: vec![(0, 2), (2, 4)],
+                worker_addrs: vec!["127.0.0.1:4001".into(), "127.0.0.1:4005".into()],
             },
             ControlMsg::Freed { id: 4 },
             ControlMsg::MatrixList { infos: vec![] },
@@ -985,6 +1127,7 @@ mod tests {
                 request_workers: 0,
                 rows_per_frame: 0,
                 buf_bytes: 0,
+                priority: DEFAULT_PRIORITY,
             }
         );
     }
@@ -1007,6 +1150,7 @@ mod tests {
                 request_workers: 3,
                 rows_per_frame: 0,
                 buf_bytes: 0,
+                priority: DEFAULT_PRIORITY,
             }
         );
         // same for the data-socket handshake
@@ -1033,6 +1177,7 @@ mod tests {
             request_workers: 2,
             rows_per_frame: 0,
             buf_bytes: 0,
+            priority: DEFAULT_PRIORITY,
         };
         let mut v2 = Writer::new();
         v2.u8(0);
@@ -1054,6 +1199,51 @@ mod tests {
         v2.u32(1);
         assert_eq!(msg.encode(), v2.into_bytes());
         assert_eq!(DataMsg::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
+    fn tokenless_ack_and_addrless_fetch_keep_v9_wire_shape() {
+        // a v10 server with linger disabled (token = 0) must emit an ack
+        // byte-identical to the v9 frame, and a hand-built v9 ack must
+        // decode with token 0 (nothing to reattach to)
+        let msg = ControlMsg::HandshakeAck {
+            session_id: 9,
+            version: 10,
+            granted_workers: 1,
+            worker_addrs: vec!["127.0.0.1:4001".into()],
+            rows_per_frame: 64,
+            buf_bytes: 1 << 20,
+            session_token: 0,
+        };
+        let mut v9 = Writer::new();
+        v9.u8(128);
+        v9.u64(9);
+        v9.u32(10);
+        v9.u32(1);
+        v9.u32(1);
+        v9.str("127.0.0.1:4001");
+        v9.u32(64);
+        v9.u64(1 << 20);
+        assert_eq!(msg.encode(), v9.into_bytes());
+        assert_eq!(ControlMsg::decode(&msg.encode()).unwrap(), msg);
+
+        // same chain for FetchReady without refreshed addresses
+        let msg = ControlMsg::FetchReady {
+            info: MatrixInfo { id: 4, rows: 4, cols: 2, name: "W".into() },
+            row_ranges: vec![(0, 4)],
+            worker_addrs: vec![],
+        };
+        let mut v9 = Writer::new();
+        v9.u8(133);
+        v9.u64(4);
+        v9.u64(4);
+        v9.u64(2);
+        v9.str("W");
+        v9.u32(1);
+        v9.u64(0);
+        v9.u64(4);
+        assert_eq!(msg.encode(), v9.into_bytes());
+        assert_eq!(ControlMsg::decode(&msg.encode()).unwrap(), msg);
     }
 
     #[test]

@@ -65,5 +65,14 @@ pub use wire::{copy_le_f64s, le_f64s_to_vec, ProtocolError, Reader, Writer};
 /// task's lane), and `SubscribeMetrics` streams push-based
 /// `MetricsSnapshot` JSON frames (admission depth per class, task
 /// gauges, queue-wait stats, per-task progress). See
-/// `docs/scheduler.md`.
-pub const PROTOCOL_VERSION: u32 = 9;
+/// `docs/scheduler.md`. v10: survivable sessions — the handshake ack
+/// gains a `session_token` (elided at 0, so pre-v10 decoders still
+/// parse the frame) and a dropped client may `Reattach{token}` within
+/// `scheduler.session_linger_s` to re-list its tasks and collect
+/// retained results (`ReattachAck`); `FetchReady` may carry refreshed
+/// worker pull addresses (elided when unchanged) so results survive
+/// rank replacement; the coordinator⇄worker channel gains
+/// `StoreRestore` (replay a dead rank's checkpointed shard onto a
+/// spare) and `StoreStats` (leak accounting for remote ranks). See
+/// `docs/recovery.md`.
+pub const PROTOCOL_VERSION: u32 = 10;

@@ -151,6 +151,138 @@ pub fn props_seeded(seed: u64, cases: usize, mut f: impl FnMut(&mut Gen)) {
     }
 }
 
+/// Chaos-soak driver (`tests/it_chaos.rs`, `docs/recovery.md`): seeded
+/// round *plans* composing every fault mode the task plane knows —
+/// routine failure, uncooperative spin + hard cancel, cooperative
+/// cancel, client drop (with or without `Reattach`), and worker-process
+/// kill — under concurrent tenant load. The plan is pure data generated
+/// from a [`Gen`] stream so a failing round replays exactly from its
+/// `(seed, case)` pair; the test binary owns execution. A round log can
+/// be captured by pointing `ALCHEMIST_CHAOS_LOG` at a file (CI uploads
+/// it as the failure artifact).
+pub mod chaos {
+    use super::Gen;
+
+    /// One client-visible operation in a tenant's script. Every variant
+    /// must terminate within the harness timeout whatever else the round
+    /// injects — that is the zero-hang property the soak pins.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum TenantOp {
+        /// `fail_on{rank: 0}`: a deterministic routine failure (the
+        /// process stays alive, so this must *not* trigger replacement).
+        FailOneRank,
+        /// `spin` ignores the cooperative token; only `cancel_hard`'s
+        /// group poison can end it early.
+        SpinHardCancel,
+        /// `sleep` + cooperative cancel.
+        SleepCancel,
+        /// `rand_matrix` → `truncated_svd`, collecting the outputs.
+        SvdCollect,
+        /// Drop the control socket with a task in flight; when the round
+        /// lingers and `reattach` is set, resume by token and keep going.
+        /// Always a tenant's last scripted op (the drop ends the script
+        /// unless the reattach succeeds).
+        DropClient { reattach: bool },
+    }
+
+    /// A full seeded round: server shape + two concurrent tenant scripts
+    /// + an optional worker-process kill injected mid-round.
+    #[derive(Debug, Clone)]
+    pub struct RoundPlan {
+        /// `fabric.mode = tcp` (process ranks, killable, spare pool)
+        /// instead of the in-process local pool.
+        pub tcp: bool,
+        /// `scheduler.session_linger_s` for the round (0 = eager close).
+        pub linger_s: f64,
+        /// Kilobyte-scale `storage.budget_bytes` so spill segments are
+        /// in play and the leak assertion has teeth.
+        pub tight_budget: bool,
+        /// Global rank to `kill_worker` ~150ms into the round (tcp only).
+        pub kill_rank: Option<usize>,
+        /// One op script per concurrent tenant.
+        pub tenants: Vec<Vec<TenantOp>>,
+    }
+
+    /// Generate one round from the seeded stream. `allow_tcp` gates the
+    /// process-fabric rounds (they need a worker executable).
+    pub fn plan_round(g: &mut Gen, allow_tcp: bool) -> RoundPlan {
+        let tcp = allow_tcp && g.bool();
+        let linger_s = if g.bool() { 0.4 } else { 0.0 };
+        let tight_budget = g.bool();
+        let kill_rank = (tcp && g.bool()).then(|| g.usize_in(0, 1));
+        let tenants = (0..2)
+            .map(|_| {
+                let n = g.usize_in(1, 2);
+                (0..n)
+                    .map(|i| {
+                        // the drop ends a script, so only the last slot
+                        // may be a DropClient
+                        if i + 1 == n && g.usize_in(0, 3) == 0 {
+                            TenantOp::DropClient {
+                                reattach: linger_s > 0.0 && g.bool(),
+                            }
+                        } else {
+                            match g.usize_in(0, 3) {
+                                0 => TenantOp::FailOneRank,
+                                1 => TenantOp::SpinHardCancel,
+                                2 => TenantOp::SleepCancel,
+                                _ => TenantOp::SvdCollect,
+                            }
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        RoundPlan { tcp, linger_s, tight_budget, kill_rank, tenants }
+    }
+
+    impl RoundPlan {
+        /// One-line description for the round log: enough to reconstruct
+        /// the round by eye without replaying the seed.
+        pub fn describe(&self) -> String {
+            format!(
+                "mode={} linger={:.1}s tight_budget={} kill={:?} tenants={:?}",
+                if self.tcp { "tcp" } else { "local" },
+                self.linger_s,
+                self.tight_budget,
+                self.kill_rank,
+                self.tenants,
+            )
+        }
+    }
+
+    /// Append-only round log, enabled by `ALCHEMIST_CHAOS_LOG=<path>`.
+    /// Each round is recorded *before* it runs, so a hang or crash
+    /// leaves the guilty plan on disk for the CI artifact.
+    pub struct ChaosLog {
+        path: Option<std::path::PathBuf>,
+    }
+
+    impl ChaosLog {
+        pub fn from_env() -> Self {
+            Self {
+                path: std::env::var("ALCHEMIST_CHAOS_LOG")
+                    .ok()
+                    .filter(|p| !p.is_empty())
+                    .map(std::path::PathBuf::from),
+            }
+        }
+
+        /// Best-effort append (logging must never fail a round).
+        pub fn record(&self, line: &str) {
+            use std::io::Write as _;
+            let Some(path) = &self.path else { return };
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+            {
+                let _ = writeln!(f, "{line}");
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +319,40 @@ mod tests {
     fn failures_propagate() {
         props(10, |g| {
             assert!(g.case < 5, "deliberate failure");
+        });
+    }
+
+    #[test]
+    fn chaos_plans_replay_deterministically() {
+        let plan_stream = |seed: u64| {
+            let base = Rng::new(seed);
+            (0..8)
+                .map(|case| {
+                    let mut g = Gen { rng: base.derive(case), case: case as usize };
+                    chaos::plan_round(&mut g, true).describe()
+                })
+                .collect::<Vec<_>>()
+        };
+        // same seed → identical plans (a logged round replays exactly);
+        // different seed → the stream actually varies
+        assert_eq!(plan_stream(7), plan_stream(7));
+        assert_ne!(plan_stream(7), plan_stream(8));
+
+        // invariants the executor relies on: two tenants, drops only in
+        // the final slot, kills only under tcp, reattach only with linger
+        props(200, |g| {
+            let p = chaos::plan_round(g, g.bool());
+            assert_eq!(p.tenants.len(), 2);
+            assert!(p.kill_rank.is_none() || p.tcp);
+            for ops in &p.tenants {
+                assert!(!ops.is_empty() && ops.len() <= 2);
+                for (i, op) in ops.iter().enumerate() {
+                    if let chaos::TenantOp::DropClient { reattach } = op {
+                        assert_eq!(i + 1, ops.len(), "drop must end the script");
+                        assert!(!reattach || p.linger_s > 0.0);
+                    }
+                }
+            }
         });
     }
 }

@@ -1,0 +1,621 @@
+//! Chaos soak: survivable sessions under composed failure injection
+//! (protocol v10, `docs/recovery.md`).
+//!
+//! The deterministic pins, every failure mode by name:
+//!
+//! * a worker process killed mid-CG is replaced from the spare pool and
+//!   the restarted task completes **bit-identical** to the failure-free
+//!   run (`killed_rank_mid_cg_completes_on_spare_bit_identical`);
+//! * a dropped client reattaches by session token within the linger
+//!   window and collects a finished SVD — including `WaitTask` on the
+//!   already-terminal task returning the retained result directly,
+//!   with no status-poll race
+//!   (`dropped_client_reattaches_by_token_and_collects_finished_svd`);
+//! * an unclaimed token expires with the linger window and everything
+//!   the session held is released
+//!   (`linger_expiry_frees_workers_blocks_and_rejects_token`);
+//! * a client that vanishes mid-ingest under `fabric.mode = tcp` leaks
+//!   no unsealed blocks, reservations, or admission budget
+//!   (`tcp_disconnect_during_ingest_releases_blocks_and_budget`);
+//!
+//! plus the randomized soak: ≥ 20 seeded rounds
+//! ([`alchemist::testkit::chaos`]) composing kill / cancel / drop /
+//! reattach under two concurrent tenants, asserting zero hangs (every
+//! wait bounded, nextest timeout as backstop) and zero leaked blocks or
+//! spill segments at round teardown. A failing round's plan is in the
+//! failure report (`seed`, `case`) and, when `ALCHEMIST_CHAOS_LOG` is
+//! set, on disk before the round runs.
+
+use std::time::{Duration, Instant};
+
+use alchemist::client::AlchemistContext;
+use alchemist::config::{Config, EngineKind, FabricMode};
+use alchemist::coordinator::AlchemistServer;
+use alchemist::distmat::LocalMatrix;
+use alchemist::protocol::{Params, TaskState};
+use alchemist::testkit::chaos::{self, ChaosLog, TenantOp};
+use alchemist::testkit::props_seeded;
+
+fn native_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine = EngineKind::Native;
+    cfg
+}
+
+/// Local-mode config switched onto the process fabric (the worker
+/// executable must be named explicitly: inside an integration test
+/// `current_exe()` is the test runner, not `alchemist`).
+fn tcp_cfg() -> Config {
+    let mut cfg = native_cfg();
+    cfg.fabric.mode = FabricMode::Tcp;
+    cfg.fabric.worker_exe = env!("CARGO_BIN_EXE_alchemist").into();
+    cfg
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("alchemist-it-chaos")
+        .join(format!("{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Poll until `f` returns true or the timeout fires (sleep-based tests
+/// stay robust on slow CI runners).
+fn eventually(timeout: Duration, what: &str, mut f: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Materialize a server matrix for exact (bit-level) comparison.
+fn pull(ac: &mut AlchemistContext, m: &alchemist::client::AlMatrix) -> LocalMatrix {
+    ac.to_indexed_row_matrix(m, 1).unwrap().0.to_local().unwrap()
+}
+
+/// `Reattach` races the server's EOF handling of the dropped socket (the
+/// token is only parked once the control thread observes the close), so
+/// a reconnecting client retries briefly.
+fn reconnect_eventually(
+    addr: &str,
+    cfg: &Config,
+    token: u64,
+) -> (AlchemistContext, Vec<u64>) {
+    let t0 = Instant::now();
+    loop {
+        match AlchemistContext::reconnect(addr, cfg, 1, token) {
+            Ok(got) => return got,
+            Err(e) => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "reattach never succeeded: {e:#}"
+                );
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Pin (a): kill a worker process mid-CG on a server with one spare.
+/// The coordinator re-forms the mesh around the spare, replays the dead
+/// rank's shards from the task-boundary checkpoints, restarts the task —
+/// and the result is bit-identical to the failure-free run.
+#[test]
+fn killed_rank_mid_cg_completes_on_spare_bit_identical() {
+    let mut cfg = tcp_cfg();
+    cfg.apply("scheduler.spare_workers", "1").unwrap();
+    let ckpt = tmp_dir("cg-ckpt");
+    cfg.apply("storage.checkpoint_dir", ckpt.to_str().unwrap()).unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    assert_eq!(server.spare_workers(), 1);
+
+    let mut ac = AlchemistContext::connect(&server.control_addr, &cfg, 2).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+    ac.register_library("skylark", "builtin:skylark").unwrap();
+
+    let x = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 256).with_i64("cols", 64).with_i64("seed", 1),
+        )
+        .unwrap();
+    let y = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 256).with_i64("cols", 4).with_i64("seed", 2),
+        )
+        .unwrap();
+    // unconvergeable (tol 0) so the iteration count is the deterministic
+    // cap, long enough that the kill below always lands mid-solve
+    let cg = || {
+        Params::new()
+            .with_matrix("X", x.outputs[0].id)
+            .with_matrix("Y", y.outputs[0].id)
+            .with_f64("tol", 0.0)
+            .with_i64("max_iters", 1500)
+    };
+
+    // failure-free baseline on the intact group
+    let base = ac.run_task("skylark", "cg_solve", cg()).unwrap();
+    let w0 = pull(&mut ac, &base.outputs[0]);
+
+    // identical solve, but one rank dies mid-iteration
+    let task_id = ac.submit("skylark", "cg_solve", cg()).unwrap().task_id;
+    let t0 = Instant::now();
+    loop {
+        assert!(t0.elapsed() < Duration::from_secs(30), "CG never started");
+        if let TaskState::Running { progress } = ac.task(task_id).status().unwrap() {
+            if progress.iters >= 1 {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let t_kill = Instant::now();
+    assert!(server.kill_worker(1), "worker 1 should be live to kill");
+
+    // NOT an error: the session recovered and the restarted task finished
+    let res = ac.task(task_id).wait().unwrap();
+    assert!(
+        t_kill.elapsed() < Duration::from_secs(60),
+        "recovery took {:?}",
+        t_kill.elapsed()
+    );
+    assert!(server.sched_metrics().ranks_replaced >= 1, "no rank was replaced");
+
+    // bit-identical to the failure-free run: same iteration count, same
+    // final residual bits, same solution matrix (the replayed shards and
+    // the shared reduction order leave no room for drift)
+    assert_eq!(
+        res.scalars.i64("iters").unwrap(),
+        base.scalars.i64("iters").unwrap()
+    );
+    assert_eq!(
+        res.scalars.f64("final_residual").unwrap().to_bits(),
+        base.scalars.f64("final_residual").unwrap().to_bits()
+    );
+    let w1 = pull(&mut ac, &res.outputs[0]);
+    assert_eq!(w1, w0);
+
+    // the re-formed group keeps working like any other
+    let ok = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(ok.scalars.i64("ranks").unwrap(), 2);
+
+    // teardown leaks nothing — not blocks, not spill, not checkpoints
+    ac.stop();
+    eventually(Duration::from_secs(15), "session teardown", || {
+        server.active_sessions() == 0
+            && server.total_blocks() == 0
+            && server.total_spill_segments() == 0
+    });
+    eventually(Duration::from_secs(10), "checkpoint files to be deleted", || {
+        std::fs::read_dir(&ckpt).unwrap().filter_map(|e| e.ok()).all(|e| {
+            !e.file_name().to_string_lossy().starts_with("alchemist-ckpt")
+        })
+    });
+    server.shutdown();
+}
+
+/// Pin (b): the task table and results survive the TCP connection. A
+/// client that vanishes mid-SVD reattaches by token, re-lists its tasks,
+/// and collects the finished result — bit-identical to the run that
+/// never disconnected. Also pins the `WaitTask`-on-terminal fix: the
+/// retained result comes back directly, no status-poll race.
+#[test]
+fn dropped_client_reattaches_by_token_and_collects_finished_svd() {
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.session_linger_s", "30").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    let mut ac = AlchemistContext::connect(&addr, &cfg, 1).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+    let a = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 64).with_i64("cols", 8).with_i64("seed", 3),
+        )
+        .unwrap();
+    let svd =
+        || Params::new().with_matrix("A", a.outputs[0].id).with_i64("rank", 3);
+
+    // failure-free baseline, collected over the original connection
+    let base = ac.run_task("elemental", "truncated_svd", svd()).unwrap();
+    let baseline: Vec<LocalMatrix> =
+        (0..3).map(|i| pull(&mut ac, &base.outputs[i])).collect();
+
+    let token = ac.session_token();
+    assert_ne!(token, 0, "handshake must issue a session token");
+
+    // an identical SVD is in flight when the client vanishes
+    let task_id = ac.submit("elemental", "truncated_svd", svd()).unwrap().task_id;
+    ac.stop();
+
+    // a bogus token is rejected with a diagnosable message
+    let err = AlchemistContext::reconnect(&addr, &cfg, 1, token ^ 0xdead).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("unknown or expired"),
+        "wrong rejection: {err:#}"
+    );
+
+    // the real token resumes the session: the task list names the
+    // in-flight task, and waiting on it yields the retained result
+    let (mut ac2, task_ids) = reconnect_eventually(&addr, &cfg, token);
+    assert!(task_ids.contains(&task_id), "task table lost: {task_ids:?}");
+    let res = ac2.task(task_id).wait().unwrap();
+    let collected: Vec<LocalMatrix> =
+        (0..3).map(|i| pull(&mut ac2, &res.outputs[i])).collect();
+    assert_eq!(collected, baseline, "recovered SVD differs from baseline");
+
+    // WaitTask on the already-completed task returns the retained
+    // terminal result immediately (the reattach-and-collect contract)
+    let t0 = Instant::now();
+    let again = ac2.task(task_id).wait().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "retained result not returned directly ({:?})",
+        t0.elapsed()
+    );
+    assert_eq!(again.outputs[0].id, res.outputs[0].id);
+
+    // drop-and-reattach composes: a second cycle on the same token works
+    // (the re-park re-arms the reaper under a fresh generation)
+    ac2.stop();
+    let (mut ac3, task_ids) = reconnect_eventually(&addr, &cfg, token);
+    assert!(task_ids.contains(&task_id));
+    assert!(matches!(
+        ac3.task(task_id).status().unwrap(),
+        TaskState::Done { .. }
+    ));
+    ac3.stop();
+    server.shutdown();
+}
+
+/// An unclaimed token expires with the linger window: running work is
+/// cancelled, blocks are freed, the worker group returns to the pool,
+/// and a late `Reattach` is rejected instead of resuming freed state.
+#[test]
+fn linger_expiry_frees_workers_blocks_and_rejects_token() {
+    let mut cfg = native_cfg();
+    cfg.apply("scheduler.session_linger_s", "0.5").unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    let token = {
+        let mut ac = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 2).unwrap();
+        ac.register_library("elemental", "builtin:elemental").unwrap();
+        // blocks in the store and a 30s task in flight at drop time
+        ac.run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 32).with_i64("cols", 4).with_i64("seed", 7),
+        )
+        .unwrap();
+        ac.submit("elemental", "sleep", Params::new().with_i64("millis", 30_000))
+            .unwrap();
+        let token = ac.session_token();
+        ac.stop();
+        token
+    };
+
+    // the reaper closes the parked session well before the sleep could
+    // finish: cancellation is cooperative, teardown eager
+    eventually(Duration::from_secs(15), "linger expiry teardown", || {
+        server.active_sessions() == 0 && server.total_blocks() == 0
+    });
+    let err = AlchemistContext::reconnect(&addr, &cfg, 1, token).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("unknown or expired"),
+        "late reattach not rejected: {err:#}"
+    );
+
+    // the pool is whole again: a fresh session takes both workers
+    let mut ac = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 2).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+    let res = ac
+        .run_task("elemental", "sleep", Params::new().with_i64("millis", 10))
+        .unwrap();
+    assert_eq!(res.scalars.i64("ranks").unwrap(), 2);
+    ac.stop();
+    server.shutdown();
+}
+
+/// Satellite pin: a client that disconnects mid-ingest under
+/// `fabric.mode = tcp` (half-pushed rows on a worker *process*, no
+/// `PushDone`, no seal) leaks nothing — unsealed blocks, spill segments,
+/// and the storage admission commitment are all released, and a fresh
+/// session admits the full pool again. The local-pool twin lives in
+/// `it_tasks.rs::disconnect_with_task_in_flight_cancels_and_frees_everything`.
+#[test]
+fn tcp_disconnect_during_ingest_releases_blocks_and_budget() {
+    use alchemist::net::Framed;
+    use alchemist::protocol::{ControlMsg, DataMsg, DEFAULT_PRIORITY, PROTOCOL_VERSION};
+
+    let mut cfg = tcp_cfg();
+    // kilobyte budgets: the half-pushed rows engage the spill plane, and
+    // `total_bytes` makes session admission a real commitment to release
+    cfg.apply("storage.budget_bytes", "4096").unwrap();
+    cfg.apply("storage.total_bytes", "8192").unwrap();
+    let spill = tmp_dir("ingest-spill");
+    cfg.apply("storage.spill_dir", spill.to_str().unwrap()).unwrap();
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    // hand-rolled session: handshake, CreateMatrix, half-push to rank 0
+    // over its data socket, then vanish without PushDone or SealMatrix
+    {
+        let mut control = Framed::connect(&addr, 1 << 16).unwrap();
+        let ack = control
+            .call(&ControlMsg::Handshake {
+                client_name: "chaos-ingest".into(),
+                version: PROTOCOL_VERSION,
+                request_workers: 2,
+                rows_per_frame: 0,
+                buf_bytes: 0,
+                priority: DEFAULT_PRIORITY,
+            })
+            .unwrap();
+        let (session_id, worker_addrs) = match ack {
+            ControlMsg::HandshakeAck { session_id, worker_addrs, .. } => {
+                (session_id, worker_addrs)
+            }
+            other => panic!("{other:?}"),
+        };
+        let id = match control
+            .call(&ControlMsg::CreateMatrix { name: "H".into(), rows: 64, cols: 8 })
+            .unwrap()
+        {
+            ControlMsg::MatrixCreated { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        let mut data = Framed::connect(&worker_addrs[0], 1 << 16).unwrap();
+        data.send_data_flush(&DataMsg::DataHandshake {
+            session_id,
+            executor_id: 0,
+            rows_per_frame: 0,
+        })
+        .unwrap();
+        assert!(matches!(data.recv_data().unwrap(), DataMsg::DataHandshakeAck { .. }));
+        for frame in 0..4u64 {
+            data.send_data_flush(&DataMsg::PushRows {
+                matrix_id: id,
+                start_row: frame * 4,
+                nrows: 4,
+                ncols: 8,
+                data: vec![frame as f64; 32],
+            })
+            .unwrap();
+        }
+        // both sockets dropped here — disconnect mid-ingest
+    }
+
+    // everything the half-ingest touched is released, on the worker
+    // processes too (the stats round-trip over the work sockets)
+    eventually(Duration::from_secs(15), "mid-ingest teardown", || {
+        server.active_sessions() == 0
+            && server.total_blocks() == 0
+            && server.total_spill_segments() == 0
+    });
+
+    // the admission budget came back with it: a second full-pool session
+    // would overcommit `storage.total_bytes` if the first still held its
+    // commitment, so this connect succeeding IS the budget assertion
+    let mut ac = AlchemistContext::connect_with_workers(&addr, &cfg, 1, 2).unwrap();
+    ac.register_library("elemental", "builtin:elemental").unwrap();
+    let res = ac
+        .run_task(
+            "elemental",
+            "rand_matrix",
+            Params::new().with_i64("rows", 16).with_i64("cols", 4).with_i64("seed", 9),
+        )
+        .unwrap();
+    let back = pull(&mut ac, &res.outputs[0]);
+    assert_eq!((back.rows(), back.cols()), (16, 4));
+    ac.stop();
+    eventually(Duration::from_secs(10), "final teardown", || {
+        server.active_sessions() == 0 && server.total_blocks() == 0
+    });
+    server.shutdown();
+}
+
+/// Pin (c): ≥ 20 seeded randomized rounds composing every failure mode
+/// under two concurrent tenants. Each wait is bounded (a non-terminal
+/// state past the bound IS a hang) and each round's server must tear
+/// down to zero sessions, zero blocks, zero spill segments.
+#[test]
+fn seeded_chaos_rounds_under_concurrent_tenants_leak_nothing() {
+    let log = ChaosLog::from_env();
+    let ckpt = tmp_dir("soak-ckpt");
+    props_seeded(0xC11A_05EE, 20, |g| {
+        let plan = chaos::plan_round(g, true);
+        // logged BEFORE the round runs: a hang leaves the plan on disk
+        log.record(&format!("case {}: {}", g.case, plan.describe()));
+        run_round(g.case, &plan, &ckpt);
+        log.record(&format!("case {}: clean", g.case));
+    });
+}
+
+fn run_round(case: usize, plan: &chaos::RoundPlan, ckpt: &std::path::Path) {
+    let mut cfg = if plan.tcp { tcp_cfg() } else { native_cfg() };
+    if plan.tcp {
+        cfg.apply("scheduler.spare_workers", "1").unwrap();
+        cfg.apply("storage.checkpoint_dir", ckpt.to_str().unwrap()).unwrap();
+    }
+    if plan.linger_s > 0.0 {
+        cfg.apply("scheduler.session_linger_s", &format!("{}", plan.linger_s))
+            .unwrap();
+    }
+    if plan.tight_budget {
+        cfg.apply("storage.budget_bytes", "8192").unwrap();
+        let spill = tmp_dir(&format!("soak-spill-{case}"));
+        cfg.apply("storage.spill_dir", spill.to_str().unwrap()).unwrap();
+    }
+    let server = AlchemistServer::start(cfg.clone(), 2).unwrap();
+    let addr = server.control_addr.clone();
+
+    let mut tenants = Vec::new();
+    for (tenant, ops) in plan.tenants.iter().cloned().enumerate() {
+        let (addr, cfg) = (addr.clone(), cfg.clone());
+        tenants.push(std::thread::spawn(move || run_tenant(&addr, &cfg, tenant, ops)));
+    }
+    if let Some(rank) = plan.kill_rank {
+        // mid-round: whichever tenant holds the rank either recovers on
+        // the spare or fails diagnosably — both outcomes are terminal
+        std::thread::sleep(Duration::from_millis(150));
+        let _ = server.kill_worker(rank);
+    }
+    for t in tenants {
+        t.join().expect("tenant panicked");
+    }
+
+    // the round's composed failures must leave the server spotless; the
+    // linger window (if any) is allowed to elapse within the bound
+    eventually(Duration::from_secs(30), "round session teardown", || {
+        server.active_sessions() == 0
+    });
+    eventually(Duration::from_secs(15), "round store drain", || {
+        server.total_blocks() == 0 && server.total_spill_segments() == 0
+    });
+    server.shutdown();
+}
+
+/// One tenant's scripted ops. Individual ops tolerate *errors* (a kill
+/// round makes any of them fallible) but never tolerate a hang: every
+/// wait is bounded and a non-terminal state past the bound panics.
+fn run_tenant(addr: &str, cfg: &Config, tenant: usize, ops: Vec<TenantOp>) {
+    let Ok(mut ac) = AlchemistContext::connect_with_workers(addr, cfg, 1, 1) else {
+        return; // admission raced a kill — nothing held, nothing to leak
+    };
+    if ac.register_library("elemental", "builtin:elemental").is_err() {
+        return;
+    }
+    for op in ops {
+        match op {
+            TenantOp::FailOneRank => {
+                // deterministic routine failure; the process stays alive
+                let _ = ac.run_task(
+                    "elemental",
+                    "fail_on",
+                    Params::new().with_i64("rank", 0),
+                );
+            }
+            TenantOp::SpinHardCancel => {
+                if let Ok(sub) = ac.submit(
+                    "elemental",
+                    "spin",
+                    Params::new().with_i64("millis", 20_000),
+                ) {
+                    let id = sub.task_id;
+                    wait_until_past_queued(&mut ac, id);
+                    let _ = ac.task(id).cancel_hard(100);
+                    expect_terminal(&mut ac, id);
+                }
+            }
+            TenantOp::SleepCancel => {
+                if let Ok(sub) = ac.submit(
+                    "elemental",
+                    "sleep",
+                    Params::new().with_i64("millis", 20_000),
+                ) {
+                    let id = sub.task_id;
+                    wait_until_past_queued(&mut ac, id);
+                    let _ = ac.task(id).cancel();
+                    expect_terminal(&mut ac, id);
+                }
+            }
+            TenantOp::SvdCollect => {
+                let seed = 11 + tenant as i64;
+                let Ok(a) = ac.run_task(
+                    "elemental",
+                    "rand_matrix",
+                    Params::new()
+                        .with_i64("rows", 48)
+                        .with_i64("cols", 6)
+                        .with_i64("seed", seed),
+                ) else {
+                    continue;
+                };
+                if let Ok(res) = ac.run_task(
+                    "elemental",
+                    "truncated_svd",
+                    Params::new().with_matrix("A", a.outputs[0].id).with_i64("rank", 2),
+                ) {
+                    let _ = ac.to_indexed_row_matrix(&res.outputs[0], 1);
+                }
+            }
+            TenantOp::DropClient { reattach } => {
+                let token = ac.session_token();
+                // leave work in flight so the drop exercises the
+                // park-with-running-task path
+                let _ = ac.submit(
+                    "elemental",
+                    "sleep",
+                    Params::new().with_i64("millis", 20_000),
+                );
+                ac.stop();
+                if !reattach {
+                    return; // linger reaper (or eager close) cleans up
+                }
+                let t0 = Instant::now();
+                loop {
+                    match AlchemistContext::reconnect(addr, cfg, 1, token) {
+                        Ok((resumed, task_ids)) => {
+                            ac = resumed;
+                            for id in task_ids {
+                                let _ = ac.task(id).cancel();
+                                expect_terminal(&mut ac, id);
+                            }
+                            break;
+                        }
+                        // the linger window is short by design: losing
+                        // the race to the reaper is a legal outcome
+                        Err(_) if t0.elapsed() > Duration::from_secs(5) => return,
+                        Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                    }
+                }
+            }
+        }
+    }
+    ac.stop();
+}
+
+/// Bounded wait for a submission to leave the queue (it may go straight
+/// to a terminal state if the round killed the tenant's rank).
+fn wait_until_past_queued(ac: &mut AlchemistContext, id: u64) {
+    let t0 = Instant::now();
+    loop {
+        match ac.task(id).status() {
+            Ok(TaskState::Queued) => {}
+            _ => return,
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "task {id} stuck in queue — scheduler hang"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The zero-hang pin for one task: within the bound it must reach SOME
+/// terminal state (Done, Failed, or Cancelled — the round decides which;
+/// a lost connection also counts, the server side is what must not
+/// wedge). A live non-terminal state past the bound is a hang.
+fn expect_terminal(ac: &mut AlchemistContext, id: u64) {
+    match ac.task(id).wait_timeout(60_000) {
+        Err(_) => {} // connection torn down under the wait — not a hang
+        Ok(st) => assert!(
+            matches!(
+                st,
+                TaskState::Done { .. } | TaskState::Failed { .. } | TaskState::Cancelled
+            ),
+            "task {id} not terminal after 60s: {st:?}"
+        ),
+    }
+}

@@ -93,6 +93,7 @@ fn control_messages_roundtrip() {
                     worker_addrs: (0..n).map(|_| g.ident(21)).collect(),
                     rows_per_frame: g.u64() as u32,
                     buf_bytes: g.u64() % (1 << 30),
+                    session_token: g.u64(),
                 }
             }
             5 => {
@@ -112,7 +113,11 @@ fn control_messages_roundtrip() {
                 task_id: g.u64(),
                 state: random_task_state(g),
             },
-            7 => ControlMsg::FetchReady { info: random_info(g), row_ranges: vec![] },
+            7 => ControlMsg::FetchReady {
+                info: random_info(g),
+                row_ranges: vec![],
+                worker_addrs: (0..g.usize_in(0, 3)).map(|_| g.ident(21)).collect(),
+            },
             8 => ControlMsg::Error { message: g.ident(40) },
             _ => ControlMsg::MatrixList {
                 infos: (0..g.usize_in(0, 4)).map(|_| random_info(g)).collect(),

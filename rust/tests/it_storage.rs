@@ -175,6 +175,7 @@ fn concurrent_pull_while_spill() {
             budget_bytes: BYTES * 2 + BYTES / 2, // 2.5 blocks resident
             total_bytes: 0,
             spill_dir: String::new(),
+            checkpoint_dir: String::new(),
         },
         Arc::new(StorageMetrics::new()),
     ));
